@@ -1,0 +1,173 @@
+//! Time-series classification by FGW distance (the paper's §4.3
+//! motivation: "it is highly important to find a good similarity
+//! measure for time series data").
+//!
+//! Generates three families of two-hump series (different hump
+//! spacings + noise), computes the pairwise FGC-FGW distance matrix
+//! through the coordinator, runs k-medoids (built from scratch — no
+//! clustering crate offline) on it, and reports clustering purity.
+//!
+//! ```bash
+//! cargo run --release --example clustering [-- --per-class 6 --n 80]
+//! ```
+
+use fgc_gw::cli::Args;
+use fgc_gw::coordinator::{Coordinator, CoordinatorConfig, JobPayload, RoutingPolicy};
+use fgc_gw::data::{feature_cost_series, two_hump_series, TwoHumpSpec};
+use fgc_gw::linalg::normalize_l1;
+use fgc_gw::prng::Rng;
+use std::path::PathBuf;
+use std::time::Duration;
+
+fn main() -> fgc_gw::Result<()> {
+    let args = Args::from_env()?;
+    let per_class = args.get_or("per-class", 6usize)?;
+    let n = args.get_or("n", 80usize)?;
+    let mut rng = Rng::seeded(17);
+
+    // Three families distinguished by hump *spacing* — GW's quadratic
+    // term is reflection-invariant, so left/right position alone
+    // cannot (and should not) separate classes; spacing can.
+    let classes = [
+        (0.35, 0.50), // humps close together
+        (0.30, 0.70), // medium gap
+        (0.15, 0.85), // far apart
+    ];
+    let mut series = Vec::new();
+    let mut labels = Vec::new();
+    for (ci, &(c1, c2)) in classes.iter().enumerate() {
+        for _ in 0..per_class {
+            let j1 = rng.uniform_in(-0.03, 0.03);
+            let j2 = rng.uniform_in(-0.03, 0.03);
+            let s = two_hump_series(
+                &TwoHumpSpec {
+                    center1: c1 + j1,
+                    center2: c2 + j2,
+                    width: 0.08 + rng.uniform_in(-0.01, 0.01),
+                },
+                n,
+            );
+            series.push(s);
+            labels.push(ci);
+        }
+    }
+    let total = series.len();
+
+    // Pairwise FGW distances through the service (native FGC backend).
+    let coord = Coordinator::start(CoordinatorConfig {
+        native_workers: 2,
+        queue_capacity: 256,
+        policy: RoutingPolicy::NativeOnly,
+        enable_pjrt: false,
+        artifacts_dir: PathBuf::from("/nonexistent"),
+        outer_iters: 6,
+        sinkhorn_max_iters: 200,
+        sinkhorn_tolerance: 1e-8,
+        batch_max: 8,
+        submit_timeout: Duration::from_secs(5),
+    })?;
+    let t0 = std::time::Instant::now();
+    let mut pairs = Vec::new();
+    let mut rxs = Vec::new();
+    for i in 0..total {
+        for j in (i + 1)..total {
+            let mut u: Vec<f64> = series[i].iter().map(|&x| x + 1e-3).collect();
+            let mut v: Vec<f64> = series[j].iter().map(|&x| x + 1e-3).collect();
+            normalize_l1(&mut u)?;
+            normalize_l1(&mut v)?;
+            let payload = JobPayload::Fgw1d {
+                feature_cost: feature_cost_series(&series[i], &series[j]),
+                u,
+                v,
+                theta: 0.5,
+                k: 1,
+                epsilon: 5e-3,
+            };
+            pairs.push((i, j));
+            rxs.push(coord.submit(payload)?.1);
+        }
+    }
+    let mut dist = vec![vec![0.0f64; total]; total];
+    for ((i, j), rx) in pairs.into_iter().zip(rxs) {
+        let d = rx
+            .recv()
+            .map_err(|_| fgc_gw::Error::Runtime("lost worker".into()))?
+            .objective
+            .map_err(fgc_gw::Error::Runtime)?;
+        dist[i][j] = d;
+        dist[j][i] = d;
+    }
+    println!(
+        "computed {} pairwise FGW distances in {:?} ({})",
+        total * (total - 1) / 2,
+        t0.elapsed(),
+        coord.metrics()
+    );
+    coord.shutdown();
+
+    // k-medoids (PAM-lite): greedy init + swap until stable.
+    let k = classes.len();
+    let mut medoids: Vec<usize> = (0..k).map(|c| c * per_class).collect();
+    for _ in 0..20 {
+        // assign
+        let assign: Vec<usize> = (0..total)
+            .map(|i| {
+                medoids
+                    .iter()
+                    .enumerate()
+                    .min_by(|a, b| dist[i][*a.1].total_cmp(&dist[i][*b.1]))
+                    .map(|(c, _)| c)
+                    .unwrap()
+            })
+            .collect();
+        // update medoids
+        let mut changed = false;
+        for c in 0..k {
+            let members: Vec<usize> = (0..total).filter(|&i| assign[i] == c).collect();
+            if members.is_empty() {
+                continue;
+            }
+            let best = *members
+                .iter()
+                .min_by(|&&a, &&b| {
+                    let ca: f64 = members.iter().map(|&m| dist[a][m]).sum();
+                    let cb: f64 = members.iter().map(|&m| dist[b][m]).sum();
+                    ca.total_cmp(&cb)
+                })
+                .unwrap();
+            if medoids[c] != best {
+                medoids[c] = best;
+                changed = true;
+            }
+        }
+        if !changed {
+            break;
+        }
+    }
+    let assign: Vec<usize> = (0..total)
+        .map(|i| {
+            medoids
+                .iter()
+                .enumerate()
+                .min_by(|a, b| dist[i][*a.1].total_cmp(&dist[i][*b.1]))
+                .map(|(c, _)| c)
+                .unwrap()
+        })
+        .collect();
+
+    // purity: best label per cluster
+    let mut correct = 0;
+    for c in 0..k {
+        let mut counts = vec![0usize; k];
+        for i in 0..total {
+            if assign[i] == c {
+                counts[labels[i]] += 1;
+            }
+        }
+        correct += counts.iter().max().copied().unwrap_or(0);
+    }
+    let purity = correct as f64 / total as f64;
+    println!("k-medoids purity over {total} series: {:.1}%", 100.0 * purity);
+    assert!(purity >= 0.8, "FGW distances should separate the classes");
+    Ok(())
+}

@@ -1,0 +1,166 @@
+//! End-to-end driver: the full three-layer system on a real workload.
+//!
+//! Starts the coordinator (L3) with the PJRT runtime enabled, submits
+//! a mixed batch of alignment jobs — 1D random-distribution GW (sized
+//! to hit the AOT artifacts), time-series FGW, and 2D GW — and reports
+//! latency percentiles, throughput, per-backend counts, and the
+//! headline FGC-vs-baseline speedup measured *through the service
+//! path*. This is the repo's required end-to-end validation run
+//! (recorded in EXPERIMENTS.md).
+//!
+//! ```bash
+//! cargo run --release --example e2e_service -- --jobs 24 [--no-pjrt]
+//! ```
+
+use fgc_gw::cli::Args;
+use fgc_gw::coordinator::{Coordinator, CoordinatorConfig, JobPayload, RoutingPolicy};
+use fgc_gw::data::{feature_cost_series, random_distribution, two_hump_series, TwoHumpSpec};
+use fgc_gw::linalg::normalize_l1;
+use fgc_gw::prng::Rng;
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+fn main() -> fgc_gw::Result<()> {
+    let args = Args::from_env()?;
+    let jobs_per_class = args.get_or("jobs", 24usize)? / 3;
+    let enable_pjrt = !args.has_flag("no-pjrt");
+    let artifacts = PathBuf::from(args.get("artifacts").unwrap_or("artifacts"));
+
+    let cfg = CoordinatorConfig {
+        native_workers: 2,
+        queue_capacity: 128,
+        batch_max: 8,
+        artifacts_dir: artifacts,
+        policy: RoutingPolicy::PreferPjrt,
+        enable_pjrt,
+        outer_iters: 10,
+        sinkhorn_max_iters: 200,
+        sinkhorn_tolerance: 1e-9,
+        submit_timeout: Duration::from_secs(5),
+    };
+    println!("== e2e: starting coordinator (pjrt={enable_pjrt}) ==");
+    let coord = Coordinator::start(cfg)?;
+
+    let mut rng = Rng::seeded(2024);
+    let mut rxs = Vec::new();
+    let t0 = Instant::now();
+
+    // Class 1: 1D GW at n=128 — matches an AOT artifact ⇒ PJRT route.
+    for _ in 0..jobs_per_class {
+        rxs.push(
+            coord
+                .submit(JobPayload::Gw1d {
+                    u: random_distribution(&mut rng, 128),
+                    v: random_distribution(&mut rng, 128),
+                    k: 1,
+                    epsilon: 0.002,
+                })?
+                .1,
+        );
+    }
+    // Class 2: time-series FGW at n=96 — no artifact ⇒ native FGC.
+    let src = two_hump_series(&TwoHumpSpec::default(), 96);
+    for i in 0..jobs_per_class {
+        let spec = TwoHumpSpec {
+            center1: 0.2 + 0.02 * (i % 5) as f64,
+            center2: 0.75,
+            width: 0.08,
+        };
+        let dst = two_hump_series(&spec, 96);
+        let mut u: Vec<f64> = src.iter().map(|&s| s + 1e-3).collect();
+        let mut v: Vec<f64> = dst.iter().map(|&s| s + 1e-3).collect();
+        normalize_l1(&mut u)?;
+        normalize_l1(&mut v)?;
+        rxs.push(
+            coord
+                .submit(JobPayload::Fgw1d {
+                    feature_cost: feature_cost_series(&src, &dst),
+                    u,
+                    v,
+                    theta: 0.5,
+                    k: 1,
+                    epsilon: 0.005,
+                })?
+                .1,
+        );
+    }
+    // Class 3: 2D GW on 10×10 grids — native FGC.
+    for _ in 0..jobs_per_class {
+        rxs.push(
+            coord
+                .submit(JobPayload::Gw2d {
+                    n: 10,
+                    u: fgc_gw::data::random_distribution_2d(&mut rng, 10),
+                    v: fgc_gw::data::random_distribution_2d(&mut rng, 10),
+                    k: 1,
+                    epsilon: 0.004,
+                })?
+                .1,
+        );
+    }
+
+    let mut per_backend: std::collections::BTreeMap<String, (usize, Duration)> =
+        Default::default();
+    let mut failures = 0;
+    for rx in rxs {
+        let res = rx.recv().map_err(|_| fgc_gw::Error::Runtime("lost worker".into()))?;
+        if res.objective.is_err() {
+            failures += 1;
+            eprintln!("job {} failed: {:?}", res.id, res.objective);
+            continue;
+        }
+        let e = per_backend
+            .entry(res.backend.to_string())
+            .or_insert((0, Duration::ZERO));
+        e.0 += 1;
+        e.1 += res.solve_time;
+    }
+    let wall = t0.elapsed();
+    let total_jobs = 3 * jobs_per_class;
+
+    println!("\n== e2e results ==");
+    println!("{}", coord.metrics());
+    for (backend, (count, time)) in &per_backend {
+        println!(
+            "  {backend:<16} {count:>3} jobs, mean solve {:?}",
+            *time / (*count as u32).max(1)
+        );
+    }
+    println!(
+        "wall {wall:?} → {:.2} jobs/s, failures {failures}/{total_jobs}",
+        total_jobs as f64 / wall.as_secs_f64()
+    );
+
+    // Headline metric through the service path: FGC vs dense baseline
+    // on identical jobs (BaselineOnly re-route).
+    println!("\n== headline: FGC vs original through the service ==");
+    let n_head = 512;
+    let u = random_distribution(&mut rng, n_head);
+    let v = random_distribution(&mut rng, n_head);
+    let job = |_: RoutingPolicy| JobPayload::Gw1d {
+        u: u.clone(),
+        v: v.clone(),
+        k: 1,
+        epsilon: 0.002,
+    };
+    let fast = coord.submit_and_wait(job(RoutingPolicy::NativeOnly))?;
+    coord.shutdown();
+    let baseline_coord = Coordinator::start(CoordinatorConfig {
+        policy: RoutingPolicy::BaselineOnly,
+        enable_pjrt: false,
+        artifacts_dir: PathBuf::from("/nonexistent"),
+        sinkhorn_max_iters: 200,
+        ..CoordinatorConfig::default()
+    })?;
+    let slow = baseline_coord.submit_and_wait(job(RoutingPolicy::BaselineOnly))?;
+    baseline_coord.shutdown();
+    let (ft, st) = (fast.solve_time, slow.solve_time);
+    println!(
+        "N={n_head}: FGC {ft:?} vs original {st:?} → speed-up {:.1}×  (objectives {:.4e} / {:.4e})",
+        st.as_secs_f64() / ft.as_secs_f64(),
+        fast.objective.unwrap(),
+        slow.objective.unwrap(),
+    );
+    assert_eq!(failures, 0, "all jobs must complete");
+    Ok(())
+}

@@ -1,0 +1,65 @@
+//! Horse-deformation alignment with FGW (paper §4.4.2 / Figure 5).
+//!
+//! Renders two gait phases of the parametric horse silhouette
+//! (450×300 substitute for the paper's video frames — DESIGN.md §4),
+//! subsamples to n×n, and aligns with FGC-FGW at θ ∈ {0.4, 0.6, 0.8}
+//! using the paper's h = 100/n scaling.
+//!
+//! ```bash
+//! cargo run --release --example horse_deformation [-- --side 40 --with-naive]
+//! ```
+
+use fgc_gw::cli::Args;
+use fgc_gw::data::{feature_cost_gray, horse_frame};
+use fgc_gw::gw::{EntropicGw, Geometry, GradientKind, GwConfig};
+use fgc_gw::linalg::frobenius_diff;
+
+fn main() -> fgc_gw::Result<()> {
+    let args = Args::from_env()?;
+    let side = args.get_or("side", 40usize)?;
+    let with_naive = args.has_flag("with-naive");
+
+    println!("rendering horse frames at phases 0.0 and 0.45, subsampled to {side}×{side}…");
+    let a = horse_frame(0.0, side)?;
+    let b = horse_frame(0.45, side)?;
+    if side <= 60 {
+        println!("frame A:\n{}", a.ascii());
+        println!("frame B:\n{}", b.ascii());
+    }
+    let u = a.to_distribution(1e-4);
+    let v = b.to_distribution(1e-4);
+    let c = feature_cost_gray(&a, &b);
+
+    let h = 100.0 / side as f64; // paper's comparability scaling
+    let solver = EntropicGw::new(
+        Geometry::grid_2d(side, h, 1),
+        Geometry::grid_2d(side, h, 1),
+        GwConfig {
+            epsilon: 50.0, // costs at h²(2n)² scale ≈ 4e4
+            outer_iters: 10,
+            sinkhorn_max_iters: 500,
+            ..GwConfig::default()
+        },
+    );
+
+    for theta in [0.4, 0.6, 0.8] {
+        let fast = solver.solve_fgw(&u, &v, &c, theta, GradientKind::Fgc)?;
+        print!(
+            "θ={theta}: FGC-FGW {:?}  FGW²={:.4e}",
+            fast.total_time, fast.objective
+        );
+        if with_naive {
+            let slow = solver.solve_fgw(&u, &v, &c, theta, GradientKind::Naive)?;
+            print!(
+                "  original {:?}  speed-up {:.1}×  ‖P_Fa−P‖_F={:.2e}",
+                slow.total_time,
+                slow.total_time.as_secs_f64() / fast.total_time.as_secs_f64(),
+                frobenius_diff(&fast.plan, &slow.plan)?
+            );
+        }
+        println!();
+    }
+    println!("\n(the paper's N=100×100 runs complete with FGC in ~500 s on a Xeon;");
+    println!(" scale --side up as your patience allows — FGC cost grows as N².)");
+    Ok(())
+}

@@ -1,0 +1,70 @@
+//! PJRT pipeline demo: load the AOT artifacts produced by
+//! `make artifacts` (JAX + Pallas, lowered once at build time) and run
+//! a GW solve with zero Python, comparing against the native solver.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example pjrt_gw
+//! ```
+
+use fgc_gw::data::random_distribution;
+use fgc_gw::gw::{EntropicGw, GradientKind, GwConfig};
+use fgc_gw::prng::Rng;
+use fgc_gw::runtime::{ArtifactKind, ArtifactRegistry, Executor};
+use std::path::PathBuf;
+
+fn main() -> fgc_gw::Result<()> {
+    let dir = PathBuf::from("artifacts");
+    let reg = ArtifactRegistry::load(&dir)?;
+    if reg.is_empty() {
+        eprintln!("no artifacts found — run `make artifacts` first");
+        std::process::exit(2);
+    }
+    println!("registry: {} artifacts", reg.len());
+    let mut ex = Executor::cpu()?;
+    println!("PJRT platform: {}", ex.platform());
+
+    let n = 128;
+    let spec = reg
+        .find(ArtifactKind::Gw1dSolve, n)
+        .ok_or_else(|| fgc_gw::Error::ArtifactNotFound(format!("gw1d n={n}")))?;
+    let mut rng = Rng::seeded(99);
+    let u = random_distribution(&mut rng, n);
+    let v = random_distribution(&mut rng, n);
+
+    let t0 = std::time::Instant::now();
+    let out = ex.run_gw_solve(spec, &u, &v)?;
+    let compile_and_run = t0.elapsed();
+    let t1 = std::time::Instant::now();
+    let out2 = ex.run_gw_solve(spec, &u, &v)?;
+    let warm = t1.elapsed();
+    println!(
+        "artifact {}: GW²={:.6e}  cold={compile_and_run:?} warm={warm:?}",
+        spec.name, out.objective
+    );
+    assert_eq!(out.plan.shape(), (n, n));
+    assert!((out.objective - out2.objective).abs() < 1e-12);
+
+    // Cross-check against the native Rust solver at the artifact's
+    // baked hyperparameters (f32 artifact vs f64 native ⇒ loose tol).
+    let native = EntropicGw::grid_1d(
+        n,
+        n,
+        spec.k,
+        GwConfig {
+            epsilon: spec.epsilon,
+            outer_iters: spec.outer,
+            sinkhorn_max_iters: spec.inner,
+            sinkhorn_tolerance: 0.0,
+            sinkhorn_check_every: usize::MAX,
+        },
+    )
+    .solve(&u, &v, GradientKind::Fgc)?;
+    let rel = (out.objective - native.objective).abs() / native.objective.abs().max(1e-12);
+    println!(
+        "native GW²={:.6e}  (relative gap {rel:.2e}; f32 artifact vs f64 native)",
+        native.objective
+    );
+    assert!(rel < 5e-2, "artifact and native disagree: {rel}");
+    println!("pjrt_gw OK");
+    Ok(())
+}

@@ -1,0 +1,54 @@
+//! Quickstart: compute the entropic GW distance between two random 1D
+//! distributions with the paper's FGC fast gradient, and verify the
+//! central claim — the plan is *identical* to the cubic baseline's.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use fgc_gw::data::random_distribution;
+use fgc_gw::gw::{EntropicGw, GradientKind, GwConfig};
+use fgc_gw::linalg::frobenius_diff;
+use fgc_gw::prng::Rng;
+
+fn main() -> fgc_gw::Result<()> {
+    let n = 500; // paper §4.1's smallest size
+    let mut rng = Rng::seeded(7);
+    let u = random_distribution(&mut rng, n);
+    let v = random_distribution(&mut rng, n);
+
+    let solver = EntropicGw::grid_1d(
+        n,
+        n,
+        /* k = */ 1,
+        GwConfig {
+            epsilon: 2e-3, // paper's 1D setting
+            outer_iters: 10,
+            // Fixed inner budget (identical on both paths) — with an
+            // unbounded Sinkhorn the shared O(N²) scaling sweeps mask
+            // the gradient speedup the paper isolates.
+            sinkhorn_max_iters: 100,
+            ..GwConfig::default()
+        },
+    );
+
+    println!("solving entropic GW, N = {n}, ε = 0.002, 10 mirror-descent iterations…");
+    let fast = solver.solve(&u, &v, GradientKind::Fgc)?;
+    println!(
+        "  FGC:      GW² = {:.6e}   total {:?} (gradient {:?}, sinkhorn {:?})",
+        fast.objective, fast.total_time, fast.gradient_time, fast.sinkhorn_time
+    );
+
+    let slow = solver.solve(&u, &v, GradientKind::Naive)?;
+    println!(
+        "  Original: GW² = {:.6e}   total {:?} (gradient {:?}, sinkhorn {:?})",
+        slow.objective, slow.total_time, slow.gradient_time, slow.sinkhorn_time
+    );
+
+    let dp = frobenius_diff(&fast.plan, &slow.plan)?;
+    let speedup = slow.total_time.as_secs_f64() / fast.total_time.as_secs_f64();
+    println!("\n‖P_Fa − P‖_F = {dp:.2e}   (paper: ~1e-15 — exact to roundoff)");
+    println!("speed-up ratio = {speedup:.1}×  (paper at N=500: 8.85×)");
+    assert!(dp < 1e-12, "plans must be identical to roundoff");
+    Ok(())
+}

@@ -1,0 +1,107 @@
+"""AOT bridge: lower the L2 solvers to HLO text for the Rust runtime.
+
+HLO *text* (never ``.serialize()``) is the interchange format: jax
+>= 0.5 emits HloModuleProto with 64-bit instruction ids which the xla
+crate's xla_extension 0.5.1 rejects; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Each artifact is one compiled solve/step closure at a fixed size.
+``manifest.txt`` (one line per artifact:
+``name kind n k epsilon outer inner inputs file``) is what
+``rust/src/runtime/artifact.rs`` parses.
+
+Usage: python -m compile.aot --out-dir ../artifacts [--sizes 64,128]
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_fn(fn, args) -> str:
+    return to_hlo_text(jax.jit(fn).lower(*args))
+
+
+def build_artifacts(out_dir: str, sizes: list[int], epsilon: float = 2e-3,
+                    outer: int = 10, inner: int = 100, k: int = 1,
+                    sizes_2d: list[int] | None = None) -> list[str]:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest: list[str] = []
+
+    def emit(name: str, kind: str, n: int, nargs: int, text: str,
+             eps: float = epsilon, out_it: int = outer, in_it: int = inner):
+        path = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, path), "w") as f:
+            f.write(text)
+        manifest.append(
+            f"{name} {kind} {n} {k} {eps} {out_it} {in_it} {nargs} {path}"
+        )
+
+    for n in sizes:
+        vec = jax.ShapeDtypeStruct((n,), jnp.float32)
+        mat = jax.ShapeDtypeStruct((n, n), jnp.float32)
+
+        solve = model.gw_solve_1d(n, k, epsilon, outer, inner, use_fgc=True)
+        emit(f"gw1d_fgc_n{n}", "gw1d_solve", n, 2, lower_fn(solve, (vec, vec)))
+
+        naive = model.gw_solve_1d(n, k, epsilon, outer, inner, use_fgc=False)
+        emit(f"gw1d_naive_n{n}", "gw1d_solve", n, 2, lower_fn(naive, (vec, vec)))
+
+        fgw = model.fgw_solve_1d(n, k, 0.5, epsilon, outer, inner, use_fgc=True)
+        emit(f"fgw1d_fgc_n{n}", "fgw1d_solve", n, 3, lower_fn(fgw, (vec, vec, mat)))
+
+        step = model.gw_step_1d(n, k, epsilon, inner)
+        emit(f"gw1d_step_n{n}", "gw1d_step", n, 3, lower_fn(step, (vec, vec, mat)))
+
+    for n2 in sizes_2d or []:
+        nn = n2 * n2
+        vec = jax.ShapeDtypeStruct((nn,), jnp.float32)
+        solve2 = model.gw_solve_2d(n2, k, 2 * epsilon, outer, inner)
+        emit(
+            f"gw2d_fgc_n{n2}", "gw2d_solve", n2, 2,
+            lower_fn(solve2, (vec, vec)), eps=2 * epsilon,
+        )
+
+    with open(os.path.join(out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--sizes", default="32,64,128",
+                    help="comma-separated 1D grid sizes")
+    ap.add_argument("--sizes-2d", default="8",
+                    help="comma-separated 2D grid side lengths")
+    ap.add_argument("--inner", type=int, default=100)
+    ap.add_argument("--outer", type=int, default=10)
+    ap.add_argument("--epsilon", type=float, default=2e-3)
+    args = ap.parse_args()
+    sizes = [int(s) for s in args.sizes.split(",") if s]
+    sizes2 = [int(s) for s in args.sizes_2d.split(",") if s]
+    manifest = build_artifacts(
+        args.out_dir, sizes, epsilon=args.epsilon, outer=args.outer,
+        inner=args.inner, sizes_2d=sizes2,
+    )
+    for line in manifest:
+        print("wrote", line)
+
+
+if __name__ == "__main__":
+    main()

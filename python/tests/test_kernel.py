@@ -1,0 +1,126 @@
+"""L1 correctness: Pallas FGC kernel vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes, exponents and dtypes — the core correctness
+signal for the kernel (required by the repo contract).
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import fgc, ref
+
+jax.config.update("jax_enable_x64", True)
+
+
+def _tol(dtype):
+    return dict(rtol=2e-4, atol=2e-4) if dtype == np.float32 else dict(rtol=1e-9, atol=1e-9)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    n=st.integers(min_value=2, max_value=80),
+    b=st.integers(min_value=1, max_value=20),
+    k=st.integers(min_value=0, max_value=3),
+    dtype=st.sampled_from([np.float32, np.float64]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_dtilde_matches_ref(n, b, k, dtype, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.uniform(-1, 1, size=(n, b)), dtype=dtype)
+    got = fgc.dtilde_apply(x, k)
+    want = ref.dtilde_apply(x, k)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), **_tol(dtype))
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.integers(min_value=2, max_value=40),
+    k=st.integers(min_value=0, max_value=2),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_dtilde_diag_one_adds_identity(n, k, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.uniform(size=(n, 3)), dtype=np.float64)
+    with_diag = fgc.dtilde_apply(x, k, diag_one=True)
+    without = fgc.dtilde_apply(x, k, diag_one=False)
+    np.testing.assert_allclose(
+        np.asarray(with_diag - without), np.asarray(x), rtol=1e-12, atol=1e-12
+    )
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.integers(min_value=2, max_value=30),
+    n=st.integers(min_value=2, max_value=30),
+    k=st.integers(min_value=1, max_value=2),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_dxgdy_1d_matches_dense(m, n, k, seed):
+    rng = np.random.default_rng(seed)
+    gamma = jnp.asarray(rng.uniform(size=(m, n)), dtype=np.float64)
+    hx, hy = 1.0 / max(m - 1, 1), 1.0 / max(n - 1, 1)
+    got = fgc.dxgdy_fgc_1d(gamma, hx, hy, k)
+    dx = jnp.asarray(np.asarray(ref.dense_dist_1d(m, hx, k, dtype=np.float64)), dtype=np.float64)
+    dy = jnp.asarray(np.asarray(ref.dense_dist_1d(n, hy, k, dtype=np.float64)), dtype=np.float64)
+    want = ref.dxgdy_dense(dx, gamma, dy) if False else dx @ gamma @ dy
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-9, atol=1e-9)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    n=st.integers(min_value=2, max_value=6),
+    k=st.integers(min_value=1, max_value=2),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_dhat_2d_matches_dense(n, k, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.uniform(size=(n * n, 2)), dtype=np.float64)
+    got = fgc.dhat_apply_2d(x, n, k)
+    d = jnp.asarray(np.asarray(ref.dense_dist_2d(n, 1.0, k, dtype=np.float64)), dtype=np.float64)
+    want = d @ x
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-9, atol=1e-9)
+
+
+def test_dxgdy_2d_matches_dense():
+    rng = np.random.default_rng(7)
+    n, k = 4, 1
+    gamma = jnp.asarray(rng.uniform(size=(n * n, n * n)), dtype=np.float64)
+    h = 1.0 / (n - 1)
+    got = fgc.dxgdy_fgc_2d(gamma, n, h, h, k)
+    d = jnp.asarray(np.asarray(ref.dense_dist_2d(n, h, k, dtype=np.float64)), dtype=np.float64)
+    want = d @ gamma @ d
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-9, atol=1e-9)
+
+
+def test_sq_dist_apply():
+    rng = np.random.default_rng(3)
+    n, k, h = 17, 1, 0.25
+    w = jnp.asarray(rng.uniform(size=(n,)), dtype=np.float64)
+    got = fgc.sq_dist_apply_1d(w, h, k)
+    d = np.asarray(ref.dense_dist_1d(n, h, k, dtype=np.float64), dtype=np.float64)
+    want = (d * d) @ np.asarray(w)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-9, atol=1e-12)
+
+
+def test_tile_padding_boundary():
+    """Batch widths straddling the column tile must round-trip."""
+    rng = np.random.default_rng(5)
+    for b in [fgc.TILE - 1, fgc.TILE, fgc.TILE + 1]:
+        x = jnp.asarray(rng.uniform(size=(16, b)), dtype=np.float32)
+        got = fgc.dtilde_apply(x, 2)
+        want = ref.dtilde_apply(x, 2)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("k", [0, 1, 2, 3])
+def test_linearity(k):
+    rng = np.random.default_rng(11)
+    x = jnp.asarray(rng.uniform(size=(25, 4)), dtype=np.float64)
+    y = jnp.asarray(rng.uniform(size=(25, 4)), dtype=np.float64)
+    lhs = fgc.dtilde_apply(2.0 * x - 3.0 * y, k)
+    rhs = 2.0 * fgc.dtilde_apply(x, k) - 3.0 * fgc.dtilde_apply(y, k)
+    np.testing.assert_allclose(np.asarray(lhs), np.asarray(rhs), rtol=1e-9, atol=1e-9)

@@ -1,0 +1,112 @@
+"""L2 correctness: the JAX solvers vs the dense reference, plus the
+Pallas Sinkhorn sweep vs the jnp oracle."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from compile import model
+from compile.kernels import ref
+from compile.kernels.sinkhorn import sinkhorn_plan
+
+jax.config.update("jax_enable_x64", True)
+
+
+def _dists(n, seed, dtype=np.float64):
+    rng = np.random.default_rng(seed)
+    u = rng.uniform(size=n)
+    v = rng.uniform(size=n)
+    return (
+        jnp.asarray(u / u.sum(), dtype=dtype),
+        jnp.asarray(v / v.sum(), dtype=dtype),
+    )
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    n=st.integers(min_value=4, max_value=24),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_pallas_sinkhorn_matches_ref(n, seed):
+    rng = np.random.default_rng(seed)
+    cost = jnp.asarray(rng.uniform(size=(n, n)), dtype=np.float64)
+    u, v = _dists(n, seed + 1)
+    got = sinkhorn_plan(cost, u, v, 0.05, 50)
+    want = ref.sinkhorn_log(cost, u, v, 0.05, 50)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-9, atol=1e-12)
+
+
+def test_gw_solve_fgc_matches_dense_reference():
+    n, k, eps, outer, inner = 16, 1, 2e-3, 5, 60
+    u, v = _dists(n, 42)
+    solve = model.gw_solve_1d(n, k, eps, outer, inner, use_fgc=True)
+    plan, obj = solve(u, v)
+    h = 1.0 / (n - 1)
+    dx = jnp.asarray(np.asarray(ref.dense_dist_1d(n, h, k, dtype=np.float64)), dtype=np.float64)
+    want = ref.entropic_gw_dense(dx, dx, u, v, eps, outer, inner)
+    np.testing.assert_allclose(np.asarray(plan), np.asarray(want), rtol=1e-8, atol=1e-10)
+    want_obj = ref.gw_objective_dense(dx, dx, want)
+    np.testing.assert_allclose(float(obj), float(want_obj), rtol=1e-8)
+
+
+def test_gw_solve_fgc_equals_naive_variant():
+    """The paper's exactness claim at the L2 layer: FGC and dense
+    gradient paths produce identical plans."""
+    n = 12
+    u, v = _dists(n, 7)
+    fast = model.gw_solve_1d(n, 1, 2e-3, 4, 40, use_fgc=True)
+    slow = model.gw_solve_1d(n, 1, 2e-3, 4, 40, use_fgc=False)
+    pf, of = fast(u, v)
+    ps, os_ = slow(u, v)
+    np.testing.assert_allclose(np.asarray(pf), np.asarray(ps), rtol=1e-10, atol=1e-12)
+    np.testing.assert_allclose(float(of), float(os_), rtol=1e-10)
+
+
+def test_plan_marginals():
+    # Fixed-sweep Sinkhorn ends on a psi update: column marginals are
+    # exact by construction, rows converge geometrically (eps=2e-3 is
+    # the paper's hardest setting, so allow the residual drift).
+    n = 20
+    u, v = _dists(n, 3)
+    solve = model.gw_solve_1d(n, 1, 2e-3, 5, 400, use_fgc=True)
+    plan, _ = solve(u, v)
+    np.testing.assert_allclose(np.asarray(jnp.sum(plan, axis=0)), np.asarray(v), atol=1e-9)
+    np.testing.assert_allclose(np.asarray(jnp.sum(plan, axis=1)), np.asarray(u), atol=2e-2)
+    assert np.all(np.asarray(plan) >= 0.0)
+
+
+def test_fgw_theta_one_equals_gw():
+    n = 10
+    u, v = _dists(n, 9)
+    feat = jnp.zeros((n, n), dtype=np.float64)
+    gw = model.gw_solve_1d(n, 1, 2e-3, 3, 30, use_fgc=True)
+    fgw = model.fgw_solve_1d(n, 1, 1.0, 2e-3, 3, 30, use_fgc=True)
+    p1, _ = gw(u, v)
+    p2, _ = fgw(u, v, feat)
+    np.testing.assert_allclose(np.asarray(p1), np.asarray(p2), rtol=1e-10, atol=1e-12)
+
+
+def test_gw_step_composes_to_solve():
+    n = 8
+    u, v = _dists(n, 5)
+    step = model.gw_step_1d(n, 1, 2e-3, 30)
+    gamma = u[:, None] * v[None, :]
+    for _ in range(3):
+        (gamma,) = step(u, v, gamma)
+    solve = model.gw_solve_1d(n, 1, 2e-3, 3, 30, use_fgc=True)
+    plan, _ = solve(u, v)
+    np.testing.assert_allclose(np.asarray(gamma), np.asarray(plan), rtol=1e-9, atol=1e-12)
+
+
+def test_gw_solve_2d_matches_dense_reference():
+    n, k, eps = 3, 1, 4e-3
+    nn = n * n
+    u, v = _dists(nn, 11)
+    solve = model.gw_solve_2d(n, k, eps, 3, 40)
+    plan, _ = solve(u, v)
+    h = 1.0 / (n - 1)
+    d = jnp.asarray(np.asarray(ref.dense_dist_2d(n, h, k, dtype=np.float64)), dtype=np.float64)
+    want = ref.entropic_gw_dense(d, d, u, v, eps, 3, 40)
+    np.testing.assert_allclose(np.asarray(plan), np.asarray(want), rtol=1e-8, atol=1e-10)

@@ -1,0 +1,127 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//!
+//! 1. **Sinkhorn regime dispatch** — Gibbs vs log-domain at the
+//!    paper's ε values (the row/col-gap criterion keeps ε = 0.002 on
+//!    the fast Gibbs path; this quantifies what the log fallback
+//!    would cost).
+//! 2. **Workspace reuse** — FGC gradient with preallocated workspaces
+//!    (the solver's path) vs allocating per call.
+//! 3. **Coordinator batching** — same job stream with batch_max 1 vs 8.
+//!
+//! ```bash
+//! cargo bench --bench ablation
+//! ```
+
+use fgc_gw::bench_util::{fmt_secs, time_mean, TableWriter};
+use fgc_gw::coordinator::{Coordinator, CoordinatorConfig, JobPayload, RoutingPolicy};
+use fgc_gw::data::random_distribution;
+use fgc_gw::fgc::{dxgdy_1d, Workspace1d};
+use fgc_gw::grid::Grid1d;
+use fgc_gw::linalg::Mat;
+use fgc_gw::prng::Rng;
+use fgc_gw::sinkhorn::{sinkhorn_gibbs, sinkhorn_log, SinkhornOptions};
+use std::path::PathBuf;
+use std::time::Duration;
+
+fn main() {
+    // ---- 1. Sinkhorn regime ----
+    let mut t = TableWriter::new(
+        "ablation: Sinkhorn Gibbs vs log-domain (50 sweeps)",
+        &["N", "ε", "Gibbs (s)", "log (s)", "log/Gibbs"],
+    );
+    for &(n, eps) in &[(500usize, 2e-3), (1000, 2e-3), (1000, 2e-2), (2000, 2e-3)] {
+        let mut rng = Rng::seeded(n as u64);
+        let cost = Mat::from_fn(n, n, |_, _| rng.uniform());
+        let u = vec![1.0 / n as f64; n];
+        let v = vec![1.0 / n as f64; n];
+        let opts = SinkhornOptions {
+            epsilon: eps,
+            max_iters: 50,
+            tolerance: 0.0,
+            check_every: usize::MAX,
+        };
+        let tg = time_mean(0, 2, || sinkhorn_gibbs(&cost, &u, &v, &opts).unwrap());
+        let tl = time_mean(0, 2, || sinkhorn_log(&cost, &u, &v, &opts).unwrap());
+        t.row(&[
+            n.to_string(),
+            format!("{eps}"),
+            fmt_secs(tg),
+            fmt_secs(tl),
+            format!("{:.1}", tl.as_secs_f64() / tg.as_secs_f64()),
+        ]);
+    }
+    println!("{}", t.render());
+
+    // ---- 2. Workspace reuse ----
+    let mut t = TableWriter::new(
+        "ablation: FGC gradient, workspace reuse vs per-call alloc",
+        &["N", "reused (s)", "fresh (s)", "overhead"],
+    );
+    for &n in &[500usize, 1000, 2000] {
+        let mut rng = Rng::seeded(7 * n as u64);
+        let gamma = Mat::from_fn(n, n, |_, _| rng.uniform());
+        let g = Grid1d::unit(n);
+        let mut out = Mat::zeros(n, n);
+        let mut ws = Workspace1d::new(n, n, 1);
+        let t_reuse = time_mean(1, 5, || dxgdy_1d(&g, &g, 1, &gamma, &mut out, &mut ws).unwrap());
+        let t_fresh = time_mean(1, 5, || {
+            let mut ws2 = Workspace1d::new(n, n, 1);
+            dxgdy_1d(&g, &g, 1, &gamma, &mut out, &mut ws2).unwrap()
+        });
+        t.row(&[
+            n.to_string(),
+            fmt_secs(t_reuse),
+            fmt_secs(t_fresh),
+            format!("{:.0}%", 100.0 * (t_fresh.as_secs_f64() / t_reuse.as_secs_f64() - 1.0)),
+        ]);
+    }
+    println!("{}", t.render());
+
+    // ---- 3. Coordinator batching ----
+    let mut t = TableWriter::new(
+        "ablation: coordinator batch_max (24 mixed-size GW jobs)",
+        &["batch_max", "wall (s)", "jobs/s"],
+    );
+    for &batch in &[1usize, 8] {
+        let coord = Coordinator::start(CoordinatorConfig {
+            native_workers: 2,
+            queue_capacity: 64,
+            batch_max: batch,
+            artifacts_dir: PathBuf::from("/nonexistent"),
+            policy: RoutingPolicy::NativeOnly,
+            enable_pjrt: false,
+            outer_iters: 6,
+            sinkhorn_max_iters: 100,
+            sinkhorn_tolerance: 1e-9,
+            submit_timeout: Duration::from_secs(5),
+        })
+        .unwrap();
+        let mut rng = Rng::seeded(11);
+        let t0 = std::time::Instant::now();
+        let rxs: Vec<_> = (0..24)
+            .map(|i| {
+                let n = [64usize, 96, 128][i % 3];
+                coord
+                    .submit(JobPayload::Gw1d {
+                        u: random_distribution(&mut rng, n),
+                        v: random_distribution(&mut rng, n),
+                        k: 1,
+                        epsilon: 0.005,
+                    })
+                    .unwrap()
+                    .1
+            })
+            .collect();
+        for rx in rxs {
+            rx.recv().unwrap().objective.unwrap();
+        }
+        let wall = t0.elapsed();
+        coord.shutdown();
+        t.row(&[
+            batch.to_string(),
+            fmt_secs(wall),
+            format!("{:.1}", 24.0 / wall.as_secs_f64()),
+        ]);
+    }
+    println!("{}", t.render());
+}

@@ -1,0 +1,158 @@
+//! Figures 1, 2, 3, 5 — empirical complexity: log-log slope fits of
+//! solve time vs N for FGC and the original algorithm.
+//!
+//! The paper reports FGC ≈ O(N^2.2) (1D GW/FGW), ≈ O(N^2.3) (2D,
+//! horse) and originals ≈ O(N^3.0). This bench sweeps sizes, fits the
+//! slopes with least squares (the numbers printed on the figures) and
+//! prints both series so the curves can be re-plotted.
+//!
+//! ```bash
+//! cargo bench --bench figures_complexity [-- --full]
+//! ```
+
+use fgc_gw::bench_util::{fit_loglog_slope, fmt_secs, time_mean, SizePoint, TableWriter};
+use fgc_gw::cli::Args;
+use fgc_gw::data::{
+    feature_cost_series, random_distribution, random_distribution_2d, two_hump_series,
+    TwoHumpSpec,
+};
+use fgc_gw::gw::{EntropicGw, GradientKind, GwConfig};
+use fgc_gw::linalg::normalize_l1;
+use fgc_gw::prng::Rng;
+
+fn cfg(eps: f64) -> GwConfig {
+    GwConfig {
+        epsilon: eps,
+        outer_iters: 10,
+        sinkhorn_max_iters: 50,
+        sinkhorn_tolerance: 1e-9,
+        sinkhorn_check_every: 10,
+    }
+}
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1)).unwrap();
+    let full = args.has_flag("full");
+
+    // ---- Figure 1: 1D random GW ----
+    // Sizes start where the asymptotic term dominates the constants —
+    // small-N points flatten the fitted slope (cache effects, Sinkhorn
+    // constants) without saying anything about the complexity class.
+    let sizes_fgc: Vec<usize> = if full {
+        vec![500, 1000, 2000, 4000]
+    } else {
+        vec![500, 1000, 2000, 3000]
+    };
+    let sizes_orig: Vec<usize> = if full {
+        vec![250, 500, 1000, 2000]
+    } else {
+        vec![300, 600, 1200]
+    };
+    let mut t = TableWriter::new("Figure 1 — 1D GW complexity", &["series", "N", "time (s)"]);
+    let mut pts_fgc = Vec::new();
+    let mut pts_orig = Vec::new();
+    for &n in &sizes_fgc {
+        let mut rng = Rng::seeded(n as u64);
+        let u = random_distribution(&mut rng, n);
+        let v = random_distribution(&mut rng, n);
+        let solver = EntropicGw::grid_1d(n, n, 1, cfg(2e-3));
+        let d = time_mean(0, 1, || solver.solve(&u, &v, GradientKind::Fgc).unwrap());
+        pts_fgc.push(SizePoint { n, time: d });
+        t.row(&["FGC".into(), n.to_string(), fmt_secs(d)]);
+    }
+    for &n in &sizes_orig {
+        let mut rng = Rng::seeded(n as u64);
+        let u = random_distribution(&mut rng, n);
+        let v = random_distribution(&mut rng, n);
+        let solver = EntropicGw::grid_1d(n, n, 1, cfg(2e-3));
+        let d = time_mean(0, 1, || solver.solve(&u, &v, GradientKind::Naive).unwrap());
+        pts_orig.push(SizePoint { n, time: d });
+        t.row(&["Original".into(), n.to_string(), fmt_secs(d)]);
+    }
+    println!("{}", t.render());
+    println!(
+        "Figure 1 slopes: FGC {:.2} (paper 2.22), original {:.2} (paper 3.04)\n",
+        fit_loglog_slope(&pts_fgc),
+        fit_loglog_slope(&pts_orig)
+    );
+
+    // ---- Figure 2: 2D random GW ----
+    let sides_fgc: Vec<usize> = if full { vec![20, 30, 45, 60] } else { vec![12, 18, 26, 36] };
+    let sides_orig: Vec<usize> = if full { vec![15, 20, 30, 40] } else { vec![14, 20, 28] };
+    let mut t = TableWriter::new("Figure 2 — 2D GW complexity", &["series", "N", "time (s)"]);
+    let mut p2_fgc = Vec::new();
+    let mut p2_orig = Vec::new();
+    for &s in &sides_fgc {
+        let mut rng = Rng::seeded(s as u64);
+        let u = random_distribution_2d(&mut rng, s);
+        let v = random_distribution_2d(&mut rng, s);
+        let solver = EntropicGw::grid_2d(s, s, 1, cfg(4e-3));
+        let d = time_mean(0, 1, || solver.solve(&u, &v, GradientKind::Fgc).unwrap());
+        p2_fgc.push(SizePoint { n: s * s, time: d });
+        t.row(&["FGC".into(), format!("{}", s * s), fmt_secs(d)]);
+    }
+    for &s in &sides_orig {
+        let mut rng = Rng::seeded(s as u64);
+        let u = random_distribution_2d(&mut rng, s);
+        let v = random_distribution_2d(&mut rng, s);
+        let solver = EntropicGw::grid_2d(s, s, 1, cfg(4e-3));
+        let d = time_mean(0, 1, || solver.solve(&u, &v, GradientKind::Naive).unwrap());
+        p2_orig.push(SizePoint { n: s * s, time: d });
+        t.row(&["Original".into(), format!("{}", s * s), fmt_secs(d)]);
+    }
+    println!("{}", t.render());
+    println!(
+        "Figure 2 slopes: FGC {:.2} (paper 2.29), original {:.2} (paper 3.02)\n",
+        fit_loglog_slope(&p2_fgc),
+        fit_loglog_slope(&p2_orig)
+    );
+
+    // ---- Figure 3 (left): time-series FGW, FGC series ----
+    let ts_sizes: Vec<usize> = if full { vec![400, 800, 1600, 3200] } else { vec![400, 800, 1600, 2400] };
+    let mut t = TableWriter::new("Figure 3 — time-series FGW complexity (FGC)", &["N", "time (s)"]);
+    let mut p3 = Vec::new();
+    for &n in &ts_sizes {
+        let src = two_hump_series(&TwoHumpSpec::default(), n);
+        let dst = two_hump_series(
+            &TwoHumpSpec { center1: 0.22, center2: 0.76, width: 0.08 },
+            n,
+        );
+        let mut u: Vec<f64> = src.iter().map(|&x| x + 1e-3).collect();
+        let mut v: Vec<f64> = dst.iter().map(|&x| x + 1e-3).collect();
+        normalize_l1(&mut u).unwrap();
+        normalize_l1(&mut v).unwrap();
+        let c = feature_cost_series(&src, &dst);
+        let solver = EntropicGw::grid_1d(n, n, 1, cfg(5e-3));
+        let d = time_mean(0, 1, || {
+            solver.solve_fgw(&u, &v, &c, 0.5, GradientKind::Fgc).unwrap()
+        });
+        p3.push(SizePoint { n, time: d });
+        t.row(&[n.to_string(), fmt_secs(d)]);
+    }
+    println!("{}", t.render());
+    println!("Figure 3 slope: FGC {:.2} (paper 2.19)\n", fit_loglog_slope(&p3));
+
+    // ---- Figure 5 (left): horse FGW θ=0.8, FGC series ----
+    let horse_sides: Vec<usize> = if full { vec![40, 60, 80, 100] } else { vec![16, 24, 34, 48] };
+    let mut t = TableWriter::new("Figure 5 — horse FGW complexity (FGC, θ=0.8)", &["N", "time (s)"]);
+    let mut p5 = Vec::new();
+    for &s in &horse_sides {
+        let a = fgc_gw::data::horse_frame(0.0, s).unwrap();
+        let b = fgc_gw::data::horse_frame(0.45, s).unwrap();
+        let u = a.to_distribution(1e-4);
+        let v = b.to_distribution(1e-4);
+        let c = fgc_gw::data::feature_cost_gray(&a, &b);
+        let solver = EntropicGw::new(
+            fgc_gw::gw::Geometry::grid_2d(s, 100.0 / s as f64, 1),
+            fgc_gw::gw::Geometry::grid_2d(s, 100.0 / s as f64, 1),
+            cfg(50.0),
+        );
+        let d = time_mean(0, 1, || {
+            solver.solve_fgw(&u, &v, &c, 0.8, GradientKind::Fgc).unwrap()
+        });
+        p5.push(SizePoint { n: s * s, time: d });
+        t.row(&[format!("{}", s * s), fmt_secs(d)]);
+    }
+    println!("{}", t.render());
+    println!("Figure 5 slope: FGC {:.2} (paper 2.32)", fit_loglog_slope(&p5));
+}

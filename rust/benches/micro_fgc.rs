@@ -1,0 +1,88 @@
+//! Microbenchmarks of the FGC hot path (used by the §Perf pass):
+//! the raw gradient product `D_X Γ D_Y` per backend and size, plus
+//! one Sinkhorn sweep — isolates the operator the paper accelerates
+//! from the rest of the solve.
+//!
+//! ```bash
+//! cargo bench --bench micro_fgc [-- --sizes 500,1000,2000]
+//! ```
+
+use fgc_gw::bench_util::{fit_loglog_slope, fmt_secs, time_mean, SizePoint, TableWriter};
+use fgc_gw::cli::Args;
+use fgc_gw::gw::{Geometry, GradientKind, PairOperator};
+use fgc_gw::linalg::Mat;
+use fgc_gw::prng::Rng;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1)).unwrap();
+    let sizes = args.get_list_or("sizes", &[250, 500, 1000, 2000]).unwrap();
+    let naive_cap = args.get_or("naive-cap", 1000usize).unwrap();
+    let reps = args.get_or("reps", 5usize).unwrap();
+
+    for k in [1u32, 2] {
+        let mut table = TableWriter::new(
+            &format!("micro: D_X Γ D_Y (1D, k={k})"),
+            &["N", "FGC (s)", "naive (s)", "ratio"],
+        );
+        let mut pts = Vec::new();
+        for &n in &sizes {
+            let mut rng = Rng::seeded(n as u64 * k as u64);
+            let gamma = Mat::from_fn(n, n, |_, _| rng.uniform());
+            let gx = Geometry::grid_1d_unit(n, k);
+            let mut fast = PairOperator::new(gx.clone(), gx.clone(), GradientKind::Fgc).unwrap();
+            let mut out = Mat::zeros(n, n);
+            let t_fgc = time_mean(1, reps, || fast.dxgdy(&gamma, &mut out).unwrap());
+            pts.push(SizePoint { n, time: t_fgc });
+            if n <= naive_cap {
+                let mut slow = PairOperator::new(gx.clone(), gx, GradientKind::Naive).unwrap();
+                let t_nv = time_mean(0, 1, || slow.dxgdy(&gamma, &mut out).unwrap());
+                table.row(&[
+                    n.to_string(),
+                    fmt_secs(t_fgc),
+                    fmt_secs(t_nv),
+                    format!("{:.1}", t_nv.as_secs_f64() / t_fgc.as_secs_f64()),
+                ]);
+            } else {
+                table.row(&[n.to_string(), fmt_secs(t_fgc), "—".into(), "—".into()]);
+            }
+        }
+        println!("{}", table.render());
+        println!("FGC gradient slope (k={k}): {:.2} (theory: 2.00)\n", fit_loglog_slope(&pts));
+    }
+
+    // 2D operator
+    let sides = args.get_list_or("sides", &[10, 16, 24, 32]).unwrap();
+    let mut table = TableWriter::new("micro: D_X Γ D_Y (2D, k=1)", &["N=n²", "FGC (s)"]);
+    let mut pts = Vec::new();
+    for &s in &sides {
+        let nn = s * s;
+        let mut rng = Rng::seeded(s as u64);
+        let gamma = Mat::from_fn(nn, nn, |_, _| rng.uniform());
+        let g = Geometry::grid_2d_unit(s, 1);
+        let mut fast = PairOperator::new(g.clone(), g, GradientKind::Fgc).unwrap();
+        let mut out = Mat::zeros(nn, nn);
+        let t = time_mean(0, reps.min(3), || fast.dxgdy(&gamma, &mut out).unwrap());
+        pts.push(SizePoint { n: nn, time: t });
+        table.row(&[nn.to_string(), fmt_secs(t)]);
+    }
+    println!("{}", table.render());
+    println!("2D FGC gradient slope: {:.2} (theory: 2.00)\n", fit_loglog_slope(&pts));
+
+    // Sinkhorn single solve (shared by both paths — not accelerated by FGC)
+    let mut table = TableWriter::new("micro: Sinkhorn (50 sweeps, Gibbs)", &["N", "time (s)"]);
+    for &n in &sizes {
+        let mut rng = Rng::seeded(3 * n as u64);
+        let cost = Mat::from_fn(n, n, |_, _| rng.uniform());
+        let u = vec![1.0 / n as f64; n];
+        let v = vec![1.0 / n as f64; n];
+        let opts = fgc_gw::sinkhorn::SinkhornOptions {
+            epsilon: 0.01,
+            max_iters: 50,
+            tolerance: 0.0,
+            check_every: usize::MAX,
+        };
+        let t = time_mean(0, 1, || fgc_gw::sinkhorn::solve(&cost, &u, &v, &opts).unwrap());
+        table.row(&[n.to_string(), fmt_secs(t)]);
+    }
+    println!("{}", table.render());
+}

@@ -1,0 +1,85 @@
+//! Table 3 — 2D random distributions: FGC vs original entropic
+//! (F)GW on n×n unit grids, ε = 0.004, k = 1, 10 mirror-descent
+//! iterations (paper §4.2).
+//!
+//! Paper sizes are n ∈ {30, 60, 90, 120} (N up to 14 400; their
+//! baseline at 90² took 5 hours). The default run uses n ∈ {10, 16,
+//! 24} with a baseline cap at 16² so the bench finishes in minutes;
+//! `--full` raises to the paper grid for overnight runs.
+//!
+//! ```bash
+//! cargo bench --bench table3_2d_random [-- --full]
+//! ```
+
+use fgc_gw::bench_util::{fmt_secs, time_mean, TableWriter};
+use fgc_gw::cli::Args;
+use fgc_gw::data::random_distribution_2d;
+use fgc_gw::gw::{EntropicGw, GradientKind, GwConfig};
+use fgc_gw::linalg::{frobenius_diff, Mat};
+use fgc_gw::prng::Rng;
+
+fn bench_cfg() -> GwConfig {
+    GwConfig {
+        epsilon: 4e-3,
+        outer_iters: 10,
+        sinkhorn_max_iters: 50,
+        sinkhorn_tolerance: 1e-9,
+        sinkhorn_check_every: 10,
+    }
+}
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1)).unwrap();
+    let full = args.has_flag("full");
+    let reps = args.get_or("reps", 1usize).unwrap();
+    let sides = args
+        .get_list_or("sides", if full { &[30, 60, 90] } else { &[12, 20, 28] })
+        .unwrap();
+    let naive_cap = args.get_or("naive-cap", if full { 60 } else { 28 }).unwrap();
+
+    for (metric, theta) in [("GW", 1.0f64), ("FGW", 0.5f64)] {
+        let mut table = TableWriter::new(
+            &format!("Table 3 ({metric}) — 2D random distributions, ε=0.004, k=1"),
+            &["N=n×n", "FGC (s)", "Original (s)", "Speed-up", "‖P_Fa−P‖_F"],
+        );
+        for &side in &sides {
+            let nn = side * side;
+            let mut rng = Rng::seeded(7 + side as u64);
+            let u = random_distribution_2d(&mut rng, side);
+            let v = random_distribution_2d(&mut rng, side);
+            let feat = (theta < 1.0)
+                .then(|| Mat::from_fn(nn, nn, |i, p| (i as f64 - p as f64).abs() / nn as f64));
+            let solver = EntropicGw::grid_2d(side, side, 1, bench_cfg());
+            let solve = |kind: GradientKind| match &feat {
+                Some(c) => solver.solve_fgw(&u, &v, c, theta, kind).unwrap(),
+                None => solver.solve(&u, &v, kind).unwrap(),
+            };
+            let t_fgc = time_mean(0, reps, || solve(GradientKind::Fgc));
+            if side <= naive_cap {
+                let t_orig = time_mean(0, 1, || solve(GradientKind::Naive));
+                let diff = frobenius_diff(
+                    &solve(GradientKind::Fgc).plan,
+                    &solve(GradientKind::Naive).plan,
+                )
+                .unwrap();
+                table.row(&[
+                    format!("{side}×{side}"),
+                    fmt_secs(t_fgc),
+                    fmt_secs(t_orig),
+                    format!("{:.2}", t_orig.as_secs_f64() / t_fgc.as_secs_f64()),
+                    format!("{diff:.2e}"),
+                ]);
+            } else {
+                table.row(&[
+                    format!("{side}×{side}"),
+                    fmt_secs(t_fgc),
+                    "—".into(),
+                    "—".into(),
+                    "—".into(),
+                ]);
+            }
+        }
+        println!("{}", table.render());
+    }
+    println!("paper reference: GW 60×60 FGC 5.53e1 s, original 1.66e3 s, 30×, diff 7.9e-15");
+}

@@ -1,0 +1,72 @@
+//! Table 4 — time-series alignment with the FGW metric (paper §4.3):
+//! two-hump series, θ = 0.5, k = 1, C = signal-strength difference.
+//!
+//! Paper sizes N ∈ {400, 800, 1600, 3200}; default caps the dense
+//! baseline at 800 (`--full` to match the paper).
+//!
+//! ```bash
+//! cargo bench --bench table4_time_series [-- --full]
+//! ```
+
+use fgc_gw::bench_util::{fmt_secs, time_mean, TableWriter};
+use fgc_gw::cli::Args;
+use fgc_gw::data::{feature_cost_series, two_hump_series, TwoHumpSpec};
+use fgc_gw::gw::{EntropicGw, GradientKind, GwConfig};
+use fgc_gw::linalg::{frobenius_diff, normalize_l1};
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1)).unwrap();
+    let full = args.has_flag("full");
+    let reps = args.get_or("reps", 3usize).unwrap();
+    let sizes = args
+        .get_list_or("sizes", if full { &[400, 800, 1600, 3200] } else { &[200, 400, 800] })
+        .unwrap();
+    let naive_cap = args.get_or("naive-cap", if full { 3200 } else { 800 }).unwrap();
+
+    let mut table = TableWriter::new(
+        "Table 4 — time series alignment, FGW θ=0.5, k=1",
+        &["N", "FGC-FGW (s)", "Original (s)", "Speed-up", "‖P_Fa−P‖_F"],
+    );
+    for &n in &sizes {
+        let src = two_hump_series(&TwoHumpSpec::default(), n);
+        let dst = two_hump_series(
+            &TwoHumpSpec {
+                center1: 0.22,
+                center2: 0.76,
+                width: 0.08,
+            },
+            n,
+        );
+        let mut u: Vec<f64> = src.iter().map(|&s| s + 1e-3).collect();
+        let mut v: Vec<f64> = dst.iter().map(|&s| s + 1e-3).collect();
+        normalize_l1(&mut u).unwrap();
+        normalize_l1(&mut v).unwrap();
+        let c = feature_cost_series(&src, &dst);
+        let solver = EntropicGw::grid_1d(n, n, 1, GwConfig {
+            epsilon: 5e-3,
+            outer_iters: 10,
+            sinkhorn_max_iters: 50,
+            sinkhorn_tolerance: 1e-9,
+            sinkhorn_check_every: 10,
+        });
+        let solve = |kind: GradientKind| solver.solve_fgw(&u, &v, &c, 0.5, kind).unwrap();
+        let t_fgc = time_mean(1, reps, || solve(GradientKind::Fgc));
+        if n <= naive_cap {
+            let t_orig = time_mean(0, 1, || solve(GradientKind::Naive));
+            let diff =
+                frobenius_diff(&solve(GradientKind::Fgc).plan, &solve(GradientKind::Naive).plan)
+                    .unwrap();
+            table.row(&[
+                n.to_string(),
+                fmt_secs(t_fgc),
+                fmt_secs(t_orig),
+                format!("{:.2}", t_orig.as_secs_f64() / t_fgc.as_secs_f64()),
+                format!("{diff:.2e}"),
+            ]);
+        } else {
+            table.row(&[n.to_string(), fmt_secs(t_fgc), "—".into(), "—".into(), "—".into()]);
+        }
+    }
+    println!("{}", table.render());
+    println!("paper reference: N=800 FGC 1.59e0 s, original 1.91e1 s, 12.0×, diff 1.5e-15");
+}

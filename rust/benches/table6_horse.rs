@@ -1,0 +1,80 @@
+//! Table 6 — horse-deformation alignment with the FGW metric
+//! (paper §4.4.2): two gait phases of the 450×300 silhouette,
+//! subsampled to n×n, θ ∈ {0.4, 0.6, 0.8}, k = 1, h = 100/n.
+//!
+//! Paper sizes n ∈ {40, 60, 80, 100}; the default uses n ∈ {16, 24,
+//! 32} with the baseline capped at 24 so the bench stays in minutes
+//! (`--full` for the paper grid — the 80² baseline alone is hours).
+//!
+//! ```bash
+//! cargo bench --bench table6_horse [-- --full]
+//! ```
+
+use fgc_gw::bench_util::{fmt_secs, time_mean, TableWriter};
+use fgc_gw::cli::Args;
+use fgc_gw::data::{feature_cost_gray, horse_frame};
+use fgc_gw::gw::{EntropicGw, Geometry, GradientKind, GwConfig};
+use fgc_gw::linalg::frobenius_diff;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1)).unwrap();
+    let full = args.has_flag("full");
+    let sides = args
+        .get_list_or("sides", if full { &[40, 60, 80] } else { &[16, 24, 32] })
+        .unwrap();
+    let naive_cap = args.get_or("naive-cap", if full { 60 } else { 24 }).unwrap();
+    let thetas = [0.4, 0.6, 0.8];
+
+    for theta in thetas {
+        let mut table = TableWriter::new(
+            &format!("Table 6 (θ={theta}) — horse images, FGW, h=100/n"),
+            &["N=n×n", "FGC-FGW (s)", "Original (s)", "Speed-up", "‖P_Fa−P‖_F"],
+        );
+        for &side in &sides {
+            let a = horse_frame(0.0, side).unwrap();
+            let b = horse_frame(0.45, side).unwrap();
+            let u = a.to_distribution(1e-4);
+            let v = b.to_distribution(1e-4);
+            let c = feature_cost_gray(&a, &b);
+            let h = 100.0 / side as f64;
+            let solver = EntropicGw::new(
+                Geometry::grid_2d(side, h, 1),
+                Geometry::grid_2d(side, h, 1),
+                GwConfig {
+                    epsilon: 50.0, // distances reach h·2n = 200
+                    outer_iters: 10,
+                    sinkhorn_max_iters: 50,
+                    sinkhorn_tolerance: 1e-9,
+                    sinkhorn_check_every: 10,
+                },
+            );
+            let solve = |kind: GradientKind| solver.solve_fgw(&u, &v, &c, theta, kind).unwrap();
+            let t_fgc = time_mean(0, 1, || solve(GradientKind::Fgc));
+            if side <= naive_cap {
+                let t_orig = time_mean(0, 1, || solve(GradientKind::Naive));
+                let diff = frobenius_diff(
+                    &solve(GradientKind::Fgc).plan,
+                    &solve(GradientKind::Naive).plan,
+                )
+                .unwrap();
+                table.row(&[
+                    format!("{side}×{side}"),
+                    fmt_secs(t_fgc),
+                    fmt_secs(t_orig),
+                    format!("{:.2}", t_orig.as_secs_f64() / t_fgc.as_secs_f64()),
+                    format!("{diff:.2e}"),
+                ]);
+            } else {
+                table.row(&[
+                    format!("{side}×{side}"),
+                    fmt_secs(t_fgc),
+                    "—".into(),
+                    "—".into(),
+                    "—".into(),
+                ]);
+            }
+        }
+        println!("{}", table.render());
+    }
+    println!("paper reference: θ=0.8 n=80 FGC 1.98e2 s, original 1.03e4 s, 52×");
+}

@@ -1,0 +1,170 @@
+//! Benchmark harness substrate (criterion is not in the offline crate
+//! set): wall-clock measurement with warmup + repetitions, paper-style
+//! table formatting, and the log-log slope fits behind Figures 1/2/3/5.
+
+use std::time::{Duration, Instant};
+
+/// Measure `f`, returning the mean of `reps` timed runs after
+/// `warmup` discarded runs.
+pub fn time_mean<T>(warmup: usize, reps: usize, mut f: impl FnMut() -> T) -> Duration {
+    for _ in 0..warmup {
+        let _ = std::hint::black_box(f());
+    }
+    let mut total = Duration::ZERO;
+    for _ in 0..reps.max(1) {
+        let t0 = Instant::now();
+        let _ = std::hint::black_box(f());
+        total += t0.elapsed();
+    }
+    total / reps.max(1) as u32
+}
+
+/// One measured size point of a complexity sweep.
+#[derive(Clone, Copy, Debug)]
+pub struct SizePoint {
+    /// Problem size `N`.
+    pub n: usize,
+    /// Measured time.
+    pub time: Duration,
+}
+
+/// Least-squares slope of `log(time)` vs `log(N)` — the "fitted
+/// slopes, representing the empirical computational complexities" the
+/// paper prints on Figures 1, 2, 3 and 5.
+pub fn fit_loglog_slope(points: &[SizePoint]) -> f64 {
+    assert!(points.len() >= 2, "need at least two points to fit");
+    let xs: Vec<f64> = points.iter().map(|p| (p.n as f64).ln()).collect();
+    let ys: Vec<f64> = points
+        .iter()
+        .map(|p| p.time.as_secs_f64().max(1e-12).ln())
+        .collect();
+    let n = xs.len() as f64;
+    let mx = xs.iter().sum::<f64>() / n;
+    let my = ys.iter().sum::<f64>() / n;
+    let mut num = 0.0;
+    let mut den = 0.0;
+    for (x, y) in xs.iter().zip(&ys) {
+        num += (x - mx) * (y - my);
+        den += (x - mx) * (x - mx);
+    }
+    num / den
+}
+
+/// Scientific-notation seconds, matching the paper's tables
+/// (e.g. `4.97e-1`).
+pub fn fmt_secs(d: Duration) -> String {
+    let s = d.as_secs_f64();
+    format!("{s:9.2e}")
+}
+
+/// Render a paper-style table.
+pub struct TableWriter {
+    title: String,
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl TableWriter {
+    /// Start a table.
+    pub fn new(title: &str, header: &[&str]) -> Self {
+        TableWriter {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Append a row.
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.header.len(), "column count mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    /// Format for stdout (also dumped into EXPERIMENTS.md).
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (w, c) in widths.iter_mut().zip(row) {
+                *w = (*w).max(c.len());
+            }
+        }
+        let mut out = format!("== {} ==\n", self.title);
+        let fmt_row = |cells: &[String]| -> String {
+            cells
+                .iter()
+                .zip(&widths)
+                .map(|(c, w)| format!("{c:>w$}"))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        out.push_str(&fmt_row(&self.header));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn slope_of_quadratic_series_is_two() {
+        // synthetic timings t = c·N²
+        let pts: Vec<SizePoint> = [100usize, 200, 400, 800]
+            .iter()
+            .map(|&n| SizePoint {
+                n,
+                time: Duration::from_nanos((n * n) as u64),
+            })
+            .collect();
+        let s = fit_loglog_slope(&pts);
+        assert!((s - 2.0).abs() < 1e-9, "slope={s}");
+    }
+
+    #[test]
+    fn slope_of_cubic_series_is_three() {
+        let pts: Vec<SizePoint> = [50usize, 100, 200]
+            .iter()
+            .map(|&n| SizePoint {
+                n,
+                time: Duration::from_nanos((n * n * n) as u64),
+            })
+            .collect();
+        assert!((fit_loglog_slope(&pts) - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn time_mean_measures_something() {
+        let d = time_mean(1, 3, || {
+            let mut s = 0u64;
+            for i in 0..10_000u64 {
+                s = s.wrapping_add(i * i);
+            }
+            s
+        });
+        assert!(d > Duration::ZERO);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = TableWriter::new("demo", &["N", "time"]);
+        t.row(&["500".into(), "4.97e-1".into()]);
+        t.row(&["10000".into(), "1.00e1".into()]);
+        let s = t.render();
+        assert!(s.contains("demo"));
+        assert!(s.lines().count() >= 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "column count mismatch")]
+    fn table_rejects_ragged_rows() {
+        let mut t = TableWriter::new("x", &["a", "b"]);
+        t.row(&["1".into()]);
+    }
+}

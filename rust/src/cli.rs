@@ -1,0 +1,131 @@
+//! Hand-rolled CLI argument parsing (clap is not in the offline crate
+//! set). Supports `command [positional…] [--flag] [--key value]`.
+
+use crate::error::{Error, Result};
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    /// First non-flag token (subcommand).
+    pub command: Option<String>,
+    /// Remaining positionals.
+    pub positional: Vec<String>,
+    /// `--key value` and `--key=value` options.
+    options: BTreeMap<String, String>,
+    /// Bare `--flag`s.
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of tokens (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(tokens: I) -> Result<Self> {
+        let mut out = Args::default();
+        let mut it = tokens.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(stripped) = tok.strip_prefix("--") {
+                if stripped.is_empty() {
+                    return Err(Error::Config("bare `--` not supported".into()));
+                }
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.options.insert(stripped.to_string(), v);
+                } else {
+                    out.flags.push(stripped.to_string());
+                }
+            } else if out.command.is_none() {
+                out.command = Some(tok);
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Parse the process arguments.
+    pub fn from_env() -> Result<Self> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    /// Option lookup with typed default.
+    pub fn get_or<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T> {
+        match self.options.get(key) {
+            None => Ok(default),
+            Some(raw) => raw
+                .parse()
+                .map_err(|_| Error::Config(format!("--{key}: cannot parse `{raw}`"))),
+        }
+    }
+
+    /// Raw option value.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    /// Was `--flag` given (as a bare flag)?
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    /// Comma-separated list option.
+    pub fn get_list_or(&self, key: &str, default: &[usize]) -> Result<Vec<usize>> {
+        match self.options.get(key) {
+            None => Ok(default.to_vec()),
+            Some(raw) => raw
+                .split(',')
+                .filter(|s| !s.is_empty())
+                .map(|s| {
+                    s.trim()
+                        .parse()
+                        .map_err(|_| Error::Config(format!("--{key}: bad entry `{s}`")))
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(tokens: &[&str]) -> Args {
+        Args::parse(tokens.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn command_positionals_options_flags() {
+        let a = parse(&["solve", "--n", "500", "input.dat", "--verbose", "--eps=0.002"]);
+        assert_eq!(a.command.as_deref(), Some("solve"));
+        assert_eq!(a.positional, vec!["input.dat"]);
+        assert_eq!(a.get_or("n", 0usize).unwrap(), 500);
+        assert_eq!(a.get_or("eps", 0.0f64).unwrap(), 0.002);
+        assert!(a.has_flag("verbose"));
+        assert!(!a.has_flag("quiet"));
+    }
+
+    #[test]
+    fn typed_defaults_and_errors() {
+        let a = parse(&["x", "--bad", "zzz"]);
+        assert_eq!(a.get_or("missing", 7u32).unwrap(), 7);
+        assert!(a.get_or("bad", 0u32).is_err());
+    }
+
+    #[test]
+    fn list_option() {
+        let a = parse(&["bench", "--sizes", "500,1000,2000"]);
+        assert_eq!(a.get_list_or("sizes", &[1]).unwrap(), vec![500, 1000, 2000]);
+        assert_eq!(a.get_list_or("other", &[4, 5]).unwrap(), vec![4, 5]);
+    }
+
+    #[test]
+    fn trailing_flag_without_value() {
+        let a = parse(&["run", "--fast"]);
+        assert!(a.has_flag("fast"));
+    }
+}

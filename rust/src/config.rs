@@ -1,0 +1,144 @@
+//! Configuration files: a small `key = value` format with `#`
+//! comments and `[section]` headers (serde/toml are not in the
+//! offline crate set; this covers what the launcher needs).
+//!
+//! ```text
+//! # fgc-gw service config
+//! [service]
+//! native_workers = 2
+//! queue_capacity = 64
+//! enable_pjrt = false
+//!
+//! [solver]
+//! epsilon = 0.002
+//! outer_iters = 10
+//! ```
+
+use crate::error::{Error, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Parsed configuration: `section.key → value` (keys outside any
+/// section live under `""`).
+#[derive(Clone, Debug, Default)]
+pub struct Config {
+    values: BTreeMap<String, String>,
+}
+
+impl Config {
+    /// Parse from text.
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut values = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if line.starts_with('[') {
+                if !line.ends_with(']') {
+                    return Err(Error::Config(format!(
+                        "line {}: unterminated section header",
+                        lineno + 1
+                    )));
+                }
+                section = line[1..line.len() - 1].trim().to_string();
+                continue;
+            }
+            let Some((key, value)) = line.split_once('=') else {
+                return Err(Error::Config(format!(
+                    "line {}: expected `key = value`, got `{line}`",
+                    lineno + 1
+                )));
+            };
+            let full_key = if section.is_empty() {
+                key.trim().to_string()
+            } else {
+                format!("{section}.{}", key.trim())
+            };
+            values.insert(full_key, value.trim().to_string());
+        }
+        Ok(Config { values })
+    }
+
+    /// Load from a file.
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::Io(format!("reading {}", path.display()), e))?;
+        Self::parse(&text)
+    }
+
+    /// Raw lookup.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    /// Typed lookup with default.
+    pub fn get_or<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T> {
+        match self.values.get(key) {
+            None => Ok(default),
+            Some(raw) => raw.parse().map_err(|_| {
+                Error::Config(format!("key `{key}`: cannot parse `{raw}`"))
+            }),
+        }
+    }
+
+    /// Boolean lookup (`true/false/1/0/yes/no`).
+    pub fn get_bool_or(&self, key: &str, default: bool) -> Result<bool> {
+        match self.values.get(key).map(|s| s.as_str()) {
+            None => Ok(default),
+            Some("true") | Some("1") | Some("yes") => Ok(true),
+            Some("false") | Some("0") | Some("no") => Ok(false),
+            Some(other) => Err(Error::Config(format!("key `{key}`: bad bool `{other}`"))),
+        }
+    }
+
+    /// Override a value (CLI `--set section.key=value`).
+    pub fn set(&mut self, key: &str, value: &str) {
+        self.values.insert(key.to_string(), value.to_string());
+    }
+
+    /// Number of entries.
+    pub fn len(&self) -> usize {
+        self.values.len()
+    }
+
+    /// True iff empty.
+    pub fn is_empty(&self) -> bool {
+        self.values.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_comments_types() {
+        let cfg = Config::parse(
+            "# top\nroot_key = 7\n[service]\nnative_workers = 3 # inline\nenable_pjrt = yes\n\n[solver]\nepsilon = 0.004\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.get_or("root_key", 0usize).unwrap(), 7);
+        assert_eq!(cfg.get_or("service.native_workers", 1usize).unwrap(), 3);
+        assert!(cfg.get_bool_or("service.enable_pjrt", false).unwrap());
+        assert_eq!(cfg.get_or("solver.epsilon", 0.0f64).unwrap(), 0.004);
+        assert_eq!(cfg.get_or("missing", 42usize).unwrap(), 42);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Config::parse("[unclosed\n").is_err());
+        assert!(Config::parse("no equals sign\n").is_err());
+        let cfg = Config::parse("x = notanumber\n").unwrap();
+        assert!(cfg.get_or("x", 0u32).is_err());
+        assert!(cfg.get_bool_or("x", false).is_err());
+    }
+
+    #[test]
+    fn set_overrides() {
+        let mut cfg = Config::parse("[a]\nb = 1\n").unwrap();
+        cfg.set("a.b", "2");
+        assert_eq!(cfg.get_or("a.b", 0u32).unwrap(), 2);
+    }
+}

@@ -1,0 +1,106 @@
+//! Variant batching: group queued jobs that share a compiled-solver
+//! variant so a worker runs them back-to-back (warm executable /
+//! warm workspaces — the analogue of dynamic batching in serving
+//! systems, adapted to CPU-bound solves with no batch dimension).
+
+use super::job::{BackendChoice, JobPayload, JobRequest};
+
+/// The grouping key: jobs with equal keys share workspaces and (for
+/// PJRT) a compiled executable.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct VariantKey {
+    /// Backend discriminator (PJRT name or native marker).
+    pub backend: String,
+    /// Problem family + size.
+    pub family: &'static str,
+    /// Support points.
+    pub points: usize,
+    /// Distance exponent.
+    pub k: u32,
+}
+
+/// Key for a request.
+pub fn variant_key(req: &JobRequest) -> VariantKey {
+    let backend = match &req.backend {
+        BackendChoice::Pjrt(name) => format!("pjrt:{name}"),
+        BackendChoice::NativeFgc => "native-fgc".to_string(),
+        BackendChoice::NativeNaive => "native-naive".to_string(),
+    };
+    let (family, points, k) = match &req.payload {
+        JobPayload::Gw1d { u, k, .. } => ("gw1d", u.len(), *k),
+        JobPayload::Fgw1d { u, k, .. } => ("fgw1d", u.len(), *k),
+        JobPayload::Gw2d { n, k, .. } => ("gw2d", n * n, *k),
+    };
+    VariantKey {
+        backend,
+        family,
+        points,
+        k,
+    }
+}
+
+/// Stable-partition a drained batch by variant: runs of same-variant
+/// jobs execute consecutively, preserving FIFO order *within* each
+/// variant (fairness across variants is preserved at batch
+/// granularity).
+pub fn group_by_variant(mut jobs: Vec<JobRequest>) -> Vec<(VariantKey, Vec<JobRequest>)> {
+    let mut groups: Vec<(VariantKey, Vec<JobRequest>)> = Vec::new();
+    for job in jobs.drain(..) {
+        let key = variant_key(&job);
+        if let Some((_, bucket)) = groups.iter_mut().find(|(k, _)| *k == key) {
+            bucket.push(job);
+        } else {
+            groups.push((key, vec![job]));
+        }
+    }
+    groups
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Instant;
+
+    fn req(id: u64, n: usize, backend: BackendChoice) -> JobRequest {
+        JobRequest {
+            id,
+            payload: JobPayload::Gw1d {
+                u: vec![1.0 / n as f64; n],
+                v: vec![1.0 / n as f64; n],
+                k: 1,
+                epsilon: 0.002,
+            },
+            backend,
+            submitted_at: Instant::now(),
+        }
+    }
+
+    #[test]
+    fn groups_same_variant_preserving_order() {
+        let jobs = vec![
+            req(1, 8, BackendChoice::NativeFgc),
+            req(2, 16, BackendChoice::NativeFgc),
+            req(3, 8, BackendChoice::NativeFgc),
+            req(4, 8, BackendChoice::NativeNaive),
+        ];
+        let groups = group_by_variant(jobs);
+        assert_eq!(groups.len(), 3);
+        let first = &groups[0];
+        assert_eq!(first.0.points, 8);
+        assert_eq!(
+            first.1.iter().map(|j| j.id).collect::<Vec<_>>(),
+            vec![1, 3]
+        );
+        assert_eq!(groups[1].1[0].id, 2);
+        assert_eq!(groups[2].0.backend, "native-naive");
+    }
+
+    #[test]
+    fn distinct_pjrt_artifacts_are_distinct_variants() {
+        let jobs = vec![
+            req(1, 8, BackendChoice::Pjrt("a".into())),
+            req(2, 8, BackendChoice::Pjrt("b".into())),
+        ];
+        assert_eq!(group_by_variant(jobs).len(), 2);
+    }
+}

@@ -1,0 +1,248 @@
+//! Job model for the alignment service.
+
+use crate::linalg::Mat;
+use std::time::{Duration, Instant};
+
+/// Monotonic job identifier.
+pub type JobId = u64;
+
+/// What a client asks the service to compute.
+#[derive(Clone, Debug)]
+pub enum JobPayload {
+    /// GW between two distributions on 1D unit grids (equal size).
+    Gw1d {
+        /// Source distribution.
+        u: Vec<f64>,
+        /// Target distribution.
+        v: Vec<f64>,
+        /// Distance exponent.
+        k: u32,
+        /// Entropic ε.
+        epsilon: f64,
+    },
+    /// FGW on 1D grids with a feature cost.
+    Fgw1d {
+        /// Source distribution.
+        u: Vec<f64>,
+        /// Target distribution.
+        v: Vec<f64>,
+        /// Feature cost matrix `C`.
+        feature_cost: Mat,
+        /// Linear/quadratic trade-off θ.
+        theta: f64,
+        /// Distance exponent.
+        k: u32,
+        /// Entropic ε.
+        epsilon: f64,
+    },
+    /// GW between distributions on `n×n` 2D grids.
+    Gw2d {
+        /// Grid side length (`u`, `v` have length `n²`).
+        n: usize,
+        /// Source distribution (flattened row-major).
+        u: Vec<f64>,
+        /// Target distribution.
+        v: Vec<f64>,
+        /// Distance exponent.
+        k: u32,
+        /// Entropic ε.
+        epsilon: f64,
+    },
+}
+
+impl JobPayload {
+    /// Problem size (support points per side).
+    pub fn points(&self) -> usize {
+        match self {
+            JobPayload::Gw1d { u, .. } => u.len(),
+            JobPayload::Fgw1d { u, .. } => u.len(),
+            JobPayload::Gw2d { n, .. } => n * n,
+        }
+    }
+
+    /// Quick structural validation before enqueueing.
+    pub fn validate(&self) -> Result<(), String> {
+        let check_dist = |w: &[f64], name: &str| -> Result<(), String> {
+            if w.is_empty() {
+                return Err(format!("{name} is empty"));
+            }
+            if w.iter().any(|&x| x < 0.0 || !x.is_finite()) {
+                return Err(format!("{name} has negative/non-finite entries"));
+            }
+            let s: f64 = w.iter().sum();
+            if (s - 1.0).abs() > 1e-6 {
+                return Err(format!("{name} sums to {s}, expected 1"));
+            }
+            Ok(())
+        };
+        match self {
+            JobPayload::Gw1d { u, v, epsilon, .. } => {
+                check_dist(u, "u")?;
+                check_dist(v, "v")?;
+                if u.len() != v.len() {
+                    return Err("u/v size mismatch (1D jobs use equal grids)".into());
+                }
+                if *epsilon <= 0.0 {
+                    return Err("epsilon must be > 0".into());
+                }
+            }
+            JobPayload::Fgw1d {
+                u,
+                v,
+                feature_cost,
+                theta,
+                epsilon,
+                ..
+            } => {
+                check_dist(u, "u")?;
+                check_dist(v, "v")?;
+                if feature_cost.shape() != (u.len(), v.len()) {
+                    return Err("feature cost shape mismatch".into());
+                }
+                if !(0.0..=1.0).contains(theta) {
+                    return Err("theta must be in [0,1]".into());
+                }
+                if *epsilon <= 0.0 {
+                    return Err("epsilon must be > 0".into());
+                }
+            }
+            JobPayload::Gw2d { n, u, v, epsilon, .. } => {
+                check_dist(u, "u")?;
+                check_dist(v, "v")?;
+                if u.len() != n * n || v.len() != n * n {
+                    return Err(format!("2D job needs n²={} entries", n * n));
+                }
+                if *epsilon <= 0.0 {
+                    return Err("epsilon must be > 0".into());
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Which backend executed (or will execute) a job.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum BackendChoice {
+    /// Native Rust solver with the FGC gradient.
+    NativeFgc,
+    /// Native Rust solver with the dense baseline gradient.
+    NativeNaive,
+    /// PJRT-compiled artifact (by name).
+    Pjrt(String),
+}
+
+impl std::fmt::Display for BackendChoice {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            BackendChoice::NativeFgc => write!(f, "native-fgc"),
+            BackendChoice::NativeNaive => write!(f, "native-naive"),
+            BackendChoice::Pjrt(name) => write!(f, "pjrt:{name}"),
+        }
+    }
+}
+
+/// An enqueued job.
+#[derive(Clone, Debug)]
+pub struct JobRequest {
+    /// Assigned id.
+    pub id: JobId,
+    /// The work.
+    pub payload: JobPayload,
+    /// Backend decided by the router at submit time.
+    pub backend: BackendChoice,
+    /// Enqueue timestamp (for queue-time accounting).
+    pub submitted_at: Instant,
+}
+
+/// Completed-job report sent back to the submitter.
+#[derive(Clone, Debug)]
+pub struct JobResult {
+    /// Job id.
+    pub id: JobId,
+    /// Final objective ((F)GW² value), if the solve succeeded.
+    pub objective: Result<f64, String>,
+    /// Transport plan (present on success and when the client asked
+    /// for plans — always returned here; large-plan elision is a
+    /// client-side concern).
+    pub plan: Option<Mat>,
+    /// Which backend ran it.
+    pub backend: BackendChoice,
+    /// Time spent queued.
+    pub queue_time: Duration,
+    /// Time spent solving.
+    pub solve_time: Duration,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn uniform(n: usize) -> Vec<f64> {
+        vec![1.0 / n as f64; n]
+    }
+
+    #[test]
+    fn validate_accepts_good_jobs() {
+        let p = JobPayload::Gw1d {
+            u: uniform(8),
+            v: uniform(8),
+            k: 1,
+            epsilon: 0.002,
+        };
+        assert!(p.validate().is_ok());
+        assert_eq!(p.points(), 8);
+    }
+
+    #[test]
+    fn validate_rejects_bad_marginals() {
+        let p = JobPayload::Gw1d {
+            u: vec![0.5, 0.6],
+            v: uniform(2),
+            k: 1,
+            epsilon: 0.002,
+        };
+        assert!(p.validate().is_err());
+        let p = JobPayload::Gw1d {
+            u: vec![],
+            v: vec![],
+            k: 1,
+            epsilon: 0.002,
+        };
+        assert!(p.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_bad_fgw() {
+        let p = JobPayload::Fgw1d {
+            u: uniform(4),
+            v: uniform(4),
+            feature_cost: Mat::zeros(3, 4),
+            theta: 0.5,
+            k: 1,
+            epsilon: 0.01,
+        };
+        assert!(p.validate().is_err());
+        let p = JobPayload::Fgw1d {
+            u: uniform(4),
+            v: uniform(4),
+            feature_cost: Mat::zeros(4, 4),
+            theta: 1.5,
+            k: 1,
+            epsilon: 0.01,
+        };
+        assert!(p.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_bad_2d_size() {
+        let p = JobPayload::Gw2d {
+            n: 3,
+            u: uniform(8),
+            v: uniform(9),
+            k: 1,
+            epsilon: 0.004,
+        };
+        assert!(p.validate().is_err());
+    }
+}

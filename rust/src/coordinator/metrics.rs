@@ -1,0 +1,196 @@
+//! Service metrics: counters + latency histogram (lock-free counters,
+//! a mutex-guarded reservoir for percentiles).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Live metrics shared across the service threads.
+#[derive(Debug, Default)]
+pub struct ServiceMetrics {
+    submitted: AtomicU64,
+    rejected: AtomicU64,
+    completed: AtomicU64,
+    failed: AtomicU64,
+    native_fgc: AtomicU64,
+    native_naive: AtomicU64,
+    pjrt: AtomicU64,
+    /// Completed-job latencies in microseconds (queue + solve).
+    latencies_us: Mutex<Vec<u64>>,
+    solve_us_total: AtomicU64,
+    queue_us_total: AtomicU64,
+}
+
+impl ServiceMetrics {
+    /// Fresh metrics.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record an admission.
+    pub fn on_submit(&self) {
+        self.submitted.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record a rejection (validation, backpressure, shutdown).
+    pub fn on_reject(&self) {
+        self.rejected.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record a completion.
+    pub fn on_complete(
+        &self,
+        backend_fgc: bool,
+        backend_pjrt: bool,
+        ok: bool,
+        queue: Duration,
+        solve: Duration,
+    ) {
+        if ok {
+            self.completed.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.failed.fetch_add(1, Ordering::Relaxed);
+        }
+        if backend_pjrt {
+            self.pjrt.fetch_add(1, Ordering::Relaxed);
+        } else if backend_fgc {
+            self.native_fgc.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.native_naive.fetch_add(1, Ordering::Relaxed);
+        }
+        let total_us = (queue + solve).as_micros() as u64;
+        self.queue_us_total
+            .fetch_add(queue.as_micros() as u64, Ordering::Relaxed);
+        self.solve_us_total
+            .fetch_add(solve.as_micros() as u64, Ordering::Relaxed);
+        self.latencies_us.lock().unwrap().push(total_us);
+    }
+
+    /// Snapshot for reporting.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let mut lats = self.latencies_us.lock().unwrap().clone();
+        lats.sort_unstable();
+        let pct = |p: f64| -> Duration {
+            if lats.is_empty() {
+                return Duration::ZERO;
+            }
+            let idx = ((lats.len() as f64 - 1.0) * p).round() as usize;
+            Duration::from_micros(lats[idx])
+        };
+        MetricsSnapshot {
+            submitted: self.submitted.load(Ordering::Relaxed),
+            rejected: self.rejected.load(Ordering::Relaxed),
+            completed: self.completed.load(Ordering::Relaxed),
+            failed: self.failed.load(Ordering::Relaxed),
+            native_fgc: self.native_fgc.load(Ordering::Relaxed),
+            native_naive: self.native_naive.load(Ordering::Relaxed),
+            pjrt: self.pjrt.load(Ordering::Relaxed),
+            p50: pct(0.50),
+            p90: pct(0.90),
+            p99: pct(0.99),
+            mean_queue: Duration::from_micros(
+                self.queue_us_total.load(Ordering::Relaxed)
+                    / self.completed.load(Ordering::Relaxed).max(1),
+            ),
+            mean_solve: Duration::from_micros(
+                self.solve_us_total.load(Ordering::Relaxed)
+                    / self.completed.load(Ordering::Relaxed).max(1),
+            ),
+        }
+    }
+}
+
+/// A point-in-time view of the service metrics.
+#[derive(Clone, Debug)]
+pub struct MetricsSnapshot {
+    /// Jobs admitted.
+    pub submitted: u64,
+    /// Jobs rejected at admission.
+    pub rejected: u64,
+    /// Jobs completed successfully.
+    pub completed: u64,
+    /// Jobs that errored during solve.
+    pub failed: u64,
+    /// Completions per backend.
+    pub native_fgc: u64,
+    /// Dense-baseline completions.
+    pub native_naive: u64,
+    /// PJRT completions.
+    pub pjrt: u64,
+    /// Median end-to-end latency.
+    pub p50: Duration,
+    /// 90th percentile latency.
+    pub p90: Duration,
+    /// 99th percentile latency.
+    pub p99: Duration,
+    /// Mean queue wait.
+    pub mean_queue: Duration,
+    /// Mean solve time.
+    pub mean_solve: Duration,
+}
+
+impl std::fmt::Display for MetricsSnapshot {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(
+            f,
+            "jobs: submitted={} rejected={} completed={} failed={}",
+            self.submitted, self.rejected, self.completed, self.failed
+        )?;
+        writeln!(
+            f,
+            "backends: native-fgc={} native-naive={} pjrt={}",
+            self.native_fgc, self.native_naive, self.pjrt
+        )?;
+        write!(
+            f,
+            "latency: p50={:.1?} p90={:.1?} p99={:.1?} (queue {:.1?} + solve {:.1?} mean)",
+            self.p50, self.p90, self.p99, self.mean_queue, self.mean_solve
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_percentiles() {
+        let m = ServiceMetrics::new();
+        for i in 0..100u64 {
+            m.on_submit();
+            m.on_complete(
+                true,
+                false,
+                true,
+                Duration::from_micros(10),
+                Duration::from_micros(i * 10),
+            );
+        }
+        m.on_reject();
+        let s = m.snapshot();
+        assert_eq!(s.submitted, 100);
+        assert_eq!(s.rejected, 1);
+        assert_eq!(s.completed, 100);
+        assert_eq!(s.native_fgc, 100);
+        assert!(s.p50 <= s.p90 && s.p90 <= s.p99);
+        assert!(s.p50 >= Duration::from_micros(400) && s.p50 <= Duration::from_micros(600));
+    }
+
+    #[test]
+    fn empty_snapshot_is_zero() {
+        let m = ServiceMetrics::new();
+        let s = m.snapshot();
+        assert_eq!(s.p99, Duration::ZERO);
+        assert_eq!(s.completed, 0);
+    }
+
+    #[test]
+    fn display_contains_fields() {
+        let m = ServiceMetrics::new();
+        m.on_submit();
+        m.on_complete(false, true, true, Duration::ZERO, Duration::from_millis(1));
+        let text = m.snapshot().to_string();
+        assert!(text.contains("pjrt=1"));
+        assert!(text.contains("p50"));
+    }
+}

@@ -1,0 +1,28 @@
+//! L3 coordinator — the alignment service.
+//!
+//! The paper's contribution is numeric, so the coordinator is the
+//! deployment layer that turns FGC into a system: clients submit
+//! GW/FGW alignment jobs; the service validates them, routes each to
+//! a backend (native FGC, native dense baseline, or a PJRT-compiled
+//! artifact when one matches the job's shape), applies backpressure
+//! through bounded queues, runs a worker pool, and records
+//! latency/throughput metrics.
+//!
+//! Threading model (no async runtime in the offline crate set — and
+//! none needed: jobs are CPU-bound): a bounded MPMC queue feeds
+//! `native_workers` compute threads, plus one dedicated PJRT thread
+//! that owns the (non-`Sync`) `Executor` when artifacts are enabled.
+
+mod batcher;
+mod job;
+mod metrics;
+mod queue;
+mod router;
+mod service;
+
+pub use batcher::{group_by_variant, VariantKey};
+pub use job::{BackendChoice, JobId, JobPayload, JobRequest, JobResult};
+pub use metrics::{MetricsSnapshot, ServiceMetrics};
+pub use queue::BoundedQueue;
+pub use router::{Router, RoutingPolicy};
+pub use service::{Coordinator, CoordinatorConfig};

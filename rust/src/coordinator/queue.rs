@@ -1,0 +1,250 @@
+//! Bounded MPMC queue with backpressure (Mutex + Condvar; the offline
+//! crate set has no crossbeam/tokio).
+
+use crate::error::{Error, Result};
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+struct Inner<T> {
+    q: Mutex<State<T>>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    capacity: usize,
+}
+
+struct State<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+/// A bounded multi-producer multi-consumer queue.
+///
+/// * `try_push` rejects immediately when full (the service's
+///   fail-fast admission path).
+/// * `push_timeout` blocks up to a deadline (backpressure).
+/// * `pop` blocks until an item arrives or the queue is closed and
+///   drained (then returns `None` — worker shutdown signal).
+pub struct BoundedQueue<T> {
+    inner: Arc<Inner<T>>,
+}
+
+impl<T> Clone for BoundedQueue<T> {
+    fn clone(&self) -> Self {
+        BoundedQueue {
+            inner: Arc::clone(&self.inner),
+        }
+    }
+}
+
+impl<T> BoundedQueue<T> {
+    /// Create with a positive capacity.
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity > 0, "queue capacity must be positive");
+        BoundedQueue {
+            inner: Arc::new(Inner {
+                q: Mutex::new(State {
+                    items: VecDeque::new(),
+                    closed: false,
+                }),
+                not_empty: Condvar::new(),
+                not_full: Condvar::new(),
+                capacity,
+            }),
+        }
+    }
+
+    /// Items currently queued.
+    pub fn len(&self) -> usize {
+        self.inner.q.lock().unwrap().items.len()
+    }
+
+    /// True iff currently empty.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Non-blocking push; `Err(Rejected)` when full or closed.
+    pub fn try_push(&self, item: T) -> Result<()> {
+        let mut st = self.inner.q.lock().unwrap();
+        if st.closed {
+            return Err(Error::Rejected("queue closed".into()));
+        }
+        if st.items.len() >= self.inner.capacity {
+            return Err(Error::Rejected(format!(
+                "queue full (capacity {})",
+                self.inner.capacity
+            )));
+        }
+        st.items.push_back(item);
+        drop(st);
+        self.inner.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Blocking push with a deadline — the backpressure path.
+    pub fn push_timeout(&self, item: T, timeout: Duration) -> Result<()> {
+        let mut st = self.inner.q.lock().unwrap();
+        let deadline = std::time::Instant::now() + timeout;
+        loop {
+            if st.closed {
+                return Err(Error::Rejected("queue closed".into()));
+            }
+            if st.items.len() < self.inner.capacity {
+                st.items.push_back(item);
+                drop(st);
+                self.inner.not_empty.notify_one();
+                return Ok(());
+            }
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return Err(Error::Rejected("backpressure timeout".into()));
+            }
+            let (guard, res) = self
+                .inner
+                .not_full
+                .wait_timeout(st, deadline - now)
+                .unwrap();
+            st = guard;
+            if res.timed_out() && st.items.len() >= self.inner.capacity {
+                return Err(Error::Rejected("backpressure timeout".into()));
+            }
+        }
+    }
+
+    /// Blocking pop; `None` once closed and drained.
+    pub fn pop(&self) -> Option<T> {
+        let mut st = self.inner.q.lock().unwrap();
+        loop {
+            if let Some(item) = st.items.pop_front() {
+                drop(st);
+                self.inner.not_full.notify_one();
+                return Some(item);
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.inner.not_empty.wait(st).unwrap();
+        }
+    }
+
+    /// Drain up to `max` items without blocking (batcher path).
+    pub fn pop_batch(&self, max: usize) -> Vec<T> {
+        let mut st = self.inner.q.lock().unwrap();
+        let take = st.items.len().min(max);
+        let out: Vec<T> = st.items.drain(..take).collect();
+        drop(st);
+        for _ in 0..out.len() {
+            self.inner.not_full.notify_one();
+        }
+        out
+    }
+
+    /// Close: producers start failing, consumers drain then get `None`.
+    pub fn close(&self) {
+        let mut st = self.inner.q.lock().unwrap();
+        st.closed = true;
+        drop(st);
+        self.inner.not_empty.notify_all();
+        self.inner.not_full.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    #[test]
+    fn fifo_order() {
+        let q = BoundedQueue::new(4);
+        q.try_push(1).unwrap();
+        q.try_push(2).unwrap();
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), Some(2));
+    }
+
+    #[test]
+    fn rejects_when_full() {
+        let q = BoundedQueue::new(2);
+        q.try_push(1).unwrap();
+        q.try_push(2).unwrap();
+        assert!(q.try_push(3).is_err());
+        assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn close_drains_then_none() {
+        let q = BoundedQueue::new(4);
+        q.try_push(7).unwrap();
+        q.close();
+        assert!(q.try_push(8).is_err());
+        assert_eq!(q.pop(), Some(7));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn backpressure_releases_on_pop() {
+        let q = BoundedQueue::new(1);
+        q.try_push(1).unwrap();
+        let q2 = q.clone();
+        let h = thread::spawn(move || q2.push_timeout(2, Duration::from_secs(5)));
+        thread::sleep(Duration::from_millis(50));
+        assert_eq!(q.pop(), Some(1));
+        h.join().unwrap().unwrap();
+        assert_eq!(q.pop(), Some(2));
+    }
+
+    #[test]
+    fn backpressure_times_out() {
+        let q = BoundedQueue::new(1);
+        q.try_push(1).unwrap();
+        let err = q.push_timeout(2, Duration::from_millis(30)).unwrap_err();
+        assert!(err.to_string().contains("backpressure"));
+    }
+
+    #[test]
+    fn pop_batch_takes_up_to_max() {
+        let q = BoundedQueue::new(10);
+        for i in 0..5 {
+            q.try_push(i).unwrap();
+        }
+        let batch = q.pop_batch(3);
+        assert_eq!(batch, vec![0, 1, 2]);
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.pop_batch(10), vec![3, 4]);
+    }
+
+    #[test]
+    fn mpmc_under_contention() {
+        let q = BoundedQueue::new(8);
+        let producers: Vec<_> = (0..4)
+            .map(|p| {
+                let q = q.clone();
+                thread::spawn(move || {
+                    for i in 0..50 {
+                        q.push_timeout(p * 1000 + i, Duration::from_secs(10)).unwrap();
+                    }
+                })
+            })
+            .collect();
+        let consumers: Vec<_> = (0..2)
+            .map(|_| {
+                let q = q.clone();
+                thread::spawn(move || {
+                    let mut got = Vec::new();
+                    while let Some(x) = q.pop() {
+                        got.push(x);
+                    }
+                    got
+                })
+            })
+            .collect();
+        for p in producers {
+            p.join().unwrap();
+        }
+        q.close();
+        let total: usize = consumers.into_iter().map(|c| c.join().unwrap().len()).sum();
+        assert_eq!(total, 200);
+    }
+}

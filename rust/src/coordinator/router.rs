@@ -1,0 +1,129 @@
+//! Backend routing: decide per job whether to run native-FGC,
+//! native-naive, or a PJRT artifact.
+
+use super::job::{BackendChoice, JobPayload};
+use crate::runtime::{ArtifactKind, ArtifactRegistry};
+
+/// Routing policy knobs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RoutingPolicy {
+    /// Prefer a matching PJRT artifact, else native FGC (default).
+    PreferPjrt,
+    /// Always native FGC (artifacts ignored).
+    NativeOnly,
+    /// Native dense baseline (for A/B benchmarking through the
+    /// service path).
+    BaselineOnly,
+}
+
+/// The router: artifact shape lookup + policy.
+#[derive(Clone, Debug)]
+pub struct Router {
+    registry: ArtifactRegistry,
+    policy: RoutingPolicy,
+}
+
+impl Router {
+    /// Build from a registry and policy.
+    pub fn new(registry: ArtifactRegistry, policy: RoutingPolicy) -> Self {
+        Router { registry, policy }
+    }
+
+    /// The active policy.
+    pub fn policy(&self) -> RoutingPolicy {
+        self.policy
+    }
+
+    /// Artifacts visible to this router.
+    pub fn registry(&self) -> &ArtifactRegistry {
+        &self.registry
+    }
+
+    /// Decide the backend for a payload.
+    ///
+    /// PJRT dispatch requires an exact `(kind, n)` artifact match
+    /// *and* matching baked-in hyperparameters (ε, k) — otherwise the
+    /// compiled solver would answer a different question; mismatches
+    /// fall back to the native solver, which takes runtime parameters.
+    pub fn route(&self, payload: &JobPayload) -> BackendChoice {
+        match self.policy {
+            RoutingPolicy::NativeOnly => BackendChoice::NativeFgc,
+            RoutingPolicy::BaselineOnly => BackendChoice::NativeNaive,
+            RoutingPolicy::PreferPjrt => {
+                let hit = match payload {
+                    JobPayload::Gw1d { u, k, epsilon, .. } => self
+                        .registry
+                        .find(ArtifactKind::Gw1dSolve, u.len())
+                        .filter(|s| s.k == *k && close(s.epsilon, *epsilon)),
+                    JobPayload::Fgw1d { u, k, epsilon, .. } => self
+                        .registry
+                        .find(ArtifactKind::Fgw1dSolve, u.len())
+                        .filter(|s| s.k == *k && close(s.epsilon, *epsilon)),
+                    JobPayload::Gw2d { n, k, epsilon, .. } => self
+                        .registry
+                        .find(ArtifactKind::Gw2dSolve, *n)
+                        .filter(|s| s.k == *k && close(s.epsilon, *epsilon)),
+                };
+                match hit {
+                    Some(spec) => BackendChoice::Pjrt(spec.name.clone()),
+                    None => BackendChoice::NativeFgc,
+                }
+            }
+        }
+    }
+}
+
+fn close(a: f64, b: f64) -> bool {
+    (a - b).abs() <= 1e-12 + 1e-6 * a.abs().max(b.abs())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::Path;
+
+    fn registry_with(n: usize) -> ArtifactRegistry {
+        let dir = std::env::temp_dir().join(format!("fgcgw_router_{n}"));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.txt"),
+            format!("gw1d_fgc_n{n} gw1d_solve {n} 1 0.002 10 100 2 gw1d_fgc_n{n}.hlo.txt\n"),
+        )
+        .unwrap();
+        ArtifactRegistry::load(Path::new(&dir)).unwrap()
+    }
+
+    fn gw1d(n: usize, k: u32, eps: f64) -> JobPayload {
+        JobPayload::Gw1d {
+            u: vec![1.0 / n as f64; n],
+            v: vec![1.0 / n as f64; n],
+            k,
+            epsilon: eps,
+        }
+    }
+
+    #[test]
+    fn prefers_pjrt_on_exact_match() {
+        let r = Router::new(registry_with(64), RoutingPolicy::PreferPjrt);
+        assert_eq!(
+            r.route(&gw1d(64, 1, 0.002)),
+            BackendChoice::Pjrt("gw1d_fgc_n64".into())
+        );
+    }
+
+    #[test]
+    fn falls_back_on_shape_or_param_mismatch() {
+        let r = Router::new(registry_with(64), RoutingPolicy::PreferPjrt);
+        assert_eq!(r.route(&gw1d(65, 1, 0.002)), BackendChoice::NativeFgc);
+        assert_eq!(r.route(&gw1d(64, 2, 0.002)), BackendChoice::NativeFgc); // k mismatch
+        assert_eq!(r.route(&gw1d(64, 1, 0.01)), BackendChoice::NativeFgc); // ε mismatch
+    }
+
+    #[test]
+    fn policies_override() {
+        let r = Router::new(registry_with(64), RoutingPolicy::NativeOnly);
+        assert_eq!(r.route(&gw1d(64, 1, 0.002)), BackendChoice::NativeFgc);
+        let r = Router::new(registry_with(64), RoutingPolicy::BaselineOnly);
+        assert_eq!(r.route(&gw1d(64, 1, 0.002)), BackendChoice::NativeNaive);
+    }
+}

@@ -1,0 +1,458 @@
+//! The coordinator service: admission → routing → bounded queues →
+//! worker pool → results + metrics.
+
+use super::batcher::group_by_variant;
+use super::job::{BackendChoice, JobId, JobPayload, JobRequest, JobResult};
+use super::metrics::{MetricsSnapshot, ServiceMetrics};
+use super::queue::BoundedQueue;
+use super::router::{Router, RoutingPolicy};
+use crate::error::{Error, Result};
+use crate::gw::{EntropicGw, Geometry, GradientKind, GwConfig};
+use crate::runtime::{ArtifactRegistry, Executor};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Service configuration.
+#[derive(Clone, Debug)]
+pub struct CoordinatorConfig {
+    /// Native compute threads.
+    pub native_workers: usize,
+    /// Bounded queue capacity (admission backpressure threshold).
+    pub queue_capacity: usize,
+    /// Max jobs drained per batch.
+    pub batch_max: usize,
+    /// Artifact directory (`manifest.txt` inside).
+    pub artifacts_dir: PathBuf,
+    /// Routing policy.
+    pub policy: RoutingPolicy,
+    /// Spawn the PJRT worker (requires artifacts + libxla at runtime).
+    pub enable_pjrt: bool,
+    /// Mirror-descent outer iterations for native solves.
+    pub outer_iters: usize,
+    /// Inner Sinkhorn cap for native solves.
+    pub sinkhorn_max_iters: usize,
+    /// Inner Sinkhorn tolerance.
+    pub sinkhorn_tolerance: f64,
+    /// How long `submit` may block under backpressure.
+    pub submit_timeout: Duration,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig {
+            native_workers: 2,
+            queue_capacity: 64,
+            batch_max: 8,
+            artifacts_dir: PathBuf::from("artifacts"),
+            policy: RoutingPolicy::PreferPjrt,
+            enable_pjrt: false,
+            outer_iters: 10,
+            sinkhorn_max_iters: 1000,
+            sinkhorn_tolerance: 1e-9,
+            submit_timeout: Duration::from_millis(200),
+        }
+    }
+}
+
+type Envelope = (JobRequest, mpsc::Sender<JobResult>);
+
+/// Running service handle.
+pub struct Coordinator {
+    cfg: CoordinatorConfig,
+    router: Router,
+    native_q: BoundedQueue<Envelope>,
+    pjrt_q: Option<BoundedQueue<Envelope>>,
+    metrics: Arc<ServiceMetrics>,
+    workers: Vec<JoinHandle<()>>,
+    next_id: AtomicU64,
+}
+
+impl Coordinator {
+    /// Load artifacts, spawn workers, return the handle.
+    pub fn start(cfg: CoordinatorConfig) -> Result<Self> {
+        let registry = ArtifactRegistry::load(&cfg.artifacts_dir)?;
+        let effective_policy = if cfg.enable_pjrt {
+            cfg.policy
+        } else {
+            // Without a PJRT worker, artifact routes would strand jobs.
+            match cfg.policy {
+                RoutingPolicy::PreferPjrt => RoutingPolicy::NativeOnly,
+                p => p,
+            }
+        };
+        let router = Router::new(registry, effective_policy);
+        let native_q: BoundedQueue<Envelope> = BoundedQueue::new(cfg.queue_capacity);
+        let metrics = Arc::new(ServiceMetrics::new());
+        let mut workers = Vec::new();
+
+        for wid in 0..cfg.native_workers.max(1) {
+            let q = native_q.clone();
+            let m = Arc::clone(&metrics);
+            let wcfg = cfg.clone();
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("fgcgw-native-{wid}"))
+                    .spawn(move || native_worker_loop(q, m, wcfg))
+                    .map_err(|e| Error::Runtime(format!("spawn worker: {e}")))?,
+            );
+        }
+
+        let pjrt_q = if cfg.enable_pjrt {
+            let q: BoundedQueue<Envelope> = BoundedQueue::new(cfg.queue_capacity);
+            let q2 = q.clone();
+            let m = Arc::clone(&metrics);
+            let wcfg = cfg.clone();
+            let registry2 = router.registry().clone();
+            workers.push(
+                std::thread::Builder::new()
+                    .name("fgcgw-pjrt".into())
+                    .spawn(move || pjrt_worker_loop(q2, m, wcfg, registry2))
+                    .map_err(|e| Error::Runtime(format!("spawn pjrt worker: {e}")))?,
+            );
+            Some(q)
+        } else {
+            None
+        };
+
+        Ok(Coordinator {
+            cfg,
+            router,
+            native_q,
+            pjrt_q,
+            metrics,
+            workers,
+            next_id: AtomicU64::new(1),
+        })
+    }
+
+    /// The router (inspection / tests).
+    pub fn router(&self) -> &Router {
+        &self.router
+    }
+
+    /// Submit a job; returns its id and the result channel. Rejects on
+    /// invalid payloads and on backpressure timeout.
+    pub fn submit(&self, payload: JobPayload) -> Result<(JobId, mpsc::Receiver<JobResult>)> {
+        if let Err(msg) = payload.validate() {
+            self.metrics.on_reject();
+            return Err(Error::Rejected(format!("validation: {msg}")));
+        }
+        let backend = self.router.route(&payload);
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let (tx, rx) = mpsc::channel();
+        let req = JobRequest {
+            id,
+            payload,
+            backend: backend.clone(),
+            submitted_at: Instant::now(),
+        };
+        let queue = match (&backend, &self.pjrt_q) {
+            (BackendChoice::Pjrt(_), Some(q)) => q,
+            _ => &self.native_q,
+        };
+        match queue.push_timeout((req, tx), self.cfg.submit_timeout) {
+            Ok(()) => {
+                self.metrics.on_submit();
+                Ok((id, rx))
+            }
+            Err(e) => {
+                self.metrics.on_reject();
+                Err(e)
+            }
+        }
+    }
+
+    /// Convenience: submit and wait for the result.
+    pub fn submit_and_wait(&self, payload: JobPayload) -> Result<JobResult> {
+        let (_, rx) = self.submit(payload)?;
+        rx.recv()
+            .map_err(|_| Error::Runtime("worker dropped result channel".into()))
+    }
+
+    /// Current metrics.
+    pub fn metrics(&self) -> MetricsSnapshot {
+        self.metrics.snapshot()
+    }
+
+    /// Graceful shutdown: close queues, join workers.
+    pub fn shutdown(self) {
+        self.native_q.close();
+        if let Some(q) = &self.pjrt_q {
+            q.close();
+        }
+        for w in self.workers {
+            let _ = w.join();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Workers
+// ---------------------------------------------------------------------------
+
+fn native_worker_loop(
+    q: BoundedQueue<Envelope>,
+    metrics: Arc<ServiceMetrics>,
+    cfg: CoordinatorConfig,
+) {
+    while let Some(first) = q.pop() {
+        // Drain a batch and group by variant so same-shape jobs run
+        // back-to-back (warm caches/workspaces).
+        let mut batch = vec![first];
+        batch.extend(q.pop_batch(cfg.batch_max.saturating_sub(1)));
+        let (reqs, txs): (Vec<JobRequest>, Vec<mpsc::Sender<JobResult>>) =
+            batch.into_iter().unzip();
+        let mut tx_by_id: std::collections::HashMap<JobId, mpsc::Sender<JobResult>> = reqs
+            .iter()
+            .map(|r| r.id)
+            .zip(txs)
+            .collect();
+        for (_variant, jobs) in group_by_variant(reqs) {
+            for req in jobs {
+                let tx = tx_by_id.remove(&req.id).expect("sender registered");
+                let result = execute_native(&req, &cfg);
+                report(&metrics, &req, &result);
+                let _ = tx.send(result);
+            }
+        }
+    }
+}
+
+fn pjrt_worker_loop(
+    q: BoundedQueue<Envelope>,
+    metrics: Arc<ServiceMetrics>,
+    cfg: CoordinatorConfig,
+    registry: ArtifactRegistry,
+) {
+    let mut executor = match Executor::cpu() {
+        Ok(e) => Some(e),
+        Err(e) => {
+            eprintln!("[fgcgw] PJRT unavailable ({e}); falling back to native");
+            None
+        }
+    };
+    while let Some((req, tx)) = q.pop() {
+        let started = Instant::now();
+        let result = match (&req.backend, executor.as_mut()) {
+            (BackendChoice::Pjrt(name), Some(ex)) => {
+                match execute_pjrt(ex, &registry, name, &req) {
+                    Ok(r) => r,
+                    Err(e) => {
+                        // Artifact failure → native fallback keeps the
+                        // job alive; record the downgraded backend.
+                        eprintln!("[fgcgw] pjrt {name} failed ({e}); native fallback");
+                        let mut r = execute_native(&req, &cfg);
+                        r.backend = BackendChoice::NativeFgc;
+                        r
+                    }
+                }
+            }
+            _ => execute_native(&req, &cfg),
+        };
+        let _ = started;
+        report(&metrics, &req, &result);
+        let _ = tx.send(result);
+    }
+}
+
+fn report(metrics: &ServiceMetrics, req: &JobRequest, result: &JobResult) {
+    metrics.on_complete(
+        matches!(req.backend, BackendChoice::NativeFgc),
+        matches!(req.backend, BackendChoice::Pjrt(_)),
+        result.objective.is_ok(),
+        result.queue_time,
+        result.solve_time,
+    );
+}
+
+/// Run a job on the native solvers.
+fn execute_native(req: &JobRequest, cfg: &CoordinatorConfig) -> JobResult {
+    let queue_time = req.submitted_at.elapsed();
+    let kind = match req.backend {
+        BackendChoice::NativeNaive => GradientKind::Naive,
+        _ => GradientKind::Fgc,
+    };
+    let started = Instant::now();
+    let solved: Result<(crate::linalg::Mat, f64)> = (|| {
+        match &req.payload {
+            JobPayload::Gw1d { u, v, k, epsilon } => {
+                let solver = EntropicGw::grid_1d(u.len(), v.len(), *k, gw_cfg(cfg, *epsilon));
+                let sol = solver.solve(u, v, kind)?;
+                Ok((sol.plan, sol.objective))
+            }
+            JobPayload::Fgw1d {
+                u,
+                v,
+                feature_cost,
+                theta,
+                k,
+                epsilon,
+            } => {
+                let solver = EntropicGw::grid_1d(u.len(), v.len(), *k, gw_cfg(cfg, *epsilon));
+                let sol = solver.solve_fgw(u, v, feature_cost, *theta, kind)?;
+                Ok((sol.plan, sol.objective))
+            }
+            JobPayload::Gw2d { n, u, v, k, epsilon } => {
+                let solver = EntropicGw::new(
+                    Geometry::grid_2d_unit(*n, *k),
+                    Geometry::grid_2d_unit(*n, *k),
+                    gw_cfg(cfg, *epsilon),
+                );
+                let sol = solver.solve(u, v, kind)?;
+                Ok((sol.plan, sol.objective))
+            }
+        }
+    })();
+    let solve_time = started.elapsed();
+    match solved {
+        Ok((plan, obj)) => JobResult {
+            id: req.id,
+            objective: Ok(obj),
+            plan: Some(plan),
+            backend: req.backend.clone(),
+            queue_time,
+            solve_time,
+        },
+        Err(e) => JobResult {
+            id: req.id,
+            objective: Err(e.to_string()),
+            plan: None,
+            backend: req.backend.clone(),
+            queue_time,
+            solve_time,
+        },
+    }
+}
+
+/// Run a job through a compiled artifact.
+fn execute_pjrt(
+    executor: &mut Executor,
+    registry: &ArtifactRegistry,
+    name: &str,
+    req: &JobRequest,
+) -> Result<JobResult> {
+    let queue_time = req.submitted_at.elapsed();
+    let spec = registry
+        .by_name(name)
+        .ok_or_else(|| Error::ArtifactNotFound(name.to_string()))?;
+    let started = Instant::now();
+    let out = match &req.payload {
+        JobPayload::Gw1d { u, v, .. } | JobPayload::Gw2d { u, v, .. } => {
+            executor.run_gw_solve(spec, u, v)?
+        }
+        JobPayload::Fgw1d {
+            u, v, feature_cost, ..
+        } => executor.run_fgw_solve(spec, u, v, feature_cost)?,
+    };
+    Ok(JobResult {
+        id: req.id,
+        objective: Ok(out.objective),
+        plan: Some(out.plan),
+        backend: req.backend.clone(),
+        queue_time,
+        solve_time: started.elapsed(),
+    })
+}
+
+fn gw_cfg(cfg: &CoordinatorConfig, epsilon: f64) -> GwConfig {
+    GwConfig {
+        epsilon,
+        outer_iters: cfg.outer_iters,
+        sinkhorn_max_iters: cfg.sinkhorn_max_iters,
+        sinkhorn_tolerance: cfg.sinkhorn_tolerance,
+        sinkhorn_check_every: 10,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::random_distribution;
+    use crate::prng::Rng;
+
+    fn test_cfg() -> CoordinatorConfig {
+        CoordinatorConfig {
+            native_workers: 2,
+            queue_capacity: 16,
+            batch_max: 4,
+            artifacts_dir: PathBuf::from("/nonexistent"),
+            policy: RoutingPolicy::PreferPjrt,
+            enable_pjrt: false,
+            outer_iters: 5,
+            sinkhorn_max_iters: 300,
+            sinkhorn_tolerance: 1e-8,
+            submit_timeout: Duration::from_millis(100),
+        }
+    }
+
+    fn gw_payload(n: usize, seed: u64) -> JobPayload {
+        let mut rng = Rng::seeded(seed);
+        JobPayload::Gw1d {
+            u: random_distribution(&mut rng, n),
+            v: random_distribution(&mut rng, n),
+            k: 1,
+            epsilon: 0.01,
+        }
+    }
+
+    #[test]
+    fn end_to_end_native_solve() {
+        let coord = Coordinator::start(test_cfg()).unwrap();
+        let res = coord.submit_and_wait(gw_payload(20, 1)).unwrap();
+        assert!(res.objective.is_ok());
+        assert!(res.plan.is_some());
+        assert_eq!(res.backend, BackendChoice::NativeFgc);
+        let snap = coord.metrics();
+        assert_eq!(snap.completed, 1);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn many_jobs_all_complete() {
+        let coord = Coordinator::start(test_cfg()).unwrap();
+        let rxs: Vec<_> = (0..10)
+            .map(|i| coord.submit(gw_payload(12 + (i % 3), 100 + i as u64)).unwrap().1)
+            .collect();
+        for rx in rxs {
+            let res = rx.recv().unwrap();
+            assert!(res.objective.is_ok(), "{:?}", res.objective);
+        }
+        assert_eq!(coord.metrics().completed, 10);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn invalid_payload_rejected_at_admission() {
+        let coord = Coordinator::start(test_cfg()).unwrap();
+        let bad = JobPayload::Gw1d {
+            u: vec![0.7, 0.7],
+            v: vec![0.5, 0.5],
+            k: 1,
+            epsilon: 0.01,
+        };
+        assert!(coord.submit(bad).is_err());
+        assert_eq!(coord.metrics().rejected, 1);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn shutdown_is_clean_with_pending_results() {
+        let coord = Coordinator::start(test_cfg()).unwrap();
+        let (_, rx) = coord.submit(gw_payload(16, 9)).unwrap();
+        coord.shutdown(); // workers drain before exiting
+        assert!(rx.recv().unwrap().objective.is_ok());
+    }
+
+    #[test]
+    fn baseline_policy_routes_naive() {
+        let mut cfg = test_cfg();
+        cfg.policy = RoutingPolicy::BaselineOnly;
+        let coord = Coordinator::start(cfg).unwrap();
+        let res = coord.submit_and_wait(gw_payload(10, 3)).unwrap();
+        assert_eq!(res.backend, BackendChoice::NativeNaive);
+        coord.shutdown();
+    }
+}

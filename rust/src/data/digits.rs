@@ -1,0 +1,167 @@
+//! Synthetic handwritten-digit glyph + exact isometries (paper §4.4.1).
+//!
+//! The paper aligns an MNIST digit "3" against translated / rotated /
+//! reflected copies to show FGC preserves FGW's invariances. MNIST is
+//! not available offline, so we rasterize a stroke-drawn "3" at 28×28
+//! with soft (anti-aliased) edges — the experiment only needs a sparse
+//! grayscale glyph and its exact grid isometries, which
+//! [`transform_image`] provides (rotation is by 90° multiples so the
+//! transform is an exact permutation of grid points).
+
+use super::image::GrayImage;
+
+/// The grid isometries of §4.4.1.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Transform {
+    /// Shift by (rows, cols), zero-filling.
+    Translate(isize, isize),
+    /// Rotate 90° counter-clockwise `quarters` times.
+    Rotate90(u8),
+    /// Mirror left-right.
+    ReflectHorizontal,
+    /// Mirror top-bottom.
+    ReflectVertical,
+}
+
+/// Rasterize a "3"-like glyph at `n×n` (28 matches MNIST). Drawn as
+/// two stacked arcs with a soft brush.
+pub fn digit_three(n: usize) -> GrayImage {
+    let mut img = GrayImage::zeros(n);
+    let s = n as f64;
+    // Two arcs approximating the strokes of a 3: upper bowl and lower
+    // bowl, both open to the left. Parametrized by angle.
+    let brush = s * 0.06;
+    let centers = [(0.36 * s, 0.5 * s), (0.64 * s, 0.5 * s)];
+    let radius = 0.17 * s;
+    for (cy, cx) in centers {
+        let steps = (8.0 * s) as usize;
+        for t in 0..=steps {
+            // arc from -100° to +100° (opening to the left)
+            let ang = -1.85 + 3.7 * (t as f64 / steps as f64);
+            let y = cy + radius * ang.sin();
+            let x = cx + radius * ang.cos();
+            stamp(&mut img, y, x, brush);
+        }
+    }
+    img
+}
+
+/// Soft circular brush stamp with Gaussian falloff.
+fn stamp(img: &mut GrayImage, y: f64, x: f64, brush: f64) {
+    let n = img.n as isize;
+    let rad = (brush * 2.0).ceil() as isize;
+    let (yi, xi) = (y.round() as isize, x.round() as isize);
+    for dr in -rad..=rad {
+        for dc in -rad..=rad {
+            let (r, c) = (yi + dr, xi + dc);
+            if r < 0 || c < 0 || r >= n || c >= n {
+                continue;
+            }
+            let dy = r as f64 - y;
+            let dx = c as f64 - x;
+            let d2 = dy * dy + dx * dx;
+            let v = (-d2 / (brush * brush)).exp();
+            let cur = img.get(r as usize, c as usize);
+            img.set(r as usize, c as usize, (cur + v).min(1.0));
+        }
+    }
+}
+
+/// Apply an exact grid isometry (or translation) to an image.
+pub fn transform_image(img: &GrayImage, t: Transform) -> GrayImage {
+    let n = img.n;
+    let mut out = GrayImage::zeros(n);
+    match t {
+        Transform::Translate(dr, dc) => {
+            for r in 0..n {
+                for c in 0..n {
+                    let (sr, sc) = (r as isize - dr, c as isize - dc);
+                    if sr >= 0 && sc >= 0 && (sr as usize) < n && (sc as usize) < n {
+                        out.set(r, c, img.get(sr as usize, sc as usize));
+                    }
+                }
+            }
+        }
+        Transform::Rotate90(q) => {
+            let mut cur = img.clone();
+            for _ in 0..(q % 4) {
+                let mut next = GrayImage::zeros(n);
+                for r in 0..n {
+                    for c in 0..n {
+                        // CCW: (r, c) ← (c, n−1−r)
+                        next.set(n - 1 - c, r, cur.get(r, c));
+                    }
+                }
+                cur = next;
+            }
+            out = cur;
+        }
+        Transform::ReflectHorizontal => {
+            for r in 0..n {
+                for c in 0..n {
+                    out.set(r, n - 1 - c, img.get(r, c));
+                }
+            }
+        }
+        Transform::ReflectVertical => {
+            for r in 0..n {
+                for c in 0..n {
+                    out.set(n - 1 - r, c, img.get(r, c));
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn glyph_has_ink() {
+        let img = digit_three(28);
+        let mass: f64 = img.pixels.iter().sum();
+        assert!(mass > 10.0, "mass={mass}");
+        assert!(img.pixels.iter().all(|&p| (0.0..=1.0).contains(&p)));
+    }
+
+    #[test]
+    fn rotation_four_times_is_identity() {
+        let img = digit_three(28);
+        let r4 = transform_image(&img, Transform::Rotate90(4));
+        assert_eq!(img, r4);
+    }
+
+    #[test]
+    fn reflection_twice_is_identity() {
+        let img = digit_three(28);
+        let rr = transform_image(
+            &transform_image(&img, Transform::ReflectHorizontal),
+            Transform::ReflectHorizontal,
+        );
+        assert_eq!(img, rr);
+    }
+
+    #[test]
+    fn translation_preserves_interior_mass() {
+        let img = digit_three(28);
+        let t = transform_image(&img, Transform::Translate(2, -1));
+        // glyph is centered; a 2px shift loses at most the faint
+        // Gaussian brush tails near the border (≈1% of the ink).
+        let m0: f64 = img.pixels.iter().sum();
+        let m1: f64 = t.pixels.iter().sum();
+        assert!((m0 - m1).abs() / m0 < 0.02, "{m0} vs {m1}");
+    }
+
+    #[test]
+    fn rotation_permutes_pixels() {
+        let img = digit_three(16);
+        let rot = transform_image(&img, Transform::Rotate90(1));
+        let mut a = img.pixels.clone();
+        let mut b = rot.pixels.clone();
+        a.sort_by(f64::total_cmp);
+        b.sort_by(f64::total_cmp);
+        assert_eq!(a, b); // exact permutation — isometry on the grid
+    }
+}

@@ -1,0 +1,158 @@
+//! Parametric running-horse silhouette (paper §4.4.2 substitute).
+//!
+//! The paper aligns two 450×300 frames of a running horse showing
+//! "complex deformation". Offline we synthesize frames: a body
+//! ellipse, neck + head, tail, and four legs whose joint angles are
+//! functions of the gait `phase` — so two phases give two smoothly
+//! deformed silhouettes with matching topology, which is exactly what
+//! the alignment experiment needs (DESIGN.md §4).
+
+use super::image::GrayImage;
+use crate::error::Result;
+
+/// Render a frame at the native 450-wide × 300-high resolution used
+/// by the paper, then subsample to `n×n` grayscale. `phase ∈ [0,1)`
+/// is the gait cycle position.
+pub fn horse_frame(phase: f64, n: usize) -> Result<GrayImage> {
+    const W: usize = 450;
+    const H: usize = 300;
+    let mut canvas = vec![0.0f64; W * H];
+
+    // Body: ellipse centered mid-frame, bobbing slightly with phase.
+    let bob = 8.0 * (2.0 * std::f64::consts::PI * phase).sin();
+    let (bcx, bcy) = (225.0, 150.0 + bob);
+    fill_ellipse(&mut canvas, W, H, bcx, bcy, 95.0, 42.0, 0.0);
+
+    // Neck + head: angled forward, nodding with the gait.
+    let nod = 0.15 * (2.0 * std::f64::consts::PI * phase).cos();
+    let neck_ang = -0.9 + nod;
+    let (nx, ny) = (bcx + 80.0, bcy - 20.0);
+    let (hx, hy) = (nx + 55.0 * neck_ang.cos(), ny + 55.0 * neck_ang.sin());
+    thick_line(&mut canvas, W, H, nx, ny, hx, hy, 16.0);
+    fill_ellipse(&mut canvas, W, H, hx + 18.0, hy - 4.0, 26.0, 13.0, -0.35);
+
+    // Tail.
+    let (tx, ty) = (bcx - 92.0, bcy - 18.0);
+    let sway = 0.35 * (2.0 * std::f64::consts::PI * phase + 1.2).sin();
+    thick_line(
+        &mut canvas,
+        W,
+        H,
+        tx,
+        ty,
+        tx - 45.0 * (0.7 + sway).cos(),
+        ty + 45.0 * (0.7 + sway).sin(),
+        7.0,
+    );
+
+    // Four legs: two-segment limbs with phase-offset gait angles —
+    // this is the "complex deformation" between frames.
+    let hips = [(bcx - 65.0, bcy + 30.0), (bcx - 45.0, bcy + 34.0)];
+    let shoulders = [(bcx + 55.0, bcy + 30.0), (bcx + 72.0, bcy + 26.0)];
+    for (idx, &(jx, jy)) in hips.iter().chain(shoulders.iter()).enumerate() {
+        let leg_phase = phase + idx as f64 * 0.25;
+        let swing = 0.55 * (2.0 * std::f64::consts::PI * leg_phase).sin();
+        let knee_bend = 0.45 * (2.0 * std::f64::consts::PI * leg_phase + 0.8).cos().max(0.0);
+        let upper_ang = std::f64::consts::FRAC_PI_2 + swing;
+        let (kx, ky) = (jx + 42.0 * upper_ang.cos(), jy + 42.0 * upper_ang.sin());
+        let lower_ang = upper_ang + knee_bend;
+        let (fx, fy) = (kx + 40.0 * lower_ang.cos(), ky + 40.0 * lower_ang.sin());
+        thick_line(&mut canvas, W, H, jx, jy, kx, ky, 10.0);
+        thick_line(&mut canvas, W, H, kx, ky, fx, fy, 8.0);
+    }
+
+    GrayImage::subsample(H, W, &transpose_to_rows(&canvas, W, H), n)
+}
+
+/// Canvas is addressed `(x, y)` column-major below; convert to the
+/// row-major `rows×cols = H×W` layout `subsample` expects.
+fn transpose_to_rows(canvas: &[f64], w: usize, h: usize) -> Vec<f64> {
+    let mut out = vec![0.0; w * h];
+    for y in 0..h {
+        for x in 0..w {
+            out[y * w + x] = canvas[x * h + y];
+        }
+    }
+    out
+}
+
+fn fill_ellipse(canvas: &mut [f64], w: usize, h: usize, cx: f64, cy: f64, rx: f64, ry: f64, rot: f64) {
+    let (s, c) = rot.sin_cos();
+    let x0 = ((cx - rx - ry).floor().max(0.0)) as usize;
+    let x1 = ((cx + rx + ry).ceil().min(w as f64 - 1.0)) as usize;
+    let y0 = ((cy - rx - ry).floor().max(0.0)) as usize;
+    let y1 = ((cy + rx + ry).ceil().min(h as f64 - 1.0)) as usize;
+    for x in x0..=x1 {
+        for y in y0..=y1 {
+            let dx = x as f64 - cx;
+            let dy = y as f64 - cy;
+            let u = (dx * c + dy * s) / rx;
+            let v = (-dx * s + dy * c) / ry;
+            if u * u + v * v <= 1.0 {
+                canvas[x * h + y] = 1.0;
+            }
+        }
+    }
+}
+
+fn thick_line(canvas: &mut [f64], w: usize, h: usize, x0: f64, y0: f64, x1: f64, y1: f64, thick: f64) {
+    let len = ((x1 - x0).powi(2) + (y1 - y0).powi(2)).sqrt().max(1.0);
+    let steps = (len * 2.0) as usize;
+    let r = thick / 2.0;
+    for t in 0..=steps {
+        let f = t as f64 / steps as f64;
+        let cx = x0 + f * (x1 - x0);
+        let cy = y0 + f * (y1 - y0);
+        let px0 = ((cx - r).floor().max(0.0)) as usize;
+        let px1 = ((cx + r).ceil().min(w as f64 - 1.0)) as usize;
+        let py0 = ((cy - r).floor().max(0.0)) as usize;
+        let py1 = ((cy + r).ceil().min(h as f64 - 1.0)) as usize;
+        for x in px0..=px1 {
+            for y in py0..=py1 {
+                let dx = x as f64 - cx;
+                let dy = y as f64 - cy;
+                if dx * dx + dy * dy <= r * r {
+                    canvas[x * h + y] = 1.0;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frame_has_silhouette() {
+        let img = horse_frame(0.0, 60).unwrap();
+        let mass: f64 = img.pixels.iter().sum();
+        // The silhouette covers a nontrivial but minor fraction.
+        let frac = mass / (60.0 * 60.0);
+        assert!(frac > 0.03 && frac < 0.6, "coverage={frac}");
+    }
+
+    #[test]
+    fn different_phases_deform() {
+        let a = horse_frame(0.0, 40).unwrap();
+        let b = horse_frame(0.45, 40).unwrap();
+        let diff: f64 = a
+            .pixels
+            .iter()
+            .zip(&b.pixels)
+            .map(|(&x, &y)| (x - y).abs())
+            .sum();
+        assert!(diff > 1.0, "frames too similar: {diff}");
+        // but topology/scale match: total ink similar
+        let ma: f64 = a.pixels.iter().sum();
+        let mb: f64 = b.pixels.iter().sum();
+        assert!((ma - mb).abs() / ma < 0.35, "ink {ma} vs {mb}");
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = horse_frame(0.2, 32).unwrap();
+        let b = horse_frame(0.2, 32).unwrap();
+        assert_eq!(a, b);
+    }
+}

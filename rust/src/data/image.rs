@@ -1,0 +1,156 @@
+//! Grayscale image container + FGW feature costs (paper §4.4).
+
+use crate::error::{Error, Result};
+use crate::linalg::Mat;
+
+/// A square grayscale image with values in `[0,1]`, row-major.
+#[derive(Clone, Debug, PartialEq)]
+pub struct GrayImage {
+    /// Side length.
+    pub n: usize,
+    /// Row-major pixel values.
+    pub pixels: Vec<f64>,
+}
+
+impl GrayImage {
+    /// Construct (shape-checked).
+    pub fn new(n: usize, pixels: Vec<f64>) -> Result<Self> {
+        if pixels.len() != n * n {
+            return Err(Error::shape(
+                "GrayImage::new",
+                format!("{}", n * n),
+                format!("{}", pixels.len()),
+            ));
+        }
+        Ok(GrayImage { n, pixels })
+    }
+
+    /// All-zero image.
+    pub fn zeros(n: usize) -> Self {
+        GrayImage {
+            n,
+            pixels: vec![0.0; n * n],
+        }
+    }
+
+    /// Pixel at `(row, col)`.
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> f64 {
+        self.pixels[r * self.n + c]
+    }
+
+    /// Mutable pixel.
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: f64) {
+        self.pixels[r * self.n + c] = v;
+    }
+
+    /// Normalize pixel mass into a probability distribution over the
+    /// grid (adding a small floor so Sinkhorn rows never zero out).
+    pub fn to_distribution(&self, floor: f64) -> Vec<f64> {
+        let mut w: Vec<f64> = self.pixels.iter().map(|&p| p + floor).collect();
+        crate::linalg::normalize_l1(&mut w).expect("floored mass is positive");
+        w
+    }
+
+    /// Area-averaged subsampling from an arbitrary `rows×cols` buffer
+    /// to an `n×n` image (the horse task subsamples 450×300 frames,
+    /// §4.4.2).
+    pub fn subsample(rows: usize, cols: usize, data: &[f64], n: usize) -> Result<Self> {
+        if data.len() != rows * cols {
+            return Err(Error::shape(
+                "GrayImage::subsample",
+                format!("{}", rows * cols),
+                format!("{}", data.len()),
+            ));
+        }
+        let mut img = GrayImage::zeros(n);
+        for r in 0..n {
+            for c in 0..n {
+                // source cell range (area average)
+                let r0 = r * rows / n;
+                let r1 = (((r + 1) * rows).div_ceil(n)).min(rows).max(r0 + 1);
+                let c0 = c * cols / n;
+                let c1 = (((c + 1) * cols).div_ceil(n)).min(cols).max(c0 + 1);
+                let mut acc = 0.0;
+                for rr in r0..r1 {
+                    for cc in c0..c1 {
+                        acc += data[rr * cols + cc];
+                    }
+                }
+                img.set(r, c, acc / ((r1 - r0) * (c1 - c0)) as f64);
+            }
+        }
+        Ok(img)
+    }
+
+    /// Render as ASCII art (for example binaries / debugging).
+    pub fn ascii(&self) -> String {
+        const RAMP: &[u8] = b" .:-=+*#%@";
+        let mut s = String::with_capacity(self.n * (self.n + 1));
+        for r in 0..self.n {
+            for c in 0..self.n {
+                let v = self.get(r, c).clamp(0.0, 1.0);
+                let idx = ((v * (RAMP.len() - 1) as f64).round()) as usize;
+                s.push(RAMP[idx] as char);
+            }
+            s.push('\n');
+        }
+        s
+    }
+}
+
+/// FGW feature cost between two images: `c_ip = |gray_i − gray_p|`
+/// over flattened pixels (§4.4.1 "difference in the pixel gray
+/// levels").
+pub fn feature_cost_gray(source: &GrayImage, target: &GrayImage) -> Mat {
+    Mat::from_fn(
+        source.pixels.len(),
+        target.pixels.len(),
+        |i, p| (source.pixels[i] - target.pixels[p]).abs(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn distribution_sums_to_one() {
+        let mut img = GrayImage::zeros(4);
+        img.set(1, 2, 0.8);
+        let w = img.to_distribution(1e-6);
+        assert!((w.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert!(w.iter().all(|&x| x > 0.0));
+    }
+
+    #[test]
+    fn subsample_preserves_mean() {
+        let rows = 12;
+        let cols = 9;
+        let data: Vec<f64> = (0..rows * cols).map(|i| (i % 7) as f64 / 7.0).collect();
+        let img = GrayImage::subsample(rows, cols, &data, 3).unwrap();
+        let src_mean: f64 = data.iter().sum::<f64>() / data.len() as f64;
+        let dst_mean: f64 = img.pixels.iter().sum::<f64>() / 9.0;
+        assert!((src_mean - dst_mean).abs() < 0.05, "{src_mean} vs {dst_mean}");
+    }
+
+    #[test]
+    fn feature_cost_zero_on_identical() {
+        let mut img = GrayImage::zeros(3);
+        img.set(0, 0, 0.5);
+        let c = feature_cost_gray(&img, &img);
+        for i in 0..9 {
+            assert_eq!(c[(i, i)], 0.0);
+        }
+    }
+
+    #[test]
+    fn ascii_renders() {
+        let mut img = GrayImage::zeros(2);
+        img.set(0, 0, 1.0);
+        let art = img.ascii();
+        assert!(art.starts_with('@'));
+        assert_eq!(art.lines().count(), 2);
+    }
+}

@@ -1,0 +1,22 @@
+//! Workload generators for every experiment in the paper (§4).
+//!
+//! The paper's external resources are substituted with synthetic
+//! equivalents that exercise the same code paths (DESIGN.md §4):
+//! MNIST's digit-3 bitmap → a stroke-rasterized glyph; the
+//! running-horse video frames → a parametric articulated silhouette.
+//! Random distributions and the two-hump time series follow the
+//! paper's construction directly.
+
+mod digits;
+mod horse;
+mod image;
+mod pgm;
+mod random;
+mod timeseries;
+
+pub use digits::{digit_three, transform_image, Transform};
+pub use horse::horse_frame;
+pub use image::{feature_cost_gray, GrayImage};
+pub use pgm::{read_pgm, write_pgm};
+pub use random::{random_distribution, random_distribution_2d};
+pub use timeseries::{feature_cost_series, two_hump_series, TwoHumpSpec};

@@ -1,0 +1,112 @@
+//! Minimal PGM (portable graymap) writer/reader — lets examples dump
+//! transport plans and silhouettes as viewable images (the paper's
+//! Figures 4/5 visuals) without an image crate.
+
+use crate::error::{Error, Result};
+use crate::linalg::Mat;
+use std::io::Write;
+use std::path::Path;
+
+/// Write a matrix as an 8-bit binary PGM, min-max normalized.
+pub fn write_pgm(path: &Path, m: &Mat) -> Result<()> {
+    let (rows, cols) = m.shape();
+    if rows == 0 || cols == 0 {
+        return Err(Error::Invalid("empty matrix".into()));
+    }
+    let lo = m.min();
+    let hi = m.max();
+    let span = (hi - lo).max(1e-300);
+    let mut buf = Vec::with_capacity(rows * cols + 64);
+    write!(buf, "P5\n{cols} {rows}\n255\n").expect("vec write");
+    for &x in m.as_slice() {
+        let v = ((x - lo) / span * 255.0).round().clamp(0.0, 255.0) as u8;
+        buf.push(v);
+    }
+    std::fs::write(path, buf).map_err(|e| Error::Io(format!("writing {}", path.display()), e))
+}
+
+/// Read a binary (`P5`) PGM back into a matrix scaled to `[0,1]`.
+pub fn read_pgm(path: &Path) -> Result<Mat> {
+    let data =
+        std::fs::read(path).map_err(|e| Error::Io(format!("reading {}", path.display()), e))?;
+    let header_err = || Error::Invalid(format!("{}: not a P5 PGM", path.display()));
+    // Parse "P5\n<w> <h>\n<max>\n" allowing arbitrary whitespace.
+    let mut fields = Vec::new();
+    let mut idx = 0;
+    while fields.len() < 4 && idx < data.len() {
+        while idx < data.len() && data[idx].is_ascii_whitespace() {
+            idx += 1;
+        }
+        if idx < data.len() && data[idx] == b'#' {
+            while idx < data.len() && data[idx] != b'\n' {
+                idx += 1;
+            }
+            continue;
+        }
+        let start = idx;
+        while idx < data.len() && !data[idx].is_ascii_whitespace() {
+            idx += 1;
+        }
+        fields.push(std::str::from_utf8(&data[start..idx]).map_err(|_| header_err())?);
+    }
+    if fields.len() != 4 || fields[0] != "P5" {
+        return Err(header_err());
+    }
+    let cols: usize = fields[1].parse().map_err(|_| header_err())?;
+    let rows: usize = fields[2].parse().map_err(|_| header_err())?;
+    let maxv: f64 = fields[3].parse().map_err(|_| header_err())?;
+    idx += 1; // single whitespace after maxval
+    let pixels = &data[idx..];
+    if pixels.len() < rows * cols {
+        return Err(Error::Invalid(format!(
+            "{}: truncated pixel data",
+            path.display()
+        )));
+    }
+    Mat::from_vec(
+        rows,
+        cols,
+        pixels[..rows * cols]
+            .iter()
+            .map(|&b| b as f64 / maxv)
+            .collect(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::Rng;
+
+    #[test]
+    fn roundtrip() {
+        let mut rng = Rng::seeded(5);
+        let m = Mat::from_fn(13, 17, |_, _| rng.uniform());
+        let path = std::env::temp_dir().join("fgcgw_test_roundtrip.pgm");
+        write_pgm(&path, &m).unwrap();
+        let back = read_pgm(&path).unwrap();
+        assert_eq!(back.shape(), (13, 17));
+        // 8-bit quantization + min-max normalization ⇒ coarse match
+        for (a, b) in m.as_slice().iter().zip(back.as_slice()) {
+            let a_norm = (a - m.min()) / (m.max() - m.min());
+            assert!((a_norm - b).abs() < 1.0 / 128.0, "{a_norm} vs {b}");
+        }
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let path = std::env::temp_dir().join("fgcgw_test_garbage.pgm");
+        std::fs::write(&path, b"not a pgm at all").unwrap();
+        assert!(read_pgm(&path).is_err());
+        assert!(write_pgm(&path, &Mat::zeros(0, 0)).is_err());
+    }
+
+    #[test]
+    fn constant_image_no_nan() {
+        let m = Mat::full(4, 4, 0.7);
+        let path = std::env::temp_dir().join("fgcgw_test_const.pgm");
+        write_pgm(&path, &m).unwrap();
+        let back = read_pgm(&path).unwrap();
+        assert!(back.all_finite());
+    }
+}

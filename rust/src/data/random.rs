@@ -1,0 +1,46 @@
+//! Random distributions on uniform grids (paper §4.1, §4.2).
+
+use crate::linalg::normalize_l1;
+use crate::prng::Rng;
+
+/// 1D random distribution: `u_i ~ U[0,1]`, normalized to sum 1
+/// (paper §4.1 construction).
+pub fn random_distribution(rng: &mut Rng, n: usize) -> Vec<f64> {
+    let mut u = rng.uniform_vec(n);
+    normalize_l1(&mut u).expect("positive uniform mass");
+    u
+}
+
+/// 2D random distribution on an `n×n` grid, flattened row-major
+/// (paper §4.2): `N = n²` i.i.d. uniforms, normalized.
+pub fn random_distribution_2d(rng: &mut Rng, n: usize) -> Vec<f64> {
+    random_distribution(rng, n * n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn normalized_and_positive() {
+        let mut rng = Rng::seeded(1);
+        let u = random_distribution(&mut rng, 100);
+        assert_eq!(u.len(), 100);
+        assert!((u.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert!(u.iter().all(|&x| x > 0.0));
+    }
+
+    #[test]
+    fn reproducible() {
+        let a = random_distribution(&mut Rng::seeded(9), 50);
+        let b = random_distribution(&mut Rng::seeded(9), 50);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn two_d_size() {
+        let mut rng = Rng::seeded(2);
+        let u = random_distribution_2d(&mut rng, 30);
+        assert_eq!(u.len(), 900);
+    }
+}

@@ -1,0 +1,101 @@
+//! Two-hump time series (paper §4.3).
+//!
+//! "Consider a series in [0,1] that consists of two humps with heights
+//! of 0.5 and 0.8. We construct the other series by moving the humps
+//! around." The humps are smooth bumps (raised cosines) so alignment
+//! is well-posed; positions/widths are the knobs the experiment moves.
+
+use crate::linalg::Mat;
+
+/// Parameters of a two-hump series.
+#[derive(Clone, Copy, Debug)]
+pub struct TwoHumpSpec {
+    /// Center of the first hump (height 0.5), in `[0,1]`.
+    pub center1: f64,
+    /// Center of the second hump (height 0.8), in `[0,1]`.
+    pub center2: f64,
+    /// Half-width of each hump.
+    pub width: f64,
+}
+
+impl Default for TwoHumpSpec {
+    fn default() -> Self {
+        TwoHumpSpec {
+            center1: 0.3,
+            center2: 0.7,
+            width: 0.08,
+        }
+    }
+}
+
+/// Sample the series at `n` uniform points on `[0,1]`: the signal
+/// strength at each sampling instant.
+pub fn two_hump_series(spec: &TwoHumpSpec, n: usize) -> Vec<f64> {
+    (0..n)
+        .map(|i| {
+            let t = if n > 1 { i as f64 / (n - 1) as f64 } else { 0.0 };
+            bump(t, spec.center1, spec.width) * 0.5 + bump(t, spec.center2, spec.width) * 0.8
+        })
+        .collect()
+}
+
+/// Raised-cosine bump: 1 at the center, smoothly 0 outside ±width.
+fn bump(t: f64, center: f64, width: f64) -> f64 {
+    let d = (t - center).abs();
+    if d >= width {
+        0.0
+    } else {
+        0.5 * (1.0 + (std::f64::consts::PI * d / width).cos())
+    }
+}
+
+/// FGW feature cost between two series: `c_ip = |s_i − t_p|`
+/// (signal-strength difference, §4.3).
+pub fn feature_cost_series(source: &[f64], target: &[f64]) -> Mat {
+    Mat::from_fn(source.len(), target.len(), |i, p| {
+        (source[i] - target[p]).abs()
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn has_two_humps_with_expected_heights() {
+        let s = two_hump_series(&TwoHumpSpec::default(), 1001);
+        // peak near 0.3 → index 300 ± few
+        let p1 = s[290..311].iter().cloned().fold(0.0, f64::max);
+        let p2 = s[690..711].iter().cloned().fold(0.0, f64::max);
+        assert!((p1 - 0.5).abs() < 1e-3, "p1={p1}");
+        assert!((p2 - 0.8).abs() < 1e-3, "p2={p2}");
+        // zero between humps
+        assert!(s[500].abs() < 1e-12);
+    }
+
+    #[test]
+    fn cost_matrix_shape_and_symmetric_on_identical() {
+        let s = two_hump_series(&TwoHumpSpec::default(), 50);
+        let c = feature_cost_series(&s, &s);
+        assert_eq!(c.shape(), (50, 50));
+        for i in 0..50 {
+            assert_eq!(c[(i, i)], 0.0);
+        }
+    }
+
+    #[test]
+    fn moving_humps_changes_cost() {
+        let a = two_hump_series(&TwoHumpSpec::default(), 64);
+        let b = two_hump_series(
+            &TwoHumpSpec {
+                center1: 0.2,
+                center2: 0.8,
+                width: 0.08,
+            },
+            64,
+        );
+        assert_ne!(a, b);
+        let c = feature_cost_series(&a, &b);
+        assert!(c.max() > 0.1);
+    }
+}

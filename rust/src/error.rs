@@ -1,0 +1,103 @@
+//! Library error type.
+//!
+//! A small hand-rolled error enum (no `thiserror` in the vendored set
+//! for this crate graph) covering the failure domains of the stack:
+//! shape mismatches in the numeric core, solver divergence, artifact /
+//! runtime failures, service-level rejections (backpressure, shutdown)
+//! and configuration problems.
+
+use std::fmt;
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Crate-wide error enum.
+#[derive(Debug)]
+pub enum Error {
+    /// Matrix / vector dimension mismatch: `(context, expected, got)`.
+    Shape {
+        context: &'static str,
+        expected: String,
+        got: String,
+    },
+    /// Invalid argument (non-positive epsilon, empty marginal, …).
+    Invalid(String),
+    /// A solver failed to produce finite values (under/overflow, NaN).
+    Numeric(String),
+    /// PJRT runtime / artifact loading failure.
+    Runtime(String),
+    /// Requested artifact (name, or shape variant) is not registered.
+    ArtifactNotFound(String),
+    /// The coordinator rejected a job (queue full / shutting down).
+    Rejected(String),
+    /// Configuration file / CLI parsing failure.
+    Config(String),
+    /// I/O error with context.
+    Io(String, std::io::Error),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Shape {
+                context,
+                expected,
+                got,
+            } => write!(f, "shape mismatch in {context}: expected {expected}, got {got}"),
+            Error::Invalid(m) => write!(f, "invalid argument: {m}"),
+            Error::Numeric(m) => write!(f, "numeric failure: {m}"),
+            Error::Runtime(m) => write!(f, "runtime failure: {m}"),
+            Error::ArtifactNotFound(m) => write!(f, "artifact not found: {m}"),
+            Error::Rejected(m) => write!(f, "job rejected: {m}"),
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Io(ctx, e) => write!(f, "io error ({ctx}): {e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(_, e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl Error {
+    /// Helper for shape errors.
+    pub fn shape(context: &'static str, expected: impl Into<String>, got: impl Into<String>) -> Self {
+        Error::Shape {
+            context,
+            expected: expected.into(),
+            got: got.into(),
+        }
+    }
+}
+
+impl From<anyhow::Error> for Error {
+    fn from(e: anyhow::Error) -> Self {
+        Error::Runtime(format!("{e:#}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_variants() {
+        let e = Error::shape("matmul", "3x4", "4x3");
+        assert!(e.to_string().contains("matmul"));
+        assert!(Error::Invalid("x".into()).to_string().contains("invalid"));
+        assert!(Error::Rejected("full".into()).to_string().contains("rejected"));
+    }
+
+    #[test]
+    fn io_source_preserved() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        let e = Error::Io("reading manifest".into(), io);
+        assert!(std::error::Error::source(&e).is_some());
+        assert!(e.to_string().contains("manifest"));
+    }
+}

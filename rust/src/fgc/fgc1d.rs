@@ -1,0 +1,203 @@
+//! FGC on 1D grids: the `O(k²·MN)` gradient product (paper §3).
+//!
+//! `D_X Γ D_Y = h_X^k h_Y^k · D̃_M Γ D̃_N` is evaluated as
+//! `A = Γ·D̃_N` (scalar scans along the contiguous rows of `Γ`)
+//! followed by `G = D̃_M·A` (vectorized scans carrying row vectors),
+//! both via the recurrence in [`crate::fgc::scan`].
+
+use super::scan::{apply_dtilde_vec, dtilde_cols, dtilde_rows};
+use crate::error::{Error, Result};
+use crate::grid::{Binomial, Grid1d};
+use crate::linalg::Mat;
+
+/// Reusable buffers for the 1D FGC pass — the mirror-descent loop
+/// calls [`dxgdy_1d`] every iteration; keeping the intermediate `A`
+/// and scan carries here removes all per-iteration allocation.
+#[derive(Debug)]
+pub struct Workspace1d {
+    /// Intermediate `A = Γ·D̃_N`, shape `M×N`.
+    a: Vec<f64>,
+    /// Scan carries, `(k+1)·N`.
+    carry: Vec<f64>,
+    /// Binomial table (shared with every scan).
+    binom: Binomial,
+    k: u32,
+}
+
+impl Workspace1d {
+    /// Allocate for `M×N` plans with exponent `k`. The binomial table
+    /// covers `2k` so the same workspace also serves the squared-
+    /// distance products in `C₁`.
+    pub fn new(m: usize, n: usize, k: u32) -> Self {
+        Workspace1d {
+            a: vec![0.0; m * n],
+            carry: vec![0.0; (k as usize + 1).max(2 * k as usize + 1) * n],
+            binom: Binomial::new((2 * k as usize).max(4)),
+            k,
+        }
+    }
+
+    /// The binomial table (shared by callers that run raw scans).
+    pub fn binom(&self) -> &Binomial {
+        &self.binom
+    }
+}
+
+/// `G = D_X Γ D_Y` on 1D grids in `O(k²·MN)` — the paper's fast path.
+///
+/// `gamma` is `M×N` (rows indexed by `X`-support, columns by
+/// `Y`-support); `gx`/`gy` carry the spacings whose `h^k` factors are
+/// applied as one final scale.
+pub fn dxgdy_1d(
+    gx: &Grid1d,
+    gy: &Grid1d,
+    k: u32,
+    gamma: &Mat,
+    out: &mut Mat,
+    ws: &mut Workspace1d,
+) -> Result<()> {
+    let (m, n) = gamma.shape();
+    if gx.n != m || gy.n != n {
+        return Err(Error::shape(
+            "dxgdy_1d",
+            format!("{}x{}", gx.n, gy.n),
+            format!("{m}x{n}"),
+        ));
+    }
+    if out.shape() != (m, n) {
+        return Err(Error::shape(
+            "dxgdy_1d (out)",
+            format!("{m}x{n}"),
+            format!("{:?}", out.shape()),
+        ));
+    }
+    if ws.a.len() != m * n || ws.k != k {
+        return Err(Error::Invalid(format!(
+            "workspace mismatch: ws for k={} len={}, need k={k} len={}",
+            ws.k,
+            ws.a.len(),
+            m * n
+        )));
+    }
+    // A = Γ · D̃_N  (scan every contiguous row)
+    dtilde_rows(k, false, m, n, gamma.as_slice(), &mut ws.a, &ws.binom);
+    // G = D̃_M · A  (vectorized column scan)
+    dtilde_cols(
+        k,
+        false,
+        m,
+        n,
+        &ws.a,
+        out.as_mut_slice(),
+        &mut ws.carry,
+        &ws.binom,
+    );
+    let scale = gx.scale(k) * gy.scale(k);
+    if scale != 1.0 {
+        for v in out.as_mut_slice() {
+            *v *= scale;
+        }
+    }
+    Ok(())
+}
+
+/// `(D ⊙ D)·w` for a 1D grid distance matrix — the marginal products
+/// in the constant term `C₁` (paper §2.1). Squared grid distances are
+/// themselves grid matrices with exponent `2k`, so this is a single
+/// `O(k²N)` scan rather than an `O(N²)` dense product.
+pub fn sq_dist_apply_1d(g: &Grid1d, k: u32, w: &[f64], binom: &Binomial) -> Result<Vec<f64>> {
+    if w.len() != g.n {
+        return Err(Error::shape("sq_dist_apply_1d", format!("{}", g.n), format!("{}", w.len())));
+    }
+    if binom.max_n() < 2 * k as usize {
+        return Err(Error::Invalid(format!(
+            "binomial table too small: need {} have {}",
+            2 * k,
+            binom.max_n()
+        )));
+    }
+    let mut y = vec![0.0; g.n];
+    apply_dtilde_vec(2 * k, false, w, &mut y, binom);
+    let s = g.scale(k);
+    let s2 = s * s;
+    for v in &mut y {
+        *v *= s2;
+    }
+    Ok(y)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fgc::naive::dxgdy_dense;
+    use crate::grid::{dense_dist_1d, squared_dist_apply_dense};
+    use crate::prng::Rng;
+    use crate::testutil::assert_slices_close;
+
+    #[test]
+    fn matches_dense_square() {
+        for k in [1u32, 2, 3] {
+            let (m, n) = (24, 24);
+            let gx = Grid1d::unit(m);
+            let gy = Grid1d::unit(n);
+            let mut rng = Rng::seeded(50 + k as u64);
+            let gamma = Mat::from_fn(m, n, |_, _| rng.uniform());
+            let dx = dense_dist_1d(&gx, k);
+            let dy = dense_dist_1d(&gy, k);
+            let oracle = dxgdy_dense(&dx, &dy, &gamma).unwrap();
+
+            let mut ws = Workspace1d::new(m, n, k);
+            let mut out = Mat::zeros(m, n);
+            dxgdy_1d(&gx, &gy, k, &gamma, &mut out, &mut ws).unwrap();
+            assert_slices_close(out.as_slice(), oracle.as_slice(), 1e-11, 1e-13, &format!("k={k}"));
+        }
+    }
+
+    #[test]
+    fn matches_dense_rectangular() {
+        let (m, n) = (17, 41);
+        let k = 2;
+        let gx = Grid1d::new(m, 0.3);
+        let gy = Grid1d::new(n, 0.05);
+        let mut rng = Rng::seeded(99);
+        let gamma = Mat::from_fn(m, n, |_, _| rng.uniform() - 0.2);
+        let oracle = dxgdy_dense(&dense_dist_1d(&gx, k), &dense_dist_1d(&gy, k), &gamma).unwrap();
+        let mut ws = Workspace1d::new(m, n, k);
+        let mut out = Mat::zeros(m, n);
+        dxgdy_1d(&gx, &gy, k, &gamma, &mut out, &mut ws).unwrap();
+        assert_slices_close(out.as_slice(), oracle.as_slice(), 1e-11, 1e-13, "rect");
+    }
+
+    #[test]
+    fn shape_validation() {
+        let gx = Grid1d::unit(5);
+        let gy = Grid1d::unit(6);
+        let gamma = Mat::zeros(5, 5); // wrong: needs 5x6
+        let mut ws = Workspace1d::new(5, 6, 1);
+        let mut out = Mat::zeros(5, 6);
+        assert!(dxgdy_1d(&gx, &gy, 1, &gamma, &mut out, &mut ws).is_err());
+    }
+
+    #[test]
+    fn workspace_k_mismatch_rejected() {
+        let g = Grid1d::unit(5);
+        let gamma = Mat::zeros(5, 5);
+        let mut ws = Workspace1d::new(5, 5, 2);
+        let mut out = Mat::zeros(5, 5);
+        assert!(dxgdy_1d(&g, &g, 1, &gamma, &mut out, &mut ws).is_err());
+    }
+
+    #[test]
+    fn sq_dist_apply_matches_dense() {
+        for k in [1u32, 2] {
+            let g = Grid1d::unit(30);
+            let binom = Binomial::new(2 * k as usize);
+            let mut rng = Rng::seeded(123);
+            let w = rng.uniform_vec(30);
+            let fast = sq_dist_apply_1d(&g, k, &w, &binom).unwrap();
+            let d = dense_dist_1d(&g, k);
+            let oracle = squared_dist_apply_dense(&d, &w);
+            assert_slices_close(&fast, &oracle, 1e-11, 1e-14, &format!("sq k={k}"));
+        }
+    }
+}

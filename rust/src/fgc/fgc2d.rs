@@ -1,0 +1,319 @@
+//! FGC on 2D grids (paper §3.1).
+//!
+//! Under the Manhattan metric `d(i,j) = h^k(|Δr| + |Δc|)^k` on an
+//! `n×n` grid, the binomial theorem gives the exact Kronecker
+//! expansion (eq. 3.12)
+//!
+//! ```text
+//! D̂ = Σ_{s=0..k} C(k,s) · P_s ⊗ P_{k−s} ,   P_s[r][r'] = |r−r'|^s ,
+//! ```
+//!
+//! with the `0⁰ = 1` convention (`P₀ = J`, all-ones *including* the
+//! diagonal). Row-major flattening `idx = r·n + c` turns each
+//! Kronecker factor application into 1D scans: `P_s` acts along the
+//! grid-row axis, `P_{k−s}` along the grid-column axis, so `D̂x`
+//! costs `O(k³n²)` and the full gradient product `O(k³N²)`, `N = n²`.
+
+use super::scan::{dtilde_cols, dtilde_rows};
+use crate::error::{Error, Result};
+use crate::grid::{Binomial, Grid2d};
+use crate::linalg::Mat;
+
+/// Reusable buffers for the 2D FGC pass.
+#[derive(Debug)]
+pub struct Workspace2d {
+    /// Full-size temp (`rows·cols` of the matrix being transformed).
+    t1: Vec<f64>,
+    /// Second full-size temp.
+    t2: Vec<f64>,
+    /// Scan carries (sized for the widest batched scan).
+    carry: Vec<f64>,
+    binom: Binomial,
+    k: u32,
+}
+
+impl Workspace2d {
+    /// Allocate for gradient products with plans of shape
+    /// `(nx² × ny²)` and exponent `k`. The binomial table covers `2k`
+    /// for the squared-distance products in `C₁`.
+    pub fn new(nx: usize, ny: usize, k: u32) -> Self {
+        let full = nx * nx * ny * ny;
+        let widest = (2 * k as usize + 1) * (nx * ny * ny).max(ny * ny).max(nx * nx);
+        Workspace2d {
+            t1: vec![0.0; full.max(nx * nx).max(ny * ny)],
+            t2: vec![0.0; full.max(nx * nx).max(ny * ny)],
+            carry: vec![0.0; widest],
+            binom: Binomial::new((2 * k as usize).max(4)),
+            k,
+        }
+    }
+
+    /// The shared binomial table.
+    pub fn binom(&self) -> &Binomial {
+        &self.binom
+    }
+}
+
+/// `y = D̂^{(k)} x` for a single vector `x ∈ ℝ^{n²}` (paper's `D̂x`
+/// primitive, `O(k³n²)`). `y` is fully overwritten.
+pub fn dhat_apply(n: usize, k: u32, x: &[f64], y: &mut [f64], ws: &mut Workspace2d) -> Result<()> {
+    if x.len() != n * n || y.len() != n * n {
+        return Err(Error::shape(
+            "dhat_apply",
+            format!("{}", n * n),
+            format!("{} / {}", x.len(), y.len()),
+        ));
+    }
+    if ws.binom.max_n() < k as usize {
+        return Err(Error::Invalid("binomial table too small".into()));
+    }
+    let total = n * n;
+    y.fill(0.0);
+    for s in 0..=k {
+        let (kr, kc) = (s, k - s);
+        // P_{kc} along grid-cols = right-multiply the n×n matricization.
+        let t1 = &mut ws.t1[..total];
+        dtilde_rows(kc, kc == 0, n, n, x, t1, &ws.binom);
+        // P_{kr} along grid-rows = left-multiply.
+        let t2 = &mut ws.t2[..total];
+        dtilde_cols(kr, kr == 0, n, n, t1, t2, &mut ws.carry, &ws.binom);
+        let coef = ws.binom.c(k as usize, s as usize);
+        for (o, &v) in y.iter_mut().zip(t2.iter()) {
+            *o += coef * v;
+        }
+    }
+    Ok(())
+}
+
+/// `G = D_X Γ D_Y` on 2D grids in `O(k³·N²)` — the paper's fast path
+/// (eq. 3.11). `gamma` is `(nx²)×(ny²)`; both sides use the Manhattan
+/// metric with their own spacing.
+pub fn dxgdy_2d(
+    gx: &Grid2d,
+    gy: &Grid2d,
+    k: u32,
+    gamma: &Mat,
+    out: &mut Mat,
+    ws: &mut Workspace2d,
+) -> Result<()> {
+    let (m, ncols) = gamma.shape();
+    if gx.len() != m || gy.len() != ncols {
+        return Err(Error::shape(
+            "dxgdy_2d",
+            format!("{}x{}", gx.len(), gy.len()),
+            format!("{m}x{ncols}"),
+        ));
+    }
+    if out.shape() != (m, ncols) {
+        return Err(Error::shape(
+            "dxgdy_2d (out)",
+            format!("{m}x{ncols}"),
+            format!("{:?}", out.shape()),
+        ));
+    }
+    if ws.k != k || ws.t1.len() < m * ncols {
+        return Err(Error::Invalid(format!(
+            "workspace mismatch: ws k={} cap={}, need k={k} cap={}",
+            ws.k,
+            ws.t1.len(),
+            m * ncols
+        )));
+    }
+    // A = Γ·D̂_Y : every contiguous row γ_j ↦ D̂_Y γ_j (D̂ symmetric).
+    // Rows are processed with per-row n_y×n_y temporaries carved from
+    // the workspace tails to keep t1/t2 free for the column pass.
+    let nyy = gy.len();
+    {
+        let a = out.as_mut_slice(); // reuse `out` to hold A
+        let mut rowtmp1 = vec![0.0; nyy];
+        let mut rowtmp2 = vec![0.0; nyy];
+        for j in 0..m {
+            let src = &gamma.as_slice()[j * ncols..(j + 1) * ncols];
+            let dst = &mut a[j * ncols..(j + 1) * ncols];
+            dhat_vec_into(gy.n, k, src, dst, &mut rowtmp1, &mut rowtmp2, &mut ws.carry, &ws.binom);
+        }
+    }
+    // G = D̂_X · A (batched column pass); A currently lives in `out`,
+    // result lands in t2 then is copied back with the h^k scaling.
+    {
+        let a_copy = &mut ws.t1[..m * ncols];
+        a_copy.copy_from_slice(out.as_slice());
+        let g = &mut ws.t2[..m * ncols];
+        // dhat_cols needs separate temps; reuse out's buffer as t1-temp.
+        dhat_cols_with(
+            gx.n,
+            ncols,
+            k,
+            a_copy,
+            g,
+            out.as_mut_slice(),
+            &mut ws.carry,
+            &ws.binom,
+        );
+        let scale = gx.scale(k) * gy.scale(k);
+        for (o, &v) in out.as_mut_slice().iter_mut().zip(g.iter()) {
+            *o = scale * v;
+        }
+    }
+    Ok(())
+}
+
+/// `dhat_cols` variant with a caller-supplied intermediate buffer
+/// (used when the workspace temps are already occupied).
+fn dhat_cols_with(
+    n: usize,
+    ncols: usize,
+    k: u32,
+    x: &[f64],
+    out: &mut [f64],
+    tmp: &mut [f64],
+    carry: &mut [f64],
+    binom: &Binomial,
+) {
+    let total = n * n * ncols;
+    assert_eq!(x.len(), total);
+    assert!(out.len() >= total && tmp.len() >= total);
+    out.fill(0.0);
+    // Accumulate into `out` using tmp as the single intermediate:
+    // term = P_kr ⊗ P_kc applied via two passes; we fold the second
+    // pass's output directly with an accumulating variant.
+    for s in 0..=k {
+        let (kr, kc) = (s, k - s);
+        for b in 0..n {
+            let blk = &x[b * n * ncols..(b + 1) * n * ncols];
+            let dst = &mut tmp[b * n * ncols..(b + 1) * n * ncols];
+            dtilde_cols(kc, kc == 0, n, ncols, blk, dst, carry, binom);
+        }
+        let coef = binom.c(k as usize, s as usize);
+        // Second factor + accumulate: run the batched scan into a
+        // stack-local chunked loop is not possible without another
+        // buffer; instead scan into the first n·ncols of `carry`?
+        // carry is too small. Use a dedicated accumulate pass: scan
+        // tmp in place is invalid (scan reads all rows). Allocate one
+        // scratch lazily per call — amortized by the O(k³N²) work.
+        let mut scratch = vec![0.0; total];
+        dtilde_cols(kr, kr == 0, n, n * ncols, &tmp[..total], &mut scratch, carry, binom);
+        for (o, &v) in out[..total].iter_mut().zip(scratch.iter()) {
+            *o += coef * v;
+        }
+    }
+}
+
+/// Single-vector `D̂x` with fully caller-provided buffers (row pass of
+/// the gradient product).
+#[allow(clippy::too_many_arguments)]
+fn dhat_vec_into(
+    n: usize,
+    k: u32,
+    x: &[f64],
+    y: &mut [f64],
+    t1: &mut [f64],
+    t2: &mut [f64],
+    carry: &mut [f64],
+    binom: &Binomial,
+) {
+    let total = n * n;
+    debug_assert_eq!(x.len(), total);
+    y.fill(0.0);
+    for s in 0..=k {
+        let (kr, kc) = (s, k - s);
+        dtilde_rows(kc, kc == 0, n, n, x, t1, binom);
+        dtilde_cols(kr, kr == 0, n, n, t1, t2, carry, binom);
+        let coef = binom.c(k as usize, s as usize);
+        for (o, &v) in y.iter_mut().zip(t2.iter()) {
+            *o += coef * v;
+        }
+    }
+}
+
+/// `(D ⊙ D)·w` for a 2D grid distance matrix (constant term `C₁`):
+/// squared Manhattan power distances are the same structure with
+/// exponent `2k`, so this is one `O(k³n²)` operator application.
+pub fn sq_dist_apply_2d(g: &Grid2d, k: u32, w: &[f64], ws: &mut Workspace2d) -> Result<Vec<f64>> {
+    if w.len() != g.len() {
+        return Err(Error::shape(
+            "sq_dist_apply_2d",
+            format!("{}", g.len()),
+            format!("{}", w.len()),
+        ));
+    }
+    let mut y = vec![0.0; g.len()];
+    let mut t1 = vec![0.0; g.len()];
+    let mut t2 = vec![0.0; g.len()];
+    dhat_vec_into(g.n, 2 * k, w, &mut y, &mut t1, &mut t2, &mut ws.carry, &ws.binom);
+    let s = g.scale(k);
+    let s2 = s * s;
+    for v in &mut y {
+        *v *= s2;
+    }
+    Ok(y)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fgc::naive::dxgdy_dense;
+    use crate::grid::{dense_dist_2d, squared_dist_apply_dense};
+    use crate::linalg::matvec;
+    use crate::prng::Rng;
+    use crate::testutil::assert_slices_close;
+
+    #[test]
+    fn dhat_apply_matches_dense() {
+        for k in [1u32, 2, 3] {
+            let n = 6;
+            let g = Grid2d::new(n, 1.0);
+            let d = dense_dist_2d(&g, k); // h=1 ⇒ D̂ itself
+            let mut rng = Rng::seeded(21 + k as u64);
+            let x = rng.uniform_vec(n * n);
+            let mut ws = Workspace2d::new(n, n, k);
+            let mut y = vec![0.0; n * n];
+            dhat_apply(n, k, &x, &mut y, &mut ws).unwrap();
+            let oracle = matvec(&d, &x).unwrap();
+            assert_slices_close(&y, &oracle, 1e-11, 1e-12, &format!("dhat k={k}"));
+        }
+    }
+
+    #[test]
+    fn dxgdy_2d_matches_dense() {
+        for k in [1u32, 2] {
+            let (nx, ny) = (5, 4);
+            let gx = Grid2d::new(nx, 0.25);
+            let gy = Grid2d::new(ny, 0.5);
+            let mut rng = Rng::seeded(33 * (k as u64 + 1));
+            let gamma = Mat::from_fn(gx.len(), gy.len(), |_, _| rng.uniform());
+            let dx = dense_dist_2d(&gx, k);
+            let dy = dense_dist_2d(&gy, k);
+            let oracle = dxgdy_dense(&dx, &dy, &gamma).unwrap();
+            let mut ws = Workspace2d::new(nx, ny, k);
+            let mut out = Mat::zeros(gx.len(), gy.len());
+            dxgdy_2d(&gx, &gy, k, &gamma, &mut out, &mut ws).unwrap();
+            assert_slices_close(out.as_slice(), oracle.as_slice(), 1e-10, 1e-12, &format!("2d k={k}"));
+        }
+    }
+
+    #[test]
+    fn sq_dist_apply_2d_matches_dense() {
+        let n = 5;
+        let k = 1;
+        let g = Grid2d::new(n, 0.2);
+        let mut rng = Rng::seeded(2);
+        let w = rng.uniform_vec(n * n);
+        let mut ws = Workspace2d::new(n, n, k);
+        let fast = sq_dist_apply_2d(&g, k, &w, &mut ws).unwrap();
+        let d = dense_dist_2d(&g, k);
+        let oracle = squared_dist_apply_dense(&d, &w);
+        assert_slices_close(&fast, &oracle, 1e-11, 1e-13, "sq2d");
+    }
+
+    #[test]
+    fn shape_checks() {
+        let g = Grid2d::new(3, 1.0);
+        let mut ws = Workspace2d::new(3, 3, 1);
+        let mut y = vec![0.0; 9];
+        assert!(dhat_apply(3, 1, &[0.0; 8], &mut y, &mut ws).is_err());
+        let gamma = Mat::zeros(9, 8);
+        let mut out = Mat::zeros(9, 8);
+        assert!(dxgdy_2d(&g, &g, 1, &gamma, &mut out, &mut ws).is_err());
+    }
+}

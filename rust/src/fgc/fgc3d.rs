@@ -1,0 +1,278 @@
+//! FGC on 3D grids — the "higher dimensional space" generalization
+//! the paper sketches in §3.1 ("there is no essential difference").
+//!
+//! Under the Manhattan metric `d = h^k(|Δx|+|Δy|+|Δz|)^k` on an
+//! `n×n×n` grid, the multinomial theorem gives the exact Kronecker
+//! expansion
+//!
+//! ```text
+//! D̂₃ = Σ_{r+s+t=k} k!/(r!s!t!) · P_r ⊗ P_s ⊗ P_t ,
+//! ```
+//!
+//! with `P_r[a][b] = |a−b|^r` (0⁰ = 1). Flattening
+//! `idx = (z·n + y)·n + x` turns each factor into 1D scans along one
+//! tensor axis, so `D̂₃v` costs `O(k⁴n³)` and the full gradient
+//! product `O(k⁴N²)`, `N = n³`.
+
+use super::scan::{dtilde_cols, dtilde_rows};
+use crate::error::{Error, Result};
+use crate::grid::Binomial;
+use crate::linalg::Mat;
+
+/// A 3D uniform grid (side `n`, spacing `h`, `N = n³` points,
+/// Manhattan metric).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Grid3d {
+    /// Side length.
+    pub n: usize,
+    /// Spacing (all axes).
+    pub h: f64,
+}
+
+impl Grid3d {
+    /// Construct (positive side/spacing enforced).
+    pub fn new(n: usize, h: f64) -> Self {
+        assert!(n >= 1 && h > 0.0);
+        Grid3d { n, h }
+    }
+
+    /// `n³`.
+    pub fn len(&self) -> usize {
+        self.n * self.n * self.n
+    }
+
+    /// True iff empty (never for valid grids).
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// `h^k`.
+    pub fn scale(&self, k: u32) -> f64 {
+        self.h.powi(k as i32)
+    }
+
+    /// Flat index of `(z, y, x)`.
+    pub fn flat(&self, z: usize, y: usize, x: usize) -> usize {
+        (z * self.n + y) * self.n + x
+    }
+
+    /// Manhattan distance between flat indices.
+    pub fn manhattan(&self, a: usize, b: usize) -> usize {
+        let n = self.n;
+        let (az, ay, ax) = (a / (n * n), (a / n) % n, a % n);
+        let (bz, by, bx) = (b / (n * n), (b / n) % n, b % n);
+        az.abs_diff(bz) + ay.abs_diff(by) + ax.abs_diff(bx)
+    }
+
+    /// Dense distance matrix (test oracle; `O(N²)` memory).
+    pub fn dense(&self, k: u32) -> Mat {
+        let nn = self.len();
+        let s = self.scale(k);
+        Mat::from_fn(nn, nn, |a, b| {
+            s * (self.manhattan(a, b) as f64).powi(k as i32)
+        })
+    }
+}
+
+/// Workspace for the 3D operator.
+#[derive(Debug)]
+pub struct Workspace3d {
+    t1: Vec<f64>,
+    t2: Vec<f64>,
+    carry: Vec<f64>,
+    binom: Binomial,
+    k: u32,
+}
+
+impl Workspace3d {
+    /// Allocate for vectors of length `n³` with exponent `k` (table
+    /// covers `2k` for the `C₁` products).
+    pub fn new(n: usize, k: u32) -> Self {
+        let nn = n * n * n;
+        Workspace3d {
+            t1: vec![0.0; nn],
+            t2: vec![0.0; nn],
+            carry: vec![0.0; (2 * k as usize + 1) * n * n],
+            binom: Binomial::new((2 * k as usize).max(4)),
+            k,
+        }
+    }
+}
+
+/// `y = D̂₃^{(k)} x` (unscaled), `x ∈ ℝ^{n³}` in `O(k⁴n³)`.
+pub fn dhat3_apply(n: usize, k: u32, x: &[f64], y: &mut [f64], ws: &mut Workspace3d) -> Result<()> {
+    let nn = n * n * n;
+    if x.len() != nn || y.len() != nn {
+        return Err(Error::shape(
+            "dhat3_apply",
+            format!("{nn}"),
+            format!("{} / {}", x.len(), y.len()),
+        ));
+    }
+    if ws.k != k && ws.k != 2 * k && 2 * ws.k != k {
+        // workspace binomial table must cover the requested exponent
+        if ws.binom.max_n() < k as usize {
+            return Err(Error::Invalid(format!(
+                "workspace built for k={}, cannot serve k={k}",
+                ws.k
+            )));
+        }
+    }
+    y.fill(0.0);
+    for r in 0..=k {
+        for s in 0..=(k - r) {
+            let t = k - r - s;
+            // multinomial k!/(r!s!t!) = C(k,r)·C(k−r,s)
+            let coef =
+                ws.binom.c(k as usize, r as usize) * ws.binom.c((k - r) as usize, s as usize);
+            // axis 0 (z): batched scan over n rows of width n².
+            let t1 = &mut ws.t1[..nn];
+            dtilde_cols(r, r == 0, n, n * n, x, t1, &mut ws.carry, &ws.binom);
+            // axis 1 (y): per z-block batched scan (n rows × n cols).
+            let t2 = &mut ws.t2[..nn];
+            for z in 0..n {
+                let blk = &t1[z * n * n..(z + 1) * n * n];
+                let dst = &mut t2[z * n * n..(z + 1) * n * n];
+                dtilde_cols(s, s == 0, n, n, blk, dst, &mut ws.carry, &ws.binom);
+            }
+            // axis 2 (x): contiguous row scans over n² rows of width n.
+            let t1 = &mut ws.t1[..nn];
+            dtilde_rows(t, t == 0, n * n, n, t2, t1, &ws.binom);
+            for (o, &v) in y.iter_mut().zip(t1.iter()) {
+                *o += coef * v;
+            }
+        }
+    }
+    Ok(())
+}
+
+/// `G = D_X Γ D_Y` on 3D grids in `O(k⁴N²)`: per-row applications for
+/// `A = Γ·D̂_Y` (rows contiguous, D̂ symmetric), then a transpose
+/// sandwich for `G = D̂_X·A`.
+pub fn dxgdy_3d(
+    gx: &Grid3d,
+    gy: &Grid3d,
+    k: u32,
+    gamma: &Mat,
+    out: &mut Mat,
+    wsx: &mut Workspace3d,
+    wsy: &mut Workspace3d,
+) -> Result<()> {
+    let (m, nc) = gamma.shape();
+    if gx.len() != m || gy.len() != nc {
+        return Err(Error::shape(
+            "dxgdy_3d",
+            format!("{}x{}", gx.len(), gy.len()),
+            format!("{m}x{nc}"),
+        ));
+    }
+    if out.shape() != (m, nc) {
+        return Err(Error::shape("dxgdy_3d(out)", format!("{m}x{nc}"), format!("{:?}", out.shape())));
+    }
+    // A = Γ·D̂_Y (row-wise)
+    let mut a = Mat::zeros(m, nc);
+    for j in 0..m {
+        let src = &gamma.as_slice()[j * nc..(j + 1) * nc];
+        let dst = &mut a.as_mut_slice()[j * nc..(j + 1) * nc];
+        dhat3_apply(gy.n, k, src, dst, wsy)?;
+    }
+    // G = D̂_X·A via Gᵀ rows = D̂_X (Aᵀ rows)
+    let at = a.transpose();
+    let mut gt = Mat::zeros(nc, m);
+    for j in 0..nc {
+        let src = &at.as_slice()[j * m..(j + 1) * m];
+        let dst = &mut gt.as_mut_slice()[j * m..(j + 1) * m];
+        dhat3_apply(gx.n, k, src, dst, wsx)?;
+    }
+    let g = gt.transpose();
+    let scale = gx.scale(k) * gy.scale(k);
+    for (o, &v) in out.as_mut_slice().iter_mut().zip(g.as_slice()) {
+        *o = scale * v;
+    }
+    Ok(())
+}
+
+/// `(D ⊙ D)·w` on a 3D grid (exponent-2k structure).
+pub fn sq_dist_apply_3d(g: &Grid3d, k: u32, w: &[f64], ws: &mut Workspace3d) -> Result<Vec<f64>> {
+    if w.len() != g.len() {
+        return Err(Error::shape("sq_dist_apply_3d", format!("{}", g.len()), format!("{}", w.len())));
+    }
+    let mut y = vec![0.0; g.len()];
+    dhat3_apply(g.n, 2 * k, w, &mut y, ws)?;
+    let s = g.scale(k);
+    let s2 = s * s;
+    for v in &mut y {
+        *v *= s2;
+    }
+    Ok(y)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::matvec;
+    use crate::prng::Rng;
+    use crate::testutil::assert_slices_close;
+
+    #[test]
+    fn dhat3_matches_dense() {
+        for k in [1u32, 2] {
+            let n = 4;
+            let g = Grid3d::new(n, 1.0);
+            let d = g.dense(k);
+            let mut rng = Rng::seeded(60 + k as u64);
+            let x = rng.uniform_vec(g.len());
+            let mut ws = Workspace3d::new(n, k);
+            let mut y = vec![0.0; g.len()];
+            dhat3_apply(n, k, &x, &mut y, &mut ws).unwrap();
+            let oracle = matvec(&d, &x).unwrap();
+            assert_slices_close(&y, &oracle, 1e-11, 1e-12, &format!("dhat3 k={k}"));
+        }
+    }
+
+    #[test]
+    fn dxgdy_3d_matches_dense() {
+        let (nx, ny, k) = (3, 2, 1);
+        let gx = Grid3d::new(nx, 0.5);
+        let gy = Grid3d::new(ny, 0.25);
+        let mut rng = Rng::seeded(8);
+        let gamma = Mat::from_fn(gx.len(), gy.len(), |_, _| rng.uniform());
+        let oracle = crate::fgc::naive::dxgdy_dense(&gx.dense(k), &gy.dense(k), &gamma).unwrap();
+        let mut wsx = Workspace3d::new(nx, k);
+        let mut wsy = Workspace3d::new(ny, k);
+        let mut out = Mat::zeros(gx.len(), gy.len());
+        dxgdy_3d(&gx, &gy, k, &gamma, &mut out, &mut wsx, &mut wsy).unwrap();
+        assert_slices_close(out.as_slice(), oracle.as_slice(), 1e-10, 1e-12, "3d product");
+    }
+
+    #[test]
+    fn sq_dist_3d_matches_dense() {
+        let n = 3;
+        let k = 1;
+        let g = Grid3d::new(n, 0.4);
+        let d = g.dense(k);
+        let mut rng = Rng::seeded(4);
+        let w = rng.uniform_vec(g.len());
+        let mut ws = Workspace3d::new(n, k);
+        let fast = sq_dist_apply_3d(&g, k, &w, &mut ws).unwrap();
+        let oracle = crate::grid::squared_dist_apply_dense(&d, &w);
+        assert_slices_close(&fast, &oracle, 1e-11, 1e-13, "sq3d");
+    }
+
+    #[test]
+    fn flat_and_manhattan() {
+        let g = Grid3d::new(4, 1.0);
+        let a = g.flat(0, 0, 0);
+        let b = g.flat(3, 2, 1);
+        assert_eq!(g.manhattan(a, b), 6);
+        assert_eq!(g.len(), 64);
+    }
+
+    #[test]
+    fn shape_checks() {
+        let _g = Grid3d::new(2, 1.0);
+        let mut ws = Workspace3d::new(2, 1);
+        let mut y = vec![0.0; 8];
+        assert!(dhat3_apply(2, 1, &[0.0; 7], &mut y, &mut ws).is_err());
+    }
+}

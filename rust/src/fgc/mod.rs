@@ -1,0 +1,29 @@
+//! Fast Gradient Computation — the paper's core contribution (§3).
+//!
+//! On uniform grids the distance matrices factor as `D = h^k·D̃` with
+//! `D̃ = L + Lᵀ`, `L_{ij} = (i−j)^k` for `i > j`. The dynamic-
+//! programming recurrence (eq. 3.9) evaluates `Lx` and `Lᵀx` in
+//! `O(k²N)` time, turning the per-iteration gradient product
+//! `D_X Γ D_Y` from `O(MN(M+N))` into `O(k²MN)`.
+//!
+//! * [`scan`] — the 1D recurrence, for single vectors, for all columns
+//!   of a matrix at once (vectorized carries) and for all rows.
+//! * [`fgc1d`] — `D_X Γ D_Y` on 1D grids, plus the `(D⊙D)w` products
+//!   in the constant term `C₁` (squared distances are grid matrices
+//!   with exponent `2k`).
+//! * [`fgc2d`] — the 2D Manhattan-metric extension via the binomial
+//!   Kronecker expansion (eq. 3.12).
+//! * [`naive`] — the dense `O(N³)` baseline mirroring the paper's
+//!   "Original" Eigen implementation, used for every speedup table and
+//!   for exactness checks (`‖P_Fa − P‖_F` columns).
+
+pub mod fgc1d;
+pub mod fgc2d;
+pub mod fgc3d;
+pub mod naive;
+pub mod scan;
+
+pub use fgc1d::{dxgdy_1d, sq_dist_apply_1d, Workspace1d};
+pub use fgc2d::{dhat_apply, dxgdy_2d, sq_dist_apply_2d, Workspace2d};
+pub use fgc3d::{dhat3_apply, dxgdy_3d, sq_dist_apply_3d, Grid3d, Workspace3d};
+pub use scan::{apply_dtilde_vec, apply_l_vec, apply_lt_vec, dtilde_cols, dtilde_rows};

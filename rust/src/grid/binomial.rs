@@ -1,0 +1,83 @@
+//! Pascal-triangle binomial coefficient table.
+//!
+//! The FGC recurrence (paper eq. 3.9) consumes `C(r−1, s−1)` for
+//! `r ≤ k+1`; the 2D Kronecker expansion (eq. 3.12) consumes `C(k, r)`.
+//! The table is built once in `O(k²)` (paper footnote 2) and shared.
+
+/// Dense lower-triangular table of binomial coefficients as `f64`
+/// (they enter floating-point recurrences directly).
+#[derive(Clone, Debug)]
+pub struct Binomial {
+    /// `table[r][s] = C(r, s)` for `s ≤ r ≤ max_n`.
+    table: Vec<Vec<f64>>,
+}
+
+impl Binomial {
+    /// Build the triangle up to `C(max_n, ·)` inclusive.
+    pub fn new(max_n: usize) -> Self {
+        let mut table: Vec<Vec<f64>> = Vec::with_capacity(max_n + 1);
+        for r in 0..=max_n {
+            let mut row = vec![1.0; r + 1];
+            for s in 1..r {
+                row[s] = table[r - 1][s - 1] + table[r - 1][s];
+            }
+            table.push(row);
+        }
+        Binomial { table }
+    }
+
+    /// `C(n, k)`; zero when `k > n`.
+    #[inline]
+    pub fn c(&self, n: usize, k: usize) -> f64 {
+        if k > n {
+            0.0
+        } else {
+            self.table[n][k]
+        }
+    }
+
+    /// Largest `n` available.
+    pub fn max_n(&self) -> usize {
+        self.table.len() - 1
+    }
+
+    /// Row `n` of the triangle: `[C(n,0), …, C(n,n)]`.
+    pub fn row(&self, n: usize) -> &[f64] {
+        &self.table[n]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_values() {
+        let b = Binomial::new(10);
+        assert_eq!(b.c(0, 0), 1.0);
+        assert_eq!(b.c(4, 2), 6.0);
+        assert_eq!(b.c(10, 5), 252.0);
+        assert_eq!(b.c(7, 0), 1.0);
+        assert_eq!(b.c(7, 7), 1.0);
+        assert_eq!(b.c(3, 5), 0.0);
+    }
+
+    #[test]
+    fn row_sums_are_powers_of_two() {
+        let b = Binomial::new(20);
+        for n in 0..=20usize {
+            let s: f64 = b.row(n).iter().sum();
+            assert_eq!(s, (1u64 << n) as f64);
+        }
+    }
+
+    #[test]
+    fn symmetry() {
+        let b = Binomial::new(15);
+        for n in 0..=15usize {
+            for k in 0..=n {
+                assert_eq!(b.c(n, k), b.c(n, n - k));
+            }
+        }
+    }
+}

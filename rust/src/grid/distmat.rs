@@ -1,0 +1,107 @@
+//! Dense distance-matrix builders.
+//!
+//! These materialize the `O(N²)` matrices the *original* (baseline)
+//! entropic algorithm multiplies with — FGC never builds them on its
+//! hot path, but the baseline, the tests and the `C₁` constant term
+//! need them.
+
+use super::{Grid1d, Grid2d};
+use crate::linalg::Mat;
+
+/// Dense 1D grid distance matrix `D_{ij} = h^k |i−j|^k` (paper eq. 2.2).
+pub fn dense_dist_1d(grid: &Grid1d, k: u32) -> Mat {
+    let scale = grid.scale(k);
+    Mat::from_fn(grid.n, grid.n, |i, j| {
+        let d = i.abs_diff(j) as f64;
+        scale * d.powi(k as i32)
+    })
+}
+
+/// Dense 2D grid distance matrix under the Manhattan metric,
+/// `D_{ij} = h^k (|Δr| + |Δc|)^k` over flattened indices (paper eq. 3.10).
+pub fn dense_dist_2d(grid: &Grid2d, k: u32) -> Mat {
+    let n2 = grid.len();
+    let scale = grid.scale(k);
+    Mat::from_fn(n2, n2, |a, b| {
+        let d = grid.manhattan(a, b) as f64;
+        scale * d.powi(k as i32)
+    })
+}
+
+/// Dense unscaled power-distance matrix `|i−j|^r` of size `n×n`, with
+/// the `0^0 = 1` convention (so `r = 0` gives the all-ones matrix `J`
+/// needed by the binomial expansion in §3.1).
+pub fn dense_pow_dist(n: usize, r: u32) -> Mat {
+    Mat::from_fn(n, n, |i, j| {
+        let d = i.abs_diff(j) as f64;
+        if r == 0 {
+            1.0
+        } else {
+            d.powi(r as i32)
+        }
+    })
+}
+
+/// Dense helper for the constant term `C₁`: computes
+/// `(D ⊙ D)·w` for a dense distance matrix `D` (used by tests to check
+/// the FGC-accelerated version).
+pub fn squared_dist_apply_dense(d: &Mat, w: &[f64]) -> Vec<f64> {
+    assert_eq!(d.cols(), w.len());
+    (0..d.rows())
+        .map(|i| {
+            d.row(i)
+                .iter()
+                .zip(w)
+                .map(|(&dij, &wj)| dij * dij * wj)
+                .sum()
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dist_1d_values() {
+        let g = Grid1d::new(4, 0.5);
+        let d = dense_dist_1d(&g, 2);
+        // h² |i−j|²; h=0.5 → h²=0.25
+        assert_eq!(d[(0, 0)], 0.0);
+        assert_eq!(d[(0, 3)], 0.25 * 9.0);
+        assert_eq!(d[(2, 1)], 0.25);
+        // symmetry
+        for i in 0..4 {
+            for j in 0..4 {
+                assert_eq!(d[(i, j)], d[(j, i)]);
+            }
+        }
+    }
+
+    #[test]
+    fn dist_2d_manhattan() {
+        let g = Grid2d::new(3, 1.0);
+        let d = dense_dist_2d(&g, 1);
+        let a = g.flat(0, 0);
+        let b = g.flat(2, 2);
+        assert_eq!(d[(a, b)], 4.0);
+        let c = g.flat(1, 0);
+        assert_eq!(d[(a, c)], 1.0);
+    }
+
+    #[test]
+    fn dist_2d_power_scaling() {
+        let g = Grid2d::new(3, 2.0);
+        let d = dense_dist_2d(&g, 2);
+        let a = g.flat(0, 0);
+        let b = g.flat(1, 2);
+        // (h·(1+2))² with h^k pulled out as h²·3² = 4·9
+        assert_eq!(d[(a, b)], 4.0 * 9.0);
+    }
+
+    #[test]
+    fn pow_dist_zero_power_is_ones() {
+        let j = dense_pow_dist(3, 0);
+        assert!(j.as_slice().iter().all(|&x| x == 1.0));
+    }
+}

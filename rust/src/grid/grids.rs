@@ -1,0 +1,141 @@
+//! Uniform grid descriptors.
+
+/// A 1D uniform grid of `n` points with spacing `h`: support
+/// `x_i = x₀ + i·h`. The paper's §4.1 grids are `x_i = (i−1)/(N−1)`,
+/// i.e. `h = 1/(N−1)` on `[0,1]`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Grid1d {
+    /// Number of grid points.
+    pub n: usize,
+    /// Spacing between adjacent points.
+    pub h: f64,
+}
+
+impl Grid1d {
+    /// Grid of `n` points with explicit spacing.
+    pub fn new(n: usize, h: f64) -> Self {
+        assert!(n >= 1 && h > 0.0, "Grid1d requires n≥1, h>0");
+        Grid1d { n, h }
+    }
+
+    /// `n` points spanning `[0, 1]` (paper §4.1 convention).
+    pub fn unit(n: usize) -> Self {
+        assert!(n >= 2);
+        Grid1d {
+            n,
+            h: 1.0 / (n as f64 - 1.0),
+        }
+    }
+
+    /// The distance-scale factor `h^k` pulled out of `D = h^k · D̃`.
+    #[inline]
+    pub fn scale(&self, k: u32) -> f64 {
+        self.h.powi(k as i32)
+    }
+
+    /// Point coordinates.
+    pub fn points(&self) -> Vec<f64> {
+        (0..self.n).map(|i| i as f64 * self.h).collect()
+    }
+}
+
+/// A 2D uniform `n×n` grid with equal horizontal/vertical spacing `h`
+/// (paper §3.1). Points are flattened row-by-row:
+/// index `i = r·n + c` ↔ grid coordinate `(r, c)`, matching the
+/// paper's `vec(Q) = (q₁₁ … q₁ₙ, q₂₁ …)` convention. The metric is
+/// Manhattan: `d(i, j) = h^k (|Δr| + |Δc|)^k`, which is exactly what
+/// makes the binomial Kronecker expansion (eq. 3.12) exact.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Grid2d {
+    /// Side length (total points `N = n²`).
+    pub n: usize,
+    /// Spacing (both axes).
+    pub h: f64,
+}
+
+impl Grid2d {
+    /// `n×n` grid with explicit spacing.
+    pub fn new(n: usize, h: f64) -> Self {
+        assert!(n >= 1 && h > 0.0, "Grid2d requires n≥1, h>0");
+        Grid2d { n, h }
+    }
+
+    /// `n×n` points spanning `[0,1]²` (paper §4.2 convention).
+    pub fn unit(n: usize) -> Self {
+        assert!(n >= 2);
+        Grid2d {
+            n,
+            h: 1.0 / (n as f64 - 1.0),
+        }
+    }
+
+    /// Total number of points `N = n²`.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.n * self.n
+    }
+
+    /// True iff the grid is empty (never for validly constructed grids).
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// `h^k`.
+    #[inline]
+    pub fn scale(&self, k: u32) -> f64 {
+        self.h.powi(k as i32)
+    }
+
+    /// Flat index of grid coordinate `(row, col)`.
+    #[inline]
+    pub fn flat(&self, row: usize, col: usize) -> usize {
+        debug_assert!(row < self.n && col < self.n);
+        row * self.n + col
+    }
+
+    /// Grid coordinate of flat index.
+    #[inline]
+    pub fn coords(&self, idx: usize) -> (usize, usize) {
+        (idx / self.n, idx % self.n)
+    }
+
+    /// Unscaled Manhattan distance between two flat indices.
+    pub fn manhattan(&self, a: usize, b: usize) -> usize {
+        let (ar, ac) = self.coords(a);
+        let (br, bc) = self.coords(b);
+        ar.abs_diff(br) + ac.abs_diff(bc)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unit_grid_1d_matches_paper() {
+        let g = Grid1d::unit(5);
+        let pts = g.points();
+        assert!((pts[4] - 1.0).abs() < 1e-15);
+        assert!((pts[1] - 0.25).abs() < 1e-15);
+        assert!((g.scale(2) - 0.0625).abs() < 1e-15);
+    }
+
+    #[test]
+    fn grid2d_flat_roundtrip() {
+        let g = Grid2d::new(7, 0.5);
+        for idx in 0..g.len() {
+            let (r, c) = g.coords(idx);
+            assert_eq!(g.flat(r, c), idx);
+        }
+    }
+
+    #[test]
+    fn manhattan_distance() {
+        let g = Grid2d::new(4, 1.0);
+        let a = g.flat(0, 0);
+        let b = g.flat(3, 2);
+        assert_eq!(g.manhattan(a, b), 5);
+        assert_eq!(g.manhattan(b, a), 5);
+        assert_eq!(g.manhattan(a, a), 0);
+    }
+}

@@ -1,0 +1,10 @@
+//! Uniform grids, grid-structured distance matrices and binomial
+//! tables — the structural assumptions behind FGC (paper §2, §3.1).
+
+mod binomial;
+mod distmat;
+mod grids;
+
+pub use binomial::Binomial;
+pub use distmat::{dense_dist_1d, dense_dist_2d, dense_pow_dist, squared_dist_apply_dense};
+pub use grids::{Grid1d, Grid2d};

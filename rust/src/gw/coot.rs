@@ -1,0 +1,290 @@
+//! Co-Optimal Transport (Titouan et al. 2020) — listed in the paper's
+//! conclusion among the methods FGC accelerates "as long as the GW
+//! gradient is required".
+//!
+//! COOT couples *samples and features simultaneously*: given data
+//! matrices `X ∈ ℝ^{n×d}`, `Y ∈ ℝ^{n'×d'}`,
+//!
+//! ```text
+//! min_{πˢ, πᶠ}  Σ_{i,k,j,l} (X_ij − Y_kl)² πˢ_ik πᶠ_jl
+//! ```
+//!
+//! solved by block-coordinate descent: with one plan fixed, the other
+//! sees an entropic-OT problem with cost
+//! `M[i,k] = (X⊙X)·(πᶠ1) ⊕ (Y⊙Y)·(πᶠᵀ1) − 2·X πᶠ Yᵀ`. The bilinear
+//! term `X π Yᵀ` is exactly the paper's `D_X Γ D_Y` shape — when the
+//! data matrices are grid distance matrices (comparing metric spaces
+//! through their distance structure), FGC evaluates it in `O(k²·nd)`
+//! instead of densely.
+
+use super::gradient::GradientKind;
+use crate::error::{Error, Result};
+use crate::fgc::{dxgdy_1d, Workspace1d};
+use crate::grid::Grid1d;
+use crate::linalg::{matmul, Mat};
+use crate::sinkhorn::{self, SinkhornOptions};
+
+/// One side of a COOT problem.
+#[derive(Clone, Debug)]
+pub enum CootData {
+    /// Arbitrary dense data matrix.
+    Dense(Mat),
+    /// A 1D-grid distance matrix `h^k|i−j|^k` of size `n×n`
+    /// (FGC-accelerable: both axes carry the grid structure).
+    GridDist1d {
+        /// The grid.
+        grid: Grid1d,
+        /// Distance exponent.
+        k: u32,
+    },
+}
+
+impl CootData {
+    /// `(rows, cols)` of the data matrix.
+    pub fn shape(&self) -> (usize, usize) {
+        match self {
+            CootData::Dense(m) => m.shape(),
+            CootData::GridDist1d { grid, .. } => (grid.n, grid.n),
+        }
+    }
+
+    /// Materialize densely (needed for the squared terms).
+    pub fn dense(&self) -> Mat {
+        match self {
+            CootData::Dense(m) => m.clone(),
+            CootData::GridDist1d { grid, k } => crate::grid::dense_dist_1d(grid, *k),
+        }
+    }
+}
+
+/// COOT solver configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct CootConfig {
+    /// Entropic ε for the sample coupling.
+    pub epsilon_samples: f64,
+    /// Entropic ε for the feature coupling.
+    pub epsilon_features: f64,
+    /// BCD sweeps.
+    pub outer_iters: usize,
+    /// Inner Sinkhorn cap.
+    pub sinkhorn_max_iters: usize,
+    /// Inner Sinkhorn tolerance.
+    pub sinkhorn_tolerance: f64,
+}
+
+impl Default for CootConfig {
+    fn default() -> Self {
+        CootConfig {
+            epsilon_samples: 5e-3,
+            epsilon_features: 5e-3,
+            outer_iters: 10,
+            sinkhorn_max_iters: 500,
+            sinkhorn_tolerance: 1e-9,
+        }
+    }
+}
+
+/// COOT output.
+#[derive(Clone, Debug)]
+pub struct CootSolution {
+    /// Sample coupling `πˢ` (`n×n'`).
+    pub sample_plan: Mat,
+    /// Feature coupling `πᶠ` (`d×d'`).
+    pub feature_plan: Mat,
+    /// Final COOT objective.
+    pub objective: f64,
+    /// BCD sweeps performed.
+    pub iterations: usize,
+}
+
+/// Solve COOT between `x` and `y` with uniform sample/feature weights.
+pub fn coot(
+    x: &CootData,
+    y: &CootData,
+    cfg: &CootConfig,
+    kind: GradientKind,
+) -> Result<CootSolution> {
+    let (n, d) = x.shape();
+    let (n2, d2) = y.shape();
+    if n == 0 || d == 0 || n2 == 0 || d2 == 0 {
+        return Err(Error::Invalid("empty COOT input".into()));
+    }
+    let ws_n = vec![1.0 / n as f64; n];
+    let ws_n2 = vec![1.0 / n2 as f64; n2];
+    let wf_d = vec![1.0 / d as f64; d];
+    let wf_d2 = vec![1.0 / d2 as f64; d2];
+
+    let xd = x.dense();
+    let yd = y.dense();
+    let x2 = xd.hadamard(&xd)?;
+    let y2 = yd.hadamard(&yd)?;
+
+    // FGC fast path is available when BOTH inputs are grid distance
+    // matrices with matching exponents (then X π Yᵀ = D̃ π D̃·h^k·h^k).
+    let fgc = match (x, y, kind) {
+        (
+            CootData::GridDist1d { grid: ga, k: ka },
+            CootData::GridDist1d { grid: gb, k: kb },
+            GradientKind::Fgc,
+        ) if ka == kb => Some((*ga, *gb, *ka)),
+        _ => None,
+    };
+
+    // X π Yᵀ for π of shape (cols_x_side, cols_y_side); both X, Y
+    // symmetric in the grid case so the transpose is free there.
+    let bilinear = |pi: &Mat,
+                    ws1: &mut Option<Workspace1d>|
+     -> Result<Mat> {
+        if let Some((ga, gb, k)) = fgc {
+            let ws = ws1.get_or_insert_with(|| Workspace1d::new(ga.n, gb.n, k));
+            let mut out = Mat::zeros(ga.n, gb.n);
+            dxgdy_1d(&ga, &gb, k, pi, &mut out, ws)?;
+            Ok(out)
+        } else {
+            let t = matmul(&xd, pi)?;
+            matmul(&t, &yd.transpose())
+        }
+    };
+
+    let sk = |eps: f64| SinkhornOptions {
+        epsilon: eps,
+        max_iters: cfg.sinkhorn_max_iters,
+        tolerance: cfg.sinkhorn_tolerance,
+        check_every: 10,
+    };
+
+    let mut pi_f = crate::linalg::outer(&wf_d, &wf_d2);
+    let mut pi_s = crate::linalg::outer(&ws_n, &ws_n2);
+    let mut ws1: Option<Workspace1d> = None;
+    let mut ws2: Option<Workspace1d> = None;
+    let mut last_cost_s: Option<Mat> = None;
+
+    for _ in 0..cfg.outer_iters {
+        // --- sample step: cost from πᶠ ---
+        let rf = pi_f.row_sums(); // length d
+        let cf = pi_f.col_sums(); // length d2
+        let ax = crate::linalg::matvec(&x2, &rf)?; // Σ_j X_ij² (πᶠ1)_j
+        let by = crate::linalg::matvec(&y2, &cf)?;
+        let cross = bilinear(&pi_f, &mut ws1)?;
+        let cost_s = Mat::from_fn(n, n2, |i, kx| ax[i] + by[kx] - 2.0 * cross[(i, kx)]);
+        pi_s = sinkhorn::solve(&cost_s, &ws_n, &ws_n2, &sk(cfg.epsilon_samples))?.plan;
+        last_cost_s = Some(cost_s);
+
+        // --- feature step: cost from πˢ ---
+        let rs = pi_s.row_sums();
+        let cs = pi_s.col_sums();
+        let axf = crate::linalg::matvec_t(&x2, &rs)?; // Σ_i X_ij² (πˢ1)_i
+        let byf = crate::linalg::matvec_t(&y2, &cs)?;
+        // Xᵀ πˢ Y — grid case: X, Y symmetric ⇒ same operator.
+        let crossf = if let Some((ga, gb, k)) = fgc {
+            let ws = ws2.get_or_insert_with(|| Workspace1d::new(ga.n, gb.n, k));
+            let mut out = Mat::zeros(ga.n, gb.n);
+            dxgdy_1d(&ga, &gb, k, &pi_s, &mut out, ws)?;
+            out
+        } else {
+            matmul(&matmul(&xd.transpose(), &pi_s)?, &yd)?
+        };
+        let cost_f = Mat::from_fn(d, d2, |j, l| axf[j] + byf[l] - 2.0 * crossf[(j, l)]);
+        pi_f = sinkhorn::solve(&cost_f, &wf_d, &wf_d2, &sk(cfg.epsilon_features))?.plan;
+    }
+
+    let objective = match &last_cost_s {
+        Some(cost_s) => {
+            // Recompute the sample cost against the *final* πᶠ for an
+            // unbiased objective.
+            let rf = pi_f.row_sums();
+            let cf = pi_f.col_sums();
+            let ax = crate::linalg::matvec(&x2, &rf)?;
+            let by = crate::linalg::matvec(&y2, &cf)?;
+            let cross = bilinear(&pi_f, &mut ws1)?;
+            let mut obj = 0.0;
+            for i in 0..n {
+                for kx in 0..n2 {
+                    obj += pi_s[(i, kx)] * (ax[i] + by[kx] - 2.0 * cross[(i, kx)]);
+                }
+            }
+            let _ = cost_s;
+            obj
+        }
+        None => f64::NAN,
+    };
+
+    Ok(CootSolution {
+        sample_plan: pi_s,
+        feature_plan: pi_f,
+        objective,
+        iterations: cfg.outer_iters,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::frobenius_diff;
+    use crate::prng::Rng;
+
+    fn grid_data(n: usize) -> CootData {
+        CootData::GridDist1d {
+            grid: Grid1d::unit(n),
+            k: 1,
+        }
+    }
+
+    #[test]
+    fn structured_and_dense_paths_agree() {
+        let x = grid_data(12);
+        let y = grid_data(15);
+        let cfg = CootConfig {
+            outer_iters: 4,
+            ..CootConfig::default()
+        };
+        let fast = coot(&x, &y, &cfg, GradientKind::Fgc).unwrap();
+        let dense_x = CootData::Dense(x.dense());
+        let dense_y = CootData::Dense(y.dense());
+        let slow = coot(&dense_x, &dense_y, &cfg, GradientKind::Naive).unwrap();
+        // The two paths build bitwise-nearly-equal cost matrices, but
+        // Sinkhorn's early-stopping check may trigger one sweep apart
+        // when the marginal error sits exactly at the tolerance, so
+        // agreement is at the Sinkhorn tolerance (1e-9·sweeps), not
+        // machine-eps.
+        let ds = frobenius_diff(&fast.sample_plan, &slow.sample_plan).unwrap();
+        let df = frobenius_diff(&fast.feature_plan, &slow.feature_plan).unwrap();
+        assert!(ds < 1e-6 && df < 1e-6, "ds={ds:.2e} df={df:.2e}");
+        assert!((fast.objective - slow.objective).abs() < 1e-7);
+    }
+
+    #[test]
+    fn identical_inputs_low_objective() {
+        let x = grid_data(10);
+        let sol = coot(&x, &x, &CootConfig::default(), GradientKind::Fgc).unwrap();
+        // COOT(X, X) = 0 at identity couplings; entropic BCD gets close.
+        assert!(sol.objective >= -1e-10);
+        assert!(sol.objective < 0.05, "objective {}", sol.objective);
+    }
+
+    #[test]
+    fn plans_have_uniform_marginals() {
+        let mut rng = Rng::seeded(3);
+        let x = CootData::Dense(Mat::from_fn(8, 5, |_, _| rng.uniform()));
+        let y = CootData::Dense(Mat::from_fn(6, 7, |_, _| rng.uniform()));
+        let sol = coot(&x, &y, &CootConfig::default(), GradientKind::Naive).unwrap();
+        assert_eq!(sol.sample_plan.shape(), (8, 6));
+        assert_eq!(sol.feature_plan.shape(), (5, 7));
+        for (plan, rows, cols) in [(&sol.sample_plan, 8, 6), (&sol.feature_plan, 5, 7)] {
+            let rs = plan.row_sums();
+            let cs = plan.col_sums();
+            for r in rs {
+                assert!((r - 1.0 / rows as f64).abs() < 1e-6);
+            }
+            for c in cs {
+                assert!((c - 1.0 / cols as f64).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_empty() {
+        let x = CootData::Dense(Mat::zeros(0, 0));
+        assert!(coot(&x, &x, &CootConfig::default(), GradientKind::Naive).is_err());
+    }
+}

@@ -1,0 +1,143 @@
+//! Metric-space descriptors for GW problems.
+
+use crate::error::{Error, Result};
+use crate::fgc::{sq_dist_apply_1d, sq_dist_apply_2d, Workspace2d};
+use crate::grid::{dense_dist_1d, dense_dist_2d, squared_dist_apply_dense, Binomial, Grid1d, Grid2d};
+use crate::linalg::Mat;
+
+/// One side of a GW problem: a support with its metric.
+///
+/// Grid variants carry the structure FGC exploits; `Dense` holds an
+/// arbitrary symmetric distance matrix (used by the baseline tests
+/// and by the free side of barycenter problems, which FGC cannot
+/// accelerate).
+#[derive(Clone, Debug)]
+pub enum Geometry {
+    /// 1D uniform grid with metric `h^k|i−j|^k` (paper eq. 2.2).
+    Grid1d {
+        /// The grid.
+        grid: Grid1d,
+        /// Distance exponent `k`.
+        k: u32,
+    },
+    /// 2D uniform grid with Manhattan metric `h^k(|Δr|+|Δc|)^k`
+    /// (paper eq. 3.10).
+    Grid2d {
+        /// The grid.
+        grid: Grid2d,
+        /// Distance exponent `k`.
+        k: u32,
+    },
+    /// Arbitrary dense symmetric distance matrix.
+    Dense(Mat),
+}
+
+impl Geometry {
+    /// 1D unit-interval grid (`x_i = (i−1)/(N−1)`, paper §4.1).
+    pub fn grid_1d_unit(n: usize, k: u32) -> Self {
+        Geometry::Grid1d {
+            grid: Grid1d::unit(n),
+            k,
+        }
+    }
+
+    /// 2D unit-square `n×n` grid (paper §4.2).
+    pub fn grid_2d_unit(n: usize, k: u32) -> Self {
+        Geometry::Grid2d {
+            grid: Grid2d::unit(n),
+            k,
+        }
+    }
+
+    /// 2D `n×n` grid with explicit spacing (the horse task uses
+    /// `h = 100/n`, §4.4.2).
+    pub fn grid_2d(n: usize, h: f64, k: u32) -> Self {
+        Geometry::Grid2d {
+            grid: Grid2d::new(n, h),
+            k,
+        }
+    }
+
+    /// Number of support points.
+    pub fn len(&self) -> usize {
+        match self {
+            Geometry::Grid1d { grid, .. } => grid.n,
+            Geometry::Grid2d { grid, .. } => grid.len(),
+            Geometry::Dense(d) => d.rows(),
+        }
+    }
+
+    /// True iff the support is empty.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// True iff FGC structure is available.
+    pub fn is_structured(&self) -> bool {
+        !matches!(self, Geometry::Dense(_))
+    }
+
+    /// Materialize the dense distance matrix (baseline path; `O(N²)`
+    /// memory).
+    pub fn dense(&self) -> Mat {
+        match self {
+            Geometry::Grid1d { grid, k } => dense_dist_1d(grid, *k),
+            Geometry::Grid2d { grid, k } => dense_dist_2d(grid, *k),
+            Geometry::Dense(d) => d.clone(),
+        }
+    }
+
+    /// `(D ⊙ D)·w` — squared-distance application for the constant
+    /// term `C₁`, FGC-accelerated on grids.
+    pub fn sq_apply(&self, w: &[f64]) -> Result<Vec<f64>> {
+        if w.len() != self.len() {
+            return Err(Error::shape(
+                "Geometry::sq_apply",
+                format!("{}", self.len()),
+                format!("{}", w.len()),
+            ));
+        }
+        match self {
+            Geometry::Grid1d { grid, k } => {
+                let binom = Binomial::new(2 * *k as usize);
+                sq_dist_apply_1d(grid, *k, w, &binom)
+            }
+            Geometry::Grid2d { grid, k } => {
+                let mut ws = Workspace2d::new(grid.n, 1, *k);
+                sq_dist_apply_2d(grid, *k, w, &mut ws)
+            }
+            Geometry::Dense(d) => Ok(squared_dist_apply_dense(d, w)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::Rng;
+    use crate::testutil::assert_slices_close;
+
+    #[test]
+    fn sq_apply_grid_matches_dense() {
+        let mut rng = Rng::seeded(17);
+        let g1 = Geometry::grid_1d_unit(20, 2);
+        let w = rng.uniform_vec(20);
+        let fast = g1.sq_apply(&w).unwrap();
+        let dense = Geometry::Dense(g1.dense()).sq_apply(&w).unwrap();
+        assert_slices_close(&fast, &dense, 1e-11, 1e-14, "1d");
+
+        let g2 = Geometry::grid_2d_unit(5, 1);
+        let w2 = rng.uniform_vec(25);
+        let fast2 = g2.sq_apply(&w2).unwrap();
+        let dense2 = Geometry::Dense(g2.dense()).sq_apply(&w2).unwrap();
+        assert_slices_close(&fast2, &dense2, 1e-11, 1e-14, "2d");
+    }
+
+    #[test]
+    fn lengths() {
+        assert_eq!(Geometry::grid_1d_unit(7, 1).len(), 7);
+        assert_eq!(Geometry::grid_2d_unit(4, 1).len(), 16);
+        assert!(Geometry::grid_1d_unit(7, 1).is_structured());
+        assert!(!Geometry::Dense(Mat::zeros(3, 3)).is_structured());
+    }
+}

@@ -1,0 +1,30 @@
+//! Entropic Gromov-Wasserstein solvers (paper §2) with the FGC fast
+//! gradient (§3) as a pluggable backend.
+//!
+//! * [`geometry`] — metric-space descriptors: 1D/2D uniform grids
+//!   (FGC-accelerated) or arbitrary dense distance matrices
+//!   (baseline / barycenter supports).
+//! * [`gradient`] — the `D_X Γ D_Y` product and the constant term
+//!   `C₁`, dispatching FGC vs dense per [`GradientKind`].
+//! * [`entropic`] — mirror-descent solver for GW and FGW
+//!   (`τ = ε`, Remark 2.1/2.2).
+//! * [`objective`] — GW/FGW energy evaluation in `O(N²)`.
+//! * [`ugw`] — unbalanced GW (Remark 2.3).
+//! * [`barycenter`] — fixed-support GW barycenters (conclusion §5),
+//!   FGC-accelerated on the structured side.
+
+pub mod barycenter;
+pub mod coot;
+pub mod entropic;
+pub mod geometry;
+pub mod gradient;
+pub mod objective;
+pub mod ugw;
+
+pub use barycenter::{gw_barycenter_1d, BarycenterConfig, BarycenterResult};
+pub use coot::{coot, CootConfig, CootData, CootSolution};
+pub use entropic::{EntropicGw, GwConfig, GwSolution};
+pub use geometry::Geometry;
+pub use gradient::{GradientKind, PairOperator};
+pub use objective::{fgw_objective, gw_objective};
+pub use ugw::{EntropicUgw, UgwConfig, UgwSolution};

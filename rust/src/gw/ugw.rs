@@ -1,0 +1,245 @@
+//! Unbalanced Gromov-Wasserstein (paper Remark 2.3; Séjourné,
+//! Vialard & Peyré 2021).
+//!
+//! UGW relaxes the marginal constraints with quadratic-KL penalties of
+//! strength ρ. The entropic algorithm alternates: from the current
+//! `Γ̂`, build the local cost `½∇E(Γ̂)` (FGC-accelerated — this is the
+//! term the paper's method applies to), solve an *unbalanced* entropic
+//! OT subproblem with effective parameters scaled by the current mass
+//! `m = 1ᵀΓ̂1`, and rescale so the mass evolves as in the bi-convex
+//! relaxation (`Γ ← Γ·√(m/mass(Γ))`).
+//!
+//! Structure follows the released UGW reference implementation; the
+//! exact `g(Γ̂)` KL-gradient offsets enter through the unbalanced
+//! scaling's `ρ`-powers. Deviations from the paper's one-line remark
+//! are documented in DESIGN.md §4.
+
+use super::geometry::Geometry;
+use super::gradient::{GradientKind, PairOperator};
+use super::objective::gw_objective;
+use crate::error::{Error, Result};
+use crate::linalg::{outer, Mat};
+use crate::sinkhorn::{sinkhorn_unbalanced, UnbalancedOptions};
+use std::time::{Duration, Instant};
+
+/// UGW solver configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct UgwConfig {
+    /// Entropic regularization ε.
+    pub epsilon: f64,
+    /// Marginal KL penalty ρ.
+    pub rho: f64,
+    /// Outer iterations.
+    pub outer_iters: usize,
+    /// Inner unbalanced-Sinkhorn cap.
+    pub inner_max_iters: usize,
+    /// Inner tolerance.
+    pub inner_tolerance: f64,
+}
+
+impl Default for UgwConfig {
+    fn default() -> Self {
+        UgwConfig {
+            epsilon: 1e-2,
+            rho: 1.0,
+            outer_iters: 10,
+            inner_max_iters: 1000,
+            inner_tolerance: 1e-10,
+        }
+    }
+}
+
+/// Result of a UGW solve.
+#[derive(Clone, Debug)]
+pub struct UgwSolution {
+    /// Final (generally non-probability) transport plan.
+    pub plan: Mat,
+    /// Quadratic GW energy of the final plan.
+    pub quadratic_energy: f64,
+    /// Total transported mass `1ᵀΓ1`.
+    pub mass: f64,
+    /// Outer iterations performed.
+    pub outer_iterations: usize,
+    /// Total wall time.
+    pub total_time: Duration,
+}
+
+/// Entropic UGW solver over a fixed geometry pair.
+#[derive(Clone, Debug)]
+pub struct EntropicUgw {
+    geom_x: Geometry,
+    geom_y: Geometry,
+    cfg: UgwConfig,
+}
+
+impl EntropicUgw {
+    /// Solver over arbitrary geometries.
+    pub fn new(geom_x: Geometry, geom_y: Geometry, cfg: UgwConfig) -> Self {
+        EntropicUgw {
+            geom_x,
+            geom_y,
+            cfg,
+        }
+    }
+
+    /// Solve from non-negative mass vectors `u`, `v` (need not be
+    /// probabilities).
+    pub fn solve(&self, u: &[f64], v: &[f64], kind: GradientKind) -> Result<UgwSolution> {
+        let t0 = Instant::now();
+        let (m, n) = (self.geom_x.len(), self.geom_y.len());
+        if u.len() != m || v.len() != n {
+            return Err(Error::shape(
+                "EntropicUgw::solve",
+                format!("{m} / {n}"),
+                format!("{} / {}", u.len(), v.len()),
+            ));
+        }
+        if u.iter().chain(v.iter()).any(|&x| x < 0.0 || !x.is_finite()) {
+            return Err(Error::Invalid("mass vectors must be non-negative".into()));
+        }
+        let mu: f64 = u.iter().sum();
+        let mv: f64 = v.iter().sum();
+        if mu <= 0.0 || mv <= 0.0 {
+            return Err(Error::Invalid("mass vectors must carry positive mass".into()));
+        }
+
+        let mut op = PairOperator::new(self.geom_x.clone(), self.geom_y.clone(), kind)?;
+        // Γ⁰ = u⊗v / √(m_u m_v) has mass √(m_u m_v), the UGW convention.
+        let mut gamma = outer(u, v);
+        let norm = (mu * mv).sqrt();
+        for x in gamma.as_mut_slice() {
+            *x /= norm;
+        }
+
+        let mut grad = Mat::zeros(m, n);
+        let mut cost = Mat::zeros(m, n);
+        for _ in 0..self.cfg.outer_iters {
+            let mass = gamma.total();
+            if mass <= 0.0 {
+                return Err(Error::Numeric("UGW plan collapsed to zero mass".into()));
+            }
+            // Local cost: ½∇E(Γ̂) with marginals taken from Γ̂ itself
+            // (unbalanced — Remark 2.3's gradient uses Γ̂1, Γ̂ᵀ1).
+            let gu = gamma.row_sums();
+            let gv = gamma.col_sums();
+            let (cx, cy) = op.c1_halves(&gu, &gv)?;
+            op.dxgdy(&gamma, &mut grad)?;
+            for i in 0..m {
+                let grow = grad.row(i);
+                let crow = cost.row_mut(i);
+                for p in 0..n {
+                    // ½·[2(cx+cy) − 4G] = cx + cy − 2G
+                    crow[p] = cx[i] + cy[p] - 2.0 * grow[p];
+                }
+            }
+            // Solve the mass-scaled unbalanced subproblem.
+            let opts = UnbalancedOptions {
+                epsilon: self.cfg.epsilon * mass,
+                rho: self.cfg.rho * mass,
+                max_iters: self.cfg.inner_max_iters,
+                tolerance: self.cfg.inner_tolerance,
+            };
+            let res = sinkhorn_unbalanced(&cost, u, v, &opts)?;
+            gamma = res.plan;
+            // Mass rescaling of the bi-convex scheme.
+            let new_mass = gamma.total();
+            if new_mass > 0.0 {
+                let s = (mass / new_mass).sqrt();
+                for x in gamma.as_mut_slice() {
+                    *x *= s;
+                }
+            }
+        }
+
+        let quadratic_energy = gw_objective(&mut op, &gamma)?;
+        Ok(UgwSolution {
+            mass: gamma.total(),
+            plan: gamma,
+            quadratic_energy,
+            outer_iterations: self.cfg.outer_iters,
+            total_time: t0.elapsed(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::normalize_l1;
+    use crate::prng::Rng;
+
+    fn dists(n: usize, seed: u64) -> (Vec<f64>, Vec<f64>) {
+        let mut rng = Rng::seeded(seed);
+        let mut u = rng.uniform_vec(n);
+        let mut v = rng.uniform_vec(n);
+        normalize_l1(&mut u).unwrap();
+        normalize_l1(&mut v).unwrap();
+        (u, v)
+    }
+
+    #[test]
+    fn fgc_and_naive_agree() {
+        let n = 20;
+        let (u, v) = dists(n, 31);
+        let solver = EntropicUgw::new(
+            Geometry::grid_1d_unit(n, 1),
+            Geometry::grid_1d_unit(n, 1),
+            UgwConfig {
+                epsilon: 0.05,
+                rho: 1.0,
+                outer_iters: 5,
+                inner_max_iters: 2000,
+                inner_tolerance: 1e-12,
+            },
+        );
+        let a = solver.solve(&u, &v, GradientKind::Fgc).unwrap();
+        let b = solver.solve(&u, &v, GradientKind::Naive).unwrap();
+        let d = crate::linalg::frobenius_diff(&a.plan, &b.plan).unwrap();
+        assert!(d < 1e-10, "diff={d}");
+    }
+
+    #[test]
+    fn large_rho_keeps_mass_near_one() {
+        let n = 16;
+        let (u, v) = dists(n, 8);
+        let solver = EntropicUgw::new(
+            Geometry::grid_1d_unit(n, 1),
+            Geometry::grid_1d_unit(n, 1),
+            UgwConfig {
+                epsilon: 0.05,
+                rho: 100.0,
+                outer_iters: 8,
+                ..UgwConfig::default()
+            },
+        );
+        let sol = solver.solve(&u, &v, GradientKind::Fgc).unwrap();
+        assert!((sol.mass - 1.0).abs() < 0.05, "mass={}", sol.mass);
+    }
+
+    #[test]
+    fn plan_nonnegative_and_finite() {
+        let n = 12;
+        let (u, v) = dists(n, 77);
+        let solver = EntropicUgw::new(
+            Geometry::grid_1d_unit(n, 2),
+            Geometry::grid_1d_unit(n, 2),
+            UgwConfig::default(),
+        );
+        let sol = solver.solve(&u, &v, GradientKind::Fgc).unwrap();
+        assert!(sol.plan.all_finite());
+        assert!(sol.plan.as_slice().iter().all(|&x| x >= 0.0));
+        assert!(sol.quadratic_energy.is_finite());
+    }
+
+    #[test]
+    fn rejects_negative_mass() {
+        let solver = EntropicUgw::new(
+            Geometry::grid_1d_unit(4, 1),
+            Geometry::grid_1d_unit(4, 1),
+            UgwConfig::default(),
+        );
+        let bad = vec![0.5, -0.1, 0.3, 0.3];
+        let ok = vec![0.25; 4];
+        assert!(solver.solve(&bad, &ok, GradientKind::Fgc).is_err());
+    }
+}

@@ -1,0 +1,62 @@
+//! # fgc-gw — Fast Gradient Computation for Gromov-Wasserstein distance
+//!
+//! Full-stack reproduction of *"Fast Gradient Computation for
+//! Gromov-Wasserstein Distance"* (Zhang, Wang, Fan, Wu, Zhang; 2024).
+//!
+//! The library is organised in three layers:
+//!
+//! * **Numeric core** ([`fgc`], [`sinkhorn`], [`gw`], [`grid`],
+//!   [`linalg`]) — the paper's contribution: the `O(k²N)` dynamic-
+//!   programming operator for `y = (L + Lᵀ)x` on uniform grids, the
+//!   resulting `O(N²)` gradient `D_X Γ D_Y`, and the entropic
+//!   mirror-descent solvers for GW / FGW / UGW plus fixed-support
+//!   barycenters. A dense `O(N³)` baseline (`fgc::naive`) mirrors the
+//!   paper's "Original" Eigen implementation for every experiment.
+//! * **Runtime** ([`runtime`]) — loads AOT-compiled JAX/Pallas
+//!   artifacts (HLO text produced by `python/compile/aot.py`) and
+//!   executes them on the PJRT CPU client via the `xla` crate. Python
+//!   never runs on the request path.
+//! * **Coordinator** ([`coordinator`]) — an alignment service: bounded
+//!   job queues with backpressure, a size/variant batcher, a router
+//!   that picks native-FGC / native-naive / PJRT backends per job, a
+//!   worker pool, and latency/throughput metrics.
+//!
+//! Supporting substrates built from scratch (the offline environment
+//! vendors only `xla` + `anyhow`): [`prng`] (SplitMix64/xoshiro256++),
+//! [`linalg`] (dense row-major matrices), [`config`] (key=value config
+//! files), [`cli`] (argument parsing), [`bench_util`] (timing +
+//! log-log complexity fits) and [`testutil`] (a miniature
+//! property-testing framework).
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use fgc_gw::gw::{EntropicGw, GwConfig, GradientKind};
+//! use fgc_gw::data::random_distribution;
+//! use fgc_gw::prng::Rng;
+//!
+//! let mut rng = Rng::seeded(7);
+//! let u = random_distribution(&mut rng, 500);
+//! let v = random_distribution(&mut rng, 500);
+//! let cfg = GwConfig { epsilon: 2e-3, ..GwConfig::default() };
+//! let solver = EntropicGw::grid_1d(500, 500, 1, cfg);
+//! let sol = solver.solve(&u, &v, GradientKind::Fgc).unwrap();
+//! println!("GW² = {}", sol.objective);
+//! ```
+
+pub mod bench_util;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod error;
+pub mod fgc;
+pub mod grid;
+pub mod gw;
+pub mod linalg;
+pub mod prng;
+pub mod runtime;
+pub mod sinkhorn;
+pub mod testutil;
+
+pub use error::{Error, Result};

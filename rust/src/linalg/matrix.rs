@@ -1,0 +1,353 @@
+//! Row-major dense matrix.
+
+use crate::error::{Error, Result};
+use std::fmt;
+use std::ops::{Index, IndexMut};
+
+/// Dense row-major `f64` matrix.
+///
+/// Row `i` occupies `data[i*cols .. (i+1)*cols]`; `row(i)` /
+/// `row_mut(i)` expose that slice so hot loops can stay on raw slices.
+#[derive(Clone, PartialEq)]
+pub struct Mat {
+    rows: usize,
+    cols: usize,
+    data: Vec<f64>,
+}
+
+impl Mat {
+    /// Zero matrix of the given shape.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    /// Matrix filled with a constant.
+    pub fn full(rows: usize, cols: usize, value: f64) -> Self {
+        Mat {
+            rows,
+            cols,
+            data: vec![value; rows * cols],
+        }
+    }
+
+    /// Identity matrix.
+    pub fn eye(n: usize) -> Self {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    /// Build from an existing row-major buffer.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Result<Self> {
+        if data.len() != rows * cols {
+            return Err(Error::shape(
+                "Mat::from_vec",
+                format!("{}x{}={} elems", rows, cols, rows * cols),
+                format!("{} elems", data.len()),
+            ));
+        }
+        Ok(Mat { rows, cols, data })
+    }
+
+    /// Build from a closure over `(i, j)`.
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f64) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        Mat { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// `(rows, cols)`.
+    #[inline]
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    /// Underlying row-major buffer.
+    #[inline]
+    pub fn as_slice(&self) -> &[f64] {
+        &self.data
+    }
+
+    /// Mutable underlying buffer.
+    #[inline]
+    pub fn as_mut_slice(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    /// Row `i` as a slice.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        debug_assert!(i < self.rows);
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Row `i` as a mutable slice.
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        debug_assert!(i < self.rows);
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Two distinct rows, mutably (used by in-place scans).
+    pub fn two_rows_mut(&mut self, i: usize, j: usize) -> (&mut [f64], &mut [f64]) {
+        assert!(i != j && i < self.rows && j < self.rows);
+        let c = self.cols;
+        if i < j {
+            let (a, b) = self.data.split_at_mut(j * c);
+            (&mut a[i * c..(i + 1) * c], &mut b[..c])
+        } else {
+            let (a, b) = self.data.split_at_mut(i * c);
+            (&mut b[..c], &mut a[j * c..(j + 1) * c])
+        }
+    }
+
+    /// Transposed copy.
+    pub fn transpose(&self) -> Mat {
+        let mut t = Mat::zeros(self.cols, self.rows);
+        // Blocked transpose for cache friendliness on large matrices.
+        const B: usize = 32;
+        for ib in (0..self.rows).step_by(B) {
+            for jb in (0..self.cols).step_by(B) {
+                let imax = (ib + B).min(self.rows);
+                let jmax = (jb + B).min(self.cols);
+                for i in ib..imax {
+                    for j in jb..jmax {
+                        t.data[j * self.rows + i] = self.data[i * self.cols + j];
+                    }
+                }
+            }
+        }
+        t
+    }
+
+    /// Column `j` copied into a fresh vector.
+    pub fn col(&self, j: usize) -> Vec<f64> {
+        (0..self.rows).map(|i| self[(i, j)]).collect()
+    }
+
+    /// Row sums (length `rows`).
+    pub fn row_sums(&self) -> Vec<f64> {
+        (0..self.rows).map(|i| self.row(i).iter().sum()).collect()
+    }
+
+    /// Column sums (length `cols`).
+    pub fn col_sums(&self) -> Vec<f64> {
+        let mut s = vec![0.0; self.cols];
+        for i in 0..self.rows {
+            for (sj, &x) in s.iter_mut().zip(self.row(i)) {
+                *sj += x;
+            }
+        }
+        s
+    }
+
+    /// Sum of all entries.
+    pub fn total(&self) -> f64 {
+        self.data.iter().sum()
+    }
+
+    /// Minimum entry (NaN-propagating min would poison; we assert finite in debug).
+    pub fn min(&self) -> f64 {
+        self.data.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    /// Maximum entry.
+    pub fn max(&self) -> f64 {
+        self.data.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    /// True iff every entry is finite.
+    pub fn all_finite(&self) -> bool {
+        self.data.iter().all(|x| x.is_finite())
+    }
+
+    /// Elementwise map into a new matrix.
+    pub fn map(&self, f: impl Fn(f64) -> f64) -> Mat {
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|&x| f(x)).collect(),
+        }
+    }
+
+    /// Elementwise in-place map.
+    pub fn map_in_place(&mut self, f: impl Fn(f64) -> f64) {
+        for x in &mut self.data {
+            *x = f(*x);
+        }
+    }
+
+    /// `self += alpha * other` (shape-checked).
+    pub fn add_scaled(&mut self, alpha: f64, other: &Mat) -> Result<()> {
+        if self.shape() != other.shape() {
+            return Err(Error::shape(
+                "Mat::add_scaled",
+                format!("{:?}", self.shape()),
+                format!("{:?}", other.shape()),
+            ));
+        }
+        for (a, &b) in self.data.iter_mut().zip(&other.data) {
+            *a += alpha * b;
+        }
+        Ok(())
+    }
+
+    /// Elementwise product into a new matrix.
+    pub fn hadamard(&self, other: &Mat) -> Result<Mat> {
+        if self.shape() != other.shape() {
+            return Err(Error::shape(
+                "Mat::hadamard",
+                format!("{:?}", self.shape()),
+                format!("{:?}", other.shape()),
+            ));
+        }
+        let data = self
+            .data
+            .iter()
+            .zip(&other.data)
+            .map(|(&a, &b)| a * b)
+            .collect();
+        Ok(Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data,
+        })
+    }
+
+    /// Frobenius inner product `⟨self, other⟩`.
+    pub fn inner(&self, other: &Mat) -> Result<f64> {
+        if self.shape() != other.shape() {
+            return Err(Error::shape(
+                "Mat::inner",
+                format!("{:?}", self.shape()),
+                format!("{:?}", other.shape()),
+            ));
+        }
+        Ok(self
+            .data
+            .iter()
+            .zip(&other.data)
+            .map(|(&a, &b)| a * b)
+            .sum())
+    }
+}
+
+impl Index<(usize, usize)> for Mat {
+    type Output = f64;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl IndexMut<(usize, usize)> for Mat {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+impl fmt::Debug for Mat {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "Mat {}x{} [", self.rows, self.cols)?;
+        let show_rows = self.rows.min(6);
+        for i in 0..show_rows {
+            let row = self.row(i);
+            let shown: Vec<String> = row.iter().take(8).map(|x| format!("{x:.4}")).collect();
+            let ell = if self.cols > 8 { ", …" } else { "" };
+            writeln!(f, "  [{}{}]", shown.join(", "), ell)?;
+        }
+        if self.rows > show_rows {
+            writeln!(f, "  …")?;
+        }
+        write!(f, "]")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_indexing() {
+        let m = Mat::from_fn(3, 4, |i, j| (i * 10 + j) as f64);
+        assert_eq!(m.shape(), (3, 4));
+        assert_eq!(m[(2, 3)], 23.0);
+        assert_eq!(m.row(1), &[10.0, 11.0, 12.0, 13.0]);
+    }
+
+    #[test]
+    fn from_vec_shape_check() {
+        assert!(Mat::from_vec(2, 2, vec![1.0; 3]).is_err());
+        assert!(Mat::from_vec(2, 2, vec![1.0; 4]).is_ok());
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let m = Mat::from_fn(37, 53, |i, j| (i * 53 + j) as f64);
+        let t = m.transpose();
+        assert_eq!(t.shape(), (53, 37));
+        assert_eq!(t.transpose(), m);
+        assert_eq!(t[(5, 7)], m[(7, 5)]);
+    }
+
+    #[test]
+    fn sums() {
+        let m = Mat::from_fn(3, 2, |i, j| (i + j) as f64);
+        assert_eq!(m.row_sums(), vec![1.0, 3.0, 5.0]);
+        assert_eq!(m.col_sums(), vec![3.0, 6.0]);
+        assert_eq!(m.total(), 9.0);
+    }
+
+    #[test]
+    fn two_rows_mut_disjoint() {
+        let mut m = Mat::from_fn(4, 3, |i, _| i as f64);
+        {
+            let (a, b) = m.two_rows_mut(3, 1);
+            a[0] = 99.0;
+            b[0] = -1.0;
+        }
+        assert_eq!(m[(3, 0)], 99.0);
+        assert_eq!(m[(1, 0)], -1.0);
+    }
+
+    #[test]
+    fn hadamard_inner() {
+        let a = Mat::from_fn(2, 2, |i, j| (i + j + 1) as f64);
+        let b = Mat::eye(2);
+        let h = a.hadamard(&b).unwrap();
+        assert_eq!(h[(0, 0)], 1.0);
+        assert_eq!(h[(0, 1)], 0.0);
+        assert_eq!(a.inner(&b).unwrap(), 1.0 + 3.0);
+    }
+
+    #[test]
+    fn minmax_finite() {
+        let m = Mat::from_fn(2, 3, |i, j| i as f64 - j as f64);
+        assert_eq!(m.min(), -2.0);
+        assert_eq!(m.max(), 1.0);
+        assert!(m.all_finite());
+    }
+}

@@ -1,0 +1,17 @@
+//! Dense linear-algebra substrate.
+//!
+//! The offline environment has no `ndarray`/`nalgebra`, so the stack is
+//! built on this small row-major `f64` matrix type plus the vector
+//! kernels the solvers need. Everything is deliberately simple and
+//! allocation-explicit; the hot paths (FGC scans, Sinkhorn matvecs)
+//! live in [`crate::fgc`] and [`crate::sinkhorn`] and operate on raw
+//! slices for speed.
+
+mod matrix;
+mod ops;
+
+pub use matrix::Mat;
+pub use ops::{
+    axpy, dot, frobenius_diff, frobenius_norm, l1_norm, linf_diff, matmul, matvec, matvec_t,
+    normalize_l1, outer, scale_in_place, sum,
+};

@@ -1,0 +1,238 @@
+//! Vector and matrix kernels used by the solvers.
+
+use super::Mat;
+use crate::error::{Error, Result};
+
+/// Dot product.
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    // 4-way unrolled accumulation: keeps the FP pipes busy without
+    // changing results enough to matter (commutative reassociation).
+    let n = a.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
+    for c in 0..chunks {
+        let i = c * 4;
+        s0 += a[i] * b[i];
+        s1 += a[i + 1] * b[i + 1];
+        s2 += a[i + 2] * b[i + 2];
+        s3 += a[i + 3] * b[i + 3];
+    }
+    let mut s = s0 + s1 + s2 + s3;
+    for i in chunks * 4..n {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// `y += alpha * x`.
+#[inline]
+pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, &xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+/// Sum of entries.
+#[inline]
+pub fn sum(x: &[f64]) -> f64 {
+    x.iter().sum()
+}
+
+/// `x *= alpha` in place.
+#[inline]
+pub fn scale_in_place(x: &mut [f64], alpha: f64) {
+    for xi in x {
+        *xi *= alpha;
+    }
+}
+
+/// L1 norm.
+pub fn l1_norm(x: &[f64]) -> f64 {
+    x.iter().map(|v| v.abs()).sum()
+}
+
+/// Normalize a non-negative vector to sum 1 (in place). Errors on a
+/// zero-sum vector.
+pub fn normalize_l1(x: &mut [f64]) -> Result<()> {
+    let s = sum(x);
+    if s <= 0.0 || !s.is_finite() {
+        return Err(Error::Invalid(format!("normalize_l1: sum={s}")));
+    }
+    scale_in_place(x, 1.0 / s);
+    Ok(())
+}
+
+/// Dense matmul `C = A·B` (row-major, ikj loop order).
+pub fn matmul(a: &Mat, b: &Mat) -> Result<Mat> {
+    if a.cols() != b.rows() {
+        return Err(Error::shape(
+            "matmul",
+            format!("inner dims equal ({})", a.cols()),
+            format!("{}", b.rows()),
+        ));
+    }
+    let (m, k, n) = (a.rows(), a.cols(), b.cols());
+    let mut c = Mat::zeros(m, n);
+    for i in 0..m {
+        let arow = a.row(i);
+        let crow = c.row_mut(i);
+        for (p, &aip) in arow.iter().enumerate().take(k) {
+            if aip == 0.0 {
+                continue;
+            }
+            axpy(aip, b.row(p), crow);
+        }
+    }
+    Ok(c)
+}
+
+/// Dense matvec `y = A·x`.
+pub fn matvec(a: &Mat, x: &[f64]) -> Result<Vec<f64>> {
+    if a.cols() != x.len() {
+        return Err(Error::shape(
+            "matvec",
+            format!("{} cols", a.cols()),
+            format!("{} elems", x.len()),
+        ));
+    }
+    Ok((0..a.rows()).map(|i| dot(a.row(i), x)).collect())
+}
+
+/// Dense transposed matvec `y = Aᵀ·x`.
+pub fn matvec_t(a: &Mat, x: &[f64]) -> Result<Vec<f64>> {
+    if a.rows() != x.len() {
+        return Err(Error::shape(
+            "matvec_t",
+            format!("{} rows", a.rows()),
+            format!("{} elems", x.len()),
+        ));
+    }
+    let mut y = vec![0.0; a.cols()];
+    for (i, &xi) in x.iter().enumerate() {
+        if xi != 0.0 {
+            axpy(xi, a.row(i), &mut y);
+        }
+    }
+    Ok(y)
+}
+
+/// Outer product `u·vᵀ`.
+pub fn outer(u: &[f64], v: &[f64]) -> Mat {
+    Mat::from_fn(u.len(), v.len(), |i, j| u[i] * v[j])
+}
+
+/// Frobenius norm of a matrix.
+pub fn frobenius_norm(a: &Mat) -> f64 {
+    a.as_slice().iter().map(|x| x * x).sum::<f64>().sqrt()
+}
+
+/// `‖A − B‖_F` — the paper's plan-difference column.
+pub fn frobenius_diff(a: &Mat, b: &Mat) -> Result<f64> {
+    if a.shape() != b.shape() {
+        return Err(Error::shape(
+            "frobenius_diff",
+            format!("{:?}", a.shape()),
+            format!("{:?}", b.shape()),
+        ));
+    }
+    Ok(a.as_slice()
+        .iter()
+        .zip(b.as_slice())
+        .map(|(&x, &y)| (x - y) * (x - y))
+        .sum::<f64>()
+        .sqrt())
+}
+
+/// `‖A − B‖_∞` (max absolute entry difference).
+pub fn linf_diff(a: &Mat, b: &Mat) -> Result<f64> {
+    if a.shape() != b.shape() {
+        return Err(Error::shape(
+            "linf_diff",
+            format!("{:?}", a.shape()),
+            format!("{:?}", b.shape()),
+        ));
+    }
+    Ok(a.as_slice()
+        .iter()
+        .zip(b.as_slice())
+        .map(|(&x, &y)| (x - y).abs())
+        .fold(0.0, f64::max))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dot_matches_naive() {
+        let a: Vec<f64> = (0..17).map(|i| i as f64).collect();
+        let b: Vec<f64> = (0..17).map(|i| (i * i) as f64 * 0.25).collect();
+        let naive: f64 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+        assert!((dot(&a, &b) - naive).abs() < 1e-12 * naive.abs());
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let a = Mat::from_fn(4, 4, |i, j| (i * 4 + j) as f64);
+        let c = matmul(&a, &Mat::eye(4)).unwrap();
+        assert_eq!(c, a);
+        let c2 = matmul(&Mat::eye(4), &a).unwrap();
+        assert_eq!(c2, a);
+    }
+
+    #[test]
+    fn matmul_known() {
+        let a = Mat::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]).unwrap();
+        let b = Mat::from_vec(3, 2, vec![7., 8., 9., 10., 11., 12.]).unwrap();
+        let c = matmul(&a, &b).unwrap();
+        assert_eq!(c.as_slice(), &[58., 64., 139., 154.]);
+    }
+
+    #[test]
+    fn matvec_and_transpose_agree() {
+        let a = Mat::from_fn(5, 3, |i, j| (i + 2 * j) as f64);
+        let x = vec![1.0, -1.0, 2.0];
+        let y = matvec(&a, &x).unwrap();
+        let at = a.transpose();
+        let y2 = matvec_t(&at, &x).unwrap();
+        for (p, q) in y.iter().zip(&y2) {
+            assert!((p - q).abs() < 1e-14);
+        }
+    }
+
+    #[test]
+    fn shape_errors() {
+        let a = Mat::zeros(2, 3);
+        let b = Mat::zeros(2, 3);
+        assert!(matmul(&a, &b).is_err());
+        assert!(matvec(&a, &[1.0, 2.0]).is_err());
+    }
+
+    #[test]
+    fn frobenius() {
+        let a = Mat::from_vec(1, 2, vec![3.0, 4.0]).unwrap();
+        assert!((frobenius_norm(&a) - 5.0).abs() < 1e-15);
+        let b = Mat::zeros(1, 2);
+        assert!((frobenius_diff(&a, &b).unwrap() - 5.0).abs() < 1e-15);
+        assert!((linf_diff(&a, &b).unwrap() - 4.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn normalize() {
+        let mut x = vec![1.0, 3.0];
+        normalize_l1(&mut x).unwrap();
+        assert!((x[0] - 0.25).abs() < 1e-15);
+        let mut z = vec![0.0, 0.0];
+        assert!(normalize_l1(&mut z).is_err());
+    }
+
+    #[test]
+    fn outer_product() {
+        let m = outer(&[1.0, 2.0], &[3.0, 4.0, 5.0]);
+        assert_eq!(m.shape(), (2, 3));
+        assert_eq!(m[(1, 2)], 10.0);
+    }
+}

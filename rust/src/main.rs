@@ -1,0 +1,200 @@
+//! `fgc-gw` — launcher for the FGC-GW alignment stack.
+//!
+//! ```text
+//! fgc-gw solve  --n 500 [--k 1] [--eps 0.002] [--backend fgc|naive] [--seed 7]
+//! fgc-gw solve2d --side 20 [--eps 0.004] …
+//! fgc-gw serve  --jobs 32 [--workers 2] [--pjrt] [--config path]
+//! fgc-gw bary   --inputs 3 --n 40
+//! fgc-gw info   [--artifacts artifacts]
+//! ```
+
+use fgc_gw::cli::Args;
+use fgc_gw::config::Config;
+use fgc_gw::coordinator::{Coordinator, CoordinatorConfig, JobPayload, RoutingPolicy};
+use fgc_gw::data::random_distribution;
+use fgc_gw::gw::{
+    gw_barycenter_1d, BarycenterConfig, EntropicGw, GradientKind, GwConfig,
+    barycenter::BaryInput1d,
+};
+use fgc_gw::prng::Rng;
+use fgc_gw::runtime::ArtifactRegistry;
+use std::path::PathBuf;
+use std::time::Duration;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> fgc_gw::Result<()> {
+    let args = Args::from_env()?;
+    match args.command.as_deref() {
+        Some("solve") => cmd_solve(&args),
+        Some("solve2d") => cmd_solve_2d(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("bary") => cmd_bary(&args),
+        Some("info") => cmd_info(&args),
+        _ => {
+            print_usage();
+            Ok(())
+        }
+    }
+}
+
+fn print_usage() {
+    println!(
+        "fgc-gw — Fast Gradient Computation for Gromov-Wasserstein\n\
+         commands:\n\
+         \x20 solve    1D GW between random distributions (--n, --k, --eps, --backend, --seed)\n\
+         \x20 solve2d  2D GW on an n×n grid (--side, --k, --eps, --backend, --seed)\n\
+         \x20 serve    run the coordinator on a synthetic workload (--jobs, --workers, --pjrt)\n\
+         \x20 bary     1D GW barycenter demo (--inputs, --n)\n\
+         \x20 info     platform + artifact registry summary (--artifacts DIR)"
+    );
+}
+
+fn backend(args: &Args) -> fgc_gw::Result<GradientKind> {
+    match args.get("backend").unwrap_or("fgc") {
+        "fgc" => Ok(GradientKind::Fgc),
+        "naive" => Ok(GradientKind::Naive),
+        other => Err(fgc_gw::Error::Config(format!("unknown backend `{other}`"))),
+    }
+}
+
+fn cmd_solve(args: &Args) -> fgc_gw::Result<()> {
+    let n = args.get_or("n", 500usize)?;
+    let k = args.get_or("k", 1u32)?;
+    let eps = args.get_or("eps", 2e-3)?;
+    let seed = args.get_or("seed", 7u64)?;
+    let kind = backend(args)?;
+    let mut rng = Rng::seeded(seed);
+    let u = random_distribution(&mut rng, n);
+    let v = random_distribution(&mut rng, n);
+    let solver = EntropicGw::grid_1d(n, n, k, GwConfig { epsilon: eps, ..GwConfig::default() });
+    let sol = solver.solve(&u, &v, kind)?;
+    println!(
+        "GW²={:.6e}  N={n} k={k} ε={eps} backend={kind}\n\
+         time: total={:?} gradient={:?} sinkhorn={:?} ({} inner sweeps)",
+        sol.objective, sol.total_time, sol.gradient_time, sol.sinkhorn_time,
+        sol.sinkhorn_iterations
+    );
+    Ok(())
+}
+
+fn cmd_solve_2d(args: &Args) -> fgc_gw::Result<()> {
+    let side = args.get_or("side", 20usize)?;
+    let k = args.get_or("k", 1u32)?;
+    let eps = args.get_or("eps", 4e-3)?;
+    let seed = args.get_or("seed", 7u64)?;
+    let kind = backend(args)?;
+    let mut rng = Rng::seeded(seed);
+    let u = fgc_gw::data::random_distribution_2d(&mut rng, side);
+    let v = fgc_gw::data::random_distribution_2d(&mut rng, side);
+    let solver = EntropicGw::grid_2d(side, side, k, GwConfig { epsilon: eps, ..GwConfig::default() });
+    let sol = solver.solve(&u, &v, kind)?;
+    println!(
+        "GW²={:.6e}  N={side}×{side} k={k} ε={eps} backend={kind}  time={:?}",
+        sol.objective, sol.total_time
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> fgc_gw::Result<()> {
+    let mut cfg = CoordinatorConfig::default();
+    if let Some(path) = args.get("config") {
+        let file = Config::load(&PathBuf::from(path))?;
+        cfg.native_workers = file.get_or("service.native_workers", cfg.native_workers)?;
+        cfg.queue_capacity = file.get_or("service.queue_capacity", cfg.queue_capacity)?;
+        cfg.batch_max = file.get_or("service.batch_max", cfg.batch_max)?;
+        cfg.enable_pjrt = file.get_bool_or("service.enable_pjrt", cfg.enable_pjrt)?;
+        cfg.outer_iters = file.get_or("solver.outer_iters", cfg.outer_iters)?;
+        cfg.sinkhorn_max_iters = file.get_or("solver.sinkhorn_max_iters", cfg.sinkhorn_max_iters)?;
+    }
+    cfg.native_workers = args.get_or("workers", cfg.native_workers)?;
+    cfg.enable_pjrt = cfg.enable_pjrt || args.has_flag("pjrt");
+    cfg.artifacts_dir = PathBuf::from(args.get("artifacts").unwrap_or("artifacts"));
+    cfg.submit_timeout = Duration::from_millis(args.get_or("submit-timeout-ms", 500u64)?);
+    if args.has_flag("baseline") {
+        cfg.policy = RoutingPolicy::BaselineOnly;
+    }
+
+    let jobs = args.get_or("jobs", 32usize)?;
+    let n = args.get_or("n", 128usize)?;
+    let eps = args.get_or("eps", 2e-3)?;
+    let seed = args.get_or("seed", 11u64)?;
+
+    println!("starting coordinator: {cfg:?}");
+    let coord = Coordinator::start(cfg)?;
+    let mut rng = Rng::seeded(seed);
+    let t0 = std::time::Instant::now();
+    let rxs: Vec<_> = (0..jobs)
+        .map(|_| {
+            let payload = JobPayload::Gw1d {
+                u: random_distribution(&mut rng, n),
+                v: random_distribution(&mut rng, n),
+                k: 1,
+                epsilon: eps,
+            };
+            coord.submit(payload).map(|(_, rx)| rx)
+        })
+        .collect::<fgc_gw::Result<_>>()?;
+    let mut ok = 0;
+    for rx in rxs {
+        let res = rx.recv().map_err(|_| fgc_gw::Error::Runtime("lost worker".into()))?;
+        if res.objective.is_ok() {
+            ok += 1;
+        }
+    }
+    let wall = t0.elapsed();
+    println!("{}", coord.metrics());
+    println!(
+        "completed {ok}/{jobs} jobs in {wall:?} → throughput {:.2} jobs/s",
+        jobs as f64 / wall.as_secs_f64()
+    );
+    coord.shutdown();
+    Ok(())
+}
+
+fn cmd_bary(args: &Args) -> fgc_gw::Result<()> {
+    let n_inputs = args.get_or("inputs", 3usize)?;
+    let n = args.get_or("n", 40usize)?;
+    let seed = args.get_or("seed", 5u64)?;
+    let inputs: Vec<BaryInput1d> = (0..n_inputs)
+        .map(|i| {
+            let mut rng = Rng::seeded(seed + i as u64);
+            BaryInput1d {
+                weights: random_distribution(&mut rng, n),
+                n,
+                k: 1,
+                lambda: 1.0,
+            }
+        })
+        .collect();
+    let res = gw_barycenter_1d(&inputs, n, &BarycenterConfig::default(), GradientKind::Fgc)?;
+    println!(
+        "barycenter over {n_inputs} inputs on {n} points: iterations={} max distance entry={:.4}",
+        res.iterations,
+        res.distance.max()
+    );
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> fgc_gw::Result<()> {
+    let dir = PathBuf::from(args.get("artifacts").unwrap_or("artifacts"));
+    let reg = ArtifactRegistry::load(&dir)?;
+    println!("artifact registry: {} ({} artifacts)", dir.display(), reg.len());
+    for s in reg.specs() {
+        println!(
+            "  {:<20} {:?} n={} k={} ε={} outer={} inner={} {}",
+            s.name, s.kind, s.n, s.k, s.epsilon, s.outer, s.inner,
+            if s.is_fgc { "[fgc]" } else { "[naive]" }
+        );
+    }
+    if args.has_flag("pjrt") {
+        let ex = fgc_gw::runtime::Executor::cpu()?;
+        println!("PJRT platform: {}", ex.platform());
+    }
+    Ok(())
+}

@@ -1,0 +1,191 @@
+//! Artifact registry: parses `artifacts/manifest.txt` emitted by
+//! `python/compile/aot.py`.
+//!
+//! Manifest line format (space-separated):
+//! `name kind n k epsilon outer inner num_inputs file`.
+
+use crate::error::{Error, Result};
+use std::path::{Path, PathBuf};
+
+/// What an artifact computes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ArtifactKind {
+    /// Full 1D GW solve: `(u, v) → (plan, objective)`.
+    Gw1dSolve,
+    /// Full 1D FGW solve: `(u, v, C) → (plan, objective)`.
+    Fgw1dSolve,
+    /// One 1D mirror-descent step: `(u, v, Γ) → (Γ',)`.
+    Gw1dStep,
+    /// Full 2D GW solve over an `n×n` grid.
+    Gw2dSolve,
+}
+
+impl ArtifactKind {
+    fn parse(s: &str) -> Result<Self> {
+        match s {
+            "gw1d_solve" => Ok(ArtifactKind::Gw1dSolve),
+            "fgw1d_solve" => Ok(ArtifactKind::Fgw1dSolve),
+            "gw1d_step" => Ok(ArtifactKind::Gw1dStep),
+            "gw2d_solve" => Ok(ArtifactKind::Gw2dSolve),
+            other => Err(Error::Config(format!("unknown artifact kind `{other}`"))),
+        }
+    }
+}
+
+/// One compiled-solver artifact.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    /// Unique artifact name (e.g. `gw1d_fgc_n128`).
+    pub name: String,
+    /// Computation kind.
+    pub kind: ArtifactKind,
+    /// Grid size (1D: point count; 2D: side length).
+    pub n: usize,
+    /// Distance exponent baked into the artifact.
+    pub k: u32,
+    /// Entropic ε baked in.
+    pub epsilon: f64,
+    /// Outer mirror-descent iterations baked in.
+    pub outer: usize,
+    /// Inner Sinkhorn sweeps baked in.
+    pub inner: usize,
+    /// Number of runtime inputs.
+    pub num_inputs: usize,
+    /// HLO text file (absolute).
+    pub path: PathBuf,
+    /// True iff the artifact embeds the FGC gradient path.
+    pub is_fgc: bool,
+}
+
+/// All artifacts found in a directory.
+#[derive(Clone, Debug, Default)]
+pub struct ArtifactRegistry {
+    specs: Vec<ArtifactSpec>,
+}
+
+impl ArtifactRegistry {
+    /// Parse `<dir>/manifest.txt`. Missing manifest ⇒ empty registry
+    /// (the coordinator then runs native-only).
+    pub fn load(dir: &Path) -> Result<Self> {
+        let manifest = dir.join("manifest.txt");
+        if !manifest.exists() {
+            return Ok(ArtifactRegistry::default());
+        }
+        let text = std::fs::read_to_string(&manifest)
+            .map_err(|e| Error::Io(format!("reading {}", manifest.display()), e))?;
+        let mut specs = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let f: Vec<&str> = line.split_whitespace().collect();
+            if f.len() != 9 {
+                return Err(Error::Config(format!(
+                    "manifest line {}: expected 9 fields, got {}",
+                    lineno + 1,
+                    f.len()
+                )));
+            }
+            let parse_err = |what: &str| Error::Config(format!("manifest line {}: bad {what}", lineno + 1));
+            specs.push(ArtifactSpec {
+                name: f[0].to_string(),
+                kind: ArtifactKind::parse(f[1])?,
+                n: f[2].parse().map_err(|_| parse_err("n"))?,
+                k: f[3].parse().map_err(|_| parse_err("k"))?,
+                epsilon: f[4].parse().map_err(|_| parse_err("epsilon"))?,
+                outer: f[5].parse().map_err(|_| parse_err("outer"))?,
+                inner: f[6].parse().map_err(|_| parse_err("inner"))?,
+                num_inputs: f[7].parse().map_err(|_| parse_err("num_inputs"))?,
+                path: dir.join(f[8]),
+                is_fgc: !f[0].contains("naive"),
+            });
+        }
+        Ok(ArtifactRegistry { specs })
+    }
+
+    /// All specs.
+    pub fn specs(&self) -> &[ArtifactSpec] {
+        &self.specs
+    }
+
+    /// Number of artifacts.
+    pub fn len(&self) -> usize {
+        self.specs.len()
+    }
+
+    /// True iff no artifacts are registered.
+    pub fn is_empty(&self) -> bool {
+        self.specs.is_empty()
+    }
+
+    /// Find by exact name.
+    pub fn by_name(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.specs.iter().find(|s| s.name == name)
+    }
+
+    /// Find an FGC artifact matching `(kind, n)` — the router's
+    /// shape-dispatch lookup.
+    pub fn find(&self, kind: ArtifactKind, n: usize) -> Option<&ArtifactSpec> {
+        self.specs
+            .iter()
+            .find(|s| s.kind == kind && s.n == n && s.is_fgc)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path, content: &str) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("manifest.txt"), content).unwrap();
+    }
+
+    #[test]
+    fn parses_valid_manifest() {
+        let dir = std::env::temp_dir().join("fgcgw_manifest_ok");
+        write_manifest(
+            &dir,
+            "gw1d_fgc_n64 gw1d_solve 64 1 0.002 10 100 2 gw1d_fgc_n64.hlo.txt\n\
+             gw1d_naive_n64 gw1d_solve 64 1 0.002 10 100 2 gw1d_naive_n64.hlo.txt\n",
+        );
+        let reg = ArtifactRegistry::load(&dir).unwrap();
+        assert_eq!(reg.len(), 2);
+        let s = reg.find(ArtifactKind::Gw1dSolve, 64).unwrap();
+        assert_eq!(s.name, "gw1d_fgc_n64");
+        assert!(s.is_fgc);
+        assert!(reg.by_name("gw1d_naive_n64").map(|s| !s.is_fgc).unwrap());
+        assert!(reg.find(ArtifactKind::Gw1dSolve, 128).is_none());
+    }
+
+    #[test]
+    fn missing_manifest_is_empty() {
+        let dir = std::env::temp_dir().join("fgcgw_manifest_none");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let reg = ArtifactRegistry::load(&dir).unwrap();
+        assert!(reg.is_empty());
+    }
+
+    #[test]
+    fn malformed_line_rejected() {
+        let dir = std::env::temp_dir().join("fgcgw_manifest_bad");
+        write_manifest(&dir, "short line\n");
+        assert!(ArtifactRegistry::load(&dir).is_err());
+        write_manifest(&dir, "x badkind 64 1 0.002 10 100 2 f.hlo.txt\n");
+        assert!(ArtifactRegistry::load(&dir).is_err());
+    }
+
+    #[test]
+    fn comments_and_blanks_skipped() {
+        let dir = std::env::temp_dir().join("fgcgw_manifest_comments");
+        write_manifest(
+            &dir,
+            "# comment\n\ngw2d_fgc_n8 gw2d_solve 8 1 0.004 10 100 2 g.hlo.txt\n",
+        );
+        let reg = ArtifactRegistry::load(&dir).unwrap();
+        assert_eq!(reg.len(), 1);
+        assert_eq!(reg.specs()[0].kind, ArtifactKind::Gw2dSolve);
+    }
+}

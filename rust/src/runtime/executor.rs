@@ -1,0 +1,231 @@
+//! PJRT executor: compiles HLO-text artifacts on the CPU client and
+//! runs them with `f64 → f32` marshalling (artifacts are lowered at
+//! f32; see DESIGN.md).
+//!
+//! Follows `/opt/xla-example/load_hlo/`: `HloModuleProto::from_text_file`
+//! → `XlaComputation::from_proto` → `client.compile` → `execute`. The
+//! text interchange sidesteps the 64-bit-instruction-id proto
+//! incompatibility between jax ≥ 0.5 and xla_extension 0.5.1.
+
+use super::artifact::{ArtifactKind, ArtifactSpec};
+use crate::error::{Error, Result};
+use crate::linalg::Mat;
+use std::collections::HashMap;
+
+/// Output of a full-solve artifact.
+#[derive(Clone, Debug)]
+pub struct SolveOutput {
+    /// Transport plan (`N×N`).
+    pub plan: Mat,
+    /// Objective value.
+    pub objective: f64,
+}
+
+/// Owns the PJRT client and a cache of compiled executables.
+///
+/// One `Executor` per thread: the underlying client is not `Sync`, so
+/// the coordinator gives its PJRT worker thread exclusive ownership.
+pub struct Executor {
+    client: xla::PjRtClient,
+    compiled: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Executor {
+    /// Create over the PJRT CPU client.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| Error::Runtime(format!("PjRtClient::cpu: {e}")))?;
+        Ok(Executor {
+            client,
+            compiled: HashMap::new(),
+        })
+    }
+
+    /// Platform string (e.g. `cpu`).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Number of artifacts compiled so far.
+    pub fn compiled_count(&self) -> usize {
+        self.compiled.len()
+    }
+
+    /// Compile (and cache) an artifact.
+    pub fn load(&mut self, spec: &ArtifactSpec) -> Result<()> {
+        if self.compiled.contains_key(&spec.name) {
+            return Ok(());
+        }
+        let path = spec.path.to_str().ok_or_else(|| {
+            Error::Runtime(format!("non-utf8 artifact path {:?}", spec.path))
+        })?;
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(|e| Error::Runtime(format!("parse {}: {e}", spec.name)))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| Error::Runtime(format!("compile {}: {e}", spec.name)))?;
+        self.compiled.insert(spec.name.clone(), exe);
+        Ok(())
+    }
+
+    /// Run a full-solve artifact (`Gw1dSolve` / `Gw2dSolve`): inputs
+    /// `(u, v)`, output `(plan, objective)`.
+    pub fn run_gw_solve(&mut self, spec: &ArtifactSpec, u: &[f64], v: &[f64]) -> Result<SolveOutput> {
+        let n_points = self.expect_points(spec, &[ArtifactKind::Gw1dSolve, ArtifactKind::Gw2dSolve])?;
+        if u.len() != n_points || v.len() != n_points {
+            return Err(Error::shape(
+                "run_gw_solve",
+                format!("{n_points}"),
+                format!("{}/{}", u.len(), v.len()),
+            ));
+        }
+        self.load(spec)?;
+        let lu = vec_literal(u);
+        let lv = vec_literal(v);
+        let out = self.execute(&spec.name, &[lu, lv])?;
+        let (plan_lit, obj_lit) = out
+            .to_tuple2()
+            .map_err(|e| Error::Runtime(format!("{}: expected 2-tuple: {e}", spec.name)))?;
+        let plan = literal_to_mat(&plan_lit, n_points, n_points)?;
+        let obj = literal_scalar(&obj_lit)?;
+        Ok(SolveOutput {
+            plan,
+            objective: obj,
+        })
+    }
+
+    /// Run an FGW solve artifact: inputs `(u, v, C)`.
+    pub fn run_fgw_solve(
+        &mut self,
+        spec: &ArtifactSpec,
+        u: &[f64],
+        v: &[f64],
+        feature_cost: &Mat,
+    ) -> Result<SolveOutput> {
+        let n_points = self.expect_points(spec, &[ArtifactKind::Fgw1dSolve])?;
+        if u.len() != n_points || v.len() != n_points || feature_cost.shape() != (n_points, n_points) {
+            return Err(Error::shape(
+                "run_fgw_solve",
+                format!("{n_points}"),
+                format!("{}/{}/{:?}", u.len(), v.len(), feature_cost.shape()),
+            ));
+        }
+        self.load(spec)?;
+        let lu = vec_literal(u);
+        let lv = vec_literal(v);
+        let lc = mat_literal(feature_cost)?;
+        let out = self.execute(&spec.name, &[lu, lv, lc])?;
+        let (plan_lit, obj_lit) = out
+            .to_tuple2()
+            .map_err(|e| Error::Runtime(format!("{}: expected 2-tuple: {e}", spec.name)))?;
+        Ok(SolveOutput {
+            plan: literal_to_mat(&plan_lit, n_points, n_points)?,
+            objective: literal_scalar(&obj_lit)?,
+        })
+    }
+
+    /// Run a single mirror-descent step artifact: `(u, v, Γ) → Γ'`.
+    pub fn run_gw_step(
+        &mut self,
+        spec: &ArtifactSpec,
+        u: &[f64],
+        v: &[f64],
+        gamma: &Mat,
+    ) -> Result<Mat> {
+        let n_points = self.expect_points(spec, &[ArtifactKind::Gw1dStep])?;
+        self.load(spec)?;
+        let out = self.execute(&spec.name, &[vec_literal(u), vec_literal(v), mat_literal(gamma)?])?;
+        let plan_lit = out
+            .to_tuple1()
+            .map_err(|e| Error::Runtime(format!("{}: expected 1-tuple: {e}", spec.name)))?;
+        literal_to_mat(&plan_lit, n_points, n_points)
+    }
+
+    /// Drive a compiled single-step artifact to convergence: iterate
+    /// `Γ ← step(u, v, Γ)` until the plan moves less than `tol` in
+    /// L∞ or `max_steps` is hit. This is the L3-owned convergence
+    /// control the step artifacts exist for — the compiled module
+    /// stays small and the coordinator decides when to stop.
+    pub fn run_gw_to_convergence(
+        &mut self,
+        spec: &ArtifactSpec,
+        u: &[f64],
+        v: &[f64],
+        tol: f64,
+        max_steps: usize,
+    ) -> Result<(Mat, usize)> {
+        let mut gamma = crate::linalg::outer(u, v);
+        for step in 1..=max_steps {
+            let next = self.run_gw_step(spec, u, v, &gamma)?;
+            let delta = crate::linalg::linf_diff(&next, &gamma)?;
+            gamma = next;
+            if delta < tol {
+                return Ok((gamma, step));
+            }
+        }
+        Ok((gamma, max_steps))
+    }
+
+    fn expect_points(&self, spec: &ArtifactSpec, kinds: &[ArtifactKind]) -> Result<usize> {
+        if !kinds.contains(&spec.kind) {
+            return Err(Error::Invalid(format!(
+                "artifact {} has kind {:?}, expected one of {kinds:?}",
+                spec.name, spec.kind
+            )));
+        }
+        Ok(match spec.kind {
+            ArtifactKind::Gw2dSolve => spec.n * spec.n,
+            _ => spec.n,
+        })
+    }
+
+    fn execute(&mut self, name: &str, inputs: &[xla::Literal]) -> Result<xla::Literal> {
+        let exe = self
+            .compiled
+            .get(name)
+            .ok_or_else(|| Error::ArtifactNotFound(name.to_string()))?;
+        let bufs = exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| Error::Runtime(format!("execute {name}: {e}")))?;
+        bufs[0][0]
+            .to_literal_sync()
+            .map_err(|e| Error::Runtime(format!("fetch {name}: {e}")))
+    }
+}
+
+fn vec_literal(x: &[f64]) -> xla::Literal {
+    let f32s: Vec<f32> = x.iter().map(|&v| v as f32).collect();
+    xla::Literal::vec1(&f32s)
+}
+
+fn mat_literal(m: &Mat) -> Result<xla::Literal> {
+    let f32s: Vec<f32> = m.as_slice().iter().map(|&v| v as f32).collect();
+    xla::Literal::vec1(&f32s)
+        .reshape(&[m.rows() as i64, m.cols() as i64])
+        .map_err(|e| Error::Runtime(format!("reshape literal: {e}")))
+}
+
+fn literal_to_mat(lit: &xla::Literal, rows: usize, cols: usize) -> Result<Mat> {
+    let vals: Vec<f32> = lit
+        .to_vec()
+        .map_err(|e| Error::Runtime(format!("literal to_vec: {e}")))?;
+    if vals.len() != rows * cols {
+        return Err(Error::shape(
+            "literal_to_mat",
+            format!("{}", rows * cols),
+            format!("{}", vals.len()),
+        ));
+    }
+    Mat::from_vec(rows, cols, vals.into_iter().map(|v| v as f64).collect())
+}
+
+fn literal_scalar(lit: &xla::Literal) -> Result<f64> {
+    let vals: Vec<f32> = lit
+        .to_vec()
+        .map_err(|e| Error::Runtime(format!("literal to_vec: {e}")))?;
+    vals.first()
+        .map(|&v| v as f64)
+        .ok_or_else(|| Error::Runtime("empty scalar literal".into()))
+}

@@ -1,0 +1,9 @@
+//! PJRT runtime — loads and executes the AOT-compiled JAX/Pallas
+//! artifacts from `artifacts/` (HLO text; see `python/compile/aot.py`
+//! and DESIGN.md §2/L2). Python never runs on this path.
+
+mod artifact;
+mod executor;
+
+pub use artifact::{ArtifactKind, ArtifactRegistry, ArtifactSpec};
+pub use executor::{Executor, SolveOutput};

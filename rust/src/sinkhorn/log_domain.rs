@@ -1,0 +1,180 @@
+//! Log-domain (stabilized) Sinkhorn.
+//!
+//! Works on scaled dual potentials `φ = f/ε`, `ψ = g/ε` against the
+//! scaled cost `S = Π/ε`:
+//!
+//! ```text
+//! φ_i ← log u_i − LSE_j (ψ_j − S_ij)
+//! ψ_j ← log v_j − LSE_i (φ_i − S_ij)
+//! Γ_ij = exp(φ_i + ψ_j − S_ij)
+//! ```
+//!
+//! Every log-sum-exp is max-shifted, so arbitrarily small ε (the
+//! paper's 0.002 with O(1) costs ⇒ exponents ≈ −1000) cannot
+//! under/overflow. Zero-mass marginal entries map to `φ = −∞`, which
+//! correctly zeroes the corresponding plan row/column.
+
+use super::{marginal_violation, validate, SinkhornOptions, SinkhornResult};
+use crate::error::{Error, Result};
+use crate::linalg::Mat;
+
+/// Balanced Sinkhorn with log-domain stabilization.
+pub fn sinkhorn_log(
+    cost: &Mat,
+    u: &[f64],
+    v: &[f64],
+    opts: &SinkhornOptions,
+) -> Result<SinkhornResult> {
+    validate(cost, u, v, opts)?;
+    let (m, n) = cost.shape();
+    let inv_eps = 1.0 / opts.epsilon;
+    let s = cost.map(|c| c * inv_eps);
+    let st = s.transpose();
+
+    let log_u: Vec<f64> = u.iter().map(|&x| x.ln()).collect(); // ln 0 = −inf is fine
+    let log_v: Vec<f64> = v.iter().map(|&x| x.ln()).collect();
+    let mut phi = vec![0.0f64; m];
+    let mut psi = vec![0.0f64; n];
+
+    let mut iterations = 0;
+    for it in 0..opts.max_iters {
+        iterations = it + 1;
+        // φ update: rows of S are contiguous.
+        for i in 0..m {
+            phi[i] = log_u[i] - lse_shifted(&psi, s.row(i));
+        }
+        // ψ update: rows of Sᵀ are contiguous.
+        for j in 0..n {
+            psi[j] = log_v[j] - lse_shifted(&phi, st.row(j));
+        }
+        if it % opts.check_every == opts.check_every - 1 {
+            // Row-marginal violation: after the ψ update columns are
+            // exact; rows drift by the same mechanism as Gibbs.
+            let mut err = 0.0;
+            for i in 0..m {
+                let row_mass = sum_exp_row(phi[i], &psi, s.row(i));
+                err += (row_mass - u[i]).abs();
+            }
+            if err < opts.tolerance {
+                break;
+            }
+        }
+    }
+
+    let plan = build_plan(&phi, &psi, &s);
+    if !plan.all_finite() {
+        return Err(Error::Numeric("log sinkhorn produced non-finite plan".into()));
+    }
+    let marginal_error = marginal_violation(&plan, u, v);
+    Ok(SinkhornResult {
+        plan,
+        iterations,
+        marginal_error,
+    })
+}
+
+/// `log Σ_j exp(w_j − s_j)` with max-shift; returns −∞ on empty /
+/// all −∞ input (handled by the caller via `ln u = −∞` semantics).
+#[inline]
+fn lse_shifted(w: &[f64], s_row: &[f64]) -> f64 {
+    debug_assert_eq!(w.len(), s_row.len());
+    let mut mx = f64::NEG_INFINITY;
+    for (wj, sj) in w.iter().zip(s_row) {
+        let t = wj - sj;
+        if t > mx {
+            mx = t;
+        }
+    }
+    if mx == f64::NEG_INFINITY {
+        return f64::NEG_INFINITY;
+    }
+    let mut acc = 0.0;
+    for (wj, sj) in w.iter().zip(s_row) {
+        acc += (wj - sj - mx).exp();
+    }
+    mx + acc.ln()
+}
+
+/// `Σ_j exp(φᵢ + ψ_j − S_ij)` — one plan-row mass without
+/// materializing the plan.
+#[inline]
+fn sum_exp_row(phi_i: f64, psi: &[f64], s_row: &[f64]) -> f64 {
+    let mut acc = 0.0;
+    for (pj, sj) in psi.iter().zip(s_row) {
+        acc += (phi_i + pj - sj).exp();
+    }
+    acc
+}
+
+fn build_plan(phi: &[f64], psi: &[f64], s: &Mat) -> Mat {
+    let (m, n) = s.shape();
+    Mat::from_fn(m, n, |i, j| (phi[i] + psi[j] - s[(i, j)]).exp())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sinkhorn::test_support::random_problem;
+
+    #[test]
+    fn extreme_epsilon_stays_finite() {
+        let (cost, u, v) = random_problem(25, 18, 12);
+        let opts = SinkhornOptions {
+            epsilon: 5e-4, // range/ε ≈ 2·10³ — far past Gibbs viability
+            max_iters: 30000,
+            tolerance: 1e-9,
+            check_every: 50,
+        };
+        let r = sinkhorn_log(&cost, &u, &v, &opts).unwrap();
+        assert!(r.plan.all_finite());
+        assert!(r.marginal_error < 1e-6, "err={}", r.marginal_error);
+    }
+
+    #[test]
+    fn tiny_epsilon_approaches_monge_map_mass() {
+        // With ε → 0 on a 1D-convex cost the plan concentrates: max
+        // entry per row should carry almost all of that row's mass.
+        let n = 12;
+        let cost = Mat::from_fn(n, n, |i, j| {
+            let d = i as f64 - j as f64;
+            d * d / (n * n) as f64
+        });
+        let u = vec![1.0 / n as f64; n];
+        let v = vec![1.0 / n as f64; n];
+        let opts = SinkhornOptions {
+            epsilon: 1e-5,
+            max_iters: 20000,
+            tolerance: 1e-12,
+            check_every: 50,
+        };
+        let r = sinkhorn_log(&cost, &u, &v, &opts).unwrap();
+        for i in 0..n {
+            let row_max = r.plan.row(i).iter().cloned().fold(0.0, f64::max);
+            assert!(
+                row_max > 0.95 / n as f64,
+                "row {i} not concentrated: max={row_max}"
+            );
+        }
+    }
+
+    #[test]
+    fn zero_mass_marginal_entry_zeroes_row() {
+        let (cost, mut u, v) = random_problem(6, 6, 9);
+        u[2] = 0.0;
+        crate::linalg::normalize_l1(&mut u).unwrap();
+        let mut v2 = v.clone();
+        crate::linalg::normalize_l1(&mut v2).unwrap();
+        let opts = SinkhornOptions {
+            epsilon: 0.01,
+            max_iters: 5000,
+            tolerance: 1e-11,
+            check_every: 10,
+        };
+        let r = sinkhorn_log(&cost, &u, &v2, &opts).unwrap();
+        let _ = v;
+        for j in 0..6 {
+            assert_eq!(r.plan[(2, j)], 0.0);
+        }
+        assert!(r.marginal_error < 1e-7);
+    }
+}

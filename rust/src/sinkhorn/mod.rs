@@ -1,0 +1,241 @@
+//! Sinkhorn solvers for the entropic-OT subproblem (paper §2.1).
+//!
+//! Each mirror-descent iteration solves
+//! `argmin_{Γ∈S(u,v)} ⟨Π, Γ⟩ + ε H(Γ)`, whose solution is
+//! `Γ = diag(a) K diag(b)`, `K = exp(−Π/ε)`, with `a, b` fixed by the
+//! marginals — computed by Sinkhorn matrix scaling in `O(MN)` per
+//! sweep.
+//!
+//! Two numeric regimes:
+//! * [`sinkhorn_gibbs`] — scaling in the exponential domain with the
+//!   global min shifted out (absorbed into `a`; fast, adequate while
+//!   `range(Π)/ε ≲ 680`).
+//! * [`sinkhorn_log`] — stabilized dual potentials with streaming
+//!   log-sum-exp (handles the paper's `ε = 0.002` settings, where raw
+//!   Gibbs kernels underflow f64).
+//!
+//! [`sinkhorn_unbalanced`] implements the KL-relaxed scaling used by
+//! UGW (Remark 2.3). The dispatching entry point [`solve`] picks
+//! Gibbs/log automatically; FGC and the dense baseline always share
+//! the same Sinkhorn path, so plan differences isolate the gradient
+//! computation.
+
+mod gibbs;
+mod log_domain;
+mod unbalanced;
+
+pub use gibbs::sinkhorn_gibbs;
+pub use log_domain::sinkhorn_log;
+pub use unbalanced::{sinkhorn_unbalanced, UnbalancedOptions};
+
+use crate::error::{Error, Result};
+use crate::linalg::Mat;
+
+/// Options shared by the Sinkhorn variants.
+#[derive(Clone, Copy, Debug)]
+pub struct SinkhornOptions {
+    /// Entropic regularization ε.
+    pub epsilon: f64,
+    /// Maximum scaling sweeps.
+    pub max_iters: usize,
+    /// L1 marginal-violation tolerance for early stopping.
+    pub tolerance: f64,
+    /// Check the stopping criterion every `check_every` sweeps
+    /// (the check itself costs an extra `O(MN)` pass).
+    pub check_every: usize,
+}
+
+impl Default for SinkhornOptions {
+    fn default() -> Self {
+        SinkhornOptions {
+            epsilon: 1e-2,
+            max_iters: 2000,
+            tolerance: 1e-9,
+            check_every: 10,
+        }
+    }
+}
+
+/// Outcome of a Sinkhorn solve.
+#[derive(Clone, Debug)]
+pub struct SinkhornResult {
+    /// The transport plan `Γ = diag(a) K diag(b)`.
+    pub plan: Mat,
+    /// Sweeps actually performed.
+    pub iterations: usize,
+    /// Final L1 marginal violation.
+    pub marginal_error: f64,
+}
+
+/// Which numeric regime a cost matrix needs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Regime {
+    /// Exponential-domain scaling is safe.
+    Gibbs,
+    /// Log-domain stabilization required.
+    Log,
+}
+
+/// Decide the regime. Individual Gibbs-kernel entries may underflow
+/// harmlessly (they represent genuinely negligible couplings); the
+/// scaling only breaks when an entire *row or column* of
+/// `K = exp(−(Π − min Π)/ε)` flushes to zero. The relevant exponent
+/// is therefore the worst row/column *gap* `min_row(Π) − min(Π)`, not
+/// the full range — this is what lets the paper's ε = 0.002 settings
+/// run in the fast exponential domain.
+pub fn pick_regime(cost: &Mat, epsilon: f64) -> Regime {
+    let (m, n) = cost.shape();
+    let global_min = cost.min();
+    let mut worst_row_gap: f64 = 0.0;
+    let mut col_min = vec![f64::INFINITY; n];
+    for i in 0..m {
+        let row = cost.row(i);
+        let mut rmin = f64::INFINITY;
+        for (j, &x) in row.iter().enumerate() {
+            if x < rmin {
+                rmin = x;
+            }
+            if x < col_min[j] {
+                col_min[j] = x;
+            }
+        }
+        worst_row_gap = worst_row_gap.max(rmin - global_min);
+    }
+    let worst_col_gap = col_min
+        .iter()
+        .map(|&c| c - global_min)
+        .fold(0.0f64, f64::max);
+    // e^−600 ≈ 2e−261 leaves ~47 decades of headroom above the f64
+    // subnormal floor for the scaling products.
+    if worst_row_gap.max(worst_col_gap) / epsilon > 600.0 {
+        Regime::Log
+    } else {
+        Regime::Gibbs
+    }
+}
+
+/// Solve the entropic-OT subproblem, dispatching on [`pick_regime`];
+/// if the Gibbs path underflows anyway (adversarial cost structure),
+/// retry once in the log domain rather than failing the solve.
+pub fn solve(cost: &Mat, u: &[f64], v: &[f64], opts: &SinkhornOptions) -> Result<SinkhornResult> {
+    validate(cost, u, v, opts)?;
+    match pick_regime(cost, opts.epsilon) {
+        Regime::Gibbs => match sinkhorn_gibbs(cost, u, v, opts) {
+            Err(Error::Numeric(_)) => sinkhorn_log(cost, u, v, opts),
+            other => other,
+        },
+        Regime::Log => sinkhorn_log(cost, u, v, opts),
+    }
+}
+
+pub(crate) fn validate(cost: &Mat, u: &[f64], v: &[f64], opts: &SinkhornOptions) -> Result<()> {
+    if cost.rows() != u.len() || cost.cols() != v.len() {
+        return Err(Error::shape(
+            "sinkhorn",
+            format!("{}x{}", u.len(), v.len()),
+            format!("{:?}", cost.shape()),
+        ));
+    }
+    if opts.epsilon <= 0.0 {
+        return Err(Error::Invalid(format!(
+            "epsilon must be > 0, got {}",
+            opts.epsilon
+        )));
+    }
+    if u.iter().any(|&x| x < 0.0) || v.iter().any(|&x| x < 0.0) {
+        return Err(Error::Invalid("marginals must be non-negative".into()));
+    }
+    if !cost.all_finite() {
+        return Err(Error::Numeric(
+            "cost matrix contains non-finite entries".into(),
+        ));
+    }
+    Ok(())
+}
+
+/// L1 distance between the plan's row/col marginals and `(u, v)` —
+/// the invariant every balanced solver must drive to ~0.
+pub fn marginal_violation(plan: &Mat, u: &[f64], v: &[f64]) -> f64 {
+    let r = plan.row_sums();
+    let c = plan.col_sums();
+    let eu: f64 = r.iter().zip(u).map(|(&a, &b)| (a - b).abs()).sum();
+    let ev: f64 = c.iter().zip(v).map(|(&a, &b)| (a - b).abs()).sum();
+    eu + ev
+}
+
+#[cfg(test)]
+pub(crate) mod test_support {
+    use super::*;
+    use crate::linalg::normalize_l1;
+    use crate::prng::Rng;
+
+    pub fn random_problem(m: usize, n: usize, seed: u64) -> (Mat, Vec<f64>, Vec<f64>) {
+        let mut rng = Rng::seeded(seed);
+        let cost = Mat::from_fn(m, n, |_, _| rng.uniform());
+        let mut u = rng.uniform_vec(m);
+        let mut v = rng.uniform_vec(n);
+        normalize_l1(&mut u).unwrap();
+        normalize_l1(&mut v).unwrap();
+        (cost, u, v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::test_support::random_problem;
+    use super::*;
+
+    #[test]
+    fn dispatch_matches_between_regimes() {
+        // On a well-conditioned problem Gibbs and log-domain must agree.
+        let (cost, u, v) = random_problem(20, 25, 5);
+        let opts = SinkhornOptions {
+            epsilon: 0.05,
+            max_iters: 5000,
+            tolerance: 1e-12,
+            check_every: 5,
+        };
+        let g = sinkhorn_gibbs(&cost, &u, &v, &opts).unwrap();
+        let l = sinkhorn_log(&cost, &u, &v, &opts).unwrap();
+        let diff = crate::linalg::frobenius_diff(&g.plan, &l.plan).unwrap();
+        assert!(diff < 1e-8, "gibbs vs log diff = {diff}");
+    }
+
+    #[test]
+    fn regime_picker() {
+        let cost = Mat::from_fn(4, 4, |i, j| (i + j) as f64); // range 6
+        assert_eq!(pick_regime(&cost, 1.0), Regime::Gibbs);
+        assert_eq!(pick_regime(&cost, 0.001), Regime::Log);
+    }
+
+    #[test]
+    fn solve_tiny_epsilon_is_stable() {
+        // The paper's ε=0.002 regime: dispatch must route to log-domain
+        // and produce finite plans with correct marginals.
+        let (cost, u, v) = random_problem(30, 30, 11);
+        let opts = SinkhornOptions {
+            epsilon: 0.002,
+            max_iters: 20000,
+            tolerance: 1e-10,
+            check_every: 20,
+        };
+        let r = solve(&cost, &u, &v, &opts).unwrap();
+        assert!(r.plan.all_finite());
+        assert!(marginal_violation(&r.plan, &u, &v) < 1e-7);
+    }
+
+    #[test]
+    fn validation_rejects_bad_inputs() {
+        let (cost, u, v) = random_problem(4, 5, 1);
+        let opts = SinkhornOptions {
+            epsilon: 0.0,
+            ..SinkhornOptions::default()
+        };
+        assert!(solve(&cost, &u, &v, &opts).is_err());
+        let opts = SinkhornOptions::default();
+        assert!(solve(&cost, &u[..3], &v, &opts).is_err());
+        let mut un = u.clone();
+        un[0] = -0.1;
+        assert!(solve(&cost, &un, &v, &opts).is_err());
+    }
+}

@@ -1,0 +1,189 @@
+//! Unbalanced Sinkhorn scaling (Chizat et al. 2018), the inner solver
+//! for UGW (paper Remark 2.3).
+//!
+//! Solves `min_Γ ⟨C, Γ⟩ + ε KL(Γ | u⊗v) + ρ KL(Γ1 | u) + ρ KL(Γᵀ1 | v)`
+//! by the fixed-point iteration on scalings of `K_ij = u_i v_j e^{−C_ij/ε}`:
+//!
+//! ```text
+//! a ← (u ⊘ K b)^{ρ/(ρ+ε)} ,   b ← (v ⊘ Kᵀ a)^{ρ/(ρ+ε)} .
+//! ```
+//!
+//! Unlike the balanced case the marginals are only *pulled toward*
+//! `(u, v)` with strength `ρ`; mass is created/destroyed as the KL
+//! penalties allow. `ρ → ∞` recovers balanced Sinkhorn.
+
+use super::SinkhornResult;
+use crate::error::{Error, Result};
+use crate::linalg::Mat;
+
+/// Options for the unbalanced scaling loop.
+#[derive(Clone, Copy, Debug)]
+pub struct UnbalancedOptions {
+    /// Entropic regularization ε.
+    pub epsilon: f64,
+    /// Marginal KL penalty ρ.
+    pub rho: f64,
+    /// Maximum sweeps.
+    pub max_iters: usize,
+    /// Early-stop when the scaling vectors move less than this (L∞ on log a).
+    pub tolerance: f64,
+}
+
+impl Default for UnbalancedOptions {
+    fn default() -> Self {
+        UnbalancedOptions {
+            epsilon: 1e-2,
+            rho: 1.0,
+            max_iters: 2000,
+            tolerance: 1e-10,
+        }
+    }
+}
+
+/// Unbalanced entropic scaling. `u`, `v` are arbitrary non-negative
+/// mass vectors (not necessarily probabilities).
+pub fn sinkhorn_unbalanced(
+    cost: &Mat,
+    u: &[f64],
+    v: &[f64],
+    opts: &UnbalancedOptions,
+) -> Result<SinkhornResult> {
+    let (m, n) = cost.shape();
+    if u.len() != m || v.len() != n {
+        return Err(Error::shape(
+            "sinkhorn_unbalanced",
+            format!("{}x{}", u.len(), v.len()),
+            format!("{m}x{n}"),
+        ));
+    }
+    if opts.epsilon <= 0.0 || opts.rho <= 0.0 {
+        return Err(Error::Invalid(format!(
+            "epsilon and rho must be > 0 (got ε={}, ρ={})",
+            opts.epsilon, opts.rho
+        )));
+    }
+    // NOTE: unlike balanced Sinkhorn, a global cost shift is NOT
+    // neutral here — the absolute cost level decides how much mass the
+    // KL penalties let the plan shed. Use the raw Gibbs kernel; the
+    // caller picks ε large enough that exp(−max(C)/ε) stays normal.
+    let inv_eps = 1.0 / opts.epsilon;
+    // Reference measure u⊗v folded into K.
+    let mut k = cost.map(|c| (-c * inv_eps).exp());
+    for i in 0..m {
+        let row = k.row_mut(i);
+        for (j, x) in row.iter_mut().enumerate() {
+            *x *= u[i] * v[j];
+        }
+    }
+    let kt = k.transpose();
+
+    let fe = opts.rho / (opts.rho + opts.epsilon);
+    let mut a = vec![1.0f64; m];
+    let mut b = vec![1.0f64; n];
+    let mut kb = vec![0.0f64; m];
+    let mut kta = vec![0.0f64; n];
+
+    let mut iterations = 0;
+    for it in 0..opts.max_iters {
+        iterations = it + 1;
+        let mut delta = 0.0f64;
+        for (i, o) in kb.iter_mut().enumerate() {
+            *o = crate::linalg::dot(k.row(i), &b);
+        }
+        for i in 0..m {
+            let new = if kb[i] > 0.0 { (u[i] / kb[i]).powf(fe) } else { 0.0 };
+            delta = delta.max((new.max(1e-300).ln() - a[i].max(1e-300).ln()).abs());
+            a[i] = new;
+        }
+        for (j, o) in kta.iter_mut().enumerate() {
+            *o = crate::linalg::dot(kt.row(j), &a);
+        }
+        for j in 0..n {
+            b[j] = if kta[j] > 0.0 { (v[j] / kta[j]).powf(fe) } else { 0.0 };
+        }
+        if delta < opts.tolerance {
+            break;
+        }
+    }
+
+    let plan = Mat::from_fn(m, n, |i, j| a[i] * k[(i, j)] * b[j]);
+    if !plan.all_finite() {
+        return Err(Error::Numeric("unbalanced sinkhorn produced non-finite plan".into()));
+    }
+    let marginal_error = super::marginal_violation(&plan, u, v);
+    Ok(SinkhornResult {
+        plan,
+        iterations,
+        marginal_error,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sinkhorn::test_support::random_problem;
+    use crate::sinkhorn::{sinkhorn_gibbs, SinkhornOptions};
+
+    #[test]
+    fn large_rho_recovers_balanced() {
+        let (cost, u, v) = random_problem(12, 14, 21);
+        let ub = sinkhorn_unbalanced(
+            &cost,
+            &u,
+            &v,
+            &UnbalancedOptions {
+                epsilon: 0.05,
+                rho: 1e5,
+                max_iters: 20000,
+                tolerance: 1e-13,
+            },
+        )
+        .unwrap();
+        let bal = sinkhorn_gibbs(
+            &cost,
+            &u,
+            &v,
+            &SinkhornOptions {
+                epsilon: 0.05,
+                max_iters: 20000,
+                tolerance: 1e-13,
+                check_every: 10,
+            },
+        )
+        .unwrap();
+        let diff = crate::linalg::frobenius_diff(&ub.plan, &bal.plan).unwrap();
+        assert!(diff < 1e-3, "diff={diff}");
+    }
+
+    #[test]
+    fn small_rho_sheds_mass_under_expensive_cost() {
+        // With an expensive uniform cost and weak marginal pull the
+        // optimal plan transports less than the full mass.
+        let m = 6;
+        let cost = Mat::full(m, m, 5.0);
+        let u = vec![1.0 / m as f64; m];
+        let v = vec![1.0 / m as f64; m];
+        let r = sinkhorn_unbalanced(
+            &cost,
+            &u,
+            &v,
+            &UnbalancedOptions {
+                epsilon: 0.05,
+                rho: 0.1,
+                max_iters: 5000,
+                tolerance: 1e-12,
+            },
+        )
+        .unwrap();
+        assert!(r.plan.total() < 0.5, "mass={}", r.plan.total());
+        assert!(r.plan.total() > 0.0);
+    }
+
+    #[test]
+    fn rejects_bad_params() {
+        let (cost, u, v) = random_problem(4, 4, 2);
+        let mut o = UnbalancedOptions::default();
+        o.rho = 0.0;
+        assert!(sinkhorn_unbalanced(&cost, &u, &v, &o).is_err());
+    }
+}

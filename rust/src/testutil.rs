@@ -1,0 +1,91 @@
+//! Miniature property-testing framework.
+//!
+//! `proptest` is not in the offline crate set, so this module provides
+//! the pieces the test suites need: a seeded case runner with failure
+//! reporting, and approximate-equality helpers used across the
+//! numeric tests.
+
+use crate::prng::Rng;
+
+/// Run `cases` randomized property checks. `generate` draws a case
+/// from the seeded RNG; `property` returns `Err(description)` on
+/// violation. Panics (test failure) with the case number, seed and
+/// description so the exact failing case can be replayed.
+pub fn check_prop<T: std::fmt::Debug>(
+    name: &str,
+    cases: usize,
+    seed: u64,
+    mut generate: impl FnMut(&mut Rng) -> T,
+    mut property: impl FnMut(&T) -> Result<(), String>,
+) {
+    let mut rng = Rng::seeded(seed);
+    for case in 0..cases {
+        let input = generate(&mut rng);
+        if let Err(msg) = property(&input) {
+            panic!(
+                "property `{name}` failed on case {case} (seed {seed}): {msg}\ninput: {input:?}"
+            );
+        }
+    }
+}
+
+/// Absolute-or-relative closeness: `|a−b| ≤ atol + rtol·max(|a|,|b|)`.
+pub fn close(a: f64, b: f64, rtol: f64, atol: f64) -> bool {
+    let diff = (a - b).abs();
+    diff <= atol + rtol * a.abs().max(b.abs())
+}
+
+/// Assert two slices are elementwise close; reports the worst index.
+pub fn assert_slices_close(a: &[f64], b: &[f64], rtol: f64, atol: f64, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length mismatch");
+    let mut worst = (0usize, 0.0f64);
+    for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+        let d = (x - y).abs();
+        if d > worst.1 {
+            worst = (i, d);
+        }
+        assert!(
+            close(x, y, rtol, atol),
+            "{what}: index {i}: {x} vs {y} (|Δ|={d:.3e}); worst so far idx {} |Δ|={:.3e}",
+            worst.0,
+            worst.1
+        );
+    }
+}
+
+/// Max elementwise absolute difference between two slices.
+pub fn max_abs_diff(a: &[f64], b: &[f64]) -> f64 {
+    a.iter()
+        .zip(b)
+        .map(|(&x, &y)| (x - y).abs())
+        .fold(0.0, f64::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn close_semantics() {
+        assert!(close(1.0, 1.0 + 1e-13, 1e-12, 0.0));
+        assert!(!close(1.0, 1.1, 1e-12, 0.0));
+        assert!(close(0.0, 1e-15, 0.0, 1e-14));
+    }
+
+    #[test]
+    fn prop_runner_passes() {
+        check_prop("sum-commutes", 50, 1, |r| (r.uniform(), r.uniform()), |&(a, b)| {
+            if (a + b - (b + a)).abs() < 1e-15 {
+                Ok(())
+            } else {
+                Err("not commutative".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property `always-fails` failed")]
+    fn prop_runner_reports_failure() {
+        check_prop("always-fails", 5, 2, |r| r.uniform(), |_| Err("nope".into()));
+    }
+}

@@ -1,0 +1,171 @@
+//! Integration: PJRT runtime executes the AOT artifacts and agrees
+//! with the native Rust solver.
+//!
+//! Requires `make artifacts` to have run (skips cleanly otherwise so
+//! `cargo test` works on a fresh checkout).
+
+use fgc_gw::coordinator::{Coordinator, CoordinatorConfig, JobPayload, RoutingPolicy};
+use fgc_gw::data::random_distribution;
+use fgc_gw::gw::{EntropicGw, GradientKind, GwConfig};
+use fgc_gw::prng::Rng;
+use fgc_gw::runtime::{ArtifactKind, ArtifactRegistry, Executor};
+use std::path::{Path, PathBuf};
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.txt").exists().then_some(dir)
+}
+
+#[test]
+fn gw1d_artifact_matches_native_solver() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: no artifacts (run `make artifacts`)");
+        return;
+    };
+    let reg = ArtifactRegistry::load(&dir).unwrap();
+    let Some(spec) = reg.find(ArtifactKind::Gw1dSolve, 64) else {
+        eprintln!("skipping: no gw1d n=64 artifact");
+        return;
+    };
+    let mut ex = Executor::cpu().unwrap();
+    let mut rng = Rng::seeded(77);
+    let n = 64;
+    let u = random_distribution(&mut rng, n);
+    let v = random_distribution(&mut rng, n);
+    let out = ex.run_gw_solve(spec, &u, &v).unwrap();
+    assert_eq!(out.plan.shape(), (n, n));
+    assert!(out.plan.all_finite());
+    assert!(out.objective.is_finite());
+
+    // Native solve with the artifact's baked-in hyperparameters. The
+    // artifact is f32 with fixed inner sweeps; agreement is at f32
+    // solver-level tolerance, not bitwise.
+    let solver = EntropicGw::grid_1d(
+        n,
+        n,
+        spec.k,
+        GwConfig {
+            epsilon: spec.epsilon,
+            outer_iters: spec.outer,
+            sinkhorn_max_iters: spec.inner,
+            sinkhorn_tolerance: 0.0, // fixed-sweep like the artifact
+            sinkhorn_check_every: usize::MAX,
+        },
+    );
+    let native = solver.solve(&u, &v, GradientKind::Fgc).unwrap();
+    let diff = fgc_gw::linalg::linf_diff(&out.plan, &native.plan).unwrap();
+    // plans are probability-scale (entries ~1/N² ≈ 2e-4)
+    assert!(diff < 5e-4, "PJRT vs native plan linf diff {diff}");
+    let rel = (out.objective - native.objective).abs() / native.objective.abs().max(1e-12);
+    assert!(rel < 5e-2, "objective {} vs {}", out.objective, native.objective);
+}
+
+#[test]
+fn fgc_and_naive_artifacts_agree() {
+    let Some(dir) = artifacts_dir() else {
+        return;
+    };
+    let reg = ArtifactRegistry::load(&dir).unwrap();
+    let (Some(fast), Some(slow)) = (reg.by_name("gw1d_fgc_n32"), reg.by_name("gw1d_naive_n32"))
+    else {
+        return;
+    };
+    let mut ex = Executor::cpu().unwrap();
+    let mut rng = Rng::seeded(5);
+    let u = random_distribution(&mut rng, 32);
+    let v = random_distribution(&mut rng, 32);
+    let a = ex.run_gw_solve(fast, &u, &v).unwrap();
+    let b = ex.run_gw_solve(slow, &u, &v).unwrap();
+    // Same algorithm, different gradient path, both f32: near-identical.
+    let diff = fgc_gw::linalg::frobenius_diff(&a.plan, &b.plan).unwrap();
+    assert!(diff < 1e-5, "fgc vs naive artifact diff {diff}");
+}
+
+#[test]
+fn gw_step_artifact_iterates() {
+    let Some(dir) = artifacts_dir() else {
+        return;
+    };
+    let reg = ArtifactRegistry::load(&dir).unwrap();
+    let Some(step) = reg.find(ArtifactKind::Gw1dStep, 32) else {
+        return;
+    };
+    let mut ex = Executor::cpu().unwrap();
+    let mut rng = Rng::seeded(3);
+    let n = 32;
+    let u = random_distribution(&mut rng, n);
+    let v = random_distribution(&mut rng, n);
+    let mut gamma = fgc_gw::linalg::outer(&u, &v);
+    for _ in 0..3 {
+        gamma = ex.run_gw_step(step, &u, &v, &gamma).unwrap();
+    }
+    assert!(gamma.all_finite());
+    // marginals approximately preserved through the compiled step
+    let viol = fgc_gw::sinkhorn::marginal_violation(&gamma, &u, &v);
+    assert!(viol < 0.05, "marginal violation {viol}");
+}
+
+#[test]
+fn step_artifact_converges_under_l3_control() {
+    let Some(dir) = artifacts_dir() else {
+        return;
+    };
+    let reg = ArtifactRegistry::load(&dir).unwrap();
+    let Some(step) = reg.find(ArtifactKind::Gw1dStep, 32) else {
+        return;
+    };
+    let mut ex = Executor::cpu().unwrap();
+    let mut rng = Rng::seeded(41);
+    let u = random_distribution(&mut rng, 32);
+    let v = random_distribution(&mut rng, 32);
+    // f32 artifact: plan entries ~1/N² ≈ 1e-3, so the practical
+    // fixed-point noise floor sits around 1e-6..1e-5 absolute.
+    let (plan, steps) = ex
+        .run_gw_to_convergence(step, &u, &v, 1e-5, 40)
+        .unwrap();
+    assert!(steps < 40, "did not converge in 40 steps");
+    assert!(plan.all_finite());
+    // converged fixed point: one more step barely moves the plan
+    let next = ex.run_gw_step(step, &u, &v, &plan).unwrap();
+    assert!(fgc_gw::linalg::linf_diff(&next, &plan).unwrap() < 1e-4);
+}
+
+#[test]
+fn coordinator_routes_to_pjrt_and_solves() {
+    let Some(dir) = artifacts_dir() else {
+        return;
+    };
+    let cfg = CoordinatorConfig {
+        native_workers: 1,
+        enable_pjrt: true,
+        policy: RoutingPolicy::PreferPjrt,
+        artifacts_dir: dir,
+        outer_iters: 10,
+        ..CoordinatorConfig::default()
+    };
+    let coord = Coordinator::start(cfg).unwrap();
+    let mut rng = Rng::seeded(21);
+    // n=64 matches an artifact → PJRT; n=50 does not → native.
+    let hit = JobPayload::Gw1d {
+        u: random_distribution(&mut rng, 64),
+        v: random_distribution(&mut rng, 64),
+        k: 1,
+        epsilon: 0.002,
+    };
+    let miss = JobPayload::Gw1d {
+        u: random_distribution(&mut rng, 50),
+        v: random_distribution(&mut rng, 50),
+        k: 1,
+        epsilon: 0.002,
+    };
+    let r1 = coord.submit_and_wait(hit).unwrap();
+    let r2 = coord.submit_and_wait(miss).unwrap();
+    assert!(r1.objective.is_ok());
+    assert!(r2.objective.is_ok());
+    assert!(matches!(r1.backend, fgc_gw::coordinator::BackendChoice::Pjrt(_)), "{:?}", r1.backend);
+    assert!(matches!(r2.backend, fgc_gw::coordinator::BackendChoice::NativeFgc));
+    let snap = coord.metrics();
+    assert_eq!(snap.pjrt, 1);
+    assert!(snap.native_fgc >= 1);
+    coord.shutdown();
+}

@@ -1,0 +1,397 @@
+//! Property-based integration tests (via the in-repo `testutil`
+//! runner): randomized shapes, exponents and grids for every
+//! algebraic invariant the FGC operators and solvers must satisfy.
+
+use fgc_gw::fgc::naive::dxgdy_dense;
+use fgc_gw::grid::{dense_dist_1d, dense_dist_2d, Grid1d, Grid2d};
+use fgc_gw::gw::{EntropicGw, Geometry, GradientKind, GwConfig, PairOperator};
+use fgc_gw::linalg::{frobenius_diff, frobenius_norm, matmul, normalize_l1, Mat};
+use fgc_gw::prng::Rng;
+use fgc_gw::testutil::check_prop;
+
+/// FGC 1D gradient product vs dense matmuls over random shapes,
+/// spacings and exponents.
+#[test]
+fn prop_fgc1d_matches_dense() {
+    check_prop(
+        "fgc1d-vs-dense",
+        25,
+        0xF6C1,
+        |rng| {
+            let m = 2 + rng.below(40) as usize;
+            let n = 2 + rng.below(40) as usize;
+            let k = 1 + rng.below(3) as u32;
+            let hx = rng.uniform_in(0.01, 2.0);
+            let hy = rng.uniform_in(0.01, 2.0);
+            let gamma = Mat::from_fn(m, n, |_, _| rng.uniform() - 0.3);
+            (m, n, k, hx, hy, gamma)
+        },
+        |(m, n, k, hx, hy, gamma)| {
+            let gx = Geometry::Grid1d {
+                grid: Grid1d::new(*m, *hx),
+                k: *k,
+            };
+            let gy = Geometry::Grid1d {
+                grid: Grid1d::new(*n, *hy),
+                k: *k,
+            };
+            let mut fast = PairOperator::new(gx.clone(), gy.clone(), GradientKind::Fgc).unwrap();
+            let mut out = Mat::zeros(*m, *n);
+            fast.dxgdy(gamma, &mut out).unwrap();
+            let oracle = dxgdy_dense(&gx.dense(), &gy.dense(), gamma).unwrap();
+            let scale = frobenius_norm(&oracle).max(1e-12);
+            let d = frobenius_diff(&out, &oracle).unwrap() / scale;
+            if d < 1e-11 {
+                Ok(())
+            } else {
+                Err(format!("relative diff {d:.3e}"))
+            }
+        },
+    );
+}
+
+/// FGC 2D gradient product vs dense matmuls over random sides,
+/// spacings and exponents.
+#[test]
+fn prop_fgc2d_matches_dense() {
+    check_prop(
+        "fgc2d-vs-dense",
+        12,
+        0xF6C2,
+        |rng| {
+            let nx = 2 + rng.below(5) as usize;
+            let ny = 2 + rng.below(5) as usize;
+            let k = 1 + rng.below(2) as u32;
+            let hx = rng.uniform_in(0.05, 1.5);
+            let hy = rng.uniform_in(0.05, 1.5);
+            let gamma = Mat::from_fn(nx * nx, ny * ny, |_, _| rng.uniform());
+            (nx, ny, k, hx, hy, gamma)
+        },
+        |(nx, ny, k, hx, hy, gamma)| {
+            let gx = Geometry::Grid2d {
+                grid: Grid2d::new(*nx, *hx),
+                k: *k,
+            };
+            let gy = Geometry::Grid2d {
+                grid: Grid2d::new(*ny, *hy),
+                k: *k,
+            };
+            let mut fast = PairOperator::new(gx.clone(), gy.clone(), GradientKind::Fgc).unwrap();
+            let mut out = Mat::zeros(nx * nx, ny * ny);
+            fast.dxgdy(gamma, &mut out).unwrap();
+            let oracle = dxgdy_dense(&gx.dense(), &gy.dense(), gamma).unwrap();
+            let scale = frobenius_norm(&oracle).max(1e-12);
+            let d = frobenius_diff(&out, &oracle).unwrap() / scale;
+            if d < 1e-11 {
+                Ok(())
+            } else {
+                Err(format!("relative diff {d:.3e}"))
+            }
+        },
+    );
+}
+
+/// The `h^k` scaling factorizes: doubling `h_X` scales the product by
+/// `2^k` (paper's `D = h^k D̃` identity).
+#[test]
+fn prop_spacing_scaling_law() {
+    check_prop(
+        "h-scaling",
+        15,
+        0x5CA1E,
+        |rng| {
+            let n = 3 + rng.below(25) as usize;
+            let k = 1 + rng.below(3) as u32;
+            let gamma = Mat::from_fn(n, n, |_, _| rng.uniform());
+            (n, k, gamma)
+        },
+        |(n, k, gamma)| {
+            let mk = |h: f64| Geometry::Grid1d {
+                grid: Grid1d::new(*n, h),
+                k: *k,
+            };
+            let mut op1 = PairOperator::new(mk(0.5), mk(1.0), GradientKind::Fgc).unwrap();
+            let mut op2 = PairOperator::new(mk(1.0), mk(1.0), GradientKind::Fgc).unwrap();
+            let mut g1 = Mat::zeros(*n, *n);
+            let mut g2 = Mat::zeros(*n, *n);
+            op1.dxgdy(gamma, &mut g1).unwrap();
+            op2.dxgdy(gamma, &mut g2).unwrap();
+            let factor = 2.0f64.powi(*k as i32);
+            for (a, b) in g1.as_slice().iter().zip(g2.as_slice()) {
+                if (a * factor - b).abs() > 1e-9 * (1.0 + b.abs()) {
+                    return Err(format!("{a}·{factor} ≠ {b}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Symmetry: `D̃ Γ D̃` with symmetric `D̃` and symmetric `Γ` is
+/// symmetric.
+#[test]
+fn prop_symmetric_plan_symmetric_product() {
+    check_prop(
+        "symmetric-product",
+        15,
+        0x517,
+        |rng| {
+            let n = 3 + rng.below(20) as usize;
+            let k = 1 + rng.below(2) as u32;
+            let mut gamma = Mat::from_fn(n, n, |_, _| rng.uniform());
+            // symmetrize
+            let gt = gamma.transpose();
+            gamma.add_scaled(1.0, &gt).unwrap();
+            (n, k, gamma)
+        },
+        |(n, k, gamma)| {
+            let g = Geometry::grid_1d_unit(*n, *k);
+            let mut op = PairOperator::new(g.clone(), g, GradientKind::Fgc).unwrap();
+            let mut out = Mat::zeros(*n, *n);
+            op.dxgdy(gamma, &mut out).unwrap();
+            let d = frobenius_diff(&out, &out.transpose()).unwrap();
+            if d < 1e-9 {
+                Ok(())
+            } else {
+                Err(format!("asymmetry {d:.3e}"))
+            }
+        },
+    );
+}
+
+/// Solver-level exactness across random solver settings: FGC and
+/// dense-baseline mirror descent agree to roundoff regardless of ε,
+/// k, outer iterations.
+#[test]
+fn prop_solver_exactness_random_settings() {
+    check_prop(
+        "solver-exactness",
+        8,
+        0xE84C7,
+        |rng| {
+            let n = 10 + rng.below(30) as usize;
+            let k = 1 + rng.below(2) as u32;
+            let eps = rng.uniform_in(2e-3, 5e-2);
+            let outer = 2 + rng.below(6) as usize;
+            let mut u = rng.uniform_vec(n);
+            let mut v = rng.uniform_vec(n);
+            normalize_l1(&mut u).unwrap();
+            normalize_l1(&mut v).unwrap();
+            (n, k, eps, outer, u, v)
+        },
+        |(n, k, eps, outer, u, v)| {
+            let solver = EntropicGw::grid_1d(
+                *n,
+                *n,
+                *k,
+                GwConfig {
+                    epsilon: *eps,
+                    outer_iters: *outer,
+                    sinkhorn_max_iters: 300,
+                    sinkhorn_tolerance: 1e-10,
+                    sinkhorn_check_every: 10,
+                },
+            );
+            let fast = solver.solve(u, v, GradientKind::Fgc).map_err(|e| e.to_string())?;
+            let slow = solver.solve(u, v, GradientKind::Naive).map_err(|e| e.to_string())?;
+            let d = frobenius_diff(&fast.plan, &slow.plan).unwrap();
+            if d < 1e-11 {
+                Ok(())
+            } else {
+                Err(format!("plan diff {d:.3e}"))
+            }
+        },
+    );
+}
+
+/// The mirror-descent energy is non-increasing in practice over the
+/// paper's settings (monotone descent of the majorize-minimize
+/// scheme) — checked loosely (entropic term allows small bumps).
+#[test]
+fn prop_objective_descends() {
+    let mut rng = Rng::seeded(0xDE5C);
+    for trial in 0..5 {
+        let n = 20 + 5 * trial;
+        let mut u = rng.uniform_vec(n);
+        let mut v = rng.uniform_vec(n);
+        normalize_l1(&mut u).unwrap();
+        normalize_l1(&mut v).unwrap();
+        let energies: Vec<f64> = (1..=6)
+            .map(|outer| {
+                EntropicGw::grid_1d(
+                    n,
+                    n,
+                    1,
+                    GwConfig {
+                        epsilon: 0.01,
+                        outer_iters: outer,
+                        sinkhorn_max_iters: 500,
+                        sinkhorn_tolerance: 1e-11,
+                        sinkhorn_check_every: 10,
+                    },
+                )
+                .solve(&u, &v, GradientKind::Fgc)
+                .unwrap()
+                .objective
+            })
+            .collect();
+        for w in energies.windows(2) {
+            assert!(
+                w[1] <= w[0] * 1.05 + 1e-9,
+                "objective increased: {energies:?}"
+            );
+        }
+    }
+}
+
+/// Gradient-product linearity at the operator level (matmul identity
+/// `D(αΓ₁+βΓ₂)D = αDΓ₁D + βDΓ₂D`).
+#[test]
+fn prop_operator_linearity() {
+    check_prop(
+        "operator-linearity",
+        15,
+        0x11EA,
+        |rng| {
+            let n = 4 + rng.below(30) as usize;
+            let a = rng.uniform_in(-2.0, 2.0);
+            let b = rng.uniform_in(-2.0, 2.0);
+            let g1 = Mat::from_fn(n, n, |_, _| rng.uniform());
+            let g2 = Mat::from_fn(n, n, |_, _| rng.uniform());
+            (n, a, b, g1, g2)
+        },
+        |(n, a, b, g1, g2)| {
+            let geom = Geometry::grid_1d_unit(*n, 2);
+            let mut op = PairOperator::new(geom.clone(), geom, GradientKind::Fgc).unwrap();
+            let mut combo = g1.clone();
+            combo.as_mut_slice().iter_mut().for_each(|x| *x *= *a);
+            combo.add_scaled(*b, g2).unwrap();
+            let mut out_combo = Mat::zeros(*n, *n);
+            let mut out1 = Mat::zeros(*n, *n);
+            let mut out2 = Mat::zeros(*n, *n);
+            op.dxgdy(&combo, &mut out_combo).unwrap();
+            op.dxgdy(g1, &mut out1).unwrap();
+            op.dxgdy(g2, &mut out2).unwrap();
+            let mut expect = out1.clone();
+            expect.as_mut_slice().iter_mut().for_each(|x| *x *= *a);
+            expect.add_scaled(*b, &out2).unwrap();
+            let d = frobenius_diff(&out_combo, &expect).unwrap()
+                / frobenius_norm(&expect).max(1e-12);
+            if d < 1e-11 {
+                Ok(())
+            } else {
+                Err(format!("nonlinearity {d:.3e}"))
+            }
+        },
+    );
+}
+
+/// Dense distance-matrix builders agree with a literal double loop
+/// (guards the grid definitions the whole stack rests on).
+#[test]
+fn prop_dense_builders_literal() {
+    check_prop(
+        "dense-builders",
+        15,
+        0xD15,
+        |rng| {
+            let n = 2 + rng.below(15) as usize;
+            let k = rng.below(4) as u32 + 1;
+            let h = rng.uniform_in(0.01, 3.0);
+            (n, k, h)
+        },
+        |(n, k, h)| {
+            let d1 = dense_dist_1d(&Grid1d::new(*n, *h), *k);
+            for i in 0..*n {
+                for j in 0..*n {
+                    let want = (*h * (i as f64 - j as f64).abs()).powi(*k as i32);
+                    if (d1[(i, j)] - want).abs() > 1e-9 * (1.0 + want) {
+                        return Err(format!("1D ({i},{j}): {} vs {want}", d1[(i, j)]));
+                    }
+                }
+            }
+            let g2 = Grid2d::new(*n, *h);
+            let d2 = dense_dist_2d(&g2, *k);
+            for a in 0..g2.len() {
+                for b in 0..g2.len() {
+                    let (ar, ac) = g2.coords(a);
+                    let (br, bc) = g2.coords(b);
+                    let man = (ar.abs_diff(br) + ac.abs_diff(bc)) as f64;
+                    let want = (*h * man).powi(*k as i32);
+                    if (d2[(a, b)] - want).abs() > 1e-9 * (1.0 + want) {
+                        return Err(format!("2D ({a},{b})"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Plans transported through the full pipeline keep their mass
+/// exactly (Sinkhorn column projection is exact by construction).
+#[test]
+fn prop_mass_conservation() {
+    check_prop(
+        "mass-conservation",
+        10,
+        0x3A55,
+        |rng| {
+            let n = 8 + rng.below(40) as usize;
+            let mut u = rng.uniform_vec(n);
+            let mut v = rng.uniform_vec(n);
+            normalize_l1(&mut u).unwrap();
+            normalize_l1(&mut v).unwrap();
+            (n, u, v)
+        },
+        |(n, u, v)| {
+            let solver = EntropicGw::grid_1d(
+                *n,
+                *n,
+                1,
+                GwConfig {
+                    epsilon: 0.02,
+                    outer_iters: 4,
+                    sinkhorn_max_iters: 400,
+                    sinkhorn_tolerance: 1e-11,
+                    sinkhorn_check_every: 10,
+                },
+            );
+            let sol = solver.solve(u, v, GradientKind::Fgc).map_err(|e| e.to_string())?;
+            let mass = sol.plan.total();
+            if (mass - 1.0).abs() < 1e-8 {
+                Ok(())
+            } else {
+                Err(format!("mass {mass}"))
+            }
+        },
+    );
+}
+
+/// Sanity anchor used by the matmul-based baselines: associativity of
+/// the dense triple product under both evaluation orders.
+#[test]
+fn prop_dense_triple_product_associative() {
+    check_prop(
+        "triple-assoc",
+        10,
+        0xA550,
+        |rng| {
+            let n = 3 + rng.below(20) as usize;
+            let g = Geometry::grid_1d_unit(n, 1).dense();
+            let gamma = Mat::from_fn(n, n, |_, _| rng.uniform());
+            (g, gamma)
+        },
+        |(d, gamma)| {
+            let left = matmul(&matmul(d, gamma).unwrap(), d).unwrap();
+            let right = matmul(d, &matmul(gamma, d).unwrap()).unwrap();
+            let diff = frobenius_diff(&left, &right).unwrap()
+                / frobenius_norm(&left).max(1e-12);
+            if diff < 1e-12 {
+                Ok(())
+            } else {
+                Err(format!("assoc diff {diff:.3e}"))
+            }
+        },
+    );
+}

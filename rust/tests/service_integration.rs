@@ -1,0 +1,165 @@
+//! Coordinator integration: mixed workloads, backpressure under load,
+//! failure injection, and metrics accounting.
+
+use fgc_gw::coordinator::{
+    BackendChoice, Coordinator, CoordinatorConfig, JobPayload, RoutingPolicy,
+};
+use fgc_gw::data::{feature_cost_series, random_distribution, two_hump_series, TwoHumpSpec};
+use fgc_gw::prng::Rng;
+use std::path::PathBuf;
+use std::time::Duration;
+
+fn base_cfg() -> CoordinatorConfig {
+    CoordinatorConfig {
+        native_workers: 2,
+        queue_capacity: 8,
+        batch_max: 4,
+        artifacts_dir: PathBuf::from("/nonexistent"),
+        policy: RoutingPolicy::PreferPjrt, // downgrades to NativeOnly (no pjrt)
+        enable_pjrt: false,
+        outer_iters: 4,
+        sinkhorn_max_iters: 200,
+        sinkhorn_tolerance: 1e-8,
+        submit_timeout: Duration::from_millis(50),
+    }
+}
+
+fn gw1d(n: usize, seed: u64) -> JobPayload {
+    let mut rng = Rng::seeded(seed);
+    JobPayload::Gw1d {
+        u: random_distribution(&mut rng, n),
+        v: random_distribution(&mut rng, n),
+        k: 1,
+        epsilon: 0.01,
+    }
+}
+
+#[test]
+fn mixed_workload_completes() {
+    let coord = Coordinator::start(base_cfg()).unwrap();
+    let mut rxs = Vec::new();
+    // 1D GW
+    for i in 0..4 {
+        rxs.push(coord.submit(gw1d(16, i)).unwrap().1);
+    }
+    // FGW time series
+    let s = two_hump_series(&TwoHumpSpec::default(), 24);
+    let c = feature_cost_series(&s, &s);
+    let mut rng = Rng::seeded(31);
+    rxs.push(
+        coord
+            .submit(JobPayload::Fgw1d {
+                u: random_distribution(&mut rng, 24),
+                v: random_distribution(&mut rng, 24),
+                feature_cost: c,
+                theta: 0.5,
+                k: 1,
+                epsilon: 0.01,
+            })
+            .unwrap()
+            .1,
+    );
+    // 2D GW
+    let mut rng2 = Rng::seeded(9);
+    rxs.push(
+        coord
+            .submit(JobPayload::Gw2d {
+                n: 4,
+                u: fgc_gw::data::random_distribution_2d(&mut rng2, 4),
+                v: fgc_gw::data::random_distribution_2d(&mut rng2, 4),
+                k: 1,
+                epsilon: 0.02,
+            })
+            .unwrap()
+            .1,
+    );
+    for rx in rxs {
+        let res = rx.recv().unwrap();
+        assert!(res.objective.is_ok(), "{:?}", res.objective);
+        assert_eq!(res.backend, BackendChoice::NativeFgc);
+    }
+    let m = coord.metrics();
+    assert_eq!(m.completed, 6);
+    assert_eq!(m.failed, 0);
+    coord.shutdown();
+}
+
+#[test]
+fn backpressure_rejects_when_saturated() {
+    // 1 slow worker, tiny queue, zero patience → some submissions must
+    // be rejected rather than queued unboundedly.
+    let cfg = CoordinatorConfig {
+        native_workers: 1,
+        queue_capacity: 2,
+        submit_timeout: Duration::from_millis(1),
+        outer_iters: 10,
+        sinkhorn_max_iters: 4000,
+        ..base_cfg()
+    };
+    let coord = Coordinator::start(cfg).unwrap();
+    let mut accepted = 0;
+    let mut rejected = 0;
+    let mut rxs = Vec::new();
+    for i in 0..24 {
+        match coord.submit(gw1d(200, 50 + i)) {
+            Ok((_, rx)) => {
+                accepted += 1;
+                rxs.push(rx);
+            }
+            Err(_) => rejected += 1,
+        }
+    }
+    assert!(rejected > 0, "expected backpressure rejections");
+    assert!(accepted >= 2);
+    for rx in rxs {
+        assert!(rx.recv().unwrap().objective.is_ok());
+    }
+    let m = coord.metrics();
+    assert_eq!(m.rejected, rejected);
+    assert_eq!(m.completed, accepted);
+    coord.shutdown();
+}
+
+#[test]
+fn queue_time_and_solve_time_recorded() {
+    let coord = Coordinator::start(base_cfg()).unwrap();
+    let res = coord.submit_and_wait(gw1d(32, 3)).unwrap();
+    assert!(res.solve_time > Duration::ZERO);
+    let m = coord.metrics();
+    assert!(m.p50 >= res.solve_time / 2);
+    coord.shutdown();
+}
+
+#[test]
+fn per_job_epsilon_respected() {
+    // Two jobs differing only in ε must produce different objectives
+    // (the service passes runtime hyperparameters through).
+    let coord = Coordinator::start(base_cfg()).unwrap();
+    let mut rng = Rng::seeded(70);
+    let u = random_distribution(&mut rng, 20);
+    let v = random_distribution(&mut rng, 20);
+    let mk = |eps: f64| JobPayload::Gw1d {
+        u: u.clone(),
+        v: v.clone(),
+        k: 1,
+        epsilon: eps,
+    };
+    let a = coord.submit_and_wait(mk(0.01)).unwrap().objective.unwrap();
+    let b = coord.submit_and_wait(mk(0.5)).unwrap().objective.unwrap();
+    assert!((a - b).abs() > 1e-9, "ε had no effect: {a} vs {b}");
+    coord.shutdown();
+}
+
+#[test]
+fn results_are_deterministic_across_runs() {
+    let run = || {
+        let coord = Coordinator::start(base_cfg()).unwrap();
+        let res = coord.submit_and_wait(gw1d(40, 123)).unwrap();
+        let obj = res.objective.unwrap();
+        coord.shutdown();
+        obj
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a, b, "same seed, same job ⇒ bitwise-equal objective");
+}

@@ -1,0 +1,190 @@
+//! Cross-module integration: the paper's exactness claim end-to-end,
+//! variant consistency, and invariance properties on real workloads.
+
+use fgc_gw::data::{
+    digit_three, feature_cost_gray, feature_cost_series, horse_frame, random_distribution,
+    transform_image, two_hump_series, Transform, TwoHumpSpec,
+};
+use fgc_gw::gw::{EntropicGw, EntropicUgw, Geometry, GradientKind, GwConfig, UgwConfig};
+use fgc_gw::linalg::frobenius_diff;
+use fgc_gw::prng::Rng;
+use fgc_gw::sinkhorn::marginal_violation;
+
+fn cfg(eps: f64) -> GwConfig {
+    GwConfig {
+        epsilon: eps,
+        outer_iters: 10,
+        sinkhorn_max_iters: 2000,
+        sinkhorn_tolerance: 1e-10,
+        sinkhorn_check_every: 10,
+    }
+}
+
+/// Table-2 style exactness at a bench-relevant size: FGC and dense
+/// baseline must produce plans identical to ~f64 roundoff.
+#[test]
+fn exactness_1d_paper_settings() {
+    let n = 100;
+    let mut rng = Rng::seeded(2024);
+    let u = random_distribution(&mut rng, n);
+    let v = random_distribution(&mut rng, n);
+    let solver = EntropicGw::grid_1d(n, n, 1, cfg(2e-3));
+    let fast = solver.solve(&u, &v, GradientKind::Fgc).unwrap();
+    let slow = solver.solve(&u, &v, GradientKind::Naive).unwrap();
+    let d = frobenius_diff(&fast.plan, &slow.plan).unwrap();
+    assert!(d < 1e-12, "‖P_Fa − P‖_F = {d:.3e}");
+}
+
+/// Time-series alignment (§4.3): FGW transports the humps onto their
+/// shifted positions; the plan mass near the shifted hump must come
+/// from the original hump.
+#[test]
+fn time_series_alignment_tracks_humps() {
+    let n = 120;
+    let src = two_hump_series(&TwoHumpSpec::default(), n); // humps at .3/.7
+    let dst = two_hump_series(
+        &TwoHumpSpec {
+            center1: 0.2,
+            center2: 0.8,
+            width: 0.08,
+        },
+        n,
+    );
+    let c = feature_cost_series(&src, &dst);
+    // Distributions: signal mass (floored) — alignment of waveform mass.
+    let floor = 1e-3;
+    let mut u: Vec<f64> = src.iter().map(|&s| s + floor).collect();
+    let mut v: Vec<f64> = dst.iter().map(|&s| s + floor).collect();
+    fgc_gw::linalg::normalize_l1(&mut u).unwrap();
+    fgc_gw::linalg::normalize_l1(&mut v).unwrap();
+    let solver = EntropicGw::grid_1d(n, n, 1, cfg(5e-3));
+    let sol = solver.solve_fgw(&u, &v, &c, 0.5, GradientKind::Fgc).unwrap();
+    // Small-ε Sinkhorn converges geometrically with rate → 1 as ε→0;
+    // the 2000-sweep budget leaves an O(1e-4) residual on the row
+    // marginals (the paper runs the same fixed-budget regime).
+    assert!(marginal_violation(&sol.plan, &u, &v) < 2e-3);
+    // Mass around source hump 1 (idx ≈ 0.3n) should land around
+    // target hump 1 (idx ≈ 0.2n), not on hump 2 (≈ 0.8n).
+    let i = (0.3 * n as f64) as usize;
+    let row = sol.plan.row(i);
+    let near: f64 = row[((0.2 * n as f64) as usize).saturating_sub(8)..(0.2 * n as f64) as usize + 8]
+        .iter()
+        .sum();
+    let far: f64 = row[((0.8 * n as f64) as usize) - 8..(0.8 * n as f64) as usize + 8]
+        .iter()
+        .sum();
+    assert!(near > 3.0 * far, "near={near:.3e} far={far:.3e}");
+}
+
+/// Digit invariance (§4.4.1): FGW objective between a glyph and its
+/// isometric transform is (near-)invariant across transforms, and the
+/// FGC/naive plans coincide.
+#[test]
+fn digit_transform_invariance_small() {
+    let side = 12; // keep the dense baseline cheap in CI
+    let img = digit_three(side);
+    let u = img.to_distribution(1e-4);
+    let solver = EntropicGw::new(
+        Geometry::grid_2d(side, 1.0, 1),
+        Geometry::grid_2d(side, 1.0, 1),
+        GwConfig {
+            epsilon: 0.5, // pixel-scale costs (h=1 ⇒ distances ≥ 1)
+            outer_iters: 5,
+            sinkhorn_max_iters: 600,
+            sinkhorn_tolerance: 1e-9,
+            sinkhorn_check_every: 10,
+        },
+    );
+    let mut objectives = Vec::new();
+    for t in [
+        Transform::Translate(1, 1),
+        Transform::Rotate90(1),
+        Transform::ReflectHorizontal,
+    ] {
+        let timg = transform_image(&img, t);
+        let v = timg.to_distribution(1e-4);
+        let c = feature_cost_gray(&img, &timg);
+        let fast = solver.solve_fgw(&u, &v, &c, 0.1, GradientKind::Fgc).unwrap();
+        let slow = solver.solve_fgw(&u, &v, &c, 0.1, GradientKind::Naive).unwrap();
+        let d = frobenius_diff(&fast.plan, &slow.plan).unwrap();
+        assert!(d < 1e-11, "transform {t:?}: ‖P_Fa−P‖_F={d:.3e}");
+        objectives.push(fast.objective);
+    }
+    // isometries: objectives within a factor reflecting entropic blur
+    let (mn, mx) = objectives
+        .iter()
+        .fold((f64::INFINITY, 0.0f64), |(a, b), &o| (a.min(o), b.max(o)));
+    assert!(mx / mn < 1.8, "objectives vary too much: {objectives:?}");
+}
+
+/// Horse frames (§4.4.2): FGW alignment between two gait phases
+/// produces exact FGC plans and a finite objective at a realistic θ.
+#[test]
+fn horse_alignment_exactness() {
+    let n = 10;
+    let a = horse_frame(0.0, n).unwrap();
+    let b = horse_frame(0.45, n).unwrap();
+    let u = a.to_distribution(1e-4);
+    let v = b.to_distribution(1e-4);
+    let c = feature_cost_gray(&a, &b);
+    let h = 100.0 / n as f64; // paper's h = 100/n
+    let solver = EntropicGw::new(
+        Geometry::grid_2d(n, h, 1),
+        Geometry::grid_2d(n, h, 1),
+        GwConfig {
+            epsilon: 2e3, // costs scale with h²·n² ≈ 1e4 here
+            outer_iters: 5,
+            sinkhorn_max_iters: 500,
+            sinkhorn_tolerance: 1e-9,
+            sinkhorn_check_every: 10,
+        },
+    );
+    for theta in [0.4, 0.8] {
+        let fast = solver.solve_fgw(&u, &v, &c, theta, GradientKind::Fgc).unwrap();
+        let slow = solver.solve_fgw(&u, &v, &c, theta, GradientKind::Naive).unwrap();
+        let d = frobenius_diff(&fast.plan, &slow.plan).unwrap();
+        assert!(d < 1e-10, "θ={theta}: diff {d:.3e}");
+        assert!(fast.objective.is_finite());
+    }
+}
+
+/// UGW between overlapping-mass inputs runs identically through both
+/// gradient paths on a 2D geometry.
+#[test]
+fn ugw_2d_backend_agreement() {
+    let n = 4;
+    let mut rng = Rng::seeded(9);
+    let u = fgc_gw::data::random_distribution_2d(&mut rng, n);
+    let v = fgc_gw::data::random_distribution_2d(&mut rng, n);
+    let solver = EntropicUgw::new(
+        Geometry::grid_2d_unit(n, 1),
+        Geometry::grid_2d_unit(n, 1),
+        UgwConfig {
+            epsilon: 0.05,
+            rho: 1.0,
+            outer_iters: 4,
+            inner_max_iters: 800,
+            inner_tolerance: 1e-11,
+        },
+    );
+    let a = solver.solve(&u, &v, GradientKind::Fgc).unwrap();
+    let b = solver.solve(&u, &v, GradientKind::Naive).unwrap();
+    let d = frobenius_diff(&a.plan, &b.plan).unwrap();
+    assert!(d < 1e-9, "UGW diff {d:.3e}");
+}
+
+/// GW is symmetric up to transposition: solving (u,v) vs (v,u) gives
+/// transposed plans on symmetric geometry.
+#[test]
+fn gw_symmetry_under_swap() {
+    let n = 30;
+    let mut rng = Rng::seeded(14);
+    let u = random_distribution(&mut rng, n);
+    let v = random_distribution(&mut rng, n);
+    let solver = EntropicGw::grid_1d(n, n, 1, cfg(5e-3));
+    let ab = solver.solve(&u, &v, GradientKind::Fgc).unwrap();
+    let ba = solver.solve(&v, &u, GradientKind::Fgc).unwrap();
+    let d = frobenius_diff(&ab.plan, &ba.plan.transpose()).unwrap();
+    assert!(d < 1e-9, "swap asymmetry {d:.3e}");
+    assert!((ab.objective - ba.objective).abs() < 1e-9);
+}
