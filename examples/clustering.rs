@@ -63,6 +63,7 @@ fn main() -> fgc_gw::Result<()> {
         outer_iters: 6,
         sinkhorn_max_iters: 200,
         sinkhorn_tolerance: 1e-8,
+        solver_threads: 1,
         batch_max: 8,
         submit_timeout: Duration::from_secs(5),
     })?;

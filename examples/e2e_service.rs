@@ -36,6 +36,7 @@ fn main() -> fgc_gw::Result<()> {
         outer_iters: 10,
         sinkhorn_max_iters: 200,
         sinkhorn_tolerance: 1e-9,
+        solver_threads: 1,
         submit_timeout: Duration::from_secs(5),
     };
     println!("== e2e: starting coordinator (pjrt={enable_pjrt}) ==");

@@ -56,6 +56,7 @@ fn main() -> fgc_gw::Result<()> {
             sinkhorn_max_iters: spec.inner,
             sinkhorn_tolerance: 0.0,
             sinkhorn_check_every: usize::MAX,
+            threads: 1,
         },
     )
     .solve(&u, &v, GradientKind::Fgc)?;

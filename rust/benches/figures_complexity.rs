@@ -27,6 +27,7 @@ fn cfg(eps: f64) -> GwConfig {
         sinkhorn_max_iters: 50,
         sinkhorn_tolerance: 1e-9,
         sinkhorn_check_every: 10,
+        threads: 1,
     }
 }
 

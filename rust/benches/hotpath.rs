@@ -1,0 +1,126 @@
+//! Hot-path bench: serial vs multithreaded entropic solve.
+//!
+//! Times the full 1D entropic GW solve (FGC gradient + Sinkhorn) at
+//! N ∈ {256, 1024, 4096} with threads = 1 vs threads = T on the same
+//! inputs, checks the plans agree to ‖ΔΓ‖_F < 1e-12, and emits
+//! `BENCH_hotpath.json` so later PRs have a perf trajectory to regress
+//! against (see EXPERIMENTS.md §Perf).
+//!
+//! ```bash
+//! cargo bench --bench hotpath [-- --quick --threads 4 \
+//!     --sizes 256,1024,4096 --out ../BENCH_hotpath.json]
+//! ```
+
+use fgc_gw::bench_util::{fmt_secs, time_mean, TableWriter};
+use fgc_gw::cli::Args;
+use fgc_gw::data::random_distribution;
+use fgc_gw::gw::{EntropicGw, GradientKind, GwConfig};
+use fgc_gw::linalg::frobenius_diff;
+use fgc_gw::prng::Rng;
+
+fn cfg(threads: usize, quick: bool) -> GwConfig {
+    GwConfig {
+        epsilon: 2e-3,
+        outer_iters: if quick { 3 } else { 10 },
+        // Fixed inner budget so serial and parallel do identical work.
+        sinkhorn_max_iters: if quick { 30 } else { 50 },
+        sinkhorn_tolerance: 0.0,
+        sinkhorn_check_every: usize::MAX,
+        threads,
+    }
+}
+
+struct Row {
+    n: usize,
+    serial_s: f64,
+    parallel_s: f64,
+    plan_diff: f64,
+}
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1)).unwrap();
+    let quick = args.has_flag("quick");
+    let threads = args.get_or("threads", 4usize).unwrap();
+    let sizes = args.get_list_or("sizes", &[256, 1024, 4096]).unwrap();
+    let reps = args.get_or("reps", if quick { 1 } else { 3 }).unwrap();
+    let out_path = args.get("out").unwrap_or("../BENCH_hotpath.json").to_string();
+
+    let mut table = TableWriter::new(
+        &format!("hotpath: 1D entropic solve, serial vs {threads} threads"),
+        &["N", "serial (s)", "parallel (s)", "speedup", "‖ΔΓ‖_F"],
+    );
+    let mut rows = Vec::new();
+    for &n in &sizes {
+        let mut rng = Rng::seeded(7 + n as u64);
+        let u = random_distribution(&mut rng, n);
+        let v = random_distribution(&mut rng, n);
+        let serial_solver = EntropicGw::grid_1d(n, n, 1, cfg(1, quick));
+        let parallel_solver = EntropicGw::grid_1d(n, n, 1, cfg(threads, quick));
+
+        let serial_sol = serial_solver.solve(&u, &v, GradientKind::Fgc).unwrap();
+        let parallel_sol = parallel_solver.solve(&u, &v, GradientKind::Fgc).unwrap();
+        let plan_diff = frobenius_diff(&serial_sol.plan, &parallel_sol.plan).unwrap();
+        assert!(
+            plan_diff < 1e-12,
+            "N={n}: parallel plan diverged, ‖ΔΓ‖_F = {plan_diff:e}"
+        );
+
+        // Reuse one workspace per solver so the timed region is the
+        // zero-allocation steady state the service runs in.
+        let mut sws = serial_solver.workspace(GradientKind::Fgc).unwrap();
+        let mut pws = parallel_solver.workspace(GradientKind::Fgc).unwrap();
+        let ts = time_mean(1, reps, || {
+            serial_solver.solve_into(&u, &v, &mut sws).unwrap().objective
+        });
+        let tp = time_mean(1, reps, || {
+            parallel_solver.solve_into(&u, &v, &mut pws).unwrap().objective
+        });
+
+        let (serial_s, parallel_s) = (ts.as_secs_f64(), tp.as_secs_f64());
+        table.row(&[
+            n.to_string(),
+            fmt_secs(ts),
+            fmt_secs(tp),
+            format!("{:.2}×", serial_s / parallel_s),
+            format!("{plan_diff:.2e}"),
+        ]);
+        rows.push(Row {
+            n,
+            serial_s,
+            parallel_s,
+            plan_diff,
+        });
+    }
+    println!("{}", table.render());
+
+    let json = render_json(threads, quick, reps, &rows);
+    std::fs::write(&out_path, &json).unwrap();
+    println!("wrote {out_path}");
+}
+
+fn render_json(threads: usize, quick: bool, reps: usize, rows: &[Row]) -> String {
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str("  \"bench\": \"hotpath\",\n");
+    s.push_str("  \"kernel\": \"entropic_gw_1d_fgc\",\n");
+    s.push_str(&format!("  \"mode\": \"{}\",\n", if quick { "quick" } else { "full" }));
+    s.push_str(&format!("  \"threads\": {threads},\n"));
+    s.push_str(&format!("  \"reps\": {reps},\n"));
+    s.push_str(
+        "  \"regenerate\": \"cargo bench --bench hotpath -- --quick --threads 4 --out ../BENCH_hotpath.json\",\n",
+    );
+    s.push_str("  \"results\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"n\": {}, \"serial_s\": {:.6e}, \"parallel_s\": {:.6e}, \"speedup\": {:.3}, \"plan_fro_diff\": {:.3e}}}{}\n",
+            r.n,
+            r.serial_s,
+            r.parallel_s,
+            r.serial_s / r.parallel_s,
+            r.plan_diff,
+            if i + 1 == rows.len() { "" } else { "," }
+        ));
+    }
+    s.push_str("  ]\n}\n");
+    s
+}

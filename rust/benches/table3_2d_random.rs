@@ -25,6 +25,7 @@ fn bench_cfg() -> GwConfig {
         sinkhorn_max_iters: 50,
         sinkhorn_tolerance: 1e-9,
         sinkhorn_check_every: 10,
+        threads: 1,
     }
 }
 

@@ -32,6 +32,7 @@ fn main() {
             sinkhorn_max_iters: 50,
             sinkhorn_tolerance: 1e-9,
             sinkhorn_check_every: 10,
+            threads: 1,
         },
     );
 

@@ -63,6 +63,19 @@ impl Args {
         }
     }
 
+    /// Typed lookup that distinguishes "absent" from a given value —
+    /// used for CLI overrides that should defer to a config file when
+    /// the flag is not passed (e.g. `--threads`).
+    pub fn get_opt<T: std::str::FromStr>(&self, key: &str) -> Result<Option<T>> {
+        match self.options.get(key) {
+            None => Ok(None),
+            Some(raw) => raw
+                .parse()
+                .map(Some)
+                .map_err(|_| Error::Config(format!("--{key}: cannot parse `{raw}`"))),
+        }
+    }
+
     /// Raw option value.
     pub fn get(&self, key: &str) -> Option<&str> {
         self.options.get(key).map(|s| s.as_str())
@@ -114,6 +127,15 @@ mod tests {
         let a = parse(&["x", "--bad", "zzz"]);
         assert_eq!(a.get_or("missing", 7u32).unwrap(), 7);
         assert!(a.get_or("bad", 0u32).is_err());
+    }
+
+    #[test]
+    fn optional_lookup_distinguishes_absent() {
+        let a = parse(&["solve", "--threads", "4"]);
+        assert_eq!(a.get_opt::<usize>("threads").unwrap(), Some(4));
+        assert_eq!(a.get_opt::<usize>("workers").unwrap(), None);
+        let b = parse(&["solve", "--threads", "x"]);
+        assert!(b.get_opt::<usize>("threads").is_err());
     }
 
     #[test]

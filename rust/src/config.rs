@@ -12,6 +12,7 @@
 //! [solver]
 //! epsilon = 0.002
 //! outer_iters = 10
+//! threads = 1        # per-job kernel threads (0 = all cores)
 //! ```
 
 use crate::error::{Error, Result};

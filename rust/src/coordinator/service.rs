@@ -36,6 +36,10 @@ pub struct CoordinatorConfig {
     pub sinkhorn_max_iters: usize,
     /// Inner Sinkhorn tolerance.
     pub sinkhorn_tolerance: f64,
+    /// Per-job thread budget for the solver's hot kernels (`1` =
+    /// serial; `0` = all cores — use with `native_workers = 1` to
+    /// avoid oversubscription, the budgets multiply).
+    pub solver_threads: usize,
     /// How long `submit` may block under backpressure.
     pub submit_timeout: Duration,
 }
@@ -52,6 +56,7 @@ impl Default for CoordinatorConfig {
             outer_iters: 10,
             sinkhorn_max_iters: 1000,
             sinkhorn_tolerance: 1e-9,
+            solver_threads: 1,
             submit_timeout: Duration::from_millis(200),
         }
     }
@@ -364,6 +369,7 @@ fn gw_cfg(cfg: &CoordinatorConfig, epsilon: f64) -> GwConfig {
         sinkhorn_max_iters: cfg.sinkhorn_max_iters,
         sinkhorn_tolerance: cfg.sinkhorn_tolerance,
         sinkhorn_check_every: 10,
+        threads: cfg.solver_threads,
     }
 }
 
@@ -384,6 +390,7 @@ mod tests {
             outer_iters: 5,
             sinkhorn_max_iters: 300,
             sinkhorn_tolerance: 1e-8,
+            solver_threads: 2,
             submit_timeout: Duration::from_millis(100),
         }
     }

@@ -75,6 +75,7 @@ impl Error {
     }
 }
 
+#[cfg(feature = "pjrt")]
 impl From<anyhow::Error> for Error {
     fn from(e: anyhow::Error) -> Self {
         Error::Runtime(format!("{e:#}"))

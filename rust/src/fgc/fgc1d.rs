@@ -5,10 +5,11 @@
 //! followed by `G = D̃_M·A` (vectorized scans carrying row vectors),
 //! both via the recurrence in [`crate::fgc::scan`].
 
-use super::scan::{apply_dtilde_vec, dtilde_cols, dtilde_rows};
+use super::scan::{apply_dtilde_vec, dtilde_cols_par, dtilde_rows_par};
 use crate::error::{Error, Result};
 use crate::grid::{Binomial, Grid1d};
 use crate::linalg::Mat;
+use crate::parallel::Parallelism;
 
 /// Reusable buffers for the 1D FGC pass — the mirror-descent loop
 /// calls [`dxgdy_1d`] every iteration; keeping the intermediate `A`
@@ -21,6 +22,8 @@ pub struct Workspace1d {
     carry: Vec<f64>,
     /// Binomial table (shared with every scan).
     binom: Binomial,
+    /// Thread budget for the batched scans.
+    par: Parallelism,
     k: u32,
 }
 
@@ -29,10 +32,16 @@ impl Workspace1d {
     /// covers `2k` so the same workspace also serves the squared-
     /// distance products in `C₁`.
     pub fn new(m: usize, n: usize, k: u32) -> Self {
+        Self::with_parallelism(m, n, k, Parallelism::SERIAL)
+    }
+
+    /// [`Workspace1d::new`] with a thread budget for the scans.
+    pub fn with_parallelism(m: usize, n: usize, k: u32, par: Parallelism) -> Self {
         Workspace1d {
             a: vec![0.0; m * n],
             carry: vec![0.0; (k as usize + 1).max(2 * k as usize + 1) * n],
             binom: Binomial::new((2 * k as usize).max(4)),
+            par,
             k,
         }
     }
@@ -79,10 +88,10 @@ pub fn dxgdy_1d(
             m * n
         )));
     }
-    // A = Γ · D̃_N  (scan every contiguous row)
-    dtilde_rows(k, false, m, n, gamma.as_slice(), &mut ws.a, &ws.binom);
-    // G = D̃_M · A  (vectorized column scan)
-    dtilde_cols(
+    // A = Γ · D̃_N  (scan every contiguous row; rows over thread blocks)
+    dtilde_rows_par(k, false, m, n, gamma.as_slice(), &mut ws.a, &ws.binom, ws.par)?;
+    // G = D̃_M · A  (vectorized column scan; column stripes over threads)
+    dtilde_cols_par(
         k,
         false,
         m,
@@ -91,6 +100,7 @@ pub fn dxgdy_1d(
         out.as_mut_slice(),
         &mut ws.carry,
         &ws.binom,
+        ws.par,
     );
     let scale = gx.scale(k) * gy.scale(k);
     if scale != 1.0 {

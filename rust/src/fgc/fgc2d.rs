@@ -13,11 +13,18 @@
 //! Kronecker factor application into 1D scans: `P_s` acts along the
 //! grid-row axis, `P_{k−s}` along the grid-column axis, so `D̂x`
 //! costs `O(k³n²)` and the full gradient product `O(k³N²)`, `N = n²`.
+//!
+//! Parallel decomposition: the row pass of the gradient product
+//! (`A = Γ·D̂_Y`) splits the plan's rows over thread blocks, each with
+//! its own scratch carved from the workspace; the column pass
+//! (`G = D̂_X·A`) splits the batched scans into column stripes via
+//! [`dtilde_cols_par`]. Everything stays allocation-free per call.
 
-use super::scan::{dtilde_cols, dtilde_rows};
+use super::scan::{check_scan_exponent, dtilde_cols, dtilde_cols_par, dtilde_rows};
 use crate::error::{Error, Result};
 use crate::grid::{Binomial, Grid2d};
 use crate::linalg::Mat;
+use crate::parallel::{self, Parallelism, SharedMutSlice};
 
 /// Reusable buffers for the 2D FGC pass.
 #[derive(Debug)]
@@ -26,9 +33,19 @@ pub struct Workspace2d {
     t1: Vec<f64>,
     /// Second full-size temp.
     t2: Vec<f64>,
+    /// Third full-size temp (accumulation scratch for the batched
+    /// column pass — previously a per-call allocation).
+    t3: Vec<f64>,
     /// Scan carries (sized for the widest batched scan).
     carry: Vec<f64>,
+    /// Per-thread `n_y²` temporaries for the parallel row pass.
+    row_t1: Vec<f64>,
+    /// Second per-thread temporary.
+    row_t2: Vec<f64>,
+    /// Per-thread scan carries for the row pass (`(2k+1)·n_y` each).
+    row_carry: Vec<f64>,
     binom: Binomial,
+    par: Parallelism,
     k: u32,
 }
 
@@ -37,13 +54,27 @@ impl Workspace2d {
     /// `(nx² × ny²)` and exponent `k`. The binomial table covers `2k`
     /// for the squared-distance products in `C₁`.
     pub fn new(nx: usize, ny: usize, k: u32) -> Self {
+        Self::with_parallelism(nx, ny, k, Parallelism::SERIAL)
+    }
+
+    /// [`Workspace2d::new`] with a thread budget for the scans.
+    pub fn with_parallelism(nx: usize, ny: usize, k: u32, par: Parallelism) -> Self {
         let full = nx * nx * ny * ny;
         let widest = (2 * k as usize + 1) * (nx * ny * ny).max(ny * ny).max(nx * nx);
+        let tlen = full.max(nx * nx).max(ny * ny);
+        let threads = par.threads();
+        let nyy = ny * ny;
+        let row_carry_each = (2 * k as usize + 1) * ny;
         Workspace2d {
-            t1: vec![0.0; full.max(nx * nx).max(ny * ny)],
-            t2: vec![0.0; full.max(nx * nx).max(ny * ny)],
+            t1: vec![0.0; tlen],
+            t2: vec![0.0; tlen],
+            t3: vec![0.0; tlen],
             carry: vec![0.0; widest],
+            row_t1: vec![0.0; threads * nyy],
+            row_t2: vec![0.0; threads * nyy],
+            row_carry: vec![0.0; threads * row_carry_each],
             binom: Binomial::new((2 * k as usize).max(4)),
+            par,
             k,
         }
     }
@@ -67,16 +98,17 @@ pub fn dhat_apply(n: usize, k: u32, x: &[f64], y: &mut [f64], ws: &mut Workspace
     if ws.binom.max_n() < k as usize {
         return Err(Error::Invalid("binomial table too small".into()));
     }
+    check_scan_exponent(k)?;
     let total = n * n;
     y.fill(0.0);
     for s in 0..=k {
         let (kr, kc) = (s, k - s);
         // P_{kc} along grid-cols = right-multiply the n×n matricization.
         let t1 = &mut ws.t1[..total];
-        dtilde_rows(kc, kc == 0, n, n, x, t1, &ws.binom);
+        dtilde_rows(kc, kc == 0, n, n, x, t1, &ws.binom)?;
         // P_{kr} along grid-rows = left-multiply.
         let t2 = &mut ws.t2[..total];
-        dtilde_cols(kr, kr == 0, n, n, t1, t2, &mut ws.carry, &ws.binom);
+        dtilde_cols_par(kr, kr == 0, n, n, t1, t2, &mut ws.carry, &ws.binom, ws.par);
         let coef = ws.binom.c(k as usize, s as usize);
         for (o, &v) in y.iter_mut().zip(t2.iter()) {
             *o += coef * v;
@@ -119,27 +151,63 @@ pub fn dxgdy_2d(
             m * ncols
         )));
     }
+    check_scan_exponent(k)?;
     // A = Γ·D̂_Y : every contiguous row γ_j ↦ D̂_Y γ_j (D̂ symmetric).
-    // Rows are processed with per-row n_y×n_y temporaries carved from
-    // the workspace tails to keep t1/t2 free for the column pass.
+    // Rows split over thread blocks; each block works with its own
+    // n_y×n_y temporaries carved from the per-thread workspace areas,
+    // keeping t1/t2/t3 free for the column pass.
     let nyy = gy.len();
     {
-        let a = out.as_mut_slice(); // reuse `out` to hold A
-        let mut rowtmp1 = vec![0.0; nyy];
-        let mut rowtmp2 = vec![0.0; nyy];
-        for j in 0..m {
-            let src = &gamma.as_slice()[j * ncols..(j + 1) * ncols];
-            let dst = &mut a[j * ncols..(j + 1) * ncols];
-            dhat_vec_into(gy.n, k, src, dst, &mut rowtmp1, &mut rowtmp2, &mut ws.carry, &ws.binom);
-        }
+        let Workspace2d {
+            row_t1,
+            row_t2,
+            row_carry,
+            binom,
+            par,
+            ..
+        } = ws;
+        let cw = row_carry.len() / par.threads().max(1);
+        let st1 = SharedMutSlice::new(row_t1);
+        let st2 = SharedMutSlice::new(row_t2);
+        let sc = SharedMutSlice::new(row_carry);
+        let gs = gamma.as_slice();
+        let min_rows = parallel::min_rows_for(ncols * (k as usize + 1));
+        parallel::for_row_blocks(
+            *par,
+            m,
+            ncols,
+            min_rows,
+            out.as_mut_slice(), // reuse `out` to hold A
+            |bidx, rr, ablk| {
+                // SAFETY: block indices are unique per region, so the
+                // per-block scratch ranges are disjoint.
+                let t1 = unsafe { st1.range_mut(bidx * nyy..(bidx + 1) * nyy) };
+                let t2 = unsafe { st2.range_mut(bidx * nyy..(bidx + 1) * nyy) };
+                let carry = unsafe { sc.range_mut(bidx * cw..(bidx + 1) * cw) };
+                for (local, j) in rr.enumerate() {
+                    let src = &gs[j * ncols..(j + 1) * ncols];
+                    let dst = &mut ablk[local * ncols..(local + 1) * ncols];
+                    dhat_vec_into(gy.n, k, src, dst, t1, t2, carry, binom)
+                        .expect("exponent pre-validated");
+                }
+            },
+        );
     }
     // G = D̂_X · A (batched column pass); A currently lives in `out`,
     // result lands in t2 then is copied back with the h^k scaling.
     {
-        let a_copy = &mut ws.t1[..m * ncols];
+        let Workspace2d {
+            t1,
+            t2,
+            t3,
+            carry,
+            binom,
+            par,
+            ..
+        } = ws;
+        let a_copy = &mut t1[..m * ncols];
         a_copy.copy_from_slice(out.as_slice());
-        let g = &mut ws.t2[..m * ncols];
-        // dhat_cols needs separate temps; reuse out's buffer as t1-temp.
+        let g = &mut t2[..m * ncols];
         dhat_cols_with(
             gx.n,
             ncols,
@@ -147,8 +215,10 @@ pub fn dxgdy_2d(
             a_copy,
             g,
             out.as_mut_slice(),
-            &mut ws.carry,
-            &ws.binom,
+            &mut t3[..m * ncols],
+            carry,
+            binom,
+            *par,
         );
         let scale = gx.scale(k) * gy.scale(k);
         for (o, &v) in out.as_mut_slice().iter_mut().zip(g.iter()) {
@@ -158,8 +228,11 @@ pub fn dxgdy_2d(
     Ok(())
 }
 
-/// `dhat_cols` variant with a caller-supplied intermediate buffer
-/// (used when the workspace temps are already occupied).
+/// `dhat_cols` variant with caller-supplied intermediate buffers
+/// (used when the workspace temps are already occupied). `scratch`
+/// replaces what used to be a per-call `O(N²)` allocation, keeping
+/// the mirror-descent loop allocation-free.
+#[allow(clippy::too_many_arguments)]
 fn dhat_cols_with(
     n: usize,
     ncols: usize,
@@ -167,32 +240,36 @@ fn dhat_cols_with(
     x: &[f64],
     out: &mut [f64],
     tmp: &mut [f64],
+    scratch: &mut [f64],
     carry: &mut [f64],
     binom: &Binomial,
+    par: Parallelism,
 ) {
     let total = n * n * ncols;
     assert_eq!(x.len(), total);
-    assert!(out.len() >= total && tmp.len() >= total);
+    assert!(out.len() >= total && tmp.len() >= total && scratch.len() >= total);
     out.fill(0.0);
-    // Accumulate into `out` using tmp as the single intermediate:
-    // term = P_kr ⊗ P_kc applied via two passes; we fold the second
-    // pass's output directly with an accumulating variant.
+    // Each term = (P_kr ⊗ P_kc) x via two batched passes; the second
+    // pass scans all n·n rows at once, striped over threads.
     for s in 0..=k {
         let (kr, kc) = (s, k - s);
         for b in 0..n {
             let blk = &x[b * n * ncols..(b + 1) * n * ncols];
             let dst = &mut tmp[b * n * ncols..(b + 1) * n * ncols];
-            dtilde_cols(kc, kc == 0, n, ncols, blk, dst, carry, binom);
+            dtilde_cols_par(kc, kc == 0, n, ncols, blk, dst, carry, binom, par);
         }
         let coef = binom.c(k as usize, s as usize);
-        // Second factor + accumulate: run the batched scan into a
-        // stack-local chunked loop is not possible without another
-        // buffer; instead scan into the first n·ncols of `carry`?
-        // carry is too small. Use a dedicated accumulate pass: scan
-        // tmp in place is invalid (scan reads all rows). Allocate one
-        // scratch lazily per call — amortized by the O(k³N²) work.
-        let mut scratch = vec![0.0; total];
-        dtilde_cols(kr, kr == 0, n, n * ncols, &tmp[..total], &mut scratch, carry, binom);
+        dtilde_cols_par(
+            kr,
+            kr == 0,
+            n,
+            n * ncols,
+            &tmp[..total],
+            &mut scratch[..total],
+            carry,
+            binom,
+            par,
+        );
         for (o, &v) in out[..total].iter_mut().zip(scratch.iter()) {
             *o += coef * v;
         }
@@ -200,7 +277,8 @@ fn dhat_cols_with(
 }
 
 /// Single-vector `D̂x` with fully caller-provided buffers (row pass of
-/// the gradient product).
+/// the gradient product; scans stay serial because the caller already
+/// distributed rows over the thread budget).
 #[allow(clippy::too_many_arguments)]
 fn dhat_vec_into(
     n: usize,
@@ -211,19 +289,20 @@ fn dhat_vec_into(
     t2: &mut [f64],
     carry: &mut [f64],
     binom: &Binomial,
-) {
+) -> Result<()> {
     let total = n * n;
     debug_assert_eq!(x.len(), total);
     y.fill(0.0);
     for s in 0..=k {
         let (kr, kc) = (s, k - s);
-        dtilde_rows(kc, kc == 0, n, n, x, t1, binom);
+        dtilde_rows(kc, kc == 0, n, n, x, t1, binom)?;
         dtilde_cols(kr, kr == 0, n, n, t1, t2, carry, binom);
         let coef = binom.c(k as usize, s as usize);
         for (o, &v) in y.iter_mut().zip(t2.iter()) {
             *o += coef * v;
         }
     }
+    Ok(())
 }
 
 /// `(D ⊙ D)·w` for a 2D grid distance matrix (constant term `C₁`):
@@ -240,7 +319,7 @@ pub fn sq_dist_apply_2d(g: &Grid2d, k: u32, w: &[f64], ws: &mut Workspace2d) -> 
     let mut y = vec![0.0; g.len()];
     let mut t1 = vec![0.0; g.len()];
     let mut t2 = vec![0.0; g.len()];
-    dhat_vec_into(g.n, 2 * k, w, &mut y, &mut t1, &mut t2, &mut ws.carry, &ws.binom);
+    dhat_vec_into(g.n, 2 * k, w, &mut y, &mut t1, &mut t2, &mut ws.carry, &ws.binom)?;
     let s = g.scale(k);
     let s2 = s * s;
     for v in &mut y {
@@ -289,6 +368,28 @@ mod tests {
             let mut out = Mat::zeros(gx.len(), gy.len());
             dxgdy_2d(&gx, &gy, k, &gamma, &mut out, &mut ws).unwrap();
             assert_slices_close(out.as_slice(), oracle.as_slice(), 1e-10, 1e-12, &format!("2d k={k}"));
+        }
+    }
+
+    #[test]
+    fn dxgdy_2d_parallel_matches_serial() {
+        // nx² = 121 rows against min_rows_for(36·2) = 56 ⇒ the row
+        // pass genuinely splits into ≥ 2 blocks, exercising the
+        // per-block SharedMutSlice scratch carving.
+        let (nx, ny, k) = (11, 6, 1);
+        let gx = Grid2d::new(nx, 0.2);
+        let gy = Grid2d::new(ny, 0.3);
+        let mut rng = Rng::seeded(91);
+        let gamma = Mat::from_fn(gx.len(), gy.len(), |_, _| rng.uniform() - 0.4);
+        let mut serial_ws = Workspace2d::new(nx, ny, k);
+        let mut serial = Mat::zeros(gx.len(), gy.len());
+        dxgdy_2d(&gx, &gy, k, &gamma, &mut serial, &mut serial_ws).unwrap();
+        for threads in [2usize, 4, 7] {
+            let mut ws = Workspace2d::with_parallelism(nx, ny, k, Parallelism::new(threads));
+            let mut out = Mat::zeros(gx.len(), gy.len());
+            dxgdy_2d(&gx, &gy, k, &gamma, &mut out, &mut ws).unwrap();
+            let d = crate::linalg::frobenius_diff(&out, &serial).unwrap();
+            assert!(d < 1e-12, "threads={threads}: {d:e}");
         }
     }
 

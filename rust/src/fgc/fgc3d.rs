@@ -137,7 +137,7 @@ pub fn dhat3_apply(n: usize, k: u32, x: &[f64], y: &mut [f64], ws: &mut Workspac
             }
             // axis 2 (x): contiguous row scans over n² rows of width n.
             let t1 = &mut ws.t1[..nn];
-            dtilde_rows(t, t == 0, n * n, n, t2, t1, &ws.binom);
+            dtilde_rows(t, t == 0, n * n, n, t2, t1, &ws.binom)?;
             for (o, &v) in y.iter_mut().zip(t1.iter()) {
                 *o += coef * v;
             }

@@ -29,8 +29,35 @@
 //! * [`dtilde_rows`] applies `(L+Lᵀ)` to **every row** (equivalently
 //!   right-multiplies by the symmetric `D̃`), scanning each contiguous
 //!   row with scalar carries.
+//!
+//! Parallel forms ([`dtilde_cols_par`], [`dtilde_rows_par`]): the scan
+//! carries couple *rows to rows* but never column to column, so column
+//! stripes of `dtilde_cols` are fully independent (each stripe runs
+//! the same forward/backward scans over all rows with its own carry
+//! block) and the rows of `dtilde_rows` are trivially independent.
+//! Both decompositions are exact — every stripe/row block computes
+//! bitwise what the serial scan computes for those indices — so the
+//! parallel kernels need no tolerance at all relative to serial.
 
+use crate::error::{Error, Result};
 use crate::grid::Binomial;
+use crate::parallel::{self, Parallelism, SharedMutSlice};
+
+/// Largest distance exponent the scalar-carry scans support (the
+/// stack-allocated carry block holds `k+1 ≤ 16` lanes — far beyond
+/// any practical metric exponent; the paper uses k ∈ {1, 2}).
+pub const MAX_SCAN_EXPONENT: u32 = 15;
+
+/// Validate `k` against [`MAX_SCAN_EXPONENT`]. Kernels with
+/// pre-validated exponents may call scans infallibly afterwards.
+pub fn check_scan_exponent(k: u32) -> Result<()> {
+    if k > MAX_SCAN_EXPONENT {
+        return Err(Error::Invalid(format!(
+            "scan exponent k={k} exceeds the supported maximum {MAX_SCAN_EXPONENT}"
+        )));
+    }
+    Ok(())
+}
 
 /// `y = L x` with exponent `k` (unscaled; `L_{ij} = (i−j)^k`, `i>j`).
 pub fn apply_l_vec(k: u32, x: &[f64], y: &mut [f64], binom: &Binomial) {
@@ -108,38 +135,119 @@ pub fn dtilde_cols(
     carry: &mut [f64],
     binom: &Binomial,
 ) {
+    dtilde_cols_par(
+        k,
+        diag_one,
+        rows,
+        cols,
+        x,
+        out,
+        carry,
+        binom,
+        Parallelism::SERIAL,
+    );
+}
+
+/// [`dtilde_cols`] over column stripes on scoped threads. The stripe
+/// decomposition is exact (scan carries never cross columns), so the
+/// result is bitwise identical to the serial scan for every thread
+/// count. `carry` must still hold `(k+1)·cols`; stripes carve disjoint
+/// carry blocks out of it, so the hot path stays allocation-free.
+#[allow(clippy::too_many_arguments)]
+pub fn dtilde_cols_par(
+    k: u32,
+    diag_one: bool,
+    rows: usize,
+    cols: usize,
+    x: &[f64],
+    out: &mut [f64],
+    carry: &mut [f64],
+    binom: &Binomial,
+    par: Parallelism,
+) {
     assert_eq!(x.len(), rows * cols);
     assert_eq!(out.len(), rows * cols);
     let kk = k as usize;
     assert!(carry.len() >= (kk + 1) * cols);
-    let carry = &mut carry[..(kk + 1) * cols];
+
+    let min_cols = parallel::min_rows_for(rows * (kk + 1)).max(16);
+    let nb = par.blocks(cols, min_cols);
+    if nb <= 1 {
+        let shared = SharedMutSlice::new(out);
+        dtilde_cols_span(kk, diag_one, rows, cols, 0..cols, x, &shared, carry, binom);
+        return;
+    }
+    let shared = SharedMutSlice::new(out);
+    std::thread::scope(|s| {
+        let mut carry_rest = &mut carry[..];
+        for b in 0..nb {
+            let span = parallel::block_range(cols, nb, b);
+            let (cblk, tail) =
+                std::mem::take(&mut carry_rest).split_at_mut((kk + 1) * span.len());
+            carry_rest = tail;
+            if b == nb - 1 {
+                dtilde_cols_span(kk, diag_one, rows, cols, span, x, &shared, cblk, binom);
+            } else {
+                let sh = &shared;
+                s.spawn(move || {
+                    dtilde_cols_span(kk, diag_one, rows, cols, span, x, sh, cblk, binom)
+                });
+            }
+        }
+    });
+}
+
+/// One column stripe `span` of the batched scan: identical to the full
+/// scan restricted to those columns (row stride stays `stride`).
+#[allow(clippy::too_many_arguments)]
+fn dtilde_cols_span(
+    kk: usize,
+    diag_one: bool,
+    rows: usize,
+    stride: usize,
+    span: std::ops::Range<usize>,
+    x: &[f64],
+    out: &SharedMutSlice<'_>,
+    carry: &mut [f64],
+    binom: &Binomial,
+) {
+    let width = span.len();
+    if width == 0 {
+        return;
+    }
+    let carry = &mut carry[..(kk + 1) * width];
 
     // ---- forward pass: out_row(i) = a_{i,k+1}; update carries ----
     carry.fill(0.0);
     for i in 0..rows {
-        let xrow = &x[i * cols..(i + 1) * cols];
-        let orow = &mut out[i * cols..(i + 1) * cols];
-        orow.copy_from_slice(&carry[kk * cols..(kk + 1) * cols]);
+        let base = i * stride;
+        let xrow = &x[base + span.start..base + span.end];
+        // SAFETY: stripes receive disjoint `span`s, so per-row ranges
+        // never overlap across concurrent callers.
+        let orow = unsafe { out.range_mut(base + span.start..base + span.end) };
+        orow.copy_from_slice(&carry[kk * width..(kk + 1) * width]);
         if diag_one {
             for (o, &xv) in orow.iter_mut().zip(xrow) {
                 *o += xv;
             }
         }
-        update_carries(kk, cols, xrow, carry, binom);
+        update_carries(kk, width, xrow, carry, binom);
     }
 
     // ---- backward pass: out_row(i) += b_{i,k+1} ----
     carry.fill(0.0);
     for i in (0..rows).rev() {
-        let (xrow, orow) = (&x[i * cols..(i + 1) * cols], i * cols);
+        let base = i * stride;
+        let xrow = &x[base + span.start..base + span.end];
+        // SAFETY: as above — same disjoint stripe.
+        let orow = unsafe { out.range_mut(base + span.start..base + span.end) };
         {
-            let top = &carry[kk * cols..(kk + 1) * cols];
-            let orow = &mut out[orow..orow + cols];
+            let top = &carry[kk * width..(kk + 1) * width];
             for (o, &c) in orow.iter_mut().zip(top) {
                 *o += c;
             }
         }
-        update_carries(kk, cols, xrow, carry, binom);
+        update_carries(kk, width, xrow, carry, binom);
     }
 }
 
@@ -211,6 +319,9 @@ fn update_carries(kk: usize, cols: usize, xrow: &[f64], carry: &mut [f64], binom
 /// row-major `rows×cols` matrix `x` (i.e. `out = x · D̃` for the
 /// symmetric `D̃` of size `cols×cols`). Each contiguous row is scanned
 /// forward and backward with `k+1` scalar carries.
+///
+/// Errors with [`Error::Invalid`] when `k` exceeds
+/// [`MAX_SCAN_EXPONENT`] (the scalar carry block is stack-allocated).
 pub fn dtilde_rows(
     k: u32,
     diag_one: bool,
@@ -219,35 +330,61 @@ pub fn dtilde_rows(
     x: &[f64],
     out: &mut [f64],
     binom: &Binomial,
-) {
+) -> Result<()> {
+    dtilde_rows_par(k, diag_one, rows, cols, x, out, binom, Parallelism::SERIAL)
+}
+
+/// [`dtilde_rows`] over row blocks on scoped threads. Rows are fully
+/// independent (each carries its own scalar state), so the result is
+/// bitwise identical to the serial scan for every thread count.
+#[allow(clippy::too_many_arguments)]
+pub fn dtilde_rows_par(
+    k: u32,
+    diag_one: bool,
+    rows: usize,
+    cols: usize,
+    x: &[f64],
+    out: &mut [f64],
+    binom: &Binomial,
+    par: Parallelism,
+) -> Result<()> {
     assert_eq!(x.len(), rows * cols);
     assert_eq!(out.len(), rows * cols);
+    check_scan_exponent(k)?;
     let kk = k as usize;
-    let mut carry = [0.0f64; 16]; // k ≤ 15 is far beyond practical use
-    assert!(kk + 1 <= carry.len(), "exponent k too large");
-    for r in 0..rows {
-        let xrow = &x[r * cols..(r + 1) * cols];
-        let orow = &mut out[r * cols..(r + 1) * cols];
-        // forward (L)
-        carry[..=kk].fill(0.0);
-        for j in 0..cols {
-            orow[j] = carry[kk];
-            if diag_one {
-                orow[j] += xrow[j];
+    let min_rows = parallel::min_rows_for(cols * (kk + 1));
+    parallel::for_row_blocks(par, rows, cols, min_rows, out, |_b, rr, oblk| {
+        let mut carry = [0.0f64; MAX_SCAN_EXPONENT as usize + 1];
+        for (local, r) in rr.enumerate() {
+            let xrow = &x[r * cols..(r + 1) * cols];
+            let orow = &mut oblk[local * cols..(local + 1) * cols];
+            // forward (L)
+            carry[..=kk].fill(0.0);
+            for j in 0..cols {
+                orow[j] = carry[kk];
+                if diag_one {
+                    orow[j] += xrow[j];
+                }
+                scalar_update(kk, xrow[j], &mut carry, binom);
             }
-            scalar_update(kk, xrow[j], &mut carry, binom);
+            // backward (Lᵀ)
+            carry[..=kk].fill(0.0);
+            for j in (0..cols).rev() {
+                orow[j] += carry[kk];
+                scalar_update(kk, xrow[j], &mut carry, binom);
+            }
         }
-        // backward (Lᵀ)
-        carry[..=kk].fill(0.0);
-        for j in (0..cols).rev() {
-            orow[j] += carry[kk];
-            scalar_update(kk, xrow[j], &mut carry, binom);
-        }
-    }
+    });
+    Ok(())
 }
 
 #[inline]
-fn scalar_update(kk: usize, xv: f64, carry: &mut [f64; 16], binom: &Binomial) {
+fn scalar_update(
+    kk: usize,
+    xv: f64,
+    carry: &mut [f64; MAX_SCAN_EXPONENT as usize + 1],
+    binom: &Binomial,
+) {
     // Fused small-k fast paths mirroring `update_carries` (§Perf).
     match kk {
         0 => carry[0] += xv,
@@ -382,6 +519,35 @@ mod tests {
     }
 
     #[test]
+    fn dtilde_cols_parallel_is_bitwise_serial() {
+        let binom = Binomial::new(8);
+        let (rows, cols) = (23, 257);
+        let mut rng = Rng::seeded(404);
+        let x = Mat::from_fn(rows, cols, |_, _| rng.uniform() - 0.5);
+        for k in [0u32, 1, 2, 3] {
+            let mut serial = vec![0.0; rows * cols];
+            let mut carry = vec![0.0; (k as usize + 1) * cols];
+            dtilde_cols(k, false, rows, cols, x.as_slice(), &mut serial, &mut carry, &binom);
+            for threads in [2usize, 4, 7] {
+                let mut par_out = vec![0.0; rows * cols];
+                carry.fill(0.0);
+                dtilde_cols_par(
+                    k,
+                    false,
+                    rows,
+                    cols,
+                    x.as_slice(),
+                    &mut par_out,
+                    &mut carry,
+                    &binom,
+                    Parallelism::new(threads),
+                );
+                assert_eq!(serial, par_out, "k={k} threads={threads}");
+            }
+        }
+    }
+
+    #[test]
     fn dtilde_rows_matches_right_multiply() {
         let binom = Binomial::new(8);
         let (rows, cols) = (9, 31);
@@ -389,11 +555,21 @@ mod tests {
         let x = Mat::from_fn(rows, cols, |_, _| rng.uniform() - 0.5);
         for k in [1u32, 2] {
             let mut out = vec![0.0; rows * cols];
-            dtilde_rows(k, false, rows, cols, x.as_slice(), &mut out, &binom);
+            dtilde_rows(k, false, rows, cols, x.as_slice(), &mut out, &binom).unwrap();
             let d = dense_pow_dist(cols, k);
             let oracle = crate::linalg::matmul(&x, &d).unwrap();
             assert_slices_close(&out, oracle.as_slice(), 1e-12, 1e-12, &format!("rows k={k}"));
         }
+    }
+
+    #[test]
+    fn dtilde_rows_rejects_oversized_exponent() {
+        let binom = Binomial::new(40);
+        let x = vec![0.0; 20];
+        let mut out = vec![0.0; 20];
+        let err = dtilde_rows(16, false, 1, 20, &x, &mut out, &binom).unwrap_err();
+        assert!(matches!(err, Error::Invalid(_)), "got {err:?}");
+        assert!(dtilde_rows(15, false, 1, 20, &x, &mut out, &binom).is_ok());
     }
 
     #[test]

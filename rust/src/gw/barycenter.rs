@@ -116,7 +116,7 @@ pub fn gw_barycenter_1d(
                         gamma.as_slice(),
                         a.as_mut_slice(),
                         &binom,
-                    );
+                    )?;
                     let s = grid.scale(inp.k);
                     for x in a.as_mut_slice() {
                         *x *= s;
@@ -174,6 +174,7 @@ mod tests {
                 sinkhorn_max_iters: 300,
                 sinkhorn_tolerance: 1e-8,
                 sinkhorn_check_every: 10,
+                threads: 1,
             },
             iters: 3,
         }

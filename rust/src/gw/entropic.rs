@@ -19,8 +19,9 @@ use super::geometry::Geometry;
 use super::gradient::{GradientKind, PairOperator};
 use super::objective::{fgw_objective, gw_objective};
 use crate::error::{Error, Result};
-use crate::linalg::{outer, Mat};
-use crate::sinkhorn::{self, SinkhornOptions};
+use crate::linalg::Mat;
+use crate::parallel::Parallelism;
+use crate::sinkhorn::{self, SinkhornOptions, SinkhornWorkspace};
 use std::time::{Duration, Instant};
 
 /// Solver configuration.
@@ -36,6 +37,9 @@ pub struct GwConfig {
     pub sinkhorn_tolerance: f64,
     /// Sinkhorn convergence-check cadence.
     pub sinkhorn_check_every: usize,
+    /// Thread budget for the hot kernels (Sinkhorn sweeps, FGC scans,
+    /// dense baseline): `1` = exact serial path, `0` = all cores.
+    pub threads: usize,
 }
 
 impl Default for GwConfig {
@@ -46,6 +50,7 @@ impl Default for GwConfig {
             sinkhorn_max_iters: 1000,
             sinkhorn_tolerance: 1e-9,
             sinkhorn_check_every: 10,
+            threads: 1,
         }
     }
 }
@@ -58,6 +63,38 @@ impl GwConfig {
             tolerance: self.sinkhorn_tolerance,
             check_every: self.sinkhorn_check_every,
         }
+    }
+
+    /// The thread budget as a [`Parallelism`] value.
+    pub fn parallelism(&self) -> Parallelism {
+        Parallelism::from_config(self.threads)
+    }
+}
+
+/// Everything a solve touches per outer iteration, allocated once and
+/// reusable across solves of the same geometry pair: the gradient
+/// operator (FGC scan or dense workspaces), the persistent Sinkhorn
+/// workspace, and the Γ/∇/Π/C₁ buffers. With a warm workspace,
+/// [`EntropicGw::solve_into`] performs **zero heap allocation per
+/// outer iteration** (asserted by `tests/alloc_hotpath.rs`).
+pub struct GwWorkspace {
+    op: PairOperator,
+    sk: SinkhornWorkspace,
+    gamma: Mat,
+    grad: Mat,
+    cost: Mat,
+    constant: Mat,
+}
+
+impl GwWorkspace {
+    /// The gradient backend this workspace was built for.
+    pub fn kind(&self) -> GradientKind {
+        self.op.kind()
+    }
+
+    /// Problem shape `(M, N)` this workspace serves.
+    pub fn shape(&self) -> (usize, usize) {
+        self.gamma.shape()
     }
 }
 
@@ -113,9 +150,28 @@ impl EntropicGw {
         &self.cfg
     }
 
+    /// Build a reusable workspace for this solver's geometry pair.
+    /// One allocation site for everything the solve loop touches;
+    /// reuse it across solves via [`EntropicGw::solve_into`].
+    pub fn workspace(&self, kind: GradientKind) -> Result<GwWorkspace> {
+        let par = self.cfg.parallelism();
+        let (m, n) = (self.geom_x.len(), self.geom_y.len());
+        let op =
+            PairOperator::with_parallelism(self.geom_x.clone(), self.geom_y.clone(), kind, par)?;
+        Ok(GwWorkspace {
+            op,
+            sk: SinkhornWorkspace::new(m, n, par),
+            gamma: Mat::zeros(m, n),
+            grad: Mat::zeros(m, n),
+            cost: Mat::zeros(m, n),
+            constant: Mat::zeros(m, n),
+        })
+    }
+
     /// Solve pure GW (θ = 1, no feature cost).
     pub fn solve(&self, u: &[f64], v: &[f64], kind: GradientKind) -> Result<GwSolution> {
-        self.solve_inner(u, v, None, 1.0, kind)
+        let mut ws = self.workspace(kind)?;
+        self.solve_into(u, v, &mut ws)
     }
 
     /// Solve FGW with feature cost `C = [c_ip]` and trade-off `θ`
@@ -129,10 +185,31 @@ impl EntropicGw {
         theta: f64,
         kind: GradientKind,
     ) -> Result<GwSolution> {
+        let mut ws = self.workspace(kind)?;
+        self.solve_fgw_into(u, v, feature_cost, theta, &mut ws)
+    }
+
+    /// Workspace form of [`EntropicGw::solve`]: all per-iteration
+    /// state lives in `ws` (reusable across solves over the same
+    /// geometry pair — the coordinator's batching relies on this), so
+    /// the outer loop performs zero heap allocation.
+    pub fn solve_into(&self, u: &[f64], v: &[f64], ws: &mut GwWorkspace) -> Result<GwSolution> {
+        self.solve_inner(u, v, None, 1.0, ws)
+    }
+
+    /// Workspace form of [`EntropicGw::solve_fgw`].
+    pub fn solve_fgw_into(
+        &self,
+        u: &[f64],
+        v: &[f64],
+        feature_cost: &Mat,
+        theta: f64,
+        ws: &mut GwWorkspace,
+    ) -> Result<GwSolution> {
         if !(0.0..=1.0).contains(&theta) {
             return Err(Error::Invalid(format!("theta must be in [0,1], got {theta}")));
         }
-        self.solve_inner(u, v, Some(feature_cost), theta, kind)
+        self.solve_inner(u, v, Some(feature_cost), theta, ws)
     }
 
     fn solve_inner(
@@ -141,7 +218,7 @@ impl EntropicGw {
         v: &[f64],
         feature_cost: Option<&Mat>,
         theta: f64,
-        kind: GradientKind,
+        ws: &mut GwWorkspace,
     ) -> Result<GwSolution> {
         let t_start = Instant::now();
         let (m, n) = (self.geom_x.len(), self.geom_y.len());
@@ -161,38 +238,76 @@ impl EntropicGw {
                 ));
             }
         }
+        if ws.gamma.shape() != (m, n) {
+            return Err(Error::shape(
+                "EntropicGw::solve_into (workspace)",
+                format!("{m}x{n}"),
+                format!("{:?}", ws.gamma.shape()),
+            ));
+        }
+        // A workspace from a different solver with the same (M, N) but
+        // another metric/exponent would silently produce wrong plans —
+        // geometry comparison is O(1) for grids (O(N²) only for Dense).
+        if ws.op.geom_x() != &self.geom_x || ws.op.geom_y() != &self.geom_y {
+            return Err(Error::Invalid(
+                "EntropicGw::solve_into: workspace was built for a different geometry pair"
+                    .into(),
+            ));
+        }
         check_distribution(u, "u")?;
         check_distribution(v, "v")?;
 
-        let mut op = PairOperator::new(self.geom_x.clone(), self.geom_y.clone(), kind)?;
+        let GwWorkspace {
+            op,
+            sk,
+            gamma,
+            grad,
+            cost,
+            constant,
+        } = ws;
+        // One regime decision per solve; consecutive outer iterations
+        // share their cost conditioning (see SinkhornWorkspace docs).
+        sk.reset_regime();
 
         // Constant cost term: GW's C₁ (θ=1) or FGW's C₂ (Remark 2.2):
         //   C₂ = (1−θ)·C⊙C + 2θ·[cx_i + cy_p] .
         let (cx, cy) = op.c1_halves(u, v)?;
-        let constant = {
-            let mut base = Mat::from_fn(m, n, |i, p| 2.0 * theta * (cx[i] + cy[p]));
+        {
+            let base = constant.as_mut_slice();
+            for i in 0..m {
+                let cxi = cx[i];
+                for (b, &cyp) in base[i * n..(i + 1) * n].iter_mut().zip(&cy) {
+                    *b = 2.0 * theta * (cxi + cyp);
+                }
+            }
             if let Some(c) = feature_cost {
                 let w = 1.0 - theta;
                 if w != 0.0 {
-                    for (b, &cc) in base.as_mut_slice().iter_mut().zip(c.as_slice()) {
+                    for (b, &cc) in base.iter_mut().zip(c.as_slice()) {
                         *b += w * cc * cc;
                     }
                 }
             }
-            base
-        };
+        }
 
         let sk_opts = self.cfg.sinkhorn_options();
-        let mut gamma = outer(u, v);
-        let mut grad = Mat::zeros(m, n);
-        let mut cost = Mat::zeros(m, n);
+        // Γ⁰ = u vᵀ
+        {
+            let gs = gamma.as_mut_slice();
+            for i in 0..m {
+                let ui = u[i];
+                for (g, &vj) in gs[i * n..(i + 1) * n].iter_mut().zip(v) {
+                    *g = ui * vj;
+                }
+            }
+        }
         let mut grad_time = Duration::ZERO;
         let mut sinkhorn_time = Duration::ZERO;
         let mut sk_total = 0usize;
 
         for _ in 0..self.cfg.outer_iters {
             let t0 = Instant::now();
-            op.dxgdy(&gamma, &mut grad)?;
+            op.dxgdy(gamma, grad)?;
             // Π = constant − 4θ·G
             let four_theta = 4.0 * theta;
             for ((c, &k0), &g) in cost
@@ -206,19 +321,20 @@ impl EntropicGw {
             grad_time += t0.elapsed();
 
             let t1 = Instant::now();
-            let res = sinkhorn::solve(&cost, u, v, &sk_opts)?;
+            // The plan lands straight in `gamma` — no per-iteration
+            // buffer swap or allocation.
+            let stats = sinkhorn::solve_into(cost, u, v, &sk_opts, sk, gamma)?;
             sinkhorn_time += t1.elapsed();
-            sk_total += res.iterations;
-            gamma = res.plan;
+            sk_total += stats.iterations;
         }
 
         let objective = match feature_cost {
-            Some(c) => fgw_objective(&mut op, &gamma, c, theta)?,
-            None => gw_objective(&mut op, &gamma)?,
+            Some(c) => fgw_objective(op, gamma, c, theta)?,
+            None => gw_objective(op, gamma)?,
         };
 
         Ok(GwSolution {
-            plan: gamma,
+            plan: gamma.clone(),
             objective,
             outer_iterations: self.cfg.outer_iters,
             sinkhorn_iterations: sk_total,
@@ -268,6 +384,7 @@ mod tests {
             sinkhorn_max_iters: 5000,
             sinkhorn_tolerance: 1e-10,
             sinkhorn_check_every: 10,
+            threads: 1,
         }
     }
 
@@ -342,6 +459,56 @@ mod tests {
         let a = s1.solve_fgw(&u, &v, &c, 0.0, GradientKind::Fgc).unwrap();
         let b = s2.solve_fgw(&u, &v, &c, 0.0, GradientKind::Fgc).unwrap();
         assert!(frobenius_diff(&a.plan, &b.plan).unwrap() < 1e-10);
+    }
+
+    #[test]
+    fn multithreaded_solve_matches_serial() {
+        // The acceptance bar of the parallel engine: any thread count
+        // reproduces the serial plan to ‖ΔΓ‖_F < 1e-12.
+        let (m, n) = (96, 80);
+        let (u, v) = random_dists(m, n, 77);
+        let serial = EntropicGw::grid_1d(m, n, 1, cfg_small())
+            .solve(&u, &v, GradientKind::Fgc)
+            .unwrap();
+        for threads in [2usize, 4, 7] {
+            let solver = EntropicGw::grid_1d(
+                m,
+                n,
+                1,
+                GwConfig {
+                    threads,
+                    ..cfg_small()
+                },
+            );
+            let par = solver.solve(&u, &v, GradientKind::Fgc).unwrap();
+            let d = frobenius_diff(&par.plan, &serial.plan).unwrap();
+            assert!(d < 1e-12, "threads={threads}: ‖ΔΓ‖_F = {d:e}");
+            assert!((par.objective - serial.objective).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn workspace_reuse_is_exact() {
+        // Two solves through one workspace must equal two fresh solves.
+        let n = 40;
+        let (u, v) = random_dists(n, n, 21);
+        let (u2, v2) = random_dists(n, n, 22);
+        let solver = EntropicGw::grid_1d(n, n, 1, cfg_small());
+        let mut ws = solver.workspace(GradientKind::Fgc).unwrap();
+        let a1 = solver.solve_into(&u, &v, &mut ws).unwrap();
+        let a2 = solver.solve_into(&u2, &v2, &mut ws).unwrap();
+        let b1 = solver.solve(&u, &v, GradientKind::Fgc).unwrap();
+        let b2 = solver.solve(&u2, &v2, GradientKind::Fgc).unwrap();
+        assert!(frobenius_diff(&a1.plan, &b1.plan).unwrap() < 1e-14);
+        assert!(frobenius_diff(&a2.plan, &b2.plan).unwrap() < 1e-14);
+        // Mismatched workspace shape is rejected.
+        let other = EntropicGw::grid_1d(n + 1, n, 1, cfg_small());
+        let mut bad = other.workspace(GradientKind::Fgc).unwrap();
+        assert!(solver.solve_into(&u, &v, &mut bad).is_err());
+        // Same shape but different metric exponent is also rejected.
+        let other_k = EntropicGw::grid_1d(n, n, 2, cfg_small());
+        let mut bad_k = other_k.workspace(GradientKind::Fgc).unwrap();
+        assert!(solver.solve_into(&u, &v, &mut bad_k).is_err());
     }
 
     #[test]

@@ -11,7 +11,7 @@ use crate::linalg::Mat;
 /// arbitrary symmetric distance matrix (used by the baseline tests
 /// and by the free side of barycenter problems, which FGC cannot
 /// accelerate).
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub enum Geometry {
     /// 1D uniform grid with metric `h^k|i−j|^k` (paper eq. 2.2).
     Grid1d {

@@ -8,8 +8,9 @@
 
 use super::geometry::Geometry;
 use crate::error::{Error, Result};
-use crate::fgc::{dxgdy_1d, dxgdy_2d, naive::dxgdy_dense, Workspace1d, Workspace2d};
-use crate::linalg::{matmul, Mat};
+use crate::fgc::{dxgdy_1d, dxgdy_2d, Workspace1d, Workspace2d};
+use crate::linalg::{matmul_into, Mat};
+use crate::parallel::Parallelism;
 
 /// Which gradient path to use.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -47,12 +48,27 @@ pub struct PairOperator {
     /// dense geometries.
     dense_x: Option<Mat>,
     dense_y: Option<Mat>,
+    /// `D_X·Γ` intermediate for the dense path (reused every
+    /// iteration so the baseline is also allocation-free).
+    dense_tmp: Option<Mat>,
     ws: Ws,
+    par: Parallelism,
 }
 
 impl PairOperator {
-    /// Bind a geometry pair for the given backend.
+    /// Bind a geometry pair for the given backend (serial kernels).
     pub fn new(geom_x: Geometry, geom_y: Geometry, kind: GradientKind) -> Result<Self> {
+        Self::with_parallelism(geom_x, geom_y, kind, Parallelism::SERIAL)
+    }
+
+    /// Bind a geometry pair with a thread budget shared by the FGC
+    /// scans and the dense matmul baseline.
+    pub fn with_parallelism(
+        geom_x: Geometry,
+        geom_y: Geometry,
+        kind: GradientKind,
+        par: Parallelism,
+    ) -> Result<Self> {
         let ws = match (&geom_x, &geom_y, kind) {
             (Geometry::Grid1d { grid: gx, k: kx }, Geometry::Grid1d { grid: gy, k: ky }, GradientKind::Fgc) => {
                 if kx != ky {
@@ -60,7 +76,7 @@ impl PairOperator {
                         "FGC requires k_X = k_Y (got {kx} vs {ky}); see paper §2 footnote"
                     )));
                 }
-                Ws::One(Box::new(Workspace1d::new(gx.n, gy.n, *kx)))
+                Ws::One(Box::new(Workspace1d::with_parallelism(gx.n, gy.n, *kx, par)))
             }
             (Geometry::Grid2d { grid: gx, k: kx }, Geometry::Grid2d { grid: gy, k: ky }, GradientKind::Fgc) => {
                 if kx != ky {
@@ -68,7 +84,7 @@ impl PairOperator {
                         "FGC requires k_X = k_Y (got {kx} vs {ky})"
                     )));
                 }
-                Ws::Two(Box::new(Workspace2d::new(gx.n, gy.n, *kx)))
+                Ws::Two(Box::new(Workspace2d::with_parallelism(gx.n, gy.n, *kx, par)))
             }
             _ => Ws::None,
         };
@@ -89,7 +105,9 @@ impl PairOperator {
             kind,
             dense_x,
             dense_y,
+            dense_tmp: None,
             ws,
+            par,
         })
     }
 
@@ -113,11 +131,18 @@ impl PairOperator {
         match self.kind {
             GradientKind::Fgc => self.dxgdy_fast(gamma, out),
             GradientKind::Naive => {
-                let dx = self.dense_x.as_ref().expect("naive path caches D_X");
-                let dy = self.dense_y.as_ref().expect("naive path caches D_Y");
-                let g = dxgdy_dense(dx, dy, gamma)?;
-                out.as_mut_slice().copy_from_slice(g.as_slice());
-                Ok(())
+                let PairOperator {
+                    dense_x,
+                    dense_y,
+                    dense_tmp,
+                    par,
+                    ..
+                } = self;
+                let dx = dense_x.as_ref().expect("naive path caches D_X");
+                let dy = dense_y.as_ref().expect("naive path caches D_Y");
+                let tmp = ensure_tmp(dense_tmp, dx.rows(), gamma.cols());
+                matmul_into(dx, gamma, tmp, *par)?;
+                matmul_into(tmp, dy, out, *par)
             }
         }
     }
@@ -133,16 +158,20 @@ impl PairOperator {
             // Mixed / dense geometries: fall back to dense products
             // (used by barycenters, where one side is a free matrix).
             _ => {
-                let dx = self
-                    .dense_x
-                    .get_or_insert_with(|| self.geom_x.dense());
-                let dy = self
-                    .dense_y
-                    .get_or_insert_with(|| self.geom_y.dense());
-                let t = matmul(dx, gamma)?;
-                let g = matmul(&t, dy)?;
-                out.as_mut_slice().copy_from_slice(g.as_slice());
-                Ok(())
+                let PairOperator {
+                    geom_x,
+                    geom_y,
+                    dense_x,
+                    dense_y,
+                    dense_tmp,
+                    par,
+                    ..
+                } = self;
+                let dx = dense_x.get_or_insert_with(|| geom_x.dense());
+                let dy = dense_y.get_or_insert_with(|| geom_y.dense());
+                let tmp = ensure_tmp(dense_tmp, dx.rows(), gamma.cols());
+                matmul_into(dx, gamma, tmp, *par)?;
+                matmul_into(tmp, dy, out, *par)
             }
         }
     }
@@ -153,6 +182,15 @@ impl PairOperator {
     pub fn c1_halves(&self, u: &[f64], v: &[f64]) -> Result<(Vec<f64>, Vec<f64>)> {
         Ok((self.geom_x.sq_apply(u)?, self.geom_y.sq_apply(v)?))
     }
+}
+
+/// The dense-path intermediate, (re)sized on first use and whenever
+/// the plan shape changes (it never does within one operator's life).
+fn ensure_tmp<'a>(slot: &'a mut Option<Mat>, rows: usize, cols: usize) -> &'a mut Mat {
+    if slot.as_ref().map(|m| m.shape()) != Some((rows, cols)) {
+        *slot = Some(Mat::zeros(rows, cols));
+    }
+    slot.as_mut().expect("just ensured")
 }
 
 #[cfg(test)]

@@ -23,7 +23,7 @@ pub mod ugw;
 
 pub use barycenter::{gw_barycenter_1d, BarycenterConfig, BarycenterResult};
 pub use coot::{coot, CootConfig, CootData, CootSolution};
-pub use entropic::{EntropicGw, GwConfig, GwSolution};
+pub use entropic::{EntropicGw, GwConfig, GwSolution, GwWorkspace};
 pub use geometry::Geometry;
 pub use gradient::{GradientKind, PairOperator};
 pub use objective::{fgw_objective, gw_objective};

@@ -22,11 +22,14 @@
 //!   worker pool, and latency/throughput metrics.
 //!
 //! Supporting substrates built from scratch (the offline environment
-//! vendors only `xla` + `anyhow`): [`prng`] (SplitMix64/xoshiro256++),
-//! [`linalg`] (dense row-major matrices), [`config`] (key=value config
-//! files), [`cli`] (argument parsing), [`bench_util`] (timing +
-//! log-log complexity fits) and [`testutil`] (a miniature
-//! property-testing framework).
+//! vendors only `xla` + `anyhow`, both optional behind the `pjrt`
+//! feature): [`parallel`] (a std-only scoped chunked-work engine that
+//! drives every hot kernel — Sinkhorn sweeps, FGC scans, the dense
+//! baseline — with a per-job thread budget), [`prng`]
+//! (SplitMix64/xoshiro256++), [`linalg`] (dense row-major matrices),
+//! [`config`] (key=value config files), [`cli`] (argument parsing),
+//! [`bench_util`] (timing + log-log complexity fits) and [`testutil`]
+//! (a miniature property-testing framework).
 //!
 //! ## Quickstart
 //!
@@ -44,6 +47,10 @@
 //! println!("GW² = {}", sol.objective);
 //! ```
 
+// Index-based loops intentionally mirror the paper's recurrences, and
+// the raw-slice kernel signatures trade arity for zero allocation.
+#![allow(clippy::needless_range_loop, clippy::too_many_arguments)]
+
 pub mod bench_util;
 pub mod cli;
 pub mod config;
@@ -54,6 +61,7 @@ pub mod fgc;
 pub mod grid;
 pub mod gw;
 pub mod linalg;
+pub mod parallel;
 pub mod prng;
 pub mod runtime;
 pub mod sinkhorn;

@@ -124,6 +124,20 @@ impl Mat {
     /// Transposed copy.
     pub fn transpose(&self) -> Mat {
         let mut t = Mat::zeros(self.cols, self.rows);
+        self.transpose_into(&mut t).expect("freshly sized transpose");
+        t
+    }
+
+    /// Transpose into a caller-owned matrix (the zero-allocation form
+    /// the log-domain Sinkhorn workspace reuses every iteration).
+    pub fn transpose_into(&self, t: &mut Mat) -> Result<()> {
+        if t.shape() != (self.cols, self.rows) {
+            return Err(Error::shape(
+                "Mat::transpose_into",
+                format!("{}x{}", self.cols, self.rows),
+                format!("{:?}", t.shape()),
+            ));
+        }
         // Blocked transpose for cache friendliness on large matrices.
         const B: usize = 32;
         for ib in (0..self.rows).step_by(B) {
@@ -137,7 +151,7 @@ impl Mat {
                 }
             }
         }
-        t
+        Ok(())
     }
 
     /// Column `j` copied into a fresh vector.

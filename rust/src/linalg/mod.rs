@@ -12,6 +12,6 @@ mod ops;
 
 pub use matrix::Mat;
 pub use ops::{
-    axpy, dot, frobenius_diff, frobenius_norm, l1_norm, linf_diff, matmul, matvec, matvec_t,
-    normalize_l1, outer, scale_in_place, sum,
+    axpy, dot, frobenius_diff, frobenius_norm, l1_norm, linf_diff, matmul, matmul_into,
+    matmul_par, matvec, matvec_t, normalize_l1, outer, scale_in_place, sum,
 };

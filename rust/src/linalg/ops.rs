@@ -2,6 +2,7 @@
 
 use super::Mat;
 use crate::error::{Error, Result};
+use crate::parallel::{self, Parallelism};
 
 /// Dot product.
 #[inline]
@@ -67,6 +68,21 @@ pub fn normalize_l1(x: &mut [f64]) -> Result<()> {
 
 /// Dense matmul `C = A·B` (row-major, ikj loop order).
 pub fn matmul(a: &Mat, b: &Mat) -> Result<Mat> {
+    matmul_par(a, b, Parallelism::SERIAL)
+}
+
+/// [`matmul`] with a thread budget (output rows are independent, so
+/// row blocks run on scoped threads; block results are bitwise
+/// identical to the serial loop).
+pub fn matmul_par(a: &Mat, b: &Mat, par: Parallelism) -> Result<Mat> {
+    let mut c = Mat::zeros(a.rows(), b.cols());
+    matmul_into(a, b, &mut c, par)?;
+    Ok(c)
+}
+
+/// `C = A·B` into a caller-owned output — the zero-allocation form the
+/// dense-baseline gradient path reuses every mirror-descent iteration.
+pub fn matmul_into(a: &Mat, b: &Mat, c: &mut Mat, par: Parallelism) -> Result<()> {
     if a.cols() != b.rows() {
         return Err(Error::shape(
             "matmul",
@@ -75,18 +91,28 @@ pub fn matmul(a: &Mat, b: &Mat) -> Result<Mat> {
         ));
     }
     let (m, k, n) = (a.rows(), a.cols(), b.cols());
-    let mut c = Mat::zeros(m, n);
-    for i in 0..m {
-        let arow = a.row(i);
-        let crow = c.row_mut(i);
-        for (p, &aip) in arow.iter().enumerate().take(k) {
-            if aip == 0.0 {
-                continue;
-            }
-            axpy(aip, b.row(p), crow);
-        }
+    if c.shape() != (m, n) {
+        return Err(Error::shape(
+            "matmul (out)",
+            format!("{m}x{n}"),
+            format!("{:?}", c.shape()),
+        ));
     }
-    Ok(c)
+    let min_rows = parallel::min_rows_for(k * n.max(1));
+    parallel::for_row_blocks(par, m, n, min_rows, c.as_mut_slice(), |_bl, rr, cblk| {
+        for (local, i) in rr.enumerate() {
+            let arow = a.row(i);
+            let crow = &mut cblk[local * n..(local + 1) * n];
+            crow.fill(0.0);
+            for (p, &aip) in arow.iter().enumerate().take(k) {
+                if aip == 0.0 {
+                    continue;
+                }
+                axpy(aip, b.row(p), crow);
+            }
+        }
+    });
+    Ok(())
 }
 
 /// Dense matvec `y = A·x`.

@@ -1,12 +1,15 @@
 //! `fgc-gw` — launcher for the FGC-GW alignment stack.
 //!
 //! ```text
-//! fgc-gw solve  --n 500 [--k 1] [--eps 0.002] [--backend fgc|naive] [--seed 7]
+//! fgc-gw solve  --n 500 [--k 1] [--eps 0.002] [--backend fgc|naive] [--seed 7] [--threads 1]
 //! fgc-gw solve2d --side 20 [--eps 0.004] …
-//! fgc-gw serve  --jobs 32 [--workers 2] [--pjrt] [--config path]
+//! fgc-gw serve  --jobs 32 [--workers 2] [--threads 1] [--pjrt] [--config path]
 //! fgc-gw bary   --inputs 3 --n 40
 //! fgc-gw info   [--artifacts artifacts]
 //! ```
+//!
+//! `--threads 0` means one thread per core; the serve command also
+//! reads `solver.threads` from the config file (CLI wins).
 
 use fgc_gw::cli::Args;
 use fgc_gw::config::Config;
@@ -47,9 +50,9 @@ fn print_usage() {
     println!(
         "fgc-gw — Fast Gradient Computation for Gromov-Wasserstein\n\
          commands:\n\
-         \x20 solve    1D GW between random distributions (--n, --k, --eps, --backend, --seed)\n\
-         \x20 solve2d  2D GW on an n×n grid (--side, --k, --eps, --backend, --seed)\n\
-         \x20 serve    run the coordinator on a synthetic workload (--jobs, --workers, --pjrt)\n\
+         \x20 solve    1D GW between random distributions (--n, --k, --eps, --backend, --seed, --threads)\n\
+         \x20 solve2d  2D GW on an n×n grid (--side, --k, --eps, --backend, --seed, --threads)\n\
+         \x20 serve    run the coordinator on a synthetic workload (--jobs, --workers, --threads, --pjrt)\n\
          \x20 bary     1D GW barycenter demo (--inputs, --n)\n\
          \x20 info     platform + artifact registry summary (--artifacts DIR)"
     );
@@ -68,16 +71,24 @@ fn cmd_solve(args: &Args) -> fgc_gw::Result<()> {
     let k = args.get_or("k", 1u32)?;
     let eps = args.get_or("eps", 2e-3)?;
     let seed = args.get_or("seed", 7u64)?;
+    let threads = args.get_or("threads", 1usize)?;
     let kind = backend(args)?;
     let mut rng = Rng::seeded(seed);
     let u = random_distribution(&mut rng, n);
     let v = random_distribution(&mut rng, n);
-    let solver = EntropicGw::grid_1d(n, n, k, GwConfig { epsilon: eps, ..GwConfig::default() });
+    let solver = EntropicGw::grid_1d(
+        n,
+        n,
+        k,
+        GwConfig { epsilon: eps, threads, ..GwConfig::default() },
+    );
     let sol = solver.solve(&u, &v, kind)?;
     println!(
-        "GW²={:.6e}  N={n} k={k} ε={eps} backend={kind}\n\
+        "GW²={:.6e}  N={n} k={k} ε={eps} backend={kind} threads={}\n\
          time: total={:?} gradient={:?} sinkhorn={:?} ({} inner sweeps)",
-        sol.objective, sol.total_time, sol.gradient_time, sol.sinkhorn_time,
+        sol.objective,
+        solver.config().parallelism().threads(),
+        sol.total_time, sol.gradient_time, sol.sinkhorn_time,
         sol.sinkhorn_iterations
     );
     Ok(())
@@ -88,11 +99,17 @@ fn cmd_solve_2d(args: &Args) -> fgc_gw::Result<()> {
     let k = args.get_or("k", 1u32)?;
     let eps = args.get_or("eps", 4e-3)?;
     let seed = args.get_or("seed", 7u64)?;
+    let threads = args.get_or("threads", 1usize)?;
     let kind = backend(args)?;
     let mut rng = Rng::seeded(seed);
     let u = fgc_gw::data::random_distribution_2d(&mut rng, side);
     let v = fgc_gw::data::random_distribution_2d(&mut rng, side);
-    let solver = EntropicGw::grid_2d(side, side, k, GwConfig { epsilon: eps, ..GwConfig::default() });
+    let solver = EntropicGw::grid_2d(
+        side,
+        side,
+        k,
+        GwConfig { epsilon: eps, threads, ..GwConfig::default() },
+    );
     let sol = solver.solve(&u, &v, kind)?;
     println!(
         "GW²={:.6e}  N={side}×{side} k={k} ε={eps} backend={kind}  time={:?}",
@@ -111,8 +128,12 @@ fn cmd_serve(args: &Args) -> fgc_gw::Result<()> {
         cfg.enable_pjrt = file.get_bool_or("service.enable_pjrt", cfg.enable_pjrt)?;
         cfg.outer_iters = file.get_or("solver.outer_iters", cfg.outer_iters)?;
         cfg.sinkhorn_max_iters = file.get_or("solver.sinkhorn_max_iters", cfg.sinkhorn_max_iters)?;
+        cfg.solver_threads = file.get_or("solver.threads", cfg.solver_threads)?;
     }
     cfg.native_workers = args.get_or("workers", cfg.native_workers)?;
+    if let Some(threads) = args.get_opt::<usize>("threads")? {
+        cfg.solver_threads = threads;
+    }
     cfg.enable_pjrt = cfg.enable_pjrt || args.has_flag("pjrt");
     cfg.artifacts_dir = PathBuf::from(args.get("artifacts").unwrap_or("artifacts"));
     cfg.submit_timeout = Duration::from_millis(args.get_or("submit-timeout-ms", 500u64)?);

@@ -1,0 +1,310 @@
+//! Std-only data-parallel engine for the hot kernels.
+//!
+//! The offline crate set has no `rayon`, so this is a scoped,
+//! chunked-work engine built directly on [`std::thread::scope`]. A
+//! [`Parallelism`] value carries the thread budget (`1` = the exact
+//! serial path, byte-for-byte identical to the original single-thread
+//! kernels); each kernel splits its iteration space into contiguous
+//! blocks — row blocks for the Sinkhorn sweeps, `dtilde_rows` and the
+//! dense matmul baseline, column stripes for the `dtilde_cols` scans —
+//! and runs one block per scoped thread. Threads are spawned per
+//! parallel region and joined before it returns: the engine owns no
+//! global state, so it composes with the coordinator's worker pool
+//! (every job gets its own per-job thread budget) and with nested use
+//! from the FGC 2D factor pipeline.
+//!
+//! Determinism: each block computes exactly what the serial path
+//! computes for those indices, and cross-block reductions are folded
+//! in ascending block order on the calling thread. Block-independent
+//! kernels (`dtilde_cols` stripes, `dtilde_rows`, matmul rows, plan
+//! builds) are therefore bitwise identical across thread counts;
+//! reductions (the `Kᵀa` accumulation, marginal-error sums) agree to
+//! accumulation roundoff, ≤ 1e-12 relative in practice (covered by
+//! `tests/parallel_consistency.rs`).
+
+mod shared;
+
+pub use shared::SharedMutSlice;
+
+use std::ops::Range;
+
+/// A block is only worth a thread if it covers at least this many
+/// elements of streamed data — below that, spawn overhead dominates.
+/// Kept deliberately modest so mid-sized problems (and the parallel
+/// consistency tests) still split; sub-threshold problems collapse to
+/// the exact serial path.
+pub const MIN_PAR_ELEMS: usize = 4 * 1024;
+
+/// Thread budget for the parallel kernels.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Parallelism {
+    threads: usize,
+}
+
+impl Default for Parallelism {
+    fn default() -> Self {
+        Parallelism::SERIAL
+    }
+}
+
+impl Parallelism {
+    /// The exact serial path (thread count 1, nothing spawned).
+    pub const SERIAL: Parallelism = Parallelism { threads: 1 };
+
+    /// Explicit thread budget (clamped to ≥ 1).
+    pub fn new(threads: usize) -> Self {
+        Parallelism {
+            threads: threads.max(1),
+        }
+    }
+
+    /// Config / CLI convention: `0` means one thread per available
+    /// core, anything else is an explicit budget.
+    pub fn from_config(threads: usize) -> Self {
+        if threads == 0 {
+            Parallelism::auto()
+        } else {
+            Parallelism::new(threads)
+        }
+    }
+
+    /// One thread per available core.
+    pub fn auto() -> Self {
+        let threads = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        Parallelism { threads }
+    }
+
+    /// The thread budget.
+    #[inline]
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// True iff nothing will be spawned.
+    #[inline]
+    pub fn is_serial(&self) -> bool {
+        self.threads == 1
+    }
+
+    /// Number of blocks a loop of `items` items should split into,
+    /// given the smallest block worth a thread. Always ≥ 1 and never
+    /// more than the thread budget.
+    pub fn blocks(&self, items: usize, min_block: usize) -> usize {
+        if self.threads <= 1 || items == 0 {
+            return 1;
+        }
+        let max_blocks = items.div_ceil(min_block.max(1));
+        self.threads.min(max_blocks).max(1)
+    }
+}
+
+/// The `b`-th of `nblocks` contiguous blocks of `0..items` (earlier
+/// blocks take the remainder, so sizes differ by at most one).
+#[inline]
+pub fn block_range(items: usize, nblocks: usize, b: usize) -> Range<usize> {
+    debug_assert!(b < nblocks);
+    let base = items / nblocks;
+    let rem = items % nblocks;
+    let start = b * base + b.min(rem);
+    let len = base + usize::from(b < rem);
+    start..start + len
+}
+
+/// Smallest row block worth a thread when each row streams `row_work`
+/// elements.
+#[inline]
+pub fn min_rows_for(row_work: usize) -> usize {
+    (MIN_PAR_ELEMS / row_work.max(1)).max(1)
+}
+
+/// Run `work(block_index, index_range)` over the blocks of `0..items`.
+/// Block 0 runs on the calling thread; the rest run on scoped threads.
+/// Use when `work` only writes through interior-mutable or disjoint
+/// state ([`SharedMutSlice`]); for contiguous output splitting prefer
+/// [`for_row_blocks`].
+pub fn for_blocks<F>(par: Parallelism, items: usize, min_block: usize, work: F)
+where
+    F: Fn(usize, Range<usize>) + Sync,
+{
+    let nb = par.blocks(items, min_block);
+    if nb <= 1 {
+        if items > 0 {
+            work(0, 0..items);
+        }
+        return;
+    }
+    std::thread::scope(|s| {
+        for b in 1..nb {
+            let w = &work;
+            s.spawn(move || w(b, block_range(items, nb, b)));
+        }
+        work(0, block_range(items, nb, 0));
+    });
+}
+
+/// Partition `out` (shape `rows × row_len`, row-major) by row blocks
+/// and run `work(block_index, rows_range, out_block)` per block. The
+/// last block runs on the calling thread. Row indices in `rows_range`
+/// are absolute; `out_block` starts at `rows_range.start`.
+pub fn for_row_blocks<F>(
+    par: Parallelism,
+    rows: usize,
+    row_len: usize,
+    min_rows: usize,
+    out: &mut [f64],
+    work: F,
+) where
+    F: Fn(usize, Range<usize>, &mut [f64]) + Sync,
+{
+    assert_eq!(out.len(), rows * row_len, "for_row_blocks: output size");
+    let nb = par.blocks(rows, min_rows);
+    if nb <= 1 {
+        if rows > 0 {
+            work(0, 0..rows, out);
+        }
+        return;
+    }
+    std::thread::scope(|s| {
+        let mut rest = out;
+        for b in 0..nb {
+            let rr = block_range(rows, nb, b);
+            let (head, tail) = std::mem::take(&mut rest).split_at_mut(rr.len() * row_len);
+            rest = tail;
+            if b == nb - 1 {
+                work(b, rr, head);
+            } else {
+                let w = &work;
+                s.spawn(move || w(b, rr, head));
+            }
+        }
+    });
+}
+
+/// Block-wise sum reduction: each block computes a partial into its
+/// slot of `partials` (caller-provided, ≥ thread budget, so the hot
+/// loop never allocates); partials are folded in ascending block order
+/// on the calling thread. With one block this is exactly the serial
+/// sum.
+pub fn sum_blocks<F>(
+    par: Parallelism,
+    items: usize,
+    min_block: usize,
+    partials: &mut [f64],
+    f: F,
+) -> f64
+where
+    F: Fn(usize, Range<usize>) -> f64 + Sync,
+{
+    let nb = par.blocks(items, min_block).min(partials.len().max(1));
+    if nb <= 1 {
+        return if items == 0 { 0.0 } else { f(0, 0..items) };
+    }
+    std::thread::scope(|s| {
+        let mut rest = &mut partials[..nb];
+        for b in 0..nb {
+            let (slot, tail) = std::mem::take(&mut rest).split_at_mut(1);
+            rest = tail;
+            let rr = block_range(items, nb, b);
+            if b == nb - 1 {
+                slot[0] = f(b, rr);
+            } else {
+                let g = &f;
+                s.spawn(move || slot[0] = g(b, rr));
+            }
+        }
+    });
+    partials[..nb].iter().sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn block_ranges_cover_exactly() {
+        for items in [0usize, 1, 2, 7, 64, 1000] {
+            for nb in 1..=8usize {
+                if items == 0 {
+                    continue;
+                }
+                let mut next = 0;
+                for b in 0..nb {
+                    let r = block_range(items, nb, b);
+                    assert_eq!(r.start, next, "items={items} nb={nb} b={b}");
+                    next = r.end;
+                }
+                assert_eq!(next, items);
+            }
+        }
+    }
+
+    #[test]
+    fn blocks_respect_budget_and_minimum() {
+        let p = Parallelism::new(8);
+        assert_eq!(p.blocks(10, 100), 1); // too small to split
+        assert_eq!(p.blocks(1000, 100), 8);
+        assert_eq!(p.blocks(300, 100), 3);
+        assert_eq!(Parallelism::SERIAL.blocks(1_000_000, 1), 1);
+        assert_eq!(p.blocks(0, 1), 1);
+    }
+
+    #[test]
+    fn for_row_blocks_partitions_output() {
+        let (rows, cols) = (37, 5);
+        let mut out = vec![0.0; rows * cols];
+        for threads in [1usize, 2, 4, 7] {
+            out.fill(0.0);
+            for_row_blocks(
+                Parallelism::new(threads),
+                rows,
+                cols,
+                1,
+                &mut out,
+                |_b, rr, blk| {
+                    for (local, r) in rr.enumerate() {
+                        for c in 0..cols {
+                            blk[local * cols + c] = (r * cols + c) as f64;
+                        }
+                    }
+                },
+            );
+            for (i, &v) in out.iter().enumerate() {
+                assert_eq!(v, i as f64, "threads={threads} idx={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn sum_blocks_matches_serial() {
+        let n = 10_000usize;
+        let want: f64 = (0..n).map(|i| i as f64).sum();
+        for threads in [1usize, 2, 4, 7] {
+            let mut partials = vec![0.0; threads];
+            let got = sum_blocks(Parallelism::new(threads), n, 1, &mut partials, |_b, rr| {
+                rr.map(|i| i as f64).sum()
+            });
+            assert!((got - want).abs() < 1e-6, "threads={threads}: {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn for_blocks_runs_every_index_once() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let hits: Vec<AtomicUsize> = (0..500).map(|_| AtomicUsize::new(0)).collect();
+        for_blocks(Parallelism::new(4), hits.len(), 1, |_b, rr| {
+            for i in rr {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn from_config_zero_is_auto() {
+        assert!(Parallelism::from_config(0).threads() >= 1);
+        assert_eq!(Parallelism::from_config(3).threads(), 3);
+        assert!(Parallelism::from_config(1).is_serial());
+    }
+}

@@ -1,0 +1,92 @@
+//! Shared-mutable slice for provably disjoint concurrent writes.
+//!
+//! The column-striped `dtilde_cols` scans and the per-thread scratch
+//! areas of the FGC 2D row pass write *interleaved* regions of one
+//! buffer (column stripes share every row), which `split_at_mut`
+//! cannot express. [`SharedMutSlice`] erases the exclusivity of a
+//! `&mut [f64]` behind a raw pointer so each scoped thread can carve
+//! out its own ranges; callers guarantee disjointness (per-stripe /
+//! per-block index arithmetic), which is what makes the single unsafe
+//! accessor sound.
+
+use std::marker::PhantomData;
+use std::ops::Range;
+
+/// A `&mut [f64]` that may be sliced concurrently into disjoint
+/// ranges from multiple scoped threads.
+pub struct SharedMutSlice<'a> {
+    ptr: *mut f64,
+    len: usize,
+    _marker: PhantomData<&'a mut [f64]>,
+}
+
+// SAFETY: the wrapper only hands out ranges through the unsafe
+// `range_mut`, whose contract requires concurrent callers to use
+// disjoint ranges; the borrow of the underlying slice is held for 'a.
+unsafe impl Send for SharedMutSlice<'_> {}
+unsafe impl Sync for SharedMutSlice<'_> {}
+
+impl<'a> SharedMutSlice<'a> {
+    /// Wrap an exclusive slice for the duration of a parallel region.
+    pub fn new(slice: &'a mut [f64]) -> Self {
+        SharedMutSlice {
+            ptr: slice.as_mut_ptr(),
+            len: slice.len(),
+            _marker: PhantomData,
+        }
+    }
+
+    /// Total length of the underlying buffer.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True iff the underlying buffer is empty.
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Mutable view of `range`.
+    ///
+    /// # Safety
+    ///
+    /// Ranges handed to concurrently running callers must be pairwise
+    /// disjoint, and `range` must lie within the buffer. The caller
+    /// must not hold two overlapping views at once even on one thread.
+    #[inline]
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn range_mut(&self, range: Range<usize>) -> &mut [f64] {
+        debug_assert!(range.start <= range.end && range.end <= self.len);
+        std::slice::from_raw_parts_mut(self.ptr.add(range.start), range.end - range.start)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disjoint_parallel_writes_land() {
+        let mut buf = vec![0.0f64; 64];
+        {
+            let shared = SharedMutSlice::new(&mut buf);
+            std::thread::scope(|s| {
+                for t in 0..4usize {
+                    let sh = &shared;
+                    s.spawn(move || {
+                        // stripe t: indices with i % 4 == t (disjoint)
+                        for i in (t..64).step_by(4) {
+                            let cell = unsafe { sh.range_mut(i..i + 1) };
+                            cell[0] = i as f64;
+                        }
+                    });
+                }
+            });
+        }
+        for (i, &v) in buf.iter().enumerate() {
+            assert_eq!(v, i as f64);
+        }
+    }
+}

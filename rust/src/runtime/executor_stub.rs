@@ -1,0 +1,114 @@
+//! Feature-gated stand-in for the PJRT executor.
+//!
+//! The real [`Executor`] (see `executor.rs`) depends on the vendored
+//! `xla` crate, which is only available when the crate is built with
+//! `--features pjrt`. This stub keeps the public surface identical so
+//! the coordinator, CLI and tests compile and run without the PJRT
+//! toolchain: construction fails with a descriptive [`Error::Runtime`]
+//! and the coordinator's existing fallback keeps jobs on the native
+//! solvers.
+
+use super::artifact::ArtifactSpec;
+use crate::error::{Error, Result};
+use crate::linalg::Mat;
+
+/// Output of a full-solve artifact.
+#[derive(Clone, Debug)]
+pub struct SolveOutput {
+    /// Transport plan (`N×N`).
+    pub plan: Mat,
+    /// Objective value.
+    pub objective: f64,
+}
+
+/// Stub executor: every constructor reports that PJRT support was not
+/// compiled in.
+pub struct Executor {
+    _private: (),
+}
+
+fn unavailable() -> Error {
+    Error::Runtime(
+        "PJRT support not compiled in (rebuild with `--features pjrt` and the vendored `xla` \
+         crate)"
+            .into(),
+    )
+}
+
+impl Executor {
+    /// Always fails in stub builds.
+    pub fn cpu() -> Result<Self> {
+        Err(unavailable())
+    }
+
+    /// Platform string (never reachable in stub builds, but kept for
+    /// API parity).
+    pub fn platform(&self) -> String {
+        "unavailable".into()
+    }
+
+    /// Number of artifacts compiled so far.
+    pub fn compiled_count(&self) -> usize {
+        0
+    }
+
+    /// Compile (and cache) an artifact.
+    pub fn load(&mut self, _spec: &ArtifactSpec) -> Result<()> {
+        Err(unavailable())
+    }
+
+    /// Run a full-solve artifact.
+    pub fn run_gw_solve(
+        &mut self,
+        _spec: &ArtifactSpec,
+        _u: &[f64],
+        _v: &[f64],
+    ) -> Result<SolveOutput> {
+        Err(unavailable())
+    }
+
+    /// Run an FGW solve artifact.
+    pub fn run_fgw_solve(
+        &mut self,
+        _spec: &ArtifactSpec,
+        _u: &[f64],
+        _v: &[f64],
+        _feature_cost: &Mat,
+    ) -> Result<SolveOutput> {
+        Err(unavailable())
+    }
+
+    /// Run a single mirror-descent step artifact.
+    pub fn run_gw_step(
+        &mut self,
+        _spec: &ArtifactSpec,
+        _u: &[f64],
+        _v: &[f64],
+        _gamma: &Mat,
+    ) -> Result<Mat> {
+        Err(unavailable())
+    }
+
+    /// Drive a compiled single-step artifact to convergence.
+    pub fn run_gw_to_convergence(
+        &mut self,
+        _spec: &ArtifactSpec,
+        _u: &[f64],
+        _v: &[f64],
+        _tol: f64,
+        _max_steps: usize,
+    ) -> Result<(Mat, usize)> {
+        Err(unavailable())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_reports_missing_feature() {
+        let err = Executor::cpu().unwrap_err();
+        assert!(err.to_string().contains("pjrt"), "{err}");
+    }
+}

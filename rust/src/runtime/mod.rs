@@ -3,6 +3,10 @@
 //! and DESIGN.md §2/L2). Python never runs on this path.
 
 mod artifact;
+#[cfg(feature = "pjrt")]
+mod executor;
+#[cfg(not(feature = "pjrt"))]
+#[path = "executor_stub.rs"]
 mod executor;
 
 pub use artifact::{ArtifactKind, ArtifactRegistry, ArtifactSpec};

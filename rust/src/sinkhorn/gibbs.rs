@@ -6,10 +6,21 @@
 //! Cost per sweep: two `O(MN)` matvecs over a matrix that is built
 //! once. This is the paper's (and POT's) workhorse; for
 //! `range(Π)/ε ≳ 680` use [`super::sinkhorn_log`].
+//!
+//! The sweep is row-parallel: each contiguous row block computes its
+//! `K·b` dot products and `a` updates, plus a block-local `Kᵀa`
+//! partial that the calling thread folds in ascending block order
+//! (the one reduction in the solver — agreement across thread counts
+//! is at accumulation roundoff, ≤ 1e-12 relative; everything else is
+//! block-exact). With one block the code path degenerates to the
+//! original fused serial sweep, accumulating straight into `kta`.
 
-use super::{marginal_violation, validate, SinkhornOptions, SinkhornResult};
+use super::workspace::SinkhornWorkspace;
+use super::{validate, SinkhornOptions, SinkhornResult};
 use crate::error::{Error, Result};
 use crate::linalg::Mat;
+use crate::parallel::{self, Parallelism};
+use std::sync::atomic::{AtomicBool, Ordering};
 
 /// Balanced Sinkhorn in the Gibbs (exponential) domain.
 pub fn sinkhorn_gibbs(
@@ -20,58 +31,9 @@ pub fn sinkhorn_gibbs(
 ) -> Result<SinkhornResult> {
     validate(cost, u, v, opts)?;
     let (m, n) = cost.shape();
-    let shift = cost.min();
-    let inv_eps = 1.0 / opts.epsilon;
-    // Gibbs kernel, built once per subproblem. Both scaling products
-    // stream the same row-major K: `K·b` as row dot-products, `Kᵀ·a`
-    // as row-scaled accumulation — no transpose copy (§Perf: saves an
-    // N² build + N² resident bytes per subproblem).
-    let k = cost.map(|c| (-(c - shift) * inv_eps).exp());
-
-    let mut a = vec![1.0f64; m];
-    let mut b = vec![1.0f64; n];
-    let mut kb = vec![0.0f64; m];
-    let mut kta = vec![0.0f64; n];
-
-    let mut iterations = 0;
-    for it in 0..opts.max_iters {
-        iterations = it + 1;
-        // One fused pass over K per sweep (§Perf: the sweep is
-        // memory-bound on K, so reading it once instead of twice is
-        // ~2× on large problems): per row compute `kb_i = K_i·b`
-        // (Gauss-Seidel: old b), update `a_i`, and immediately
-        // accumulate `a_i·K_i` into `kta`.
-        kta.fill(0.0);
-        for i in 0..m {
-            let row = k.row(i);
-            let kbi = crate::linalg::dot(row, &b);
-            kb[i] = kbi;
-            let ai = safe_div(u[i], kbi, "Kb")?;
-            a[i] = ai;
-            if ai != 0.0 {
-                crate::linalg::axpy(ai, row, &mut kta);
-            }
-        }
-        for j in 0..n {
-            b[j] = safe_div(v[j], kta[j], "Kᵀa")?;
-        }
-        if it % opts.check_every == opts.check_every - 1 {
-            // After a b-update columns are exact; only rows can violate.
-            matvec_into(&k, &b, &mut kb);
-            let err: f64 = (0..m).map(|i| (a[i] * kb[i] - u[i]).abs()).sum();
-            if err < opts.tolerance {
-                break;
-            }
-        }
-    }
-
-    let plan = Mat::from_fn(m, n, |i, j| a[i] * k[(i, j)] * b[j]);
-    if !plan.all_finite() {
-        return Err(Error::Numeric(
-            "gibbs sinkhorn produced non-finite plan (try log-domain)".into(),
-        ));
-    }
-    let marginal_error = marginal_violation(&plan, u, v);
+    let mut ws = SinkhornWorkspace::new(m, n, Parallelism::SERIAL);
+    let mut plan = Mat::zeros(m, n);
+    let (iterations, marginal_error) = gibbs_into(cost, u, v, opts, &mut ws, &mut plan)?;
     Ok(SinkhornResult {
         plan,
         iterations,
@@ -79,11 +41,175 @@ pub fn sinkhorn_gibbs(
     })
 }
 
-#[inline]
-fn matvec_into(k: &Mat, x: &[f64], out: &mut [f64]) {
-    for (i, o) in out.iter_mut().enumerate() {
-        *o = crate::linalg::dot(k.row(i), x);
+/// Workspace form of [`sinkhorn_gibbs`]: zero heap allocation on the
+/// success path, plan written into `plan`. Returns
+/// `(iterations, marginal_error)`.
+pub(super) fn gibbs_into(
+    cost: &Mat,
+    u: &[f64],
+    v: &[f64],
+    opts: &SinkhornOptions,
+    ws: &mut SinkhornWorkspace,
+    plan: &mut Mat,
+) -> Result<(usize, f64)> {
+    let (m, n) = cost.shape();
+    debug_assert_eq!((ws.m, ws.n), (m, n));
+    let shift = cost.min();
+    let inv_eps = 1.0 / opts.epsilon;
+    let SinkhornWorkspace {
+        kernel,
+        a,
+        b,
+        kta,
+        partials,
+        reduce,
+        par,
+        ..
+    } = ws;
+    let par = *par;
+    let min_rows = parallel::min_rows_for(n.max(1));
+
+    // Gibbs kernel, built once per subproblem into the workspace. Both
+    // scaling products stream the same row-major K: `K·b` as row
+    // dot-products, `Kᵀ·a` as row-scaled accumulation — no transpose
+    // copy (§Perf: saves an N² build + N² resident bytes per
+    // subproblem).
+    let cs = cost.as_slice();
+    parallel::for_row_blocks(par, m, n, min_rows, kernel.as_mut_slice(), |_bl, rr, kblk| {
+        let src = &cs[rr.start * n..rr.end * n];
+        for (d, &c) in kblk.iter_mut().zip(src) {
+            *d = (-(c - shift) * inv_eps).exp();
+        }
+    });
+    let k = &*kernel;
+
+    a.fill(1.0);
+    b.fill(1.0);
+
+    let mut iterations = 0;
+    for it in 0..opts.max_iters {
+        iterations = it + 1;
+        // One fused pass over K per sweep (§Perf: the sweep is
+        // memory-bound on K, so reading it once instead of twice is
+        // ~2× on large problems): per row compute `(K·b)_i`
+        // (Gauss-Seidel: old b), update `a_i`, and accumulate
+        // `a_i·K_i` into the block's `kta` partial.
+        fused_scaling_sweep(k, u, b, a, kta, partials, par, min_rows)?;
+        for j in 0..n {
+            b[j] = safe_div(v[j], kta[j], "Kᵀa")?;
+        }
+        if it % opts.check_every == opts.check_every - 1 {
+            // After a b-update columns are exact; only rows can violate.
+            let (ar, br) = (&*a, &*b);
+            let err = parallel::sum_blocks(par, m, min_rows, reduce, |_bl, rr| {
+                let mut e = 0.0;
+                for i in rr {
+                    e += (ar[i] * crate::linalg::dot(k.row(i), br) - u[i]).abs();
+                }
+                e
+            });
+            if err < opts.tolerance {
+                break;
+            }
+        }
     }
+
+    let (ar, br) = (&*a, &*b);
+    parallel::for_row_blocks(par, m, n, min_rows, plan.as_mut_slice(), |_bl, rr, pblk| {
+        for (local, i) in rr.enumerate() {
+            let ai = ar[i];
+            let krow = k.row(i);
+            let prow = &mut pblk[local * n..(local + 1) * n];
+            for ((p, &kij), &bj) in prow.iter_mut().zip(krow).zip(br) {
+                *p = ai * kij * bj;
+            }
+        }
+    });
+    if !plan.all_finite() {
+        return Err(Error::Numeric(
+            "gibbs sinkhorn produced non-finite plan (try log-domain)".into(),
+        ));
+    }
+    let marginal_error = super::marginal_error_scratch(plan, u, v, kta);
+    Ok((iterations, marginal_error))
+}
+
+/// The fused row pass: `a = u ⊘ (K·b)`, `kta = Kᵀ·a`, split over row
+/// blocks. Block partials land in `partials` and are folded in
+/// ascending block order; with one block the sweep accumulates
+/// straight into `kta` — the exact original serial path.
+fn fused_scaling_sweep(
+    k: &Mat,
+    u: &[f64],
+    b: &[f64],
+    a: &mut [f64],
+    kta: &mut [f64],
+    partials: &mut [f64],
+    par: Parallelism,
+    min_rows: usize,
+) -> Result<()> {
+    let m = u.len();
+    let n = b.len();
+    let underflow = AtomicBool::new(false);
+    let block = |rr: std::ops::Range<usize>, a_blk: &mut [f64], p_blk: &mut [f64]| {
+        p_blk.fill(0.0);
+        for (local, i) in rr.enumerate() {
+            let row = k.row(i);
+            let kbi = crate::linalg::dot(row, b);
+            let ai = if kbi > 0.0 && kbi.is_finite() {
+                u[i] / kbi
+            } else if u[i] == 0.0 {
+                // A zero-mass marginal entry legitimately zeroes the
+                // scaling.
+                0.0
+            } else {
+                underflow.store(true, Ordering::Relaxed);
+                0.0
+            };
+            a_blk[local] = ai;
+            if ai != 0.0 {
+                crate::linalg::axpy(ai, row, p_blk);
+            }
+        }
+    };
+
+    let nb = par
+        .blocks(m, min_rows)
+        .min((partials.len() / n.max(1)).max(1));
+    if nb <= 1 {
+        block(0..m, a, kta);
+    } else {
+        std::thread::scope(|s| {
+            let mut a_rest = a;
+            let mut p_rest = &mut partials[..nb * n];
+            for bidx in 0..nb {
+                let rr = parallel::block_range(m, nb, bidx);
+                let (a_blk, at) = std::mem::take(&mut a_rest).split_at_mut(rr.len());
+                a_rest = at;
+                let (p_blk, pt) = std::mem::take(&mut p_rest).split_at_mut(n);
+                p_rest = pt;
+                if bidx == nb - 1 {
+                    block(rr, a_blk, p_blk);
+                } else {
+                    let f = &block;
+                    s.spawn(move || f(rr, a_blk, p_blk));
+                }
+            }
+        });
+        kta.fill(0.0);
+        for bidx in 0..nb {
+            let p = &partials[bidx * n..(bidx + 1) * n];
+            for (t, &x) in kta.iter_mut().zip(p) {
+                *t += x;
+            }
+        }
+    }
+    if underflow.load(Ordering::Relaxed) {
+        return Err(Error::Numeric(
+            "sinkhorn underflow: Kb entry vanished (cost range too large for Gibbs domain)".into(),
+        ));
+    }
+    Ok(())
 }
 
 #[inline]
@@ -162,6 +288,33 @@ mod tests {
         match sinkhorn_gibbs(&cost, &u, &v, &opts) {
             Ok(r) => assert!(r.plan.all_finite()),
             Err(e) => assert!(e.to_string().contains("underflow") || e.to_string().contains("non-finite")),
+        }
+    }
+
+    #[test]
+    fn parallel_sweep_matches_serial() {
+        // 300×40 splits into real blocks at the 4 KiB threshold;
+        // tolerance 0 fixes the sweep budget so the comparison is not
+        // stopping-time dependent.
+        let (cost, u, v) = random_problem(300, 40, 17);
+        let opts = SinkhornOptions {
+            epsilon: 0.05,
+            max_iters: 400,
+            tolerance: 0.0,
+            check_every: 10,
+        };
+        let serial = sinkhorn_gibbs(&cost, &u, &v, &opts).unwrap();
+        for threads in [2usize, 4, 7] {
+            let mut ws = SinkhornWorkspace::new(300, 40, Parallelism::new(threads));
+            let mut plan = Mat::zeros(300, 40);
+            let (iters, err) = gibbs_into(&cost, &u, &v, &opts, &mut ws, &mut plan).unwrap();
+            // The Kᵀa reduction order differs across block counts, so
+            // iteration counts may flip by one check window; the plans
+            // themselves must agree to accumulation roundoff.
+            assert!(iters <= opts.max_iters);
+            let d = crate::linalg::frobenius_diff(&plan, &serial.plan).unwrap();
+            assert!(d < 1e-12, "threads={threads}: plan diff {d:e}");
+            assert!((err - serial.marginal_error).abs() < 1e-12);
         }
     }
 }

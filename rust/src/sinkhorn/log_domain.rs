@@ -13,10 +13,18 @@
 //! paper's 0.002 with O(1) costs ⇒ exponents ≈ −1000) cannot
 //! under/overflow. Zero-mass marginal entries map to `φ = −∞`, which
 //! correctly zeroes the corresponding plan row/column.
+//!
+//! Both potential sweeps are embarrassingly row-parallel (each `φ_i`
+//! reads all of `ψ` and a contiguous row of `S`; symmetrically for
+//! `ψ_j` over `Sᵀ`), so the parallel blocks are bitwise identical to
+//! the serial sweep for every thread count — only the convergence
+//! check's error *sum* is a cross-block reduction.
 
-use super::{marginal_violation, validate, SinkhornOptions, SinkhornResult};
+use super::workspace::SinkhornWorkspace;
+use super::{validate, SinkhornOptions, SinkhornResult};
 use crate::error::{Error, Result};
 use crate::linalg::Mat;
+use crate::parallel::{self, Parallelism};
 
 /// Balanced Sinkhorn with log-domain stabilization.
 pub fn sinkhorn_log(
@@ -27,50 +35,125 @@ pub fn sinkhorn_log(
 ) -> Result<SinkhornResult> {
     validate(cost, u, v, opts)?;
     let (m, n) = cost.shape();
-    let inv_eps = 1.0 / opts.epsilon;
-    let s = cost.map(|c| c * inv_eps);
-    let st = s.transpose();
+    let mut ws = SinkhornWorkspace::new(m, n, Parallelism::SERIAL);
+    let mut plan = Mat::zeros(m, n);
+    let (iterations, marginal_error) = log_into(cost, u, v, opts, &mut ws, &mut plan)?;
+    Ok(SinkhornResult {
+        plan,
+        iterations,
+        marginal_error,
+    })
+}
 
-    let log_u: Vec<f64> = u.iter().map(|&x| x.ln()).collect(); // ln 0 = −inf is fine
-    let log_v: Vec<f64> = v.iter().map(|&x| x.ln()).collect();
-    let mut phi = vec![0.0f64; m];
-    let mut psi = vec![0.0f64; n];
+/// Workspace form of [`sinkhorn_log`]: zero heap allocation on the
+/// success path once the workspace's `Sᵀ` buffer exists (first call
+/// builds it), plan written into `plan`. Returns
+/// `(iterations, marginal_error)`.
+pub(super) fn log_into(
+    cost: &Mat,
+    u: &[f64],
+    v: &[f64],
+    opts: &SinkhornOptions,
+    ws: &mut SinkhornWorkspace,
+    plan: &mut Mat,
+) -> Result<(usize, f64)> {
+    let (m, n) = cost.shape();
+    debug_assert_eq!((ws.m, ws.n), (m, n));
+    let inv_eps = 1.0 / opts.epsilon;
+    ws.ensure_kernel_t();
+    let SinkhornWorkspace {
+        kernel,
+        kernel_t,
+        a: phi,
+        b: psi,
+        kta,
+        log_u,
+        log_v,
+        reduce,
+        par,
+        ..
+    } = ws;
+    let par = *par;
+    let min_rows_m = parallel::min_rows_for(n.max(1));
+    let min_rows_n = parallel::min_rows_for(m.max(1));
+
+    // S = Π/ε into the workspace kernel slot; Sᵀ beside it so the ψ
+    // sweep also streams contiguous rows.
+    let cs = cost.as_slice();
+    parallel::for_row_blocks(par, m, n, min_rows_m, kernel.as_mut_slice(), |_bl, rr, sblk| {
+        let src = &cs[rr.start * n..rr.end * n];
+        for (d, &c) in sblk.iter_mut().zip(src) {
+            *d = c * inv_eps;
+        }
+    });
+    let st_mat = kernel_t.as_mut().expect("ensure_kernel_t ran");
+    kernel.transpose_into(st_mat)?;
+    let s = &*kernel;
+    let st = &*st_mat;
+
+    for (d, &x) in log_u.iter_mut().zip(u) {
+        *d = x.ln(); // ln 0 = −inf is fine
+    }
+    for (d, &x) in log_v.iter_mut().zip(v) {
+        *d = x.ln();
+    }
+    phi.fill(0.0);
+    psi.fill(0.0);
 
     let mut iterations = 0;
     for it in 0..opts.max_iters {
         iterations = it + 1;
         // φ update: rows of S are contiguous.
-        for i in 0..m {
-            phi[i] = log_u[i] - lse_shifted(&psi, s.row(i));
+        {
+            let (psi_r, log_u_r) = (&*psi, &*log_u);
+            parallel::for_row_blocks(par, m, 1, min_rows_m, phi, |_bl, rr, pblk| {
+                for (local, i) in rr.enumerate() {
+                    pblk[local] = log_u_r[i] - lse_shifted(psi_r, s.row(i));
+                }
+            });
         }
         // ψ update: rows of Sᵀ are contiguous.
-        for j in 0..n {
-            psi[j] = log_v[j] - lse_shifted(&phi, st.row(j));
+        {
+            let (phi_r, log_v_r) = (&*phi, &*log_v);
+            parallel::for_row_blocks(par, n, 1, min_rows_n, psi, |_bl, rr, pblk| {
+                for (local, j) in rr.enumerate() {
+                    pblk[local] = log_v_r[j] - lse_shifted(phi_r, st.row(j));
+                }
+            });
         }
         if it % opts.check_every == opts.check_every - 1 {
             // Row-marginal violation: after the ψ update columns are
             // exact; rows drift by the same mechanism as Gibbs.
-            let mut err = 0.0;
-            for i in 0..m {
-                let row_mass = sum_exp_row(phi[i], &psi, s.row(i));
-                err += (row_mass - u[i]).abs();
-            }
+            let (phi_r, psi_r) = (&*phi, &*psi);
+            let err = parallel::sum_blocks(par, m, min_rows_m, reduce, |_bl, rr| {
+                let mut e = 0.0;
+                for i in rr {
+                    e += (sum_exp_row(phi_r[i], psi_r, s.row(i)) - u[i]).abs();
+                }
+                e
+            });
             if err < opts.tolerance {
                 break;
             }
         }
     }
 
-    let plan = build_plan(&phi, &psi, &s);
+    let (phi_r, psi_r) = (&*phi, &*psi);
+    parallel::for_row_blocks(par, m, n, min_rows_m, plan.as_mut_slice(), |_bl, rr, pblk| {
+        for (local, i) in rr.enumerate() {
+            let srow = s.row(i);
+            let fi = phi_r[i];
+            let prow = &mut pblk[local * n..(local + 1) * n];
+            for ((p, &sij), &gj) in prow.iter_mut().zip(srow).zip(psi_r) {
+                *p = (fi + gj - sij).exp();
+            }
+        }
+    });
     if !plan.all_finite() {
         return Err(Error::Numeric("log sinkhorn produced non-finite plan".into()));
     }
-    let marginal_error = marginal_violation(&plan, u, v);
-    Ok(SinkhornResult {
-        plan,
-        iterations,
-        marginal_error,
-    })
+    let marginal_error = super::marginal_error_scratch(plan, u, v, kta);
+    Ok((iterations, marginal_error))
 }
 
 /// `log Σ_j exp(w_j − s_j)` with max-shift; returns −∞ on empty /
@@ -104,11 +187,6 @@ fn sum_exp_row(phi_i: f64, psi: &[f64], s_row: &[f64]) -> f64 {
         acc += (phi_i + pj - sj).exp();
     }
     acc
-}
-
-fn build_plan(phi: &[f64], psi: &[f64], s: &Mat) -> Mat {
-    let (m, n) = s.shape();
-    Mat::from_fn(m, n, |i, j| (phi[i] + psi[j] - s[(i, j)]).exp())
 }
 
 #[cfg(test)]
@@ -176,5 +254,29 @@ mod tests {
             assert_eq!(r.plan[(2, j)], 0.0);
         }
         assert!(r.marginal_error < 1e-7);
+    }
+
+    #[test]
+    fn parallel_sweeps_match_serial_bitwise() {
+        // Potential updates are block-exact: any thread count must
+        // reproduce the serial plan bitwise.
+        let (cost, u, v) = random_problem(160, 48, 31);
+        // tolerance 0 ⇒ fixed sweep budget on every path, so the
+        // comparison is exact rather than stopping-time dependent.
+        let opts = SinkhornOptions {
+            epsilon: 0.01,
+            max_iters: 300,
+            tolerance: 0.0,
+            check_every: 10,
+        };
+        let serial = sinkhorn_log(&cost, &u, &v, &opts).unwrap();
+        for threads in [2usize, 4, 7] {
+            let mut ws = SinkhornWorkspace::new(160, 48, Parallelism::new(threads));
+            let mut plan = Mat::zeros(160, 48);
+            let (_, err) = log_into(&cost, &u, &v, &opts, &mut ws, &mut plan).unwrap();
+            let d = crate::linalg::frobenius_diff(&plan, &serial.plan).unwrap();
+            assert!(d < 1e-13, "threads={threads}: {d:e}");
+            assert!((err - serial.marginal_error).abs() < 1e-13);
+        }
     }
 }

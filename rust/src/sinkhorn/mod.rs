@@ -23,10 +23,12 @@
 mod gibbs;
 mod log_domain;
 mod unbalanced;
+mod workspace;
 
 pub use gibbs::sinkhorn_gibbs;
 pub use log_domain::sinkhorn_log;
 pub use unbalanced::{sinkhorn_unbalanced, UnbalancedOptions};
+pub use workspace::SinkhornWorkspace;
 
 use crate::error::{Error, Result};
 use crate::linalg::Mat;
@@ -117,6 +119,10 @@ pub fn pick_regime(cost: &Mat, epsilon: f64) -> Regime {
 /// Solve the entropic-OT subproblem, dispatching on [`pick_regime`];
 /// if the Gibbs path underflows anyway (adversarial cost structure),
 /// retry once in the log domain rather than failing the solve.
+///
+/// Stateless convenience form — allocates fresh buffers and rescans
+/// the regime every call. The mirror-descent loop uses [`solve_into`]
+/// with a persistent [`SinkhornWorkspace`] instead.
 pub fn solve(cost: &Mat, u: &[f64], v: &[f64], opts: &SinkhornOptions) -> Result<SinkhornResult> {
     validate(cost, u, v, opts)?;
     match pick_regime(cost, opts.epsilon) {
@@ -125,6 +131,88 @@ pub fn solve(cost: &Mat, u: &[f64], v: &[f64], opts: &SinkhornOptions) -> Result
             other => other,
         },
         Regime::Log => sinkhorn_log(cost, u, v, opts),
+    }
+}
+
+/// Outcome of a workspace solve (the plan lands in the caller's
+/// buffer, so only scalars travel back).
+#[derive(Clone, Copy, Debug)]
+pub struct SinkhornStats {
+    /// Sweeps actually performed.
+    pub iterations: usize,
+    /// Final L1 marginal violation.
+    pub marginal_error: f64,
+    /// Numeric regime the solve ran in.
+    pub regime: Regime,
+}
+
+/// Workspace form of [`solve`]: the plan is written into `plan`, all
+/// intermediates live in `ws`, and the `O(MN)` [`pick_regime`] scan
+/// runs only when the workspace has no cached decision (the
+/// mirror-descent loop resets the cache once per *solve*, not per
+/// outer iteration). Zero heap allocation on the success path.
+///
+/// If a cached Gibbs decision underflows mid-solve, the workspace is
+/// demoted to the log domain for the remainder of the solve and the
+/// subproblem is retried there — mirroring [`solve`]'s fallback.
+pub fn solve_into(
+    cost: &Mat,
+    u: &[f64],
+    v: &[f64],
+    opts: &SinkhornOptions,
+    ws: &mut SinkhornWorkspace,
+    plan: &mut Mat,
+) -> Result<SinkhornStats> {
+    validate(cost, u, v, opts)?;
+    if ws.shape() != cost.shape() {
+        return Err(Error::shape(
+            "sinkhorn::solve_into (workspace)",
+            format!("{:?}", cost.shape()),
+            format!("{:?}", ws.shape()),
+        ));
+    }
+    if plan.shape() != cost.shape() {
+        return Err(Error::shape(
+            "sinkhorn::solve_into (plan)",
+            format!("{:?}", cost.shape()),
+            format!("{:?}", plan.shape()),
+        ));
+    }
+    let regime = match ws.cached_regime() {
+        Some(r) => r,
+        None => {
+            let r = pick_regime(cost, opts.epsilon);
+            ws.set_regime(r);
+            r
+        }
+    };
+    match regime {
+        Regime::Gibbs => match gibbs::gibbs_into(cost, u, v, opts, ws, plan) {
+            Ok((iterations, marginal_error)) => Ok(SinkhornStats {
+                iterations,
+                marginal_error,
+                regime: Regime::Gibbs,
+            }),
+            Err(Error::Numeric(_)) => {
+                ws.set_regime(Regime::Log);
+                let (iterations, marginal_error) =
+                    log_domain::log_into(cost, u, v, opts, ws, plan)?;
+                Ok(SinkhornStats {
+                    iterations,
+                    marginal_error,
+                    regime: Regime::Log,
+                })
+            }
+            Err(e) => Err(e),
+        },
+        Regime::Log => {
+            let (iterations, marginal_error) = log_domain::log_into(cost, u, v, opts, ws, plan)?;
+            Ok(SinkhornStats {
+                iterations,
+                marginal_error,
+                regime: Regime::Log,
+            })
+        }
     }
 }
 
@@ -161,6 +249,36 @@ pub fn marginal_violation(plan: &Mat, u: &[f64], v: &[f64]) -> f64 {
     let eu: f64 = r.iter().zip(u).map(|(&a, &b)| (a - b).abs()).sum();
     let ev: f64 = c.iter().zip(v).map(|(&a, &b)| (a - b).abs()).sum();
     eu + ev
+}
+
+/// [`marginal_violation`] without the two marginal allocations:
+/// `col_scratch` (≥ `cols`) holds the column sums, rows stream in one
+/// pass. Same summation order as the allocating form, so results are
+/// bitwise identical.
+pub(crate) fn marginal_error_scratch(
+    plan: &Mat,
+    u: &[f64],
+    v: &[f64],
+    col_scratch: &mut [f64],
+) -> f64 {
+    let (m, n) = plan.shape();
+    debug_assert!(col_scratch.len() >= n);
+    let col = &mut col_scratch[..n];
+    col.fill(0.0);
+    let mut err = 0.0;
+    for i in 0..m {
+        let row = plan.row(i);
+        let mut rs = 0.0;
+        for (c, &x) in col.iter_mut().zip(row) {
+            *c += x;
+            rs += x;
+        }
+        err += (rs - u[i]).abs();
+    }
+    for (c, &vj) in col.iter().zip(v) {
+        err += (c - vj).abs();
+    }
+    err
 }
 
 #[cfg(test)]
@@ -222,6 +340,41 @@ mod tests {
         let r = solve(&cost, &u, &v, &opts).unwrap();
         assert!(r.plan.all_finite());
         assert!(marginal_violation(&r.plan, &u, &v) < 1e-7);
+    }
+
+    #[test]
+    fn solve_into_matches_solve_and_caches_regime() {
+        let (cost, u, v) = random_problem(30, 28, 21);
+        let opts = SinkhornOptions {
+            epsilon: 0.05,
+            max_iters: 4000,
+            tolerance: 1e-12,
+            check_every: 5,
+        };
+        let base = solve(&cost, &u, &v, &opts).unwrap();
+        let mut ws = SinkhornWorkspace::new(30, 28, crate::parallel::Parallelism::SERIAL);
+        let mut plan = Mat::zeros(30, 28);
+        let s1 = solve_into(&cost, &u, &v, &opts, &mut ws, &mut plan).unwrap();
+        assert_eq!(ws.cached_regime(), Some(s1.regime));
+        assert!(crate::linalg::frobenius_diff(&plan, &base.plan).unwrap() < 1e-12);
+        // Second call reuses the cached regime and the same buffers.
+        let s2 = solve_into(&cost, &u, &v, &opts, &mut ws, &mut plan).unwrap();
+        assert_eq!(s1.regime, s2.regime);
+        assert!(crate::linalg::frobenius_diff(&plan, &base.plan).unwrap() < 1e-12);
+        assert!((s2.marginal_error - s1.marginal_error).abs() < 1e-14);
+        // Shape-mismatched workspace is rejected.
+        let mut small = SinkhornWorkspace::new(4, 4, crate::parallel::Parallelism::SERIAL);
+        assert!(solve_into(&cost, &u, &v, &opts, &mut small, &mut plan).is_err());
+    }
+
+    #[test]
+    fn scratch_marginal_error_matches_allocating_form() {
+        let (cost, u, v) = random_problem(9, 13, 2);
+        let r = solve(&cost, &u, &v, &SinkhornOptions::default()).unwrap();
+        let mut scratch = vec![0.0; 13];
+        let a = marginal_violation(&r.plan, &u, &v);
+        let b = marginal_error_scratch(&r.plan, &u, &v, &mut scratch);
+        assert_eq!(a, b);
     }
 
     #[test]

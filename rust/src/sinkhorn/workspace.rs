@@ -1,0 +1,144 @@
+//! Persistent Sinkhorn workspace.
+//!
+//! The mirror-descent loop solves one entropic-OT subproblem per outer
+//! iteration over matrices of a fixed `M×N` shape. Rebuilding the
+//! kernel matrix, scaling vectors and reduction scratch each time put
+//! the allocator on the hot path; [`SinkhornWorkspace`] owns every
+//! buffer the Gibbs and log-domain sweeps touch so that
+//! [`super::solve_into`] performs **zero heap allocation per outer
+//! iteration** (asserted by `tests/alloc_hotpath.rs`).
+//!
+//! The workspace also caches the [`super::pick_regime`] decision: the
+//! regime scan is an extra `O(MN)` pass, and the cost matrices of
+//! consecutive mirror-descent iterations share their conditioning, so
+//! the decision is made once per solve ([`EntropicGw`] resets it via
+//! [`SinkhornWorkspace::reset_regime`]) instead of every iteration. If
+//! a cached Gibbs choice underflows mid-solve (a kernel row/column
+//! flushing to zero is caught by the sweeps themselves) the workspace
+//! demotes itself to the log domain for the rest of the solve — the
+//! same fallback the stateless [`super::solve`] performs per call.
+//! The deliberate tradeoff vs the old per-iteration rescan: a later
+//! iteration whose cost range drifts *into* the denormal margin
+//! (row-gap/ε between the 600 threshold and the ~745 flush point)
+//! stays on Gibbs with reduced precision instead of re-routing to the
+//! log domain; the threshold's ~47-decade headroom exists precisely to
+//! make that zone numerically survivable (see [`super::pick_regime`]).
+//!
+//! [`EntropicGw`]: crate::gw::EntropicGw
+
+use super::Regime;
+use crate::linalg::Mat;
+use crate::parallel::Parallelism;
+
+/// Reusable buffers for [`super::solve_into`] (one per solver/job;
+/// not shareable across shapes).
+#[derive(Debug)]
+pub struct SinkhornWorkspace {
+    pub(crate) m: usize,
+    pub(crate) n: usize,
+    pub(crate) par: Parallelism,
+    /// Gibbs kernel `K` or scaled cost `S = Π/ε`, `m×n`.
+    pub(crate) kernel: Mat,
+    /// `Sᵀ` for the log-domain ψ sweep (`n×m`; built lazily so pure
+    /// Gibbs workloads never pay for it).
+    pub(crate) kernel_t: Option<Mat>,
+    /// Row scalings `a` / potentials `φ` (length `m`).
+    pub(crate) a: Vec<f64>,
+    /// Column scalings `b` / potentials `ψ` (length `n`).
+    pub(crate) b: Vec<f64>,
+    /// `Kᵀ·a` / column-marginal scratch (length `n`).
+    pub(crate) kta: Vec<f64>,
+    /// `ln u` (length `m`).
+    pub(crate) log_u: Vec<f64>,
+    /// `ln v` (length `n`).
+    pub(crate) log_v: Vec<f64>,
+    /// Per-block `Kᵀa` partials for the parallel fused sweep
+    /// (`threads × n`).
+    pub(crate) partials: Vec<f64>,
+    /// Per-block scalar partials for error reductions (`threads`).
+    pub(crate) reduce: Vec<f64>,
+    /// Cached numeric-regime decision for the current solve.
+    regime: Option<Regime>,
+}
+
+impl SinkhornWorkspace {
+    /// Allocate for `m×n` subproblems with the given thread budget.
+    pub fn new(m: usize, n: usize, par: Parallelism) -> Self {
+        let threads = par.threads();
+        SinkhornWorkspace {
+            m,
+            n,
+            par,
+            kernel: Mat::zeros(m, n),
+            kernel_t: None,
+            a: vec![0.0; m],
+            b: vec![0.0; n],
+            kta: vec![0.0; n],
+            log_u: vec![0.0; m],
+            log_v: vec![0.0; n],
+            partials: vec![0.0; threads * n],
+            reduce: vec![0.0; threads],
+            regime: None,
+        }
+    }
+
+    /// Subproblem shape this workspace serves.
+    pub fn shape(&self) -> (usize, usize) {
+        (self.m, self.n)
+    }
+
+    /// Thread budget the sweeps run with.
+    pub fn parallelism(&self) -> Parallelism {
+        self.par
+    }
+
+    /// The regime cached for the current solve, if decided.
+    pub fn cached_regime(&self) -> Option<Regime> {
+        self.regime
+    }
+
+    /// Pin the regime for subsequent [`super::solve_into`] calls.
+    pub fn set_regime(&mut self, regime: Regime) {
+        self.regime = Some(regime);
+    }
+
+    /// Forget the cached regime — call at the start of each outer
+    /// solve so a new cost scale gets a fresh `O(MN)` decision.
+    pub fn reset_regime(&mut self) {
+        self.regime = None;
+    }
+
+    /// Ensure the `Sᵀ` buffer exists (one allocation on the first
+    /// log-domain subproblem; reused ever after).
+    pub(crate) fn ensure_kernel_t(&mut self) {
+        if self.kernel_t.is_none() {
+            self.kernel_t = Some(Mat::zeros(self.n, self.m));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn regime_cache_lifecycle() {
+        let mut ws = SinkhornWorkspace::new(4, 5, Parallelism::SERIAL);
+        assert_eq!(ws.cached_regime(), None);
+        ws.set_regime(Regime::Gibbs);
+        assert_eq!(ws.cached_regime(), Some(Regime::Gibbs));
+        ws.set_regime(Regime::Log);
+        assert_eq!(ws.cached_regime(), Some(Regime::Log));
+        ws.reset_regime();
+        assert_eq!(ws.cached_regime(), None);
+    }
+
+    #[test]
+    fn buffers_sized_for_threads() {
+        let ws = SinkhornWorkspace::new(10, 7, Parallelism::new(4));
+        assert_eq!(ws.partials.len(), 4 * 7);
+        assert_eq!(ws.reduce.len(), 4);
+        assert_eq!(ws.shape(), (10, 7));
+        assert!(ws.kernel_t.is_none());
+    }
+}

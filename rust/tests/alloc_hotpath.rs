@@ -1,0 +1,142 @@
+//! Zero-allocation guarantee for the hot path.
+//!
+//! A counting global allocator wraps the system allocator; a warmed
+//! [`GwWorkspace`] is then driven through full solves whose only
+//! difference is the number of mirror-descent outer iterations. If the
+//! FGC + Sinkhorn loop allocated anything per outer iteration, the
+//! deeper solve would record more allocations — the test asserts the
+//! counts are *identical*, pinning per-outer-iteration heap
+//! allocation at exactly zero (per-solve setup like `C₁` and the
+//! returned plan clone are constant in the iteration count and thus
+//! cancel).
+//!
+//! The budget is pinned at `threads = 1`: with a thread budget the
+//! engine deliberately spawns scoped threads per parallel region
+//! (spawn-per-solve design), and OS thread state is allocated by the
+//! runtime, not by the numeric path under test.
+
+use fgc_gw::gw::{EntropicGw, GradientKind, GwConfig};
+use fgc_gw::linalg::normalize_l1;
+use fgc_gw::prng::Rng;
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+struct CountingAlloc;
+
+static ALLOCATIONS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+fn allocations() -> u64 {
+    ALLOCATIONS.load(Ordering::Relaxed)
+}
+
+fn cfg(outer_iters: usize) -> GwConfig {
+    GwConfig {
+        epsilon: 5e-3,
+        outer_iters,
+        sinkhorn_max_iters: 80,
+        sinkhorn_tolerance: 1e-10,
+        sinkhorn_check_every: 10,
+        threads: 1,
+    }
+}
+
+fn dists(m: usize, n: usize, seed: u64) -> (Vec<f64>, Vec<f64>) {
+    let mut rng = Rng::seeded(seed);
+    let mut u: Vec<f64> = (0..m).map(|_| 0.1 + rng.uniform()).collect();
+    let mut v: Vec<f64> = (0..n).map(|_| 0.1 + rng.uniform()).collect();
+    normalize_l1(&mut u).unwrap();
+    normalize_l1(&mut v).unwrap();
+    (u, v)
+}
+
+/// Allocation count of one `solve_into` on a warmed workspace.
+fn counted_solve(
+    solver: &EntropicGw,
+    u: &[f64],
+    v: &[f64],
+    ws: &mut fgc_gw::gw::GwWorkspace,
+) -> u64 {
+    // Warm: first solve may lazily build buffers (log-domain Sᵀ,
+    // dense tmp) and triggers the one-time regime scan allocation.
+    solver.solve_into(u, v, ws).unwrap();
+    let before = allocations();
+    solver.solve_into(u, v, ws).unwrap();
+    allocations() - before
+}
+
+#[test]
+fn outer_iterations_allocate_nothing() {
+    // (label, geometry builder, gradient kind)
+    let cases: Vec<(&str, Box<dyn Fn(usize) -> EntropicGw>, GradientKind)> = vec![
+        (
+            "1d-fgc",
+            Box::new(|outer| EntropicGw::grid_1d(60, 45, 1, cfg(outer))),
+            GradientKind::Fgc,
+        ),
+        (
+            "1d-naive",
+            Box::new(|outer| EntropicGw::grid_1d(60, 45, 1, cfg(outer))),
+            GradientKind::Naive,
+        ),
+        (
+            "2d-fgc",
+            Box::new(|outer| {
+                EntropicGw::grid_2d(
+                    5,
+                    5,
+                    1,
+                    GwConfig {
+                        epsilon: 0.05,
+                        ..cfg(outer)
+                    },
+                )
+            }),
+            GradientKind::Fgc,
+        ),
+    ];
+
+    for (label, build, kind) in cases {
+        let shallow = build(3);
+        let deep = build(13);
+        let (m, n) = (
+            match label {
+                "2d-fgc" => 25,
+                _ => 60,
+            },
+            match label {
+                "2d-fgc" => 25,
+                _ => 45,
+            },
+        );
+        let (u, v) = dists(m, n, 11);
+
+        let mut ws_shallow = shallow.workspace(kind).unwrap();
+        let mut ws_deep = deep.workspace(kind).unwrap();
+        let a_shallow = counted_solve(&shallow, &u, &v, &mut ws_shallow);
+        let a_deep = counted_solve(&deep, &u, &v, &mut ws_deep);
+        assert_eq!(
+            a_shallow, a_deep,
+            "{label}: allocation count grew with outer iterations \
+             ({a_shallow} @3 vs {a_deep} @13) — something allocates per iteration"
+        );
+    }
+}

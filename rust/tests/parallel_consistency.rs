@@ -1,0 +1,171 @@
+//! Property tests for the parallel engine: every parallel kernel must
+//! agree with the exact serial path to ≤ 1e-12 for thread budgets
+//! {1, 2, 4, 7} across random shapes — including non-square and
+//! degenerate 1-row / 1-column cases. Block-independent kernels
+//! (scans, matmul rows) are in fact bitwise identical; only the
+//! Sinkhorn `Kᵀa` reduction is allowed accumulation roundoff.
+
+use fgc_gw::fgc::{dtilde_cols, dtilde_cols_par, dtilde_rows, dtilde_rows_par};
+use fgc_gw::grid::Binomial;
+use fgc_gw::gw::{EntropicGw, GradientKind, GwConfig};
+use fgc_gw::linalg::{frobenius_diff, matmul, matmul_par, Mat};
+use fgc_gw::parallel::Parallelism;
+use fgc_gw::prng::Rng;
+use fgc_gw::sinkhorn::{self, SinkhornOptions, SinkhornWorkspace};
+
+const THREAD_COUNTS: [usize; 4] = [1, 2, 4, 7];
+
+/// Random shape including the degenerate edges: mixes tiny (1-row,
+/// 1-col), sub-threshold and above-threshold sizes.
+fn random_shape(rng: &mut Rng, case: u64) -> (usize, usize) {
+    match case % 5 {
+        0 => (1, 1 + rng.below(300) as usize),     // single row
+        1 => (1 + rng.below(300) as usize, 1),     // single column
+        2 => (1 + rng.below(40) as usize, 1 + rng.below(40) as usize), // tiny
+        _ => (
+            2 + rng.below(300) as usize,
+            2 + rng.below(300) as usize,
+        ),
+    }
+}
+
+#[test]
+fn scan_kernels_match_serial_across_threads() {
+    let binom = Binomial::new(8);
+    let mut rng = Rng::seeded(2025);
+    for case in 0..24u64 {
+        let (rows, cols) = random_shape(&mut rng, case);
+        let k = rng.below(4) as u32;
+        let diag = k == 0;
+        let x: Vec<f64> = (0..rows * cols).map(|_| rng.uniform() - 0.5).collect();
+
+        let mut cols_serial = vec![0.0; rows * cols];
+        let mut carry = vec![0.0; (k as usize + 1) * cols];
+        dtilde_cols(k, diag, rows, cols, &x, &mut cols_serial, &mut carry, &binom);
+        let mut rows_serial = vec![0.0; rows * cols];
+        dtilde_rows(k, diag, rows, cols, &x, &mut rows_serial, &binom).unwrap();
+
+        for threads in THREAD_COUNTS {
+            let par = Parallelism::new(threads);
+            let mut out = vec![0.0; rows * cols];
+            carry.fill(0.0);
+            dtilde_cols_par(k, diag, rows, cols, &x, &mut out, &mut carry, &binom, par);
+            assert_eq!(
+                out, cols_serial,
+                "dtilde_cols {rows}x{cols} k={k} threads={threads}"
+            );
+
+            let mut out = vec![0.0; rows * cols];
+            dtilde_rows_par(k, diag, rows, cols, &x, &mut out, &binom, par).unwrap();
+            assert_eq!(
+                out, rows_serial,
+                "dtilde_rows {rows}x{cols} k={k} threads={threads}"
+            );
+        }
+    }
+}
+
+#[test]
+fn dense_matmul_matches_serial_across_threads() {
+    let mut rng = Rng::seeded(99);
+    for case in 0..12u64 {
+        let (m, k) = random_shape(&mut rng, case);
+        let n = 1 + rng.below(120) as usize;
+        let a = Mat::from_fn(m, k, |_, _| rng.uniform() - 0.5);
+        let b = Mat::from_fn(k, n, |_, _| rng.uniform() - 0.5);
+        let want = matmul(&a, &b).unwrap();
+        for threads in THREAD_COUNTS {
+            let got = matmul_par(&a, &b, Parallelism::new(threads)).unwrap();
+            assert_eq!(
+                got.as_slice(),
+                want.as_slice(),
+                "matmul {m}x{k}·{k}x{n} threads={threads}"
+            );
+        }
+    }
+}
+
+#[test]
+fn sinkhorn_solve_into_matches_serial_across_threads() {
+    let mut rng = Rng::seeded(7);
+    for case in 0..6u64 {
+        let (m, n) = random_shape(&mut rng, case); // includes 1×N / N×1 cases
+        let cost = Mat::from_fn(m, n, |_, _| rng.uniform());
+        let mut u: Vec<f64> = (0..m).map(|_| 0.05 + rng.uniform()).collect();
+        let mut v: Vec<f64> = (0..n).map(|_| 0.05 + rng.uniform()).collect();
+        fgc_gw::linalg::normalize_l1(&mut u).unwrap();
+        fgc_gw::linalg::normalize_l1(&mut v).unwrap();
+        // Fixed sweep budget: identical work on every path.
+        let opts = SinkhornOptions {
+            epsilon: 0.02,
+            max_iters: 60,
+            tolerance: 0.0,
+            check_every: 10,
+        };
+        let base = sinkhorn::solve(&cost, &u, &v, &opts).unwrap();
+        for threads in THREAD_COUNTS {
+            let mut ws = SinkhornWorkspace::new(m, n, Parallelism::new(threads));
+            let mut plan = Mat::zeros(m, n);
+            sinkhorn::solve_into(&cost, &u, &v, &opts, &mut ws, &mut plan).unwrap();
+            let d = frobenius_diff(&plan, &base.plan).unwrap();
+            assert!(
+                d < 1e-12,
+                "sinkhorn {m}x{n} threads={threads}: ‖ΔΓ‖_F = {d:e}"
+            );
+        }
+    }
+}
+
+#[test]
+fn end_to_end_solve_matches_serial_across_threads() {
+    // Full mirror-descent solves (1D and 2D FGC paths + the dense
+    // baseline) with every thread budget against the serial reference.
+    let mut rng = Rng::seeded(31);
+    let cfg = |threads: usize| GwConfig {
+        epsilon: 5e-3,
+        outer_iters: 5,
+        sinkhorn_max_iters: 200,
+        sinkhorn_tolerance: 1e-10,
+        sinkhorn_check_every: 10,
+        threads,
+    };
+
+    // 1D, rectangular.
+    let (m, n) = (140, 90);
+    let mut u: Vec<f64> = (0..m).map(|_| 0.1 + rng.uniform()).collect();
+    let mut v: Vec<f64> = (0..n).map(|_| 0.1 + rng.uniform()).collect();
+    fgc_gw::linalg::normalize_l1(&mut u).unwrap();
+    fgc_gw::linalg::normalize_l1(&mut v).unwrap();
+    for kind in [GradientKind::Fgc, GradientKind::Naive] {
+        let serial = EntropicGw::grid_1d(m, n, 1, cfg(1)).solve(&u, &v, kind).unwrap();
+        for threads in THREAD_COUNTS {
+            let sol = EntropicGw::grid_1d(m, n, 1, cfg(threads))
+                .solve(&u, &v, kind)
+                .unwrap();
+            let d = frobenius_diff(&sol.plan, &serial.plan).unwrap();
+            assert!(d < 1e-12, "1D {kind} threads={threads}: {d:e}");
+        }
+    }
+
+    // 2D (exercises the factor pipeline's parallel row pass).
+    let side = 6;
+    let nn = side * side;
+    let mut u2: Vec<f64> = (0..nn).map(|_| 0.1 + rng.uniform()).collect();
+    let mut v2: Vec<f64> = (0..nn).map(|_| 0.1 + rng.uniform()).collect();
+    fgc_gw::linalg::normalize_l1(&mut u2).unwrap();
+    fgc_gw::linalg::normalize_l1(&mut v2).unwrap();
+    let cfg2 = |threads: usize| GwConfig {
+        epsilon: 0.05,
+        ..cfg(threads)
+    };
+    let serial = EntropicGw::grid_2d(side, side, 1, cfg2(1))
+        .solve(&u2, &v2, GradientKind::Fgc)
+        .unwrap();
+    for threads in THREAD_COUNTS {
+        let sol = EntropicGw::grid_2d(side, side, 1, cfg2(threads))
+            .solve(&u2, &v2, GradientKind::Fgc)
+            .unwrap();
+        let d = frobenius_diff(&sol.plan, &serial.plan).unwrap();
+        assert!(d < 1e-12, "2D threads={threads}: {d:e}");
+    }
+}

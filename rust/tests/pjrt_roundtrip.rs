@@ -50,6 +50,7 @@ fn gw1d_artifact_matches_native_solver() {
             sinkhorn_max_iters: spec.inner,
             sinkhorn_tolerance: 0.0, // fixed-sweep like the artifact
             sinkhorn_check_every: usize::MAX,
+            threads: 1,
         },
     );
     let native = solver.solve(&u, &v, GradientKind::Fgc).unwrap();

@@ -190,6 +190,7 @@ fn prop_solver_exactness_random_settings() {
                     sinkhorn_max_iters: 300,
                     sinkhorn_tolerance: 1e-10,
                     sinkhorn_check_every: 10,
+                    threads: 1,
                 },
             );
             let fast = solver.solve(u, v, GradientKind::Fgc).map_err(|e| e.to_string())?;
@@ -228,6 +229,7 @@ fn prop_objective_descends() {
                         sinkhorn_max_iters: 500,
                         sinkhorn_tolerance: 1e-11,
                         sinkhorn_check_every: 10,
+                        threads: 1,
                     },
                 )
                 .solve(&u, &v, GradientKind::Fgc)
@@ -355,6 +357,7 @@ fn prop_mass_conservation() {
                     sinkhorn_max_iters: 400,
                     sinkhorn_tolerance: 1e-11,
                     sinkhorn_check_every: 10,
+                    threads: 1,
                 },
             );
             let sol = solver.solve(u, v, GradientKind::Fgc).map_err(|e| e.to_string())?;

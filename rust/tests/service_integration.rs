@@ -20,6 +20,7 @@ fn base_cfg() -> CoordinatorConfig {
         outer_iters: 4,
         sinkhorn_max_iters: 200,
         sinkhorn_tolerance: 1e-8,
+        solver_threads: 2,
         submit_timeout: Duration::from_millis(50),
     }
 }

@@ -17,6 +17,7 @@ fn cfg(eps: f64) -> GwConfig {
         sinkhorn_max_iters: 2000,
         sinkhorn_tolerance: 1e-10,
         sinkhorn_check_every: 10,
+        threads: 1,
     }
 }
 
@@ -93,6 +94,7 @@ fn digit_transform_invariance_small() {
             sinkhorn_max_iters: 600,
             sinkhorn_tolerance: 1e-9,
             sinkhorn_check_every: 10,
+            threads: 1,
         },
     );
     let mut objectives = Vec::new();
@@ -137,6 +139,7 @@ fn horse_alignment_exactness() {
             sinkhorn_max_iters: 500,
             sinkhorn_tolerance: 1e-9,
             sinkhorn_check_every: 10,
+            threads: 1,
         },
     );
     for theta in [0.4, 0.8] {
