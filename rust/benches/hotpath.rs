@@ -1,21 +1,26 @@
-//! Hot-path bench: serial vs multithreaded entropic solve.
+//! Hot-path bench: serial vs multithreaded entropic solve, plus
+//! lowrank-vs-naive on dense geometries.
 //!
 //! Times the full 1D entropic GW solve (FGC gradient + Sinkhorn) at
 //! N ∈ {256, 1024, 4096} with threads = 1 vs threads = T on the same
-//! inputs, checks the plans agree to ‖ΔΓ‖_F < 1e-12, and emits
-//! `BENCH_hotpath.json` so later PRs have a perf trajectory to regress
-//! against (see EXPERIMENTS.md §Perf).
+//! inputs, checks the plans agree to ‖ΔΓ‖_F < 1e-12; then times the
+//! same solve over *dense* geometries (squared distances — exact
+//! rank 3) with the naive vs lowrank backends (`--dense-sizes`).
+//! Emits `BENCH_hotpath.json` so later PRs have a perf trajectory to
+//! regress against (see EXPERIMENTS.md §Perf, §Backend selection).
 //!
 //! ```bash
 //! cargo bench --bench hotpath [-- --quick --threads 4 \
-//!     --sizes 256,1024,4096 --out ../BENCH_hotpath.json]
+//!     --sizes 256,1024,4096 --dense-sizes 256,512 --out ../BENCH_hotpath.json]
 //! ```
 
 use fgc_gw::bench_util::{fmt_secs, time_mean, TableWriter};
 use fgc_gw::cli::Args;
 use fgc_gw::data::random_distribution;
-use fgc_gw::gw::{EntropicGw, GradientKind, GwConfig};
+use fgc_gw::grid::{dense_dist_1d, Grid1d};
+use fgc_gw::gw::{EntropicGw, Geometry, GradientKind, GwConfig, LowRankBackend};
 use fgc_gw::linalg::frobenius_diff;
+use fgc_gw::parallel::Parallelism;
 use fgc_gw::prng::Rng;
 
 fn cfg(threads: usize, quick: bool) -> GwConfig {
@@ -37,11 +42,24 @@ struct Row {
     plan_diff: f64,
 }
 
+struct DenseRow {
+    n: usize,
+    naive_s: f64,
+    lowrank_s: f64,
+    /// One-time ACA factorization cost (both sides) — the crossover
+    /// calibration must amortize this over a solve, so it is reported
+    /// separately from the steady-state solve time.
+    lowrank_build_s: f64,
+    rank: usize,
+    plan_diff: f64,
+}
+
 fn main() {
     let args = Args::parse(std::env::args().skip(1)).unwrap();
     let quick = args.has_flag("quick");
     let threads = args.get_or("threads", 4usize).unwrap();
     let sizes = args.get_list_or("sizes", &[256, 1024, 4096]).unwrap();
+    let dense_sizes = args.get_list_or("dense-sizes", &[256, 512]).unwrap();
     let reps = args.get_or("reps", if quick { 1 } else { 3 }).unwrap();
     let out_path = args.get("out").unwrap_or("../BENCH_hotpath.json").to_string();
 
@@ -93,12 +111,80 @@ fn main() {
     }
     println!("{}", table.render());
 
-    let json = render_json(threads, quick, reps, &rows);
+    // --- dense geometries: lowrank vs naive -----------------------------
+    // Squared distances of collinear points have exact rank 3, so this
+    // is the workload the auto-selector routes to lowrank: O(r·N²)
+    // applies against the naive O(N³).
+    let mut dense_table = TableWriter::new(
+        "hotpath: dense-geometry entropic solve, naive vs lowrank (serial)",
+        &["N", "naive (s)", "lowrank (s)", "build (s)", "speedup", "rank", "‖ΔΓ‖_F"],
+    );
+    let mut dense_rows = Vec::new();
+    for &n in &dense_sizes {
+        let mut rng = Rng::seeded(31 + n as u64);
+        let u = random_distribution(&mut rng, n);
+        let v = random_distribution(&mut rng, n);
+        let d = dense_dist_1d(&Grid1d::unit(n), 2);
+        let geom = Geometry::Dense(d);
+        let solver = EntropicGw::new(geom.clone(), geom.clone(), cfg(1, quick));
+
+        let naive_sol = solver.solve(&u, &v, GradientKind::Naive).unwrap();
+        let lowrank_sol = solver.solve(&u, &v, GradientKind::LowRank).unwrap();
+        let plan_diff = frobenius_diff(&naive_sol.plan, &lowrank_sol.plan).unwrap();
+        assert!(
+            plan_diff < 1e-8,
+            "N={n}: lowrank plan diverged, ‖ΔΓ‖_F = {plan_diff:e}"
+        );
+        // One factorization serves the build-time measurement, the
+        // rank report and the timed workspace (via the custom-backend
+        // entry point).
+        let t_build = std::time::Instant::now();
+        let lr = LowRankBackend::new(geom.clone(), geom.clone(), Parallelism::SERIAL).unwrap();
+        let lowrank_build_s = t_build.elapsed().as_secs_f64();
+        // Rank-3 geometry: the adaptive probe always factors it.
+        let rank = lr.ranks().map_or(0, |r| r.0);
+
+        let mut nws = solver.workspace(GradientKind::Naive).unwrap();
+        let mut lws = solver.workspace_with_backend(Box::new(lr)).unwrap();
+        let tn = time_mean(1, reps, || {
+            solver.solve_into(&u, &v, &mut nws).unwrap().objective
+        });
+        let tl = time_mean(1, reps, || {
+            solver.solve_into(&u, &v, &mut lws).unwrap().objective
+        });
+        let (naive_s, lowrank_s) = (tn.as_secs_f64(), tl.as_secs_f64());
+        dense_table.row(&[
+            n.to_string(),
+            fmt_secs(tn),
+            fmt_secs(tl),
+            format!("{lowrank_build_s:.3}"),
+            format!("{:.2}×", naive_s / lowrank_s),
+            rank.to_string(),
+            format!("{plan_diff:.2e}"),
+        ]);
+        dense_rows.push(DenseRow {
+            n,
+            naive_s,
+            lowrank_s,
+            lowrank_build_s,
+            rank,
+            plan_diff,
+        });
+    }
+    println!("{}", dense_table.render());
+
+    let json = render_json(threads, quick, reps, &rows, &dense_rows);
     std::fs::write(&out_path, &json).unwrap();
     println!("wrote {out_path}");
 }
 
-fn render_json(threads: usize, quick: bool, reps: usize, rows: &[Row]) -> String {
+fn render_json(
+    threads: usize,
+    quick: bool,
+    reps: usize,
+    rows: &[Row],
+    dense_rows: &[DenseRow],
+) -> String {
     let mut s = String::new();
     s.push_str("{\n");
     s.push_str("  \"bench\": \"hotpath\",\n");
@@ -119,6 +205,21 @@ fn render_json(threads: usize, quick: bool, reps: usize, rows: &[Row]) -> String
             r.serial_s / r.parallel_s,
             r.plan_diff,
             if i + 1 == rows.len() { "" } else { "," }
+        ));
+    }
+    s.push_str("  ],\n");
+    s.push_str("  \"dense_results\": [\n");
+    for (i, r) in dense_rows.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"n\": {}, \"naive_s\": {:.6e}, \"lowrank_s\": {:.6e}, \"lowrank_build_s\": {:.6e}, \"speedup\": {:.3}, \"rank\": {}, \"plan_fro_diff\": {:.3e}}}{}\n",
+            r.n,
+            r.naive_s,
+            r.lowrank_s,
+            r.lowrank_build_s,
+            r.naive_s / r.lowrank_s,
+            r.rank,
+            r.plan_diff,
+            if i + 1 == dense_rows.len() { "" } else { "," }
         ));
     }
     s.push_str("  ]\n}\n");

@@ -13,6 +13,7 @@
 //! epsilon = 0.002
 //! outer_iters = 10
 //! threads = 1        # per-job kernel threads (0 = all cores)
+//! backend = auto     # auto | fgc | naive | lowrank (router override)
 //! ```
 
 use crate::error::{Error, Result};

@@ -21,15 +21,14 @@ pub struct VariantKey {
 
 /// Key for a request.
 pub fn variant_key(req: &JobRequest) -> VariantKey {
-    let backend = match &req.backend {
-        BackendChoice::Pjrt(name) => format!("pjrt:{name}"),
-        BackendChoice::NativeFgc => "native-fgc".to_string(),
-        BackendChoice::NativeNaive => "native-naive".to_string(),
-    };
+    let backend = req.backend.to_string();
     let (family, points, k) = match &req.payload {
         JobPayload::Gw1d { u, k, .. } => ("gw1d", u.len(), *k),
         JobPayload::Fgw1d { u, k, .. } => ("fgw1d", u.len(), *k),
         JobPayload::Gw2d { n, k, .. } => ("gw2d", n * n, *k),
+        // Dense jobs have no exponent; same-size dense jobs share
+        // warm caches just fine.
+        JobPayload::GwDense { u, .. } => ("gwdense", u.len(), 0),
     };
     VariantKey {
         backend,

@@ -1,5 +1,6 @@
 //! Job model for the alignment service.
 
+use crate::gw::GradientKind;
 use crate::linalg::Mat;
 use std::time::{Duration, Instant};
 
@@ -48,6 +49,21 @@ pub enum JobPayload {
         /// Entropic ε.
         epsilon: f64,
     },
+    /// GW between distributions on arbitrary dense metric spaces — the
+    /// workload the low-rank backend serves (no grid structure to
+    /// exploit).
+    GwDense {
+        /// Source distance matrix (`u.len()` square, symmetric).
+        dx: Mat,
+        /// Target distance matrix (`v.len()` square, symmetric).
+        dy: Mat,
+        /// Source distribution.
+        u: Vec<f64>,
+        /// Target distribution.
+        v: Vec<f64>,
+        /// Entropic ε.
+        epsilon: f64,
+    },
 }
 
 impl JobPayload {
@@ -57,7 +73,14 @@ impl JobPayload {
             JobPayload::Gw1d { u, .. } => u.len(),
             JobPayload::Fgw1d { u, .. } => u.len(),
             JobPayload::Gw2d { n, .. } => n * n,
+            JobPayload::GwDense { u, .. } => u.len(),
         }
+    }
+
+    /// True iff the payload's geometry carries grid structure the FGC
+    /// backend can exploit.
+    pub fn is_structured(&self) -> bool {
+        !matches!(self, JobPayload::GwDense { .. })
     }
 
     /// Quick structural validation before enqueueing.
@@ -116,6 +139,36 @@ impl JobPayload {
                     return Err("epsilon must be > 0".into());
                 }
             }
+            JobPayload::GwDense {
+                dx,
+                dy,
+                u,
+                v,
+                epsilon,
+            } => {
+                check_dist(u, "u")?;
+                check_dist(v, "v")?;
+                if dx.shape() != (u.len(), u.len()) {
+                    return Err(format!(
+                        "dx must be {0}x{0} to match u, got {1:?}",
+                        u.len(),
+                        dx.shape()
+                    ));
+                }
+                if dy.shape() != (v.len(), v.len()) {
+                    return Err(format!(
+                        "dy must be {0}x{0} to match v, got {1:?}",
+                        v.len(),
+                        dy.shape()
+                    ));
+                }
+                if !dx.all_finite() || !dy.all_finite() {
+                    return Err("distance matrices must be finite".into());
+                }
+                if *epsilon <= 0.0 {
+                    return Err("epsilon must be > 0".into());
+                }
+            }
         }
         Ok(())
     }
@@ -128,8 +181,31 @@ pub enum BackendChoice {
     NativeFgc,
     /// Native Rust solver with the dense baseline gradient.
     NativeNaive,
+    /// Native Rust solver with the low-rank factored gradient.
+    NativeLowRank,
     /// PJRT-compiled artifact (by name).
     Pjrt(String),
+}
+
+impl BackendChoice {
+    /// The native choice for a gradient kind.
+    pub fn native(kind: GradientKind) -> Self {
+        match kind {
+            GradientKind::Fgc => BackendChoice::NativeFgc,
+            GradientKind::Naive => BackendChoice::NativeNaive,
+            GradientKind::LowRank => BackendChoice::NativeLowRank,
+        }
+    }
+
+    /// The gradient kind a native worker should run this choice with
+    /// (PJRT falls back to FGC when executed natively).
+    pub fn gradient_kind(&self) -> GradientKind {
+        match self {
+            BackendChoice::NativeNaive => GradientKind::Naive,
+            BackendChoice::NativeLowRank => GradientKind::LowRank,
+            BackendChoice::NativeFgc | BackendChoice::Pjrt(_) => GradientKind::Fgc,
+        }
+    }
 }
 
 impl std::fmt::Display for BackendChoice {
@@ -137,6 +213,7 @@ impl std::fmt::Display for BackendChoice {
         match self {
             BackendChoice::NativeFgc => write!(f, "native-fgc"),
             BackendChoice::NativeNaive => write!(f, "native-naive"),
+            BackendChoice::NativeLowRank => write!(f, "native-lowrank"),
             BackendChoice::Pjrt(name) => write!(f, "pjrt:{name}"),
         }
     }
@@ -232,6 +309,49 @@ mod tests {
             epsilon: 0.01,
         };
         assert!(p.validate().is_err());
+    }
+
+    #[test]
+    fn validate_dense_jobs() {
+        let good = JobPayload::GwDense {
+            dx: Mat::zeros(4, 4),
+            dy: Mat::zeros(4, 4),
+            u: uniform(4),
+            v: uniform(4),
+            epsilon: 0.01,
+        };
+        assert!(good.validate().is_ok());
+        assert_eq!(good.points(), 4);
+        assert!(!good.is_structured());
+        let bad_shape = JobPayload::GwDense {
+            dx: Mat::zeros(3, 4),
+            dy: Mat::zeros(4, 4),
+            u: uniform(4),
+            v: uniform(4),
+            epsilon: 0.01,
+        };
+        assert!(bad_shape.validate().is_err());
+        let mut nan = Mat::zeros(4, 4);
+        nan[(0, 0)] = f64::NAN;
+        let bad_entries = JobPayload::GwDense {
+            dx: nan,
+            dy: Mat::zeros(4, 4),
+            u: uniform(4),
+            v: uniform(4),
+            epsilon: 0.01,
+        };
+        assert!(bad_entries.validate().is_err());
+    }
+
+    #[test]
+    fn backend_choice_round_trips_kinds() {
+        for kind in [GradientKind::Fgc, GradientKind::Naive, GradientKind::LowRank] {
+            assert_eq!(BackendChoice::native(kind).gradient_kind(), kind);
+        }
+        assert_eq!(
+            BackendChoice::Pjrt("x".into()).gradient_kind(),
+            GradientKind::Fgc
+        );
     }
 
     #[test]

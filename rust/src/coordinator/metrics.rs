@@ -1,6 +1,9 @@
 //! Service metrics: counters + latency histogram (lock-free counters,
-//! a mutex-guarded reservoir for percentiles).
+//! a mutex-guarded reservoir for percentiles). Completions are counted
+//! per [`BackendChoice`] so backend auto-selection is observable in
+//! production.
 
+use super::job::BackendChoice;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Duration;
@@ -14,6 +17,7 @@ pub struct ServiceMetrics {
     failed: AtomicU64,
     native_fgc: AtomicU64,
     native_naive: AtomicU64,
+    native_lowrank: AtomicU64,
     pjrt: AtomicU64,
     /// Completed-job latencies in microseconds (queue + solve).
     latencies_us: Mutex<Vec<u64>>,
@@ -37,27 +41,19 @@ impl ServiceMetrics {
         self.rejected.fetch_add(1, Ordering::Relaxed);
     }
 
-    /// Record a completion.
-    pub fn on_complete(
-        &self,
-        backend_fgc: bool,
-        backend_pjrt: bool,
-        ok: bool,
-        queue: Duration,
-        solve: Duration,
-    ) {
+    /// Record a completion for the backend that ran the job.
+    pub fn on_complete(&self, backend: &BackendChoice, ok: bool, queue: Duration, solve: Duration) {
         if ok {
             self.completed.fetch_add(1, Ordering::Relaxed);
         } else {
             self.failed.fetch_add(1, Ordering::Relaxed);
         }
-        if backend_pjrt {
-            self.pjrt.fetch_add(1, Ordering::Relaxed);
-        } else if backend_fgc {
-            self.native_fgc.fetch_add(1, Ordering::Relaxed);
-        } else {
-            self.native_naive.fetch_add(1, Ordering::Relaxed);
-        }
+        match backend {
+            BackendChoice::Pjrt(_) => self.pjrt.fetch_add(1, Ordering::Relaxed),
+            BackendChoice::NativeFgc => self.native_fgc.fetch_add(1, Ordering::Relaxed),
+            BackendChoice::NativeNaive => self.native_naive.fetch_add(1, Ordering::Relaxed),
+            BackendChoice::NativeLowRank => self.native_lowrank.fetch_add(1, Ordering::Relaxed),
+        };
         let total_us = (queue + solve).as_micros() as u64;
         self.queue_us_total
             .fetch_add(queue.as_micros() as u64, Ordering::Relaxed);
@@ -84,6 +80,7 @@ impl ServiceMetrics {
             failed: self.failed.load(Ordering::Relaxed),
             native_fgc: self.native_fgc.load(Ordering::Relaxed),
             native_naive: self.native_naive.load(Ordering::Relaxed),
+            native_lowrank: self.native_lowrank.load(Ordering::Relaxed),
             pjrt: self.pjrt.load(Ordering::Relaxed),
             p50: pct(0.50),
             p90: pct(0.90),
@@ -115,6 +112,8 @@ pub struct MetricsSnapshot {
     pub native_fgc: u64,
     /// Dense-baseline completions.
     pub native_naive: u64,
+    /// Low-rank backend completions.
+    pub native_lowrank: u64,
     /// PJRT completions.
     pub pjrt: u64,
     /// Median end-to-end latency.
@@ -138,8 +137,8 @@ impl std::fmt::Display for MetricsSnapshot {
         )?;
         writeln!(
             f,
-            "backends: native-fgc={} native-naive={} pjrt={}",
-            self.native_fgc, self.native_naive, self.pjrt
+            "backends: native-fgc={} native-naive={} native-lowrank={} pjrt={}",
+            self.native_fgc, self.native_naive, self.native_lowrank, self.pjrt
         )?;
         write!(
             f,
@@ -159,8 +158,7 @@ mod tests {
         for i in 0..100u64 {
             m.on_submit();
             m.on_complete(
-                true,
-                false,
+                &BackendChoice::NativeFgc,
                 true,
                 Duration::from_micros(10),
                 Duration::from_micros(i * 10),
@@ -177,6 +175,29 @@ mod tests {
     }
 
     #[test]
+    fn every_backend_choice_is_counted() {
+        let m = ServiceMetrics::new();
+        for (choice, times) in [
+            (BackendChoice::NativeFgc, 1),
+            (BackendChoice::NativeNaive, 2),
+            (BackendChoice::NativeLowRank, 3),
+            (BackendChoice::Pjrt("a".into()), 4),
+        ] {
+            for _ in 0..times {
+                m.on_complete(&choice, true, Duration::ZERO, Duration::ZERO);
+            }
+        }
+        let s = m.snapshot();
+        assert_eq!(
+            (s.native_fgc, s.native_naive, s.native_lowrank, s.pjrt),
+            (1, 2, 3, 4)
+        );
+        assert_eq!(s.completed, 10);
+        let text = s.to_string();
+        assert!(text.contains("native-lowrank=3"));
+    }
+
+    #[test]
     fn empty_snapshot_is_zero() {
         let m = ServiceMetrics::new();
         let s = m.snapshot();
@@ -188,7 +209,12 @@ mod tests {
     fn display_contains_fields() {
         let m = ServiceMetrics::new();
         m.on_submit();
-        m.on_complete(false, true, true, Duration::ZERO, Duration::from_millis(1));
+        m.on_complete(
+            &BackendChoice::Pjrt("x".into()),
+            true,
+            Duration::ZERO,
+            Duration::from_millis(1),
+        );
         let text = m.snapshot().to_string();
         assert!(text.contains("pjrt=1"));
         assert!(text.contains("p50"));

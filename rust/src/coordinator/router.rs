@@ -1,19 +1,26 @@
-//! Backend routing: decide per job whether to run native-FGC,
-//! native-naive, or a PJRT artifact.
+//! Backend routing: decide per job whether to run a native gradient
+//! backend (auto-selected from the job's geometry) or a PJRT artifact.
 
 use super::job::{BackendChoice, JobPayload};
+use crate::gw::backend::auto_kind_for_sizes;
+use crate::gw::GradientKind;
 use crate::runtime::{ArtifactKind, ArtifactRegistry};
 
 /// Routing policy knobs.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum RoutingPolicy {
-    /// Prefer a matching PJRT artifact, else native FGC (default).
+    /// Prefer a matching PJRT artifact, else the auto-selected native
+    /// backend (default).
     PreferPjrt,
-    /// Always native FGC (artifacts ignored).
+    /// Always native, auto-selecting the gradient backend per job
+    /// (grid → fgc, small dense → naive, large dense → lowrank).
     NativeOnly,
     /// Native dense baseline (for A/B benchmarking through the
     /// service path).
     BaselineOnly,
+    /// Pin every job to one native gradient backend (`solver.backend`
+    /// config key / `--backend` CLI flag).
+    Force(GradientKind),
 }
 
 /// The router: artifact shape lookup + policy.
@@ -21,6 +28,16 @@ pub enum RoutingPolicy {
 pub struct Router {
     registry: ArtifactRegistry,
     policy: RoutingPolicy,
+}
+
+/// Auto-select the native backend from the payload's geometry — the
+/// cost model of `crate::gw::backend` applied at admission time.
+fn native_auto(payload: &JobPayload) -> BackendChoice {
+    let (m, n) = match payload {
+        JobPayload::GwDense { dx, dy, .. } => (dx.rows(), dy.rows()),
+        other => (other.points(), other.points()),
+    };
+    BackendChoice::native(auto_kind_for_sizes(payload.is_structured(), m, n))
 }
 
 impl Router {
@@ -44,11 +61,13 @@ impl Router {
     /// PJRT dispatch requires an exact `(kind, n)` artifact match
     /// *and* matching baked-in hyperparameters (ε, k) — otherwise the
     /// compiled solver would answer a different question; mismatches
-    /// fall back to the native solver, which takes runtime parameters.
+    /// fall back to the native auto-selection, which takes runtime
+    /// parameters.
     pub fn route(&self, payload: &JobPayload) -> BackendChoice {
         match self.policy {
-            RoutingPolicy::NativeOnly => BackendChoice::NativeFgc,
+            RoutingPolicy::NativeOnly => native_auto(payload),
             RoutingPolicy::BaselineOnly => BackendChoice::NativeNaive,
+            RoutingPolicy::Force(kind) => BackendChoice::native(kind),
             RoutingPolicy::PreferPjrt => {
                 let hit = match payload {
                     JobPayload::Gw1d { u, k, epsilon, .. } => self
@@ -63,10 +82,13 @@ impl Router {
                         .registry
                         .find(ArtifactKind::Gw2dSolve, *n)
                         .filter(|s| s.k == *k && close(s.epsilon, *epsilon)),
+                    // No compiled artifacts exist for unstructured
+                    // geometries.
+                    JobPayload::GwDense { .. } => None,
                 };
                 match hit {
                     Some(spec) => BackendChoice::Pjrt(spec.name.clone()),
-                    None => BackendChoice::NativeFgc,
+                    None => native_auto(payload),
                 }
             }
         }
@@ -80,6 +102,8 @@ fn close(a: f64, b: f64) -> bool {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::gw::backend::DENSE_LOWRANK_CROSSOVER;
+    use crate::linalg::Mat;
     use std::path::Path;
 
     fn registry_with(n: usize) -> ArtifactRegistry {
@@ -102,6 +126,16 @@ mod tests {
         }
     }
 
+    fn dense(n: usize) -> JobPayload {
+        JobPayload::GwDense {
+            dx: Mat::zeros(n, n),
+            dy: Mat::zeros(n, n),
+            u: vec![1.0 / n as f64; n],
+            v: vec![1.0 / n as f64; n],
+            epsilon: 0.01,
+        }
+    }
+
     #[test]
     fn prefers_pjrt_on_exact_match() {
         let r = Router::new(registry_with(64), RoutingPolicy::PreferPjrt);
@@ -120,10 +154,31 @@ mod tests {
     }
 
     #[test]
+    fn dense_jobs_route_by_size() {
+        for policy in [RoutingPolicy::PreferPjrt, RoutingPolicy::NativeOnly] {
+            let r = Router::new(registry_with(64), policy);
+            assert_eq!(
+                r.route(&dense(DENSE_LOWRANK_CROSSOVER)),
+                BackendChoice::NativeNaive
+            );
+            assert_eq!(
+                r.route(&dense(DENSE_LOWRANK_CROSSOVER + 1)),
+                BackendChoice::NativeLowRank
+            );
+        }
+    }
+
+    #[test]
     fn policies_override() {
         let r = Router::new(registry_with(64), RoutingPolicy::NativeOnly);
         assert_eq!(r.route(&gw1d(64, 1, 0.002)), BackendChoice::NativeFgc);
         let r = Router::new(registry_with(64), RoutingPolicy::BaselineOnly);
         assert_eq!(r.route(&gw1d(64, 1, 0.002)), BackendChoice::NativeNaive);
+        let r = Router::new(
+            registry_with(64),
+            RoutingPolicy::Force(GradientKind::LowRank),
+        );
+        assert_eq!(r.route(&gw1d(64, 1, 0.002)), BackendChoice::NativeLowRank);
+        assert_eq!(r.route(&dense(8)), BackendChoice::NativeLowRank);
     }
 }

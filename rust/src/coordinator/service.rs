@@ -7,7 +7,7 @@ use super::metrics::{MetricsSnapshot, ServiceMetrics};
 use super::queue::BoundedQueue;
 use super::router::{Router, RoutingPolicy};
 use crate::error::{Error, Result};
-use crate::gw::{EntropicGw, Geometry, GradientKind, GwConfig};
+use crate::gw::{EntropicGw, Geometry, GwConfig};
 use crate::runtime::{ArtifactRegistry, Executor};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -219,7 +219,7 @@ fn native_worker_loop(
             for req in jobs {
                 let tx = tx_by_id.remove(&req.id).expect("sender registered");
                 let result = execute_native(&req, &cfg);
-                report(&metrics, &req, &result);
+                report(&metrics, &result);
                 let _ = tx.send(result);
             }
         }
@@ -255,18 +255,27 @@ fn pjrt_worker_loop(
                     }
                 }
             }
-            _ => execute_native(&req, &cfg),
+            _ => {
+                // Executor unavailable: the job runs natively, so the
+                // result (and the per-backend metrics) must say so.
+                let mut r = execute_native(&req, &cfg);
+                if matches!(req.backend, BackendChoice::Pjrt(_)) {
+                    r.backend = BackendChoice::NativeFgc;
+                }
+                r
+            }
         };
         let _ = started;
-        report(&metrics, &req, &result);
+        report(&metrics, &result);
         let _ = tx.send(result);
     }
 }
 
-fn report(metrics: &ServiceMetrics, req: &JobRequest, result: &JobResult) {
+fn report(metrics: &ServiceMetrics, result: &JobResult) {
+    // Count the backend that actually ran (PJRT failures downgrade to
+    // native in `result.backend`).
     metrics.on_complete(
-        matches!(req.backend, BackendChoice::NativeFgc),
-        matches!(req.backend, BackendChoice::Pjrt(_)),
+        &result.backend,
         result.objective.is_ok(),
         result.queue_time,
         result.solve_time,
@@ -276,10 +285,7 @@ fn report(metrics: &ServiceMetrics, req: &JobRequest, result: &JobResult) {
 /// Run a job on the native solvers.
 fn execute_native(req: &JobRequest, cfg: &CoordinatorConfig) -> JobResult {
     let queue_time = req.submitted_at.elapsed();
-    let kind = match req.backend {
-        BackendChoice::NativeNaive => GradientKind::Naive,
-        _ => GradientKind::Fgc,
-    };
+    let kind = req.backend.gradient_kind();
     let started = Instant::now();
     let solved: Result<(crate::linalg::Mat, f64)> = (|| {
         match &req.payload {
@@ -304,6 +310,21 @@ fn execute_native(req: &JobRequest, cfg: &CoordinatorConfig) -> JobResult {
                 let solver = EntropicGw::new(
                     Geometry::grid_2d_unit(*n, *k),
                     Geometry::grid_2d_unit(*n, *k),
+                    gw_cfg(cfg, *epsilon),
+                );
+                let sol = solver.solve(u, v, kind)?;
+                Ok((sol.plan, sol.objective))
+            }
+            JobPayload::GwDense {
+                dx,
+                dy,
+                u,
+                v,
+                epsilon,
+            } => {
+                let solver = EntropicGw::new(
+                    Geometry::Dense(dx.clone()),
+                    Geometry::Dense(dy.clone()),
                     gw_cfg(cfg, *epsilon),
                 );
                 let sol = solver.solve(u, v, kind)?;
@@ -351,6 +372,13 @@ fn execute_pjrt(
         JobPayload::Fgw1d {
             u, v, feature_cost, ..
         } => executor.run_fgw_solve(spec, u, v, feature_cost)?,
+        // The router never assigns dense jobs to PJRT (no artifacts
+        // exist for unstructured geometries).
+        JobPayload::GwDense { .. } => {
+            return Err(Error::Runtime(
+                "no PJRT artifact family for dense-geometry jobs".into(),
+            ))
+        }
     };
     Ok(JobResult {
         id: req.id,
@@ -451,6 +479,39 @@ mod tests {
         let (_, rx) = coord.submit(gw_payload(16, 9)).unwrap();
         coord.shutdown(); // workers drain before exiting
         assert!(rx.recv().unwrap().objective.is_ok());
+    }
+
+    #[test]
+    fn dense_jobs_solve_and_count_per_backend() {
+        let coord = Coordinator::start(test_cfg()).unwrap();
+        let mut rng = Rng::seeded(4);
+        let n = 12;
+        // A smooth dense geometry (squared distances: exact rank 3).
+        let d = crate::grid::dense_dist_1d(&crate::grid::Grid1d::unit(n), 2);
+        let payload = JobPayload::GwDense {
+            dx: d.clone(),
+            dy: d,
+            u: random_distribution(&mut rng, n),
+            v: random_distribution(&mut rng, n),
+            epsilon: 0.05,
+        };
+        // Small dense → naive under auto-selection.
+        let res = coord.submit_and_wait(payload.clone()).unwrap();
+        assert!(res.objective.is_ok(), "{:?}", res.objective);
+        assert_eq!(res.backend, BackendChoice::NativeNaive);
+        assert_eq!(coord.metrics().native_naive, 1);
+        coord.shutdown();
+
+        // Forcing lowrank runs the same job on the factored backend
+        // and the metrics snapshot records it.
+        let mut cfg = test_cfg();
+        cfg.policy = RoutingPolicy::Force(crate::gw::GradientKind::LowRank);
+        let coord = Coordinator::start(cfg).unwrap();
+        let res = coord.submit_and_wait(payload).unwrap();
+        assert!(res.objective.is_ok(), "{:?}", res.objective);
+        assert_eq!(res.backend, BackendChoice::NativeLowRank);
+        assert_eq!(coord.metrics().native_lowrank, 1);
+        coord.shutdown();
     }
 
     #[test]

@@ -1,0 +1,272 @@
+//! The paper's fast-gradient backend (§3): dynamic-programming scans
+//! on grid-structured sides, dense products only where no structure
+//! exists.
+//!
+//! Dispatch is decided once at construction:
+//!
+//! * grid × grid (matching exponents) — the full `O(k²·MN)` FGC path
+//!   via [`dxgdy_1d`] / [`dxgdy_2d`];
+//! * dense × 1D-grid (the barycenter shape) — the grid factor is
+//!   applied by row scans (`A = Γ·D̃_Y` in `O(k²·MN)`), then one dense
+//!   product `D_X·A`; mirrored for 1D-grid × dense;
+//! * anything else (dense × dense under this kind, or mixed 2D) —
+//!   plain dense products, identical to [`super::NaiveBackend`].
+
+use super::{DensePair, GradientBackend};
+use crate::error::{Error, Result};
+use crate::fgc::{
+    check_scan_exponent, dtilde_cols_par, dtilde_rows_par, dxgdy_1d, dxgdy_2d, Workspace1d,
+    Workspace2d,
+};
+use crate::grid::{Binomial, Grid1d, Grid2d};
+use crate::gw::geometry::Geometry;
+use crate::gw::gradient::GradientKind;
+use crate::linalg::{matmul_into, Mat};
+use crate::parallel::Parallelism;
+
+/// How the bound pair is evaluated (fixed at construction).
+enum Plan {
+    /// Both sides 1D grids: scans on both factors.
+    Grid1d {
+        gx: Grid1d,
+        gy: Grid1d,
+        k: u32,
+        ws: Box<Workspace1d>,
+    },
+    /// Both sides 2D grids: the binomial Kronecker pipeline.
+    Grid2d {
+        gx: Grid2d,
+        gy: Grid2d,
+        k: u32,
+        ws: Box<Workspace2d>,
+    },
+    /// Dense left factor, 1D grid right factor: `out = D_X·(Γ·D̃_Y·h^k)`.
+    DenseLeft {
+        dx: Mat,
+        gy: Grid1d,
+        k: u32,
+        a: Mat,
+        binom: Binomial,
+    },
+    /// 1D grid left factor, dense right factor: `out = (D̃_X·Γ·h^k)·D_Y`.
+    DenseRight {
+        gx: Grid1d,
+        k: u32,
+        dy: Mat,
+        a: Mat,
+        carry: Vec<f64>,
+        binom: Binomial,
+    },
+    /// No exploitable structure: the shared dense two-product apply.
+    Dense(DensePair),
+}
+
+/// FGC gradient backend over a bound geometry pair.
+pub struct FgcBackend {
+    geom_x: Geometry,
+    geom_y: Geometry,
+    plan: Plan,
+    par: Parallelism,
+}
+
+impl FgcBackend {
+    /// Bind a geometry pair. Grid × grid pairs must share the distance
+    /// exponent `k` (paper §2 footnote); scan exponents are validated
+    /// here so the apply path is infallible on that axis.
+    pub fn new(geom_x: Geometry, geom_y: Geometry, par: Parallelism) -> Result<Self> {
+        let (m, n) = (geom_x.len(), geom_y.len());
+        let plan = match (&geom_x, &geom_y) {
+            (Geometry::Grid1d { grid: gx, k: kx }, Geometry::Grid1d { grid: gy, k: ky }) => {
+                if kx != ky {
+                    return Err(Error::Invalid(format!(
+                        "FGC requires k_X = k_Y (got {kx} vs {ky}); see paper §2 footnote"
+                    )));
+                }
+                check_scan_exponent(*kx)?;
+                Plan::Grid1d {
+                    gx: *gx,
+                    gy: *gy,
+                    k: *kx,
+                    ws: Box::new(Workspace1d::with_parallelism(gx.n, gy.n, *kx, par)),
+                }
+            }
+            (Geometry::Grid2d { grid: gx, k: kx }, Geometry::Grid2d { grid: gy, k: ky }) => {
+                if kx != ky {
+                    return Err(Error::Invalid(format!(
+                        "FGC requires k_X = k_Y (got {kx} vs {ky})"
+                    )));
+                }
+                check_scan_exponent(*kx)?;
+                Plan::Grid2d {
+                    gx: *gx,
+                    gy: *gy,
+                    k: *kx,
+                    ws: Box::new(Workspace2d::with_parallelism(gx.n, gy.n, *kx, par)),
+                }
+            }
+            (Geometry::Dense(_), Geometry::Grid1d { grid: gy, k }) => {
+                check_scan_exponent(*k)?;
+                Plan::DenseLeft {
+                    dx: geom_x.dense(),
+                    gy: *gy,
+                    k: *k,
+                    a: Mat::zeros(m, n),
+                    binom: Binomial::new((2 * *k as usize).max(4)),
+                }
+            }
+            (Geometry::Grid1d { grid: gx, k }, Geometry::Dense(_)) => {
+                check_scan_exponent(*k)?;
+                Plan::DenseRight {
+                    gx: *gx,
+                    k: *k,
+                    dy: geom_y.dense(),
+                    a: Mat::zeros(m, n),
+                    carry: vec![0.0; (*k as usize + 1) * n],
+                    binom: Binomial::new((2 * *k as usize).max(4)),
+                }
+            }
+            _ => Plan::Dense(DensePair::new(&geom_x, &geom_y)),
+        };
+        Ok(FgcBackend {
+            geom_x,
+            geom_y,
+            plan,
+            par,
+        })
+    }
+}
+
+impl GradientBackend for FgcBackend {
+    fn kind(&self) -> GradientKind {
+        GradientKind::Fgc
+    }
+
+    fn geom_x(&self) -> &Geometry {
+        &self.geom_x
+    }
+
+    fn geom_y(&self) -> &Geometry {
+        &self.geom_y
+    }
+
+    fn apply(&mut self, gamma: &Mat, out: &mut Mat) -> Result<()> {
+        let expect = (self.geom_x.len(), self.geom_y.len());
+        if gamma.shape() != expect || out.shape() != expect {
+            return Err(Error::shape(
+                "FgcBackend::apply",
+                format!("{}x{}", expect.0, expect.1),
+                format!("{:?} / {:?}", gamma.shape(), out.shape()),
+            ));
+        }
+        let par = self.par;
+        match &mut self.plan {
+            Plan::Grid1d { gx, gy, k, ws } => dxgdy_1d(gx, gy, *k, gamma, out, ws),
+            Plan::Grid2d { gx, gy, k, ws } => dxgdy_2d(gx, gy, *k, gamma, out, ws),
+            Plan::DenseLeft { dx, gy, k, a, binom } => {
+                let (m, n) = expect;
+                dtilde_rows_par(*k, false, m, n, gamma.as_slice(), a.as_mut_slice(), binom, par)?;
+                let s = gy.scale(*k);
+                if s != 1.0 {
+                    for x in a.as_mut_slice() {
+                        *x *= s;
+                    }
+                }
+                matmul_into(dx, a, out, par)
+            }
+            Plan::DenseRight {
+                gx,
+                k,
+                dy,
+                a,
+                carry,
+                binom,
+            } => {
+                let (m, n) = expect;
+                dtilde_cols_par(
+                    *k,
+                    false,
+                    m,
+                    n,
+                    gamma.as_slice(),
+                    a.as_mut_slice(),
+                    carry,
+                    binom,
+                    par,
+                );
+                let s = gx.scale(*k);
+                if s != 1.0 {
+                    for x in a.as_mut_slice() {
+                        *x *= s;
+                    }
+                }
+                matmul_into(a, dy, out, par)
+            }
+            Plan::Dense(pair) => pair.apply(gamma, out, par),
+        }
+    }
+
+    fn apply_cost(&self) -> f64 {
+        let (m, n) = (self.geom_x.len() as f64, self.geom_y.len() as f64);
+        match &self.plan {
+            Plan::Grid1d { k, .. } | Plan::Grid2d { k, .. } => {
+                let lanes = *k as f64 + 1.0;
+                lanes * lanes * m * n
+            }
+            Plan::DenseLeft { .. } => m * m * n,
+            Plan::DenseRight { .. } => m * n * n,
+            Plan::Dense(_) => m * n * (m + n),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fgc::naive::dxgdy_dense;
+    use crate::linalg::frobenius_diff;
+    use crate::prng::Rng;
+
+    fn random_gamma(m: usize, n: usize, seed: u64) -> Mat {
+        let mut rng = Rng::seeded(seed);
+        Mat::from_fn(m, n, |_, _| rng.uniform())
+    }
+
+    #[test]
+    fn mixed_pairs_apply_the_structured_side_fast() {
+        // dense × grid and grid × dense must match the dense oracle.
+        for k in [1u32, 2] {
+            let gx = Geometry::grid_1d_unit(14, k);
+            let gy = Geometry::grid_1d_unit(11, k);
+            let (dxm, dym) = (gx.dense(), gy.dense());
+            let gamma = random_gamma(14, 11, 40 + k as u64);
+            let oracle = dxgdy_dense(&dxm, &dym, &gamma).unwrap();
+
+            for (a, b) in [
+                (Geometry::Dense(dxm.clone()), gy.clone()),
+                (gx.clone(), Geometry::Dense(dym.clone())),
+            ] {
+                let mut be = FgcBackend::new(a, b, Parallelism::SERIAL).unwrap();
+                let mut out = Mat::zeros(14, 11);
+                be.apply(&gamma, &mut out).unwrap();
+                let d = frobenius_diff(&out, &oracle).unwrap();
+                assert!(d < 1e-11, "k={k}: mixed-path diff {d:e}");
+            }
+        }
+    }
+
+    #[test]
+    fn mixed_pairs_match_across_threads() {
+        let gx = Geometry::Dense(Geometry::grid_1d_unit(40, 1).dense());
+        let gy = Geometry::grid_1d_unit(33, 1);
+        let gamma = random_gamma(40, 33, 9);
+        let mut serial = FgcBackend::new(gx.clone(), gy.clone(), Parallelism::SERIAL).unwrap();
+        let mut out_s = Mat::zeros(40, 33);
+        serial.apply(&gamma, &mut out_s).unwrap();
+        for threads in [2usize, 4] {
+            let mut par = FgcBackend::new(gx.clone(), gy.clone(), Parallelism::new(threads)).unwrap();
+            let mut out_p = Mat::zeros(40, 33);
+            par.apply(&gamma, &mut out_p).unwrap();
+            assert!(frobenius_diff(&out_s, &out_p).unwrap() < 1e-12);
+        }
+    }
+}

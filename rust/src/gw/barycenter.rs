@@ -9,20 +9,29 @@
 //! D   ← Σ_s λ_s · (Γ_s D_s Γ_sᵀ) ⊘ (p pᵀ)
 //! ```
 //!
-//! FGC accelerates the structured half of each product: the inner GW
-//! gradients `D Γ_s D_s` apply `D_s` (a grid matrix) by scans, and the
-//! barycenter update computes `A_s = Γ_s D_s` the same way before one
-//! dense `A_s Γ_sᵀ`. The free matrix `D` has no grid structure, so —
+//! The inner GW solves run through the shared mirror-descent driver
+//! via [`EntropicGw::solve_into`], with one persistent [`GwWorkspace`]
+//! per input reused across outer updates (only the gradient operator
+//! is rebound when the free matrix `D` changes — see
+//! [`GwWorkspace::rebind_operator`]); the FGC backend applies the
+//! structured `D_s` side of those gradients by scans even though `D`
+//! is dense. The barycenter update itself computes `A_s = Γ_s D_s` the
+//! same way (scans on the FGC path, dense products otherwise) before
+//! one dense `A_s Γ_sᵀ`; all dense products honour the configured
+//! thread budget. The free matrix `D` has no grid structure, so —
 //! exactly as the paper's conclusion implies — only the `D_s` side
 //! speeds up.
+//!
+//! [`GwWorkspace`]: super::entropic::GwWorkspace
+//! [`GwWorkspace::rebind_operator`]: super::entropic::GwWorkspace::rebind_operator
 
-use super::entropic::{EntropicGw, GwConfig};
+use super::entropic::{EntropicGw, GwConfig, GwWorkspace};
 use super::geometry::Geometry;
-use super::gradient::GradientKind;
+use super::gradient::{GradientKind, PairOperator};
 use crate::error::{Error, Result};
 use crate::fgc::scan::dtilde_rows;
 use crate::grid::{Binomial, Grid1d};
-use crate::linalg::{matmul, Mat};
+use crate::linalg::{matmul_par, Mat};
 
 /// Barycenter iteration configuration.
 #[derive(Clone, Copy, Debug)]
@@ -85,23 +94,37 @@ pub fn gw_barycenter_1d(
     if lambda_sum <= 0.0 {
         return Err(Error::Invalid("lambda weights must be positive".into()));
     }
+    let par = cfg.gw.parallelism();
     let p = vec![1.0 / support_n as f64; support_n];
     // Initialize D from the first input's grid metric at matching size.
     let mut d = crate::grid::dense_dist_1d(&Grid1d::unit(support_n), inputs[0].k);
 
+    // One persistent workspace per input, built lazily on the first
+    // outer update and rebound to the fresh `D` afterwards.
+    let mut workspaces: Vec<Option<GwWorkspace>> = inputs.iter().map(|_| None).collect();
     let mut couplings: Vec<Mat> = Vec::new();
     for _ in 0..cfg.iters {
         couplings.clear();
         let mut d_next = Mat::zeros(support_n, support_n);
-        for inp in inputs {
-            let solver = EntropicGw::new(
-                Geometry::Dense(d.clone()),
-                Geometry::grid_1d_unit(inp.n, inp.k),
-                cfg.gw,
-            );
-            let sol = solver.solve(&p, &inp.weights, kind)?;
-            // A = Γ_s · D_s : grid side applied fast (scans along the
-            // contiguous rows of Γ_s), O(k²·N·n_s) instead of O(N·n_s²).
+        for (inp, slot) in inputs.iter().zip(workspaces.iter_mut()) {
+            let geom_x = Geometry::Dense(d.clone());
+            let geom_y = Geometry::grid_1d_unit(inp.n, inp.k);
+            let solver = EntropicGw::new(geom_x.clone(), geom_y.clone(), cfg.gw);
+            let sol = match slot {
+                Some(ws) => {
+                    ws.rebind_operator(PairOperator::with_parallelism(
+                        geom_x, geom_y, kind, par,
+                    )?)?;
+                    solver.solve_into(&p, &inp.weights, ws)?
+                }
+                None => {
+                    let ws = slot.insert(solver.workspace(kind)?);
+                    solver.solve_into(&p, &inp.weights, ws)?
+                }
+            };
+            // A = Γ_s · D_s : grid side applied fast on the FGC path
+            // (scans along the contiguous rows of Γ_s, O(k²·N·n_s)
+            // instead of O(N·n_s²)); dense product otherwise.
             let gamma = sol.plan;
             let grid = Grid1d::unit(inp.n);
             let mut a = Mat::zeros(support_n, inp.n);
@@ -122,13 +145,16 @@ pub fn gw_barycenter_1d(
                         *x *= s;
                     }
                 }
-                GradientKind::Naive => {
+                GradientKind::Naive | GradientKind::LowRank => {
+                    // LowRank has nothing to gain here: D_s is a grid
+                    // matrix applied once per outer update, so the
+                    // dense product is the honest baseline cost.
                     let ds = crate::grid::dense_dist_1d(&grid, inp.k);
-                    a = matmul(&gamma, &ds)?;
+                    a = matmul_par(&gamma, &ds, par)?;
                 }
             }
             // Γ_s D_s Γ_sᵀ (dense final product — D is unstructured).
-            let update = matmul(&a, &gamma.transpose())?;
+            let update = matmul_par(&a, &gamma.transpose(), par)?;
             d_next.add_scaled(inp.lambda / lambda_sum, &update)?;
             couplings.push(gamma);
         }
@@ -204,6 +230,15 @@ mod tests {
         let b = gw_barycenter_1d(&inputs, 11, &cfg(), GradientKind::Naive).unwrap();
         let d = crate::linalg::frobenius_diff(&a.distance, &b.distance).unwrap();
         assert!(d < 1e-9, "diff={d}");
+    }
+
+    #[test]
+    fn lowrank_matches_naive() {
+        let inputs = [input(10, 1, 7, 1.0), input(9, 1, 8, 1.0)];
+        let a = gw_barycenter_1d(&inputs, 9, &cfg(), GradientKind::LowRank).unwrap();
+        let b = gw_barycenter_1d(&inputs, 9, &cfg(), GradientKind::Naive).unwrap();
+        let d = crate::linalg::frobenius_diff(&a.distance, &b.distance).unwrap();
+        assert!(d < 1e-8, "diff={d}");
     }
 
     #[test]

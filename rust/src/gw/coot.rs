@@ -12,17 +12,33 @@
 //! solved by block-coordinate descent: with one plan fixed, the other
 //! sees an entropic-OT problem with cost
 //! `M[i,k] = (X⊙X)·(πᶠ1) ⊕ (Y⊙Y)·(πᶠᵀ1) − 2·X πᶠ Yᵀ`. The bilinear
-//! term `X π Yᵀ` is exactly the paper's `D_X Γ D_Y` shape — when the
+//! term `X π Yᵀ` is exactly the paper's `D_X Γ D_Y` shape, so when the
 //! data matrices are grid distance matrices (comparing metric spaces
-//! through their distance structure), FGC evaluates it in `O(k²·nd)`
-//! instead of densely.
+//! through their distance structure) the whole step routes through a
+//! [`GradientBackend`]: the cross term by the chosen backend's apply,
+//! the squared terms by the geometry's `(D⊙D)·w` scans. The COOT
+//! solver itself therefore never materializes a dense `O(N²)` matrix
+//! on the grid path — with the fgc backend that holds end-to-end,
+//! while the naive and lowrank backends densify *inside* the backend
+//! by design (the baseline's point, and the factorization's input).
+//!
+//! The BCD sweep runs through the shared mirror-descent driver as two
+//! phases (sample, feature) per outer iteration, over a persistent
+//! [`CootWorkspace`] whose `O(nn')` state is allocated once (the grid
+//! path's squared-term scans still allocate `O(n)` scratch per call —
+//! see ROADMAP "Open items"); the dense products honour
+//! [`CootConfig::threads`].
+//!
+//! [`GradientBackend`]: super::backend::GradientBackend
 
-use super::gradient::GradientKind;
+use super::driver::{run_mirror_descent, MirrorProblem};
+use super::geometry::Geometry;
+use super::gradient::{GradientKind, PairOperator};
 use crate::error::{Error, Result};
-use crate::fgc::{dxgdy_1d, Workspace1d};
 use crate::grid::Grid1d;
-use crate::linalg::{matmul, Mat};
-use crate::sinkhorn::{self, SinkhornOptions};
+use crate::linalg::{matmul_into, matvec_into, matvec_t_into, outer_into, Mat};
+use crate::parallel::Parallelism;
+use crate::sinkhorn::{self, SinkhornOptions, SinkhornWorkspace};
 
 /// One side of a COOT problem.
 #[derive(Clone, Debug)]
@@ -30,7 +46,7 @@ pub enum CootData {
     /// Arbitrary dense data matrix.
     Dense(Mat),
     /// A 1D-grid distance matrix `h^k|i−j|^k` of size `n×n`
-    /// (FGC-accelerable: both axes carry the grid structure).
+    /// (backend-accelerable: both axes carry the grid structure).
     GridDist1d {
         /// The grid.
         grid: Grid1d,
@@ -48,11 +64,21 @@ impl CootData {
         }
     }
 
-    /// Materialize densely (needed for the squared terms).
+    /// Materialize densely (`O(N²)`; the grid solve path never calls
+    /// this — only the dense path and external consumers do).
     pub fn dense(&self) -> Mat {
         match self {
             CootData::Dense(m) => m.clone(),
             CootData::GridDist1d { grid, k } => crate::grid::dense_dist_1d(grid, *k),
+        }
+    }
+
+    /// The geometry this data matrix *is*, when it is a grid distance
+    /// matrix.
+    fn geometry(&self) -> Option<Geometry> {
+        match self {
+            CootData::Dense(_) => None,
+            CootData::GridDist1d { grid, k } => Some(Geometry::Grid1d { grid: *grid, k: *k }),
         }
     }
 }
@@ -70,6 +96,9 @@ pub struct CootConfig {
     pub sinkhorn_max_iters: usize,
     /// Inner Sinkhorn tolerance.
     pub sinkhorn_tolerance: f64,
+    /// Thread budget for the dense products and Sinkhorn sweeps
+    /// (`1` = exact serial path, `0` = all cores).
+    pub threads: usize,
 }
 
 impl Default for CootConfig {
@@ -80,6 +109,22 @@ impl Default for CootConfig {
             outer_iters: 10,
             sinkhorn_max_iters: 500,
             sinkhorn_tolerance: 1e-9,
+            threads: 1,
+        }
+    }
+}
+
+impl CootConfig {
+    fn parallelism(&self) -> Parallelism {
+        Parallelism::from_config(self.threads)
+    }
+
+    fn sinkhorn_options(&self, eps: f64) -> SinkhornOptions {
+        SinkhornOptions {
+            epsilon: eps,
+            max_iters: self.sinkhorn_max_iters,
+            tolerance: self.sinkhorn_tolerance,
+            check_every: 10,
         }
     }
 }
@@ -97,6 +142,258 @@ pub struct CootSolution {
     pub iterations: usize,
 }
 
+/// How the bilinear and squared terms are evaluated.
+enum CootOps {
+    /// Both sides are grid distance matrices with matching exponents:
+    /// cross terms through the gradient backend, squared terms through
+    /// the grid's `(D⊙D)·w` scans. Nothing dense is built (except by
+    /// the naive backend itself).
+    Grid {
+        op: PairOperator,
+        gx: Geometry,
+        gy: Geometry,
+    },
+    /// General dense data: explicit products with cached transposes
+    /// and squared matrices.
+    Dense {
+        xd: Mat,
+        yd: Mat,
+        xdt: Mat,
+        ydt: Mat,
+        x2: Mat,
+        y2: Mat,
+        /// `X·πᶠ` (`n×d'`).
+        tmp_s: Mat,
+        /// `Xᵀ·πˢ` (`d×n'`).
+        tmp_f: Mat,
+    },
+}
+
+/// What a workspace side was built from — an O(1) fingerprint for
+/// grid data; dense data is compared against the cached matrices.
+enum SourceDesc {
+    Grid(Grid1d, u32),
+    Dense,
+}
+
+/// Reusable state for [`coot_into`]: plans, costs, cross buffers,
+/// marginal/squared-term vectors and the two Sinkhorn workspaces,
+/// allocated once per problem shape.
+pub struct CootWorkspace {
+    ops: CootOps,
+    src_x: SourceDesc,
+    src_y: SourceDesc,
+    shape_x: (usize, usize),
+    shape_y: (usize, usize),
+    pi_s: Mat,
+    pi_f: Mat,
+    cost_s: Mat,
+    cost_f: Mat,
+    /// `X πᶠ Yᵀ` (`n×n'`).
+    cross_s: Mat,
+    /// `Xᵀ πˢ Y` (`d×d'`).
+    cross_f: Mat,
+    sk_s: SinkhornWorkspace,
+    sk_f: SinkhornWorkspace,
+    /// Uniform weights.
+    ws_n: Vec<f64>,
+    ws_n2: Vec<f64>,
+    wf_d: Vec<f64>,
+    wf_d2: Vec<f64>,
+    /// Marginals of the *other* plan (`πᶠ1`, `πᶠᵀ1`, `πˢ1`, `πˢᵀ1`).
+    rf: Vec<f64>,
+    cf: Vec<f64>,
+    rs: Vec<f64>,
+    cs: Vec<f64>,
+    /// Squared-term vectors.
+    ax: Vec<f64>,
+    by: Vec<f64>,
+    axf: Vec<f64>,
+    byf: Vec<f64>,
+    par: Parallelism,
+}
+
+impl CootWorkspace {
+    /// Allocate for a `(x, y)` problem with the given backend kind.
+    pub fn new(x: &CootData, y: &CootData, cfg: &CootConfig, kind: GradientKind) -> Result<Self> {
+        let (n, d) = x.shape();
+        let (n2, d2) = y.shape();
+        if n == 0 || d == 0 || n2 == 0 || d2 == 0 {
+            return Err(Error::Invalid("empty COOT input".into()));
+        }
+        let par = cfg.parallelism();
+        // The backend path needs X π Yᵀ to be a geometry product, which
+        // holds exactly when both data matrices are (symmetric) grid
+        // distance matrices with one shared exponent.
+        let ops = match (x.geometry(), y.geometry()) {
+            (Some(gx), Some(gy))
+                if matches!(
+                    (&gx, &gy),
+                    (Geometry::Grid1d { k: ka, .. }, Geometry::Grid1d { k: kb, .. }) if ka == kb
+                ) =>
+            {
+                CootOps::Grid {
+                    op: PairOperator::with_parallelism(gx.clone(), gy.clone(), kind, par)?,
+                    gx,
+                    gy,
+                }
+            }
+            _ => {
+                let xd = x.dense();
+                let yd = y.dense();
+                CootOps::Dense {
+                    xdt: xd.transpose(),
+                    ydt: yd.transpose(),
+                    x2: xd.hadamard(&xd)?,
+                    y2: yd.hadamard(&yd)?,
+                    tmp_s: Mat::zeros(n, d2),
+                    tmp_f: Mat::zeros(d, n2),
+                    xd,
+                    yd,
+                }
+            }
+        };
+        let desc = |data: &CootData| match data {
+            CootData::Dense(_) => SourceDesc::Dense,
+            CootData::GridDist1d { grid, k } => SourceDesc::Grid(*grid, *k),
+        };
+        Ok(CootWorkspace {
+            ops,
+            src_x: desc(x),
+            src_y: desc(y),
+            shape_x: (n, d),
+            shape_y: (n2, d2),
+            pi_s: Mat::zeros(n, n2),
+            pi_f: Mat::zeros(d, d2),
+            cost_s: Mat::zeros(n, n2),
+            cost_f: Mat::zeros(d, d2),
+            cross_s: Mat::zeros(n, n2),
+            cross_f: Mat::zeros(d, d2),
+            sk_s: SinkhornWorkspace::new(n, n2, par),
+            sk_f: SinkhornWorkspace::new(d, d2, par),
+            ws_n: vec![1.0 / n as f64; n],
+            ws_n2: vec![1.0 / n2 as f64; n2],
+            wf_d: vec![1.0 / d as f64; d],
+            wf_d2: vec![1.0 / d2 as f64; d2],
+            rf: vec![0.0; d],
+            cf: vec![0.0; d2],
+            rs: vec![0.0; n],
+            cs: vec![0.0; n2],
+            ax: vec![0.0; n],
+            by: vec![0.0; n2],
+            axf: vec![0.0; d],
+            byf: vec![0.0; d2],
+            par,
+        })
+    }
+
+    /// The backend kind the cross terms run on (`None` on the dense
+    /// path, which has no geometry to dispatch on).
+    pub fn backend_kind(&self) -> Option<GradientKind> {
+        match &self.ops {
+            CootOps::Grid { op, .. } => Some(op.kind()),
+            CootOps::Dense { .. } => None,
+        }
+    }
+
+    /// True iff this workspace was built for exactly this data. A
+    /// same-shape workspace with different cached data would silently
+    /// produce plans for the *original* data, so [`coot_into`] rejects
+    /// it. Grid sides compare by descriptor in O(1); dense sides
+    /// compare against the cached matrix in O(nd) — the price of
+    /// refusing to solve against stale data.
+    fn matches(&self, x: &CootData, y: &CootData) -> bool {
+        fn side_ok(desc: &SourceDesc, data: &CootData, cached: Option<&Mat>) -> bool {
+            match (desc, data) {
+                (SourceDesc::Grid(g, k), CootData::GridDist1d { grid, k: k2 }) => {
+                    g == grid && k == k2
+                }
+                (SourceDesc::Dense, CootData::Dense(m)) => cached.is_some_and(|c| c == m),
+                _ => false,
+            }
+        }
+        match &self.ops {
+            CootOps::Grid { .. } => {
+                side_ok(&self.src_x, x, None) && side_ok(&self.src_y, y, None)
+            }
+            CootOps::Dense { xd, yd, .. } => {
+                side_ok(&self.src_x, x, Some(xd)) && side_ok(&self.src_y, y, Some(yd))
+            }
+        }
+    }
+}
+
+impl CootOps {
+    /// Sample-step cross term `X π Yᵀ` into `out`.
+    fn cross_sample(&mut self, pi_f: &Mat, out: &mut Mat, par: Parallelism) -> Result<()> {
+        match self {
+            CootOps::Grid { op, .. } => op.dxgdy(pi_f, out),
+            CootOps::Dense { xd, ydt, tmp_s, .. } => {
+                matmul_into(xd, pi_f, tmp_s, par)?;
+                matmul_into(tmp_s, ydt, out, par)
+            }
+        }
+    }
+
+    /// Feature-step cross term `Xᵀ π Y` into `out` (grid data is
+    /// symmetric, so the same operator applies).
+    fn cross_feature(&mut self, pi_s: &Mat, out: &mut Mat, par: Parallelism) -> Result<()> {
+        match self {
+            CootOps::Grid { op, .. } => op.dxgdy(pi_s, out),
+            CootOps::Dense { xdt, yd, tmp_f, .. } => {
+                matmul_into(xdt, pi_s, tmp_f, par)?;
+                matmul_into(tmp_f, yd, out, par)
+            }
+        }
+    }
+
+    /// `ax = (X⊙X)·w` (sample step, `w = πᶠ1`).
+    fn sq_x_rows(&self, w: &[f64], out: &mut [f64]) -> Result<()> {
+        match self {
+            // Squared grid distances are grid matrices with exponent 2k.
+            CootOps::Grid { gx, .. } => {
+                out.copy_from_slice(&gx.sq_apply(w)?);
+                Ok(())
+            }
+            CootOps::Dense { x2, .. } => matvec_into(x2, w, out),
+        }
+    }
+
+    /// `by = (Y⊙Y)·w` (sample step, `w = πᶠᵀ1`).
+    fn sq_y_rows(&self, w: &[f64], out: &mut [f64]) -> Result<()> {
+        match self {
+            CootOps::Grid { gy, .. } => {
+                out.copy_from_slice(&gy.sq_apply(w)?);
+                Ok(())
+            }
+            CootOps::Dense { y2, .. } => matvec_into(y2, w, out),
+        }
+    }
+
+    /// `axf = (X⊙X)ᵀ·w` (feature step, `w = πˢ1`; grid matrices are
+    /// symmetric so the transpose is free there).
+    fn sq_x_cols(&self, w: &[f64], out: &mut [f64]) -> Result<()> {
+        match self {
+            CootOps::Grid { gx, .. } => {
+                out.copy_from_slice(&gx.sq_apply(w)?);
+                Ok(())
+            }
+            CootOps::Dense { x2, .. } => matvec_t_into(x2, w, out),
+        }
+    }
+
+    /// `byf = (Y⊙Y)ᵀ·w` (feature step, `w = πˢᵀ1`).
+    fn sq_y_cols(&self, w: &[f64], out: &mut [f64]) -> Result<()> {
+        match self {
+            CootOps::Grid { gy, .. } => {
+                out.copy_from_slice(&gy.sq_apply(w)?);
+                Ok(())
+            }
+            CootOps::Dense { y2, .. } => matvec_t_into(y2, w, out),
+        }
+    }
+}
+
 /// Solve COOT between `x` and `y` with uniform sample/feature weights.
 pub fn coot(
     x: &CootData,
@@ -104,117 +401,222 @@ pub fn coot(
     cfg: &CootConfig,
     kind: GradientKind,
 ) -> Result<CootSolution> {
-    let (n, d) = x.shape();
-    let (n2, d2) = y.shape();
-    if n == 0 || d == 0 || n2 == 0 || d2 == 0 {
-        return Err(Error::Invalid("empty COOT input".into()));
+    let mut ws = CootWorkspace::new(x, y, cfg, kind)?;
+    coot_into(x, y, cfg, &mut ws)
+}
+
+/// Workspace form of [`coot`]: all `O(nn')` state lives in `ws`,
+/// reusable across solves of the same problem shape.
+pub fn coot_into(
+    x: &CootData,
+    y: &CootData,
+    cfg: &CootConfig,
+    ws: &mut CootWorkspace,
+) -> Result<CootSolution> {
+    if ws.shape_x != x.shape() || ws.shape_y != y.shape() {
+        return Err(Error::shape(
+            "coot_into (workspace)",
+            format!("{:?} / {:?}", x.shape(), y.shape()),
+            format!("{:?} / {:?}", ws.shape_x, ws.shape_y),
+        ));
     }
-    let ws_n = vec![1.0 / n as f64; n];
-    let ws_n2 = vec![1.0 / n2 as f64; n2];
-    let wf_d = vec![1.0 / d as f64; d];
-    let wf_d2 = vec![1.0 / d2 as f64; d2];
-
-    let xd = x.dense();
-    let yd = y.dense();
-    let x2 = xd.hadamard(&xd)?;
-    let y2 = yd.hadamard(&yd)?;
-
-    // FGC fast path is available when BOTH inputs are grid distance
-    // matrices with matching exponents (then X π Yᵀ = D̃ π D̃·h^k·h^k).
-    let fgc = match (x, y, kind) {
-        (
-            CootData::GridDist1d { grid: ga, k: ka },
-            CootData::GridDist1d { grid: gb, k: kb },
-            GradientKind::Fgc,
-        ) if ka == kb => Some((*ga, *gb, *ka)),
-        _ => None,
-    };
-
-    // X π Yᵀ for π of shape (cols_x_side, cols_y_side); both X, Y
-    // symmetric in the grid case so the transpose is free there.
-    let bilinear = |pi: &Mat,
-                    ws1: &mut Option<Workspace1d>|
-     -> Result<Mat> {
-        if let Some((ga, gb, k)) = fgc {
-            let ws = ws1.get_or_insert_with(|| Workspace1d::new(ga.n, gb.n, k));
-            let mut out = Mat::zeros(ga.n, gb.n);
-            dxgdy_1d(&ga, &gb, k, pi, &mut out, ws)?;
-            Ok(out)
-        } else {
-            let t = matmul(&xd, pi)?;
-            matmul(&t, &yd.transpose())
-        }
-    };
-
-    let sk = |eps: f64| SinkhornOptions {
-        epsilon: eps,
-        max_iters: cfg.sinkhorn_max_iters,
-        tolerance: cfg.sinkhorn_tolerance,
-        check_every: 10,
-    };
-
-    let mut pi_f = crate::linalg::outer(&wf_d, &wf_d2);
-    let mut pi_s = crate::linalg::outer(&ws_n, &ws_n2);
-    let mut ws1: Option<Workspace1d> = None;
-    let mut ws2: Option<Workspace1d> = None;
-    let mut last_cost_s: Option<Mat> = None;
-
-    for _ in 0..cfg.outer_iters {
-        // --- sample step: cost from πᶠ ---
-        let rf = pi_f.row_sums(); // length d
-        let cf = pi_f.col_sums(); // length d2
-        let ax = crate::linalg::matvec(&x2, &rf)?; // Σ_j X_ij² (πᶠ1)_j
-        let by = crate::linalg::matvec(&y2, &cf)?;
-        let cross = bilinear(&pi_f, &mut ws1)?;
-        let cost_s = Mat::from_fn(n, n2, |i, kx| ax[i] + by[kx] - 2.0 * cross[(i, kx)]);
-        pi_s = sinkhorn::solve(&cost_s, &ws_n, &ws_n2, &sk(cfg.epsilon_samples))?.plan;
-        last_cost_s = Some(cost_s);
-
-        // --- feature step: cost from πˢ ---
-        let rs = pi_s.row_sums();
-        let cs = pi_s.col_sums();
-        let axf = crate::linalg::matvec_t(&x2, &rs)?; // Σ_i X_ij² (πˢ1)_i
-        let byf = crate::linalg::matvec_t(&y2, &cs)?;
-        // Xᵀ πˢ Y — grid case: X, Y symmetric ⇒ same operator.
-        let crossf = if let Some((ga, gb, k)) = fgc {
-            let ws = ws2.get_or_insert_with(|| Workspace1d::new(ga.n, gb.n, k));
-            let mut out = Mat::zeros(ga.n, gb.n);
-            dxgdy_1d(&ga, &gb, k, &pi_s, &mut out, ws)?;
-            out
-        } else {
-            matmul(&matmul(&xd.transpose(), &pi_s)?, &yd)?
-        };
-        let cost_f = Mat::from_fn(d, d2, |j, l| axf[j] + byf[l] - 2.0 * crossf[(j, l)]);
-        pi_f = sinkhorn::solve(&cost_f, &wf_d, &wf_d2, &sk(cfg.epsilon_features))?.plan;
+    if !ws.matches(x, y) {
+        return Err(Error::Invalid(
+            "coot_into: workspace was built for different data".into(),
+        ));
     }
+    // The thread budget is baked into the workspace's kernels and
+    // Sinkhorn buffers at construction; silently running a different
+    // `cfg.threads` would be a perf surprise, so mismatches are
+    // rejected rather than ignored.
+    if ws.par != cfg.parallelism() {
+        return Err(Error::Invalid(
+            "coot_into: cfg.threads differs from the workspace's thread budget (rebuild the workspace)"
+                .into(),
+        ));
+    }
+    let par = ws.par;
+    let CootWorkspace {
+        ops,
+        pi_s,
+        pi_f,
+        cost_s,
+        cost_f,
+        cross_s,
+        cross_f,
+        sk_s,
+        sk_f,
+        ws_n,
+        ws_n2,
+        wf_d,
+        wf_d2,
+        rf,
+        cf,
+        rs,
+        cs,
+        ax,
+        by,
+        axf,
+        byf,
+        ..
+    } = ws;
 
-    let objective = match &last_cost_s {
-        Some(cost_s) => {
-            // Recompute the sample cost against the *final* πᶠ for an
-            // unbiased objective.
-            let rf = pi_f.row_sums();
-            let cf = pi_f.col_sums();
-            let ax = crate::linalg::matvec(&x2, &rf)?;
-            let by = crate::linalg::matvec(&y2, &cf)?;
-            let cross = bilinear(&pi_f, &mut ws1)?;
-            let mut obj = 0.0;
-            for i in 0..n {
-                for kx in 0..n2 {
-                    obj += pi_s[(i, kx)] * (ax[i] + by[kx] - 2.0 * cross[(i, kx)]);
-                }
+    // π⁰ = product couplings of the uniform weights.
+    outer_into(wf_d, wf_d2, pi_f)?;
+    outer_into(ws_n, ws_n2, pi_s)?;
+
+    let mut step = CootStep {
+        ops: &mut *ops,
+        pi_s: &mut *pi_s,
+        pi_f: &mut *pi_f,
+        cost_s,
+        cost_f,
+        cross_s: &mut *cross_s,
+        sk_s,
+        sk_f,
+        cross_f,
+        ws_n: &*ws_n,
+        ws_n2: &*ws_n2,
+        wf_d: &*wf_d,
+        wf_d2: &*wf_d2,
+        rf: &mut *rf,
+        cf: &mut *cf,
+        rs,
+        cs,
+        ax: &mut *ax,
+        by: &mut *by,
+        axf,
+        byf,
+        cfg,
+        par,
+    };
+    let stats = run_mirror_descent(cfg.outer_iters, &mut step)?;
+
+    // Objective against the *final* πᶠ for an unbiased value; NaN when
+    // no sweep ran (nothing was coupled).
+    let objective = if stats.outer_iterations > 0 {
+        pi_f.row_sums_into(rf);
+        pi_f.col_sums_into(cf);
+        ops.sq_x_rows(rf, ax)?;
+        ops.sq_y_rows(cf, by)?;
+        ops.cross_sample(pi_f, cross_s, par)?;
+        let (n, n2) = pi_s.shape();
+        let mut obj = 0.0;
+        for i in 0..n {
+            for kx in 0..n2 {
+                obj += pi_s[(i, kx)] * (ax[i] + by[kx] - 2.0 * cross_s[(i, kx)]);
             }
-            let _ = cost_s;
-            obj
         }
-        None => f64::NAN,
+        obj
+    } else {
+        f64::NAN
     };
 
     Ok(CootSolution {
-        sample_plan: pi_s,
-        feature_plan: pi_f,
+        sample_plan: pi_s.clone(),
+        feature_plan: pi_f.clone(),
         objective,
-        iterations: cfg.outer_iters,
+        iterations: stats.outer_iterations,
     })
+}
+
+/// The two-phase COOT block step: phase 0 linearizes the sample cost
+/// from `πᶠ` and solves for `πˢ`; phase 1 mirrors it for the features.
+struct CootStep<'a> {
+    ops: &'a mut CootOps,
+    pi_s: &'a mut Mat,
+    pi_f: &'a mut Mat,
+    cost_s: &'a mut Mat,
+    cost_f: &'a mut Mat,
+    cross_s: &'a mut Mat,
+    cross_f: &'a mut Mat,
+    sk_s: &'a mut SinkhornWorkspace,
+    sk_f: &'a mut SinkhornWorkspace,
+    ws_n: &'a [f64],
+    ws_n2: &'a [f64],
+    wf_d: &'a [f64],
+    wf_d2: &'a [f64],
+    rf: &'a mut [f64],
+    cf: &'a mut [f64],
+    rs: &'a mut [f64],
+    cs: &'a mut [f64],
+    ax: &'a mut [f64],
+    by: &'a mut [f64],
+    axf: &'a mut [f64],
+    byf: &'a mut [f64],
+    cfg: &'a CootConfig,
+    par: Parallelism,
+}
+
+impl MirrorProblem for CootStep<'_> {
+    fn phases(&self) -> usize {
+        2
+    }
+
+    fn linearize(&mut self, phase: usize) -> Result<()> {
+        if phase == 0 {
+            // --- sample step: cost from πᶠ ---
+            self.pi_f.row_sums_into(self.rf);
+            self.pi_f.col_sums_into(self.cf);
+            self.ops.sq_x_rows(self.rf, self.ax)?;
+            self.ops.sq_y_rows(self.cf, self.by)?;
+            self.ops.cross_sample(self.pi_f, self.cross_s, self.par)?;
+            fill_cost(self.cost_s, self.ax, self.by, self.cross_s);
+        } else {
+            // --- feature step: cost from πˢ ---
+            self.pi_s.row_sums_into(self.rs);
+            self.pi_s.col_sums_into(self.cs);
+            self.ops.sq_x_cols(self.rs, self.axf)?;
+            self.ops.sq_y_cols(self.cs, self.byf)?;
+            self.ops.cross_feature(self.pi_s, self.cross_f, self.par)?;
+            fill_cost(self.cost_f, self.axf, self.byf, self.cross_f);
+        }
+        Ok(())
+    }
+
+    fn inner_solve(&mut self, phase: usize) -> Result<usize> {
+        // Each subproblem's cost scale is its own, so the numeric
+        // regime is re-decided per inner solve (matching the stateless
+        // dispatch the BCD loop historically used).
+        let stats = if phase == 0 {
+            self.sk_s.reset_regime();
+            sinkhorn::solve_into(
+                self.cost_s,
+                self.ws_n,
+                self.ws_n2,
+                &self.cfg.sinkhorn_options(self.cfg.epsilon_samples),
+                self.sk_s,
+                self.pi_s,
+            )?
+        } else {
+            self.sk_f.reset_regime();
+            sinkhorn::solve_into(
+                self.cost_f,
+                self.wf_d,
+                self.wf_d2,
+                &self.cfg.sinkhorn_options(self.cfg.epsilon_features),
+                self.sk_f,
+                self.pi_f,
+            )?
+        };
+        Ok(stats.iterations)
+    }
+}
+
+/// `cost[i,j] = a[i] + b[j] − 2·cross[i,j]` (row-major, matching the
+/// historical `Mat::from_fn` build bitwise).
+fn fill_cost(cost: &mut Mat, a: &[f64], b: &[f64], cross: &Mat) {
+    let (m, n) = cost.shape();
+    let cost_s = cost.as_mut_slice();
+    let cross_s = cross.as_slice();
+    for i in 0..m {
+        let ai = a[i];
+        let row = &mut cost_s[i * n..(i + 1) * n];
+        let crow = &cross_s[i * n..(i + 1) * n];
+        for ((c, &bj), &x) in row.iter_mut().zip(b).zip(crow) {
+            *c = ai + bj - 2.0 * x;
+        }
+    }
 }
 
 #[cfg(test)]
@@ -251,6 +653,97 @@ mod tests {
         let df = frobenius_diff(&fast.feature_plan, &slow.feature_plan).unwrap();
         assert!(ds < 1e-6 && df < 1e-6, "ds={ds:.2e} df={df:.2e}");
         assert!((fast.objective - slow.objective).abs() < 1e-7);
+    }
+
+    #[test]
+    fn grid_path_routes_through_backend() {
+        let x = grid_data(10);
+        let y = grid_data(8);
+        let cfg = CootConfig::default();
+        for kind in [GradientKind::Fgc, GradientKind::Naive, GradientKind::LowRank] {
+            let ws = CootWorkspace::new(&x, &y, &cfg, kind).unwrap();
+            assert_eq!(ws.backend_kind(), Some(kind));
+        }
+        // Dense data has no geometry to dispatch on.
+        let ws = CootWorkspace::new(
+            &CootData::Dense(x.dense()),
+            &CootData::Dense(y.dense()),
+            &cfg,
+            GradientKind::Fgc,
+        )
+        .unwrap();
+        assert_eq!(ws.backend_kind(), None);
+        // Mismatched exponents fall back to the dense path rather than
+        // erroring.
+        let y2 = CootData::GridDist1d {
+            grid: Grid1d::unit(8),
+            k: 2,
+        };
+        let ws = CootWorkspace::new(&x, &y2, &cfg, GradientKind::Fgc).unwrap();
+        assert_eq!(ws.backend_kind(), None);
+    }
+
+    #[test]
+    fn all_backends_agree_on_grid_data() {
+        let x = grid_data(11);
+        let y = grid_data(9);
+        let cfg = CootConfig {
+            outer_iters: 3,
+            ..CootConfig::default()
+        };
+        let base = coot(&x, &y, &cfg, GradientKind::Fgc).unwrap();
+        for kind in [GradientKind::Naive, GradientKind::LowRank] {
+            let other = coot(&x, &y, &cfg, kind).unwrap();
+            let ds = frobenius_diff(&base.sample_plan, &other.sample_plan).unwrap();
+            assert!(ds < 1e-6, "{kind}: ds={ds:.2e}");
+        }
+    }
+
+    #[test]
+    fn workspace_reuse_is_exact() {
+        let x = grid_data(9);
+        let y = grid_data(7);
+        let cfg = CootConfig {
+            outer_iters: 3,
+            ..CootConfig::default()
+        };
+        let mut ws = CootWorkspace::new(&x, &y, &cfg, GradientKind::Fgc).unwrap();
+        let a = coot_into(&x, &y, &cfg, &mut ws).unwrap();
+        let b = coot_into(&x, &y, &cfg, &mut ws).unwrap();
+        assert_eq!(a.sample_plan.as_slice(), b.sample_plan.as_slice());
+        assert_eq!(a.objective, b.objective);
+        // Shape mismatch is rejected.
+        let z = grid_data(5);
+        assert!(coot_into(&z, &y, &cfg, &mut ws).is_err());
+        // A different thread budget than the workspace was built with
+        // is rejected (it is baked into the workspace's buffers).
+        let cfg8 = CootConfig { threads: 8, ..cfg };
+        assert!(coot_into(&x, &y, &cfg8, &mut ws).is_err());
+        // Same shape but different data is rejected too (grid path).
+        let x_k2 = CootData::GridDist1d {
+            grid: Grid1d::unit(9),
+            k: 2,
+        };
+        assert!(coot_into(&x_k2, &y, &cfg, &mut ws).is_err());
+        // And on the dense path.
+        let xd = x.dense();
+        let yd = y.dense();
+        let mut dws = CootWorkspace::new(
+            &CootData::Dense(xd.clone()),
+            &CootData::Dense(yd.clone()),
+            &cfg,
+            GradientKind::Naive,
+        )
+        .unwrap();
+        assert!(coot_into(
+            &CootData::Dense(xd),
+            &CootData::Dense(yd),
+            &cfg,
+            &mut dws
+        )
+        .is_ok());
+        let other = CootData::Dense(Mat::full(9, 9, 0.5));
+        assert!(coot_into(&other, &CootData::Dense(y.dense()), &cfg, &mut dws).is_err());
     }
 
     #[test]

@@ -1,0 +1,141 @@
+//! The shared mirror-descent outer loop.
+//!
+//! Every solver in this crate — entropic GW/FGW, unbalanced GW, COOT,
+//! and the GW solves inside barycenter updates — iterates the same
+//! two-beat pattern (paper §2.1):
+//!
+//! ```text
+//! repeat outer_iters times:
+//!     linearize:    Π ← cost of the OT subproblem at the current plan
+//!                   (the gradient product — what the backends race on)
+//!     inner_solve:  Γ ← argmin ⟨Π, Γ⟩ + regularizers   (a Sinkhorn kernel)
+//! ```
+//!
+//! [`run_mirror_descent`] owns that loop once: iteration count, the
+//! gradient-vs-inner wall-time split every solution reports, and inner
+//! iteration accounting. Solvers implement [`MirrorProblem`] over
+//! their workspace state; block-coordinate methods with several
+//! coupled plans (COOT's sample/feature steps) expose them as phases
+//! executed in order within each outer iteration.
+//!
+//! The driver allocates nothing, so any zero-allocation guarantee of a
+//! problem's `linearize`/`inner_solve` (asserted for entropic GW by
+//! `tests/alloc_hotpath.rs`) extends to the whole loop.
+
+use crate::error::Result;
+use std::time::{Duration, Instant};
+
+/// One mirror-descent problem: state plus the two beats of the loop.
+pub trait MirrorProblem {
+    /// Coupled linearize/solve phases per outer iteration (1 for
+    /// GW/FGW/UGW; 2 for COOT's sample and feature block steps).
+    fn phases(&self) -> usize {
+        1
+    }
+
+    /// Build the linearized subproblem cost at the current plan(s).
+    fn linearize(&mut self, phase: usize) -> Result<()>;
+
+    /// Solve the OT subproblem for `phase`, writing the next plan into
+    /// the problem's state; returns the inner iterations spent.
+    fn inner_solve(&mut self, phase: usize) -> Result<usize>;
+}
+
+/// Accounting every solver reports out of the shared loop.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct DriverStats {
+    /// Outer iterations completed.
+    pub outer_iterations: usize,
+    /// Total inner (Sinkhorn) iterations across all phases.
+    pub inner_iterations: usize,
+    /// Wall time in `linearize` (the part the gradient backends race on).
+    pub gradient_time: Duration,
+    /// Wall time in `inner_solve`.
+    pub inner_time: Duration,
+}
+
+/// Run the mirror-descent loop for `outer_iters` iterations.
+pub fn run_mirror_descent<P: MirrorProblem + ?Sized>(
+    outer_iters: usize,
+    problem: &mut P,
+) -> Result<DriverStats> {
+    let mut stats = DriverStats::default();
+    for _ in 0..outer_iters {
+        for phase in 0..problem.phases() {
+            let t0 = Instant::now();
+            problem.linearize(phase)?;
+            stats.gradient_time += t0.elapsed();
+            let t1 = Instant::now();
+            stats.inner_iterations += problem.inner_solve(phase)?;
+            stats.inner_time += t1.elapsed();
+        }
+        stats.outer_iterations += 1;
+    }
+    Ok(stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::error::Error;
+
+    struct Toy {
+        linearized: Vec<usize>,
+        solved: Vec<usize>,
+        fail_at: Option<usize>,
+    }
+
+    impl MirrorProblem for Toy {
+        fn phases(&self) -> usize {
+            2
+        }
+        fn linearize(&mut self, phase: usize) -> Result<()> {
+            self.linearized.push(phase);
+            Ok(())
+        }
+        fn inner_solve(&mut self, phase: usize) -> Result<usize> {
+            if self.fail_at == Some(self.solved.len()) {
+                return Err(Error::Numeric("toy divergence".into()));
+            }
+            self.solved.push(phase);
+            Ok(3)
+        }
+    }
+
+    #[test]
+    fn phases_run_in_order_with_accounting() {
+        let mut toy = Toy {
+            linearized: Vec::new(),
+            solved: Vec::new(),
+            fail_at: None,
+        };
+        let stats = run_mirror_descent(3, &mut toy).unwrap();
+        assert_eq!(stats.outer_iterations, 3);
+        assert_eq!(stats.inner_iterations, 3 * 2 * 3);
+        assert_eq!(toy.linearized, vec![0, 1, 0, 1, 0, 1]);
+        assert_eq!(toy.solved, toy.linearized);
+    }
+
+    #[test]
+    fn inner_failure_propagates() {
+        let mut toy = Toy {
+            linearized: Vec::new(),
+            solved: Vec::new(),
+            fail_at: Some(3),
+        };
+        assert!(run_mirror_descent(5, &mut toy).is_err());
+        assert_eq!(toy.solved.len(), 3);
+    }
+
+    #[test]
+    fn zero_iterations_is_a_no_op() {
+        let mut toy = Toy {
+            linearized: Vec::new(),
+            solved: Vec::new(),
+            fail_at: None,
+        };
+        let stats = run_mirror_descent(0, &mut toy).unwrap();
+        assert_eq!(stats.outer_iterations, 0);
+        assert!(toy.linearized.is_empty());
+    }
+}

@@ -15,6 +15,8 @@
 //! paths, which is what makes the `‖P_Fa − P‖_F` exactness columns of
 //! the paper meaningful.
 
+use super::backend::GradientBackend;
+use super::driver::{run_mirror_descent, MirrorProblem};
 use super::geometry::Geometry;
 use super::gradient::{GradientKind, PairOperator};
 use super::objective::{fgw_objective, gw_objective};
@@ -96,6 +98,24 @@ impl GwWorkspace {
     pub fn shape(&self) -> (usize, usize) {
         self.gamma.shape()
     }
+
+    /// Swap the gradient operator, keeping every other buffer (the
+    /// Sinkhorn workspace and the Γ/∇/Π/C₁ matrices). This is how the
+    /// barycenter loop reuses one workspace per input while the free
+    /// support matrix `D` changes every outer update. The new operator
+    /// must serve the same `(M, N)` shape.
+    pub fn rebind_operator(&mut self, op: PairOperator) -> Result<()> {
+        let shape = (op.geom_x().len(), op.geom_y().len());
+        if shape != self.gamma.shape() {
+            return Err(Error::shape(
+                "GwWorkspace::rebind_operator",
+                format!("{:?}", self.gamma.shape()),
+                format!("{shape:?}"),
+            ));
+        }
+        self.op = op;
+        Ok(())
+    }
 }
 
 /// Result of an entropic GW / FGW solve.
@@ -154,10 +174,30 @@ impl EntropicGw {
     /// One allocation site for everything the solve loop touches;
     /// reuse it across solves via [`EntropicGw::solve_into`].
     pub fn workspace(&self, kind: GradientKind) -> Result<GwWorkspace> {
+        let op = PairOperator::with_parallelism(
+            self.geom_x.clone(),
+            self.geom_y.clone(),
+            kind,
+            self.cfg.parallelism(),
+        )?;
+        self.workspace_from_operator(op)
+    }
+
+    /// [`EntropicGw::workspace`] over an already-built (possibly
+    /// custom) [`GradientBackend`] — the solver runs with *any*
+    /// backend, not just the three built-in kinds.
+    pub fn workspace_with_backend(&self, backend: Box<dyn GradientBackend>) -> Result<GwWorkspace> {
+        self.workspace_from_operator(PairOperator::from_backend(backend))
+    }
+
+    fn workspace_from_operator(&self, op: PairOperator) -> Result<GwWorkspace> {
+        if op.geom_x() != &self.geom_x || op.geom_y() != &self.geom_y {
+            return Err(Error::Invalid(
+                "EntropicGw::workspace: backend was built for a different geometry pair".into(),
+            ));
+        }
         let par = self.cfg.parallelism();
         let (m, n) = (self.geom_x.len(), self.geom_y.len());
-        let op =
-            PairOperator::with_parallelism(self.geom_x.clone(), self.geom_y.clone(), kind, par)?;
         Ok(GwWorkspace {
             op,
             sk: SinkhornWorkspace::new(m, n, par),
@@ -269,64 +309,26 @@ impl EntropicGw {
         // share their cost conditioning (see SinkhornWorkspace docs).
         sk.reset_regime();
 
-        // Constant cost term: GW's C₁ (θ=1) or FGW's C₂ (Remark 2.2):
-        //   C₂ = (1−θ)·C⊙C + 2θ·[cx_i + cy_p] .
-        let (cx, cy) = op.c1_halves(u, v)?;
-        {
-            let base = constant.as_mut_slice();
-            for i in 0..m {
-                let cxi = cx[i];
-                for (b, &cyp) in base[i * n..(i + 1) * n].iter_mut().zip(&cy) {
-                    *b = 2.0 * theta * (cxi + cyp);
-                }
-            }
-            if let Some(c) = feature_cost {
-                let w = 1.0 - theta;
-                if w != 0.0 {
-                    for (b, &cc) in base.iter_mut().zip(c.as_slice()) {
-                        *b += w * cc * cc;
-                    }
-                }
-            }
-        }
+        // Constant cost term: GW's C₁ (θ=1) or FGW's C₂ (Remark 2.2),
+        // evaluated by the backend once per solve.
+        op.constant_term(u, v, feature_cost, theta, constant)?;
 
-        let sk_opts = self.cfg.sinkhorn_options();
         // Γ⁰ = u vᵀ
-        {
-            let gs = gamma.as_mut_slice();
-            for i in 0..m {
-                let ui = u[i];
-                for (g, &vj) in gs[i * n..(i + 1) * n].iter_mut().zip(v) {
-                    *g = ui * vj;
-                }
-            }
-        }
-        let mut grad_time = Duration::ZERO;
-        let mut sinkhorn_time = Duration::ZERO;
-        let mut sk_total = 0usize;
+        crate::linalg::outer_into(u, v, gamma)?;
 
-        for _ in 0..self.cfg.outer_iters {
-            let t0 = Instant::now();
-            op.dxgdy(gamma, grad)?;
-            // Π = constant − 4θ·G
-            let four_theta = 4.0 * theta;
-            for ((c, &k0), &g) in cost
-                .as_mut_slice()
-                .iter_mut()
-                .zip(constant.as_slice())
-                .zip(grad.as_slice())
-            {
-                *c = k0 - four_theta * g;
-            }
-            grad_time += t0.elapsed();
-
-            let t1 = Instant::now();
-            // The plan lands straight in `gamma` — no per-iteration
-            // buffer swap or allocation.
-            let stats = sinkhorn::solve_into(cost, u, v, &sk_opts, sk, gamma)?;
-            sinkhorn_time += t1.elapsed();
-            sk_total += stats.iterations;
-        }
+        let mut step = EntropicStep {
+            op: &mut *op,
+            sk,
+            gamma: &mut *gamma,
+            grad,
+            cost,
+            constant: &*constant,
+            u,
+            v,
+            four_theta: 4.0 * theta,
+            opts: self.cfg.sinkhorn_options(),
+        };
+        let stats = run_mirror_descent(self.cfg.outer_iters, &mut step)?;
 
         let objective = match feature_cost {
             Some(c) => fgw_objective(op, gamma, c, theta)?,
@@ -336,12 +338,51 @@ impl EntropicGw {
         Ok(GwSolution {
             plan: gamma.clone(),
             objective,
-            outer_iterations: self.cfg.outer_iters,
-            sinkhorn_iterations: sk_total,
-            gradient_time: grad_time,
-            sinkhorn_time,
+            outer_iterations: stats.outer_iterations,
+            sinkhorn_iterations: stats.inner_iterations,
+            gradient_time: stats.gradient_time,
+            sinkhorn_time: stats.inner_time,
             total_time: t_start.elapsed(),
         })
+    }
+}
+
+/// The entropic GW/FGW mirror-descent step over a workspace: linearize
+/// builds `Π = C − 4θ·D_X Γ D_Y`, the inner solve is one balanced
+/// Sinkhorn whose plan lands straight in `gamma` — no per-iteration
+/// buffer swap or allocation.
+struct EntropicStep<'a> {
+    op: &'a mut PairOperator,
+    sk: &'a mut SinkhornWorkspace,
+    gamma: &'a mut Mat,
+    grad: &'a mut Mat,
+    cost: &'a mut Mat,
+    constant: &'a Mat,
+    u: &'a [f64],
+    v: &'a [f64],
+    four_theta: f64,
+    opts: SinkhornOptions,
+}
+
+impl MirrorProblem for EntropicStep<'_> {
+    fn linearize(&mut self, _phase: usize) -> Result<()> {
+        self.op.dxgdy(self.gamma, self.grad)?;
+        // Π = constant − 4θ·G
+        for ((c, &k0), &g) in self
+            .cost
+            .as_mut_slice()
+            .iter_mut()
+            .zip(self.constant.as_slice())
+            .zip(self.grad.as_slice())
+        {
+            *c = k0 - self.four_theta * g;
+        }
+        Ok(())
+    }
+
+    fn inner_solve(&mut self, _phase: usize) -> Result<usize> {
+        let stats = sinkhorn::solve_into(self.cost, self.u, self.v, &self.opts, self.sk, self.gamma)?;
+        Ok(stats.iterations)
     }
 }
 
@@ -509,6 +550,35 @@ mod tests {
         let other_k = EntropicGw::grid_1d(n, n, 2, cfg_small());
         let mut bad_k = other_k.workspace(GradientKind::Fgc).unwrap();
         assert!(solver.solve_into(&u, &v, &mut bad_k).is_err());
+    }
+
+    #[test]
+    fn workspace_accepts_externally_built_backend() {
+        // The solver runs with any GradientBackend, not just the
+        // kinds it can build itself.
+        let n = 16;
+        let (u, v) = random_dists(n, n, 33);
+        let solver = EntropicGw::grid_1d(n, n, 1, cfg_small());
+        let backend = crate::gw::backend::instantiate(
+            GradientKind::LowRank,
+            Geometry::grid_1d_unit(n, 1),
+            Geometry::grid_1d_unit(n, 1),
+            Parallelism::SERIAL,
+        )
+        .unwrap();
+        let mut ws = solver.workspace_with_backend(backend).unwrap();
+        let a = solver.solve_into(&u, &v, &mut ws).unwrap();
+        let b = solver.solve(&u, &v, GradientKind::LowRank).unwrap();
+        assert!(frobenius_diff(&a.plan, &b.plan).unwrap() < 1e-12);
+        // A backend bound to a different geometry pair is rejected.
+        let other = crate::gw::backend::instantiate(
+            GradientKind::Naive,
+            Geometry::grid_1d_unit(n + 1, 1),
+            Geometry::grid_1d_unit(n, 1),
+            Parallelism::SERIAL,
+        )
+        .unwrap();
+        assert!(solver.workspace_with_backend(other).is_err());
     }
 
     #[test]

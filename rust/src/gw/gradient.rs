@@ -1,26 +1,59 @@
-//! The GW gradient product `D_X Γ D_Y` with backend dispatch.
+//! Thin dispatch over the gradient backends.
 //!
-//! [`PairOperator`] binds a pair of [`Geometry`] values and owns the
-//! workspaces, so the mirror-descent loop performs zero allocation per
-//! iteration on the FGC path. The same operator also evaluates the
-//! constant term `C₁` (paper §2.1) and the FGW variant `C₂`
-//! (Remark 2.2).
+//! [`GradientKind`] names the three [`crate::gw::backend`]
+//! implementations and survives as their constructor/alias;
+//! [`PairOperator`] is the bound handle the solvers hold — a boxed
+//! [`GradientBackend`] plus the convenience API (`dxgdy`, `c1_halves`,
+//! the constant term) the mirror-descent loop calls. Custom backends
+//! plug in through [`PairOperator::from_backend`].
 
+use super::backend::{self, GradientBackend};
 use super::geometry::Geometry;
-use crate::error::{Error, Result};
-use crate::fgc::{dxgdy_1d, dxgdy_2d, Workspace1d, Workspace2d};
-use crate::linalg::{matmul_into, Mat};
+use crate::error::Result;
+use crate::linalg::Mat;
 use crate::parallel::Parallelism;
 
-/// Which gradient path to use.
+/// Which gradient backend to use.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum GradientKind {
-    /// The paper's fast `O(N²)` dynamic-programming path. Requires
+    /// The paper's fast `O(k²·N²)` dynamic-programming path. Requires
     /// grid structure on both sides for full acceleration; with one
-    /// dense side the structured factor is still applied fast.
+    /// dense side the structured factor is still applied by scans.
     Fgc,
     /// The dense `O(N³)` baseline ("Original" in every table).
     Naive,
+    /// Truncated `D ≈ A·Bᵀ` factorization for arbitrary dense
+    /// geometries: `O(r·N²)` per apply.
+    LowRank,
+}
+
+impl GradientKind {
+    /// Build the backend for this kind over a geometry pair.
+    pub fn instantiate(
+        self,
+        geom_x: Geometry,
+        geom_y: Geometry,
+        par: Parallelism,
+    ) -> Result<Box<dyn GradientBackend>> {
+        backend::instantiate(self, geom_x, geom_y, par)
+    }
+
+    /// Auto-select a kind from the geometry (grid → fgc, small dense →
+    /// naive, large dense → lowrank; see
+    /// [`crate::gw::backend::auto_kind`]).
+    pub fn auto(geom_x: &Geometry, geom_y: &Geometry) -> GradientKind {
+        backend::auto_kind(geom_x, geom_y)
+    }
+
+    /// Parse a CLI / config name (`fgc` | `naive` | `lowrank`).
+    pub fn from_name(name: &str) -> Option<GradientKind> {
+        match name {
+            "fgc" => Some(GradientKind::Fgc),
+            "naive" => Some(GradientKind::Naive),
+            "lowrank" => Some(GradientKind::LowRank),
+            _ => None,
+        }
+    }
 }
 
 impl std::fmt::Display for GradientKind {
@@ -28,31 +61,16 @@ impl std::fmt::Display for GradientKind {
         match self {
             GradientKind::Fgc => write!(f, "fgc"),
             GradientKind::Naive => write!(f, "naive"),
+            GradientKind::LowRank => write!(f, "lowrank"),
         }
     }
 }
 
-enum Ws {
-    One(Box<Workspace1d>),
-    Two(Box<Workspace2d>),
-    None,
-}
-
-/// A bound `(X, Y)` geometry pair with cached dense matrices (naive
-/// path) and scan workspaces (FGC path).
+/// A gradient backend bound to an `(X, Y)` geometry pair, owning its
+/// workspaces so the mirror-descent loop performs zero allocation per
+/// iteration.
 pub struct PairOperator {
-    geom_x: Geometry,
-    geom_y: Geometry,
-    kind: GradientKind,
-    /// Dense `D_X`, `D_Y` — materialized lazily for the naive path or
-    /// dense geometries.
-    dense_x: Option<Mat>,
-    dense_y: Option<Mat>,
-    /// `D_X·Γ` intermediate for the dense path (reused every
-    /// iteration so the baseline is also allocation-free).
-    dense_tmp: Option<Mat>,
-    ws: Ws,
-    par: Parallelism,
+    backend: Box<dyn GradientBackend>,
 }
 
 impl PairOperator {
@@ -61,136 +79,68 @@ impl PairOperator {
         Self::with_parallelism(geom_x, geom_y, kind, Parallelism::SERIAL)
     }
 
-    /// Bind a geometry pair with a thread budget shared by the FGC
-    /// scans and the dense matmul baseline.
+    /// Bind a geometry pair with a thread budget shared by all of the
+    /// backend's kernels.
     pub fn with_parallelism(
         geom_x: Geometry,
         geom_y: Geometry,
         kind: GradientKind,
         par: Parallelism,
     ) -> Result<Self> {
-        let ws = match (&geom_x, &geom_y, kind) {
-            (Geometry::Grid1d { grid: gx, k: kx }, Geometry::Grid1d { grid: gy, k: ky }, GradientKind::Fgc) => {
-                if kx != ky {
-                    return Err(Error::Invalid(format!(
-                        "FGC requires k_X = k_Y (got {kx} vs {ky}); see paper §2 footnote"
-                    )));
-                }
-                Ws::One(Box::new(Workspace1d::with_parallelism(gx.n, gy.n, *kx, par)))
-            }
-            (Geometry::Grid2d { grid: gx, k: kx }, Geometry::Grid2d { grid: gy, k: ky }, GradientKind::Fgc) => {
-                if kx != ky {
-                    return Err(Error::Invalid(format!(
-                        "FGC requires k_X = k_Y (got {kx} vs {ky})"
-                    )));
-                }
-                Ws::Two(Box::new(Workspace2d::with_parallelism(gx.n, gy.n, *kx, par)))
-            }
-            _ => Ws::None,
-        };
-        let need_dense = matches!(ws, Ws::None);
-        let dense_x = if need_dense || kind == GradientKind::Naive {
-            Some(geom_x.dense())
-        } else {
-            None
-        };
-        let dense_y = if need_dense || kind == GradientKind::Naive {
-            Some(geom_y.dense())
-        } else {
-            None
-        };
         Ok(PairOperator {
-            geom_x,
-            geom_y,
-            kind,
-            dense_x,
-            dense_y,
-            dense_tmp: None,
-            ws,
-            par,
+            backend: backend::instantiate(kind, geom_x, geom_y, par)?,
         })
+    }
+
+    /// Wrap an already-built (possibly custom) backend.
+    pub fn from_backend(backend: Box<dyn GradientBackend>) -> Self {
+        PairOperator { backend }
     }
 
     /// Source-side geometry.
     pub fn geom_x(&self) -> &Geometry {
-        &self.geom_x
+        self.backend.geom_x()
     }
 
     /// Target-side geometry.
     pub fn geom_y(&self) -> &Geometry {
-        &self.geom_y
+        self.backend.geom_y()
     }
 
-    /// The backend in use.
+    /// The backend family in use.
     pub fn kind(&self) -> GradientKind {
-        self.kind
+        self.backend.kind()
+    }
+
+    /// The backend itself (cost model, ranks, …).
+    pub fn backend(&self) -> &dyn GradientBackend {
+        self.backend.as_ref()
     }
 
     /// `out = D_X Γ D_Y`.
     pub fn dxgdy(&mut self, gamma: &Mat, out: &mut Mat) -> Result<()> {
-        match self.kind {
-            GradientKind::Fgc => self.dxgdy_fast(gamma, out),
-            GradientKind::Naive => {
-                let PairOperator {
-                    dense_x,
-                    dense_y,
-                    dense_tmp,
-                    par,
-                    ..
-                } = self;
-                let dx = dense_x.as_ref().expect("naive path caches D_X");
-                let dy = dense_y.as_ref().expect("naive path caches D_Y");
-                let tmp = ensure_tmp(dense_tmp, dx.rows(), gamma.cols());
-                matmul_into(dx, gamma, tmp, *par)?;
-                matmul_into(tmp, dy, out, *par)
-            }
-        }
-    }
-
-    fn dxgdy_fast(&mut self, gamma: &Mat, out: &mut Mat) -> Result<()> {
-        match (&self.geom_x, &self.geom_y, &mut self.ws) {
-            (Geometry::Grid1d { grid: gx, k }, Geometry::Grid1d { grid: gy, .. }, Ws::One(ws)) => {
-                dxgdy_1d(gx, gy, *k, gamma, out, ws)
-            }
-            (Geometry::Grid2d { grid: gx, k }, Geometry::Grid2d { grid: gy, .. }, Ws::Two(ws)) => {
-                dxgdy_2d(gx, gy, *k, gamma, out, ws)
-            }
-            // Mixed / dense geometries: fall back to dense products
-            // (used by barycenters, where one side is a free matrix).
-            _ => {
-                let PairOperator {
-                    geom_x,
-                    geom_y,
-                    dense_x,
-                    dense_y,
-                    dense_tmp,
-                    par,
-                    ..
-                } = self;
-                let dx = dense_x.get_or_insert_with(|| geom_x.dense());
-                let dy = dense_y.get_or_insert_with(|| geom_y.dense());
-                let tmp = ensure_tmp(dense_tmp, dx.rows(), gamma.cols());
-                matmul_into(dx, gamma, tmp, *par)?;
-                matmul_into(tmp, dy, out, *par)
-            }
-        }
+        self.backend.apply(gamma, out)
     }
 
     /// Constant term halves: `cx = (D_X⊙D_X)·u`, `cy = (D_Y⊙D_Y)·v`,
     /// so that `C₁[i,p] = 2(cx[i] + cy[p])` (paper §2.1; computed once
     /// per solve).
     pub fn c1_halves(&self, u: &[f64], v: &[f64]) -> Result<(Vec<f64>, Vec<f64>)> {
-        Ok((self.geom_x.sq_apply(u)?, self.geom_y.sq_apply(v)?))
+        self.backend.c1_halves(u, v)
     }
-}
 
-/// The dense-path intermediate, (re)sized on first use and whenever
-/// the plan shape changes (it never does within one operator's life).
-fn ensure_tmp<'a>(slot: &'a mut Option<Mat>, rows: usize, cols: usize) -> &'a mut Mat {
-    if slot.as_ref().map(|m| m.shape()) != Some((rows, cols)) {
-        *slot = Some(Mat::zeros(rows, cols));
+    /// Full constant cost matrix (`C₁`, or FGW's `C₂` with a feature
+    /// cost) written into `out`.
+    pub fn constant_term(
+        &self,
+        u: &[f64],
+        v: &[f64],
+        feature_cost: Option<&Mat>,
+        theta: f64,
+        out: &mut Mat,
+    ) -> Result<()> {
+        self.backend.constant_term(u, v, feature_cost, theta, out)
     }
-    slot.as_mut().expect("just ensured")
 }
 
 #[cfg(test)]
@@ -236,6 +186,25 @@ mod tests {
     }
 
     #[test]
+    fn all_three_backends_agree_on_grids() {
+        let gx = Geometry::grid_1d_unit(22, 2);
+        let gy = Geometry::grid_1d_unit(19, 2);
+        let gamma = random_gamma(22, 19, 31);
+        let mut outs = Vec::new();
+        for kind in [GradientKind::Fgc, GradientKind::Naive, GradientKind::LowRank] {
+            let mut op = PairOperator::new(gx.clone(), gy.clone(), kind).unwrap();
+            assert_eq!(op.kind(), kind);
+            let mut g = Mat::zeros(22, 19);
+            op.dxgdy(&gamma, &mut g).unwrap();
+            outs.push(g);
+        }
+        for other in &outs[1..] {
+            let d = frobenius_diff(&outs[0], other).unwrap();
+            assert!(d < 1e-9, "backend disagreement {d:e}");
+        }
+    }
+
+    #[test]
     fn mixed_geometry_falls_back() {
         let gx = Geometry::Dense(Geometry::grid_1d_unit(10, 1).dense());
         let gy = Geometry::grid_1d_unit(12, 1);
@@ -251,9 +220,41 @@ mod tests {
     }
 
     #[test]
+    fn constant_term_matches_halves() {
+        let gx = Geometry::grid_1d_unit(7, 1);
+        let gy = Geometry::grid_1d_unit(6, 1);
+        let mut rng = Rng::seeded(8);
+        let u = rng.uniform_vec(7);
+        let v = rng.uniform_vec(6);
+        let op = PairOperator::new(gx, gy, GradientKind::Fgc).unwrap();
+        let (cx, cy) = op.c1_halves(&u, &v).unwrap();
+        let mut out = Mat::zeros(7, 6);
+        op.constant_term(&u, &v, None, 1.0, &mut out).unwrap();
+        for i in 0..7 {
+            for p in 0..6 {
+                assert!((out[(i, p)] - 2.0 * (cx[i] + cy[p])).abs() < 1e-15);
+            }
+        }
+        // θ = 0 with a feature cost leaves only C⊙C.
+        let c = Mat::from_fn(7, 6, |i, p| (i + p) as f64 * 0.1);
+        op.constant_term(&u, &v, Some(&c), 0.0, &mut out).unwrap();
+        for (o, cc) in out.as_slice().iter().zip(c.as_slice()) {
+            assert!((o - cc * cc).abs() < 1e-15);
+        }
+    }
+
+    #[test]
     fn mismatched_exponents_rejected() {
         let gx = Geometry::grid_1d_unit(5, 1);
         let gy = Geometry::grid_1d_unit(5, 2);
         assert!(PairOperator::new(gx, gy, GradientKind::Fgc).is_err());
+    }
+
+    #[test]
+    fn kind_names_round_trip() {
+        for kind in [GradientKind::Fgc, GradientKind::Naive, GradientKind::LowRank] {
+            assert_eq!(GradientKind::from_name(&kind.to_string()), Some(kind));
+        }
+        assert_eq!(GradientKind::from_name("auto"), None);
     }
 }

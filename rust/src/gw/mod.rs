@@ -1,30 +1,40 @@
-//! Entropic Gromov-Wasserstein solvers (paper §2) with the FGC fast
-//! gradient (§3) as a pluggable backend.
+//! Entropic Gromov-Wasserstein solvers (paper §2) with pluggable
+//! gradient backends (§3 plus the low-rank extension).
 //!
 //! * [`geometry`] — metric-space descriptors: 1D/2D uniform grids
 //!   (FGC-accelerated) or arbitrary dense distance matrices
-//!   (baseline / barycenter supports).
-//! * [`gradient`] — the `D_X Γ D_Y` product and the constant term
-//!   `C₁`, dispatching FGC vs dense per [`GradientKind`].
+//!   (baseline / barycenter supports / low-rank workloads).
+//! * [`backend`] — the [`GradientBackend`] trait and its three
+//!   implementations (fgc, naive, lowrank) plus the auto-selection
+//!   cost model.
+//! * [`gradient`] — [`GradientKind`] (thin constructor over the
+//!   backends) and [`PairOperator`], the bound handle the solvers use.
+//! * [`driver`] — the shared mirror-descent outer loop every solver
+//!   runs through.
 //! * [`entropic`] — mirror-descent solver for GW and FGW
 //!   (`τ = ε`, Remark 2.1/2.2).
 //! * [`objective`] — GW/FGW energy evaluation in `O(N²)`.
 //! * [`ugw`] — unbalanced GW (Remark 2.3).
+//! * [`coot`] — co-optimal transport (conclusion §5).
 //! * [`barycenter`] — fixed-support GW barycenters (conclusion §5),
-//!   FGC-accelerated on the structured side.
+//!   accelerated on the structured side.
 
+pub mod backend;
 pub mod barycenter;
 pub mod coot;
+pub mod driver;
 pub mod entropic;
 pub mod geometry;
 pub mod gradient;
 pub mod objective;
 pub mod ugw;
 
+pub use backend::{GradientBackend, LowRankBackend, LowRankOptions};
 pub use barycenter::{gw_barycenter_1d, BarycenterConfig, BarycenterResult};
-pub use coot::{coot, CootConfig, CootData, CootSolution};
+pub use coot::{coot, coot_into, CootConfig, CootData, CootSolution, CootWorkspace};
+pub use driver::{run_mirror_descent, DriverStats, MirrorProblem};
 pub use entropic::{EntropicGw, GwConfig, GwSolution, GwWorkspace};
 pub use geometry::Geometry;
 pub use gradient::{GradientKind, PairOperator};
 pub use objective::{fgw_objective, gw_objective};
-pub use ugw::{EntropicUgw, UgwConfig, UgwSolution};
+pub use ugw::{EntropicUgw, UgwConfig, UgwSolution, UgwWorkspace};

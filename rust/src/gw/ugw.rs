@@ -3,23 +3,32 @@
 //!
 //! UGW relaxes the marginal constraints with quadratic-KL penalties of
 //! strength ρ. The entropic algorithm alternates: from the current
-//! `Γ̂`, build the local cost `½∇E(Γ̂)` (FGC-accelerated — this is the
-//! term the paper's method applies to), solve an *unbalanced* entropic
-//! OT subproblem with effective parameters scaled by the current mass
-//! `m = 1ᵀΓ̂1`, and rescale so the mass evolves as in the bi-convex
-//! relaxation (`Γ ← Γ·√(m/mass(Γ))`).
+//! `Γ̂`, build the local cost `½∇E(Γ̂)` (the gradient-backend product —
+//! this is the term the paper's method applies to), solve an
+//! *unbalanced* entropic OT subproblem with effective parameters
+//! scaled by the current mass `m = 1ᵀΓ̂1`, and rescale so the mass
+//! evolves as in the bi-convex relaxation (`Γ ← Γ·√(m/mass(Γ))`).
+//!
+//! The loop runs through the shared mirror-descent driver with a
+//! persistent [`UgwWorkspace`] ([`EntropicUgw::solve_into`]): the
+//! `O(MN)` state — plan, gradient, cost, the unbalanced Sinkhorn
+//! kernel and its transpose — is allocated once and reused across
+//! solves, and every matvec honours [`UgwConfig::threads`], mirroring
+//! what [`super::EntropicGw`] already had.
 //!
 //! Structure follows the released UGW reference implementation; the
 //! exact `g(Γ̂)` KL-gradient offsets enter through the unbalanced
 //! scaling's `ρ`-powers. Deviations from the paper's one-line remark
 //! are documented in DESIGN.md §4.
 
+use super::driver::{run_mirror_descent, MirrorProblem};
 use super::geometry::Geometry;
 use super::gradient::{GradientKind, PairOperator};
 use super::objective::gw_objective;
 use crate::error::{Error, Result};
-use crate::linalg::{outer, Mat};
-use crate::sinkhorn::{sinkhorn_unbalanced, UnbalancedOptions};
+use crate::linalg::{outer_into, Mat};
+use crate::parallel::Parallelism;
+use crate::sinkhorn::{unbalanced_into, UnbalancedOptions, UnbalancedWorkspace};
 use std::time::{Duration, Instant};
 
 /// UGW solver configuration.
@@ -35,6 +44,9 @@ pub struct UgwConfig {
     pub inner_max_iters: usize,
     /// Inner tolerance.
     pub inner_tolerance: f64,
+    /// Thread budget for the hot kernels (`1` = exact serial path,
+    /// `0` = all cores).
+    pub threads: usize,
 }
 
 impl Default for UgwConfig {
@@ -45,7 +57,41 @@ impl Default for UgwConfig {
             outer_iters: 10,
             inner_max_iters: 1000,
             inner_tolerance: 1e-10,
+            threads: 1,
         }
+    }
+}
+
+impl UgwConfig {
+    /// The thread budget as a [`Parallelism`] value.
+    pub fn parallelism(&self) -> Parallelism {
+        Parallelism::from_config(self.threads)
+    }
+}
+
+/// Everything a UGW solve touches per outer iteration, allocated once
+/// and reusable across solves of the same geometry pair.
+pub struct UgwWorkspace {
+    op: PairOperator,
+    sk: UnbalancedWorkspace,
+    gamma: Mat,
+    grad: Mat,
+    cost: Mat,
+    /// Row marginals of the current plan (`Γ̂1`).
+    gu: Vec<f64>,
+    /// Column marginals (`Γ̂ᵀ1`).
+    gv: Vec<f64>,
+}
+
+impl UgwWorkspace {
+    /// The gradient backend this workspace was built for.
+    pub fn kind(&self) -> GradientKind {
+        self.op.kind()
+    }
+
+    /// Problem shape `(M, N)` this workspace serves.
+    pub fn shape(&self) -> (usize, usize) {
+        self.gamma.shape()
     }
 }
 
@@ -82,9 +128,35 @@ impl EntropicUgw {
         }
     }
 
+    /// Build a reusable workspace for this solver's geometry pair
+    /// (mirrors [`super::EntropicGw::workspace`]).
+    pub fn workspace(&self, kind: GradientKind) -> Result<UgwWorkspace> {
+        let par = self.cfg.parallelism();
+        let (m, n) = (self.geom_x.len(), self.geom_y.len());
+        let op =
+            PairOperator::with_parallelism(self.geom_x.clone(), self.geom_y.clone(), kind, par)?;
+        Ok(UgwWorkspace {
+            op,
+            sk: UnbalancedWorkspace::new(m, n, par),
+            gamma: Mat::zeros(m, n),
+            grad: Mat::zeros(m, n),
+            cost: Mat::zeros(m, n),
+            gu: vec![0.0; m],
+            gv: vec![0.0; n],
+        })
+    }
+
     /// Solve from non-negative mass vectors `u`, `v` (need not be
     /// probabilities).
     pub fn solve(&self, u: &[f64], v: &[f64], kind: GradientKind) -> Result<UgwSolution> {
+        let mut ws = self.workspace(kind)?;
+        self.solve_into(u, v, &mut ws)
+    }
+
+    /// Workspace form of [`EntropicUgw::solve`]: the `O(MN)` state
+    /// lives in `ws` and is reused across solves over the same
+    /// geometry pair.
+    pub fn solve_into(&self, u: &[f64], v: &[f64], ws: &mut UgwWorkspace) -> Result<UgwSolution> {
         let t0 = Instant::now();
         let (m, n) = (self.geom_x.len(), self.geom_y.len());
         if u.len() != m || v.len() != n {
@@ -92,6 +164,19 @@ impl EntropicUgw {
                 "EntropicUgw::solve",
                 format!("{m} / {n}"),
                 format!("{} / {}", u.len(), v.len()),
+            ));
+        }
+        if ws.gamma.shape() != (m, n) {
+            return Err(Error::shape(
+                "EntropicUgw::solve_into (workspace)",
+                format!("{m}x{n}"),
+                format!("{:?}", ws.gamma.shape()),
+            ));
+        }
+        if ws.op.geom_x() != &self.geom_x || ws.op.geom_y() != &self.geom_y {
+            return Err(Error::Invalid(
+                "EntropicUgw::solve_into: workspace was built for a different geometry pair"
+                    .into(),
             ));
         }
         if u.iter().chain(v.iter()).any(|&x| x < 0.0 || !x.is_finite()) {
@@ -103,62 +188,109 @@ impl EntropicUgw {
             return Err(Error::Invalid("mass vectors must carry positive mass".into()));
         }
 
-        let mut op = PairOperator::new(self.geom_x.clone(), self.geom_y.clone(), kind)?;
+        let UgwWorkspace {
+            op,
+            sk,
+            gamma,
+            grad,
+            cost,
+            gu,
+            gv,
+        } = ws;
         // Γ⁰ = u⊗v / √(m_u m_v) has mass √(m_u m_v), the UGW convention.
-        let mut gamma = outer(u, v);
+        outer_into(u, v, gamma)?;
         let norm = (mu * mv).sqrt();
         for x in gamma.as_mut_slice() {
             *x /= norm;
         }
 
-        let mut grad = Mat::zeros(m, n);
-        let mut cost = Mat::zeros(m, n);
-        for _ in 0..self.cfg.outer_iters {
-            let mass = gamma.total();
-            if mass <= 0.0 {
-                return Err(Error::Numeric("UGW plan collapsed to zero mass".into()));
-            }
-            // Local cost: ½∇E(Γ̂) with marginals taken from Γ̂ itself
-            // (unbalanced — Remark 2.3's gradient uses Γ̂1, Γ̂ᵀ1).
-            let gu = gamma.row_sums();
-            let gv = gamma.col_sums();
-            let (cx, cy) = op.c1_halves(&gu, &gv)?;
-            op.dxgdy(&gamma, &mut grad)?;
-            for i in 0..m {
-                let grow = grad.row(i);
-                let crow = cost.row_mut(i);
-                for p in 0..n {
-                    // ½·[2(cx+cy) − 4G] = cx + cy − 2G
-                    crow[p] = cx[i] + cy[p] - 2.0 * grow[p];
-                }
-            }
-            // Solve the mass-scaled unbalanced subproblem.
-            let opts = UnbalancedOptions {
-                epsilon: self.cfg.epsilon * mass,
-                rho: self.cfg.rho * mass,
-                max_iters: self.cfg.inner_max_iters,
-                tolerance: self.cfg.inner_tolerance,
-            };
-            let res = sinkhorn_unbalanced(&cost, u, v, &opts)?;
-            gamma = res.plan;
-            // Mass rescaling of the bi-convex scheme.
-            let new_mass = gamma.total();
-            if new_mass > 0.0 {
-                let s = (mass / new_mass).sqrt();
-                for x in gamma.as_mut_slice() {
-                    *x *= s;
-                }
-            }
-        }
+        let mut step = UgwStep {
+            op: &mut *op,
+            sk,
+            gamma: &mut *gamma,
+            grad,
+            cost,
+            gu,
+            gv,
+            u,
+            v,
+            cfg: &self.cfg,
+            mass: 0.0,
+        };
+        let stats = run_mirror_descent(self.cfg.outer_iters, &mut step)?;
 
-        let quadratic_energy = gw_objective(&mut op, &gamma)?;
+        let quadratic_energy = gw_objective(op, gamma)?;
         Ok(UgwSolution {
             mass: gamma.total(),
-            plan: gamma,
+            plan: gamma.clone(),
             quadratic_energy,
-            outer_iterations: self.cfg.outer_iters,
+            outer_iterations: stats.outer_iterations,
             total_time: t0.elapsed(),
         })
+    }
+}
+
+/// One UGW mirror-descent step: linearize takes the marginals from the
+/// current plan itself (unbalanced — Remark 2.3's gradient uses `Γ̂1`,
+/// `Γ̂ᵀ1`) and builds the local cost `½∇E(Γ̂)`; the inner solve is the
+/// mass-scaled unbalanced subproblem followed by the bi-convex mass
+/// rescaling.
+struct UgwStep<'a> {
+    op: &'a mut PairOperator,
+    sk: &'a mut UnbalancedWorkspace,
+    gamma: &'a mut Mat,
+    grad: &'a mut Mat,
+    cost: &'a mut Mat,
+    gu: &'a mut [f64],
+    gv: &'a mut [f64],
+    u: &'a [f64],
+    v: &'a [f64],
+    cfg: &'a UgwConfig,
+    /// Mass of `Γ̂` at the last linearize (consumed by the inner solve).
+    mass: f64,
+}
+
+impl MirrorProblem for UgwStep<'_> {
+    fn linearize(&mut self, _phase: usize) -> Result<()> {
+        let mass = self.gamma.total();
+        if mass <= 0.0 {
+            return Err(Error::Numeric("UGW plan collapsed to zero mass".into()));
+        }
+        self.mass = mass;
+        self.gamma.row_sums_into(self.gu);
+        self.gamma.col_sums_into(self.gv);
+        let (cx, cy) = self.op.c1_halves(self.gu, self.gv)?;
+        self.op.dxgdy(self.gamma, self.grad)?;
+        let (m, n) = self.gamma.shape();
+        for i in 0..m {
+            let grow = self.grad.row(i);
+            let crow = self.cost.row_mut(i);
+            for p in 0..n {
+                // ½·[2(cx+cy) − 4G] = cx + cy − 2G
+                crow[p] = cx[i] + cy[p] - 2.0 * grow[p];
+            }
+        }
+        Ok(())
+    }
+
+    fn inner_solve(&mut self, _phase: usize) -> Result<usize> {
+        let opts = UnbalancedOptions {
+            epsilon: self.cfg.epsilon * self.mass,
+            rho: self.cfg.rho * self.mass,
+            max_iters: self.cfg.inner_max_iters,
+            tolerance: self.cfg.inner_tolerance,
+        };
+        let (iterations, _err) =
+            unbalanced_into(self.cost, self.u, self.v, &opts, self.sk, self.gamma)?;
+        // Mass rescaling of the bi-convex scheme.
+        let new_mass = self.gamma.total();
+        if new_mass > 0.0 {
+            let s = (self.mass / new_mass).sqrt();
+            for x in self.gamma.as_mut_slice() {
+                *x *= s;
+            }
+        }
+        Ok(iterations)
     }
 }
 
@@ -190,6 +322,7 @@ mod tests {
                 outer_iters: 5,
                 inner_max_iters: 2000,
                 inner_tolerance: 1e-12,
+                threads: 1,
             },
         );
         let a = solver.solve(&u, &v, GradientKind::Fgc).unwrap();
@@ -229,6 +362,78 @@ mod tests {
         assert!(sol.plan.all_finite());
         assert!(sol.plan.as_slice().iter().all(|&x| x >= 0.0));
         assert!(sol.quadratic_energy.is_finite());
+    }
+
+    #[test]
+    fn workspace_reuse_is_exact() {
+        // Two solves through one workspace must equal two fresh solves
+        // bitwise (the workspace fully re-initializes per solve).
+        let n = 14;
+        let (u, v) = dists(n, 3);
+        let (u2, v2) = dists(n, 4);
+        let solver = EntropicUgw::new(
+            Geometry::grid_1d_unit(n, 1),
+            Geometry::grid_1d_unit(n, 1),
+            UgwConfig {
+                outer_iters: 4,
+                ..UgwConfig::default()
+            },
+        );
+        let mut ws = solver.workspace(GradientKind::Fgc).unwrap();
+        let a1 = solver.solve_into(&u, &v, &mut ws).unwrap();
+        let a2 = solver.solve_into(&u2, &v2, &mut ws).unwrap();
+        let b1 = solver.solve(&u, &v, GradientKind::Fgc).unwrap();
+        let b2 = solver.solve(&u2, &v2, GradientKind::Fgc).unwrap();
+        assert_eq!(a1.plan.as_slice(), b1.plan.as_slice());
+        assert_eq!(a2.plan.as_slice(), b2.plan.as_slice());
+        // Mismatched workspace shape is rejected.
+        let other = EntropicUgw::new(
+            Geometry::grid_1d_unit(n + 1, 1),
+            Geometry::grid_1d_unit(n, 1),
+            UgwConfig::default(),
+        );
+        let mut bad = other.workspace(GradientKind::Fgc).unwrap();
+        assert!(solver.solve_into(&u, &v, &mut bad).is_err());
+        // Same shape, different exponent is rejected too.
+        let other_k = EntropicUgw::new(
+            Geometry::grid_1d_unit(n, 2),
+            Geometry::grid_1d_unit(n, 2),
+            UgwConfig::default(),
+        );
+        let mut bad_k = other_k.workspace(GradientKind::Fgc).unwrap();
+        assert!(solver.solve_into(&u, &v, &mut bad_k).is_err());
+    }
+
+    #[test]
+    fn multithreaded_solve_matches_serial() {
+        let n = 48;
+        let (u, v) = dists(n, 19);
+        let base_cfg = UgwConfig {
+            epsilon: 0.05,
+            rho: 1.0,
+            outer_iters: 5,
+            inner_max_iters: 500,
+            inner_tolerance: 1e-11,
+            threads: 1,
+        };
+        let gx = Geometry::grid_1d_unit(n, 1);
+        let serial = EntropicUgw::new(gx.clone(), gx.clone(), base_cfg)
+            .solve(&u, &v, GradientKind::Fgc)
+            .unwrap();
+        for threads in [2usize, 4] {
+            let par = EntropicUgw::new(
+                gx.clone(),
+                gx.clone(),
+                UgwConfig {
+                    threads,
+                    ..base_cfg
+                },
+            )
+            .solve(&u, &v, GradientKind::Fgc)
+            .unwrap();
+            let d = crate::linalg::frobenius_diff(&par.plan, &serial.plan).unwrap();
+            assert!(d < 1e-12, "threads={threads}: ‖ΔΓ‖_F = {d:e}");
+        }
     }
 
     #[test]

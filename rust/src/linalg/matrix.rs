@@ -164,6 +164,15 @@ impl Mat {
         (0..self.rows).map(|i| self.row(i).iter().sum()).collect()
     }
 
+    /// [`Mat::row_sums`] into a caller-owned buffer (same summation
+    /// order, so results are bitwise identical; no allocation).
+    pub fn row_sums_into(&self, out: &mut [f64]) {
+        assert_eq!(out.len(), self.rows, "row_sums_into: buffer length");
+        for (i, o) in out.iter_mut().enumerate() {
+            *o = self.row(i).iter().sum();
+        }
+    }
+
     /// Column sums (length `cols`).
     pub fn col_sums(&self) -> Vec<f64> {
         let mut s = vec![0.0; self.cols];
@@ -173,6 +182,18 @@ impl Mat {
             }
         }
         s
+    }
+
+    /// [`Mat::col_sums`] into a caller-owned buffer (same accumulation
+    /// order, so results are bitwise identical; no allocation).
+    pub fn col_sums_into(&self, out: &mut [f64]) {
+        assert_eq!(out.len(), self.cols, "col_sums_into: buffer length");
+        out.fill(0.0);
+        for i in 0..self.rows {
+            for (sj, &x) in out.iter_mut().zip(self.row(i)) {
+                *sj += x;
+            }
+        }
     }
 
     /// Sum of all entries.

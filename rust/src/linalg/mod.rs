@@ -13,5 +13,6 @@ mod ops;
 pub use matrix::Mat;
 pub use ops::{
     axpy, dot, frobenius_diff, frobenius_norm, l1_norm, linf_diff, matmul, matmul_into,
-    matmul_par, matvec, matvec_t, normalize_l1, outer, scale_in_place, sum,
+    matmul_par, matvec, matvec_into, matvec_t, matvec_t_into, normalize_l1, outer, outer_into,
+    scale_in_place, sum,
 };

@@ -117,37 +117,77 @@ pub fn matmul_into(a: &Mat, b: &Mat, c: &mut Mat, par: Parallelism) -> Result<()
 
 /// Dense matvec `y = A·x`.
 pub fn matvec(a: &Mat, x: &[f64]) -> Result<Vec<f64>> {
-    if a.cols() != x.len() {
+    let mut y = vec![0.0; a.rows()];
+    matvec_into(a, x, &mut y)?;
+    Ok(y)
+}
+
+/// [`matvec`] into a caller-owned buffer (same per-row dot kernel, so
+/// results are bitwise identical; no allocation).
+pub fn matvec_into(a: &Mat, x: &[f64], y: &mut [f64]) -> Result<()> {
+    if a.cols() != x.len() || a.rows() != y.len() {
         return Err(Error::shape(
             "matvec",
-            format!("{} cols", a.cols()),
-            format!("{} elems", x.len()),
+            format!("{}x{}", a.rows(), a.cols()),
+            format!("{} elems · out {}", x.len(), y.len()),
         ));
     }
-    Ok((0..a.rows()).map(|i| dot(a.row(i), x)).collect())
+    for (i, yi) in y.iter_mut().enumerate() {
+        *yi = dot(a.row(i), x);
+    }
+    Ok(())
 }
 
 /// Dense transposed matvec `y = Aᵀ·x`.
 pub fn matvec_t(a: &Mat, x: &[f64]) -> Result<Vec<f64>> {
-    if a.rows() != x.len() {
+    let mut y = vec![0.0; a.cols()];
+    matvec_t_into(a, x, &mut y)?;
+    Ok(y)
+}
+
+/// [`matvec_t`] into a caller-owned buffer (same row-scaled `axpy`
+/// accumulation, so results are bitwise identical; no allocation).
+pub fn matvec_t_into(a: &Mat, x: &[f64], y: &mut [f64]) -> Result<()> {
+    if a.rows() != x.len() || a.cols() != y.len() {
         return Err(Error::shape(
             "matvec_t",
-            format!("{} rows", a.rows()),
-            format!("{} elems", x.len()),
+            format!("{}x{}", a.rows(), a.cols()),
+            format!("{} elems · out {}", x.len(), y.len()),
         ));
     }
-    let mut y = vec![0.0; a.cols()];
+    y.fill(0.0);
     for (i, &xi) in x.iter().enumerate() {
         if xi != 0.0 {
-            axpy(xi, a.row(i), &mut y);
+            axpy(xi, a.row(i), y);
         }
     }
-    Ok(y)
+    Ok(())
 }
 
 /// Outer product `u·vᵀ`.
 pub fn outer(u: &[f64], v: &[f64]) -> Mat {
     Mat::from_fn(u.len(), v.len(), |i, j| u[i] * v[j])
+}
+
+/// Outer product into a caller-owned matrix — the zero-allocation
+/// form the solver workspaces use to (re)initialize plans. Values
+/// match [`outer`] bitwise.
+pub fn outer_into(u: &[f64], v: &[f64], out: &mut Mat) -> Result<()> {
+    if out.shape() != (u.len(), v.len()) {
+        return Err(Error::shape(
+            "outer_into",
+            format!("{}x{}", u.len(), v.len()),
+            format!("{:?}", out.shape()),
+        ));
+    }
+    let n = v.len();
+    let os = out.as_mut_slice();
+    for (i, &ui) in u.iter().enumerate() {
+        for (o, &vj) in os[i * n..(i + 1) * n].iter_mut().zip(v) {
+            *o = ui * vj;
+        }
+    }
+    Ok(())
 }
 
 /// Frobenius norm of a matrix.

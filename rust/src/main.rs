@@ -1,15 +1,17 @@
 //! `fgc-gw` — launcher for the FGC-GW alignment stack.
 //!
 //! ```text
-//! fgc-gw solve  --n 500 [--k 1] [--eps 0.002] [--backend fgc|naive] [--seed 7] [--threads 1]
+//! fgc-gw solve  --n 500 [--k 1] [--eps 0.002] [--backend fgc|naive|lowrank] [--seed 7] [--threads 1]
 //! fgc-gw solve2d --side 20 [--eps 0.004] …
-//! fgc-gw serve  --jobs 32 [--workers 2] [--threads 1] [--pjrt] [--config path]
+//! fgc-gw serve  --jobs 32 [--workers 2] [--threads 1] [--backend auto|fgc|naive|lowrank] [--pjrt] [--config path]
 //! fgc-gw bary   --inputs 3 --n 40
 //! fgc-gw info   [--artifacts artifacts]
 //! ```
 //!
 //! `--threads 0` means one thread per core; the serve command also
-//! reads `solver.threads` from the config file (CLI wins).
+//! reads `solver.threads` and `solver.backend` from the config file
+//! (CLI wins). `--backend auto` (the default) lets the router pick per
+//! job: grid → fgc, small dense → naive, large dense → lowrank.
 
 use fgc_gw::cli::Args;
 use fgc_gw::config::Config;
@@ -52,18 +54,31 @@ fn print_usage() {
          commands:\n\
          \x20 solve    1D GW between random distributions (--n, --k, --eps, --backend, --seed, --threads)\n\
          \x20 solve2d  2D GW on an n×n grid (--side, --k, --eps, --backend, --seed, --threads)\n\
-         \x20 serve    run the coordinator on a synthetic workload (--jobs, --workers, --threads, --pjrt)\n\
+         \x20 serve    run the coordinator on a synthetic workload (--jobs, --workers, --threads, --backend, --pjrt)\n\
          \x20 bary     1D GW barycenter demo (--inputs, --n)\n\
          \x20 info     platform + artifact registry summary (--artifacts DIR)"
     );
 }
 
 fn backend(args: &Args) -> fgc_gw::Result<GradientKind> {
-    match args.get("backend").unwrap_or("fgc") {
-        "fgc" => Ok(GradientKind::Fgc),
-        "naive" => Ok(GradientKind::Naive),
-        other => Err(fgc_gw::Error::Config(format!("unknown backend `{other}`"))),
+    let name = args.get("backend").unwrap_or("fgc");
+    GradientKind::from_name(name)
+        .ok_or_else(|| fgc_gw::Error::Config(format!("unknown backend `{name}` (expected fgc|naive|lowrank)")))
+}
+
+/// Parse a backend override for the router: `auto` (or absent) keeps
+/// per-job auto-selection, anything else pins the native backend.
+fn backend_policy(name: &str) -> fgc_gw::Result<Option<RoutingPolicy>> {
+    if name == "auto" {
+        return Ok(None);
     }
+    GradientKind::from_name(name)
+        .map(|kind| Some(RoutingPolicy::Force(kind)))
+        .ok_or_else(|| {
+            fgc_gw::Error::Config(format!(
+                "unknown backend `{name}` (expected auto|fgc|naive|lowrank)"
+            ))
+        })
 }
 
 fn cmd_solve(args: &Args) -> fgc_gw::Result<()> {
@@ -129,6 +144,11 @@ fn cmd_serve(args: &Args) -> fgc_gw::Result<()> {
         cfg.outer_iters = file.get_or("solver.outer_iters", cfg.outer_iters)?;
         cfg.sinkhorn_max_iters = file.get_or("solver.sinkhorn_max_iters", cfg.sinkhorn_max_iters)?;
         cfg.solver_threads = file.get_or("solver.threads", cfg.solver_threads)?;
+        if let Some(name) = file.get("solver.backend") {
+            if let Some(policy) = backend_policy(name)? {
+                cfg.policy = policy;
+            }
+        }
     }
     cfg.native_workers = args.get_or("workers", cfg.native_workers)?;
     if let Some(threads) = args.get_opt::<usize>("threads")? {
@@ -139,6 +159,15 @@ fn cmd_serve(args: &Args) -> fgc_gw::Result<()> {
     cfg.submit_timeout = Duration::from_millis(args.get_or("submit-timeout-ms", 500u64)?);
     if args.has_flag("baseline") {
         cfg.policy = RoutingPolicy::BaselineOnly;
+    }
+    // `--backend` wins over both the config key and `--baseline`:
+    // `auto` explicitly restores per-job selection (PreferPjrt
+    // degrades to native auto-routing when no PJRT worker is up).
+    if let Some(name) = args.get("backend") {
+        cfg.policy = match backend_policy(name)? {
+            Some(policy) => policy,
+            None => RoutingPolicy::PreferPjrt,
+        };
     }
 
     let jobs = args.get_or("jobs", 32usize)?;

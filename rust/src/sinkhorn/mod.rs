@@ -27,7 +27,7 @@ mod workspace;
 
 pub use gibbs::sinkhorn_gibbs;
 pub use log_domain::sinkhorn_log;
-pub use unbalanced::{sinkhorn_unbalanced, UnbalancedOptions};
+pub use unbalanced::{sinkhorn_unbalanced, unbalanced_into, UnbalancedOptions, UnbalancedWorkspace};
 pub use workspace::SinkhornWorkspace;
 
 use crate::error::{Error, Result};
@@ -265,7 +265,10 @@ pub(crate) fn marginal_error_scratch(
     debug_assert!(col_scratch.len() >= n);
     let col = &mut col_scratch[..n];
     col.fill(0.0);
-    let mut err = 0.0;
+    // Row and column errors accumulate separately and are added once
+    // at the end — the same grouping as the allocating form, so the
+    // two are bitwise identical.
+    let mut row_err = 0.0;
     for i in 0..m {
         let row = plan.row(i);
         let mut rs = 0.0;
@@ -273,12 +276,13 @@ pub(crate) fn marginal_error_scratch(
             *c += x;
             rs += x;
         }
-        err += (rs - u[i]).abs();
+        row_err += (rs - u[i]).abs();
     }
+    let mut col_err = 0.0;
     for (c, &vj) in col.iter().zip(v) {
-        err += (c - vj).abs();
+        col_err += (c - vj).abs();
     }
-    err
+    row_err + col_err
 }
 
 #[cfg(test)]

@@ -11,10 +11,20 @@
 //! Unlike the balanced case the marginals are only *pulled toward*
 //! `(u, v)` with strength `ρ`; mass is created/destroyed as the KL
 //! penalties allow. `ρ → ∞` recovers balanced Sinkhorn.
+//!
+//! [`unbalanced_into`] is the workspace form the UGW mirror-descent
+//! driver calls every outer iteration: the kernel, its transpose and
+//! the scaling vectors live in an [`UnbalancedWorkspace`], the plan
+//! lands in the caller's buffer, and the `K·b` / `Kᵀ·a` products run
+//! over row blocks on the workspace's thread budget (each row is an
+//! independent dot product, so results are bitwise identical across
+//! thread counts). The stateless [`sinkhorn_unbalanced`] delegates to
+//! it, so the two forms agree bitwise.
 
 use super::SinkhornResult;
 use crate::error::{Error, Result};
 use crate::linalg::Mat;
+use crate::parallel::{self, Parallelism};
 
 /// Options for the unbalanced scaling loop.
 #[derive(Clone, Copy, Debug)]
@@ -40,8 +50,61 @@ impl Default for UnbalancedOptions {
     }
 }
 
+/// Reusable buffers for [`unbalanced_into`] (one per solver/job; not
+/// shareable across shapes).
+#[derive(Debug)]
+pub struct UnbalancedWorkspace {
+    m: usize,
+    n: usize,
+    par: Parallelism,
+    /// Gibbs kernel with the reference measure folded in:
+    /// `K_ij = e^{−C_ij/ε}·u_i v_j` (`m×n`).
+    kernel: Mat,
+    /// `Kᵀ` (`n×m`) so both scaling products stream contiguous rows.
+    kernel_t: Mat,
+    /// Row scalings `a` (length `m`).
+    a: Vec<f64>,
+    /// Column scalings `b` (length `n`).
+    b: Vec<f64>,
+    /// `K·b` (length `m`).
+    kb: Vec<f64>,
+    /// `Kᵀ·a` (length `n`); doubles as the marginal-error scratch.
+    kta: Vec<f64>,
+}
+
+impl UnbalancedWorkspace {
+    /// Allocate for `m×n` subproblems with the given thread budget.
+    pub fn new(m: usize, n: usize, par: Parallelism) -> Self {
+        UnbalancedWorkspace {
+            m,
+            n,
+            par,
+            kernel: Mat::zeros(m, n),
+            kernel_t: Mat::zeros(n, m),
+            a: vec![0.0; m],
+            b: vec![0.0; n],
+            kb: vec![0.0; m],
+            kta: vec![0.0; n],
+        }
+    }
+
+    /// Subproblem shape this workspace serves.
+    pub fn shape(&self) -> (usize, usize) {
+        (self.m, self.n)
+    }
+
+    /// Thread budget the scaling products run with.
+    pub fn parallelism(&self) -> Parallelism {
+        self.par
+    }
+}
+
 /// Unbalanced entropic scaling. `u`, `v` are arbitrary non-negative
 /// mass vectors (not necessarily probabilities).
+///
+/// Stateless convenience form — allocates fresh buffers every call.
+/// The UGW driver uses [`unbalanced_into`] with a persistent
+/// [`UnbalancedWorkspace`] instead.
 pub fn sinkhorn_unbalanced(
     cost: &Mat,
     u: &[f64],
@@ -49,11 +112,48 @@ pub fn sinkhorn_unbalanced(
     opts: &UnbalancedOptions,
 ) -> Result<SinkhornResult> {
     let (m, n) = cost.shape();
+    let mut ws = UnbalancedWorkspace::new(m, n, Parallelism::SERIAL);
+    let mut plan = Mat::zeros(m, n);
+    let (iterations, marginal_error) = unbalanced_into(cost, u, v, opts, &mut ws, &mut plan)?;
+    Ok(SinkhornResult {
+        plan,
+        iterations,
+        marginal_error,
+    })
+}
+
+/// Workspace form of [`sinkhorn_unbalanced`]: the plan is written into
+/// `plan`, every intermediate lives in `ws`, and the per-sweep matvecs
+/// run on the workspace's thread budget. Zero heap allocation on the
+/// success path. Returns `(iterations, marginal_error)`.
+pub fn unbalanced_into(
+    cost: &Mat,
+    u: &[f64],
+    v: &[f64],
+    opts: &UnbalancedOptions,
+    ws: &mut UnbalancedWorkspace,
+    plan: &mut Mat,
+) -> Result<(usize, f64)> {
+    let (m, n) = cost.shape();
     if u.len() != m || v.len() != n {
         return Err(Error::shape(
             "sinkhorn_unbalanced",
             format!("{}x{}", u.len(), v.len()),
             format!("{m}x{n}"),
+        ));
+    }
+    if ws.shape() != (m, n) {
+        return Err(Error::shape(
+            "unbalanced_into (workspace)",
+            format!("{m}x{n}"),
+            format!("{:?}", ws.shape()),
+        ));
+    }
+    if plan.shape() != (m, n) {
+        return Err(Error::shape(
+            "unbalanced_into (plan)",
+            format!("{m}x{n}"),
+            format!("{:?}", plan.shape()),
         ));
     }
     if opts.epsilon <= 0.0 || opts.rho <= 0.0 {
@@ -67,55 +167,90 @@ pub fn sinkhorn_unbalanced(
     // KL penalties let the plan shed. Use the raw Gibbs kernel; the
     // caller picks ε large enough that exp(−max(C)/ε) stays normal.
     let inv_eps = 1.0 / opts.epsilon;
-    // Reference measure u⊗v folded into K.
-    let mut k = cost.map(|c| (-c * inv_eps).exp());
-    for i in 0..m {
-        let row = k.row_mut(i);
-        for (j, x) in row.iter_mut().enumerate() {
-            *x *= u[i] * v[j];
+    let par = ws.par;
+    let min_rows = parallel::min_rows_for(n.max(1));
+    // Reference measure u⊗v folded into K (row-parallel; the grouping
+    // `exp(−C/ε)·(u_i·v_j)` matches the historical two-pass build
+    // bitwise).
+    let cs = cost.as_slice();
+    parallel::for_row_blocks(par, m, n, min_rows, ws.kernel.as_mut_slice(), |_bl, rr, kblk| {
+        for (local, i) in rr.enumerate() {
+            let ui = u[i];
+            let src = &cs[i * n..(i + 1) * n];
+            let dst = &mut kblk[local * n..(local + 1) * n];
+            for ((d, &c), &vj) in dst.iter_mut().zip(src).zip(v) {
+                *d = (-c * inv_eps).exp() * (ui * vj);
+            }
         }
-    }
-    let kt = k.transpose();
+    });
+    ws.kernel.transpose_into(&mut ws.kernel_t)?;
 
     let fe = opts.rho / (opts.rho + opts.epsilon);
-    let mut a = vec![1.0f64; m];
-    let mut b = vec![1.0f64; n];
-    let mut kb = vec![0.0f64; m];
-    let mut kta = vec![0.0f64; n];
+    ws.a.fill(1.0);
+    ws.b.fill(1.0);
 
+    let min_rows_n = parallel::min_rows_for(m.max(1));
     let mut iterations = 0;
     for it in 0..opts.max_iters {
         iterations = it + 1;
         let mut delta = 0.0f64;
-        for (i, o) in kb.iter_mut().enumerate() {
-            *o = crate::linalg::dot(k.row(i), &b);
+        {
+            let (k, b) = (&ws.kernel, &ws.b);
+            parallel::for_row_blocks(par, m, 1, min_rows, &mut ws.kb, |_bl, rr, out| {
+                for (local, i) in rr.enumerate() {
+                    out[local] = crate::linalg::dot(k.row(i), b);
+                }
+            });
         }
         for i in 0..m {
-            let new = if kb[i] > 0.0 { (u[i] / kb[i]).powf(fe) } else { 0.0 };
-            delta = delta.max((new.max(1e-300).ln() - a[i].max(1e-300).ln()).abs());
-            a[i] = new;
+            let new = if ws.kb[i] > 0.0 {
+                (u[i] / ws.kb[i]).powf(fe)
+            } else {
+                0.0
+            };
+            delta = delta.max((new.max(1e-300).ln() - ws.a[i].max(1e-300).ln()).abs());
+            ws.a[i] = new;
         }
-        for (j, o) in kta.iter_mut().enumerate() {
-            *o = crate::linalg::dot(kt.row(j), &a);
+        {
+            let (kt, a) = (&ws.kernel_t, &ws.a);
+            parallel::for_row_blocks(par, n, 1, min_rows_n, &mut ws.kta, |_bl, rr, out| {
+                for (local, j) in rr.enumerate() {
+                    out[local] = crate::linalg::dot(kt.row(j), a);
+                }
+            });
         }
         for j in 0..n {
-            b[j] = if kta[j] > 0.0 { (v[j] / kta[j]).powf(fe) } else { 0.0 };
+            ws.b[j] = if ws.kta[j] > 0.0 {
+                (v[j] / ws.kta[j]).powf(fe)
+            } else {
+                0.0
+            };
         }
         if delta < opts.tolerance {
             break;
         }
     }
 
-    let plan = Mat::from_fn(m, n, |i, j| a[i] * k[(i, j)] * b[j]);
-    if !plan.all_finite() {
-        return Err(Error::Numeric("unbalanced sinkhorn produced non-finite plan".into()));
+    {
+        let (k, a, b) = (&ws.kernel, &ws.a, &ws.b);
+        parallel::for_row_blocks(par, m, n, min_rows, plan.as_mut_slice(), |_bl, rr, pblk| {
+            for (local, i) in rr.enumerate() {
+                let ai = a[i];
+                let krow = k.row(i);
+                let prow = &mut pblk[local * n..(local + 1) * n];
+                for ((p, &kij), &bj) in prow.iter_mut().zip(krow).zip(b) {
+                    *p = ai * kij * bj;
+                }
+            }
+        });
     }
-    let marginal_error = super::marginal_violation(&plan, u, v);
-    Ok(SinkhornResult {
-        plan,
-        iterations,
-        marginal_error,
-    })
+    if !plan.all_finite() {
+        return Err(Error::Numeric(
+            "unbalanced sinkhorn produced non-finite plan".into(),
+        ));
+    }
+    let marginal_error = super::marginal_error_scratch(plan, u, v, &mut ws.kta);
+    Ok((iterations, marginal_error))
 }
 
 #[cfg(test)]
@@ -177,6 +312,52 @@ mod tests {
         .unwrap();
         assert!(r.plan.total() < 0.5, "mass={}", r.plan.total());
         assert!(r.plan.total() > 0.0);
+    }
+
+    #[test]
+    fn workspace_form_matches_stateless_bitwise() {
+        let (cost, u, v) = random_problem(11, 9, 33);
+        let opts = UnbalancedOptions {
+            epsilon: 0.05,
+            rho: 0.7,
+            max_iters: 800,
+            tolerance: 1e-12,
+        };
+        let base = sinkhorn_unbalanced(&cost, &u, &v, &opts).unwrap();
+        let mut ws = UnbalancedWorkspace::new(11, 9, Parallelism::SERIAL);
+        let mut plan = Mat::zeros(11, 9);
+        // Two passes through one workspace: both must equal the
+        // stateless solve exactly (the workspace fully re-initializes).
+        for _ in 0..2 {
+            let (iters, err) = unbalanced_into(&cost, &u, &v, &opts, &mut ws, &mut plan).unwrap();
+            assert_eq!(iters, base.iterations);
+            assert_eq!(err, base.marginal_error);
+            assert_eq!(plan.as_slice(), base.plan.as_slice());
+        }
+        // Shape-mismatched workspace is rejected.
+        let mut small = UnbalancedWorkspace::new(4, 4, Parallelism::SERIAL);
+        assert!(unbalanced_into(&cost, &u, &v, &opts, &mut small, &mut plan).is_err());
+    }
+
+    #[test]
+    fn parallel_matches_serial_bitwise() {
+        let (cost, u, v) = random_problem(120, 40, 55);
+        let opts = UnbalancedOptions {
+            epsilon: 0.05,
+            rho: 1.0,
+            max_iters: 300,
+            tolerance: 0.0,
+        };
+        let serial = sinkhorn_unbalanced(&cost, &u, &v, &opts).unwrap();
+        for threads in [2usize, 4, 7] {
+            let mut ws = UnbalancedWorkspace::new(120, 40, Parallelism::new(threads));
+            let mut plan = Mat::zeros(120, 40);
+            let (_, err) = unbalanced_into(&cost, &u, &v, &opts, &mut ws, &mut plan).unwrap();
+            // Row-dot decomposition: no cross-block reduction anywhere,
+            // so every thread count reproduces the serial bits.
+            assert_eq!(plan.as_slice(), serial.plan.as_slice(), "threads={threads}");
+            assert_eq!(err, serial.marginal_error);
+        }
     }
 
     #[test]

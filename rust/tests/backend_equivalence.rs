@@ -1,0 +1,444 @@
+//! Backend-equivalence property tests.
+//!
+//! Two guarantees pin the multi-backend refactor down:
+//!
+//! 1. **Backend agreement** — the fgc, naive and lowrank gradient
+//!    backends produce the same transport plans (within solver
+//!    tolerance) on random problems: grid and dense geometries,
+//!    balanced (entropic GW) and unbalanced (UGW), at thread budgets
+//!    {1, 4}.
+//! 2. **Driver fidelity** — the shared mirror-descent driver
+//!    reproduces the pre-refactor hand-rolled outer loops *bit for
+//!    bit* on the naive path: straight-line replicas of the historical
+//!    UGW / COOT / barycenter algorithms (written against the same
+//!    public kernels) must match the refactored solvers exactly.
+
+use fgc_gw::grid::{dense_dist_1d, Grid1d};
+use fgc_gw::gw::{
+    barycenter::BaryInput1d, coot, gw_barycenter_1d, gw_objective, BarycenterConfig, CootConfig,
+    CootData, EntropicGw, EntropicUgw, Geometry, GradientKind, GwConfig, PairOperator, UgwConfig,
+};
+use fgc_gw::linalg::{
+    frobenius_diff, matmul, matvec, matvec_t, normalize_l1, outer, Mat,
+};
+use fgc_gw::prng::Rng;
+use fgc_gw::sinkhorn::{self, sinkhorn_unbalanced, SinkhornOptions, UnbalancedOptions};
+use fgc_gw::testutil::check_prop;
+
+const ALL_KINDS: [GradientKind; 3] = [
+    GradientKind::Fgc,
+    GradientKind::Naive,
+    GradientKind::LowRank,
+];
+const THREADS: [usize; 2] = [1, 4];
+
+fn dists(rng: &mut Rng, m: usize, n: usize) -> (Vec<f64>, Vec<f64>) {
+    let mut u: Vec<f64> = (0..m).map(|_| 0.05 + rng.uniform()).collect();
+    let mut v: Vec<f64> = (0..n).map(|_| 0.05 + rng.uniform()).collect();
+    normalize_l1(&mut u).unwrap();
+    normalize_l1(&mut v).unwrap();
+    (u, v)
+}
+
+fn gw_cfg(threads: usize) -> GwConfig {
+    GwConfig {
+        epsilon: 0.01,
+        outer_iters: 5,
+        sinkhorn_max_iters: 600,
+        sinkhorn_tolerance: 1e-10,
+        sinkhorn_check_every: 10,
+        threads,
+    }
+}
+
+/// All three backends, at thread budgets {1, 4}, agree on the
+/// transport plan of random *grid* problems (balanced GW).
+#[test]
+fn prop_entropic_grid_backends_agree() {
+    check_prop(
+        "entropic-grid-backend-agreement",
+        6,
+        0xBE01,
+        |rng| {
+            let n = 10 + rng.below(14) as usize;
+            let k = 1 + rng.below(2) as u32;
+            let (u, v) = dists(rng, n, n);
+            (n, k, u, v)
+        },
+        |(n, k, u, v)| {
+            let baseline = EntropicGw::grid_1d(*n, *n, *k, gw_cfg(1))
+                .solve(u, v, GradientKind::Fgc)
+                .map_err(|e| e.to_string())?;
+            for kind in ALL_KINDS {
+                for threads in THREADS {
+                    let sol = EntropicGw::grid_1d(*n, *n, *k, gw_cfg(threads))
+                        .solve(u, v, kind)
+                        .map_err(|e| e.to_string())?;
+                    let d = frobenius_diff(&sol.plan, &baseline.plan).unwrap();
+                    if d > 1e-8 {
+                        return Err(format!("{kind} threads={threads}: ‖ΔΓ‖_F = {d:e}"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Naive and lowrank (and fgc's dense fallback) agree on random
+/// *dense* geometries — both a numerically low-rank one (squared
+/// distances, rank 3) and a full-rank one (plain distances).
+#[test]
+fn prop_entropic_dense_backends_agree() {
+    check_prop(
+        "entropic-dense-backend-agreement",
+        4,
+        0xBE02,
+        |rng| {
+            let n = 10 + rng.below(12) as usize;
+            let k = 1 + rng.below(2) as u32; // k=2 → exact rank 3
+            let (u, v) = dists(rng, n, n);
+            (n, k, u, v)
+        },
+        |(n, k, u, v)| {
+            let geom = Geometry::Dense(dense_dist_1d(&Grid1d::unit(*n), *k));
+            let baseline = EntropicGw::new(geom.clone(), geom.clone(), gw_cfg(1))
+                .solve(u, v, GradientKind::Naive)
+                .map_err(|e| e.to_string())?;
+            for kind in ALL_KINDS {
+                for threads in THREADS {
+                    let sol = EntropicGw::new(geom.clone(), geom.clone(), gw_cfg(threads))
+                        .solve(u, v, kind)
+                        .map_err(|e| e.to_string())?;
+                    let d = frobenius_diff(&sol.plan, &baseline.plan).unwrap();
+                    if d > 1e-8 {
+                        return Err(format!("{kind} threads={threads}: ‖ΔΓ‖_F = {d:e}"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The unbalanced solver agrees across backends and thread budgets.
+#[test]
+fn prop_ugw_backends_agree() {
+    check_prop(
+        "ugw-backend-agreement",
+        4,
+        0xBE03,
+        |rng| {
+            let n = 8 + rng.below(10) as usize;
+            let (u, v) = dists(rng, n, n);
+            (n, u, v)
+        },
+        |(n, u, v)| {
+            let cfg = |threads: usize| UgwConfig {
+                epsilon: 0.05,
+                rho: 1.0,
+                outer_iters: 4,
+                inner_max_iters: 800,
+                inner_tolerance: 1e-11,
+                threads,
+            };
+            let gx = Geometry::grid_1d_unit(*n, 1);
+            let baseline = EntropicUgw::new(gx.clone(), gx.clone(), cfg(1))
+                .solve(u, v, GradientKind::Naive)
+                .map_err(|e| e.to_string())?;
+            for kind in ALL_KINDS {
+                for threads in THREADS {
+                    let sol = EntropicUgw::new(gx.clone(), gx.clone(), cfg(threads))
+                        .solve(u, v, kind)
+                        .map_err(|e| e.to_string())?;
+                    let d = frobenius_diff(&sol.plan, &baseline.plan).unwrap();
+                    if d > 1e-9 {
+                        return Err(format!("{kind} threads={threads}: ‖ΔΓ‖_F = {d:e}"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Driver fidelity: bit-for-bit against pre-refactor straight-line loops
+// ---------------------------------------------------------------------------
+
+/// The historical UGW outer loop, written straight-line against the
+/// public kernels exactly as `EntropicUgw::solve` was before the
+/// driver refactor.
+fn ugw_reference(
+    geom: &Geometry,
+    u: &[f64],
+    v: &[f64],
+    cfg: &UgwConfig,
+    kind: GradientKind,
+) -> (Mat, f64) {
+    let mut op = PairOperator::new(geom.clone(), geom.clone(), kind).unwrap();
+    let mu: f64 = u.iter().sum();
+    let mv: f64 = v.iter().sum();
+    let mut gamma = outer(u, v);
+    let norm = (mu * mv).sqrt();
+    for x in gamma.as_mut_slice() {
+        *x /= norm;
+    }
+    let (m, n) = gamma.shape();
+    let mut grad = Mat::zeros(m, n);
+    let mut cost = Mat::zeros(m, n);
+    for _ in 0..cfg.outer_iters {
+        let mass = gamma.total();
+        assert!(mass > 0.0);
+        let gu = gamma.row_sums();
+        let gv = gamma.col_sums();
+        let (cx, cy) = op.c1_halves(&gu, &gv).unwrap();
+        op.dxgdy(&gamma, &mut grad).unwrap();
+        for i in 0..m {
+            let grow = grad.row(i);
+            let crow = cost.row_mut(i);
+            for p in 0..n {
+                crow[p] = cx[i] + cy[p] - 2.0 * grow[p];
+            }
+        }
+        let opts = UnbalancedOptions {
+            epsilon: cfg.epsilon * mass,
+            rho: cfg.rho * mass,
+            max_iters: cfg.inner_max_iters,
+            tolerance: cfg.inner_tolerance,
+        };
+        let res = sinkhorn_unbalanced(&cost, u, v, &opts).unwrap();
+        gamma = res.plan;
+        let new_mass = gamma.total();
+        if new_mass > 0.0 {
+            let s = (mass / new_mass).sqrt();
+            for x in gamma.as_mut_slice() {
+                *x *= s;
+            }
+        }
+    }
+    let energy = gw_objective(&mut op, &gamma).unwrap();
+    (gamma, energy)
+}
+
+#[test]
+fn ugw_driver_is_bit_for_bit_on_naive_path() {
+    let n = 14;
+    let mut rng = Rng::seeded(0xBE04);
+    let (u, v) = dists(&mut rng, n, n);
+    let cfg = UgwConfig {
+        epsilon: 0.05,
+        rho: 0.8,
+        outer_iters: 5,
+        inner_max_iters: 600,
+        inner_tolerance: 1e-11,
+        threads: 1,
+    };
+    let geom = Geometry::grid_1d_unit(n, 1);
+    let (ref_plan, ref_energy) = ugw_reference(&geom, &u, &v, &cfg, GradientKind::Naive);
+    let sol = EntropicUgw::new(geom.clone(), geom, cfg)
+        .solve(&u, &v, GradientKind::Naive)
+        .unwrap();
+    assert_eq!(sol.plan.as_slice(), ref_plan.as_slice(), "UGW plan drifted");
+    assert_eq!(sol.quadratic_energy, ref_energy, "UGW energy drifted");
+}
+
+/// The historical COOT BCD loop on the dense path, straight-line.
+fn coot_reference(
+    xd: &Mat,
+    yd: &Mat,
+    cfg: &CootConfig,
+) -> (Mat, Mat, f64) {
+    let (n, d) = xd.shape();
+    let (n2, d2) = yd.shape();
+    let ws_n = vec![1.0 / n as f64; n];
+    let ws_n2 = vec![1.0 / n2 as f64; n2];
+    let wf_d = vec![1.0 / d as f64; d];
+    let wf_d2 = vec![1.0 / d2 as f64; d2];
+    let x2 = xd.hadamard(xd).unwrap();
+    let y2 = yd.hadamard(yd).unwrap();
+    let sk = |eps: f64| SinkhornOptions {
+        epsilon: eps,
+        max_iters: cfg.sinkhorn_max_iters,
+        tolerance: cfg.sinkhorn_tolerance,
+        check_every: 10,
+    };
+    let mut pi_f = outer(&wf_d, &wf_d2);
+    let mut pi_s = outer(&ws_n, &ws_n2);
+    for _ in 0..cfg.outer_iters {
+        let rf = pi_f.row_sums();
+        let cf = pi_f.col_sums();
+        let ax = matvec(&x2, &rf).unwrap();
+        let by = matvec(&y2, &cf).unwrap();
+        let cross = matmul(&matmul(xd, &pi_f).unwrap(), &yd.transpose()).unwrap();
+        let cost_s = Mat::from_fn(n, n2, |i, kx| ax[i] + by[kx] - 2.0 * cross[(i, kx)]);
+        pi_s = sinkhorn::solve(&cost_s, &ws_n, &ws_n2, &sk(cfg.epsilon_samples))
+            .unwrap()
+            .plan;
+        let rs = pi_s.row_sums();
+        let cs = pi_s.col_sums();
+        let axf = matvec_t(&x2, &rs).unwrap();
+        let byf = matvec_t(&y2, &cs).unwrap();
+        let crossf = matmul(&matmul(&xd.transpose(), &pi_s).unwrap(), yd).unwrap();
+        let cost_f = Mat::from_fn(d, d2, |j, l| axf[j] + byf[l] - 2.0 * crossf[(j, l)]);
+        pi_f = sinkhorn::solve(&cost_f, &wf_d, &wf_d2, &sk(cfg.epsilon_features))
+            .unwrap()
+            .plan;
+    }
+    let rf = pi_f.row_sums();
+    let cf = pi_f.col_sums();
+    let ax = matvec(&x2, &rf).unwrap();
+    let by = matvec(&y2, &cf).unwrap();
+    let cross = matmul(&matmul(xd, &pi_f).unwrap(), &yd.transpose()).unwrap();
+    let mut obj = 0.0;
+    for i in 0..n {
+        for kx in 0..n2 {
+            obj += pi_s[(i, kx)] * (ax[i] + by[kx] - 2.0 * cross[(i, kx)]);
+        }
+    }
+    (pi_s, pi_f, obj)
+}
+
+#[test]
+fn coot_driver_is_bit_for_bit_on_dense_path() {
+    let mut rng = Rng::seeded(0xBE05);
+    let xd = Mat::from_fn(9, 6, |_, _| rng.uniform());
+    let yd = Mat::from_fn(7, 8, |_, _| rng.uniform());
+    let cfg = CootConfig {
+        outer_iters: 4,
+        ..CootConfig::default()
+    };
+    let (ref_s, ref_f, ref_obj) = coot_reference(&xd, &yd, &cfg);
+    let sol = coot(
+        &CootData::Dense(xd),
+        &CootData::Dense(yd),
+        &cfg,
+        GradientKind::Naive,
+    )
+    .unwrap();
+    assert_eq!(sol.sample_plan.as_slice(), ref_s.as_slice(), "πˢ drifted");
+    assert_eq!(sol.feature_plan.as_slice(), ref_f.as_slice(), "πᶠ drifted");
+    assert_eq!(sol.objective, ref_obj, "objective drifted");
+}
+
+/// The historical barycenter loop: fresh solver + fresh workspace per
+/// (outer update, input) — no operator rebinding, no buffer reuse.
+fn barycenter_reference(
+    inputs: &[BaryInput1d],
+    support_n: usize,
+    cfg: &BarycenterConfig,
+) -> Mat {
+    let lambda_sum: f64 = inputs.iter().map(|i| i.lambda).sum();
+    let p = vec![1.0 / support_n as f64; support_n];
+    let mut d = dense_dist_1d(&Grid1d::unit(support_n), inputs[0].k);
+    for _ in 0..cfg.iters {
+        let mut d_next = Mat::zeros(support_n, support_n);
+        for inp in inputs {
+            let solver = EntropicGw::new(
+                Geometry::Dense(d.clone()),
+                Geometry::grid_1d_unit(inp.n, inp.k),
+                cfg.gw,
+            );
+            let sol = solver.solve(&p, &inp.weights, GradientKind::Naive).unwrap();
+            let gamma = sol.plan;
+            let ds = dense_dist_1d(&Grid1d::unit(inp.n), inp.k);
+            let a = matmul(&gamma, &ds).unwrap();
+            let update = matmul(&a, &gamma.transpose()).unwrap();
+            d_next.add_scaled(inp.lambda / lambda_sum, &update).unwrap();
+        }
+        for i in 0..support_n {
+            for j in 0..support_n {
+                d_next[(i, j)] /= p[i] * p[j];
+            }
+        }
+        d = d_next;
+    }
+    d
+}
+
+#[test]
+fn barycenter_workspace_reuse_is_bit_for_bit_on_naive_path() {
+    let mut rng = Rng::seeded(0xBE06);
+    let inputs: Vec<BaryInput1d> = (0..2)
+        .map(|i| {
+            let n = 9 + i;
+            let mut w: Vec<f64> = (0..n).map(|_| 0.1 + rng.uniform()).collect();
+            normalize_l1(&mut w).unwrap();
+            BaryInput1d {
+                weights: w,
+                n,
+                k: 1,
+                lambda: 1.0,
+            }
+        })
+        .collect();
+    let cfg = BarycenterConfig {
+        gw: GwConfig {
+            epsilon: 0.01,
+            outer_iters: 3,
+            sinkhorn_max_iters: 200,
+            sinkhorn_tolerance: 1e-8,
+            sinkhorn_check_every: 10,
+            threads: 1,
+        },
+        iters: 3,
+    };
+    let reference = barycenter_reference(&inputs, 8, &cfg);
+    let res = gw_barycenter_1d(&inputs, 8, &cfg, GradientKind::Naive).unwrap();
+    assert_eq!(
+        res.distance.as_slice(),
+        reference.as_slice(),
+        "barycenter distance drifted"
+    );
+}
+
+/// COOT backends agree on grid data (and the grid path matches the
+/// dense path) at both thread budgets.
+#[test]
+fn prop_coot_backends_agree() {
+    check_prop(
+        "coot-backend-agreement",
+        3,
+        0xBE07,
+        |rng| {
+            let n = 8 + rng.below(6) as usize;
+            let n2 = 8 + rng.below(6) as usize;
+            (n, n2)
+        },
+        |(n, n2)| {
+            let x = CootData::GridDist1d {
+                grid: Grid1d::unit(*n),
+                k: 1,
+            };
+            let y = CootData::GridDist1d {
+                grid: Grid1d::unit(*n2),
+                k: 1,
+            };
+            let cfg = |threads: usize| CootConfig {
+                outer_iters: 3,
+                threads,
+                ..CootConfig::default()
+            };
+            let baseline = coot(
+                &CootData::Dense(x.dense()),
+                &CootData::Dense(y.dense()),
+                &cfg(1),
+                GradientKind::Naive,
+            )
+            .map_err(|e| e.to_string())?;
+            for kind in ALL_KINDS {
+                for threads in THREADS {
+                    let sol = coot(&x, &y, &cfg(threads), kind).map_err(|e| e.to_string())?;
+                    let ds = frobenius_diff(&sol.sample_plan, &baseline.sample_plan).unwrap();
+                    let df = frobenius_diff(&sol.feature_plan, &baseline.feature_plan).unwrap();
+                    if ds > 1e-6 || df > 1e-6 {
+                        return Err(format!(
+                            "{kind} threads={threads}: ds={ds:.2e} df={df:.2e}"
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}

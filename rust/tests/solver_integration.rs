@@ -168,6 +168,7 @@ fn ugw_2d_backend_agreement() {
             outer_iters: 4,
             inner_max_iters: 800,
             inner_tolerance: 1e-11,
+            threads: 1,
         },
     );
     let a = solver.solve(&u, &v, GradientKind::Fgc).unwrap();
