@@ -94,6 +94,7 @@ fn main() {
             sinkhorn_max_iters: 100,
             sinkhorn_tolerance: 1e-9,
             submit_timeout: Duration::from_secs(5),
+            ..CoordinatorConfig::default()
         })
         .unwrap();
         let mut rng = Rng::seeded(11);

@@ -9,17 +9,26 @@
 //! Emits `BENCH_hotpath.json` so later PRs have a perf trajectory to
 //! regress against (see EXPERIMENTS.md §Perf, §Backend selection).
 //!
+//! A third section times the **batched apply** (`apply_batch`, B plans
+//! through one operator — the coordinator's same-variant path and the
+//! barycenter's grouped couplings) against B sequential applies for
+//! each backend, asserting bit-equality before timing
+//! (`batch_results` in the JSON).
+//!
 //! ```bash
 //! cargo bench --bench hotpath [-- --quick --threads 4 \
-//!     --sizes 256,1024,4096 --dense-sizes 256,512 --out ../BENCH_hotpath.json]
+//!     --sizes 256,1024,4096 --dense-sizes 256,512 --batch 8 \
+//!     --batch-n 512 --out ../BENCH_hotpath.json]
 //! ```
 
 use fgc_gw::bench_util::{fmt_secs, time_mean, TableWriter};
 use fgc_gw::cli::Args;
 use fgc_gw::data::random_distribution;
 use fgc_gw::grid::{dense_dist_1d, Grid1d};
-use fgc_gw::gw::{EntropicGw, Geometry, GradientKind, GwConfig, LowRankBackend};
-use fgc_gw::linalg::frobenius_diff;
+use fgc_gw::gw::{
+    backend, EntropicGw, Geometry, GradientBackend, GradientKind, GwConfig, LowRankBackend,
+};
+use fgc_gw::linalg::{frobenius_diff, Mat};
 use fgc_gw::parallel::Parallelism;
 use fgc_gw::prng::Rng;
 
@@ -52,6 +61,14 @@ struct DenseRow {
     lowrank_build_s: f64,
     rank: usize,
     plan_diff: f64,
+}
+
+struct BatchRow {
+    backend: &'static str,
+    n: usize,
+    b: usize,
+    seq_s: f64,
+    batch_s: f64,
 }
 
 fn main() {
@@ -173,7 +190,81 @@ fn main() {
     }
     println!("{}", dense_table.render());
 
-    let json = render_json(threads, quick, reps, &rows, &dense_rows);
+    // --- batched apply: B plans through one operator -------------------
+    let batch_b = args.get_or("batch", 8usize).unwrap().max(2);
+    let batch_n = args.get_or("batch-n", if quick { 256usize } else { 512 }).unwrap();
+    let mut batch_table = TableWriter::new(
+        &format!("hotpath: apply_batch vs {batch_b} sequential applies (serial)"),
+        &["backend", "N", "B", "seq (s)", "batch (s)", "speedup"],
+    );
+    let mut batch_rows = Vec::new();
+    let cases: [(&'static str, GradientKind, Geometry); 3] = [
+        (
+            "fgc",
+            GradientKind::Fgc,
+            Geometry::grid_1d_unit(batch_n, 1),
+        ),
+        (
+            "naive",
+            GradientKind::Naive,
+            Geometry::grid_1d_unit(batch_n, 1),
+        ),
+        (
+            "lowrank",
+            GradientKind::LowRank,
+            Geometry::Dense(dense_dist_1d(&Grid1d::unit(batch_n), 2)),
+        ),
+    ];
+    for (name, kind, geom) in cases {
+        let mut be = backend::instantiate(kind, geom.clone(), geom.clone(), Parallelism::SERIAL)
+            .unwrap();
+        let mut rng = Rng::seeded(77);
+        let plans: Vec<Mat> = (0..batch_b)
+            .map(|_| Mat::from_fn(batch_n, batch_n, |_, _| rng.uniform()))
+            .collect();
+        let refs: Vec<&Mat> = plans.iter().collect();
+        let mut seq_out: Vec<Mat> = (0..batch_b)
+            .map(|_| Mat::zeros(batch_n, batch_n))
+            .collect();
+        let mut batch_out: Vec<Mat> = (0..batch_b)
+            .map(|_| Mat::zeros(batch_n, batch_n))
+            .collect();
+        // Correctness gate: the batch must be bit-for-bit sequential.
+        for (g, o) in plans.iter().zip(seq_out.iter_mut()) {
+            be.apply(g, o).unwrap();
+        }
+        be.apply_batch(&refs, &mut batch_out).unwrap();
+        for (s, b) in seq_out.iter().zip(&batch_out) {
+            assert_eq!(s.as_slice(), b.as_slice(), "{name}: batched apply diverged");
+        }
+        let ts = time_mean(1, reps, || {
+            for (g, o) in plans.iter().zip(seq_out.iter_mut()) {
+                be.apply(g, o).unwrap();
+            }
+        });
+        let tb = time_mean(1, reps, || {
+            be.apply_batch(&refs, &mut batch_out).unwrap();
+        });
+        let (seq_s, batch_s) = (ts.as_secs_f64(), tb.as_secs_f64());
+        batch_table.row(&[
+            name.to_string(),
+            batch_n.to_string(),
+            batch_b.to_string(),
+            fmt_secs(ts),
+            fmt_secs(tb),
+            format!("{:.2}×", seq_s / batch_s),
+        ]);
+        batch_rows.push(BatchRow {
+            backend: name,
+            n: batch_n,
+            b: batch_b,
+            seq_s,
+            batch_s,
+        });
+    }
+    println!("{}", batch_table.render());
+
+    let json = render_json(threads, quick, reps, &rows, &dense_rows, &batch_rows);
     std::fs::write(&out_path, &json).unwrap();
     println!("wrote {out_path}");
 }
@@ -184,6 +275,7 @@ fn render_json(
     reps: usize,
     rows: &[Row],
     dense_rows: &[DenseRow],
+    batch_rows: &[BatchRow],
 ) -> String {
     let mut s = String::new();
     s.push_str("{\n");
@@ -220,6 +312,20 @@ fn render_json(
             r.rank,
             r.plan_diff,
             if i + 1 == dense_rows.len() { "" } else { "," }
+        ));
+    }
+    s.push_str("  ],\n");
+    s.push_str("  \"batch_results\": [\n");
+    for (i, r) in batch_rows.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"backend\": \"{}\", \"n\": {}, \"b\": {}, \"seq_s\": {:.6e}, \"batch_s\": {:.6e}, \"speedup\": {:.3}}}{}\n",
+            r.backend,
+            r.n,
+            r.b,
+            r.seq_s,
+            r.batch_s,
+            r.seq_s / r.batch_s,
+            if i + 1 == batch_rows.len() { "" } else { "," }
         ));
     }
     s.push_str("  ]\n}\n");

@@ -66,6 +66,7 @@ fn main() -> fgc_gw::Result<()> {
         solver_threads: 1,
         batch_max: 8,
         submit_timeout: Duration::from_secs(5),
+        ..CoordinatorConfig::default()
     })?;
     let t0 = std::time::Instant::now();
     let mut pairs = Vec::new();

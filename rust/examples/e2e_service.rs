@@ -38,6 +38,7 @@ fn main() -> fgc_gw::Result<()> {
         sinkhorn_tolerance: 1e-9,
         solver_threads: 1,
         submit_timeout: Duration::from_secs(5),
+        ..CoordinatorConfig::default()
     };
     println!("== e2e: starting coordinator (pjrt={enable_pjrt}) ==");
     let coord = Coordinator::start(cfg)?;

@@ -9,11 +9,15 @@
 //! queue_capacity = 64
 //! enable_pjrt = false
 //!
+//! [coordinator]
+//! shards = 0         # variant shards in the native queue (0 = auto)
+//!
 //! [solver]
 //! epsilon = 0.002
 //! outer_iters = 10
 //! threads = 1        # per-job kernel threads (0 = all cores)
 //! backend = auto     # auto | fgc | naive | lowrank (router override)
+//! lowrank_tol = 0    # ACA residual tolerance (0 = derive from ε)
 //! ```
 
 use crate::error::{Error, Result};

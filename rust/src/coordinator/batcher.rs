@@ -55,6 +55,28 @@ pub fn group_by_variant(mut jobs: Vec<JobRequest>) -> Vec<(VariantKey, Vec<JobRe
     groups
 }
 
+/// [`group_by_variant`] refined for *execution*: jobs also split on ε,
+/// because a group runs as one lockstep batch through a single solver
+/// configuration ([`crate::gw::EntropicGw::solve_batch_into`]) and ε
+/// is a solver knob, not part of the variant. FIFO order within each
+/// `(variant, ε)` group is preserved.
+pub fn group_for_execution(mut jobs: Vec<JobRequest>) -> Vec<(VariantKey, f64, Vec<JobRequest>)> {
+    let mut groups: Vec<(VariantKey, f64, Vec<JobRequest>)> = Vec::new();
+    for job in jobs.drain(..) {
+        let key = variant_key(&job);
+        let eps = job.payload.epsilon();
+        if let Some((_, _, bucket)) = groups
+            .iter_mut()
+            .find(|(k, e, _)| *k == key && e.to_bits() == eps.to_bits())
+        {
+            bucket.push(job);
+        } else {
+            groups.push((key, eps, vec![job]));
+        }
+    }
+    groups
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -101,5 +123,25 @@ mod tests {
             req(2, 8, BackendChoice::Pjrt("b".into())),
         ];
         assert_eq!(group_by_variant(jobs).len(), 2);
+    }
+
+    #[test]
+    fn execution_groups_split_on_epsilon() {
+        let mut jobs = vec![
+            req(1, 8, BackendChoice::NativeFgc),
+            req(2, 8, BackendChoice::NativeFgc),
+            req(3, 8, BackendChoice::NativeFgc),
+        ];
+        if let JobPayload::Gw1d { epsilon, .. } = &mut jobs[1].payload {
+            *epsilon = 0.05;
+        }
+        let groups = group_for_execution(jobs);
+        assert_eq!(groups.len(), 2);
+        assert_eq!(
+            groups[0].2.iter().map(|j| j.id).collect::<Vec<_>>(),
+            vec![1, 3]
+        );
+        assert_eq!(groups[1].1, 0.05);
+        assert_eq!(groups[1].2[0].id, 2);
     }
 }

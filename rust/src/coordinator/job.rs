@@ -83,6 +83,17 @@ impl JobPayload {
         !matches!(self, JobPayload::GwDense { .. })
     }
 
+    /// The job's entropic ε (a solver-config knob, so same-variant
+    /// jobs only share a warm workspace batch when it matches too).
+    pub fn epsilon(&self) -> f64 {
+        match self {
+            JobPayload::Gw1d { epsilon, .. }
+            | JobPayload::Fgw1d { epsilon, .. }
+            | JobPayload::Gw2d { epsilon, .. }
+            | JobPayload::GwDense { epsilon, .. } => *epsilon,
+        }
+    }
+
     /// Quick structural validation before enqueueing.
     pub fn validate(&self) -> Result<(), String> {
         let check_dist = |w: &[f64], name: &str| -> Result<(), String> {

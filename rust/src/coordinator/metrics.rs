@@ -19,6 +19,13 @@ pub struct ServiceMetrics {
     native_naive: AtomicU64,
     native_lowrank: AtomicU64,
     pjrt: AtomicU64,
+    /// Jobs served by an already-warm worker workspace (no operator
+    /// rebuild).
+    warm_hits: AtomicU64,
+    /// Jobs that forced a workspace build (cold variant or evicted).
+    warm_misses: AtomicU64,
+    /// Times a worker left its pinned shard to take another's work.
+    steals: AtomicU64,
     /// Completed-job latencies in microseconds (queue + solve).
     latencies_us: Mutex<Vec<u64>>,
     solve_us_total: AtomicU64,
@@ -39,6 +46,23 @@ impl ServiceMetrics {
     /// Record a rejection (validation, backpressure, shutdown).
     pub fn on_reject(&self) {
         self.rejected.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record warm-workspace accounting for one executed group:
+    /// `hits` jobs ran on an already-built operator, `misses` forced
+    /// a build.
+    pub fn on_warm(&self, hits: u64, misses: u64) {
+        if hits > 0 {
+            self.warm_hits.fetch_add(hits, Ordering::Relaxed);
+        }
+        if misses > 0 {
+            self.warm_misses.fetch_add(misses, Ordering::Relaxed);
+        }
+    }
+
+    /// Record a work-steal (a worker moved off its pinned shard).
+    pub fn on_steal(&self) {
+        self.steals.fetch_add(1, Ordering::Relaxed);
     }
 
     /// Record a completion for the backend that ran the job.
@@ -82,6 +106,10 @@ impl ServiceMetrics {
             native_naive: self.native_naive.load(Ordering::Relaxed),
             native_lowrank: self.native_lowrank.load(Ordering::Relaxed),
             pjrt: self.pjrt.load(Ordering::Relaxed),
+            warm_hits: self.warm_hits.load(Ordering::Relaxed),
+            warm_misses: self.warm_misses.load(Ordering::Relaxed),
+            steals: self.steals.load(Ordering::Relaxed),
+            shard_depths: Vec::new(),
             p50: pct(0.50),
             p90: pct(0.90),
             p99: pct(0.99),
@@ -116,6 +144,16 @@ pub struct MetricsSnapshot {
     pub native_lowrank: u64,
     /// PJRT completions.
     pub pjrt: u64,
+    /// Jobs served by an already-warm worker workspace.
+    pub warm_hits: u64,
+    /// Jobs that forced a workspace build.
+    pub warm_misses: u64,
+    /// Work-steal events across the worker pool.
+    pub steals: u64,
+    /// Per-shard queue depth at snapshot time (filled by
+    /// [`super::Coordinator::metrics`]; empty from a bare
+    /// [`ServiceMetrics::snapshot`], which has no queue handle).
+    pub shard_depths: Vec<usize>,
     /// Median end-to-end latency.
     pub p50: Duration,
     /// 90th percentile latency.
@@ -126,6 +164,19 @@ pub struct MetricsSnapshot {
     pub mean_queue: Duration,
     /// Mean solve time.
     pub mean_solve: Duration,
+}
+
+impl MetricsSnapshot {
+    /// Fraction of executed jobs that hit an already-warm workspace
+    /// (`NaN`-free: 0 when nothing has executed yet).
+    pub fn warm_hit_rate(&self) -> f64 {
+        let total = self.warm_hits + self.warm_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.warm_hits as f64 / total as f64
+        }
+    }
 }
 
 impl std::fmt::Display for MetricsSnapshot {
@@ -139,6 +190,15 @@ impl std::fmt::Display for MetricsSnapshot {
             f,
             "backends: native-fgc={} native-naive={} native-lowrank={} pjrt={}",
             self.native_fgc, self.native_naive, self.native_lowrank, self.pjrt
+        )?;
+        writeln!(
+            f,
+            "sharding: warm-hits={} warm-misses={} (rate {:.1}%) steals={} depths={:?}",
+            self.warm_hits,
+            self.warm_misses,
+            100.0 * self.warm_hit_rate(),
+            self.steals,
+            self.shard_depths
         )?;
         write!(
             f,
@@ -203,6 +263,21 @@ mod tests {
         let s = m.snapshot();
         assert_eq!(s.p99, Duration::ZERO);
         assert_eq!(s.completed, 0);
+        assert_eq!(s.warm_hit_rate(), 0.0);
+    }
+
+    #[test]
+    fn warm_and_steal_counters() {
+        let m = ServiceMetrics::new();
+        m.on_warm(7, 1);
+        m.on_warm(2, 0);
+        m.on_steal();
+        let s = m.snapshot();
+        assert_eq!((s.warm_hits, s.warm_misses, s.steals), (9, 1, 1));
+        assert!((s.warm_hit_rate() - 0.9).abs() < 1e-12);
+        let text = s.to_string();
+        assert!(text.contains("warm-hits=9"), "{text}");
+        assert!(text.contains("steals=1"), "{text}");
     }
 
     #[test]

@@ -9,9 +9,13 @@
 //! latency/throughput metrics.
 //!
 //! Threading model (no async runtime in the offline crate set — and
-//! none needed: jobs are CPU-bound): a bounded MPMC queue feeds
-//! `native_workers` compute threads, plus one dedicated PJRT thread
-//! that owns the (non-`Sync`) `Executor` when artifacts are enabled.
+//! none needed: jobs are CPU-bound): a variant-sharded bounded queue
+//! ([`ShardedQueue`]) feeds `native_workers` compute threads — each
+//! pinned to a shard while it has work, each owning a small LRU of
+//! warm batched solver workspaces keyed by variant, stealing from the
+//! longest shard when its own runs dry — plus one dedicated PJRT
+//! thread (fed by a plain [`BoundedQueue`]) that owns the non-`Sync`
+//! `Executor` when artifacts are enabled.
 
 mod batcher;
 mod job;
@@ -19,10 +23,12 @@ mod metrics;
 mod queue;
 mod router;
 mod service;
+mod shard;
 
-pub use batcher::{group_by_variant, VariantKey};
+pub use batcher::{group_by_variant, group_for_execution, VariantKey};
 pub use job::{BackendChoice, JobId, JobPayload, JobRequest, JobResult};
 pub use metrics::{MetricsSnapshot, ServiceMetrics};
 pub use queue::BoundedQueue;
 pub use router::{Router, RoutingPolicy};
 pub use service::{Coordinator, CoordinatorConfig};
+pub use shard::{shard_for, PoppedBatch, ShardedQueue};

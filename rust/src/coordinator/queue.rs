@@ -1,5 +1,11 @@
 //! Bounded MPMC queue with backpressure (Mutex + Condvar; the offline
 //! crate set has no crossbeam/tokio).
+//!
+//! Since the coordinator moved its native path onto the
+//! variant-sharded [`super::ShardedQueue`], this single-lane queue
+//! feeds only the dedicated PJRT worker (one consumer, artifact-shaped
+//! jobs — sharding has nothing to pin there) and remains the generic
+//! bounded-queue building block for tests and tools.
 
 use crate::error::{Error, Result};
 use std::collections::VecDeque;

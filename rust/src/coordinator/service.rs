@@ -1,13 +1,26 @@
-//! The coordinator service: admission → routing → bounded queues →
-//! worker pool → results + metrics.
+//! The coordinator service: admission → routing → variant-sharded
+//! queues → pinned warm workers → results + metrics.
+//!
+//! Native jobs hash by [`VariantKey`](super::VariantKey) to a shard of
+//! a [`ShardedQueue`]; each worker pins to a shard while it has work and
+//! owns a small LRU of warm [`GwBatchWorkspace`]s keyed by variant, so
+//! a same-variant burst is executed as lockstep batches over one
+//! already-built operator (zero rebuild — the warm-hit/steal counters
+//! in [`MetricsSnapshot`] make the effect observable). When a worker's
+//! shard runs dry it steals from the longest shard, so tail latency
+//! does not regress under a skewed variant mix.
 
-use super::batcher::group_by_variant;
+use super::batcher::{group_for_execution, variant_key};
 use super::job::{BackendChoice, JobId, JobPayload, JobRequest, JobResult};
 use super::metrics::{MetricsSnapshot, ServiceMetrics};
 use super::queue::BoundedQueue;
 use super::router::{Router, RoutingPolicy};
+use super::shard::{shard_for, ShardedQueue};
 use crate::error::{Error, Result};
-use crate::gw::{EntropicGw, Geometry, GwConfig};
+use crate::gw::{
+    BatchJob, EntropicGw, Geometry, GradientKind, GwBatchWorkspace, GwConfig, LowRankOptions,
+};
+use crate::linalg::Mat;
 use crate::runtime::{ArtifactRegistry, Executor};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -15,14 +28,36 @@ use std::sync::{mpsc, Arc};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
+/// Per-worker warm-workspace LRU capacity. Each entry holds a bound
+/// gradient operator plus per-job solve buffers for one variant;
+/// four distinct warm variants per worker covers realistic mixes
+/// without unbounded memory growth.
+const WARM_CACHE_CAP: usize = 4;
+
+/// Consecutive same-shard batches a worker serves before it must
+/// rotate to the longest *other* non-empty shard. Bounds cross-shard
+/// wait under a sustained hot variant (a worker cannot starve other
+/// shards for more than this many batches) while keeping the warm-hit
+/// rate high — a rotation is at most one cold batch per streak.
+const PIN_STREAK_MAX: usize = 4;
+
 /// Service configuration.
 #[derive(Clone, Debug)]
 pub struct CoordinatorConfig {
     /// Native compute threads.
     pub native_workers: usize,
-    /// Bounded queue capacity (admission backpressure threshold).
+    /// Variant shards in the native queue (`0` = auto: twice the
+    /// worker count, capped at 16). Config key `coordinator.shards`,
+    /// CLI `--shards`.
+    pub shards: usize,
+    /// Global admission budget of the native queue (jobs) — the
+    /// overall backpressure threshold. Each shard additionally holds
+    /// at most `ceil(queue_capacity / shards)` jobs, so one hot
+    /// variant cannot exhaust the whole budget and starve admission
+    /// for every other variant.
     pub queue_capacity: usize,
-    /// Max jobs drained per batch.
+    /// Max jobs a worker drains from its shard per batch (also the
+    /// lockstep batch ceiling).
     pub batch_max: usize,
     /// Artifact directory (`manifest.txt` inside).
     pub artifacts_dir: PathBuf,
@@ -40,6 +75,10 @@ pub struct CoordinatorConfig {
     /// serial; `0` = all cores — use with `native_workers = 1` to
     /// avoid oversubscription, the budgets multiply).
     pub solver_threads: usize,
+    /// Low-rank factorization tolerance override (`0.0` = derive from
+    /// each job's ε; see `LowRankOptions::for_epsilon`). Config key
+    /// `solver.lowrank_tol`, CLI `--lowrank-tol`.
+    pub lowrank_tol: f64,
     /// How long `submit` may block under backpressure.
     pub submit_timeout: Duration,
 }
@@ -48,6 +87,7 @@ impl Default for CoordinatorConfig {
     fn default() -> Self {
         CoordinatorConfig {
             native_workers: 2,
+            shards: 0,
             queue_capacity: 64,
             batch_max: 8,
             artifacts_dir: PathBuf::from("artifacts"),
@@ -57,7 +97,19 @@ impl Default for CoordinatorConfig {
             sinkhorn_max_iters: 1000,
             sinkhorn_tolerance: 1e-9,
             solver_threads: 1,
+            lowrank_tol: 0.0,
             submit_timeout: Duration::from_millis(200),
+        }
+    }
+}
+
+impl CoordinatorConfig {
+    /// Resolve `shards = 0` to the auto default.
+    fn effective_shards(&self) -> usize {
+        if self.shards > 0 {
+            self.shards
+        } else {
+            (self.native_workers.max(1) * 2).clamp(1, 16)
         }
     }
 }
@@ -68,7 +120,8 @@ type Envelope = (JobRequest, mpsc::Sender<JobResult>);
 pub struct Coordinator {
     cfg: CoordinatorConfig,
     router: Router,
-    native_q: BoundedQueue<Envelope>,
+    native_q: ShardedQueue<Envelope>,
+    shard_count: usize,
     pjrt_q: Option<BoundedQueue<Envelope>>,
     metrics: Arc<ServiceMetrics>,
     workers: Vec<JoinHandle<()>>,
@@ -89,7 +142,10 @@ impl Coordinator {
             }
         };
         let router = Router::new(registry, effective_policy);
-        let native_q: BoundedQueue<Envelope> = BoundedQueue::new(cfg.queue_capacity);
+        let shard_count = cfg.effective_shards();
+        let per_shard = cfg.queue_capacity.div_ceil(shard_count).max(1);
+        let native_q: ShardedQueue<Envelope> =
+            ShardedQueue::new(shard_count, per_shard, cfg.queue_capacity);
         let metrics = Arc::new(ServiceMetrics::new());
         let mut workers = Vec::new();
 
@@ -126,6 +182,7 @@ impl Coordinator {
             cfg,
             router,
             native_q,
+            shard_count,
             pjrt_q,
             metrics,
             workers,
@@ -138,8 +195,14 @@ impl Coordinator {
         &self.router
     }
 
+    /// Shards in the native queue.
+    pub fn shards(&self) -> usize {
+        self.shard_count
+    }
+
     /// Submit a job; returns its id and the result channel. Rejects on
-    /// invalid payloads and on backpressure timeout.
+    /// invalid payloads and on backpressure timeout (per-shard or
+    /// global admission budget).
     pub fn submit(&self, payload: JobPayload) -> Result<(JobId, mpsc::Receiver<JobResult>)> {
         if let Err(msg) = payload.validate() {
             self.metrics.on_reject();
@@ -154,11 +217,15 @@ impl Coordinator {
             backend: backend.clone(),
             submitted_at: Instant::now(),
         };
-        let queue = match (&backend, &self.pjrt_q) {
-            (BackendChoice::Pjrt(_), Some(q)) => q,
-            _ => &self.native_q,
+        let pushed = match (&backend, &self.pjrt_q) {
+            (BackendChoice::Pjrt(_), Some(q)) => q.push_timeout((req, tx), self.cfg.submit_timeout),
+            _ => {
+                let shard = shard_for(&variant_key(&req), self.shard_count);
+                self.native_q
+                    .push_timeout(shard, (req, tx), self.cfg.submit_timeout)
+            }
         };
-        match queue.push_timeout((req, tx), self.cfg.submit_timeout) {
+        match pushed {
             Ok(()) => {
                 self.metrics.on_submit();
                 Ok((id, rx))
@@ -177,9 +244,11 @@ impl Coordinator {
             .map_err(|_| Error::Runtime("worker dropped result channel".into()))
     }
 
-    /// Current metrics.
+    /// Current metrics, including live per-shard queue depths.
     pub fn metrics(&self) -> MetricsSnapshot {
-        self.metrics.snapshot()
+        let mut snap = self.metrics.snapshot();
+        snap.shard_depths = self.native_q.depths();
+        snap
     }
 
     /// Graceful shutdown: close queues, join workers.
@@ -198,32 +267,160 @@ impl Coordinator {
 // Workers
 // ---------------------------------------------------------------------------
 
+/// Warm-workspace identity: jobs agreeing on all of this share a
+/// [`GwBatchWorkspace`] (for `dense`, geometry equality is verified
+/// against the cached operator as well — the key alone cannot prove
+/// two distance matrices equal).
+#[derive(Clone, Debug, PartialEq)]
+struct WsKey {
+    family: &'static str,
+    m: usize,
+    n: usize,
+    k: u32,
+    kind: GradientKind,
+    eps_bits: u64,
+}
+
+/// Per-worker LRU of warm batched workspaces (front = most recent).
+struct WarmCache {
+    entries: Vec<(WsKey, GwBatchWorkspace)>,
+}
+
+/// True iff a cached workspace's operator is bound to exactly the
+/// payload's geometry. Grid payloads are fully determined by the
+/// [`WsKey`]; dense payloads carry their matrices, compared here by
+/// reference (no clones on the warm path).
+fn geometry_matches(ws: &GwBatchWorkspace, payload: &JobPayload) -> bool {
+    match payload {
+        JobPayload::GwDense { dx, dy, .. } => {
+            matches!(ws.geom_x(), Geometry::Dense(d) if d == dx)
+                && matches!(ws.geom_y(), Geometry::Dense(d) if d == dy)
+        }
+        _ => true,
+    }
+}
+
+impl WarmCache {
+    fn new() -> Self {
+        WarmCache {
+            entries: Vec::new(),
+        }
+    }
+
+    /// Fetch the workspace for `key`, building one (the only path
+    /// that constructs a solver — and, for dense payloads, clones the
+    /// geometry) on a miss. Returns `(workspace, was_warm)`.
+    fn get_or_build(
+        &mut self,
+        key: &WsKey,
+        payload: &JobPayload,
+        cfg: &CoordinatorConfig,
+        kind: GradientKind,
+        batch: usize,
+    ) -> Result<(&mut GwBatchWorkspace, bool)> {
+        let pos = self
+            .entries
+            .iter()
+            .position(|(k, ws)| k == key && geometry_matches(ws, payload));
+        if let Some(pos) = pos {
+            let entry = self.entries.remove(pos);
+            self.entries.insert(0, entry);
+            let ws = &mut self.entries[0].1;
+            ws.ensure_capacity(batch);
+            return Ok((ws, true));
+        }
+        let solver = build_solver(payload, cfg);
+        let ws = solver.batch_workspace(kind, batch)?;
+        self.entries.insert(0, (key.clone(), ws));
+        self.entries.truncate(WARM_CACHE_CAP);
+        Ok((&mut self.entries[0].1, false))
+    }
+}
+
 fn native_worker_loop(
-    q: BoundedQueue<Envelope>,
+    q: ShardedQueue<Envelope>,
     metrics: Arc<ServiceMetrics>,
     cfg: CoordinatorConfig,
 ) {
-    while let Some(first) = q.pop() {
-        // Drain a batch and group by variant so same-shape jobs run
-        // back-to-back (warm caches/workspaces).
-        let mut batch = vec![first];
-        batch.extend(q.pop_batch(cfg.batch_max.saturating_sub(1)));
+    let mut pinned: Option<usize> = None;
+    let mut cache = WarmCache::new();
+    let mut streak = 0usize;
+    loop {
+        // After a bounded streak of same-shard batches, rotate to the
+        // longest other non-empty shard so a sustained hot variant
+        // cannot starve jobs queued elsewhere.
+        let rotate = streak >= PIN_STREAK_MAX;
+        let Some(batch) = q.pop_batch_pinned(&mut pinned, cfg.batch_max.max(1), rotate) else {
+            break;
+        };
+        if batch.stolen {
+            metrics.on_steal();
+            streak = 0;
+        } else {
+            streak = streak.saturating_add(1);
+        }
         let (reqs, txs): (Vec<JobRequest>, Vec<mpsc::Sender<JobResult>>) =
-            batch.into_iter().unzip();
+            batch.items.into_iter().unzip();
         let mut tx_by_id: std::collections::HashMap<JobId, mpsc::Sender<JobResult>> = reqs
             .iter()
             .map(|r| r.id)
             .zip(txs)
             .collect();
-        for (_variant, jobs) in group_by_variant(reqs) {
-            for req in jobs {
-                let tx = tx_by_id.remove(&req.id).expect("sender registered");
-                let result = execute_native(&req, &cfg);
-                report(&metrics, &result);
-                let _ = tx.send(result);
+        // A shard is keyed by variant hash, so a popped batch is
+        // overwhelmingly one variant already; the grouping both
+        // handles hash collisions and splits on ε (a solver knob).
+        for (_variant, _eps, group) in group_for_execution(reqs) {
+            for sub in split_same_geometry(group) {
+                let results = execute_group(&sub, &cfg, &mut cache, &metrics);
+                for result in results {
+                    let tx = tx_by_id.remove(&result.id).expect("sender registered");
+                    report(&metrics, &result);
+                    let _ = tx.send(result);
+                }
             }
         }
     }
+}
+
+/// Both sides' support sizes for a payload (the geometry shape a
+/// batch must agree on).
+fn payload_dims(p: &JobPayload) -> (usize, usize) {
+    match p {
+        JobPayload::Gw1d { u, v, .. }
+        | JobPayload::Fgw1d { u, v, .. }
+        | JobPayload::GwDense { u, v, .. } => (u.len(), v.len()),
+        JobPayload::Gw2d { n, .. } => (n * n, n * n),
+    }
+}
+
+/// An execution group must further split into runs that truly share
+/// one operator: equal `(M, N)` shapes (the variant key only carries
+/// the source-side size — FGW pairs may differ on the target side)
+/// and, for dense payloads, *equal* distance matrices (the geometry
+/// travels in the payload).
+fn split_same_geometry(jobs: Vec<JobRequest>) -> Vec<Vec<JobRequest>> {
+    let mut out: Vec<Vec<JobRequest>> = Vec::new();
+    for job in jobs {
+        let pos = out.iter().position(|bucket| {
+            let head = &bucket[0];
+            if payload_dims(&head.payload) != payload_dims(&job.payload) {
+                return false;
+            }
+            match (&head.payload, &job.payload) {
+                (
+                    JobPayload::GwDense { dx: ax, dy: ay, .. },
+                    JobPayload::GwDense { dx: bx, dy: by, .. },
+                ) => ax == bx && ay == by,
+                (JobPayload::GwDense { .. }, _) | (_, JobPayload::GwDense { .. }) => false,
+                _ => true,
+            }
+        });
+        match pos {
+            Some(i) => out[i].push(job),
+            None => out.push(vec![job]),
+        }
+    }
+    out
 }
 
 fn pjrt_worker_loop(
@@ -282,55 +479,150 @@ fn report(metrics: &ServiceMetrics, result: &JobResult) {
     );
 }
 
-/// Run a job on the native solvers.
+/// The warm-cache identity of a payload — derived from the payload
+/// alone, so cache lookups never construct a solver (or clone dense
+/// geometries).
+fn ws_key(payload: &JobPayload, kind: GradientKind) -> WsKey {
+    let (family, m, n, k) = match payload {
+        JobPayload::Gw1d { u, v, k, .. } => ("grid1d", u.len(), v.len(), *k),
+        // FGW shares the GW geometry — the feature term is per job.
+        JobPayload::Fgw1d { u, v, k, .. } => ("grid1d", u.len(), v.len(), *k),
+        JobPayload::Gw2d { n, k, .. } => ("grid2d", n * n, n * n, *k),
+        JobPayload::GwDense { u, v, .. } => ("dense", u.len(), v.len(), 0),
+    };
+    WsKey {
+        family,
+        m,
+        n,
+        k,
+        kind,
+        eps_bits: payload.epsilon().to_bits(),
+    }
+}
+
+/// Build the solver for a payload (cache-miss path only: for dense
+/// payloads this clones the distance matrices into the geometry).
+fn build_solver(payload: &JobPayload, cfg: &CoordinatorConfig) -> EntropicGw {
+    let epsilon = payload.epsilon();
+    let solver = match payload {
+        JobPayload::Gw1d { u, v, k, .. } | JobPayload::Fgw1d { u, v, k, .. } => {
+            EntropicGw::grid_1d(u.len(), v.len(), *k, gw_cfg(cfg, epsilon))
+        }
+        JobPayload::Gw2d { n, k, .. } => EntropicGw::grid_2d(*n, *n, *k, gw_cfg(cfg, epsilon)),
+        JobPayload::GwDense { dx, dy, .. } => EntropicGw::new(
+            Geometry::Dense(dx.clone()),
+            Geometry::Dense(dy.clone()),
+            gw_cfg(cfg, epsilon),
+        ),
+    };
+    if cfg.lowrank_tol > 0.0 {
+        solver.with_lowrank_options(LowRankOptions {
+            tol: cfg.lowrank_tol,
+            max_rank: 0,
+        })
+    } else {
+        solver
+    }
+}
+
+/// A payload's per-job batch entry (marginals + optional FGW term).
+fn batch_job(payload: &JobPayload) -> BatchJob<'_> {
+    match payload {
+        JobPayload::Gw1d { u, v, .. }
+        | JobPayload::Gw2d { u, v, .. }
+        | JobPayload::GwDense { u, v, .. } => BatchJob::gw(u, v),
+        JobPayload::Fgw1d {
+            u,
+            v,
+            feature_cost,
+            theta,
+            ..
+        } => BatchJob {
+            u,
+            v,
+            feature_cost: Some(feature_cost),
+            theta: *theta,
+        },
+    }
+}
+
+/// Execute one same-variant same-ε same-geometry group as a lockstep
+/// batch over the worker's warm workspace. Results are bit-for-bit
+/// what independent per-job solves produce (the batch contract of
+/// [`EntropicGw::solve_batch_into`]).
+fn execute_group(
+    reqs: &[JobRequest],
+    cfg: &CoordinatorConfig,
+    cache: &mut WarmCache,
+    metrics: &ServiceMetrics,
+) -> Vec<JobResult> {
+    debug_assert!(!reqs.is_empty());
+    let queue_times: Vec<Duration> = reqs.iter().map(|r| r.submitted_at.elapsed()).collect();
+    let kind = reqs[0].backend.gradient_kind();
+    let started = Instant::now();
+    let solved: Result<Vec<(f64, Mat)>> = (|| {
+        let head = &reqs[0].payload;
+        let key = ws_key(head, kind);
+        let (ws, warm) = cache.get_or_build(&key, head, cfg, kind, reqs.len())?;
+        let b = reqs.len() as u64;
+        if warm {
+            metrics.on_warm(b, 0);
+        } else {
+            metrics.on_warm(b - 1, 1);
+        }
+        let jobs: Vec<BatchJob> = reqs.iter().map(|r| batch_job(&r.payload)).collect();
+        // Warm path: solve against the workspace's own bound geometry
+        // — no solver construction, no dense-geometry clones.
+        let sols = ws.solve_batch(&gw_cfg(cfg, head.epsilon()), &jobs)?;
+        Ok(sols.into_iter().map(|s| (s.objective, s.plan)).collect())
+    })();
+    // Lockstep wall time is shared; report the per-job mean so the
+    // latency accounting stays comparable with per-job execution.
+    let solve_each = started.elapsed() / reqs.len().max(1) as u32;
+    match solved {
+        Ok(list) => reqs
+            .iter()
+            .zip(queue_times)
+            .zip(list)
+            .map(|((req, queue_time), (objective, plan))| JobResult {
+                id: req.id,
+                objective: Ok(objective),
+                plan: Some(plan),
+                backend: req.backend.clone(),
+                queue_time,
+                solve_time: solve_each,
+            })
+            .collect(),
+        Err(e) => {
+            let msg = e.to_string();
+            reqs.iter()
+                .zip(queue_times)
+                .map(|(req, queue_time)| JobResult {
+                    id: req.id,
+                    objective: Err(msg.clone()),
+                    plan: None,
+                    backend: req.backend.clone(),
+                    queue_time,
+                    solve_time: solve_each,
+                })
+                .collect()
+        }
+    }
+}
+
+/// Run a single job on the native solvers (the PJRT worker's fallback
+/// path — the sharded native workers run [`execute_group`] instead).
 fn execute_native(req: &JobRequest, cfg: &CoordinatorConfig) -> JobResult {
     let queue_time = req.submitted_at.elapsed();
     let kind = req.backend.gradient_kind();
     let started = Instant::now();
     let solved: Result<(crate::linalg::Mat, f64)> = (|| {
-        match &req.payload {
-            JobPayload::Gw1d { u, v, k, epsilon } => {
-                let solver = EntropicGw::grid_1d(u.len(), v.len(), *k, gw_cfg(cfg, *epsilon));
-                let sol = solver.solve(u, v, kind)?;
-                Ok((sol.plan, sol.objective))
-            }
-            JobPayload::Fgw1d {
-                u,
-                v,
-                feature_cost,
-                theta,
-                k,
-                epsilon,
-            } => {
-                let solver = EntropicGw::grid_1d(u.len(), v.len(), *k, gw_cfg(cfg, *epsilon));
-                let sol = solver.solve_fgw(u, v, feature_cost, *theta, kind)?;
-                Ok((sol.plan, sol.objective))
-            }
-            JobPayload::Gw2d { n, u, v, k, epsilon } => {
-                let solver = EntropicGw::new(
-                    Geometry::grid_2d_unit(*n, *k),
-                    Geometry::grid_2d_unit(*n, *k),
-                    gw_cfg(cfg, *epsilon),
-                );
-                let sol = solver.solve(u, v, kind)?;
-                Ok((sol.plan, sol.objective))
-            }
-            JobPayload::GwDense {
-                dx,
-                dy,
-                u,
-                v,
-                epsilon,
-            } => {
-                let solver = EntropicGw::new(
-                    Geometry::Dense(dx.clone()),
-                    Geometry::Dense(dy.clone()),
-                    gw_cfg(cfg, *epsilon),
-                );
-                let sol = solver.solve(u, v, kind)?;
-                Ok((sol.plan, sol.objective))
-            }
-        }
+        let solver = build_solver(&req.payload, cfg);
+        let job = batch_job(&req.payload);
+        let mut ws = solver.batch_workspace(kind, 1)?;
+        let mut sols = solver.solve_batch_into(&[job], &mut ws)?;
+        let sol = sols.pop().expect("one job in, one solution out");
+        Ok((sol.plan, sol.objective))
     })();
     let solve_time = started.elapsed();
     match solved {
@@ -410,6 +702,7 @@ mod tests {
     fn test_cfg() -> CoordinatorConfig {
         CoordinatorConfig {
             native_workers: 2,
+            shards: 4,
             queue_capacity: 16,
             batch_max: 4,
             artifacts_dir: PathBuf::from("/nonexistent"),
@@ -419,6 +712,7 @@ mod tests {
             sinkhorn_max_iters: 300,
             sinkhorn_tolerance: 1e-8,
             solver_threads: 2,
+            lowrank_tol: 0.0,
             submit_timeout: Duration::from_millis(100),
         }
     }
@@ -442,6 +736,8 @@ mod tests {
         assert_eq!(res.backend, BackendChoice::NativeFgc);
         let snap = coord.metrics();
         assert_eq!(snap.completed, 1);
+        assert_eq!(snap.shard_depths.len(), 4);
+        assert_eq!(snap.warm_hits + snap.warm_misses, 1);
         coord.shutdown();
     }
 
@@ -479,6 +775,64 @@ mod tests {
         let (_, rx) = coord.submit(gw_payload(16, 9)).unwrap();
         coord.shutdown(); // workers drain before exiting
         assert!(rx.recv().unwrap().objective.is_ok());
+    }
+
+    #[test]
+    fn auto_shards_follow_worker_count() {
+        let mut cfg = test_cfg();
+        cfg.shards = 0;
+        cfg.native_workers = 3;
+        let coord = Coordinator::start(cfg).unwrap();
+        assert_eq!(coord.shards(), 6);
+        assert_eq!(coord.metrics().shard_depths.len(), 6);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn same_variant_burst_is_mostly_warm() {
+        // One worker, one variant: the first job builds the workspace,
+        // everything after must hit it (the acceptance bar is ≥ 90%).
+        let mut cfg = test_cfg();
+        cfg.native_workers = 1;
+        cfg.queue_capacity = 64;
+        cfg.submit_timeout = Duration::from_secs(10);
+        let coord = Coordinator::start(cfg).unwrap();
+        let jobs = 24;
+        let rxs: Vec<_> = (0..jobs)
+            .map(|i| coord.submit(gw_payload(18, 500 + i as u64)).unwrap().1)
+            .collect();
+        for rx in rxs {
+            assert!(rx.recv().unwrap().objective.is_ok());
+        }
+        let snap = coord.metrics();
+        assert_eq!(snap.completed, jobs as u64);
+        assert_eq!(snap.warm_hits + snap.warm_misses, jobs as u64);
+        assert_eq!(snap.warm_misses, 1, "one build, then warm: {snap}");
+        assert!(
+            snap.warm_hit_rate() >= 0.9,
+            "warm-hit rate {:.2} below bar\n{snap}",
+            snap.warm_hit_rate()
+        );
+        coord.shutdown();
+    }
+
+    #[test]
+    fn batched_execution_matches_individual_results() {
+        // The same job submitted twice (batched on one worker) and
+        // once alone must produce identical objectives.
+        let mut cfg = test_cfg();
+        cfg.native_workers = 1;
+        let coord = Coordinator::start(cfg).unwrap();
+        let payload = gw_payload(16, 77);
+        let a = coord.submit_and_wait(payload.clone()).unwrap();
+        let rx1 = coord.submit(payload.clone()).unwrap().1;
+        let rx2 = coord.submit(payload.clone()).unwrap().1;
+        let b = rx1.recv().unwrap();
+        let c = rx2.recv().unwrap();
+        let oa = a.objective.unwrap();
+        assert_eq!(oa, b.objective.unwrap());
+        assert_eq!(oa, c.objective.unwrap());
+        coord.shutdown();
     }
 
     #[test]
@@ -522,5 +876,31 @@ mod tests {
         let res = coord.submit_and_wait(gw_payload(10, 3)).unwrap();
         assert_eq!(res.backend, BackendChoice::NativeNaive);
         coord.shutdown();
+    }
+
+    #[test]
+    fn split_same_geometry_partitions_dense_by_matrix() {
+        let mk = |scale: f64, id: u64| {
+            let d = Mat::from_fn(4, 4, |i, j| scale * ((i as f64) - (j as f64)).abs());
+            JobRequest {
+                id,
+                payload: JobPayload::GwDense {
+                    dx: d.clone(),
+                    dy: d,
+                    u: vec![0.25; 4],
+                    v: vec![0.25; 4],
+                    epsilon: 0.05,
+                },
+                backend: BackendChoice::NativeNaive,
+                submitted_at: Instant::now(),
+            }
+        };
+        let groups = split_same_geometry(vec![mk(1.0, 1), mk(2.0, 2), mk(1.0, 3)]);
+        assert_eq!(groups.len(), 2);
+        assert_eq!(
+            groups[0].iter().map(|j| j.id).collect::<Vec<_>>(),
+            vec![1, 3]
+        );
+        assert_eq!(groups[1][0].id, 2);
     }
 }

@@ -1,0 +1,516 @@
+//! Variant-sharded job queue with pinned workers and work stealing.
+//!
+//! The pre-shard coordinator drained one shared [`super::BoundedQueue`]
+//! and re-grouped each drain by [`VariantKey`], so a worker's warm
+//! workspaces were only as good as the variant mix of its last drain.
+//! [`ShardedQueue`] moves the grouping *into the queue layer*: jobs
+//! hash by variant to a fixed shard, FIFO order holds within each
+//! shard, and a worker stays **pinned** to one shard while it has work
+//! — so consecutive pops are overwhelmingly same-variant and hit the
+//! worker's warm workspace cache. When a worker's shard runs dry it
+//! *steals* from the longest shard and re-pins there, and after a
+//! bounded streak of same-shard batches it *rotates* to the longest
+//! other non-empty shard (the `rotate` flag on
+//! [`ShardedQueue::pop_batch_pinned`]) — so a skewed variant mix
+//! neither idles the pool nor starves the other shards' jobs.
+//!
+//! Admission enforces two budgets:
+//! * **per-shard capacity** — one hot variant cannot monopolize the
+//!   queue memory of every other variant;
+//! * **global budget** — the total number of queued jobs across all
+//!   shards, the service's overall backpressure threshold.
+
+use super::batcher::VariantKey;
+use crate::error::{Error, Result};
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+/// Stable FNV-1a shard assignment for a variant key. Deterministic
+/// across processes (unlike `DefaultHasher`'s randomized SipHash), so
+/// shard placement is reproducible in tests and across restarts.
+pub fn shard_for(key: &VariantKey, shards: usize) -> usize {
+    debug_assert!(shards > 0);
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    let mut eat = |bytes: &[u8]| {
+        for &b in bytes {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    };
+    eat(key.backend.as_bytes());
+    eat(key.family.as_bytes());
+    eat(&(key.points as u64).to_le_bytes());
+    eat(&key.k.to_le_bytes());
+    (h % shards as u64) as usize
+}
+
+/// One batch popped from the queue: all items come from a single
+/// shard (FIFO), so they are overwhelmingly one variant.
+#[derive(Debug)]
+pub struct PoppedBatch<T> {
+    /// Shard the items came from.
+    pub shard: usize,
+    /// True iff the worker left its pinned shard to take this batch.
+    pub stolen: bool,
+    /// The items, in shard-FIFO order.
+    pub items: Vec<T>,
+}
+
+struct State<T> {
+    shards: Vec<VecDeque<T>>,
+    total: usize,
+    closed: bool,
+}
+
+struct Inner<T> {
+    state: Mutex<State<T>>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    shard_capacity: usize,
+    global_budget: usize,
+}
+
+/// A bounded, variant-sharded MPMC queue (Mutex + Condvar; the offline
+/// crate set has no crossbeam/tokio).
+///
+/// * `try_push` rejects immediately when the target shard or the
+///   global budget is full (fail-fast admission).
+/// * `push_timeout` blocks up to a deadline (backpressure).
+/// * `pop_batch_pinned` blocks until work exists anywhere, prefers the
+///   caller's pinned shard, steals from the longest shard otherwise,
+///   and returns `None` once closed and fully drained.
+pub struct ShardedQueue<T> {
+    inner: Arc<Inner<T>>,
+}
+
+impl<T> Clone for ShardedQueue<T> {
+    fn clone(&self) -> Self {
+        ShardedQueue {
+            inner: Arc::clone(&self.inner),
+        }
+    }
+}
+
+impl<T> ShardedQueue<T> {
+    /// Create with `shards` shards, each holding at most
+    /// `shard_capacity` items, with at most `global_budget` items
+    /// queued in total. All three must be positive.
+    pub fn new(shards: usize, shard_capacity: usize, global_budget: usize) -> Self {
+        assert!(shards > 0, "shard count must be positive");
+        assert!(shard_capacity > 0, "shard capacity must be positive");
+        assert!(global_budget > 0, "global budget must be positive");
+        ShardedQueue {
+            inner: Arc::new(Inner {
+                state: Mutex::new(State {
+                    shards: (0..shards).map(|_| VecDeque::new()).collect(),
+                    total: 0,
+                    closed: false,
+                }),
+                not_empty: Condvar::new(),
+                not_full: Condvar::new(),
+                shard_capacity,
+                global_budget,
+            }),
+        }
+    }
+
+    /// Number of shards.
+    pub fn shards(&self) -> usize {
+        self.inner.state.lock().unwrap().shards.len()
+    }
+
+    /// Total items queued across all shards.
+    pub fn len(&self) -> usize {
+        self.inner.state.lock().unwrap().total
+    }
+
+    /// True iff no items are queued.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Current depth of every shard (metrics surface).
+    pub fn depths(&self) -> Vec<usize> {
+        let st = self.inner.state.lock().unwrap();
+        st.shards.iter().map(|q| q.len()).collect()
+    }
+
+    fn admission_full(&self, st: &State<T>, shard: usize) -> Option<Error> {
+        if st.shards[shard].len() >= self.inner.shard_capacity {
+            return Some(Error::Rejected(format!(
+                "shard {shard} full (per-shard capacity {})",
+                self.inner.shard_capacity
+            )));
+        }
+        if st.total >= self.inner.global_budget {
+            return Some(Error::Rejected(format!(
+                "admission budget exhausted (global capacity {})",
+                self.inner.global_budget
+            )));
+        }
+        None
+    }
+
+    /// Non-blocking push to `shard`; `Err(Rejected)` when that shard
+    /// or the global budget is full, or the queue is closed.
+    pub fn try_push(&self, shard: usize, item: T) -> Result<()> {
+        let mut st = self.inner.state.lock().unwrap();
+        assert!(shard < st.shards.len(), "shard index out of range");
+        if st.closed {
+            return Err(Error::Rejected("queue closed".into()));
+        }
+        if let Some(e) = self.admission_full(&st, shard) {
+            return Err(e);
+        }
+        st.shards[shard].push_back(item);
+        st.total += 1;
+        drop(st);
+        self.inner.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Blocking push with a deadline — the backpressure path.
+    pub fn push_timeout(&self, shard: usize, item: T, timeout: Duration) -> Result<()> {
+        let mut st = self.inner.state.lock().unwrap();
+        assert!(shard < st.shards.len(), "shard index out of range");
+        let deadline = std::time::Instant::now() + timeout;
+        loop {
+            if st.closed {
+                return Err(Error::Rejected("queue closed".into()));
+            }
+            match self.admission_full(&st, shard) {
+                None => {
+                    st.shards[shard].push_back(item);
+                    st.total += 1;
+                    drop(st);
+                    self.inner.not_empty.notify_one();
+                    return Ok(());
+                }
+                Some(e) => {
+                    let now = std::time::Instant::now();
+                    if now >= deadline {
+                        return Err(Error::Rejected(format!("backpressure timeout: {e}")));
+                    }
+                    let (guard, res) = self
+                        .inner
+                        .not_full
+                        .wait_timeout(st, deadline - now)
+                        .unwrap();
+                    st = guard;
+                    if res.timed_out() && self.admission_full(&st, shard).is_some() {
+                        return Err(Error::Rejected("backpressure timeout".into()));
+                    }
+                }
+            }
+        }
+    }
+
+    /// Pop up to `max` items from one shard, preferring `*pinned`.
+    ///
+    /// Blocks until any shard has work. If the pinned shard has items
+    /// it is drained first (the warm path); otherwise the **longest**
+    /// shard is chosen (work stealing, `stolen = true`) and the worker
+    /// re-pins there. `rotate = true` asks for a **fairness rotation**:
+    /// take the longest *other* non-empty shard even though the pinned
+    /// shard still has work (falling back to the pinned shard when no
+    /// other has any) — callers rotate after a bounded streak of
+    /// same-shard batches so a sustained hot variant cannot starve
+    /// jobs queued in other shards. Returns `None` once the queue is
+    /// closed and every shard is drained — the worker shutdown signal.
+    pub fn pop_batch_pinned(
+        &self,
+        pinned: &mut Option<usize>,
+        max: usize,
+        rotate: bool,
+    ) -> Option<PoppedBatch<T>> {
+        let max = max.max(1);
+        let mut st = self.inner.state.lock().unwrap();
+        loop {
+            if st.total > 0 {
+                let longest_excluding = |st: &State<T>, skip: Option<usize>| {
+                    st.shards
+                        .iter()
+                        .enumerate()
+                        .filter(|(i, q)| Some(*i) != skip && !q.is_empty())
+                        .max_by_key(|(i, q)| (q.len(), usize::MAX - i))
+                        .map(|(i, _)| i)
+                };
+                let preferred = pinned.filter(|&p| p < st.shards.len() && !st.shards[p].is_empty());
+                let (shard, stolen) = match preferred {
+                    Some(p) if !rotate => (p, false),
+                    Some(p) => match longest_excluding(&st, Some(p)) {
+                        // Fairness rotation: serve someone else's queue
+                        // for one batch, then re-pin there.
+                        Some(other) => (other, true),
+                        None => (p, false),
+                    },
+                    None => {
+                        let longest =
+                            longest_excluding(&st, None).expect("total > 0 ⇒ a non-empty shard");
+                        // Moving off a previously pinned (now dry)
+                        // shard is a steal; a fresh worker just pins.
+                        (longest, pinned.is_some_and(|p| p != longest))
+                    }
+                };
+                let take = st.shards[shard].len().min(max);
+                let items: Vec<T> = st.shards[shard].drain(..take).collect();
+                st.total -= take;
+                *pinned = Some(shard);
+                drop(st);
+                // Blocked producers wait on heterogeneous per-shard
+                // predicates (their own shard's capacity + the global
+                // budget), so a single `notify_one` could wake a
+                // producer whose shard is still full and strand the
+                // one whose shard just freed — wake them all.
+                self.inner.not_full.notify_all();
+                return Some(PoppedBatch {
+                    shard,
+                    stolen,
+                    items,
+                });
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.inner.not_empty.wait(st).unwrap();
+        }
+    }
+
+    /// Close: producers start failing, consumers drain then get `None`.
+    pub fn close(&self) {
+        let mut st = self.inner.state.lock().unwrap();
+        st.closed = true;
+        drop(st);
+        self.inner.not_empty.notify_all();
+        self.inner.not_full.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    fn q(shards: usize, per_shard: usize, global: usize) -> ShardedQueue<u64> {
+        ShardedQueue::new(shards, per_shard, global)
+    }
+
+    #[test]
+    fn fifo_within_a_shard() {
+        let sq = q(4, 8, 32);
+        for i in 0..5 {
+            sq.try_push(2, i).unwrap();
+        }
+        let mut pinned = Some(2);
+        let batch = sq.pop_batch_pinned(&mut pinned, 3, false).unwrap();
+        assert_eq!(batch.shard, 2);
+        assert!(!batch.stolen);
+        assert_eq!(batch.items, vec![0, 1, 2]);
+        let batch = sq.pop_batch_pinned(&mut pinned, 8, false).unwrap();
+        assert_eq!(batch.items, vec![3, 4]);
+        assert!(!batch.stolen);
+    }
+
+    #[test]
+    fn per_shard_capacity_rejects() {
+        let sq = q(2, 2, 100);
+        sq.try_push(0, 1).unwrap();
+        sq.try_push(0, 2).unwrap();
+        let err = sq.try_push(0, 3).unwrap_err();
+        assert!(err.to_string().contains("shard 0 full"), "{err}");
+        // The other shard still has room.
+        sq.try_push(1, 4).unwrap();
+        assert_eq!(sq.depths(), vec![2, 1]);
+    }
+
+    #[test]
+    fn global_budget_rejects_even_with_shard_room() {
+        let sq = q(4, 8, 3);
+        sq.try_push(0, 1).unwrap();
+        sq.try_push(1, 2).unwrap();
+        sq.try_push(2, 3).unwrap();
+        let err = sq.try_push(3, 4).unwrap_err();
+        assert!(err.to_string().contains("admission budget"), "{err}");
+        assert_eq!(sq.len(), 3);
+    }
+
+    #[test]
+    fn steals_longest_shard_when_pinned_runs_dry() {
+        let sq = q(3, 8, 32);
+        sq.try_push(1, 10).unwrap();
+        sq.try_push(2, 20).unwrap();
+        sq.try_push(2, 21).unwrap();
+        // Worker pinned to the empty shard 0 must steal from shard 2
+        // (the longest) and re-pin there.
+        let mut pinned = Some(0);
+        let batch = sq.pop_batch_pinned(&mut pinned, 8, false).unwrap();
+        assert_eq!(batch.shard, 2);
+        assert!(batch.stolen);
+        assert_eq!(batch.items, vec![20, 21]);
+        assert_eq!(pinned, Some(2));
+        // Next pop steals the remaining shard-1 item.
+        let batch = sq.pop_batch_pinned(&mut pinned, 8, false).unwrap();
+        assert_eq!(batch.shard, 1);
+        assert!(batch.stolen);
+        assert_eq!(batch.items, vec![10]);
+    }
+
+    #[test]
+    fn rotation_serves_other_shards_under_sustained_load() {
+        // The pinned shard never runs dry, but a rotating pop must
+        // still serve the other shard's waiting job (anti-starvation).
+        let sq = q(2, 8, 16);
+        for i in 0..6 {
+            sq.try_push(0, i).unwrap();
+        }
+        sq.try_push(1, 100).unwrap();
+        let mut pinned = Some(0);
+        // Non-rotating pops stay on the busy shard.
+        let batch = sq.pop_batch_pinned(&mut pinned, 2, false).unwrap();
+        assert_eq!((batch.shard, batch.stolen), (0, false));
+        // A rotation takes the other non-empty shard and re-pins.
+        let batch = sq.pop_batch_pinned(&mut pinned, 2, true).unwrap();
+        assert_eq!((batch.shard, batch.stolen), (1, true));
+        assert_eq!(batch.items, vec![100]);
+        assert_eq!(pinned, Some(1));
+        // Rotation with no *other* work falls back to the pinned shard.
+        let mut pinned = Some(0);
+        let batch = sq.pop_batch_pinned(&mut pinned, 8, true).unwrap();
+        assert_eq!((batch.shard, batch.stolen), (0, false));
+    }
+
+    #[test]
+    fn pop_wakes_every_blocked_producer() {
+        // Producers block on *different* per-shard predicates; a pop
+        // freeing shard 0 must wake the shard-0 producer even if the
+        // shard-1 producer is also waiting (notify_all semantics —
+        // notify_one could strand the right producer).
+        let sq = q(2, 1, 4);
+        sq.try_push(0, 10).unwrap();
+        sq.try_push(1, 20).unwrap();
+        let sq0 = sq.clone();
+        let p0 = thread::spawn(move || sq0.push_timeout(0, 11, Duration::from_secs(10)));
+        let sq1 = sq.clone();
+        let p1 = thread::spawn(move || sq1.push_timeout(1, 21, Duration::from_secs(10)));
+        thread::sleep(Duration::from_millis(50));
+        // Free shard 0 only: its producer must complete promptly.
+        let mut pinned = Some(0);
+        let batch = sq.pop_batch_pinned(&mut pinned, 1, false).unwrap();
+        assert_eq!(batch.items, vec![10]);
+        p0.join().unwrap().unwrap();
+        // Free shard 1: the other producer completes too.
+        let mut pinned = Some(1);
+        let batch = sq.pop_batch_pinned(&mut pinned, 1, false).unwrap();
+        assert_eq!(batch.items, vec![20]);
+        p1.join().unwrap().unwrap();
+        assert_eq!(sq.depths(), vec![1, 1]);
+    }
+
+    #[test]
+    fn first_pop_is_a_pin_not_a_steal() {
+        let sq = q(2, 8, 8);
+        sq.try_push(1, 5).unwrap();
+        let mut pinned = None;
+        let batch = sq.pop_batch_pinned(&mut pinned, 4, false).unwrap();
+        assert!(!batch.stolen);
+        assert_eq!(pinned, Some(1));
+    }
+
+    #[test]
+    fn close_drains_then_none() {
+        let sq = q(2, 4, 8);
+        sq.try_push(0, 7).unwrap();
+        sq.close();
+        assert!(sq.try_push(0, 8).is_err());
+        let mut pinned = None;
+        assert_eq!(sq.pop_batch_pinned(&mut pinned, 4, false).unwrap().items, vec![7]);
+        assert!(sq.pop_batch_pinned(&mut pinned, 4, false).is_none());
+    }
+
+    #[test]
+    fn backpressure_releases_on_pop() {
+        let sq = q(1, 1, 1);
+        sq.try_push(0, 1).unwrap();
+        let sq2 = sq.clone();
+        let h = thread::spawn(move || sq2.push_timeout(0, 2, Duration::from_secs(5)));
+        thread::sleep(Duration::from_millis(50));
+        let mut pinned = None;
+        assert_eq!(sq.pop_batch_pinned(&mut pinned, 1, false).unwrap().items, vec![1]);
+        h.join().unwrap().unwrap();
+        assert_eq!(sq.pop_batch_pinned(&mut pinned, 1, false).unwrap().items, vec![2]);
+    }
+
+    #[test]
+    fn backpressure_times_out() {
+        let sq = q(1, 1, 1);
+        sq.try_push(0, 1).unwrap();
+        let err = sq.push_timeout(0, 2, Duration::from_millis(30)).unwrap_err();
+        assert!(err.to_string().contains("backpressure"), "{err}");
+    }
+
+    #[test]
+    fn mpmc_under_contention_delivers_everything() {
+        let sq = q(4, 4, 8);
+        let producers: Vec<_> = (0..4)
+            .map(|p| {
+                let sq = sq.clone();
+                thread::spawn(move || {
+                    for i in 0..50u64 {
+                        sq.push_timeout((p + i as usize) % 4, p as u64 * 1000 + i, Duration::from_secs(10))
+                            .unwrap();
+                    }
+                })
+            })
+            .collect();
+        let consumers: Vec<_> = (0..2)
+            .map(|_| {
+                let sq = sq.clone();
+                thread::spawn(move || {
+                    let mut got = 0usize;
+                    let mut pinned = None;
+                    while let Some(batch) = sq.pop_batch_pinned(&mut pinned, 8, false) {
+                        got += batch.items.len();
+                    }
+                    got
+                })
+            })
+            .collect();
+        for p in producers {
+            p.join().unwrap();
+        }
+        sq.close();
+        let total: usize = consumers.into_iter().map(|c| c.join().unwrap()).sum();
+        assert_eq!(total, 200);
+    }
+
+    #[test]
+    fn shard_for_is_stable_and_in_range() {
+        let key = VariantKey {
+            backend: "native-fgc".into(),
+            family: "gw1d",
+            points: 128,
+            k: 1,
+        };
+        for shards in [1usize, 2, 7, 16] {
+            let s = shard_for(&key, shards);
+            assert!(s < shards);
+            assert_eq!(s, shard_for(&key, shards), "deterministic");
+        }
+        // Different variants spread (not all onto one shard).
+        let spread: std::collections::BTreeSet<usize> = (0..64usize)
+            .map(|n| {
+                shard_for(
+                    &VariantKey {
+                        backend: "native-fgc".into(),
+                        family: "gw1d",
+                        points: n,
+                        k: 1,
+                    },
+                    8,
+                )
+            })
+            .collect();
+        assert!(spread.len() > 2, "hash must spread variants: {spread:?}");
+    }
+}

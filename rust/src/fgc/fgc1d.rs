@@ -5,7 +5,7 @@
 //! followed by `G = D̃_M·A` (vectorized scans carrying row vectors),
 //! both via the recurrence in [`crate::fgc::scan`].
 
-use super::scan::{apply_dtilde_vec, dtilde_cols_par, dtilde_rows_par};
+use super::scan::{apply_dtilde_vec_with, dtilde_cols_par, dtilde_rows_par};
 use crate::error::{Error, Result};
 use crate::grid::{Binomial, Grid1d};
 use crate::linalg::Mat;
@@ -116,8 +116,31 @@ pub fn dxgdy_1d(
 /// themselves grid matrices with exponent `2k`, so this is a single
 /// `O(k²N)` scan rather than an `O(N²)` dense product.
 pub fn sq_dist_apply_1d(g: &Grid1d, k: u32, w: &[f64], binom: &Binomial) -> Result<Vec<f64>> {
-    if w.len() != g.n {
-        return Err(Error::shape("sq_dist_apply_1d", format!("{}", g.n), format!("{}", w.len())));
+    let mut y = vec![0.0; g.n];
+    let mut tmp = vec![0.0; g.n];
+    let mut carry = vec![0.0; 2 * k as usize + 1];
+    sq_dist_apply_1d_into(g, k, w, &mut y, &mut tmp, &mut carry, binom)?;
+    Ok(y)
+}
+
+/// [`sq_dist_apply_1d`] into caller-owned buffers: `out` (length `N`),
+/// `tmp` (≥ `N`), `carry` (≥ `2k+1`). Zero heap allocation — the form
+/// the UGW/COOT per-iteration constant terms run on.
+pub fn sq_dist_apply_1d_into(
+    g: &Grid1d,
+    k: u32,
+    w: &[f64],
+    out: &mut [f64],
+    tmp: &mut [f64],
+    carry: &mut [f64],
+    binom: &Binomial,
+) -> Result<()> {
+    if w.len() != g.n || out.len() != g.n {
+        return Err(Error::shape(
+            "sq_dist_apply_1d",
+            format!("{}", g.n),
+            format!("{} / {}", w.len(), out.len()),
+        ));
     }
     if binom.max_n() < 2 * k as usize {
         return Err(Error::Invalid(format!(
@@ -126,14 +149,13 @@ pub fn sq_dist_apply_1d(g: &Grid1d, k: u32, w: &[f64], binom: &Binomial) -> Resu
             binom.max_n()
         )));
     }
-    let mut y = vec![0.0; g.n];
-    apply_dtilde_vec(2 * k, false, w, &mut y, binom);
+    apply_dtilde_vec_with(2 * k, false, w, out, tmp, carry, binom);
     let s = g.scale(k);
     let s2 = s * s;
-    for v in &mut y {
+    for v in out.iter_mut() {
         *v *= s2;
     }
-    Ok(y)
+    Ok(())
 }
 
 #[cfg(test)]

@@ -309,23 +309,49 @@ fn dhat_vec_into(
 /// squared Manhattan power distances are the same structure with
 /// exponent `2k`, so this is one `O(k³n²)` operator application.
 pub fn sq_dist_apply_2d(g: &Grid2d, k: u32, w: &[f64], ws: &mut Workspace2d) -> Result<Vec<f64>> {
-    if w.len() != g.len() {
-        return Err(Error::shape(
-            "sq_dist_apply_2d",
-            format!("{}", g.len()),
-            format!("{}", w.len()),
-        ));
-    }
     let mut y = vec![0.0; g.len()];
     let mut t1 = vec![0.0; g.len()];
     let mut t2 = vec![0.0; g.len()];
-    dhat_vec_into(g.n, 2 * k, w, &mut y, &mut t1, &mut t2, &mut ws.carry, &ws.binom)?;
+    sq_dist_apply_2d_into(g, k, w, &mut y, &mut t1, &mut t2, ws)?;
+    Ok(y)
+}
+
+/// [`sq_dist_apply_2d`] into caller-owned buffers: `out`, `t1`, `t2`
+/// all of length ≥ `n²`. Zero heap allocation (the workspace supplies
+/// carries + the binomial table, which cover `2k` by construction).
+pub fn sq_dist_apply_2d_into(
+    g: &Grid2d,
+    k: u32,
+    w: &[f64],
+    out: &mut [f64],
+    t1: &mut [f64],
+    t2: &mut [f64],
+    ws: &mut Workspace2d,
+) -> Result<()> {
+    let total = g.len();
+    if w.len() != total || out.len() < total || t1.len() < total || t2.len() < total {
+        return Err(Error::shape(
+            "sq_dist_apply_2d",
+            format!("{total}"),
+            format!("{} / {} / {} / {}", w.len(), out.len(), t1.len(), t2.len()),
+        ));
+    }
+    dhat_vec_into(
+        g.n,
+        2 * k,
+        w,
+        &mut out[..total],
+        &mut t1[..total],
+        &mut t2[..total],
+        &mut ws.carry,
+        &ws.binom,
+    )?;
     let s = g.scale(k);
     let s2 = s * s;
-    for v in &mut y {
+    for v in out[..total].iter_mut() {
         *v *= s2;
     }
-    Ok(y)
+    Ok(())
 }
 
 #[cfg(test)]

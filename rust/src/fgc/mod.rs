@@ -23,10 +23,11 @@ pub mod fgc3d;
 pub mod naive;
 pub mod scan;
 
-pub use fgc1d::{dxgdy_1d, sq_dist_apply_1d, Workspace1d};
-pub use fgc2d::{dhat_apply, dxgdy_2d, sq_dist_apply_2d, Workspace2d};
+pub use fgc1d::{dxgdy_1d, sq_dist_apply_1d, sq_dist_apply_1d_into, Workspace1d};
+pub use fgc2d::{dhat_apply, dxgdy_2d, sq_dist_apply_2d, sq_dist_apply_2d_into, Workspace2d};
 pub use fgc3d::{dhat3_apply, dxgdy_3d, sq_dist_apply_3d, Grid3d, Workspace3d};
 pub use scan::{
-    apply_dtilde_vec, apply_l_vec, apply_lt_vec, check_scan_exponent, dtilde_cols,
-    dtilde_cols_par, dtilde_rows, dtilde_rows_par, MAX_SCAN_EXPONENT,
+    apply_dtilde_vec, apply_dtilde_vec_with, apply_l_vec, apply_l_vec_with, apply_lt_vec,
+    apply_lt_vec_with, check_scan_exponent, dtilde_cols, dtilde_cols_par, dtilde_rows,
+    dtilde_rows_par, MAX_SCAN_EXPONENT,
 };

@@ -61,11 +61,20 @@ pub fn check_scan_exponent(k: u32) -> Result<()> {
 
 /// `y = L x` with exponent `k` (unscaled; `L_{ij} = (i−j)^k`, `i>j`).
 pub fn apply_l_vec(k: u32, x: &[f64], y: &mut [f64], binom: &Binomial) {
+    let mut carry = vec![0.0f64; k as usize + 1];
+    apply_l_vec_with(k, x, y, &mut carry, binom);
+}
+
+/// [`apply_l_vec`] with caller-provided carry scratch
+/// (≥ `k+1` entries) — the zero-allocation form the per-iteration
+/// `C₁`/sq-apply paths run on.
+pub fn apply_l_vec_with(k: u32, x: &[f64], y: &mut [f64], carry: &mut [f64], binom: &Binomial) {
     let n = x.len();
     assert_eq!(y.len(), n);
     let kk = k as usize;
     // carry[rr] = a_{i, rr+1}
-    let mut carry = vec![0.0f64; kk + 1];
+    let carry = &mut carry[..kk + 1];
+    carry.fill(0.0);
     for i in 0..n {
         y[i] = carry[kk];
         // Descending rr keeps reads of old carry[0..=rr] valid in place.
@@ -83,10 +92,17 @@ pub fn apply_l_vec(k: u32, x: &[f64], y: &mut [f64], binom: &Binomial) {
 
 /// `y = Lᵀ x` with exponent `k` (backward scan).
 pub fn apply_lt_vec(k: u32, x: &[f64], y: &mut [f64], binom: &Binomial) {
+    let mut carry = vec![0.0f64; k as usize + 1];
+    apply_lt_vec_with(k, x, y, &mut carry, binom);
+}
+
+/// [`apply_lt_vec`] with caller-provided carry scratch (≥ `k+1`).
+pub fn apply_lt_vec_with(k: u32, x: &[f64], y: &mut [f64], carry: &mut [f64], binom: &Binomial) {
     let n = x.len();
     assert_eq!(y.len(), n);
     let kk = k as usize;
-    let mut carry = vec![0.0f64; kk + 1];
+    let carry = &mut carry[..kk + 1];
+    carry.fill(0.0);
     for i in (0..n).rev() {
         y[i] = carry[kk];
         let xi = x[i];
@@ -105,10 +121,30 @@ pub fn apply_lt_vec(k: u32, x: &[f64], y: &mut [f64], binom: &Binomial) {
 /// `D̃^{(k)}x` in `O(k²N)`. `diag_one` adds the identity (needed for
 /// exponent 0 under the `0⁰ = 1` convention of the 2D expansion).
 pub fn apply_dtilde_vec(k: u32, diag_one: bool, x: &[f64], y: &mut [f64], binom: &Binomial) {
+    let mut tmp = vec![0.0f64; x.len()];
+    let mut carry = vec![0.0f64; k as usize + 1];
+    apply_dtilde_vec_with(k, diag_one, x, y, &mut tmp, &mut carry, binom);
+}
+
+/// [`apply_dtilde_vec`] with caller-provided scratch: `tmp` (≥ `N`)
+/// holds the backward-scan half, `carry` (≥ `k+1`) the scan carries.
+/// Bitwise identical to the allocating form — it *is* the allocating
+/// form, minus the two heap allocations that used to sit on the
+/// UGW/COOT per-iteration `C₁` path (see ROADMAP "zero-allocation
+/// parity").
+pub fn apply_dtilde_vec_with(
+    k: u32,
+    diag_one: bool,
+    x: &[f64],
+    y: &mut [f64],
+    tmp: &mut [f64],
+    carry: &mut [f64],
+    binom: &Binomial,
+) {
     let n = x.len();
-    let mut tmp = vec![0.0f64; n];
-    apply_l_vec(k, x, y, binom);
-    apply_lt_vec(k, x, &mut tmp, binom);
+    let tmp = &mut tmp[..n];
+    apply_l_vec_with(k, x, y, carry, binom);
+    apply_lt_vec_with(k, x, tmp, carry, binom);
     for i in 0..n {
         y[i] += tmp[i];
         if diag_one {

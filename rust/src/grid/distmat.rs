@@ -46,16 +46,25 @@ pub fn dense_pow_dist(n: usize, r: u32) -> Mat {
 /// `(D ⊙ D)·w` for a dense distance matrix `D` (used by tests to check
 /// the FGC-accelerated version).
 pub fn squared_dist_apply_dense(d: &Mat, w: &[f64]) -> Vec<f64> {
+    let mut y = vec![0.0; d.rows()];
+    squared_dist_apply_dense_into(d, w, &mut y);
+    y
+}
+
+/// [`squared_dist_apply_dense`] into a caller-owned buffer (same
+/// per-row summation order, so results are bitwise identical; no
+/// allocation).
+pub fn squared_dist_apply_dense_into(d: &Mat, w: &[f64], out: &mut [f64]) {
     assert_eq!(d.cols(), w.len());
-    (0..d.rows())
-        .map(|i| {
-            d.row(i)
-                .iter()
-                .zip(w)
-                .map(|(&dij, &wj)| dij * dij * wj)
-                .sum()
-        })
-        .collect()
+    assert_eq!(d.rows(), out.len());
+    for (i, o) in out.iter_mut().enumerate() {
+        *o = d
+            .row(i)
+            .iter()
+            .zip(w)
+            .map(|(&dij, &wj)| dij * dij * wj)
+            .sum();
+    }
 }
 
 #[cfg(test)]

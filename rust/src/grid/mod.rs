@@ -6,5 +6,8 @@ mod distmat;
 mod grids;
 
 pub use binomial::Binomial;
-pub use distmat::{dense_dist_1d, dense_dist_2d, dense_pow_dist, squared_dist_apply_dense};
+pub use distmat::{
+    dense_dist_1d, dense_dist_2d, dense_pow_dist, squared_dist_apply_dense,
+    squared_dist_apply_dense_into,
+};
 pub use grids::{Grid1d, Grid2d};

@@ -12,7 +12,7 @@
 //! * anything else (dense × dense under this kind, or mixed 2D) —
 //!   plain dense products, identical to [`super::NaiveBackend`].
 
-use super::{DensePair, GradientBackend};
+use super::{check_dense_x_swap, overwrite_dense_geom, DensePair, GradientBackend};
 use crate::error::{Error, Result};
 use crate::fgc::{
     check_scan_exponent, dtilde_cols_par, dtilde_rows_par, dxgdy_1d, dxgdy_2d, Workspace1d,
@@ -67,6 +67,12 @@ pub struct FgcBackend {
     geom_y: Geometry,
     plan: Plan,
     par: Parallelism,
+    /// Batched-apply scratch for the grid1d fused path: vertically /
+    /// horizontally stacked plan buffers and the widened scan carries.
+    /// Grown on first batched use, reused ever after.
+    batch_a: Vec<f64>,
+    batch_b: Vec<f64>,
+    batch_carry: Vec<f64>,
 }
 
 impl FgcBackend {
@@ -132,7 +138,22 @@ impl FgcBackend {
             geom_y,
             plan,
             par,
+            batch_a: Vec::new(),
+            batch_b: Vec::new(),
+            batch_carry: Vec::new(),
         })
+    }
+
+    fn check_shapes(&self, gamma: &Mat, out: &Mat, what: &str) -> Result<()> {
+        let expect = (self.geom_x.len(), self.geom_y.len());
+        if gamma.shape() != expect || out.shape() != expect {
+            return Err(Error::shape(
+                what,
+                format!("{}x{}", expect.0, expect.1),
+                format!("{:?} / {:?}", gamma.shape(), out.shape()),
+            ));
+        }
+        Ok(())
     }
 }
 
@@ -205,6 +226,123 @@ impl GradientBackend for FgcBackend {
         }
     }
 
+    /// Batched grid×grid (1D) apply: **one scan pass interleaving all
+    /// plans**. The row scans (`A_b = Γ_b·D̃_Y`) run over the
+    /// vertically stacked `(B·M)×N` matrix — rows are independent, so
+    /// one batched call is bit-for-bit the per-plan calls — and the
+    /// column scans (`G_b = D̃_X·A_b`) run over the horizontally
+    /// stacked `M×(B·N)` matrix, whose columns are likewise
+    /// independent. Per stacked call the scan engine parallelizes over
+    /// `B×` more rows/columns, so small same-variant plans that were
+    /// individually below the threading threshold now stripe across
+    /// the budget. Other plans fall back to the per-plan loop.
+    fn apply_batch(&mut self, gammas: &[&Mat], outs: &mut [Mat]) -> Result<()> {
+        let bsz = gammas.len();
+        if bsz != outs.len() {
+            return Err(Error::Invalid(format!(
+                "apply_batch: {bsz} plans but {} outputs",
+                outs.len()
+            )));
+        }
+        for (gamma, out) in gammas.iter().zip(outs.iter()) {
+            self.check_shapes(gamma, out, "FgcBackend::apply_batch")?;
+        }
+        if bsz <= 1 || !matches!(self.plan, Plan::Grid1d { .. }) {
+            for (gamma, out) in gammas.iter().zip(outs.iter_mut()) {
+                self.apply(gamma, out)?;
+            }
+            return Ok(());
+        }
+        let (m, n) = (self.geom_x.len(), self.geom_y.len());
+        let k = match &self.plan {
+            Plan::Grid1d { k, .. } => *k,
+            _ => unreachable!("checked above"),
+        };
+        let total = bsz * m * n;
+        let carry_need = (k as usize + 1) * bsz * n;
+        if self.batch_a.len() < total {
+            self.batch_a.resize(total, 0.0);
+        }
+        if self.batch_b.len() < total {
+            self.batch_b.resize(total, 0.0);
+        }
+        if self.batch_carry.len() < carry_need {
+            self.batch_carry.resize(carry_need, 0.0);
+        }
+        let Plan::Grid1d { gx, gy, ws, .. } = &self.plan else {
+            unreachable!("checked above")
+        };
+        // 1) vertical stack [Γ₁; …; Γ_B] → one row-scan pass.
+        for (b, gamma) in gammas.iter().enumerate() {
+            self.batch_a[b * m * n..(b + 1) * m * n].copy_from_slice(gamma.as_slice());
+        }
+        dtilde_rows_par(
+            k,
+            false,
+            bsz * m,
+            n,
+            &self.batch_a[..total],
+            &mut self.batch_b[..total],
+            ws.binom(),
+            self.par,
+        )?;
+        // 2) re-stack horizontally [A₁ | … | A_B] → one column-scan pass.
+        let bn = bsz * n;
+        for b in 0..bsz {
+            for i in 0..m {
+                let src_start = (b * m + i) * n;
+                let dst_start = i * bn + b * n;
+                let src = &self.batch_b[src_start..src_start + n];
+                self.batch_a[dst_start..dst_start + n].copy_from_slice(src);
+            }
+        }
+        dtilde_cols_par(
+            k,
+            false,
+            m,
+            bn,
+            &self.batch_a[..total],
+            &mut self.batch_b[..total],
+            &mut self.batch_carry[..carry_need],
+            ws.binom(),
+            self.par,
+        );
+        // 3) scale + scatter.
+        let scale = gx.scale(k) * gy.scale(k);
+        for (b, out) in outs.iter_mut().enumerate() {
+            let os = out.as_mut_slice();
+            for i in 0..m {
+                let src = &self.batch_b[i * bn + b * n..i * bn + (b + 1) * n];
+                let dst = &mut os[i * n..(i + 1) * n];
+                if scale == 1.0 {
+                    dst.copy_from_slice(src);
+                } else {
+                    for (d, &s) in dst.iter_mut().zip(src) {
+                        *d = scale * s;
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn swap_dense_x(&mut self, dx: &Mat) -> Result<()> {
+        check_dense_x_swap(&self.geom_x, dx)?;
+        match &mut self.plan {
+            Plan::DenseLeft { dx: old, .. } => {
+                old.as_mut_slice().copy_from_slice(dx.as_slice())
+            }
+            Plan::Dense(pair) => pair.swap_dx(dx)?,
+            _ => {
+                return Err(Error::Invalid(
+                    "swap_dense_x: fgc plan has no dense X factor".into(),
+                ))
+            }
+        }
+        overwrite_dense_geom(&mut self.geom_x, dx);
+        Ok(())
+    }
+
     fn apply_cost(&self) -> f64 {
         let (m, n) = (self.geom_x.len() as f64, self.geom_y.len() as f64);
         match &self.plan {
@@ -252,6 +390,58 @@ mod tests {
                 assert!(d < 1e-11, "k={k}: mixed-path diff {d:e}");
             }
         }
+    }
+
+    #[test]
+    fn batched_grid1d_apply_is_bitwise_sequential() {
+        for threads in [1usize, 4] {
+            let gx = Geometry::grid_1d_unit(23, 2);
+            let gy = Geometry::grid_1d_unit(17, 2);
+            let par = Parallelism::new(threads);
+            let mut be = FgcBackend::new(gx, gy, par).unwrap();
+            let gammas: Vec<Mat> = (0..5)
+                .map(|s| {
+                    let mut rng = Rng::seeded(70 + s);
+                    Mat::from_fn(23, 17, |_, _| rng.uniform() - 0.4)
+                })
+                .collect();
+            let mut seq: Vec<Mat> = (0..5).map(|_| Mat::zeros(23, 17)).collect();
+            for (g, o) in gammas.iter().zip(seq.iter_mut()) {
+                be.apply(g, o).unwrap();
+            }
+            let refs: Vec<&Mat> = gammas.iter().collect();
+            let mut batched: Vec<Mat> = (0..5).map(|_| Mat::zeros(23, 17)).collect();
+            be.apply_batch(&refs, &mut batched).unwrap();
+            for (s, b) in seq.iter().zip(&batched) {
+                assert_eq!(s.as_slice(), b.as_slice(), "threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn swap_dense_x_on_mixed_plan_matches_fresh() {
+        let gy = Geometry::grid_1d_unit(9, 1);
+        let d0 = Geometry::grid_1d_unit(12, 1).dense();
+        let d1 = d0.map(|x| 0.5 + 2.0 * x);
+        let mut swapped =
+            FgcBackend::new(Geometry::Dense(d0), gy.clone(), Parallelism::SERIAL).unwrap();
+        swapped.swap_dense_x(&d1).unwrap();
+        let mut fresh =
+            FgcBackend::new(Geometry::Dense(d1.clone()), gy, Parallelism::SERIAL).unwrap();
+        let gamma = random_gamma(12, 9, 8);
+        let (mut a, mut b) = (Mat::zeros(12, 9), Mat::zeros(12, 9));
+        swapped.apply(&gamma, &mut a).unwrap();
+        fresh.apply(&gamma, &mut b).unwrap();
+        assert_eq!(a.as_slice(), b.as_slice());
+        assert_eq!(swapped.geom_x(), fresh.geom_x());
+        // A grid×grid plan has no dense X side to swap.
+        let mut grid = FgcBackend::new(
+            Geometry::grid_1d_unit(12, 1),
+            Geometry::grid_1d_unit(9, 1),
+            Parallelism::SERIAL,
+        )
+        .unwrap();
+        assert!(grid.swap_dense_x(&d1).is_err());
     }
 
     #[test]

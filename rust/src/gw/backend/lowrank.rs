@@ -28,7 +28,7 @@
 //! [`LowRankOptions::max_rank`] disables the fallback and truncates
 //! hard (a deliberate approximation for benches/experiments).
 
-use super::{DensePair, GradientBackend};
+use super::{check_dense_x_swap, overwrite_dense_geom, DensePair, GradientBackend};
 use crate::error::{Error, Result};
 use crate::gw::geometry::Geometry;
 use crate::gw::gradient::GradientKind;
@@ -58,6 +58,25 @@ impl Default for LowRankOptions {
     }
 }
 
+impl LowRankOptions {
+    /// Tolerance matched to the entropic solver's resolution: plans
+    /// are only resolved to the Sinkhorn scale set by ε, so
+    /// factorizing to `1e-12` over-spends probe rank (and build time)
+    /// on large N. `tol = ε·1e-9`, clamped to `[1e-13, 1e-10]`, keeps
+    /// the induced plan perturbation (≈ `tol·‖D‖²/ε` through the Gibbs
+    /// kernel) orders of magnitude below the default marginal
+    /// tolerance while letting loose-ε workloads stop the residual
+    /// probe earlier. Exact-rank geometries (the workload lowrank is
+    /// routed to) are unaffected — their residual collapses to machine
+    /// eps at the true rank regardless of the stop threshold.
+    pub fn for_epsilon(epsilon: f64) -> Self {
+        LowRankOptions {
+            tol: (epsilon * 1e-9).clamp(1e-13, 1e-10),
+            max_rank: 0,
+        }
+    }
+}
+
 /// How the bound pair is evaluated (fixed at construction).
 enum LrPlan {
     /// Both sides converged within their profitability caps.
@@ -81,12 +100,33 @@ enum LrPlan {
     Dense(DensePair),
 }
 
+/// Stacked buffers for the fused batched apply (grown on demand).
+struct LrBatch {
+    /// `[Γ₁ | … | Γ_B]` column-stacked, `M × B·N`.
+    gstack: Mat,
+    /// `B_Xᵀ·gstack`, `r_X × B·N` — the one sweep over the shared
+    /// X factor for the whole batch.
+    t1stack: Mat,
+    /// `[A_X·t2₁; …; A_X·t2_B]` row-stacked, `B·M × r_Y`.
+    t3stack: Mat,
+    /// `t3stack·B_Yᵀ`, `B·M × N`.
+    ostack: Mat,
+}
+
 /// Factored-cost gradient backend over a bound geometry pair.
 pub struct LowRankBackend {
     geom_x: Geometry,
     geom_y: Geometry,
     plan: LrPlan,
     par: Parallelism,
+    /// Factorization knobs, retained so [`LowRankBackend::swap_dense_x`]
+    /// re-factorizes the new X side with the same policy.
+    opts: LowRankOptions,
+    /// The Y side's factors, cached at construction (`None` = the
+    /// bounded probe found Y numerically high-rank). A dense-X swap
+    /// re-factorizes **only** the X side against this cache.
+    fy: Option<(Mat, Mat)>,
+    batch: Option<LrBatch>,
 }
 
 impl LowRankBackend {
@@ -115,7 +155,7 @@ impl LowRankBackend {
         let fx = aca_factor(&dx, opts)?;
         let fy = aca_factor(&dy, opts)?;
         let (m, n) = (geom_x.len(), geom_y.len());
-        let plan = match (fx, fy) {
+        let plan = match (fx, &fy) {
             (Some((ax, bxt)), Some((ay, byt))) => {
                 let (rx, ry) = (ax.cols(), ay.cols());
                 LrPlan::Factored {
@@ -124,8 +164,8 @@ impl LowRankBackend {
                     t3: Mat::zeros(m, ry),
                     ax,
                     bxt,
-                    ay,
-                    byt,
+                    ay: ay.clone(),
+                    byt: byt.clone(),
                 }
             }
             _ => LrPlan::Dense(DensePair::from_mats(dx, dy)),
@@ -135,7 +175,22 @@ impl LowRankBackend {
             geom_y,
             plan,
             par,
+            opts: *opts,
+            fy,
+            batch: None,
         })
+    }
+
+    fn check_shapes(&self, gamma: &Mat, out: &Mat, what: &str) -> Result<()> {
+        let expect = (self.geom_x.len(), self.geom_y.len());
+        if gamma.shape() != expect || out.shape() != expect {
+            return Err(Error::shape(
+                what,
+                format!("{}x{}", expect.0, expect.1),
+                format!("{:?} / {:?}", gamma.shape(), out.shape()),
+            ));
+        }
+        Ok(())
     }
 
     /// Achieved factor ranks `(r_X, r_Y)`, or `None` when the bounded
@@ -189,6 +244,129 @@ impl GradientBackend for LowRankBackend {
             }
             LrPlan::Dense(pair) => pair.apply(gamma, out, par),
         }
+    }
+
+    /// Batched factored apply: the expensive outer products run once
+    /// over the stacked batch — `B_Xᵀ·[Γ₁ … Γ_B]` (one sweep over the
+    /// shared X factors) and `[t3₁; …; t3_B]·B_Yᵀ` — with only the
+    /// thin `r×r` middle products per plan. Dense-fallback pairs loop.
+    fn apply_batch(&mut self, gammas: &[&Mat], outs: &mut [Mat]) -> Result<()> {
+        let bsz = gammas.len();
+        if bsz != outs.len() {
+            return Err(Error::Invalid(format!(
+                "apply_batch: {bsz} plans but {} outputs",
+                outs.len()
+            )));
+        }
+        for (gamma, out) in gammas.iter().zip(outs.iter()) {
+            self.check_shapes(gamma, out, "LowRankBackend::apply_batch")?;
+        }
+        let (rx, ry) = match &self.plan {
+            LrPlan::Factored { ax, ay, .. } => (ax.cols(), ay.cols()),
+            LrPlan::Dense(_) => (0, 0),
+        };
+        if bsz <= 1 || matches!(self.plan, LrPlan::Dense(_)) {
+            for (gamma, out) in gammas.iter().zip(outs.iter_mut()) {
+                self.apply(gamma, out)?;
+            }
+            return Ok(());
+        }
+        let (m, n) = (self.geom_x.len(), self.geom_y.len());
+        let rebuild = match &self.batch {
+            Some(b) => {
+                b.gstack.shape() != (m, bsz * n)
+                    || b.t1stack.shape() != (rx, bsz * n)
+                    || b.t3stack.shape() != (bsz * m, ry)
+            }
+            None => true,
+        };
+        if rebuild {
+            self.batch = Some(LrBatch {
+                gstack: Mat::zeros(m, bsz * n),
+                t1stack: Mat::zeros(rx, bsz * n),
+                t3stack: Mat::zeros(bsz * m, ry),
+                ostack: Mat::zeros(bsz * m, n),
+            });
+        }
+        let LrPlan::Factored {
+            ax,
+            bxt,
+            ay,
+            byt,
+            t1,
+            t2,
+            t3,
+        } = &mut self.plan
+        else {
+            unreachable!("dense plan handled above")
+        };
+        let nb = self.batch.as_mut().expect("just ensured");
+        let par = self.par;
+        // 1) column-stack the plans; one B_Xᵀ sweep over the batch.
+        for (b, gamma) in gammas.iter().enumerate() {
+            for i in 0..m {
+                nb.gstack.row_mut(i)[b * n..(b + 1) * n].copy_from_slice(gamma.row(i));
+            }
+        }
+        matmul_into(bxt, &nb.gstack, &mut nb.t1stack, par)?;
+        // 2) thin per-plan middle products into the stacked t3.
+        for b in 0..bsz {
+            for r in 0..rx {
+                t1.row_mut(r)
+                    .copy_from_slice(&nb.t1stack.row(r)[b * n..(b + 1) * n]);
+            }
+            matmul_into(t1, ay, t2, par)?;
+            matmul_into(ax, t2, t3, par)?;
+            for i in 0..m {
+                nb.t3stack.row_mut(b * m + i).copy_from_slice(t3.row(i));
+            }
+        }
+        // 3) one B_Yᵀ sweep over the batch; scatter.
+        matmul_into(&nb.t3stack, byt, &mut nb.ostack, par)?;
+        for (b, out) in outs.iter_mut().enumerate() {
+            let os = out.as_mut_slice();
+            for i in 0..m {
+                os[i * n..(i + 1) * n].copy_from_slice(nb.ostack.row(b * m + i));
+            }
+        }
+        Ok(())
+    }
+
+    /// Re-factorize **only** the X side: the Y factors (or Y's dense
+    /// matrix, when it was found high-rank) are cached from
+    /// construction, so the barycenter's per-update rebind stops
+    /// re-running ACA / re-densifying the unchanged side.
+    fn swap_dense_x(&mut self, dx: &Mat) -> Result<()> {
+        check_dense_x_swap(&self.geom_x, dx)?;
+        let fx = aca_factor(dx, &self.opts)?;
+        let n = self.geom_y.len();
+        let m = dx.rows();
+        match (fx, &self.fy) {
+            (Some((ax, bxt)), Some((ay, byt))) => {
+                let (rx, ry) = (ax.cols(), ay.cols());
+                self.plan = LrPlan::Factored {
+                    t1: Mat::zeros(rx, n),
+                    t2: Mat::zeros(rx, ry),
+                    t3: Mat::zeros(m, ry),
+                    ax,
+                    bxt,
+                    ay: ay.clone(),
+                    byt: byt.clone(),
+                };
+            }
+            _ => match &mut self.plan {
+                // Already dense: overwrite D_X in place, keep the
+                // materialized D_Y.
+                LrPlan::Dense(pair) => pair.swap_dx(dx)?,
+                _ => {
+                    self.plan =
+                        LrPlan::Dense(DensePair::from_mats(dx.clone(), self.geom_y.dense()))
+                }
+            },
+        }
+        self.batch = None;
+        overwrite_dense_geom(&mut self.geom_x, dx);
+        Ok(())
     }
 
     fn apply_cost(&self) -> f64 {
@@ -360,6 +538,76 @@ mod tests {
         let mut out = Mat::full(6, 6, 9.0);
         be.apply(&gamma, &mut out).unwrap();
         assert!(out.as_slice().iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn batched_factored_apply_is_bitwise_sequential() {
+        let gx = Geometry::Dense(dense_dist_1d(&Grid1d::unit(15), 2));
+        let gy = Geometry::Dense(dense_dist_1d(&Grid1d::unit(12), 2));
+        let mut be = LowRankBackend::new(gx, gy, Parallelism::SERIAL).unwrap();
+        assert!(be.ranks().is_some(), "rank-3 inputs must factor");
+        let mut rng = Rng::seeded(21);
+        let gammas: Vec<Mat> = (0..3)
+            .map(|_| Mat::from_fn(15, 12, |_, _| rng.uniform()))
+            .collect();
+        let mut seq: Vec<Mat> = (0..3).map(|_| Mat::zeros(15, 12)).collect();
+        for (g, o) in gammas.iter().zip(seq.iter_mut()) {
+            be.apply(g, o).unwrap();
+        }
+        let refs: Vec<&Mat> = gammas.iter().collect();
+        let mut batched: Vec<Mat> = (0..3).map(|_| Mat::zeros(15, 12)).collect();
+        be.apply_batch(&refs, &mut batched).unwrap();
+        for (s, b) in seq.iter().zip(&batched) {
+            assert_eq!(s.as_slice(), b.as_slice());
+        }
+    }
+
+    #[test]
+    fn swap_dense_x_refactorizes_only_x() {
+        // Factored → factored swap: new X factors, cached Y factors.
+        let d0 = dense_dist_1d(&Grid1d::unit(14), 2);
+        let d1 = d0.map(|x| 2.0 * x + 0.25); // still exact rank ≤ 3
+        let gy = Geometry::Dense(dense_dist_1d(&Grid1d::unit(10), 2));
+        let mut swapped =
+            LowRankBackend::new(Geometry::Dense(d0), gy.clone(), Parallelism::SERIAL).unwrap();
+        swapped.swap_dense_x(&d1).unwrap();
+        let mut fresh =
+            LowRankBackend::new(Geometry::Dense(d1.clone()), gy.clone(), Parallelism::SERIAL)
+                .unwrap();
+        assert_eq!(swapped.ranks(), fresh.ranks());
+        let mut rng = Rng::seeded(31);
+        let gamma = Mat::from_fn(14, 10, |_, _| rng.uniform());
+        let (mut a, mut b) = (Mat::zeros(14, 10), Mat::zeros(14, 10));
+        swapped.apply(&gamma, &mut a).unwrap();
+        fresh.apply(&gamma, &mut b).unwrap();
+        assert_eq!(a.as_slice(), b.as_slice());
+
+        // Dense-fallback → dense-fallback swap stays in place (the
+        // full-rank |i−j| geometry never factors).
+        let f0 = dense_dist_1d(&Grid1d::unit(14), 1);
+        let f1 = f0.map(|x| x + 0.5);
+        let gy_full = Geometry::Dense(dense_dist_1d(&Grid1d::unit(10), 1));
+        let mut dense_swap =
+            LowRankBackend::new(Geometry::Dense(f0), gy_full.clone(), Parallelism::SERIAL)
+                .unwrap();
+        assert_eq!(dense_swap.ranks(), None);
+        dense_swap.swap_dense_x(&f1).unwrap();
+        let mut dense_fresh =
+            LowRankBackend::new(Geometry::Dense(f1.clone()), gy_full, Parallelism::SERIAL)
+                .unwrap();
+        let (mut a, mut b) = (Mat::zeros(14, 10), Mat::zeros(14, 10));
+        dense_swap.apply(&gamma, &mut a).unwrap();
+        dense_fresh.apply(&gamma, &mut b).unwrap();
+        assert_eq!(a.as_slice(), b.as_slice());
+    }
+
+    #[test]
+    fn epsilon_derived_tolerance_is_clamped() {
+        assert_eq!(LowRankOptions::for_epsilon(1e3).tol, 1e-10);
+        assert_eq!(LowRankOptions::for_epsilon(1e-9).tol, 1e-13);
+        let mid = LowRankOptions::for_epsilon(2e-3).tol;
+        assert!((mid - 2e-12).abs() < 1e-25, "got {mid:e}");
+        assert_eq!(LowRankOptions::for_epsilon(0.05).max_rank, 0);
     }
 
     #[test]

@@ -64,6 +64,48 @@ pub trait GradientBackend: Send {
     /// to accelerate.
     fn apply(&mut self, gamma: &Mat, out: &mut Mat) -> Result<()>;
 
+    /// Batched apply: `outs[b] = D_X · gammas[b] · D_Y` for every plan.
+    ///
+    /// The contract is **bit-for-bit equivalence** with calling
+    /// [`GradientBackend::apply`] once per plan (asserted by
+    /// `tests/batched_apply.rs`); the point of overriding is to fuse
+    /// passes over the shared factors/kernel so same-geometry jobs
+    /// (the barycenter's S couplings, the coordinator's same-variant
+    /// runs) amortize one walk of the operator across the whole batch.
+    /// The default is the sequential loop.
+    fn apply_batch(&mut self, gammas: &[&Mat], outs: &mut [Mat]) -> Result<()> {
+        if gammas.len() != outs.len() {
+            return Err(Error::Invalid(format!(
+                "apply_batch: {} plans but {} outputs",
+                gammas.len(),
+                outs.len()
+            )));
+        }
+        for (gamma, out) in gammas.iter().zip(outs.iter_mut()) {
+            self.apply(gamma, out)?;
+        }
+        Ok(())
+    }
+
+    /// Replace the **dense X-side** distance matrix in place, keeping
+    /// every Y-side precomputation (densified grids, scan plans,
+    /// low-rank factors). This is the barycenter's rebind path: per
+    /// outer update only the free support matrix `D` changes, so
+    /// rebuilding the whole backend re-densified/re-factorized an
+    /// unchanged structured side every (outer update × input).
+    ///
+    /// The replacement must match the bound X side's shape, and the
+    /// X side must be [`Geometry::Dense`]. After a successful swap the
+    /// backend behaves exactly as if freshly constructed over
+    /// `(Dense(dx), geom_y)`. Backends without a dense X side return
+    /// `Err`; the default refuses (custom backends opt in).
+    fn swap_dense_x(&mut self, dx: &Mat) -> Result<()> {
+        let _ = dx;
+        Err(Error::Invalid(
+            "this backend does not support swapping its dense X side".into(),
+        ))
+    }
+
     /// Constant term halves: `cx = (D_X⊙D_X)·u`, `cy = (D_Y⊙D_Y)·v`,
     /// so that `C₁[i,p] = 2(cx[i] + cy[p])` (paper §2.1). All backends
     /// share the geometry's own squared-distance apply so plan
@@ -146,10 +188,46 @@ impl DensePair {
         Self::from_mats(geom_x.dense(), geom_y.dense())
     }
 
+    /// Overwrite `D_X` in place (same shape; the barycenter swap path).
+    pub(crate) fn swap_dx(&mut self, dx: &Mat) -> Result<()> {
+        if dx.shape() != self.dx.shape() {
+            return Err(Error::shape(
+                "DensePair::swap_dx",
+                format!("{:?}", self.dx.shape()),
+                format!("{:?}", dx.shape()),
+            ));
+        }
+        self.dx.as_mut_slice().copy_from_slice(dx.as_slice());
+        Ok(())
+    }
+
     /// `out = D_X Γ D_Y` as two dense products.
     pub(crate) fn apply(&mut self, gamma: &Mat, out: &mut Mat, par: Parallelism) -> Result<()> {
         matmul_into(&self.dx, gamma, &mut self.tmp, par)?;
         matmul_into(&self.tmp, &self.dy, out, par)
+    }
+}
+
+/// Shared [`GradientBackend::swap_dense_x`] validation: the bound X
+/// side must be `Dense` and the replacement must match its shape.
+pub(crate) fn check_dense_x_swap(geom_x: &Geometry, dx: &Mat) -> Result<()> {
+    match geom_x {
+        Geometry::Dense(old) if old.shape() == dx.shape() => Ok(()),
+        Geometry::Dense(old) => Err(Error::shape(
+            "swap_dense_x",
+            format!("{:?}", old.shape()),
+            format!("{:?}", dx.shape()),
+        )),
+        _ => Err(Error::Invalid(
+            "swap_dense_x: the bound X side is not a dense geometry".into(),
+        )),
+    }
+}
+
+/// Overwrite a `Geometry::Dense` in place (shape pre-validated).
+pub(crate) fn overwrite_dense_geom(geom: &mut Geometry, d: &Mat) {
+    if let Geometry::Dense(m) = geom {
+        m.as_mut_slice().copy_from_slice(d.as_slice());
     }
 }
 

@@ -4,13 +4,35 @@
 //! as two dense products, `O(MN(M+N))` per apply. Exists so every
 //! speedup table and exactness check (`‖P_Fa − P‖_F`) has a reference
 //! that shares the rest of the solver verbatim.
+//!
+//! The batched apply fuses both cubic products across the whole batch:
+//! `D_X·[Γ₁ … Γ_B]` as one product over the column-stacked plans, then
+//! `[T₁; …; T_B]·D_Y` over the row-stacked intermediate — `D_X` and
+//! `D_Y` are each streamed **once per batch** instead of once per plan,
+//! which is the whole point of the coordinator handing same-geometry
+//! jobs to one backend. Per-entry accumulation order is identical to
+//! the per-plan products, so the batch is bit-for-bit the sequential
+//! loop.
 
-use super::{DensePair, GradientBackend};
+use super::{check_dense_x_swap, overwrite_dense_geom, DensePair, GradientBackend};
 use crate::error::{Error, Result};
 use crate::gw::geometry::Geometry;
 use crate::gw::gradient::GradientKind;
-use crate::linalg::Mat;
+use crate::linalg::{matmul_into, Mat};
 use crate::parallel::Parallelism;
+
+/// Stacked buffers for the fused batched apply (grown on demand; one
+/// reallocation per batch-size change, zero per apply).
+struct NaiveBatch {
+    /// `[Γ₁ | … | Γ_B]` column-stacked, `M × B·N`.
+    gstack: Mat,
+    /// `D_X·gstack`, `M × B·N`.
+    tstack: Mat,
+    /// The same intermediate row-stacked `[T₁; …; T_B]`, `B·M × N`.
+    mid: Mat,
+    /// `mid·D_Y`, `B·M × N` (rows `b·M..(b+1)·M` are `outs[b]`).
+    ostack: Mat,
+}
 
 /// Dense-product gradient backend over a bound geometry pair.
 pub struct NaiveBackend {
@@ -21,6 +43,7 @@ pub struct NaiveBackend {
     /// allocation-free).
     pair: DensePair,
     par: Parallelism,
+    batch: Option<NaiveBatch>,
 }
 
 impl NaiveBackend {
@@ -32,7 +55,20 @@ impl NaiveBackend {
             geom_y,
             pair,
             par,
+            batch: None,
         }
+    }
+
+    fn check_shapes(&self, gamma: &Mat, out: &Mat, what: &str) -> Result<()> {
+        let expect = (self.geom_x.len(), self.geom_y.len());
+        if gamma.shape() != expect || out.shape() != expect {
+            return Err(Error::shape(
+                what,
+                format!("{}x{}", expect.0, expect.1),
+                format!("{:?} / {:?}", gamma.shape(), out.shape()),
+            ));
+        }
+        Ok(())
     }
 }
 
@@ -50,15 +86,73 @@ impl GradientBackend for NaiveBackend {
     }
 
     fn apply(&mut self, gamma: &Mat, out: &mut Mat) -> Result<()> {
-        let expect = (self.geom_x.len(), self.geom_y.len());
-        if gamma.shape() != expect || out.shape() != expect {
-            return Err(Error::shape(
-                "NaiveBackend::apply",
-                format!("{}x{}", expect.0, expect.1),
-                format!("{:?} / {:?}", gamma.shape(), out.shape()),
-            ));
-        }
+        self.check_shapes(gamma, out, "NaiveBackend::apply")?;
         self.pair.apply(gamma, out, self.par)
+    }
+
+    fn apply_batch(&mut self, gammas: &[&Mat], outs: &mut [Mat]) -> Result<()> {
+        let bsz = gammas.len();
+        if bsz != outs.len() {
+            return Err(Error::Invalid(format!(
+                "apply_batch: {bsz} plans but {} outputs",
+                outs.len()
+            )));
+        }
+        for (gamma, out) in gammas.iter().zip(outs.iter()) {
+            self.check_shapes(gamma, out, "NaiveBackend::apply_batch")?;
+        }
+        if bsz <= 1 {
+            for (gamma, out) in gammas.iter().zip(outs.iter_mut()) {
+                self.pair.apply(gamma, out, self.par)?;
+            }
+            return Ok(());
+        }
+        let (m, n) = (self.geom_x.len(), self.geom_y.len());
+        let rebuild = match &self.batch {
+            Some(b) => b.gstack.shape() != (m, bsz * n),
+            None => true,
+        };
+        if rebuild {
+            self.batch = Some(NaiveBatch {
+                gstack: Mat::zeros(m, bsz * n),
+                tstack: Mat::zeros(m, bsz * n),
+                mid: Mat::zeros(bsz * m, n),
+                ostack: Mat::zeros(bsz * m, n),
+            });
+        }
+        let nb = self.batch.as_mut().expect("just ensured");
+        // 1) column-stack the plans.
+        for (b, gamma) in gammas.iter().enumerate() {
+            for i in 0..m {
+                nb.gstack.row_mut(i)[b * n..(b + 1) * n].copy_from_slice(gamma.row(i));
+            }
+        }
+        // 2) one pass of D_X over the whole batch.
+        matmul_into(&self.pair.dx, &nb.gstack, &mut nb.tstack, self.par)?;
+        // 3) re-stack the intermediate by rows.
+        for b in 0..bsz {
+            for i in 0..m {
+                let src = &nb.tstack.row(i)[b * n..(b + 1) * n];
+                nb.mid.row_mut(b * m + i).copy_from_slice(src);
+            }
+        }
+        // 4) one pass of D_Y over the whole batch.
+        matmul_into(&nb.mid, &self.pair.dy, &mut nb.ostack, self.par)?;
+        // 5) scatter.
+        for (b, out) in outs.iter_mut().enumerate() {
+            let os = out.as_mut_slice();
+            for i in 0..m {
+                os[i * n..(i + 1) * n].copy_from_slice(nb.ostack.row(b * m + i));
+            }
+        }
+        Ok(())
+    }
+
+    fn swap_dense_x(&mut self, dx: &Mat) -> Result<()> {
+        check_dense_x_swap(&self.geom_x, dx)?;
+        self.pair.swap_dx(dx)?;
+        overwrite_dense_geom(&mut self.geom_x, dx);
+        Ok(())
     }
 
     fn apply_cost(&self) -> f64 {
@@ -71,6 +165,7 @@ impl GradientBackend for NaiveBackend {
 mod tests {
     use super::*;
     use crate::fgc::naive::dxgdy_dense;
+    use crate::grid::{dense_dist_1d, Grid1d};
     use crate::linalg::frobenius_diff;
     use crate::prng::Rng;
 
@@ -94,5 +189,52 @@ mod tests {
         let gamma = Mat::zeros(6, 5);
         let mut out = Mat::zeros(6, 6);
         assert!(be.apply(&gamma, &mut out).is_err());
+    }
+
+    #[test]
+    fn batched_apply_is_bitwise_sequential() {
+        let gx = Geometry::grid_1d_unit(11, 1);
+        let gy = Geometry::grid_1d_unit(7, 1);
+        let mut rng = Rng::seeded(44);
+        let gammas: Vec<Mat> = (0..4)
+            .map(|_| Mat::from_fn(11, 7, |_, _| rng.uniform() - 0.3))
+            .collect();
+        let mut be = NaiveBackend::new(gx, gy, Parallelism::SERIAL);
+        let mut seq: Vec<Mat> = (0..4).map(|_| Mat::zeros(11, 7)).collect();
+        for (g, o) in gammas.iter().zip(seq.iter_mut()) {
+            be.apply(g, o).unwrap();
+        }
+        let refs: Vec<&Mat> = gammas.iter().collect();
+        let mut batched: Vec<Mat> = (0..4).map(|_| Mat::zeros(11, 7)).collect();
+        be.apply_batch(&refs, &mut batched).unwrap();
+        for (s, b) in seq.iter().zip(&batched) {
+            assert_eq!(s.as_slice(), b.as_slice());
+        }
+    }
+
+    #[test]
+    fn swap_dense_x_matches_fresh_build() {
+        let d0 = dense_dist_1d(&Grid1d::unit(10), 2);
+        let d1 = d0.map(|x| 1.5 * x + 0.1);
+        let gy = Geometry::grid_1d_unit(8, 1);
+        let mut swapped = NaiveBackend::new(Geometry::Dense(d0), gy.clone(), Parallelism::SERIAL);
+        swapped.swap_dense_x(&d1).unwrap();
+        let mut fresh = NaiveBackend::new(Geometry::Dense(d1.clone()), gy, Parallelism::SERIAL);
+        assert_eq!(swapped.geom_x(), fresh.geom_x());
+        let mut rng = Rng::seeded(9);
+        let gamma = Mat::from_fn(10, 8, |_, _| rng.uniform());
+        let (mut a, mut b) = (Mat::zeros(10, 8), Mat::zeros(10, 8));
+        swapped.apply(&gamma, &mut a).unwrap();
+        fresh.apply(&gamma, &mut b).unwrap();
+        assert_eq!(a.as_slice(), b.as_slice());
+        // Grid X side refuses the swap.
+        let mut grid_x = NaiveBackend::new(
+            Geometry::grid_1d_unit(10, 1),
+            Geometry::grid_1d_unit(8, 1),
+            Parallelism::SERIAL,
+        );
+        assert!(grid_x.swap_dense_x(&d1).is_err());
+        // Shape mismatch refuses too.
+        assert!(swapped.swap_dense_x(&Mat::zeros(3, 3)).is_err());
     }
 }

@@ -9,28 +9,33 @@
 //! D   ← Σ_s λ_s · (Γ_s D_s Γ_sᵀ) ⊘ (p pᵀ)
 //! ```
 //!
-//! The inner GW solves run through the shared mirror-descent driver
-//! via [`EntropicGw::solve_into`], with one persistent [`GwWorkspace`]
-//! per input reused across outer updates (only the gradient operator
-//! is rebound when the free matrix `D` changes — see
-//! [`GwWorkspace::rebind_operator`]); the FGC backend applies the
-//! structured `D_s` side of those gradients by scans even though `D`
-//! is dense. The barycenter update itself computes `A_s = Γ_s D_s` the
-//! same way (scans on the FGC path, dense products otherwise) before
-//! one dense `A_s Γ_sᵀ`; all dense products honour the configured
-//! thread budget. The free matrix `D` has no grid structure, so —
-//! exactly as the paper's conclusion implies — only the `D_s` side
-//! speeds up.
+//! This loop is the first consumer of the **batched** gradient
+//! backends: per outer update, inputs sharing a grid shape `(n, k)`
+//! solve their S couplings against the *one* current support `D` in
+//! lockstep over a single shared operator
+//! ([`EntropicGw::solve_batch_into`]), so every mirror-descent
+//! iteration makes one fused pass over the shared factors instead of
+//! S independent ones — bit-for-bit the sequential plans. Between
+//! outer updates only the free matrix `D` changes; the group's
+//! persistent [`GwBatchWorkspace`] swaps it **in place**
+//! ([`GwBatchWorkspace::swap_dense_x`]), keeping the structured side's
+//! densified/factored state instead of rebuilding the backend per
+//! (outer update × input). The barycenter update itself computes
+//! `A_s = Γ_s D_s` by scans on the FGC path and against a per-group
+//! cached dense `D_s` otherwise; all dense products honour the
+//! configured thread budget. The free matrix `D` has no grid
+//! structure, so — exactly as the paper's conclusion implies — only
+//! the `D_s` side speeds up.
 //!
-//! [`GwWorkspace`]: super::entropic::GwWorkspace
-//! [`GwWorkspace::rebind_operator`]: super::entropic::GwWorkspace::rebind_operator
+//! [`GwBatchWorkspace`]: super::entropic::GwBatchWorkspace
+//! [`GwBatchWorkspace::swap_dense_x`]: super::entropic::GwBatchWorkspace::swap_dense_x
 
-use super::entropic::{EntropicGw, GwConfig, GwWorkspace};
+use super::entropic::{BatchJob, EntropicGw, GwBatchWorkspace, GwConfig};
 use super::geometry::Geometry;
-use super::gradient::{GradientKind, PairOperator};
+use super::gradient::GradientKind;
 use crate::error::{Error, Result};
 use crate::fgc::scan::dtilde_rows;
-use crate::grid::{Binomial, Grid1d};
+use crate::grid::{dense_dist_1d, Binomial, Grid1d};
 use crate::linalg::{matmul_par, Mat};
 
 /// Barycenter iteration configuration.
@@ -97,39 +102,82 @@ pub fn gw_barycenter_1d(
     let par = cfg.gw.parallelism();
     let p = vec![1.0 / support_n as f64; support_n];
     // Initialize D from the first input's grid metric at matching size.
-    let mut d = crate::grid::dense_dist_1d(&Grid1d::unit(support_n), inputs[0].k);
+    let mut d = dense_dist_1d(&Grid1d::unit(support_n), inputs[0].k);
 
-    // One persistent workspace per input, built lazily on the first
-    // outer update and rebound to the fresh `D` afterwards.
-    let mut workspaces: Vec<Option<GwWorkspace>> = inputs.iter().map(|_| None).collect();
+    // Group inputs by grid shape `(n, k)` in first-appearance order:
+    // each group's S couplings share one geometry pair per outer
+    // update, so they batch over one operator.
+    let mut groups: Vec<((usize, u32), Vec<usize>)> = Vec::new();
+    for (s, inp) in inputs.iter().enumerate() {
+        let key = (inp.n, inp.k);
+        if let Some((_, members)) = groups.iter_mut().find(|(k2, _)| *k2 == key) {
+            members.push(s);
+        } else {
+            groups.push((key, vec![s]));
+        }
+    }
+    // Per-group dense D_s for the update step (unchanged across outer
+    // updates — densified once, not per (update × input)). The FGC
+    // path applies D_s by scans and never materializes it.
+    let ds_dense: Vec<Option<Mat>> = groups
+        .iter()
+        .map(|((n, k), _)| match kind {
+            GradientKind::Fgc => None,
+            GradientKind::Naive | GradientKind::LowRank => {
+                Some(dense_dist_1d(&Grid1d::unit(*n), *k))
+            }
+        })
+        .collect();
+    // One persistent batched workspace per group, built lazily on the
+    // first outer update; afterwards only the dense `D` side is
+    // swapped in place.
+    let mut workspaces: Vec<Option<GwBatchWorkspace>> = groups.iter().map(|_| None).collect();
+
     let mut couplings: Vec<Mat> = Vec::new();
     for _ in 0..cfg.iters {
-        couplings.clear();
-        let mut d_next = Mat::zeros(support_n, support_n);
-        for (inp, slot) in inputs.iter().zip(workspaces.iter_mut()) {
+        // --- 1) all couplings, group-batched against the current D ---
+        let mut plans: Vec<Option<Mat>> = (0..inputs.len()).map(|_| None).collect();
+        for (gi, ((gn, gk), members)) in groups.iter().enumerate() {
             let geom_x = Geometry::Dense(d.clone());
-            let geom_y = Geometry::grid_1d_unit(inp.n, inp.k);
-            let solver = EntropicGw::new(geom_x.clone(), geom_y.clone(), cfg.gw);
-            let sol = match slot {
+            let geom_y = Geometry::grid_1d_unit(*gn, *gk);
+            let solver = EntropicGw::new(geom_x, geom_y, cfg.gw);
+            let jobs: Vec<BatchJob> = members
+                .iter()
+                .map(|&s| BatchJob::gw(&p, &inputs[s].weights))
+                .collect();
+            let slot = &mut workspaces[gi];
+            let sols = match slot {
                 Some(ws) => {
-                    ws.rebind_operator(PairOperator::with_parallelism(
-                        geom_x, geom_y, kind, par,
-                    )?)?;
-                    solver.solve_into(&p, &inp.weights, ws)?
+                    ws.swap_dense_x(&d)?;
+                    solver.solve_batch_into(&jobs, ws)?
                 }
                 None => {
-                    let ws = slot.insert(solver.workspace(kind)?);
-                    solver.solve_into(&p, &inp.weights, ws)?
+                    let ws = slot.insert(solver.batch_workspace(kind, members.len())?);
+                    solver.solve_batch_into(&jobs, ws)?
                 }
             };
+            for (&s, sol) in members.iter().zip(sols) {
+                plans[s] = Some(sol.plan);
+            }
+        }
+        // --- 2) barycenter update, accumulated in input order ---
+        couplings.clear();
+        let mut d_next = Mat::zeros(support_n, support_n);
+        let mut group_of = vec![0usize; inputs.len()];
+        for (gi, (_, members)) in groups.iter().enumerate() {
+            for &s in members {
+                group_of[s] = gi;
+            }
+        }
+        for (s, inp) in inputs.iter().enumerate() {
+            let gamma = plans[s].take().expect("coupling solved above");
             // A = Γ_s · D_s : grid side applied fast on the FGC path
             // (scans along the contiguous rows of Γ_s, O(k²·N·n_s)
-            // instead of O(N·n_s²)); dense product otherwise.
-            let gamma = sol.plan;
-            let grid = Grid1d::unit(inp.n);
+            // instead of O(N·n_s²)); cached dense product otherwise.
             let mut a = Mat::zeros(support_n, inp.n);
             match kind {
                 GradientKind::Fgc => {
+                    let grid = Grid1d::unit(inp.n);
                     let binom = Binomial::new(inp.k as usize);
                     dtilde_rows(
                         inp.k,
@@ -140,17 +188,17 @@ pub fn gw_barycenter_1d(
                         a.as_mut_slice(),
                         &binom,
                     )?;
-                    let s = grid.scale(inp.k);
+                    let sc = grid.scale(inp.k);
                     for x in a.as_mut_slice() {
-                        *x *= s;
+                        *x *= sc;
                     }
                 }
                 GradientKind::Naive | GradientKind::LowRank => {
                     // LowRank has nothing to gain here: D_s is a grid
                     // matrix applied once per outer update, so the
                     // dense product is the honest baseline cost.
-                    let ds = crate::grid::dense_dist_1d(&grid, inp.k);
-                    a = matmul_par(&gamma, &ds, par)?;
+                    let ds = ds_dense[group_of[s]].as_ref().expect("cached above");
+                    a = matmul_par(&gamma, ds, par)?;
                 }
             }
             // Γ_s D_s Γ_sᵀ (dense final product — D is unstructured).
@@ -239,6 +287,49 @@ mod tests {
         let b = gw_barycenter_1d(&inputs, 9, &cfg(), GradientKind::Naive).unwrap();
         let d = crate::linalg::frobenius_diff(&a.distance, &b.distance).unwrap();
         assert!(d < 1e-8, "diff={d}");
+    }
+
+    #[test]
+    fn same_shape_inputs_batch_and_match_sequential() {
+        // Three inputs sharing (n, k) take the lockstep batched path;
+        // the result must be bit-for-bit the straight-line loop of
+        // independent solves (same update algebra, same order).
+        let inputs = [
+            input(11, 1, 21, 1.0),
+            input(11, 1, 22, 0.5),
+            input(11, 1, 23, 2.0),
+        ];
+        let support_n = 10;
+        let c = cfg();
+        let res = gw_barycenter_1d(&inputs, support_n, &c, GradientKind::Naive).unwrap();
+
+        // Straight-line reference (fresh solver + workspace per solve).
+        let lambda_sum: f64 = inputs.iter().map(|i| i.lambda).sum();
+        let p = vec![1.0 / support_n as f64; support_n];
+        let mut d = dense_dist_1d(&Grid1d::unit(support_n), 1);
+        for _ in 0..c.iters {
+            let mut d_next = Mat::zeros(support_n, support_n);
+            for inp in &inputs {
+                let solver = EntropicGw::new(
+                    Geometry::Dense(d.clone()),
+                    Geometry::grid_1d_unit(inp.n, inp.k),
+                    c.gw,
+                );
+                let sol = solver.solve(&p, &inp.weights, GradientKind::Naive).unwrap();
+                let ds = dense_dist_1d(&Grid1d::unit(inp.n), inp.k);
+                let a = crate::linalg::matmul(&sol.plan, &ds).unwrap();
+                let update = crate::linalg::matmul(&a, &sol.plan.transpose()).unwrap();
+                d_next.add_scaled(inp.lambda / lambda_sum, &update).unwrap();
+            }
+            for i in 0..support_n {
+                for j in 0..support_n {
+                    d_next[(i, j)] /= p[i] * p[j];
+                }
+            }
+            d = d_next;
+        }
+        assert_eq!(res.distance.as_slice(), d.as_slice(), "batched path drifted");
+        assert_eq!(res.couplings.len(), inputs.len());
     }
 
     #[test]

@@ -32,7 +32,7 @@
 //! [`GradientBackend`]: super::backend::GradientBackend
 
 use super::driver::{run_mirror_descent, MirrorProblem};
-use super::geometry::Geometry;
+use super::geometry::{Geometry, SqApplyScratch};
 use super::gradient::{GradientKind, PairOperator};
 use crate::error::{Error, Result};
 use crate::grid::Grid1d;
@@ -146,12 +146,15 @@ pub struct CootSolution {
 enum CootOps {
     /// Both sides are grid distance matrices with matching exponents:
     /// cross terms through the gradient backend, squared terms through
-    /// the grid's `(D⊙D)·w` scans. Nothing dense is built (except by
+    /// the grid's `(D⊙D)·w` scans (into workspace scratch — no
+    /// per-iteration allocation). Nothing dense is built (except by
     /// the naive backend itself).
     Grid {
         op: PairOperator,
         gx: Geometry,
         gy: Geometry,
+        sqx: SqApplyScratch,
+        sqy: SqApplyScratch,
     },
     /// General dense data: explicit products with cached transposes
     /// and squared matrices.
@@ -234,6 +237,8 @@ impl CootWorkspace {
             {
                 CootOps::Grid {
                     op: PairOperator::with_parallelism(gx.clone(), gy.clone(), kind, par)?,
+                    sqx: SqApplyScratch::for_geometry(&gx),
+                    sqy: SqApplyScratch::for_geometry(&gy),
                     gx,
                     gy,
                 }
@@ -348,47 +353,35 @@ impl CootOps {
     }
 
     /// `ax = (X⊙X)·w` (sample step, `w = πᶠ1`).
-    fn sq_x_rows(&self, w: &[f64], out: &mut [f64]) -> Result<()> {
+    fn sq_x_rows(&mut self, w: &[f64], out: &mut [f64]) -> Result<()> {
         match self {
             // Squared grid distances are grid matrices with exponent 2k.
-            CootOps::Grid { gx, .. } => {
-                out.copy_from_slice(&gx.sq_apply(w)?);
-                Ok(())
-            }
+            CootOps::Grid { gx, sqx, .. } => gx.sq_apply_into(w, out, sqx),
             CootOps::Dense { x2, .. } => matvec_into(x2, w, out),
         }
     }
 
     /// `by = (Y⊙Y)·w` (sample step, `w = πᶠᵀ1`).
-    fn sq_y_rows(&self, w: &[f64], out: &mut [f64]) -> Result<()> {
+    fn sq_y_rows(&mut self, w: &[f64], out: &mut [f64]) -> Result<()> {
         match self {
-            CootOps::Grid { gy, .. } => {
-                out.copy_from_slice(&gy.sq_apply(w)?);
-                Ok(())
-            }
+            CootOps::Grid { gy, sqy, .. } => gy.sq_apply_into(w, out, sqy),
             CootOps::Dense { y2, .. } => matvec_into(y2, w, out),
         }
     }
 
     /// `axf = (X⊙X)ᵀ·w` (feature step, `w = πˢ1`; grid matrices are
     /// symmetric so the transpose is free there).
-    fn sq_x_cols(&self, w: &[f64], out: &mut [f64]) -> Result<()> {
+    fn sq_x_cols(&mut self, w: &[f64], out: &mut [f64]) -> Result<()> {
         match self {
-            CootOps::Grid { gx, .. } => {
-                out.copy_from_slice(&gx.sq_apply(w)?);
-                Ok(())
-            }
+            CootOps::Grid { gx, sqx, .. } => gx.sq_apply_into(w, out, sqx),
             CootOps::Dense { x2, .. } => matvec_t_into(x2, w, out),
         }
     }
 
     /// `byf = (Y⊙Y)ᵀ·w` (feature step, `w = πˢᵀ1`).
-    fn sq_y_cols(&self, w: &[f64], out: &mut [f64]) -> Result<()> {
+    fn sq_y_cols(&mut self, w: &[f64], out: &mut [f64]) -> Result<()> {
         match self {
-            CootOps::Grid { gy, .. } => {
-                out.copy_from_slice(&gy.sq_apply(w)?);
-                Ok(())
-            }
+            CootOps::Grid { gy, sqy, .. } => gy.sq_apply_into(w, out, sqy),
             CootOps::Dense { y2, .. } => matvec_t_into(y2, w, out),
         }
     }

@@ -15,7 +15,7 @@
 //! paths, which is what makes the `‖P_Fa − P‖_F` exactness columns of
 //! the paper meaningful.
 
-use super::backend::GradientBackend;
+use super::backend::{GradientBackend, LowRankBackend, LowRankOptions};
 use super::driver::{run_mirror_descent, MirrorProblem};
 use super::geometry::Geometry;
 use super::gradient::{GradientKind, PairOperator};
@@ -99,11 +99,22 @@ impl GwWorkspace {
         self.gamma.shape()
     }
 
+    /// Source-side geometry of the bound operator.
+    pub fn geom_x(&self) -> &Geometry {
+        self.op.geom_x()
+    }
+
+    /// Target-side geometry of the bound operator.
+    pub fn geom_y(&self) -> &Geometry {
+        self.op.geom_y()
+    }
+
     /// Swap the gradient operator, keeping every other buffer (the
     /// Sinkhorn workspace and the Γ/∇/Π/C₁ matrices). This is how the
-    /// barycenter loop reuses one workspace per input while the free
-    /// support matrix `D` changes every outer update. The new operator
-    /// must serve the same `(M, N)` shape.
+    /// barycenter loop historically reused one workspace per input
+    /// while the free support matrix `D` changed every outer update
+    /// (the cheaper in-place path is [`GwWorkspace::swap_dense_x`]).
+    /// The new operator must serve the same `(M, N)` shape.
     pub fn rebind_operator(&mut self, op: PairOperator) -> Result<()> {
         let shape = (op.geom_x().len(), op.geom_y().len());
         if shape != self.gamma.shape() {
@@ -115,6 +126,14 @@ impl GwWorkspace {
         }
         self.op = op;
         Ok(())
+    }
+
+    /// Swap the operator's dense X-side matrix **in place**, keeping
+    /// every Y-side precomputation and every solver buffer — no
+    /// backend rebuild, no re-densified/re-factorized structured side
+    /// (see [`GradientBackend::swap_dense_x`]).
+    pub fn swap_dense_x(&mut self, dx: &Mat) -> Result<()> {
+        self.op.swap_dense_x(dx)
     }
 }
 
@@ -143,6 +162,9 @@ pub struct EntropicGw {
     geom_x: Geometry,
     geom_y: Geometry,
     cfg: GwConfig,
+    /// Explicit low-rank factorization knobs; `None` derives the
+    /// tolerance from ε ([`LowRankOptions::for_epsilon`]).
+    lowrank: Option<LowRankOptions>,
 }
 
 impl EntropicGw {
@@ -152,7 +174,33 @@ impl EntropicGw {
             geom_x,
             geom_y,
             cfg,
+            lowrank: None,
         }
+    }
+
+    /// Override the low-rank backend's factorization knobs
+    /// (`solver.lowrank_tol` / `--lowrank-tol` land here). Without
+    /// this, the tolerance defaults from the solver's ε.
+    pub fn with_lowrank_options(mut self, opts: LowRankOptions) -> Self {
+        self.lowrank = Some(opts);
+        self
+    }
+
+    /// The low-rank factorization knobs this solver builds lowrank
+    /// backends with (explicit override, or ε-derived).
+    pub fn lowrank_options(&self) -> LowRankOptions {
+        self.lowrank
+            .unwrap_or_else(|| LowRankOptions::for_epsilon(self.cfg.epsilon))
+    }
+
+    /// Source-side geometry.
+    pub fn geom_x(&self) -> &Geometry {
+        &self.geom_x
+    }
+
+    /// Target-side geometry.
+    pub fn geom_y(&self) -> &Geometry {
+        &self.geom_y
     }
 
     /// 1D unit grids of sizes `m`, `n` with exponent `k` (§4.1 setup).
@@ -170,16 +218,34 @@ impl EntropicGw {
         &self.cfg
     }
 
+    /// Build the gradient operator for `kind` over this solver's
+    /// geometry pair, honouring the solver-level low-rank knobs.
+    fn build_operator(&self, kind: GradientKind) -> Result<PairOperator> {
+        let par = self.cfg.parallelism();
+        match kind {
+            GradientKind::LowRank => {
+                let be = LowRankBackend::with_options(
+                    self.geom_x.clone(),
+                    self.geom_y.clone(),
+                    par,
+                    &self.lowrank_options(),
+                )?;
+                Ok(PairOperator::from_backend(Box::new(be)))
+            }
+            _ => PairOperator::with_parallelism(
+                self.geom_x.clone(),
+                self.geom_y.clone(),
+                kind,
+                par,
+            ),
+        }
+    }
+
     /// Build a reusable workspace for this solver's geometry pair.
     /// One allocation site for everything the solve loop touches;
     /// reuse it across solves via [`EntropicGw::solve_into`].
     pub fn workspace(&self, kind: GradientKind) -> Result<GwWorkspace> {
-        let op = PairOperator::with_parallelism(
-            self.geom_x.clone(),
-            self.geom_y.clone(),
-            kind,
-            self.cfg.parallelism(),
-        )?;
+        let op = self.build_operator(kind)?;
         self.workspace_from_operator(op)
     }
 
@@ -344,6 +410,304 @@ impl EntropicGw {
             sinkhorn_time: stats.inner_time,
             total_time: t_start.elapsed(),
         })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Batched (lockstep) solves over one shared operator
+// ---------------------------------------------------------------------------
+
+/// One job of a batched solve: marginals plus the optional FGW feature
+/// term. All jobs of a batch share the solver's geometry pair and ε.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchJob<'a> {
+    /// Source marginal (length `M`).
+    pub u: &'a [f64],
+    /// Target marginal (length `N`).
+    pub v: &'a [f64],
+    /// FGW feature cost (`M×N`), `None` for pure GW.
+    pub feature_cost: Option<&'a Mat>,
+    /// Linear/quadratic trade-off θ (`1.0` for pure GW).
+    pub theta: f64,
+}
+
+impl<'a> BatchJob<'a> {
+    /// A pure-GW job.
+    pub fn gw(u: &'a [f64], v: &'a [f64]) -> Self {
+        BatchJob {
+            u,
+            v,
+            feature_cost: None,
+            theta: 1.0,
+        }
+    }
+}
+
+/// Workspace for [`EntropicGw::solve_batch_into`]: **one** gradient
+/// operator shared by the whole batch plus per-job solve state
+/// (Sinkhorn workspace and the Γ/∇/Π/C buffers). Same-geometry jobs
+/// run in lockstep — per outer iteration one
+/// [`PairOperator::dxgdy_batch`] fuses every job's gradient product
+/// over the shared factors/kernel, then each job runs its own inner
+/// Sinkhorn — producing **bit-for-bit** the plans of independent
+/// [`EntropicGw::solve_into`] calls. Capacity grows on demand and is
+/// reused across solves (the coordinator's warm-worker cache and the
+/// barycenter's per-group workspaces hold exactly one of these).
+pub struct GwBatchWorkspace {
+    op: PairOperator,
+    par: Parallelism,
+    sks: Vec<SinkhornWorkspace>,
+    gammas: Vec<Mat>,
+    grads: Vec<Mat>,
+    costs: Vec<Mat>,
+    constants: Vec<Mat>,
+}
+
+impl GwBatchWorkspace {
+    /// The gradient backend this workspace was built for.
+    pub fn kind(&self) -> GradientKind {
+        self.op.kind()
+    }
+
+    /// Problem shape `(M, N)` this workspace serves.
+    pub fn shape(&self) -> (usize, usize) {
+        (self.op.geom_x().len(), self.op.geom_y().len())
+    }
+
+    /// Per-job state slots currently allocated.
+    pub fn capacity(&self) -> usize {
+        self.gammas.len()
+    }
+
+    /// Source-side geometry of the shared operator.
+    pub fn geom_x(&self) -> &Geometry {
+        self.op.geom_x()
+    }
+
+    /// Target-side geometry of the shared operator.
+    pub fn geom_y(&self) -> &Geometry {
+        self.op.geom_y()
+    }
+
+    /// Grow the per-job state to serve at least `batch` jobs.
+    pub fn ensure_capacity(&mut self, batch: usize) {
+        let (m, n) = self.shape();
+        while self.gammas.len() < batch {
+            self.sks.push(SinkhornWorkspace::new(m, n, self.par));
+            self.gammas.push(Mat::zeros(m, n));
+            self.grads.push(Mat::zeros(m, n));
+            self.costs.push(Mat::zeros(m, n));
+            self.constants.push(Mat::zeros(m, n));
+        }
+    }
+
+    /// Swap the shared operator's dense X side in place (the
+    /// barycenter's per-outer-update rebind; see
+    /// [`GradientBackend::swap_dense_x`]).
+    pub fn swap_dense_x(&mut self, dx: &Mat) -> Result<()> {
+        self.op.swap_dense_x(dx)
+    }
+
+    /// Lockstep batch solve against this workspace's **own** bound
+    /// geometry pair, with solver knobs from `cfg`. This is the
+    /// coordinator's warm path: the caller has already verified the
+    /// jobs belong to this workspace's geometry, so no solver (and,
+    /// for dense pairs, no `O(N²)` geometry clone) is constructed per
+    /// batch. [`EntropicGw::solve_batch_into`] is the checked wrapper
+    /// that delegates here after its geometry-identity comparison.
+    pub fn solve_batch(
+        &mut self,
+        cfg: &GwConfig,
+        jobs: &[BatchJob<'_>],
+    ) -> Result<Vec<GwSolution>> {
+        let t_start = Instant::now();
+        if jobs.is_empty() {
+            return Ok(Vec::new());
+        }
+        let (m, n) = self.shape();
+        if self.par != cfg.parallelism() {
+            return Err(Error::Invalid(
+                "GwBatchWorkspace::solve_batch: cfg.threads differs from the workspace's \
+                 thread budget (rebuild the workspace)"
+                    .into(),
+            ));
+        }
+        self.ensure_capacity(jobs.len());
+        let batch = jobs.len();
+        let GwBatchWorkspace {
+            op,
+            sks,
+            gammas,
+            grads,
+            costs,
+            constants,
+            ..
+        } = self;
+        for (j, job) in jobs.iter().enumerate() {
+            if job.u.len() != m || job.v.len() != n {
+                return Err(Error::shape(
+                    "GwBatchWorkspace::solve_batch",
+                    format!("{m} / {n}"),
+                    format!("{} / {}", job.u.len(), job.v.len()),
+                ));
+            }
+            if !(0.0..=1.0).contains(&job.theta) {
+                return Err(Error::Invalid(format!(
+                    "theta must be in [0,1], got {}",
+                    job.theta
+                )));
+            }
+            if let Some(c) = job.feature_cost {
+                if c.shape() != (m, n) {
+                    return Err(Error::shape(
+                        "GwBatchWorkspace::solve_batch (feature cost)",
+                        format!("{m}x{n}"),
+                        format!("{:?}", c.shape()),
+                    ));
+                }
+            }
+            check_distribution(job.u, "u")?;
+            check_distribution(job.v, "v")?;
+            sks[j].reset_regime();
+            op.constant_term(job.u, job.v, job.feature_cost, job.theta, &mut constants[j])?;
+            crate::linalg::outer_into(job.u, job.v, &mut gammas[j])?;
+        }
+
+        let mut inner_counts = vec![0usize; batch];
+        let mut step = BatchStep {
+            op: &mut *op,
+            sks: &mut *sks,
+            gammas: &mut *gammas,
+            grads: &mut *grads,
+            costs: &mut *costs,
+            constants: &mut *constants,
+            jobs,
+            batch,
+            inner_counts: &mut inner_counts,
+            opts: cfg.sinkhorn_options(),
+        };
+        let stats = run_mirror_descent(cfg.outer_iters, &mut step)?;
+
+        let mut out = Vec::with_capacity(batch);
+        for (j, job) in jobs.iter().enumerate() {
+            let objective = match job.feature_cost {
+                Some(c) => fgw_objective(op, &gammas[j], c, job.theta)?,
+                None => gw_objective(op, &gammas[j])?,
+            };
+            out.push(GwSolution {
+                plan: gammas[j].clone(),
+                objective,
+                outer_iterations: stats.outer_iterations,
+                sinkhorn_iterations: inner_counts[j],
+                gradient_time: stats.gradient_time,
+                sinkhorn_time: stats.inner_time,
+                total_time: t_start.elapsed(),
+            });
+        }
+        Ok(out)
+    }
+}
+
+impl EntropicGw {
+    /// Build a batched workspace with `batch` per-job state slots (the
+    /// shared operator is built once; capacity grows on demand later).
+    pub fn batch_workspace(&self, kind: GradientKind, batch: usize) -> Result<GwBatchWorkspace> {
+        let op = self.build_operator(kind)?;
+        let mut ws = GwBatchWorkspace {
+            op,
+            par: self.cfg.parallelism(),
+            sks: Vec::new(),
+            gammas: Vec::new(),
+            grads: Vec::new(),
+            costs: Vec::new(),
+            constants: Vec::new(),
+        };
+        ws.ensure_capacity(batch.max(1));
+        Ok(ws)
+    }
+
+    /// Solve several same-geometry jobs in lockstep over one shared
+    /// operator. Per outer iteration the gradient products of the
+    /// whole batch run as one [`PairOperator::dxgdy_batch`] (fused
+    /// passes over the shared factors/kernel); each job then solves
+    /// its own entropic-OT subproblem. Results are **bit-for-bit**
+    /// what independent [`EntropicGw::solve_into`] calls produce
+    /// (asserted by `tests/batched_apply.rs`): the lockstep only
+    /// reorders work *between* independent jobs, never within one.
+    ///
+    /// All jobs share this solver's configuration (ε, iteration
+    /// budgets, threads); per-job knobs are the marginals and the
+    /// optional FGW feature term. The reported `gradient_time` /
+    /// `sinkhorn_time` / `total_time` are batch-level (lockstep makes
+    /// per-job wall time unattributable); `sinkhorn_iterations` is
+    /// per job.
+    pub fn solve_batch_into(
+        &self,
+        jobs: &[BatchJob<'_>],
+        ws: &mut GwBatchWorkspace,
+    ) -> Result<Vec<GwSolution>> {
+        if ws.op.geom_x() != &self.geom_x || ws.op.geom_y() != &self.geom_y {
+            return Err(Error::Invalid(
+                "EntropicGw::solve_batch_into: workspace was built for a different geometry pair"
+                    .into(),
+            ));
+        }
+        ws.solve_batch(&self.cfg, jobs)
+    }
+}
+
+/// The lockstep mirror-descent step over a batch: linearize fuses all
+/// gradient products through the shared operator, then each job's cost
+/// and inner Sinkhorn run independently.
+struct BatchStep<'a, 'b> {
+    op: &'b mut PairOperator,
+    sks: &'b mut Vec<SinkhornWorkspace>,
+    gammas: &'b mut Vec<Mat>,
+    grads: &'b mut Vec<Mat>,
+    costs: &'b mut Vec<Mat>,
+    constants: &'b mut Vec<Mat>,
+    jobs: &'b [BatchJob<'a>],
+    batch: usize,
+    inner_counts: &'b mut Vec<usize>,
+    opts: SinkhornOptions,
+}
+
+impl MirrorProblem for BatchStep<'_, '_> {
+    fn linearize(&mut self, _phase: usize) -> Result<()> {
+        let refs: Vec<&Mat> = self.gammas[..self.batch].iter().collect();
+        self.op
+            .dxgdy_batch(&refs, &mut self.grads[..self.batch])?;
+        for j in 0..self.batch {
+            let four_theta = 4.0 * self.jobs[j].theta;
+            let constant = &self.constants[j];
+            let grad = &self.grads[j];
+            for ((c, &k0), &g) in self.costs[j]
+                .as_mut_slice()
+                .iter_mut()
+                .zip(constant.as_slice())
+                .zip(grad.as_slice())
+            {
+                *c = k0 - four_theta * g;
+            }
+        }
+        Ok(())
+    }
+
+    fn inner_solve(&mut self, _phase: usize) -> Result<usize> {
+        let mut total = 0;
+        for j in 0..self.batch {
+            let stats = sinkhorn::solve_into(
+                &self.costs[j],
+                self.jobs[j].u,
+                self.jobs[j].v,
+                &self.opts,
+                &mut self.sks[j],
+                &mut self.gammas[j],
+            )?;
+            self.inner_counts[j] += stats.iterations;
+            total += stats.iterations;
+        }
+        Ok(total)
     }
 }
 
@@ -579,6 +943,83 @@ mod tests {
         )
         .unwrap();
         assert!(solver.workspace_with_backend(other).is_err());
+    }
+
+    #[test]
+    fn batched_solve_is_bitwise_sequential() {
+        let n = 24;
+        let solver = EntropicGw::grid_1d(n, n, 1, cfg_small());
+        let pairs: Vec<(Vec<f64>, Vec<f64>)> =
+            (0..3).map(|s| random_dists(n, n, 100 + s)).collect();
+        // Sequential reference through individual workspaces.
+        let seq: Vec<GwSolution> = pairs
+            .iter()
+            .map(|(u, v)| solver.solve(u, v, GradientKind::Fgc).unwrap())
+            .collect();
+        let jobs: Vec<BatchJob> = pairs.iter().map(|(u, v)| BatchJob::gw(u, v)).collect();
+        let mut ws = solver.batch_workspace(GradientKind::Fgc, jobs.len()).unwrap();
+        let batched = solver.solve_batch_into(&jobs, &mut ws).unwrap();
+        assert_eq!(batched.len(), 3);
+        for (s, b) in seq.iter().zip(&batched) {
+            assert_eq!(s.plan.as_slice(), b.plan.as_slice(), "plan drifted");
+            assert_eq!(s.objective, b.objective, "objective drifted");
+            assert_eq!(s.sinkhorn_iterations, b.sinkhorn_iterations);
+        }
+        // A second pass through the same (warm) workspace is identical.
+        let again = solver.solve_batch_into(&jobs, &mut ws).unwrap();
+        for (s, b) in seq.iter().zip(&again) {
+            assert_eq!(s.plan.as_slice(), b.plan.as_slice(), "warm reuse drifted");
+        }
+    }
+
+    #[test]
+    fn batched_solve_handles_fgw_and_capacity_growth() {
+        let n = 14;
+        let solver = EntropicGw::grid_1d(n, n, 1, cfg_small());
+        let (u1, v1) = random_dists(n, n, 7);
+        let (u2, v2) = random_dists(n, n, 8);
+        let c = Mat::from_fn(n, n, |i, p| (i as f64 / n as f64 - p as f64 / n as f64).abs());
+        let s1 = solver.solve_fgw(&u1, &v1, &c, 0.5, GradientKind::Fgc).unwrap();
+        let s2 = solver.solve(&u2, &v2, GradientKind::Fgc).unwrap();
+        // Mixed GW + FGW batch, starting from a smaller workspace.
+        let mut ws = solver.batch_workspace(GradientKind::Fgc, 1).unwrap();
+        let jobs = [
+            BatchJob {
+                u: &u1,
+                v: &v1,
+                feature_cost: Some(&c),
+                theta: 0.5,
+            },
+            BatchJob::gw(&u2, &v2),
+        ];
+        let batched = solver.solve_batch_into(&jobs, &mut ws).unwrap();
+        assert!(ws.capacity() >= 2);
+        assert_eq!(batched[0].plan.as_slice(), s1.plan.as_slice());
+        assert_eq!(batched[1].plan.as_slice(), s2.plan.as_slice());
+        assert_eq!(batched[0].objective, s1.objective);
+    }
+
+    #[test]
+    fn batched_solve_validates_inputs() {
+        let n = 8;
+        let solver = EntropicGw::grid_1d(n, n, 1, cfg_small());
+        let (u, v) = random_dists(n, n, 3);
+        let mut ws = solver.batch_workspace(GradientKind::Fgc, 1).unwrap();
+        // Empty batch is a no-op.
+        assert!(solver.solve_batch_into(&[], &mut ws).unwrap().is_empty());
+        // Bad theta.
+        let bad = [BatchJob {
+            u: &u,
+            v: &v,
+            feature_cost: None,
+            theta: 1.5,
+        }];
+        assert!(solver.solve_batch_into(&bad, &mut ws).is_err());
+        // Workspace from another geometry pair is rejected.
+        let other = EntropicGw::grid_1d(n + 1, n + 1, 1, cfg_small());
+        let mut bad_ws = other.batch_workspace(GradientKind::Fgc, 1).unwrap();
+        let jobs = [BatchJob::gw(&u, &v)];
+        assert!(solver.solve_batch_into(&jobs, &mut bad_ws).is_err());
     }
 
     #[test]

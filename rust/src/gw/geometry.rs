@@ -1,8 +1,10 @@
 //! Metric-space descriptors for GW problems.
 
 use crate::error::{Error, Result};
-use crate::fgc::{sq_dist_apply_1d, sq_dist_apply_2d, Workspace2d};
-use crate::grid::{dense_dist_1d, dense_dist_2d, squared_dist_apply_dense, Binomial, Grid1d, Grid2d};
+use crate::fgc::{sq_dist_apply_1d_into, sq_dist_apply_2d_into, Workspace2d};
+use crate::grid::{
+    dense_dist_1d, dense_dist_2d, squared_dist_apply_dense_into, Binomial, Grid1d, Grid2d,
+};
 use crate::linalg::Mat;
 
 /// One side of a GW problem: a support with its metric.
@@ -89,24 +91,109 @@ impl Geometry {
 
     /// `(D ⊙ D)·w` — squared-distance application for the constant
     /// term `C₁`, FGC-accelerated on grids.
+    ///
+    /// Convenience form: builds a fresh [`SqApplyScratch`] per call.
+    /// Per-iteration callers (UGW's marginal-dependent `C₁`, COOT's
+    /// squared terms) use [`Geometry::sq_apply_into`] with a
+    /// workspace-owned scratch instead, so the mirror-descent loop
+    /// allocates nothing.
     pub fn sq_apply(&self, w: &[f64]) -> Result<Vec<f64>> {
-        if w.len() != self.len() {
+        let mut out = vec![0.0; self.len()];
+        let mut scratch = SqApplyScratch::for_geometry(self);
+        self.sq_apply_into(w, &mut out, &mut scratch)?;
+        Ok(out)
+    }
+
+    /// [`Geometry::sq_apply`] into a caller-owned buffer with reusable
+    /// scratch — zero heap allocation, bitwise identical results (the
+    /// allocating form delegates here).
+    pub fn sq_apply_into(
+        &self,
+        w: &[f64],
+        out: &mut [f64],
+        scratch: &mut SqApplyScratch,
+    ) -> Result<()> {
+        if w.len() != self.len() || out.len() != self.len() {
             return Err(Error::shape(
                 "Geometry::sq_apply",
                 format!("{}", self.len()),
-                format!("{}", w.len()),
+                format!("{} / {}", w.len(), out.len()),
             ));
         }
         match self {
-            Geometry::Grid1d { grid, k } => {
-                let binom = Binomial::new(2 * *k as usize);
-                sq_dist_apply_1d(grid, *k, w, &binom)
-            }
+            Geometry::Grid1d { grid, k } => sq_dist_apply_1d_into(
+                grid,
+                *k,
+                w,
+                out,
+                &mut scratch.tmp,
+                &mut scratch.carry,
+                scratch
+                    .binom
+                    .as_ref()
+                    .ok_or_else(|| scratch_mismatch("Grid1d"))?,
+            ),
             Geometry::Grid2d { grid, k } => {
-                let mut ws = Workspace2d::new(grid.n, 1, *k);
-                sq_dist_apply_2d(grid, *k, w, &mut ws)
+                let ws = scratch
+                    .ws2
+                    .as_mut()
+                    .ok_or_else(|| scratch_mismatch("Grid2d"))?;
+                sq_dist_apply_2d_into(grid, *k, w, out, &mut scratch.tmp, &mut scratch.carry, ws)
             }
-            Geometry::Dense(d) => Ok(squared_dist_apply_dense(d, w)),
+            Geometry::Dense(d) => {
+                squared_dist_apply_dense_into(d, w, out);
+                Ok(())
+            }
+        }
+    }
+}
+
+fn scratch_mismatch(variant: &str) -> Error {
+    Error::Invalid(format!(
+        "SqApplyScratch was not built for a {variant} geometry (build it with \
+         SqApplyScratch::for_geometry on the same geometry)"
+    ))
+}
+
+/// Reusable scratch for [`Geometry::sq_apply_into`]: the binomial
+/// table and scan carries for 1D grids, a [`Workspace2d`] for 2D
+/// grids, nothing for dense geometries. Build once per geometry (the
+/// solver workspaces own one per side) and reuse every iteration.
+#[derive(Debug)]
+pub struct SqApplyScratch {
+    /// Backward-scan half (1D) / first Kronecker temp (2D), length `N`.
+    tmp: Vec<f64>,
+    /// Scan carries (1D path, `2k+1`) / second Kronecker temp (2D
+    /// path, `N` — sized to the larger need).
+    carry: Vec<f64>,
+    /// Binomial table for the 1D scans.
+    binom: Option<Binomial>,
+    /// 2D scan workspace (binomial + carries sized for `2k`).
+    ws2: Option<Box<Workspace2d>>,
+}
+
+impl SqApplyScratch {
+    /// Scratch sized for `geom`'s squared-distance apply.
+    pub fn for_geometry(geom: &Geometry) -> Self {
+        match geom {
+            Geometry::Grid1d { grid, k } => SqApplyScratch {
+                tmp: vec![0.0; grid.n],
+                carry: vec![0.0; 2 * *k as usize + 1],
+                binom: Some(Binomial::new(2 * *k as usize)),
+                ws2: None,
+            },
+            Geometry::Grid2d { grid, k } => SqApplyScratch {
+                tmp: vec![0.0; grid.len()],
+                carry: vec![0.0; grid.len()],
+                binom: None,
+                ws2: Some(Box::new(Workspace2d::new(grid.n, 1, *k))),
+            },
+            Geometry::Dense(_) => SqApplyScratch {
+                tmp: Vec::new(),
+                carry: Vec::new(),
+                binom: None,
+                ws2: None,
+            },
         }
     }
 }

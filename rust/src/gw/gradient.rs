@@ -122,6 +122,21 @@ impl PairOperator {
         self.backend.apply(gamma, out)
     }
 
+    /// Batched gradient product: `outs[b] = D_X · gammas[b] · D_Y`,
+    /// bit-for-bit equal to calling [`PairOperator::dxgdy`] per plan
+    /// (see [`GradientBackend::apply_batch`]). Backends fuse passes
+    /// over their shared factors/kernel across the batch.
+    pub fn dxgdy_batch(&mut self, gammas: &[&Mat], outs: &mut [Mat]) -> Result<()> {
+        self.backend.apply_batch(gammas, outs)
+    }
+
+    /// Swap the dense X-side matrix in place, keeping all Y-side
+    /// precomputation (see [`GradientBackend::swap_dense_x`]) — the
+    /// barycenter's per-outer-update rebind path.
+    pub fn swap_dense_x(&mut self, dx: &Mat) -> Result<()> {
+        self.backend.swap_dense_x(dx)
+    }
+
     /// Constant term halves: `cx = (D_X⊙D_X)·u`, `cy = (D_Y⊙D_Y)·v`,
     /// so that `C₁[i,p] = 2(cx[i] + cy[p])` (paper §2.1; computed once
     /// per solve).

@@ -33,8 +33,8 @@ pub use backend::{GradientBackend, LowRankBackend, LowRankOptions};
 pub use barycenter::{gw_barycenter_1d, BarycenterConfig, BarycenterResult};
 pub use coot::{coot, coot_into, CootConfig, CootData, CootSolution, CootWorkspace};
 pub use driver::{run_mirror_descent, DriverStats, MirrorProblem};
-pub use entropic::{EntropicGw, GwConfig, GwSolution, GwWorkspace};
-pub use geometry::Geometry;
+pub use entropic::{BatchJob, EntropicGw, GwBatchWorkspace, GwConfig, GwSolution, GwWorkspace};
+pub use geometry::{Geometry, SqApplyScratch};
 pub use gradient::{GradientKind, PairOperator};
 pub use objective::{fgw_objective, gw_objective};
 pub use ugw::{EntropicUgw, UgwConfig, UgwSolution, UgwWorkspace};

@@ -22,7 +22,7 @@
 //! are documented in DESIGN.md §4.
 
 use super::driver::{run_mirror_descent, MirrorProblem};
-use super::geometry::Geometry;
+use super::geometry::{Geometry, SqApplyScratch};
 use super::gradient::{GradientKind, PairOperator};
 use super::objective::gw_objective;
 use crate::error::{Error, Result};
@@ -81,6 +81,15 @@ pub struct UgwWorkspace {
     gu: Vec<f64>,
     /// Column marginals (`Γ̂ᵀ1`).
     gv: Vec<f64>,
+    /// `(D_X⊙D_X)·Γ̂1` — the marginal-dependent `C₁` half, recomputed
+    /// every outer iteration into this buffer (no allocation).
+    cx: Vec<f64>,
+    /// `(D_Y⊙D_Y)·Γ̂ᵀ1`.
+    cy: Vec<f64>,
+    /// Scan scratch for the X-side squared-distance apply.
+    sqx: SqApplyScratch,
+    /// Scan scratch for the Y-side squared-distance apply.
+    sqy: SqApplyScratch,
 }
 
 impl UgwWorkspace {
@@ -143,6 +152,10 @@ impl EntropicUgw {
             cost: Mat::zeros(m, n),
             gu: vec![0.0; m],
             gv: vec![0.0; n],
+            cx: vec![0.0; m],
+            cy: vec![0.0; n],
+            sqx: SqApplyScratch::for_geometry(&self.geom_x),
+            sqy: SqApplyScratch::for_geometry(&self.geom_y),
         })
     }
 
@@ -196,6 +209,10 @@ impl EntropicUgw {
             cost,
             gu,
             gv,
+            cx,
+            cy,
+            sqx,
+            sqy,
         } = ws;
         // Γ⁰ = u⊗v / √(m_u m_v) has mass √(m_u m_v), the UGW convention.
         outer_into(u, v, gamma)?;
@@ -212,6 +229,10 @@ impl EntropicUgw {
             cost,
             gu,
             gv,
+            cx,
+            cy,
+            sqx,
+            sqy,
             u,
             v,
             cfg: &self.cfg,
@@ -243,6 +264,10 @@ struct UgwStep<'a> {
     cost: &'a mut Mat,
     gu: &'a mut [f64],
     gv: &'a mut [f64],
+    cx: &'a mut [f64],
+    cy: &'a mut [f64],
+    sqx: &'a mut SqApplyScratch,
+    sqy: &'a mut SqApplyScratch,
     u: &'a [f64],
     v: &'a [f64],
     cfg: &'a UgwConfig,
@@ -259,7 +284,12 @@ impl MirrorProblem for UgwStep<'_> {
         self.mass = mass;
         self.gamma.row_sums_into(self.gu);
         self.gamma.col_sums_into(self.gv);
-        let (cx, cy) = self.op.c1_halves(self.gu, self.gv)?;
+        // C₁ halves against the *plan's* marginals (Remark 2.3) — the
+        // geometry's squared-distance apply into workspace buffers,
+        // bitwise what `c1_halves` returns without its per-iteration
+        // allocations.
+        self.op.geom_x().sq_apply_into(self.gu, self.cx, self.sqx)?;
+        self.op.geom_y().sq_apply_into(self.gv, self.cy, self.sqy)?;
         self.op.dxgdy(self.gamma, self.grad)?;
         let (m, n) = self.gamma.shape();
         for i in 0..m {
@@ -267,7 +297,7 @@ impl MirrorProblem for UgwStep<'_> {
             let crow = self.cost.row_mut(i);
             for p in 0..n {
                 // ½·[2(cx+cy) − 4G] = cx + cy − 2G
-                crow[p] = cx[i] + cy[p] - 2.0 * grow[p];
+                crow[p] = self.cx[i] + self.cy[p] - 2.0 * grow[p];
             }
         }
         Ok(())

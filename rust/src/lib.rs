@@ -16,10 +16,13 @@
 //!   artifacts (HLO text produced by `python/compile/aot.py`) and
 //!   executes them on the PJRT CPU client via the `xla` crate. Python
 //!   never runs on the request path.
-//! * **Coordinator** ([`coordinator`]) — an alignment service: bounded
-//!   job queues with backpressure, a size/variant batcher, a router
-//!   that picks native-FGC / native-naive / PJRT backends per job, a
-//!   worker pool, and latency/throughput metrics.
+//! * **Coordinator** ([`coordinator`]) — an alignment service: a
+//!   variant-sharded bounded queue with per-shard backpressure and a
+//!   global admission budget, a router that picks native-FGC /
+//!   native-naive / native-lowrank / PJRT backends per job, workers
+//!   that pin to a shard and serve same-variant bursts from warm
+//!   batched workspaces (stealing from the longest shard when theirs
+//!   runs dry), and latency/throughput/warm-hit metrics.
 //!
 //! Supporting substrates built from scratch (the offline environment
 //! vendors only `xla` + `anyhow`, both optional behind the `pjrt`

@@ -1,24 +1,27 @@
 //! `fgc-gw` — launcher for the FGC-GW alignment stack.
 //!
 //! ```text
-//! fgc-gw solve  --n 500 [--k 1] [--eps 0.002] [--backend fgc|naive|lowrank] [--seed 7] [--threads 1]
+//! fgc-gw solve  --n 500 [--k 1] [--eps 0.002] [--backend fgc|naive|lowrank] [--lowrank-tol T] [--seed 7] [--threads 1]
 //! fgc-gw solve2d --side 20 [--eps 0.004] …
-//! fgc-gw serve  --jobs 32 [--workers 2] [--threads 1] [--backend auto|fgc|naive|lowrank] [--pjrt] [--config path]
+//! fgc-gw serve  --jobs 32 [--workers 2] [--shards 0] [--threads 1] [--backend auto|fgc|naive|lowrank] [--lowrank-tol T] [--pjrt] [--config path]
 //! fgc-gw bary   --inputs 3 --n 40
 //! fgc-gw info   [--artifacts artifacts]
 //! ```
 //!
 //! `--threads 0` means one thread per core; the serve command also
-//! reads `solver.threads` and `solver.backend` from the config file
-//! (CLI wins). `--backend auto` (the default) lets the router pick per
-//! job: grid → fgc, small dense → naive, large dense → lowrank.
+//! reads `solver.threads`, `solver.backend`, `solver.lowrank_tol` and
+//! `coordinator.shards` from the config file (CLI wins). `--backend
+//! auto` (the default) lets the router pick per job: grid → fgc, small
+//! dense → naive, large dense → lowrank. `--shards 0` (default) sizes
+//! the variant-sharded queue from the worker count; `--lowrank-tol 0`
+//! derives the ACA tolerance from each job's ε.
 
 use fgc_gw::cli::Args;
 use fgc_gw::config::Config;
 use fgc_gw::coordinator::{Coordinator, CoordinatorConfig, JobPayload, RoutingPolicy};
 use fgc_gw::data::random_distribution;
 use fgc_gw::gw::{
-    gw_barycenter_1d, BarycenterConfig, EntropicGw, GradientKind, GwConfig,
+    gw_barycenter_1d, BarycenterConfig, EntropicGw, GradientKind, GwConfig, LowRankOptions,
     barycenter::BaryInput1d,
 };
 use fgc_gw::prng::Rng;
@@ -52,9 +55,9 @@ fn print_usage() {
     println!(
         "fgc-gw — Fast Gradient Computation for Gromov-Wasserstein\n\
          commands:\n\
-         \x20 solve    1D GW between random distributions (--n, --k, --eps, --backend, --seed, --threads)\n\
+         \x20 solve    1D GW between random distributions (--n, --k, --eps, --backend, --lowrank-tol, --seed, --threads)\n\
          \x20 solve2d  2D GW on an n×n grid (--side, --k, --eps, --backend, --seed, --threads)\n\
-         \x20 serve    run the coordinator on a synthetic workload (--jobs, --workers, --threads, --backend, --pjrt)\n\
+         \x20 serve    run the coordinator on a synthetic workload (--jobs, --workers, --shards, --threads, --backend, --lowrank-tol, --pjrt)\n\
          \x20 bary     1D GW barycenter demo (--inputs, --n)\n\
          \x20 info     platform + artifact registry summary (--artifacts DIR)"
     );
@@ -81,6 +84,17 @@ fn backend_policy(name: &str) -> fgc_gw::Result<Option<RoutingPolicy>> {
         })
 }
 
+/// Apply the `--lowrank-tol` override (absent/0 keeps the ε-derived
+/// default).
+fn apply_lowrank_tol(solver: EntropicGw, args: &Args) -> fgc_gw::Result<EntropicGw> {
+    let tol = args.get_or("lowrank-tol", 0.0f64)?;
+    Ok(if tol > 0.0 {
+        solver.with_lowrank_options(LowRankOptions { tol, max_rank: 0 })
+    } else {
+        solver
+    })
+}
+
 fn cmd_solve(args: &Args) -> fgc_gw::Result<()> {
     let n = args.get_or("n", 500usize)?;
     let k = args.get_or("k", 1u32)?;
@@ -91,12 +105,15 @@ fn cmd_solve(args: &Args) -> fgc_gw::Result<()> {
     let mut rng = Rng::seeded(seed);
     let u = random_distribution(&mut rng, n);
     let v = random_distribution(&mut rng, n);
-    let solver = EntropicGw::grid_1d(
-        n,
-        n,
-        k,
-        GwConfig { epsilon: eps, threads, ..GwConfig::default() },
-    );
+    let solver = apply_lowrank_tol(
+        EntropicGw::grid_1d(
+            n,
+            n,
+            k,
+            GwConfig { epsilon: eps, threads, ..GwConfig::default() },
+        ),
+        args,
+    )?;
     let sol = solver.solve(&u, &v, kind)?;
     println!(
         "GW²={:.6e}  N={n} k={k} ε={eps} backend={kind} threads={}\n\
@@ -119,12 +136,15 @@ fn cmd_solve_2d(args: &Args) -> fgc_gw::Result<()> {
     let mut rng = Rng::seeded(seed);
     let u = fgc_gw::data::random_distribution_2d(&mut rng, side);
     let v = fgc_gw::data::random_distribution_2d(&mut rng, side);
-    let solver = EntropicGw::grid_2d(
-        side,
-        side,
-        k,
-        GwConfig { epsilon: eps, threads, ..GwConfig::default() },
-    );
+    let solver = apply_lowrank_tol(
+        EntropicGw::grid_2d(
+            side,
+            side,
+            k,
+            GwConfig { epsilon: eps, threads, ..GwConfig::default() },
+        ),
+        args,
+    )?;
     let sol = solver.solve(&u, &v, kind)?;
     println!(
         "GW²={:.6e}  N={side}×{side} k={k} ε={eps} backend={kind}  time={:?}",
@@ -141,9 +161,11 @@ fn cmd_serve(args: &Args) -> fgc_gw::Result<()> {
         cfg.queue_capacity = file.get_or("service.queue_capacity", cfg.queue_capacity)?;
         cfg.batch_max = file.get_or("service.batch_max", cfg.batch_max)?;
         cfg.enable_pjrt = file.get_bool_or("service.enable_pjrt", cfg.enable_pjrt)?;
+        cfg.shards = file.get_or("coordinator.shards", cfg.shards)?;
         cfg.outer_iters = file.get_or("solver.outer_iters", cfg.outer_iters)?;
         cfg.sinkhorn_max_iters = file.get_or("solver.sinkhorn_max_iters", cfg.sinkhorn_max_iters)?;
         cfg.solver_threads = file.get_or("solver.threads", cfg.solver_threads)?;
+        cfg.lowrank_tol = file.get_or("solver.lowrank_tol", cfg.lowrank_tol)?;
         if let Some(name) = file.get("solver.backend") {
             if let Some(policy) = backend_policy(name)? {
                 cfg.policy = policy;
@@ -153,6 +175,12 @@ fn cmd_serve(args: &Args) -> fgc_gw::Result<()> {
     cfg.native_workers = args.get_or("workers", cfg.native_workers)?;
     if let Some(threads) = args.get_opt::<usize>("threads")? {
         cfg.solver_threads = threads;
+    }
+    if let Some(shards) = args.get_opt::<usize>("shards")? {
+        cfg.shards = shards;
+    }
+    if let Some(tol) = args.get_opt::<f64>("lowrank-tol")? {
+        cfg.lowrank_tol = tol;
     }
     cfg.enable_pjrt = cfg.enable_pjrt || args.has_flag("pjrt");
     cfg.artifacts_dir = PathBuf::from(args.get("artifacts").unwrap_or("artifacts"));

@@ -86,10 +86,20 @@ pub enum Regime {
 /// the full range — this is what lets the paper's ε = 0.002 settings
 /// run in the fast exponential domain.
 pub fn pick_regime(cost: &Mat, epsilon: f64) -> Regime {
+    let mut col_min = vec![f64::INFINITY; cost.cols()];
+    pick_regime_scratch(cost, epsilon, &mut col_min)
+}
+
+/// [`pick_regime`] with a caller-provided column-min scratch
+/// (≥ `cols`; fully overwritten) — the allocation-free form
+/// [`solve_into`] runs on, so regime re-decisions per inner solve
+/// (COOT resets the cache every subproblem) stay off the allocator.
+pub(crate) fn pick_regime_scratch(cost: &Mat, epsilon: f64, col_scratch: &mut [f64]) -> Regime {
     let (m, n) = cost.shape();
     let global_min = cost.min();
     let mut worst_row_gap: f64 = 0.0;
-    let mut col_min = vec![f64::INFINITY; n];
+    let col_min = &mut col_scratch[..n];
+    col_min.fill(f64::INFINITY);
     for i in 0..m {
         let row = cost.row(i);
         let mut rmin = f64::INFINITY;
@@ -181,7 +191,9 @@ pub fn solve_into(
     let regime = match ws.cached_regime() {
         Some(r) => r,
         None => {
-            let r = pick_regime(cost, opts.epsilon);
+            // `kta` is free until the sweeps (which fully re-initialize
+            // it), so the regime scan borrows it instead of allocating.
+            let r = pick_regime_scratch(cost, opts.epsilon, &mut ws.kta);
             ws.set_regime(r);
             r
         }

@@ -15,7 +15,11 @@
 //! (spawn-per-solve design), and OS thread state is allocated by the
 //! runtime, not by the numeric path under test.
 
-use fgc_gw::gw::{EntropicGw, GradientKind, GwConfig};
+use fgc_gw::grid::Grid1d;
+use fgc_gw::gw::{
+    coot_into, CootConfig, CootData, CootWorkspace, EntropicGw, EntropicUgw, Geometry,
+    GradientKind, GwConfig, UgwConfig,
+};
 use fgc_gw::linalg::normalize_l1;
 use fgc_gw::prng::Rng;
 use std::alloc::{GlobalAlloc, Layout, System};
@@ -139,4 +143,85 @@ fn outer_iterations_allocate_nothing() {
              ({a_shallow} @3 vs {a_deep} @13) — something allocates per iteration"
         );
     }
+}
+
+/// UGW parity: the marginal-dependent `C₁` halves now land in
+/// workspace buffers (`Geometry::sq_apply_into`) and the unbalanced
+/// inner solver is workspace-backed, so deeper solves must not
+/// allocate more.
+#[test]
+fn ugw_outer_iterations_allocate_nothing() {
+    let geom = Geometry::grid_1d_unit(40, 1);
+    let build = |outer: usize| {
+        EntropicUgw::new(
+            geom.clone(),
+            geom.clone(),
+            UgwConfig {
+                epsilon: 0.05,
+                rho: 1.0,
+                outer_iters: outer,
+                inner_max_iters: 40,
+                inner_tolerance: 1e-13,
+                threads: 1,
+            },
+        )
+    };
+    let (u, v) = dists(40, 40, 23);
+    let shallow = build(3);
+    let deep = build(13);
+    let mut ws_shallow = shallow.workspace(GradientKind::Fgc).unwrap();
+    let mut ws_deep = deep.workspace(GradientKind::Fgc).unwrap();
+    let count = |solver: &EntropicUgw, ws: &mut fgc_gw::gw::UgwWorkspace| {
+        solver.solve_into(&u, &v, ws).unwrap(); // warm lazy buffers
+        let before = allocations();
+        solver.solve_into(&u, &v, ws).unwrap();
+        allocations() - before
+    };
+    let a_shallow = count(&shallow, &mut ws_shallow);
+    let a_deep = count(&deep, &mut ws_deep);
+    assert_eq!(
+        a_shallow, a_deep,
+        "ugw: allocation count grew with outer iterations \
+         ({a_shallow} @3 vs {a_deep} @13) — something allocates per iteration"
+    );
+}
+
+/// COOT parity: the squared-term scans run through workspace scratch
+/// and the per-subproblem regime re-scan borrows Sinkhorn scratch, so
+/// deeper BCD sweeps must not allocate more.
+#[test]
+fn coot_outer_iterations_allocate_nothing() {
+    let x = CootData::GridDist1d {
+        grid: Grid1d::unit(30),
+        k: 1,
+    };
+    let y = CootData::GridDist1d {
+        grid: Grid1d::unit(24),
+        k: 1,
+    };
+    let cfg = |outer: usize| CootConfig {
+        epsilon_samples: 5e-3,
+        epsilon_features: 5e-3,
+        outer_iters: outer,
+        sinkhorn_max_iters: 40,
+        sinkhorn_tolerance: 1e-13,
+        threads: 1,
+    };
+    let shallow_cfg = cfg(3);
+    let deep_cfg = cfg(13);
+    let mut ws_shallow = CootWorkspace::new(&x, &y, &shallow_cfg, GradientKind::Fgc).unwrap();
+    let mut ws_deep = CootWorkspace::new(&x, &y, &deep_cfg, GradientKind::Fgc).unwrap();
+    let count = |c: &CootConfig, ws: &mut CootWorkspace| {
+        coot_into(&x, &y, c, ws).unwrap(); // warm lazy buffers
+        let before = allocations();
+        coot_into(&x, &y, c, ws).unwrap();
+        allocations() - before
+    };
+    let a_shallow = count(&shallow_cfg, &mut ws_shallow);
+    let a_deep = count(&deep_cfg, &mut ws_deep);
+    assert_eq!(
+        a_shallow, a_deep,
+        "coot: allocation count grew with BCD sweeps \
+         ({a_shallow} @3 vs {a_deep} @13) — something allocates per sweep"
+    );
 }

@@ -12,6 +12,7 @@ use std::time::Duration;
 fn base_cfg() -> CoordinatorConfig {
     CoordinatorConfig {
         native_workers: 2,
+        shards: 4,
         queue_capacity: 8,
         batch_max: 4,
         artifacts_dir: PathBuf::from("/nonexistent"),
@@ -21,6 +22,7 @@ fn base_cfg() -> CoordinatorConfig {
         sinkhorn_max_iters: 200,
         sinkhorn_tolerance: 1e-8,
         solver_threads: 2,
+        lowrank_tol: 0.0,
         submit_timeout: Duration::from_millis(50),
     }
 }
