@@ -15,10 +15,17 @@
 //! each backend, asserting bit-equality before timing
 //! (`batch_results` in the JSON).
 //!
+//! A fourth section times the **2D mixed pair** (dense support ×
+//! 2D image grid — the image-grid barycenter shape the separable fgc
+//! engine newly accelerates): fgc scans vs the naive dense products,
+//! plus the fused `apply_batch` vs sequential applies on the same
+//! plan shape (`mixed2d_results` in the JSON, `case = "2d_mixed"`).
+//!
 //! ```bash
 //! cargo bench --bench hotpath [-- --quick --threads 4 \
 //!     --sizes 256,1024,4096 --dense-sizes 256,512 --batch 8 \
-//!     --batch-n 512 --out ../BENCH_hotpath.json]
+//!     --batch-n 512 --mixed-m 256 --mixed-side 16 \
+//!     --out ../BENCH_hotpath.json]
 //! ```
 
 use fgc_gw::bench_util::{fmt_secs, time_mean, TableWriter};
@@ -69,6 +76,17 @@ struct BatchRow {
     b: usize,
     seq_s: f64,
     batch_s: f64,
+}
+
+struct Mixed2dRow {
+    m: usize,
+    grid_side: usize,
+    n: usize,
+    naive_s: f64,
+    fgc_s: f64,
+    b: usize,
+    fgc_batch_s: f64,
+    plan_diff: f64,
 }
 
 fn main() {
@@ -264,7 +282,87 @@ fn main() {
     }
     println!("{}", batch_table.render());
 
-    let json = render_json(threads, quick, reps, &rows, &dense_rows, &batch_rows);
+    // --- 2D mixed pair: dense × grid2d through the separable path ------
+    // The image-grid barycenter shape: an unstructured support against
+    // an n×n Manhattan grid. Naive runs two dense products; fgc scans
+    // the 2D side, so the gap widens with the grid size.
+    let mixed_m = args.get_or("mixed-m", if quick { 128usize } else { 256 }).unwrap();
+    let mixed_side = args.get_or("mixed-side", if quick { 12usize } else { 16 }).unwrap();
+    let mixed_b = args.get_or("batch", 8usize).unwrap().max(2);
+    let mut mixed_table = TableWriter::new(
+        "hotpath: dense × grid2d gradient apply, naive vs separable fgc (serial)",
+        &["M", "side", "N", "naive (s)", "fgc (s)", "speedup", "B", "fgc batch (s)", "‖ΔG‖_F"],
+    );
+    let mut mixed_rows = Vec::new();
+    {
+        let gx = Geometry::Dense(dense_dist_1d(&Grid1d::unit(mixed_m), 2));
+        let gy = Geometry::grid_2d_unit(mixed_side, 1);
+        let n2 = gy.len();
+        let mut fgc_be =
+            backend::instantiate(GradientKind::Fgc, gx.clone(), gy.clone(), Parallelism::SERIAL)
+                .unwrap();
+        let mut naive_be =
+            backend::instantiate(GradientKind::Naive, gx.clone(), gy.clone(), Parallelism::SERIAL)
+                .unwrap();
+        let mut rng = Rng::seeded(99);
+        let plans: Vec<Mat> = (0..mixed_b)
+            .map(|_| Mat::from_fn(mixed_m, n2, |_, _| rng.uniform()))
+            .collect();
+        let refs: Vec<&Mat> = plans.iter().collect();
+        let mut fgc_out: Vec<Mat> = (0..mixed_b).map(|_| Mat::zeros(mixed_m, n2)).collect();
+        let mut naive_out: Vec<Mat> = (0..mixed_b).map(|_| Mat::zeros(mixed_m, n2)).collect();
+        // Correctness gate: the scan path must match the dense oracle.
+        for (g, o) in plans.iter().zip(fgc_out.iter_mut()) {
+            fgc_be.apply(g, o).unwrap();
+        }
+        for (g, o) in plans.iter().zip(naive_out.iter_mut()) {
+            naive_be.apply(g, o).unwrap();
+        }
+        let plan_diff = frobenius_diff(&fgc_out[0], &naive_out[0]).unwrap();
+        assert!(
+            plan_diff < 1e-7,
+            "2d_mixed: fgc gradient diverged from naive, ‖ΔG‖_F = {plan_diff:e}"
+        );
+        let tn = time_mean(1, reps, || {
+            for (g, o) in plans.iter().zip(naive_out.iter_mut()) {
+                naive_be.apply(g, o).unwrap();
+            }
+        });
+        let tf = time_mean(1, reps, || {
+            for (g, o) in plans.iter().zip(fgc_out.iter_mut()) {
+                fgc_be.apply(g, o).unwrap();
+            }
+        });
+        let tb = time_mean(1, reps, || {
+            fgc_be.apply_batch(&refs, &mut fgc_out).unwrap();
+        });
+        let (naive_s, fgc_s, fgc_batch_s) =
+            (tn.as_secs_f64(), tf.as_secs_f64(), tb.as_secs_f64());
+        mixed_table.row(&[
+            mixed_m.to_string(),
+            mixed_side.to_string(),
+            n2.to_string(),
+            fmt_secs(tn),
+            fmt_secs(tf),
+            format!("{:.2}×", naive_s / fgc_s),
+            mixed_b.to_string(),
+            fmt_secs(tb),
+            format!("{plan_diff:.2e}"),
+        ]);
+        mixed_rows.push(Mixed2dRow {
+            m: mixed_m,
+            grid_side: mixed_side,
+            n: n2,
+            naive_s,
+            fgc_s,
+            b: mixed_b,
+            fgc_batch_s,
+            plan_diff,
+        });
+    }
+    println!("{}", mixed_table.render());
+
+    let json = render_json(threads, quick, reps, &rows, &dense_rows, &batch_rows, &mixed_rows);
     std::fs::write(&out_path, &json).unwrap();
     println!("wrote {out_path}");
 }
@@ -276,6 +374,7 @@ fn render_json(
     rows: &[Row],
     dense_rows: &[DenseRow],
     batch_rows: &[BatchRow],
+    mixed_rows: &[Mixed2dRow],
 ) -> String {
     let mut s = String::new();
     s.push_str("{\n");
@@ -326,6 +425,24 @@ fn render_json(
             r.batch_s,
             r.seq_s / r.batch_s,
             if i + 1 == batch_rows.len() { "" } else { "," }
+        ));
+    }
+    s.push_str("  ],\n");
+    s.push_str("  \"mixed2d_results\": [\n");
+    for (i, r) in mixed_rows.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"case\": \"2d_mixed\", \"m\": {}, \"grid_side\": {}, \"n\": {}, \"naive_s\": {:.6e}, \"fgc_s\": {:.6e}, \"speedup\": {:.3}, \"b\": {}, \"fgc_batch_s\": {:.6e}, \"batch_speedup\": {:.3}, \"plan_fro_diff\": {:.3e}}}{}\n",
+            r.m,
+            r.grid_side,
+            r.n,
+            r.naive_s,
+            r.fgc_s,
+            r.naive_s / r.fgc_s,
+            r.b,
+            r.fgc_batch_s,
+            r.fgc_s / r.fgc_batch_s,
+            r.plan_diff,
+            if i + 1 == mixed_rows.len() { "" } else { "," }
         ));
     }
     s.push_str("  ]\n}\n");

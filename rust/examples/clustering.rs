@@ -11,6 +11,11 @@
 //! cargo run --release --example clustering [-- --per-class 6 --n 80]
 //! ```
 
+// Index-based loops mirror the paper's recurrences (same rationale
+// as the crate-level allow in src/lib.rs; test/bench targets do not
+// inherit it).
+#![allow(clippy::needless_range_loop, clippy::too_many_arguments)]
+
 use fgc_gw::cli::Args;
 use fgc_gw::coordinator::{Coordinator, CoordinatorConfig, JobPayload, RoutingPolicy};
 use fgc_gw::data::{feature_cost_series, two_hump_series, TwoHumpSpec};

@@ -12,6 +12,11 @@
 //! cargo run --release --example e2e_service -- --jobs 24 [--no-pjrt]
 //! ```
 
+// Index-based loops mirror the paper's recurrences (same rationale
+// as the crate-level allow in src/lib.rs; test/bench targets do not
+// inherit it).
+#![allow(clippy::needless_range_loop, clippy::too_many_arguments)]
+
 use fgc_gw::cli::Args;
 use fgc_gw::coordinator::{Coordinator, CoordinatorConfig, JobPayload, RoutingPolicy};
 use fgc_gw::data::{feature_cost_series, random_distribution, two_hump_series, TwoHumpSpec};

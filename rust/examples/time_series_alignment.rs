@@ -9,6 +9,11 @@
 //! cargo run --release --example time_series_alignment [-- --n 200]
 //! ```
 
+// Index-based loops mirror the paper's recurrences (same rationale
+// as the crate-level allow in src/lib.rs; test/bench targets do not
+// inherit it).
+#![allow(clippy::needless_range_loop, clippy::too_many_arguments)]
+
 use fgc_gw::cli::Args;
 use fgc_gw::data::{feature_cost_series, two_hump_series, TwoHumpSpec};
 use fgc_gw::gw::{EntropicGw, GradientKind, GwConfig};

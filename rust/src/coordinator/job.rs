@@ -51,7 +51,8 @@ pub enum JobPayload {
     },
     /// GW between distributions on arbitrary dense metric spaces — the
     /// workload the low-rank backend serves (no grid structure to
-    /// exploit).
+    /// exploit). Build with [`JobPayload::gw_dense`], which stamps the
+    /// content fingerprint at admission.
     GwDense {
         /// Source distance matrix (`u.len()` square, symmetric).
         dx: Mat,
@@ -63,10 +64,56 @@ pub enum JobPayload {
         v: Vec<f64>,
         /// Entropic ε.
         epsilon: f64,
+        /// FNV-1a-style content fingerprint over `(rows, cols, matrix
+        /// words)` of both distance matrices, stamped once at
+        /// admission ([`dense_fingerprint`]). The coordinator's
+        /// warm-batch sub-split compares fingerprints instead of
+        /// running an `O(N²)` matrix-equality check per pair; the full
+        /// compare still runs on a fingerprint match (collision
+        /// guard), so a stale or hand-rolled fingerprint can cost
+        /// batching but never correctness.
+        fingerprint: u64,
     },
 }
 
+/// FNV-1a-style fold over `(rows, cols, matrix words)` of both
+/// distance matrices — the dense payload's content identity, computed
+/// once at admission so same-geometry jobs batch without `O(N²)`
+/// compares per pair. Each `f64` contributes its full bit pattern as
+/// one XOR-multiply step (the FNV-1a offset/prime, folded per 64-bit
+/// word rather than per byte — 8× fewer multiplies on the admission
+/// path, with the same stability and avalanche-by-multiplication).
+pub fn dense_fingerprint(dx: &Mat, dy: &Mat) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    let mut fold = |w: u64| {
+        h ^= w;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    };
+    for m in [dx, dy] {
+        fold(m.rows() as u64);
+        fold(m.cols() as u64);
+        for &x in m.as_slice() {
+            fold(x.to_bits());
+        }
+    }
+    h
+}
+
 impl JobPayload {
+    /// Build a dense-geometry GW payload, computing the content
+    /// fingerprint over both distance matrices at admission.
+    pub fn gw_dense(dx: Mat, dy: Mat, u: Vec<f64>, v: Vec<f64>, epsilon: f64) -> JobPayload {
+        let fingerprint = dense_fingerprint(&dx, &dy);
+        JobPayload::GwDense {
+            dx,
+            dy,
+            u,
+            v,
+            epsilon,
+            fingerprint,
+        }
+    }
+
     /// Problem size (support points per side).
     pub fn points(&self) -> usize {
         match self {
@@ -156,6 +203,7 @@ impl JobPayload {
                 u,
                 v,
                 epsilon,
+                ..
             } => {
                 check_dist(u, "u")?;
                 check_dist(v, "v")?;
@@ -324,34 +372,55 @@ mod tests {
 
     #[test]
     fn validate_dense_jobs() {
-        let good = JobPayload::GwDense {
-            dx: Mat::zeros(4, 4),
-            dy: Mat::zeros(4, 4),
-            u: uniform(4),
-            v: uniform(4),
-            epsilon: 0.01,
-        };
+        let good = JobPayload::gw_dense(
+            Mat::zeros(4, 4),
+            Mat::zeros(4, 4),
+            uniform(4),
+            uniform(4),
+            0.01,
+        );
         assert!(good.validate().is_ok());
         assert_eq!(good.points(), 4);
         assert!(!good.is_structured());
-        let bad_shape = JobPayload::GwDense {
-            dx: Mat::zeros(3, 4),
-            dy: Mat::zeros(4, 4),
-            u: uniform(4),
-            v: uniform(4),
-            epsilon: 0.01,
-        };
+        let bad_shape = JobPayload::gw_dense(
+            Mat::zeros(3, 4),
+            Mat::zeros(4, 4),
+            uniform(4),
+            uniform(4),
+            0.01,
+        );
         assert!(bad_shape.validate().is_err());
         let mut nan = Mat::zeros(4, 4);
         nan[(0, 0)] = f64::NAN;
-        let bad_entries = JobPayload::GwDense {
-            dx: nan,
-            dy: Mat::zeros(4, 4),
-            u: uniform(4),
-            v: uniform(4),
-            epsilon: 0.01,
-        };
+        let bad_entries =
+            JobPayload::gw_dense(nan, Mat::zeros(4, 4), uniform(4), uniform(4), 0.01);
         assert!(bad_entries.validate().is_err());
+    }
+
+    #[test]
+    fn dense_fingerprint_tracks_content_and_shape() {
+        let a = Mat::from_fn(4, 4, |i, j| (i + 2 * j) as f64 * 0.5);
+        let b = a.map(|x| x + 1e-12); // tiny perturbation, new bytes
+        let fp = dense_fingerprint;
+        assert_eq!(fp(&a, &a), fp(&a.clone(), &a.clone()), "deterministic");
+        assert_ne!(fp(&a, &a), fp(&b, &a), "content change must move the hash");
+        assert_ne!(fp(&a, &a), fp(&a, &b), "either side participates");
+        // Shape participates even when the bytes prefix agrees.
+        let wide = Mat::zeros(2, 8);
+        let tall = Mat::zeros(8, 2);
+        assert_ne!(fp(&wide, &wide), fp(&tall, &tall));
+        // The constructor stamps the same hash.
+        let payload = JobPayload::gw_dense(
+            a.clone(),
+            a.clone(),
+            uniform(4),
+            uniform(4),
+            0.01,
+        );
+        match payload {
+            JobPayload::GwDense { fingerprint, .. } => assert_eq!(fingerprint, fp(&a, &a)),
+            _ => unreachable!(),
+        }
     }
 
     #[test]

@@ -26,6 +26,10 @@ pub struct ServiceMetrics {
     warm_misses: AtomicU64,
     /// Times a worker left its pinned shard to take another's work.
     steals: AtomicU64,
+    /// Steals that were depth-aware pin sheds (the pinned shard still
+    /// had work, but far less than the shard served instead). A
+    /// subset of `steals`.
+    sheds: AtomicU64,
     /// Completed-job latencies in microseconds (queue + solve).
     latencies_us: Mutex<Vec<u64>>,
     solve_us_total: AtomicU64,
@@ -63,6 +67,12 @@ impl ServiceMetrics {
     /// Record a work-steal (a worker moved off its pinned shard).
     pub fn on_steal(&self) {
         self.steals.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record a depth-aware pin shed (counted *in addition to* the
+    /// steal it implies — see [`crate::coordinator::PIN_SHED_FACTOR`]).
+    pub fn on_shed(&self) {
+        self.sheds.fetch_add(1, Ordering::Relaxed);
     }
 
     /// Record a completion for the backend that ran the job.
@@ -109,6 +119,7 @@ impl ServiceMetrics {
             warm_hits: self.warm_hits.load(Ordering::Relaxed),
             warm_misses: self.warm_misses.load(Ordering::Relaxed),
             steals: self.steals.load(Ordering::Relaxed),
+            sheds: self.sheds.load(Ordering::Relaxed),
             shard_depths: Vec::new(),
             p50: pct(0.50),
             p90: pct(0.90),
@@ -150,6 +161,9 @@ pub struct MetricsSnapshot {
     pub warm_misses: u64,
     /// Work-steal events across the worker pool.
     pub steals: u64,
+    /// Depth-aware pin sheds (a subset of `steals`: the pinned shard
+    /// still had work but far less than the shard served instead).
+    pub sheds: u64,
     /// Per-shard queue depth at snapshot time (filled by
     /// [`super::Coordinator::metrics`]; empty from a bare
     /// [`ServiceMetrics::snapshot`], which has no queue handle).
@@ -193,11 +207,12 @@ impl std::fmt::Display for MetricsSnapshot {
         )?;
         writeln!(
             f,
-            "sharding: warm-hits={} warm-misses={} (rate {:.1}%) steals={} depths={:?}",
+            "sharding: warm-hits={} warm-misses={} (rate {:.1}%) steals={} sheds={} depths={:?}",
             self.warm_hits,
             self.warm_misses,
             100.0 * self.warm_hit_rate(),
             self.steals,
+            self.sheds,
             self.shard_depths
         )?;
         write!(
@@ -272,12 +287,18 @@ mod tests {
         m.on_warm(7, 1);
         m.on_warm(2, 0);
         m.on_steal();
+        m.on_steal();
+        m.on_shed();
         let s = m.snapshot();
-        assert_eq!((s.warm_hits, s.warm_misses, s.steals), (9, 1, 1));
+        assert_eq!(
+            (s.warm_hits, s.warm_misses, s.steals, s.sheds),
+            (9, 1, 2, 1)
+        );
         assert!((s.warm_hit_rate() - 0.9).abs() < 1e-12);
         let text = s.to_string();
         assert!(text.contains("warm-hits=9"), "{text}");
-        assert!(text.contains("steals=1"), "{text}");
+        assert!(text.contains("steals=2"), "{text}");
+        assert!(text.contains("sheds=1"), "{text}");
     }
 
     #[test]

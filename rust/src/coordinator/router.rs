@@ -31,7 +31,10 @@ pub struct Router {
 }
 
 /// Auto-select the native backend from the payload's geometry — the
-/// cost model of `crate::gw::backend` applied at admission time.
+/// selection rule of `crate::gw::backend` (crossover constants in
+/// `crate::gw::backend::cost_model`) applied at admission time. Grid
+/// payloads (1D and 2D) are fgc-exploitable — the separable engine
+/// scans any grid side — so only dense payloads route by size.
 fn native_auto(payload: &JobPayload) -> BackendChoice {
     let (m, n) = match payload {
         JobPayload::GwDense { dx, dy, .. } => (dx.rows(), dy.rows()),
@@ -127,13 +130,13 @@ mod tests {
     }
 
     fn dense(n: usize) -> JobPayload {
-        JobPayload::GwDense {
-            dx: Mat::zeros(n, n),
-            dy: Mat::zeros(n, n),
-            u: vec![1.0 / n as f64; n],
-            v: vec![1.0 / n as f64; n],
-            epsilon: 0.01,
-        }
+        JobPayload::gw_dense(
+            Mat::zeros(n, n),
+            Mat::zeros(n, n),
+            vec![1.0 / n as f64; n],
+            vec![1.0 / n as f64; n],
+            0.01,
+        )
     }
 
     #[test]

@@ -353,6 +353,10 @@ fn native_worker_loop(
         let Some(batch) = q.pop_batch_pinned(&mut pinned, cfg.batch_max.max(1), rotate) else {
             break;
         };
+        if batch.shed {
+            // Depth-aware pin expiry (a shed is also a steal below).
+            metrics.on_shed();
+        }
         if batch.stolen {
             metrics.on_steal();
             streak = 0;
@@ -397,7 +401,9 @@ fn payload_dims(p: &JobPayload) -> (usize, usize) {
 /// one operator: equal `(M, N)` shapes (the variant key only carries
 /// the source-side size — FGW pairs may differ on the target side)
 /// and, for dense payloads, *equal* distance matrices (the geometry
-/// travels in the payload).
+/// travels in the payload). Dense equality is decided by the content
+/// fingerprint stamped at admission — the `O(N²)` matrix compare only
+/// runs on a fingerprint match, as the collision guard.
 fn split_same_geometry(jobs: Vec<JobRequest>) -> Vec<Vec<JobRequest>> {
     let mut out: Vec<Vec<JobRequest>> = Vec::new();
     for job in jobs {
@@ -408,9 +414,19 @@ fn split_same_geometry(jobs: Vec<JobRequest>) -> Vec<Vec<JobRequest>> {
             }
             match (&head.payload, &job.payload) {
                 (
-                    JobPayload::GwDense { dx: ax, dy: ay, .. },
-                    JobPayload::GwDense { dx: bx, dy: by, .. },
-                ) => ax == bx && ay == by,
+                    JobPayload::GwDense {
+                        fingerprint: fa,
+                        dx: ax,
+                        dy: ay,
+                        ..
+                    },
+                    JobPayload::GwDense {
+                        fingerprint: fb,
+                        dx: bx,
+                        dy: by,
+                        ..
+                    },
+                ) => fa == fb && ax == bx && ay == by,
                 (JobPayload::GwDense { .. }, _) | (_, JobPayload::GwDense { .. }) => false,
                 _ => true,
             }
@@ -842,13 +858,13 @@ mod tests {
         let n = 12;
         // A smooth dense geometry (squared distances: exact rank 3).
         let d = crate::grid::dense_dist_1d(&crate::grid::Grid1d::unit(n), 2);
-        let payload = JobPayload::GwDense {
-            dx: d.clone(),
-            dy: d,
-            u: random_distribution(&mut rng, n),
-            v: random_distribution(&mut rng, n),
-            epsilon: 0.05,
-        };
+        let payload = JobPayload::gw_dense(
+            d.clone(),
+            d,
+            random_distribution(&mut rng, n),
+            random_distribution(&mut rng, n),
+            0.05,
+        );
         // Small dense → naive under auto-selection.
         let res = coord.submit_and_wait(payload.clone()).unwrap();
         assert!(res.objective.is_ok(), "{:?}", res.objective);
@@ -879,18 +895,12 @@ mod tests {
     }
 
     #[test]
-    fn split_same_geometry_partitions_dense_by_matrix() {
+    fn split_same_geometry_partitions_dense_by_fingerprint() {
         let mk = |scale: f64, id: u64| {
             let d = Mat::from_fn(4, 4, |i, j| scale * ((i as f64) - (j as f64)).abs());
             JobRequest {
                 id,
-                payload: JobPayload::GwDense {
-                    dx: d.clone(),
-                    dy: d,
-                    u: vec![0.25; 4],
-                    v: vec![0.25; 4],
-                    epsilon: 0.05,
-                },
+                payload: JobPayload::gw_dense(d.clone(), d, vec![0.25; 4], vec![0.25; 4], 0.05),
                 backend: BackendChoice::NativeNaive,
                 submitted_at: Instant::now(),
             }
@@ -902,5 +912,31 @@ mod tests {
             vec![1, 3]
         );
         assert_eq!(groups[1][0].id, 2);
+    }
+
+    #[test]
+    fn fingerprint_collision_still_splits_on_full_compare() {
+        // Two payloads with different matrices but a (forged) equal
+        // fingerprint: the collision guard's full matrix compare must
+        // keep them apart — a wrong fingerprint costs batching, never
+        // correctness.
+        let mk = |scale: f64, id: u64| {
+            let d = Mat::from_fn(4, 4, |i, j| scale * ((i as f64) - (j as f64)).abs());
+            JobRequest {
+                id,
+                payload: JobPayload::GwDense {
+                    dx: d.clone(),
+                    dy: d,
+                    u: vec![0.25; 4],
+                    v: vec![0.25; 4],
+                    epsilon: 0.05,
+                    fingerprint: 42,
+                },
+                backend: BackendChoice::NativeNaive,
+                submitted_at: Instant::now(),
+            }
+        };
+        let groups = split_same_geometry(vec![mk(1.0, 1), mk(2.0, 2)]);
+        assert_eq!(groups.len(), 2, "colliding fingerprints must full-compare");
     }
 }

@@ -8,11 +8,15 @@
 //! shard, and a worker stays **pinned** to one shard while it has work
 //! — so consecutive pops are overwhelmingly same-variant and hit the
 //! worker's warm workspace cache. When a worker's shard runs dry it
-//! *steals* from the longest shard and re-pins there, and after a
-//! bounded streak of same-shard batches it *rotates* to the longest
-//! other non-empty shard (the `rotate` flag on
-//! [`ShardedQueue::pop_batch_pinned`]) — so a skewed variant mix
-//! neither idles the pool nor starves the other shards' jobs.
+//! *steals* from the longest shard and re-pins there; after a bounded
+//! streak of same-shard batches it *rotates* to the longest other
+//! non-empty shard (the `rotate` flag on
+//! [`ShardedQueue::pop_batch_pinned`]); and when its pinned shard's
+//! depth falls below `1/`[`PIN_SHED_FACTOR`] of the longest other
+//! shard's it **sheds** the pin early and serves the deep shard
+//! instead (depth-aware pin expiry) — so a skewed variant mix neither
+//! idles the pool, starves the other shards' jobs, nor leaves a deep
+//! shard waiting on workers pinned to trickles.
 //!
 //! Admission enforces two budgets:
 //! * **per-shard capacity** — one hot variant cannot monopolize the
@@ -45,6 +49,14 @@ pub fn shard_for(key: &VariantKey, shards: usize) -> usize {
     (h % shards as u64) as usize
 }
 
+/// Depth ratio that expires a pin early: a worker whose pinned shard
+/// still has work, but `PIN_SHED_FACTOR×` less of it than the longest
+/// other shard, sheds the pin and serves the deep shard instead
+/// (ROADMAP "cross-worker shard rebalancing"). 4 keeps warm-hit rates
+/// high — mild imbalance never sheds — while bounding how long a deep
+/// shard can wait on workers pinned to trickles.
+pub const PIN_SHED_FACTOR: usize = 4;
+
 /// One batch popped from the queue: all items come from a single
 /// shard (FIFO), so they are overwhelmingly one variant.
 #[derive(Debug)]
@@ -53,6 +65,10 @@ pub struct PoppedBatch<T> {
     pub shard: usize,
     /// True iff the worker left its pinned shard to take this batch.
     pub stolen: bool,
+    /// True iff this steal was a depth-aware pin shed: the pinned
+    /// shard still had work, but [`PIN_SHED_FACTOR`]× less than the
+    /// shard served instead. Always implies `stolen`.
+    pub shed: bool,
     /// The items, in shard-FIFO order.
     pub items: Vec<T>,
 }
@@ -209,15 +225,19 @@ impl<T> ShardedQueue<T> {
     /// Pop up to `max` items from one shard, preferring `*pinned`.
     ///
     /// Blocks until any shard has work. If the pinned shard has items
-    /// it is drained first (the warm path); otherwise the **longest**
-    /// shard is chosen (work stealing, `stolen = true`) and the worker
-    /// re-pins there. `rotate = true` asks for a **fairness rotation**:
-    /// take the longest *other* non-empty shard even though the pinned
-    /// shard still has work (falling back to the pinned shard when no
-    /// other has any) — callers rotate after a bounded streak of
-    /// same-shard batches so a sustained hot variant cannot starve
-    /// jobs queued in other shards. Returns `None` once the queue is
-    /// closed and every shard is drained — the worker shutdown signal.
+    /// it is drained first (the warm path) — unless its depth has
+    /// fallen below `1/`[`PIN_SHED_FACTOR`] of the longest other
+    /// shard's, in which case the pin is **shed** early and the deep
+    /// shard is served instead (`stolen = true`, `shed = true`).
+    /// Otherwise the **longest** shard is chosen (work stealing,
+    /// `stolen = true`) and the worker re-pins there. `rotate = true`
+    /// asks for a **fairness rotation**: take the longest *other*
+    /// non-empty shard even though the pinned shard still has work
+    /// (falling back to the pinned shard when no other has any) —
+    /// callers rotate after a bounded streak of same-shard batches so
+    /// a sustained hot variant cannot starve jobs queued in other
+    /// shards. Returns `None` once the queue is closed and every shard
+    /// is drained — the worker shutdown signal.
     pub fn pop_batch_pinned(
         &self,
         pinned: &mut Option<usize>,
@@ -237,20 +257,31 @@ impl<T> ShardedQueue<T> {
                         .map(|(i, _)| i)
                 };
                 let preferred = pinned.filter(|&p| p < st.shards.len() && !st.shards[p].is_empty());
-                let (shard, stolen) = match preferred {
-                    Some(p) if !rotate => (p, false),
+                let (shard, stolen, shed) = match preferred {
+                    Some(p) if !rotate => match longest_excluding(&st, Some(p)) {
+                        // Depth-aware pin expiry: the pinned shard has
+                        // only a trickle left while another runs deep —
+                        // shed the pin and serve the deep shard.
+                        Some(other)
+                            if st.shards[p].len() * PIN_SHED_FACTOR
+                                < st.shards[other].len() =>
+                        {
+                            (other, true, true)
+                        }
+                        _ => (p, false, false),
+                    },
                     Some(p) => match longest_excluding(&st, Some(p)) {
                         // Fairness rotation: serve someone else's queue
                         // for one batch, then re-pin there.
-                        Some(other) => (other, true),
-                        None => (p, false),
+                        Some(other) => (other, true, false),
+                        None => (p, false, false),
                     },
                     None => {
                         let longest =
                             longest_excluding(&st, None).expect("total > 0 ⇒ a non-empty shard");
                         // Moving off a previously pinned (now dry)
                         // shard is a steal; a fresh worker just pins.
-                        (longest, pinned.is_some_and(|p| p != longest))
+                        (longest, pinned.is_some_and(|p| p != longest), false)
                     }
                 };
                 let take = st.shards[shard].len().min(max);
@@ -267,6 +298,7 @@ impl<T> ShardedQueue<T> {
                 return Some(PoppedBatch {
                     shard,
                     stolen,
+                    shed,
                     items,
                 });
             }
@@ -405,6 +437,60 @@ mod tests {
         assert_eq!(batch.items, vec![20]);
         p1.join().unwrap().unwrap();
         assert_eq!(sq.depths(), vec![1, 1]);
+    }
+
+    #[test]
+    fn depth_aware_pin_expiry_sheds_to_the_deep_shard() {
+        let sq = q(3, 16, 64);
+        sq.try_push(0, 1).unwrap();
+        for i in 0..5 {
+            sq.try_push(2, 20 + i).unwrap();
+        }
+        // Pinned depth 1 vs longest-other depth 5: 1·4 < 5 ⇒ shed.
+        let mut pinned = Some(0);
+        let batch = sq.pop_batch_pinned(&mut pinned, 8, false).unwrap();
+        assert!(batch.stolen && batch.shed, "expected a shed steal");
+        assert_eq!(batch.shard, 2);
+        assert_eq!(batch.items, vec![20, 21, 22, 23, 24]);
+        assert_eq!(pinned, Some(2), "shed re-pins on the deep shard");
+        // The shallow shard's job is still there and served next.
+        let batch = sq.pop_batch_pinned(&mut pinned, 8, false).unwrap();
+        assert_eq!((batch.shard, batch.shed), (0, false));
+        assert_eq!(batch.items, vec![1]);
+    }
+
+    #[test]
+    fn mild_imbalance_keeps_the_pin() {
+        let sq = q(2, 16, 64);
+        for i in 0..2 {
+            sq.try_push(0, i).unwrap();
+        }
+        for i in 0..8 {
+            sq.try_push(1, 100 + i).unwrap();
+        }
+        // 2·4 < 8 is false (strict): the pin holds, no shed.
+        let mut pinned = Some(0);
+        let batch = sq.pop_batch_pinned(&mut pinned, 8, false).unwrap();
+        assert_eq!((batch.shard, batch.stolen, batch.shed), (0, false, false));
+        assert_eq!(batch.items, vec![0, 1]);
+    }
+
+    #[test]
+    fn plain_steals_and_rotations_are_not_sheds() {
+        let sq = q(2, 8, 16);
+        sq.try_push(1, 5).unwrap();
+        // Dry-pinned steal: stolen, not shed.
+        let mut pinned = Some(0);
+        let batch = sq.pop_batch_pinned(&mut pinned, 4, false).unwrap();
+        assert!(batch.stolen && !batch.shed);
+        // Rotation: stolen, not shed.
+        for i in 0..3 {
+            sq.try_push(0, i).unwrap();
+        }
+        sq.try_push(1, 6).unwrap();
+        let mut pinned = Some(0);
+        let batch = sq.pop_batch_pinned(&mut pinned, 4, true).unwrap();
+        assert_eq!((batch.shard, batch.stolen, batch.shed), (1, true, false));
     }
 
     #[test]

@@ -231,9 +231,11 @@ pub fn dxgdy_2d(
 /// `dhat_cols` variant with caller-supplied intermediate buffers
 /// (used when the workspace temps are already occupied). `scratch`
 /// replaces what used to be a per-call `O(N²)` allocation, keeping
-/// the mirror-descent loop allocation-free.
+/// the mirror-descent loop allocation-free. Columns are computed
+/// independently (every inner scan is column-exact), which is what the
+/// separable engine's horizontally-stacked batch pass relies on.
 #[allow(clippy::too_many_arguments)]
-fn dhat_cols_with(
+pub(crate) fn dhat_cols_with(
     n: usize,
     ncols: usize,
     k: u32,
@@ -280,7 +282,7 @@ fn dhat_cols_with(
 /// the gradient product; scans stay serial because the caller already
 /// distributed rows over the thread budget).
 #[allow(clippy::too_many_arguments)]
-fn dhat_vec_into(
+pub(crate) fn dhat_vec_into(
     n: usize,
     k: u32,
     x: &[f64],

@@ -1,0 +1,805 @@
+//! Dimension-generic separable application of `D_X Γ D_Y`.
+//!
+//! The paper's fast gradient is *separable per side*: `D_X Γ D_Y =
+//! D_X · (Γ · D_Y)`, and each side is applied by whatever structure
+//! that side has — 1D forward/backward scans (eq. 3.9), the 2D
+//! binomial Kronecker-of-scans pipeline (eq. 3.12), or a plain dense
+//! product when no structure exists. [`AxisFactor`] names the per-side
+//! choice and [`SeparableOp`] composes one left and one right factor
+//! into the full product, so every pair shape — grid1d×grid1d,
+//! grid2d×grid2d, dense×grid2d, mixed 1D×2D, … — runs through one
+//! codepath with one scratch-growth policy instead of a hand-written
+//! plan per combination.
+//!
+//! Batching is where the separable view pays off. A right
+//! multiplication touches each **row** of the plan independently, so
+//! the batched apply stacks the plans *vertically* (`[Γ₁; …; Γ_B]`,
+//! shape `(B·M)×N`) and runs **one** row pass; a left multiplication
+//! touches each **column** independently, so the intermediates are
+//! restacked *horizontally* (`[A₁ | … | A_B]`, shape `M×(B·N)`) for
+//! **one** column pass. Every kernel used here decomposes exactly by
+//! row (scans carry no cross-row state; the dense kernel accumulates
+//! each output row in a fixed order) respectively by column, so the
+//! batched apply is **bit-for-bit** the sequential applies — for every
+//! factor combination and every thread count. Stacking also hands the
+//! parallel engine `B×` more rows/columns per pass, so small
+//! same-variant plans that were individually below the threading
+//! threshold stripe across the whole budget.
+
+use super::fgc2d::{dhat_cols_with, dhat_vec_into};
+use super::scan::{check_scan_exponent, dtilde_cols_par, dtilde_rows_par};
+use crate::error::{Error, Result};
+use crate::grid::{Binomial, Grid1d, Grid2d};
+use crate::linalg::{axpy, Mat};
+use crate::parallel::{self, Parallelism, SharedMutSlice};
+
+/// One side of the separable product: how that side's distance matrix
+/// is applied.
+#[derive(Clone, Debug)]
+pub enum AxisFactor {
+    /// 1D grid: `D = h^k·D̃`, applied by forward/backward scans in
+    /// `O(k²)` per element (the `h^k` scale is deferred to the
+    /// composition).
+    Scan1d {
+        /// The grid.
+        grid: Grid1d,
+        /// Distance exponent `k`.
+        k: u32,
+    },
+    /// 2D grid: `D = h^k·D̂`, applied by the binomial Kronecker
+    /// pipeline (`k+1` terms of paired 1D scans, `O(k³)` per element).
+    Scan2d {
+        /// The grid (side length `n`; factor dimension `n²`).
+        grid: Grid2d,
+        /// Distance exponent `k`.
+        k: u32,
+    },
+    /// No exploitable structure: a dense symmetric distance matrix.
+    Dense(Mat),
+}
+
+impl AxisFactor {
+    /// Factor dimension (support points on this side).
+    pub fn len(&self) -> usize {
+        match self {
+            AxisFactor::Scan1d { grid, .. } => grid.n,
+            AxisFactor::Scan2d { grid, .. } => grid.len(),
+            AxisFactor::Dense(d) => d.rows(),
+        }
+    }
+
+    /// True iff the factor has no support points (never for validly
+    /// constructed grids).
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The `h^k` scale pulled out of scan factors (`1.0` for dense —
+    /// dense matrices carry their values directly).
+    fn deferred_scale(&self) -> f64 {
+        match self {
+            AxisFactor::Scan1d { grid, k } => grid.scale(*k),
+            AxisFactor::Scan2d { grid, k } => grid.scale(*k),
+            AxisFactor::Dense(_) => 1.0,
+        }
+    }
+
+    /// The scan exponent for grid factors (`None` for dense).
+    fn scan_exponent(&self) -> Option<u32> {
+        match self {
+            AxisFactor::Scan1d { k, .. } | AxisFactor::Scan2d { k, .. } => Some(*k),
+            AxisFactor::Dense(_) => None,
+        }
+    }
+
+    /// True iff the factor is a dense matrix.
+    pub fn is_dense(&self) -> bool {
+        matches!(self, AxisFactor::Dense(_))
+    }
+}
+
+fn grow(v: &mut Vec<f64>, need: usize) {
+    if v.len() < need {
+        v.resize(need, 0.0);
+    }
+}
+
+/// `dst = scale · src` (plain copy when the deferred scale is 1).
+fn scale_into(scale: f64, src: &[f64], dst: &mut [f64]) {
+    if scale == 1.0 {
+        dst.copy_from_slice(src);
+    } else {
+        for (d, &s) in dst.iter_mut().zip(src) {
+            *d = scale * s;
+        }
+    }
+}
+
+/// Apply `factor` to every **row** of the row-major `rows×cols` slice
+/// — `out = x · F` for the symmetric `cols×cols` factor `F`, unscaled
+/// for scan factors (the deferred `h^k` is the caller's). Rows are
+/// computed independently and bitwise identically regardless of how
+/// many rows surround them, which is what makes the vertical batch
+/// stack exact.
+fn apply_to_rows(
+    factor: &AxisFactor,
+    rows: usize,
+    cols: usize,
+    x: &[f64],
+    out: &mut [f64],
+    binom: &Binomial,
+    row_t1: &mut [f64],
+    row_t2: &mut [f64],
+    row_carry: &mut [f64],
+    par: Parallelism,
+) -> Result<()> {
+    debug_assert_eq!(x.len(), rows * cols);
+    debug_assert_eq!(out.len(), rows * cols);
+    debug_assert_eq!(factor.len(), cols);
+    match factor {
+        AxisFactor::Scan1d { k, .. } => dtilde_rows_par(*k, false, rows, cols, x, out, binom, par),
+        AxisFactor::Scan2d { grid, k } => {
+            let (n, kk, k) = (grid.n, *k as usize, *k);
+            let cw = (kk + 1) * n;
+            let st1 = SharedMutSlice::new(row_t1);
+            let st2 = SharedMutSlice::new(row_t2);
+            let sc = SharedMutSlice::new(row_carry);
+            let min_rows = parallel::min_rows_for(cols * (kk + 1));
+            parallel::for_row_blocks(par, rows, cols, min_rows, out, |bidx, rr, oblk| {
+                // SAFETY: block indices are unique per parallel
+                // region, so the per-block scratch ranges are
+                // disjoint.
+                let t1 = unsafe { st1.range_mut(bidx * cols..(bidx + 1) * cols) };
+                let t2 = unsafe { st2.range_mut(bidx * cols..(bidx + 1) * cols) };
+                let carry = unsafe { sc.range_mut(bidx * cw..(bidx + 1) * cw) };
+                for (local, r) in rr.enumerate() {
+                    let src = &x[r * cols..(r + 1) * cols];
+                    let dst = &mut oblk[local * cols..(local + 1) * cols];
+                    dhat_vec_into(n, k, src, dst, t1, t2, carry, binom)
+                        .expect("exponent pre-validated at construction");
+                }
+            });
+            Ok(())
+        }
+        AxisFactor::Dense(d) => {
+            mul_rows_dense(rows, cols, x, d, out, par);
+            Ok(())
+        }
+    }
+}
+
+/// Apply `factor` to every **column** of the `rows×cols` slice —
+/// `out = F · x` for the symmetric `rows×rows` factor `F`, unscaled
+/// for scan factors. Columns are computed independently and bitwise
+/// identically regardless of how many columns surround them, which is
+/// what makes the horizontal batch stack exact.
+fn apply_to_cols(
+    factor: &AxisFactor,
+    rows: usize,
+    cols: usize,
+    x: &[f64],
+    out: &mut [f64],
+    binom: &Binomial,
+    tmp: &mut [f64],
+    scratch: &mut [f64],
+    carry: &mut [f64],
+    par: Parallelism,
+) -> Result<()> {
+    debug_assert_eq!(x.len(), rows * cols);
+    debug_assert_eq!(out.len(), rows * cols);
+    debug_assert_eq!(factor.len(), rows);
+    match factor {
+        AxisFactor::Scan1d { k, .. } => {
+            dtilde_cols_par(*k, false, rows, cols, x, out, carry, binom, par);
+            Ok(())
+        }
+        AxisFactor::Scan2d { grid, k } => {
+            dhat_cols_with(
+                grid.n,
+                cols,
+                *k,
+                x,
+                out,
+                &mut tmp[..rows * cols],
+                &mut scratch[..rows * cols],
+                carry,
+                binom,
+                par,
+            );
+            Ok(())
+        }
+        AxisFactor::Dense(d) => {
+            mul_cols_dense(rows, cols, d, x, out, par);
+            Ok(())
+        }
+    }
+}
+
+/// `out = x · D` on raw row-major slices — the same per-output-row
+/// axpy accumulation as `linalg::matmul_into`, so each row is bitwise
+/// independent of the rest of the batch.
+fn mul_rows_dense(
+    rows: usize,
+    cols: usize,
+    x: &[f64],
+    d: &Mat,
+    out: &mut [f64],
+    par: Parallelism,
+) {
+    debug_assert_eq!(d.shape(), (cols, cols));
+    let min_rows = parallel::min_rows_for(cols * cols);
+    parallel::for_row_blocks(par, rows, cols, min_rows, out, |_b, rr, oblk| {
+        for (local, r) in rr.enumerate() {
+            let xrow = &x[r * cols..(r + 1) * cols];
+            let orow = &mut oblk[local * cols..(local + 1) * cols];
+            orow.fill(0.0);
+            for (p, &xv) in xrow.iter().enumerate() {
+                if xv == 0.0 {
+                    continue;
+                }
+                axpy(xv, d.row(p), orow);
+            }
+        }
+    });
+}
+
+/// `out = D · x` on raw slices — per output row `i` the accumulation
+/// runs over `p` in a fixed order, so each *column* of the result is
+/// bitwise independent of the stacked width.
+fn mul_cols_dense(
+    rows: usize,
+    cols: usize,
+    d: &Mat,
+    x: &[f64],
+    out: &mut [f64],
+    par: Parallelism,
+) {
+    debug_assert_eq!(d.shape(), (rows, rows));
+    let min_rows = parallel::min_rows_for(rows * cols);
+    parallel::for_row_blocks(par, rows, cols, min_rows, out, |_b, rr, oblk| {
+        for (local, i) in rr.enumerate() {
+            let drow = d.row(i);
+            let orow = &mut oblk[local * cols..(local + 1) * cols];
+            orow.fill(0.0);
+            for (p, &dv) in drow.iter().enumerate() {
+                if dv == 0.0 {
+                    continue;
+                }
+                axpy(dv, &x[p * cols..(p + 1) * cols], orow);
+            }
+        }
+    });
+}
+
+/// The composed separable operator `Γ ↦ D_X Γ D_Y` over one left and
+/// one right [`AxisFactor`], owning every scratch buffer its passes
+/// need (grown on demand by one policy, reused forever after — zero
+/// allocation per apply once warm).
+pub struct SeparableOp {
+    left: AxisFactor,
+    right: AxisFactor,
+    m: usize,
+    n: usize,
+    /// Combined deferred `h^k` scale of both scan factors, applied
+    /// once in the final scatter.
+    scale: f64,
+    par: Parallelism,
+    /// Shared binomial table, sized for `2k` so callers may also run
+    /// squared-distance scans against it.
+    binom: Binomial,
+    /// Plans the scratch currently serves (the growth watermark).
+    cap: usize,
+    /// Stacked input / restack buffer, `B·M·N`.
+    stack_a: Vec<f64>,
+    /// Stacked pass output, `B·M·N`.
+    stack_b: Vec<f64>,
+    /// 2D column-pass Kronecker temp (left `Scan2d` only), `B·M·N`.
+    col_tmp: Vec<f64>,
+    /// 2D column-pass accumulation scratch (left `Scan2d` only).
+    col_scratch: Vec<f64>,
+    /// Column-scan carries, sized for the widest stacked pass.
+    carry: Vec<f64>,
+    /// Per-thread row-pass temp (right `Scan2d` only).
+    row_t1: Vec<f64>,
+    /// Second per-thread row-pass temp.
+    row_t2: Vec<f64>,
+    /// Per-thread row-pass scan carries.
+    row_carry: Vec<f64>,
+}
+
+impl SeparableOp {
+    /// Compose a left and a right factor. Scan exponents are validated
+    /// here so the apply paths are infallible on that axis.
+    pub fn new(left: AxisFactor, right: AxisFactor, par: Parallelism) -> Result<Self> {
+        for f in [&left, &right] {
+            if let Some(k) = f.scan_exponent() {
+                check_scan_exponent(k)?;
+            }
+        }
+        let kmax = left
+            .scan_exponent()
+            .unwrap_or(0)
+            .max(right.scan_exponent().unwrap_or(0)) as usize;
+        let (m, n) = (left.len(), right.len());
+        let scale = left.deferred_scale() * right.deferred_scale();
+        let mut op = SeparableOp {
+            left,
+            right,
+            m,
+            n,
+            scale,
+            par,
+            binom: Binomial::new((2 * kmax).max(4)),
+            cap: 0,
+            stack_a: Vec::new(),
+            stack_b: Vec::new(),
+            col_tmp: Vec::new(),
+            col_scratch: Vec::new(),
+            carry: Vec::new(),
+            row_t1: Vec::new(),
+            row_t2: Vec::new(),
+            row_carry: Vec::new(),
+        };
+        op.ensure_capacity(1);
+        Ok(op)
+    }
+
+    /// Problem shape `(M, N)` this operator serves.
+    pub fn shape(&self) -> (usize, usize) {
+        (self.m, self.n)
+    }
+
+    /// The left (`X`-side) factor.
+    pub fn left(&self) -> &AxisFactor {
+        &self.left
+    }
+
+    /// The right (`Y`-side) factor.
+    pub fn right(&self) -> &AxisFactor {
+        &self.right
+    }
+
+    /// Grow the stacked scratch to serve `batch` plans at once — the
+    /// single growth policy every plan shape shares. Never shrinks.
+    pub fn ensure_capacity(&mut self, batch: usize) {
+        let batch = batch.max(1);
+        if batch <= self.cap {
+            return;
+        }
+        let total = batch * self.m * self.n;
+        grow(&mut self.stack_a, total);
+        grow(&mut self.stack_b, total);
+        match &self.left {
+            AxisFactor::Scan1d { k, .. } => {
+                grow(&mut self.carry, (*k as usize + 1) * batch * self.n);
+            }
+            AxisFactor::Scan2d { grid, k } => {
+                grow(&mut self.carry, (*k as usize + 1) * grid.n * batch * self.n);
+                grow(&mut self.col_tmp, total);
+                grow(&mut self.col_scratch, total);
+            }
+            AxisFactor::Dense(_) => {}
+        }
+        if let AxisFactor::Scan2d { grid, k } = &self.right {
+            let threads = self.par.threads().max(1);
+            grow(&mut self.row_t1, threads * grid.len());
+            grow(&mut self.row_t2, threads * grid.len());
+            grow(&mut self.row_carry, threads * (*k as usize + 1) * grid.n);
+        }
+        self.cap = batch;
+    }
+
+    fn check_shape(&self, gamma: &Mat, out: &Mat, what: &'static str) -> Result<()> {
+        if gamma.shape() != (self.m, self.n) || out.shape() != (self.m, self.n) {
+            return Err(Error::shape(
+                what,
+                format!("{}x{}", self.m, self.n),
+                format!("{:?} / {:?}", gamma.shape(), out.shape()),
+            ));
+        }
+        Ok(())
+    }
+
+    /// `out = D_X Γ D_Y`: one row pass for the right factor, one
+    /// column pass for the left, one final scale.
+    pub fn apply(&mut self, gamma: &Mat, out: &mut Mat) -> Result<()> {
+        self.check_shape(gamma, out, "SeparableOp::apply")?;
+        let total = self.m * self.n;
+        apply_to_rows(
+            &self.right,
+            self.m,
+            self.n,
+            gamma.as_slice(),
+            &mut self.stack_b[..total],
+            &self.binom,
+            &mut self.row_t1,
+            &mut self.row_t2,
+            &mut self.row_carry,
+            self.par,
+        )?;
+        apply_to_cols(
+            &self.left,
+            self.m,
+            self.n,
+            &self.stack_b[..total],
+            &mut self.stack_a[..total],
+            &self.binom,
+            &mut self.col_tmp,
+            &mut self.col_scratch,
+            &mut self.carry,
+            self.par,
+        )?;
+        scale_into(self.scale, &self.stack_a[..total], out.as_mut_slice());
+        Ok(())
+    }
+
+    /// Batched apply, fused for **every** factor combination: plans
+    /// stack vertically for the one row pass and horizontally for the
+    /// one column pass (see the module docs for why both stacks are
+    /// bit-for-bit the sequential applies).
+    pub fn apply_batch(&mut self, gammas: &[&Mat], outs: &mut [Mat]) -> Result<()> {
+        let bsz = gammas.len();
+        if bsz != outs.len() {
+            return Err(Error::Invalid(format!(
+                "apply_batch: {bsz} plans but {} outputs",
+                outs.len()
+            )));
+        }
+        for (gamma, out) in gammas.iter().zip(outs.iter()) {
+            self.check_shape(gamma, out, "SeparableOp::apply_batch")?;
+        }
+        if bsz == 0 {
+            return Ok(());
+        }
+        if bsz == 1 {
+            return self.apply(gammas[0], &mut outs[0]);
+        }
+        self.ensure_capacity(bsz);
+        let (m, n) = (self.m, self.n);
+        let total = bsz * m * n;
+        // 1) vertical stack [Γ₁; …; Γ_B] → one row pass.
+        for (b, gamma) in gammas.iter().enumerate() {
+            self.stack_a[b * m * n..(b + 1) * m * n].copy_from_slice(gamma.as_slice());
+        }
+        apply_to_rows(
+            &self.right,
+            bsz * m,
+            n,
+            &self.stack_a[..total],
+            &mut self.stack_b[..total],
+            &self.binom,
+            &mut self.row_t1,
+            &mut self.row_t2,
+            &mut self.row_carry,
+            self.par,
+        )?;
+        // 2) restack horizontally [A₁ | … | A_B] → one column pass.
+        let bn = bsz * n;
+        for b in 0..bsz {
+            for i in 0..m {
+                let src_start = (b * m + i) * n;
+                let dst_start = i * bn + b * n;
+                let src = &self.stack_b[src_start..src_start + n];
+                self.stack_a[dst_start..dst_start + n].copy_from_slice(src);
+            }
+        }
+        apply_to_cols(
+            &self.left,
+            m,
+            bn,
+            &self.stack_a[..total],
+            &mut self.stack_b[..total],
+            &self.binom,
+            &mut self.col_tmp,
+            &mut self.col_scratch,
+            &mut self.carry,
+            self.par,
+        )?;
+        // 3) scale + scatter.
+        for (b, out) in outs.iter_mut().enumerate() {
+            let os = out.as_mut_slice();
+            for i in 0..m {
+                let src = &self.stack_b[i * bn + b * n..i * bn + (b + 1) * n];
+                scale_into(self.scale, src, &mut os[i * n..(i + 1) * n]);
+            }
+        }
+        Ok(())
+    }
+
+    /// Overwrite the **dense left** factor in place (the barycenter's
+    /// per-outer-update rebind: only the free support matrix changes,
+    /// the structured right side keeps its scan plan untouched).
+    pub fn swap_dense_left(&mut self, dx: &Mat) -> Result<()> {
+        match &mut self.left {
+            AxisFactor::Dense(old) if old.shape() == dx.shape() => {
+                old.as_mut_slice().copy_from_slice(dx.as_slice());
+                Ok(())
+            }
+            AxisFactor::Dense(old) => Err(Error::shape(
+                "SeparableOp::swap_dense_left",
+                format!("{:?}", old.shape()),
+                format!("{:?}", dx.shape()),
+            )),
+            _ => Err(Error::Invalid(
+                "swap_dense_left: the left factor is not dense".into(),
+            )),
+        }
+    }
+}
+
+/// Standalone row application of one factor with the deferred grid
+/// scale applied: `out = X · D` for the factor's distance matrix `D`.
+/// This is the barycenter update's `A = Γ_s · D_s` step — the same
+/// kernels as the separable pipeline's row pass, so image-grid (2D)
+/// inputs get the scan path without materializing `D_s`.
+pub struct RowApply {
+    factor: AxisFactor,
+    binom: Binomial,
+    row_t1: Vec<f64>,
+    row_t2: Vec<f64>,
+    row_carry: Vec<f64>,
+    par: Parallelism,
+}
+
+impl RowApply {
+    /// Wrap a factor for repeated row applications.
+    pub fn new(factor: AxisFactor, par: Parallelism) -> Result<Self> {
+        if let Some(k) = factor.scan_exponent() {
+            check_scan_exponent(k)?;
+        }
+        let kk = factor.scan_exponent().unwrap_or(0) as usize;
+        let (threads, nn, cw) = match &factor {
+            AxisFactor::Scan2d { grid, k } => (
+                par.threads().max(1),
+                grid.len(),
+                (*k as usize + 1) * grid.n,
+            ),
+            _ => (0, 0, 0),
+        };
+        Ok(RowApply {
+            binom: Binomial::new((2 * kk).max(4)),
+            row_t1: vec![0.0; threads * nn],
+            row_t2: vec![0.0; threads * nn],
+            row_carry: vec![0.0; threads * cw],
+            factor,
+            par,
+        })
+    }
+
+    /// The factor dimension (required column count of `x`).
+    pub fn cols(&self) -> usize {
+        self.factor.len()
+    }
+
+    /// `out = x · D` over the row-major `rows × cols` slice, scaled by
+    /// the factor's `h^k`.
+    pub fn apply(&mut self, rows: usize, x: &[f64], out: &mut [f64]) -> Result<()> {
+        let cols = self.factor.len();
+        if x.len() != rows * cols || out.len() != rows * cols {
+            return Err(Error::shape(
+                "RowApply::apply",
+                format!("{}", rows * cols),
+                format!("{} / {}", x.len(), out.len()),
+            ));
+        }
+        apply_to_rows(
+            &self.factor,
+            rows,
+            cols,
+            x,
+            out,
+            &self.binom,
+            &mut self.row_t1,
+            &mut self.row_t2,
+            &mut self.row_carry,
+            self.par,
+        )?;
+        let s = self.factor.deferred_scale();
+        if s != 1.0 {
+            for v in out.iter_mut() {
+                *v *= s;
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fgc::naive::dxgdy_dense;
+    use crate::grid::{dense_dist_1d, dense_dist_2d};
+    use crate::linalg::{frobenius_diff, matmul};
+    use crate::prng::Rng;
+
+    fn random_gamma(m: usize, n: usize, seed: u64) -> Mat {
+        let mut rng = Rng::seeded(seed);
+        Mat::from_fn(m, n, |_, _| rng.uniform() - 0.3)
+    }
+
+    /// The factor's dense distance matrix (oracle side).
+    fn dense_of(f: &AxisFactor) -> Mat {
+        match f {
+            AxisFactor::Scan1d { grid, k } => dense_dist_1d(grid, *k),
+            AxisFactor::Scan2d { grid, k } => dense_dist_2d(grid, *k),
+            AxisFactor::Dense(d) => d.clone(),
+        }
+    }
+
+    /// Every factor combination used by the fgc backend, small sizes.
+    fn factor_cases() -> Vec<(AxisFactor, AxisFactor)> {
+        let g1 = |n: usize, k: u32| AxisFactor::Scan1d {
+            grid: Grid1d::unit(n),
+            k,
+        };
+        let g2 = |n: usize, k: u32| AxisFactor::Scan2d {
+            grid: Grid2d::unit(n),
+            k,
+        };
+        let dn = |n: usize| AxisFactor::Dense(dense_dist_1d(&Grid1d::unit(n), 2));
+        vec![
+            (g1(12, 1), g1(9, 1)),
+            (g1(10, 2), g1(11, 2)),
+            (g2(3, 1), g2(4, 1)),
+            (g2(4, 2), g2(3, 2)),
+            (dn(10), g2(3, 1)),
+            (g2(3, 1), dn(8)),
+            (g1(7, 1), g2(3, 1)),
+            (g2(4, 1), g1(6, 1)),
+            (dn(9), g1(12, 1)),
+            (g1(12, 2), dn(7)),
+            (dn(8), dn(6)),
+        ]
+    }
+
+    #[test]
+    fn every_factor_combination_matches_the_dense_oracle() {
+        for (ci, (left, right)) in factor_cases().into_iter().enumerate() {
+            let (dx, dy) = (dense_of(&left), dense_of(&right));
+            let (m, n) = (left.len(), right.len());
+            let gamma = random_gamma(m, n, 100 + ci as u64);
+            let oracle = dxgdy_dense(&dx, &dy, &gamma).unwrap();
+            let mut op = SeparableOp::new(left, right, Parallelism::SERIAL).unwrap();
+            let mut out = Mat::zeros(m, n);
+            op.apply(&gamma, &mut out).unwrap();
+            let d = frobenius_diff(&out, &oracle).unwrap();
+            assert!(d < 1e-10, "case {ci}: separable apply diff {d:e}");
+        }
+    }
+
+    #[test]
+    fn batched_apply_is_bitwise_sequential_for_every_combination() {
+        for (ci, (left, right)) in factor_cases().into_iter().enumerate() {
+            for threads in [1usize, 4] {
+                let par = Parallelism::new(threads);
+                let (m, n) = (left.len(), right.len());
+                let mut op = SeparableOp::new(left.clone(), right.clone(), par).unwrap();
+                let plans: Vec<Mat> = (0..4)
+                    .map(|b| random_gamma(m, n, 500 + 10 * ci as u64 + b))
+                    .collect();
+                let mut seq: Vec<Mat> = (0..4).map(|_| Mat::zeros(m, n)).collect();
+                for (g, o) in plans.iter().zip(seq.iter_mut()) {
+                    op.apply(g, o).unwrap();
+                }
+                let refs: Vec<&Mat> = plans.iter().collect();
+                let mut batched: Vec<Mat> = (0..4).map(|_| Mat::zeros(m, n)).collect();
+                op.apply_batch(&refs, &mut batched).unwrap();
+                for (b, (s, o)) in seq.iter().zip(&batched).enumerate() {
+                    assert_eq!(
+                        s.as_slice(),
+                        o.as_slice(),
+                        "case {ci} threads={threads}: plan {b} drifted in the batch"
+                    );
+                }
+                // Warm reuse (scratch already grown) stays identical.
+                let mut again: Vec<Mat> = (0..4).map(|_| Mat::zeros(m, n)).collect();
+                op.apply_batch(&refs, &mut again).unwrap();
+                for (s, o) in seq.iter().zip(&again) {
+                    assert_eq!(s.as_slice(), o.as_slice(), "case {ci}: warm batch drifted");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_apply_matches_serial() {
+        for (ci, (left, right)) in factor_cases().into_iter().enumerate() {
+            let (m, n) = (left.len(), right.len());
+            let gamma = random_gamma(m, n, 900 + ci as u64);
+            let mut serial_op =
+                SeparableOp::new(left.clone(), right.clone(), Parallelism::SERIAL).unwrap();
+            let mut serial = Mat::zeros(m, n);
+            serial_op.apply(&gamma, &mut serial).unwrap();
+            for threads in [2usize, 7] {
+                let mut op =
+                    SeparableOp::new(left.clone(), right.clone(), Parallelism::new(threads))
+                        .unwrap();
+                let mut out = Mat::zeros(m, n);
+                op.apply(&gamma, &mut out).unwrap();
+                assert_eq!(
+                    serial.as_slice(),
+                    out.as_slice(),
+                    "case {ci} threads={threads}: parallel apply drifted"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn swap_dense_left_rebinds_in_place() {
+        let gy = AxisFactor::Scan2d {
+            grid: Grid2d::unit(3),
+            k: 1,
+        };
+        let d0 = dense_dist_1d(&Grid1d::unit(8), 2);
+        let d1 = d0.map(|x| 1.5 * x + 0.2);
+        let mut swapped =
+            SeparableOp::new(AxisFactor::Dense(d0), gy.clone(), Parallelism::SERIAL).unwrap();
+        swapped.swap_dense_left(&d1).unwrap();
+        let mut fresh =
+            SeparableOp::new(AxisFactor::Dense(d1.clone()), gy.clone(), Parallelism::SERIAL)
+                .unwrap();
+        let gamma = random_gamma(8, 9, 3);
+        let (mut a, mut b) = (Mat::zeros(8, 9), Mat::zeros(8, 9));
+        swapped.apply(&gamma, &mut a).unwrap();
+        fresh.apply(&gamma, &mut b).unwrap();
+        assert_eq!(a.as_slice(), b.as_slice());
+        // Shape mismatch and non-dense left both refuse.
+        assert!(swapped.swap_dense_left(&Mat::zeros(3, 3)).is_err());
+        let mut grid_left = SeparableOp::new(gy.clone(), gy, Parallelism::SERIAL).unwrap();
+        assert!(grid_left.swap_dense_left(&d1).is_err());
+    }
+
+    #[test]
+    fn row_apply_matches_dense_product() {
+        let cases = [
+            AxisFactor::Scan1d {
+                grid: Grid1d::unit(9),
+                k: 2,
+            },
+            AxisFactor::Scan2d {
+                grid: Grid2d::new(3, 0.5),
+                k: 1,
+            },
+            AxisFactor::Dense(dense_dist_1d(&Grid1d::unit(7), 1)),
+        ];
+        for (ci, factor) in cases.into_iter().enumerate() {
+            let d = dense_of(&factor);
+            let rows = 6;
+            let x = random_gamma(rows, factor.len(), 40 + ci as u64);
+            let oracle = matmul(&x, &d).unwrap();
+            let mut ra = RowApply::new(factor, Parallelism::SERIAL).unwrap();
+            let mut out = Mat::zeros(rows, ra.cols());
+            ra.apply(rows, x.as_slice(), out.as_mut_slice()).unwrap();
+            let diff = frobenius_diff(&out, &oracle).unwrap();
+            assert!(diff < 1e-11, "case {ci}: row apply diff {diff:e}");
+        }
+    }
+
+    #[test]
+    fn shape_validation() {
+        let g = AxisFactor::Scan1d {
+            grid: Grid1d::unit(5),
+            k: 1,
+        };
+        let mut op = SeparableOp::new(g.clone(), g, Parallelism::SERIAL).unwrap();
+        assert_eq!(op.shape(), (5, 5));
+        let gamma = Mat::zeros(5, 4);
+        let mut out = Mat::zeros(5, 5);
+        assert!(op.apply(&gamma, &mut out).is_err());
+        // Oversized scan exponents are rejected at construction.
+        let bad = AxisFactor::Scan1d {
+            grid: Grid1d::unit(5),
+            k: 16,
+        };
+        assert!(SeparableOp::new(
+            bad,
+            AxisFactor::Scan1d {
+                grid: Grid1d::unit(5),
+                k: 16
+            },
+            Parallelism::SERIAL
+        )
+        .is_err());
+    }
+}

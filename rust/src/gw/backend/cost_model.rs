@@ -1,0 +1,109 @@
+//! The backend cost model: per-apply FMA estimates and the measured
+//! selection constants, in one place.
+//!
+//! Every [`GradientBackend`](super::GradientBackend) reports
+//! `apply_cost()` through these formulas, and the auto-selector
+//! ([`super::auto_kind`], mirrored per job by the coordinator router)
+//! reads its crossover constant from here — so when a measured run of
+//! `cargo bench --bench hotpath` lands numbers in
+//! `BENCH_hotpath.json`, recalibration is a one-file change (the
+//! procedure is documented in EXPERIMENTS.md §Backend selection:
+//! solve the crossover `N` where the measured `naive_s` and
+//! `lowrank_s + lowrank_build_s / outer_iters` curves intersect in
+//! `dense_results`, and update [`DENSE_LOWRANK_CROSSOVER`]).
+
+use crate::fgc::AxisFactor;
+
+/// Dense side length above which the low-rank backend is expected to
+/// beat the naive baseline. The naive apply costs `O(MN(M+N))` FMAs
+/// while the factored apply costs `O((r_X+r_Y)·MN)`; smooth geometries
+/// factor at ranks well under this threshold, and below it the
+/// factorization setup is not worth amortizing over a 10-iteration
+/// mirror-descent solve.
+///
+/// **Calibration status:** an FMA-count estimate pending the first
+/// measured `dense_results` run (the committed `BENCH_hotpath.json`
+/// carries `null` timings — no Rust toolchain in the build container;
+/// see EXPERIMENTS.md §Backend selection for the update procedure).
+pub const DENSE_LOWRANK_CROSSOVER: usize = 128;
+
+/// FMAs of the dense two-product apply `D_X·Γ·D_Y` (`tmp = D_X·Γ`
+/// then `tmp·D_Y`) on an `M×N` plan.
+pub fn dense_pair_cost(m: f64, n: f64) -> f64 {
+    m * n * (m + n)
+}
+
+/// FMAs of applying one separable factor to every row (or column) of
+/// an `M×N` plan:
+///
+/// * 1D scans run `k+1` carry lanes with up to `k+1` binomial terms
+///   each → `(k+1)²` per element;
+/// * the 2D Kronecker pipeline runs `k+1` expansion terms of paired
+///   1D scans → `(k+1)³` per element;
+/// * a dense factor streams its full side → `len` per element.
+pub fn factor_cost(factor: &AxisFactor, plan_elems: f64) -> f64 {
+    match factor {
+        AxisFactor::Scan1d { k, .. } => {
+            let lanes = *k as f64 + 1.0;
+            lanes * lanes * plan_elems
+        }
+        AxisFactor::Scan2d { k, .. } => {
+            let lanes = *k as f64 + 1.0;
+            lanes * lanes * lanes * plan_elems
+        }
+        AxisFactor::Dense(d) => d.rows() as f64 * plan_elems,
+    }
+}
+
+/// FMAs of the composed separable apply: one row pass for the right
+/// factor plus one column pass for the left, each touching all `M·N`
+/// plan elements.
+pub fn separable_cost(left: &AxisFactor, right: &AxisFactor, m: f64, n: f64) -> f64 {
+    factor_cost(left, m * n) + factor_cost(right, m * n)
+}
+
+/// FMAs of the factored low-rank apply
+/// `A_X·((B_Xᵀ Γ)·A_Y)·B_Yᵀ` at ranks `(r_X, r_Y)`.
+pub fn lowrank_cost(rx: usize, ry: usize, m: f64, n: f64) -> f64 {
+    (rx + ry) as f64 * m * n + (rx * ry) as f64 * (m + n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::grid::{Grid1d, Grid2d};
+    use crate::linalg::Mat;
+
+    #[test]
+    fn factor_costs_order_sensibly() {
+        let scan1 = AxisFactor::Scan1d {
+            grid: Grid1d::unit(100),
+            k: 1,
+        };
+        let scan2 = AxisFactor::Scan2d {
+            grid: Grid2d::unit(10),
+            k: 1,
+        };
+        let dense = AxisFactor::Dense(Mat::zeros(100, 100));
+        let elems = 100.0 * 100.0;
+        // Scans beat streaming a 100-wide dense side; the 2D pipeline
+        // costs one extra (k+1) factor over 1D.
+        assert!(factor_cost(&scan1, elems) < factor_cost(&dense, elems));
+        assert!(factor_cost(&scan2, elems) < factor_cost(&dense, elems));
+        assert_eq!(
+            factor_cost(&scan2, elems),
+            2.0 * factor_cost(&scan1, elems)
+        );
+        // The composed separable cost is the sum of both passes.
+        assert_eq!(
+            separable_cost(&scan1, &dense, 100.0, 100.0),
+            factor_cost(&scan1, elems) + factor_cost(&dense, elems)
+        );
+    }
+
+    #[test]
+    fn lowrank_beats_naive_above_crossover_ranks() {
+        let n = DENSE_LOWRANK_CROSSOVER as f64 * 2.0;
+        assert!(lowrank_cost(3, 3, n, n) < dense_pair_cost(n, n));
+    }
+}

@@ -1,63 +1,50 @@
-//! The paper's fast-gradient backend (§3): dynamic-programming scans
-//! on grid-structured sides, dense products only where no structure
-//! exists.
+//! The paper's fast-gradient backend (§3), rebuilt on the
+//! dimension-generic separable engine.
 //!
-//! Dispatch is decided once at construction:
-//!
-//! * grid × grid (matching exponents) — the full `O(k²·MN)` FGC path
-//!   via [`dxgdy_1d`] / [`dxgdy_2d`];
-//! * dense × 1D-grid (the barycenter shape) — the grid factor is
-//!   applied by row scans (`A = Γ·D̃_Y` in `O(k²·MN)`), then one dense
-//!   product `D_X·A`; mirrored for 1D-grid × dense;
-//! * anything else (dense × dense under this kind, or mixed 2D) —
-//!   plain dense products, identical to [`super::NaiveBackend`].
+//! Construction maps each geometry side to an
+//! [`AxisFactor`](crate::fgc::AxisFactor) — 1D scans, the 2D
+//! Kronecker-of-scans pipeline, or a materialized dense matrix — and
+//! any pair with at least one grid side runs through one
+//! [`SeparableOp`] codepath: grid1d×grid1d, grid2d×grid2d,
+//! dense×grid1d, **dense×grid2d, grid2d×dense, mixed 1D×2D** — all
+//! with the same fused `apply_batch` (one stacked row pass, one
+//! stacked column pass) and one scratch-growth policy. Grid×grid
+//! pairs must share the distance exponent `k` (paper §2 footnote).
+//! Dense×dense pairs under this kind fall back to the shared
+//! `DensePair` two-product apply, identical to
+//! [`super::NaiveBackend`] by construction (including its fused
+//! batch).
 
-use super::{check_dense_x_swap, overwrite_dense_geom, DensePair, GradientBackend};
+use super::{check_dense_x_swap, cost_model, overwrite_dense_geom, DensePair, GradientBackend};
 use crate::error::{Error, Result};
-use crate::fgc::{
-    check_scan_exponent, dtilde_cols_par, dtilde_rows_par, dxgdy_1d, dxgdy_2d, Workspace1d,
-    Workspace2d,
-};
-use crate::grid::{Binomial, Grid1d, Grid2d};
+use crate::fgc::{check_scan_exponent, AxisFactor, SeparableOp};
 use crate::gw::geometry::Geometry;
 use crate::gw::gradient::GradientKind;
-use crate::linalg::{matmul_into, Mat};
+use crate::linalg::Mat;
 use crate::parallel::Parallelism;
+
+/// The separable factor for one geometry side (dense sides are
+/// materialized once here; grid sides carry only their descriptor).
+pub(crate) fn axis_factor(geom: &Geometry) -> Result<AxisFactor> {
+    Ok(match geom {
+        Geometry::Grid1d { grid, k } => {
+            check_scan_exponent(*k)?;
+            AxisFactor::Scan1d { grid: *grid, k: *k }
+        }
+        Geometry::Grid2d { grid, k } => {
+            check_scan_exponent(*k)?;
+            AxisFactor::Scan2d { grid: *grid, k: *k }
+        }
+        Geometry::Dense(d) => AxisFactor::Dense(d.clone()),
+    })
+}
 
 /// How the bound pair is evaluated (fixed at construction).
 enum Plan {
-    /// Both sides 1D grids: scans on both factors.
-    Grid1d {
-        gx: Grid1d,
-        gy: Grid1d,
-        k: u32,
-        ws: Box<Workspace1d>,
-    },
-    /// Both sides 2D grids: the binomial Kronecker pipeline.
-    Grid2d {
-        gx: Grid2d,
-        gy: Grid2d,
-        k: u32,
-        ws: Box<Workspace2d>,
-    },
-    /// Dense left factor, 1D grid right factor: `out = D_X·(Γ·D̃_Y·h^k)`.
-    DenseLeft {
-        dx: Mat,
-        gy: Grid1d,
-        k: u32,
-        a: Mat,
-        binom: Binomial,
-    },
-    /// 1D grid left factor, dense right factor: `out = (D̃_X·Γ·h^k)·D_Y`.
-    DenseRight {
-        gx: Grid1d,
-        k: u32,
-        dy: Mat,
-        a: Mat,
-        carry: Vec<f64>,
-        binom: Binomial,
-    },
-    /// No exploitable structure: the shared dense two-product apply.
+    /// At least one grid side: the dimension-generic factor pipeline.
+    Separable(Box<SeparableOp>),
+    /// Dense × dense under this kind: the shared dense two-product
+    /// apply, identical to the naive backend.
     Dense(DensePair),
 }
 
@@ -67,84 +54,40 @@ pub struct FgcBackend {
     geom_y: Geometry,
     plan: Plan,
     par: Parallelism,
-    /// Batched-apply scratch for the grid1d fused path: vertically /
-    /// horizontally stacked plan buffers and the widened scan carries.
-    /// Grown on first batched use, reused ever after.
-    batch_a: Vec<f64>,
-    batch_b: Vec<f64>,
-    batch_carry: Vec<f64>,
 }
 
 impl FgcBackend {
-    /// Bind a geometry pair. Grid × grid pairs must share the distance
-    /// exponent `k` (paper §2 footnote); scan exponents are validated
-    /// here so the apply path is infallible on that axis.
+    /// Bind a geometry pair. Grid × grid pairs (any dimension mix)
+    /// must share the distance exponent `k` (paper §2 footnote); scan
+    /// exponents are validated here so the apply path is infallible on
+    /// that axis.
     pub fn new(geom_x: Geometry, geom_y: Geometry, par: Parallelism) -> Result<Self> {
-        let (m, n) = (geom_x.len(), geom_y.len());
         let plan = match (&geom_x, &geom_y) {
-            (Geometry::Grid1d { grid: gx, k: kx }, Geometry::Grid1d { grid: gy, k: ky }) => {
-                if kx != ky {
-                    return Err(Error::Invalid(format!(
-                        "FGC requires k_X = k_Y (got {kx} vs {ky}); see paper §2 footnote"
-                    )));
-                }
-                check_scan_exponent(*kx)?;
-                Plan::Grid1d {
-                    gx: *gx,
-                    gy: *gy,
-                    k: *kx,
-                    ws: Box::new(Workspace1d::with_parallelism(gx.n, gy.n, *kx, par)),
-                }
+            (Geometry::Dense(_), Geometry::Dense(_)) => {
+                Plan::Dense(DensePair::new(&geom_x, &geom_y))
             }
-            (Geometry::Grid2d { grid: gx, k: kx }, Geometry::Grid2d { grid: gy, k: ky }) => {
-                if kx != ky {
-                    return Err(Error::Invalid(format!(
-                        "FGC requires k_X = k_Y (got {kx} vs {ky})"
-                    )));
+            _ => {
+                if let (Some(kx), Some(ky)) = (geom_x.grid_exponent(), geom_y.grid_exponent()) {
+                    if kx != ky {
+                        return Err(Error::Invalid(format!(
+                            "FGC requires k_X = k_Y (got {kx} vs {ky}); see paper §2 footnote"
+                        )));
+                    }
                 }
-                check_scan_exponent(*kx)?;
-                Plan::Grid2d {
-                    gx: *gx,
-                    gy: *gy,
-                    k: *kx,
-                    ws: Box::new(Workspace2d::with_parallelism(gx.n, gy.n, *kx, par)),
-                }
+                let left = axis_factor(&geom_x)?;
+                let right = axis_factor(&geom_y)?;
+                Plan::Separable(Box::new(SeparableOp::new(left, right, par)?))
             }
-            (Geometry::Dense(_), Geometry::Grid1d { grid: gy, k }) => {
-                check_scan_exponent(*k)?;
-                Plan::DenseLeft {
-                    dx: geom_x.dense(),
-                    gy: *gy,
-                    k: *k,
-                    a: Mat::zeros(m, n),
-                    binom: Binomial::new((2 * *k as usize).max(4)),
-                }
-            }
-            (Geometry::Grid1d { grid: gx, k }, Geometry::Dense(_)) => {
-                check_scan_exponent(*k)?;
-                Plan::DenseRight {
-                    gx: *gx,
-                    k: *k,
-                    dy: geom_y.dense(),
-                    a: Mat::zeros(m, n),
-                    carry: vec![0.0; (*k as usize + 1) * n],
-                    binom: Binomial::new((2 * *k as usize).max(4)),
-                }
-            }
-            _ => Plan::Dense(DensePair::new(&geom_x, &geom_y)),
         };
         Ok(FgcBackend {
             geom_x,
             geom_y,
             plan,
             par,
-            batch_a: Vec::new(),
-            batch_b: Vec::new(),
-            batch_carry: Vec::new(),
         })
     }
 
-    fn check_shapes(&self, gamma: &Mat, out: &Mat, what: &str) -> Result<()> {
+    fn check_shapes(&self, gamma: &Mat, out: &Mat, what: &'static str) -> Result<()> {
         let expect = (self.geom_x.len(), self.geom_y.len());
         if gamma.shape() != expect || out.shape() != expect {
             return Err(Error::shape(
@@ -171,173 +114,41 @@ impl GradientBackend for FgcBackend {
     }
 
     fn apply(&mut self, gamma: &Mat, out: &mut Mat) -> Result<()> {
-        let expect = (self.geom_x.len(), self.geom_y.len());
-        if gamma.shape() != expect || out.shape() != expect {
-            return Err(Error::shape(
-                "FgcBackend::apply",
-                format!("{}x{}", expect.0, expect.1),
-                format!("{:?} / {:?}", gamma.shape(), out.shape()),
-            ));
-        }
-        let par = self.par;
+        self.check_shapes(gamma, out, "FgcBackend::apply")?;
         match &mut self.plan {
-            Plan::Grid1d { gx, gy, k, ws } => dxgdy_1d(gx, gy, *k, gamma, out, ws),
-            Plan::Grid2d { gx, gy, k, ws } => dxgdy_2d(gx, gy, *k, gamma, out, ws),
-            Plan::DenseLeft { dx, gy, k, a, binom } => {
-                let (m, n) = expect;
-                dtilde_rows_par(*k, false, m, n, gamma.as_slice(), a.as_mut_slice(), binom, par)?;
-                let s = gy.scale(*k);
-                if s != 1.0 {
-                    for x in a.as_mut_slice() {
-                        *x *= s;
-                    }
-                }
-                matmul_into(dx, a, out, par)
-            }
-            Plan::DenseRight {
-                gx,
-                k,
-                dy,
-                a,
-                carry,
-                binom,
-            } => {
-                let (m, n) = expect;
-                dtilde_cols_par(
-                    *k,
-                    false,
-                    m,
-                    n,
-                    gamma.as_slice(),
-                    a.as_mut_slice(),
-                    carry,
-                    binom,
-                    par,
-                );
-                let s = gx.scale(*k);
-                if s != 1.0 {
-                    for x in a.as_mut_slice() {
-                        *x *= s;
-                    }
-                }
-                matmul_into(a, dy, out, par)
-            }
-            Plan::Dense(pair) => pair.apply(gamma, out, par),
+            Plan::Separable(op) => op.apply(gamma, out),
+            Plan::Dense(pair) => pair.apply(gamma, out, self.par),
         }
     }
 
-    /// Batched grid×grid (1D) apply: **one scan pass interleaving all
-    /// plans**. The row scans (`A_b = Γ_b·D̃_Y`) run over the
-    /// vertically stacked `(B·M)×N` matrix — rows are independent, so
-    /// one batched call is bit-for-bit the per-plan calls — and the
-    /// column scans (`G_b = D̃_X·A_b`) run over the horizontally
-    /// stacked `M×(B·N)` matrix, whose columns are likewise
-    /// independent. Per stacked call the scan engine parallelizes over
-    /// `B×` more rows/columns, so small same-variant plans that were
-    /// individually below the threading threshold now stripe across
-    /// the budget. Other plans fall back to the per-plan loop.
+    /// Fused batched apply for **every** plan shape this backend
+    /// constructs: separable plans stack vertically for one row-scan
+    /// pass and horizontally for one column-scan pass
+    /// ([`SeparableOp::apply_batch`]); the dense×dense fallback fuses
+    /// both cubic products across the batch (the shared `DensePair`).
+    /// Either way the result is bit-for-bit the sequential applies.
     fn apply_batch(&mut self, gammas: &[&Mat], outs: &mut [Mat]) -> Result<()> {
-        let bsz = gammas.len();
-        if bsz != outs.len() {
+        if gammas.len() != outs.len() {
             return Err(Error::Invalid(format!(
-                "apply_batch: {bsz} plans but {} outputs",
+                "apply_batch: {} plans but {} outputs",
+                gammas.len(),
                 outs.len()
             )));
         }
         for (gamma, out) in gammas.iter().zip(outs.iter()) {
             self.check_shapes(gamma, out, "FgcBackend::apply_batch")?;
         }
-        if bsz <= 1 || !matches!(self.plan, Plan::Grid1d { .. }) {
-            for (gamma, out) in gammas.iter().zip(outs.iter_mut()) {
-                self.apply(gamma, out)?;
-            }
-            return Ok(());
+        match &mut self.plan {
+            Plan::Separable(op) => op.apply_batch(gammas, outs),
+            Plan::Dense(pair) => pair.apply_batch(gammas, outs, self.par),
         }
-        let (m, n) = (self.geom_x.len(), self.geom_y.len());
-        let k = match &self.plan {
-            Plan::Grid1d { k, .. } => *k,
-            _ => unreachable!("checked above"),
-        };
-        let total = bsz * m * n;
-        let carry_need = (k as usize + 1) * bsz * n;
-        if self.batch_a.len() < total {
-            self.batch_a.resize(total, 0.0);
-        }
-        if self.batch_b.len() < total {
-            self.batch_b.resize(total, 0.0);
-        }
-        if self.batch_carry.len() < carry_need {
-            self.batch_carry.resize(carry_need, 0.0);
-        }
-        let Plan::Grid1d { gx, gy, ws, .. } = &self.plan else {
-            unreachable!("checked above")
-        };
-        // 1) vertical stack [Γ₁; …; Γ_B] → one row-scan pass.
-        for (b, gamma) in gammas.iter().enumerate() {
-            self.batch_a[b * m * n..(b + 1) * m * n].copy_from_slice(gamma.as_slice());
-        }
-        dtilde_rows_par(
-            k,
-            false,
-            bsz * m,
-            n,
-            &self.batch_a[..total],
-            &mut self.batch_b[..total],
-            ws.binom(),
-            self.par,
-        )?;
-        // 2) re-stack horizontally [A₁ | … | A_B] → one column-scan pass.
-        let bn = bsz * n;
-        for b in 0..bsz {
-            for i in 0..m {
-                let src_start = (b * m + i) * n;
-                let dst_start = i * bn + b * n;
-                let src = &self.batch_b[src_start..src_start + n];
-                self.batch_a[dst_start..dst_start + n].copy_from_slice(src);
-            }
-        }
-        dtilde_cols_par(
-            k,
-            false,
-            m,
-            bn,
-            &self.batch_a[..total],
-            &mut self.batch_b[..total],
-            &mut self.batch_carry[..carry_need],
-            ws.binom(),
-            self.par,
-        );
-        // 3) scale + scatter.
-        let scale = gx.scale(k) * gy.scale(k);
-        for (b, out) in outs.iter_mut().enumerate() {
-            let os = out.as_mut_slice();
-            for i in 0..m {
-                let src = &self.batch_b[i * bn + b * n..i * bn + (b + 1) * n];
-                let dst = &mut os[i * n..(i + 1) * n];
-                if scale == 1.0 {
-                    dst.copy_from_slice(src);
-                } else {
-                    for (d, &s) in dst.iter_mut().zip(src) {
-                        *d = scale * s;
-                    }
-                }
-            }
-        }
-        Ok(())
     }
 
     fn swap_dense_x(&mut self, dx: &Mat) -> Result<()> {
         check_dense_x_swap(&self.geom_x, dx)?;
         match &mut self.plan {
-            Plan::DenseLeft { dx: old, .. } => {
-                old.as_mut_slice().copy_from_slice(dx.as_slice())
-            }
+            Plan::Separable(op) => op.swap_dense_left(dx)?,
             Plan::Dense(pair) => pair.swap_dx(dx)?,
-            _ => {
-                return Err(Error::Invalid(
-                    "swap_dense_x: fgc plan has no dense X factor".into(),
-                ))
-            }
         }
         overwrite_dense_geom(&mut self.geom_x, dx);
         Ok(())
@@ -346,13 +157,8 @@ impl GradientBackend for FgcBackend {
     fn apply_cost(&self) -> f64 {
         let (m, n) = (self.geom_x.len() as f64, self.geom_y.len() as f64);
         match &self.plan {
-            Plan::Grid1d { k, .. } | Plan::Grid2d { k, .. } => {
-                let lanes = *k as f64 + 1.0;
-                lanes * lanes * m * n
-            }
-            Plan::DenseLeft { .. } => m * m * n,
-            Plan::DenseRight { .. } => m * n * n,
-            Plan::Dense(_) => m * n * (m + n),
+            Plan::Separable(op) => cost_model::separable_cost(op.left(), op.right(), m, n),
+            Plan::Dense(_) => cost_model::dense_pair_cost(m, n),
         }
     }
 }
@@ -388,6 +194,65 @@ mod tests {
                 be.apply(&gamma, &mut out).unwrap();
                 let d = frobenius_diff(&out, &oracle).unwrap();
                 assert!(d < 1e-11, "k={k}: mixed-path diff {d:e}");
+            }
+        }
+    }
+
+    #[test]
+    fn mixed_2d_pairs_match_the_dense_oracle() {
+        // The newly separable shapes: dense × 2D grid (both orders)
+        // and mixed 1D×2D — no dense D_X·Γ·D_Y product anywhere.
+        let g2 = Geometry::grid_2d_unit(4, 1); // 16 points
+        let g1 = Geometry::grid_1d_unit(10, 1);
+        let dn = Geometry::Dense(crate::grid::dense_dist_1d(&crate::grid::Grid1d::unit(9), 2));
+        for (gx, gy) in [
+            (dn.clone(), g2.clone()),
+            (g2.clone(), dn.clone()),
+            (g1.clone(), g2.clone()),
+            (g2.clone(), g1.clone()),
+        ] {
+            let (m, n) = (gx.len(), gy.len());
+            let gamma = random_gamma(m, n, 7 + m as u64);
+            let oracle = dxgdy_dense(&gx.dense(), &gy.dense(), &gamma).unwrap();
+            let mut be = FgcBackend::new(gx, gy, Parallelism::SERIAL).unwrap();
+            let mut out = Mat::zeros(m, n);
+            be.apply(&gamma, &mut out).unwrap();
+            let d = frobenius_diff(&out, &oracle).unwrap();
+            assert!(d < 1e-10, "{m}x{n}: 2D mixed-path diff {d:e}");
+        }
+    }
+
+    #[test]
+    fn batched_apply_is_bitwise_sequential_for_2d_and_mixed_plans() {
+        let g2 = Geometry::grid_2d_unit(3, 1);
+        let dn = Geometry::Dense(crate::grid::dense_dist_1d(&crate::grid::Grid1d::unit(8), 2));
+        let g1 = Geometry::grid_1d_unit(7, 1);
+        for (gx, gy) in [
+            (g2.clone(), g2.clone()),
+            (dn.clone(), g2.clone()),
+            (g2.clone(), dn.clone()),
+            (g1.clone(), g2.clone()),
+        ] {
+            for threads in [1usize, 4] {
+                let (m, n) = (gx.len(), gy.len());
+                let par = Parallelism::new(threads);
+                let mut be = FgcBackend::new(gx.clone(), gy.clone(), par).unwrap();
+                let gammas: Vec<Mat> = (0..5)
+                    .map(|s| {
+                        let mut rng = Rng::seeded(70 + s);
+                        Mat::from_fn(m, n, |_, _| rng.uniform() - 0.4)
+                    })
+                    .collect();
+                let mut seq: Vec<Mat> = (0..5).map(|_| Mat::zeros(m, n)).collect();
+                for (g, o) in gammas.iter().zip(seq.iter_mut()) {
+                    be.apply(g, o).unwrap();
+                }
+                let refs: Vec<&Mat> = gammas.iter().collect();
+                let mut batched: Vec<Mat> = (0..5).map(|_| Mat::zeros(m, n)).collect();
+                be.apply_batch(&refs, &mut batched).unwrap();
+                for (s, b) in seq.iter().zip(&batched) {
+                    assert_eq!(s.as_slice(), b.as_slice(), "{m}x{n} threads={threads}");
+                }
             }
         }
     }
@@ -445,6 +310,25 @@ mod tests {
     }
 
     #[test]
+    fn swap_dense_x_on_2d_mixed_plan_matches_fresh() {
+        // The image-grid barycenter rebind: dense support × 2D grid.
+        let gy = Geometry::grid_2d_unit(3, 1);
+        let d0 = crate::grid::dense_dist_1d(&crate::grid::Grid1d::unit(8), 2);
+        let d1 = d0.map(|x| 1.25 * x + 0.1);
+        let mut swapped =
+            FgcBackend::new(Geometry::Dense(d0), gy.clone(), Parallelism::SERIAL).unwrap();
+        swapped.swap_dense_x(&d1).unwrap();
+        let mut fresh =
+            FgcBackend::new(Geometry::Dense(d1.clone()), gy, Parallelism::SERIAL).unwrap();
+        let gamma = random_gamma(8, 9, 5);
+        let (mut a, mut b) = (Mat::zeros(8, 9), Mat::zeros(8, 9));
+        swapped.apply(&gamma, &mut a).unwrap();
+        fresh.apply(&gamma, &mut b).unwrap();
+        assert_eq!(a.as_slice(), b.as_slice());
+        assert_eq!(swapped.geom_x(), fresh.geom_x());
+    }
+
+    #[test]
     fn mixed_pairs_match_across_threads() {
         let gx = Geometry::Dense(Geometry::grid_1d_unit(40, 1).dense());
         let gy = Geometry::grid_1d_unit(33, 1);
@@ -457,6 +341,17 @@ mod tests {
             let mut out_p = Mat::zeros(40, 33);
             par.apply(&gamma, &mut out_p).unwrap();
             assert!(frobenius_diff(&out_s, &out_p).unwrap() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn grid_pairs_with_mismatched_exponents_are_rejected() {
+        for (gx, gy) in [
+            (Geometry::grid_1d_unit(8, 1), Geometry::grid_1d_unit(8, 2)),
+            (Geometry::grid_2d_unit(3, 1), Geometry::grid_2d_unit(3, 2)),
+            (Geometry::grid_1d_unit(9, 2), Geometry::grid_2d_unit(3, 1)),
+        ] {
+            assert!(FgcBackend::new(gx, gy, Parallelism::SERIAL).is_err());
         }
     }
 }

@@ -28,7 +28,7 @@
 //! [`LowRankOptions::max_rank`] disables the fallback and truncates
 //! hard (a deliberate approximation for benches/experiments).
 
-use super::{check_dense_x_swap, overwrite_dense_geom, DensePair, GradientBackend};
+use super::{check_dense_x_swap, cost_model, overwrite_dense_geom, DensePair, GradientBackend};
 use crate::error::{Error, Result};
 use crate::gw::geometry::Geometry;
 use crate::gw::gradient::GradientKind;
@@ -249,7 +249,9 @@ impl GradientBackend for LowRankBackend {
     /// Batched factored apply: the expensive outer products run once
     /// over the stacked batch — `B_Xᵀ·[Γ₁ … Γ_B]` (one sweep over the
     /// shared X factors) and `[t3₁; …; t3_B]·B_Yᵀ` — with only the
-    /// thin `r×r` middle products per plan. Dense-fallback pairs loop.
+    /// thin `r×r` middle products per plan. Dense-fallback pairs run
+    /// the shared fused dense batch (`D_X`/`D_Y` streamed once per
+    /// batch, same as the naive backend).
     fn apply_batch(&mut self, gammas: &[&Mat], outs: &mut [Mat]) -> Result<()> {
         let bsz = gammas.len();
         if bsz != outs.len() {
@@ -261,16 +263,23 @@ impl GradientBackend for LowRankBackend {
         for (gamma, out) in gammas.iter().zip(outs.iter()) {
             self.check_shapes(gamma, out, "LowRankBackend::apply_batch")?;
         }
-        let (rx, ry) = match &self.plan {
-            LrPlan::Factored { ax, ay, .. } => (ax.cols(), ay.cols()),
-            LrPlan::Dense(_) => (0, 0),
-        };
-        if bsz <= 1 || matches!(self.plan, LrPlan::Dense(_)) {
+        let par = self.par;
+        // High-rank fallback: the shared fused dense batch — one pass
+        // of `D_X` and `D_Y` over the whole batch, exactly like the
+        // naive backend and fgc's dense arm.
+        if let LrPlan::Dense(pair) = &mut self.plan {
+            return pair.apply_batch(gammas, outs, par);
+        }
+        if bsz <= 1 {
             for (gamma, out) in gammas.iter().zip(outs.iter_mut()) {
                 self.apply(gamma, out)?;
             }
             return Ok(());
         }
+        let (rx, ry) = match &self.plan {
+            LrPlan::Factored { ax, ay, .. } => (ax.cols(), ay.cols()),
+            LrPlan::Dense(_) => unreachable!("dense plan handled above"),
+        };
         let (m, n) = (self.geom_x.len(), self.geom_y.len());
         let rebuild = match &self.batch {
             Some(b) => {
@@ -372,8 +381,8 @@ impl GradientBackend for LowRankBackend {
     fn apply_cost(&self) -> f64 {
         let (m, n) = (self.geom_x.len() as f64, self.geom_y.len() as f64);
         match self.ranks() {
-            Some((rx, ry)) => (rx + ry) as f64 * m * n + (rx * ry) as f64 * (m + n),
-            None => m * n * (m + n),
+            Some((rx, ry)) => cost_model::lowrank_cost(rx, ry, m, n),
+            None => cost_model::dense_pair_cost(m, n),
         }
     }
 }

@@ -10,8 +10,10 @@
 //! implementations:
 //!
 //! * [`FgcBackend`] — the paper's `O(k²·MN)` dynamic-programming path
-//!   on grids; with exactly one dense side the structured factor is
-//!   still applied by scans (the barycenter case).
+//!   on grids, composed per side by the separable engine
+//!   (`crate::fgc::separable`): any grid side — 1D or 2D, next to a
+//!   grid of either dimension or a dense side — is applied by scans
+//!   (the barycenter shapes included).
 //! * [`NaiveBackend`] — the dense `O(MN(M+N))` baseline ("Original" in
 //!   every table).
 //! * [`LowRankBackend`] — truncated factorization `D ≈ A·Bᵀ` for
@@ -19,31 +21,29 @@
 //!   `O(r·MN)` apply (Scetbon et al. 2021 direction; see PAPERS.md).
 //!
 //! [`auto_kind`] implements the selection heuristic end-to-end
-//! (grid → fgc, small dense → naive, large dense → lowrank); the
-//! coordinator router applies the same rule per job via
-//! [`auto_kind_for_sizes`].
+//! (fgc-exploitable structure → fgc, small dense → naive, large dense
+//! → lowrank); the coordinator router applies the same rule per job
+//! via [`auto_kind_for_sizes`]. The FMA estimates and the measured
+//! selection constants live in [`cost_model`], so a calibration run
+//! updates one place.
 
+pub mod cost_model;
 mod fgc;
 mod lowrank;
 mod naive;
 
+pub use cost_model::DENSE_LOWRANK_CROSSOVER;
 pub use fgc::FgcBackend;
 pub use lowrank::{LowRankBackend, LowRankOptions};
 pub use naive::NaiveBackend;
+
+pub(crate) use fgc::axis_factor;
 
 use super::geometry::Geometry;
 use super::gradient::GradientKind;
 use crate::error::{Error, Result};
 use crate::linalg::{matmul_into, Mat};
 use crate::parallel::Parallelism;
-
-/// Dense side length above which the low-rank backend is expected to
-/// beat the naive baseline. The naive apply costs `O(MN(M+N))` FMAs
-/// while the factored apply costs `O((r_X+r_Y)·MN)`; smooth geometries
-/// factor at ranks well under this threshold, and below it the
-/// factorization setup is not worth amortizing over a 10-iteration
-/// mirror-descent solve (see EXPERIMENTS.md §Backend selection).
-pub const DENSE_LOWRANK_CROSSOVER: usize = 128;
 
 /// A gradient kernel bound to one `(X, Y)` geometry pair.
 ///
@@ -164,23 +164,42 @@ pub trait GradientBackend: Send {
     fn apply_cost(&self) -> f64;
 }
 
+/// Stacked buffers for [`DensePair::apply_batch`] (grown on demand;
+/// one reallocation per batch-size change, zero per apply).
+struct DenseBatch {
+    /// `[Γ₁ | … | Γ_B]` column-stacked, `M × B·N`.
+    gstack: Mat,
+    /// `D_X·gstack`, `M × B·N`.
+    tstack: Mat,
+    /// The same intermediate row-stacked `[T₁; …; T_B]`, `B·M × N`.
+    mid: Mat,
+    /// `mid·D_Y`, `B·M × N` (rows `b·M..(b+1)·M` are `outs[b]`).
+    ostack: Mat,
+}
+
 /// The dense two-product apply (`tmp = D_X·Γ`, `out = tmp·D_Y`) shared
-/// by the naive backend and the dense-fallback arms of the fgc and
-/// lowrank backends — one implementation, so the "identical to the
-/// naive apply" guarantee those fallbacks document holds by
-/// construction.
+/// by the naive backend and the dense×dense fallback arms of the fgc
+/// and lowrank backends — one implementation (including the fused
+/// batched form), so the "identical to the naive apply" guarantee
+/// those fallbacks document holds by construction.
 pub(crate) struct DensePair {
     dx: Mat,
     dy: Mat,
     /// `D_X·Γ` intermediate, reused every iteration.
     tmp: Mat,
+    batch: Option<DenseBatch>,
 }
 
 impl DensePair {
     /// Wrap already-materialized distance matrices.
     pub(crate) fn from_mats(dx: Mat, dy: Mat) -> Self {
         let tmp = Mat::zeros(dx.rows(), dy.rows());
-        DensePair { dx, dy, tmp }
+        DensePair {
+            dx,
+            dy,
+            tmp,
+            batch: None,
+        }
     }
 
     /// Materialize a geometry pair densely.
@@ -205,6 +224,67 @@ impl DensePair {
     pub(crate) fn apply(&mut self, gamma: &Mat, out: &mut Mat, par: Parallelism) -> Result<()> {
         matmul_into(&self.dx, gamma, &mut self.tmp, par)?;
         matmul_into(&self.tmp, &self.dy, out, par)
+    }
+
+    /// Fused batched apply: both cubic products run once over the
+    /// whole batch — `D_X·[Γ₁ … Γ_B]` over the column-stacked plans,
+    /// then `[T₁; …; T_B]·D_Y` over the row-stacked intermediate —
+    /// so `D_X` and `D_Y` are each streamed **once per batch** instead
+    /// of once per plan. Per-entry accumulation order is identical to
+    /// the per-plan products, so the batch is bit-for-bit the
+    /// sequential loop. Shapes must be pre-validated by the caller.
+    pub(crate) fn apply_batch(
+        &mut self,
+        gammas: &[&Mat],
+        outs: &mut [Mat],
+        par: Parallelism,
+    ) -> Result<()> {
+        let bsz = gammas.len();
+        if bsz <= 1 {
+            for (gamma, out) in gammas.iter().zip(outs.iter_mut()) {
+                self.apply(gamma, out, par)?;
+            }
+            return Ok(());
+        }
+        let (m, n) = (self.dx.rows(), self.dy.rows());
+        let rebuild = match &self.batch {
+            Some(b) => b.gstack.shape() != (m, bsz * n),
+            None => true,
+        };
+        if rebuild {
+            self.batch = Some(DenseBatch {
+                gstack: Mat::zeros(m, bsz * n),
+                tstack: Mat::zeros(m, bsz * n),
+                mid: Mat::zeros(bsz * m, n),
+                ostack: Mat::zeros(bsz * m, n),
+            });
+        }
+        let nb = self.batch.as_mut().expect("just ensured");
+        // 1) column-stack the plans.
+        for (b, gamma) in gammas.iter().enumerate() {
+            for i in 0..m {
+                nb.gstack.row_mut(i)[b * n..(b + 1) * n].copy_from_slice(gamma.row(i));
+            }
+        }
+        // 2) one pass of D_X over the whole batch.
+        matmul_into(&self.dx, &nb.gstack, &mut nb.tstack, par)?;
+        // 3) re-stack the intermediate by rows.
+        for b in 0..bsz {
+            for i in 0..m {
+                let src = &nb.tstack.row(i)[b * n..(b + 1) * n];
+                nb.mid.row_mut(b * m + i).copy_from_slice(src);
+            }
+        }
+        // 4) one pass of D_Y over the whole batch.
+        matmul_into(&nb.mid, &self.dy, &mut nb.ostack, par)?;
+        // 5) scatter.
+        for (b, out) in outs.iter_mut().enumerate() {
+            let os = out.as_mut_slice();
+            for i in 0..m {
+                os[i * n..(i + 1) * n].copy_from_slice(nb.ostack.row(b * m + i));
+            }
+        }
+        Ok(())
     }
 }
 
@@ -259,23 +339,19 @@ pub fn auto_kind_for_sizes(structured: bool, m: usize, n: usize) -> GradientKind
 }
 
 /// [`auto_kind_for_sizes`] on a bound geometry pair. "Structured"
-/// means the fgc backend has a scan plan for the pair — matching-`k`
-/// grid pairs, or a 1D grid next to a dense side (the barycenter
-/// shape). Pairs fgc would only serve by its dense fallback (e.g.
-/// dense × 2D grid, or mismatched exponents) fall through to the
-/// dense-size heuristic instead, so the auto-selector never routes a
-/// workload onto a silently-degraded path.
+/// means the separable fgc engine has a scan factor for at least one
+/// side: any pair with a grid side — grid×grid (1D/2D/mixed, matching
+/// `k`), dense×grid (1D *or* 2D, either order; the barycenter shapes).
+/// Only dense×dense pairs and mismatched grid exponents — the shapes
+/// fgc would serve by its dense fallback — fall through to the
+/// dense-size heuristic, so the auto-selector never routes a workload
+/// onto a silently-degraded path.
 pub fn auto_kind(geom_x: &Geometry, geom_y: &Geometry) -> GradientKind {
-    let fgc_exploitable = matches!(
-        (geom_x, geom_y),
-        (Geometry::Grid1d { k: ka, .. }, Geometry::Grid1d { k: kb, .. }) if ka == kb
-    ) || matches!(
-        (geom_x, geom_y),
-        (Geometry::Grid2d { k: ka, .. }, Geometry::Grid2d { k: kb, .. }) if ka == kb
-    ) || matches!(
-        (geom_x, geom_y),
-        (Geometry::Grid1d { .. }, Geometry::Dense(_)) | (Geometry::Dense(_), Geometry::Grid1d { .. })
-    );
+    let fgc_exploitable = match (geom_x.grid_exponent(), geom_y.grid_exponent()) {
+        (Some(ka), Some(kb)) => ka == kb,
+        (None, None) => false,
+        _ => true,
+    };
     auto_kind_for_sizes(fgc_exploitable, geom_x.len(), geom_y.len())
 }
 
@@ -297,15 +373,22 @@ mod tests {
             auto_kind_for_sizes(false, DENSE_LOWRANK_CROSSOVER + 1, 4),
             GradientKind::LowRank
         );
-        // Pairs the fgc backend would only serve via its dense
-        // fallback route by size instead: dense × 2D grid, and
-        // mismatched grid exponents.
+        // The separable engine scans any grid side: dense × 2D grid
+        // (either order) and mixed 1D×2D pairs are fgc-exploitable.
         let grid2d = Geometry::grid_2d_unit(18, 1); // 324 points
         assert_eq!(auto_kind(&grid2d, &grid2d), GradientKind::Fgc);
-        assert_eq!(auto_kind(&large, &grid2d), GradientKind::LowRank);
-        assert_eq!(auto_kind(&small, &Geometry::grid_2d_unit(4, 1)), GradientKind::Naive);
+        assert_eq!(auto_kind(&large, &grid2d), GradientKind::Fgc);
+        assert_eq!(auto_kind(&grid2d, &large), GradientKind::Fgc);
+        assert_eq!(auto_kind(&small, &Geometry::grid_2d_unit(4, 1)), GradientKind::Fgc);
+        assert_eq!(auto_kind(&grid, &grid2d), GradientKind::Fgc);
+        // Mismatched grid exponents stay on the dense-size heuristic
+        // (fgc would only serve them via its dense fallback).
         let grid_k2 = Geometry::grid_1d_unit(500, 2);
         assert_eq!(auto_kind(&grid, &grid_k2), GradientKind::LowRank);
+        assert_eq!(
+            auto_kind(&Geometry::grid_1d_unit(20, 2), &Geometry::grid_2d_unit(4, 1)),
+            GradientKind::Naive
+        );
     }
 
     #[test]

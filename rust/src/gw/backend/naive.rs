@@ -5,45 +5,27 @@
 //! speedup table and exactness check (`‖P_Fa − P‖_F`) has a reference
 //! that shares the rest of the solver verbatim.
 //!
-//! The batched apply fuses both cubic products across the whole batch:
-//! `D_X·[Γ₁ … Γ_B]` as one product over the column-stacked plans, then
-//! `[T₁; …; T_B]·D_Y` over the row-stacked intermediate — `D_X` and
-//! `D_Y` are each streamed **once per batch** instead of once per plan,
-//! which is the whole point of the coordinator handing same-geometry
-//! jobs to one backend. Per-entry accumulation order is identical to
-//! the per-plan products, so the batch is bit-for-bit the sequential
-//! loop.
+//! Both the per-plan apply and the fused batched apply live in the
+//! shared `DensePair` (also the dense×dense fallback of the fgc and
+//! lowrank backends): the batch streams `D_X` and `D_Y` **once per
+//! batch** instead of once per plan, bit-for-bit the sequential loop.
 
-use super::{check_dense_x_swap, overwrite_dense_geom, DensePair, GradientBackend};
+use super::{check_dense_x_swap, cost_model, overwrite_dense_geom, DensePair, GradientBackend};
 use crate::error::{Error, Result};
 use crate::gw::geometry::Geometry;
 use crate::gw::gradient::GradientKind;
-use crate::linalg::{matmul_into, Mat};
+use crate::linalg::Mat;
 use crate::parallel::Parallelism;
-
-/// Stacked buffers for the fused batched apply (grown on demand; one
-/// reallocation per batch-size change, zero per apply).
-struct NaiveBatch {
-    /// `[Γ₁ | … | Γ_B]` column-stacked, `M × B·N`.
-    gstack: Mat,
-    /// `D_X·gstack`, `M × B·N`.
-    tstack: Mat,
-    /// The same intermediate row-stacked `[T₁; …; T_B]`, `B·M × N`.
-    mid: Mat,
-    /// `mid·D_Y`, `B·M × N` (rows `b·M..(b+1)·M` are `outs[b]`).
-    ostack: Mat,
-}
 
 /// Dense-product gradient backend over a bound geometry pair.
 pub struct NaiveBackend {
     geom_x: Geometry,
     geom_y: Geometry,
     /// The shared two-product apply (materialized eagerly; the
-    /// intermediate is reused every iteration so the baseline is also
-    /// allocation-free).
+    /// intermediate and the batch stacks are reused every iteration so
+    /// the baseline is also allocation-free).
     pair: DensePair,
     par: Parallelism,
-    batch: Option<NaiveBatch>,
 }
 
 impl NaiveBackend {
@@ -55,11 +37,10 @@ impl NaiveBackend {
             geom_y,
             pair,
             par,
-            batch: None,
         }
     }
 
-    fn check_shapes(&self, gamma: &Mat, out: &Mat, what: &str) -> Result<()> {
+    fn check_shapes(&self, gamma: &Mat, out: &Mat, what: &'static str) -> Result<()> {
         let expect = (self.geom_x.len(), self.geom_y.len());
         if gamma.shape() != expect || out.shape() != expect {
             return Err(Error::shape(
@@ -91,61 +72,17 @@ impl GradientBackend for NaiveBackend {
     }
 
     fn apply_batch(&mut self, gammas: &[&Mat], outs: &mut [Mat]) -> Result<()> {
-        let bsz = gammas.len();
-        if bsz != outs.len() {
+        if gammas.len() != outs.len() {
             return Err(Error::Invalid(format!(
-                "apply_batch: {bsz} plans but {} outputs",
+                "apply_batch: {} plans but {} outputs",
+                gammas.len(),
                 outs.len()
             )));
         }
         for (gamma, out) in gammas.iter().zip(outs.iter()) {
             self.check_shapes(gamma, out, "NaiveBackend::apply_batch")?;
         }
-        if bsz <= 1 {
-            for (gamma, out) in gammas.iter().zip(outs.iter_mut()) {
-                self.pair.apply(gamma, out, self.par)?;
-            }
-            return Ok(());
-        }
-        let (m, n) = (self.geom_x.len(), self.geom_y.len());
-        let rebuild = match &self.batch {
-            Some(b) => b.gstack.shape() != (m, bsz * n),
-            None => true,
-        };
-        if rebuild {
-            self.batch = Some(NaiveBatch {
-                gstack: Mat::zeros(m, bsz * n),
-                tstack: Mat::zeros(m, bsz * n),
-                mid: Mat::zeros(bsz * m, n),
-                ostack: Mat::zeros(bsz * m, n),
-            });
-        }
-        let nb = self.batch.as_mut().expect("just ensured");
-        // 1) column-stack the plans.
-        for (b, gamma) in gammas.iter().enumerate() {
-            for i in 0..m {
-                nb.gstack.row_mut(i)[b * n..(b + 1) * n].copy_from_slice(gamma.row(i));
-            }
-        }
-        // 2) one pass of D_X over the whole batch.
-        matmul_into(&self.pair.dx, &nb.gstack, &mut nb.tstack, self.par)?;
-        // 3) re-stack the intermediate by rows.
-        for b in 0..bsz {
-            for i in 0..m {
-                let src = &nb.tstack.row(i)[b * n..(b + 1) * n];
-                nb.mid.row_mut(b * m + i).copy_from_slice(src);
-            }
-        }
-        // 4) one pass of D_Y over the whole batch.
-        matmul_into(&nb.mid, &self.pair.dy, &mut nb.ostack, self.par)?;
-        // 5) scatter.
-        for (b, out) in outs.iter_mut().enumerate() {
-            let os = out.as_mut_slice();
-            for i in 0..m {
-                os[i * n..(i + 1) * n].copy_from_slice(nb.ostack.row(b * m + i));
-            }
-        }
-        Ok(())
+        self.pair.apply_batch(gammas, outs, self.par)
     }
 
     fn swap_dense_x(&mut self, dx: &Mat) -> Result<()> {
@@ -156,8 +93,7 @@ impl GradientBackend for NaiveBackend {
     }
 
     fn apply_cost(&self) -> f64 {
-        let (m, n) = (self.geom_x.len() as f64, self.geom_y.len() as f64);
-        m * n * (m + n)
+        cost_model::dense_pair_cost(self.geom_x.len() as f64, self.geom_y.len() as f64)
     }
 }
 

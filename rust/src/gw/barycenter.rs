@@ -9,33 +9,37 @@
 //! D   ← Σ_s λ_s · (Γ_s D_s Γ_sᵀ) ⊘ (p pᵀ)
 //! ```
 //!
-//! This loop is the first consumer of the **batched** gradient
-//! backends: per outer update, inputs sharing a grid shape `(n, k)`
-//! solve their S couplings against the *one* current support `D` in
-//! lockstep over a single shared operator
-//! ([`EntropicGw::solve_batch_into`]), so every mirror-descent
-//! iteration makes one fused pass over the shared factors instead of
-//! S independent ones — bit-for-bit the sequential plans. Between
-//! outer updates only the free matrix `D` changes; the group's
-//! persistent [`GwBatchWorkspace`] swaps it **in place**
-//! ([`GwBatchWorkspace::swap_dense_x`]), keeping the structured side's
-//! densified/factored state instead of rebuilding the backend per
-//! (outer update × input). The barycenter update itself computes
-//! `A_s = Γ_s D_s` by scans on the FGC path and against a per-group
-//! cached dense `D_s` otherwise; all dense products honour the
-//! configured thread budget. The free matrix `D` has no grid
+//! Inputs live on **grid geometries of any dimension** —
+//! [`gw_barycenter_grid`] accepts 1D grids (histograms, the original
+//! workload) and 2D image grids alike. Per outer update, inputs
+//! sharing a geometry solve their S couplings against the *one*
+//! current support `D` in lockstep over a single shared operator
+//! ([`EntropicGw::solve_batch_into`]); the resulting dense×grid pairs
+//! run the separable fgc path on **both** 1D and 2D sides, so
+//! image-grid barycenter traffic is quadratic end-to-end — no dense
+//! `D_X·Γ·D_Y` product anywhere. Between outer updates only the free
+//! matrix `D` changes; each group's persistent [`GwBatchWorkspace`]
+//! swaps it **in place** ([`GwBatchWorkspace::swap_dense_x`]), keeping
+//! the structured side's scan/factored state instead of rebuilding the
+//! backend per (outer update × input). The barycenter update itself
+//! computes `A_s = Γ_s D_s` through the same factor pipeline
+//! ([`RowApply`]: 1D scans or the 2D Kronecker-of-scans, never
+//! materializing `D_s`) on the FGC path, and against a per-group
+//! cached dense `D_s` otherwise. The free matrix `D` has no grid
 //! structure, so — exactly as the paper's conclusion implies — only
 //! the `D_s` side speeds up.
 //!
 //! [`GwBatchWorkspace`]: super::entropic::GwBatchWorkspace
 //! [`GwBatchWorkspace::swap_dense_x`]: super::entropic::GwBatchWorkspace::swap_dense_x
+//! [`RowApply`]: crate::fgc::RowApply
 
+use super::backend::axis_factor;
 use super::entropic::{BatchJob, EntropicGw, GwBatchWorkspace, GwConfig};
 use super::geometry::Geometry;
 use super::gradient::GradientKind;
 use crate::error::{Error, Result};
-use crate::fgc::scan::dtilde_rows;
-use crate::grid::{dense_dist_1d, Binomial, Grid1d};
+use crate::fgc::RowApply;
+use crate::grid::{dense_dist_1d, Grid1d};
 use crate::linalg::{matmul_par, Mat};
 
 /// Barycenter iteration configuration.
@@ -71,7 +75,9 @@ pub struct BarycenterResult {
     pub iterations: usize,
 }
 
-/// One barycenter input: a distribution on a 1D unit grid.
+/// One barycenter input: a distribution on a 1D unit grid (the
+/// original histogram workload; see [`BaryGridInput`] for the
+/// dimension-generic form).
 #[derive(Clone, Debug)]
 pub struct BaryInput1d {
     /// Distribution over the grid (sums to 1).
@@ -84,10 +90,67 @@ pub struct BaryInput1d {
     pub lambda: f64,
 }
 
+/// One barycenter input on any grid geometry (1D or 2D).
+#[derive(Clone, Debug)]
+pub struct BaryGridInput {
+    /// Distribution over the grid's support (sums to 1).
+    pub weights: Vec<f64>,
+    /// The input's metric space — must be a grid variant (the FGC
+    /// path scans it; dense inputs have no structure to exploit and
+    /// are rejected).
+    pub geometry: Geometry,
+    /// Mixing weight λ_s (normalized internally).
+    pub lambda: f64,
+}
+
+impl BaryGridInput {
+    /// Input on a 1D unit grid of `n` points with exponent `k`.
+    pub fn grid_1d(weights: Vec<f64>, n: usize, k: u32, lambda: f64) -> Self {
+        BaryGridInput {
+            weights,
+            geometry: Geometry::grid_1d_unit(n, k),
+            lambda,
+        }
+    }
+
+    /// Input on an `n×n` unit image grid with exponent `k`
+    /// (`weights` flattened row-major, length `n²`).
+    pub fn grid_2d(weights: Vec<f64>, n: usize, k: u32, lambda: f64) -> Self {
+        BaryGridInput {
+            weights,
+            geometry: Geometry::grid_2d_unit(n, k),
+            lambda,
+        }
+    }
+}
+
 /// Fixed-support GW barycenter of 1D-grid measures. `support_n` is
-/// the barycenter support size with uniform weights.
+/// the barycenter support size with uniform weights. Thin wrapper over
+/// [`gw_barycenter_grid`].
 pub fn gw_barycenter_1d(
     inputs: &[BaryInput1d],
+    support_n: usize,
+    cfg: &BarycenterConfig,
+    kind: GradientKind,
+) -> Result<BarycenterResult> {
+    let converted: Vec<BaryGridInput> = inputs
+        .iter()
+        .map(|inp| BaryGridInput {
+            weights: inp.weights.clone(),
+            geometry: Geometry::grid_1d_unit(inp.n, inp.k),
+            lambda: inp.lambda,
+        })
+        .collect();
+    gw_barycenter_grid(&converted, support_n, cfg, kind)
+}
+
+/// Fixed-support GW barycenter of grid measures of any dimension.
+/// `support_n` is the barycenter support size with uniform weights;
+/// the support metric is initialized from a 1D unit grid at the first
+/// input's exponent (an arbitrary symmetric start — the outer updates
+/// overwrite it).
+pub fn gw_barycenter_grid(
+    inputs: &[BaryGridInput],
     support_n: usize,
     cfg: &BarycenterConfig,
     kind: GradientKind,
@@ -99,35 +162,64 @@ pub fn gw_barycenter_1d(
     if lambda_sum <= 0.0 {
         return Err(Error::Invalid("lambda weights must be positive".into()));
     }
-    let par = cfg.gw.parallelism();
-    let p = vec![1.0 / support_n as f64; support_n];
-    // Initialize D from the first input's grid metric at matching size.
-    let mut d = dense_dist_1d(&Grid1d::unit(support_n), inputs[0].k);
-
-    // Group inputs by grid shape `(n, k)` in first-appearance order:
-    // each group's S couplings share one geometry pair per outer
-    // update, so they batch over one operator.
-    let mut groups: Vec<((usize, u32), Vec<usize>)> = Vec::new();
-    for (s, inp) in inputs.iter().enumerate() {
-        let key = (inp.n, inp.k);
-        if let Some((_, members)) = groups.iter_mut().find(|(k2, _)| *k2 == key) {
-            members.push(s);
-        } else {
-            groups.push((key, vec![s]));
+    for inp in inputs {
+        if !inp.geometry.is_structured() {
+            return Err(Error::Invalid(
+                "barycenter inputs must live on grid geometries (dense inputs have no \
+                 structure for the update scans)"
+                    .into(),
+            ));
+        }
+        if inp.weights.len() != inp.geometry.len() {
+            return Err(Error::shape(
+                "gw_barycenter_grid (weights)",
+                format!("{}", inp.geometry.len()),
+                format!("{}", inp.weights.len()),
+            ));
         }
     }
-    // Per-group dense D_s for the update step (unchanged across outer
-    // updates — densified once, not per (update × input)). The FGC
-    // path applies D_s by scans and never materializes it.
-    let ds_dense: Vec<Option<Mat>> = groups
-        .iter()
-        .map(|((n, k), _)| match kind {
-            GradientKind::Fgc => None,
-            GradientKind::Naive | GradientKind::LowRank => {
-                Some(dense_dist_1d(&Grid1d::unit(*n), *k))
-            }
-        })
-        .collect();
+    let par = cfg.gw.parallelism();
+    let p = vec![1.0 / support_n as f64; support_n];
+    // Initialize D from a 1D grid metric at matching size.
+    let k0 = inputs[0].geometry.grid_exponent().expect("validated grid");
+    let mut d = dense_dist_1d(&Grid1d::unit(support_n), k0);
+
+    // Group inputs by geometry in first-appearance order: each group's
+    // S couplings share one geometry pair per outer update, so they
+    // batch over one operator.
+    let mut groups: Vec<(Geometry, Vec<usize>)> = Vec::new();
+    for (s, inp) in inputs.iter().enumerate() {
+        if let Some((_, members)) = groups.iter_mut().find(|(g, _)| *g == inp.geometry) {
+            members.push(s);
+        } else {
+            groups.push((inp.geometry.clone(), vec![s]));
+        }
+    }
+    let mut group_of = vec![0usize; inputs.len()];
+    for (gi, (_, members)) in groups.iter().enumerate() {
+        for &s in members {
+            group_of[s] = gi;
+        }
+    }
+    // Per-group D_s application for the update step: the FGC path
+    // applies D_s by row scans through the separable factor pipeline
+    // (1D or 2D, never materialized); the dense baselines cache one
+    // dense D_s per group (unchanged across outer updates — densified
+    // once, not per (update × input)).
+    enum DsApply {
+        Scan(RowApply),
+        Dense(Mat),
+    }
+    let mut ds_apply: Vec<DsApply> = Vec::with_capacity(groups.len());
+    for (geom, _) in &groups {
+        ds_apply.push(match kind {
+            GradientKind::Fgc => DsApply::Scan(RowApply::new(axis_factor(geom)?, par)?),
+            // LowRank has nothing to gain here: D_s is a grid matrix
+            // applied once per outer update, so the dense product is
+            // the honest baseline cost.
+            GradientKind::Naive | GradientKind::LowRank => DsApply::Dense(geom.dense()),
+        });
+    }
     // One persistent batched workspace per group, built lazily on the
     // first outer update; afterwards only the dense `D` side is
     // swapped in place.
@@ -137,10 +229,8 @@ pub fn gw_barycenter_1d(
     for _ in 0..cfg.iters {
         // --- 1) all couplings, group-batched against the current D ---
         let mut plans: Vec<Option<Mat>> = (0..inputs.len()).map(|_| None).collect();
-        for (gi, ((gn, gk), members)) in groups.iter().enumerate() {
-            let geom_x = Geometry::Dense(d.clone());
-            let geom_y = Geometry::grid_1d_unit(*gn, *gk);
-            let solver = EntropicGw::new(geom_x, geom_y, cfg.gw);
+        for (gi, (geom, members)) in groups.iter().enumerate() {
+            let solver = EntropicGw::new(Geometry::Dense(d.clone()), geom.clone(), cfg.gw);
             let jobs: Vec<BatchJob> = members
                 .iter()
                 .map(|&s| BatchJob::gw(&p, &inputs[s].weights))
@@ -163,41 +253,19 @@ pub fn gw_barycenter_1d(
         // --- 2) barycenter update, accumulated in input order ---
         couplings.clear();
         let mut d_next = Mat::zeros(support_n, support_n);
-        let mut group_of = vec![0usize; inputs.len()];
-        for (gi, (_, members)) in groups.iter().enumerate() {
-            for &s in members {
-                group_of[s] = gi;
-            }
-        }
         for (s, inp) in inputs.iter().enumerate() {
             let gamma = plans[s].take().expect("coupling solved above");
             // A = Γ_s · D_s : grid side applied fast on the FGC path
-            // (scans along the contiguous rows of Γ_s, O(k²·N·n_s)
-            // instead of O(N·n_s²)); cached dense product otherwise.
-            let mut a = Mat::zeros(support_n, inp.n);
-            match kind {
-                GradientKind::Fgc => {
-                    let grid = Grid1d::unit(inp.n);
-                    let binom = Binomial::new(inp.k as usize);
-                    dtilde_rows(
-                        inp.k,
-                        false,
-                        support_n,
-                        inp.n,
-                        gamma.as_slice(),
-                        a.as_mut_slice(),
-                        &binom,
-                    )?;
-                    let sc = grid.scale(inp.k);
-                    for x in a.as_mut_slice() {
-                        *x *= sc;
-                    }
+            // (row scans through the factor pipeline, O(k²) or O(k³)
+            // per element instead of O(n_s)); cached dense product
+            // otherwise.
+            let ns = inp.geometry.len();
+            let mut a = Mat::zeros(support_n, ns);
+            match &mut ds_apply[group_of[s]] {
+                DsApply::Scan(row) => {
+                    row.apply(support_n, gamma.as_slice(), a.as_mut_slice())?;
                 }
-                GradientKind::Naive | GradientKind::LowRank => {
-                    // LowRank has nothing to gain here: D_s is a grid
-                    // matrix applied once per outer update, so the
-                    // dense product is the honest baseline cost.
-                    let ds = ds_dense[group_of[s]].as_ref().expect("cached above");
+                DsApply::Dense(ds) => {
                     a = matmul_par(&gamma, ds, par)?;
                 }
             }
@@ -238,6 +306,13 @@ mod tests {
             k,
             lambda,
         }
+    }
+
+    fn input_2d(side: usize, k: u32, seed: u64, lambda: f64) -> BaryGridInput {
+        let mut rng = Rng::seeded(seed);
+        let mut w = rng.uniform_vec(side * side);
+        normalize_l1(&mut w).unwrap();
+        BaryGridInput::grid_2d(w, side, k, lambda)
     }
 
     fn cfg() -> BarycenterConfig {
@@ -290,6 +365,27 @@ mod tests {
     }
 
     #[test]
+    fn image_grid_barycenter_fgc_matches_naive() {
+        // Two inputs on 3×3 image grids plus one on a 4×4: the 2D
+        // groups run dense×grid2d solves through the separable fgc
+        // path; the naive baseline is the correctness oracle.
+        let inputs = [
+            input_2d(3, 1, 31, 1.0),
+            input_2d(3, 1, 32, 0.5),
+            input_2d(4, 1, 33, 1.0),
+        ];
+        let mut c = cfg();
+        c.gw.epsilon = 0.05;
+        c.iters = 2;
+        let a = gw_barycenter_grid(&inputs, 8, &c, GradientKind::Fgc).unwrap();
+        let b = gw_barycenter_grid(&inputs, 8, &c, GradientKind::Naive).unwrap();
+        assert_eq!(a.couplings.len(), inputs.len());
+        assert_eq!(a.distance.shape(), (8, 8));
+        let d = crate::linalg::frobenius_diff(&a.distance, &b.distance).unwrap();
+        assert!(d < 1e-8, "2D barycenter fgc-vs-naive diff={d}");
+    }
+
+    #[test]
     fn same_shape_inputs_batch_and_match_sequential() {
         // Three inputs sharing (n, k) take the lockstep batched path;
         // the result must be bit-for-bit the straight-line loop of
@@ -333,10 +429,20 @@ mod tests {
     }
 
     #[test]
-    fn rejects_empty_and_bad_lambda() {
+    fn rejects_empty_and_bad_inputs() {
         assert!(gw_barycenter_1d(&[], 5, &cfg(), GradientKind::Fgc).is_err());
         let mut bad = input(8, 1, 9, 0.0);
         bad.lambda = 0.0;
         assert!(gw_barycenter_1d(&[bad], 5, &cfg(), GradientKind::Fgc).is_err());
+        // Dense geometries carry no structure for the update scans.
+        let dense_inp = BaryGridInput {
+            weights: vec![0.25; 4],
+            geometry: Geometry::Dense(Mat::zeros(4, 4)),
+            lambda: 1.0,
+        };
+        assert!(gw_barycenter_grid(&[dense_inp], 5, &cfg(), GradientKind::Fgc).is_err());
+        // Weight/support length mismatch is rejected up front.
+        let short = BaryGridInput::grid_1d(vec![0.5, 0.5], 8, 1, 1.0);
+        assert!(gw_barycenter_grid(&[short], 5, &cfg(), GradientKind::Fgc).is_err());
     }
 }

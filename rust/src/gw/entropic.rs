@@ -450,8 +450,12 @@ impl<'a> BatchJob<'a> {
 /// [`PairOperator::dxgdy_batch`] fuses every job's gradient product
 /// over the shared factors/kernel, then each job runs its own inner
 /// Sinkhorn — producing **bit-for-bit** the plans of independent
-/// [`EntropicGw::solve_into`] calls. Capacity grows on demand and is
-/// reused across solves (the coordinator's warm-worker cache and the
+/// [`EntropicGw::solve_into`] calls. Every plan shape the fgc backend
+/// constructs batches fused — grid1d, grid2d, dense×grid (1D or 2D)
+/// and mixed-dimension pairs all run one stacked scan pass per side
+/// (the separable engine), so 2D image-grid supports batch exactly
+/// like the original 1D path. Capacity grows on demand and is reused
+/// across solves (the coordinator's warm-worker cache and the
 /// barycenter's per-group workspaces hold exactly one of these).
 pub struct GwBatchWorkspace {
     op: PairOperator,
@@ -997,6 +1001,50 @@ mod tests {
         assert_eq!(batched[0].plan.as_slice(), s1.plan.as_slice());
         assert_eq!(batched[1].plan.as_slice(), s2.plan.as_slice());
         assert_eq!(batched[0].objective, s1.objective);
+    }
+
+    #[test]
+    fn batched_2d_and_mixed_solves_are_bitwise_sequential() {
+        // 2D-grid and dense×2D-grid supports route through the fused
+        // batch path exactly like 1D: lockstep solves must reproduce
+        // the independent solves bit for bit.
+        let side = 4; // 16 points
+        let dense_m = 10;
+        let dense = Geometry::Dense(
+            crate::grid::dense_dist_1d(&crate::grid::Grid1d::unit(dense_m), 2),
+        );
+        let grid2 = Geometry::grid_2d_unit(side, 1);
+        let cases = [
+            (grid2.clone(), grid2.clone()),
+            (dense.clone(), grid2.clone()),
+            (grid2.clone(), dense.clone()),
+        ];
+        for (gx, gy) in cases {
+            let (m, n) = (gx.len(), gy.len());
+            let solver = EntropicGw::new(
+                gx,
+                gy,
+                GwConfig {
+                    epsilon: 0.05,
+                    outer_iters: 3,
+                    ..cfg_small()
+                },
+            );
+            let pairs: Vec<(Vec<f64>, Vec<f64>)> = (0..3)
+                .map(|s| random_dists(m, n, 300 + s))
+                .collect();
+            let seq: Vec<GwSolution> = pairs
+                .iter()
+                .map(|(u, v)| solver.solve(u, v, GradientKind::Fgc).unwrap())
+                .collect();
+            let jobs: Vec<BatchJob> = pairs.iter().map(|(u, v)| BatchJob::gw(u, v)).collect();
+            let mut ws = solver.batch_workspace(GradientKind::Fgc, jobs.len()).unwrap();
+            let batched = solver.solve_batch_into(&jobs, &mut ws).unwrap();
+            for (s, b) in seq.iter().zip(&batched) {
+                assert_eq!(s.plan.as_slice(), b.plan.as_slice(), "{m}x{n}: plan drifted");
+                assert_eq!(s.objective, b.objective, "{m}x{n}: objective drifted");
+            }
+        }
     }
 
     #[test]

@@ -79,6 +79,16 @@ impl Geometry {
         !matches!(self, Geometry::Dense(_))
     }
 
+    /// The grid's distance exponent `k` (`None` for dense geometries)
+    /// — the per-side handle the separable backend and the
+    /// auto-selector key on.
+    pub fn grid_exponent(&self) -> Option<u32> {
+        match self {
+            Geometry::Grid1d { k, .. } | Geometry::Grid2d { k, .. } => Some(*k),
+            Geometry::Dense(_) => None,
+        }
+    }
+
     /// Materialize the dense distance matrix (baseline path; `O(N²)`
     /// memory).
     pub fn dense(&self) -> Mat {
@@ -226,5 +236,8 @@ mod tests {
         assert_eq!(Geometry::grid_2d_unit(4, 1).len(), 16);
         assert!(Geometry::grid_1d_unit(7, 1).is_structured());
         assert!(!Geometry::Dense(Mat::zeros(3, 3)).is_structured());
+        assert_eq!(Geometry::grid_1d_unit(7, 2).grid_exponent(), Some(2));
+        assert_eq!(Geometry::grid_2d_unit(4, 1).grid_exponent(), Some(1));
+        assert_eq!(Geometry::Dense(Mat::zeros(3, 3)).grid_exponent(), None);
     }
 }

@@ -30,7 +30,9 @@ pub mod objective;
 pub mod ugw;
 
 pub use backend::{GradientBackend, LowRankBackend, LowRankOptions};
-pub use barycenter::{gw_barycenter_1d, BarycenterConfig, BarycenterResult};
+pub use barycenter::{
+    gw_barycenter_1d, gw_barycenter_grid, BarycenterConfig, BarycenterResult, BaryGridInput,
+};
 pub use coot::{coot, coot_into, CootConfig, CootData, CootSolution, CootWorkspace};
 pub use driver::{run_mirror_descent, DriverStats, MirrorProblem};
 pub use entropic::{BatchJob, EntropicGw, GwBatchWorkspace, GwConfig, GwSolution, GwWorkspace};

@@ -13,6 +13,11 @@
 //!    UGW / COOT / barycenter algorithms (written against the same
 //!    public kernels) must match the refactored solvers exactly.
 
+// Index-based loops mirror the paper's recurrences (same rationale
+// as the crate-level allow in src/lib.rs; test/bench targets do not
+// inherit it).
+#![allow(clippy::needless_range_loop, clippy::too_many_arguments)]
+
 use fgc_gw::grid::{dense_dist_1d, Grid1d};
 use fgc_gw::gw::{
     barycenter::BaryInput1d, coot, gw_barycenter_1d, gw_objective, BarycenterConfig, CootConfig,
@@ -113,6 +118,62 @@ fn prop_entropic_dense_backends_agree() {
                     let d = frobenius_diff(&sol.plan, &baseline.plan).unwrap();
                     if d > 1e-8 {
                         return Err(format!("{kind} threads={threads}: ‖ΔΓ‖_F = {d:e}"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// 2D-grid and mixed pairs agree across backends and thread budgets —
+/// the shapes the separable fgc engine newly accelerates
+/// (grid2d×grid2d, dense×grid2d, grid2d×dense, mixed 1D×2D) against
+/// the dense baseline.
+#[test]
+fn prop_2d_and_mixed_backends_agree() {
+    check_prop(
+        "entropic-2d-mixed-backend-agreement",
+        3,
+        0xBE08,
+        |rng| {
+            let side = 3 + rng.below(2) as usize; // 9 or 16 points
+            let m = 8 + rng.below(5) as usize;
+            let seed = rng.below(u32::MAX as u64);
+            (side, m, seed)
+        },
+        |&(side, m, seed)| {
+            let grid2 = Geometry::grid_2d_unit(side, 1);
+            let grid1 = Geometry::grid_1d_unit(m, 1);
+            let dense = Geometry::Dense(dense_dist_1d(&Grid1d::unit(m), 2));
+            let cases = [
+                (grid2.clone(), grid2.clone()),
+                (dense.clone(), grid2.clone()),
+                (grid2.clone(), dense.clone()),
+                (grid1.clone(), grid2.clone()),
+            ];
+            for (gx, gy) in cases {
+                let (nx, ny) = (gx.len(), gy.len());
+                let mut rng = Rng::seeded(seed);
+                let (u, v) = dists(&mut rng, nx, ny);
+                let cfg = |threads: usize| GwConfig {
+                    epsilon: 0.05,
+                    ..gw_cfg(threads)
+                };
+                let baseline = EntropicGw::new(gx.clone(), gy.clone(), cfg(1))
+                    .solve(&u, &v, GradientKind::Naive)
+                    .map_err(|e| e.to_string())?;
+                for kind in ALL_KINDS {
+                    for threads in THREADS {
+                        let sol = EntropicGw::new(gx.clone(), gy.clone(), cfg(threads))
+                            .solve(&u, &v, kind)
+                            .map_err(|e| e.to_string())?;
+                        let d = frobenius_diff(&sol.plan, &baseline.plan).unwrap();
+                        if d > 1e-8 {
+                            return Err(format!(
+                                "{kind} threads={threads} {nx}x{ny}: ‖ΔΓ‖_F = {d:e}"
+                            ));
+                        }
                     }
                 }
             }

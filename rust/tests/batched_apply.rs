@@ -32,10 +32,15 @@ fn random_plans(rng: &mut Rng, b: usize, m: usize, n: usize) -> Vec<Mat> {
 }
 
 /// Geometry pairs covering every dispatch arm the backends have:
-/// grid×grid (scan path), dense×dense (dense/factored paths), and the
-/// mixed barycenter shape (dense × 1D grid).
+/// grid×grid in 1D and 2D (scan paths), dense×dense (dense/factored
+/// paths), the mixed barycenter shapes (dense × 1D or 2D grid, either
+/// order), and mixed-dimension 1D×2D grid pairs. 2D sides derive a
+/// small grid side from the requested size, so `(M, N)` must be read
+/// back off the returned geometries.
 fn geometry_pair(which: usize, m: usize, n: usize, k: u32) -> (Geometry, Geometry) {
-    match which % 3 {
+    let sx = 3 + m % 3; // 2D side lengths 3..=5 (9..=25 points)
+    let sy = 3 + n % 3;
+    match which % 7 {
         0 => (Geometry::grid_1d_unit(m, k), Geometry::grid_1d_unit(n, k)),
         1 => (
             // k+1 keeps the dense side numerically low-rank for k=1
@@ -44,10 +49,20 @@ fn geometry_pair(which: usize, m: usize, n: usize, k: u32) -> (Geometry, Geometr
             Geometry::Dense(dense_dist_1d(&Grid1d::unit(m), k + 1)),
             Geometry::Dense(dense_dist_1d(&Grid1d::unit(n), k + 1)),
         ),
-        _ => (
+        2 => (
             Geometry::Dense(dense_dist_1d(&Grid1d::unit(m), 2)),
             Geometry::grid_1d_unit(n, k),
         ),
+        3 => (Geometry::grid_2d_unit(sx, k), Geometry::grid_2d_unit(sy, k)),
+        4 => (
+            Geometry::Dense(dense_dist_1d(&Grid1d::unit(m), 2)),
+            Geometry::grid_2d_unit(sy, k),
+        ),
+        5 => (
+            Geometry::grid_2d_unit(sx, k),
+            Geometry::Dense(dense_dist_1d(&Grid1d::unit(n), 2)),
+        ),
+        _ => (Geometry::grid_1d_unit(m, k), Geometry::grid_2d_unit(sy, k)),
     }
 }
 
@@ -55,19 +70,20 @@ fn geometry_pair(which: usize, m: usize, n: usize, k: u32) -> (Geometry, Geometr
 fn prop_apply_batch_is_bitwise_sequential_apply() {
     check_prop(
         "apply-batch-bit-equivalence",
-        12,
+        16,
         0xBA7C,
         |rng| {
             let m = 6 + rng.below(18) as usize;
             let n = 5 + rng.below(16) as usize;
             let k = 1 + rng.below(2) as u32;
             let b = 2 + rng.below(4) as usize;
-            let which = rng.below(3) as usize;
+            let which = rng.below(7) as usize;
             let seed = rng.below(u32::MAX as u64);
             (m, n, k, b, which, seed)
         },
         |&(m, n, k, b, which, seed)| {
             let (gx, gy) = geometry_pair(which, m, n, k);
+            let (m, n) = (gx.len(), gy.len());
             let mut rng = Rng::seeded(seed);
             let plans = random_plans(&mut rng, b, m, n);
             for kind in ALL_KINDS {
@@ -108,6 +124,59 @@ fn prop_apply_batch_is_bitwise_sequential_apply() {
             Ok(())
         },
     );
+}
+
+/// The newly separable shapes (grid2d×grid2d, dense×grid2d and mixed
+/// 1D×2D) solve-batch bit-for-bit too, for every backend.
+#[test]
+fn mixed_and_2d_solve_batch_is_bitwise_sequential() {
+    let cfg = GwConfig {
+        epsilon: 0.05,
+        outer_iters: 3,
+        sinkhorn_max_iters: 200,
+        sinkhorn_tolerance: 1e-9,
+        sinkhorn_check_every: 10,
+        threads: 1,
+    };
+    let g2 = Geometry::grid_2d_unit(3, 1); // 9 points
+    let dn = Geometry::Dense(dense_dist_1d(&Grid1d::unit(8), 2));
+    let g1 = Geometry::grid_1d_unit(10, 1);
+    for (gx, gy) in [
+        (g2.clone(), g2.clone()),
+        (dn.clone(), g2.clone()),
+        (g2.clone(), dn.clone()),
+        (g1.clone(), g2.clone()),
+    ] {
+        let (m, n) = (gx.len(), gy.len());
+        let mut rng = Rng::seeded(0xBA7E);
+        let pairs: Vec<(Vec<f64>, Vec<f64>)> = (0..3)
+            .map(|_| {
+                let mut u = rng.uniform_vec(m);
+                let mut v = rng.uniform_vec(n);
+                normalize_l1(&mut u).unwrap();
+                normalize_l1(&mut v).unwrap();
+                (u, v)
+            })
+            .collect();
+        for kind in ALL_KINDS {
+            let solver = EntropicGw::new(gx.clone(), gy.clone(), cfg);
+            let seq: Vec<_> = pairs
+                .iter()
+                .map(|(u, v)| solver.solve(u, v, kind).unwrap())
+                .collect();
+            let jobs: Vec<BatchJob> = pairs.iter().map(|(u, v)| BatchJob::gw(u, v)).collect();
+            let mut ws = solver.batch_workspace(kind, jobs.len()).unwrap();
+            let batched = solver.solve_batch_into(&jobs, &mut ws).unwrap();
+            for (i, (s, b)) in seq.iter().zip(&batched).enumerate() {
+                assert_eq!(
+                    s.plan.as_slice(),
+                    b.plan.as_slice(),
+                    "{kind} {m}x{n}: job {i} plan drifted"
+                );
+                assert_eq!(s.objective, b.objective, "{kind} {m}x{n}: job {i} objective");
+            }
+        }
+    }
 }
 
 #[test]

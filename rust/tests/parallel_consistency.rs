@@ -5,6 +5,11 @@
 //! (scans, matmul rows) are in fact bitwise identical; only the
 //! Sinkhorn `Kᵀa` reduction is allowed accumulation roundoff.
 
+// Index-based loops mirror the paper's recurrences (same rationale
+// as the crate-level allow in src/lib.rs; test/bench targets do not
+// inherit it).
+#![allow(clippy::needless_range_loop, clippy::too_many_arguments)]
+
 use fgc_gw::fgc::{dtilde_cols, dtilde_cols_par, dtilde_rows, dtilde_rows_par};
 use fgc_gw::grid::Binomial;
 use fgc_gw::gw::{EntropicGw, GradientKind, GwConfig};

@@ -2,6 +2,11 @@
 //! runner): randomized shapes, exponents and grids for every
 //! algebraic invariant the FGC operators and solvers must satisfy.
 
+// Index-based loops mirror the paper's recurrences (same rationale
+// as the crate-level allow in src/lib.rs; test/bench targets do not
+// inherit it).
+#![allow(clippy::needless_range_loop, clippy::too_many_arguments)]
+
 use fgc_gw::fgc::naive::dxgdy_dense;
 use fgc_gw::grid::{dense_dist_1d, dense_dist_2d, Grid1d, Grid2d};
 use fgc_gw::gw::{EntropicGw, Geometry, GradientKind, GwConfig, PairOperator};

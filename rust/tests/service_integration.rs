@@ -1,6 +1,11 @@
 //! Coordinator integration: mixed workloads, backpressure under load,
 //! failure injection, and metrics accounting.
 
+// Index-based loops mirror the paper's recurrences (same rationale
+// as the crate-level allow in src/lib.rs; test/bench targets do not
+// inherit it).
+#![allow(clippy::needless_range_loop, clippy::too_many_arguments)]
+
 use fgc_gw::coordinator::{
     BackendChoice, Coordinator, CoordinatorConfig, JobPayload, RoutingPolicy,
 };
