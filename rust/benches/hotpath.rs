@@ -21,16 +21,26 @@
 //! plus the fused `apply_batch` vs sequential applies on the same
 //! plan shape (`mixed2d_results` in the JSON, `case = "2d_mixed"`).
 //!
+//! A fifth section covers the 3D extension (`grid3d_results` in the
+//! JSON): `case = "3d"` times the grid3d×grid3d gradient apply — the
+//! separable multinomial scans vs the naive dense products, plus the
+//! fused batch — and `case = "mixed_payload"` drives a same-variant
+//! burst of `GwMixed` (dense support × 3D grid) jobs through a
+//! one-worker coordinator, recording throughput and the warm-hit rate
+//! of the sharded warm-batch path.
+//!
 //! ```bash
 //! cargo bench --bench hotpath [-- --quick --threads 4 \
 //!     --sizes 256,1024,4096 --dense-sizes 256,512 --batch 8 \
 //!     --batch-n 512 --mixed-m 256 --mixed-side 16 \
+//!     --grid3d-side 6 --payload-jobs 24 \
 //!     --out ../BENCH_hotpath.json]
 //! ```
 
 use fgc_gw::bench_util::{fmt_secs, time_mean, TableWriter};
 use fgc_gw::cli::Args;
-use fgc_gw::data::random_distribution;
+use fgc_gw::coordinator::{Coordinator, CoordinatorConfig, JobPayload, RoutingPolicy};
+use fgc_gw::data::{random_distribution, random_distribution_3d};
 use fgc_gw::grid::{dense_dist_1d, Grid1d};
 use fgc_gw::gw::{
     backend, EntropicGw, Geometry, GradientBackend, GradientKind, GwConfig, LowRankBackend,
@@ -87,6 +97,28 @@ struct Mixed2dRow {
     b: usize,
     fgc_batch_s: f64,
     plan_diff: f64,
+}
+
+struct Grid3dApplyRow {
+    grid_side: usize,
+    n: usize,
+    naive_s: f64,
+    fgc_s: f64,
+    b: usize,
+    fgc_batch_s: f64,
+    plan_diff: f64,
+}
+
+struct MixedPayloadRow {
+    jobs: usize,
+    m: usize,
+    grid_side: usize,
+    n: usize,
+    warm_hits: u64,
+    warm_misses: u64,
+    warm_hit_rate: f64,
+    wall_s: f64,
+    jobs_per_s: f64,
 }
 
 fn main() {
@@ -362,11 +394,172 @@ fn main() {
     }
     println!("{}", mixed_table.render());
 
-    let json = render_json(threads, quick, reps, &rows, &dense_rows, &batch_rows, &mixed_rows);
+    // --- 3D grids: grid3d×grid3d apply through the separable path -------
+    // Volumetric pairs: naive streams two dense n³×n³ products per
+    // apply while fgc runs the multinomial triple scans — O(k⁴) per
+    // element, so the gap grows with the cube of the side.
+    let grid3d_side = args.get_or("grid3d-side", if quick { 4usize } else { 6 }).unwrap();
+    let grid3d_b = args.get_or("batch", 8usize).unwrap().max(2);
+    let mut grid3d_table = TableWriter::new(
+        "hotpath: grid3d × grid3d gradient apply, naive vs separable fgc (serial)",
+        &["side", "N", "naive (s)", "fgc (s)", "speedup", "B", "fgc batch (s)", "‖ΔG‖_F"],
+    );
+    let grid3d_apply_row = {
+        let g = Geometry::grid_3d_unit(grid3d_side, 1);
+        let n3 = g.len();
+        let mut fgc_be =
+            backend::instantiate(GradientKind::Fgc, g.clone(), g.clone(), Parallelism::SERIAL)
+                .unwrap();
+        let mut naive_be =
+            backend::instantiate(GradientKind::Naive, g.clone(), g.clone(), Parallelism::SERIAL)
+                .unwrap();
+        let mut rng = Rng::seeded(103);
+        let plans: Vec<Mat> = (0..grid3d_b)
+            .map(|_| Mat::from_fn(n3, n3, |_, _| rng.uniform()))
+            .collect();
+        let refs: Vec<&Mat> = plans.iter().collect();
+        let mut fgc_out: Vec<Mat> = (0..grid3d_b).map(|_| Mat::zeros(n3, n3)).collect();
+        let mut naive_out: Vec<Mat> = (0..grid3d_b).map(|_| Mat::zeros(n3, n3)).collect();
+        // Correctness gate: the scan path must match the dense oracle.
+        for (g, o) in plans.iter().zip(fgc_out.iter_mut()) {
+            fgc_be.apply(g, o).unwrap();
+        }
+        for (g, o) in plans.iter().zip(naive_out.iter_mut()) {
+            naive_be.apply(g, o).unwrap();
+        }
+        let plan_diff = frobenius_diff(&fgc_out[0], &naive_out[0]).unwrap();
+        assert!(
+            plan_diff < 1e-6,
+            "3d: fgc gradient diverged from naive, ‖ΔG‖_F = {plan_diff:e}"
+        );
+        let tn = time_mean(1, reps, || {
+            for (g, o) in plans.iter().zip(naive_out.iter_mut()) {
+                naive_be.apply(g, o).unwrap();
+            }
+        });
+        let tf = time_mean(1, reps, || {
+            for (g, o) in plans.iter().zip(fgc_out.iter_mut()) {
+                fgc_be.apply(g, o).unwrap();
+            }
+        });
+        let tb = time_mean(1, reps, || {
+            fgc_be.apply_batch(&refs, &mut fgc_out).unwrap();
+        });
+        let (naive_s, fgc_s, fgc_batch_s) =
+            (tn.as_secs_f64(), tf.as_secs_f64(), tb.as_secs_f64());
+        grid3d_table.row(&[
+            grid3d_side.to_string(),
+            n3.to_string(),
+            fmt_secs(tn),
+            fmt_secs(tf),
+            format!("{:.2}×", naive_s / fgc_s),
+            grid3d_b.to_string(),
+            fmt_secs(tb),
+            format!("{plan_diff:.2e}"),
+        ]);
+        Grid3dApplyRow {
+            grid_side: grid3d_side,
+            n: n3,
+            naive_s,
+            fgc_s,
+            b: grid3d_b,
+            fgc_batch_s,
+            plan_diff,
+        }
+    };
+    println!("{}", grid3d_table.render());
+
+    // --- mixed payloads: GwMixed burst through the coordinator ----------
+    // End-to-end serving shape: a same-variant burst of dense-support
+    // × 3D-grid jobs through one pinned worker — throughput plus the
+    // warm-batch hit rate (one build, everything after warm).
+    let payload_jobs = args.get_or("payload-jobs", 24usize).unwrap().max(2);
+    let payload_m = args.get_or("payload-m", if quick { 48usize } else { 128 }).unwrap();
+    let payload_side = args.get_or("payload-side", 3usize).unwrap();
+    let mut payload_table = TableWriter::new(
+        "hotpath: GwMixed burst through the coordinator (1 worker, warm batches)",
+        &["jobs", "M", "side", "N", "warm hits", "misses", "hit rate", "wall (s)", "jobs/s"],
+    );
+    let mixed_payload_row = {
+        let coord = Coordinator::start(CoordinatorConfig {
+            native_workers: 1,
+            queue_capacity: payload_jobs.max(64),
+            batch_max: 8,
+            policy: RoutingPolicy::NativeOnly,
+            outer_iters: if quick { 3 } else { 10 },
+            sinkhorn_max_iters: if quick { 30 } else { 50 },
+            sinkhorn_tolerance: 0.0,
+            solver_threads: 1,
+            submit_timeout: std::time::Duration::from_secs(30),
+            ..CoordinatorConfig::default()
+        })
+        .unwrap();
+        let dx = dense_dist_1d(&Grid1d::unit(payload_m), 2);
+        let grid = Geometry::grid_3d_unit(payload_side, 1);
+        let n3 = grid.len();
+        let mut rng = Rng::seeded(211);
+        let t0 = std::time::Instant::now();
+        let rxs: Vec<_> = (0..payload_jobs)
+            .map(|_| {
+                let payload = JobPayload::gw_mixed(
+                    dx.clone(),
+                    grid.clone(),
+                    random_distribution(&mut rng, payload_m),
+                    random_distribution_3d(&mut rng, payload_side),
+                    2e-3,
+                );
+                coord.submit(payload).unwrap().1
+            })
+            .collect();
+        for rx in rxs {
+            let res = rx.recv().unwrap();
+            assert!(res.objective.is_ok(), "mixed payload failed: {:?}", res.objective);
+        }
+        let wall_s = t0.elapsed().as_secs_f64();
+        let snap = coord.metrics();
+        let row = MixedPayloadRow {
+            jobs: payload_jobs,
+            m: payload_m,
+            grid_side: payload_side,
+            n: n3,
+            warm_hits: snap.warm_hits,
+            warm_misses: snap.warm_misses,
+            warm_hit_rate: snap.warm_hit_rate(),
+            wall_s,
+            jobs_per_s: payload_jobs as f64 / wall_s,
+        };
+        coord.shutdown();
+        payload_table.row(&[
+            row.jobs.to_string(),
+            row.m.to_string(),
+            row.grid_side.to_string(),
+            row.n.to_string(),
+            row.warm_hits.to_string(),
+            row.warm_misses.to_string(),
+            format!("{:.1}%", 100.0 * row.warm_hit_rate),
+            format!("{:.3}", row.wall_s),
+            format!("{:.2}", row.jobs_per_s),
+        ]);
+        row
+    };
+    println!("{}", payload_table.render());
+
+    let json = render_json(
+        threads,
+        quick,
+        reps,
+        &rows,
+        &dense_rows,
+        &batch_rows,
+        &mixed_rows,
+        &grid3d_apply_row,
+        &mixed_payload_row,
+    );
     std::fs::write(&out_path, &json).unwrap();
     println!("wrote {out_path}");
 }
 
+#[allow(clippy::too_many_arguments)]
 fn render_json(
     threads: usize,
     quick: bool,
@@ -375,6 +568,8 @@ fn render_json(
     dense_rows: &[DenseRow],
     batch_rows: &[BatchRow],
     mixed_rows: &[Mixed2dRow],
+    grid3d_row: &Grid3dApplyRow,
+    payload_row: &MixedPayloadRow,
 ) -> String {
     let mut s = String::new();
     s.push_str("{\n");
@@ -445,6 +640,32 @@ fn render_json(
             if i + 1 == mixed_rows.len() { "" } else { "," }
         ));
     }
+    s.push_str("  ],\n");
+    s.push_str("  \"grid3d_results\": [\n");
+    s.push_str(&format!(
+        "    {{\"case\": \"3d\", \"grid_side\": {}, \"n\": {}, \"naive_s\": {:.6e}, \"fgc_s\": {:.6e}, \"speedup\": {:.3}, \"b\": {}, \"fgc_batch_s\": {:.6e}, \"batch_speedup\": {:.3}, \"plan_fro_diff\": {:.3e}}},\n",
+        grid3d_row.grid_side,
+        grid3d_row.n,
+        grid3d_row.naive_s,
+        grid3d_row.fgc_s,
+        grid3d_row.naive_s / grid3d_row.fgc_s,
+        grid3d_row.b,
+        grid3d_row.fgc_batch_s,
+        grid3d_row.fgc_s / grid3d_row.fgc_batch_s,
+        grid3d_row.plan_diff,
+    ));
+    s.push_str(&format!(
+        "    {{\"case\": \"mixed_payload\", \"jobs\": {}, \"m\": {}, \"grid_side\": {}, \"n\": {}, \"warm_hits\": {}, \"warm_misses\": {}, \"warm_hit_rate\": {:.3}, \"wall_s\": {:.6e}, \"jobs_per_s\": {:.3}}}\n",
+        payload_row.jobs,
+        payload_row.m,
+        payload_row.grid_side,
+        payload_row.n,
+        payload_row.warm_hits,
+        payload_row.warm_misses,
+        payload_row.warm_hit_rate,
+        payload_row.wall_s,
+        payload_row.jobs_per_s,
+    ));
     s.push_str("  ]\n}\n");
     s
 }

@@ -26,9 +26,16 @@ pub fn variant_key(req: &JobRequest) -> VariantKey {
         JobPayload::Gw1d { u, k, .. } => ("gw1d", u.len(), *k),
         JobPayload::Fgw1d { u, k, .. } => ("fgw1d", u.len(), *k),
         JobPayload::Gw2d { n, k, .. } => ("gw2d", n * n, *k),
+        JobPayload::Gw3d { n, k, .. } => ("gw3d", n * n * n, *k),
         // Dense jobs have no exponent; same-size dense jobs share
         // warm caches just fine.
         JobPayload::GwDense { u, .. } => ("gwdense", u.len(), 0),
+        // Mixed jobs key on the dense (source) support size plus the
+        // grid side's exponent; the geometry-identity sub-split in the
+        // worker handles everything the key cannot.
+        JobPayload::GwMixed { u, grid, .. } => {
+            ("gwmixed", u.len(), grid.grid_exponent().unwrap_or(0))
+        }
     };
     VariantKey {
         backend,

@@ -1,6 +1,6 @@
 //! Job model for the alignment service.
 
-use crate::gw::GradientKind;
+use crate::gw::{Geometry, GradientKind};
 use crate::linalg::Mat;
 use std::time::{Duration, Instant};
 
@@ -49,6 +49,48 @@ pub enum JobPayload {
         /// Entropic ε.
         epsilon: f64,
     },
+    /// GW between distributions on `n×n×n` 3D grids (volumetric
+    /// data; scans through the separable fgc engine like 1D/2D).
+    Gw3d {
+        /// Grid side length (`u`, `v` have length `n³`).
+        n: usize,
+        /// Source distribution (flattened `(z·n + y)·n + x`).
+        u: Vec<f64>,
+        /// Target distribution.
+        v: Vec<f64>,
+        /// Distance exponent.
+        k: u32,
+        /// Entropic ε.
+        epsilon: f64,
+    },
+    /// GW between an arbitrary dense metric support (source side) and
+    /// a grid geometry (target side) — the image/volume-vs-point-cloud
+    /// shape the separable engine scans on its structured side
+    /// (barycenter-style traffic served through the coordinator).
+    /// Build with [`JobPayload::gw_mixed`], which stamps the dense
+    /// side's content fingerprint at admission.
+    GwMixed {
+        /// Source distance matrix (`u.len()` square, symmetric).
+        dx: Mat,
+        /// Target-side grid geometry (must be a grid variant — 1D, 2D
+        /// or 3D; [`JobPayload::validate`] rejects dense here, that is
+        /// [`JobPayload::GwDense`]'s job).
+        grid: Geometry,
+        /// Source distribution.
+        u: Vec<f64>,
+        /// Target distribution.
+        v: Vec<f64>,
+        /// Entropic ε.
+        epsilon: f64,
+        /// FNV-1a-style content fingerprint over `(rows, cols, matrix
+        /// words)` of the dense side, stamped once at admission
+        /// ([`mixed_fingerprint`]). The grid side is compared by its
+        /// `O(1)` descriptor; the dense side by this `u64`, with the
+        /// full matrix compare only on a fingerprint match (collision
+        /// guard) — a stale fingerprint can cost batching, never
+        /// correctness.
+        fingerprint: u64,
+    },
     /// GW between distributions on arbitrary dense metric spaces — the
     /// workload the low-rank backend serves (no grid structure to
     /// exploit). Build with [`JobPayload::gw_dense`], which stamps the
@@ -76,26 +118,43 @@ pub enum JobPayload {
     },
 }
 
-/// FNV-1a-style fold over `(rows, cols, matrix words)` of both
-/// distance matrices — the dense payload's content identity, computed
-/// once at admission so same-geometry jobs batch without `O(N²)`
-/// compares per pair. Each `f64` contributes its full bit pattern as
-/// one XOR-multiply step (the FNV-1a offset/prime, folded per 64-bit
+/// One FNV-1a-style XOR-multiply fold of a matrix's `(rows, cols,
+/// words)` into a running hash. Each `f64` contributes its full bit
+/// pattern as one step (the FNV-1a offset/prime, folded per 64-bit
 /// word rather than per byte — 8× fewer multiplies on the admission
 /// path, with the same stability and avalanche-by-multiplication).
-pub fn dense_fingerprint(dx: &Mat, dy: &Mat) -> u64 {
-    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+fn fold_mat(h: &mut u64, m: &Mat) {
     let mut fold = |w: u64| {
-        h ^= w;
-        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        *h ^= w;
+        *h = h.wrapping_mul(0x0000_0100_0000_01b3);
     };
-    for m in [dx, dy] {
-        fold(m.rows() as u64);
-        fold(m.cols() as u64);
-        for &x in m.as_slice() {
-            fold(x.to_bits());
-        }
+    fold(m.rows() as u64);
+    fold(m.cols() as u64);
+    for &x in m.as_slice() {
+        fold(x.to_bits());
     }
+}
+
+/// FNV-1a offset basis (the fold's starting hash).
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+
+/// Content fingerprint over both distance matrices of a
+/// [`JobPayload::GwDense`] payload — computed once at admission so
+/// same-geometry jobs batch without `O(N²)` compares per pair.
+pub fn dense_fingerprint(dx: &Mat, dy: &Mat) -> u64 {
+    let mut h = FNV_OFFSET;
+    fold_mat(&mut h, dx);
+    fold_mat(&mut h, dy);
+    h
+}
+
+/// Content fingerprint over the dense side of a
+/// [`JobPayload::GwMixed`] payload (the grid side is an `O(1)`
+/// descriptor compared directly — only the dense matrix needs a
+/// content hash).
+pub fn mixed_fingerprint(dx: &Mat) -> u64 {
+    let mut h = FNV_OFFSET;
+    fold_mat(&mut h, dx);
     h
 }
 
@@ -114,18 +173,42 @@ impl JobPayload {
         }
     }
 
-    /// Problem size (support points per side).
+    /// Build a mixed dense×grid GW payload, computing the dense side's
+    /// content fingerprint at admission.
+    pub fn gw_mixed(
+        dx: Mat,
+        grid: Geometry,
+        u: Vec<f64>,
+        v: Vec<f64>,
+        epsilon: f64,
+    ) -> JobPayload {
+        let fingerprint = mixed_fingerprint(&dx);
+        JobPayload::GwMixed {
+            dx,
+            grid,
+            u,
+            v,
+            epsilon,
+            fingerprint,
+        }
+    }
+
+    /// Problem size (source-side support points).
     pub fn points(&self) -> usize {
         match self {
             JobPayload::Gw1d { u, .. } => u.len(),
             JobPayload::Fgw1d { u, .. } => u.len(),
             JobPayload::Gw2d { n, .. } => n * n,
+            JobPayload::Gw3d { n, .. } => n * n * n,
             JobPayload::GwDense { u, .. } => u.len(),
+            JobPayload::GwMixed { u, .. } => u.len(),
         }
     }
 
     /// True iff the payload's geometry carries grid structure the FGC
-    /// backend can exploit.
+    /// backend can exploit on at least one side (only fully dense
+    /// payloads carry none — the separable engine scans any grid
+    /// side, including the mixed payload's).
     pub fn is_structured(&self) -> bool {
         !matches!(self, JobPayload::GwDense { .. })
     }
@@ -137,7 +220,9 @@ impl JobPayload {
             JobPayload::Gw1d { epsilon, .. }
             | JobPayload::Fgw1d { epsilon, .. }
             | JobPayload::Gw2d { epsilon, .. }
-            | JobPayload::GwDense { epsilon, .. } => *epsilon,
+            | JobPayload::Gw3d { epsilon, .. }
+            | JobPayload::GwDense { epsilon, .. }
+            | JobPayload::GwMixed { epsilon, .. } => *epsilon,
         }
     }
 
@@ -163,6 +248,9 @@ impl JobPayload {
                 if u.len() != v.len() {
                     return Err("u/v size mismatch (1D jobs use equal grids)".into());
                 }
+                if u.len() < 2 {
+                    return Err("1D grids need at least 2 points".into());
+                }
                 if *epsilon <= 0.0 {
                     return Err("epsilon must be > 0".into());
                 }
@@ -177,6 +265,9 @@ impl JobPayload {
             } => {
                 check_dist(u, "u")?;
                 check_dist(v, "v")?;
+                if u.len() < 2 || v.len() < 2 {
+                    return Err("1D grids need at least 2 points".into());
+                }
                 if feature_cost.shape() != (u.len(), v.len()) {
                     return Err("feature cost shape mismatch".into());
                 }
@@ -190,8 +281,79 @@ impl JobPayload {
             JobPayload::Gw2d { n, u, v, epsilon, .. } => {
                 check_dist(u, "u")?;
                 check_dist(v, "v")?;
+                // The unit-grid constructors the worker builds from
+                // assert n ≥ 2; reject here so a bad job cannot panic
+                // a worker thread.
+                if *n < 2 {
+                    return Err("2D grids need side length ≥ 2".into());
+                }
                 if u.len() != n * n || v.len() != n * n {
                     return Err(format!("2D job needs n²={} entries", n * n));
+                }
+                if *epsilon <= 0.0 {
+                    return Err("epsilon must be > 0".into());
+                }
+            }
+            JobPayload::Gw3d { n, u, v, epsilon, .. } => {
+                check_dist(u, "u")?;
+                check_dist(v, "v")?;
+                if *n < 2 {
+                    return Err("3D grids need side length ≥ 2".into());
+                }
+                let n3 = n * n * n;
+                if u.len() != n3 || v.len() != n3 {
+                    return Err(format!("3D job needs n³={n3} entries"));
+                }
+                if *epsilon <= 0.0 {
+                    return Err("epsilon must be > 0".into());
+                }
+            }
+            JobPayload::GwMixed {
+                dx,
+                grid,
+                u,
+                v,
+                epsilon,
+                ..
+            } => {
+                check_dist(u, "u")?;
+                check_dist(v, "v")?;
+                if !grid.is_structured() {
+                    return Err(
+                        "mixed job needs a grid geometry on its structured side \
+                         (use a GwDense payload for dense×dense pairs)"
+                            .into(),
+                    );
+                }
+                // Grid structs have public fields, so a client can
+                // bypass the constructor asserts; reject degenerate
+                // descriptors here like the pure-grid payloads do
+                // (`None` cannot occur — dense was rejected above —
+                // but fails closed anyway).
+                match grid.grid_dims() {
+                    Some((n, h)) if n >= 2 && h.is_finite() && h > 0.0 => {}
+                    _ => {
+                        return Err(
+                            "grid side needs n ≥ 2 points and finite positive spacing".into(),
+                        )
+                    }
+                }
+                if dx.shape() != (u.len(), u.len()) {
+                    return Err(format!(
+                        "dx must be {0}x{0} to match u, got {1:?}",
+                        u.len(),
+                        dx.shape()
+                    ));
+                }
+                if grid.len() != v.len() {
+                    return Err(format!(
+                        "grid side has {} points but v has {}",
+                        grid.len(),
+                        v.len()
+                    ));
+                }
+                if !dx.all_finite() {
+                    return Err("distance matrix must be finite".into());
                 }
                 if *epsilon <= 0.0 {
                     return Err("epsilon must be > 0".into());
@@ -419,6 +581,155 @@ mod tests {
         );
         match payload {
             JobPayload::GwDense { fingerprint, .. } => assert_eq!(fingerprint, fp(&a, &a)),
+            _ => unreachable!(),
+        }
+    }
+
+    #[test]
+    fn validate_3d_jobs() {
+        let good = JobPayload::Gw3d {
+            n: 2,
+            u: uniform(8),
+            v: uniform(8),
+            k: 1,
+            epsilon: 0.01,
+        };
+        assert!(good.validate().is_ok());
+        assert_eq!(good.points(), 8);
+        assert!(good.is_structured());
+        let bad = JobPayload::Gw3d {
+            n: 2,
+            u: uniform(8),
+            v: uniform(9),
+            k: 1,
+            epsilon: 0.01,
+        };
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_degenerate_grids() {
+        // The unit-grid constructors assert n ≥ 2, so admission must
+        // reject single-point grids instead of panicking a worker.
+        let gw1 = JobPayload::Gw1d {
+            u: uniform(1),
+            v: uniform(1),
+            k: 1,
+            epsilon: 0.01,
+        };
+        assert!(gw1.validate().is_err());
+        let fgw1 = JobPayload::Fgw1d {
+            u: uniform(1),
+            v: uniform(1),
+            feature_cost: Mat::zeros(1, 1),
+            theta: 0.5,
+            k: 1,
+            epsilon: 0.01,
+        };
+        assert!(fgw1.validate().is_err());
+        let gw2 = JobPayload::Gw2d {
+            n: 1,
+            u: uniform(1),
+            v: uniform(1),
+            k: 1,
+            epsilon: 0.01,
+        };
+        assert!(gw2.validate().is_err());
+        let gw3 = JobPayload::Gw3d {
+            n: 1,
+            u: uniform(1),
+            v: uniform(1),
+            k: 1,
+            epsilon: 0.01,
+        };
+        assert!(gw3.validate().is_err());
+    }
+
+    #[test]
+    fn validate_mixed_jobs() {
+        let grid = crate::gw::Geometry::grid_2d_unit(3, 1); // 9 points
+        let good = JobPayload::gw_mixed(
+            Mat::zeros(4, 4),
+            grid.clone(),
+            uniform(4),
+            uniform(9),
+            0.01,
+        );
+        assert!(good.validate().is_ok(), "{:?}", good.validate());
+        assert_eq!(good.points(), 4);
+        assert!(good.is_structured());
+        // Dense "grid" side is a GwDense payload's job, not this one's.
+        let dense_side = JobPayload::gw_mixed(
+            Mat::zeros(4, 4),
+            crate::gw::Geometry::Dense(Mat::zeros(9, 9)),
+            uniform(4),
+            uniform(9),
+            0.01,
+        );
+        assert!(dense_side.validate().is_err());
+        // Grid/target-marginal size mismatch.
+        let bad_v = JobPayload::gw_mixed(
+            Mat::zeros(4, 4),
+            grid.clone(),
+            uniform(4),
+            uniform(8),
+            0.01,
+        );
+        assert!(bad_v.validate().is_err());
+        // dx shape mismatch.
+        let bad_dx =
+            JobPayload::gw_mixed(Mat::zeros(3, 4), grid.clone(), uniform(4), uniform(9), 0.01);
+        assert!(bad_dx.validate().is_err());
+        // Non-finite dense side.
+        let mut nan = Mat::zeros(4, 4);
+        nan[(0, 0)] = f64::NAN;
+        let bad_entries = JobPayload::gw_mixed(nan, grid, uniform(4), uniform(9), 0.01);
+        assert!(bad_entries.validate().is_err());
+        // Degenerate grid descriptors built around the constructor
+        // asserts (pub fields) must be rejected, not solved on.
+        let nan_h = JobPayload::gw_mixed(
+            Mat::zeros(4, 4),
+            crate::gw::Geometry::Grid3d {
+                grid: crate::grid::Grid3d { n: 2, h: f64::NAN },
+                k: 1,
+            },
+            uniform(4),
+            uniform(8),
+            0.01,
+        );
+        assert!(nan_h.validate().is_err());
+        let tiny = JobPayload::gw_mixed(
+            Mat::zeros(4, 4),
+            crate::gw::Geometry::Grid1d {
+                grid: crate::grid::Grid1d { n: 1, h: 1.0 },
+                k: 1,
+            },
+            uniform(4),
+            uniform(1),
+            0.01,
+        );
+        assert!(tiny.validate().is_err());
+    }
+
+    #[test]
+    fn mixed_fingerprint_tracks_dense_content() {
+        let a = Mat::from_fn(4, 4, |i, j| (i + 3 * j) as f64 * 0.25);
+        let b = a.map(|x| x + 1e-12);
+        assert_eq!(mixed_fingerprint(&a), mixed_fingerprint(&a.clone()));
+        assert_ne!(mixed_fingerprint(&a), mixed_fingerprint(&b));
+        // The constructor stamps the same hash, independent of the
+        // grid side (which is compared by descriptor, not hashed).
+        let payload = JobPayload::gw_mixed(
+            a.clone(),
+            crate::gw::Geometry::grid_3d_unit(2, 1),
+            uniform(4),
+            uniform(8),
+            0.01,
+        );
+        match payload {
+            JobPayload::GwMixed { fingerprint, .. } => {
+                assert_eq!(fingerprint, mixed_fingerprint(&a))
+            }
             _ => unreachable!(),
         }
     }

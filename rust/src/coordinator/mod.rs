@@ -26,7 +26,9 @@ mod service;
 mod shard;
 
 pub use batcher::{group_by_variant, group_for_execution, VariantKey};
-pub use job::{dense_fingerprint, BackendChoice, JobId, JobPayload, JobRequest, JobResult};
+pub use job::{
+    dense_fingerprint, mixed_fingerprint, BackendChoice, JobId, JobPayload, JobRequest, JobResult,
+};
 pub use metrics::{MetricsSnapshot, ServiceMetrics};
 pub use queue::BoundedQueue;
 pub use router::{Router, RoutingPolicy};

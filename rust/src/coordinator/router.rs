@@ -33,11 +33,13 @@ pub struct Router {
 /// Auto-select the native backend from the payload's geometry — the
 /// selection rule of `crate::gw::backend` (crossover constants in
 /// `crate::gw::backend::cost_model`) applied at admission time. Grid
-/// payloads (1D and 2D) are fgc-exploitable — the separable engine
-/// scans any grid side — so only dense payloads route by size.
+/// payloads (1D, 2D and 3D) and mixed dense×grid payloads are
+/// fgc-exploitable — the separable engine scans any grid side — so
+/// only fully dense payloads route by size.
 fn native_auto(payload: &JobPayload) -> BackendChoice {
     let (m, n) = match payload {
         JobPayload::GwDense { dx, dy, .. } => (dx.rows(), dy.rows()),
+        JobPayload::GwMixed { dx, grid, .. } => (dx.rows(), grid.len()),
         other => (other.points(), other.points()),
     };
     BackendChoice::native(auto_kind_for_sizes(payload.is_structured(), m, n))
@@ -85,9 +87,11 @@ impl Router {
                         .registry
                         .find(ArtifactKind::Gw2dSolve, *n)
                         .filter(|s| s.k == *k && close(s.epsilon, *epsilon)),
-                    // No compiled artifacts exist for unstructured
-                    // geometries.
-                    JobPayload::GwDense { .. } => None,
+                    // No compiled artifact families exist for dense,
+                    // mixed or 3D geometries (yet).
+                    JobPayload::Gw3d { .. }
+                    | JobPayload::GwDense { .. }
+                    | JobPayload::GwMixed { .. } => None,
                 };
                 match hit {
                     Some(spec) => BackendChoice::Pjrt(spec.name.clone()),
@@ -168,6 +172,37 @@ mod tests {
                 r.route(&dense(DENSE_LOWRANK_CROSSOVER + 1)),
                 BackendChoice::NativeLowRank
             );
+        }
+    }
+
+    #[test]
+    fn mixed_and_3d_jobs_route_fgc() {
+        // A grid side of any dimension is fgc-exploitable regardless
+        // of the dense side's size; 3D grid payloads likewise.
+        let mixed = |m: usize| {
+            JobPayload::gw_mixed(
+                Mat::zeros(m, m),
+                crate::gw::Geometry::grid_3d_unit(2, 1),
+                vec![1.0 / m as f64; m],
+                vec![1.0 / 8.0; 8],
+                0.01,
+            )
+        };
+        let gw3d = JobPayload::Gw3d {
+            n: 2,
+            u: vec![1.0 / 8.0; 8],
+            v: vec![1.0 / 8.0; 8],
+            k: 1,
+            epsilon: 0.01,
+        };
+        for policy in [RoutingPolicy::PreferPjrt, RoutingPolicy::NativeOnly] {
+            let r = Router::new(registry_with(64), policy);
+            assert_eq!(r.route(&mixed(8)), BackendChoice::NativeFgc);
+            assert_eq!(
+                r.route(&mixed(DENSE_LOWRANK_CROSSOVER + 1)),
+                BackendChoice::NativeFgc
+            );
+            assert_eq!(r.route(&gw3d), BackendChoice::NativeFgc);
         }
     }
 

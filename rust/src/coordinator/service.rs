@@ -288,13 +288,17 @@ struct WarmCache {
 
 /// True iff a cached workspace's operator is bound to exactly the
 /// payload's geometry. Grid payloads are fully determined by the
-/// [`WsKey`]; dense payloads carry their matrices, compared here by
-/// reference (no clones on the warm path).
+/// [`WsKey`]; dense and mixed payloads carry their matrices/grid
+/// descriptors, compared here by reference (no clones on the warm
+/// path).
 fn geometry_matches(ws: &GwBatchWorkspace, payload: &JobPayload) -> bool {
     match payload {
         JobPayload::GwDense { dx, dy, .. } => {
             matches!(ws.geom_x(), Geometry::Dense(d) if d == dx)
                 && matches!(ws.geom_y(), Geometry::Dense(d) if d == dy)
+        }
+        JobPayload::GwMixed { dx, grid, .. } => {
+            matches!(ws.geom_x(), Geometry::Dense(d) if d == dx) && ws.geom_y() == grid
         }
         _ => true,
     }
@@ -310,6 +314,15 @@ impl WarmCache {
     /// Fetch the workspace for `key`, building one (the only path
     /// that constructs a solver — and, for dense payloads, clones the
     /// geometry) on a miss. Returns `(workspace, was_warm)`.
+    ///
+    /// Mixed payloads get a middle path between hit and miss: a cached
+    /// same-key workspace whose **grid side** matches but whose dense
+    /// support differs is rebound in place via
+    /// [`GwBatchWorkspace::swap_dense_x`] — the structured side keeps
+    /// its scan/factored state and every solve buffer survives, so a
+    /// stream of same-shape dense supports against one grid (the
+    /// barycenter-style traffic pattern) stays warm instead of
+    /// rebuilding the backend per distinct support matrix.
     fn get_or_build(
         &mut self,
         key: &WsKey,
@@ -328,6 +341,26 @@ impl WarmCache {
             let ws = &mut self.entries[0].1;
             ws.ensure_capacity(batch);
             return Ok((ws, true));
+        }
+        if let JobPayload::GwMixed { dx, grid, .. } = payload {
+            // Same variant, same grid side, different dense support:
+            // swap the dense X side in place. A backend that refuses
+            // the swap cannot serve this (or the old) support anymore
+            // cheaply — drop the stale entry so the cold build below
+            // replaces it instead of duplicating its key in the LRU.
+            let pos = self
+                .entries
+                .iter()
+                .position(|(k, ws)| k == key && ws.geom_y() == grid);
+            if let Some(pos) = pos {
+                let mut entry = self.entries.remove(pos);
+                if entry.1.swap_dense_x(dx).is_ok() {
+                    self.entries.insert(0, entry);
+                    let ws = &mut self.entries[0].1;
+                    ws.ensure_capacity(batch);
+                    return Ok((ws, true));
+                }
+            }
         }
         let solver = build_solver(payload, cfg);
         let ws = solver.batch_workspace(kind, batch)?;
@@ -392,18 +425,21 @@ fn payload_dims(p: &JobPayload) -> (usize, usize) {
     match p {
         JobPayload::Gw1d { u, v, .. }
         | JobPayload::Fgw1d { u, v, .. }
-        | JobPayload::GwDense { u, v, .. } => (u.len(), v.len()),
+        | JobPayload::GwDense { u, v, .. }
+        | JobPayload::GwMixed { u, v, .. } => (u.len(), v.len()),
         JobPayload::Gw2d { n, .. } => (n * n, n * n),
+        JobPayload::Gw3d { n, .. } => (n * n * n, n * n * n),
     }
 }
 
 /// An execution group must further split into runs that truly share
 /// one operator: equal `(M, N)` shapes (the variant key only carries
 /// the source-side size — FGW pairs may differ on the target side)
-/// and, for dense payloads, *equal* distance matrices (the geometry
-/// travels in the payload). Dense equality is decided by the content
-/// fingerprint stamped at admission — the `O(N²)` matrix compare only
-/// runs on a fingerprint match, as the collision guard.
+/// and, for dense and mixed payloads, *equal* carried geometries (they
+/// travel in the payload). Dense-matrix equality is decided by the
+/// content fingerprint stamped at admission — the `O(N²)` matrix
+/// compare only runs on a fingerprint match, as the collision guard;
+/// a mixed payload's grid side is an `O(1)` descriptor compare.
 fn split_same_geometry(jobs: Vec<JobRequest>) -> Vec<Vec<JobRequest>> {
     let mut out: Vec<Vec<JobRequest>> = Vec::new();
     for job in jobs {
@@ -428,6 +464,21 @@ fn split_same_geometry(jobs: Vec<JobRequest>) -> Vec<Vec<JobRequest>> {
                     },
                 ) => fa == fb && ax == bx && ay == by,
                 (JobPayload::GwDense { .. }, _) | (_, JobPayload::GwDense { .. }) => false,
+                (
+                    JobPayload::GwMixed {
+                        fingerprint: fa,
+                        dx: ax,
+                        grid: ga,
+                        ..
+                    },
+                    JobPayload::GwMixed {
+                        fingerprint: fb,
+                        dx: bx,
+                        grid: gb,
+                        ..
+                    },
+                ) => ga == gb && fa == fb && ax == bx,
+                (JobPayload::GwMixed { .. }, _) | (_, JobPayload::GwMixed { .. }) => false,
                 _ => true,
             }
         });
@@ -504,7 +555,23 @@ fn ws_key(payload: &JobPayload, kind: GradientKind) -> WsKey {
         // FGW shares the GW geometry — the feature term is per job.
         JobPayload::Fgw1d { u, v, k, .. } => ("grid1d", u.len(), v.len(), *k),
         JobPayload::Gw2d { n, k, .. } => ("grid2d", n * n, n * n, *k),
+        JobPayload::Gw3d { n, k, .. } => ("grid3d", n * n * n, n * n * n, *k),
         JobPayload::GwDense { u, v, .. } => ("dense", u.len(), v.len(), 0),
+        // The family carries the grid side's dimension so mixed jobs
+        // with different structured sides never share a key; spacing
+        // and the dense matrix are checked by geometry_matches / the
+        // rebind path.
+        JobPayload::GwMixed { u, v, grid, .. } => (
+            match grid {
+                Geometry::Grid1d { .. } => "mixed1d",
+                Geometry::Grid2d { .. } => "mixed2d",
+                Geometry::Grid3d { .. } => "mixed3d",
+                Geometry::Dense(_) => "mixeddense", // rejected at admission
+            },
+            u.len(),
+            v.len(),
+            grid.grid_exponent().unwrap_or(0),
+        ),
     };
     WsKey {
         family,
@@ -525,9 +592,15 @@ fn build_solver(payload: &JobPayload, cfg: &CoordinatorConfig) -> EntropicGw {
             EntropicGw::grid_1d(u.len(), v.len(), *k, gw_cfg(cfg, epsilon))
         }
         JobPayload::Gw2d { n, k, .. } => EntropicGw::grid_2d(*n, *n, *k, gw_cfg(cfg, epsilon)),
+        JobPayload::Gw3d { n, k, .. } => EntropicGw::grid_3d(*n, *n, *k, gw_cfg(cfg, epsilon)),
         JobPayload::GwDense { dx, dy, .. } => EntropicGw::new(
             Geometry::Dense(dx.clone()),
             Geometry::Dense(dy.clone()),
+            gw_cfg(cfg, epsilon),
+        ),
+        JobPayload::GwMixed { dx, grid, .. } => EntropicGw::new(
+            Geometry::Dense(dx.clone()),
+            grid.clone(),
             gw_cfg(cfg, epsilon),
         ),
     };
@@ -546,7 +619,9 @@ fn batch_job(payload: &JobPayload) -> BatchJob<'_> {
     match payload {
         JobPayload::Gw1d { u, v, .. }
         | JobPayload::Gw2d { u, v, .. }
-        | JobPayload::GwDense { u, v, .. } => BatchJob::gw(u, v),
+        | JobPayload::Gw3d { u, v, .. }
+        | JobPayload::GwDense { u, v, .. }
+        | JobPayload::GwMixed { u, v, .. } => BatchJob::gw(u, v),
         JobPayload::Fgw1d {
             u,
             v,
@@ -680,11 +755,11 @@ fn execute_pjrt(
         JobPayload::Fgw1d {
             u, v, feature_cost, ..
         } => executor.run_fgw_solve(spec, u, v, feature_cost)?,
-        // The router never assigns dense jobs to PJRT (no artifacts
-        // exist for unstructured geometries).
-        JobPayload::GwDense { .. } => {
+        // The router never assigns dense, mixed or 3D jobs to PJRT
+        // (no compiled artifact families exist for these shapes).
+        JobPayload::Gw3d { .. } | JobPayload::GwDense { .. } | JobPayload::GwMixed { .. } => {
             return Err(Error::Runtime(
-                "no PJRT artifact family for dense-geometry jobs".into(),
+                "no PJRT artifact family for dense/mixed/3D-geometry jobs".into(),
             ))
         }
     };
@@ -912,6 +987,70 @@ mod tests {
             vec![1, 3]
         );
         assert_eq!(groups[1][0].id, 2);
+    }
+
+    #[test]
+    fn split_same_geometry_partitions_mixed_by_support_and_grid() {
+        // Mixed jobs group only when both the dense support (by
+        // fingerprint + full compare) and the grid descriptor agree.
+        let mk = |scale: f64, grid: Geometry, id: u64| {
+            let d = Mat::from_fn(4, 4, |i, j| scale * ((i as f64) - (j as f64)).abs());
+            let nv = grid.len();
+            JobRequest {
+                id,
+                payload: JobPayload::gw_mixed(
+                    d,
+                    grid,
+                    vec![0.25; 4],
+                    vec![1.0 / nv as f64; nv],
+                    0.05,
+                ),
+                backend: BackendChoice::NativeFgc,
+                submitted_at: Instant::now(),
+            }
+        };
+        let g3 = Geometry::grid_3d_unit(2, 1);
+        let groups = split_same_geometry(vec![
+            mk(1.0, g3.clone(), 1),
+            mk(2.0, g3.clone(), 2),
+            mk(1.0, g3.clone(), 3),
+        ]);
+        assert_eq!(groups.len(), 2);
+        assert_eq!(
+            groups[0].iter().map(|j| j.id).collect::<Vec<_>>(),
+            vec![1, 3]
+        );
+        assert_eq!(groups[1][0].id, 2);
+        // Same dense support, different grid spacing: must split (the
+        // descriptor compare catches what the u64 key cannot).
+        let g3_other = Geometry::grid_3d(2, 0.5, 1);
+        let groups = split_same_geometry(vec![mk(1.0, g3, 1), mk(1.0, g3_other, 2)]);
+        assert_eq!(groups.len(), 2, "grid spacing must partition");
+    }
+
+    #[test]
+    fn mixed_fingerprint_collision_still_splits_on_full_compare() {
+        // Two mixed payloads with different dense supports but a
+        // (forged) equal fingerprint: the collision guard's full
+        // matrix compare must keep them apart.
+        let mk = |scale: f64, id: u64| {
+            let d = Mat::from_fn(4, 4, |i, j| scale * ((i as f64) - (j as f64)).abs());
+            JobRequest {
+                id,
+                payload: JobPayload::GwMixed {
+                    dx: d,
+                    grid: Geometry::grid_2d_unit(3, 1),
+                    u: vec![0.25; 4],
+                    v: vec![1.0 / 9.0; 9],
+                    epsilon: 0.05,
+                    fingerprint: 42,
+                },
+                backend: BackendChoice::NativeFgc,
+                submitted_at: Instant::now(),
+            }
+        };
+        let groups = split_same_geometry(vec![mk(1.0, 1), mk(2.0, 2)]);
+        assert_eq!(groups.len(), 2, "colliding fingerprints must full-compare");
     }
 
     #[test]

@@ -18,5 +18,5 @@ pub use digits::{digit_three, transform_image, Transform};
 pub use horse::horse_frame;
 pub use image::{feature_cost_gray, GrayImage};
 pub use pgm::{read_pgm, write_pgm};
-pub use random::{random_distribution, random_distribution_2d};
+pub use random::{random_distribution, random_distribution_2d, random_distribution_3d};
 pub use timeseries::{feature_cost_series, two_hump_series, TwoHumpSpec};

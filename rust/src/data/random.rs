@@ -17,6 +17,12 @@ pub fn random_distribution_2d(rng: &mut Rng, n: usize) -> Vec<f64> {
     random_distribution(rng, n * n)
 }
 
+/// 3D random distribution on an `n×n×n` grid, flattened
+/// `(z·n + y)·n + x`: `N = n³` i.i.d. uniforms, normalized.
+pub fn random_distribution_3d(rng: &mut Rng, n: usize) -> Vec<f64> {
+    random_distribution(rng, n * n * n)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -1,7 +1,7 @@
 //! FGC on 3D grids — the "higher dimensional space" generalization
 //! the paper sketches in §3.1 ("there is no essential difference").
 //!
-//! Under the Manhattan metric `d = h^k(|Δx|+|Δy|+|Δz|)^k` on an
+//! Under the Manhattan metric `d = h^k(|Δz|+|Δy|+|Δx|)^k` on an
 //! `n×n×n` grid, the multinomial theorem gives the exact Kronecker
 //! expansion
 //!
@@ -13,66 +13,25 @@
 //! `idx = (z·n + y)·n + x` turns each factor into 1D scans along one
 //! tensor axis, so `D̂₃v` costs `O(k⁴n³)` and the full gradient
 //! product `O(k⁴N²)`, `N = n³`.
+//!
+//! Two kernel shapes serve the separable engine
+//! (`crate::fgc::separable`): `dhat3_vec_into` applies the operator
+//! to one `n³`-vector with fully caller-provided buffers (the row pass
+//! of the gradient product — rows are distributed over the thread
+//! budget by the caller), and `dhat3_cols_with` applies it to every
+//! **column** of an `n³×W` matrix in one batched pass (the column
+//! pass; columns are scanned independently, which is what makes the
+//! engine's horizontally-stacked batches bit-for-bit exact). The
+//! standalone [`dxgdy_3d`] entry point survives as the raw two-sided
+//! kernel; solver traffic runs through `SeparableOp` instead.
 
-use super::scan::{dtilde_cols, dtilde_rows};
+use super::scan::{check_scan_exponent, dtilde_cols, dtilde_cols_par, dtilde_rows};
 use crate::error::{Error, Result};
 use crate::grid::Binomial;
 use crate::linalg::Mat;
+use crate::parallel::Parallelism;
 
-/// A 3D uniform grid (side `n`, spacing `h`, `N = n³` points,
-/// Manhattan metric).
-#[derive(Clone, Copy, Debug, PartialEq)]
-pub struct Grid3d {
-    /// Side length.
-    pub n: usize,
-    /// Spacing (all axes).
-    pub h: f64,
-}
-
-impl Grid3d {
-    /// Construct (positive side/spacing enforced).
-    pub fn new(n: usize, h: f64) -> Self {
-        assert!(n >= 1 && h > 0.0);
-        Grid3d { n, h }
-    }
-
-    /// `n³`.
-    pub fn len(&self) -> usize {
-        self.n * self.n * self.n
-    }
-
-    /// True iff empty (never for valid grids).
-    pub fn is_empty(&self) -> bool {
-        self.n == 0
-    }
-
-    /// `h^k`.
-    pub fn scale(&self, k: u32) -> f64 {
-        self.h.powi(k as i32)
-    }
-
-    /// Flat index of `(z, y, x)`.
-    pub fn flat(&self, z: usize, y: usize, x: usize) -> usize {
-        (z * self.n + y) * self.n + x
-    }
-
-    /// Manhattan distance between flat indices.
-    pub fn manhattan(&self, a: usize, b: usize) -> usize {
-        let n = self.n;
-        let (az, ay, ax) = (a / (n * n), (a / n) % n, a % n);
-        let (bz, by, bx) = (b / (n * n), (b / n) % n, b % n);
-        az.abs_diff(bz) + ay.abs_diff(by) + ax.abs_diff(bx)
-    }
-
-    /// Dense distance matrix (test oracle; `O(N²)` memory).
-    pub fn dense(&self, k: u32) -> Mat {
-        let nn = self.len();
-        let s = self.scale(k);
-        Mat::from_fn(nn, nn, |a, b| {
-            s * (self.manhattan(a, b) as f64).powi(k as i32)
-        })
-    }
-}
+pub use crate::grid::Grid3d;
 
 /// Workspace for the 3D operator.
 #[derive(Debug)]
@@ -86,7 +45,7 @@ pub struct Workspace3d {
 
 impl Workspace3d {
     /// Allocate for vectors of length `n³` with exponent `k` (table
-    /// covers `2k` for the `C₁` products).
+    /// and carries cover `2k` for the squared-distance `C₁` products).
     pub fn new(n: usize, k: u32) -> Self {
         let nn = n * n * n;
         Workspace3d {
@@ -97,9 +56,126 @@ impl Workspace3d {
             k,
         }
     }
+
+    /// Largest exponent this workspace can serve (carry + binomial
+    /// sizing: `2k` by construction).
+    fn max_exponent(&self) -> u32 {
+        2 * self.k
+    }
 }
 
-/// `y = D̂₃^{(k)} x` (unscaled), `x ∈ ℝ^{n³}` in `O(k⁴n³)`.
+/// `y = D̂₃^{(k)} x` (unscaled), `x ∈ ℝ^{n³}`, with fully
+/// caller-provided buffers: `t1`, `t2` of length ≥ `n³` and `carry` of
+/// length ≥ `(k+1)·n²`. Each output element is a fixed-order
+/// accumulation over the multinomial terms, independent of anything
+/// outside `x` — the row-exactness the separable engine's vertical
+/// batch stacking relies on. The exponent must be pre-validated
+/// ([`check_scan_exponent`]); the internal row scan re-checks and
+/// propagates [`Error::Invalid`] for oversized `k`.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn dhat3_vec_into(
+    n: usize,
+    k: u32,
+    x: &[f64],
+    y: &mut [f64],
+    t1: &mut [f64],
+    t2: &mut [f64],
+    carry: &mut [f64],
+    binom: &Binomial,
+) -> Result<()> {
+    let nn = n * n * n;
+    debug_assert_eq!(x.len(), nn);
+    debug_assert_eq!(y.len(), nn);
+    debug_assert!(t1.len() >= nn && t2.len() >= nn);
+    y.fill(0.0);
+    for r in 0..=k {
+        for s in 0..=(k - r) {
+            let t = k - r - s;
+            // multinomial k!/(r!s!t!) = C(k,r)·C(k−r,s)
+            let coef =
+                binom.c(k as usize, r as usize) * binom.c((k - r) as usize, s as usize);
+            // axis 0 (z): one batched scan over n rows of width n².
+            dtilde_cols(r, r == 0, n, n * n, x, &mut t1[..nn], carry, binom);
+            // axis 1 (y): per z-block batched scan (n rows × n cols).
+            for z in 0..n {
+                let blk = &t1[z * n * n..(z + 1) * n * n];
+                let dst = &mut t2[z * n * n..(z + 1) * n * n];
+                dtilde_cols(s, s == 0, n, n, blk, dst, carry, binom);
+            }
+            // axis 2 (x): contiguous row scans over n² rows of width n.
+            dtilde_rows(t, t == 0, n * n, n, &t2[..nn], &mut t1[..nn], binom)?;
+            for (o, &v) in y.iter_mut().zip(t1[..nn].iter()) {
+                *o += coef * v;
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Apply `D̂₃^{(k)}` (unscaled) to every **column** of the row-major
+/// `n³ × ncols` matrix `x` — the batched left-multiplication of the
+/// separable column pass. `tmp` and `scratch` are full-size
+/// (`≥ n³·ncols`) intermediates; `carry` must hold `(k+1)·n²·ncols`
+/// (the widest axis scan). Every inner scan computes its columns
+/// independently, so each result column is bitwise identical
+/// regardless of the stacked width — the batch-exactness contract.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn dhat3_cols_with(
+    n: usize,
+    ncols: usize,
+    k: u32,
+    x: &[f64],
+    out: &mut [f64],
+    tmp: &mut [f64],
+    scratch: &mut [f64],
+    carry: &mut [f64],
+    binom: &Binomial,
+    par: Parallelism,
+) {
+    let total = n * n * n * ncols;
+    assert_eq!(x.len(), total);
+    assert!(out.len() >= total && tmp.len() >= total && scratch.len() >= total);
+    out[..total].fill(0.0);
+    for r in 0..=k {
+        for s in 0..=(k - r) {
+            let t = k - r - s;
+            let coef =
+                binom.c(k as usize, r as usize) * binom.c((k - r) as usize, s as usize);
+            // axis 0 (z): n rows of width n²·ncols.
+            dtilde_cols_par(
+                r,
+                r == 0,
+                n,
+                n * n * ncols,
+                x,
+                &mut tmp[..total],
+                carry,
+                binom,
+                par,
+            );
+            // axis 1 (y): per z-block, n rows of width n·ncols.
+            for z in 0..n {
+                let blk = &tmp[z * n * n * ncols..(z + 1) * n * n * ncols];
+                let dst = &mut scratch[z * n * n * ncols..(z + 1) * n * n * ncols];
+                dtilde_cols_par(s, s == 0, n, n * ncols, blk, dst, carry, binom, par);
+            }
+            // axis 2 (x): per (z,y)-block, n rows of width ncols.
+            for b in 0..n * n {
+                let blk = &scratch[b * n * ncols..(b + 1) * n * ncols];
+                let dst = &mut tmp[b * n * ncols..(b + 1) * n * ncols];
+                dtilde_cols_par(t, t == 0, n, ncols, blk, dst, carry, binom, par);
+            }
+            for (o, &v) in out[..total].iter_mut().zip(tmp[..total].iter()) {
+                *o += coef * v;
+            }
+        }
+    }
+}
+
+/// `y = D̂₃^{(k)} x` (unscaled), `x ∈ ℝ^{n³}` in `O(k⁴n³)`, through a
+/// [`Workspace3d`]. Oversized exponents (`k > 15`) and a workspace too
+/// small for `k` both return [`Error::Invalid`]; shape mismatches
+/// return [`Error::Shape`](crate::error::Error).
 pub fn dhat3_apply(n: usize, k: u32, x: &[f64], y: &mut [f64], ws: &mut Workspace3d) -> Result<()> {
     let nn = n * n * n;
     if x.len() != nn || y.len() != nn {
@@ -109,46 +185,27 @@ pub fn dhat3_apply(n: usize, k: u32, x: &[f64], y: &mut [f64], ws: &mut Workspac
             format!("{} / {}", x.len(), y.len()),
         ));
     }
-    if ws.k != k && ws.k != 2 * k && 2 * ws.k != k {
-        // workspace binomial table must cover the requested exponent
-        if ws.binom.max_n() < k as usize {
-            return Err(Error::Invalid(format!(
-                "workspace built for k={}, cannot serve k={k}",
-                ws.k
-            )));
-        }
+    check_scan_exponent(k)?;
+    if k > ws.max_exponent() || ws.binom.max_n() < k as usize {
+        return Err(Error::Invalid(format!(
+            "dhat3_apply: workspace built for exponents ≤ {}, cannot serve k={k}",
+            ws.max_exponent()
+        )));
     }
-    y.fill(0.0);
-    for r in 0..=k {
-        for s in 0..=(k - r) {
-            let t = k - r - s;
-            // multinomial k!/(r!s!t!) = C(k,r)·C(k−r,s)
-            let coef =
-                ws.binom.c(k as usize, r as usize) * ws.binom.c((k - r) as usize, s as usize);
-            // axis 0 (z): batched scan over n rows of width n².
-            let t1 = &mut ws.t1[..nn];
-            dtilde_cols(r, r == 0, n, n * n, x, t1, &mut ws.carry, &ws.binom);
-            // axis 1 (y): per z-block batched scan (n rows × n cols).
-            let t2 = &mut ws.t2[..nn];
-            for z in 0..n {
-                let blk = &t1[z * n * n..(z + 1) * n * n];
-                let dst = &mut t2[z * n * n..(z + 1) * n * n];
-                dtilde_cols(s, s == 0, n, n, blk, dst, &mut ws.carry, &ws.binom);
-            }
-            // axis 2 (x): contiguous row scans over n² rows of width n.
-            let t1 = &mut ws.t1[..nn];
-            dtilde_rows(t, t == 0, n * n, n, t2, t1, &ws.binom)?;
-            for (o, &v) in y.iter_mut().zip(t1.iter()) {
-                *o += coef * v;
-            }
-        }
+    if ws.t1.len() < nn || ws.carry.len() < (k as usize + 1) * n * n {
+        return Err(Error::Invalid(format!(
+            "dhat3_apply: workspace sized for {} points, cannot serve n³={nn}",
+            ws.t1.len()
+        )));
     }
-    Ok(())
+    dhat3_vec_into(n, k, x, y, &mut ws.t1, &mut ws.t2, &mut ws.carry, &ws.binom)
 }
 
 /// `G = D_X Γ D_Y` on 3D grids in `O(k⁴N²)`: per-row applications for
 /// `A = Γ·D̂_Y` (rows contiguous, D̂ symmetric), then a transpose
-/// sandwich for `G = D̂_X·A`.
+/// sandwich for `G = D̂_X·A`. The standalone kernel form — solver
+/// traffic runs the same scans through
+/// [`SeparableOp`](crate::fgc::SeparableOp) instead.
 pub fn dxgdy_3d(
     gx: &Grid3d,
     gy: &Grid3d,
@@ -167,8 +224,13 @@ pub fn dxgdy_3d(
         ));
     }
     if out.shape() != (m, nc) {
-        return Err(Error::shape("dxgdy_3d(out)", format!("{m}x{nc}"), format!("{:?}", out.shape())));
+        return Err(Error::shape(
+            "dxgdy_3d(out)",
+            format!("{m}x{nc}"),
+            format!("{:?}", out.shape()),
+        ));
     }
+    check_scan_exponent(k)?;
     // A = Γ·D̂_Y (row-wise)
     let mut a = Mat::zeros(m, nc);
     for j in 0..m {
@@ -192,24 +254,43 @@ pub fn dxgdy_3d(
     Ok(())
 }
 
-/// `(D ⊙ D)·w` on a 3D grid (exponent-2k structure).
-pub fn sq_dist_apply_3d(g: &Grid3d, k: u32, w: &[f64], ws: &mut Workspace3d) -> Result<Vec<f64>> {
-    if w.len() != g.len() {
-        return Err(Error::shape("sq_dist_apply_3d", format!("{}", g.len()), format!("{}", w.len())));
+/// `(D ⊙ D)·w` on a 3D grid (exponent-`2k` structure) into a
+/// caller-owned buffer — the constant-term half for `Geometry::Grid3d`
+/// sides, zero heap allocation with a warm workspace.
+pub fn sq_dist_apply_3d_into(
+    g: &Grid3d,
+    k: u32,
+    w: &[f64],
+    out: &mut [f64],
+    ws: &mut Workspace3d,
+) -> Result<()> {
+    if w.len() != g.len() || out.len() != g.len() {
+        return Err(Error::shape(
+            "sq_dist_apply_3d",
+            format!("{}", g.len()),
+            format!("{} / {}", w.len(), out.len()),
+        ));
     }
-    let mut y = vec![0.0; g.len()];
-    dhat3_apply(g.n, 2 * k, w, &mut y, ws)?;
+    dhat3_apply(g.n, 2 * k, w, out, ws)?;
     let s = g.scale(k);
     let s2 = s * s;
-    for v in &mut y {
+    for v in out.iter_mut() {
         *v *= s2;
     }
+    Ok(())
+}
+
+/// Allocating convenience form of [`sq_dist_apply_3d_into`].
+pub fn sq_dist_apply_3d(g: &Grid3d, k: u32, w: &[f64], ws: &mut Workspace3d) -> Result<Vec<f64>> {
+    let mut y = vec![0.0; g.len()];
+    sq_dist_apply_3d_into(g, k, w, &mut y, ws)?;
     Ok(y)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::grid::dense_dist_3d;
     use crate::linalg::matvec;
     use crate::prng::Rng;
     use crate::testutil::assert_slices_close;
@@ -219,7 +300,7 @@ mod tests {
         for k in [1u32, 2] {
             let n = 4;
             let g = Grid3d::new(n, 1.0);
-            let d = g.dense(k);
+            let d = dense_dist_3d(&g, k);
             let mut rng = Rng::seeded(60 + k as u64);
             let x = rng.uniform_vec(g.len());
             let mut ws = Workspace3d::new(n, k);
@@ -231,13 +312,54 @@ mod tests {
     }
 
     #[test]
+    fn dhat3_cols_matches_vector_version() {
+        let (n, k, ncols) = (3, 2, 5);
+        let nn = n * n * n;
+        let mut rng = Rng::seeded(71);
+        let x: Vec<f64> = (0..nn * ncols).map(|_| rng.uniform() - 0.4).collect();
+        let binom = Binomial::new(4);
+        let mut out = vec![0.0; nn * ncols];
+        let mut tmp = vec![0.0; nn * ncols];
+        let mut scratch = vec![0.0; nn * ncols];
+        let mut carry = vec![0.0; (k as usize + 1) * n * n * ncols];
+        dhat3_cols_with(
+            n,
+            ncols,
+            k,
+            &x,
+            &mut out,
+            &mut tmp,
+            &mut scratch,
+            &mut carry,
+            &binom,
+            Parallelism::SERIAL,
+        );
+        // Column-by-column oracle through the vector kernel.
+        let mut ws = Workspace3d::new(n, k);
+        for j in 0..ncols {
+            let xcol: Vec<f64> = (0..nn).map(|i| x[i * ncols + j]).collect();
+            let mut ycol = vec![0.0; nn];
+            dhat3_apply(n, k, &xcol, &mut ycol, &mut ws).unwrap();
+            for i in 0..nn {
+                assert_eq!(
+                    out[i * ncols + j].to_bits(),
+                    ycol[i].to_bits(),
+                    "col {j} row {i} drifted from the vector kernel"
+                );
+            }
+        }
+    }
+
+    #[test]
     fn dxgdy_3d_matches_dense() {
         let (nx, ny, k) = (3, 2, 1);
         let gx = Grid3d::new(nx, 0.5);
         let gy = Grid3d::new(ny, 0.25);
         let mut rng = Rng::seeded(8);
         let gamma = Mat::from_fn(gx.len(), gy.len(), |_, _| rng.uniform());
-        let oracle = crate::fgc::naive::dxgdy_dense(&gx.dense(k), &gy.dense(k), &gamma).unwrap();
+        let oracle =
+            crate::fgc::naive::dxgdy_dense(&dense_dist_3d(&gx, k), &dense_dist_3d(&gy, k), &gamma)
+                .unwrap();
         let mut wsx = Workspace3d::new(nx, k);
         let mut wsy = Workspace3d::new(ny, k);
         let mut out = Mat::zeros(gx.len(), gy.len());
@@ -250,7 +372,7 @@ mod tests {
         let n = 3;
         let k = 1;
         let g = Grid3d::new(n, 0.4);
-        let d = g.dense(k);
+        let d = dense_dist_3d(&g, k);
         let mut rng = Rng::seeded(4);
         let w = rng.uniform_vec(g.len());
         let mut ws = Workspace3d::new(n, k);
@@ -260,12 +382,79 @@ mod tests {
     }
 
     #[test]
-    fn flat_and_manhattan() {
-        let g = Grid3d::new(4, 1.0);
-        let a = g.flat(0, 0, 0);
-        let b = g.flat(3, 2, 1);
-        assert_eq!(g.manhattan(a, b), 6);
-        assert_eq!(g.len(), 64);
+    fn oversized_exponent_is_invalid_not_a_panic() {
+        // k > MAX_SCAN_EXPONENT must surface as Error::Invalid from
+        // every 3D entry point (previously only the inner row scan
+        // errored, partway through the accumulation).
+        let n = 2;
+        let g = Grid3d::new(n, 1.0);
+        let mut ws = Workspace3d::new(n, 16);
+        let nn = g.len();
+        let x = vec![0.1; nn];
+        let mut y = vec![0.0; nn];
+        let err = dhat3_apply(n, 16, &x, &mut y, &mut ws).unwrap_err();
+        assert!(matches!(err, Error::Invalid(_)), "got {err:?}");
+        let gamma = Mat::zeros(nn, nn);
+        let mut out = Mat::zeros(nn, nn);
+        let mut ws2 = Workspace3d::new(n, 16);
+        let err = dxgdy_3d(&g, &g, 16, &gamma, &mut out, &mut ws, &mut ws2).unwrap_err();
+        assert!(matches!(err, Error::Invalid(_)), "got {err:?}");
+        // 2k > 15 through the squared-distance path too.
+        let mut ws8 = Workspace3d::new(n, 8);
+        let err = sq_dist_apply_3d(&g, 8, &x, &mut ws8).unwrap_err();
+        assert!(matches!(err, Error::Invalid(_)), "got {err:?}");
+    }
+
+    #[test]
+    fn workspace_too_small_for_exponent_is_invalid() {
+        // A workspace built for k=1 (carries/binomial cover 2) cannot
+        // serve k=3; previously this was silently accepted.
+        let n = 3;
+        let mut ws = Workspace3d::new(n, 1);
+        let x = vec![0.1; 27];
+        let mut y = vec![0.0; 27];
+        assert!(dhat3_apply(n, 2, &x, &mut y, &mut ws).is_ok(), "2k=2 fits");
+        let err = dhat3_apply(n, 3, &x, &mut y, &mut ws).unwrap_err();
+        assert!(matches!(err, Error::Invalid(_)), "got {err:?}");
+    }
+
+    #[test]
+    fn degenerate_1x1x1_grid() {
+        // A single-point grid: D = [0], so every apply is zero and the
+        // gradient product over a 1×N plan is all zeros.
+        let g = Grid3d::new(1, 1.0);
+        assert_eq!(g.len(), 1);
+        let mut ws = Workspace3d::new(1, 1);
+        let x = [0.7];
+        let mut y = [f64::NAN];
+        dhat3_apply(1, 1, &x, &mut y, &mut ws).unwrap();
+        assert_eq!(y[0], 0.0);
+        let gy = Grid3d::new(2, 0.5);
+        let mut wsy = Workspace3d::new(2, 1);
+        let gamma = Mat::from_fn(1, gy.len(), |_, j| 0.1 * (j as f64 + 1.0));
+        let mut out = Mat::zeros(1, gy.len());
+        dxgdy_3d(&g, &gy, 1, &gamma, &mut out, &mut ws, &mut wsy).unwrap();
+        assert!(out.as_slice().iter().all(|&v| v == 0.0), "D_X = 0 ⇒ G = 0");
+    }
+
+    #[test]
+    fn degenerate_single_slice_matches_dense() {
+        // n = 2 with k = 2 on a single-column plan: the smallest shape
+        // where all three axis scans carry state.
+        let (n, k) = (2, 2);
+        let g = Grid3d::new(n, 0.75);
+        let d = dense_dist_3d(&g, k);
+        let mut rng = Rng::seeded(14);
+        let w = rng.uniform_vec(g.len());
+        let mut ws = Workspace3d::new(n, k);
+        let mut y = vec![0.0; g.len()];
+        dhat3_apply(n, k, &w, &mut y, &mut ws).unwrap();
+        let mut oracle = matvec(&d, &w).unwrap();
+        for v in &mut oracle {
+            // dhat3_apply is unscaled; fold h^k out of the oracle.
+            *v /= g.scale(k);
+        }
+        assert_slices_close(&y, &oracle, 1e-11, 1e-13, "single-slice");
     }
 
     #[test]
@@ -274,5 +463,8 @@ mod tests {
         let mut ws = Workspace3d::new(2, 1);
         let mut y = vec![0.0; 8];
         assert!(dhat3_apply(2, 1, &[0.0; 7], &mut y, &mut ws).is_err());
+        let w = vec![0.0; 7];
+        let mut out = vec![0.0; 8];
+        assert!(sq_dist_apply_3d_into(&Grid3d::new(2, 1.0), 1, &w, &mut out, &mut ws).is_err());
     }
 }

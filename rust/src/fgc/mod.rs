@@ -13,8 +13,10 @@
 //!   with exponent `2k`).
 //! * [`fgc2d`] — the 2D Manhattan-metric extension via the binomial
 //!   Kronecker expansion (eq. 3.12).
+//! * [`fgc3d`] — the 3D extension via the multinomial expansion
+//!   (volumetric grids; scans along all three tensor axes).
 //! * [`separable`] — the dimension-generic factor pipeline: one
-//!   [`AxisFactor`] per side (1D scans, 2D Kronecker-of-scans, or a
+//!   [`AxisFactor`] per side (1D scans, 2D/3D Kronecker-of-scans, or a
 //!   dense matrix) composed by [`SeparableOp`] into the full product
 //!   with a fused batched apply for every pair shape.
 //! * [`naive`] — the dense `O(N³)` baseline mirroring the paper's
@@ -30,7 +32,9 @@ pub mod separable;
 
 pub use fgc1d::{dxgdy_1d, sq_dist_apply_1d, sq_dist_apply_1d_into, Workspace1d};
 pub use fgc2d::{dhat_apply, dxgdy_2d, sq_dist_apply_2d, sq_dist_apply_2d_into, Workspace2d};
-pub use fgc3d::{dhat3_apply, dxgdy_3d, sq_dist_apply_3d, Grid3d, Workspace3d};
+pub use fgc3d::{
+    dhat3_apply, dxgdy_3d, sq_dist_apply_3d, sq_dist_apply_3d_into, Grid3d, Workspace3d,
+};
 pub use separable::{AxisFactor, RowApply, SeparableOp};
 pub use scan::{
     apply_dtilde_vec, apply_dtilde_vec_with, apply_l_vec, apply_l_vec_with, apply_lt_vec,

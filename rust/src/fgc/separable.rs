@@ -3,13 +3,14 @@
 //! The paper's fast gradient is *separable per side*: `D_X Γ D_Y =
 //! D_X · (Γ · D_Y)`, and each side is applied by whatever structure
 //! that side has — 1D forward/backward scans (eq. 3.9), the 2D
-//! binomial Kronecker-of-scans pipeline (eq. 3.12), or a plain dense
+//! binomial Kronecker-of-scans pipeline (eq. 3.12), the 3D multinomial
+//! pipeline (§3.1's higher-dimensional remark), or a plain dense
 //! product when no structure exists. [`AxisFactor`] names the per-side
 //! choice and [`SeparableOp`] composes one left and one right factor
 //! into the full product, so every pair shape — grid1d×grid1d,
-//! grid2d×grid2d, dense×grid2d, mixed 1D×2D, … — runs through one
-//! codepath with one scratch-growth policy instead of a hand-written
-//! plan per combination.
+//! grid2d×grid2d, grid3d×grid3d, dense×grid, mixed-dimension grid
+//! pairs, … — runs through one codepath with one scratch-growth policy
+//! instead of a hand-written plan per combination.
 //!
 //! Batching is where the separable view pays off. A right
 //! multiplication touches each **row** of the plan independently, so
@@ -27,9 +28,10 @@
 //! threshold stripe across the whole budget.
 
 use super::fgc2d::{dhat_cols_with, dhat_vec_into};
+use super::fgc3d::{dhat3_cols_with, dhat3_vec_into};
 use super::scan::{check_scan_exponent, dtilde_cols_par, dtilde_rows_par};
 use crate::error::{Error, Result};
-use crate::grid::{Binomial, Grid1d, Grid2d};
+use crate::grid::{Binomial, Grid1d, Grid2d, Grid3d};
 use crate::linalg::{axpy, Mat};
 use crate::parallel::{self, Parallelism, SharedMutSlice};
 
@@ -54,6 +56,15 @@ pub enum AxisFactor {
         /// Distance exponent `k`.
         k: u32,
     },
+    /// 3D grid: `D = h^k·D̂₃`, applied by the multinomial Kronecker
+    /// pipeline (`(k+1)(k+2)/2` terms of triple 1D scans, `O(k⁴)` per
+    /// element).
+    Scan3d {
+        /// The grid (side length `n`; factor dimension `n³`).
+        grid: Grid3d,
+        /// Distance exponent `k`.
+        k: u32,
+    },
     /// No exploitable structure: a dense symmetric distance matrix.
     Dense(Mat),
 }
@@ -64,6 +75,7 @@ impl AxisFactor {
         match self {
             AxisFactor::Scan1d { grid, .. } => grid.n,
             AxisFactor::Scan2d { grid, .. } => grid.len(),
+            AxisFactor::Scan3d { grid, .. } => grid.len(),
             AxisFactor::Dense(d) => d.rows(),
         }
     }
@@ -80,6 +92,7 @@ impl AxisFactor {
         match self {
             AxisFactor::Scan1d { grid, k } => grid.scale(*k),
             AxisFactor::Scan2d { grid, k } => grid.scale(*k),
+            AxisFactor::Scan3d { grid, k } => grid.scale(*k),
             AxisFactor::Dense(_) => 1.0,
         }
     }
@@ -87,7 +100,9 @@ impl AxisFactor {
     /// The scan exponent for grid factors (`None` for dense).
     fn scan_exponent(&self) -> Option<u32> {
         match self {
-            AxisFactor::Scan1d { k, .. } | AxisFactor::Scan2d { k, .. } => Some(*k),
+            AxisFactor::Scan1d { k, .. }
+            | AxisFactor::Scan2d { k, .. }
+            | AxisFactor::Scan3d { k, .. } => Some(*k),
             AxisFactor::Dense(_) => None,
         }
     }
@@ -161,6 +176,31 @@ fn apply_to_rows(
             });
             Ok(())
         }
+        AxisFactor::Scan3d { grid, k } => {
+            // Same per-block scratch carving as the 2D arm, one more
+            // tensor axis per row application.
+            let (n, kk, k) = (grid.n, *k as usize, *k);
+            let cw = (kk + 1) * n * n;
+            let st1 = SharedMutSlice::new(row_t1);
+            let st2 = SharedMutSlice::new(row_t2);
+            let sc = SharedMutSlice::new(row_carry);
+            let min_rows = parallel::min_rows_for(cols * (kk + 1));
+            parallel::for_row_blocks(par, rows, cols, min_rows, out, |bidx, rr, oblk| {
+                // SAFETY: block indices are unique per parallel
+                // region, so the per-block scratch ranges are
+                // disjoint.
+                let t1 = unsafe { st1.range_mut(bidx * cols..(bidx + 1) * cols) };
+                let t2 = unsafe { st2.range_mut(bidx * cols..(bidx + 1) * cols) };
+                let carry = unsafe { sc.range_mut(bidx * cw..(bidx + 1) * cw) };
+                for (local, r) in rr.enumerate() {
+                    let src = &x[r * cols..(r + 1) * cols];
+                    let dst = &mut oblk[local * cols..(local + 1) * cols];
+                    dhat3_vec_into(n, k, src, dst, t1, t2, carry, binom)
+                        .expect("exponent pre-validated at construction");
+                }
+            });
+            Ok(())
+        }
         AxisFactor::Dense(d) => {
             mul_rows_dense(rows, cols, x, d, out, par);
             Ok(())
@@ -195,6 +235,21 @@ fn apply_to_cols(
         }
         AxisFactor::Scan2d { grid, k } => {
             dhat_cols_with(
+                grid.n,
+                cols,
+                *k,
+                x,
+                out,
+                &mut tmp[..rows * cols],
+                &mut scratch[..rows * cols],
+                carry,
+                binom,
+                par,
+            );
+            Ok(())
+        }
+        AxisFactor::Scan3d { grid, k } => {
+            dhat3_cols_with(
                 grid.n,
                 cols,
                 *k,
@@ -293,13 +348,13 @@ pub struct SeparableOp {
     stack_a: Vec<f64>,
     /// Stacked pass output, `B·M·N`.
     stack_b: Vec<f64>,
-    /// 2D column-pass Kronecker temp (left `Scan2d` only), `B·M·N`.
+    /// Column-pass Kronecker temp (left 2D/3D scan factors), `B·M·N`.
     col_tmp: Vec<f64>,
-    /// 2D column-pass accumulation scratch (left `Scan2d` only).
+    /// Column-pass accumulation scratch (left 2D/3D scan factors).
     col_scratch: Vec<f64>,
     /// Column-scan carries, sized for the widest stacked pass.
     carry: Vec<f64>,
-    /// Per-thread row-pass temp (right `Scan2d` only).
+    /// Per-thread row-pass temp (right 2D/3D scan factors).
     row_t1: Vec<f64>,
     /// Second per-thread row-pass temp.
     row_t2: Vec<f64>,
@@ -378,13 +433,35 @@ impl SeparableOp {
                 grow(&mut self.col_tmp, total);
                 grow(&mut self.col_scratch, total);
             }
+            AxisFactor::Scan3d { grid, k } => {
+                // Widest 3D column scan: the z-axis pass over n rows of
+                // width n²·(stacked cols).
+                grow(
+                    &mut self.carry,
+                    (*k as usize + 1) * grid.n * grid.n * batch * self.n,
+                );
+                grow(&mut self.col_tmp, total);
+                grow(&mut self.col_scratch, total);
+            }
             AxisFactor::Dense(_) => {}
         }
-        if let AxisFactor::Scan2d { grid, k } = &self.right {
-            let threads = self.par.threads().max(1);
-            grow(&mut self.row_t1, threads * grid.len());
-            grow(&mut self.row_t2, threads * grid.len());
-            grow(&mut self.row_carry, threads * (*k as usize + 1) * grid.n);
+        match &self.right {
+            AxisFactor::Scan2d { grid, k } => {
+                let threads = self.par.threads().max(1);
+                grow(&mut self.row_t1, threads * grid.len());
+                grow(&mut self.row_t2, threads * grid.len());
+                grow(&mut self.row_carry, threads * (*k as usize + 1) * grid.n);
+            }
+            AxisFactor::Scan3d { grid, k } => {
+                let threads = self.par.threads().max(1);
+                grow(&mut self.row_t1, threads * grid.len());
+                grow(&mut self.row_t2, threads * grid.len());
+                grow(
+                    &mut self.row_carry,
+                    threads * (*k as usize + 1) * grid.n * grid.n,
+                );
+            }
+            AxisFactor::Scan1d { .. } | AxisFactor::Dense(_) => {}
         }
         self.cap = batch;
     }
@@ -531,7 +608,8 @@ impl SeparableOp {
 /// scale applied: `out = X · D` for the factor's distance matrix `D`.
 /// This is the barycenter update's `A = Γ_s · D_s` step — the same
 /// kernels as the separable pipeline's row pass, so image-grid (2D)
-/// inputs get the scan path without materializing `D_s`.
+/// and volumetric (3D) inputs get the scan path without materializing
+/// `D_s`.
 pub struct RowApply {
     factor: AxisFactor,
     binom: Binomial,
@@ -553,6 +631,11 @@ impl RowApply {
                 par.threads().max(1),
                 grid.len(),
                 (*k as usize + 1) * grid.n,
+            ),
+            AxisFactor::Scan3d { grid, k } => (
+                par.threads().max(1),
+                grid.len(),
+                (*k as usize + 1) * grid.n * grid.n,
             ),
             _ => (0, 0, 0),
         };
@@ -608,7 +691,7 @@ impl RowApply {
 mod tests {
     use super::*;
     use crate::fgc::naive::dxgdy_dense;
-    use crate::grid::{dense_dist_1d, dense_dist_2d};
+    use crate::grid::{dense_dist_1d, dense_dist_2d, dense_dist_3d};
     use crate::linalg::{frobenius_diff, matmul};
     use crate::prng::Rng;
 
@@ -622,11 +705,14 @@ mod tests {
         match f {
             AxisFactor::Scan1d { grid, k } => dense_dist_1d(grid, *k),
             AxisFactor::Scan2d { grid, k } => dense_dist_2d(grid, *k),
+            AxisFactor::Scan3d { grid, k } => dense_dist_3d(grid, *k),
             AxisFactor::Dense(d) => d.clone(),
         }
     }
 
-    /// Every factor combination used by the fgc backend, small sizes.
+    /// Every factor combination used by the fgc backend, small sizes —
+    /// grid1d/grid2d/grid3d on either side, dense on either side, and
+    /// every mixed-dimension pairing.
     fn factor_cases() -> Vec<(AxisFactor, AxisFactor)> {
         let g1 = |n: usize, k: u32| AxisFactor::Scan1d {
             grid: Grid1d::unit(n),
@@ -634,6 +720,10 @@ mod tests {
         };
         let g2 = |n: usize, k: u32| AxisFactor::Scan2d {
             grid: Grid2d::unit(n),
+            k,
+        };
+        let g3 = |n: usize, k: u32| AxisFactor::Scan3d {
+            grid: Grid3d::unit(n),
             k,
         };
         let dn = |n: usize| AxisFactor::Dense(dense_dist_1d(&Grid1d::unit(n), 2));
@@ -649,6 +739,16 @@ mod tests {
             (dn(9), g1(12, 1)),
             (g1(12, 2), dn(7)),
             (dn(8), dn(6)),
+            // 3D factors: grid3d×grid3d, dense×grid3d (both orders),
+            // mixed 1D×3D and 2D×3D (both orders).
+            (g3(2, 1), g3(3, 1)),
+            (g3(3, 2), g3(2, 2)),
+            (dn(10), g3(2, 1)),
+            (g3(2, 1), dn(8)),
+            (g1(7, 1), g3(2, 1)),
+            (g3(2, 1), g1(6, 1)),
+            (g2(3, 1), g3(2, 1)),
+            (g3(2, 2), g2(3, 2)),
         ]
     }
 
@@ -760,6 +860,10 @@ mod tests {
             AxisFactor::Scan2d {
                 grid: Grid2d::new(3, 0.5),
                 k: 1,
+            },
+            AxisFactor::Scan3d {
+                grid: Grid3d::new(2, 0.5),
+                k: 2,
             },
             AxisFactor::Dense(dense_dist_1d(&Grid1d::unit(7), 1)),
         ];

@@ -5,7 +5,7 @@
 //! hot path, but the baseline, the tests and the `C₁` constant term
 //! need them.
 
-use super::{Grid1d, Grid2d};
+use super::{Grid1d, Grid2d, Grid3d};
 use crate::linalg::Mat;
 
 /// Dense 1D grid distance matrix `D_{ij} = h^k |i−j|^k` (paper eq. 2.2).
@@ -26,6 +26,27 @@ pub fn dense_dist_2d(grid: &Grid2d, k: u32) -> Mat {
         let d = grid.manhattan(a, b) as f64;
         scale * d.powi(k as i32)
     })
+}
+
+/// Dense 3D grid distance matrix under the Manhattan metric,
+/// `D_{ij} = h^k (|Δz| + |Δy| + |Δx|)^k` over flattened indices — the
+/// `O(N²)`-memory oracle the 3D scan path is tested against (the fgc
+/// path never materializes it).
+pub fn dense_dist_3d(grid: &Grid3d, k: u32) -> Mat {
+    let n3 = grid.len();
+    let scale = grid.scale(k);
+    Mat::from_fn(n3, n3, |a, b| {
+        let d = grid.manhattan(a, b) as f64;
+        scale * d.powi(k as i32)
+    })
+}
+
+impl Grid3d {
+    /// Dense distance matrix (test oracle; `O(N²)` memory) —
+    /// convenience alias for [`dense_dist_3d`].
+    pub fn dense(&self, k: u32) -> Mat {
+        dense_dist_3d(self, k)
+    }
 }
 
 /// Dense unscaled power-distance matrix `|i−j|^r` of size `n×n`, with
@@ -106,6 +127,18 @@ mod tests {
         let b = g.flat(1, 2);
         // (h·(1+2))² with h^k pulled out as h²·3² = 4·9
         assert_eq!(d[(a, b)], 4.0 * 9.0);
+    }
+
+    #[test]
+    fn dist_3d_manhattan() {
+        let g = Grid3d::new(3, 0.5);
+        let d = dense_dist_3d(&g, 2);
+        let a = g.flat(0, 0, 0);
+        let b = g.flat(2, 1, 2);
+        // h² (2+1+2)² = 0.25 · 25
+        assert_eq!(d[(a, b)], 0.25 * 25.0);
+        assert_eq!(d[(a, b)], d[(b, a)]);
+        assert_eq!(d[(a, a)], 0.0);
     }
 
     #[test]

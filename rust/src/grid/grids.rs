@@ -107,6 +107,76 @@ impl Grid2d {
     }
 }
 
+/// A 3D uniform `n×n×n` grid with equal spacing `h` on every axis —
+/// the "higher dimensional space" generalization the paper sketches in
+/// §3.1 ("there is no essential difference"). Points are flattened
+/// `idx = (z·n + y)·n + x`, and the metric is Manhattan:
+/// `d(i, j) = h^k (|Δz| + |Δy| + |Δx|)^k`, so the multinomial theorem
+/// gives an exact Kronecker-of-scans expansion per axis (see
+/// `crate::fgc::fgc3d`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Grid3d {
+    /// Side length (total points `N = n³`).
+    pub n: usize,
+    /// Spacing (all axes).
+    pub h: f64,
+}
+
+impl Grid3d {
+    /// `n×n×n` grid with explicit spacing.
+    pub fn new(n: usize, h: f64) -> Self {
+        assert!(n >= 1 && h > 0.0, "Grid3d requires n≥1, h>0");
+        Grid3d { n, h }
+    }
+
+    /// `n×n×n` points spanning `[0,1]³` (the 1D/2D unit convention).
+    pub fn unit(n: usize) -> Self {
+        assert!(n >= 2);
+        Grid3d {
+            n,
+            h: 1.0 / (n as f64 - 1.0),
+        }
+    }
+
+    /// Total number of points `N = n³`.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.n * self.n * self.n
+    }
+
+    /// True iff the grid is empty (never for validly constructed grids).
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// `h^k`.
+    #[inline]
+    pub fn scale(&self, k: u32) -> f64 {
+        self.h.powi(k as i32)
+    }
+
+    /// Flat index of grid coordinate `(z, y, x)`.
+    #[inline]
+    pub fn flat(&self, z: usize, y: usize, x: usize) -> usize {
+        debug_assert!(z < self.n && y < self.n && x < self.n);
+        (z * self.n + y) * self.n + x
+    }
+
+    /// Grid coordinate `(z, y, x)` of a flat index.
+    #[inline]
+    pub fn coords(&self, idx: usize) -> (usize, usize, usize) {
+        let n = self.n;
+        (idx / (n * n), (idx / n) % n, idx % n)
+    }
+
+    /// Unscaled Manhattan distance between two flat indices.
+    pub fn manhattan(&self, a: usize, b: usize) -> usize {
+        let (az, ay, ax) = self.coords(a);
+        let (bz, by, bx) = self.coords(b);
+        az.abs_diff(bz) + ay.abs_diff(by) + ax.abs_diff(bx)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -137,5 +207,23 @@ mod tests {
         assert_eq!(g.manhattan(a, b), 5);
         assert_eq!(g.manhattan(b, a), 5);
         assert_eq!(g.manhattan(a, a), 0);
+    }
+
+    #[test]
+    fn grid3d_flat_roundtrip_and_manhattan() {
+        let g = Grid3d::new(4, 1.0);
+        assert_eq!(g.len(), 64);
+        for idx in 0..g.len() {
+            let (z, y, x) = g.coords(idx);
+            assert_eq!(g.flat(z, y, x), idx);
+        }
+        let a = g.flat(0, 0, 0);
+        let b = g.flat(3, 2, 1);
+        assert_eq!(g.manhattan(a, b), 6);
+        assert_eq!(g.manhattan(b, a), 6);
+        assert_eq!(g.manhattan(a, a), 0);
+        let u = Grid3d::unit(5);
+        assert!((u.h - 0.25).abs() < 1e-15);
+        assert!((u.scale(2) - 0.0625).abs() < 1e-15);
     }
 }

@@ -7,7 +7,7 @@ mod grids;
 
 pub use binomial::Binomial;
 pub use distmat::{
-    dense_dist_1d, dense_dist_2d, dense_pow_dist, squared_dist_apply_dense,
+    dense_dist_1d, dense_dist_2d, dense_dist_3d, dense_pow_dist, squared_dist_apply_dense,
     squared_dist_apply_dense_into,
 };
-pub use grids::{Grid1d, Grid2d};
+pub use grids::{Grid1d, Grid2d, Grid3d};

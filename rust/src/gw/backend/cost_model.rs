@@ -40,6 +40,9 @@ pub fn dense_pair_cost(m: f64, n: f64) -> f64 {
 ///   each → `(k+1)²` per element;
 /// * the 2D Kronecker pipeline runs `k+1` expansion terms of paired
 ///   1D scans → `(k+1)³` per element;
+/// * the 3D multinomial pipeline runs `(k+1)(k+2)/2` terms of triple
+///   1D scans → `O(k⁴)` per element, modeled as `(k+1)⁴` (the
+///   `O(k⁴n³)` bound documented in `crate::fgc::fgc3d`);
 /// * a dense factor streams its full side → `len` per element.
 pub fn factor_cost(factor: &AxisFactor, plan_elems: f64) -> f64 {
     match factor {
@@ -50,6 +53,10 @@ pub fn factor_cost(factor: &AxisFactor, plan_elems: f64) -> f64 {
         AxisFactor::Scan2d { k, .. } => {
             let lanes = *k as f64 + 1.0;
             lanes * lanes * lanes * plan_elems
+        }
+        AxisFactor::Scan3d { k, .. } => {
+            let lanes = *k as f64 + 1.0;
+            lanes * lanes * lanes * lanes * plan_elems
         }
         AxisFactor::Dense(d) => d.rows() as f64 * plan_elems,
     }
@@ -71,7 +78,7 @@ pub fn lowrank_cost(rx: usize, ry: usize, m: f64, n: f64) -> f64 {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::grid::{Grid1d, Grid2d};
+    use crate::grid::{Grid1d, Grid2d, Grid3d};
     use crate::linalg::Mat;
 
     #[test]
@@ -84,15 +91,24 @@ mod tests {
             grid: Grid2d::unit(10),
             k: 1,
         };
+        let scan3 = AxisFactor::Scan3d {
+            grid: Grid3d::unit(5),
+            k: 1,
+        };
         let dense = AxisFactor::Dense(Mat::zeros(100, 100));
         let elems = 100.0 * 100.0;
-        // Scans beat streaming a 100-wide dense side; the 2D pipeline
-        // costs one extra (k+1) factor over 1D.
+        // Scans beat streaming a 100-wide dense side; each extra grid
+        // dimension costs one extra (k+1) factor.
         assert!(factor_cost(&scan1, elems) < factor_cost(&dense, elems));
         assert!(factor_cost(&scan2, elems) < factor_cost(&dense, elems));
+        assert!(factor_cost(&scan3, elems) < factor_cost(&dense, elems));
         assert_eq!(
             factor_cost(&scan2, elems),
             2.0 * factor_cost(&scan1, elems)
+        );
+        assert_eq!(
+            factor_cost(&scan3, elems),
+            2.0 * factor_cost(&scan2, elems)
         );
         // The composed separable cost is the sum of both passes.
         assert_eq!(

@@ -2,14 +2,15 @@
 //! dimension-generic separable engine.
 //!
 //! Construction maps each geometry side to an
-//! [`AxisFactor`](crate::fgc::AxisFactor) — 1D scans, the 2D
-//! Kronecker-of-scans pipeline, or a materialized dense matrix — and
+//! [`AxisFactor`](crate::fgc::AxisFactor) — 1D scans, the 2D/3D
+//! Kronecker-of-scans pipelines, or a materialized dense matrix — and
 //! any pair with at least one grid side runs through one
-//! [`SeparableOp`] codepath: grid1d×grid1d, grid2d×grid2d,
-//! dense×grid1d, **dense×grid2d, grid2d×dense, mixed 1D×2D** — all
-//! with the same fused `apply_batch` (one stacked row pass, one
-//! stacked column pass) and one scratch-growth policy. Grid×grid
-//! pairs must share the distance exponent `k` (paper §2 footnote).
+//! [`SeparableOp`] codepath: grid×grid in any dimension mix (1D, 2D,
+//! **3D**), dense×grid with the grid on either side — all with the
+//! same fused `apply_batch` (one stacked row pass, one stacked column
+//! pass) and one scratch-growth policy, so volumetric pairs never
+//! materialize an `O(N²)` distance matrix. Grid×grid pairs must share
+//! the distance exponent `k` (paper §2 footnote).
 //! Dense×dense pairs under this kind fall back to the shared
 //! `DensePair` two-product apply, identical to
 //! [`super::NaiveBackend`] by construction (including its fused
@@ -34,6 +35,10 @@ pub(crate) fn axis_factor(geom: &Geometry) -> Result<AxisFactor> {
         Geometry::Grid2d { grid, k } => {
             check_scan_exponent(*k)?;
             AxisFactor::Scan2d { grid: *grid, k: *k }
+        }
+        Geometry::Grid3d { grid, k } => {
+            check_scan_exponent(*k)?;
+            AxisFactor::Scan3d { grid: *grid, k: *k }
         }
         Geometry::Dense(d) => AxisFactor::Dense(d.clone()),
     })
@@ -223,8 +228,58 @@ mod tests {
     }
 
     #[test]
+    fn mixed_3d_pairs_match_the_dense_oracle() {
+        // The 3D shapes the separable engine newly serves: grid3d on
+        // either side of dense, mixed 1D×3D / 2D×3D, and grid3d pairs
+        // — no dense D_X·Γ·D_Y product anywhere.
+        let g3 = Geometry::grid_3d_unit(2, 1); // 8 points
+        let g3b = Geometry::grid_3d_unit(3, 1); // 27 points
+        let g2 = Geometry::grid_2d_unit(3, 1);
+        let g1 = Geometry::grid_1d_unit(10, 1);
+        let dn = Geometry::Dense(crate::grid::dense_dist_1d(&crate::grid::Grid1d::unit(9), 2));
+        for (gx, gy) in [
+            (g3.clone(), g3b.clone()),
+            (dn.clone(), g3.clone()),
+            (g3.clone(), dn.clone()),
+            (g1.clone(), g3.clone()),
+            (g3.clone(), g1.clone()),
+            (g2.clone(), g3.clone()),
+            (g3.clone(), g2.clone()),
+        ] {
+            let (m, n) = (gx.len(), gy.len());
+            let gamma = random_gamma(m, n, 11 + m as u64 + n as u64);
+            let oracle = dxgdy_dense(&gx.dense(), &gy.dense(), &gamma).unwrap();
+            let mut be = FgcBackend::new(gx, gy, Parallelism::SERIAL).unwrap();
+            let mut out = Mat::zeros(m, n);
+            be.apply(&gamma, &mut out).unwrap();
+            let d = frobenius_diff(&out, &oracle).unwrap();
+            assert!(d < 1e-10, "{m}x{n}: 3D mixed-path diff {d:e}");
+        }
+    }
+
+    #[test]
+    fn swap_dense_x_on_3d_mixed_plan_matches_fresh() {
+        // The volume-vs-point-cloud rebind: dense support × 3D grid.
+        let gy = Geometry::grid_3d_unit(2, 1);
+        let d0 = crate::grid::dense_dist_1d(&crate::grid::Grid1d::unit(7), 2);
+        let d1 = d0.map(|x| 0.75 * x + 0.3);
+        let mut swapped =
+            FgcBackend::new(Geometry::Dense(d0), gy.clone(), Parallelism::SERIAL).unwrap();
+        swapped.swap_dense_x(&d1).unwrap();
+        let mut fresh =
+            FgcBackend::new(Geometry::Dense(d1.clone()), gy, Parallelism::SERIAL).unwrap();
+        let gamma = random_gamma(7, 8, 6);
+        let (mut a, mut b) = (Mat::zeros(7, 8), Mat::zeros(7, 8));
+        swapped.apply(&gamma, &mut a).unwrap();
+        fresh.apply(&gamma, &mut b).unwrap();
+        assert_eq!(a.as_slice(), b.as_slice());
+        assert_eq!(swapped.geom_x(), fresh.geom_x());
+    }
+
+    #[test]
     fn batched_apply_is_bitwise_sequential_for_2d_and_mixed_plans() {
         let g2 = Geometry::grid_2d_unit(3, 1);
+        let g3 = Geometry::grid_3d_unit(2, 1);
         let dn = Geometry::Dense(crate::grid::dense_dist_1d(&crate::grid::Grid1d::unit(8), 2));
         let g1 = Geometry::grid_1d_unit(7, 1);
         for (gx, gy) in [
@@ -232,6 +287,9 @@ mod tests {
             (dn.clone(), g2.clone()),
             (g2.clone(), dn.clone()),
             (g1.clone(), g2.clone()),
+            (g3.clone(), g3.clone()),
+            (dn.clone(), g3.clone()),
+            (g3.clone(), g2.clone()),
         ] {
             for threads in [1usize, 4] {
                 let (m, n) = (gx.len(), gy.len());
@@ -350,6 +408,8 @@ mod tests {
             (Geometry::grid_1d_unit(8, 1), Geometry::grid_1d_unit(8, 2)),
             (Geometry::grid_2d_unit(3, 1), Geometry::grid_2d_unit(3, 2)),
             (Geometry::grid_1d_unit(9, 2), Geometry::grid_2d_unit(3, 1)),
+            (Geometry::grid_3d_unit(2, 1), Geometry::grid_3d_unit(2, 2)),
+            (Geometry::grid_2d_unit(3, 2), Geometry::grid_3d_unit(2, 1)),
         ] {
             assert!(FgcBackend::new(gx, gy, Parallelism::SERIAL).is_err());
         }

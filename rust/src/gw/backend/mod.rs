@@ -11,8 +11,8 @@
 //!
 //! * [`FgcBackend`] — the paper's `O(k²·MN)` dynamic-programming path
 //!   on grids, composed per side by the separable engine
-//!   (`crate::fgc::separable`): any grid side — 1D or 2D, next to a
-//!   grid of either dimension or a dense side — is applied by scans
+//!   (`crate::fgc::separable`): any grid side — 1D, 2D or 3D, next to
+//!   a grid of any dimension or a dense side — is applied by scans
 //!   (the barycenter shapes included).
 //! * [`NaiveBackend`] — the dense `O(MN(M+N))` baseline ("Original" in
 //!   every table).
@@ -340,12 +340,13 @@ pub fn auto_kind_for_sizes(structured: bool, m: usize, n: usize) -> GradientKind
 
 /// [`auto_kind_for_sizes`] on a bound geometry pair. "Structured"
 /// means the separable fgc engine has a scan factor for at least one
-/// side: any pair with a grid side — grid×grid (1D/2D/mixed, matching
-/// `k`), dense×grid (1D *or* 2D, either order; the barycenter shapes).
-/// Only dense×dense pairs and mismatched grid exponents — the shapes
-/// fgc would serve by its dense fallback — fall through to the
-/// dense-size heuristic, so the auto-selector never routes a workload
-/// onto a silently-degraded path.
+/// side: any pair with a grid side — grid×grid (1D/2D/3D in any
+/// dimension mix, matching `k`), dense×grid (any grid dimension,
+/// either order; the barycenter shapes). Only dense×dense pairs and
+/// mismatched grid exponents — the shapes fgc would serve by its dense
+/// fallback — fall through to the dense-size heuristic, so the
+/// auto-selector never routes a workload onto a silently-degraded
+/// path.
 pub fn auto_kind(geom_x: &Geometry, geom_y: &Geometry) -> GradientKind {
     let fgc_exploitable = match (geom_x.grid_exponent(), geom_y.grid_exponent()) {
         (Some(ka), Some(kb)) => ka == kb,
@@ -381,12 +382,23 @@ mod tests {
         assert_eq!(auto_kind(&grid2d, &large), GradientKind::Fgc);
         assert_eq!(auto_kind(&small, &Geometry::grid_2d_unit(4, 1)), GradientKind::Fgc);
         assert_eq!(auto_kind(&grid, &grid2d), GradientKind::Fgc);
+        // 3D grid sides are fgc-exploitable exactly like 1D/2D ones.
+        let grid3d = Geometry::grid_3d_unit(7, 1); // 343 points
+        assert_eq!(auto_kind(&grid3d, &grid3d), GradientKind::Fgc);
+        assert_eq!(auto_kind(&large, &grid3d), GradientKind::Fgc);
+        assert_eq!(auto_kind(&grid3d, &large), GradientKind::Fgc);
+        assert_eq!(auto_kind(&grid, &grid3d), GradientKind::Fgc);
+        assert_eq!(auto_kind(&grid2d, &grid3d), GradientKind::Fgc);
         // Mismatched grid exponents stay on the dense-size heuristic
         // (fgc would only serve them via its dense fallback).
         let grid_k2 = Geometry::grid_1d_unit(500, 2);
         assert_eq!(auto_kind(&grid, &grid_k2), GradientKind::LowRank);
         assert_eq!(
             auto_kind(&Geometry::grid_1d_unit(20, 2), &Geometry::grid_2d_unit(4, 1)),
+            GradientKind::Naive
+        );
+        assert_eq!(
+            auto_kind(&Geometry::grid_3d_unit(2, 2), &Geometry::grid_2d_unit(4, 1)),
             GradientKind::Naive
         );
     }

@@ -213,6 +213,12 @@ impl EntropicGw {
         Self::new(Geometry::grid_2d_unit(nx, k), Geometry::grid_2d_unit(ny, k), cfg)
     }
 
+    /// 3D unit `n×n×n` grids with exponent `k` (volumetric setup; the
+    /// §3.1 higher-dimensional generalization).
+    pub fn grid_3d(nx: usize, ny: usize, k: u32, cfg: GwConfig) -> Self {
+        Self::new(Geometry::grid_3d_unit(nx, k), Geometry::grid_3d_unit(ny, k), cfg)
+    }
+
     /// The configuration.
     pub fn config(&self) -> &GwConfig {
         &self.cfg
@@ -451,10 +457,10 @@ impl<'a> BatchJob<'a> {
 /// over the shared factors/kernel, then each job runs its own inner
 /// Sinkhorn — producing **bit-for-bit** the plans of independent
 /// [`EntropicGw::solve_into`] calls. Every plan shape the fgc backend
-/// constructs batches fused — grid1d, grid2d, dense×grid (1D or 2D)
-/// and mixed-dimension pairs all run one stacked scan pass per side
-/// (the separable engine), so 2D image-grid supports batch exactly
-/// like the original 1D path. Capacity grows on demand and is reused
+/// constructs batches fused — grid1d, grid2d, grid3d, dense×grid (any
+/// grid dimension) and mixed-dimension pairs all run one stacked scan
+/// pass per side (the separable engine), so 2D image-grid and 3D
+/// volumetric supports batch exactly like the original 1D path. Capacity grows on demand and is reused
 /// across solves (the coordinator's warm-worker cache and the
 /// barycenter's per-group workspaces hold exactly one of these).
 pub struct GwBatchWorkspace {
@@ -1014,10 +1020,14 @@ mod tests {
             crate::grid::dense_dist_1d(&crate::grid::Grid1d::unit(dense_m), 2),
         );
         let grid2 = Geometry::grid_2d_unit(side, 1);
+        let grid3 = Geometry::grid_3d_unit(2, 1); // 8 points
         let cases = [
             (grid2.clone(), grid2.clone()),
             (dense.clone(), grid2.clone()),
             (grid2.clone(), dense.clone()),
+            (grid3.clone(), grid3.clone()),
+            (dense.clone(), grid3.clone()),
+            (grid3.clone(), grid2.clone()),
         ];
         for (gx, gy) in cases {
             let (m, n) = (gx.len(), gy.len());

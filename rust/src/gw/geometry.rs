@@ -1,9 +1,12 @@
 //! Metric-space descriptors for GW problems.
 
 use crate::error::{Error, Result};
-use crate::fgc::{sq_dist_apply_1d_into, sq_dist_apply_2d_into, Workspace2d};
+use crate::fgc::{
+    sq_dist_apply_1d_into, sq_dist_apply_2d_into, sq_dist_apply_3d_into, Workspace2d, Workspace3d,
+};
 use crate::grid::{
-    dense_dist_1d, dense_dist_2d, squared_dist_apply_dense_into, Binomial, Grid1d, Grid2d,
+    dense_dist_1d, dense_dist_2d, dense_dist_3d, squared_dist_apply_dense_into, Binomial, Grid1d,
+    Grid2d, Grid3d,
 };
 use crate::linalg::Mat;
 
@@ -27,6 +30,14 @@ pub enum Geometry {
     Grid2d {
         /// The grid.
         grid: Grid2d,
+        /// Distance exponent `k`.
+        k: u32,
+    },
+    /// 3D uniform grid with Manhattan metric `h^k(|Δz|+|Δy|+|Δx|)^k`
+    /// (the §3.1 higher-dimensional generalization; volumetric data).
+    Grid3d {
+        /// The grid.
+        grid: Grid3d,
         /// Distance exponent `k`.
         k: u32,
     },
@@ -60,11 +71,28 @@ impl Geometry {
         }
     }
 
+    /// 3D unit-cube `n×n×n` grid (volumetric data).
+    pub fn grid_3d_unit(n: usize, k: u32) -> Self {
+        Geometry::Grid3d {
+            grid: Grid3d::unit(n),
+            k,
+        }
+    }
+
+    /// 3D `n×n×n` grid with explicit spacing.
+    pub fn grid_3d(n: usize, h: f64, k: u32) -> Self {
+        Geometry::Grid3d {
+            grid: Grid3d::new(n, h),
+            k,
+        }
+    }
+
     /// Number of support points.
     pub fn len(&self) -> usize {
         match self {
             Geometry::Grid1d { grid, .. } => grid.n,
             Geometry::Grid2d { grid, .. } => grid.len(),
+            Geometry::Grid3d { grid, .. } => grid.len(),
             Geometry::Dense(d) => d.rows(),
         }
     }
@@ -84,7 +112,22 @@ impl Geometry {
     /// auto-selector key on.
     pub fn grid_exponent(&self) -> Option<u32> {
         match self {
-            Geometry::Grid1d { k, .. } | Geometry::Grid2d { k, .. } => Some(*k),
+            Geometry::Grid1d { k, .. }
+            | Geometry::Grid2d { k, .. }
+            | Geometry::Grid3d { k, .. } => Some(*k),
+            Geometry::Dense(_) => None,
+        }
+    }
+
+    /// The grid's per-axis `(side, spacing)` descriptor (`None` for
+    /// dense) — what admission-time validation checks without matching
+    /// every grid variant at the call site (a new variant that forgets
+    /// to extend this fails closed through the `None` path).
+    pub fn grid_dims(&self) -> Option<(usize, f64)> {
+        match self {
+            Geometry::Grid1d { grid, .. } => Some((grid.n, grid.h)),
+            Geometry::Grid2d { grid, .. } => Some((grid.n, grid.h)),
+            Geometry::Grid3d { grid, .. } => Some((grid.n, grid.h)),
             Geometry::Dense(_) => None,
         }
     }
@@ -95,6 +138,7 @@ impl Geometry {
         match self {
             Geometry::Grid1d { grid, k } => dense_dist_1d(grid, *k),
             Geometry::Grid2d { grid, k } => dense_dist_2d(grid, *k),
+            Geometry::Grid3d { grid, k } => dense_dist_3d(grid, *k),
             Geometry::Dense(d) => d.clone(),
         }
     }
@@ -150,6 +194,13 @@ impl Geometry {
                     .ok_or_else(|| scratch_mismatch("Grid2d"))?;
                 sq_dist_apply_2d_into(grid, *k, w, out, &mut scratch.tmp, &mut scratch.carry, ws)
             }
+            Geometry::Grid3d { grid, k } => {
+                let ws = scratch
+                    .ws3
+                    .as_mut()
+                    .ok_or_else(|| scratch_mismatch("Grid3d"))?;
+                sq_dist_apply_3d_into(grid, *k, w, out, ws)
+            }
             Geometry::Dense(d) => {
                 squared_dist_apply_dense_into(d, w, out);
                 Ok(())
@@ -167,8 +218,9 @@ fn scratch_mismatch(variant: &str) -> Error {
 
 /// Reusable scratch for [`Geometry::sq_apply_into`]: the binomial
 /// table and scan carries for 1D grids, a [`Workspace2d`] for 2D
-/// grids, nothing for dense geometries. Build once per geometry (the
-/// solver workspaces own one per side) and reuse every iteration.
+/// grids, a [`Workspace3d`] for 3D grids, nothing for dense
+/// geometries. Build once per geometry (the solver workspaces own one
+/// per side) and reuse every iteration.
 #[derive(Debug)]
 pub struct SqApplyScratch {
     /// Backward-scan half (1D) / first Kronecker temp (2D), length `N`.
@@ -180,30 +232,39 @@ pub struct SqApplyScratch {
     binom: Option<Binomial>,
     /// 2D scan workspace (binomial + carries sized for `2k`).
     ws2: Option<Box<Workspace2d>>,
+    /// 3D scan workspace (owns its temps; binomial + carries sized
+    /// for `2k`).
+    ws3: Option<Box<Workspace3d>>,
 }
 
 impl SqApplyScratch {
     /// Scratch sized for `geom`'s squared-distance apply.
     pub fn for_geometry(geom: &Geometry) -> Self {
+        let empty = SqApplyScratch {
+            tmp: Vec::new(),
+            carry: Vec::new(),
+            binom: None,
+            ws2: None,
+            ws3: None,
+        };
         match geom {
             Geometry::Grid1d { grid, k } => SqApplyScratch {
                 tmp: vec![0.0; grid.n],
                 carry: vec![0.0; 2 * *k as usize + 1],
                 binom: Some(Binomial::new(2 * *k as usize)),
-                ws2: None,
+                ..empty
             },
             Geometry::Grid2d { grid, k } => SqApplyScratch {
                 tmp: vec![0.0; grid.len()],
                 carry: vec![0.0; grid.len()],
-                binom: None,
                 ws2: Some(Box::new(Workspace2d::new(grid.n, 1, *k))),
+                ..empty
             },
-            Geometry::Dense(_) => SqApplyScratch {
-                tmp: Vec::new(),
-                carry: Vec::new(),
-                binom: None,
-                ws2: None,
+            Geometry::Grid3d { grid, k } => SqApplyScratch {
+                ws3: Some(Box::new(Workspace3d::new(grid.n, *k))),
+                ..empty
             },
+            Geometry::Dense(_) => empty,
         }
     }
 }
@@ -228,16 +289,25 @@ mod tests {
         let fast2 = g2.sq_apply(&w2).unwrap();
         let dense2 = Geometry::Dense(g2.dense()).sq_apply(&w2).unwrap();
         assert_slices_close(&fast2, &dense2, 1e-11, 1e-14, "2d");
+
+        let g3 = Geometry::grid_3d_unit(3, 1);
+        let w3 = rng.uniform_vec(27);
+        let fast3 = g3.sq_apply(&w3).unwrap();
+        let dense3 = Geometry::Dense(g3.dense()).sq_apply(&w3).unwrap();
+        assert_slices_close(&fast3, &dense3, 1e-11, 1e-14, "3d");
     }
 
     #[test]
     fn lengths() {
         assert_eq!(Geometry::grid_1d_unit(7, 1).len(), 7);
         assert_eq!(Geometry::grid_2d_unit(4, 1).len(), 16);
+        assert_eq!(Geometry::grid_3d_unit(3, 1).len(), 27);
         assert!(Geometry::grid_1d_unit(7, 1).is_structured());
+        assert!(Geometry::grid_3d_unit(3, 1).is_structured());
         assert!(!Geometry::Dense(Mat::zeros(3, 3)).is_structured());
         assert_eq!(Geometry::grid_1d_unit(7, 2).grid_exponent(), Some(2));
         assert_eq!(Geometry::grid_2d_unit(4, 1).grid_exponent(), Some(1));
+        assert_eq!(Geometry::grid_3d_unit(3, 2).grid_exponent(), Some(2));
         assert_eq!(Geometry::Dense(Mat::zeros(3, 3)).grid_exponent(), None);
     }
 }

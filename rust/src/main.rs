@@ -3,7 +3,8 @@
 //! ```text
 //! fgc-gw solve  --n 500 [--k 1] [--eps 0.002] [--backend fgc|naive|lowrank] [--lowrank-tol T] [--seed 7] [--threads 1]
 //! fgc-gw solve2d --side 20 [--eps 0.004] …
-//! fgc-gw serve  --jobs 32 [--workers 2] [--shards 0] [--threads 1] [--backend auto|fgc|naive|lowrank] [--lowrank-tol T] [--pjrt] [--config path]
+//! fgc-gw solve3d --side 6 [--eps 0.004] …
+//! fgc-gw serve  --jobs 32 [--family 1d|3d|mixed] [--workers 2] [--shards 0] [--threads 1] [--backend auto|fgc|naive|lowrank] [--lowrank-tol T] [--pjrt] [--config path]
 //! fgc-gw bary   --inputs 3 --n 40
 //! fgc-gw info   [--artifacts artifacts]
 //! ```
@@ -14,7 +15,10 @@
 //! auto` (the default) lets the router pick per job: grid → fgc, small
 //! dense → naive, large dense → lowrank. `--shards 0` (default) sizes
 //! the variant-sharded queue from the worker count; `--lowrank-tol 0`
-//! derives the ACA tolerance from each job's ε.
+//! derives the ACA tolerance from each job's ε. `serve --family`
+//! selects the synthetic workload: `1d` grid pairs (default), `3d`
+//! volumetric grid pairs, or `mixed` dense-support×3D-grid payloads
+//! (the warm-rebind path).
 
 use fgc_gw::cli::Args;
 use fgc_gw::config::Config;
@@ -41,6 +45,7 @@ fn run() -> fgc_gw::Result<()> {
     match args.command.as_deref() {
         Some("solve") => cmd_solve(&args),
         Some("solve2d") => cmd_solve_2d(&args),
+        Some("solve3d") => cmd_solve_3d(&args),
         Some("serve") => cmd_serve(&args),
         Some("bary") => cmd_bary(&args),
         Some("info") => cmd_info(&args),
@@ -57,7 +62,8 @@ fn print_usage() {
          commands:\n\
          \x20 solve    1D GW between random distributions (--n, --k, --eps, --backend, --lowrank-tol, --seed, --threads)\n\
          \x20 solve2d  2D GW on an n×n grid (--side, --k, --eps, --backend, --seed, --threads)\n\
-         \x20 serve    run the coordinator on a synthetic workload (--jobs, --workers, --shards, --threads, --backend, --lowrank-tol, --pjrt)\n\
+         \x20 solve3d  3D GW on an n×n×n grid (--side, --k, --eps, --backend, --seed, --threads)\n\
+         \x20 serve    run the coordinator on a synthetic workload (--jobs, --family 1d|3d|mixed, --workers, --shards, --threads, --backend, --lowrank-tol, --pjrt)\n\
          \x20 bary     1D GW barycenter demo (--inputs, --n)\n\
          \x20 info     platform + artifact registry summary (--artifacts DIR)"
     );
@@ -153,6 +159,35 @@ fn cmd_solve_2d(args: &Args) -> fgc_gw::Result<()> {
     Ok(())
 }
 
+fn cmd_solve_3d(args: &Args) -> fgc_gw::Result<()> {
+    let side = args.get_or("side", 6usize)?;
+    let k = args.get_or("k", 1u32)?;
+    let eps = args.get_or("eps", 4e-3)?;
+    let seed = args.get_or("seed", 7u64)?;
+    let threads = args.get_or("threads", 1usize)?;
+    let kind = backend(args)?;
+    let mut rng = Rng::seeded(seed);
+    let u = fgc_gw::data::random_distribution_3d(&mut rng, side);
+    let v = fgc_gw::data::random_distribution_3d(&mut rng, side);
+    let solver = apply_lowrank_tol(
+        EntropicGw::grid_3d(
+            side,
+            side,
+            k,
+            GwConfig { epsilon: eps, threads, ..GwConfig::default() },
+        ),
+        args,
+    )?;
+    let sol = solver.solve(&u, &v, kind)?;
+    println!(
+        "GW²={:.6e}  N={side}³={} k={k} ε={eps} backend={kind}  time={:?}",
+        sol.objective,
+        side * side * side,
+        sol.total_time
+    );
+    Ok(())
+}
+
 fn cmd_serve(args: &Args) -> fgc_gw::Result<()> {
     let mut cfg = CoordinatorConfig::default();
     if let Some(path) = args.get("config") {
@@ -202,18 +237,46 @@ fn cmd_serve(args: &Args) -> fgc_gw::Result<()> {
     let n = args.get_or("n", 128usize)?;
     let eps = args.get_or("eps", 2e-3)?;
     let seed = args.get_or("seed", 11u64)?;
+    let family = args.get("family").unwrap_or("1d").to_string();
+    if !matches!(family.as_str(), "1d" | "3d" | "mixed") {
+        return Err(fgc_gw::Error::Config(format!(
+            "unknown family `{family}` (expected 1d|3d|mixed)"
+        )));
+    }
 
     println!("starting coordinator: {cfg:?}");
     let coord = Coordinator::start(cfg)?;
     let mut rng = Rng::seeded(seed);
+    // Pre-built shared pieces for the non-1D families: a 3D side from
+    // the requested N (≥ 2) and, for mixed jobs only, one O(n²) dense
+    // support (the other families never read it).
+    let side = (n as f64).cbrt().round().max(2.0) as usize;
+    let mixed_support = (family == "mixed")
+        .then(|| fgc_gw::grid::dense_dist_1d(&fgc_gw::grid::Grid1d::unit(n.max(2)), 2));
     let t0 = std::time::Instant::now();
     let rxs: Vec<_> = (0..jobs)
         .map(|_| {
-            let payload = JobPayload::Gw1d {
-                u: random_distribution(&mut rng, n),
-                v: random_distribution(&mut rng, n),
-                k: 1,
-                epsilon: eps,
+            let payload = match family.as_str() {
+                "3d" => JobPayload::Gw3d {
+                    n: side,
+                    u: fgc_gw::data::random_distribution_3d(&mut rng, side),
+                    v: fgc_gw::data::random_distribution_3d(&mut rng, side),
+                    k: 1,
+                    epsilon: eps,
+                },
+                "mixed" => JobPayload::gw_mixed(
+                    mixed_support.clone().expect("built for the mixed family"),
+                    fgc_gw::gw::Geometry::grid_3d_unit(side, 1),
+                    random_distribution(&mut rng, n.max(2)),
+                    fgc_gw::data::random_distribution_3d(&mut rng, side),
+                    eps,
+                ),
+                _ => JobPayload::Gw1d {
+                    u: random_distribution(&mut rng, n),
+                    v: random_distribution(&mut rng, n),
+                    k: 1,
+                    epsilon: eps,
+                },
             };
             coord.submit(payload).map(|(_, rx)| rx)
         })

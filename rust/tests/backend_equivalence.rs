@@ -182,6 +182,63 @@ fn prop_2d_and_mixed_backends_agree() {
     );
 }
 
+/// 3D-grid and mixed 3D pairs agree across backends and thread
+/// budgets — the shapes the separable fgc engine newly accelerates
+/// (grid3d×grid3d, dense×grid3d, grid3d×dense, mixed 1D×3D and 2D×3D)
+/// against the dense baseline.
+#[test]
+fn prop_3d_and_mixed_backends_agree() {
+    check_prop(
+        "entropic-3d-mixed-backend-agreement",
+        3,
+        0xBE09,
+        |rng| {
+            let m = 8 + rng.below(5) as usize;
+            let seed = rng.below(u32::MAX as u64);
+            (m, seed)
+        },
+        |&(m, seed)| {
+            let grid3 = Geometry::grid_3d_unit(2, 1); // 8 points
+            let grid2 = Geometry::grid_2d_unit(3, 1);
+            let grid1 = Geometry::grid_1d_unit(m, 1);
+            let dense = Geometry::Dense(dense_dist_1d(&Grid1d::unit(m), 2));
+            let cases = [
+                (grid3.clone(), grid3.clone()),
+                (dense.clone(), grid3.clone()),
+                (grid3.clone(), dense.clone()),
+                (grid1.clone(), grid3.clone()),
+                (grid2.clone(), grid3.clone()),
+            ];
+            for (gx, gy) in cases {
+                let (nx, ny) = (gx.len(), gy.len());
+                let mut rng = Rng::seeded(seed);
+                let (u, v) = dists(&mut rng, nx, ny);
+                let cfg = |threads: usize| GwConfig {
+                    epsilon: 0.05,
+                    ..gw_cfg(threads)
+                };
+                let baseline = EntropicGw::new(gx.clone(), gy.clone(), cfg(1))
+                    .solve(&u, &v, GradientKind::Naive)
+                    .map_err(|e| e.to_string())?;
+                for kind in ALL_KINDS {
+                    for threads in THREADS {
+                        let sol = EntropicGw::new(gx.clone(), gy.clone(), cfg(threads))
+                            .solve(&u, &v, kind)
+                            .map_err(|e| e.to_string())?;
+                        let d = frobenius_diff(&sol.plan, &baseline.plan).unwrap();
+                        if d > 1e-8 {
+                            return Err(format!(
+                                "{kind} threads={threads} {nx}x{ny}: ‖ΔΓ‖_F = {d:e}"
+                            ));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
 /// The unbalanced solver agrees across backends and thread budgets.
 #[test]
 fn prop_ugw_backends_agree() {

@@ -32,15 +32,17 @@ fn random_plans(rng: &mut Rng, b: usize, m: usize, n: usize) -> Vec<Mat> {
 }
 
 /// Geometry pairs covering every dispatch arm the backends have:
-/// grid×grid in 1D and 2D (scan paths), dense×dense (dense/factored
-/// paths), the mixed barycenter shapes (dense × 1D or 2D grid, either
-/// order), and mixed-dimension 1D×2D grid pairs. 2D sides derive a
-/// small grid side from the requested size, so `(M, N)` must be read
-/// back off the returned geometries.
+/// grid×grid in 1D, 2D and 3D (scan paths), dense×dense
+/// (dense/factored paths), the mixed barycenter shapes (dense × grid
+/// of any dimension, either order), and mixed-dimension grid pairs
+/// (1D×2D, 1D×3D, 2D×3D). 2D/3D sides derive a small grid side from
+/// the requested size, so `(M, N)` must be read back off the returned
+/// geometries.
 fn geometry_pair(which: usize, m: usize, n: usize, k: u32) -> (Geometry, Geometry) {
     let sx = 3 + m % 3; // 2D side lengths 3..=5 (9..=25 points)
     let sy = 3 + n % 3;
-    match which % 7 {
+    let s3 = 2 + n % 2; // 3D side lengths 2..=3 (8..=27 points)
+    match which % 10 {
         0 => (Geometry::grid_1d_unit(m, k), Geometry::grid_1d_unit(n, k)),
         1 => (
             // k+1 keeps the dense side numerically low-rank for k=1
@@ -62,7 +64,13 @@ fn geometry_pair(which: usize, m: usize, n: usize, k: u32) -> (Geometry, Geometr
             Geometry::grid_2d_unit(sx, k),
             Geometry::Dense(dense_dist_1d(&Grid1d::unit(n), 2)),
         ),
-        _ => (Geometry::grid_1d_unit(m, k), Geometry::grid_2d_unit(sy, k)),
+        6 => (Geometry::grid_1d_unit(m, k), Geometry::grid_2d_unit(sy, k)),
+        7 => (Geometry::grid_3d_unit(2, k), Geometry::grid_3d_unit(s3, k)),
+        8 => (
+            Geometry::Dense(dense_dist_1d(&Grid1d::unit(m), 2)),
+            Geometry::grid_3d_unit(s3, k),
+        ),
+        _ => (Geometry::grid_2d_unit(sx, k), Geometry::grid_3d_unit(s3, k)),
     }
 }
 
@@ -77,7 +85,7 @@ fn prop_apply_batch_is_bitwise_sequential_apply() {
             let n = 5 + rng.below(16) as usize;
             let k = 1 + rng.below(2) as u32;
             let b = 2 + rng.below(4) as usize;
-            let which = rng.below(7) as usize;
+            let which = rng.below(10) as usize;
             let seed = rng.below(u32::MAX as u64);
             (m, n, k, b, which, seed)
         },
@@ -126,8 +134,9 @@ fn prop_apply_batch_is_bitwise_sequential_apply() {
     );
 }
 
-/// The newly separable shapes (grid2d×grid2d, dense×grid2d and mixed
-/// 1D×2D) solve-batch bit-for-bit too, for every backend.
+/// The separable shapes beyond plain 1D (grid2d×grid2d, grid3d×grid3d,
+/// dense×grid2d/3d and mixed-dimension pairs) solve-batch bit-for-bit
+/// too, for every backend.
 #[test]
 fn mixed_and_2d_solve_batch_is_bitwise_sequential() {
     let cfg = GwConfig {
@@ -139,6 +148,7 @@ fn mixed_and_2d_solve_batch_is_bitwise_sequential() {
         threads: 1,
     };
     let g2 = Geometry::grid_2d_unit(3, 1); // 9 points
+    let g3 = Geometry::grid_3d_unit(2, 1); // 8 points
     let dn = Geometry::Dense(dense_dist_1d(&Grid1d::unit(8), 2));
     let g1 = Geometry::grid_1d_unit(10, 1);
     for (gx, gy) in [
@@ -146,6 +156,10 @@ fn mixed_and_2d_solve_batch_is_bitwise_sequential() {
         (dn.clone(), g2.clone()),
         (g2.clone(), dn.clone()),
         (g1.clone(), g2.clone()),
+        (g3.clone(), g3.clone()),
+        (dn.clone(), g3.clone()),
+        (g1.clone(), g3.clone()),
+        (g2.clone(), g3.clone()),
     ] {
         let (m, n) = (gx.len(), gy.len());
         let mut rng = Rng::seeded(0xBA7E);

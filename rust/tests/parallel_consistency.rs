@@ -173,4 +173,22 @@ fn end_to_end_solve_matches_serial_across_threads() {
         let d = frobenius_diff(&sol.plan, &serial.plan).unwrap();
         assert!(d < 1e-12, "2D threads={threads}: {d:e}");
     }
+
+    // 3D (the multinomial triple-scan pipeline's parallel passes).
+    let side3 = 3;
+    let n3 = side3 * side3 * side3;
+    let mut u3: Vec<f64> = (0..n3).map(|_| 0.1 + rng.uniform()).collect();
+    let mut v3: Vec<f64> = (0..n3).map(|_| 0.1 + rng.uniform()).collect();
+    fgc_gw::linalg::normalize_l1(&mut u3).unwrap();
+    fgc_gw::linalg::normalize_l1(&mut v3).unwrap();
+    let serial = EntropicGw::grid_3d(side3, side3, 1, cfg2(1))
+        .solve(&u3, &v3, GradientKind::Fgc)
+        .unwrap();
+    for threads in THREAD_COUNTS {
+        let sol = EntropicGw::grid_3d(side3, side3, 1, cfg2(threads))
+            .solve(&u3, &v3, GradientKind::Fgc)
+            .unwrap();
+        let d = frobenius_diff(&sol.plan, &serial.plan).unwrap();
+        assert!(d < 1e-12, "3D threads={threads}: {d:e}");
+    }
 }

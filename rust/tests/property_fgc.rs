@@ -8,7 +8,7 @@
 #![allow(clippy::needless_range_loop, clippy::too_many_arguments)]
 
 use fgc_gw::fgc::naive::dxgdy_dense;
-use fgc_gw::grid::{dense_dist_1d, dense_dist_2d, Grid1d, Grid2d};
+use fgc_gw::grid::{dense_dist_1d, dense_dist_2d, dense_dist_3d, Grid1d, Grid2d, Grid3d};
 use fgc_gw::gw::{EntropicGw, Geometry, GradientKind, GwConfig, PairOperator};
 use fgc_gw::linalg::{frobenius_diff, frobenius_norm, matmul, normalize_l1, Mat};
 use fgc_gw::prng::Rng;
@@ -92,6 +92,126 @@ fn prop_fgc2d_matches_dense() {
             } else {
                 Err(format!("relative diff {d:.3e}"))
             }
+        },
+    );
+}
+
+/// FGC 3D gradient product vs dense matmuls over random sides,
+/// spacings and exponents — grid3d×grid3d pairs through the separable
+/// engine (`PairOperator` fgc path) against the `dense_dist_3d`
+/// oracle.
+#[test]
+fn prop_fgc3d_matches_dense() {
+    check_prop(
+        "fgc3d-vs-dense",
+        10,
+        0xF6C3,
+        |rng| {
+            let nx = 2 + rng.below(2) as usize; // sides 2..=3 (8 / 27 pts)
+            let ny = 2 + rng.below(2) as usize;
+            let k = 1 + rng.below(2) as u32;
+            let hx = rng.uniform_in(0.05, 1.5);
+            let hy = rng.uniform_in(0.05, 1.5);
+            let gamma = Mat::from_fn(nx * nx * nx, ny * ny * ny, |_, _| rng.uniform() - 0.3);
+            (nx, ny, k, hx, hy, gamma)
+        },
+        |(nx, ny, k, hx, hy, gamma)| {
+            let gx = Geometry::Grid3d {
+                grid: Grid3d::new(*nx, *hx),
+                k: *k,
+            };
+            let gy = Geometry::Grid3d {
+                grid: Grid3d::new(*ny, *hy),
+                k: *k,
+            };
+            let mut fast = PairOperator::new(gx.clone(), gy.clone(), GradientKind::Fgc).unwrap();
+            let mut out = Mat::zeros(nx * nx * nx, ny * ny * ny);
+            fast.dxgdy(gamma, &mut out).unwrap();
+            let oracle = dxgdy_dense(&gx.dense(), &gy.dense(), gamma).unwrap();
+            let scale = frobenius_norm(&oracle).max(1e-12);
+            let d = frobenius_diff(&out, &oracle).unwrap() / scale;
+            if d < 1e-11 {
+                Ok(())
+            } else {
+                Err(format!("relative diff {d:.3e}"))
+            }
+        },
+    );
+}
+
+/// Mixed pairs with a 3D side (dense×grid3d, 1D×3D, 2D×3D, either
+/// order) match the dense oracle through the separable fgc path.
+#[test]
+fn prop_fgc3d_mixed_pairs_match_dense() {
+    check_prop(
+        "fgc3d-mixed-vs-dense",
+        8,
+        0xF6C4,
+        |rng| {
+            let m = 5 + rng.below(8) as usize;
+            let which = rng.below(6) as usize;
+            let seed = rng.below(u32::MAX as u64);
+            (m, which, seed)
+        },
+        |&(m, which, seed)| {
+            let g3 = Geometry::grid_3d_unit(2, 1);
+            let (gx, gy) = match which {
+                0 => (Geometry::Dense(dense_dist_1d(&Grid1d::unit(m), 2)), g3),
+                1 => (g3, Geometry::Dense(dense_dist_1d(&Grid1d::unit(m), 2))),
+                2 => (Geometry::grid_1d_unit(m, 1), g3),
+                3 => (g3, Geometry::grid_1d_unit(m, 1)),
+                4 => (Geometry::grid_2d_unit(3, 1), g3),
+                _ => (g3, Geometry::grid_2d_unit(3, 1)),
+            };
+            let (nx, ny) = (gx.len(), gy.len());
+            let mut rng = Rng::seeded(seed);
+            let gamma = Mat::from_fn(nx, ny, |_, _| rng.uniform() - 0.4);
+            let mut fast = PairOperator::new(gx.clone(), gy.clone(), GradientKind::Fgc)
+                .map_err(|e| e.to_string())?;
+            let mut out = Mat::zeros(nx, ny);
+            fast.dxgdy(&gamma, &mut out).map_err(|e| e.to_string())?;
+            let oracle = dxgdy_dense(&gx.dense(), &gy.dense(), &gamma).unwrap();
+            let scale = frobenius_norm(&oracle).max(1e-12);
+            let d = frobenius_diff(&out, &oracle).unwrap() / scale;
+            if d < 1e-11 {
+                Ok(())
+            } else {
+                Err(format!("which={which}: relative diff {d:.3e}"))
+            }
+        },
+    );
+}
+
+/// The 3D dense builder agrees with a literal triple loop (guards the
+/// grid definition the 3D stack rests on).
+#[test]
+fn prop_dense_builder_3d_literal() {
+    check_prop(
+        "dense-builder-3d",
+        8,
+        0xD35,
+        |rng| {
+            let n = 2 + rng.below(2) as usize;
+            let k = rng.below(3) as u32 + 1;
+            let h = rng.uniform_in(0.01, 3.0);
+            (n, k, h)
+        },
+        |(n, k, h)| {
+            let g = Grid3d::new(*n, *h);
+            let d = dense_dist_3d(&g, *k);
+            for a in 0..g.len() {
+                for b in 0..g.len() {
+                    let (az, ay, ax) = g.coords(a);
+                    let (bz, by, bx) = g.coords(b);
+                    let man =
+                        (az.abs_diff(bz) + ay.abs_diff(by) + ax.abs_diff(bx)) as f64;
+                    let want = (*h * man).powi(*k as i32);
+                    if (d[(a, b)] - want).abs() > 1e-9 * (1.0 + want) {
+                        return Err(format!("3D ({a},{b}): {} vs {want}", d[(a, b)]));
+                    }
+                }
+            }
+            Ok(())
         },
     );
 }

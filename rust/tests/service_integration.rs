@@ -9,7 +9,12 @@
 use fgc_gw::coordinator::{
     BackendChoice, Coordinator, CoordinatorConfig, JobPayload, RoutingPolicy,
 };
-use fgc_gw::data::{feature_cost_series, random_distribution, two_hump_series, TwoHumpSpec};
+use fgc_gw::data::{
+    feature_cost_series, random_distribution, random_distribution_3d, two_hump_series,
+    TwoHumpSpec,
+};
+use fgc_gw::grid::{dense_dist_1d, Grid1d};
+use fgc_gw::gw::{EntropicGw, Geometry, GradientKind, GwConfig};
 use fgc_gw::prng::Rng;
 use std::path::PathBuf;
 use std::time::Duration;
@@ -89,6 +94,127 @@ fn mixed_workload_completes() {
     let m = coord.metrics();
     assert_eq!(m.completed, 6);
     assert_eq!(m.failed, 0);
+    coord.shutdown();
+}
+
+/// A mixed dense×grid payload (here: dense support × 3D volumetric
+/// grid) round-trips end-to-end: routed to the fgc backend, solved
+/// through the warm batch path, and bitwise equal to a direct
+/// library-level solve with the same configuration.
+#[test]
+fn mixed_payload_round_trips_end_to_end() {
+    let cfg = base_cfg();
+    let coord = Coordinator::start(cfg.clone()).unwrap();
+    let m = 10;
+    let grid = Geometry::grid_3d_unit(2, 1); // 8 points
+    let dx = dense_dist_1d(&Grid1d::unit(m), 2);
+    let mut rng = Rng::seeded(81);
+    let u = random_distribution(&mut rng, m);
+    let v = random_distribution_3d(&mut rng, 2);
+    let eps = 0.05;
+    let payload = JobPayload::gw_mixed(dx.clone(), grid.clone(), u.clone(), v.clone(), eps);
+    let res = coord.submit_and_wait(payload).unwrap();
+    assert_eq!(res.backend, BackendChoice::NativeFgc, "mixed must route fgc");
+    let obj = res.objective.expect("mixed job must solve");
+    let plan = res.plan.expect("plan returned");
+    assert_eq!(plan.shape(), (m, 8));
+    // Direct solve with the coordinator's effective solver config.
+    let direct = EntropicGw::new(
+        Geometry::Dense(dx),
+        grid,
+        GwConfig {
+            epsilon: eps,
+            outer_iters: cfg.outer_iters,
+            sinkhorn_max_iters: cfg.sinkhorn_max_iters,
+            sinkhorn_tolerance: cfg.sinkhorn_tolerance,
+            sinkhorn_check_every: 10,
+            threads: cfg.solver_threads,
+        },
+    )
+    .solve(&u, &v, GradientKind::Fgc)
+    .unwrap();
+    assert_eq!(obj, direct.objective, "service solve drifted from library");
+    assert_eq!(plan.as_slice(), direct.plan.as_slice());
+    let metrics = coord.metrics();
+    assert_eq!(metrics.completed, 1);
+    assert_eq!(metrics.native_fgc, 1);
+    coord.shutdown();
+}
+
+/// A same-variant burst of mixed payloads executes warm (one build,
+/// everything after hits the cached workspace — the ≥90% acceptance
+/// bar), and a follow-up burst with a *different* dense support of the
+/// same shape stays warm through the in-place `swap_dense_x` rebind
+/// instead of rebuilding.
+#[test]
+fn mixed_same_variant_burst_is_mostly_warm_and_rebinds() {
+    let mut cfg = base_cfg();
+    cfg.native_workers = 1;
+    cfg.queue_capacity = 64;
+    cfg.submit_timeout = Duration::from_secs(10);
+    let coord = Coordinator::start(cfg).unwrap();
+    let m = 9;
+    let grid = Geometry::grid_2d_unit(3, 1); // 9 points
+    let dx0 = dense_dist_1d(&Grid1d::unit(m), 2);
+    let jobs = 24;
+    let submit_burst = |dx: &fgc_gw::linalg::Mat, seed0: u64, count: usize| {
+        let rxs: Vec<_> = (0..count)
+            .map(|i| {
+                let mut rng = Rng::seeded(seed0 + i as u64);
+                let payload = JobPayload::gw_mixed(
+                    dx.clone(),
+                    grid.clone(),
+                    random_distribution(&mut rng, m),
+                    random_distribution(&mut rng, 9),
+                    0.05,
+                );
+                coord.submit(payload).unwrap().1
+            })
+            .collect();
+        for rx in rxs {
+            let res = rx.recv().unwrap();
+            assert!(res.objective.is_ok(), "{:?}", res.objective);
+            assert_eq!(res.backend, BackendChoice::NativeFgc);
+        }
+    };
+    submit_burst(&dx0, 700, jobs);
+    let snap = coord.metrics();
+    assert_eq!(snap.completed, jobs as u64);
+    assert_eq!(snap.warm_hits + snap.warm_misses, jobs as u64);
+    assert_eq!(snap.warm_misses, 1, "one build, then warm: {snap}");
+    assert!(
+        snap.warm_hit_rate() >= 0.9,
+        "warm-hit rate {:.2} below bar\n{snap}",
+        snap.warm_hit_rate()
+    );
+    // New dense support, same shape and grid side: the rebind path
+    // must keep the workspace warm (no new miss).
+    let dx1 = dx0.map(|x| 1.5 * x + 0.1);
+    submit_burst(&dx1, 900, 6);
+    let snap = coord.metrics();
+    assert_eq!(snap.completed, (jobs + 6) as u64);
+    assert_eq!(
+        snap.warm_misses, 1,
+        "changed dense support must rebind in place, not rebuild: {snap}"
+    );
+    coord.shutdown();
+}
+
+/// 3D grid payloads flow through the coordinator on the fgc backend.
+#[test]
+fn gw3d_payload_completes_on_fgc() {
+    let coord = Coordinator::start(base_cfg()).unwrap();
+    let mut rng = Rng::seeded(55);
+    let payload = JobPayload::Gw3d {
+        n: 2,
+        u: random_distribution_3d(&mut rng, 2),
+        v: random_distribution_3d(&mut rng, 2),
+        k: 1,
+        epsilon: 0.02,
+    };
+    let res = coord.submit_and_wait(payload).unwrap();
+    assert!(res.objective.is_ok(), "{:?}", res.objective);
+    assert_eq!(res.backend, BackendChoice::NativeFgc);
     coord.shutdown();
 }
 
