@@ -100,6 +100,7 @@ mod tests {
             },
             backend,
             submitted_at: Instant::now(),
+            options: super::super::JobOptions::default(),
         }
     }
 

@@ -1,0 +1,115 @@
+//! Deterministic fault-injection scripts (feature `fault-injection`).
+//!
+//! A [`FaultScript`] is a shared table of scripted faults keyed by
+//! [`JobId`]. Job ids are assigned sequentially from 1 in submission
+//! order, so a test can script faults *before* submitting anything and
+//! still hit exactly the jobs it means to — no timing, no randomness.
+//!
+//! Three fault arms, each with a per-job attempt budget:
+//! * **panic** — the worker panics while executing the job (exercises
+//!   `catch_unwind` isolation, in-place respawn, and quarantine).
+//! * **numeric** — the solve returns `Error::Numeric` (exercises the
+//!   degradation ladder and batch blast-radius containment).
+//! * **mispredict** — the Sinkhorn regime is forced to Gibbs even
+//!   where the log domain is required (exercises the solver's internal
+//!   Gibbs→log demotion under a wrong cached decision).
+//!
+//! Budgets are consumed one per execution attempt, so `panic_on(id, 2)`
+//! means "the first two attempts at job `id` panic, the third runs
+//! clean" — letting tests stage recovery-after-K-failures exactly.
+
+use super::job::JobId;
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+/// Scripted faults for a coordinator under test. Construct, script the
+/// arms, then hand an `Arc` of it to
+/// [`super::Coordinator::start_with_faults`].
+#[derive(Debug, Default)]
+pub struct FaultScript {
+    panics: Mutex<HashMap<JobId, u32>>,
+    numerics: Mutex<HashMap<JobId, u32>>,
+    mispredicts: Mutex<HashMap<JobId, u32>>,
+}
+
+impl FaultScript {
+    /// An empty script (no faults fire).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Script the next `attempts` execution attempts of job `id` to
+    /// panic inside the worker.
+    pub fn panic_on(&self, id: JobId, attempts: u32) {
+        self.panics.lock().unwrap().insert(id, attempts);
+    }
+
+    /// Script the next `attempts` execution attempts of job `id` to
+    /// fail with `Error::Numeric`.
+    pub fn numeric_on(&self, id: JobId, attempts: u32) {
+        self.numerics.lock().unwrap().insert(id, attempts);
+    }
+
+    /// Script the next `attempts` execution attempts of job `id` to
+    /// run with the Sinkhorn regime forced to Gibbs (a deliberate
+    /// misprediction the solver must recover from).
+    pub fn mispredict_on(&self, id: JobId, attempts: u32) {
+        self.mispredicts.lock().unwrap().insert(id, attempts);
+    }
+
+    pub(crate) fn take_panic(&self, id: JobId) -> bool {
+        Self::take(&self.panics, id)
+    }
+
+    pub(crate) fn take_numeric(&self, id: JobId) -> bool {
+        Self::take(&self.numerics, id)
+    }
+
+    pub(crate) fn take_mispredict(&self, id: JobId) -> bool {
+        Self::take(&self.mispredicts, id)
+    }
+
+    /// Consume one attempt from an arm's budget for `id`; true while
+    /// the budget was positive.
+    fn take(arm: &Mutex<HashMap<JobId, u32>>, id: JobId) -> bool {
+        let mut map = arm.lock().unwrap();
+        match map.get_mut(&id) {
+            Some(left) if *left > 0 => {
+                *left -= 1;
+                if *left == 0 {
+                    map.remove(&id);
+                }
+                true
+            }
+            _ => false,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn budgets_are_consumed_per_attempt() {
+        let s = FaultScript::new();
+        s.panic_on(3, 2);
+        s.numeric_on(4, 1);
+        assert!(s.take_panic(3));
+        assert!(s.take_panic(3));
+        assert!(!s.take_panic(3), "budget of 2 exhausted");
+        assert!(!s.take_panic(4), "arms are independent");
+        assert!(s.take_numeric(4));
+        assert!(!s.take_numeric(4));
+        assert!(!s.take_mispredict(3), "unscripted arm never fires");
+    }
+
+    #[test]
+    fn rescripting_replaces_the_budget() {
+        let s = FaultScript::new();
+        s.mispredict_on(7, 1);
+        assert!(s.take_mispredict(7));
+        s.mispredict_on(7, 1);
+        assert!(s.take_mispredict(7), "a fresh budget re-arms the fault");
+    }
+}

@@ -440,6 +440,33 @@ impl std::fmt::Display for BackendChoice {
     }
 }
 
+/// Per-job serving options: wall-clock deadline and retry budget.
+///
+/// Threaded through `submit`/`submit_and_wait` into [`JobRequest`],
+/// enforced at admission (deadline pressure maps onto the shard shed
+/// budget), at dequeue (expired jobs get a terminal
+/// `Error::Rejected`-style result instead of worker time), and between
+/// outer iterations of a solo solve.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct JobOptions {
+    /// Wall-clock budget measured from submission; `None` = no
+    /// deadline (the job may queue and solve indefinitely).
+    pub deadline: Option<Duration>,
+    /// Maximum climbs of the numeric degradation ladder (log-domain
+    /// retry → ε·2 annealed retry → naive-backend fallback) before a
+    /// numeric failure is returned as-is. `0` fails fast.
+    pub max_retries: u32,
+}
+
+impl Default for JobOptions {
+    fn default() -> Self {
+        JobOptions {
+            deadline: None,
+            max_retries: 3,
+        }
+    }
+}
+
 /// An enqueued job.
 #[derive(Clone, Debug)]
 pub struct JobRequest {
@@ -451,6 +478,23 @@ pub struct JobRequest {
     pub backend: BackendChoice,
     /// Enqueue timestamp (for queue-time accounting).
     pub submitted_at: Instant,
+    /// Deadline/retry options captured at submit time.
+    pub options: JobOptions,
+}
+
+impl JobRequest {
+    /// The instant at which this job's deadline passes, if it has one.
+    pub fn deadline_instant(&self) -> Option<Instant> {
+        self.options.deadline.map(|d| self.submitted_at + d)
+    }
+
+    /// True iff the job carries a deadline that has already passed.
+    pub fn expired(&self) -> bool {
+        match self.options.deadline {
+            Some(d) => self.submitted_at.elapsed() >= d,
+            None => false,
+        }
+    }
 }
 
 /// Completed-job report sent back to the submitter.
@@ -478,6 +522,34 @@ mod tests {
 
     fn uniform(n: usize) -> Vec<f64> {
         vec![1.0 / n as f64; n]
+    }
+
+    #[test]
+    fn job_options_deadline_expiry() {
+        let req = JobRequest {
+            id: 1,
+            payload: JobPayload::Gw1d {
+                u: uniform(4),
+                v: uniform(4),
+                k: 1,
+                epsilon: 0.01,
+            },
+            backend: BackendChoice::NativeFgc,
+            submitted_at: Instant::now(),
+            options: JobOptions::default(),
+        };
+        // No deadline: never expires, no deadline instant.
+        assert!(!req.expired());
+        assert!(req.deadline_instant().is_none());
+        // Zero deadline: expired on arrival.
+        let mut zero = req.clone();
+        zero.options.deadline = Some(Duration::ZERO);
+        assert!(zero.expired());
+        assert_eq!(zero.deadline_instant(), Some(zero.submitted_at));
+        // Generous deadline: live.
+        let mut live = req;
+        live.options.deadline = Some(Duration::from_secs(3600));
+        assert!(!live.expired());
     }
 
     #[test]

@@ -30,6 +30,27 @@ pub struct ServiceMetrics {
     /// had work, but far less than the shard served instead). A
     /// subset of `steals`.
     sheds: AtomicU64,
+    /// Worker panics caught by the isolation layer (`catch_unwind`).
+    panics: AtomicU64,
+    /// Worker solver-state respawns after a caught panic (the thread
+    /// survives; its warm/executor state is rebuilt in place).
+    respawns: AtomicU64,
+    /// Degradation-ladder rung 1: forced log-domain regime retries.
+    retries_regime: AtomicU64,
+    /// Degradation-ladder rung 2: ε·2 annealed retries.
+    retries_anneal: AtomicU64,
+    /// Degradation-ladder rung 3: lowrank→naive backend fallbacks.
+    retries_backend: AtomicU64,
+    /// Jobs shed because their deadline could not be met (expired at
+    /// admission/dequeue/mid-recovery, or admission under pressure).
+    deadline_sheds: AtomicU64,
+    /// Jobs quarantined after repeatedly panicking the worker.
+    quarantines: AtomicU64,
+    /// Fused batches split for blast-radius containment (members
+    /// re-executed solo after a co-batched failure).
+    batch_splits: AtomicU64,
+    /// Results that could not be delivered (receiver dropped/missing).
+    lost_results: AtomicU64,
     /// Completed-job latencies in microseconds (queue + solve).
     latencies_us: Mutex<Vec<u64>>,
     solve_us_total: AtomicU64,
@@ -73,6 +94,52 @@ impl ServiceMetrics {
     /// steal it implies — see [`crate::coordinator::PIN_SHED_FACTOR`]).
     pub fn on_shed(&self) {
         self.sheds.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record a worker panic caught by the isolation layer.
+    pub fn on_panic(&self) {
+        self.panics.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record a worker solver-state respawn after a caught panic.
+    pub fn on_respawn(&self) {
+        self.respawns.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record a rung-1 retry (forced log-domain regime).
+    pub fn on_retry_regime(&self) {
+        self.retries_regime.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record a rung-2 retry (ε·2 anneal).
+    pub fn on_retry_anneal(&self) {
+        self.retries_anneal.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record a rung-3 retry (lowrank→naive backend fallback).
+    pub fn on_retry_backend(&self) {
+        self.retries_backend.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record a deadline shed (job dropped or cut short because its
+    /// deadline passed or could not be met under queue pressure).
+    pub fn on_deadline_shed(&self) {
+        self.deadline_sheds.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record a job quarantine (gave up after repeated panics).
+    pub fn on_quarantine(&self) {
+        self.quarantines.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record a fused-batch split for blast-radius containment.
+    pub fn on_batch_split(&self) {
+        self.batch_splits.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record an undeliverable result (receiver dropped or missing).
+    pub fn on_lost_result(&self) {
+        self.lost_results.fetch_add(1, Ordering::Relaxed);
     }
 
     /// Record a completion for the backend that ran the job.
@@ -120,6 +187,15 @@ impl ServiceMetrics {
             warm_misses: self.warm_misses.load(Ordering::Relaxed),
             steals: self.steals.load(Ordering::Relaxed),
             sheds: self.sheds.load(Ordering::Relaxed),
+            panics: self.panics.load(Ordering::Relaxed),
+            respawns: self.respawns.load(Ordering::Relaxed),
+            retries_regime: self.retries_regime.load(Ordering::Relaxed),
+            retries_anneal: self.retries_anneal.load(Ordering::Relaxed),
+            retries_backend: self.retries_backend.load(Ordering::Relaxed),
+            deadline_sheds: self.deadline_sheds.load(Ordering::Relaxed),
+            quarantines: self.quarantines.load(Ordering::Relaxed),
+            batch_splits: self.batch_splits.load(Ordering::Relaxed),
+            lost_results: self.lost_results.load(Ordering::Relaxed),
             shard_depths: Vec::new(),
             p50: pct(0.50),
             p90: pct(0.90),
@@ -164,6 +240,24 @@ pub struct MetricsSnapshot {
     /// Depth-aware pin sheds (a subset of `steals`: the pinned shard
     /// still had work but far less than the shard served instead).
     pub sheds: u64,
+    /// Worker panics caught by the isolation layer.
+    pub panics: u64,
+    /// Worker solver-state respawns after caught panics.
+    pub respawns: u64,
+    /// Rung-1 retries: forced log-domain regime.
+    pub retries_regime: u64,
+    /// Rung-2 retries: ε·2 anneal.
+    pub retries_anneal: u64,
+    /// Rung-3 retries: lowrank→naive backend fallback.
+    pub retries_backend: u64,
+    /// Jobs shed because their deadline passed or could not be met.
+    pub deadline_sheds: u64,
+    /// Jobs quarantined after repeatedly panicking the worker.
+    pub quarantines: u64,
+    /// Fused batches split for blast-radius containment.
+    pub batch_splits: u64,
+    /// Results dropped because the receiver went away.
+    pub lost_results: u64,
     /// Per-shard queue depth at snapshot time (filled by
     /// [`super::Coordinator::metrics`]; empty from a bare
     /// [`ServiceMetrics::snapshot`], which has no queue handle).
@@ -214,6 +308,20 @@ impl std::fmt::Display for MetricsSnapshot {
             self.steals,
             self.sheds,
             self.shard_depths
+        )?;
+        writeln!(
+            f,
+            "faults: panics={} respawns={} retries=regime:{}/anneal:{}/backend:{} \
+             deadline-sheds={} quarantines={} batch-splits={} lost-results={}",
+            self.panics,
+            self.respawns,
+            self.retries_regime,
+            self.retries_anneal,
+            self.retries_backend,
+            self.deadline_sheds,
+            self.quarantines,
+            self.batch_splits,
+            self.lost_results
         )?;
         write!(
             f,
@@ -299,6 +407,35 @@ mod tests {
         assert!(text.contains("warm-hits=9"), "{text}");
         assert!(text.contains("steals=2"), "{text}");
         assert!(text.contains("sheds=1"), "{text}");
+    }
+
+    #[test]
+    fn fault_counters_round_trip() {
+        let m = ServiceMetrics::new();
+        m.on_panic();
+        m.on_panic();
+        m.on_respawn();
+        m.on_retry_regime();
+        m.on_retry_anneal();
+        m.on_retry_backend();
+        m.on_deadline_shed();
+        m.on_deadline_shed();
+        m.on_deadline_shed();
+        m.on_quarantine();
+        m.on_batch_split();
+        m.on_lost_result();
+        let s = m.snapshot();
+        assert_eq!((s.panics, s.respawns), (2, 1));
+        assert_eq!(
+            (s.retries_regime, s.retries_anneal, s.retries_backend),
+            (1, 1, 1)
+        );
+        assert_eq!(s.deadline_sheds, 3);
+        assert_eq!((s.quarantines, s.batch_splits, s.lost_results), (1, 1, 1));
+        let text = s.to_string();
+        assert!(text.contains("panics=2"), "{text}");
+        assert!(text.contains("deadline-sheds=3"), "{text}");
+        assert!(text.contains("retries=regime:1/anneal:1/backend:1"), "{text}");
     }
 
     #[test]

@@ -18,6 +18,8 @@
 //! `Executor` when artifacts are enabled.
 
 mod batcher;
+#[cfg(feature = "fault-injection")]
+mod fault;
 mod job;
 mod metrics;
 mod queue;
@@ -26,8 +28,11 @@ mod service;
 mod shard;
 
 pub use batcher::{group_by_variant, group_for_execution, VariantKey};
+#[cfg(feature = "fault-injection")]
+pub use fault::FaultScript;
 pub use job::{
-    dense_fingerprint, mixed_fingerprint, BackendChoice, JobId, JobPayload, JobRequest, JobResult,
+    dense_fingerprint, mixed_fingerprint, BackendChoice, JobId, JobOptions, JobPayload, JobRequest,
+    JobResult,
 };
 pub use metrics::{MetricsSnapshot, ServiceMetrics};
 pub use queue::BoundedQueue;

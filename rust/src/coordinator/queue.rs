@@ -146,6 +146,17 @@ impl<T> BoundedQueue<T> {
         out
     }
 
+    /// Take everything queued right now without blocking. Used by
+    /// fail-fast shutdown to turn still-queued envelopes into terminal
+    /// results instead of silently dropping their channels.
+    pub fn drain_all(&self) -> Vec<T> {
+        let mut st = self.inner.q.lock().unwrap();
+        let out: Vec<T> = st.items.drain(..).collect();
+        drop(st);
+        self.inner.not_full.notify_all();
+        out
+    }
+
     /// Close: producers start failing, consumers drain then get `None`.
     pub fn close(&self) {
         let mut st = self.inner.q.lock().unwrap();
@@ -219,6 +230,17 @@ mod tests {
         assert_eq!(batch, vec![0, 1, 2]);
         assert_eq!(q.len(), 2);
         assert_eq!(q.pop_batch(10), vec![3, 4]);
+    }
+
+    #[test]
+    fn drain_all_empties_without_blocking() {
+        let q = BoundedQueue::new(4);
+        for i in 0..3 {
+            q.try_push(i).unwrap();
+        }
+        assert_eq!(q.drain_all(), vec![0, 1, 2]);
+        assert!(q.is_empty());
+        assert_eq!(q.drain_all(), Vec::<i32>::new());
     }
 
     #[test]

@@ -9,21 +9,40 @@
 //! in [`MetricsSnapshot`] make the effect observable). When a worker's
 //! shard runs dry it steals from the longest shard, so tail latency
 //! does not regress under a skewed variant mix.
+//!
+//! Failures are a steady-state condition here, not an edge case
+//! (entropic solvers are numerically fragile by construction), so the
+//! execution path is fault-tolerant end to end: worker job execution
+//! runs under `catch_unwind` (a panic respawns the worker's solver
+//! state in place and quarantines a job that keeps panicking), numeric
+//! failures climb a degradation ladder (forced log-domain regime →
+//! ε·2 anneal → naive-backend fallback for dense payloads), a failed
+//! member of a fused lockstep batch triggers a split so co-batched
+//! neighbors are re-executed solo instead of inheriting the failure,
+//! and per-job deadlines ([`JobOptions`]) are enforced at admission,
+//! at dequeue, and between outer iterations of a recovery solve.
+//! Every recovery path increments a [`MetricsSnapshot`] counter, and
+//! the `fault-injection` feature adds deterministic hooks
+//! ([`super::FaultScript`](crate::coordinator)) that script panics,
+//! numeric failures, and regime mispredictions per job id.
 
 use super::batcher::{group_for_execution, variant_key};
-use super::job::{BackendChoice, JobId, JobPayload, JobRequest, JobResult};
+use super::job::{BackendChoice, JobId, JobOptions, JobPayload, JobRequest, JobResult};
 use super::metrics::{MetricsSnapshot, ServiceMetrics};
 use super::queue::BoundedQueue;
 use super::router::{Router, RoutingPolicy};
-use super::shard::{shard_for, ShardedQueue};
+use super::shard::{shard_for, ShardedQueue, PIN_SHED_FACTOR};
 use crate::error::{Error, Result};
 use crate::gw::{
     BatchJob, EntropicGw, Geometry, GradientKind, GwBatchWorkspace, GwConfig, LowRankOptions,
 };
 use crate::linalg::Mat;
 use crate::runtime::{ArtifactRegistry, Executor};
+use crate::sinkhorn::Regime;
+use std::collections::HashMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -81,6 +100,14 @@ pub struct CoordinatorConfig {
     pub lowrank_tol: f64,
     /// How long `submit` may block under backpressure.
     pub submit_timeout: Duration,
+    /// Default per-job deadline applied by [`Coordinator::submit`]
+    /// (`None` = jobs never expire). Config key `service.deadline_ms`
+    /// (`0` = none), CLI `--deadline-ms`.
+    pub default_deadline: Option<Duration>,
+    /// Default retry budget for the numeric degradation ladder
+    /// (log-domain retry, ε·2 anneal, naive-backend fallback). Config
+    /// key `service.max_retries`, CLI `--max-retries`.
+    pub default_max_retries: u32,
 }
 
 impl Default for CoordinatorConfig {
@@ -99,6 +126,8 @@ impl Default for CoordinatorConfig {
             solver_threads: 1,
             lowrank_tol: 0.0,
             submit_timeout: Duration::from_millis(200),
+            default_deadline: None,
+            default_max_retries: 3,
         }
     }
 }
@@ -116,6 +145,53 @@ impl CoordinatorConfig {
 
 type Envelope = (JobRequest, mpsc::Sender<JobResult>);
 
+/// Always-compiled handle to the optional fault-injection script.
+/// Without the `fault-injection` feature this is an empty shell whose
+/// probes compile to constants — the production path pays nothing.
+#[derive(Clone, Default)]
+struct Faults {
+    #[cfg(feature = "fault-injection")]
+    script: Option<Arc<super::fault::FaultScript>>,
+}
+
+impl Faults {
+    /// Fire any scripted fault for one execution attempt of job `id`:
+    /// panics in place (scripted panic arm) or returns the scripted
+    /// numeric error. `Ok(())` when nothing is scripted.
+    fn fire(&self, id: JobId) -> Result<()> {
+        #[cfg(feature = "fault-injection")]
+        if let Some(script) = &self.script {
+            if script.take_panic(id) {
+                panic!("injected panic (job {id})");
+            }
+            if script.take_numeric(id) {
+                return Err(Error::Numeric(format!("injected numeric fault (job {id})")));
+            }
+        }
+        let _ = id;
+        Ok(())
+    }
+
+    /// True when this attempt of job `id` is scripted to run with a
+    /// deliberately mispredicted (forced-Gibbs) Sinkhorn regime.
+    fn mispredict(&self, id: JobId) -> bool {
+        #[cfg(feature = "fault-injection")]
+        if let Some(script) = &self.script {
+            return script.take_mispredict(id);
+        }
+        let _ = id;
+        false
+    }
+}
+
+/// Everything a worker loop needs besides its queue.
+struct WorkerCtx {
+    metrics: Arc<ServiceMetrics>,
+    cfg: CoordinatorConfig,
+    draining: Arc<AtomicBool>,
+    faults: Faults,
+}
+
 /// Running service handle.
 pub struct Coordinator {
     cfg: CoordinatorConfig,
@@ -126,11 +202,33 @@ pub struct Coordinator {
     metrics: Arc<ServiceMetrics>,
     workers: Vec<JoinHandle<()>>,
     next_id: AtomicU64,
+    draining: Arc<AtomicBool>,
 }
 
 impl Coordinator {
     /// Load artifacts, spawn workers, return the handle.
     pub fn start(cfg: CoordinatorConfig) -> Result<Self> {
+        Self::start_inner(cfg, Faults::default())
+    }
+
+    /// [`Coordinator::start`] with a deterministic fault script wired
+    /// into every worker (feature `fault-injection`). Job ids are
+    /// assigned sequentially from 1 in submission order, so a test can
+    /// script faults for jobs it has not submitted yet.
+    #[cfg(feature = "fault-injection")]
+    pub fn start_with_faults(
+        cfg: CoordinatorConfig,
+        script: Arc<super::fault::FaultScript>,
+    ) -> Result<Self> {
+        Self::start_inner(
+            cfg,
+            Faults {
+                script: Some(script),
+            },
+        )
+    }
+
+    fn start_inner(cfg: CoordinatorConfig, faults: Faults) -> Result<Self> {
         let registry = ArtifactRegistry::load(&cfg.artifacts_dir)?;
         let effective_policy = if cfg.enable_pjrt {
             cfg.policy
@@ -147,16 +245,21 @@ impl Coordinator {
         let native_q: ShardedQueue<Envelope> =
             ShardedQueue::new(shard_count, per_shard, cfg.queue_capacity);
         let metrics = Arc::new(ServiceMetrics::new());
+        let draining = Arc::new(AtomicBool::new(false));
         let mut workers = Vec::new();
 
         for wid in 0..cfg.native_workers.max(1) {
             let q = native_q.clone();
-            let m = Arc::clone(&metrics);
-            let wcfg = cfg.clone();
+            let ctx = WorkerCtx {
+                metrics: Arc::clone(&metrics),
+                cfg: cfg.clone(),
+                draining: Arc::clone(&draining),
+                faults: faults.clone(),
+            };
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("fgcgw-native-{wid}"))
-                    .spawn(move || native_worker_loop(q, m, wcfg))
+                    .spawn(move || native_worker_loop(q, ctx))
                     .map_err(|e| Error::Runtime(format!("spawn worker: {e}")))?,
             );
         }
@@ -164,13 +267,17 @@ impl Coordinator {
         let pjrt_q = if cfg.enable_pjrt {
             let q: BoundedQueue<Envelope> = BoundedQueue::new(cfg.queue_capacity);
             let q2 = q.clone();
-            let m = Arc::clone(&metrics);
-            let wcfg = cfg.clone();
+            let ctx = WorkerCtx {
+                metrics: Arc::clone(&metrics),
+                cfg: cfg.clone(),
+                draining: Arc::clone(&draining),
+                faults: faults.clone(),
+            };
             let registry2 = router.registry().clone();
             workers.push(
                 std::thread::Builder::new()
                     .name("fgcgw-pjrt".into())
-                    .spawn(move || pjrt_worker_loop(q2, m, wcfg, registry2))
+                    .spawn(move || pjrt_worker_loop(q2, ctx, registry2))
                     .map_err(|e| Error::Runtime(format!("spawn pjrt worker: {e}")))?,
             );
             Some(q)
@@ -187,6 +294,7 @@ impl Coordinator {
             metrics,
             workers,
             next_id: AtomicU64::new(1),
+            draining,
         })
     }
 
@@ -200,10 +308,30 @@ impl Coordinator {
         self.shard_count
     }
 
-    /// Submit a job; returns its id and the result channel. Rejects on
-    /// invalid payloads and on backpressure timeout (per-shard or
-    /// global admission budget).
+    /// Submit a job with the configured default [`JobOptions`];
+    /// returns its id and the result channel. Rejects on invalid
+    /// payloads and on backpressure timeout (per-shard or global
+    /// admission budget).
     pub fn submit(&self, payload: JobPayload) -> Result<(JobId, mpsc::Receiver<JobResult>)> {
+        self.submit_with_options(
+            payload,
+            JobOptions {
+                deadline: self.cfg.default_deadline,
+                max_retries: self.cfg.default_max_retries,
+            },
+        )
+    }
+
+    /// [`Coordinator::submit`] with explicit per-job deadline/retry
+    /// options. A deadline the service already knows it cannot meet is
+    /// shed here at admission — deadline pressure maps onto the same
+    /// [`PIN_SHED_FACTOR`] depth budget the workers' pin shed uses —
+    /// rather than queueing the job past its expiry.
+    pub fn submit_with_options(
+        &self,
+        payload: JobPayload,
+        options: JobOptions,
+    ) -> Result<(JobId, mpsc::Receiver<JobResult>)> {
         if let Err(msg) = payload.validate() {
             self.metrics.on_reject();
             return Err(Error::Rejected(format!("validation: {msg}")));
@@ -216,14 +344,34 @@ impl Coordinator {
             payload,
             backend: backend.clone(),
             submitted_at: Instant::now(),
+            options,
         };
+        let use_pjrt = matches!(&backend, BackendChoice::Pjrt(_)) && self.pjrt_q.is_some();
+        let shard = if use_pjrt {
+            0
+        } else {
+            shard_for(&variant_key(&req), self.shard_count)
+        };
+        if let Some(deadline) = options.deadline {
+            let depth = if use_pjrt {
+                self.pjrt_q.as_ref().map_or(0, |q| q.len())
+            } else {
+                self.native_q.depths()[shard]
+            };
+            let lane_deep = depth >= PIN_SHED_FACTOR * self.cfg.batch_max.max(1);
+            if deadline.is_zero() || (lane_deep && deadline <= self.cfg.submit_timeout) {
+                self.metrics.on_deadline_shed();
+                self.metrics.on_reject();
+                return Err(Error::Rejected(format!(
+                    "deadline {deadline:?} cannot be met (lane depth {depth})"
+                )));
+            }
+        }
         let pushed = match (&backend, &self.pjrt_q) {
             (BackendChoice::Pjrt(_), Some(q)) => q.push_timeout((req, tx), self.cfg.submit_timeout),
-            _ => {
-                let shard = shard_for(&variant_key(&req), self.shard_count);
-                self.native_q
-                    .push_timeout(shard, (req, tx), self.cfg.submit_timeout)
-            }
+            _ => self
+                .native_q
+                .push_timeout(shard, (req, tx), self.cfg.submit_timeout),
         };
         match pushed {
             Ok(()) => {
@@ -244,6 +392,33 @@ impl Coordinator {
             .map_err(|_| Error::Runtime("worker dropped result channel".into()))
     }
 
+    /// Submit with `timeout` as the job's deadline and wait at most
+    /// that long (plus the submit backpressure budget as grace for a
+    /// solve already in flight when the deadline lapses). Unlike
+    /// [`Coordinator::submit_and_wait`], this can never block forever:
+    /// it returns the result — possibly a deadline-shed rejection — or
+    /// gives up with [`Error::Rejected`].
+    pub fn submit_and_wait_timeout(
+        &self,
+        payload: JobPayload,
+        timeout: Duration,
+    ) -> Result<JobResult> {
+        let options = JobOptions {
+            deadline: Some(timeout),
+            max_retries: self.cfg.default_max_retries,
+        };
+        let (_, rx) = self.submit_with_options(payload, options)?;
+        let wait = timeout.saturating_add(self.cfg.submit_timeout);
+        rx.recv_timeout(wait).map_err(|e| match e {
+            mpsc::RecvTimeoutError::Timeout => {
+                Error::Rejected(format!("no result within {wait:?}"))
+            }
+            mpsc::RecvTimeoutError::Disconnected => {
+                Error::Runtime("worker dropped result channel".into())
+            }
+        })
+    }
+
     /// Current metrics, including live per-shard queue depths.
     pub fn metrics(&self) -> MetricsSnapshot {
         let mut snap = self.metrics.snapshot();
@@ -251,14 +426,44 @@ impl Coordinator {
         snap
     }
 
-    /// Graceful shutdown: close queues, join workers.
+    /// Graceful shutdown: close queues and let the workers solve
+    /// everything already queued before joining them.
     pub fn shutdown(self) {
+        self.finish(false)
+    }
+
+    /// Fail-fast shutdown: jobs still queued are drained to terminal
+    /// [`Error::Rejected`] results instead of being solved, so no
+    /// caller is ever left holding a dead channel. Solves already in
+    /// flight still finish and deliver.
+    pub fn shutdown_now(self) {
+        self.finish(true)
+    }
+
+    fn finish(self, drain_fast: bool) {
+        if drain_fast {
+            self.draining.store(true, Ordering::SeqCst);
+        }
         self.native_q.close();
         if let Some(q) = &self.pjrt_q {
             q.close();
         }
         for w in self.workers {
             let _ = w.join();
+        }
+        // Belt and braces: workers drain their queues before exiting,
+        // so these sweeps are normally empty — but a result channel
+        // must never die silently, whatever path led here.
+        let mut leftovers = self.native_q.drain_all();
+        if let Some(q) = &self.pjrt_q {
+            leftovers.extend(q.drain_all());
+        }
+        for (req, tx) in leftovers {
+            let result = rejected_result(&req, "coordinator shutting down");
+            report(&self.metrics, &result);
+            if tx.send(result).is_err() {
+                self.metrics.on_lost_result();
+            }
         }
     }
 }
@@ -370,11 +575,7 @@ impl WarmCache {
     }
 }
 
-fn native_worker_loop(
-    q: ShardedQueue<Envelope>,
-    metrics: Arc<ServiceMetrics>,
-    cfg: CoordinatorConfig,
-) {
+fn native_worker_loop(q: ShardedQueue<Envelope>, ctx: WorkerCtx) {
     let mut pinned: Option<usize> = None;
     let mut cache = WarmCache::new();
     let mut streak = 0usize;
@@ -383,39 +584,72 @@ fn native_worker_loop(
         // longest other non-empty shard so a sustained hot variant
         // cannot starve jobs queued elsewhere.
         let rotate = streak >= PIN_STREAK_MAX;
-        let Some(batch) = q.pop_batch_pinned(&mut pinned, cfg.batch_max.max(1), rotate) else {
+        let Some(batch) = q.pop_batch_pinned(&mut pinned, ctx.cfg.batch_max.max(1), rotate) else {
             break;
         };
         if batch.shed {
             // Depth-aware pin expiry (a shed is also a steal below).
-            metrics.on_shed();
+            ctx.metrics.on_shed();
         }
         if batch.stolen {
-            metrics.on_steal();
+            ctx.metrics.on_steal();
             streak = 0;
         } else {
             streak = streak.saturating_add(1);
         }
         let (reqs, txs): (Vec<JobRequest>, Vec<mpsc::Sender<JobResult>>) =
             batch.items.into_iter().unzip();
-        let mut tx_by_id: std::collections::HashMap<JobId, mpsc::Sender<JobResult>> = reqs
-            .iter()
-            .map(|r| r.id)
-            .zip(txs)
-            .collect();
+        let mut tx_by_id: HashMap<JobId, mpsc::Sender<JobResult>> =
+            reqs.iter().map(|r| r.id).zip(txs).collect();
+        // Fail-fast drain: `shutdown_now` turns still-queued jobs into
+        // terminal rejections instead of burning solve time on them.
+        if ctx.draining.load(Ordering::SeqCst) {
+            for req in &reqs {
+                let result = rejected_result(req, "coordinator shutting down");
+                deliver(&mut tx_by_id, &ctx.metrics, result);
+            }
+            continue;
+        }
+        // Dequeue-side deadline enforcement: a job whose deadline
+        // lapsed while it queued is shed with a terminal result — it
+        // never costs solve time.
+        let (live, expired): (Vec<JobRequest>, Vec<JobRequest>) =
+            reqs.into_iter().partition(|r| !r.expired());
+        for req in expired {
+            ctx.metrics.on_deadline_shed();
+            let result = rejected_result(&req, "deadline expired in queue");
+            deliver(&mut tx_by_id, &ctx.metrics, result);
+        }
         // A shard is keyed by variant hash, so a popped batch is
         // overwhelmingly one variant already; the grouping both
         // handles hash collisions and splits on ε (a solver knob).
-        for (_variant, _eps, group) in group_for_execution(reqs) {
+        for (_variant, _eps, group) in group_for_execution(live) {
             for sub in split_same_geometry(group) {
-                let results = execute_group(&sub, &cfg, &mut cache, &metrics);
-                for result in results {
-                    let tx = tx_by_id.remove(&result.id).expect("sender registered");
-                    report(&metrics, &result);
-                    let _ = tx.send(result);
+                for result in execute_group_contained(&sub, &ctx, &mut cache) {
+                    deliver(&mut tx_by_id, &ctx.metrics, result);
                 }
             }
         }
+    }
+}
+
+/// Report and deliver one result. An undeliverable result — the
+/// caller dropped its receiver, or an id the batch never carried — is
+/// counted, never a panic: a caller walking away must not take the
+/// worker (and every co-batched job) down with it.
+fn deliver(
+    tx_by_id: &mut HashMap<JobId, mpsc::Sender<JobResult>>,
+    metrics: &ServiceMetrics,
+    result: JobResult,
+) {
+    report(metrics, &result);
+    match tx_by_id.remove(&result.id) {
+        Some(tx) => {
+            if tx.send(result).is_err() {
+                metrics.on_lost_result();
+            }
+        }
+        None => metrics.on_lost_result(),
     }
 }
 
@@ -490,12 +724,7 @@ fn split_same_geometry(jobs: Vec<JobRequest>) -> Vec<Vec<JobRequest>> {
     out
 }
 
-fn pjrt_worker_loop(
-    q: BoundedQueue<Envelope>,
-    metrics: Arc<ServiceMetrics>,
-    cfg: CoordinatorConfig,
-    registry: ArtifactRegistry,
-) {
+fn pjrt_worker_loop(q: BoundedQueue<Envelope>, ctx: WorkerCtx, registry: ArtifactRegistry) {
     let mut executor = match Executor::cpu() {
         Ok(e) => Some(e),
         Err(e) => {
@@ -504,34 +733,81 @@ fn pjrt_worker_loop(
         }
     };
     while let Some((req, tx)) = q.pop() {
-        let started = Instant::now();
-        let result = match (&req.backend, executor.as_mut()) {
-            (BackendChoice::Pjrt(name), Some(ex)) => {
-                match execute_pjrt(ex, &registry, name, &req) {
-                    Ok(r) => r,
-                    Err(e) => {
-                        // Artifact failure → native fallback keeps the
-                        // job alive; record the downgraded backend.
-                        eprintln!("[fgcgw] pjrt {name} failed ({e}); native fallback");
-                        let mut r = execute_native(&req, &cfg);
-                        r.backend = BackendChoice::NativeFgc;
+        let result = if ctx.draining.load(Ordering::SeqCst) {
+            // Fail-fast drain (`shutdown_now`).
+            rejected_result(&req, "coordinator shutting down")
+        } else if req.expired() {
+            ctx.metrics.on_deadline_shed();
+            rejected_result(&req, "deadline expired in queue")
+        } else {
+            let attempt = catch_unwind(AssertUnwindSafe(|| {
+                match (&req.backend, executor.as_mut()) {
+                    (BackendChoice::Pjrt(name), Some(ex)) => {
+                        match execute_pjrt(ex, &registry, name, &req) {
+                            Ok(r) => r,
+                            Err(e) => {
+                                // Artifact failure → native fallback
+                                // keeps the job alive; record the
+                                // downgraded backend.
+                                eprintln!("[fgcgw] pjrt {name} failed ({e}); native fallback");
+                                let mut r = execute_solo_with_recovery(
+                                    &req,
+                                    &ctx.cfg,
+                                    &ctx.metrics,
+                                    &ctx.faults,
+                                    Prior::None,
+                                );
+                                r.backend = BackendChoice::NativeFgc;
+                                r
+                            }
+                        }
+                    }
+                    _ => {
+                        // Executor unavailable: the job runs natively,
+                        // so the result (and the per-backend metrics)
+                        // must say so.
+                        let mut r = execute_solo_with_recovery(
+                            &req,
+                            &ctx.cfg,
+                            &ctx.metrics,
+                            &ctx.faults,
+                            Prior::None,
+                        );
+                        if matches!(req.backend, BackendChoice::Pjrt(_)) {
+                            r.backend = BackendChoice::NativeFgc;
+                        }
                         r
                     }
                 }
-            }
-            _ => {
-                // Executor unavailable: the job runs natively, so the
-                // result (and the per-backend metrics) must say so.
-                let mut r = execute_native(&req, &cfg);
-                if matches!(req.backend, BackendChoice::Pjrt(_)) {
-                    r.backend = BackendChoice::NativeFgc;
+            }));
+            match attempt {
+                Ok(r) => r,
+                Err(payload) => {
+                    // The worker thread survives the panic; the
+                    // executor's state across an unwound PJRT call may
+                    // not have — rebuild it in place.
+                    ctx.metrics.on_panic();
+                    executor = Executor::cpu().ok();
+                    ctx.metrics.on_respawn();
+                    JobResult {
+                        id: req.id,
+                        objective: Err(Error::Runtime(format!(
+                            "worker panic: {}",
+                            panic_message(payload)
+                        ))
+                        .to_string()),
+                        plan: None,
+                        backend: req.backend.clone(),
+                        queue_time: req.submitted_at.elapsed(),
+                        solve_time: Duration::ZERO,
+                    }
                 }
-                r
             }
         };
-        let _ = started;
-        report(&metrics, &result);
-        let _ = tx.send(result);
+        report(&ctx.metrics, &result);
+        if tx.send(result).is_err() {
+            ctx.metrics.on_lost_result();
+        }
     }
 }
 
@@ -586,7 +862,17 @@ fn ws_key(payload: &JobPayload, kind: GradientKind) -> WsKey {
 /// Build the solver for a payload (cache-miss path only: for dense
 /// payloads this clones the distance matrices into the geometry).
 fn build_solver(payload: &JobPayload, cfg: &CoordinatorConfig) -> EntropicGw {
-    let epsilon = payload.epsilon();
+    build_solver_with_epsilon(payload, cfg, payload.epsilon())
+}
+
+/// [`build_solver`] with an explicit ε — the anneal rung of the
+/// degradation ladder solves at ε·2, and derived knobs (the low-rank
+/// factorization tolerance) must follow the ε actually solved at.
+fn build_solver_with_epsilon(
+    payload: &JobPayload,
+    cfg: &CoordinatorConfig,
+    epsilon: f64,
+) -> EntropicGw {
     let solver = match payload {
         JobPayload::Gw1d { u, v, k, .. } | JobPayload::Fgw1d { u, v, k, .. } => {
             EntropicGw::grid_1d(u.len(), v.len(), *k, gw_cfg(cfg, epsilon))
@@ -637,102 +923,333 @@ fn batch_job(payload: &JobPayload) -> BatchJob<'_> {
     }
 }
 
-/// Execute one same-variant same-ε same-geometry group as a lockstep
-/// batch over the worker's warm workspace. Results are bit-for-bit
+/// One fused lockstep attempt at a same-variant same-ε same-geometry
+/// group over the worker's warm workspace. Results are bit-for-bit
 /// what independent per-job solves produce (the batch contract of
-/// [`EntropicGw::solve_batch_into`]).
-fn execute_group(
+/// [`EntropicGw::solve_batch_into`]). `Ok` only when the whole batch
+/// solved; any failure comes back as the typed error so
+/// [`execute_group_contained`] can recover instead of failing every
+/// member.
+fn execute_group_fused(
     reqs: &[JobRequest],
-    cfg: &CoordinatorConfig,
+    ctx: &WorkerCtx,
     cache: &mut WarmCache,
-    metrics: &ServiceMetrics,
-) -> Vec<JobResult> {
+) -> Result<Vec<JobResult>> {
     debug_assert!(!reqs.is_empty());
     let queue_times: Vec<Duration> = reqs.iter().map(|r| r.submitted_at.elapsed()).collect();
     let kind = reqs[0].backend.gradient_kind();
     let started = Instant::now();
-    let solved: Result<Vec<(f64, Mat)>> = (|| {
-        let head = &reqs[0].payload;
-        let key = ws_key(head, kind);
-        let (ws, warm) = cache.get_or_build(&key, head, cfg, kind, reqs.len())?;
-        let b = reqs.len() as u64;
-        if warm {
-            metrics.on_warm(b, 0);
-        } else {
-            metrics.on_warm(b - 1, 1);
-        }
-        let jobs: Vec<BatchJob> = reqs.iter().map(|r| batch_job(&r.payload)).collect();
-        // Warm path: solve against the workspace's own bound geometry
-        // — no solver construction, no dense-geometry clones.
-        let sols = ws.solve_batch(&gw_cfg(cfg, head.epsilon()), &jobs)?;
-        Ok(sols.into_iter().map(|s| (s.objective, s.plan)).collect())
-    })();
+    let head = &reqs[0].payload;
+    let key = ws_key(head, kind);
+    let (ws, warm) = cache.get_or_build(&key, head, &ctx.cfg, kind, reqs.len())?;
+    let b = reqs.len() as u64;
+    if warm {
+        ctx.metrics.on_warm(b, 0);
+    } else {
+        ctx.metrics.on_warm(b - 1, 1);
+    }
+    // Scripted faults: a member's panic/numeric arm fails this fused
+    // attempt (containment then isolates it); a scripted misprediction
+    // forces the batch onto the Gibbs regime regardless of the
+    // predictor, exercising the demote-and-retry path.
+    for req in reqs {
+        ctx.faults.fire(req.id)?;
+    }
+    if reqs.iter().any(|r| ctx.faults.mispredict(r.id)) {
+        ws.set_regime_override(Some(Regime::Gibbs));
+    }
+    let jobs: Vec<BatchJob> = reqs.iter().map(|r| batch_job(&r.payload)).collect();
+    // Warm path: solve against the workspace's own bound geometry
+    // — no solver construction, no dense-geometry clones.
+    let sols = ws.solve_batch(&gw_cfg(&ctx.cfg, head.epsilon()), &jobs)?;
     // Lockstep wall time is shared; report the per-job mean so the
     // latency accounting stays comparable with per-job execution.
     let solve_each = started.elapsed() / reqs.len().max(1) as u32;
-    match solved {
-        Ok(list) => reqs
-            .iter()
-            .zip(queue_times)
-            .zip(list)
-            .map(|((req, queue_time), (objective, plan))| JobResult {
-                id: req.id,
-                objective: Ok(objective),
-                plan: Some(plan),
-                backend: req.backend.clone(),
-                queue_time,
-                solve_time: solve_each,
-            })
-            .collect(),
-        Err(e) => {
-            let msg = e.to_string();
-            reqs.iter()
-                .zip(queue_times)
-                .map(|(req, queue_time)| JobResult {
-                    id: req.id,
-                    objective: Err(msg.clone()),
-                    plan: None,
-                    backend: req.backend.clone(),
-                    queue_time,
-                    solve_time: solve_each,
-                })
-                .collect()
+    Ok(reqs
+        .iter()
+        .zip(queue_times)
+        .zip(sols)
+        .map(|((req, queue_time), sol)| JobResult {
+            id: req.id,
+            objective: Ok(sol.objective),
+            plan: Some(sol.plan),
+            backend: req.backend.clone(),
+            queue_time,
+            solve_time: solve_each,
+        })
+        .collect())
+}
+
+/// Panic-isolated, blast-radius-contained execution of one group.
+///
+/// The fused warm-path attempt runs under `catch_unwind`; a panic
+/// respawns the worker's solver state in place (fresh warm cache — the
+/// thread itself never dies), and any failure of a multi-member batch
+/// splits it so every member is re-executed solo and no job inherits a
+/// co-batched neighbor's failure. Single jobs enter the solo recovery
+/// ladder directly with the failure as their prior.
+fn execute_group_contained(
+    reqs: &[JobRequest],
+    ctx: &WorkerCtx,
+    cache: &mut WarmCache,
+) -> Vec<JobResult> {
+    let attempt = catch_unwind(AssertUnwindSafe(|| execute_group_fused(reqs, ctx, cache)));
+    let prior = match attempt {
+        Ok(Ok(results)) => return results,
+        Ok(Err(e)) => match e {
+            Error::Numeric(_) => Prior::Numeric(e.to_string()),
+            other => Prior::Fatal(other.to_string()),
+        },
+        Err(payload) => {
+            // The worker thread survives the panic, but the warm
+            // workspaces it unwound through may hold torn state —
+            // rebuild the worker's solver state in place.
+            ctx.metrics.on_panic();
+            *cache = WarmCache::new();
+            ctx.metrics.on_respawn();
+            Prior::Panicked(panic_message(payload))
+        }
+    };
+    if reqs.len() == 1 {
+        return vec![execute_solo_with_recovery(
+            &reqs[0],
+            &ctx.cfg,
+            &ctx.metrics,
+            &ctx.faults,
+            prior,
+        )];
+    }
+    // Blast-radius containment: one member's failure must not fail its
+    // co-batched neighbors. Split the group and re-execute each member
+    // solo — the lockstep batch contract guarantees a survivor's solo
+    // result is bit-for-bit the result the batch would have produced.
+    ctx.metrics.on_batch_split();
+    reqs.iter()
+        .map(|req| {
+            execute_solo_with_recovery(req, &ctx.cfg, &ctx.metrics, &ctx.faults, Prior::None)
+        })
+        .collect()
+}
+
+/// What already happened to a job before it entered solo recovery.
+enum Prior {
+    /// Nothing — start with a clean attempt.
+    None,
+    /// A numeric failure: enter the degradation ladder immediately.
+    Numeric(String),
+    /// A deterministic non-numeric error — retrying cannot help.
+    Fatal(String),
+    /// A caught panic — counts toward the quarantine budget.
+    Panicked(String),
+}
+
+/// Panicking execution attempts a job gets (the fused batch attempt
+/// counts as one) before it is quarantined with a terminal error
+/// instead of being retried again.
+const QUARANTINE_ATTEMPTS: usize = 2;
+
+/// Per-attempt solve knobs the degradation ladder adjusts.
+struct SolveOverrides {
+    /// Force the log-domain Sinkhorn regime (rung 1).
+    force_log: bool,
+    /// Scale the job's ε (rung 2 anneals by 2).
+    epsilon_scale: f64,
+    /// Swap the gradient backend (rung 3: lowrank → naive).
+    kind_override: Option<GradientKind>,
+}
+
+/// Climb to the next rung of the degradation ladder within the job's
+/// retry budget: forced log-domain regime, then ε·2 anneal, then — for
+/// dense payloads on the low-rank backend — the exact naive gradient
+/// at the job's own ε. Returns `false` when the budget is exhausted or
+/// no further rung applies to this job.
+fn climb(
+    rung: &mut u32,
+    ov: &mut SolveOverrides,
+    req: &JobRequest,
+    metrics: &ServiceMetrics,
+) -> bool {
+    loop {
+        if *rung >= req.options.max_retries {
+            return false;
+        }
+        match *rung {
+            0 => {
+                *rung = 1;
+                ov.force_log = true;
+                metrics.on_retry_regime();
+                return true;
+            }
+            1 => {
+                *rung = 2;
+                ov.epsilon_scale = 2.0;
+                metrics.on_retry_anneal();
+                return true;
+            }
+            2 => {
+                *rung = 3;
+                // The backend rung exists only where an exact fallback
+                // does: dense payloads running the low-rank gradient.
+                // The anneal rolls back — the naive backend retries at
+                // the job's own ε with the default regime pick.
+                if matches!(req.payload, JobPayload::GwDense { .. })
+                    && req.backend.gradient_kind() == GradientKind::LowRank
+                {
+                    ov.kind_override = Some(GradientKind::Naive);
+                    ov.force_log = false;
+                    ov.epsilon_scale = 1.0;
+                    metrics.on_retry_backend();
+                    return true;
+                }
+            }
+            _ => return false,
         }
     }
 }
 
-/// Run a single job on the native solvers (the PJRT worker's fallback
-/// path — the sharded native workers run [`execute_group`] instead).
-fn execute_native(req: &JobRequest, cfg: &CoordinatorConfig) -> JobResult {
+/// Run one job to a terminal result on a fresh solver, with panic
+/// isolation (quarantine after [`QUARANTINE_ATTEMPTS`] panicking
+/// attempts), the numeric degradation ladder ([`climb`]), and deadline
+/// enforcement between attempts and between outer iterations.
+fn execute_solo_with_recovery(
+    req: &JobRequest,
+    cfg: &CoordinatorConfig,
+    metrics: &ServiceMetrics,
+    faults: &Faults,
+    prior: Prior,
+) -> JobResult {
     let queue_time = req.submitted_at.elapsed();
-    let kind = req.backend.gradient_kind();
     let started = Instant::now();
-    let solved: Result<(crate::linalg::Mat, f64)> = (|| {
-        let solver = build_solver(&req.payload, cfg);
-        let job = batch_job(&req.payload);
-        let mut ws = solver.batch_workspace(kind, 1)?;
-        let mut sols = solver.solve_batch_into(&[job], &mut ws)?;
-        let sol = sols.pop().expect("one job in, one solution out");
-        Ok((sol.plan, sol.objective))
-    })();
-    let solve_time = started.elapsed();
-    match solved {
-        Ok((plan, obj)) => JobResult {
-            id: req.id,
-            objective: Ok(obj),
-            plan: Some(plan),
-            backend: req.backend.clone(),
-            queue_time,
-            solve_time,
-        },
-        Err(e) => JobResult {
-            id: req.id,
-            objective: Err(e.to_string()),
-            plan: None,
-            backend: req.backend.clone(),
-            queue_time,
-            solve_time,
-        },
+    let fail = |msg: String, solve_time: Duration| JobResult {
+        id: req.id,
+        objective: Err(msg),
+        plan: None,
+        backend: req.backend.clone(),
+        queue_time,
+        solve_time,
+    };
+    let mut ov = SolveOverrides {
+        force_log: false,
+        epsilon_scale: 1.0,
+        kind_override: None,
+    };
+    let mut rung = 0u32;
+    let mut panics = 0usize;
+    match prior {
+        Prior::None => {}
+        Prior::Fatal(msg) => return fail(msg, Duration::ZERO),
+        Prior::Numeric(msg) => {
+            if !climb(&mut rung, &mut ov, req, metrics) {
+                return fail(msg, Duration::ZERO);
+            }
+        }
+        Prior::Panicked(_) => panics = 1,
+    }
+    loop {
+        if req.expired() {
+            metrics.on_deadline_shed();
+            return fail(
+                Error::Rejected("deadline expired during recovery".into()).to_string(),
+                started.elapsed(),
+            );
+        }
+        match catch_unwind(AssertUnwindSafe(|| solve_solo(req, cfg, faults, &ov))) {
+            Ok(Ok((objective, plan))) => {
+                // A backend-rung success ran a different gradient than
+                // routed — the result (and per-backend metrics) must
+                // say which backend actually produced it.
+                let backend = match ov.kind_override {
+                    Some(kind) => BackendChoice::native(kind),
+                    None => req.backend.clone(),
+                };
+                return JobResult {
+                    id: req.id,
+                    objective: Ok(objective),
+                    plan: Some(plan),
+                    backend,
+                    queue_time,
+                    solve_time: started.elapsed(),
+                };
+            }
+            Ok(Err(e)) => {
+                if matches!(e, Error::Numeric(_)) && climb(&mut rung, &mut ov, req, metrics) {
+                    continue;
+                }
+                return fail(e.to_string(), started.elapsed());
+            }
+            Err(payload) => {
+                metrics.on_panic();
+                metrics.on_respawn();
+                panics += 1;
+                if panics >= QUARANTINE_ATTEMPTS {
+                    metrics.on_quarantine();
+                    return fail(
+                        format!(
+                            "job quarantined after {panics} panicking attempts: {}",
+                            panic_message(payload)
+                        ),
+                        started.elapsed(),
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// One solo attempt at a job on a fresh solver, honoring the ladder's
+/// overrides, the job's deadline, and any scripted faults.
+fn solve_solo(
+    req: &JobRequest,
+    cfg: &CoordinatorConfig,
+    faults: &Faults,
+    ov: &SolveOverrides,
+) -> Result<(f64, Mat)> {
+    faults.fire(req.id)?;
+    let kind = ov
+        .kind_override
+        .unwrap_or_else(|| req.backend.gradient_kind());
+    let epsilon = req.payload.epsilon() * ov.epsilon_scale;
+    let solver = build_solver_with_epsilon(&req.payload, cfg, epsilon);
+    let mut ws = solver.batch_workspace(kind, 1)?;
+    if faults.mispredict(req.id) {
+        ws.set_regime_override(Some(Regime::Gibbs));
+    }
+    if ov.force_log {
+        // The ladder's forced log-domain rung wins over a scripted
+        // misprediction — that is the recovery under test.
+        ws.set_regime_override(Some(Regime::Log));
+    }
+    ws.set_deadline(req.deadline_instant());
+    let job = batch_job(&req.payload);
+    let mut sols = ws.solve_batch(&gw_cfg(cfg, epsilon), &[job])?;
+    let sol = sols
+        .pop()
+        .ok_or_else(|| Error::Runtime("batch solve returned no solution".into()))?;
+    Ok((sol.objective, sol.plan))
+}
+
+/// Terminal result for a job the service will not solve (deadline
+/// shed, fail-fast shutdown drain).
+fn rejected_result(req: &JobRequest, why: &str) -> JobResult {
+    JobResult {
+        id: req.id,
+        objective: Err(Error::Rejected(why.to_string()).to_string()),
+        plan: None,
+        backend: req.backend.clone(),
+        queue_time: req.submitted_at.elapsed(),
+        solve_time: Duration::ZERO,
+    }
+}
+
+/// Human-readable panic payload (covers the `&str`/`String` cases
+/// every `panic!` in this crate produces).
+fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "worker panicked".into()
     }
 }
 
@@ -805,6 +1322,8 @@ mod tests {
             solver_threads: 2,
             lowrank_tol: 0.0,
             submit_timeout: Duration::from_millis(100),
+            default_deadline: None,
+            default_max_retries: 3,
         }
     }
 
@@ -978,6 +1497,7 @@ mod tests {
                 payload: JobPayload::gw_dense(d.clone(), d, vec![0.25; 4], vec![0.25; 4], 0.05),
                 backend: BackendChoice::NativeNaive,
                 submitted_at: Instant::now(),
+                options: JobOptions::default(),
             }
         };
         let groups = split_same_geometry(vec![mk(1.0, 1), mk(2.0, 2), mk(1.0, 3)]);
@@ -1007,6 +1527,7 @@ mod tests {
                 ),
                 backend: BackendChoice::NativeFgc,
                 submitted_at: Instant::now(),
+                options: JobOptions::default(),
             }
         };
         let g3 = Geometry::grid_3d_unit(2, 1);
@@ -1047,6 +1568,7 @@ mod tests {
                 },
                 backend: BackendChoice::NativeFgc,
                 submitted_at: Instant::now(),
+                options: JobOptions::default(),
             }
         };
         let groups = split_same_geometry(vec![mk(1.0, 1), mk(2.0, 2)]);
@@ -1073,9 +1595,83 @@ mod tests {
                 },
                 backend: BackendChoice::NativeNaive,
                 submitted_at: Instant::now(),
+                options: JobOptions::default(),
             }
         };
         let groups = split_same_geometry(vec![mk(1.0, 1), mk(2.0, 2)]);
         assert_eq!(groups.len(), 2, "colliding fingerprints must full-compare");
+    }
+
+    #[test]
+    fn ladder_climbs_rungs_in_order_within_budget() {
+        let metrics = ServiceMetrics::new();
+        let grid = JobRequest {
+            id: 1,
+            payload: gw_payload(8, 1),
+            backend: BackendChoice::NativeFgc,
+            submitted_at: Instant::now(),
+            options: JobOptions::default(),
+        };
+        let mut ov = SolveOverrides {
+            force_log: false,
+            epsilon_scale: 1.0,
+            kind_override: None,
+        };
+        let mut rung = 0u32;
+        assert!(climb(&mut rung, &mut ov, &grid, &metrics));
+        assert!(ov.force_log);
+        assert!(climb(&mut rung, &mut ov, &grid, &metrics));
+        assert!(ov.epsilon_scale == 2.0);
+        // Grid payloads have no exact backend fallback: the ladder ends.
+        assert!(!climb(&mut rung, &mut ov, &grid, &metrics));
+        let snap = metrics.snapshot();
+        assert_eq!(
+            (snap.retries_regime, snap.retries_anneal, snap.retries_backend),
+            (1, 1, 0)
+        );
+    }
+
+    #[test]
+    fn ladder_backend_rung_needs_dense_lowrank_and_budget() {
+        let metrics = ServiceMetrics::new();
+        let d = crate::grid::dense_dist_1d(&crate::grid::Grid1d::unit(6), 2);
+        let mut dense = JobRequest {
+            id: 1,
+            payload: JobPayload::gw_dense(
+                d.clone(),
+                d,
+                vec![1.0 / 6.0; 6],
+                vec![1.0 / 6.0; 6],
+                0.05,
+            ),
+            backend: BackendChoice::NativeLowRank,
+            submitted_at: Instant::now(),
+            options: JobOptions::default(),
+        };
+        let mut ov = SolveOverrides {
+            force_log: false,
+            epsilon_scale: 1.0,
+            kind_override: None,
+        };
+        let mut rung = 0u32;
+        assert!(climb(&mut rung, &mut ov, &dense, &metrics));
+        assert!(climb(&mut rung, &mut ov, &dense, &metrics));
+        assert!(
+            climb(&mut rung, &mut ov, &dense, &metrics),
+            "lowrank dense gets the backend rung"
+        );
+        assert_eq!(ov.kind_override, Some(GradientKind::Naive));
+        assert!(
+            ov.epsilon_scale == 1.0,
+            "backend rung retries at the job's own ε"
+        );
+        assert!(
+            !climb(&mut rung, &mut ov, &dense, &metrics),
+            "no rung past the backend swap"
+        );
+        // A zero retry budget never enters the ladder at all.
+        dense.options.max_retries = 0;
+        let mut rung = 0u32;
+        assert!(!climb(&mut rung, &mut ov, &dense, &metrics));
     }
 }

@@ -309,6 +309,22 @@ impl<T> ShardedQueue<T> {
         }
     }
 
+    /// Take everything queued right now, across all shards, without
+    /// blocking (shard order, FIFO within each shard). Used by
+    /// fail-fast shutdown to turn still-queued envelopes into terminal
+    /// results instead of silently dropping their channels.
+    pub fn drain_all(&self) -> Vec<T> {
+        let mut st = self.inner.state.lock().unwrap();
+        let mut out = Vec::with_capacity(st.total);
+        for shard in st.shards.iter_mut() {
+            out.extend(shard.drain(..));
+        }
+        st.total = 0;
+        drop(st);
+        self.inner.not_full.notify_all();
+        out
+    }
+
     /// Close: producers start failing, consumers drain then get `None`.
     pub fn close(&self) {
         let mut st = self.inner.state.lock().unwrap();
@@ -512,6 +528,18 @@ mod tests {
         let mut pinned = None;
         assert_eq!(sq.pop_batch_pinned(&mut pinned, 4, false).unwrap().items, vec![7]);
         assert!(sq.pop_batch_pinned(&mut pinned, 4, false).is_none());
+    }
+
+    #[test]
+    fn drain_all_sweeps_every_shard() {
+        let sq = q(3, 8, 32);
+        sq.try_push(0, 1).unwrap();
+        sq.try_push(2, 30).unwrap();
+        sq.try_push(2, 31).unwrap();
+        assert_eq!(sq.drain_all(), vec![1, 30, 31]);
+        assert!(sq.is_empty());
+        assert_eq!(sq.depths(), vec![0, 0, 0]);
+        assert_eq!(sq.drain_all(), Vec::<u64>::new());
     }
 
     #[test]

@@ -22,7 +22,7 @@
 //! problem's `linearize`/`inner_solve` (asserted for entropic GW by
 //! `tests/alloc_hotpath.rs`) extends to the whole loop.
 
-use crate::error::Result;
+use crate::error::{Error, Result};
 use std::time::{Duration, Instant};
 
 /// One mirror-descent problem: state plus the two beats of the loop.
@@ -59,8 +59,30 @@ pub fn run_mirror_descent<P: MirrorProblem + ?Sized>(
     outer_iters: usize,
     problem: &mut P,
 ) -> Result<DriverStats> {
+    run_mirror_descent_with_deadline(outer_iters, problem, None)
+}
+
+/// [`run_mirror_descent`] with an optional wall-clock deadline checked
+/// between outer iterations: a solve that is still running when the
+/// deadline passes stops with [`Error::Rejected`] rather than burning
+/// worker time on a result nobody is waiting for. The check sits
+/// outside the two beats, so the deadline-free path stays identical
+/// and a solve is never interrupted mid-iteration.
+pub fn run_mirror_descent_with_deadline<P: MirrorProblem + ?Sized>(
+    outer_iters: usize,
+    problem: &mut P,
+    deadline: Option<Instant>,
+) -> Result<DriverStats> {
     let mut stats = DriverStats::default();
     for _ in 0..outer_iters {
+        if let Some(d) = deadline {
+            if Instant::now() >= d {
+                return Err(Error::Rejected(format!(
+                    "deadline expired mid-solve after {} of {} outer iterations",
+                    stats.outer_iterations, outer_iters
+                )));
+            }
+        }
         for phase in 0..problem.phases() {
             let t0 = Instant::now();
             problem.linearize(phase)?;
@@ -125,6 +147,23 @@ mod tests {
         };
         assert!(run_mirror_descent(5, &mut toy).is_err());
         assert_eq!(toy.solved.len(), 3);
+    }
+
+    #[test]
+    fn expired_deadline_stops_before_iterating() {
+        let mut toy = Toy {
+            linearized: Vec::new(),
+            solved: Vec::new(),
+            fail_at: None,
+        };
+        let past = Instant::now();
+        let err = run_mirror_descent_with_deadline(5, &mut toy, Some(past)).unwrap_err();
+        assert!(matches!(err, Error::Rejected(_)), "{err}");
+        assert!(toy.linearized.is_empty(), "no work after expiry");
+        // A comfortably distant deadline changes nothing.
+        let far = Instant::now() + Duration::from_secs(3600);
+        let stats = run_mirror_descent_with_deadline(2, &mut toy, Some(far)).unwrap();
+        assert_eq!(stats.outer_iterations, 2);
     }
 
     #[test]

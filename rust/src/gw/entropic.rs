@@ -16,14 +16,14 @@
 //! the paper meaningful.
 
 use super::backend::{GradientBackend, LowRankBackend, LowRankOptions};
-use super::driver::{run_mirror_descent, MirrorProblem};
+use super::driver::{run_mirror_descent, run_mirror_descent_with_deadline, MirrorProblem};
 use super::geometry::Geometry;
 use super::gradient::{GradientKind, PairOperator};
 use super::objective::{fgw_objective, gw_objective};
 use crate::error::{Error, Result};
 use crate::linalg::Mat;
 use crate::parallel::Parallelism;
-use crate::sinkhorn::{self, SinkhornOptions, SinkhornWorkspace};
+use crate::sinkhorn::{self, Regime, SinkhornOptions, SinkhornWorkspace};
 use std::time::{Duration, Instant};
 
 /// Solver configuration.
@@ -471,6 +471,16 @@ pub struct GwBatchWorkspace {
     grads: Vec<Mat>,
     costs: Vec<Mat>,
     constants: Vec<Mat>,
+    /// One-shot Sinkhorn regime override for the next solve (see
+    /// [`GwBatchWorkspace::set_regime_override`]).
+    regime_override: Option<Regime>,
+    /// One-shot wall-clock deadline for the next solve (see
+    /// [`GwBatchWorkspace::set_deadline`]).
+    deadline: Option<Instant>,
+    /// Scripted member index whose first inner solve of the next
+    /// batch fails with `Error::Numeric` (fault-injection hook).
+    #[cfg(feature = "fault-injection")]
+    injected_fault: Option<usize>,
 }
 
 impl GwBatchWorkspace {
@@ -518,6 +528,35 @@ impl GwBatchWorkspace {
         self.op.swap_dense_x(dx)
     }
 
+    /// Force the Sinkhorn numeric regime of the **next** solve (every
+    /// job in the batch), bypassing `pick_regime`. Consumed by that
+    /// solve — warm cached workspaces never carry it over. `Some(Log)`
+    /// is rung 1 of the serving layer's degradation ladder (a numeric
+    /// failure in the fast exponential domain retries stabilized);
+    /// `Some(Gibbs)` on a log-needing problem is a deliberate
+    /// misprediction the solver recovers from via its internal
+    /// Gibbs→log demotion. `None` clears a pending override.
+    pub fn set_regime_override(&mut self, regime: Option<Regime>) {
+        self.regime_override = regime;
+    }
+
+    /// Set a wall-clock deadline for the **next** solve, checked
+    /// between outer iterations (never mid-iteration, so lockstep
+    /// determinism is unaffected while the solve runs). Consumed by
+    /// that solve. An expired deadline surfaces as `Error::Rejected`.
+    pub fn set_deadline(&mut self, deadline: Option<Instant>) {
+        self.deadline = deadline;
+    }
+
+    /// Script the **next** solve so batch member `member`'s first
+    /// inner Sinkhorn fails with `Error::Numeric` — the deterministic
+    /// mid-batch fault the blast-radius containment tests inject.
+    /// Consumed by that solve.
+    #[cfg(feature = "fault-injection")]
+    pub fn inject_numeric_fault(&mut self, member: usize) {
+        self.injected_fault = Some(member);
+    }
+
     /// Lockstep batch solve against this workspace's **own** bound
     /// geometry pair, with solver knobs from `cfg`. This is the
     /// coordinator's warm path: the caller has already verified the
@@ -544,6 +583,12 @@ impl GwBatchWorkspace {
         }
         self.ensure_capacity(jobs.len());
         let batch = jobs.len();
+        // One-shot knobs: consumed here so a warm cached workspace
+        // never leaks a previous solve's override into the next batch.
+        let regime_override = self.regime_override.take();
+        let deadline = self.deadline.take();
+        #[cfg(feature = "fault-injection")]
+        let injected_fault = self.injected_fault.take();
         let GwBatchWorkspace {
             op,
             sks,
@@ -579,6 +624,9 @@ impl GwBatchWorkspace {
             check_distribution(job.u, "u")?;
             check_distribution(job.v, "v")?;
             sks[j].reset_regime();
+            if let Some(r) = regime_override {
+                sks[j].set_regime(r);
+            }
             op.constant_term(job.u, job.v, job.feature_cost, job.theta, &mut constants[j])?;
             crate::linalg::outer_into(job.u, job.v, &mut gammas[j])?;
         }
@@ -595,8 +643,10 @@ impl GwBatchWorkspace {
             batch,
             inner_counts: &mut inner_counts,
             opts: cfg.sinkhorn_options(),
+            #[cfg(feature = "fault-injection")]
+            injected_fault,
         };
-        let stats = run_mirror_descent(cfg.outer_iters, &mut step)?;
+        let stats = run_mirror_descent_with_deadline(cfg.outer_iters, &mut step, deadline)?;
 
         let mut out = Vec::with_capacity(batch);
         for (j, job) in jobs.iter().enumerate() {
@@ -631,6 +681,10 @@ impl EntropicGw {
             grads: Vec::new(),
             costs: Vec::new(),
             constants: Vec::new(),
+            regime_override: None,
+            deadline: None,
+            #[cfg(feature = "fault-injection")]
+            injected_fault: None,
         };
         ws.ensure_capacity(batch.max(1));
         Ok(ws)
@@ -680,6 +734,8 @@ struct BatchStep<'a, 'b> {
     batch: usize,
     inner_counts: &'b mut Vec<usize>,
     opts: SinkhornOptions,
+    #[cfg(feature = "fault-injection")]
+    injected_fault: Option<usize>,
 }
 
 impl MirrorProblem for BatchStep<'_, '_> {
@@ -704,6 +760,12 @@ impl MirrorProblem for BatchStep<'_, '_> {
     }
 
     fn inner_solve(&mut self, _phase: usize) -> Result<usize> {
+        #[cfg(feature = "fault-injection")]
+        if let Some(member) = self.injected_fault.take() {
+            return Err(Error::Numeric(format!(
+                "injected numeric fault (batch member {member})"
+            )));
+        }
         let mut total = 0;
         for j in 0..self.batch {
             let stats = sinkhorn::solve_into(
@@ -900,6 +962,34 @@ mod tests {
             assert!(d < 1e-12, "threads={threads}: ‖ΔΓ‖_F = {d:e}");
             assert!((par.objective - serial.objective).abs() < 1e-12);
         }
+    }
+
+    #[test]
+    fn regime_override_and_deadline_are_one_shot() {
+        let n = 16;
+        let (u, v) = random_dists(n, n, 33);
+        let solver = EntropicGw::grid_1d(n, n, 1, cfg_small());
+        let job = BatchJob::gw(&u, &v);
+        let mut ws = solver.batch_workspace(GradientKind::Fgc, 1).unwrap();
+        // A forced log-domain solve succeeds (rung 1 of the serving
+        // layer's degradation ladder).
+        ws.set_regime_override(Some(Regime::Log));
+        let forced = solver.solve_batch_into(&[job], &mut ws).unwrap();
+        assert!(forced[0].plan.all_finite());
+        // The override was consumed: the next solve re-picks the
+        // regime and is bit-for-bit a fresh default batch solve.
+        let clean = solver.solve_batch_into(&[job], &mut ws).unwrap();
+        let mut fresh = solver.batch_workspace(GradientKind::Fgc, 1).unwrap();
+        let reference = solver.solve_batch_into(&[job], &mut fresh).unwrap();
+        assert_eq!(clean[0].plan.as_slice(), reference[0].plan.as_slice());
+        assert_eq!(clean[0].objective, reference[0].objective);
+        // An already-expired deadline rejects before iterating — and
+        // is itself one-shot.
+        ws.set_deadline(Some(Instant::now()));
+        let err = solver.solve_batch_into(&[job], &mut ws).unwrap_err();
+        assert!(matches!(err, Error::Rejected(_)), "{err}");
+        let after = solver.solve_batch_into(&[job], &mut ws).unwrap();
+        assert_eq!(after[0].plan.as_slice(), reference[0].plan.as_slice());
     }
 
     #[test]

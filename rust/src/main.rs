@@ -4,14 +4,15 @@
 //! fgc-gw solve  --n 500 [--k 1] [--eps 0.002] [--backend fgc|naive|lowrank] [--lowrank-tol T] [--seed 7] [--threads 1]
 //! fgc-gw solve2d --side 20 [--eps 0.004] …
 //! fgc-gw solve3d --side 6 [--eps 0.004] …
-//! fgc-gw serve  --jobs 32 [--family 1d|3d|mixed] [--workers 2] [--shards 0] [--threads 1] [--backend auto|fgc|naive|lowrank] [--lowrank-tol T] [--pjrt] [--config path]
+//! fgc-gw serve  --jobs 32 [--family 1d|3d|mixed] [--workers 2] [--shards 0] [--threads 1] [--backend auto|fgc|naive|lowrank] [--lowrank-tol T] [--deadline-ms 0] [--max-retries 3] [--pjrt] [--config path]
 //! fgc-gw bary   --inputs 3 --n 40
 //! fgc-gw info   [--artifacts artifacts]
 //! ```
 //!
 //! `--threads 0` means one thread per core; the serve command also
-//! reads `solver.threads`, `solver.backend`, `solver.lowrank_tol` and
-//! `coordinator.shards` from the config file (CLI wins). `--backend
+//! reads `solver.threads`, `solver.backend`, `solver.lowrank_tol`,
+//! `coordinator.shards`, `service.deadline_ms` (0 = no deadline) and
+//! `service.max_retries` from the config file (CLI wins). `--backend
 //! auto` (the default) lets the router pick per job: grid → fgc, small
 //! dense → naive, large dense → lowrank. `--shards 0` (default) sizes
 //! the variant-sharded queue from the worker count; `--lowrank-tol 0`
@@ -63,7 +64,7 @@ fn print_usage() {
          \x20 solve    1D GW between random distributions (--n, --k, --eps, --backend, --lowrank-tol, --seed, --threads)\n\
          \x20 solve2d  2D GW on an n×n grid (--side, --k, --eps, --backend, --seed, --threads)\n\
          \x20 solve3d  3D GW on an n×n×n grid (--side, --k, --eps, --backend, --seed, --threads)\n\
-         \x20 serve    run the coordinator on a synthetic workload (--jobs, --family 1d|3d|mixed, --workers, --shards, --threads, --backend, --lowrank-tol, --pjrt)\n\
+         \x20 serve    run the coordinator on a synthetic workload (--jobs, --family 1d|3d|mixed, --workers, --shards, --threads, --backend, --lowrank-tol, --deadline-ms, --max-retries, --pjrt)\n\
          \x20 bary     1D GW barycenter demo (--inputs, --n)\n\
          \x20 info     platform + artifact registry summary (--artifacts DIR)"
     );
@@ -201,6 +202,11 @@ fn cmd_serve(args: &Args) -> fgc_gw::Result<()> {
         cfg.sinkhorn_max_iters = file.get_or("solver.sinkhorn_max_iters", cfg.sinkhorn_max_iters)?;
         cfg.solver_threads = file.get_or("solver.threads", cfg.solver_threads)?;
         cfg.lowrank_tol = file.get_or("solver.lowrank_tol", cfg.lowrank_tol)?;
+        let deadline_ms = file.get_or("service.deadline_ms", 0u64)?;
+        if deadline_ms > 0 {
+            cfg.default_deadline = Some(Duration::from_millis(deadline_ms));
+        }
+        cfg.default_max_retries = file.get_or("service.max_retries", cfg.default_max_retries)?;
         if let Some(name) = file.get("solver.backend") {
             if let Some(policy) = backend_policy(name)? {
                 cfg.policy = policy;
@@ -220,6 +226,13 @@ fn cmd_serve(args: &Args) -> fgc_gw::Result<()> {
     cfg.enable_pjrt = cfg.enable_pjrt || args.has_flag("pjrt");
     cfg.artifacts_dir = PathBuf::from(args.get("artifacts").unwrap_or("artifacts"));
     cfg.submit_timeout = Duration::from_millis(args.get_or("submit-timeout-ms", 500u64)?);
+    if let Some(deadline_ms) = args.get_opt::<u64>("deadline-ms")? {
+        // `--deadline-ms 0` explicitly disables job deadlines.
+        cfg.default_deadline = (deadline_ms > 0).then(|| Duration::from_millis(deadline_ms));
+    }
+    if let Some(retries) = args.get_opt::<u32>("max-retries")? {
+        cfg.default_max_retries = retries;
+    }
     if args.has_flag("baseline") {
         cfg.policy = RoutingPolicy::BaselineOnly;
     }

@@ -154,6 +154,10 @@ pub struct SinkhornStats {
     pub marginal_error: f64,
     /// Numeric regime the solve ran in.
     pub regime: Regime,
+    /// True when a cached/forced Gibbs decision underflowed and the
+    /// solve was retried in the log domain — the signal the serving
+    /// layer's degradation ladder and fault counters key off.
+    pub fell_back: bool,
 }
 
 /// Workspace form of [`solve`]: the plan is written into `plan`, all
@@ -204,6 +208,7 @@ pub fn solve_into(
                 iterations,
                 marginal_error,
                 regime: Regime::Gibbs,
+                fell_back: false,
             }),
             Err(Error::Numeric(_)) => {
                 ws.set_regime(Regime::Log);
@@ -213,6 +218,7 @@ pub fn solve_into(
                     iterations,
                     marginal_error,
                     regime: Regime::Log,
+                    fell_back: true,
                 })
             }
             Err(e) => Err(e),
@@ -223,6 +229,7 @@ pub fn solve_into(
                 iterations,
                 marginal_error,
                 regime: Regime::Log,
+                fell_back: false,
             })
         }
     }
@@ -381,6 +388,34 @@ mod tests {
         // Shape-mismatched workspace is rejected.
         let mut small = SinkhornWorkspace::new(4, 4, crate::parallel::Parallelism::SERIAL);
         assert!(solve_into(&cost, &u, &v, &opts, &mut small, &mut plan).is_err());
+    }
+
+    #[test]
+    fn mispredicted_gibbs_regime_demotes_and_reports_fallback() {
+        // Seed the workspace with a wrong (Gibbs) decision on a
+        // problem that needs the log domain: the solve must demote,
+        // succeed, report `fell_back`, and cache the corrected regime
+        // — the recovery path the serving layer's fault-injection
+        // harness exercises end-to-end.
+        let mut rng = crate::prng::Rng::seeded(13);
+        let cost = Mat::from_fn(16, 16, |i, j| 10.0 * ((i * 16 + j) as f64) + rng.uniform());
+        let (_, u, v) = random_problem(16, 16, 13);
+        let opts = SinkhornOptions {
+            epsilon: 0.002,
+            max_iters: 20000,
+            tolerance: 1e-9,
+            check_every: 10,
+        };
+        assert_eq!(pick_regime(&cost, opts.epsilon), Regime::Log);
+        let mut ws = SinkhornWorkspace::new(16, 16, crate::parallel::Parallelism::SERIAL);
+        ws.set_regime(Regime::Gibbs);
+        let mut plan = Mat::zeros(16, 16);
+        let stats = solve_into(&cost, &u, &v, &opts, &mut ws, &mut plan).unwrap();
+        assert!(stats.fell_back, "forced misprediction must demote");
+        assert_eq!(stats.regime, Regime::Log);
+        assert_eq!(ws.cached_regime(), Some(Regime::Log));
+        assert!(plan.all_finite());
+        assert!(marginal_violation(&plan, &u, &v) < 1e-7);
     }
 
     #[test]

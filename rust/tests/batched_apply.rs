@@ -193,6 +193,83 @@ fn mixed_and_2d_solve_batch_is_bitwise_sequential() {
     }
 }
 
+/// A scripted mid-batch numeric fault (feature `fault-injection`)
+/// fails the fused solve without corrupting the workspace: re-solving
+/// each member solo through the **same** workspace afterwards is
+/// bit-for-bit identical to solves on a fresh solver — the
+/// coordinator's split-and-re-execute blast-radius containment relies
+/// on exactly this invariant.
+#[cfg(feature = "fault-injection")]
+#[test]
+fn prop_mid_batch_fault_leaves_survivor_solves_bitwise_intact() {
+    check_prop(
+        "mid-batch-fault-containment",
+        6,
+        0xFA17,
+        |rng| {
+            let n = 10 + rng.below(10) as usize;
+            let b = 2 + rng.below(3) as usize;
+            let which = rng.below(10) as usize;
+            let seed = rng.below(u32::MAX as u64);
+            (n, b, which, seed)
+        },
+        |&(n, b, which, seed)| {
+            let cfg = GwConfig {
+                epsilon: 0.05,
+                outer_iters: 3,
+                sinkhorn_max_iters: 200,
+                sinkhorn_tolerance: 1e-9,
+                sinkhorn_check_every: 10,
+                threads: 1,
+            };
+            let (gx, gy) = geometry_pair(which, n, n, 1);
+            let (m, n) = (gx.len(), gy.len());
+            let mut rng = Rng::seeded(seed);
+            let pairs: Vec<(Vec<f64>, Vec<f64>)> = (0..b)
+                .map(|_| {
+                    let mut u = rng.uniform_vec(m);
+                    let mut v = rng.uniform_vec(n);
+                    normalize_l1(&mut u).unwrap();
+                    normalize_l1(&mut v).unwrap();
+                    (u, v)
+                })
+                .collect();
+            let faulty = (seed as usize) % b;
+            for kind in ALL_KINDS {
+                let solver = EntropicGw::new(gx.clone(), gy.clone(), cfg);
+                let mut ws = solver.batch_workspace(kind, b).map_err(|e| e.to_string())?;
+                let jobs: Vec<BatchJob> = pairs.iter().map(|(u, v)| BatchJob::gw(u, v)).collect();
+                ws.inject_numeric_fault(faulty);
+                match ws.solve_batch(&cfg, &jobs) {
+                    Err(fgc_gw::Error::Numeric(_)) => {}
+                    Err(e) => return Err(format!("{kind}: wrong failure kind: {e}")),
+                    Ok(_) => return Err(format!("{kind}: injected fault did not fire")),
+                }
+                // The fault is one-shot: survivors re-executed through
+                // the very same workspace must match fresh solo solves
+                // bit for bit.
+                for (i, (u, v)) in pairs.iter().enumerate() {
+                    let solo = ws
+                        .solve_batch(&cfg, &[BatchJob::gw(u, v)])
+                        .map_err(|e| e.to_string())?;
+                    let fresh = solver.solve(u, v, kind).map_err(|e| e.to_string())?;
+                    if solo[0].plan.as_slice() != fresh.plan.as_slice() {
+                        return Err(format!(
+                            "{kind} geom={which}: member {i} plan drifted after fault"
+                        ));
+                    }
+                    if solo[0].objective != fresh.objective {
+                        return Err(format!(
+                            "{kind} geom={which}: member {i} objective drifted after fault"
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
 #[test]
 fn prop_solve_batch_is_bitwise_sequential_solves() {
     check_prop(

@@ -1,0 +1,346 @@
+//! Fault-tolerant serving: panic isolation, per-job deadlines, batch
+//! blast-radius containment, and terminal-result guarantees.
+//!
+//! The deterministic fault-injection tests (scripted panics, forced
+//! numeric failures, forced regime mispredictions) are gated behind
+//! the `fault-injection` feature; everything else runs on the default
+//! feature set.
+
+use fgc_gw::coordinator::{
+    BackendChoice, Coordinator, CoordinatorConfig, JobOptions, JobPayload, RoutingPolicy,
+};
+use fgc_gw::data::random_distribution;
+use fgc_gw::prng::Rng;
+use std::path::PathBuf;
+use std::time::Duration;
+
+fn base_cfg() -> CoordinatorConfig {
+    CoordinatorConfig {
+        native_workers: 1,
+        shards: 1,
+        queue_capacity: 64,
+        batch_max: 4,
+        artifacts_dir: PathBuf::from("/nonexistent"),
+        policy: RoutingPolicy::PreferPjrt, // downgrades to NativeOnly (no pjrt)
+        enable_pjrt: false,
+        outer_iters: 4,
+        sinkhorn_max_iters: 200,
+        sinkhorn_tolerance: 1e-8,
+        solver_threads: 1,
+        lowrank_tol: 0.0,
+        submit_timeout: Duration::from_secs(5),
+        default_deadline: None,
+        default_max_retries: 3,
+    }
+}
+
+fn gw1d(n: usize, seed: u64) -> JobPayload {
+    let mut rng = Rng::seeded(seed);
+    JobPayload::Gw1d {
+        u: random_distribution(&mut rng, n),
+        v: random_distribution(&mut rng, n),
+        k: 1,
+        epsilon: 0.01,
+    }
+}
+
+#[test]
+fn zero_deadline_is_shed_at_admission() {
+    let coord = Coordinator::start(base_cfg()).unwrap();
+    let options = JobOptions {
+        deadline: Some(Duration::ZERO),
+        max_retries: 3,
+    };
+    let err = coord
+        .submit_with_options(gw1d(12, 1), options)
+        .unwrap_err();
+    assert!(err.to_string().contains("deadline"), "{err}");
+    let m = coord.metrics();
+    assert_eq!(m.deadline_sheds, 1);
+    assert_eq!(m.rejected, 1);
+    coord.shutdown();
+}
+
+#[test]
+fn deadline_expired_in_queue_gets_terminal_result() {
+    // A one-nanosecond deadline passes admission (it is not zero and
+    // the lane is shallow) but has always lapsed by the time a worker
+    // dequeues the job — the dequeue-side check must shed it with a
+    // terminal result, never a dead channel.
+    let coord = Coordinator::start(base_cfg()).unwrap();
+    let options = JobOptions {
+        deadline: Some(Duration::from_nanos(1)),
+        max_retries: 3,
+    };
+    let (_, rx_tight) = coord.submit_with_options(gw1d(16, 3), options).unwrap();
+    let tight = rx_tight.recv().unwrap();
+    let err = tight.objective.unwrap_err();
+    assert!(err.contains("deadline"), "{err}");
+    assert!(coord.metrics().deadline_sheds >= 1);
+    // The worker that shed it is unharmed.
+    let res = coord.submit_and_wait(gw1d(16, 4)).unwrap();
+    assert!(res.objective.is_ok(), "{:?}", res.objective);
+    coord.shutdown();
+}
+
+#[test]
+fn submit_and_wait_timeout_returns_within_budget() {
+    let coord = Coordinator::start(base_cfg()).unwrap();
+    let res = coord
+        .submit_and_wait_timeout(gw1d(16, 4), Duration::from_secs(30))
+        .unwrap();
+    assert!(res.objective.is_ok(), "{:?}", res.objective);
+    coord.shutdown();
+}
+
+#[test]
+fn shutdown_now_drains_every_job_to_a_terminal_result() {
+    let mut cfg = base_cfg();
+    cfg.batch_max = 1;
+    let coord = Coordinator::start(cfg).unwrap();
+    let (_, rx_first) = coord.submit(gw1d(28, 10)).unwrap();
+    // Let the single worker dequeue the first job before the drain
+    // flag goes up, so at least one job is in flight.
+    std::thread::sleep(Duration::from_millis(5));
+    let mut rxs: Vec<_> = (1..6)
+        .map(|i| coord.submit(gw1d(28, 10 + i)).unwrap().1)
+        .collect();
+    rxs.insert(0, rx_first);
+    coord.shutdown_now();
+    // Every submitted job must terminate: a solved result for work
+    // already in flight, a rejection for work drained from the queue —
+    // never a dead channel.
+    let mut rejected = 0;
+    for rx in rxs {
+        let res = rx.recv().expect("terminal result delivered");
+        if let Err(msg) = &res.objective {
+            assert!(msg.contains("shutting down"), "{msg}");
+            rejected += 1;
+        }
+    }
+    assert!(rejected < 6, "the in-flight job still solves");
+}
+
+#[test]
+fn dropped_receiver_is_counted_not_fatal() {
+    let mut cfg = base_cfg();
+    cfg.batch_max = 1;
+    let coord = Coordinator::start(cfg).unwrap();
+    {
+        let (_, rx) = coord.submit(gw1d(18, 20)).unwrap();
+        drop(rx); // caller walks away before the solve finishes
+    }
+    // Same variant ⇒ same shard ⇒ strictly after the orphaned job on
+    // the single worker: once this result arrives, the orphan's send
+    // already failed and was counted.
+    let res = coord.submit_and_wait(gw1d(18, 21)).unwrap();
+    assert!(res.objective.is_ok(), "{:?}", res.objective);
+    let m = coord.metrics();
+    assert_eq!(m.lost_results, 1, "{m}");
+    assert_eq!(m.completed, 2, "orphaned job still solved and reported");
+    coord.shutdown();
+}
+
+#[cfg(feature = "fault-injection")]
+mod injected {
+    use super::*;
+    use fgc_gw::coordinator::FaultScript;
+    use fgc_gw::grid::{dense_dist_1d, Grid1d};
+    use fgc_gw::gw::GradientKind;
+    use std::sync::Arc;
+
+    fn dense_payload(n: usize, seed: u64) -> JobPayload {
+        let mut rng = Rng::seeded(seed);
+        let d = dense_dist_1d(&Grid1d::unit(n), 2);
+        JobPayload::gw_dense(
+            d.clone(),
+            d,
+            random_distribution(&mut rng, n),
+            random_distribution(&mut rng, n),
+            0.05,
+        )
+    }
+
+    #[test]
+    fn scripted_panic_recovers_and_pool_keeps_serving() {
+        let script = Arc::new(FaultScript::new());
+        script.panic_on(1, 1);
+        let coord = Coordinator::start_with_faults(base_cfg(), Arc::clone(&script)).unwrap();
+        let res = coord.submit_and_wait(gw1d(16, 30)).unwrap();
+        assert!(res.objective.is_ok(), "panicked attempt must be retried");
+        // The pool keeps serving afterwards — no permanent decay.
+        for seed in 31..35 {
+            let res = coord.submit_and_wait(gw1d(16, seed)).unwrap();
+            assert!(res.objective.is_ok(), "{:?}", res.objective);
+        }
+        let m = coord.metrics();
+        assert_eq!(m.panics, 1, "{m}");
+        assert_eq!(m.respawns, 1, "{m}");
+        assert_eq!(m.completed, 5, "{m}");
+        assert_eq!(m.failed, 0, "{m}");
+        coord.shutdown();
+    }
+
+    #[test]
+    fn repeated_panics_quarantine_the_job() {
+        let script = Arc::new(FaultScript::new());
+        script.panic_on(1, 10); // panics every attempt
+        let coord = Coordinator::start_with_faults(base_cfg(), Arc::clone(&script)).unwrap();
+        let res = coord.submit_and_wait(gw1d(16, 40)).unwrap();
+        let err = res.objective.unwrap_err();
+        assert!(err.contains("quarantined"), "{err}");
+        // Quarantine caps the damage at two panicking attempts.
+        let m = coord.metrics();
+        assert_eq!(m.panics, 2, "{m}");
+        assert_eq!(m.quarantines, 1, "{m}");
+        // The worker itself is fine.
+        let res = coord.submit_and_wait(gw1d(16, 41)).unwrap();
+        assert!(res.objective.is_ok(), "{:?}", res.objective);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn numeric_failure_recovers_via_log_domain_rung() {
+        let script = Arc::new(FaultScript::new());
+        script.numeric_on(1, 1);
+        let coord = Coordinator::start_with_faults(base_cfg(), Arc::clone(&script)).unwrap();
+        let res = coord.submit_and_wait(gw1d(16, 50)).unwrap();
+        assert!(res.objective.is_ok(), "{:?}", res.objective);
+        let m = coord.metrics();
+        assert_eq!(m.retries_regime, 1, "{m}");
+        assert_eq!(m.retries_anneal, 0, "{m}");
+        coord.shutdown();
+    }
+
+    #[test]
+    fn persistent_numeric_failure_climbs_to_anneal_rung() {
+        let script = Arc::new(FaultScript::new());
+        script.numeric_on(1, 2); // survives the log-domain retry too
+        let coord = Coordinator::start_with_faults(base_cfg(), Arc::clone(&script)).unwrap();
+        let res = coord.submit_and_wait(gw1d(16, 60)).unwrap();
+        assert!(res.objective.is_ok(), "{:?}", res.objective);
+        let m = coord.metrics();
+        assert_eq!(m.retries_regime, 1, "{m}");
+        assert_eq!(m.retries_anneal, 1, "{m}");
+        coord.shutdown();
+    }
+
+    #[test]
+    fn dense_lowrank_falls_back_to_naive_backend() {
+        let script = Arc::new(FaultScript::new());
+        script.numeric_on(1, 3); // outlives log-domain and anneal rungs
+        let mut cfg = base_cfg();
+        cfg.policy = RoutingPolicy::Force(GradientKind::LowRank);
+        let coord = Coordinator::start_with_faults(cfg, Arc::clone(&script)).unwrap();
+        let res = coord.submit_and_wait(dense_payload(12, 70)).unwrap();
+        assert!(res.objective.is_ok(), "{:?}", res.objective);
+        assert_eq!(
+            res.backend,
+            BackendChoice::NativeNaive,
+            "result must name the backend that actually solved it"
+        );
+        let m = coord.metrics();
+        assert_eq!(m.retries_backend, 1, "{m}");
+        assert_eq!(m.native_naive, 1, "{m}");
+        coord.shutdown();
+    }
+
+    #[test]
+    fn retry_budget_zero_fails_fast_with_the_numeric_error() {
+        let script = Arc::new(FaultScript::new());
+        script.numeric_on(1, 1);
+        let coord = Coordinator::start_with_faults(base_cfg(), Arc::clone(&script)).unwrap();
+        let options = JobOptions {
+            deadline: None,
+            max_retries: 0,
+        };
+        let (_, rx) = coord.submit_with_options(gw1d(16, 80), options).unwrap();
+        let res = rx.recv().unwrap();
+        let err = res.objective.unwrap_err();
+        assert!(err.contains("numeric"), "{err}");
+        let m = coord.metrics();
+        assert_eq!(m.retries_regime, 0, "{m}");
+        assert_eq!(m.failed, 1, "{m}");
+        coord.shutdown();
+    }
+
+    #[test]
+    fn scripted_misprediction_still_completes() {
+        let script = Arc::new(FaultScript::new());
+        script.mispredict_on(1, 1);
+        let coord = Coordinator::start_with_faults(base_cfg(), Arc::clone(&script)).unwrap();
+        // Tiny ε would normally pick the log domain outright; the
+        // scripted misprediction forces Gibbs and relies on the
+        // Sinkhorn layer's demote-on-underflow to finish the solve.
+        let mut rng = Rng::seeded(90);
+        let payload = JobPayload::Gw1d {
+            u: random_distribution(&mut rng, 16),
+            v: random_distribution(&mut rng, 16),
+            k: 1,
+            epsilon: 0.002,
+        };
+        let res = coord.submit_and_wait(payload).unwrap();
+        assert!(res.objective.is_ok(), "{:?}", res.objective);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn mid_batch_fault_splits_and_survivors_match_solo_solves() {
+        // Push Sinkhorn toward its iteration cap so the dense decoy
+        // below occupies the worker long enough for the three target
+        // jobs to queue up behind it and pop as one fused batch.
+        let mut cfg = base_cfg();
+        cfg.sinkhorn_max_iters = 2000;
+        cfg.sinkhorn_tolerance = 1e-13;
+
+        // Reference: each payload solved alone on a fault-free service
+        // with the same solver configuration.
+        let payloads: Vec<JobPayload> = (0..3).map(|i| gw1d(18, 100 + i)).collect();
+        let reference = Coordinator::start(cfg.clone()).unwrap();
+        let solo: Vec<_> = payloads
+            .iter()
+            .map(|p| reference.submit_and_wait(p.clone()).unwrap())
+            .collect();
+        reference.shutdown();
+
+        // Faulted run: the decoy (id 1) pins the single worker; the
+        // targets (ids 2..4) land in one fused batch whose middle
+        // member is scripted to fail numerically — on the fused
+        // attempt and once more solo, so it also climbs the ladder.
+        let script = Arc::new(FaultScript::new());
+        script.numeric_on(3, 2);
+        let coord = Coordinator::start_with_faults(cfg, Arc::clone(&script)).unwrap();
+        let (_, rx_decoy) = coord.submit(dense_payload(96, 99)).unwrap();
+        std::thread::sleep(Duration::from_millis(2));
+        let rxs: Vec<_> = payloads
+            .iter()
+            .map(|p| coord.submit(p.clone()).unwrap().1)
+            .collect();
+        assert!(rx_decoy.recv().unwrap().objective.is_ok());
+        let results: Vec<_> = rxs.into_iter().map(|rx| rx.recv().unwrap()).collect();
+
+        // Blast-radius containment: every member terminates Ok, and
+        // the survivors are bit-for-bit identical to their solo solves
+        // (the faulted member recovered on the forced log-domain rung,
+        // a different — still correct — code path, so it is only
+        // required to succeed).
+        for (i, (got, want)) in results.iter().zip(&solo).enumerate() {
+            let got_obj = *got.objective.as_ref().unwrap();
+            if i == 1 {
+                continue;
+            }
+            let want_obj = *want.objective.as_ref().unwrap();
+            assert_eq!(got_obj.to_bits(), want_obj.to_bits(), "objective drifted");
+            assert_eq!(
+                got.plan.as_ref().unwrap().as_slice(),
+                want.plan.as_ref().unwrap().as_slice(),
+                "plan drifted"
+            );
+        }
+        let m = coord.metrics();
+        assert_eq!(m.batch_splits, 1, "{m}");
+        assert!(m.retries_regime >= 1, "{m}");
+        assert_eq!(m.failed, 0, "{m}");
+        coord.shutdown();
+    }
+}

@@ -34,6 +34,8 @@ fn base_cfg() -> CoordinatorConfig {
         solver_threads: 2,
         lowrank_tol: 0.0,
         submit_timeout: Duration::from_millis(50),
+        default_deadline: None,
+        default_max_retries: 3,
     }
 }
 
