@@ -28,6 +28,7 @@ fn cfg(eps: f64) -> GwConfig {
         sinkhorn_tolerance: 1e-9,
         sinkhorn_check_every: 10,
         threads: 1,
+        ..GwConfig::default()
     }
 }
 

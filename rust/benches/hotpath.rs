@@ -29,6 +29,15 @@
 //! one-worker coordinator, recording throughput and the warm-hit rate
 //! of the sharded warm-batch path.
 //!
+//! A sixth section times the **precision tier** (`precision_results`):
+//! pure-f64 solves vs `Precision::F32Refine` (f32 presolve + 2-outer
+//! f64 polish) on the 1D scan path, with the relative objective/plan
+//! drift recorded next to the speedup; plus `axpy` kernel timings in
+//! both scalar types. The top-level `"simd"` flag records whether the
+//! binary was built with `--features simd`, so scalar-build and
+//! simd-build JSONs are directly comparable (the drift columns must be
+//! identical between the two — the feature is bit-for-bit).
+//!
 //! ```bash
 //! cargo bench --bench hotpath [-- --quick --threads 4 \
 //!     --sizes 256,1024,4096 --dense-sizes 256,512 --batch 8 \
@@ -44,8 +53,9 @@ use fgc_gw::data::{random_distribution, random_distribution_3d};
 use fgc_gw::grid::{dense_dist_1d, Grid1d};
 use fgc_gw::gw::{
     backend, EntropicGw, Geometry, GradientBackend, GradientKind, GwConfig, LowRankBackend,
+    Precision,
 };
-use fgc_gw::linalg::{frobenius_diff, Mat};
+use fgc_gw::linalg::{axpy, frobenius_diff, Mat};
 use fgc_gw::parallel::Parallelism;
 use fgc_gw::prng::Rng;
 
@@ -58,6 +68,7 @@ fn cfg(threads: usize, quick: bool) -> GwConfig {
         sinkhorn_tolerance: 0.0,
         sinkhorn_check_every: usize::MAX,
         threads,
+        ..GwConfig::default()
     }
 }
 
@@ -107,6 +118,14 @@ struct Grid3dApplyRow {
     b: usize,
     fgc_batch_s: f64,
     plan_diff: f64,
+}
+
+struct PrecisionRow {
+    n: usize,
+    f64_s: f64,
+    f32_refine_s: f64,
+    obj_rel_diff: f64,
+    plan_rel_fro_diff: f64,
 }
 
 struct MixedPayloadRow {
@@ -544,6 +563,96 @@ fn main() {
     };
     println!("{}", payload_table.render());
 
+    // --- precision tier: pure f64 vs f32 presolve + f64 refine ----------
+    // The serving question: how much of the solve can run in f32 before
+    // the 2-outer f64 polish, and what accuracy is left on the table.
+    // The drift columns are correctness-gated; under `--features simd`
+    // they must reproduce the scalar build bit-for-bit.
+    let mut prec_table = TableWriter::new(
+        &format!(
+            "hotpath: 1D solve, f64 vs f32+refine (serial, simd={})",
+            cfg!(feature = "simd")
+        ),
+        &["N", "f64 (s)", "f32+refine (s)", "speedup", "rel ΔGW²", "rel ‖ΔΓ‖_F"],
+    );
+    let mut precision_rows = Vec::new();
+    for &n in &sizes {
+        let mut rng = Rng::seeded(57 + n as u64);
+        let u = random_distribution(&mut rng, n);
+        let v = random_distribution(&mut rng, n);
+        let f64_solver = EntropicGw::grid_1d(n, n, 1, cfg(1, quick));
+        let f32_solver = EntropicGw::grid_1d(
+            n,
+            n,
+            1,
+            GwConfig {
+                precision: Precision::F32Refine,
+                ..cfg(1, quick)
+            },
+        );
+
+        let f64_sol = f64_solver.solve(&u, &v, GradientKind::Fgc).unwrap();
+        let f32_sol = f32_solver.solve(&u, &v, GradientKind::Fgc).unwrap();
+        let plan_norm = f64_sol.plan.as_slice().iter().map(|x| x * x).sum::<f64>().sqrt();
+        let plan_rel_fro_diff =
+            frobenius_diff(&f64_sol.plan, &f32_sol.plan).unwrap() / plan_norm.max(1e-300);
+        let obj_rel_diff =
+            (f64_sol.objective - f32_sol.objective).abs() / f64_sol.objective.abs().max(1e-300);
+        // Correctness gate: the f32 tier must land inside the serving
+        // contract even at the bench's fixed-sweep budget.
+        assert!(
+            plan_rel_fro_diff < 5e-2 && obj_rel_diff < 1e-2,
+            "N={n}: f32 tier drifted, rel ‖ΔΓ‖_F = {plan_rel_fro_diff:e}, rel ΔGW² = {obj_rel_diff:e}"
+        );
+
+        let mut ws64 = f64_solver.workspace(GradientKind::Fgc).unwrap();
+        let mut ws32 = f32_solver.workspace(GradientKind::Fgc).unwrap();
+        let t64 = time_mean(1, reps, || {
+            f64_solver.solve_into(&u, &v, &mut ws64).unwrap().objective
+        });
+        let t32 = time_mean(1, reps, || {
+            f32_solver.solve_into(&u, &v, &mut ws32).unwrap().objective
+        });
+        let (f64_s, f32_refine_s) = (t64.as_secs_f64(), t32.as_secs_f64());
+        prec_table.row(&[
+            n.to_string(),
+            fmt_secs(t64),
+            fmt_secs(t32),
+            format!("{:.2}×", f64_s / f32_refine_s),
+            format!("{obj_rel_diff:.2e}"),
+            format!("{plan_rel_fro_diff:.2e}"),
+        ]);
+        precision_rows.push(PrecisionRow {
+            n,
+            f64_s,
+            f32_refine_s,
+            obj_rel_diff,
+            plan_rel_fro_diff,
+        });
+    }
+    // Kernel-level: axpy in both scalar types. One number per build;
+    // comparing the scalar-build and simd-build JSONs isolates the
+    // unrolled-lane effect without mixing in solver-level noise.
+    let axpy_len = 1usize << 16;
+    let x64: Vec<f64> = (0..axpy_len).map(|i| (i as f64).sin()).collect();
+    let mut y64 = vec![0.0f64; axpy_len];
+    let x32: Vec<f32> = x64.iter().map(|&x| x as f32).collect();
+    let mut y32 = vec![0.0f32; axpy_len];
+    let axpy_reps = reps * 64;
+    let axpy_f64_s = time_mean(1, axpy_reps, || axpy(1.0009765625f64, &x64, &mut y64))
+        .as_secs_f64();
+    let axpy_f32_s = time_mean(1, axpy_reps, || axpy(1.0009765625f32, &x32, &mut y32))
+        .as_secs_f64();
+    prec_table.row(&[
+        format!("axpy {axpy_len}"),
+        fmt_secs(std::time::Duration::from_secs_f64(axpy_f64_s)),
+        fmt_secs(std::time::Duration::from_secs_f64(axpy_f32_s)),
+        format!("{:.2}×", axpy_f64_s / axpy_f32_s),
+        "—".to_string(),
+        "—".to_string(),
+    ]);
+    println!("{}", prec_table.render());
+
     let json = render_json(
         threads,
         quick,
@@ -554,6 +663,10 @@ fn main() {
         &mixed_rows,
         &grid3d_apply_row,
         &mixed_payload_row,
+        &precision_rows,
+        axpy_len,
+        axpy_f64_s,
+        axpy_f32_s,
     );
     std::fs::write(&out_path, &json).unwrap();
     println!("wrote {out_path}");
@@ -570,6 +683,10 @@ fn render_json(
     mixed_rows: &[Mixed2dRow],
     grid3d_row: &Grid3dApplyRow,
     payload_row: &MixedPayloadRow,
+    precision_rows: &[PrecisionRow],
+    axpy_len: usize,
+    axpy_f64_s: f64,
+    axpy_f32_s: f64,
 ) -> String {
     let mut s = String::new();
     s.push_str("{\n");
@@ -578,6 +695,7 @@ fn render_json(
     s.push_str(&format!("  \"mode\": \"{}\",\n", if quick { "quick" } else { "full" }));
     s.push_str(&format!("  \"threads\": {threads},\n"));
     s.push_str(&format!("  \"reps\": {reps},\n"));
+    s.push_str(&format!("  \"simd\": {},\n", cfg!(feature = "simd")));
     s.push_str(
         "  \"regenerate\": \"cargo bench --bench hotpath -- --quick --threads 4 --out ../BENCH_hotpath.json\",\n",
     );
@@ -665,6 +783,23 @@ fn render_json(
         payload_row.warm_hit_rate,
         payload_row.wall_s,
         payload_row.jobs_per_s,
+    ));
+    s.push_str("  ],\n");
+    s.push_str("  \"precision_results\": [\n");
+    for r in precision_rows {
+        s.push_str(&format!(
+            "    {{\"case\": \"solve_1d\", \"n\": {}, \"f64_s\": {:.6e}, \"f32_refine_s\": {:.6e}, \"speedup\": {:.3}, \"obj_rel_diff\": {:.3e}, \"plan_rel_fro_diff\": {:.3e}}},\n",
+            r.n,
+            r.f64_s,
+            r.f32_refine_s,
+            r.f64_s / r.f32_refine_s,
+            r.obj_rel_diff,
+            r.plan_rel_fro_diff,
+        ));
+    }
+    s.push_str(&format!(
+        "    {{\"case\": \"axpy\", \"len\": {axpy_len}, \"f64_s\": {axpy_f64_s:.6e}, \"f32_s\": {axpy_f32_s:.6e}, \"speedup\": {:.3}}}\n",
+        axpy_f64_s / axpy_f32_s,
     ));
     s.push_str("  ]\n}\n");
     s

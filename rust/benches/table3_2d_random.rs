@@ -26,6 +26,7 @@ fn bench_cfg() -> GwConfig {
         sinkhorn_tolerance: 1e-9,
         sinkhorn_check_every: 10,
         threads: 1,
+        ..GwConfig::default()
     }
 }
 

@@ -49,6 +49,7 @@ fn main() {
             sinkhorn_tolerance: 1e-9,
             sinkhorn_check_every: 10,
             threads: 1,
+            ..GwConfig::default()
         });
         let solve = |kind: GradientKind| solver.solve_fgw(&u, &v, &c, 0.5, kind).unwrap();
         let t_fgc = time_mean(1, reps, || solve(GradientKind::Fgc));

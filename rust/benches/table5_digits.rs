@@ -33,6 +33,7 @@ fn main() {
             sinkhorn_tolerance: 1e-9,
             sinkhorn_check_every: 10,
             threads: 1,
+            ..GwConfig::default()
         },
     );
 

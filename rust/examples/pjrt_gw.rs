@@ -57,6 +57,7 @@ fn main() -> fgc_gw::Result<()> {
             sinkhorn_tolerance: 0.0,
             sinkhorn_check_every: usize::MAX,
             threads: 1,
+            ..GwConfig::default()
         },
     )
     .solve(&u, &v, GradientKind::Fgc)?;

@@ -4,6 +4,7 @@
 //! systems, adapted to CPU-bound solves with no batch dimension).
 
 use super::job::{BackendChoice, JobPayload, JobRequest};
+use crate::gw::Precision;
 
 /// The grouping key: jobs with equal keys share workspaces and (for
 /// PJRT) a compiled executable.
@@ -17,6 +18,11 @@ pub struct VariantKey {
     pub points: usize,
     /// Distance exponent.
     pub k: u32,
+    /// Resolved solve-precision tier (admission stores the concrete
+    /// tier in [`super::JobOptions`]; f32-tier and f64 jobs of the
+    /// same shape must not share a lockstep batch or a warm
+    /// workspace key).
+    pub precision: Precision,
 }
 
 /// Key for a request.
@@ -42,6 +48,7 @@ pub fn variant_key(req: &JobRequest) -> VariantKey {
         family,
         points,
         k,
+        precision: req.options.precision.unwrap_or(Precision::F64),
     }
 }
 

@@ -1,6 +1,6 @@
 //! Job model for the alignment service.
 
-use crate::gw::{Geometry, GradientKind};
+use crate::gw::{Geometry, GradientKind, Precision};
 use crate::linalg::Mat;
 use std::time::{Duration, Instant};
 
@@ -456,6 +456,12 @@ pub struct JobOptions {
     /// retry → ε·2 annealed retry → naive-backend fallback) before a
     /// numeric failure is returned as-is. `0` fails fast.
     pub max_retries: u32,
+    /// Solve-precision tier for this job. `None` inherits the
+    /// service-wide default ([`crate::coordinator::CoordinatorConfig`]
+    /// `precision`); admission resolves `Auto` against the job's shape
+    /// and stores the concrete tier, so workers (and the warm-cache
+    /// key) always see `Some(F64)` or `Some(F32Refine)`.
+    pub precision: Option<Precision>,
 }
 
 impl Default for JobOptions {
@@ -463,6 +469,7 @@ impl Default for JobOptions {
         JobOptions {
             deadline: None,
             max_retries: 3,
+            precision: None,
         }
     }
 }

@@ -49,6 +49,13 @@ pub struct ServiceMetrics {
     /// Fused batches split for blast-radius containment (members
     /// re-executed solo after a co-batched failure).
     batch_splits: AtomicU64,
+    /// Jobs served on the f32 presolve + f64 refinement tier.
+    f32_served: AtomicU64,
+    /// Live warm-cache occupancy across all workers, in capacity
+    /// units (an f64-tier workspace charges 2 units, an f32-tier one
+    /// 1 — its resident hot state is roughly half the bytes), so the
+    /// effective warm capacity gained by the f32 tier is observable.
+    warm_units: AtomicU64,
     /// Results that could not be delivered (receiver dropped/missing).
     lost_results: AtomicU64,
     /// Completed-job latencies in microseconds (queue + solve).
@@ -137,6 +144,22 @@ impl ServiceMetrics {
         self.batch_splits.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Record `jobs` solves served on the f32+refine precision tier.
+    pub fn on_f32_served(&self, jobs: u64) {
+        self.f32_served.fetch_add(jobs, Ordering::Relaxed);
+    }
+
+    /// A warm workspace entered some worker's cache (`units` capacity
+    /// units: 2 for f64-tier, 1 for f32-tier).
+    pub fn add_warm_units(&self, units: u64) {
+        self.warm_units.fetch_add(units, Ordering::Relaxed);
+    }
+
+    /// A warm workspace was evicted or dropped from a worker's cache.
+    pub fn sub_warm_units(&self, units: u64) {
+        self.warm_units.fetch_sub(units, Ordering::Relaxed);
+    }
+
     /// Record an undeliverable result (receiver dropped or missing).
     pub fn on_lost_result(&self) {
         self.lost_results.fetch_add(1, Ordering::Relaxed);
@@ -195,6 +218,8 @@ impl ServiceMetrics {
             deadline_sheds: self.deadline_sheds.load(Ordering::Relaxed),
             quarantines: self.quarantines.load(Ordering::Relaxed),
             batch_splits: self.batch_splits.load(Ordering::Relaxed),
+            f32_served: self.f32_served.load(Ordering::Relaxed),
+            warm_units: self.warm_units.load(Ordering::Relaxed),
             lost_results: self.lost_results.load(Ordering::Relaxed),
             shard_depths: Vec::new(),
             p50: pct(0.50),
@@ -256,6 +281,12 @@ pub struct MetricsSnapshot {
     pub quarantines: u64,
     /// Fused batches split for blast-radius containment.
     pub batch_splits: u64,
+    /// Jobs served on the f32 presolve + f64 refinement tier.
+    pub f32_served: u64,
+    /// Live warm-cache occupancy across all workers in capacity units
+    /// (f64-tier workspace = 2, f32-tier = 1): the f32 tier's halved
+    /// resident state shows up here as extra effective capacity.
+    pub warm_units: u64,
     /// Results dropped because the receiver went away.
     pub lost_results: u64,
     /// Per-shard queue depth at snapshot time (filled by
@@ -322,6 +353,11 @@ impl std::fmt::Display for MetricsSnapshot {
             self.quarantines,
             self.batch_splits,
             self.lost_results
+        )?;
+        writeln!(
+            f,
+            "precision: f32-served={} warm-units={}",
+            self.f32_served, self.warm_units
         )?;
         write!(
             f,
@@ -407,6 +443,20 @@ mod tests {
         assert!(text.contains("warm-hits=9"), "{text}");
         assert!(text.contains("steals=2"), "{text}");
         assert!(text.contains("sheds=1"), "{text}");
+    }
+
+    #[test]
+    fn precision_counters_round_trip() {
+        let m = ServiceMetrics::new();
+        m.on_f32_served(3);
+        m.add_warm_units(2);
+        m.add_warm_units(1);
+        m.sub_warm_units(2);
+        let s = m.snapshot();
+        assert_eq!((s.f32_served, s.warm_units), (3, 1));
+        let text = s.to_string();
+        assert!(text.contains("f32-served=3"), "{text}");
+        assert!(text.contains("warm-units=1"), "{text}");
     }
 
     #[test]

@@ -35,6 +35,7 @@ use super::shard::{shard_for, ShardedQueue, PIN_SHED_FACTOR};
 use crate::error::{Error, Result};
 use crate::gw::{
     BatchJob, EntropicGw, Geometry, GradientKind, GwBatchWorkspace, GwConfig, LowRankOptions,
+    Precision,
 };
 use crate::linalg::Mat;
 use crate::runtime::{ArtifactRegistry, Executor};
@@ -47,11 +48,15 @@ use std::sync::{mpsc, Arc};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-/// Per-worker warm-workspace LRU capacity. Each entry holds a bound
-/// gradient operator plus per-job solve buffers for one variant;
-/// four distinct warm variants per worker covers realistic mixes
-/// without unbounded memory growth.
-const WARM_CACHE_CAP: usize = 4;
+/// Per-worker warm-workspace LRU budget, in capacity **units**: an
+/// f64-tier entry charges 2 units, an f32-tier entry 1 (its resident
+/// hot state — kernel, plan, scan scratch — is roughly half the
+/// bytes). Each entry holds a bound gradient operator plus per-job
+/// solve buffers for one variant; 8 units (four f64 variants, up to
+/// eight f32 ones) covers realistic mixes without unbounded memory
+/// growth. The live occupancy is exported as `warm_units` in
+/// [`MetricsSnapshot`].
+const WARM_CACHE_UNITS: u64 = 8;
 
 /// Consecutive same-shard batches a worker serves before it must
 /// rotate to the longest *other* non-empty shard. Bounds cross-shard
@@ -98,6 +103,12 @@ pub struct CoordinatorConfig {
     /// each job's ε; see `LowRankOptions::for_epsilon`). Config key
     /// `solver.lowrank_tol`, CLI `--lowrank-tol`.
     pub lowrank_tol: f64,
+    /// Default solve-precision tier for jobs that do not pick one
+    /// ([`JobOptions::precision`] = `None`): `f64` (pure double),
+    /// `f32` (f32 presolve + short f64 refinement), or `auto`
+    /// (f32-tier at and above the cost model's size threshold).
+    /// Config key `solver.precision`, CLI `--precision`.
+    pub precision: Precision,
     /// How long `submit` may block under backpressure.
     pub submit_timeout: Duration,
     /// Default per-job deadline applied by [`Coordinator::submit`]
@@ -125,6 +136,7 @@ impl Default for CoordinatorConfig {
             sinkhorn_tolerance: 1e-9,
             solver_threads: 1,
             lowrank_tol: 0.0,
+            precision: Precision::F64,
             submit_timeout: Duration::from_millis(200),
             default_deadline: None,
             default_max_retries: 3,
@@ -318,6 +330,7 @@ impl Coordinator {
             JobOptions {
                 deadline: self.cfg.default_deadline,
                 max_retries: self.cfg.default_max_retries,
+                precision: None,
             },
         )
     }
@@ -336,6 +349,18 @@ impl Coordinator {
             self.metrics.on_reject();
             return Err(Error::Rejected(format!("validation: {msg}")));
         }
+        // Resolve the job's precision tier at admission: an explicit
+        // per-job choice wins over the service default, and `Auto` is
+        // resolved against the job's shape here — so the variant key,
+        // the warm cache and the workers all see a concrete tier.
+        let mut options = options;
+        let (pm, pn) = payload_dims(&payload);
+        options.precision = Some(
+            options
+                .precision
+                .unwrap_or(self.cfg.precision)
+                .resolve(pm, pn),
+        );
         let backend = self.router.route(&payload);
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (tx, rx) = mpsc::channel();
@@ -406,6 +431,7 @@ impl Coordinator {
         let options = JobOptions {
             deadline: Some(timeout),
             max_retries: self.cfg.default_max_retries,
+            precision: None,
         };
         let (_, rx) = self.submit_with_options(payload, options)?;
         let wait = timeout.saturating_add(self.cfg.submit_timeout);
@@ -484,6 +510,22 @@ struct WsKey {
     k: u32,
     kind: GradientKind,
     eps_bits: u64,
+    /// Resolved solve-precision tier. f32-tier solves seed their
+    /// workspace's lazily built f32 lane; keeping the tiers on
+    /// separate entries also halves the cache charge of an f32 entry
+    /// (see [`ws_units`]).
+    precision: Precision,
+}
+
+/// Cache charge of one warm entry: f64-tier workspaces count 2
+/// capacity units, f32-tier ones 1 (their resident hot state is
+/// roughly half the bytes), against the [`WARM_CACHE_UNITS`] budget.
+fn ws_units(key: &WsKey) -> u64 {
+    if key.precision == Precision::F32Refine {
+        1
+    } else {
+        2
+    }
 }
 
 /// Per-worker LRU of warm batched workspaces (front = most recent).
@@ -516,17 +558,30 @@ impl WarmCache {
         }
     }
 
+    /// Total cache charge of the live entries.
+    fn units(&self) -> u64 {
+        self.entries.iter().map(|(k, _)| ws_units(k)).sum()
+    }
+
+    /// Drop every entry, returning the gauge charge released (the
+    /// panic-respawn path rebuilds the worker's solver state in
+    /// place).
+    fn reset(&mut self, metrics: &ServiceMetrics) {
+        metrics.sub_warm_units(self.units());
+        self.entries.clear();
+    }
+
     /// Fetch the workspace for `key`, building one (the only path
     /// that constructs a solver — and, for dense payloads, clones the
     /// geometry) on a miss. Returns `(workspace, was_warm)`.
     ///
-    /// Mixed payloads get a middle path between hit and miss: a cached
-    /// same-key workspace whose **grid side** matches but whose dense
-    /// support differs is rebound in place via
-    /// [`GwBatchWorkspace::swap_dense_x`] — the structured side keeps
-    /// its scan/factored state and every solve buffer survives, so a
-    /// stream of same-shape dense supports against one grid (the
-    /// barycenter-style traffic pattern) stays warm instead of
+    /// Mixed and dense payloads get a middle path between hit and
+    /// miss: a cached same-key workspace whose **Y side** matches but
+    /// whose dense X support differs is rebound in place via
+    /// [`GwBatchWorkspace::swap_dense_x`] — the Y side keeps its
+    /// scan/factored state and every solve buffer survives, so a
+    /// stream of same-shape dense supports against one fixed target
+    /// (the barycenter-style traffic pattern) stays warm instead of
     /// rebuilding the backend per distinct support matrix.
     fn get_or_build(
         &mut self,
@@ -535,6 +590,7 @@ impl WarmCache {
         cfg: &CoordinatorConfig,
         kind: GradientKind,
         batch: usize,
+        metrics: &ServiceMetrics,
     ) -> Result<(&mut GwBatchWorkspace, bool)> {
         let pos = self
             .entries
@@ -547,30 +603,46 @@ impl WarmCache {
             ws.ensure_capacity(batch);
             return Ok((ws, true));
         }
-        if let JobPayload::GwMixed { dx, grid, .. } = payload {
-            // Same variant, same grid side, different dense support:
-            // swap the dense X side in place. A backend that refuses
-            // the swap cannot serve this (or the old) support anymore
-            // cheaply — drop the stale entry so the cold build below
-            // replaces it instead of duplicating its key in the LRU.
-            let pos = self
-                .entries
-                .iter()
-                .position(|(k, ws)| k == key && ws.geom_y() == grid);
-            if let Some(pos) = pos {
-                let mut entry = self.entries.remove(pos);
-                if entry.1.swap_dense_x(dx).is_ok() {
-                    self.entries.insert(0, entry);
-                    let ws = &mut self.entries[0].1;
-                    ws.ensure_capacity(batch);
-                    return Ok((ws, true));
-                }
+        // Same variant, same Y side, different dense X support: swap
+        // the dense X side in place. A backend that refuses the swap
+        // cannot serve this (or the old) support anymore cheaply —
+        // drop the stale entry so the cold build below replaces it
+        // instead of duplicating its key in the LRU.
+        let rebind = match payload {
+            JobPayload::GwMixed { dx, grid, .. } => Some((
+                dx,
+                self.entries
+                    .iter()
+                    .position(|(k, ws)| k == key && ws.geom_y() == grid),
+            )),
+            JobPayload::GwDense { dx, dy, .. } => Some((
+                dx,
+                self.entries.iter().position(|(k, ws)| {
+                    k == key && matches!(ws.geom_y(), Geometry::Dense(d) if d == dy)
+                }),
+            )),
+            _ => None,
+        };
+        if let Some((dx, Some(pos))) = rebind {
+            let mut entry = self.entries.remove(pos);
+            if entry.1.swap_dense_x(dx).is_ok() {
+                self.entries.insert(0, entry);
+                let ws = &mut self.entries[0].1;
+                ws.ensure_capacity(batch);
+                return Ok((ws, true));
             }
+            metrics.sub_warm_units(ws_units(&entry.0));
         }
         let solver = build_solver(payload, cfg);
         let ws = solver.batch_workspace(kind, batch)?;
         self.entries.insert(0, (key.clone(), ws));
-        self.entries.truncate(WARM_CACHE_CAP);
+        metrics.add_warm_units(ws_units(key));
+        // Unit-based LRU eviction: the just-inserted front entry
+        // always survives.
+        while self.units() > WARM_CACHE_UNITS && self.entries.len() > 1 {
+            let (evicted, _) = self.entries.pop().expect("len > 1");
+            metrics.sub_warm_units(ws_units(&evicted));
+        }
         Ok((&mut self.entries[0].1, false))
     }
 }
@@ -825,7 +897,7 @@ fn report(metrics: &ServiceMetrics, result: &JobResult) {
 /// The warm-cache identity of a payload — derived from the payload
 /// alone, so cache lookups never construct a solver (or clone dense
 /// geometries).
-fn ws_key(payload: &JobPayload, kind: GradientKind) -> WsKey {
+fn ws_key(payload: &JobPayload, kind: GradientKind, precision: Precision) -> WsKey {
     let (family, m, n, k) = match payload {
         JobPayload::Gw1d { u, v, k, .. } => ("grid1d", u.len(), v.len(), *k),
         // FGW shares the GW geometry — the feature term is per job.
@@ -856,6 +928,7 @@ fn ws_key(payload: &JobPayload, kind: GradientKind) -> WsKey {
         k,
         kind,
         eps_bits: payload.epsilon().to_bits(),
+        precision,
     }
 }
 
@@ -873,22 +946,24 @@ fn build_solver_with_epsilon(
     cfg: &CoordinatorConfig,
     epsilon: f64,
 ) -> EntropicGw {
+    // The precision tier is a per-solve knob passed at `solve_batch`
+    // time; the cfg baked into the solver here only seeds workspace
+    // construction (threads), so it stays on the f64 default.
+    let gcfg = gw_cfg(cfg, epsilon, Precision::F64);
     let solver = match payload {
         JobPayload::Gw1d { u, v, k, .. } | JobPayload::Fgw1d { u, v, k, .. } => {
-            EntropicGw::grid_1d(u.len(), v.len(), *k, gw_cfg(cfg, epsilon))
+            EntropicGw::grid_1d(u.len(), v.len(), *k, gcfg)
         }
-        JobPayload::Gw2d { n, k, .. } => EntropicGw::grid_2d(*n, *n, *k, gw_cfg(cfg, epsilon)),
-        JobPayload::Gw3d { n, k, .. } => EntropicGw::grid_3d(*n, *n, *k, gw_cfg(cfg, epsilon)),
+        JobPayload::Gw2d { n, k, .. } => EntropicGw::grid_2d(*n, *n, *k, gcfg),
+        JobPayload::Gw3d { n, k, .. } => EntropicGw::grid_3d(*n, *n, *k, gcfg),
         JobPayload::GwDense { dx, dy, .. } => EntropicGw::new(
             Geometry::Dense(dx.clone()),
             Geometry::Dense(dy.clone()),
-            gw_cfg(cfg, epsilon),
+            gcfg,
         ),
-        JobPayload::GwMixed { dx, grid, .. } => EntropicGw::new(
-            Geometry::Dense(dx.clone()),
-            grid.clone(),
-            gw_cfg(cfg, epsilon),
-        ),
+        JobPayload::GwMixed { dx, grid, .. } => {
+            EntropicGw::new(Geometry::Dense(dx.clone()), grid.clone(), gcfg)
+        }
     };
     if cfg.lowrank_tol > 0.0 {
         solver.with_lowrank_options(LowRankOptions {
@@ -938,15 +1013,21 @@ fn execute_group_fused(
     debug_assert!(!reqs.is_empty());
     let queue_times: Vec<Duration> = reqs.iter().map(|r| r.submitted_at.elapsed()).collect();
     let kind = reqs[0].backend.gradient_kind();
+    // Admission stored the resolved tier; the variant key split on it,
+    // so the whole group agrees.
+    let precision = reqs[0].options.precision.unwrap_or(Precision::F64);
     let started = Instant::now();
     let head = &reqs[0].payload;
-    let key = ws_key(head, kind);
-    let (ws, warm) = cache.get_or_build(&key, head, &ctx.cfg, kind, reqs.len())?;
+    let key = ws_key(head, kind, precision);
+    let (ws, warm) = cache.get_or_build(&key, head, &ctx.cfg, kind, reqs.len(), &ctx.metrics)?;
     let b = reqs.len() as u64;
     if warm {
         ctx.metrics.on_warm(b, 0);
     } else {
         ctx.metrics.on_warm(b - 1, 1);
+    }
+    if precision == Precision::F32Refine && kind != GradientKind::LowRank {
+        ctx.metrics.on_f32_served(b);
     }
     // Scripted faults: a member's panic/numeric arm fails this fused
     // attempt (containment then isolates it); a scripted misprediction
@@ -961,7 +1042,7 @@ fn execute_group_fused(
     let jobs: Vec<BatchJob> = reqs.iter().map(|r| batch_job(&r.payload)).collect();
     // Warm path: solve against the workspace's own bound geometry
     // — no solver construction, no dense-geometry clones.
-    let sols = ws.solve_batch(&gw_cfg(&ctx.cfg, head.epsilon()), &jobs)?;
+    let sols = ws.solve_batch(&gw_cfg(&ctx.cfg, head.epsilon(), precision), &jobs)?;
     // Lockstep wall time is shared; report the per-job mean so the
     // latency accounting stays comparable with per-job execution.
     let solve_each = started.elapsed() / reqs.len().max(1) as u32;
@@ -1005,7 +1086,7 @@ fn execute_group_contained(
             // workspaces it unwound through may hold torn state —
             // rebuild the worker's solver state in place.
             ctx.metrics.on_panic();
-            *cache = WarmCache::new();
+            cache.reset(&ctx.metrics);
             ctx.metrics.on_respawn();
             Prior::Panicked(panic_message(payload))
         }
@@ -1221,7 +1302,10 @@ fn solve_solo(
     }
     ws.set_deadline(req.deadline_instant());
     let job = batch_job(&req.payload);
-    let mut sols = ws.solve_batch(&gw_cfg(cfg, epsilon), &[job])?;
+    // Recovery always solves pure f64: a job that already failed (or
+    // fell back from PJRT) gets the most robust numeric path, not the
+    // throughput tier.
+    let mut sols = ws.solve_batch(&gw_cfg(cfg, epsilon, Precision::F64), &[job])?;
     let sol = sols
         .pop()
         .ok_or_else(|| Error::Runtime("batch solve returned no solution".into()))?;
@@ -1290,7 +1374,7 @@ fn execute_pjrt(
     })
 }
 
-fn gw_cfg(cfg: &CoordinatorConfig, epsilon: f64) -> GwConfig {
+fn gw_cfg(cfg: &CoordinatorConfig, epsilon: f64, precision: Precision) -> GwConfig {
     GwConfig {
         epsilon,
         outer_iters: cfg.outer_iters,
@@ -1298,6 +1382,7 @@ fn gw_cfg(cfg: &CoordinatorConfig, epsilon: f64) -> GwConfig {
         sinkhorn_tolerance: cfg.sinkhorn_tolerance,
         sinkhorn_check_every: 10,
         threads: cfg.solver_threads,
+        precision,
     }
 }
 
@@ -1321,6 +1406,7 @@ mod tests {
             sinkhorn_tolerance: 1e-8,
             solver_threads: 2,
             lowrank_tol: 0.0,
+            precision: Precision::F64,
             submit_timeout: Duration::from_millis(100),
             default_deadline: None,
             default_max_retries: 3,
@@ -1600,6 +1686,96 @@ mod tests {
         };
         let groups = split_same_geometry(vec![mk(1.0, 1), mk(2.0, 2)]);
         assert_eq!(groups.len(), 2, "colliding fingerprints must full-compare");
+    }
+
+    #[test]
+    fn dense_rebind_keeps_cache_warm_when_only_dx_changes() {
+        // The dense analogue of the mixed-payload rebind: a stream of
+        // dense jobs sharing dy but cycling dx must swap the X side in
+        // place (one cold build, then warm hits), and a rebound solve
+        // must match a fresh coordinator's bit-for-bit.
+        let mut rng = Rng::seeded(11);
+        let n = 12;
+        let dy = crate::grid::dense_dist_1d(&crate::grid::Grid1d::unit(n), 2);
+        let dx0 = dy.clone();
+        let dx1 = dy.map(|x| 1.5 * x + 0.2);
+        let u = random_distribution(&mut rng, n);
+        let v = random_distribution(&mut rng, n);
+        let job = |dx: &Mat| {
+            JobPayload::gw_dense(dx.clone(), dy.clone(), u.clone(), v.clone(), 0.05)
+        };
+
+        let mut cfg = test_cfg();
+        cfg.native_workers = 1;
+        let coord = Coordinator::start(cfg).unwrap();
+        let a = coord.submit_and_wait(job(&dx0)).unwrap();
+        let b = coord.submit_and_wait(job(&dx1)).unwrap();
+        assert!(a.objective.is_ok() && b.objective.is_ok());
+        let snap = coord.metrics();
+        assert_eq!(
+            (snap.warm_misses, snap.warm_hits),
+            (1, 1),
+            "second dense support must rebind, not rebuild: {snap}"
+        );
+        coord.shutdown();
+
+        let fresh = Coordinator::start(test_cfg()).unwrap();
+        let f = fresh.submit_and_wait(job(&dx1)).unwrap();
+        assert_eq!(
+            b.objective.unwrap(),
+            f.objective.unwrap(),
+            "rebound solve must match a fresh build bit-for-bit"
+        );
+        fresh.shutdown();
+    }
+
+    #[test]
+    fn f32_tier_serves_and_tracks_metrics() {
+        // Service-wide f32 tier: jobs complete, the objective tracks
+        // the pure-f64 coordinator's, and the tier is observable in
+        // f32_served / warm_units (an f32 entry charges 1 unit).
+        let payload = gw_payload(20, 21);
+        let coord64 = Coordinator::start(test_cfg()).unwrap();
+        let o64 = coord64
+            .submit_and_wait(payload.clone())
+            .unwrap()
+            .objective
+            .unwrap();
+        coord64.shutdown();
+
+        let mut cfg = test_cfg();
+        cfg.native_workers = 1;
+        cfg.precision = Precision::F32Refine;
+        let coord32 = Coordinator::start(cfg).unwrap();
+        let o32 = coord32
+            .submit_and_wait(payload)
+            .unwrap()
+            .objective
+            .unwrap();
+        let snap = coord32.metrics();
+        assert_eq!(snap.f32_served, 1, "{snap}");
+        assert_eq!(snap.warm_units, 1, "f32 entry charges one unit: {snap}");
+        assert!(
+            (o32 - o64).abs() <= 1e-3 * o64.abs() + 1e-9,
+            "f32+refine objective {o32} drifted from f64 {o64}"
+        );
+        coord32.shutdown();
+    }
+
+    #[test]
+    fn auto_precision_resolves_small_jobs_to_f64() {
+        let mut cfg = test_cfg();
+        cfg.precision = Precision::Auto;
+        let coord = Coordinator::start(cfg).unwrap();
+        let res = coord.submit_and_wait(gw_payload(16, 5)).unwrap();
+        assert!(res.objective.is_ok());
+        let snap = coord.metrics();
+        assert_eq!(
+            snap.f32_served, 0,
+            "below the serve threshold auto must stay f64: {snap}"
+        );
+        assert_eq!(snap.warm_units, 2, "f64 entry charges two units: {snap}");
+        coord.shutdown();
     }
 
     #[test]

@@ -25,6 +25,7 @@ use crate::error::{Error, Result};
 use crate::grid::{Binomial, Grid2d};
 use crate::linalg::Mat;
 use crate::parallel::{self, Parallelism, SharedMutSlice};
+use crate::scalar::Scalar;
 
 /// Reusable buffers for the 2D FGC pass.
 #[derive(Debug)]
@@ -235,22 +236,22 @@ pub fn dxgdy_2d(
 /// independently (every inner scan is column-exact), which is what the
 /// separable engine's horizontally-stacked batch pass relies on.
 #[allow(clippy::too_many_arguments)]
-pub(crate) fn dhat_cols_with(
+pub(crate) fn dhat_cols_with<T: Scalar>(
     n: usize,
     ncols: usize,
     k: u32,
-    x: &[f64],
-    out: &mut [f64],
-    tmp: &mut [f64],
-    scratch: &mut [f64],
-    carry: &mut [f64],
+    x: &[T],
+    out: &mut [T],
+    tmp: &mut [T],
+    scratch: &mut [T],
+    carry: &mut [T],
     binom: &Binomial,
     par: Parallelism,
 ) {
     let total = n * n * ncols;
     assert_eq!(x.len(), total);
     assert!(out.len() >= total && tmp.len() >= total && scratch.len() >= total);
-    out.fill(0.0);
+    out.fill(T::ZERO);
     // Each term = (P_kr ⊗ P_kc) x via two batched passes; the second
     // pass scans all n·n rows at once, striped over threads.
     for s in 0..=k {
@@ -260,7 +261,7 @@ pub(crate) fn dhat_cols_with(
             let dst = &mut tmp[b * n * ncols..(b + 1) * n * ncols];
             dtilde_cols_par(kc, kc == 0, n, ncols, blk, dst, carry, binom, par);
         }
-        let coef = binom.c(k as usize, s as usize);
+        let coef = T::from_f64(binom.c(k as usize, s as usize));
         dtilde_cols_par(
             kr,
             kr == 0,
@@ -282,24 +283,24 @@ pub(crate) fn dhat_cols_with(
 /// the gradient product; scans stay serial because the caller already
 /// distributed rows over the thread budget).
 #[allow(clippy::too_many_arguments)]
-pub(crate) fn dhat_vec_into(
+pub(crate) fn dhat_vec_into<T: Scalar>(
     n: usize,
     k: u32,
-    x: &[f64],
-    y: &mut [f64],
-    t1: &mut [f64],
-    t2: &mut [f64],
-    carry: &mut [f64],
+    x: &[T],
+    y: &mut [T],
+    t1: &mut [T],
+    t2: &mut [T],
+    carry: &mut [T],
     binom: &Binomial,
 ) -> Result<()> {
     let total = n * n;
     debug_assert_eq!(x.len(), total);
-    y.fill(0.0);
+    y.fill(T::ZERO);
     for s in 0..=k {
         let (kr, kc) = (s, k - s);
         dtilde_rows(kc, kc == 0, n, n, x, t1, binom)?;
         dtilde_cols(kr, kr == 0, n, n, t1, t2, carry, binom);
-        let coef = binom.c(k as usize, s as usize);
+        let coef = T::from_f64(binom.c(k as usize, s as usize));
         for (o, &v) in y.iter_mut().zip(t2.iter()) {
             *o += coef * v;
         }

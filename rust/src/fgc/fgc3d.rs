@@ -30,6 +30,7 @@ use crate::error::{Error, Result};
 use crate::grid::Binomial;
 use crate::linalg::Mat;
 use crate::parallel::Parallelism;
+use crate::scalar::Scalar;
 
 pub use crate::grid::Grid3d;
 
@@ -38,6 +39,10 @@ pub use crate::grid::Grid3d;
 pub struct Workspace3d {
     t1: Vec<f64>,
     t2: Vec<f64>,
+    /// Hoisted z-axis scan (the exponent-`r` axis-0 pass depends only
+    /// on `r`, so it is computed once per `r` and reused across the
+    /// whole inner `s`-loop — ~11–17% of the multinomial FMAs saved).
+    t3: Vec<f64>,
     carry: Vec<f64>,
     binom: Binomial,
     k: u32,
@@ -51,6 +56,7 @@ impl Workspace3d {
         Workspace3d {
             t1: vec![0.0; nn],
             t2: vec![0.0; nn],
+            t3: vec![0.0; nn],
             carry: vec![0.0; (2 * k as usize + 1) * n * n],
             binom: Binomial::new((2 * k as usize).max(4)),
             k,
@@ -65,40 +71,47 @@ impl Workspace3d {
 }
 
 /// `y = D̂₃^{(k)} x` (unscaled), `x ∈ ℝ^{n³}`, with fully
-/// caller-provided buffers: `t1`, `t2` of length ≥ `n³` and `carry` of
-/// length ≥ `(k+1)·n²`. Each output element is a fixed-order
-/// accumulation over the multinomial terms, independent of anything
-/// outside `x` — the row-exactness the separable engine's vertical
-/// batch stacking relies on. The exponent must be pre-validated
+/// caller-provided buffers: `t1`, `t2`, `t3` of length ≥ `n³` and
+/// `carry` of length ≥ `(k+1)·n²`. Each output element is a
+/// fixed-order accumulation over the multinomial terms, independent of
+/// anything outside `x` — the row-exactness the separable engine's
+/// vertical batch stacking relies on. The axis-0 (z) scan depends only
+/// on `r`, so it is hoisted out of the `s`-loop into `t3` and reused
+/// across all `k−r+1` inner terms; the cached values are the exact
+/// scan outputs, so every downstream accumulation is bitwise identical
+/// to the unhoisted form. The exponent must be pre-validated
 /// ([`check_scan_exponent`]); the internal row scan re-checks and
 /// propagates [`Error::Invalid`] for oversized `k`.
 #[allow(clippy::too_many_arguments)]
-pub(crate) fn dhat3_vec_into(
+pub(crate) fn dhat3_vec_into<T: Scalar>(
     n: usize,
     k: u32,
-    x: &[f64],
-    y: &mut [f64],
-    t1: &mut [f64],
-    t2: &mut [f64],
-    carry: &mut [f64],
+    x: &[T],
+    y: &mut [T],
+    t1: &mut [T],
+    t2: &mut [T],
+    t3: &mut [T],
+    carry: &mut [T],
     binom: &Binomial,
 ) -> Result<()> {
     let nn = n * n * n;
     debug_assert_eq!(x.len(), nn);
     debug_assert_eq!(y.len(), nn);
-    debug_assert!(t1.len() >= nn && t2.len() >= nn);
-    y.fill(0.0);
+    debug_assert!(t1.len() >= nn && t2.len() >= nn && t3.len() >= nn);
+    y.fill(T::ZERO);
     for r in 0..=k {
+        // axis 0 (z): one batched scan over n rows of width n² —
+        // hoisted, it only depends on r.
+        dtilde_cols(r, r == 0, n, n * n, x, &mut t3[..nn], carry, binom);
         for s in 0..=(k - r) {
             let t = k - r - s;
             // multinomial k!/(r!s!t!) = C(k,r)·C(k−r,s)
-            let coef =
-                binom.c(k as usize, r as usize) * binom.c((k - r) as usize, s as usize);
-            // axis 0 (z): one batched scan over n rows of width n².
-            dtilde_cols(r, r == 0, n, n * n, x, &mut t1[..nn], carry, binom);
+            let coef = T::from_f64(
+                binom.c(k as usize, r as usize) * binom.c((k - r) as usize, s as usize),
+            );
             // axis 1 (y): per z-block batched scan (n rows × n cols).
             for z in 0..n {
-                let blk = &t1[z * n * n..(z + 1) * n * n];
+                let blk = &t3[z * n * n..(z + 1) * n * n];
                 let dst = &mut t2[z * n * n..(z + 1) * n * n];
                 dtilde_cols(s, s == 0, n, n, blk, dst, carry, binom);
             }
@@ -114,48 +127,53 @@ pub(crate) fn dhat3_vec_into(
 
 /// Apply `D̂₃^{(k)}` (unscaled) to every **column** of the row-major
 /// `n³ × ncols` matrix `x` — the batched left-multiplication of the
-/// separable column pass. `tmp` and `scratch` are full-size
+/// separable column pass. `tmp`, `scratch` and `zscan` are full-size
 /// (`≥ n³·ncols`) intermediates; `carry` must hold `(k+1)·n²·ncols`
-/// (the widest axis scan). Every inner scan computes its columns
-/// independently, so each result column is bitwise identical
-/// regardless of the stacked width — the batch-exactness contract.
+/// (the widest axis scan). The z-axis scan depends only on `r` and is
+/// hoisted into `zscan` once per `r`, reused across the inner
+/// `s`-loop. Every inner scan computes its columns independently, so
+/// each result column is bitwise identical regardless of the stacked
+/// width — the batch-exactness contract.
 #[allow(clippy::too_many_arguments)]
-pub(crate) fn dhat3_cols_with(
+pub(crate) fn dhat3_cols_with<T: Scalar>(
     n: usize,
     ncols: usize,
     k: u32,
-    x: &[f64],
-    out: &mut [f64],
-    tmp: &mut [f64],
-    scratch: &mut [f64],
-    carry: &mut [f64],
+    x: &[T],
+    out: &mut [T],
+    tmp: &mut [T],
+    scratch: &mut [T],
+    zscan: &mut [T],
+    carry: &mut [T],
     binom: &Binomial,
     par: Parallelism,
 ) {
     let total = n * n * n * ncols;
     assert_eq!(x.len(), total);
     assert!(out.len() >= total && tmp.len() >= total && scratch.len() >= total);
-    out[..total].fill(0.0);
+    assert!(zscan.len() >= total);
+    out[..total].fill(T::ZERO);
     for r in 0..=k {
+        // axis 0 (z): n rows of width n²·ncols — hoisted per r.
+        dtilde_cols_par(
+            r,
+            r == 0,
+            n,
+            n * n * ncols,
+            x,
+            &mut zscan[..total],
+            carry,
+            binom,
+            par,
+        );
         for s in 0..=(k - r) {
             let t = k - r - s;
-            let coef =
-                binom.c(k as usize, r as usize) * binom.c((k - r) as usize, s as usize);
-            // axis 0 (z): n rows of width n²·ncols.
-            dtilde_cols_par(
-                r,
-                r == 0,
-                n,
-                n * n * ncols,
-                x,
-                &mut tmp[..total],
-                carry,
-                binom,
-                par,
+            let coef = T::from_f64(
+                binom.c(k as usize, r as usize) * binom.c((k - r) as usize, s as usize),
             );
             // axis 1 (y): per z-block, n rows of width n·ncols.
             for z in 0..n {
-                let blk = &tmp[z * n * n * ncols..(z + 1) * n * n * ncols];
+                let blk = &zscan[z * n * n * ncols..(z + 1) * n * n * ncols];
                 let dst = &mut scratch[z * n * n * ncols..(z + 1) * n * n * ncols];
                 dtilde_cols_par(s, s == 0, n, n * ncols, blk, dst, carry, binom, par);
             }
@@ -198,7 +216,17 @@ pub fn dhat3_apply(n: usize, k: u32, x: &[f64], y: &mut [f64], ws: &mut Workspac
             ws.t1.len()
         )));
     }
-    dhat3_vec_into(n, k, x, y, &mut ws.t1, &mut ws.t2, &mut ws.carry, &ws.binom)
+    dhat3_vec_into(
+        n,
+        k,
+        x,
+        y,
+        &mut ws.t1,
+        &mut ws.t2,
+        &mut ws.t3,
+        &mut ws.carry,
+        &ws.binom,
+    )
 }
 
 /// `G = D_X Γ D_Y` on 3D grids in `O(k⁴N²)`: per-row applications for
@@ -321,6 +349,7 @@ mod tests {
         let mut out = vec![0.0; nn * ncols];
         let mut tmp = vec![0.0; nn * ncols];
         let mut scratch = vec![0.0; nn * ncols];
+        let mut zscan = vec![0.0; nn * ncols];
         let mut carry = vec![0.0; (k as usize + 1) * n * n * ncols];
         dhat3_cols_with(
             n,
@@ -330,6 +359,7 @@ mod tests {
             &mut out,
             &mut tmp,
             &mut scratch,
+            &mut zscan,
             &mut carry,
             &binom,
             Parallelism::SERIAL,

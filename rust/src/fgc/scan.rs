@@ -42,6 +42,7 @@
 use crate::error::{Error, Result};
 use crate::grid::Binomial;
 use crate::parallel::{self, Parallelism, SharedMutSlice};
+use crate::scalar::Scalar;
 
 /// Largest distance exponent the scalar-carry scans support (the
 /// stack-allocated carry block holds `k+1 ≤ 16` lanes — far beyond
@@ -60,21 +61,27 @@ pub fn check_scan_exponent(k: u32) -> Result<()> {
 }
 
 /// `y = L x` with exponent `k` (unscaled; `L_{ij} = (i−j)^k`, `i>j`).
-pub fn apply_l_vec(k: u32, x: &[f64], y: &mut [f64], binom: &Binomial) {
-    let mut carry = vec![0.0f64; k as usize + 1];
+pub fn apply_l_vec<T: Scalar>(k: u32, x: &[T], y: &mut [T], binom: &Binomial) {
+    let mut carry = vec![T::ZERO; k as usize + 1];
     apply_l_vec_with(k, x, y, &mut carry, binom);
 }
 
 /// [`apply_l_vec`] with caller-provided carry scratch
 /// (≥ `k+1` entries) — the zero-allocation form the per-iteration
 /// `C₁`/sq-apply paths run on.
-pub fn apply_l_vec_with(k: u32, x: &[f64], y: &mut [f64], carry: &mut [f64], binom: &Binomial) {
+pub fn apply_l_vec_with<T: Scalar>(
+    k: u32,
+    x: &[T],
+    y: &mut [T],
+    carry: &mut [T],
+    binom: &Binomial,
+) {
     let n = x.len();
     assert_eq!(y.len(), n);
     let kk = k as usize;
     // carry[rr] = a_{i, rr+1}
     let carry = &mut carry[..kk + 1];
-    carry.fill(0.0);
+    carry.fill(T::ZERO);
     for i in 0..n {
         y[i] = carry[kk];
         // Descending rr keeps reads of old carry[0..=rr] valid in place.
@@ -83,7 +90,7 @@ pub fn apply_l_vec_with(k: u32, x: &[f64], y: &mut [f64], carry: &mut [f64], bin
             let mut acc = xi;
             let coefs = binom.row(rr);
             for ss in 0..=rr {
-                acc += coefs[ss] * carry[ss];
+                acc += T::from_f64(coefs[ss]) * carry[ss];
             }
             carry[rr] = acc;
         }
@@ -91,18 +98,24 @@ pub fn apply_l_vec_with(k: u32, x: &[f64], y: &mut [f64], carry: &mut [f64], bin
 }
 
 /// `y = Lᵀ x` with exponent `k` (backward scan).
-pub fn apply_lt_vec(k: u32, x: &[f64], y: &mut [f64], binom: &Binomial) {
-    let mut carry = vec![0.0f64; k as usize + 1];
+pub fn apply_lt_vec<T: Scalar>(k: u32, x: &[T], y: &mut [T], binom: &Binomial) {
+    let mut carry = vec![T::ZERO; k as usize + 1];
     apply_lt_vec_with(k, x, y, &mut carry, binom);
 }
 
 /// [`apply_lt_vec`] with caller-provided carry scratch (≥ `k+1`).
-pub fn apply_lt_vec_with(k: u32, x: &[f64], y: &mut [f64], carry: &mut [f64], binom: &Binomial) {
+pub fn apply_lt_vec_with<T: Scalar>(
+    k: u32,
+    x: &[T],
+    y: &mut [T],
+    carry: &mut [T],
+    binom: &Binomial,
+) {
     let n = x.len();
     assert_eq!(y.len(), n);
     let kk = k as usize;
     let carry = &mut carry[..kk + 1];
-    carry.fill(0.0);
+    carry.fill(T::ZERO);
     for i in (0..n).rev() {
         y[i] = carry[kk];
         let xi = x[i];
@@ -110,7 +123,7 @@ pub fn apply_lt_vec_with(k: u32, x: &[f64], y: &mut [f64], carry: &mut [f64], bi
             let mut acc = xi;
             let coefs = binom.row(rr);
             for ss in 0..=rr {
-                acc += coefs[ss] * carry[ss];
+                acc += T::from_f64(coefs[ss]) * carry[ss];
             }
             carry[rr] = acc;
         }
@@ -120,9 +133,15 @@ pub fn apply_lt_vec_with(k: u32, x: &[f64], y: &mut [f64], carry: &mut [f64], bi
 /// `y = (L + Lᵀ [+ I]) x` — the full unscaled grid operator
 /// `D̃^{(k)}x` in `O(k²N)`. `diag_one` adds the identity (needed for
 /// exponent 0 under the `0⁰ = 1` convention of the 2D expansion).
-pub fn apply_dtilde_vec(k: u32, diag_one: bool, x: &[f64], y: &mut [f64], binom: &Binomial) {
-    let mut tmp = vec![0.0f64; x.len()];
-    let mut carry = vec![0.0f64; k as usize + 1];
+pub fn apply_dtilde_vec<T: Scalar>(
+    k: u32,
+    diag_one: bool,
+    x: &[T],
+    y: &mut [T],
+    binom: &Binomial,
+) {
+    let mut tmp = vec![T::ZERO; x.len()];
+    let mut carry = vec![T::ZERO; k as usize + 1];
     apply_dtilde_vec_with(k, diag_one, x, y, &mut tmp, &mut carry, binom);
 }
 
@@ -132,13 +151,13 @@ pub fn apply_dtilde_vec(k: u32, diag_one: bool, x: &[f64], y: &mut [f64], binom:
 /// form, minus the two heap allocations that used to sit on the
 /// UGW/COOT per-iteration `C₁` path (see ROADMAP "zero-allocation
 /// parity").
-pub fn apply_dtilde_vec_with(
+pub fn apply_dtilde_vec_with<T: Scalar>(
     k: u32,
     diag_one: bool,
-    x: &[f64],
-    y: &mut [f64],
-    tmp: &mut [f64],
-    carry: &mut [f64],
+    x: &[T],
+    y: &mut [T],
+    tmp: &mut [T],
+    carry: &mut [T],
     binom: &Binomial,
 ) {
     let n = x.len();
@@ -161,14 +180,14 @@ pub fn apply_dtilde_vec_with(
 /// contiguous fused loops), then the mirrored backward scan for `Lᵀ`.
 /// `carry` is caller-provided workspace of shape `(k+1)·cols` so the
 /// mirror-descent loop never allocates.
-pub fn dtilde_cols(
+pub fn dtilde_cols<T: Scalar>(
     k: u32,
     diag_one: bool,
     rows: usize,
     cols: usize,
-    x: &[f64],
-    out: &mut [f64],
-    carry: &mut [f64],
+    x: &[T],
+    out: &mut [T],
+    carry: &mut [T],
     binom: &Binomial,
 ) {
     dtilde_cols_par(
@@ -190,14 +209,14 @@ pub fn dtilde_cols(
 /// count. `carry` must still hold `(k+1)·cols`; stripes carve disjoint
 /// carry blocks out of it, so the hot path stays allocation-free.
 #[allow(clippy::too_many_arguments)]
-pub fn dtilde_cols_par(
+pub fn dtilde_cols_par<T: Scalar>(
     k: u32,
     diag_one: bool,
     rows: usize,
     cols: usize,
-    x: &[f64],
-    out: &mut [f64],
-    carry: &mut [f64],
+    x: &[T],
+    out: &mut [T],
+    carry: &mut [T],
     binom: &Binomial,
     par: Parallelism,
 ) {
@@ -236,15 +255,15 @@ pub fn dtilde_cols_par(
 /// One column stripe `span` of the batched scan: identical to the full
 /// scan restricted to those columns (row stride stays `stride`).
 #[allow(clippy::too_many_arguments)]
-fn dtilde_cols_span(
+fn dtilde_cols_span<T: Scalar>(
     kk: usize,
     diag_one: bool,
     rows: usize,
     stride: usize,
     span: std::ops::Range<usize>,
-    x: &[f64],
-    out: &SharedMutSlice<'_>,
-    carry: &mut [f64],
+    x: &[T],
+    out: &SharedMutSlice<'_, T>,
+    carry: &mut [T],
     binom: &Binomial,
 ) {
     let width = span.len();
@@ -254,7 +273,7 @@ fn dtilde_cols_span(
     let carry = &mut carry[..(kk + 1) * width];
 
     // ---- forward pass: out_row(i) = a_{i,k+1}; update carries ----
-    carry.fill(0.0);
+    carry.fill(T::ZERO);
     for i in 0..rows {
         let base = i * stride;
         let xrow = &x[base + span.start..base + span.end];
@@ -271,7 +290,7 @@ fn dtilde_cols_span(
     }
 
     // ---- backward pass: out_row(i) += b_{i,k+1} ----
-    carry.fill(0.0);
+    carry.fill(T::ZERO);
     for i in (0..rows).rev() {
         let base = i * stride;
         let xrow = &x[base + span.start..base + span.end];
@@ -287,6 +306,39 @@ fn dtilde_cols_span(
     }
 }
 
+/// General-`k` carry update shared by the scalar and `simd` variants
+/// of [`update_carries`]: for rr descending,
+/// `carry[rr] = x + Σ_{ss≤rr} C(rr,ss)·carry[ss]` as axpy-shaped
+/// column sweeps. Per-column op order is identical either way, so the
+/// feature swap only affects the fused small-`k` arms below.
+#[inline]
+fn update_carries_general<T: Scalar>(
+    kk: usize,
+    cols: usize,
+    xrow: &[T],
+    carry: &mut [T],
+    binom: &Binomial,
+) {
+    for rr in (0..=kk).rev() {
+        let coefs = binom.row(rr);
+        // Split so we can read carry[ss] (ss < rr) while
+        // writing carry[rr].
+        let (lower, upper) = carry.split_at_mut(rr * cols);
+        let dst = &mut upper[..cols];
+        // carry[rr] ← C(rr,rr)=1 · carry[rr] + x (self term)
+        for (d, &xv) in dst.iter_mut().zip(xrow) {
+            *d += xv;
+        }
+        for ss in 0..rr {
+            let c = T::from_f64(coefs[ss]);
+            let src = &lower[ss * cols..(ss + 1) * cols];
+            for (d, &s) in dst.iter_mut().zip(src) {
+                *d += c * s;
+            }
+        }
+    }
+}
+
 /// Shared carry update for the batched scans: for rr descending,
 /// `carry[rr] = x + Σ_{ss≤rr} C(rr,ss)·carry[ss]` (vectors of length
 /// `cols`).
@@ -295,8 +347,15 @@ fn dtilde_cols_span(
 /// squared-distance products with 2k = 2) are fully fused single-pass
 /// loops — these dominate every benchmark in the paper (§Perf in
 /// EXPERIMENTS.md records the measured effect).
+#[cfg(not(feature = "simd"))]
 #[inline]
-fn update_carries(kk: usize, cols: usize, xrow: &[f64], carry: &mut [f64], binom: &Binomial) {
+fn update_carries<T: Scalar>(
+    kk: usize,
+    cols: usize,
+    xrow: &[T],
+    carry: &mut [T],
+    binom: &Binomial,
+) {
     match kk {
         0 => {
             // carry0 += x
@@ -323,31 +382,90 @@ fn update_carries(kk: usize, cols: usize, xrow: &[f64], carry: &mut [f64], binom
                 .zip(c0.iter_mut())
                 .zip(xrow)
             {
-                *d2 += xv + *d0 + 2.0 * *d1;
+                *d2 += xv + *d0 + T::TWO * *d1;
                 *d1 += xv + *d0;
                 *d0 += xv;
             }
         }
-        _ => {
-            for rr in (0..=kk).rev() {
-                let coefs = binom.row(rr);
-                // Split so we can read carry[ss] (ss < rr) while
-                // writing carry[rr].
-                let (lower, upper) = carry.split_at_mut(rr * cols);
-                let dst = &mut upper[..cols];
-                // carry[rr] ← C(rr,rr)=1 · carry[rr] + x (self term)
-                for (d, &xv) in dst.iter_mut().zip(xrow) {
-                    *d += xv;
-                }
-                for ss in 0..rr {
-                    let c = coefs[ss];
-                    let src = &lower[ss * cols..(ss + 1) * cols];
-                    for (d, &s) in dst.iter_mut().zip(src) {
-                        *d += c * s;
-                    }
-                }
+        _ => update_carries_general(kk, cols, xrow, carry, binom),
+    }
+}
+
+/// [`update_carries`], `simd` variant: the fused small-`k` arms are
+/// unrolled four **columns** (independent outputs) per step so the
+/// carry sweeps compile to packed FMA lanes. Scan carries couple rows
+/// to rows, never column to column, so each column's update sequence
+/// is exactly the scalar fallback's — bit-for-bit parity is asserted
+/// by `tests/precision_simd.rs` at thread counts {1, 2, 4, 7}.
+#[cfg(feature = "simd")]
+#[inline]
+fn update_carries<T: Scalar>(
+    kk: usize,
+    cols: usize,
+    xrow: &[T],
+    carry: &mut [T],
+    binom: &Binomial,
+) {
+    match kk {
+        0 => {
+            let c0 = &mut carry[..cols];
+            let chunks = cols / 4;
+            for c in 0..chunks {
+                let j = c * 4;
+                c0[j] += xrow[j];
+                c0[j + 1] += xrow[j + 1];
+                c0[j + 2] += xrow[j + 2];
+                c0[j + 3] += xrow[j + 3];
+            }
+            for j in chunks * 4..cols {
+                c0[j] += xrow[j];
             }
         }
+        1 => {
+            let (c0, c1) = carry.split_at_mut(cols);
+            let chunks = cols / 4;
+            for c in 0..chunks {
+                let j = c * 4;
+                c1[j] += xrow[j] + c0[j];
+                c0[j] += xrow[j];
+                c1[j + 1] += xrow[j + 1] + c0[j + 1];
+                c0[j + 1] += xrow[j + 1];
+                c1[j + 2] += xrow[j + 2] + c0[j + 2];
+                c0[j + 2] += xrow[j + 2];
+                c1[j + 3] += xrow[j + 3] + c0[j + 3];
+                c0[j + 3] += xrow[j + 3];
+            }
+            for j in chunks * 4..cols {
+                c1[j] += xrow[j] + c0[j];
+                c0[j] += xrow[j];
+            }
+        }
+        2 => {
+            let (c0, rest) = carry.split_at_mut(cols);
+            let (c1, c2) = rest.split_at_mut(cols);
+            let chunks = cols / 4;
+            for c in 0..chunks {
+                let j = c * 4;
+                c2[j] += xrow[j] + c0[j] + T::TWO * c1[j];
+                c1[j] += xrow[j] + c0[j];
+                c0[j] += xrow[j];
+                c2[j + 1] += xrow[j + 1] + c0[j + 1] + T::TWO * c1[j + 1];
+                c1[j + 1] += xrow[j + 1] + c0[j + 1];
+                c0[j + 1] += xrow[j + 1];
+                c2[j + 2] += xrow[j + 2] + c0[j + 2] + T::TWO * c1[j + 2];
+                c1[j + 2] += xrow[j + 2] + c0[j + 2];
+                c0[j + 2] += xrow[j + 2];
+                c2[j + 3] += xrow[j + 3] + c0[j + 3] + T::TWO * c1[j + 3];
+                c1[j + 3] += xrow[j + 3] + c0[j + 3];
+                c0[j + 3] += xrow[j + 3];
+            }
+            for j in chunks * 4..cols {
+                c2[j] += xrow[j] + c0[j] + T::TWO * c1[j];
+                c1[j] += xrow[j] + c0[j];
+                c0[j] += xrow[j];
+            }
+        }
+        _ => update_carries_general(kk, cols, xrow, carry, binom),
     }
 }
 
@@ -358,13 +476,13 @@ fn update_carries(kk: usize, cols: usize, xrow: &[f64], carry: &mut [f64], binom
 ///
 /// Errors with [`Error::Invalid`] when `k` exceeds
 /// [`MAX_SCAN_EXPONENT`] (the scalar carry block is stack-allocated).
-pub fn dtilde_rows(
+pub fn dtilde_rows<T: Scalar>(
     k: u32,
     diag_one: bool,
     rows: usize,
     cols: usize,
-    x: &[f64],
-    out: &mut [f64],
+    x: &[T],
+    out: &mut [T],
     binom: &Binomial,
 ) -> Result<()> {
     dtilde_rows_par(k, diag_one, rows, cols, x, out, binom, Parallelism::SERIAL)
@@ -374,13 +492,13 @@ pub fn dtilde_rows(
 /// independent (each carries its own scalar state), so the result is
 /// bitwise identical to the serial scan for every thread count.
 #[allow(clippy::too_many_arguments)]
-pub fn dtilde_rows_par(
+pub fn dtilde_rows_par<T: Scalar>(
     k: u32,
     diag_one: bool,
     rows: usize,
     cols: usize,
-    x: &[f64],
-    out: &mut [f64],
+    x: &[T],
+    out: &mut [T],
     binom: &Binomial,
     par: Parallelism,
 ) -> Result<()> {
@@ -390,12 +508,12 @@ pub fn dtilde_rows_par(
     let kk = k as usize;
     let min_rows = parallel::min_rows_for(cols * (kk + 1));
     parallel::for_row_blocks(par, rows, cols, min_rows, out, |_b, rr, oblk| {
-        let mut carry = [0.0f64; MAX_SCAN_EXPONENT as usize + 1];
+        let mut carry = [T::ZERO; MAX_SCAN_EXPONENT as usize + 1];
         for (local, r) in rr.enumerate() {
             let xrow = &x[r * cols..(r + 1) * cols];
             let orow = &mut oblk[local * cols..(local + 1) * cols];
             // forward (L)
-            carry[..=kk].fill(0.0);
+            carry[..=kk].fill(T::ZERO);
             for j in 0..cols {
                 orow[j] = carry[kk];
                 if diag_one {
@@ -404,7 +522,7 @@ pub fn dtilde_rows_par(
                 scalar_update(kk, xrow[j], &mut carry, binom);
             }
             // backward (Lᵀ)
-            carry[..=kk].fill(0.0);
+            carry[..=kk].fill(T::ZERO);
             for j in (0..cols).rev() {
                 orow[j] += carry[kk];
                 scalar_update(kk, xrow[j], &mut carry, binom);
@@ -415,10 +533,10 @@ pub fn dtilde_rows_par(
 }
 
 #[inline]
-fn scalar_update(
+fn scalar_update<T: Scalar>(
     kk: usize,
-    xv: f64,
-    carry: &mut [f64; MAX_SCAN_EXPONENT as usize + 1],
+    xv: T,
+    carry: &mut [T; MAX_SCAN_EXPONENT as usize + 1],
     binom: &Binomial,
 ) {
     // Fused small-k fast paths mirroring `update_carries` (§Perf).
@@ -429,7 +547,7 @@ fn scalar_update(
             carry[0] += xv;
         }
         2 => {
-            carry[2] += xv + carry[0] + 2.0 * carry[1];
+            carry[2] += xv + carry[0] + T::TWO * carry[1];
             carry[1] += xv + carry[0];
             carry[0] += xv;
         }
@@ -438,7 +556,7 @@ fn scalar_update(
                 let coefs = binom.row(rr);
                 let mut acc = xv;
                 for ss in 0..=rr {
-                    acc += coefs[ss] * carry[ss];
+                    acc += T::from_f64(coefs[ss]) * carry[ss];
                 }
                 carry[rr] = acc;
             }

@@ -34,6 +34,7 @@ use crate::error::{Error, Result};
 use crate::grid::{Binomial, Grid1d, Grid2d, Grid3d};
 use crate::linalg::{axpy, Mat};
 use crate::parallel::{self, Parallelism, SharedMutSlice};
+use crate::scalar::Scalar;
 
 /// One side of the separable product: how that side's distance matrix
 /// is applied.
@@ -119,6 +120,57 @@ fn grow(v: &mut Vec<f64>, need: usize) {
     }
 }
 
+/// Borrowed, precision-generic view of one axis factor — exactly what
+/// the row/col passes need (scan shape parameters or a raw dense
+/// payload), detached from the f64-only [`AxisFactor`] wrappers. The
+/// f64 pipeline views `AxisFactor` through [`AxisFactor::factor_ref`];
+/// the f32 serving lane (`crate::gw::precision`) builds its own
+/// narrowed payloads and streams them through the same passes.
+#[derive(Clone, Copy)]
+pub(crate) enum FactorRef<'a, T> {
+    /// 1D scan factor (the grid size is the pass's `rows`/`cols`).
+    Scan1d {
+        /// Distance exponent `k`.
+        k: u32,
+    },
+    /// 2D Kronecker-of-scans factor over an `n×n` grid.
+    Scan2d {
+        /// Grid side length.
+        n: usize,
+        /// Distance exponent `k`.
+        k: u32,
+    },
+    /// 3D multinomial factor over an `n×n×n` grid.
+    Scan3d {
+        /// Grid side length.
+        n: usize,
+        /// Distance exponent `k`.
+        k: u32,
+    },
+    /// Row-major `dim×dim` dense payload.
+    Dense {
+        /// The payload.
+        d: &'a [T],
+        /// Factor dimension.
+        dim: usize,
+    },
+}
+
+impl AxisFactor {
+    /// The precision-generic borrowed view the passes run on.
+    pub(crate) fn factor_ref(&self) -> FactorRef<'_, f64> {
+        match self {
+            AxisFactor::Scan1d { k, .. } => FactorRef::Scan1d { k: *k },
+            AxisFactor::Scan2d { grid, k } => FactorRef::Scan2d { n: grid.n, k: *k },
+            AxisFactor::Scan3d { grid, k } => FactorRef::Scan3d { n: grid.n, k: *k },
+            AxisFactor::Dense(d) => FactorRef::Dense {
+                d: d.as_slice(),
+                dim: d.rows(),
+            },
+        }
+    }
+}
+
 /// `dst = scale · src` (plain copy when the deferred scale is 1).
 fn scale_into(scale: f64, src: &[f64], dst: &mut [f64]) {
     if scale == 1.0 {
@@ -135,26 +187,28 @@ fn scale_into(scale: f64, src: &[f64], dst: &mut [f64]) {
 /// for scan factors (the deferred `h^k` is the caller's). Rows are
 /// computed independently and bitwise identically regardless of how
 /// many rows surround them, which is what makes the vertical batch
-/// stack exact.
-fn apply_to_rows(
-    factor: &AxisFactor,
+/// stack exact. Precision-generic: the f64 pipeline and the f32
+/// serving lane share this dispatch.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn apply_to_rows<T: Scalar>(
+    factor: FactorRef<'_, T>,
     rows: usize,
     cols: usize,
-    x: &[f64],
-    out: &mut [f64],
+    x: &[T],
+    out: &mut [T],
     binom: &Binomial,
-    row_t1: &mut [f64],
-    row_t2: &mut [f64],
-    row_carry: &mut [f64],
+    row_t1: &mut [T],
+    row_t2: &mut [T],
+    row_t3: &mut [T],
+    row_carry: &mut [T],
     par: Parallelism,
 ) -> Result<()> {
     debug_assert_eq!(x.len(), rows * cols);
     debug_assert_eq!(out.len(), rows * cols);
-    debug_assert_eq!(factor.len(), cols);
     match factor {
-        AxisFactor::Scan1d { k, .. } => dtilde_rows_par(*k, false, rows, cols, x, out, binom, par),
-        AxisFactor::Scan2d { grid, k } => {
-            let (n, kk, k) = (grid.n, *k as usize, *k);
+        FactorRef::Scan1d { k } => dtilde_rows_par(k, false, rows, cols, x, out, binom, par),
+        FactorRef::Scan2d { n, k } => {
+            let kk = k as usize;
             let cw = (kk + 1) * n;
             let st1 = SharedMutSlice::new(row_t1);
             let st2 = SharedMutSlice::new(row_t2);
@@ -176,13 +230,15 @@ fn apply_to_rows(
             });
             Ok(())
         }
-        AxisFactor::Scan3d { grid, k } => {
+        FactorRef::Scan3d { n, k } => {
             // Same per-block scratch carving as the 2D arm, one more
-            // tensor axis per row application.
-            let (n, kk, k) = (grid.n, *k as usize, *k);
+            // tensor axis per row application plus the hoisted z-scan
+            // buffer.
+            let kk = k as usize;
             let cw = (kk + 1) * n * n;
             let st1 = SharedMutSlice::new(row_t1);
             let st2 = SharedMutSlice::new(row_t2);
+            let st3 = SharedMutSlice::new(row_t3);
             let sc = SharedMutSlice::new(row_carry);
             let min_rows = parallel::min_rows_for(cols * (kk + 1));
             parallel::for_row_blocks(par, rows, cols, min_rows, out, |bidx, rr, oblk| {
@@ -191,17 +247,19 @@ fn apply_to_rows(
                 // disjoint.
                 let t1 = unsafe { st1.range_mut(bidx * cols..(bidx + 1) * cols) };
                 let t2 = unsafe { st2.range_mut(bidx * cols..(bidx + 1) * cols) };
+                let t3 = unsafe { st3.range_mut(bidx * cols..(bidx + 1) * cols) };
                 let carry = unsafe { sc.range_mut(bidx * cw..(bidx + 1) * cw) };
                 for (local, r) in rr.enumerate() {
                     let src = &x[r * cols..(r + 1) * cols];
                     let dst = &mut oblk[local * cols..(local + 1) * cols];
-                    dhat3_vec_into(n, k, src, dst, t1, t2, carry, binom)
+                    dhat3_vec_into(n, k, src, dst, t1, t2, t3, carry, binom)
                         .expect("exponent pre-validated at construction");
                 }
             });
             Ok(())
         }
-        AxisFactor::Dense(d) => {
+        FactorRef::Dense { d, dim } => {
+            debug_assert_eq!(dim, cols);
             mul_rows_dense(rows, cols, x, d, out, par);
             Ok(())
         }
@@ -212,32 +270,34 @@ fn apply_to_rows(
 /// `out = F · x` for the symmetric `rows×rows` factor `F`, unscaled
 /// for scan factors. Columns are computed independently and bitwise
 /// identically regardless of how many columns surround them, which is
-/// what makes the horizontal batch stack exact.
-fn apply_to_cols(
-    factor: &AxisFactor,
+/// what makes the horizontal batch stack exact. Precision-generic like
+/// [`apply_to_rows`].
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn apply_to_cols<T: Scalar>(
+    factor: FactorRef<'_, T>,
     rows: usize,
     cols: usize,
-    x: &[f64],
-    out: &mut [f64],
+    x: &[T],
+    out: &mut [T],
     binom: &Binomial,
-    tmp: &mut [f64],
-    scratch: &mut [f64],
-    carry: &mut [f64],
+    tmp: &mut [T],
+    scratch: &mut [T],
+    zscan: &mut [T],
+    carry: &mut [T],
     par: Parallelism,
 ) -> Result<()> {
     debug_assert_eq!(x.len(), rows * cols);
     debug_assert_eq!(out.len(), rows * cols);
-    debug_assert_eq!(factor.len(), rows);
     match factor {
-        AxisFactor::Scan1d { k, .. } => {
-            dtilde_cols_par(*k, false, rows, cols, x, out, carry, binom, par);
+        FactorRef::Scan1d { k } => {
+            dtilde_cols_par(k, false, rows, cols, x, out, carry, binom, par);
             Ok(())
         }
-        AxisFactor::Scan2d { grid, k } => {
+        FactorRef::Scan2d { n, k } => {
             dhat_cols_with(
-                grid.n,
+                n,
                 cols,
-                *k,
+                k,
                 x,
                 out,
                 &mut tmp[..rows * cols],
@@ -248,76 +308,82 @@ fn apply_to_cols(
             );
             Ok(())
         }
-        AxisFactor::Scan3d { grid, k } => {
+        FactorRef::Scan3d { n, k } => {
             dhat3_cols_with(
-                grid.n,
+                n,
                 cols,
-                *k,
+                k,
                 x,
                 out,
                 &mut tmp[..rows * cols],
                 &mut scratch[..rows * cols],
+                &mut zscan[..rows * cols],
                 carry,
                 binom,
                 par,
             );
             Ok(())
         }
-        AxisFactor::Dense(d) => {
+        FactorRef::Dense { d, dim } => {
+            debug_assert_eq!(dim, rows);
             mul_cols_dense(rows, cols, d, x, out, par);
             Ok(())
         }
     }
 }
 
-/// `out = x · D` on raw row-major slices — the same per-output-row
-/// axpy accumulation as `linalg::matmul_into`, so each row is bitwise
-/// independent of the rest of the batch.
-fn mul_rows_dense(
+/// `out = x · D` on raw row-major slices (`d` is the row-major
+/// `cols×cols` factor) — the same per-output-row axpy accumulation as
+/// `linalg::matmul_into`, so each row is bitwise independent of the
+/// rest of the batch. Precision-generic: the f32 serving lane streams
+/// the same kernel over narrowed payloads (`T = f64` here by
+/// inference).
+pub(crate) fn mul_rows_dense<T: Scalar>(
     rows: usize,
     cols: usize,
-    x: &[f64],
-    d: &Mat,
-    out: &mut [f64],
+    x: &[T],
+    d: &[T],
+    out: &mut [T],
     par: Parallelism,
 ) {
-    debug_assert_eq!(d.shape(), (cols, cols));
+    debug_assert_eq!(d.len(), cols * cols);
     let min_rows = parallel::min_rows_for(cols * cols);
     parallel::for_row_blocks(par, rows, cols, min_rows, out, |_b, rr, oblk| {
         for (local, r) in rr.enumerate() {
             let xrow = &x[r * cols..(r + 1) * cols];
             let orow = &mut oblk[local * cols..(local + 1) * cols];
-            orow.fill(0.0);
+            orow.fill(T::ZERO);
             for (p, &xv) in xrow.iter().enumerate() {
-                if xv == 0.0 {
+                if xv == T::ZERO {
                     continue;
                 }
-                axpy(xv, d.row(p), orow);
+                axpy(xv, &d[p * cols..(p + 1) * cols], orow);
             }
         }
     });
 }
 
-/// `out = D · x` on raw slices — per output row `i` the accumulation
-/// runs over `p` in a fixed order, so each *column* of the result is
-/// bitwise independent of the stacked width.
-fn mul_cols_dense(
+/// `out = D · x` on raw slices (`d` is the row-major `rows×rows`
+/// factor) — per output row `i` the accumulation runs over `p` in a
+/// fixed order, so each *column* of the result is bitwise independent
+/// of the stacked width. Precision-generic like [`mul_rows_dense`].
+pub(crate) fn mul_cols_dense<T: Scalar>(
     rows: usize,
     cols: usize,
-    d: &Mat,
-    x: &[f64],
-    out: &mut [f64],
+    d: &[T],
+    x: &[T],
+    out: &mut [T],
     par: Parallelism,
 ) {
-    debug_assert_eq!(d.shape(), (rows, rows));
+    debug_assert_eq!(d.len(), rows * rows);
     let min_rows = parallel::min_rows_for(rows * cols);
     parallel::for_row_blocks(par, rows, cols, min_rows, out, |_b, rr, oblk| {
         for (local, i) in rr.enumerate() {
-            let drow = d.row(i);
+            let drow = &d[i * rows..(i + 1) * rows];
             let orow = &mut oblk[local * cols..(local + 1) * cols];
-            orow.fill(0.0);
+            orow.fill(T::ZERO);
             for (p, &dv) in drow.iter().enumerate() {
-                if dv == 0.0 {
+                if dv == T::ZERO {
                     continue;
                 }
                 axpy(dv, &x[p * cols..(p + 1) * cols], orow);
@@ -352,12 +418,19 @@ pub struct SeparableOp {
     col_tmp: Vec<f64>,
     /// Column-pass accumulation scratch (left 2D/3D scan factors).
     col_scratch: Vec<f64>,
+    /// Column-pass hoisted z-scan buffer (left 3D scan factors only),
+    /// `B·M·N` — holds the exponent-`r` axis-0 scan across the inner
+    /// multinomial loop.
+    col_zscan: Vec<f64>,
     /// Column-scan carries, sized for the widest stacked pass.
     carry: Vec<f64>,
     /// Per-thread row-pass temp (right 2D/3D scan factors).
     row_t1: Vec<f64>,
     /// Second per-thread row-pass temp.
     row_t2: Vec<f64>,
+    /// Third per-thread row-pass temp (right 3D scan factors only):
+    /// the hoisted z-scan.
+    row_t3: Vec<f64>,
     /// Per-thread row-pass scan carries.
     row_carry: Vec<f64>,
 }
@@ -390,9 +463,11 @@ impl SeparableOp {
             stack_b: Vec::new(),
             col_tmp: Vec::new(),
             col_scratch: Vec::new(),
+            col_zscan: Vec::new(),
             carry: Vec::new(),
             row_t1: Vec::new(),
             row_t2: Vec::new(),
+            row_t3: Vec::new(),
             row_carry: Vec::new(),
         };
         op.ensure_capacity(1);
@@ -442,6 +517,7 @@ impl SeparableOp {
                 );
                 grow(&mut self.col_tmp, total);
                 grow(&mut self.col_scratch, total);
+                grow(&mut self.col_zscan, total);
             }
             AxisFactor::Dense(_) => {}
         }
@@ -456,6 +532,7 @@ impl SeparableOp {
                 let threads = self.par.threads().max(1);
                 grow(&mut self.row_t1, threads * grid.len());
                 grow(&mut self.row_t2, threads * grid.len());
+                grow(&mut self.row_t3, threads * grid.len());
                 grow(
                     &mut self.row_carry,
                     threads * (*k as usize + 1) * grid.n * grid.n,
@@ -483,7 +560,7 @@ impl SeparableOp {
         self.check_shape(gamma, out, "SeparableOp::apply")?;
         let total = self.m * self.n;
         apply_to_rows(
-            &self.right,
+            self.right.factor_ref(),
             self.m,
             self.n,
             gamma.as_slice(),
@@ -491,11 +568,12 @@ impl SeparableOp {
             &self.binom,
             &mut self.row_t1,
             &mut self.row_t2,
+            &mut self.row_t3,
             &mut self.row_carry,
             self.par,
         )?;
         apply_to_cols(
-            &self.left,
+            self.left.factor_ref(),
             self.m,
             self.n,
             &self.stack_b[..total],
@@ -503,6 +581,7 @@ impl SeparableOp {
             &self.binom,
             &mut self.col_tmp,
             &mut self.col_scratch,
+            &mut self.col_zscan,
             &mut self.carry,
             self.par,
         )?;
@@ -539,7 +618,7 @@ impl SeparableOp {
             self.stack_a[b * m * n..(b + 1) * m * n].copy_from_slice(gamma.as_slice());
         }
         apply_to_rows(
-            &self.right,
+            self.right.factor_ref(),
             bsz * m,
             n,
             &self.stack_a[..total],
@@ -547,6 +626,7 @@ impl SeparableOp {
             &self.binom,
             &mut self.row_t1,
             &mut self.row_t2,
+            &mut self.row_t3,
             &mut self.row_carry,
             self.par,
         )?;
@@ -561,7 +641,7 @@ impl SeparableOp {
             }
         }
         apply_to_cols(
-            &self.left,
+            self.left.factor_ref(),
             m,
             bn,
             &self.stack_a[..total],
@@ -569,6 +649,7 @@ impl SeparableOp {
             &self.binom,
             &mut self.col_tmp,
             &mut self.col_scratch,
+            &mut self.col_zscan,
             &mut self.carry,
             self.par,
         )?;
@@ -615,6 +696,8 @@ pub struct RowApply {
     binom: Binomial,
     row_t1: Vec<f64>,
     row_t2: Vec<f64>,
+    /// Hoisted z-scan temp (3D factors only, zero-length otherwise).
+    row_t3: Vec<f64>,
     row_carry: Vec<f64>,
     par: Parallelism,
 }
@@ -626,23 +709,26 @@ impl RowApply {
             check_scan_exponent(k)?;
         }
         let kk = factor.scan_exponent().unwrap_or(0) as usize;
-        let (threads, nn, cw) = match &factor {
+        let (threads, nn, cw, n3) = match &factor {
             AxisFactor::Scan2d { grid, k } => (
                 par.threads().max(1),
                 grid.len(),
                 (*k as usize + 1) * grid.n,
+                0,
             ),
             AxisFactor::Scan3d { grid, k } => (
                 par.threads().max(1),
                 grid.len(),
                 (*k as usize + 1) * grid.n * grid.n,
+                grid.len(),
             ),
-            _ => (0, 0, 0),
+            _ => (0, 0, 0, 0),
         };
         Ok(RowApply {
             binom: Binomial::new((2 * kk).max(4)),
             row_t1: vec![0.0; threads * nn],
             row_t2: vec![0.0; threads * nn],
+            row_t3: vec![0.0; threads * n3],
             row_carry: vec![0.0; threads * cw],
             factor,
             par,
@@ -666,7 +752,7 @@ impl RowApply {
             ));
         }
         apply_to_rows(
-            &self.factor,
+            self.factor.factor_ref(),
             rows,
             cols,
             x,
@@ -674,6 +760,7 @@ impl RowApply {
             &self.binom,
             &mut self.row_t1,
             &mut self.row_t2,
+            &mut self.row_t3,
             &mut self.row_carry,
             self.par,
         )?;

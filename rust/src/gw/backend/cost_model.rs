@@ -27,6 +27,20 @@ use crate::fgc::AxisFactor;
 /// see EXPERIMENTS.md §Backend selection for the update procedure).
 pub const DENSE_LOWRANK_CROSSOVER: usize = 128;
 
+/// Side length (`max(M, N)`) at and above which `Precision::Auto`
+/// resolves to the f32 serving tier (f32 presolve + short f64 polish).
+/// Below it the whole solve is memory-resident anyway and the f64 path
+/// wins on simplicity; above it the f32 lane halves kernel/plan
+/// bandwidth and doubles effective SIMD width on every scan/sweep hot
+/// path, and the fixed-length f64 refinement restores the tolerance
+/// contract.
+///
+/// **Calibration status:** like [`DENSE_LOWRANK_CROSSOVER`], an
+/// estimate pending the first measured `precision_results` run of
+/// `cargo bench --bench hotpath` (see EXPERIMENTS.md §Mixed
+/// precision).
+pub const F32_SERVE_THRESHOLD: usize = 4096;
+
 /// FMAs of the dense two-product apply `D_X·Γ·D_Y` (`tmp = D_X·Γ`
 /// then `tmp·D_Y`) on an `M×N` plan.
 pub fn dense_pair_cost(m: f64, n: f64) -> f64 {

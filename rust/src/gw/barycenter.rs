@@ -334,6 +334,7 @@ mod tests {
                 sinkhorn_tolerance: 1e-8,
                 sinkhorn_check_every: 10,
                 threads: 1,
+                ..GwConfig::default()
             },
             iters: 3,
         }

@@ -20,6 +20,7 @@ use super::driver::{run_mirror_descent, run_mirror_descent_with_deadline, Mirror
 use super::geometry::Geometry;
 use super::gradient::{GradientKind, PairOperator};
 use super::objective::{fgw_objective, gw_objective};
+use super::precision::{F32Lane, Precision, REFINE_OUTER_ITERS};
 use crate::error::{Error, Result};
 use crate::linalg::Mat;
 use crate::parallel::Parallelism;
@@ -42,6 +43,10 @@ pub struct GwConfig {
     /// Thread budget for the hot kernels (Sinkhorn sweeps, FGC scans,
     /// dense baseline): `1` = exact serial path, `0` = all cores.
     pub threads: usize,
+    /// Solve precision: full f64 (default, bit-identical to the
+    /// historical behavior), the f32+refine serving tier, or per-job
+    /// auto-selection by size (see [`Precision`]).
+    pub precision: Precision,
 }
 
 impl Default for GwConfig {
@@ -53,6 +58,7 @@ impl Default for GwConfig {
             sinkhorn_tolerance: 1e-9,
             sinkhorn_check_every: 10,
             threads: 1,
+            precision: Precision::F64,
         }
     }
 }
@@ -86,6 +92,10 @@ pub struct GwWorkspace {
     grad: Mat,
     cost: Mat,
     constant: Mat,
+    /// f32 presolve lane, built lazily on the first f32-tier solve —
+    /// the default f64 path never allocates it (`tests/alloc_hotpath`
+    /// keeps holding).
+    f32_lane: Option<Box<F32Lane>>,
 }
 
 impl GwWorkspace {
@@ -133,7 +143,12 @@ impl GwWorkspace {
     /// backend rebuild, no re-densified/re-factorized structured side
     /// (see [`GradientBackend::swap_dense_x`]).
     pub fn swap_dense_x(&mut self, dx: &Mat) -> Result<()> {
-        self.op.swap_dense_x(dx)
+        self.op.swap_dense_x(dx)?;
+        // The f32 lane holds a narrowed copy of the old dense side —
+        // drop it so the next f32-tier solve rebuilds against the new
+        // geometry (pure-f64 solves never notice).
+        self.f32_lane = None;
+        Ok(())
     }
 }
 
@@ -277,6 +292,7 @@ impl EntropicGw {
             grad: Mat::zeros(m, n),
             cost: Mat::zeros(m, n),
             constant: Mat::zeros(m, n),
+            f32_lane: None,
         })
     }
 
@@ -376,6 +392,7 @@ impl EntropicGw {
             grad,
             cost,
             constant,
+            f32_lane,
         } = ws;
         // One regime decision per solve; consecutive outer iterations
         // share their cost conditioning (see SinkhornWorkspace docs).
@@ -387,6 +404,39 @@ impl EntropicGw {
 
         // Γ⁰ = u vᵀ
         crate::linalg::outer_into(u, v, gamma)?;
+
+        // f32 serving tier: run the whole mirror-descent loop in f32,
+        // leave the upcast plan in `gamma` (the driver below never
+        // resets it), and keep only a short f64 refinement budget. The
+        // low-rank backend has no f32 twin — it keeps the full f64
+        // loop regardless of the requested tier.
+        let mut presolve_outer = 0usize;
+        let mut presolve_inner = 0usize;
+        let f64_outer = if self.cfg.precision.resolve(m, n) == Precision::F32Refine
+            && op.kind() != GradientKind::LowRank
+        {
+            if f32_lane.is_none() {
+                *f32_lane = Some(Box::new(F32Lane::new(
+                    &self.geom_x,
+                    &self.geom_y,
+                    self.cfg.parallelism(),
+                )?));
+            }
+            let lane = f32_lane.as_mut().expect("lane built above");
+            presolve_inner = lane.presolve(
+                u,
+                v,
+                constant,
+                theta,
+                self.cfg.outer_iters,
+                &self.cfg.sinkhorn_options(),
+                gamma,
+            )?;
+            presolve_outer = self.cfg.outer_iters;
+            REFINE_OUTER_ITERS
+        } else {
+            self.cfg.outer_iters
+        };
 
         let mut step = EntropicStep {
             op: &mut *op,
@@ -400,7 +450,7 @@ impl EntropicGw {
             four_theta: 4.0 * theta,
             opts: self.cfg.sinkhorn_options(),
         };
-        let stats = run_mirror_descent(self.cfg.outer_iters, &mut step)?;
+        let stats = run_mirror_descent(f64_outer, &mut step)?;
 
         let objective = match feature_cost {
             Some(c) => fgw_objective(op, gamma, c, theta)?,
@@ -410,8 +460,8 @@ impl EntropicGw {
         Ok(GwSolution {
             plan: gamma.clone(),
             objective,
-            outer_iterations: stats.outer_iterations,
-            sinkhorn_iterations: stats.inner_iterations,
+            outer_iterations: presolve_outer + stats.outer_iterations,
+            sinkhorn_iterations: presolve_inner + stats.inner_iterations,
             gradient_time: stats.gradient_time,
             sinkhorn_time: stats.inner_time,
             total_time: t_start.elapsed(),
@@ -471,6 +521,10 @@ pub struct GwBatchWorkspace {
     grads: Vec<Mat>,
     costs: Vec<Mat>,
     constants: Vec<Mat>,
+    /// f32 presolve lane shared by every job in the batch, built
+    /// lazily on the first f32-tier solve (see [`Precision`]). `None`
+    /// until then — pure-f64 batches never pay for it.
+    f32_lane: Option<Box<F32Lane>>,
     /// One-shot Sinkhorn regime override for the next solve (see
     /// [`GwBatchWorkspace::set_regime_override`]).
     regime_override: Option<Regime>,
@@ -525,7 +579,11 @@ impl GwBatchWorkspace {
     /// barycenter's per-outer-update rebind; see
     /// [`GradientBackend::swap_dense_x`]).
     pub fn swap_dense_x(&mut self, dx: &Mat) -> Result<()> {
-        self.op.swap_dense_x(dx)
+        self.op.swap_dense_x(dx)?;
+        // The f32 lane narrows the dense side at build time — a swap
+        // invalidates that copy, so the lane rebuilds lazily.
+        self.f32_lane = None;
+        Ok(())
     }
 
     /// Force the Sinkhorn numeric regime of the **next** solve (every
@@ -596,6 +654,7 @@ impl GwBatchWorkspace {
             grads,
             costs,
             constants,
+            f32_lane,
             ..
         } = self;
         for (j, job) in jobs.iter().enumerate() {
@@ -632,6 +691,41 @@ impl GwBatchWorkspace {
         }
 
         let mut inner_counts = vec![0usize; batch];
+        // f32 serving tier (see `solve_inner`): each job presolves in
+        // f32 serially — identical to its solo presolve, so the batch
+        // stays bit-for-bit with sequential f32-tier solves — then the
+        // short f64 refinement runs in lockstep over the pre-seeded
+        // plans. The deadline is checked between refinement
+        // iterations, exactly as between pure-f64 outer iterations.
+        let mut presolve_outer = 0usize;
+        let f64_outer = if cfg.precision.resolve(m, n) == Precision::F32Refine
+            && op.kind() != GradientKind::LowRank
+        {
+            if f32_lane.is_none() {
+                *f32_lane = Some(Box::new(F32Lane::new(
+                    op.geom_x(),
+                    op.geom_y(),
+                    cfg.parallelism(),
+                )?));
+            }
+            let lane = f32_lane.as_mut().expect("lane built above");
+            let opts = cfg.sinkhorn_options();
+            for (j, job) in jobs.iter().enumerate() {
+                inner_counts[j] += lane.presolve(
+                    job.u,
+                    job.v,
+                    &constants[j],
+                    job.theta,
+                    cfg.outer_iters,
+                    &opts,
+                    &mut gammas[j],
+                )?;
+            }
+            presolve_outer = cfg.outer_iters;
+            REFINE_OUTER_ITERS
+        } else {
+            cfg.outer_iters
+        };
         let mut step = BatchStep {
             op: &mut *op,
             sks: &mut *sks,
@@ -646,7 +740,7 @@ impl GwBatchWorkspace {
             #[cfg(feature = "fault-injection")]
             injected_fault,
         };
-        let stats = run_mirror_descent_with_deadline(cfg.outer_iters, &mut step, deadline)?;
+        let stats = run_mirror_descent_with_deadline(f64_outer, &mut step, deadline)?;
 
         let mut out = Vec::with_capacity(batch);
         for (j, job) in jobs.iter().enumerate() {
@@ -657,7 +751,7 @@ impl GwBatchWorkspace {
             out.push(GwSolution {
                 plan: gammas[j].clone(),
                 objective,
-                outer_iterations: stats.outer_iterations,
+                outer_iterations: presolve_outer + stats.outer_iterations,
                 sinkhorn_iterations: inner_counts[j],
                 gradient_time: stats.gradient_time,
                 sinkhorn_time: stats.inner_time,
@@ -681,6 +775,7 @@ impl EntropicGw {
             grads: Vec::new(),
             costs: Vec::new(),
             constants: Vec::new(),
+            f32_lane: None,
             regime_override: None,
             deadline: None,
             #[cfg(feature = "fault-injection")]
@@ -862,6 +957,7 @@ mod tests {
             sinkhorn_tolerance: 1e-10,
             sinkhorn_check_every: 10,
             threads: 1,
+            precision: Precision::F64,
         }
     }
 

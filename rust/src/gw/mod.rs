@@ -14,6 +14,8 @@
 //! * [`entropic`] — mirror-descent solver for GW and FGW
 //!   (`τ = ε`, Remark 2.1/2.2).
 //! * [`objective`] — GW/FGW energy evaluation in `O(N²)`.
+//! * [`precision`] — the solve-precision policy ([`Precision`]) and
+//!   the f32 presolve lane behind the f32+refine serving tier.
 //! * [`ugw`] — unbalanced GW (Remark 2.3).
 //! * [`coot`] — co-optimal transport (conclusion §5).
 //! * [`barycenter`] — fixed-support GW barycenters (conclusion §5),
@@ -27,6 +29,7 @@ pub mod entropic;
 pub mod geometry;
 pub mod gradient;
 pub mod objective;
+pub mod precision;
 pub mod ugw;
 
 pub use backend::{GradientBackend, LowRankBackend, LowRankOptions};
@@ -39,4 +42,5 @@ pub use entropic::{BatchJob, EntropicGw, GwBatchWorkspace, GwConfig, GwSolution,
 pub use geometry::{Geometry, SqApplyScratch};
 pub use gradient::{GradientKind, PairOperator};
 pub use objective::{fgw_objective, gw_objective};
+pub use precision::Precision;
 pub use ugw::{EntropicUgw, UgwConfig, UgwSolution, UgwWorkspace};

@@ -1,0 +1,726 @@
+//! Mixed-precision serving: the f32 presolve lane and its policy knob.
+//!
+//! The scan/sweep hot paths are precision-generic (`crate::scalar`),
+//! so the same kernels that run the f64 solver can run in f32 at half
+//! the memory bandwidth and twice the effective SIMD width. This
+//! module packages that into a **serving tier**:
+//!
+//! 1. [`F32Lane::presolve`] runs the full mirror-descent loop
+//!    (separable gradient → linearized cost → Sinkhorn) entirely in
+//!    f32 and upcasts the resulting plan;
+//! 2. the caller (`entropic::solve_inner` / `solve_batch`) seeds the
+//!    f64 solver state with that plan and runs a short f64
+//!    **refinement** ([`REFINE_OUTER_ITERS`] outer iterations through
+//!    the unchanged f64 pipeline), which restores the existing
+//!    tolerance contracts — the final Sinkhorn sweeps and the final
+//!    gradient applies are full f64.
+//!
+//! The lane is built from the pair's [`Geometry`] alone (scan factors
+//! for grids, a narrowed dense copy otherwise), so it works under the
+//! fgc *and* naive backends; the low-rank backend keeps the pure f64
+//! path (its factorization is not worth re-deriving in f32).
+//!
+//! Numerical notes: f32's exponent range cuts the Gibbs-viable cost
+//! range roughly tenfold (exp underflows near `e^−87` instead of
+//! `e^−745`), so the lane's regime pick uses the much smaller
+//! [`F32_GIBBS_LIMIT`]; and the presolve's convergence checks floor
+//! the tolerance at [`F32_TOL_FLOOR`] — chasing 1e−9 marginals in f32
+//! would spin the iteration budget without converging, and the f64
+//! refinement owns the real contract.
+
+use super::geometry::Geometry;
+use crate::error::{Error, Result};
+use crate::fgc::separable::{apply_to_cols, apply_to_rows, FactorRef};
+use crate::fgc::check_scan_exponent;
+use crate::grid::Binomial;
+use crate::gw::backend::cost_model::F32_SERVE_THRESHOLD;
+use crate::linalg::Mat;
+use crate::parallel::{self, Parallelism};
+use crate::sinkhorn::{fused_scaling_sweep, lse_shifted, safe_div, sum_exp_row, SinkhornOptions};
+use std::fmt;
+use std::str::FromStr;
+
+/// Solve-precision policy for one GW job.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum Precision {
+    /// Full f64 everywhere — the historical behavior and the default.
+    #[default]
+    F64,
+    /// f32 presolve + [`REFINE_OUTER_ITERS`] f64 polish iterations.
+    F32Refine,
+    /// Pick per job by size: [`F32Refine`](Precision::F32Refine) when
+    /// `max(M, N) ≥` [`F32_SERVE_THRESHOLD`], else
+    /// [`F64`](Precision::F64).
+    Auto,
+}
+
+impl Precision {
+    /// Resolve `Auto` against a concrete problem shape. `F64` and
+    /// `F32Refine` pass through unchanged.
+    pub fn resolve(self, m: usize, n: usize) -> Precision {
+        match self {
+            Precision::Auto => {
+                if m.max(n) >= F32_SERVE_THRESHOLD {
+                    Precision::F32Refine
+                } else {
+                    Precision::F64
+                }
+            }
+            p => p,
+        }
+    }
+}
+
+impl FromStr for Precision {
+    type Err = Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "f64" => Ok(Precision::F64),
+            "f32" => Ok(Precision::F32Refine),
+            "auto" => Ok(Precision::Auto),
+            other => Err(Error::Invalid(format!(
+                "unknown precision {other:?} (expected f64, f32, or auto)"
+            ))),
+        }
+    }
+}
+
+impl fmt::Display for Precision {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            Precision::F64 => "f64",
+            Precision::F32Refine => "f32",
+            Precision::Auto => "auto",
+        })
+    }
+}
+
+/// f64 outer iterations run after an f32 presolve. Two suffice: the
+/// presolve's plan is already a fixed point of the f32 dynamics, so
+/// the first f64 iteration corrects the rounding of the gradient and
+/// the second confirms it (the mirror-descent map is a contraction
+/// near the solution for the paper's step size `τ = ε`).
+pub const REFINE_OUTER_ITERS: usize = 2;
+
+/// `range(Π)/ε` above which the f32 lane runs log-domain Sinkhorn.
+/// The f64 pick (`sinkhorn::pick_regime`) switches at 600 — safely
+/// inside `exp`'s f64 range of ≈709 — and f32 loses mass below
+/// `exp(−87)`, so the lane switches an order of magnitude earlier.
+const F32_GIBBS_LIMIT: f64 = 60.0;
+
+/// Marginal-violation floor for the presolve's convergence checks:
+/// f32 accumulation noise on an `O(1)` marginal sits near `1e−7`, so
+/// demanding less than `1e−6` just burns the iteration budget.
+const F32_TOL_FLOOR: f64 = 1e-6;
+
+/// One side's factor, narrowed to f32 (scan factors narrow their
+/// shape parameters only — the scans themselves are exact in any
+/// precision until the carries accumulate).
+enum OwnedFactor {
+    Scan1d { n: usize, k: u32 },
+    Scan2d { n: usize, k: u32 },
+    Scan3d { n: usize, k: u32 },
+    Dense { d: Vec<f32>, dim: usize },
+}
+
+impl OwnedFactor {
+    fn from_geometry(geom: &Geometry) -> Result<(OwnedFactor, f64)> {
+        if let Some(k) = geom.grid_exponent() {
+            check_scan_exponent(k)?;
+        }
+        Ok(match geom {
+            Geometry::Grid1d { grid, k } => {
+                (OwnedFactor::Scan1d { n: grid.n, k: *k }, grid.scale(*k))
+            }
+            Geometry::Grid2d { grid, k } => {
+                (OwnedFactor::Scan2d { n: grid.n, k: *k }, grid.scale(*k))
+            }
+            Geometry::Grid3d { grid, k } => {
+                (OwnedFactor::Scan3d { n: grid.n, k: *k }, grid.scale(*k))
+            }
+            Geometry::Dense(d) => (
+                OwnedFactor::Dense {
+                    d: d.as_slice().iter().map(|&x| x as f32).collect(),
+                    dim: d.rows(),
+                },
+                1.0,
+            ),
+        })
+    }
+
+    fn as_ref(&self) -> FactorRef<'_, f32> {
+        match self {
+            OwnedFactor::Scan1d { k, .. } => FactorRef::Scan1d { k: *k },
+            OwnedFactor::Scan2d { n, k } => FactorRef::Scan2d { n: *n, k: *k },
+            OwnedFactor::Scan3d { n, k } => FactorRef::Scan3d { n: *n, k: *k },
+            OwnedFactor::Dense { d, dim } => FactorRef::Dense { d, dim: *dim },
+        }
+    }
+
+    fn scan_exponent(&self) -> u32 {
+        match self {
+            OwnedFactor::Scan1d { k, .. }
+            | OwnedFactor::Scan2d { k, .. }
+            | OwnedFactor::Scan3d { k, .. } => *k,
+            OwnedFactor::Dense { .. } => 0,
+        }
+    }
+}
+
+/// The f32 presolve lane for one pair shape: narrowed factors plus
+/// every f32 buffer the mirror-descent loop touches, grown once at
+/// construction and reused across solves (zero allocation per
+/// presolve). Roughly half the resident bytes of the f64 workspace it
+/// shadows — the coordinator's warm-cache accounting keys on that.
+pub(crate) struct F32Lane {
+    left: OwnedFactor,
+    right: OwnedFactor,
+    m: usize,
+    n: usize,
+    /// Combined deferred `h^k` scale of both scan factors.
+    scale: f32,
+    par: Parallelism,
+    binom: Binomial,
+    // Separable-apply scratch (mirrors `SeparableOp` at batch 1).
+    stack: Vec<f32>,
+    grad: Vec<f32>,
+    col_tmp: Vec<f32>,
+    col_scratch: Vec<f32>,
+    col_zscan: Vec<f32>,
+    carry: Vec<f32>,
+    row_t1: Vec<f32>,
+    row_t2: Vec<f32>,
+    row_t3: Vec<f32>,
+    row_carry: Vec<f32>,
+    // Solver state.
+    mu: Vec<f32>,
+    nu: Vec<f32>,
+    constant: Vec<f32>,
+    cost: Vec<f32>,
+    gamma: Vec<f32>,
+    // Sinkhorn state (Gibbs kernel doubles as the log-domain `S`;
+    // `a`/`b` double as `φ`/`ψ`).
+    kernel: Vec<f32>,
+    kernel_t: Vec<f32>,
+    a: Vec<f32>,
+    b: Vec<f32>,
+    kta: Vec<f32>,
+    log_u: Vec<f32>,
+    log_v: Vec<f32>,
+    partials: Vec<f32>,
+    reduce: Vec<f32>,
+}
+
+impl F32Lane {
+    /// Build the lane for a pair of geometries. Infallible at apply
+    /// time: scan exponents are validated here.
+    pub(crate) fn new(geom_x: &Geometry, geom_y: &Geometry, par: Parallelism) -> Result<F32Lane> {
+        let (left, lscale) = OwnedFactor::from_geometry(geom_x)?;
+        let (right, rscale) = OwnedFactor::from_geometry(geom_y)?;
+        let (m, n) = (geom_x.len(), geom_y.len());
+        let total = m * n;
+        let threads = par.threads().max(1);
+        let kmax = left.scan_exponent().max(right.scan_exponent()) as usize;
+
+        // Column-pass scratch for the left factor (stacked width = n).
+        let (carry_len, col_len, zscan_len) = match &left {
+            OwnedFactor::Scan1d { k, .. } => ((*k as usize + 1) * n, 0, 0),
+            OwnedFactor::Scan2d { n: gn, k } => ((*k as usize + 1) * gn * n, total, 0),
+            OwnedFactor::Scan3d { n: gn, k } => ((*k as usize + 1) * gn * gn * n, total, total),
+            OwnedFactor::Dense { .. } => (0, 0, 0),
+        };
+        // Per-thread row-pass scratch for the right factor.
+        let (rt_len, rt3_len, rcarry_len) = match &right {
+            OwnedFactor::Scan2d { n: gn, k } => {
+                (threads * gn * gn, 0, threads * (*k as usize + 1) * gn)
+            }
+            OwnedFactor::Scan3d { n: gn, k } => {
+                let len = gn * gn * gn;
+                (threads * len, threads * len, threads * (*k as usize + 1) * gn * gn)
+            }
+            _ => (0, 0, 0),
+        };
+
+        Ok(F32Lane {
+            scale: (lscale * rscale) as f32,
+            left,
+            right,
+            m,
+            n,
+            par,
+            binom: Binomial::new((2 * kmax).max(4)),
+            stack: vec![0.0; total],
+            grad: vec![0.0; total],
+            col_tmp: vec![0.0; col_len],
+            col_scratch: vec![0.0; col_len],
+            col_zscan: vec![0.0; zscan_len],
+            carry: vec![0.0; carry_len],
+            row_t1: vec![0.0; rt_len],
+            row_t2: vec![0.0; rt_len],
+            row_t3: vec![0.0; rt3_len],
+            row_carry: vec![0.0; rcarry_len],
+            mu: vec![0.0; m],
+            nu: vec![0.0; n],
+            constant: vec![0.0; total],
+            cost: vec![0.0; total],
+            gamma: vec![0.0; total],
+            kernel: vec![0.0; total],
+            kernel_t: Vec::new(),
+            a: vec![0.0; m],
+            b: vec![0.0; n],
+            kta: vec![0.0; n],
+            log_u: vec![0.0; m],
+            log_v: vec![0.0; n],
+            partials: vec![0.0; threads * n],
+            reduce: vec![0.0; threads],
+        })
+    }
+
+    /// Resident f32 payload of the lane in bytes (warm-cache
+    /// accounting; scratch included, factor copies included).
+    pub(crate) fn resident_bytes(&self) -> usize {
+        let d_len = match &self.left {
+            OwnedFactor::Dense { d, .. } => d.len(),
+            _ => 0,
+        } + match &self.right {
+            OwnedFactor::Dense { d, .. } => d.len(),
+            _ => 0,
+        };
+        (d_len
+            + self.stack.len()
+            + self.grad.len()
+            + self.col_tmp.len()
+            + self.col_scratch.len()
+            + self.col_zscan.len()
+            + self.carry.len()
+            + self.row_t1.len()
+            + self.row_t2.len()
+            + self.row_t3.len()
+            + self.row_carry.len()
+            + self.mu.len()
+            + self.nu.len()
+            + self.constant.len()
+            + self.cost.len()
+            + self.gamma.len()
+            + self.kernel.len()
+            + self.kernel_t.len()
+            + self.a.len()
+            + self.b.len()
+            + self.kta.len()
+            + self.log_u.len()
+            + self.log_v.len()
+            + self.partials.len()
+            + self.reduce.len())
+            * std::mem::size_of::<f32>()
+    }
+
+    /// `grad = D_X Γ D_Y` in f32 — the same two passes as
+    /// `SeparableOp::apply`, streaming the precision-generic kernels.
+    fn apply_grad(&mut self) -> Result<()> {
+        let (m, n) = (self.m, self.n);
+        apply_to_rows(
+            self.right.as_ref(),
+            m,
+            n,
+            &self.gamma,
+            &mut self.stack,
+            &self.binom,
+            &mut self.row_t1,
+            &mut self.row_t2,
+            &mut self.row_t3,
+            &mut self.row_carry,
+            self.par,
+        )?;
+        apply_to_cols(
+            self.left.as_ref(),
+            m,
+            n,
+            &self.stack,
+            &mut self.grad,
+            &self.binom,
+            &mut self.col_tmp,
+            &mut self.col_scratch,
+            &mut self.col_zscan,
+            &mut self.carry,
+            self.par,
+        )?;
+        if self.scale != 1.0 {
+            let s = self.scale;
+            for v in self.grad.iter_mut() {
+                *v *= s;
+            }
+        }
+        Ok(())
+    }
+
+    /// One full f32 Sinkhorn subproblem over `self.cost` into
+    /// `self.gamma`. Regime pick mirrors the f64 solver with the f32
+    /// exponent budget; a Gibbs failure demotes to log-domain, a log
+    /// failure is terminal.
+    fn solve_sinkhorn(&mut self, opts: &SinkhornOptions) -> Result<usize> {
+        let mut lo = f32::INFINITY;
+        let mut hi = f32::NEG_INFINITY;
+        for &c in &self.cost {
+            lo = lo.min(c);
+            hi = hi.max(c);
+        }
+        if !lo.is_finite() || !hi.is_finite() {
+            return Err(Error::Numeric(
+                "f32 presolve: non-finite linearized cost".into(),
+            ));
+        }
+        let gibbs_viable = ((hi - lo) as f64) / opts.epsilon <= F32_GIBBS_LIMIT;
+        if gibbs_viable {
+            if let Ok(iters) = self.gibbs32(lo, opts) {
+                return Ok(iters);
+            }
+            // Demote: the gap estimate was optimistic for this
+            // subproblem's scaling trajectory.
+        }
+        self.log32(opts)
+    }
+
+    fn gibbs32(&mut self, shift: f32, opts: &SinkhornOptions) -> Result<usize> {
+        let (m, n) = (self.m, self.n);
+        let inv_eps = (1.0 / opts.epsilon) as f32;
+        let tol = opts.tolerance.max(F32_TOL_FLOOR) as f32;
+        let F32Lane {
+            cost,
+            kernel,
+            a,
+            b,
+            kta,
+            partials,
+            reduce,
+            mu,
+            nu,
+            gamma,
+            par,
+            ..
+        } = self;
+        let par = *par;
+        let min_rows = parallel::min_rows_for(n.max(1));
+
+        let cs = &cost[..];
+        parallel::for_row_blocks(par, m, n, min_rows, &mut kernel[..], |_bl, rr, kblk| {
+            let src = &cs[rr.start * n..rr.end * n];
+            for (d, &c) in kblk.iter_mut().zip(src) {
+                *d = (-(c - shift) * inv_eps).exp();
+            }
+        });
+        a.fill(1.0);
+        b.fill(1.0);
+
+        let mut iterations = 0;
+        for it in 0..opts.max_iters {
+            iterations = it + 1;
+            fused_scaling_sweep(&kernel[..], mu, b, a, kta, partials, par, min_rows)?;
+            for j in 0..n {
+                b[j] = safe_div(nu[j], kta[j], "Kᵀa (f32)")?;
+            }
+            if it % opts.check_every == opts.check_every - 1 {
+                let (ar, br, kr) = (&a[..], &b[..], &kernel[..]);
+                let err = parallel::sum_blocks(par, m, min_rows, reduce, |_bl, rr| {
+                    let mut e = 0.0f32;
+                    for i in rr {
+                        e += (ar[i] * crate::linalg::dot(&kr[i * n..(i + 1) * n], br) - mu[i])
+                            .abs();
+                    }
+                    e
+                });
+                if err < tol {
+                    break;
+                }
+            }
+        }
+
+        let (ar, br, kr) = (&a[..], &b[..], &kernel[..]);
+        parallel::for_row_blocks(par, m, n, min_rows, &mut gamma[..], |_bl, rr, pblk| {
+            for (local, i) in rr.enumerate() {
+                let ai = ar[i];
+                let krow = &kr[i * n..(i + 1) * n];
+                let prow = &mut pblk[local * n..(local + 1) * n];
+                for ((p, &kij), &bj) in prow.iter_mut().zip(krow).zip(br) {
+                    *p = ai * kij * bj;
+                }
+            }
+        });
+        if gamma.iter().any(|x| !x.is_finite()) {
+            return Err(Error::Numeric(
+                "f32 gibbs sinkhorn produced non-finite plan".into(),
+            ));
+        }
+        Ok(iterations)
+    }
+
+    fn log32(&mut self, opts: &SinkhornOptions) -> Result<usize> {
+        let (m, n) = (self.m, self.n);
+        let inv_eps = (1.0 / opts.epsilon) as f32;
+        let tol = opts.tolerance.max(F32_TOL_FLOOR) as f32;
+        if self.kernel_t.len() < m * n {
+            self.kernel_t.resize(m * n, 0.0);
+        }
+        let F32Lane {
+            cost,
+            kernel,
+            kernel_t,
+            a: phi,
+            b: psi,
+            log_u,
+            log_v,
+            reduce,
+            mu,
+            nu,
+            gamma,
+            par,
+            ..
+        } = self;
+        let par = *par;
+        let min_rows_m = parallel::min_rows_for(n.max(1));
+        let min_rows_n = parallel::min_rows_for(m.max(1));
+
+        // S = Π/ε, with Sᵀ beside it so the ψ sweep also streams rows.
+        let cs = &cost[..];
+        parallel::for_row_blocks(par, m, n, min_rows_m, &mut kernel[..], |_bl, rr, sblk| {
+            let src = &cs[rr.start * n..rr.end * n];
+            for (d, &c) in sblk.iter_mut().zip(src) {
+                *d = c * inv_eps;
+            }
+        });
+        {
+            let s = &kernel[..];
+            parallel::for_row_blocks(
+                par,
+                n,
+                m,
+                min_rows_n,
+                &mut kernel_t[..m * n],
+                |_bl, rr, tblk| {
+                    for (local, j) in rr.enumerate() {
+                        let trow = &mut tblk[local * m..(local + 1) * m];
+                        for (i, t) in trow.iter_mut().enumerate() {
+                            *t = s[i * n + j];
+                        }
+                    }
+                },
+            );
+        }
+        for (d, &x) in log_u.iter_mut().zip(mu.iter()) {
+            *d = x.ln();
+        }
+        for (d, &x) in log_v.iter_mut().zip(nu.iter()) {
+            *d = x.ln();
+        }
+        phi.fill(0.0);
+        psi.fill(0.0);
+
+        let s = &kernel[..];
+        let st = &kernel_t[..m * n];
+        let mut iterations = 0;
+        for it in 0..opts.max_iters {
+            iterations = it + 1;
+            {
+                let (psi_r, log_u_r) = (&psi[..], &log_u[..]);
+                parallel::for_row_blocks(par, m, 1, min_rows_m, &mut phi[..], |_bl, rr, pblk| {
+                    for (local, i) in rr.enumerate() {
+                        pblk[local] = log_u_r[i] - lse_shifted(psi_r, &s[i * n..(i + 1) * n]);
+                    }
+                });
+            }
+            {
+                let (phi_r, log_v_r) = (&phi[..], &log_v[..]);
+                parallel::for_row_blocks(par, n, 1, min_rows_n, &mut psi[..], |_bl, rr, pblk| {
+                    for (local, j) in rr.enumerate() {
+                        pblk[local] = log_v_r[j] - lse_shifted(phi_r, &st[j * m..(j + 1) * m]);
+                    }
+                });
+            }
+            if it % opts.check_every == opts.check_every - 1 {
+                let (phi_r, psi_r) = (&phi[..], &psi[..]);
+                let err = parallel::sum_blocks(par, m, min_rows_m, reduce, |_bl, rr| {
+                    let mut e = 0.0f32;
+                    for i in rr {
+                        e += (sum_exp_row(phi_r[i], psi_r, &s[i * n..(i + 1) * n]) - mu[i]).abs();
+                    }
+                    e
+                });
+                if err < tol {
+                    break;
+                }
+            }
+        }
+
+        let (phi_r, psi_r) = (&phi[..], &psi[..]);
+        parallel::for_row_blocks(par, m, n, min_rows_m, &mut gamma[..], |_bl, rr, pblk| {
+            for (local, i) in rr.enumerate() {
+                let srow = &s[i * n..(i + 1) * n];
+                let fi = phi_r[i];
+                let prow = &mut pblk[local * n..(local + 1) * n];
+                for ((p, &sij), &gj) in prow.iter_mut().zip(srow).zip(psi_r) {
+                    *p = (fi + gj - sij).exp();
+                }
+            }
+        });
+        if gamma.iter().any(|x| !x.is_finite()) {
+            return Err(Error::Numeric(
+                "f32 log sinkhorn produced non-finite plan".into(),
+            ));
+        }
+        Ok(iterations)
+    }
+
+    /// The full f32 mirror-descent presolve: `outer_iters` iterations
+    /// of gradient → linearize → Sinkhorn starting from `Γ = u vᵀ`,
+    /// plan upcast into `gamma`. `constant` is the f64 constant term
+    /// `C₁` already computed by the pair operator (downcast here — its
+    /// entries are `O(1)` so the narrowing is benign). Returns the
+    /// total f32 Sinkhorn iteration count.
+    pub(crate) fn presolve(
+        &mut self,
+        u: &[f64],
+        v: &[f64],
+        constant: &Mat,
+        theta: f64,
+        outer_iters: usize,
+        opts: &SinkhornOptions,
+        gamma: &mut Mat,
+    ) -> Result<usize> {
+        let (m, n) = (self.m, self.n);
+        if u.len() != m || v.len() != n || constant.shape() != (m, n) || gamma.shape() != (m, n) {
+            return Err(Error::shape(
+                "F32Lane::presolve",
+                format!("{m}x{n}"),
+                format!(
+                    "u={} v={} constant={:?} gamma={:?}",
+                    u.len(),
+                    v.len(),
+                    constant.shape(),
+                    gamma.shape()
+                ),
+            ));
+        }
+        for (d, &x) in self.mu.iter_mut().zip(u) {
+            *d = x as f32;
+        }
+        for (d, &x) in self.nu.iter_mut().zip(v) {
+            *d = x as f32;
+        }
+        for (d, &x) in self.constant.iter_mut().zip(constant.as_slice()) {
+            *d = x as f32;
+        }
+        let four_theta = (4.0 * theta) as f32;
+        for i in 0..m {
+            let ui = self.mu[i];
+            let row = &mut self.gamma[i * n..(i + 1) * n];
+            for (g, &vj) in row.iter_mut().zip(&self.nu) {
+                *g = ui * vj;
+            }
+        }
+        let mut inner = 0;
+        for _ in 0..outer_iters {
+            self.apply_grad()?;
+            for ((c, &k0), &g) in self
+                .cost
+                .iter_mut()
+                .zip(self.constant.iter())
+                .zip(self.grad.iter())
+            {
+                *c = k0 - four_theta * g;
+            }
+            inner += self.solve_sinkhorn(opts)?;
+        }
+        for (d, &x) in gamma.as_mut_slice().iter_mut().zip(self.gamma.iter()) {
+            *d = x as f64;
+        }
+        Ok(inner)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn precision_parses_and_displays() {
+        for (s, p) in [
+            ("f64", Precision::F64),
+            ("f32", Precision::F32Refine),
+            ("auto", Precision::Auto),
+        ] {
+            assert_eq!(s.parse::<Precision>().unwrap(), p);
+            assert_eq!(p.to_string(), s);
+        }
+        assert!("f16".parse::<Precision>().is_err());
+        assert_eq!(Precision::default(), Precision::F64);
+    }
+
+    #[test]
+    fn auto_resolves_by_size() {
+        let t = F32_SERVE_THRESHOLD;
+        assert_eq!(Precision::Auto.resolve(t, 1), Precision::F32Refine);
+        assert_eq!(Precision::Auto.resolve(1, t), Precision::F32Refine);
+        assert_eq!(Precision::Auto.resolve(t - 1, t - 1), Precision::F64);
+        // Explicit choices never re-resolve.
+        assert_eq!(Precision::F64.resolve(t, t), Precision::F64);
+        assert_eq!(Precision::F32Refine.resolve(1, 1), Precision::F32Refine);
+    }
+
+    #[test]
+    fn f32_presolve_tracks_f64_solution() {
+        // A small grid×grid pair: the f32 presolve alone (no f64
+        // polish) must land within f32 noise of the f64 solver's plan.
+        use crate::gw::{EntropicGw, GradientKind, GwConfig, PairOperator};
+        let gx = Geometry::grid_1d_unit(14, 2);
+        let gy = Geometry::grid_1d_unit(11, 2);
+        let cfg = GwConfig::default();
+        let solver = EntropicGw::new(gx.clone(), gy.clone(), cfg);
+        let u = vec![1.0 / 14.0; 14];
+        let v = vec![1.0 / 11.0; 11];
+        let f64_sol = solver.solve(&u, &v, GradientKind::Fgc).unwrap();
+
+        let op = PairOperator::new(gx.clone(), gy.clone(), GradientKind::Fgc).unwrap();
+        let mut constant = Mat::zeros(14, 11);
+        op.constant_term(&u, &v, None, 1.0, &mut constant).unwrap();
+        let mut lane = F32Lane::new(&gx, &gy, Parallelism::SERIAL).unwrap();
+        let opts = SinkhornOptions {
+            epsilon: cfg.epsilon,
+            max_iters: cfg.sinkhorn_max_iters,
+            tolerance: cfg.sinkhorn_tolerance,
+            check_every: cfg.sinkhorn_check_every,
+        };
+        let mut gamma = Mat::zeros(14, 11);
+        let inner = lane
+            .presolve(&u, &v, &constant, 1.0, cfg.outer_iters, &opts, &mut gamma)
+            .unwrap();
+        assert!(inner > 0);
+        let diff = crate::linalg::frobenius_diff(&gamma, &f64_sol.plan).unwrap();
+        let norm = f64_sol
+            .plan
+            .as_slice()
+            .iter()
+            .map(|x| x * x)
+            .sum::<f64>()
+            .sqrt();
+        assert!(diff / norm < 5e-3, "relative plan drift {:e}", diff / norm);
+    }
+
+    #[test]
+    fn lane_resident_bytes_under_half_of_f64_plan_state() {
+        // The headline claim the warm-cache unit accounting rests on:
+        // an f32 lane for an M×N dense pair stays well under the f64
+        // workspace's dominant payload (kernel + kernelᵀ + plan + grad
+        // + two dense factors, all f64).
+        let gx = Geometry::Dense(crate::grid::dense_dist_1d(
+            &crate::grid::Grid1d::unit(40),
+            2,
+        ));
+        let gy = Geometry::Dense(crate::grid::dense_dist_1d(
+            &crate::grid::Grid1d::unit(30),
+            2,
+        ));
+        let lane = F32Lane::new(&gx, &gy, Parallelism::SERIAL).unwrap();
+        let f64_dominant = (40 * 30 * 4 + 40 * 40 + 30 * 30) * std::mem::size_of::<f64>();
+        assert!(lane.resident_bytes() < f64_dominant);
+    }
+}

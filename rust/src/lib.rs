@@ -67,6 +67,7 @@ pub mod linalg;
 pub mod parallel;
 pub mod prng;
 pub mod runtime;
+pub mod scalar;
 pub mod sinkhorn;
 pub mod testutil;
 

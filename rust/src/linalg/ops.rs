@@ -1,18 +1,32 @@
 //! Vector and matrix kernels used by the solvers.
+//!
+//! The streaming primitives (`dot` / `axpy` / `sum` /
+//! `scale_in_place`) are precision-generic over [`Scalar`]; every
+//! historical call site instantiates them at `f64` by inference, and
+//! the f32 serving lane reuses the same kernels. `axpy` — the
+//! bandwidth-bound inner loop of the Gibbs sweep, the dense matmul and
+//! the dense row/col factor multiplies — carries an explicitly
+//! unrolled variant behind the `simd` feature. The unroll is across
+//! **independent outputs only** (each `y[i]` still receives exactly
+//! one fused `alpha·x[i]` update, in the same order), so the feature
+//! is bit-for-bit with the scalar fallback by construction; reductions
+//! like `dot` keep their historical accumulator pattern untouched
+//! because reordering them would break the bitwise contracts.
 
 use super::Mat;
 use crate::error::{Error, Result};
 use crate::parallel::{self, Parallelism};
+use crate::scalar::Scalar;
 
 /// Dot product.
 #[inline]
-pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+pub fn dot<T: Scalar>(a: &[T], b: &[T]) -> T {
     debug_assert_eq!(a.len(), b.len());
     // 4-way unrolled accumulation: keeps the FP pipes busy without
     // changing results enough to matter (commutative reassociation).
     let n = a.len();
     let chunks = n / 4;
-    let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
+    let (mut s0, mut s1, mut s2, mut s3) = (T::ZERO, T::ZERO, T::ZERO, T::ZERO);
     for c in 0..chunks {
         let i = c * 4;
         s0 += a[i] * b[i];
@@ -27,24 +41,50 @@ pub fn dot(a: &[f64], b: &[f64]) -> f64 {
     s
 }
 
-/// `y += alpha * x`.
+/// `y += alpha * x` (scalar fallback; the `simd` feature swaps in the
+/// unrolled-lane variant below, bit-for-bit with this loop).
+#[cfg(not(feature = "simd"))]
 #[inline]
-pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+pub fn axpy<T: Scalar>(alpha: T, x: &[T], y: &mut [T]) {
     debug_assert_eq!(x.len(), y.len());
     for (yi, &xi) in y.iter_mut().zip(x) {
         *yi += alpha * xi;
     }
 }
 
-/// Sum of entries.
+/// `y += alpha * x`, unrolled four independent outputs per step so the
+/// backend emits packed FMA lanes. Per-output arithmetic is identical
+/// to the scalar fallback (one `+= alpha·x[i]` each, ascending order),
+/// so results are bit-for-bit equal — asserted by
+/// `tests/precision_simd.rs`.
+#[cfg(feature = "simd")]
 #[inline]
-pub fn sum(x: &[f64]) -> f64 {
-    x.iter().sum()
+pub fn axpy<T: Scalar>(alpha: T, x: &[T], y: &mut [T]) {
+    debug_assert_eq!(x.len(), y.len());
+    let n = y.len().min(x.len());
+    let chunks = n / 4;
+    for c in 0..chunks {
+        let i = c * 4;
+        y[i] += alpha * x[i];
+        y[i + 1] += alpha * x[i + 1];
+        y[i + 2] += alpha * x[i + 2];
+        y[i + 3] += alpha * x[i + 3];
+    }
+    for i in chunks * 4..n {
+        y[i] += alpha * x[i];
+    }
+}
+
+/// Sum of entries (sequential left fold, the order `iter().sum()`
+/// uses — kept explicit so the generic form stays bitwise stable).
+#[inline]
+pub fn sum<T: Scalar>(x: &[T]) -> T {
+    x.iter().fold(T::ZERO, |acc, &v| acc + v)
 }
 
 /// `x *= alpha` in place.
 #[inline]
-pub fn scale_in_place(x: &mut [f64], alpha: f64) {
+pub fn scale_in_place<T: Scalar>(x: &mut [T], alpha: T) {
     for xi in x {
         *xi *= alpha;
     }

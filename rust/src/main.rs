@@ -1,18 +1,21 @@
 //! `fgc-gw` — launcher for the FGC-GW alignment stack.
 //!
 //! ```text
-//! fgc-gw solve  --n 500 [--k 1] [--eps 0.002] [--backend fgc|naive|lowrank] [--lowrank-tol T] [--seed 7] [--threads 1]
+//! fgc-gw solve  --n 500 [--k 1] [--eps 0.002] [--backend fgc|naive|lowrank] [--precision f64|f32|auto] [--lowrank-tol T] [--seed 7] [--threads 1]
 //! fgc-gw solve2d --side 20 [--eps 0.004] …
 //! fgc-gw solve3d --side 6 [--eps 0.004] …
-//! fgc-gw serve  --jobs 32 [--family 1d|3d|mixed] [--workers 2] [--shards 0] [--threads 1] [--backend auto|fgc|naive|lowrank] [--lowrank-tol T] [--deadline-ms 0] [--max-retries 3] [--pjrt] [--config path]
+//! fgc-gw serve  --jobs 32 [--family 1d|3d|mixed] [--workers 2] [--shards 0] [--threads 1] [--backend auto|fgc|naive|lowrank] [--precision f64|f32|auto] [--lowrank-tol T] [--deadline-ms 0] [--max-retries 3] [--pjrt] [--config path]
 //! fgc-gw bary   --inputs 3 --n 40
 //! fgc-gw info   [--artifacts artifacts]
 //! ```
 //!
 //! `--threads 0` means one thread per core; the serve command also
-//! reads `solver.threads`, `solver.backend`, `solver.lowrank_tol`,
-//! `coordinator.shards`, `service.deadline_ms` (0 = no deadline) and
-//! `service.max_retries` from the config file (CLI wins). `--backend
+//! reads `solver.threads`, `solver.backend`, `solver.precision`,
+//! `solver.lowrank_tol`, `coordinator.shards`, `service.deadline_ms`
+//! (0 = no deadline) and `service.max_retries` from the config file
+//! (CLI wins). `--precision f32` solves in the f32 serving tier with
+//! an f64 refinement pass; `auto` picks f32 only above the size
+//! threshold where the narrow tier pays for itself. `--backend
 //! auto` (the default) lets the router pick per job: grid → fgc, small
 //! dense → naive, large dense → lowrank. `--shards 0` (default) sizes
 //! the variant-sharded queue from the worker count; `--lowrank-tol 0`
@@ -27,7 +30,7 @@ use fgc_gw::coordinator::{Coordinator, CoordinatorConfig, JobPayload, RoutingPol
 use fgc_gw::data::random_distribution;
 use fgc_gw::gw::{
     gw_barycenter_1d, BarycenterConfig, EntropicGw, GradientKind, GwConfig, LowRankOptions,
-    barycenter::BaryInput1d,
+    Precision, barycenter::BaryInput1d,
 };
 use fgc_gw::prng::Rng;
 use fgc_gw::runtime::ArtifactRegistry;
@@ -61,10 +64,10 @@ fn print_usage() {
     println!(
         "fgc-gw — Fast Gradient Computation for Gromov-Wasserstein\n\
          commands:\n\
-         \x20 solve    1D GW between random distributions (--n, --k, --eps, --backend, --lowrank-tol, --seed, --threads)\n\
-         \x20 solve2d  2D GW on an n×n grid (--side, --k, --eps, --backend, --seed, --threads)\n\
-         \x20 solve3d  3D GW on an n×n×n grid (--side, --k, --eps, --backend, --seed, --threads)\n\
-         \x20 serve    run the coordinator on a synthetic workload (--jobs, --family 1d|3d|mixed, --workers, --shards, --threads, --backend, --lowrank-tol, --deadline-ms, --max-retries, --pjrt)\n\
+         \x20 solve    1D GW between random distributions (--n, --k, --eps, --backend, --precision, --lowrank-tol, --seed, --threads)\n\
+         \x20 solve2d  2D GW on an n×n grid (--side, --k, --eps, --backend, --precision, --seed, --threads)\n\
+         \x20 solve3d  3D GW on an n×n×n grid (--side, --k, --eps, --backend, --precision, --seed, --threads)\n\
+         \x20 serve    run the coordinator on a synthetic workload (--jobs, --family 1d|3d|mixed, --workers, --shards, --threads, --backend, --precision, --lowrank-tol, --deadline-ms, --max-retries, --pjrt)\n\
          \x20 bary     1D GW barycenter demo (--inputs, --n)\n\
          \x20 info     platform + artifact registry summary (--artifacts DIR)"
     );
@@ -74,6 +77,12 @@ fn backend(args: &Args) -> fgc_gw::Result<GradientKind> {
     let name = args.get("backend").unwrap_or("fgc");
     GradientKind::from_name(name)
         .ok_or_else(|| fgc_gw::Error::Config(format!("unknown backend `{name}` (expected fgc|naive|lowrank)")))
+}
+
+/// Parse `--precision` for the one-shot solve commands (absent = f64;
+/// `auto` defers to the size threshold in the cost model).
+fn precision(args: &Args) -> fgc_gw::Result<Precision> {
+    args.get_or("precision", Precision::F64)
 }
 
 /// Parse a backend override for the router: `auto` (or absent) keeps
@@ -117,15 +126,16 @@ fn cmd_solve(args: &Args) -> fgc_gw::Result<()> {
             n,
             n,
             k,
-            GwConfig { epsilon: eps, threads, ..GwConfig::default() },
+            GwConfig { epsilon: eps, threads, precision: precision(args)?, ..GwConfig::default() },
         ),
         args,
     )?;
     let sol = solver.solve(&u, &v, kind)?;
     println!(
-        "GW²={:.6e}  N={n} k={k} ε={eps} backend={kind} threads={}\n\
+        "GW²={:.6e}  N={n} k={k} ε={eps} backend={kind} precision={} threads={}\n\
          time: total={:?} gradient={:?} sinkhorn={:?} ({} inner sweeps)",
         sol.objective,
+        solver.config().precision,
         solver.config().parallelism().threads(),
         sol.total_time, sol.gradient_time, sol.sinkhorn_time,
         sol.sinkhorn_iterations
@@ -148,7 +158,7 @@ fn cmd_solve_2d(args: &Args) -> fgc_gw::Result<()> {
             side,
             side,
             k,
-            GwConfig { epsilon: eps, threads, ..GwConfig::default() },
+            GwConfig { epsilon: eps, threads, precision: precision(args)?, ..GwConfig::default() },
         ),
         args,
     )?;
@@ -175,7 +185,7 @@ fn cmd_solve_3d(args: &Args) -> fgc_gw::Result<()> {
             side,
             side,
             k,
-            GwConfig { epsilon: eps, threads, ..GwConfig::default() },
+            GwConfig { epsilon: eps, threads, precision: precision(args)?, ..GwConfig::default() },
         ),
         args,
     )?;
@@ -202,6 +212,7 @@ fn cmd_serve(args: &Args) -> fgc_gw::Result<()> {
         cfg.sinkhorn_max_iters = file.get_or("solver.sinkhorn_max_iters", cfg.sinkhorn_max_iters)?;
         cfg.solver_threads = file.get_or("solver.threads", cfg.solver_threads)?;
         cfg.lowrank_tol = file.get_or("solver.lowrank_tol", cfg.lowrank_tol)?;
+        cfg.precision = file.get_or("solver.precision", cfg.precision)?;
         let deadline_ms = file.get_or("service.deadline_ms", 0u64)?;
         if deadline_ms > 0 {
             cfg.default_deadline = Some(Duration::from_millis(deadline_ms));
@@ -222,6 +233,9 @@ fn cmd_serve(args: &Args) -> fgc_gw::Result<()> {
     }
     if let Some(tol) = args.get_opt::<f64>("lowrank-tol")? {
         cfg.lowrank_tol = tol;
+    }
+    if let Some(precision) = args.get_opt::<Precision>("precision")? {
+        cfg.precision = precision;
     }
     cfg.enable_pjrt = cfg.enable_pjrt || args.has_flag("pjrt");
     cfg.artifacts_dir = PathBuf::from(args.get("artifacts").unwrap_or("artifacts"));

@@ -147,16 +147,20 @@ where
 /// Partition `out` (shape `rows × row_len`, row-major) by row blocks
 /// and run `work(block_index, rows_range, out_block)` per block. The
 /// last block runs on the calling thread. Row indices in `rows_range`
-/// are absolute; `out_block` starts at `rows_range.start`.
-pub fn for_row_blocks<F>(
+/// are absolute; `out_block` starts at `rows_range.start`. Generic
+/// over the element type so the precision-generic kernels stream `f32`
+/// blocks through the same engine (`T = f64` at every historical call
+/// site by inference).
+pub fn for_row_blocks<T, F>(
     par: Parallelism,
     rows: usize,
     row_len: usize,
     min_rows: usize,
-    out: &mut [f64],
+    out: &mut [T],
     work: F,
 ) where
-    F: Fn(usize, Range<usize>, &mut [f64]) + Sync,
+    T: Send,
+    F: Fn(usize, Range<usize>, &mut [T]) + Sync,
 {
     assert_eq!(out.len(), rows * row_len, "for_row_blocks: output size");
     let nb = par.blocks(rows, min_rows);
@@ -186,20 +190,23 @@ pub fn for_row_blocks<F>(
 /// slot of `partials` (caller-provided, ≥ thread budget, so the hot
 /// loop never allocates); partials are folded in ascending block order
 /// on the calling thread. With one block this is exactly the serial
-/// sum.
-pub fn sum_blocks<F>(
+/// sum. Generic over the element type (`T = f64` by inference at the
+/// historical call sites; the ascending in-order fold keeps the f64
+/// instantiation bitwise identical to the pre-generic reduction).
+pub fn sum_blocks<T, F>(
     par: Parallelism,
     items: usize,
     min_block: usize,
-    partials: &mut [f64],
+    partials: &mut [T],
     f: F,
-) -> f64
+) -> T
 where
-    F: Fn(usize, Range<usize>) -> f64 + Sync,
+    T: crate::scalar::Scalar,
+    F: Fn(usize, Range<usize>) -> T + Sync,
 {
     let nb = par.blocks(items, min_block).min(partials.len().max(1));
     if nb <= 1 {
-        return if items == 0 { 0.0 } else { f(0, 0..items) };
+        return if items == 0 { T::ZERO } else { f(0, 0..items) };
     }
     std::thread::scope(|s| {
         let mut rest = &mut partials[..nb];
@@ -215,7 +222,9 @@ where
             }
         }
     });
-    partials[..nb].iter().sum()
+    partials[..nb]
+        .iter()
+        .fold(T::ZERO, |acc, &p| acc + p)
 }
 
 #[cfg(test)]

@@ -4,31 +4,33 @@
 //! areas of the FGC 2D row pass write *interleaved* regions of one
 //! buffer (column stripes share every row), which `split_at_mut`
 //! cannot express. [`SharedMutSlice`] erases the exclusivity of a
-//! `&mut [f64]` behind a raw pointer so each scoped thread can carve
+//! `&mut [T]` behind a raw pointer so each scoped thread can carve
 //! out its own ranges; callers guarantee disjointness (per-stripe /
 //! per-block index arithmetic), which is what makes the single unsafe
-//! accessor sound.
+//! accessor sound. The element type defaults to `f64` (the historical
+//! concrete type); the precision-generic scans instantiate it at `f32`
+//! too.
 
 use std::marker::PhantomData;
 use std::ops::Range;
 
-/// A `&mut [f64]` that may be sliced concurrently into disjoint
+/// A `&mut [T]` that may be sliced concurrently into disjoint
 /// ranges from multiple scoped threads.
-pub struct SharedMutSlice<'a> {
-    ptr: *mut f64,
+pub struct SharedMutSlice<'a, T = f64> {
+    ptr: *mut T,
     len: usize,
-    _marker: PhantomData<&'a mut [f64]>,
+    _marker: PhantomData<&'a mut [T]>,
 }
 
 // SAFETY: the wrapper only hands out ranges through the unsafe
 // `range_mut`, whose contract requires concurrent callers to use
 // disjoint ranges; the borrow of the underlying slice is held for 'a.
-unsafe impl Send for SharedMutSlice<'_> {}
-unsafe impl Sync for SharedMutSlice<'_> {}
+unsafe impl<T: Send> Send for SharedMutSlice<'_, T> {}
+unsafe impl<T: Sync> Sync for SharedMutSlice<'_, T> {}
 
-impl<'a> SharedMutSlice<'a> {
+impl<'a, T> SharedMutSlice<'a, T> {
     /// Wrap an exclusive slice for the duration of a parallel region.
-    pub fn new(slice: &'a mut [f64]) -> Self {
+    pub fn new(slice: &'a mut [T]) -> Self {
         SharedMutSlice {
             ptr: slice.as_mut_ptr(),
             len: slice.len(),
@@ -57,7 +59,7 @@ impl<'a> SharedMutSlice<'a> {
     /// must not hold two overlapping views at once even on one thread.
     #[inline]
     #[allow(clippy::mut_from_ref)]
-    pub unsafe fn range_mut(&self, range: Range<usize>) -> &mut [f64] {
+    pub unsafe fn range_mut(&self, range: Range<usize>) -> &mut [T] {
         debug_assert!(range.start <= range.end && range.end <= self.len);
         std::slice::from_raw_parts_mut(self.ptr.add(range.start), range.end - range.start)
     }
@@ -87,6 +89,28 @@ mod tests {
         }
         for (i, &v) in buf.iter().enumerate() {
             assert_eq!(v, i as f64);
+        }
+    }
+
+    #[test]
+    fn generic_element_types_share_the_wrapper() {
+        let mut buf = vec![0.0f32; 16];
+        {
+            let shared: SharedMutSlice<'_, f32> = SharedMutSlice::new(&mut buf);
+            std::thread::scope(|s| {
+                for t in 0..2usize {
+                    let sh = &shared;
+                    s.spawn(move || {
+                        let blk = unsafe { sh.range_mut(t * 8..(t + 1) * 8) };
+                        for (i, v) in blk.iter_mut().enumerate() {
+                            *v = (t * 8 + i) as f32;
+                        }
+                    });
+                }
+            });
+        }
+        for (i, &v) in buf.iter().enumerate() {
+            assert_eq!(v, i as f32);
         }
     }
 }

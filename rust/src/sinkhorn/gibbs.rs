@@ -20,6 +20,7 @@ use super::{validate, SinkhornOptions, SinkhornResult};
 use crate::error::{Error, Result};
 use crate::linalg::Mat;
 use crate::parallel::{self, Parallelism};
+use crate::scalar::Scalar;
 use std::sync::atomic::{AtomicBool, Ordering};
 
 /// Balanced Sinkhorn in the Gibbs (exponential) domain.
@@ -94,7 +95,7 @@ pub(super) fn gibbs_into(
         // ~2× on large problems): per row compute `(K·b)_i`
         // (Gauss-Seidel: old b), update `a_i`, and accumulate
         // `a_i·K_i` into the block's `kta` partial.
-        fused_scaling_sweep(k, u, b, a, kta, partials, par, min_rows)?;
+        fused_scaling_sweep(k.as_slice(), u, b, a, kta, partials, par, min_rows)?;
         for j in 0..n {
             b[j] = safe_div(v[j], kta[j], "Kᵀa")?;
         }
@@ -138,36 +139,42 @@ pub(super) fn gibbs_into(
 /// blocks. Block partials land in `partials` and are folded in
 /// ascending block order; with one block the sweep accumulates
 /// straight into `kta` — the exact original serial path.
-fn fused_scaling_sweep(
-    k: &Mat,
-    u: &[f64],
-    b: &[f64],
-    a: &mut [f64],
-    kta: &mut [f64],
-    partials: &mut [f64],
+/// Precision-generic over the row-major `m×n` kernel slice (`T = f64`
+/// here by inference; the f32 serving lane streams the same core). The
+/// hot `aᵢ·Kᵢ` accumulation is the `linalg::axpy` kernel, so the
+/// `simd` feature's unrolled lanes apply to the sweep directly.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn fused_scaling_sweep<T: Scalar>(
+    k: &[T],
+    u: &[T],
+    b: &[T],
+    a: &mut [T],
+    kta: &mut [T],
+    partials: &mut [T],
     par: Parallelism,
     min_rows: usize,
 ) -> Result<()> {
     let m = u.len();
     let n = b.len();
+    debug_assert_eq!(k.len(), m * n);
     let underflow = AtomicBool::new(false);
-    let block = |rr: std::ops::Range<usize>, a_blk: &mut [f64], p_blk: &mut [f64]| {
-        p_blk.fill(0.0);
+    let block = |rr: std::ops::Range<usize>, a_blk: &mut [T], p_blk: &mut [T]| {
+        p_blk.fill(T::ZERO);
         for (local, i) in rr.enumerate() {
-            let row = k.row(i);
+            let row = &k[i * n..(i + 1) * n];
             let kbi = crate::linalg::dot(row, b);
-            let ai = if kbi > 0.0 && kbi.is_finite() {
+            let ai = if kbi > T::ZERO && kbi.finite() {
                 u[i] / kbi
-            } else if u[i] == 0.0 {
+            } else if u[i] == T::ZERO {
                 // A zero-mass marginal entry legitimately zeroes the
                 // scaling.
-                0.0
+                T::ZERO
             } else {
                 underflow.store(true, Ordering::Relaxed);
-                0.0
+                T::ZERO
             };
             a_blk[local] = ai;
-            if ai != 0.0 {
+            if ai != T::ZERO {
                 crate::linalg::axpy(ai, row, p_blk);
             }
         }
@@ -196,7 +203,7 @@ fn fused_scaling_sweep(
                 }
             }
         });
-        kta.fill(0.0);
+        kta.fill(T::ZERO);
         for bidx in 0..nb {
             let p = &partials[bidx * n..(bidx + 1) * n];
             for (t, &x) in kta.iter_mut().zip(p) {
@@ -213,14 +220,15 @@ fn fused_scaling_sweep(
 }
 
 #[inline]
-fn safe_div(num: f64, den: f64, what: &str) -> Result<f64> {
-    if den <= 0.0 || !den.is_finite() {
-        if num == 0.0 {
+pub(crate) fn safe_div<T: Scalar>(num: T, den: T, what: &str) -> Result<T> {
+    if den <= T::ZERO || !den.finite() {
+        if num == T::ZERO {
             // A zero-mass marginal entry legitimately zeroes the scaling.
-            return Ok(0.0);
+            return Ok(T::ZERO);
         }
         return Err(Error::Numeric(format!(
-            "sinkhorn underflow: {what} entry = {den} (cost range too large for Gibbs domain)"
+            "sinkhorn underflow: {what} entry = {} (cost range too large for Gibbs domain)",
+            den.to_f64()
         )));
     }
     Ok(num / den)

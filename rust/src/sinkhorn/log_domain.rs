@@ -25,6 +25,7 @@ use super::{validate, SinkhornOptions, SinkhornResult};
 use crate::error::{Error, Result};
 use crate::linalg::Mat;
 use crate::parallel::{self, Parallelism};
+use crate::scalar::Scalar;
 
 /// Balanced Sinkhorn with log-domain stabilization.
 pub fn sinkhorn_log(
@@ -158,32 +159,34 @@ pub(super) fn log_into(
 
 /// `log Σ_j exp(w_j − s_j)` with max-shift; returns −∞ on empty /
 /// all −∞ input (handled by the caller via `ln u = −∞` semantics).
+/// Precision-generic (`T = f64` at the solver call sites; the f32
+/// serving lane runs the same max-shifted core).
 #[inline]
-fn lse_shifted(w: &[f64], s_row: &[f64]) -> f64 {
+pub(crate) fn lse_shifted<T: Scalar>(w: &[T], s_row: &[T]) -> T {
     debug_assert_eq!(w.len(), s_row.len());
-    let mut mx = f64::NEG_INFINITY;
-    for (wj, sj) in w.iter().zip(s_row) {
+    let mut mx = T::neg_infinity();
+    for (&wj, &sj) in w.iter().zip(s_row) {
         let t = wj - sj;
         if t > mx {
             mx = t;
         }
     }
-    if mx == f64::NEG_INFINITY {
-        return f64::NEG_INFINITY;
+    if mx == T::neg_infinity() {
+        return T::neg_infinity();
     }
-    let mut acc = 0.0;
-    for (wj, sj) in w.iter().zip(s_row) {
+    let mut acc = T::ZERO;
+    for (&wj, &sj) in w.iter().zip(s_row) {
         acc += (wj - sj - mx).exp();
     }
     mx + acc.ln()
 }
 
 /// `Σ_j exp(φᵢ + ψ_j − S_ij)` — one plan-row mass without
-/// materializing the plan.
+/// materializing the plan. Precision-generic like [`lse_shifted`].
 #[inline]
-fn sum_exp_row(phi_i: f64, psi: &[f64], s_row: &[f64]) -> f64 {
-    let mut acc = 0.0;
-    for (pj, sj) in psi.iter().zip(s_row) {
+pub(crate) fn sum_exp_row<T: Scalar>(phi_i: T, psi: &[T], s_row: &[T]) -> T {
+    let mut acc = T::ZERO;
+    for (&pj, &sj) in psi.iter().zip(s_row) {
         acc += (phi_i + pj - sj).exp();
     }
     acc

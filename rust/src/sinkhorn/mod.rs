@@ -27,6 +27,10 @@ mod workspace;
 
 pub use gibbs::sinkhorn_gibbs;
 pub use log_domain::sinkhorn_log;
+// Precision-generic sweep cores, shared with the f32 serving lane
+// (`crate::gw::precision`).
+pub(crate) use gibbs::{fused_scaling_sweep, safe_div};
+pub(crate) use log_domain::{lse_shifted, sum_exp_row};
 pub use unbalanced::{sinkhorn_unbalanced, unbalanced_into, UnbalancedOptions, UnbalancedWorkspace};
 pub use workspace::SinkhornWorkspace;
 

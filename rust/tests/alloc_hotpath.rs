@@ -60,6 +60,7 @@ fn cfg(outer_iters: usize) -> GwConfig {
         sinkhorn_tolerance: 1e-10,
         sinkhorn_check_every: 10,
         threads: 1,
+        ..GwConfig::default()
     }
 }
 

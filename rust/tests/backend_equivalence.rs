@@ -53,6 +53,7 @@ fn gw_cfg(threads: usize) -> GwConfig {
         sinkhorn_tolerance: 1e-10,
         sinkhorn_check_every: 10,
         threads,
+        ..GwConfig::default()
     }
 }
 
@@ -498,6 +499,7 @@ fn barycenter_workspace_reuse_is_bit_for_bit_on_naive_path() {
             sinkhorn_tolerance: 1e-8,
             sinkhorn_check_every: 10,
             threads: 1,
+            ..GwConfig::default()
         },
         iters: 3,
     };

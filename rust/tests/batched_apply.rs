@@ -146,6 +146,7 @@ fn mixed_and_2d_solve_batch_is_bitwise_sequential() {
         sinkhorn_tolerance: 1e-9,
         sinkhorn_check_every: 10,
         threads: 1,
+        ..GwConfig::default()
     };
     let g2 = Geometry::grid_2d_unit(3, 1); // 9 points
     let g3 = Geometry::grid_3d_unit(2, 1); // 8 points
@@ -221,6 +222,7 @@ fn prop_mid_batch_fault_leaves_survivor_solves_bitwise_intact() {
                 sinkhorn_tolerance: 1e-9,
                 sinkhorn_check_every: 10,
                 threads: 1,
+                ..GwConfig::default()
             };
             let (gx, gy) = geometry_pair(which, n, n, 1);
             let (m, n) = (gx.len(), gy.len());
@@ -290,6 +292,7 @@ fn prop_solve_batch_is_bitwise_sequential_solves() {
                 sinkhorn_tolerance: 1e-9,
                 sinkhorn_check_every: 10,
                 threads: 1,
+                ..GwConfig::default()
             };
             let mut rng = Rng::seeded(seed);
             let pairs: Vec<(Vec<f64>, Vec<f64>)> = (0..b)

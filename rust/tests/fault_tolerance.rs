@@ -31,6 +31,7 @@ fn base_cfg() -> CoordinatorConfig {
         submit_timeout: Duration::from_secs(5),
         default_deadline: None,
         default_max_retries: 3,
+        ..CoordinatorConfig::default()
     }
 }
 
@@ -49,7 +50,7 @@ fn zero_deadline_is_shed_at_admission() {
     let coord = Coordinator::start(base_cfg()).unwrap();
     let options = JobOptions {
         deadline: Some(Duration::ZERO),
-        max_retries: 3,
+        ..JobOptions::default()
     };
     let err = coord
         .submit_with_options(gw1d(12, 1), options)
@@ -70,7 +71,7 @@ fn deadline_expired_in_queue_gets_terminal_result() {
     let coord = Coordinator::start(base_cfg()).unwrap();
     let options = JobOptions {
         deadline: Some(Duration::from_nanos(1)),
-        max_retries: 3,
+        ..JobOptions::default()
     };
     let (_, rx_tight) = coord.submit_with_options(gw1d(16, 3), options).unwrap();
     let tight = rx_tight.recv().unwrap();
@@ -253,6 +254,7 @@ mod injected {
         let options = JobOptions {
             deadline: None,
             max_retries: 0,
+            ..JobOptions::default()
         };
         let (_, rx) = coord.submit_with_options(gw1d(16, 80), options).unwrap();
         let res = rx.recv().unwrap();

@@ -133,6 +133,7 @@ fn end_to_end_solve_matches_serial_across_threads() {
         sinkhorn_tolerance: 1e-10,
         sinkhorn_check_every: 10,
         threads,
+        ..GwConfig::default()
     };
 
     // 1D, rectangular.

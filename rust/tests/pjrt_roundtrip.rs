@@ -51,6 +51,7 @@ fn gw1d_artifact_matches_native_solver() {
             sinkhorn_tolerance: 0.0, // fixed-sweep like the artifact
             sinkhorn_check_every: usize::MAX,
             threads: 1,
+            ..GwConfig::default()
         },
     );
     let native = solver.solve(&u, &v, GradientKind::Fgc).unwrap();

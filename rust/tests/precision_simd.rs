@@ -1,0 +1,270 @@
+//! Mixed-precision and SIMD-parity integration tests.
+//!
+//! Three contracts pin the precision tier and the `simd` feature down:
+//!
+//! 1. **f32 + refine tracks f64** — solving with
+//!    `Precision::F32Refine` (full f32 presolve, short f64 polish)
+//!    lands within f32-noise tolerances of the pure-f64 solve on every
+//!    geometry family × backend × thread budget, and the refined plan
+//!    still meets the f64 marginal contract.
+//! 2. **Default path untouched** — `Precision::F64` (and `Auto` below
+//!    the serve threshold) is bit-for-bit the historical solver.
+//! 3. **SIMD is a code-shape change only** — the unrolled-lane kernels
+//!    behind `--features simd` produce bit-for-bit the scalar
+//!    fallback's results. This file runs identically in both
+//!    configurations (CI builds it twice); the kernel-level checks
+//!    compare against straight-line reference loops, so a build whose
+//!    unroll reorders any FMA fails here.
+
+#![allow(clippy::needless_range_loop)]
+
+use fgc_gw::grid::{dense_dist_1d, Grid1d};
+use fgc_gw::gw::{BatchJob, EntropicGw, Geometry, GradientKind, GwConfig, Precision};
+use fgc_gw::linalg::{axpy, frobenius_diff, normalize_l1};
+use fgc_gw::prng::Rng;
+use fgc_gw::sinkhorn::marginal_violation;
+
+/// Relative Frobenius bound for the refined plan against the pure-f64
+/// plan: f32 unit roundoff is ~6e-8, but the presolve's fixed point
+/// differs from f64's by accumulated rounding through O(outer·inner)
+/// sweeps; 5e-3 is ~40× the drift observed on these shapes.
+const PLAN_RTOL: f64 = 5e-3;
+/// Relative objective bound — the objective is quadratic around the
+/// optimizer, so it converges an order faster than the plan.
+const OBJ_RTOL: f64 = 1e-3;
+
+fn cfg(threads: usize, epsilon: f64, precision: Precision) -> GwConfig {
+    GwConfig {
+        epsilon,
+        outer_iters: 6,
+        sinkhorn_max_iters: 600,
+        sinkhorn_tolerance: 1e-9,
+        sinkhorn_check_every: 10,
+        threads,
+        precision,
+    }
+}
+
+fn dists(rng: &mut Rng, m: usize, n: usize) -> (Vec<f64>, Vec<f64>) {
+    let mut u: Vec<f64> = (0..m).map(|_| 0.05 + rng.uniform()).collect();
+    let mut v: Vec<f64> = (0..n).map(|_| 0.05 + rng.uniform()).collect();
+    normalize_l1(&mut u).unwrap();
+    normalize_l1(&mut v).unwrap();
+    (u, v)
+}
+
+/// The geometry families the f32 lane supports, with an ε per family
+/// chosen so both f32 Sinkhorn regimes get exercised: the 1D-grid case
+/// runs Gibbs (cost range / ε ≈ 20), the dense and 2D cases cross
+/// [`F32Lane`]'s tighter Gibbs limit and demote to log-domain.
+fn families() -> Vec<(&'static str, Geometry, Geometry, f64)> {
+    let dense = Geometry::Dense(dense_dist_1d(&Grid1d::unit(18), 2));
+    vec![
+        ("grid1d", Geometry::grid_1d_unit(24, 1), Geometry::grid_1d_unit(20, 1), 0.05),
+        ("grid2d", Geometry::grid_2d_unit(4, 1), Geometry::grid_2d_unit(4, 1), 0.01),
+        ("dense", dense.clone(), dense.clone(), 0.01),
+        ("mixed", dense, Geometry::grid_2d_unit(4, 1), 0.01),
+    ]
+}
+
+/// f32+refine vs pure f64 across geometry families × {fgc, naive} ×
+/// thread budgets {1, 4} (plus {2, 7} to cover uneven row splits of
+/// the f32 lane's parallel sweeps).
+#[test]
+fn f32_refine_tracks_f64_across_families_backends_threads() {
+    for (name, gx, gy, eps) in families() {
+        let (m, n) = (gx.len(), gy.len());
+        let mut rng = Rng::seeded(0x32F0);
+        let (u, v) = dists(&mut rng, m, n);
+        let baseline = EntropicGw::new(gx.clone(), gy.clone(), cfg(1, eps, Precision::F64))
+            .solve(&u, &v, GradientKind::Fgc)
+            .unwrap();
+        let norm = baseline.plan.as_slice().iter().map(|x| x * x).sum::<f64>().sqrt();
+        for kind in [GradientKind::Fgc, GradientKind::Naive] {
+            for threads in [1usize, 2, 4, 7] {
+                let sol = EntropicGw::new(gx.clone(), gy.clone(), cfg(threads, eps, Precision::F32Refine))
+                    .solve(&u, &v, kind)
+                    .unwrap();
+                let d = frobenius_diff(&sol.plan, &baseline.plan).unwrap() / norm;
+                assert!(
+                    d < PLAN_RTOL,
+                    "{name} {kind} threads={threads}: relative plan drift {d:e}"
+                );
+                let dr = (sol.objective - baseline.objective).abs()
+                    / baseline.objective.abs().max(1e-12);
+                assert!(
+                    dr < OBJ_RTOL,
+                    "{name} {kind} threads={threads}: relative objective drift {dr:e}"
+                );
+                // The f64 refinement owns the marginal contract: the
+                // returned plan's violation must sit at f64 Sinkhorn
+                // scale, not f32 presolve scale.
+                let viol = marginal_violation(&sol.plan, &u, &v);
+                assert!(viol < 1e-6, "{name} {kind} threads={threads}: violation {viol:e}");
+            }
+        }
+    }
+}
+
+/// The refine pass reports its combined iteration spend: an f32-tier
+/// solution must account for the presolve outers plus the f64 polish.
+#[test]
+fn f32_refine_reports_combined_iteration_counts() {
+    let gx = Geometry::grid_1d_unit(24, 1);
+    let gy = Geometry::grid_1d_unit(20, 1);
+    let mut rng = Rng::seeded(0x32F1);
+    let (u, v) = dists(&mut rng, 24, 20);
+    let c = cfg(1, 0.05, Precision::F32Refine);
+    let sol = EntropicGw::new(gx, gy, c)
+        .solve(&u, &v, GradientKind::Fgc)
+        .unwrap();
+    // outer_iters f32 presolve outers + 2 f64 refine outers.
+    assert_eq!(sol.outer_iterations, c.outer_iters + 2);
+    assert!(sol.sinkhorn_iterations > 0);
+}
+
+/// `Precision::F64` and small-problem `Auto` are bit-for-bit the
+/// historical default — the precision knob must not perturb the f64
+/// path at all (no lane is built, no extra arithmetic happens).
+#[test]
+fn f64_and_small_auto_are_bitwise_default() {
+    let gx = Geometry::grid_1d_unit(22, 1);
+    let gy = Geometry::grid_1d_unit(19, 1);
+    let mut rng = Rng::seeded(0x32F2);
+    let (u, v) = dists(&mut rng, 22, 19);
+    let reference = EntropicGw::new(gx.clone(), gy.clone(), GwConfig::default())
+        .solve(&u, &v, GradientKind::Fgc)
+        .unwrap();
+    for precision in [Precision::F64, Precision::Auto] {
+        let sol = EntropicGw::new(
+            gx.clone(),
+            gy.clone(),
+            GwConfig { precision, ..GwConfig::default() },
+        )
+        .solve(&u, &v, GradientKind::Fgc)
+        .unwrap();
+        assert_eq!(
+            sol.plan.as_slice(),
+            reference.plan.as_slice(),
+            "{precision}: plan must be bitwise the default path"
+        );
+        assert_eq!(sol.objective, reference.objective);
+        assert_eq!(sol.outer_iterations, reference.outer_iterations);
+    }
+}
+
+/// The batch driver under the f32 tier stays bitwise equal to solo
+/// solves through the same tier: the presolve runs per-job serially
+/// and the lockstep f64 refine preserves the batch==sequential
+/// contract.
+#[test]
+fn f32_refine_batch_is_bitwise_sequential() {
+    let gx = Geometry::grid_1d_unit(16, 1);
+    let gy = Geometry::grid_1d_unit(14, 1);
+    let c = cfg(1, 0.05, Precision::F32Refine);
+    let mut rng = Rng::seeded(0x32F3);
+    let pairs: Vec<(Vec<f64>, Vec<f64>)> = (0..3).map(|_| dists(&mut rng, 16, 14)).collect();
+    for kind in [GradientKind::Fgc, GradientKind::Naive] {
+        let solver = EntropicGw::new(gx.clone(), gy.clone(), c);
+        let seq: Vec<_> = pairs
+            .iter()
+            .map(|(u, v)| solver.solve(u, v, kind).unwrap())
+            .collect();
+        let jobs: Vec<BatchJob> = pairs.iter().map(|(u, v)| BatchJob::gw(u, v)).collect();
+        let mut ws = solver.batch_workspace(kind, jobs.len()).unwrap();
+        let batched = solver.solve_batch_into(&jobs, &mut ws).unwrap();
+        for (i, (s, b)) in seq.iter().zip(&batched).enumerate() {
+            assert_eq!(
+                s.plan.as_slice(),
+                b.plan.as_slice(),
+                "{kind}: f32-tier batch job {i} plan drifted from solo"
+            );
+            assert_eq!(s.objective, b.objective, "{kind}: job {i} objective");
+        }
+    }
+}
+
+/// The low-rank backend ignores the f32 tier (it keeps the pure f64
+/// factorized path) but must still solve correctly under the knob.
+#[test]
+fn lowrank_under_f32_tier_stays_pure_f64() {
+    let dense = Geometry::Dense(dense_dist_1d(&Grid1d::unit(16), 2));
+    let mut rng = Rng::seeded(0x32F4);
+    let (u, v) = dists(&mut rng, 16, 16);
+    let f64_sol = EntropicGw::new(dense.clone(), dense.clone(), cfg(1, 0.01, Precision::F64))
+        .solve(&u, &v, GradientKind::LowRank)
+        .unwrap();
+    let f32_sol = EntropicGw::new(dense.clone(), dense.clone(), cfg(1, 0.01, Precision::F32Refine))
+        .solve(&u, &v, GradientKind::LowRank)
+        .unwrap();
+    assert_eq!(
+        f32_sol.plan.as_slice(),
+        f64_sol.plan.as_slice(),
+        "lowrank must bypass the f32 lane bitwise"
+    );
+    assert_eq!(f32_sol.outer_iterations, f64_sol.outer_iterations);
+}
+
+// ---------------------------------------------------------------------------
+// SIMD ↔ scalar bit-for-bit parity
+// ---------------------------------------------------------------------------
+
+/// `axpy` (the unrolled kernel behind the Gibbs sweep and the dense
+/// multiplies) against a straight-line reference loop, bit-for-bit, at
+/// lengths covering every unroll remainder — in f64 and f32.
+#[test]
+fn axpy_matches_reference_loop_bitwise_all_remainders() {
+    let mut rng = Rng::seeded(0x51AD);
+    for n in 0..35usize {
+        let x64: Vec<f64> = (0..n).map(|_| rng.uniform() - 0.5).collect();
+        let alpha64 = rng.uniform() * 3.0 - 1.5;
+        let y0: Vec<f64> = (0..n).map(|_| rng.uniform() - 0.5).collect();
+
+        let mut y = y0.clone();
+        axpy(alpha64, &x64, &mut y);
+        let mut yref = y0.clone();
+        for i in 0..n {
+            yref[i] += alpha64 * x64[i];
+        }
+        assert_eq!(y, yref, "f64 axpy n={n}");
+
+        let x32: Vec<f32> = x64.iter().map(|&x| x as f32).collect();
+        let alpha32 = alpha64 as f32;
+        let y032: Vec<f32> = y0.iter().map(|&x| x as f32).collect();
+        let mut y32 = y032.clone();
+        axpy(alpha32, &x32, &mut y32);
+        let mut yref32 = y032;
+        for i in 0..n {
+            yref32[i] += alpha32 * x32[i];
+        }
+        assert_eq!(y32, yref32, "f32 axpy n={n}");
+    }
+}
+
+/// Full scan-path solves (which stream `update_carries` and the fused
+/// Gibbs sweep — the other two `simd`-unrolled kernels) are invariant
+/// across thread budgets {1, 2, 4, 7}. Under `--features simd` this
+/// pins the unrolled kernels to the scalar build's values: CI runs the
+/// same seeds in both configurations and both must pass the identical
+/// 1e-12 gate against the serial solve.
+#[test]
+fn scan_path_solves_invariant_across_threads_both_kernel_shapes() {
+    for (gx, gy, eps) in [
+        (Geometry::grid_1d_unit(40, 1), Geometry::grid_1d_unit(33, 1), 0.05),
+        (Geometry::grid_2d_unit(4, 1), Geometry::grid_2d_unit(4, 1), 0.01),
+    ] {
+        let (m, n) = (gx.len(), gy.len());
+        let mut rng = Rng::seeded(0x51AE);
+        let (u, v) = dists(&mut rng, m, n);
+        let serial = EntropicGw::new(gx.clone(), gy.clone(), cfg(1, eps, Precision::F64))
+            .solve(&u, &v, GradientKind::Fgc)
+            .unwrap();
+        for threads in [2usize, 4, 7] {
+            let sol = EntropicGw::new(gx.clone(), gy.clone(), cfg(threads, eps, Precision::F64))
+                .solve(&u, &v, GradientKind::Fgc)
+                .unwrap();
+            let d = frobenius_diff(&sol.plan, &serial.plan).unwrap();
+            assert!(d < 1e-12, "threads={threads} {m}x{n}: ‖ΔΓ‖_F = {d:e}");
+        }
+    }
+}

@@ -316,6 +316,7 @@ fn prop_solver_exactness_random_settings() {
                     sinkhorn_tolerance: 1e-10,
                     sinkhorn_check_every: 10,
                     threads: 1,
+                    ..GwConfig::default()
                 },
             );
             let fast = solver.solve(u, v, GradientKind::Fgc).map_err(|e| e.to_string())?;
@@ -355,6 +356,7 @@ fn prop_objective_descends() {
                         sinkhorn_tolerance: 1e-11,
                         sinkhorn_check_every: 10,
                         threads: 1,
+                        ..GwConfig::default()
                     },
                 )
                 .solve(&u, &v, GradientKind::Fgc)
@@ -483,6 +485,7 @@ fn prop_mass_conservation() {
                     sinkhorn_tolerance: 1e-11,
                     sinkhorn_check_every: 10,
                     threads: 1,
+                    ..GwConfig::default()
                 },
             );
             let sol = solver.solve(u, v, GradientKind::Fgc).map_err(|e| e.to_string())?;

@@ -36,6 +36,7 @@ fn base_cfg() -> CoordinatorConfig {
         submit_timeout: Duration::from_millis(50),
         default_deadline: None,
         default_max_retries: 3,
+        ..CoordinatorConfig::default()
     }
 }
 
@@ -131,6 +132,7 @@ fn mixed_payload_round_trips_end_to_end() {
             sinkhorn_tolerance: cfg.sinkhorn_tolerance,
             sinkhorn_check_every: 10,
             threads: cfg.solver_threads,
+            ..GwConfig::default()
         },
     )
     .solve(&u, &v, GradientKind::Fgc)

@@ -18,6 +18,7 @@ fn cfg(eps: f64) -> GwConfig {
         sinkhorn_tolerance: 1e-10,
         sinkhorn_check_every: 10,
         threads: 1,
+        ..GwConfig::default()
     }
 }
 
@@ -95,6 +96,7 @@ fn digit_transform_invariance_small() {
             sinkhorn_tolerance: 1e-9,
             sinkhorn_check_every: 10,
             threads: 1,
+            ..GwConfig::default()
         },
     );
     let mut objectives = Vec::new();
@@ -140,6 +142,7 @@ fn horse_alignment_exactness() {
             sinkhorn_tolerance: 1e-9,
             sinkhorn_check_every: 10,
             threads: 1,
+            ..GwConfig::default()
         },
     );
     for theta in [0.4, 0.8] {
