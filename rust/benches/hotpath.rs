@@ -38,11 +38,22 @@
 //! simd-build JSONs are directly comparable (the drift columns must be
 //! identical between the two — the feature is bit-for-bit).
 //!
+//! A seventh section times the **coupling representation**
+//! (`coupling_results`): the factored `Γ = Q·diag(1/g)·Rᵀ` solve
+//! (`LrGwWorkspace`, budget-derived rank) against the full-rank M×N
+//! solve at M=N ∈ {2048, 8192, 32768}, recording both workspaces'
+//! resident bytes next to the times. The full-rank column is
+//! feasibility-gated: sizes whose four M×N f64 buffers exceed
+//! `--coupling-full-cap` bytes (default 4 GiB — which skips 32768 at
+//! ~34 GB) report the low-rank tier alone, because that is the entire
+//! point of the tier.
+//!
 //! ```bash
 //! cargo bench --bench hotpath [-- --quick --threads 4 \
 //!     --sizes 256,1024,4096 --dense-sizes 256,512 --batch 8 \
 //!     --batch-n 512 --mixed-m 256 --mixed-side 16 \
 //!     --grid3d-side 6 --payload-jobs 24 \
+//!     --coupling-sizes 2048,8192,32768 \
 //!     --out ../BENCH_hotpath.json]
 //! ```
 
@@ -51,6 +62,7 @@ use fgc_gw::cli::Args;
 use fgc_gw::coordinator::{Coordinator, CoordinatorConfig, JobPayload, RoutingPolicy};
 use fgc_gw::data::{random_distribution, random_distribution_3d};
 use fgc_gw::grid::{dense_dist_1d, Grid1d};
+use fgc_gw::gw::backend::cost_model::{coupling_rank_for_sizes, full_coupling_bytes};
 use fgc_gw::gw::{
     backend, EntropicGw, Geometry, GradientBackend, GradientKind, GwConfig, LowRankBackend,
     Precision,
@@ -126,6 +138,17 @@ struct PrecisionRow {
     f32_refine_s: f64,
     obj_rel_diff: f64,
     plan_rel_fro_diff: f64,
+}
+
+struct CouplingRow {
+    n: usize,
+    rank: usize,
+    lowrank_s: f64,
+    lowrank_bytes: usize,
+    full_bytes: usize,
+    /// `None` when the full-rank workspace was feasibility-gated out.
+    full_s: Option<f64>,
+    obj_rel_gap: Option<f64>,
 }
 
 struct MixedPayloadRow {
@@ -653,6 +676,84 @@ fn main() {
     ]);
     println!("{}", prec_table.render());
 
+    // --- coupling representation: factored vs full-rank -----------------
+    // The N≈10⁶ serving question: what does the O((M+N)·r) factored
+    // coupling cost against the dense M×N plan, and where does the
+    // dense plan stop being buildable at all. Grid geometries keep the
+    // gradient side linear for both tiers so the comparison isolates
+    // the coupling representation. A friendlier ε than the scan
+    // sections keeps the mirror steps of both tiers well-conditioned
+    // at the bench's fixed sweep budget.
+    let coupling_sizes = args
+        .get_list_or("coupling-sizes", &[2048, 8192, 32_768])
+        .unwrap();
+    let coupling_full_cap = args
+        .get_or("coupling-full-cap", 1usize << 32)
+        .unwrap();
+    let mut coupling_table = TableWriter::new(
+        "hotpath: coupling representation, full M×N vs factored Q·diag(1/g)·Rᵀ (serial)",
+        &["N", "rank", "lowrank (s)", "lr bytes", "full (s)", "full bytes", "rel ΔGW²"],
+    );
+    let mut coupling_rows = Vec::new();
+    for &n in &coupling_sizes {
+        let mut rng = Rng::seeded(83 + n as u64);
+        let u = random_distribution(&mut rng, n);
+        let v = random_distribution(&mut rng, n);
+        let solver = EntropicGw::grid_1d(
+            n,
+            n,
+            1,
+            GwConfig {
+                epsilon: 5e-2,
+                ..cfg(1, quick)
+            },
+        );
+        let rank = coupling_rank_for_sizes(n, n);
+        let mut lws = solver.lr_workspace(rank).unwrap();
+        let lowrank_bytes = lws.resident_bytes();
+        let lr_sol = solver.solve_lowrank_into(&u, &v, &mut lws).unwrap();
+        assert!(lr_sol.objective.is_finite(), "N={n}: low-rank objective diverged");
+        let tl = time_mean(1, reps, || {
+            solver.solve_lowrank_into(&u, &v, &mut lws).unwrap().objective
+        });
+        let lowrank_s = tl.as_secs_f64();
+
+        let full_bytes = full_coupling_bytes(n, n);
+        let (full_s, obj_rel_gap) = if full_bytes <= coupling_full_cap {
+            let mut fws = solver.workspace(GradientKind::Fgc).unwrap();
+            let full_sol = solver.solve_into(&u, &v, &mut fws).unwrap();
+            let tf = time_mean(1, reps, || {
+                solver.solve_into(&u, &v, &mut fws).unwrap().objective
+            });
+            let gap = (lr_sol.objective - full_sol.objective).abs()
+                / full_sol.objective.abs().max(1e-300);
+            (Some(tf.as_secs_f64()), Some(gap))
+        } else {
+            (None, None)
+        };
+        coupling_table.row(&[
+            n.to_string(),
+            rank.to_string(),
+            fmt_secs(tl),
+            format!("{:.1} MB", lowrank_bytes as f64 / 1e6),
+            full_s.map_or("gated".into(), |s| {
+                fmt_secs(std::time::Duration::from_secs_f64(s))
+            }),
+            format!("{:.1} MB", full_bytes as f64 / 1e6),
+            obj_rel_gap.map_or("—".into(), |g| format!("{g:.2e}")),
+        ]);
+        coupling_rows.push(CouplingRow {
+            n,
+            rank,
+            lowrank_s,
+            lowrank_bytes,
+            full_bytes,
+            full_s,
+            obj_rel_gap,
+        });
+    }
+    println!("{}", coupling_table.render());
+
     let json = render_json(
         threads,
         quick,
@@ -664,6 +765,7 @@ fn main() {
         &grid3d_apply_row,
         &mixed_payload_row,
         &precision_rows,
+        &coupling_rows,
         axpy_len,
         axpy_f64_s,
         axpy_f32_s,
@@ -684,6 +786,7 @@ fn render_json(
     grid3d_row: &Grid3dApplyRow,
     payload_row: &MixedPayloadRow,
     precision_rows: &[PrecisionRow],
+    coupling_rows: &[CouplingRow],
     axpy_len: usize,
     axpy_f64_s: f64,
     axpy_f32_s: f64,
@@ -801,6 +904,27 @@ fn render_json(
         "    {{\"case\": \"axpy\", \"len\": {axpy_len}, \"f64_s\": {axpy_f64_s:.6e}, \"f32_s\": {axpy_f32_s:.6e}, \"speedup\": {:.3}}}\n",
         axpy_f64_s / axpy_f32_s,
     ));
+    s.push_str("  ],\n");
+    s.push_str("  \"coupling_results\": [\n");
+    for (i, r) in coupling_rows.iter().enumerate() {
+        let full_s = r
+            .full_s
+            .map_or("null".to_string(), |t| format!("{t:.6e}"));
+        let gap = r
+            .obj_rel_gap
+            .map_or("null".to_string(), |g| format!("{g:.3e}"));
+        s.push_str(&format!(
+            "    {{\"n\": {}, \"rank\": {}, \"lowrank_s\": {:.6e}, \"lowrank_bytes\": {}, \"full_s\": {}, \"full_bytes\": {}, \"obj_rel_gap\": {}}}{}\n",
+            r.n,
+            r.rank,
+            r.lowrank_s,
+            r.lowrank_bytes,
+            full_s,
+            r.full_bytes,
+            gap,
+            if i + 1 == coupling_rows.len() { "" } else { "," }
+        ));
+    }
     s.push_str("  ]\n}\n");
     s
 }

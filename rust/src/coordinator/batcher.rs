@@ -4,7 +4,7 @@
 //! systems, adapted to CPU-bound solves with no batch dimension).
 
 use super::job::{BackendChoice, JobPayload, JobRequest};
-use crate::gw::Precision;
+use crate::gw::{CouplingRank, Precision};
 
 /// The grouping key: jobs with equal keys share workspaces and (for
 /// PJRT) a compiled executable.
@@ -23,6 +23,12 @@ pub struct VariantKey {
     /// same shape must not share a lockstep batch or a warm
     /// workspace key).
     pub precision: Precision,
+    /// Resolved coupling representation (admission stores the
+    /// concrete choice): full-rank jobs run lockstep batches over an
+    /// `M×N` workspace, factored jobs run the `O((M+N)·r)` coupling
+    /// path — different workspaces, different variants, and the rank
+    /// is part of the identity.
+    pub coupling: CouplingRank,
 }
 
 /// Key for a request.
@@ -49,6 +55,7 @@ pub fn variant_key(req: &JobRequest) -> VariantKey {
         points,
         k,
         precision: req.options.precision.unwrap_or(Precision::F64),
+        coupling: req.options.coupling.unwrap_or(CouplingRank::Full),
     }
 }
 

@@ -1,6 +1,6 @@
 //! Job model for the alignment service.
 
-use crate::gw::{Geometry, GradientKind, Precision};
+use crate::gw::{CouplingRank, Geometry, GradientKind, Precision};
 use crate::linalg::Mat;
 use std::time::{Duration, Instant};
 
@@ -202,6 +202,19 @@ impl JobPayload {
             JobPayload::Gw3d { n, .. } => n * n * n,
             JobPayload::GwDense { u, .. } => u.len(),
             JobPayload::GwMixed { u, .. } => u.len(),
+        }
+    }
+
+    /// Target-side support points (admission resolves the coupling
+    /// representation against both sides' sizes).
+    pub fn target_points(&self) -> usize {
+        match self {
+            JobPayload::Gw1d { v, .. } => v.len(),
+            JobPayload::Fgw1d { v, .. } => v.len(),
+            JobPayload::Gw2d { n, .. } => n * n,
+            JobPayload::Gw3d { n, .. } => n * n * n,
+            JobPayload::GwDense { v, .. } => v.len(),
+            JobPayload::GwMixed { v, .. } => v.len(),
         }
     }
 
@@ -462,6 +475,16 @@ pub struct JobOptions {
     /// and stores the concrete tier, so workers (and the warm-cache
     /// key) always see `Some(F64)` or `Some(F32Refine)`.
     pub precision: Option<Precision>,
+    /// Coupling representation for this (pure-GW) job. `None` inherits
+    /// the service-wide default
+    /// ([`crate::coordinator::CoordinatorConfig`] `coupling`), which
+    /// itself may be `None` = auto; admission resolves auto against
+    /// the job's shape via
+    /// [`crate::gw::backend::cost_model::auto_coupling_for_sizes`] and
+    /// stores the concrete choice, so workers (and the warm-cache key)
+    /// always see `Some(Full)` or `Some(LowRank(r))`. FGW jobs ignore
+    /// the knob (always full-rank).
+    pub coupling: Option<CouplingRank>,
 }
 
 impl Default for JobOptions {
@@ -470,6 +493,7 @@ impl Default for JobOptions {
             deadline: None,
             max_retries: 3,
             precision: None,
+            coupling: None,
         }
     }
 }

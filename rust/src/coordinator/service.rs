@@ -33,9 +33,10 @@ use super::queue::BoundedQueue;
 use super::router::{Router, RoutingPolicy};
 use super::shard::{shard_for, ShardedQueue, PIN_SHED_FACTOR};
 use crate::error::{Error, Result};
+use crate::gw::backend::cost_model::auto_coupling_for_sizes;
 use crate::gw::{
-    BatchJob, EntropicGw, Geometry, GradientKind, GwBatchWorkspace, GwConfig, LowRankOptions,
-    Precision,
+    BatchJob, CouplingRank, EntropicGw, Geometry, GradientKind, GwBatchWorkspace, GwConfig,
+    LowRankOptions, LrGwWorkspace, Precision,
 };
 use crate::linalg::Mat;
 use crate::runtime::{ArtifactRegistry, Executor};
@@ -109,6 +110,13 @@ pub struct CoordinatorConfig {
     /// (f32-tier at and above the cost model's size threshold).
     /// Config key `solver.precision`, CLI `--precision`.
     pub precision: Precision,
+    /// Default coupling representation for pure-GW jobs that do not
+    /// pick one ([`JobOptions::coupling`] = `None`): `None` = auto
+    /// (factored `Γ = Q·diag(1/g)·Rᵀ` at and above the cost model's
+    /// size threshold, rank from its memory budget),
+    /// `Some(Full)` / `Some(LowRank(r))` forced. Config key
+    /// `solver.coupling_rank`, CLI `--coupling-rank`.
+    pub coupling: Option<CouplingRank>,
     /// How long `submit` may block under backpressure.
     pub submit_timeout: Duration,
     /// Default per-job deadline applied by [`Coordinator::submit`]
@@ -137,6 +145,7 @@ impl Default for CoordinatorConfig {
             solver_threads: 1,
             lowrank_tol: 0.0,
             precision: Precision::F64,
+            coupling: None,
             submit_timeout: Duration::from_millis(200),
             default_deadline: None,
             default_max_retries: 3,
@@ -331,6 +340,7 @@ impl Coordinator {
                 deadline: self.cfg.default_deadline,
                 max_retries: self.cfg.default_max_retries,
                 precision: None,
+                coupling: None,
             },
         )
     }
@@ -361,6 +371,19 @@ impl Coordinator {
                 .unwrap_or(self.cfg.precision)
                 .resolve(pm, pn),
         );
+        // Likewise the coupling representation: an explicit per-job
+        // choice wins over the service default, and auto (no choice at
+        // either level) resolves against the job's shape here. FGW
+        // payloads always solve full-rank — the factored coupling is a
+        // pure-GW path.
+        options.coupling = Some(if matches!(payload, JobPayload::Fgw1d { .. }) {
+            CouplingRank::Full
+        } else {
+            options
+                .coupling
+                .or(self.cfg.coupling)
+                .unwrap_or_else(|| auto_coupling_for_sizes(pm, pn))
+        });
         let backend = self.router.route(&payload);
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (tx, rx) = mpsc::channel();
@@ -432,6 +455,7 @@ impl Coordinator {
             deadline: Some(timeout),
             max_retries: self.cfg.default_max_retries,
             precision: None,
+            coupling: None,
         };
         let (_, rx) = self.submit_with_options(payload, options)?;
         let wait = timeout.saturating_add(self.cfg.submit_timeout);
@@ -515,37 +539,54 @@ struct WsKey {
     /// separate entries also halves the cache charge of an f32 entry
     /// (see [`ws_units`]).
     precision: Precision,
+    /// Resolved coupling representation (admission stores the
+    /// concrete choice). Full-rank and factored workspaces are
+    /// different types, and distinct ranks size their thin buffers
+    /// differently — each is its own entry.
+    coupling: CouplingRank,
 }
 
-/// Cache charge of one warm entry: f64-tier workspaces count 2
-/// capacity units, f32-tier ones 1 (their resident hot state is
-/// roughly half the bytes), against the [`WARM_CACHE_UNITS`] budget.
+/// Cache charge of one warm entry against the [`WARM_CACHE_UNITS`]
+/// budget: f64-tier full-rank workspaces count 2 capacity units,
+/// f32-tier ones 1 (their resident hot state is roughly half the
+/// bytes), and factored-coupling entries 1 — an `O((M+N)·r)`
+/// [`LrGwWorkspace`] never holds an `M×N` buffer, so even at its
+/// maximum rank it is far below a full-rank workspace of the same
+/// shape.
 fn ws_units(key: &WsKey) -> u64 {
-    if key.precision == Precision::F32Refine {
+    if matches!(key.coupling, CouplingRank::LowRank(_)) || key.precision == Precision::F32Refine {
         1
     } else {
         2
     }
 }
 
-/// Per-worker LRU of warm batched workspaces (front = most recent).
-struct WarmCache {
-    entries: Vec<(WsKey, GwBatchWorkspace)>,
+/// One warm cache slot: the full-rank lockstep batch workspace, or
+/// the factored-coupling workspace together with the solver it was
+/// built from (the solver carries the bound geometry for identity
+/// checks and the config the workspace solves under).
+enum WarmEntry {
+    Full(GwBatchWorkspace),
+    LowRank(EntropicGw, LrGwWorkspace),
 }
 
-/// True iff a cached workspace's operator is bound to exactly the
-/// payload's geometry. Grid payloads are fully determined by the
-/// [`WsKey`]; dense and mixed payloads carry their matrices/grid
-/// descriptors, compared here by reference (no clones on the warm
-/// path).
-fn geometry_matches(ws: &GwBatchWorkspace, payload: &JobPayload) -> bool {
+/// Per-worker LRU of warm workspaces (front = most recent).
+struct WarmCache {
+    entries: Vec<(WsKey, WarmEntry)>,
+}
+
+/// True iff a cached operator's bound geometry pair is exactly the
+/// payload's. Grid payloads are fully determined by the [`WsKey`];
+/// dense and mixed payloads carry their matrices/grid descriptors,
+/// compared here by reference (no clones on the warm path).
+fn geometry_matches(gx: &Geometry, gy: &Geometry, payload: &JobPayload) -> bool {
     match payload {
         JobPayload::GwDense { dx, dy, .. } => {
-            matches!(ws.geom_x(), Geometry::Dense(d) if d == dx)
-                && matches!(ws.geom_y(), Geometry::Dense(d) if d == dy)
+            matches!(gx, Geometry::Dense(d) if d == dx)
+                && matches!(gy, Geometry::Dense(d) if d == dy)
         }
         JobPayload::GwMixed { dx, grid, .. } => {
-            matches!(ws.geom_x(), Geometry::Dense(d) if d == dx) && ws.geom_y() == grid
+            matches!(gx, Geometry::Dense(d) if d == dx) && gy == grid
         }
         _ => true,
     }
@@ -592,16 +633,21 @@ impl WarmCache {
         batch: usize,
         metrics: &ServiceMetrics,
     ) -> Result<(&mut GwBatchWorkspace, bool)> {
-        let pos = self
-            .entries
-            .iter()
-            .position(|(k, ws)| k == key && geometry_matches(ws, payload));
+        let pos = self.entries.iter().position(|(k, e)| {
+            k == key
+                && matches!(e, WarmEntry::Full(ws)
+                    if geometry_matches(ws.geom_x(), ws.geom_y(), payload))
+        });
         if let Some(pos) = pos {
             let entry = self.entries.remove(pos);
             self.entries.insert(0, entry);
-            let ws = &mut self.entries[0].1;
-            ws.ensure_capacity(batch);
-            return Ok((ws, true));
+            match &mut self.entries[0].1 {
+                WarmEntry::Full(ws) => {
+                    ws.ensure_capacity(batch);
+                    return Ok((ws, true));
+                }
+                WarmEntry::LowRank(..) => unreachable!("position matched a full-rank entry"),
+            }
         }
         // Same variant, same Y side, different dense X support: swap
         // the dense X side in place. A backend that refuses the swap
@@ -611,31 +657,41 @@ impl WarmCache {
         let rebind = match payload {
             JobPayload::GwMixed { dx, grid, .. } => Some((
                 dx,
-                self.entries
-                    .iter()
-                    .position(|(k, ws)| k == key && ws.geom_y() == grid),
+                self.entries.iter().position(|(k, e)| {
+                    k == key && matches!(e, WarmEntry::Full(ws) if ws.geom_y() == grid)
+                }),
             )),
             JobPayload::GwDense { dx, dy, .. } => Some((
                 dx,
-                self.entries.iter().position(|(k, ws)| {
-                    k == key && matches!(ws.geom_y(), Geometry::Dense(d) if d == dy)
+                self.entries.iter().position(|(k, e)| {
+                    k == key
+                        && matches!(e, WarmEntry::Full(ws)
+                            if matches!(ws.geom_y(), Geometry::Dense(d) if d == dy))
                 }),
             )),
             _ => None,
         };
         if let Some((dx, Some(pos))) = rebind {
             let mut entry = self.entries.remove(pos);
-            if entry.1.swap_dense_x(dx).is_ok() {
+            let swapped = match &mut entry.1 {
+                WarmEntry::Full(ws) => ws.swap_dense_x(dx).is_ok(),
+                WarmEntry::LowRank(..) => unreachable!("rebind matched a full-rank entry"),
+            };
+            if swapped {
                 self.entries.insert(0, entry);
-                let ws = &mut self.entries[0].1;
-                ws.ensure_capacity(batch);
-                return Ok((ws, true));
+                match &mut self.entries[0].1 {
+                    WarmEntry::Full(ws) => {
+                        ws.ensure_capacity(batch);
+                        return Ok((ws, true));
+                    }
+                    WarmEntry::LowRank(..) => unreachable!("just re-inserted a full entry"),
+                }
             }
             metrics.sub_warm_units(ws_units(&entry.0));
         }
         let solver = build_solver(payload, cfg);
         let ws = solver.batch_workspace(kind, batch)?;
-        self.entries.insert(0, (key.clone(), ws));
+        self.entries.insert(0, (key.clone(), WarmEntry::Full(ws)));
         metrics.add_warm_units(ws_units(key));
         // Unit-based LRU eviction: the just-inserted front entry
         // always survives.
@@ -643,7 +699,52 @@ impl WarmCache {
             let (evicted, _) = self.entries.pop().expect("len > 1");
             metrics.sub_warm_units(ws_units(&evicted));
         }
-        Ok((&mut self.entries[0].1, false))
+        match &mut self.entries[0].1 {
+            WarmEntry::Full(ws) => Ok((ws, false)),
+            WarmEntry::LowRank(..) => unreachable!("just inserted a full entry"),
+        }
+    }
+
+    /// [`WarmCache::get_or_build`] for the factored-coupling path:
+    /// fetch (or cold-build) the persistent [`LrGwWorkspace`] — and
+    /// the solver whose geometry it is bound to — for `key`. The
+    /// workspace's thin state is `O((M+N)·r)`, so an entry charges a
+    /// single capacity unit (see [`ws_units`]). Returns
+    /// `(solver, workspace, was_warm)`.
+    fn get_or_build_lr(
+        &mut self,
+        key: &WsKey,
+        payload: &JobPayload,
+        cfg: &CoordinatorConfig,
+        rank: usize,
+        metrics: &ServiceMetrics,
+    ) -> Result<(&EntropicGw, &mut LrGwWorkspace, bool)> {
+        let pos = self.entries.iter().position(|(k, e)| {
+            k == key
+                && matches!(e, WarmEntry::LowRank(solver, _)
+                    if geometry_matches(solver.geom_x(), solver.geom_y(), payload))
+        });
+        if let Some(pos) = pos {
+            let entry = self.entries.remove(pos);
+            self.entries.insert(0, entry);
+            match &mut self.entries[0].1 {
+                WarmEntry::LowRank(solver, ws) => return Ok((solver, ws, true)),
+                WarmEntry::Full(_) => unreachable!("position matched a low-rank entry"),
+            }
+        }
+        let solver = build_solver(payload, cfg);
+        let ws = solver.lr_workspace(rank)?;
+        self.entries
+            .insert(0, (key.clone(), WarmEntry::LowRank(solver, ws)));
+        metrics.add_warm_units(ws_units(key));
+        while self.units() > WARM_CACHE_UNITS && self.entries.len() > 1 {
+            let (evicted, _) = self.entries.pop().expect("len > 1");
+            metrics.sub_warm_units(ws_units(&evicted));
+        }
+        match &mut self.entries[0].1 {
+            WarmEntry::LowRank(solver, ws) => Ok((solver, ws, false)),
+            WarmEntry::Full(_) => unreachable!("just inserted a low-rank entry"),
+        }
     }
 }
 
@@ -897,7 +998,12 @@ fn report(metrics: &ServiceMetrics, result: &JobResult) {
 /// The warm-cache identity of a payload — derived from the payload
 /// alone, so cache lookups never construct a solver (or clone dense
 /// geometries).
-fn ws_key(payload: &JobPayload, kind: GradientKind, precision: Precision) -> WsKey {
+fn ws_key(
+    payload: &JobPayload,
+    kind: GradientKind,
+    precision: Precision,
+    coupling: CouplingRank,
+) -> WsKey {
     let (family, m, n, k) = match payload {
         JobPayload::Gw1d { u, v, k, .. } => ("grid1d", u.len(), v.len(), *k),
         // FGW shares the GW geometry — the feature term is per job.
@@ -929,6 +1035,7 @@ fn ws_key(payload: &JobPayload, kind: GradientKind, precision: Precision) -> WsK
         kind,
         eps_bits: payload.epsilon().to_bits(),
         precision,
+        coupling,
     }
 }
 
@@ -1016,17 +1123,50 @@ fn execute_group_fused(
     // Admission stored the resolved tier; the variant key split on it,
     // so the whole group agrees.
     let precision = reqs[0].options.precision.unwrap_or(Precision::F64);
+    // Admission resolved the coupling representation; the variant key
+    // split on it, so the whole group agrees.
+    let coupling = reqs[0].options.coupling.unwrap_or(CouplingRank::Full);
     let started = Instant::now();
     let head = &reqs[0].payload;
-    let key = ws_key(head, kind, precision);
-    let (ws, warm) = cache.get_or_build(&key, head, &ctx.cfg, kind, reqs.len(), &ctx.metrics)?;
+    let key = ws_key(head, kind, precision, coupling);
     let b = reqs.len() as u64;
+    if let CouplingRank::LowRank(rank) = coupling {
+        // Factored-coupling serving path: each job of the group runs
+        // through the worker's persistent O((M+N)·r) workspace — no
+        // M×N coupling is ever materialized inside the solve (the
+        // returned plan is; large-plan elision is a client concern).
+        let (solver, lr_ws, warm) =
+            cache.get_or_build_lr(&key, head, &ctx.cfg, rank, &ctx.metrics)?;
+        if warm {
+            ctx.metrics.on_warm(b, 0);
+        } else {
+            ctx.metrics.on_warm(b - 1, 1);
+        }
+        let mut out = Vec::with_capacity(reqs.len());
+        for (req, queue_time) in reqs.iter().zip(queue_times) {
+            ctx.faults.fire(req.id)?;
+            lr_ws.set_deadline(req.deadline_instant());
+            let job = batch_job(&req.payload);
+            let attempt_started = Instant::now();
+            let sol = solver.solve_lowrank_into(job.u, job.v, lr_ws)?;
+            out.push(JobResult {
+                id: req.id,
+                objective: Ok(sol.objective),
+                plan: Some(sol.plan()),
+                backend: req.backend.clone(),
+                queue_time,
+                solve_time: attempt_started.elapsed(),
+            });
+        }
+        return Ok(out);
+    }
+    let (ws, warm) = cache.get_or_build(&key, head, &ctx.cfg, kind, reqs.len(), &ctx.metrics)?;
     if warm {
         ctx.metrics.on_warm(b, 0);
     } else {
         ctx.metrics.on_warm(b - 1, 1);
     }
-    if precision == Precision::F32Refine && kind != GradientKind::LowRank {
+    if precision == Precision::F32Refine {
         ctx.metrics.on_f32_served(b);
     }
     // Scripted faults: a member's panic/numeric arm fails this fused
@@ -1290,6 +1430,22 @@ fn solve_solo(
         .kind_override
         .unwrap_or_else(|| req.backend.gradient_kind());
     let epsilon = req.payload.epsilon() * ov.epsilon_scale;
+    // A factored-coupling job recovers on the factored path (its
+    // full-rank twin may not even fit in memory at serving scale);
+    // only the ladder's exact-backend rung — which exists to swap the
+    // approximation out entirely — demotes it to full rank.
+    let coupling = match ov.kind_override {
+        Some(_) => CouplingRank::Full,
+        None => req.options.coupling.unwrap_or(CouplingRank::Full),
+    };
+    if let CouplingRank::LowRank(rank) = coupling {
+        let solver = build_solver_with_epsilon(&req.payload, cfg, epsilon);
+        let mut lr_ws = solver.lr_workspace(rank)?;
+        lr_ws.set_deadline(req.deadline_instant());
+        let job = batch_job(&req.payload);
+        let sol = solver.solve_lowrank_into(job.u, job.v, &mut lr_ws)?;
+        return Ok((sol.objective, sol.plan()));
+    }
     let solver = build_solver_with_epsilon(&req.payload, cfg, epsilon);
     let mut ws = solver.batch_workspace(kind, 1)?;
     if faults.mispredict(req.id) {
@@ -1383,6 +1539,11 @@ fn gw_cfg(cfg: &CoordinatorConfig, epsilon: f64, precision: Precision) -> GwConf
         sinkhorn_check_every: 10,
         threads: cfg.solver_threads,
         precision,
+        // The coupling representation is dispatched by the service
+        // (factored jobs run through [`WarmCache::get_or_build_lr`]);
+        // the solver config underneath always describes the full-rank
+        // path the batch workspaces execute.
+        coupling: CouplingRank::Full,
     }
 }
 
@@ -1407,6 +1568,7 @@ mod tests {
             solver_threads: 2,
             lowrank_tol: 0.0,
             precision: Precision::F64,
+            coupling: None,
             submit_timeout: Duration::from_millis(100),
             default_deadline: None,
             default_max_retries: 3,
@@ -1775,6 +1937,72 @@ mod tests {
             "below the serve threshold auto must stay f64: {snap}"
         );
         assert_eq!(snap.warm_units, 2, "f64 entry charges two units: {snap}");
+        coord.shutdown();
+    }
+
+    #[test]
+    fn lowrank_coupling_jobs_serve_through_the_factored_path() {
+        // A dense job pinned to CouplingRank::LowRank(r) must solve
+        // through the factored workspace: a feasible plan comes back,
+        // the warm cache holds a 1-unit entry for it (distinct from
+        // the full-rank entry of the same shape), and a repeat job is
+        // a warm hit on that entry.
+        let mut cfg = test_cfg();
+        cfg.native_workers = 1;
+        let coord = Coordinator::start(cfg).unwrap();
+        let mut rng = Rng::seeded(31);
+        let n = 14;
+        let d = crate::grid::dense_dist_1d(&crate::grid::Grid1d::unit(n), 2);
+        let u = random_distribution(&mut rng, n);
+        let v = random_distribution(&mut rng, n);
+        let payload = JobPayload::gw_dense(d.clone(), d, u.clone(), v.clone(), 0.05);
+        let full = coord.submit_and_wait(payload.clone()).unwrap();
+        let full_obj = full.objective.unwrap();
+
+        let lr_opts = JobOptions {
+            coupling: Some(CouplingRank::LowRank(4)),
+            ..JobOptions::default()
+        };
+        let (_, rx) = coord.submit_with_options(payload.clone(), lr_opts).unwrap();
+        let lr = rx.recv().unwrap();
+        let lr_obj = lr.objective.unwrap();
+        assert!(lr_obj.is_finite());
+        let plan = lr.plan.expect("factored solves still return a plan");
+        let viol = crate::sinkhorn::marginal_violation(&plan, &u, &v);
+        assert!(viol < 1e-5, "factored plan violation {viol:e}");
+        // Same entropic-GW problem, different coupling representation:
+        // the objectives agree loosely (the rank-dependent gap is
+        // pinned tightly in tests/coupling_lowrank.rs).
+        assert!(
+            (lr_obj - full_obj).abs() <= 0.5 * full_obj.abs() + 1e-2,
+            "lowrank {lr_obj} vs full {full_obj}"
+        );
+
+        let (_, rx) = coord.submit_with_options(payload, lr_opts).unwrap();
+        assert!(rx.recv().unwrap().objective.is_ok());
+        let snap = coord.metrics();
+        // One full-rank build, one factored build, one factored hit.
+        assert_eq!((snap.warm_misses, snap.warm_hits), (2, 1), "{snap}");
+        assert_eq!(
+            snap.warm_units, 3,
+            "full entry charges 2 units, factored entry 1: {snap}"
+        );
+        coord.shutdown();
+    }
+
+    #[test]
+    fn auto_coupling_resolves_small_jobs_to_full_rank() {
+        // Below the cost model's size threshold, auto (the service
+        // default) must keep jobs on the full-rank path — observable
+        // through the warm-unit charge (a factored entry would be 1).
+        let mut cfg = test_cfg();
+        cfg.native_workers = 1;
+        assert!(cfg.coupling.is_none(), "service default is auto");
+        let coord = Coordinator::start(cfg).unwrap();
+        let res = coord.submit_and_wait(gw_payload(16, 6)).unwrap();
+        assert!(res.objective.is_ok());
+        let snap = coord.metrics();
+        assert_eq!(snap.warm_units, 2, "small jobs stay full-rank: {snap}");
         coord.shutdown();
     }
 

@@ -13,6 +13,7 @@
 //! `dense_results`, and update [`DENSE_LOWRANK_CROSSOVER`]).
 
 use crate::fgc::AxisFactor;
+use crate::gw::driver::CouplingRank;
 
 /// Dense side length above which the low-rank backend is expected to
 /// beat the naive baseline. The naive apply costs `O(MN(M+N))` FMAs
@@ -40,6 +41,79 @@ pub const DENSE_LOWRANK_CROSSOVER: usize = 128;
 /// `cargo bench --bench hotpath` (see EXPERIMENTS.md §Mixed
 /// precision).
 pub const F32_SERVE_THRESHOLD: usize = 4096;
+
+/// Side length (`max(M, N)`) at and above which the auto coupling
+/// policy switches from the dense M×N plan to the factored
+/// `Γ = Q·diag(1/g)·Rᵀ` representation (`CouplingRank::LowRank`).
+/// Below it the dense plan fits comfortably and the classical Sinkhorn
+/// inner solve is both exact and cheap; at and above it the four M×N
+/// f64 buffers of the full-rank workspace cross 32 GiB at 10⁵ points
+/// while the factored path stays `O((M+N)·r)`.
+///
+/// **Calibration status:** like [`F32_SERVE_THRESHOLD`], an estimate
+/// pending the first measured `coupling_results` run of
+/// `cargo bench --bench hotpath` (see EXPERIMENTS.md §Threshold
+/// calibration — both thresholds calibrate from the same run).
+pub const COUPLING_LOWRANK_THRESHOLD: usize = 32_768;
+
+/// Resident-memory budget the auto policy spends on the factored
+/// coupling state: the rank is chosen so the ~12 thin `(M+N)`-row
+/// buffers of `LrGwWorkspace` stay inside this envelope (64 MiB — a
+/// comfortable warm-cache unit even at 10⁶ points).
+pub const COUPLING_RANK_BUDGET_BYTES: usize = 1 << 26;
+
+/// Rank floor/ceiling for the budget-derived auto rank: below 4 the
+/// factored feasible set is too coarse to approximate anything, above
+/// 64 the r×r Gram work starts to show against the thin applies.
+pub const COUPLING_RANK_MIN: usize = 4;
+pub const COUPLING_RANK_MAX: usize = 64;
+
+/// Thin `(M+N)`-row f64 buffers a `LrGwWorkspace` keeps resident per
+/// unit of rank (Q/R, gradients, applies, best-iterate snapshots —
+/// the Dykstra vectors and r×r Grams are rank- or side-independent
+/// noise next to these).
+const COUPLING_THIN_BUFFERS: usize = 12;
+
+/// The budget-derived coupling rank for a pair of side lengths:
+/// `clamp(budget / (8·12·(M+N)), 4, 64)`, capped at `min(M, N)`.
+pub fn coupling_rank_for_sizes(m: usize, n: usize) -> usize {
+    let per_rank = 8 * COUPLING_THIN_BUFFERS * (m + n).max(1);
+    (COUPLING_RANK_BUDGET_BYTES / per_rank)
+        .clamp(COUPLING_RANK_MIN, COUPLING_RANK_MAX)
+        .min(m.min(n).max(1))
+}
+
+/// The auto coupling policy: full-rank below
+/// [`COUPLING_LOWRANK_THRESHOLD`], budget-ranked low-rank at and
+/// above it. The coordinator resolves `Option<CouplingRank>::None`
+/// (the config/CLI "auto") through this at admission; library callers
+/// use it to fill `GwConfig::coupling`.
+pub fn auto_coupling_for_sizes(m: usize, n: usize) -> CouplingRank {
+    if m.max(n) >= COUPLING_LOWRANK_THRESHOLD {
+        CouplingRank::LowRank(coupling_rank_for_sizes(m, n))
+    } else {
+        CouplingRank::Full
+    }
+}
+
+/// Resident bytes of the four M×N f64 buffers (`gamma`, `grad`,
+/// `cost`, `constant`) a full-rank `GwWorkspace` pins — the quantity
+/// the memory-budget acceptance test proves the factored path avoids.
+/// Saturating: at 10⁵×10⁵ this is ~320 GB and must not wrap on
+/// 32-bit `usize`.
+pub fn full_coupling_bytes(m: usize, n: usize) -> usize {
+    4usize
+        .saturating_mul(std::mem::size_of::<f64>())
+        .saturating_mul(m)
+        .saturating_mul(n)
+}
+
+/// Estimated resident bytes of the factored-coupling state at rank
+/// `r` (the thin buffers only — the model the budget rank inverts;
+/// `LrGwWorkspace::resident_bytes` reports the exact figure).
+pub fn lowrank_coupling_bytes(m: usize, n: usize, r: usize) -> usize {
+    8 * COUPLING_THIN_BUFFERS * (m + n) * r
+}
 
 /// FMAs of the dense two-product apply `D_X·Γ·D_Y` (`tmp = D_X·Γ`
 /// then `tmp·D_Y`) on an `M×N` plan.
@@ -135,5 +209,45 @@ mod tests {
     fn lowrank_beats_naive_above_crossover_ranks() {
         let n = DENSE_LOWRANK_CROSSOVER as f64 * 2.0;
         assert!(lowrank_cost(3, 3, n, n) < dense_pair_cost(n, n));
+    }
+
+    #[test]
+    fn auto_coupling_switches_at_the_threshold() {
+        let t = COUPLING_LOWRANK_THRESHOLD;
+        assert_eq!(auto_coupling_for_sizes(t - 1, t - 1), CouplingRank::Full);
+        assert!(matches!(
+            auto_coupling_for_sizes(t, t),
+            CouplingRank::LowRank(_)
+        ));
+        // One big side is enough — the dense plan is M×N either way.
+        assert!(matches!(
+            auto_coupling_for_sizes(8, t),
+            CouplingRank::LowRank(_)
+        ));
+    }
+
+    #[test]
+    fn budget_rank_shrinks_with_size_and_respects_bounds() {
+        let small = coupling_rank_for_sizes(40_000, 40_000);
+        let big = coupling_rank_for_sizes(1_000_000, 1_000_000);
+        assert!(small >= big, "rank must not grow with the problem");
+        assert!((COUPLING_RANK_MIN..=COUPLING_RANK_MAX).contains(&small));
+        assert!((COUPLING_RANK_MIN..=COUPLING_RANK_MAX).contains(&big));
+        // Where the budget (not the rank floor) binds, the chosen
+        // rank keeps the thin state inside it; at extreme sizes the
+        // floor wins and may overshoot the model by a small factor.
+        let r = coupling_rank_for_sizes(50_000, 50_000);
+        assert!(r > COUPLING_RANK_MIN, "budget should bind at 50k");
+        assert!(lowrank_coupling_bytes(50_000, 50_000, r) <= COUPLING_RANK_BUDGET_BYTES);
+        // Tiny problems clamp to min(M, N).
+        assert_eq!(coupling_rank_for_sizes(3, 1_000_000), 3);
+    }
+
+    #[test]
+    fn full_coupling_bytes_dwarfs_the_factored_state_at_scale() {
+        let (m, n) = (100_000, 100_000);
+        let r = coupling_rank_for_sizes(m, n);
+        // ~320 GB dense vs tens of MB factored: three orders.
+        assert!(full_coupling_bytes(m, n) > 1_000 * lowrank_coupling_bytes(m, n, r));
     }
 }

@@ -385,6 +385,15 @@ impl GradientBackend for LowRankBackend {
             None => cost_model::dense_pair_cost(m, n),
         }
     }
+
+    fn lowrank_factors(&self) -> Option<(&Mat, &Mat, &Mat, &Mat)> {
+        match &self.plan {
+            LrPlan::Factored {
+                ax, bxt, ay, byt, ..
+            } => Some((ax, bxt, ay, byt)),
+            LrPlan::Dense(_) => None,
+        }
+    }
 }
 
 /// Adaptive cross approximation with complete pivoting: peel rank-one
@@ -396,7 +405,7 @@ impl GradientBackend for LowRankBackend {
 /// the residual still above tolerance — the caller's signal to fall
 /// back to dense products instead of burning `O(N³)` on a factorization
 /// that cannot win.
-fn aca_factor(d: &Mat, opts: &LowRankOptions) -> Result<Option<(Mat, Mat)>> {
+pub(crate) fn aca_factor(d: &Mat, opts: &LowRankOptions) -> Result<Option<(Mat, Mat)>> {
     let (m, n) = d.shape();
     if !d.all_finite() {
         return Err(Error::Numeric(

@@ -20,6 +20,13 @@
 //!   arbitrary dense geometries FGC cannot accelerate, giving an
 //!   `O(r·MN)` apply (Scetbon et al. 2021 direction; see PAPERS.md).
 //!
+//! A fourth gradient path lives outside this trait: when the
+//! *coupling* itself is factored (`CouplingRank::LowRank`,
+//! `gw/lowrank_coupling.rs`), the product is evaluated against the
+//! thin `(Q, R, g)` factors without ever materializing an M×N plan,
+//! composing the same cost-side factorizations (these scans / the ACA
+//! factors below) into an `O((M+N)·r)` apply.
+//!
 //! [`auto_kind`] implements the selection heuristic end-to-end
 //! (fgc-exploitable structure → fgc, small dense → naive, large dense
 //! → lowrank); the coordinator router applies the same rule per job
@@ -38,6 +45,7 @@ pub use lowrank::{LowRankBackend, LowRankOptions};
 pub use naive::NaiveBackend;
 
 pub(crate) use fgc::axis_factor;
+pub(crate) use lowrank::aca_factor;
 
 use super::geometry::Geometry;
 use super::gradient::GradientKind;
@@ -104,6 +112,17 @@ pub trait GradientBackend: Send {
         Err(Error::Invalid(
             "this backend does not support swapping its dense X side".into(),
         ))
+    }
+
+    /// Thin cost factors `(A_X, B_Xᵀ, A_Y, B_Yᵀ)` with `D ≈ A·Bᵀ` per
+    /// side, when the backend holds them. The f32 presolve lane uses
+    /// these to narrow a factored backend instead of bypassing it
+    /// (`gw/precision.rs`), and the factored-coupling path reuses
+    /// them for its `O((M+N)·r)` side applies. Backends without a
+    /// factorization (or whose ACA probe fell back to dense) return
+    /// `None`.
+    fn lowrank_factors(&self) -> Option<(&Mat, &Mat, &Mat, &Mat)> {
+        None
     }
 
     /// Constant term halves: `cx = (D_X⊙D_X)·u`, `cy = (D_Y⊙D_Y)·v`,

@@ -25,6 +25,44 @@
 use crate::error::{Error, Result};
 use std::time::{Duration, Instant};
 
+/// How the coupling of one solve is represented.
+///
+/// The loop below is representation-agnostic — the full/low-rank fork
+/// happens where a solver builds its [`MirrorProblem`]: `Full` runs
+/// the classical dense-plan Sinkhorn inner solve, `LowRank(r)` runs
+/// the factored `Γ = Q·diag(1/g)·Rᵀ` scheme
+/// (`gw/lowrank_coupling.rs`). `auto` is deliberately *not* a
+/// variant: callers carry `Option<CouplingRank>` and resolve `None`
+/// through `cost_model::auto_coupling_for_sizes` at admission, so a
+/// `CouplingRank` in flight is always concrete.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum CouplingRank {
+    /// Dense M×N plan — the classical path, exact but quadratic.
+    #[default]
+    Full,
+    /// Factored plan `Γ = Q·diag(1/g)·Rᵀ` at the given rank.
+    LowRank(usize),
+}
+
+impl CouplingRank {
+    /// The rank when factored, `None` for the full representation.
+    pub fn rank(self) -> Option<usize> {
+        match self {
+            CouplingRank::Full => None,
+            CouplingRank::LowRank(r) => Some(r),
+        }
+    }
+}
+
+impl std::fmt::Display for CouplingRank {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CouplingRank::Full => f.write_str("full"),
+            CouplingRank::LowRank(r) => write!(f, "lowrank({r})"),
+        }
+    }
+}
+
 /// One mirror-descent problem: state plus the two beats of the loop.
 pub trait MirrorProblem {
     /// Coupled linearize/solve phases per outer iteration (1 for

@@ -16,9 +16,12 @@
 //! the paper meaningful.
 
 use super::backend::{GradientBackend, LowRankBackend, LowRankOptions};
-use super::driver::{run_mirror_descent, run_mirror_descent_with_deadline, MirrorProblem};
+use super::driver::{
+    run_mirror_descent, run_mirror_descent_with_deadline, CouplingRank, MirrorProblem,
+};
 use super::geometry::Geometry;
 use super::gradient::{GradientKind, PairOperator};
+use super::lowrank_coupling::{LrGwSolution, LrGwWorkspace};
 use super::objective::{fgw_objective, gw_objective};
 use super::precision::{F32Lane, Precision, REFINE_OUTER_ITERS};
 use crate::error::{Error, Result};
@@ -47,6 +50,15 @@ pub struct GwConfig {
     /// historical behavior), the f32+refine serving tier, or per-job
     /// auto-selection by size (see [`Precision`]).
     pub precision: Precision,
+    /// Coupling representation: the dense M×N plan (default) or the
+    /// factored `Γ = Q·diag(1/g)·Rᵀ` scheme at a fixed rank
+    /// ([`CouplingRank::LowRank`]), which keeps every solve buffer
+    /// `O((M+N)·r)`. Pure GW only — [`EntropicGw::solve_fgw`] and the
+    /// batched paths always run the dense plan. Callers wanting
+    /// size-based selection resolve it up front via
+    /// `backend::cost_model::auto_coupling_for_sizes` (the
+    /// coordinator does this at admission).
+    pub coupling: CouplingRank,
 }
 
 impl Default for GwConfig {
@@ -59,6 +71,7 @@ impl Default for GwConfig {
             sinkhorn_check_every: 10,
             threads: 1,
             precision: Precision::F64,
+            coupling: CouplingRank::Full,
         }
     }
 }
@@ -297,9 +310,64 @@ impl EntropicGw {
     }
 
     /// Solve pure GW (θ = 1, no feature cost).
+    ///
+    /// With `cfg.coupling = LowRank(r)` the solve routes through the
+    /// factored coupling ([`EntropicGw::solve_lowrank`]; `kind` is
+    /// ignored — the factored path derives its own side factors) and
+    /// the thin solution is materialized into a dense plan for
+    /// small-problem compatibility. At serving scale call
+    /// [`EntropicGw::solve_lowrank`] directly and keep the factors.
     pub fn solve(&self, u: &[f64], v: &[f64], kind: GradientKind) -> Result<GwSolution> {
+        if let CouplingRank::LowRank(rank) = self.cfg.coupling {
+            let sol = self.solve_lowrank(u, v, rank)?;
+            return Ok(GwSolution {
+                plan: sol.plan(),
+                objective: sol.objective,
+                outer_iterations: sol.outer_iterations,
+                sinkhorn_iterations: sol.inner_iterations,
+                gradient_time: sol.gradient_time,
+                sinkhorn_time: sol.inner_time,
+                total_time: sol.total_time,
+            });
+        }
         let mut ws = self.workspace(kind)?;
         self.solve_into(u, v, &mut ws)
+    }
+
+    /// Build a persistent factored-coupling workspace for this
+    /// solver's geometry pair at the given rank: grids get exact
+    /// separable scan factors, dense sides are ACA-factored with the
+    /// solver's low-rank knobs ([`EntropicGw::lowrank_options`]).
+    /// Every buffer is `O((M+N)·rank)` — no M×N state exists.
+    pub fn lr_workspace(&self, rank: usize) -> Result<LrGwWorkspace> {
+        LrGwWorkspace::new(
+            &self.geom_x,
+            &self.geom_y,
+            rank,
+            &self.lowrank_options(),
+            self.cfg.parallelism(),
+        )
+    }
+
+    /// Solve pure GW through the factored coupling
+    /// `Γ = Q·diag(1/g)·Rᵀ` at the given rank, returning the thin
+    /// solution without ever materializing an M×N plan.
+    pub fn solve_lowrank(&self, u: &[f64], v: &[f64], rank: usize) -> Result<LrGwSolution> {
+        let mut ws = self.lr_workspace(rank)?;
+        self.solve_lowrank_into(u, v, &mut ws)
+    }
+
+    /// Workspace form of [`EntropicGw::solve_lowrank`]: all state
+    /// lives in `ws` (reusable across solves of the same pair — the
+    /// coordinator's warm cache holds exactly one per low-rank
+    /// variant), so the hot loop performs zero heap allocation.
+    pub fn solve_lowrank_into(
+        &self,
+        u: &[f64],
+        v: &[f64],
+        ws: &mut LrGwWorkspace,
+    ) -> Result<LrGwSolution> {
+        ws.solve(u, v, &self.cfg)
     }
 
     /// Solve FGW with feature cost `C = [c_ip]` and trade-off `θ`
@@ -408,18 +476,20 @@ impl EntropicGw {
         // f32 serving tier: run the whole mirror-descent loop in f32,
         // leave the upcast plan in `gamma` (the driver below never
         // resets it), and keep only a short f64 refinement budget. The
-        // low-rank backend has no f32 twin — it keeps the full f64
-        // loop regardless of the requested tier.
+        // low-rank backend rides the same lane: its ACA factors narrow
+        // to f32 thin products, so every backend now has an f32 twin.
+        // The presolve's final column duals seed the refinement's
+        // first Sinkhorn (`set_warm_duals`), so the f64 polish starts
+        // from the f32 fixed point instead of a cold `b = 1`.
         let mut presolve_outer = 0usize;
         let mut presolve_inner = 0usize;
-        let f64_outer = if self.cfg.precision.resolve(m, n) == Precision::F32Refine
-            && op.kind() != GradientKind::LowRank
-        {
+        let f64_outer = if self.cfg.precision.resolve(m, n) == Precision::F32Refine {
             if f32_lane.is_none() {
-                *f32_lane = Some(Box::new(F32Lane::new(
+                *f32_lane = Some(Box::new(F32Lane::with_cost_factors(
                     &self.geom_x,
                     &self.geom_y,
                     self.cfg.parallelism(),
+                    op.backend().lowrank_factors(),
                 )?));
             }
             let lane = f32_lane.as_mut().expect("lane built above");
@@ -432,6 +502,9 @@ impl EntropicGw {
                 &self.cfg.sinkhorn_options(),
                 gamma,
             )?;
+            if lane.refine_seed_into(&mut sk.b) {
+                sk.set_warm_duals();
+            }
             presolve_outer = self.cfg.outer_iters;
             REFINE_OUTER_ITERS
         } else {
@@ -698,14 +771,13 @@ impl GwBatchWorkspace {
         // plans. The deadline is checked between refinement
         // iterations, exactly as between pure-f64 outer iterations.
         let mut presolve_outer = 0usize;
-        let f64_outer = if cfg.precision.resolve(m, n) == Precision::F32Refine
-            && op.kind() != GradientKind::LowRank
-        {
+        let f64_outer = if cfg.precision.resolve(m, n) == Precision::F32Refine {
             if f32_lane.is_none() {
-                *f32_lane = Some(Box::new(F32Lane::new(
+                *f32_lane = Some(Box::new(F32Lane::with_cost_factors(
                     op.geom_x(),
                     op.geom_y(),
                     cfg.parallelism(),
+                    op.backend().lowrank_factors(),
                 )?));
             }
             let lane = f32_lane.as_mut().expect("lane built above");
@@ -720,6 +792,12 @@ impl GwBatchWorkspace {
                     &opts,
                     &mut gammas[j],
                 )?;
+                // Seed job j's refinement duals right after its own
+                // presolve (the lane still holds them), keeping the
+                // batch bit-for-bit with sequential f32-tier solves.
+                if lane.refine_seed_into(&mut sks[j].b) {
+                    sks[j].set_warm_duals();
+                }
             }
             presolve_outer = cfg.outer_iters;
             REFINE_OUTER_ITERS
@@ -917,7 +995,7 @@ impl MirrorProblem for EntropicStep<'_> {
     }
 }
 
-fn check_distribution(w: &[f64], name: &str) -> Result<()> {
+pub(crate) fn check_distribution(w: &[f64], name: &str) -> Result<()> {
     if w.is_empty() {
         return Err(Error::Invalid(format!("{name} is empty")));
     }
@@ -958,6 +1036,7 @@ mod tests {
             sinkhorn_check_every: 10,
             threads: 1,
             precision: Precision::F64,
+            coupling: CouplingRank::Full,
         }
     }
 
@@ -1264,6 +1343,31 @@ mod tests {
         let mut bad_ws = other.batch_workspace(GradientKind::Fgc, 1).unwrap();
         let jobs = [BatchJob::gw(&u, &v)];
         assert!(solver.solve_batch_into(&jobs, &mut bad_ws).is_err());
+    }
+
+    #[test]
+    fn lowrank_coupling_routes_through_solve() {
+        let n = 18;
+        let (u, v) = random_dists(n, n, 51);
+        let solver = EntropicGw::grid_1d(
+            n,
+            n,
+            1,
+            GwConfig {
+                epsilon: 5e-2,
+                outer_iters: 6,
+                coupling: CouplingRank::LowRank(4),
+                ..cfg_small()
+            },
+        );
+        let sol = solver.solve(&u, &v, GradientKind::Fgc).unwrap();
+        assert!(sol.objective.is_finite());
+        assert!(marginal_violation(&sol.plan, &u, &v) < 1e-5);
+        // The thin route is the same deterministic path — the
+        // materialized solve must match it exactly.
+        let thin = solver.solve_lowrank(&u, &v, 4).unwrap();
+        assert_eq!(thin.rank(), 4);
+        assert_eq!(sol.objective, thin.objective);
     }
 
     #[test]

@@ -1,0 +1,1277 @@
+//! Low-rank **coupling** solver: the N≈10⁶ tier.
+//!
+//! Everything upstream of this module factors the *cost* side of the
+//! gradient product (`lowrank` ACA factors, separable grid scans) but
+//! keeps the coupling Γ a dense M×N matrix, so memory and the Sinkhorn
+//! iterate stay quadratic — a 10⁵×10⁵ problem cannot even be
+//! allocated. Following *Linear-Time Gromov Wasserstein Distances
+//! using Low Rank Couplings and Costs* (Scetbon–Peyré–Cuturi,
+//! 2106.01128; PAPERS.md) this module factors the coupling itself:
+//!
+//! ```text
+//! Γ = Q · diag(1/g) · Rᵀ      Q ∈ Π(u, g) ⊂ ℝ^{M×r}
+//!                             R ∈ Π(v, g) ⊂ ℝ^{N×r}
+//!                             g ∈ Δ_r, g ≥ α
+//! ```
+//!
+//! and runs mirror descent over the triple (Q, R, g) with an inner
+//! Dykstra-style projection onto the two marginal polytopes (the
+//! `LR-Dykstra` scheme of SPC21, Algorithm 2). The square-loss GW
+//! linearization `−4·D_X Γ D_Y` never materializes Γ: with
+//! `xq = D_X·Q` and `yr = D_Y·R` evaluated through the factored cost
+//! sides, the Gram products `S_Q = Qᵀ·xq` and `S_R = Rᵀ·yr` (both r×r)
+//! carry the whole quadratic term, giving per-iteration work and
+//! resident memory of `O((M+N)·r)` plus the cost-side apply:
+//!
+//! * grid sides run the separable scans (`fgc/separable.rs`) on the
+//!   r-column stack — `O(k²·(M+N)·r)`;
+//! * dense sides reuse the ACA factorization `D ≈ A·Bᵀ`
+//!   (`gw/backend/lowrank.rs`) — `O((M+N)·r·r_D)` — or, when a
+//!   synthetic problem is *given* as thin factors
+//!   ([`LrGwWorkspace::from_cost_factors`]), never touch an M×M
+//!   matrix at all;
+//! * small dense sides that ACA refuses fall back to one dense
+//!   multiply per side.
+//!
+//! The derived gradients (linear marginal terms are constant on the
+//! feasible set, so only the quadratic part moves — SPC21 §3):
+//!
+//! ```text
+//! ∇_Q E = −4 · xq · D_g S_R D_g          D_g = diag(1/g)
+//! ∇_R E = −4 · yr · D_g S_Q D_g
+//! ∇_g E = 4/g_k² · Σ_l (S_Q ∘ S_R)[k,l] / g_l
+//! E     = ⟨cx,u⟩ + ⟨cy,v⟩ − 2·Σ_{k,l} (S_Q ∘ S_R)[k,l]/(g_k·g_l)
+//! ```
+//!
+//! Each outer iteration exponentiates the mirror step
+//! `ξ = exp(−τ·∇ + (1−τε)·ln(current))` with the adaptive step
+//! `τ = LR_STEP_SCALE/‖∇‖∞` and projects the three kernels back onto
+//! the polytopes; a best-iterate snapshot makes the returned objective
+//! monotone in the evaluated iterates even when the last step
+//! overshoots. Every buffer lives in the persistent [`LrGwWorkspace`],
+//! so repeated solves allocate nothing in the outer loop (pinned by
+//! `tests/alloc_hotpath.rs`).
+
+use super::driver::{run_mirror_descent_with_deadline, MirrorProblem};
+use super::entropic::{check_distribution, GwConfig};
+use super::geometry::{Geometry, SqApplyScratch};
+use crate::error::{Error, Result};
+use crate::fgc::separable::apply_to_cols;
+use crate::fgc::AxisFactor;
+use crate::grid::Binomial;
+use crate::gw::backend::{aca_factor, axis_factor, LowRankOptions};
+use crate::linalg::{dot, matmul_into, matvec_into, matvec_t_into, scale_in_place, Mat};
+use crate::parallel::Parallelism;
+use crate::prng::Rng;
+use std::time::{Duration, Instant};
+
+/// Step-size scale: `τ = LR_STEP_SCALE / ‖∇‖∞` bounds every exponent
+/// in the mirror kernel by this constant, so the exp() never
+/// overflows regardless of the problem's distance scale.
+const LR_STEP_SCALE: f64 = 10.0;
+
+/// Lower bound α on the inner weights `g` (SPC21's α): keeps
+/// `diag(1/g)` bounded and every KL term finite.
+const G_FLOOR: f64 = 1e-10;
+
+/// Floor inside `ln(·)` of the mirror kernel / denominators of the
+/// Dykstra recursion — kernels are positive by construction, this
+/// only guards subnormal underflow.
+const TINY: f64 = 1e-300;
+
+/// One cost side of the pair, in whichever factored form makes its
+/// `out = D·X` apply cheapest for a thin `X` (len×r).
+enum SideOp {
+    /// Grid side: unscaled separable scans plus the deferred `h^k`.
+    Scan { factor: AxisFactor, scale: f64 },
+    /// Dense side with an ACA factorization `D ≈ A·Bᵀ` (or a side
+    /// *given* as thin factors): `out = A·(Bᵀ·X)`.
+    LowRank { a: Mat, bt: Mat },
+    /// Dense side ACA refused to factor: one dense multiply.
+    Dense(Mat),
+}
+
+impl SideOp {
+    fn build(geom: &Geometry, opts: &LowRankOptions) -> Result<SideOp> {
+        match geom {
+            Geometry::Dense(d) => Ok(match aca_factor(d, opts)? {
+                Some((a, bt)) => SideOp::LowRank { a, bt },
+                None => SideOp::Dense(d.clone()),
+            }),
+            Geometry::Grid1d { grid, k } => Ok(SideOp::Scan {
+                factor: axis_factor(geom)?,
+                scale: grid.scale(*k),
+            }),
+            Geometry::Grid2d { grid, k } => Ok(SideOp::Scan {
+                factor: axis_factor(geom)?,
+                scale: grid.scale(*k),
+            }),
+            Geometry::Grid3d { grid, k } => Ok(SideOp::Scan {
+                factor: axis_factor(geom)?,
+                scale: grid.scale(*k),
+            }),
+        }
+    }
+
+    /// Scan exponent for binomial-table sizing (0 for non-scan sides).
+    fn scan_exponent(&self) -> u32 {
+        match self {
+            SideOp::Scan { factor, .. } => match factor {
+                AxisFactor::Scan1d { k, .. }
+                | AxisFactor::Scan2d { k, .. }
+                | AxisFactor::Scan3d { k, .. } => *k,
+                AxisFactor::Dense(_) => 0,
+            },
+            _ => 0,
+        }
+    }
+
+    /// `out = D · x` for a thin `x` (len×r).
+    fn apply(
+        &self,
+        x: &Mat,
+        out: &mut Mat,
+        binom: &Binomial,
+        s: &mut SideScratch,
+        par: Parallelism,
+    ) -> Result<()> {
+        let (rows, cols) = x.shape();
+        match self {
+            SideOp::Scan { factor, scale } => {
+                apply_to_cols(
+                    factor.factor_ref(),
+                    rows,
+                    cols,
+                    x.as_slice(),
+                    out.as_mut_slice(),
+                    binom,
+                    &mut s.tmp,
+                    &mut s.scratch,
+                    &mut s.zscan,
+                    &mut s.carry,
+                    par,
+                )?;
+                if *scale != 1.0 {
+                    scale_in_place(out.as_mut_slice(), *scale);
+                }
+                Ok(())
+            }
+            SideOp::LowRank { a, bt } => {
+                matmul_into(bt, x, &mut s.mid, par)?;
+                matmul_into(a, &s.mid, out, par)
+            }
+            SideOp::Dense(d) => matmul_into(d, x, out, par),
+        }
+    }
+
+    /// Resident f64 elements held by the side itself.
+    fn resident_elems(&self) -> usize {
+        match self {
+            SideOp::Scan { factor, .. } => match factor {
+                AxisFactor::Dense(d) => d.rows() * d.cols(),
+                _ => 0,
+            },
+            SideOp::LowRank { a, bt } => a.rows() * a.cols() + bt.rows() * bt.cols(),
+            SideOp::Dense(d) => d.rows() * d.cols(),
+        }
+    }
+}
+
+/// Apply scratch for one side, sized once for the thin width `r`
+/// (mirrors the `SeparableOp` column-pass policy at stack width r).
+struct SideScratch {
+    tmp: Vec<f64>,
+    scratch: Vec<f64>,
+    zscan: Vec<f64>,
+    carry: Vec<f64>,
+    /// `Bᵀ·X` intermediate for the low-rank arm (r_D × r).
+    mid: Mat,
+}
+
+impl SideScratch {
+    fn for_op(op: &SideOp, len: usize, r: usize) -> SideScratch {
+        let total = len * r;
+        let (carry_len, col_len, zscan_len, mid_rows) = match op {
+            SideOp::Scan { factor, .. } => match factor {
+                AxisFactor::Scan1d { k, .. } => ((*k as usize + 1) * r, 0, 0, 0),
+                AxisFactor::Scan2d { grid, k } => ((*k as usize + 1) * grid.n * r, total, 0, 0),
+                AxisFactor::Scan3d { grid, k } => {
+                    ((*k as usize + 1) * grid.n * grid.n * r, total, total, 0)
+                }
+                AxisFactor::Dense(_) => (0, 0, 0, 0),
+            },
+            SideOp::LowRank { bt, .. } => (0, 0, 0, bt.rows()),
+            SideOp::Dense(_) => (0, 0, 0, 0),
+        };
+        SideScratch {
+            tmp: vec![0.0; col_len],
+            scratch: vec![0.0; col_len],
+            zscan: vec![0.0; zscan_len],
+            carry: vec![0.0; carry_len],
+            mid: Mat::zeros(mid_rows, if mid_rows == 0 { 0 } else { r }),
+        }
+    }
+
+    fn resident_elems(&self) -> usize {
+        self.tmp.len()
+            + self.scratch.len()
+            + self.zscan.len()
+            + self.carry.len()
+            + self.mid.rows() * self.mid.cols()
+    }
+}
+
+/// The linear (marginal) part of the objective. Constant on the
+/// feasible set, so it never enters the dynamics — it only shifts the
+/// reported objective to match the full-rank solver's.
+enum LinearTerm {
+    /// Computed from the geometries' own squared-distance apply.
+    Geometries {
+        gx: Geometry,
+        gy: Geometry,
+        scratch_x: SqApplyScratch,
+        scratch_y: SqApplyScratch,
+        cx: Vec<f64>,
+        cy: Vec<f64>,
+    },
+    /// Factor-only construction: `D⊙D` is not recoverable from thin
+    /// factors of `D` in linear time, so the reported objective omits
+    /// the constant term (documented on
+    /// [`LrGwWorkspace::from_cost_factors`]).
+    Omitted,
+}
+
+impl LinearTerm {
+    fn from_geometries(gx: &Geometry, gy: &Geometry) -> LinearTerm {
+        LinearTerm::Geometries {
+            scratch_x: SqApplyScratch::for_geometry(gx),
+            scratch_y: SqApplyScratch::for_geometry(gy),
+            cx: vec![0.0; gx.len()],
+            cy: vec![0.0; gy.len()],
+            gx: gx.clone(),
+            gy: gy.clone(),
+        }
+    }
+
+    fn eval(&mut self, u: &[f64], v: &[f64]) -> Result<f64> {
+        match self {
+            LinearTerm::Geometries {
+                gx,
+                gy,
+                scratch_x,
+                scratch_y,
+                cx,
+                cy,
+            } => {
+                gx.sq_apply_into(u, cx, scratch_x)?;
+                gy.sq_apply_into(v, cy, scratch_y)?;
+                Ok(dot(cx, u) + dot(cy, v))
+            }
+            LinearTerm::Omitted => Ok(0.0),
+        }
+    }
+
+    fn resident_elems(&self) -> usize {
+        match self {
+            LinearTerm::Geometries { gx, gy, cx, cy, .. } => {
+                let dense = |g: &Geometry| match g {
+                    Geometry::Dense(d) => d.rows() * d.cols(),
+                    _ => 0,
+                };
+                dense(gx) + dense(gy) + cx.len() + cy.len()
+            }
+            LinearTerm::Omitted => 0,
+        }
+    }
+}
+
+/// All vectors of the LR-Dykstra recursion, preallocated once.
+struct DykstraState {
+    u1: Vec<f64>,
+    u2: Vec<f64>,
+    v1: Vec<f64>,
+    v2: Vec<f64>,
+    q1: Vec<f64>,
+    q2: Vec<f64>,
+    q3_1: Vec<f64>,
+    q3_2: Vec<f64>,
+    g_: Vec<f64>,
+    tmp_m: Vec<f64>,
+    tmp_n: Vec<f64>,
+    kta1: Vec<f64>,
+    kta2: Vec<f64>,
+}
+
+impl DykstraState {
+    fn new(m: usize, n: usize, r: usize) -> DykstraState {
+        DykstraState {
+            u1: vec![0.0; m],
+            u2: vec![0.0; n],
+            v1: vec![0.0; r],
+            v2: vec![0.0; r],
+            q1: vec![0.0; r],
+            q2: vec![0.0; r],
+            q3_1: vec![0.0; r],
+            q3_2: vec![0.0; r],
+            g_: vec![0.0; r],
+            tmp_m: vec![0.0; m],
+            tmp_n: vec![0.0; n],
+            kta1: vec![0.0; r],
+            kta2: vec![0.0; r],
+        }
+    }
+
+    fn resident_elems(&self) -> usize {
+        self.u1.len()
+            + self.u2.len()
+            + self.tmp_m.len()
+            + self.tmp_n.len()
+            + 9 * self.v1.len()
+    }
+}
+
+/// Project the positive kernels `(eps1, eps2, eps3)` onto
+/// `{Q ∈ Π(p1,·), R ∈ Π(p2,·), shared inner marginal g}` — the
+/// LR-Dykstra scheme of SPC21 Algorithm 2 (the recursion follows the
+/// POT reference implementation). Writes the projected triple into
+/// `(q_out, r_out, g_out)` and returns the iterations spent. All
+/// matvecs are serial, so the result is identical at every thread
+/// count.
+#[allow(clippy::too_many_arguments)]
+fn lr_dykstra(
+    eps1: &Mat,
+    eps2: &Mat,
+    eps3: &[f64],
+    p1: &[f64],
+    p2: &[f64],
+    tol: f64,
+    max_iters: usize,
+    check_every: usize,
+    q_out: &mut Mat,
+    r_out: &mut Mat,
+    g_out: &mut [f64],
+    dyk: &mut DykstraState,
+) -> Result<usize> {
+    let (m, rank) = eps1.shape();
+    let n = eps2.rows();
+    let DykstraState {
+        u1,
+        u2,
+        v1,
+        v2,
+        q1,
+        q2,
+        q3_1,
+        q3_2,
+        g_,
+        tmp_m,
+        tmp_n,
+        kta1,
+        kta2,
+    } = dyk;
+    v1.fill(1.0);
+    v2.fill(1.0);
+    q1.fill(1.0);
+    q2.fill(1.0);
+    q3_1.fill(1.0);
+    q3_2.fill(1.0);
+    g_.copy_from_slice(eps3);
+    let check_every = check_every.max(1);
+    let max_iters = max_iters.max(1);
+    let mut iters = 0usize;
+    loop {
+        iters += 1;
+        // Outer-marginal scalings: u_b = p_b / (eps_b · v_b).
+        matvec_into(eps1, v1, tmp_m)?;
+        for i in 0..m {
+            u1[i] = p1[i] / tmp_m[i].max(TINY);
+        }
+        matvec_into(eps2, v2, tmp_n)?;
+        for j in 0..n {
+            u2[j] = p2[j] / tmp_n[j].max(TINY);
+        }
+        // First inner-marginal correction (the g ≥ α half-space).
+        for k in 0..rank {
+            let t = g_[k] * q3_1[k];
+            let gk = t.max(G_FLOOR);
+            q3_1[k] = t / gk;
+            g_[k] = gk;
+        }
+        // Geometric-mean coupling of the three inner marginals.
+        matvec_t_into(eps1, u1, kta1)?;
+        matvec_t_into(eps2, u2, kta2)?;
+        for k in 0..rank {
+            let prod1 = v1[k] * q1[k] * kta1[k];
+            let prod2 = v2[k] * q2[k] * kta2[k];
+            let gnew = (g_[k] * q3_2[k] * prod1 * prod2)
+                .powf(1.0 / 3.0)
+                .max(G_FLOOR);
+            let v1k = gnew / kta1[k].max(TINY);
+            let v2k = gnew / kta2[k].max(TINY);
+            q1[k] = (v1[k] * q1[k]) / v1k.max(TINY);
+            q2[k] = (v2[k] * q2[k]) / v2k.max(TINY);
+            q3_2[k] = (g_[k] * q3_2[k]) / gnew;
+            v1[k] = v1k;
+            v2[k] = v2k;
+            g_[k] = gnew;
+        }
+        if iters % check_every == 0 || iters >= max_iters {
+            matvec_into(eps1, v1, tmp_m)?;
+            matvec_into(eps2, v2, tmp_n)?;
+            let mut err = 0.0;
+            for i in 0..m {
+                err += (u1[i] * tmp_m[i] - p1[i]).abs();
+            }
+            for j in 0..n {
+                err += (u2[j] * tmp_n[j] - p2[j]).abs();
+            }
+            if !err.is_finite() {
+                return Err(Error::Numeric(
+                    "LR-Dykstra marginals diverged (non-finite error)".into(),
+                ));
+            }
+            if err <= tol || iters >= max_iters {
+                break;
+            }
+        }
+    }
+    // Materialize the thin factors: Q = diag(u1)·eps1·diag(v1).
+    for i in 0..m {
+        let erow = eps1.row(i);
+        let qrow = q_out.row_mut(i);
+        let ui = u1[i];
+        for k in 0..rank {
+            qrow[k] = ui * erow[k] * v1[k];
+        }
+    }
+    for j in 0..n {
+        let erow = eps2.row(j);
+        let rrow = r_out.row_mut(j);
+        let uj = u2[j];
+        for k in 0..rank {
+            rrow[k] = uj * erow[k] * v2[k];
+        }
+    }
+    for k in 0..rank {
+        g_out[k] = g_[k].max(G_FLOOR);
+    }
+    Ok(iters)
+}
+
+/// `out = aᵀ·b` for thin row-major `a` (len×ra) and `b` (len×rb).
+/// The Gram products `S_Q`/`S_R` never justify a transposed copy of a
+/// 10⁵-row factor; this streams the rows serially, so it is
+/// deterministic at every thread count.
+fn matmul_tn_into(a: &Mat, b: &Mat, out: &mut Mat) -> Result<()> {
+    if a.rows() != b.rows() || out.shape() != (a.cols(), b.cols()) {
+        return Err(Error::shape(
+            "matmul_tn",
+            format!("({}x{})ᵀ·({}x{})", a.rows(), a.cols(), b.rows(), b.cols()),
+            format!("out {:?}", out.shape()),
+        ));
+    }
+    let (len, ra) = a.shape();
+    let rb = b.cols();
+    out.as_mut_slice().fill(0.0);
+    for i in 0..len {
+        let arow = a.row(i);
+        let brow = b.row(i);
+        for k in 0..ra {
+            let aik = arow[k];
+            if aik != 0.0 {
+                let orow = out.row_mut(k);
+                for (ol, &bl) in orow.iter_mut().zip(brow.iter().take(rb)) {
+                    *ol += aik * bl;
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// `−2·Σ_{k,l} S_Q[k,l]·S_R[k,l]/(g_k·g_l)` — the quadratic part of
+/// the objective, read straight off the r×r Grams.
+fn quad_term(sq: &Mat, sr: &Mat, g: &[f64]) -> f64 {
+    let rank = g.len();
+    let mut acc = 0.0;
+    for k in 0..rank {
+        let sqr = sq.row(k);
+        let srr = sr.row(k);
+        let gk = g[k];
+        for l in 0..rank {
+            acc += sqr[l] * srr[l] / (gk * g[l]);
+        }
+    }
+    -2.0 * acc
+}
+
+fn inf_norm(x: &[f64]) -> f64 {
+    x.iter().fold(0.0f64, |acc, &v| acc.max(v.abs()))
+}
+
+/// In place: `buf = exp(−τ·buf + keep·ln(max(current, TINY)))` — the
+/// mirror kernel with `buf` holding the gradient on entry.
+fn kernel_into(buf: &mut [f64], current: &[f64], tau: f64, keep: f64) {
+    for (b, &c) in buf.iter_mut().zip(current.iter()) {
+        *b = (-tau * *b + keep * c.max(TINY).ln()).exp();
+    }
+}
+
+/// Persistent workspace for low-rank-coupling solves over one
+/// `(X, Y, rank)` binding: the factored cost sides plus every buffer
+/// the mirror-descent loop touches, grown once at construction.
+/// Resident memory is `O((M+N)·r)` plus whatever the cost sides
+/// themselves hold — never an M×N plan.
+pub struct LrGwWorkspace {
+    side_x: SideOp,
+    side_y: SideOp,
+    m: usize,
+    n: usize,
+    rank: usize,
+    par: Parallelism,
+    binom: Binomial,
+    linear: LinearTerm,
+    // Coupling state.
+    q: Mat,
+    r: Mat,
+    g: Vec<f64>,
+    // Linearization state.
+    xq: Mat,
+    yr: Mat,
+    sq: Mat,
+    sr: Mat,
+    mid: Mat,
+    grad_q: Mat,
+    grad_r: Mat,
+    grad_g: Vec<f64>,
+    sx: SideScratch,
+    sy: SideScratch,
+    dyk: DykstraState,
+    // Best-iterate snapshot.
+    best_obj: f64,
+    best_q: Mat,
+    best_r: Mat,
+    best_g: Vec<f64>,
+    /// One-shot deadline consumed by the next `solve` (same contract
+    /// as `GwBatchWorkspace::set_deadline`).
+    deadline: Option<Instant>,
+}
+
+impl LrGwWorkspace {
+    /// Build the workspace for a geometry pair. Dense sides are
+    /// ACA-factored (falling back to one dense multiply when the
+    /// factorization refuses); grid sides scan. `rank` is clamped to
+    /// `min(M, N)`.
+    pub fn new(
+        geom_x: &Geometry,
+        geom_y: &Geometry,
+        rank: usize,
+        opts: &LowRankOptions,
+        par: Parallelism,
+    ) -> Result<LrGwWorkspace> {
+        let side_x = SideOp::build(geom_x, opts)?;
+        let side_y = SideOp::build(geom_y, opts)?;
+        let linear = LinearTerm::from_geometries(geom_x, geom_y);
+        Self::from_parts(side_x, side_y, linear, geom_x.len(), geom_y.len(), rank, par)
+    }
+
+    /// Build directly from thin cost factors `D_X ≈ ax·bxt`,
+    /// `D_Y ≈ ay·byt` — the honest 10⁵–10⁶ point API: no M×M matrix
+    /// is ever formed. The constant marginal term `⟨(D⊙D)·w, w⟩` is
+    /// not recoverable from thin factors of `D` in linear time, so
+    /// solutions report the *quadratic* objective only (the omitted
+    /// term is constant on the feasible set and cancels in any
+    /// comparison between couplings of the same problem).
+    pub fn from_cost_factors(
+        ax: Mat,
+        bxt: Mat,
+        ay: Mat,
+        byt: Mat,
+        rank: usize,
+        par: Parallelism,
+    ) -> Result<LrGwWorkspace> {
+        let m = ax.rows();
+        let n = ay.rows();
+        if ax.cols() != bxt.rows() || bxt.cols() != m {
+            return Err(Error::shape(
+                "LrGwWorkspace::from_cost_factors",
+                format!("bxt {}x{}", ax.cols(), m),
+                format!("{}x{}", bxt.rows(), bxt.cols()),
+            ));
+        }
+        if ay.cols() != byt.rows() || byt.cols() != n {
+            return Err(Error::shape(
+                "LrGwWorkspace::from_cost_factors",
+                format!("byt {}x{}", ay.cols(), n),
+                format!("{}x{}", byt.rows(), byt.cols()),
+            ));
+        }
+        let side_x = SideOp::LowRank { a: ax, bt: bxt };
+        let side_y = SideOp::LowRank { a: ay, bt: byt };
+        Self::from_parts(side_x, side_y, LinearTerm::Omitted, m, n, rank, par)
+    }
+
+    fn from_parts(
+        side_x: SideOp,
+        side_y: SideOp,
+        linear: LinearTerm,
+        m: usize,
+        n: usize,
+        rank: usize,
+        par: Parallelism,
+    ) -> Result<LrGwWorkspace> {
+        if m == 0 || n == 0 {
+            return Err(Error::Invalid("empty geometry in low-rank coupling".into()));
+        }
+        if rank == 0 {
+            return Err(Error::Invalid("coupling rank must be ≥ 1".into()));
+        }
+        let rank = rank.min(m.min(n));
+        let kmax = side_x.scan_exponent().max(side_y.scan_exponent()) as usize;
+        let sx = SideScratch::for_op(&side_x, m, rank);
+        let sy = SideScratch::for_op(&side_y, n, rank);
+        Ok(LrGwWorkspace {
+            binom: Binomial::new((2 * kmax).max(4)),
+            side_x,
+            side_y,
+            m,
+            n,
+            rank,
+            par,
+            linear,
+            q: Mat::zeros(m, rank),
+            r: Mat::zeros(n, rank),
+            g: vec![0.0; rank],
+            xq: Mat::zeros(m, rank),
+            yr: Mat::zeros(n, rank),
+            sq: Mat::zeros(rank, rank),
+            sr: Mat::zeros(rank, rank),
+            mid: Mat::zeros(rank, rank),
+            grad_q: Mat::zeros(m, rank),
+            grad_r: Mat::zeros(n, rank),
+            grad_g: vec![0.0; rank],
+            sx,
+            sy,
+            dyk: DykstraState::new(m, n, rank),
+            best_obj: f64::INFINITY,
+            best_q: Mat::zeros(m, rank),
+            best_r: Mat::zeros(n, rank),
+            best_g: vec![0.0; rank],
+            deadline: None,
+        })
+    }
+
+    /// `(M, N)` of the bound pair.
+    pub fn shape(&self) -> (usize, usize) {
+        (self.m, self.n)
+    }
+
+    /// The (clamped) coupling rank.
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    /// Arm the next `solve` with a wall-clock deadline, checked
+    /// between outer iterations. One-shot: consumed by that solve.
+    pub fn set_deadline(&mut self, deadline: Option<Instant>) {
+        self.deadline = deadline;
+    }
+
+    /// Resident f64 payload in bytes — the workspace-size accounting
+    /// the warm cache and the memory-budget acceptance test key on.
+    /// Everything the workspace can reach is counted: state, scratch,
+    /// Dykstra vectors, the factored sides and any dense geometry
+    /// copies held for the constant term.
+    pub fn resident_bytes(&self) -> usize {
+        let mat = |m: &Mat| m.rows() * m.cols();
+        let elems = mat(&self.q)
+            + mat(&self.r)
+            + mat(&self.xq)
+            + mat(&self.yr)
+            + mat(&self.sq)
+            + mat(&self.sr)
+            + mat(&self.mid)
+            + mat(&self.grad_q)
+            + mat(&self.grad_r)
+            + mat(&self.best_q)
+            + mat(&self.best_r)
+            + self.g.len()
+            + self.grad_g.len()
+            + self.best_g.len()
+            + self.sx.resident_elems()
+            + self.sy.resident_elems()
+            + self.dyk.resident_elems()
+            + self.side_x.resident_elems()
+            + self.side_y.resident_elems()
+            + self.linear.resident_elems();
+        elems * std::mem::size_of::<f64>()
+    }
+
+    /// Deterministic perturbed-product initialization projected onto
+    /// the polytopes. A pure product seed `Q⁰ = u·gᵀ` is a rank-1
+    /// fixed point of the dynamics (every gradient column identical),
+    /// so a small seeded multiplicative jitter breaks the symmetry —
+    /// the fixed seed keeps solves bit-for-bit reproducible at any
+    /// thread count.
+    fn init_state(&mut self, u: &[f64], v: &[f64], tol: f64, max_iters: usize) -> Result<()> {
+        let rank = self.rank;
+        let ginv = 1.0 / rank as f64;
+        let mut rng = Rng::seeded(0x6c72_6777);
+        for i in 0..self.m {
+            let row = self.grad_q.row_mut(i);
+            for rk in row.iter_mut().take(rank) {
+                *rk = u[i] * ginv * (1.0 + 0.1 * rng.uniform());
+            }
+        }
+        for j in 0..self.n {
+            let row = self.grad_r.row_mut(j);
+            for rk in row.iter_mut().take(rank) {
+                *rk = v[j] * ginv * (1.0 + 0.1 * rng.uniform());
+            }
+        }
+        for gk in self.grad_g.iter_mut() {
+            *gk = ginv;
+        }
+        lr_dykstra(
+            &self.grad_q,
+            &self.grad_r,
+            &self.grad_g,
+            u,
+            v,
+            tol,
+            max_iters,
+            1,
+            &mut self.q,
+            &mut self.r,
+            &mut self.g,
+            &mut self.dyk,
+        )?;
+        Ok(())
+    }
+
+    /// Solve entropic GW over the factored coupling into this
+    /// workspace. Zero heap allocation per outer iteration (the
+    /// returned solution clones the thin factors once).
+    pub fn solve(&mut self, u: &[f64], v: &[f64], cfg: &GwConfig) -> Result<LrGwSolution> {
+        let t0 = Instant::now();
+        if u.len() != self.m || v.len() != self.n {
+            return Err(Error::shape(
+                "LrGwWorkspace::solve",
+                format!("{}/{}", self.m, self.n),
+                format!("{}/{}", u.len(), v.len()),
+            ));
+        }
+        check_distribution(u, "u")?;
+        check_distribution(v, "v")?;
+        let deadline = self.deadline.take();
+        let tol = cfg.sinkhorn_tolerance.max(0.0);
+        let max_iters = cfg.sinkhorn_max_iters.max(1);
+        let check_every = cfg.sinkhorn_check_every.max(1);
+        let linear = self.linear.eval(u, v)?;
+        self.init_state(u, v, tol, max_iters)?;
+        self.best_obj = f64::INFINITY;
+        let LrGwWorkspace {
+            side_x,
+            side_y,
+            par,
+            binom,
+            q,
+            r,
+            g,
+            xq,
+            yr,
+            sq,
+            sr,
+            mid,
+            grad_q,
+            grad_r,
+            grad_g,
+            sx,
+            sy,
+            dyk,
+            best_obj,
+            best_q,
+            best_r,
+            best_g,
+            ..
+        } = self;
+        let mut step = LrStep {
+            side_x,
+            side_y,
+            binom,
+            par: *par,
+            epsilon: cfg.epsilon,
+            tol,
+            max_iters,
+            check_every,
+            linear,
+            u,
+            v,
+            q,
+            r,
+            g,
+            xq,
+            yr,
+            sq,
+            sr,
+            mid,
+            grad_q,
+            grad_r,
+            grad_g,
+            sx,
+            sy,
+            dyk,
+            best_obj,
+            best_q,
+            best_r,
+            best_g,
+        };
+        let stats = run_mirror_descent_with_deadline(cfg.outer_iters, &mut step, deadline)?;
+        // The loop evaluates each iterate *before* stepping away from
+        // it; one more linearize folds the final iterate into the
+        // best-so-far snapshot, which then becomes the answer.
+        step.linearize(0)?;
+        self.q.as_mut_slice().copy_from_slice(self.best_q.as_slice());
+        self.r.as_mut_slice().copy_from_slice(self.best_r.as_slice());
+        self.g.copy_from_slice(&self.best_g);
+        Ok(LrGwSolution {
+            q: self.q.clone(),
+            r: self.r.clone(),
+            g: self.g.clone(),
+            objective: self.best_obj,
+            outer_iterations: stats.outer_iterations,
+            inner_iterations: stats.inner_iterations,
+            gradient_time: stats.gradient_time,
+            inner_time: stats.inner_time,
+            total_time: t0.elapsed(),
+        })
+    }
+}
+
+/// Borrowed mirror-descent problem over one workspace (the analogue
+/// of `EntropicStep` for the factored coupling).
+struct LrStep<'a> {
+    side_x: &'a SideOp,
+    side_y: &'a SideOp,
+    binom: &'a Binomial,
+    par: Parallelism,
+    epsilon: f64,
+    tol: f64,
+    max_iters: usize,
+    check_every: usize,
+    linear: f64,
+    u: &'a [f64],
+    v: &'a [f64],
+    q: &'a mut Mat,
+    r: &'a mut Mat,
+    g: &'a mut Vec<f64>,
+    xq: &'a mut Mat,
+    yr: &'a mut Mat,
+    sq: &'a mut Mat,
+    sr: &'a mut Mat,
+    mid: &'a mut Mat,
+    grad_q: &'a mut Mat,
+    grad_r: &'a mut Mat,
+    grad_g: &'a mut Vec<f64>,
+    sx: &'a mut SideScratch,
+    sy: &'a mut SideScratch,
+    dyk: &'a mut DykstraState,
+    best_obj: &'a mut f64,
+    best_q: &'a mut Mat,
+    best_r: &'a mut Mat,
+    best_g: &'a mut Vec<f64>,
+}
+
+impl MirrorProblem for LrStep<'_> {
+    fn linearize(&mut self, _phase: usize) -> Result<()> {
+        self.side_x
+            .apply(self.q, self.xq, self.binom, self.sx, self.par)?;
+        self.side_y
+            .apply(self.r, self.yr, self.binom, self.sy, self.par)?;
+        matmul_tn_into(self.q, self.xq, self.sq)?;
+        matmul_tn_into(self.r, self.yr, self.sr)?;
+        // Evaluate the *current* iterate and keep the best snapshot.
+        let obj = self.linear + quad_term(self.sq, self.sr, self.g);
+        if obj.is_finite() && obj < *self.best_obj {
+            *self.best_obj = obj;
+            self.best_q
+                .as_mut_slice()
+                .copy_from_slice(self.q.as_slice());
+            self.best_r
+                .as_mut_slice()
+                .copy_from_slice(self.r.as_slice());
+            self.best_g.copy_from_slice(self.g);
+        }
+        let rank = self.g.len();
+        // grad_Q = xq · (−4 · D_g S_R D_g).
+        for k in 0..rank {
+            let gk = self.g[k];
+            let srow = self.sr.row(k);
+            let mrow = self.mid.row_mut(k);
+            for l in 0..rank {
+                mrow[l] = -4.0 * srow[l] / (gk * self.g[l]);
+            }
+        }
+        matmul_into(self.xq, self.mid, self.grad_q, self.par)?;
+        // grad_R = yr · (−4 · D_g S_Q D_g).
+        for k in 0..rank {
+            let gk = self.g[k];
+            let srow = self.sq.row(k);
+            let mrow = self.mid.row_mut(k);
+            for l in 0..rank {
+                mrow[l] = -4.0 * srow[l] / (gk * self.g[l]);
+            }
+        }
+        matmul_into(self.yr, self.mid, self.grad_r, self.par)?;
+        // grad_g[k] = 4/g_k² · Σ_l S_Q[k,l]·S_R[k,l]/g_l.
+        for k in 0..rank {
+            let sqr = self.sq.row(k);
+            let srr = self.sr.row(k);
+            let mut acc = 0.0;
+            for l in 0..rank {
+                acc += sqr[l] * srr[l] / self.g[l];
+            }
+            self.grad_g[k] = 4.0 * acc / (self.g[k] * self.g[k]);
+        }
+        Ok(())
+    }
+
+    fn inner_solve(&mut self, _phase: usize) -> Result<usize> {
+        let gmax = inf_norm(self.grad_q.as_slice())
+            .max(inf_norm(self.grad_r.as_slice()))
+            .max(inf_norm(self.grad_g));
+        if !gmax.is_finite() {
+            return Err(Error::Numeric(
+                "low-rank coupling gradient overflowed".into(),
+            ));
+        }
+        if gmax < 1e-30 {
+            // Stationary (e.g. a one-point side): keep the iterate.
+            return Ok(0);
+        }
+        let tau = LR_STEP_SCALE / gmax;
+        let keep = (1.0 - tau * self.epsilon).max(0.0);
+        kernel_into(self.grad_q.as_mut_slice(), self.q.as_slice(), tau, keep);
+        kernel_into(self.grad_r.as_mut_slice(), self.r.as_slice(), tau, keep);
+        kernel_into(self.grad_g, self.g, tau, keep);
+        lr_dykstra(
+            self.grad_q,
+            self.grad_r,
+            self.grad_g,
+            self.u,
+            self.v,
+            self.tol,
+            self.max_iters,
+            self.check_every,
+            self.q,
+            self.r,
+            self.g,
+            self.dyk,
+        )
+    }
+}
+
+/// A solved factored plan `Γ = Q·diag(1/g)·Rᵀ` plus the accounting
+/// every solution in this crate reports.
+#[derive(Clone, Debug)]
+pub struct LrGwSolution {
+    /// Left factor, `M×r`, row marginal `u`, column marginal `g`.
+    pub q: Mat,
+    /// Right factor, `N×r`, row marginal `v`, column marginal `g`.
+    pub r: Mat,
+    /// Inner weights (`Δ_r`, floored at α).
+    pub g: Vec<f64>,
+    /// Best evaluated objective (quadratic part only for
+    /// factor-constructed workspaces — see
+    /// [`LrGwWorkspace::from_cost_factors`]).
+    pub objective: f64,
+    /// Outer iterations completed.
+    pub outer_iterations: usize,
+    /// Total LR-Dykstra iterations across the solve.
+    pub inner_iterations: usize,
+    /// Wall time in the gradient linearization.
+    pub gradient_time: Duration,
+    /// Wall time in the projections.
+    pub inner_time: Duration,
+    /// End-to-end wall time.
+    pub total_time: Duration,
+}
+
+impl LrGwSolution {
+    /// The coupling rank.
+    pub fn rank(&self) -> usize {
+        self.g.len()
+    }
+
+    /// Materialize the dense M×N plan — diagnostic / small-problem
+    /// interop only; it rebuilds exactly the quadratic object the
+    /// factored path exists to avoid.
+    pub fn plan(&self) -> Mat {
+        let (m, rank) = self.q.shape();
+        let n = self.r.rows();
+        let mut out = Mat::zeros(m, n);
+        for i in 0..m {
+            let qrow = self.q.row(i);
+            let orow = out.row_mut(i);
+            for (p, op) in orow.iter_mut().enumerate() {
+                let rrow = self.r.row(p);
+                let mut acc = 0.0;
+                for k in 0..rank {
+                    acc += qrow[k] * rrow[k] / self.g[k];
+                }
+                *op = acc;
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::matmul;
+
+    fn uniform(n: usize) -> Vec<f64> {
+        vec![1.0 / n as f64; n]
+    }
+
+    fn cfg_small() -> GwConfig {
+        GwConfig {
+            epsilon: 5e-2,
+            outer_iters: 8,
+            sinkhorn_max_iters: 400,
+            sinkhorn_tolerance: 1e-9,
+            ..GwConfig::default()
+        }
+    }
+
+    #[test]
+    fn matmul_tn_matches_explicit_transpose() {
+        let mut rng = Rng::seeded(7);
+        let a = Mat::from_fn(9, 3, |_, _| rng.uniform());
+        let b = Mat::from_fn(9, 4, |_, _| rng.uniform());
+        let mut out = Mat::zeros(3, 4);
+        matmul_tn_into(&a, &b, &mut out).unwrap();
+        let want = matmul(&a.transpose(), &b).unwrap();
+        for i in 0..3 {
+            for j in 0..4 {
+                assert!((out[(i, j)] - want[(i, j)]).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn dykstra_projects_onto_both_polytopes() {
+        let (m, n, r) = (11, 7, 3);
+        let mut rng = Rng::seeded(41);
+        let eps1 = Mat::from_fn(m, r, |_, _| 0.5 + rng.uniform());
+        let eps2 = Mat::from_fn(n, r, |_, _| 0.5 + rng.uniform());
+        let eps3: Vec<f64> = (0..r).map(|_| 0.5 + rng.uniform()).collect();
+        let (u, v) = (uniform(m), uniform(n));
+        let mut q = Mat::zeros(m, r);
+        let mut rr = Mat::zeros(n, r);
+        let mut g = vec![0.0; r];
+        let mut dyk = DykstraState::new(m, n, r);
+        lr_dykstra(
+            &eps1, &eps2, &eps3, &u, &v, 1e-12, 5000, 1, &mut q, &mut rr, &mut g, &mut dyk,
+        )
+        .unwrap();
+        for (i, (&want, got)) in u.iter().zip(q.row_sums()).enumerate() {
+            assert!((got - want).abs() < 1e-8, "Q row {i}: {got} vs {want}");
+        }
+        for (j, (&want, got)) in v.iter().zip(rr.row_sums()).enumerate() {
+            assert!((got - want).abs() < 1e-8, "R row {j}: {got} vs {want}");
+        }
+        // Column marginals of both factors meet the shared g.
+        for (k, (&gk, got)) in g.iter().zip(q.col_sums()).enumerate() {
+            assert!((got - gk).abs() < 1e-8, "Q col {k}: {got} vs {gk}");
+        }
+        for (k, (&gk, got)) in g.iter().zip(rr.col_sums()).enumerate() {
+            assert!((got - gk).abs() < 1e-8, "R col {k}: {got} vs {gk}");
+        }
+        let gsum: f64 = g.iter().sum();
+        assert!((gsum - 1.0).abs() < 1e-8, "g sums to {gsum}");
+    }
+
+    #[test]
+    fn scan_side_matches_dense_side() {
+        let geom = Geometry::grid_1d_unit(9, 2);
+        let scan = SideOp::build(&geom, &LowRankOptions::default()).unwrap();
+        let dense = SideOp::Dense(geom.dense());
+        let r = 3;
+        let mut rng = Rng::seeded(3);
+        let x = Mat::from_fn(9, r, |_, _| rng.uniform());
+        let binom = Binomial::new(8);
+        let mut s1 = SideScratch::for_op(&scan, 9, r);
+        let mut s2 = SideScratch::for_op(&dense, 9, r);
+        let mut o1 = Mat::zeros(9, r);
+        let mut o2 = Mat::zeros(9, r);
+        scan.apply(&x, &mut o1, &binom, &mut s1, Parallelism::SERIAL)
+            .unwrap();
+        dense
+            .apply(&x, &mut o2, &binom, &mut s2, Parallelism::SERIAL)
+            .unwrap();
+        for i in 0..9 {
+            for k in 0..r {
+                assert!(
+                    (o1[(i, k)] - o2[(i, k)]).abs() < 1e-9,
+                    "({i},{k}): {} vs {}",
+                    o1[(i, k)],
+                    o2[(i, k)]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn solve_returns_feasible_factors_and_finite_objective() {
+        let geom = Geometry::grid_1d_unit(12, 1);
+        let mut ws =
+            LrGwWorkspace::new(&geom, &geom, 4, &LowRankOptions::default(), Parallelism::SERIAL)
+                .unwrap();
+        let (u, v) = (uniform(12), uniform(12));
+        let sol = ws.solve(&u, &v, &cfg_small()).unwrap();
+        assert!(sol.objective.is_finite());
+        assert!(sol.objective > -1e-6, "GW objective ≥ 0, got {}", sol.objective);
+        assert_eq!(sol.outer_iterations, 8);
+        let plan = sol.plan();
+        let row = plan.row_sums();
+        for (i, (&want, got)) in u.iter().zip(row).enumerate() {
+            assert!((got - want).abs() < 1e-6, "plan row {i}: {got} vs {want}");
+        }
+        let col = plan.col_sums();
+        for (j, (&want, got)) in v.iter().zip(col).enumerate() {
+            assert!((got - want).abs() < 1e-6, "plan col {j}: {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn rank_one_degenerates_to_the_product_coupling() {
+        let geom = Geometry::grid_1d_unit(10, 2);
+        let mut ws =
+            LrGwWorkspace::new(&geom, &geom, 1, &LowRankOptions::default(), Parallelism::SERIAL)
+                .unwrap();
+        let (u, v) = (uniform(10), uniform(10));
+        let sol = ws.solve(&u, &v, &cfg_small()).unwrap();
+        // At rank 1 the only feasible coupling is u·vᵀ.
+        let plan = sol.plan();
+        for i in 0..10 {
+            for j in 0..10 {
+                assert!(
+                    (plan[(i, j)] - u[i] * v[j]).abs() < 1e-6,
+                    "({i},{j}): {} vs {}",
+                    plan[(i, j)],
+                    u[i] * v[j]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn factor_constructed_workspace_solves_without_dense_memory() {
+        // D_ij = x_i² + x_j² − 2·x_i·x_j: exact rank-3 thin factors of
+        // a squared-distance matrix that is never materialized.
+        let n = 64;
+        let xs: Vec<f64> = (0..n).map(|i| i as f64 / (n - 1) as f64).collect();
+        let a = Mat::from_fn(n, 3, |i, k| match k {
+            0 => xs[i] * xs[i],
+            1 => 1.0,
+            _ => xs[i],
+        });
+        let bt = Mat::from_fn(3, n, |k, j| match k {
+            0 => 1.0,
+            1 => xs[j] * xs[j],
+            _ => -2.0 * xs[j],
+        });
+        let mut ws = LrGwWorkspace::from_cost_factors(
+            a.clone(),
+            bt.clone(),
+            a,
+            bt,
+            4,
+            Parallelism::SERIAL,
+        )
+        .unwrap();
+        let (u, v) = (uniform(n), uniform(n));
+        let sol = ws.solve(&u, &v, &cfg_small()).unwrap();
+        assert!(sol.objective.is_finite());
+        assert!(ws.resident_bytes() < 4 * n * n * 8, "O((M+N)r) resident");
+    }
+
+    #[test]
+    fn shape_and_rank_validation() {
+        let geom = Geometry::grid_1d_unit(6, 1);
+        assert!(LrGwWorkspace::new(
+            &geom,
+            &geom,
+            0,
+            &LowRankOptions::default(),
+            Parallelism::SERIAL
+        )
+        .is_err());
+        let ws = LrGwWorkspace::new(
+            &geom,
+            &geom,
+            100,
+            &LowRankOptions::default(),
+            Parallelism::SERIAL,
+        )
+        .unwrap();
+        assert_eq!(ws.rank(), 6, "rank clamps to min(M, N)");
+        let bad = LrGwWorkspace::from_cost_factors(
+            Mat::zeros(5, 2),
+            Mat::zeros(2, 4),
+            Mat::zeros(5, 2),
+            Mat::zeros(2, 5),
+            2,
+            Parallelism::SERIAL,
+        );
+        assert!(bad.is_err());
+    }
+
+    #[test]
+    fn expired_deadline_rejects_and_is_one_shot() {
+        let geom = Geometry::grid_1d_unit(8, 1);
+        let mut ws =
+            LrGwWorkspace::new(&geom, &geom, 2, &LowRankOptions::default(), Parallelism::SERIAL)
+                .unwrap();
+        let (u, v) = (uniform(8), uniform(8));
+        ws.set_deadline(Some(Instant::now()));
+        let err = ws.solve(&u, &v, &cfg_small()).unwrap_err();
+        assert!(matches!(err, Error::Rejected(_)), "{err}");
+        // Consumed: the next solve runs free.
+        assert!(ws.solve(&u, &v, &cfg_small()).is_ok());
+    }
+
+    #[test]
+    fn gram_identity_traces_the_materialized_quadratic() {
+        // ⟨D_X Γ D_Y, Γ⟩ computed dense must equal the Gram-product
+        // form the solver uses internally.
+        let geom = Geometry::grid_1d_unit(9, 1);
+        let mut ws =
+            LrGwWorkspace::new(&geom, &geom, 3, &LowRankOptions::default(), Parallelism::SERIAL)
+                .unwrap();
+        let (u, v) = (uniform(9), uniform(9));
+        let sol = ws.solve(&u, &v, &cfg_small()).unwrap();
+        let d = geom.dense();
+        let plan = sol.plan();
+        let dxg = matmul(&d, &plan).unwrap();
+        let dxgdy = matmul(&dxg, &d).unwrap();
+        let mut quad_dense = 0.0;
+        for i in 0..9 {
+            quad_dense += dot(dxgdy.row(i), plan.row(i));
+        }
+        // Rebuild the Gram form from the solution factors.
+        let xq = matmul(&d, &sol.q).unwrap();
+        let yr = matmul(&d, &sol.r).unwrap();
+        let mut sq = Mat::zeros(3, 3);
+        let mut sr = Mat::zeros(3, 3);
+        matmul_tn_into(&sol.q, &xq, &mut sq).unwrap();
+        matmul_tn_into(&sol.r, &yr, &mut sr).unwrap();
+        let quad_gram = -quad_term(&sq, &sr, &sol.g) / 2.0;
+        assert!(
+            (quad_dense - quad_gram).abs() < 1e-9 * (1.0 + quad_dense.abs()),
+            "{quad_dense} vs {quad_gram}"
+        );
+    }
+}

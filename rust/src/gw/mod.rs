@@ -10,9 +10,12 @@
 //! * [`gradient`] — [`GradientKind`] (thin constructor over the
 //!   backends) and [`PairOperator`], the bound handle the solvers use.
 //! * [`driver`] — the shared mirror-descent outer loop every solver
-//!   runs through.
+//!   runs through, plus the coupling representation ([`CouplingRank`]).
 //! * [`entropic`] — mirror-descent solver for GW and FGW
 //!   (`τ = ε`, Remark 2.1/2.2).
+//! * [`lowrank_coupling`] — the factored-coupling solver
+//!   `Γ = Q·diag(1/g)·Rᵀ` behind `CouplingRank::LowRank` (the
+//!   `O((M+N)·r)` N≈10⁶ tier).
 //! * [`objective`] — GW/FGW energy evaluation in `O(N²)`.
 //! * [`precision`] — the solve-precision policy ([`Precision`]) and
 //!   the f32 presolve lane behind the f32+refine serving tier.
@@ -28,6 +31,7 @@ pub mod driver;
 pub mod entropic;
 pub mod geometry;
 pub mod gradient;
+pub mod lowrank_coupling;
 pub mod objective;
 pub mod precision;
 pub mod ugw;
@@ -37,10 +41,11 @@ pub use barycenter::{
     gw_barycenter_1d, gw_barycenter_grid, BarycenterConfig, BarycenterResult, BaryGridInput,
 };
 pub use coot::{coot, coot_into, CootConfig, CootData, CootSolution, CootWorkspace};
-pub use driver::{run_mirror_descent, DriverStats, MirrorProblem};
+pub use driver::{run_mirror_descent, CouplingRank, DriverStats, MirrorProblem};
 pub use entropic::{BatchJob, EntropicGw, GwBatchWorkspace, GwConfig, GwSolution, GwWorkspace};
 pub use geometry::{Geometry, SqApplyScratch};
 pub use gradient::{GradientKind, PairOperator};
+pub use lowrank_coupling::{LrGwSolution, LrGwWorkspace};
 pub use objective::{fgw_objective, gw_objective};
 pub use precision::Precision;
 pub use ugw::{EntropicUgw, UgwConfig, UgwSolution, UgwWorkspace};

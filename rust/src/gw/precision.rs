@@ -15,10 +15,14 @@
 //!    tolerance contracts — the final Sinkhorn sweeps and the final
 //!    gradient applies are full f64.
 //!
-//! The lane is built from the pair's [`Geometry`] alone (scan factors
-//! for grids, a narrowed dense copy otherwise), so it works under the
-//! fgc *and* naive backends; the low-rank backend keeps the pure f64
-//! path (its factorization is not worth re-deriving in f32).
+//! The lane is built from the pair's [`Geometry`] (scan factors for
+//! grids, a narrowed dense copy otherwise) or — for the low-rank
+//! backend — from the backend's already-computed ACA factors narrowed
+//! to f32 thin products ([`F32Lane::with_cost_factors`]), so all
+//! three backends ride the same serving tier. After a presolve the
+//! lane can hand its final column duals to the f64 refinement's first
+//! Sinkhorn ([`F32Lane::refine_seed_into`]), which then starts from
+//! the f32 fixed point instead of a cold `b = 1` / `ψ = 0`.
 //!
 //! Numerical notes: f32's exponent range cuts the Gibbs-viable cost
 //! range roughly tenfold (exp underflows near `e^−87` instead of
@@ -36,7 +40,9 @@ use crate::grid::Binomial;
 use crate::gw::backend::cost_model::F32_SERVE_THRESHOLD;
 use crate::linalg::Mat;
 use crate::parallel::{self, Parallelism};
-use crate::sinkhorn::{fused_scaling_sweep, lse_shifted, safe_div, sum_exp_row, SinkhornOptions};
+use crate::sinkhorn::{
+    fused_scaling_sweep, lse_shifted, safe_div, sum_exp_row, Regime, SinkhornOptions,
+};
 use std::fmt;
 use std::str::FromStr;
 
@@ -122,6 +128,14 @@ enum OwnedFactor {
     Scan2d { n: usize, k: u32 },
     Scan3d { n: usize, k: u32 },
     Dense { d: Vec<f32>, dim: usize },
+    /// Narrowed thin cost factors `D ≈ A·Bᵀ` from the low-rank
+    /// backend's ACA plan: `a` is `side×rank`, `bt` is `rank×side`.
+    /// Applied as two thin matmuls, bypassing the separable kernels.
+    Thin {
+        a: Vec<f32>,
+        bt: Vec<f32>,
+        rank: usize,
+    },
 }
 
 impl OwnedFactor {
@@ -149,12 +163,24 @@ impl OwnedFactor {
         })
     }
 
+    /// Narrow a thin `D ≈ A·Bᵀ` factor pair to f32.
+    fn thin(a: &Mat, bt: &Mat) -> OwnedFactor {
+        OwnedFactor::Thin {
+            a: a.as_slice().iter().map(|&x| x as f32).collect(),
+            bt: bt.as_slice().iter().map(|&x| x as f32).collect(),
+            rank: a.cols(),
+        }
+    }
+
     fn as_ref(&self) -> FactorRef<'_, f32> {
         match self {
             OwnedFactor::Scan1d { k, .. } => FactorRef::Scan1d { k: *k },
             OwnedFactor::Scan2d { n, k } => FactorRef::Scan2d { n: *n, k: *k },
             OwnedFactor::Scan3d { n, k } => FactorRef::Scan3d { n: *n, k: *k },
             OwnedFactor::Dense { d, dim } => FactorRef::Dense { d, dim: *dim },
+            OwnedFactor::Thin { .. } => {
+                unreachable!("thin factors bypass the separable kernels (see apply_grad)")
+            }
         }
     }
 
@@ -163,9 +189,45 @@ impl OwnedFactor {
             OwnedFactor::Scan1d { k, .. }
             | OwnedFactor::Scan2d { k, .. }
             | OwnedFactor::Scan3d { k, .. } => *k,
-            OwnedFactor::Dense { .. } => 0,
+            OwnedFactor::Dense { .. } | OwnedFactor::Thin { .. } => 0,
         }
     }
+
+    /// Resident f32 elements of the factor's own payload.
+    fn payload_len(&self) -> usize {
+        match self {
+            OwnedFactor::Dense { d, .. } => d.len(),
+            OwnedFactor::Thin { a, bt, .. } => a.len() + bt.len(),
+            _ => 0,
+        }
+    }
+}
+
+/// `out = A·B` for row-major f32 slices (`m×k`·`k×n`), parallel over
+/// output row blocks. Each output row accumulates in a fixed order,
+/// so the result is bitwise identical for every thread count — the
+/// same contract as the separable kernels this replaces on the thin
+/// path.
+fn matmul32(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], out: &mut [f32], par: Parallelism) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(out.len(), m * n);
+    let min_rows = parallel::min_rows_for(n.max(1));
+    parallel::for_row_blocks(par, m, n, min_rows, out, |_bl, rr, oblk| {
+        oblk.fill(0.0);
+        for (local, i) in rr.enumerate() {
+            let orow = &mut oblk[local * n..(local + 1) * n];
+            for (p, &aip) in a[i * k..(i + 1) * k].iter().enumerate() {
+                if aip == 0.0 {
+                    continue;
+                }
+                let brow = &b[p * n..(p + 1) * n];
+                for (o, &bpj) in orow.iter_mut().zip(brow) {
+                    *o += aip * bpj;
+                }
+            }
+        }
+    });
 }
 
 /// The f32 presolve lane for one pair shape: narrowed factors plus
@@ -210,14 +272,43 @@ pub(crate) struct F32Lane {
     log_v: Vec<f32>,
     partials: Vec<f32>,
     reduce: Vec<f32>,
+    // Thin-product scratch (low-rank cost factors only; empty
+    // otherwise): `Γ·A_Y` (`m×r_Y`) and `B_Xᵀ·stack` (`r_X×n`).
+    thin_row: Vec<f32>,
+    thin_col: Vec<f32>,
+    /// Numeric regime of the most recent Sinkhorn subproblem — tells
+    /// [`F32Lane::refine_seed_into`] whether `b` holds a Gibbs scaling
+    /// or log-domain potentials. `None` until a presolve ran.
+    last_regime: Option<Regime>,
 }
 
 impl F32Lane {
     /// Build the lane for a pair of geometries. Infallible at apply
     /// time: scan exponents are validated here.
     pub(crate) fn new(geom_x: &Geometry, geom_y: &Geometry, par: Parallelism) -> Result<F32Lane> {
-        let (left, lscale) = OwnedFactor::from_geometry(geom_x)?;
-        let (right, rscale) = OwnedFactor::from_geometry(geom_y)?;
+        Self::with_cost_factors(geom_x, geom_y, par, None)
+    }
+
+    /// [`F32Lane::new`] with the gradient backend's thin cost factors
+    /// (`D ≈ A·Bᵀ` per side, as reported by
+    /// [`crate::gw::backend::GradientBackend::lowrank_factors`]): when
+    /// given, the lane narrows the factors to f32 and applies each
+    /// gradient side as two thin products instead of streaming a
+    /// dense `O(N²)` copy — the low-rank backend's f32 twin.
+    pub(crate) fn with_cost_factors(
+        geom_x: &Geometry,
+        geom_y: &Geometry,
+        par: Parallelism,
+        factors: Option<(&Mat, &Mat, &Mat, &Mat)>,
+    ) -> Result<F32Lane> {
+        let (left, lscale) = match factors {
+            Some((ax, bxt, _, _)) => (OwnedFactor::thin(ax, bxt), 1.0),
+            None => OwnedFactor::from_geometry(geom_x)?,
+        };
+        let (right, rscale) = match factors {
+            Some((_, _, ay, byt)) => (OwnedFactor::thin(ay, byt), 1.0),
+            None => OwnedFactor::from_geometry(geom_y)?,
+        };
         let (m, n) = (geom_x.len(), geom_y.len());
         let total = m * n;
         let threads = par.threads().max(1);
@@ -228,7 +319,16 @@ impl F32Lane {
             OwnedFactor::Scan1d { k, .. } => ((*k as usize + 1) * n, 0, 0),
             OwnedFactor::Scan2d { n: gn, k } => ((*k as usize + 1) * gn * n, total, 0),
             OwnedFactor::Scan3d { n: gn, k } => ((*k as usize + 1) * gn * gn * n, total, total),
-            OwnedFactor::Dense { .. } => (0, 0, 0),
+            OwnedFactor::Dense { .. } | OwnedFactor::Thin { .. } => (0, 0, 0),
+        };
+        // Thin-product scratch (empty on every non-thin path).
+        let thin_row_len = match &right {
+            OwnedFactor::Thin { rank, .. } => m * rank,
+            _ => 0,
+        };
+        let thin_col_len = match &left {
+            OwnedFactor::Thin { rank, .. } => rank * n,
+            _ => 0,
         };
         // Per-thread row-pass scratch for the right factor.
         let (rt_len, rt3_len, rcarry_len) = match &right {
@@ -274,19 +374,16 @@ impl F32Lane {
             log_v: vec![0.0; n],
             partials: vec![0.0; threads * n],
             reduce: vec![0.0; threads],
+            thin_row: vec![0.0; thin_row_len],
+            thin_col: vec![0.0; thin_col_len],
+            last_regime: None,
         })
     }
 
     /// Resident f32 payload of the lane in bytes (warm-cache
     /// accounting; scratch included, factor copies included).
     pub(crate) fn resident_bytes(&self) -> usize {
-        let d_len = match &self.left {
-            OwnedFactor::Dense { d, .. } => d.len(),
-            _ => 0,
-        } + match &self.right {
-            OwnedFactor::Dense { d, .. } => d.len(),
-            _ => 0,
-        };
+        let d_len = self.left.payload_len() + self.right.payload_len();
         (d_len
             + self.stack.len()
             + self.grad.len()
@@ -311,40 +408,55 @@ impl F32Lane {
             + self.log_u.len()
             + self.log_v.len()
             + self.partials.len()
-            + self.reduce.len())
+            + self.reduce.len()
+            + self.thin_row.len()
+            + self.thin_col.len())
             * std::mem::size_of::<f32>()
     }
 
     /// `grad = D_X Γ D_Y` in f32 — the same two passes as
-    /// `SeparableOp::apply`, streaming the precision-generic kernels.
+    /// `SeparableOp::apply`, streaming the precision-generic kernels;
+    /// thin sides run as two narrow matmuls instead.
     fn apply_grad(&mut self) -> Result<()> {
         let (m, n) = (self.m, self.n);
-        apply_to_rows(
-            self.right.as_ref(),
-            m,
-            n,
-            &self.gamma,
-            &mut self.stack,
-            &self.binom,
-            &mut self.row_t1,
-            &mut self.row_t2,
-            &mut self.row_t3,
-            &mut self.row_carry,
-            self.par,
-        )?;
-        apply_to_cols(
-            self.left.as_ref(),
-            m,
-            n,
-            &self.stack,
-            &mut self.grad,
-            &self.binom,
-            &mut self.col_tmp,
-            &mut self.col_scratch,
-            &mut self.col_zscan,
-            &mut self.carry,
-            self.par,
-        )?;
+        if let OwnedFactor::Thin { a, bt, rank } = &self.right {
+            // Γ·(A·Bᵀ) as (Γ·A)·Bᵀ — O((m+n)·m·r) instead of m·n².
+            matmul32(m, n, *rank, &self.gamma, a, &mut self.thin_row, self.par);
+            matmul32(m, *rank, n, &self.thin_row, bt, &mut self.stack, self.par);
+        } else {
+            apply_to_rows(
+                self.right.as_ref(),
+                m,
+                n,
+                &self.gamma,
+                &mut self.stack,
+                &self.binom,
+                &mut self.row_t1,
+                &mut self.row_t2,
+                &mut self.row_t3,
+                &mut self.row_carry,
+                self.par,
+            )?;
+        }
+        if let OwnedFactor::Thin { a, bt, rank } = &self.left {
+            // (A·Bᵀ)·stack as A·(Bᵀ·stack).
+            matmul32(*rank, m, n, bt, &self.stack, &mut self.thin_col, self.par);
+            matmul32(m, *rank, n, a, &self.thin_col, &mut self.grad, self.par);
+        } else {
+            apply_to_cols(
+                self.left.as_ref(),
+                m,
+                n,
+                &self.stack,
+                &mut self.grad,
+                &self.binom,
+                &mut self.col_tmp,
+                &mut self.col_scratch,
+                &mut self.col_zscan,
+                &mut self.carry,
+                self.par,
+            )?;
+        }
         if self.scale != 1.0 {
             let s = self.scale;
             for v in self.grad.iter_mut() {
@@ -373,12 +485,46 @@ impl F32Lane {
         let gibbs_viable = ((hi - lo) as f64) / opts.epsilon <= F32_GIBBS_LIMIT;
         if gibbs_viable {
             if let Ok(iters) = self.gibbs32(lo, opts) {
+                self.last_regime = Some(Regime::Gibbs);
                 return Ok(iters);
             }
             // Demote: the gap estimate was optimistic for this
             // subproblem's scaling trajectory.
         }
-        self.log32(opts)
+        let iters = self.log32(opts)?;
+        self.last_regime = Some(Regime::Log);
+        Ok(iters)
+    }
+
+    /// Upcast the presolve's final column duals into `dst` in Gibbs
+    /// scaling form (`b`, or `exp(ψ)` after a log-domain subproblem)
+    /// — the warm seed for the f64 refinement's first Sinkhorn (the
+    /// caller arms it via `SinkhornWorkspace::set_warm_duals`; the
+    /// f64 log path translates back with `ψ = ln b`). Returns `false`
+    /// — leave the cold start in place — when no presolve ran, the
+    /// length mismatches, or any dual fails to upcast to a positive
+    /// finite f64.
+    pub(crate) fn refine_seed_into(&self, dst: &mut [f64]) -> bool {
+        if dst.len() != self.n {
+            return false;
+        }
+        let log_form = match self.last_regime {
+            Some(Regime::Gibbs) => false,
+            Some(Regime::Log) => true,
+            None => return false,
+        };
+        for (d, &x) in dst.iter_mut().zip(&self.b) {
+            let v = if log_form {
+                (x as f64).exp()
+            } else {
+                x as f64
+            };
+            if !v.is_finite() || v <= 0.0 {
+                return false;
+            }
+            *d = v;
+        }
+        true
     }
 
     fn gibbs32(&mut self, shift: f32, opts: &SinkhornOptions) -> Result<usize> {
@@ -703,6 +849,53 @@ mod tests {
             .sum::<f64>()
             .sqrt();
         assert!(diff / norm < 5e-3, "relative plan drift {:e}", diff / norm);
+        // After a presolve the lane hands out a warm refinement seed:
+        // positive finite Gibbs-form duals of the right length.
+        let mut seed = vec![0.0; 11];
+        assert!(lane.refine_seed_into(&mut seed));
+        assert!(seed.iter().all(|&x| x > 0.0 && x.is_finite()));
+        // Wrong length or a lane that never presolved refuses.
+        let mut short = vec![0.0; 5];
+        assert!(!lane.refine_seed_into(&mut short));
+        let cold = F32Lane::new(&gx, &gy, Parallelism::SERIAL).unwrap();
+        assert!(!cold.refine_seed_into(&mut seed));
+    }
+
+    #[test]
+    fn thin_factor_lane_matches_dense_lane() {
+        // The low-rank backend's f32 twin: a lane built from narrowed
+        // ACA factors must reproduce the dense lane's gradient apply
+        // within f32 accumulation noise (the ACA residual itself is
+        // ~1e-12, far below it).
+        use crate::gw::backend::{GradientBackend, LowRankBackend};
+        let gx = Geometry::Dense(crate::grid::dense_dist_1d(&crate::grid::Grid1d::unit(20), 2));
+        let gy = Geometry::Dense(crate::grid::dense_dist_1d(&crate::grid::Grid1d::unit(17), 2));
+        let be = LowRankBackend::new(gx.clone(), gy.clone(), Parallelism::SERIAL).unwrap();
+        let factors = be.lowrank_factors().expect("smooth dense pair must factor");
+        let mut thin =
+            F32Lane::with_cost_factors(&gx, &gy, Parallelism::SERIAL, Some(factors)).unwrap();
+        let mut dense = F32Lane::new(&gx, &gy, Parallelism::SERIAL).unwrap();
+        let mut rng = crate::prng::Rng::seeded(77);
+        for g in thin.gamma.iter_mut() {
+            *g = rng.uniform() as f32;
+        }
+        dense.gamma.copy_from_slice(&thin.gamma);
+        thin.apply_grad().unwrap();
+        dense.apply_grad().unwrap();
+        let mut max_diff = 0.0f32;
+        let mut max_abs = 0.0f32;
+        for (a, b) in thin.grad.iter().zip(&dense.grad) {
+            max_diff = max_diff.max((a - b).abs());
+            max_abs = max_abs.max(b.abs());
+        }
+        assert!(max_abs > 0.0);
+        assert!(
+            max_diff / max_abs < 1e-3,
+            "thin vs dense grad drift {:e}",
+            max_diff / max_abs
+        );
+        // The thin lane keeps no dense f32 copy of either side.
+        assert!(thin.resident_bytes() < dense.resident_bytes());
     }
 
     #[test]

@@ -1,36 +1,42 @@
 //! `fgc-gw` — launcher for the FGC-GW alignment stack.
 //!
 //! ```text
-//! fgc-gw solve  --n 500 [--k 1] [--eps 0.002] [--backend fgc|naive|lowrank] [--precision f64|f32|auto] [--lowrank-tol T] [--seed 7] [--threads 1]
+//! fgc-gw solve  --n 500 [--k 1] [--eps 0.002] [--backend fgc|naive|lowrank] [--precision f64|f32|auto] [--coupling-rank full|auto|R] [--lowrank-tol T] [--seed 7] [--threads 1]
 //! fgc-gw solve2d --side 20 [--eps 0.004] …
 //! fgc-gw solve3d --side 6 [--eps 0.004] …
-//! fgc-gw serve  --jobs 32 [--family 1d|3d|mixed] [--workers 2] [--shards 0] [--threads 1] [--backend auto|fgc|naive|lowrank] [--precision f64|f32|auto] [--lowrank-tol T] [--deadline-ms 0] [--max-retries 3] [--pjrt] [--config path]
+//! fgc-gw serve  --jobs 32 [--family 1d|3d|mixed] [--workers 2] [--shards 0] [--threads 1] [--backend auto|fgc|naive|lowrank] [--precision f64|f32|auto] [--coupling-rank auto|full|R] [--lowrank-tol T] [--deadline-ms 0] [--max-retries 3] [--pjrt] [--config path]
 //! fgc-gw bary   --inputs 3 --n 40
 //! fgc-gw info   [--artifacts artifacts]
 //! ```
 //!
 //! `--threads 0` means one thread per core; the serve command also
 //! reads `solver.threads`, `solver.backend`, `solver.precision`,
-//! `solver.lowrank_tol`, `coordinator.shards`, `service.deadline_ms`
-//! (0 = no deadline) and `service.max_retries` from the config file
-//! (CLI wins). `--precision f32` solves in the f32 serving tier with
-//! an f64 refinement pass; `auto` picks f32 only above the size
-//! threshold where the narrow tier pays for itself. `--backend
-//! auto` (the default) lets the router pick per job: grid → fgc, small
-//! dense → naive, large dense → lowrank. `--shards 0` (default) sizes
-//! the variant-sharded queue from the worker count; `--lowrank-tol 0`
-//! derives the ACA tolerance from each job's ε. `serve --family`
-//! selects the synthetic workload: `1d` grid pairs (default), `3d`
-//! volumetric grid pairs, or `mixed` dense-support×3D-grid payloads
-//! (the warm-rebind path).
+//! `solver.coupling_rank`, `solver.lowrank_tol`, `coordinator.shards`,
+//! `service.deadline_ms` (0 = no deadline) and `service.max_retries`
+//! from the config file (CLI wins). `--precision f32` solves in the
+//! f32 serving tier with an f64 refinement pass; `auto` picks f32 only
+//! above the size threshold where the narrow tier pays for itself.
+//! `--coupling-rank R` solves with the factored coupling
+//! `Γ = Q·diag(1/g)·Rᵀ` at rank R (`O((M+N)·R)` memory instead of
+//! `M×N`); `auto` switches to it — rank from the cost model's memory
+//! budget — at and above the size threshold (the serve default),
+//! `full` pins the dense coupling (the solve commands' default).
+//! `--backend auto` (the default) lets the router pick per job: grid
+//! → fgc, small dense → naive, large dense → lowrank. `--shards 0`
+//! (default) sizes the variant-sharded queue from the worker count;
+//! `--lowrank-tol 0` derives the ACA tolerance from each job's ε.
+//! `serve --family` selects the synthetic workload: `1d` grid pairs
+//! (default), `3d` volumetric grid pairs, or `mixed`
+//! dense-support×3D-grid payloads (the warm-rebind path).
 
 use fgc_gw::cli::Args;
 use fgc_gw::config::Config;
 use fgc_gw::coordinator::{Coordinator, CoordinatorConfig, JobPayload, RoutingPolicy};
 use fgc_gw::data::random_distribution;
+use fgc_gw::gw::backend::cost_model::auto_coupling_for_sizes;
 use fgc_gw::gw::{
-    gw_barycenter_1d, BarycenterConfig, EntropicGw, GradientKind, GwConfig, LowRankOptions,
-    Precision, barycenter::BaryInput1d,
+    gw_barycenter_1d, BarycenterConfig, CouplingRank, EntropicGw, GradientKind, GwConfig,
+    LowRankOptions, Precision, barycenter::BaryInput1d,
 };
 use fgc_gw::prng::Rng;
 use fgc_gw::runtime::ArtifactRegistry;
@@ -64,10 +70,10 @@ fn print_usage() {
     println!(
         "fgc-gw — Fast Gradient Computation for Gromov-Wasserstein\n\
          commands:\n\
-         \x20 solve    1D GW between random distributions (--n, --k, --eps, --backend, --precision, --lowrank-tol, --seed, --threads)\n\
-         \x20 solve2d  2D GW on an n×n grid (--side, --k, --eps, --backend, --precision, --seed, --threads)\n\
-         \x20 solve3d  3D GW on an n×n×n grid (--side, --k, --eps, --backend, --precision, --seed, --threads)\n\
-         \x20 serve    run the coordinator on a synthetic workload (--jobs, --family 1d|3d|mixed, --workers, --shards, --threads, --backend, --precision, --lowrank-tol, --deadline-ms, --max-retries, --pjrt)\n\
+         \x20 solve    1D GW between random distributions (--n, --k, --eps, --backend, --precision, --coupling-rank, --lowrank-tol, --seed, --threads)\n\
+         \x20 solve2d  2D GW on an n×n grid (--side, --k, --eps, --backend, --precision, --coupling-rank, --seed, --threads)\n\
+         \x20 solve3d  3D GW on an n×n×n grid (--side, --k, --eps, --backend, --precision, --coupling-rank, --seed, --threads)\n\
+         \x20 serve    run the coordinator on a synthetic workload (--jobs, --family 1d|3d|mixed, --workers, --shards, --threads, --backend, --precision, --coupling-rank, --lowrank-tol, --deadline-ms, --max-retries, --pjrt)\n\
          \x20 bary     1D GW barycenter demo (--inputs, --n)\n\
          \x20 info     platform + artifact registry summary (--artifacts DIR)"
     );
@@ -83,6 +89,37 @@ fn backend(args: &Args) -> fgc_gw::Result<GradientKind> {
 /// `auto` defers to the size threshold in the cost model).
 fn precision(args: &Args) -> fgc_gw::Result<Precision> {
     args.get_or("precision", Precision::F64)
+}
+
+/// Parse a `--coupling-rank` / `solver.coupling_rank` value: `auto`
+/// (→ `None`) defers to the cost model's size threshold and memory
+/// budget, `full` pins the dense `M×N` coupling, a positive integer
+/// pins the factored coupling at that rank.
+fn coupling_rank(name: &str) -> fgc_gw::Result<Option<CouplingRank>> {
+    match name {
+        "auto" => Ok(None),
+        "full" => Ok(Some(CouplingRank::Full)),
+        _ => name
+            .parse::<usize>()
+            .ok()
+            .filter(|&r| r > 0)
+            .map(|r| Some(CouplingRank::LowRank(r)))
+            .ok_or_else(|| {
+                fgc_gw::Error::Config(format!(
+                    "unknown coupling rank `{name}` (expected auto|full|<positive integer>)"
+                ))
+            }),
+    }
+}
+
+/// Resolve the coupling representation for a one-shot solve of shape
+/// `(m, n)`: absent = full-rank (the historical solve-command
+/// behavior), `auto` = the cost model's size-threshold decision.
+fn solve_coupling(args: &Args, m: usize, n: usize) -> fgc_gw::Result<CouplingRank> {
+    Ok(match args.get("coupling-rank") {
+        Some(name) => coupling_rank(name)?.unwrap_or_else(|| auto_coupling_for_sizes(m, n)),
+        None => CouplingRank::Full,
+    })
 }
 
 /// Parse a backend override for the router: `auto` (or absent) keeps
@@ -126,7 +163,13 @@ fn cmd_solve(args: &Args) -> fgc_gw::Result<()> {
             n,
             n,
             k,
-            GwConfig { epsilon: eps, threads, precision: precision(args)?, ..GwConfig::default() },
+            GwConfig {
+                epsilon: eps,
+                threads,
+                precision: precision(args)?,
+                coupling: solve_coupling(args, n, n)?,
+                ..GwConfig::default()
+            },
         ),
         args,
     )?;
@@ -158,7 +201,13 @@ fn cmd_solve_2d(args: &Args) -> fgc_gw::Result<()> {
             side,
             side,
             k,
-            GwConfig { epsilon: eps, threads, precision: precision(args)?, ..GwConfig::default() },
+            GwConfig {
+                epsilon: eps,
+                threads,
+                precision: precision(args)?,
+                coupling: solve_coupling(args, side * side, side * side)?,
+                ..GwConfig::default()
+            },
         ),
         args,
     )?;
@@ -185,7 +234,13 @@ fn cmd_solve_3d(args: &Args) -> fgc_gw::Result<()> {
             side,
             side,
             k,
-            GwConfig { epsilon: eps, threads, precision: precision(args)?, ..GwConfig::default() },
+            GwConfig {
+                epsilon: eps,
+                threads,
+                precision: precision(args)?,
+                coupling: solve_coupling(args, side * side * side, side * side * side)?,
+                ..GwConfig::default()
+            },
         ),
         args,
     )?;
@@ -213,6 +268,9 @@ fn cmd_serve(args: &Args) -> fgc_gw::Result<()> {
         cfg.solver_threads = file.get_or("solver.threads", cfg.solver_threads)?;
         cfg.lowrank_tol = file.get_or("solver.lowrank_tol", cfg.lowrank_tol)?;
         cfg.precision = file.get_or("solver.precision", cfg.precision)?;
+        if let Some(name) = file.get("solver.coupling_rank") {
+            cfg.coupling = coupling_rank(name)?;
+        }
         let deadline_ms = file.get_or("service.deadline_ms", 0u64)?;
         if deadline_ms > 0 {
             cfg.default_deadline = Some(Duration::from_millis(deadline_ms));
@@ -236,6 +294,9 @@ fn cmd_serve(args: &Args) -> fgc_gw::Result<()> {
     }
     if let Some(precision) = args.get_opt::<Precision>("precision")? {
         cfg.precision = precision;
+    }
+    if let Some(name) = args.get("coupling-rank") {
+        cfg.coupling = coupling_rank(name)?;
     }
     cfg.enable_pjrt = cfg.enable_pjrt || args.has_flag("pjrt");
     cfg.artifacts_dir = PathBuf::from(args.get("artifacts").unwrap_or("artifacts"));

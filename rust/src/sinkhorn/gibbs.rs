@@ -57,6 +57,7 @@ pub(super) fn gibbs_into(
     debug_assert_eq!((ws.m, ws.n), (m, n));
     let shift = cost.min();
     let inv_eps = 1.0 / opts.epsilon;
+    let warm = ws.take_warm_duals();
     let SinkhornWorkspace {
         kernel,
         a,
@@ -85,7 +86,12 @@ pub(super) fn gibbs_into(
     let k = &*kernel;
 
     a.fill(1.0);
-    b.fill(1.0);
+    // Warm start: keep the seeded column duals (the first fused sweep
+    // immediately Gauss-Seidels `a` against them); cold start is the
+    // historical `b = 1`.
+    if !warm {
+        b.fill(1.0);
+    }
 
     let mut iterations = 0;
     for it in 0..opts.max_iters {

@@ -61,6 +61,7 @@ pub(super) fn log_into(
     let (m, n) = cost.shape();
     debug_assert_eq!((ws.m, ws.n), (m, n));
     let inv_eps = 1.0 / opts.epsilon;
+    let warm = ws.take_warm_duals();
     ws.ensure_kernel_t();
     let SinkhornWorkspace {
         kernel,
@@ -99,7 +100,15 @@ pub(super) fn log_into(
         *d = x.ln();
     }
     phi.fill(0.0);
-    psi.fill(0.0);
+    if warm {
+        // The seed arrives in Gibbs scaling form (positive `b`); the
+        // log sweep works on potentials, so translate: `ψ = ln b`.
+        for p in psi.iter_mut() {
+            *p = p.ln();
+        }
+    } else {
+        psi.fill(0.0);
+    }
 
     let mut iterations = 0;
     for it in 0..opts.max_iters {

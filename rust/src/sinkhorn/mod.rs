@@ -423,6 +423,63 @@ mod tests {
     }
 
     #[test]
+    fn warm_started_duals_accelerate_and_stay_correct() {
+        // Seeding the next solve with converged Gibbs duals must cut
+        // the sweep count and land on the same plan — the f32→f64
+        // refinement handoff contract.
+        let (cost, u, v) = random_problem(24, 20, 41);
+        let opts = SinkhornOptions {
+            epsilon: 0.05,
+            max_iters: 4000,
+            tolerance: 1e-12,
+            check_every: 1,
+        };
+        let mut ws = SinkhornWorkspace::new(24, 20, crate::parallel::Parallelism::SERIAL);
+        let mut plan = Mat::zeros(24, 20);
+        let cold = solve_into(&cost, &u, &v, &opts, &mut ws, &mut plan).unwrap();
+        assert_eq!(cold.regime, Regime::Gibbs);
+        // `ws.b` still holds the converged duals; re-solve warm.
+        ws.set_warm_duals();
+        let mut plan2 = Mat::zeros(24, 20);
+        let warm = solve_into(&cost, &u, &v, &opts, &mut ws, &mut plan2).unwrap();
+        assert!(
+            warm.iterations < cold.iterations,
+            "warm {} vs cold {}",
+            warm.iterations,
+            cold.iterations
+        );
+        assert!(crate::linalg::frobenius_diff(&plan, &plan2).unwrap() < 1e-9);
+        // The flag is one-shot: a third solve is bitwise the cold one.
+        let mut plan3 = Mat::zeros(24, 20);
+        let third = solve_into(&cost, &u, &v, &opts, &mut ws, &mut plan3).unwrap();
+        assert_eq!(third.iterations, cold.iterations);
+        assert_eq!(plan.as_slice(), plan3.as_slice());
+    }
+
+    #[test]
+    fn warm_seed_in_log_regime_stays_correct() {
+        // An arbitrary positive Gibbs-form seed in the log regime must
+        // not corrupt the converged answer (ψ = ln b translation).
+        let (cost, u, v) = random_problem(16, 16, 42);
+        let opts = SinkhornOptions {
+            epsilon: 0.002,
+            max_iters: 20000,
+            tolerance: 1e-10,
+            check_every: 10,
+        };
+        let reference = solve(&cost, &u, &v, &opts).unwrap();
+        let mut ws = SinkhornWorkspace::new(16, 16, crate::parallel::Parallelism::SERIAL);
+        assert_eq!(pick_regime(&cost, opts.epsilon), Regime::Log);
+        ws.b.fill(0.5);
+        ws.set_warm_duals();
+        let mut plan = Mat::zeros(16, 16);
+        let stats = solve_into(&cost, &u, &v, &opts, &mut ws, &mut plan).unwrap();
+        assert_eq!(stats.regime, Regime::Log);
+        assert!(crate::linalg::frobenius_diff(&plan, &reference.plan).unwrap() < 1e-8);
+        assert!(marginal_violation(&plan, &u, &v) < 1e-7);
+    }
+
+    #[test]
     fn scratch_marginal_error_matches_allocating_form() {
         let (cost, u, v) = random_problem(9, 13, 2);
         let r = solve(&cost, &u, &v, &SinkhornOptions::default()).unwrap();

@@ -59,6 +59,13 @@ pub struct SinkhornWorkspace {
     pub(crate) reduce: Vec<f64>,
     /// Cached numeric-regime decision for the current solve.
     regime: Option<Regime>,
+    /// One-shot warm-start flag: the next [`super::solve_into`] reuses
+    /// the Gibbs-form column duals currently in `b` instead of the
+    /// cold `b = 1` / `ψ = 0` start (the log sweep translates with
+    /// `ψ = ln b`). Armed by the f32→f64 refinement handoff
+    /// (`gw::precision::F32Lane::refine_seed_into`); never set on the
+    /// default path, so pure-f64 solves stay bitwise identical.
+    warm_duals: bool,
 }
 
 impl SinkhornWorkspace {
@@ -79,6 +86,7 @@ impl SinkhornWorkspace {
             partials: vec![0.0; threads * n],
             reduce: vec![0.0; threads],
             regime: None,
+            warm_duals: false,
         }
     }
 
@@ -108,6 +116,19 @@ impl SinkhornWorkspace {
         self.regime = None;
     }
 
+    /// Arm the next solve to start from the duals currently in `b`
+    /// (Gibbs scaling form; see the `warm_duals` field). The caller
+    /// writes the seed into `b` first.
+    pub(crate) fn set_warm_duals(&mut self) {
+        self.warm_duals = true;
+    }
+
+    /// Consume the warm-start flag (one-shot: the first sweep of the
+    /// next solve takes it, every later subproblem starts cold).
+    pub(crate) fn take_warm_duals(&mut self) -> bool {
+        std::mem::take(&mut self.warm_duals)
+    }
+
     /// Ensure the `Sᵀ` buffer exists (one allocation on the first
     /// log-domain subproblem; reused ever after).
     pub(crate) fn ensure_kernel_t(&mut self) {
@@ -131,6 +152,15 @@ mod tests {
         assert_eq!(ws.cached_regime(), Some(Regime::Log));
         ws.reset_regime();
         assert_eq!(ws.cached_regime(), None);
+    }
+
+    #[test]
+    fn warm_dual_flag_is_one_shot() {
+        let mut ws = SinkhornWorkspace::new(4, 5, Parallelism::SERIAL);
+        assert!(!ws.take_warm_duals());
+        ws.set_warm_duals();
+        assert!(ws.take_warm_duals());
+        assert!(!ws.take_warm_duals(), "flag must not persist");
     }
 
     #[test]

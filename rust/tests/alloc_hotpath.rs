@@ -146,6 +146,45 @@ fn outer_iterations_allocate_nothing() {
     }
 }
 
+/// Factored-coupling parity: the `LrGwWorkspace` mirror-descent loop
+/// (side applies, r×r Grams, LR-Dykstra projections, best-iterate
+/// snapshots) is workspace-backed end to end, so deeper solves must
+/// not allocate more. Per-solve constants (the returned thin-factor
+/// clones) cancel in the comparison exactly like the dense plan clone
+/// does above.
+#[test]
+fn lowrank_coupling_outer_iterations_allocate_nothing() {
+    let build = |outer: usize| {
+        EntropicGw::grid_1d(
+            60,
+            45,
+            1,
+            GwConfig {
+                epsilon: 0.05,
+                ..cfg(outer)
+            },
+        )
+    };
+    let (u, v) = dists(60, 45, 31);
+    let shallow = build(3);
+    let deep = build(13);
+    let mut ws_shallow = shallow.lr_workspace(6).unwrap();
+    let mut ws_deep = deep.lr_workspace(6).unwrap();
+    let count = |solver: &EntropicGw, ws: &mut fgc_gw::gw::LrGwWorkspace| {
+        solver.solve_lowrank_into(&u, &v, ws).unwrap(); // warm lazy buffers
+        let before = allocations();
+        solver.solve_lowrank_into(&u, &v, ws).unwrap();
+        allocations() - before
+    };
+    let a_shallow = count(&shallow, &mut ws_shallow);
+    let a_deep = count(&deep, &mut ws_deep);
+    assert_eq!(
+        a_shallow, a_deep,
+        "lowrank-coupling: allocation count grew with outer iterations \
+         ({a_shallow} @3 vs {a_deep} @13) — something allocates per iteration"
+    );
+}
+
 /// UGW parity: the marginal-dependent `C₁` halves now land in
 /// workspace buffers (`Geometry::sq_apply_into`) and the unbalanced
 /// inner solver is workspace-backed, so deeper solves must not
