@@ -48,12 +48,22 @@
 //! ~34 GB) report the low-rank tier alone, because that is the entire
 //! point of the tier.
 //!
+//! An eighth section times the **sliced screening tier**
+//! (`screen_results`): one warm `SlicedWorkspace` scoring a query
+//! against K ∈ {16, 64, 256} candidate clouds (`--screen-ks`) versus
+//! the exact path — K independent dense entropic solves — plus the
+//! escalation step (exact solves of the sliced top-4 only). The
+//! screen does no M×N work, so its advantage grows linearly in K;
+//! the `exact_best_in_top_k` column records whether the exact argmin
+//! survived screening, tying the speedup to its recall cost.
+//!
 //! ```bash
 //! cargo bench --bench hotpath [-- --quick --threads 4 \
 //!     --sizes 256,1024,4096 --dense-sizes 256,512 --batch 8 \
 //!     --batch-n 512 --mixed-m 256 --mixed-side 16 \
 //!     --grid3d-side 6 --payload-jobs 24 \
 //!     --coupling-sizes 2048,8192,32768 \
+//!     --screen-ks 16,64,256 --screen-n 64 --screen-slices 32 \
 //!     --out ../BENCH_hotpath.json]
 //! ```
 
@@ -62,10 +72,12 @@ use fgc_gw::cli::Args;
 use fgc_gw::coordinator::{Coordinator, CoordinatorConfig, JobPayload, RoutingPolicy};
 use fgc_gw::data::{random_distribution, random_distribution_3d};
 use fgc_gw::grid::{dense_dist_1d, Grid1d};
-use fgc_gw::gw::backend::cost_model::{coupling_rank_for_sizes, full_coupling_bytes};
+use fgc_gw::gw::backend::cost_model::{
+    coupling_rank_for_sizes, full_coupling_bytes, SCREEN_SLICES_DEFAULT,
+};
 use fgc_gw::gw::{
-    backend, EntropicGw, Geometry, GradientBackend, GradientKind, GwConfig, LowRankBackend,
-    Precision,
+    backend, pairwise_sq_dists, uniform_weights, EntropicGw, Geometry, GradientBackend,
+    GradientKind, GwConfig, LowRankBackend, Precision, SlicedConfig, SlicedWorkspace,
 };
 use fgc_gw::linalg::{axpy, frobenius_diff, Mat};
 use fgc_gw::parallel::Parallelism;
@@ -149,6 +161,18 @@ struct CouplingRow {
     /// `None` when the full-rank workspace was feasibility-gated out.
     full_s: Option<f64>,
     obj_rel_gap: Option<f64>,
+}
+
+struct ScreenRow {
+    k: usize,
+    slices: usize,
+    points: usize,
+    screen_s: f64,
+    exact_s: f64,
+    escalate_s: f64,
+    top_k: usize,
+    ws_bytes: usize,
+    exact_best_in_top_k: bool,
 }
 
 struct MixedPayloadRow {
@@ -754,6 +778,120 @@ fn main() {
     }
     println!("{}", coupling_table.render());
 
+    // --- sliced screening: 1-vs-K scores vs K exact solves ---------------
+    // The retrieval question: a query arrives with K candidate clouds
+    // and wants the best few. The exact path runs K dense entropic
+    // solves; the screening tier runs one O(S·(P+Σn)·log) sliced pass
+    // over a warm workspace and escalates only the top-4. The exact
+    // sweep is also scored untimed once so the table can report
+    // whether the exact argmin survived screening.
+    let screen_ks = args.get_list_or("screen-ks", &[16, 64, 256]).unwrap();
+    let screen_p = args.get_or("screen-n", 64usize).unwrap();
+    let screen_slices = args.get_or("screen-slices", SCREEN_SLICES_DEFAULT).unwrap();
+    let screen_gw_cfg = GwConfig {
+        // Squared distances of clouds in [-1,1]³ reach ~12, so the
+        // screen tier's serving ε, not the unit-grid scan ε.
+        epsilon: 5e-2,
+        ..cfg(1, quick)
+    };
+    let mut screen_table = TableWriter::new(
+        &format!(
+            "hotpath: sliced 1-vs-K screen ({screen_slices} slices) vs K exact dense solves (serial)"
+        ),
+        &["K", "screen (s)", "exact 1-vs-K (s)", "speedup", "escalate@4 (s)", "ws bytes", "best∈top4"],
+    );
+    let mut screen_rows = Vec::new();
+    for &k in &screen_ks {
+        let mut rng = Rng::seeded(101 + k as u64);
+        let query = Mat::from_fn(screen_p, 3, |_, _| rng.uniform_in(-1.0, 1.0));
+        let candidates: Vec<Mat> = (0..k)
+            .map(|_| Mat::from_fn(screen_p, 3, |_, _| rng.uniform_in(-1.0, 1.0)))
+            .collect();
+        let scfg = SlicedConfig {
+            slices: screen_slices,
+            threads: 1,
+            ..SlicedConfig::default()
+        };
+        let mut sws = SlicedWorkspace::with_default_seed();
+        sws.screen_into(&query, &candidates, &scfg).unwrap();
+        let ws_bytes = sws.resident_bytes();
+        let t_screen = time_mean(1, reps, || {
+            sws.screen_into(&query, &candidates, &scfg).unwrap();
+            sws.scores()[0]
+        });
+
+        // Exact sweep: closure shared by the untimed recall pass and
+        // the timed arm so both do identical work.
+        let dq = pairwise_sq_dists(&query);
+        let uq = uniform_weights(screen_p);
+        let exact_sweep = || -> Vec<f64> {
+            candidates
+                .iter()
+                .map(|cand| {
+                    let solver = EntropicGw::new(
+                        Geometry::Dense(dq.clone()),
+                        Geometry::Dense(pairwise_sq_dists(cand)),
+                        screen_gw_cfg,
+                    );
+                    solver
+                        .solve(&uq, &uniform_weights(cand.rows()), GradientKind::Naive)
+                        .unwrap()
+                        .objective
+                })
+                .collect()
+        };
+        let exact_objs = exact_sweep();
+        let exact_best = exact_objs
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.total_cmp(b.1))
+            .map(|(i, _)| i)
+            .unwrap();
+        let top_k = 4usize.min(k);
+        let best_in_top_k = sws.ranked().iter().take(top_k).any(|&c| c == exact_best);
+        let t_exact = time_mean(0, reps, || exact_sweep().len());
+        let t_escalate = time_mean(0, reps, || {
+            sws.escalate(
+                &query,
+                &candidates,
+                top_k,
+                &screen_gw_cfg,
+                GradientKind::Naive,
+                false,
+                None,
+            )
+            .unwrap()
+            .len()
+        });
+
+        let (screen_s, exact_s, escalate_s) = (
+            t_screen.as_secs_f64(),
+            t_exact.as_secs_f64(),
+            t_escalate.as_secs_f64(),
+        );
+        screen_table.row(&[
+            k.to_string(),
+            fmt_secs(t_screen),
+            fmt_secs(t_exact),
+            format!("{:.1}×", exact_s / screen_s),
+            fmt_secs(t_escalate),
+            format!("{:.1} KB", ws_bytes as f64 / 1e3),
+            if best_in_top_k { "yes" } else { "no" }.to_string(),
+        ]);
+        screen_rows.push(ScreenRow {
+            k,
+            slices: screen_slices,
+            points: screen_p,
+            screen_s,
+            exact_s,
+            escalate_s,
+            top_k,
+            ws_bytes,
+            exact_best_in_top_k: best_in_top_k,
+        });
+    }
+    println!("{}", screen_table.render());
+
     let json = render_json(
         threads,
         quick,
@@ -766,6 +904,7 @@ fn main() {
         &mixed_payload_row,
         &precision_rows,
         &coupling_rows,
+        &screen_rows,
         axpy_len,
         axpy_f64_s,
         axpy_f32_s,
@@ -787,6 +926,7 @@ fn render_json(
     payload_row: &MixedPayloadRow,
     precision_rows: &[PrecisionRow],
     coupling_rows: &[CouplingRow],
+    screen_rows: &[ScreenRow],
     axpy_len: usize,
     axpy_f64_s: f64,
     axpy_f32_s: f64,
@@ -923,6 +1063,24 @@ fn render_json(
             r.full_bytes,
             gap,
             if i + 1 == coupling_rows.len() { "" } else { "," }
+        ));
+    }
+    s.push_str("  ],\n");
+    s.push_str("  \"screen_results\": [\n");
+    for (i, r) in screen_rows.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"k\": {}, \"slices\": {}, \"points\": {}, \"screen_s\": {:.6e}, \"exact_s\": {:.6e}, \"speedup\": {:.3}, \"escalate_s\": {:.6e}, \"top_k\": {}, \"ws_bytes\": {}, \"exact_best_in_top_k\": {}}}{}\n",
+            r.k,
+            r.slices,
+            r.points,
+            r.screen_s,
+            r.exact_s,
+            r.exact_s / r.screen_s,
+            r.escalate_s,
+            r.top_k,
+            r.ws_bytes,
+            r.exact_best_in_top_k,
+            if i + 1 == screen_rows.len() { "" } else { "," }
         ));
     }
     s.push_str("  ]\n}\n");

@@ -48,6 +48,12 @@ pub fn variant_key(req: &JobRequest) -> VariantKey {
         JobPayload::GwMixed { u, grid, .. } => {
             ("gwmixed", u.len(), grid.grid_exponent().unwrap_or(0))
         }
+        // Screens key on query size plus candidate count (in `k`):
+        // same-shape screens share the warm sliced workspace, which is
+        // content-agnostic, so no finer identity is needed.
+        JobPayload::GwScreen {
+            query, candidates, ..
+        } => ("gwscreen", query.rows(), candidates.len() as u32),
     };
     VariantKey {
         backend,

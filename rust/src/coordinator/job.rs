@@ -116,6 +116,67 @@ pub enum JobPayload {
         /// batching but never correctness.
         fingerprint: u64,
     },
+    /// Sliced-GW screening: rank `candidates.len()` point clouds
+    /// against `query` with the O(N log N) sliced surrogate
+    /// ([`crate::gw::sliced`]), then escalate only the `top_k` best to
+    /// the exact entropic solver. The retrieval workload — one query,
+    /// many candidates, exact answers only where they matter. Build
+    /// with [`JobPayload::gw_screen`], which stamps the content
+    /// fingerprint at admission.
+    GwScreen {
+        /// Query point cloud (`P×d` coordinates, one point per row).
+        query: Mat,
+        /// Candidate point clouds (`n_c×d` each, same `d` as the
+        /// query).
+        candidates: Vec<Mat>,
+        /// How many screened candidates escalate to exact solves
+        /// (`1 ≤ top_k ≤ candidates.len()`).
+        top_k: usize,
+        /// Slice count; `0` lets the coordinator's ScreenPolicy
+        /// ([`crate::gw::backend::cost_model::screen_slices`]) choose
+        /// from the job's deadline budget.
+        slices: usize,
+        /// Seed each escalated exact solve from the best slice's
+        /// monotone plan. Off by default: cold escalation is
+        /// bit-for-bit with a direct library solve.
+        warm_start: bool,
+        /// Entropic ε for the escalated exact solves.
+        epsilon: f64,
+        /// FNV-1a-style content fingerprint over the query and every
+        /// candidate cloud ([`screen_fingerprint`]), stamped once at
+        /// admission. Same contract as [`JobPayload::GwDense`]'s: the
+        /// warm-batch sub-split compares fingerprints, with the full
+        /// compare only on a match, so a stale hash can cost batching
+        /// but never correctness.
+        fingerprint: u64,
+    },
+}
+
+/// One escalated screening hit: a candidate that survived the sliced
+/// ranking and got an exact entropic solve.
+#[derive(Clone, Debug)]
+pub struct ScreenHit {
+    /// Index into the payload's `candidates`.
+    pub candidate: usize,
+    /// Sliced surrogate score (mean over directions of the 1D GW
+    /// cost) that earned the escalation.
+    pub sliced_score: f64,
+    /// Exact entropic GW² objective from the escalated solve.
+    pub objective: f64,
+}
+
+/// Screening report attached to a [`JobResult`] for
+/// [`JobPayload::GwScreen`] jobs (`None` for every other payload).
+#[derive(Clone, Debug)]
+pub struct ScreenOutcome {
+    /// Sliced surrogate score per candidate, payload order.
+    pub scores: Vec<f64>,
+    /// Escalated hits, best exact objective first. The top result's
+    /// plan rides in [`JobResult::plan`].
+    pub hits: Vec<ScreenHit>,
+    /// Slice count the screen actually ran with (the requested count,
+    /// or the ScreenPolicy's pick when the payload asked for `0`).
+    pub slices: usize,
 }
 
 /// One FNV-1a-style XOR-multiply fold of a matrix's `(rows, cols,
@@ -158,6 +219,21 @@ pub fn mixed_fingerprint(dx: &Mat) -> u64 {
     h
 }
 
+/// Content fingerprint over the query and every candidate cloud of a
+/// [`JobPayload::GwScreen`] payload. The candidate count folds in
+/// first so `[a, b]` and `[a]`+`b`-in-query style reshuffles cannot
+/// collide by concatenation.
+pub fn screen_fingerprint(query: &Mat, candidates: &[Mat]) -> u64 {
+    let mut h = FNV_OFFSET;
+    h ^= candidates.len() as u64;
+    h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    fold_mat(&mut h, query);
+    for c in candidates {
+        fold_mat(&mut h, c);
+    }
+    h
+}
+
 impl JobPayload {
     /// Build a dense-geometry GW payload, computing the content
     /// fingerprint over both distance matrices at admission.
@@ -193,6 +269,29 @@ impl JobPayload {
         }
     }
 
+    /// Build a sliced-screening payload, computing the content
+    /// fingerprint over the query and all candidates at admission.
+    /// `slices = 0` defers the slice count to the ScreenPolicy.
+    pub fn gw_screen(
+        query: Mat,
+        candidates: Vec<Mat>,
+        top_k: usize,
+        slices: usize,
+        warm_start: bool,
+        epsilon: f64,
+    ) -> JobPayload {
+        let fingerprint = screen_fingerprint(&query, &candidates);
+        JobPayload::GwScreen {
+            query,
+            candidates,
+            top_k,
+            slices,
+            warm_start,
+            epsilon,
+            fingerprint,
+        }
+    }
+
     /// Problem size (source-side support points).
     pub fn points(&self) -> usize {
         match self {
@@ -202,6 +301,7 @@ impl JobPayload {
             JobPayload::Gw3d { n, .. } => n * n * n,
             JobPayload::GwDense { u, .. } => u.len(),
             JobPayload::GwMixed { u, .. } => u.len(),
+            JobPayload::GwScreen { query, .. } => query.rows(),
         }
     }
 
@@ -215,6 +315,11 @@ impl JobPayload {
             JobPayload::Gw3d { n, .. } => n * n * n,
             JobPayload::GwDense { v, .. } => v.len(),
             JobPayload::GwMixed { v, .. } => v.len(),
+            // The escalated exact solves are query-vs-candidate; size
+            // the target side by the largest candidate.
+            JobPayload::GwScreen { candidates, .. } => {
+                candidates.iter().map(Mat::rows).max().unwrap_or(0)
+            }
         }
     }
 
@@ -223,7 +328,10 @@ impl JobPayload {
     /// payloads carry none — the separable engine scans any grid
     /// side, including the mixed payload's).
     pub fn is_structured(&self) -> bool {
-        !matches!(self, JobPayload::GwDense { .. })
+        !matches!(
+            self,
+            JobPayload::GwDense { .. } | JobPayload::GwScreen { .. }
+        )
     }
 
     /// The job's entropic ε (a solver-config knob, so same-variant
@@ -235,7 +343,8 @@ impl JobPayload {
             | JobPayload::Gw2d { epsilon, .. }
             | JobPayload::Gw3d { epsilon, .. }
             | JobPayload::GwDense { epsilon, .. }
-            | JobPayload::GwMixed { epsilon, .. } => *epsilon,
+            | JobPayload::GwMixed { epsilon, .. }
+            | JobPayload::GwScreen { epsilon, .. } => *epsilon,
         }
     }
 
@@ -403,6 +512,47 @@ impl JobPayload {
                     return Err("epsilon must be > 0".into());
                 }
             }
+            JobPayload::GwScreen {
+                query,
+                candidates,
+                top_k,
+                epsilon,
+                ..
+            } => {
+                if query.rows() == 0 || query.cols() == 0 {
+                    return Err("query cloud is empty".into());
+                }
+                if !query.all_finite() {
+                    return Err("query cloud must be finite".into());
+                }
+                if candidates.is_empty() {
+                    return Err("screen needs at least one candidate".into());
+                }
+                for (c, cand) in candidates.iter().enumerate() {
+                    if cand.rows() == 0 {
+                        return Err(format!("candidate {c} is empty"));
+                    }
+                    if cand.cols() != query.cols() {
+                        return Err(format!(
+                            "candidate {c} has {} coordinates, query has {}",
+                            cand.cols(),
+                            query.cols()
+                        ));
+                    }
+                    if !cand.all_finite() {
+                        return Err(format!("candidate {c} must be finite"));
+                    }
+                }
+                if *top_k == 0 || *top_k > candidates.len() {
+                    return Err(format!(
+                        "top_k must be in 1..={}, got {top_k}",
+                        candidates.len()
+                    ));
+                }
+                if *epsilon <= 0.0 {
+                    return Err("epsilon must be > 0".into());
+                }
+            }
         }
         Ok(())
     }
@@ -545,6 +695,11 @@ pub struct JobResult {
     pub queue_time: Duration,
     /// Time spent solving.
     pub solve_time: Duration,
+    /// Screening report: `Some` for [`JobPayload::GwScreen`] jobs
+    /// (per-candidate sliced scores plus the escalated exact hits),
+    /// `None` for every other payload. On a screen job `objective`
+    /// and `plan` carry the best escalated hit's solve.
+    pub screen: Option<ScreenOutcome>,
 }
 
 #[cfg(test)]
@@ -832,6 +987,65 @@ mod tests {
         match payload {
             JobPayload::GwMixed { fingerprint, .. } => {
                 assert_eq!(fingerprint, mixed_fingerprint(&a))
+            }
+            _ => unreachable!(),
+        }
+    }
+
+    #[test]
+    fn validate_screen_jobs() {
+        let cloud = |seed: u64, n: usize| {
+            let mut rng = crate::prng::Rng::seeded(seed);
+            Mat::from_fn(n, 2, |_, _| rng.uniform())
+        };
+        let good = JobPayload::gw_screen(
+            cloud(1, 6),
+            vec![cloud(2, 5), cloud(3, 7)],
+            1,
+            0,
+            false,
+            0.05,
+        );
+        assert!(good.validate().is_ok(), "{:?}", good.validate());
+        assert_eq!(good.points(), 6);
+        assert_eq!(good.target_points(), 7);
+        assert!(!good.is_structured());
+        assert_eq!(good.epsilon(), 0.05);
+        // top_k out of range.
+        let bad_k =
+            JobPayload::gw_screen(cloud(1, 6), vec![cloud(2, 5)], 2, 0, false, 0.05);
+        assert!(bad_k.validate().is_err());
+        // No candidates.
+        let empty = JobPayload::gw_screen(cloud(1, 6), vec![], 1, 0, false, 0.05);
+        assert!(empty.validate().is_err());
+        // Dimension mismatch.
+        let mut rng = crate::prng::Rng::seeded(9);
+        let cand3 = Mat::from_fn(5, 3, |_, _| rng.uniform());
+        let bad_dim = JobPayload::gw_screen(cloud(1, 6), vec![cand3], 1, 0, false, 0.05);
+        assert!(bad_dim.validate().is_err());
+        // Non-finite coordinates.
+        let mut nan = cloud(4, 5);
+        nan[(0, 0)] = f64::NAN;
+        let bad_entries =
+            JobPayload::gw_screen(cloud(1, 6), vec![nan], 1, 0, false, 0.05);
+        assert!(bad_entries.validate().is_err());
+    }
+
+    #[test]
+    fn screen_fingerprint_tracks_every_cloud_and_the_split() {
+        let a = Mat::from_fn(4, 2, |i, j| (i + 2 * j) as f64 * 0.5);
+        let b = a.map(|x| x + 1e-12);
+        let fp = screen_fingerprint;
+        assert_eq!(fp(&a, &[b.clone()]), fp(&a.clone(), &[b.clone()]));
+        assert_ne!(fp(&a, &[a.clone()]), fp(&b, &[a.clone()]), "query folds");
+        assert_ne!(fp(&a, &[a.clone()]), fp(&a, &[b.clone()]), "candidates fold");
+        // Candidate count participates: [a, b] vs [a] must differ even
+        // though the folded prefix agrees.
+        assert_ne!(fp(&a, &[a.clone(), b.clone()]), fp(&a, &[a.clone()]));
+        // The constructor stamps the same hash.
+        match JobPayload::gw_screen(a.clone(), vec![b.clone()], 1, 0, false, 0.05) {
+            JobPayload::GwScreen { fingerprint, .. } => {
+                assert_eq!(fingerprint, fp(&a, &[b]))
             }
             _ => unreachable!(),
         }

@@ -51,6 +51,13 @@ pub struct ServiceMetrics {
     batch_splits: AtomicU64,
     /// Jobs served on the f32 presolve + f64 refinement tier.
     f32_served: AtomicU64,
+    /// Candidates scored by the sliced screening tier (one screen job
+    /// contributes its whole candidate set).
+    screened: AtomicU64,
+    /// Screened candidates escalated to exact entropic solves (the
+    /// top-k survivors). `escalated / screened` is the tier's
+    /// work-avoidance ratio.
+    escalated: AtomicU64,
     /// Live warm-cache occupancy across all workers, in capacity
     /// units (an f64-tier workspace charges 2 units, an f32-tier one
     /// 1 — its resident hot state is roughly half the bytes), so the
@@ -149,6 +156,16 @@ impl ServiceMetrics {
         self.f32_served.fetch_add(jobs, Ordering::Relaxed);
     }
 
+    /// Record `candidates` scored by a sliced screening pass.
+    pub fn on_screened(&self, candidates: u64) {
+        self.screened.fetch_add(candidates, Ordering::Relaxed);
+    }
+
+    /// Record `hits` screened candidates escalated to exact solves.
+    pub fn on_escalated(&self, hits: u64) {
+        self.escalated.fetch_add(hits, Ordering::Relaxed);
+    }
+
     /// A warm workspace entered some worker's cache (`units` capacity
     /// units: 2 for f64-tier, 1 for f32-tier).
     pub fn add_warm_units(&self, units: u64) {
@@ -219,6 +236,8 @@ impl ServiceMetrics {
             quarantines: self.quarantines.load(Ordering::Relaxed),
             batch_splits: self.batch_splits.load(Ordering::Relaxed),
             f32_served: self.f32_served.load(Ordering::Relaxed),
+            screened: self.screened.load(Ordering::Relaxed),
+            escalated: self.escalated.load(Ordering::Relaxed),
             warm_units: self.warm_units.load(Ordering::Relaxed),
             lost_results: self.lost_results.load(Ordering::Relaxed),
             shard_depths: Vec::new(),
@@ -283,6 +302,10 @@ pub struct MetricsSnapshot {
     pub batch_splits: u64,
     /// Jobs served on the f32 presolve + f64 refinement tier.
     pub f32_served: u64,
+    /// Candidates scored by the sliced screening tier.
+    pub screened: u64,
+    /// Screened candidates escalated to exact entropic solves.
+    pub escalated: u64,
     /// Live warm-cache occupancy across all workers in capacity units
     /// (f64-tier workspace = 2, f32-tier = 1): the f32 tier's halved
     /// resident state shows up here as extra effective capacity.
@@ -358,6 +381,11 @@ impl std::fmt::Display for MetricsSnapshot {
             f,
             "precision: f32-served={} warm-units={}",
             self.f32_served, self.warm_units
+        )?;
+        writeln!(
+            f,
+            "screening: screened={} escalated={}",
+            self.screened, self.escalated
         )?;
         write!(
             f,
@@ -457,6 +485,19 @@ mod tests {
         let text = s.to_string();
         assert!(text.contains("f32-served=3"), "{text}");
         assert!(text.contains("warm-units=1"), "{text}");
+    }
+
+    #[test]
+    fn screening_counters_round_trip() {
+        let m = ServiceMetrics::new();
+        m.on_screened(64);
+        m.on_screened(64);
+        m.on_escalated(4);
+        let s = m.snapshot();
+        assert_eq!((s.screened, s.escalated), (128, 4));
+        let text = s.to_string();
+        assert!(text.contains("screened=128"), "{text}");
+        assert!(text.contains("escalated=4"), "{text}");
     }
 
     #[test]

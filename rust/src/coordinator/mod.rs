@@ -31,8 +31,8 @@ pub use batcher::{group_by_variant, group_for_execution, VariantKey};
 #[cfg(feature = "fault-injection")]
 pub use fault::FaultScript;
 pub use job::{
-    dense_fingerprint, mixed_fingerprint, BackendChoice, JobId, JobOptions, JobPayload, JobRequest,
-    JobResult,
+    dense_fingerprint, mixed_fingerprint, screen_fingerprint, BackendChoice, JobId, JobOptions,
+    JobPayload, JobRequest, JobResult, ScreenHit, ScreenOutcome,
 };
 pub use metrics::{MetricsSnapshot, ServiceMetrics};
 pub use queue::BoundedQueue;

@@ -40,6 +40,15 @@ fn native_auto(payload: &JobPayload) -> BackendChoice {
     let (m, n) = match payload {
         JobPayload::GwDense { dx, dy, .. } => (dx.rows(), dy.rows()),
         JobPayload::GwMixed { dx, grid, .. } => (dx.rows(), grid.len()),
+        // Screening sizes by the exact escalation pairs it may run:
+        // query vs the largest candidate (dense squared-Euclidean
+        // geometries, so unstructured size-based selection applies).
+        JobPayload::GwScreen {
+            query, candidates, ..
+        } => (
+            query.rows(),
+            candidates.iter().map(|c| c.rows()).max().unwrap_or(0),
+        ),
         other => (other.points(), other.points()),
     };
     BackendChoice::native(auto_kind_for_sizes(payload.is_structured(), m, n))
@@ -88,10 +97,11 @@ impl Router {
                         .find(ArtifactKind::Gw2dSolve, *n)
                         .filter(|s| s.k == *k && close(s.epsilon, *epsilon)),
                     // No compiled artifact families exist for dense,
-                    // mixed or 3D geometries (yet).
+                    // mixed, 3D or screening jobs (yet).
                     JobPayload::Gw3d { .. }
                     | JobPayload::GwDense { .. }
-                    | JobPayload::GwMixed { .. } => None,
+                    | JobPayload::GwMixed { .. }
+                    | JobPayload::GwScreen { .. } => None,
                 };
                 match hit {
                     Some(spec) => BackendChoice::Pjrt(spec.name.clone()),

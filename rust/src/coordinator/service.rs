@@ -27,16 +27,18 @@
 //! numeric failures, and regime mispredictions per job id.
 
 use super::batcher::{group_for_execution, variant_key};
-use super::job::{BackendChoice, JobId, JobOptions, JobPayload, JobRequest, JobResult};
+use super::job::{
+    BackendChoice, JobId, JobOptions, JobPayload, JobRequest, JobResult, ScreenHit, ScreenOutcome,
+};
 use super::metrics::{MetricsSnapshot, ServiceMetrics};
 use super::queue::BoundedQueue;
 use super::router::{Router, RoutingPolicy};
 use super::shard::{shard_for, ShardedQueue, PIN_SHED_FACTOR};
 use crate::error::{Error, Result};
-use crate::gw::backend::cost_model::auto_coupling_for_sizes;
+use crate::gw::backend::cost_model::{auto_coupling_for_sizes, screen_slices, SCREEN_SLICES_DEFAULT};
 use crate::gw::{
     BatchJob, CouplingRank, EntropicGw, Geometry, GradientKind, GwBatchWorkspace, GwConfig,
-    LowRankOptions, LrGwWorkspace, Precision,
+    LowRankOptions, LrGwWorkspace, Precision, SlicedConfig, SlicedWorkspace,
 };
 use crate::linalg::Mat;
 use crate::runtime::{ArtifactRegistry, Executor};
@@ -376,7 +378,13 @@ impl Coordinator {
         // either level) resolves against the job's shape here. FGW
         // payloads always solve full-rank — the factored coupling is a
         // pure-GW path.
-        options.coupling = Some(if matches!(payload, JobPayload::Fgw1d { .. }) {
+        // Screen jobs also pin full-rank: their escalated exact solves
+        // run one query-vs-candidate pair at a time through full-rank
+        // batch workspaces, and the screen itself holds no coupling.
+        options.coupling = Some(if matches!(
+            payload,
+            JobPayload::Fgw1d { .. } | JobPayload::GwScreen { .. }
+        ) {
             CouplingRank::Full
         } else {
             options
@@ -552,22 +560,29 @@ struct WsKey {
 /// bytes), and factored-coupling entries 1 — an `O((M+N)·r)`
 /// [`LrGwWorkspace`] never holds an `M×N` buffer, so even at its
 /// maximum rank it is far below a full-rank workspace of the same
-/// shape.
+/// shape. Screening entries likewise charge 1: a [`SlicedWorkspace`]
+/// is `O(S·(P + Σ n_c))` — never M×N.
 fn ws_units(key: &WsKey) -> u64 {
-    if matches!(key.coupling, CouplingRank::LowRank(_)) || key.precision == Precision::F32Refine {
+    if key.family == "screen"
+        || matches!(key.coupling, CouplingRank::LowRank(_))
+        || key.precision == Precision::F32Refine
+    {
         1
     } else {
         2
     }
 }
 
-/// One warm cache slot: the full-rank lockstep batch workspace, or
-/// the factored-coupling workspace together with the solver it was
-/// built from (the solver carries the bound geometry for identity
-/// checks and the config the workspace solves under).
+/// One warm cache slot: the full-rank lockstep batch workspace, the
+/// factored-coupling workspace together with the solver it was built
+/// from (the solver carries the bound geometry for identity checks
+/// and the config the workspace solves under), or the sliced
+/// screening workspace (content-agnostic: it holds directions and
+/// projection buffers, so any same-shape screen job can reuse it).
 enum WarmEntry {
     Full(GwBatchWorkspace),
     LowRank(EntropicGw, LrGwWorkspace),
+    Screen(SlicedWorkspace),
 }
 
 /// Per-worker LRU of warm workspaces (front = most recent).
@@ -646,7 +661,7 @@ impl WarmCache {
                     ws.ensure_capacity(batch);
                     return Ok((ws, true));
                 }
-                WarmEntry::LowRank(..) => unreachable!("position matched a full-rank entry"),
+                _ => unreachable!("position matched a full-rank entry"),
             }
         }
         // Same variant, same Y side, different dense X support: swap
@@ -675,7 +690,7 @@ impl WarmCache {
             let mut entry = self.entries.remove(pos);
             let swapped = match &mut entry.1 {
                 WarmEntry::Full(ws) => ws.swap_dense_x(dx).is_ok(),
-                WarmEntry::LowRank(..) => unreachable!("rebind matched a full-rank entry"),
+                _ => unreachable!("rebind matched a full-rank entry"),
             };
             if swapped {
                 self.entries.insert(0, entry);
@@ -684,7 +699,7 @@ impl WarmCache {
                         ws.ensure_capacity(batch);
                         return Ok((ws, true));
                     }
-                    WarmEntry::LowRank(..) => unreachable!("just re-inserted a full entry"),
+                    _ => unreachable!("just re-inserted a full entry"),
                 }
             }
             metrics.sub_warm_units(ws_units(&entry.0));
@@ -701,7 +716,7 @@ impl WarmCache {
         }
         match &mut self.entries[0].1 {
             WarmEntry::Full(ws) => Ok((ws, false)),
-            WarmEntry::LowRank(..) => unreachable!("just inserted a full entry"),
+            _ => unreachable!("just inserted a full entry"),
         }
     }
 
@@ -729,7 +744,7 @@ impl WarmCache {
             self.entries.insert(0, entry);
             match &mut self.entries[0].1 {
                 WarmEntry::LowRank(solver, ws) => return Ok((solver, ws, true)),
-                WarmEntry::Full(_) => unreachable!("position matched a low-rank entry"),
+                _ => unreachable!("position matched a low-rank entry"),
             }
         }
         let solver = build_solver(payload, cfg);
@@ -743,7 +758,48 @@ impl WarmCache {
         }
         match &mut self.entries[0].1 {
             WarmEntry::LowRank(solver, ws) => Ok((solver, ws, false)),
-            WarmEntry::Full(_) => unreachable!("just inserted a low-rank entry"),
+            _ => unreachable!("just inserted a low-rank entry"),
+        }
+    }
+
+    /// [`WarmCache::get_or_build`] for the screening path: fetch (or
+    /// cold-build) the persistent [`SlicedWorkspace`] for `key`. The
+    /// workspace is content-agnostic — it caches directions and
+    /// projection buffers keyed by shape, so no geometry check is
+    /// needed; a repeat screen of the same envelope allocates nothing.
+    /// Returns `(workspace, was_warm)`.
+    fn get_or_build_screen(
+        &mut self,
+        key: &WsKey,
+        metrics: &ServiceMetrics,
+    ) -> (&mut SlicedWorkspace, bool) {
+        let pos = self
+            .entries
+            .iter()
+            .position(|(k, e)| k == key && matches!(e, WarmEntry::Screen(_)));
+        if let Some(pos) = pos {
+            let entry = self.entries.remove(pos);
+            self.entries.insert(0, entry);
+            match &mut self.entries[0].1 {
+                WarmEntry::Screen(ws) => return (ws, true),
+                _ => unreachable!("position matched a screen entry"),
+            }
+        }
+        self.entries.insert(
+            0,
+            (
+                key.clone(),
+                WarmEntry::Screen(SlicedWorkspace::with_default_seed()),
+            ),
+        );
+        metrics.add_warm_units(ws_units(key));
+        while self.units() > WARM_CACHE_UNITS && self.entries.len() > 1 {
+            let (evicted, _) = self.entries.pop().expect("len > 1");
+            metrics.sub_warm_units(ws_units(&evicted));
+        }
+        match &mut self.entries[0].1 {
+            WarmEntry::Screen(ws) => (ws, false),
+            _ => unreachable!("just inserted a screen entry"),
         }
     }
 }
@@ -836,6 +892,14 @@ fn payload_dims(p: &JobPayload) -> (usize, usize) {
         | JobPayload::GwMixed { u, v, .. } => (u.len(), v.len()),
         JobPayload::Gw2d { n, .. } => (n * n, n * n),
         JobPayload::Gw3d { n, .. } => (n * n * n, n * n * n),
+        // The escalated exact solves pair the query with one candidate
+        // at a time — the largest candidate bounds the target side.
+        JobPayload::GwScreen {
+            query, candidates, ..
+        } => (
+            query.rows(),
+            candidates.iter().map(Mat::rows).max().unwrap_or(0),
+        ),
     }
 }
 
@@ -973,6 +1037,7 @@ fn pjrt_worker_loop(q: BoundedQueue<Envelope>, ctx: WorkerCtx, registry: Artifac
                         backend: req.backend.clone(),
                         queue_time: req.submitted_at.elapsed(),
                         solve_time: Duration::ZERO,
+                        screen: None,
                     }
                 }
             }
@@ -1026,6 +1091,17 @@ fn ws_key(
             v.len(),
             grid.grid_exponent().unwrap_or(0),
         ),
+        // A screen workspace is shaped by (query points, candidate
+        // envelope); the candidate count rides in `k` so differently
+        // sized screens never share buffers sized for each other.
+        JobPayload::GwScreen {
+            query, candidates, ..
+        } => (
+            "screen",
+            query.rows(),
+            candidates.iter().map(Mat::rows).max().unwrap_or(0),
+            candidates.len() as u32,
+        ),
     };
     WsKey {
         family,
@@ -1071,6 +1147,12 @@ fn build_solver_with_epsilon(
         JobPayload::GwMixed { dx, grid, .. } => {
             EntropicGw::new(Geometry::Dense(dx.clone()), grid.clone(), gcfg)
         }
+        // Screen jobs never reach the solver-build path: the fused
+        // branch and the solo path both route them through
+        // `run_screen`, whose escalation builds per-candidate solvers.
+        JobPayload::GwScreen { .. } => {
+            unreachable!("screen jobs solve through the sliced path")
+        }
     };
     if cfg.lowrank_tol > 0.0 {
         solver.with_lowrank_options(LowRankOptions {
@@ -1090,6 +1172,9 @@ fn batch_job(payload: &JobPayload) -> BatchJob<'_> {
         | JobPayload::Gw3d { u, v, .. }
         | JobPayload::GwDense { u, v, .. }
         | JobPayload::GwMixed { u, v, .. } => BatchJob::gw(u, v),
+        JobPayload::GwScreen { .. } => {
+            unreachable!("screen jobs solve through the sliced path")
+        }
         JobPayload::Fgw1d {
             u,
             v,
@@ -1130,6 +1215,37 @@ fn execute_group_fused(
     let head = &reqs[0].payload;
     let key = ws_key(head, kind, precision, coupling);
     let b = reqs.len() as u64;
+    if matches!(head, JobPayload::GwScreen { .. }) {
+        // Screening path: each job of the group runs through the
+        // worker's persistent sliced workspace (content-agnostic, so
+        // any same-shape screen reuses its buffers), then escalates
+        // its top-k hits to exact solves. No M×N work happens outside
+        // the escalated pairs.
+        let (ws, warm) = cache.get_or_build_screen(&key, &ctx.metrics);
+        if warm {
+            ctx.metrics.on_warm(b, 0);
+        } else {
+            ctx.metrics.on_warm(b - 1, 1);
+        }
+        let mut out = Vec::with_capacity(reqs.len());
+        for (req, queue_time) in reqs.iter().zip(queue_times) {
+            ctx.faults.fire(req.id)?;
+            let attempt_started = Instant::now();
+            let (objective, plan, outcome) = run_screen(req, &ctx.cfg, ws, 1.0)?;
+            ctx.metrics.on_screened(outcome.scores.len() as u64);
+            ctx.metrics.on_escalated(outcome.hits.len() as u64);
+            out.push(JobResult {
+                id: req.id,
+                objective: Ok(objective),
+                plan: Some(plan),
+                backend: req.backend.clone(),
+                queue_time,
+                solve_time: attempt_started.elapsed(),
+                screen: Some(outcome),
+            });
+        }
+        return Ok(out);
+    }
     if let CouplingRank::LowRank(rank) = coupling {
         // Factored-coupling serving path: each job of the group runs
         // through the worker's persistent O((M+N)·r) workspace — no
@@ -1156,6 +1272,7 @@ fn execute_group_fused(
                 backend: req.backend.clone(),
                 queue_time,
                 solve_time: attempt_started.elapsed(),
+                screen: None,
             });
         }
         return Ok(out);
@@ -1197,6 +1314,7 @@ fn execute_group_fused(
             backend: req.backend.clone(),
             queue_time,
             solve_time: solve_each,
+            screen: None,
         })
         .collect())
 }
@@ -1348,6 +1466,7 @@ fn execute_solo_with_recovery(
         backend: req.backend.clone(),
         queue_time,
         solve_time,
+        screen: None,
     };
     let mut ov = SolveOverrides {
         force_log: false,
@@ -1375,7 +1494,11 @@ fn execute_solo_with_recovery(
             );
         }
         match catch_unwind(AssertUnwindSafe(|| solve_solo(req, cfg, faults, &ov))) {
-            Ok(Ok((objective, plan))) => {
+            Ok(Ok((objective, plan, screen))) => {
+                if let Some(sc) = &screen {
+                    metrics.on_screened(sc.scores.len() as u64);
+                    metrics.on_escalated(sc.hits.len() as u64);
+                }
                 // A backend-rung success ran a different gradient than
                 // routed — the result (and per-backend metrics) must
                 // say which backend actually produced it.
@@ -1390,6 +1513,7 @@ fn execute_solo_with_recovery(
                     backend,
                     queue_time,
                     solve_time: started.elapsed(),
+                    screen,
                 };
             }
             Ok(Err(e)) => {
@@ -1417,15 +1541,95 @@ fn execute_solo_with_recovery(
     }
 }
 
+/// One screening pass + escalation for a [`JobPayload::GwScreen`]
+/// job: resolve the slice count (explicit > deadline-budget policy >
+/// default), screen through `ws`, escalate the top-k to exact solves,
+/// and return the best hit's `(objective, plan)` with the full
+/// [`ScreenOutcome`]. The slice count is derived from the job's
+/// *configured* deadline, not remaining wall time, so identical jobs
+/// always screen identically. `epsilon_scale` is the degradation
+/// ladder's anneal knob — it reaches only the escalated exact solves
+/// (the screen itself has no ε).
+fn run_screen(
+    req: &JobRequest,
+    cfg: &CoordinatorConfig,
+    ws: &mut SlicedWorkspace,
+    epsilon_scale: f64,
+) -> Result<(f64, Mat, ScreenOutcome)> {
+    let JobPayload::GwScreen {
+        query,
+        candidates,
+        top_k,
+        slices,
+        warm_start,
+        epsilon,
+        ..
+    } = &req.payload
+    else {
+        return Err(Error::Invalid("run_screen needs a GwScreen payload".into()));
+    };
+    let slices = if *slices > 0 {
+        *slices
+    } else if let Some(budget) = req.options.deadline {
+        let total: usize = candidates.iter().map(Mat::rows).sum();
+        screen_slices(query.rows(), total, budget)
+    } else {
+        SCREEN_SLICES_DEFAULT
+    };
+    let scfg = SlicedConfig {
+        slices,
+        threads: cfg.solver_threads,
+        ..SlicedConfig::default()
+    };
+    ws.screen_into(query, candidates, &scfg)?;
+    let gcfg = gw_cfg(cfg, epsilon * epsilon_scale, Precision::F64);
+    let hits = ws.escalate(
+        query,
+        candidates,
+        *top_k,
+        &gcfg,
+        req.backend.gradient_kind(),
+        *warm_start,
+        req.deadline_instant(),
+    )?;
+    let outcome = ScreenOutcome {
+        scores: ws.scores().to_vec(),
+        hits: hits
+            .iter()
+            .map(|h| ScreenHit {
+                candidate: h.candidate,
+                sliced_score: h.sliced_score,
+                objective: h.solution.objective,
+            })
+            .collect(),
+        slices,
+    };
+    let best = hits
+        .into_iter()
+        .next()
+        .ok_or_else(|| Error::Runtime("escalation returned no hits".into()))?;
+    Ok((best.solution.objective, best.solution.plan, outcome))
+}
+
 /// One solo attempt at a job on a fresh solver, honoring the ladder's
-/// overrides, the job's deadline, and any scripted faults.
+/// overrides, the job's deadline, and any scripted faults. The third
+/// element of a success is the screening report (`Some` only for
+/// screen jobs).
 fn solve_solo(
     req: &JobRequest,
     cfg: &CoordinatorConfig,
     faults: &Faults,
     ov: &SolveOverrides,
-) -> Result<(f64, Mat)> {
+) -> Result<(f64, Mat, Option<ScreenOutcome>)> {
     faults.fire(req.id)?;
+    // Screen jobs recover on the sliced path with a fresh workspace
+    // (the ladder's ε-anneal rung reaches their escalated solves; the
+    // regime/backend rungs don't apply).
+    if matches!(req.payload, JobPayload::GwScreen { .. }) {
+        let mut ws = SlicedWorkspace::with_default_seed();
+        let (objective, plan, outcome) = run_screen(req, cfg, &mut ws, ov.epsilon_scale)?;
+        return Ok((objective, plan, Some(outcome)));
+    }
     let kind = ov
         .kind_override
         .unwrap_or_else(|| req.backend.gradient_kind());
@@ -1444,7 +1648,7 @@ fn solve_solo(
         lr_ws.set_deadline(req.deadline_instant());
         let job = batch_job(&req.payload);
         let sol = solver.solve_lowrank_into(job.u, job.v, &mut lr_ws)?;
-        return Ok((sol.objective, sol.plan()));
+        return Ok((sol.objective, sol.plan(), None));
     }
     let solver = build_solver_with_epsilon(&req.payload, cfg, epsilon);
     let mut ws = solver.batch_workspace(kind, 1)?;
@@ -1465,7 +1669,7 @@ fn solve_solo(
     let sol = sols
         .pop()
         .ok_or_else(|| Error::Runtime("batch solve returned no solution".into()))?;
-    Ok((sol.objective, sol.plan))
+    Ok((sol.objective, sol.plan, None))
 }
 
 /// Terminal result for a job the service will not solve (deadline
@@ -1478,6 +1682,7 @@ fn rejected_result(req: &JobRequest, why: &str) -> JobResult {
         backend: req.backend.clone(),
         queue_time: req.submitted_at.elapsed(),
         solve_time: Duration::ZERO,
+        screen: None,
     }
 }
 
@@ -1512,11 +1717,14 @@ fn execute_pjrt(
         JobPayload::Fgw1d {
             u, v, feature_cost, ..
         } => executor.run_fgw_solve(spec, u, v, feature_cost)?,
-        // The router never assigns dense, mixed or 3D jobs to PJRT
-        // (no compiled artifact families exist for these shapes).
-        JobPayload::Gw3d { .. } | JobPayload::GwDense { .. } | JobPayload::GwMixed { .. } => {
+        // The router never assigns dense, mixed, 3D or screen jobs to
+        // PJRT (no compiled artifact families exist for these shapes).
+        JobPayload::Gw3d { .. }
+        | JobPayload::GwDense { .. }
+        | JobPayload::GwMixed { .. }
+        | JobPayload::GwScreen { .. } => {
             return Err(Error::Runtime(
-                "no PJRT artifact family for dense/mixed/3D-geometry jobs".into(),
+                "no PJRT artifact family for dense/mixed/3D/screen jobs".into(),
             ))
         }
     };
@@ -1527,6 +1735,7 @@ fn execute_pjrt(
         backend: req.backend.clone(),
         queue_time,
         solve_time: started.elapsed(),
+        screen: None,
     })
 }
 
@@ -2077,5 +2286,126 @@ mod tests {
         dense.options.max_retries = 0;
         let mut rung = 0u32;
         assert!(!climb(&mut rung, &mut ov, &dense, &metrics));
+    }
+
+    fn cloud(rng: &mut Rng, n: usize, dim: usize) -> Mat {
+        Mat::from_fn(n, dim, |_, _| rng.uniform_in(-1.0, 1.0))
+    }
+
+    fn screen_payload(seed: u64, k: usize, top_k: usize, slices: usize) -> JobPayload {
+        let mut rng = Rng::seeded(seed);
+        let query = cloud(&mut rng, 10, 2);
+        let candidates: Vec<Mat> = (0..k).map(|_| cloud(&mut rng, 8, 2)).collect();
+        JobPayload::gw_screen(query, candidates, top_k, slices, false, 0.05)
+    }
+
+    #[test]
+    fn screen_jobs_round_trip_and_match_direct_solves() {
+        let cfg = test_cfg();
+        let coord = Coordinator::start(cfg.clone()).unwrap();
+        let payload = screen_payload(11, 5, 2, 16);
+        let res = coord.submit_and_wait(payload.clone()).unwrap();
+        assert!(res.objective.is_ok(), "{:?}", res.objective);
+        assert!(res.plan.is_some());
+        // Small unstructured escalation pairs route naive.
+        assert_eq!(res.backend, BackendChoice::NativeNaive);
+        let outcome = res.screen.as_ref().expect("screen jobs report an outcome");
+        assert_eq!(outcome.scores.len(), 5);
+        assert_eq!(outcome.hits.len(), 2);
+        assert_eq!(outcome.slices, 16);
+        assert!(
+            outcome.hits[0].objective <= outcome.hits[1].objective,
+            "hits sorted best-first: {outcome:?}"
+        );
+        assert_eq!(
+            res.objective.as_ref().unwrap().to_bits(),
+            outcome.hits[0].objective.to_bits(),
+            "result objective is the best escalated hit"
+        );
+        let snap = coord.metrics();
+        assert_eq!((snap.screened, snap.escalated), (5, 2));
+        coord.shutdown();
+
+        // The service path is bit-for-bit the library path: same seed,
+        // same slice count, same solver configuration, same backend.
+        let JobPayload::GwScreen {
+            query, candidates, ..
+        } = &payload
+        else {
+            unreachable!()
+        };
+        let mut ws = SlicedWorkspace::with_default_seed();
+        let scfg = SlicedConfig {
+            slices: 16,
+            threads: cfg.solver_threads,
+            ..SlicedConfig::default()
+        };
+        ws.screen_into(query, candidates, &scfg).unwrap();
+        for (service, direct) in outcome.scores.iter().zip(ws.scores()) {
+            assert_eq!(service.to_bits(), direct.to_bits());
+        }
+        let hits = ws
+            .escalate(
+                query,
+                candidates,
+                2,
+                &gw_cfg(&cfg, 0.05, Precision::F64),
+                GradientKind::Naive,
+                false,
+                None,
+            )
+            .unwrap();
+        for (service, direct) in outcome.hits.iter().zip(&hits) {
+            assert_eq!(service.candidate, direct.candidate);
+            assert_eq!(
+                service.objective.to_bits(),
+                direct.solution.objective.to_bits()
+            );
+        }
+        assert_eq!(
+            res.plan.as_ref().unwrap().as_slice(),
+            hits[0].solution.plan.as_slice(),
+            "plan of the best hit matches the direct solve bit-for-bit"
+        );
+    }
+
+    #[test]
+    fn screen_warm_cache_reuses_workspace() {
+        let mut cfg = test_cfg();
+        cfg.native_workers = 1;
+        let coord = Coordinator::start(cfg).unwrap();
+        let a = coord.submit_and_wait(screen_payload(21, 4, 1, 12)).unwrap();
+        let b = coord.submit_and_wait(screen_payload(22, 4, 1, 12)).unwrap();
+        assert!(a.objective.is_ok() && b.objective.is_ok());
+        let snap = coord.metrics();
+        assert_eq!(snap.warm_misses, 1, "one build, then warm: {snap}");
+        assert_eq!(snap.warm_hits, 1, "{snap}");
+        assert_eq!(snap.warm_units, 1, "screen entries charge one unit: {snap}");
+        assert_eq!((snap.screened, snap.escalated), (8, 2));
+        coord.shutdown();
+    }
+
+    #[test]
+    fn screen_policy_picks_slices_from_deadline_budget() {
+        // No explicit slice count + a generous deadline: the policy
+        // chooses, and the outcome reports what it chose.
+        let coord = Coordinator::start(test_cfg()).unwrap();
+        let opts = JobOptions {
+            deadline: Some(Duration::from_secs(30)),
+            ..JobOptions::default()
+        };
+        let (_, rx) = coord
+            .submit_with_options(screen_payload(31, 3, 1, 0), opts)
+            .unwrap();
+        let res = rx.recv().unwrap();
+        assert!(res.objective.is_ok(), "{:?}", res.objective);
+        let outcome = res.screen.unwrap();
+        let expected = crate::gw::backend::cost_model::screen_slices(
+            10,
+            3 * 8,
+            Duration::from_secs(30),
+        );
+        assert_eq!(outcome.slices, expected);
+        coord.shutdown();
     }
 }

@@ -115,6 +115,57 @@ pub fn lowrank_coupling_bytes(m: usize, n: usize, r: usize) -> usize {
     8 * COUPLING_THIN_BUFFERS * (m + n) * r
 }
 
+// ---------------------------------------------------------------------------
+// ScreenPolicy — slice budgeting for the sliced-GW screening tier
+// ---------------------------------------------------------------------------
+
+/// Slice-count floor for the screening tier: below 8 directions the
+/// sliced score's Monte-Carlo spread swamps the candidate gaps the
+/// screen exists to separate.
+pub const SCREEN_SLICES_MIN: usize = 8;
+
+/// Slice-count ceiling: past ~128 directions the score's spread
+/// shrinks as `1/√S` into territory the exact escalation solves
+/// resolve anyway — more slices buy rank stability the top-k refine
+/// no longer needs.
+pub const SCREEN_SLICES_MAX: usize = 128;
+
+/// Default slice count when no time budget is in play (CLI one-shots,
+/// tests, jobs without deadlines).
+pub const SCREEN_SLICES_DEFAULT: usize = 32;
+
+/// Modeled cost, in nanoseconds, of streaming one projected point
+/// through a slice (project + its share of the `O(n log n)` sort +
+/// the two orientation moment passes).
+///
+/// **Calibration status:** like [`DENSE_LOWRANK_CROSSOVER`], an
+/// estimate pending the first measured `screen_results` run of
+/// `cargo bench --bench hotpath` (divide the measured per-screen wall
+/// time by `slices · (P + Σ n_c)` and update; see EXPERIMENTS.md
+/// §Sliced screening).
+pub const SCREEN_NS_PER_POINT: u64 = 40;
+
+/// ScreenPolicy: the slice count a screening pass can afford inside
+/// `budget` wall-clock time, for a query of `query_points` against
+/// candidates totalling `candidate_points`. The per-slice cost model
+/// is `(P + Σ n_c) · SCREEN_NS_PER_POINT`; the result is clamped to
+/// `[SCREEN_SLICES_MIN, SCREEN_SLICES_MAX]`, so even a degenerate
+/// budget screens (the tier must rank *something* for escalation to
+/// act on) and a lavish one doesn't waste exactness the escalation
+/// provides for free. Deterministic in its inputs — the coordinator
+/// feeds the job's *configured* deadline (not remaining wall time),
+/// so equal jobs always screen with equal slice counts.
+pub fn screen_slices(
+    query_points: usize,
+    candidate_points: usize,
+    budget: std::time::Duration,
+) -> usize {
+    let per_slice_ns =
+        (query_points + candidate_points).max(1) as u64 * SCREEN_NS_PER_POINT.max(1);
+    let budget_ns = u64::try_from(budget.as_nanos()).unwrap_or(u64::MAX);
+    ((budget_ns / per_slice_ns) as usize).clamp(SCREEN_SLICES_MIN, SCREEN_SLICES_MAX)
+}
+
 /// FMAs of the dense two-product apply `D_X·Γ·D_Y` (`tmp = D_X·Γ`
 /// then `tmp·D_Y`) on an `M×N` plan.
 pub fn dense_pair_cost(m: f64, n: f64) -> f64 {
@@ -241,6 +292,26 @@ mod tests {
         assert!(lowrank_coupling_bytes(50_000, 50_000, r) <= COUPLING_RANK_BUDGET_BYTES);
         // Tiny problems clamp to min(M, N).
         assert_eq!(coupling_rank_for_sizes(3, 1_000_000), 3);
+    }
+
+    #[test]
+    fn screen_slices_scale_with_budget_and_clamp() {
+        use std::time::Duration;
+        let (p, total) = (256, 64 * 256);
+        // Monotone in the budget.
+        let tight = screen_slices(p, total, Duration::from_micros(50));
+        let roomy = screen_slices(p, total, Duration::from_millis(50));
+        assert!(tight <= roomy);
+        // Clamped at both extremes.
+        assert_eq!(screen_slices(p, total, Duration::ZERO), SCREEN_SLICES_MIN);
+        assert_eq!(
+            screen_slices(p, total, Duration::from_secs(3600)),
+            SCREEN_SLICES_MAX
+        );
+        // The default sits inside the admissible band.
+        assert!((SCREEN_SLICES_MIN..=SCREEN_SLICES_MAX).contains(&SCREEN_SLICES_DEFAULT));
+        // Degenerate sizes don't divide by zero.
+        assert_eq!(screen_slices(0, 0, Duration::ZERO), SCREEN_SLICES_MIN);
     }
 
     #[test]

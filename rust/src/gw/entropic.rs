@@ -604,6 +604,9 @@ pub struct GwBatchWorkspace {
     /// One-shot wall-clock deadline for the next solve (see
     /// [`GwBatchWorkspace::set_deadline`]).
     deadline: Option<Instant>,
+    /// One-shot mirror-descent seed for the next solve's **first**
+    /// batch member (see [`GwBatchWorkspace::set_warm_plan`]).
+    warm_plan: Option<Mat>,
     /// Scripted member index whose first inner solve of the next
     /// batch fails with `Error::Numeric` (fault-injection hook).
     #[cfg(feature = "fault-injection")]
@@ -679,6 +682,28 @@ impl GwBatchWorkspace {
         self.deadline = deadline;
     }
 
+    /// Seed the **next** solve's first batch member with an explicit
+    /// initial plan Γ⁰ instead of the cold `u vᵀ` start. Consumed by
+    /// that solve (warm cached workspaces never leak it forward) —
+    /// the plan analogue of the f32 tier's `set_warm_duals` dual
+    /// seeding. The sliced screening tier seeds escalated exact
+    /// solves from the best slice's monotone coupling here; the first
+    /// linearization then starts at a transport consistent with the
+    /// screen instead of the independence coupling. Only member 0 is
+    /// seeded (the escalation path solves solo); the plan must match
+    /// the workspace shape.
+    pub fn set_warm_plan(&mut self, plan: Mat) -> Result<()> {
+        if plan.shape() != self.shape() {
+            return Err(Error::shape(
+                "GwBatchWorkspace::set_warm_plan",
+                format!("{:?}", self.shape()),
+                format!("{:?}", plan.shape()),
+            ));
+        }
+        self.warm_plan = Some(plan);
+        Ok(())
+    }
+
     /// Script the **next** solve so batch member `member`'s first
     /// inner Sinkhorn fails with `Error::Numeric` — the deterministic
     /// mid-batch fault the blast-radius containment tests inject.
@@ -718,6 +743,7 @@ impl GwBatchWorkspace {
         // never leaks a previous solve's override into the next batch.
         let regime_override = self.regime_override.take();
         let deadline = self.deadline.take();
+        let warm_plan = self.warm_plan.take();
         #[cfg(feature = "fault-injection")]
         let injected_fault = self.injected_fault.take();
         let GwBatchWorkspace {
@@ -760,7 +786,14 @@ impl GwBatchWorkspace {
                 sks[j].set_regime(r);
             }
             op.constant_term(job.u, job.v, job.feature_cost, job.theta, &mut constants[j])?;
-            crate::linalg::outer_into(job.u, job.v, &mut gammas[j])?;
+            match (j, &warm_plan) {
+                // Warm Γ⁰ (shape-checked at `set_warm_plan`): member 0
+                // starts from the seeded transport instead of u vᵀ.
+                (0, Some(seed)) => gammas[0]
+                    .as_mut_slice()
+                    .copy_from_slice(seed.as_slice()),
+                _ => crate::linalg::outer_into(job.u, job.v, &mut gammas[j])?,
+            }
         }
 
         let mut inner_counts = vec![0usize; batch];
@@ -856,6 +889,7 @@ impl EntropicGw {
             f32_lane: None,
             regime_override: None,
             deadline: None,
+            warm_plan: None,
             #[cfg(feature = "fault-injection")]
             injected_fault: None,
         };
@@ -1165,6 +1199,36 @@ mod tests {
         assert!(matches!(err, Error::Rejected(_)), "{err}");
         let after = solver.solve_batch_into(&[job], &mut ws).unwrap();
         assert_eq!(after[0].plan.as_slice(), reference[0].plan.as_slice());
+    }
+
+    #[test]
+    fn warm_plan_seed_is_one_shot_and_shape_checked() {
+        let n = 16;
+        let (u, v) = random_dists(n, n, 44);
+        let solver = EntropicGw::grid_1d(n, n, 1, cfg_small());
+        let job = BatchJob::gw(&u, &v);
+        let mut ws = solver.batch_workspace(GradientKind::Fgc, 1).unwrap();
+        let reference = solver.solve_batch_into(&[job], &mut ws).unwrap();
+        // Seeding with the cold start u vᵀ reproduces the cold solve
+        // exactly: the seed replaces Γ⁰, nothing else.
+        ws.set_warm_plan(crate::linalg::outer(&u, &v)).unwrap();
+        let seeded = solver.solve_batch_into(&[job], &mut ws).unwrap();
+        assert_eq!(seeded[0].plan.as_slice(), reference[0].plan.as_slice());
+        assert_eq!(seeded[0].objective, reference[0].objective);
+        // A genuinely different seed still converges to a valid plan.
+        let mut perturbed = crate::linalg::outer(&u, &v);
+        let m0 = perturbed[(0, 0)];
+        perturbed[(0, 0)] = m0 * 0.5;
+        perturbed[(0, 1)] += m0 * 0.5;
+        ws.set_warm_plan(perturbed).unwrap();
+        let warm = solver.solve_batch_into(&[job], &mut ws).unwrap();
+        assert!(warm[0].plan.all_finite());
+        assert!(warm[0].objective.is_finite());
+        // The seed was consumed: the next solve is cold again.
+        let cold = solver.solve_batch_into(&[job], &mut ws).unwrap();
+        assert_eq!(cold[0].plan.as_slice(), reference[0].plan.as_slice());
+        // Shape mismatches are rejected at set time.
+        assert!(ws.set_warm_plan(Mat::zeros(n + 1, n)).is_err());
     }
 
     #[test]

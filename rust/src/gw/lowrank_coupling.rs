@@ -61,7 +61,7 @@ use crate::fgc::AxisFactor;
 use crate::grid::Binomial;
 use crate::gw::backend::{aca_factor, axis_factor, LowRankOptions};
 use crate::linalg::{dot, matmul_into, matvec_into, matvec_t_into, scale_in_place, Mat};
-use crate::parallel::Parallelism;
+use crate::parallel::{for_row_blocks, min_rows_for, Parallelism};
 use crate::prng::Rng;
 use std::time::{Duration, Instant};
 
@@ -234,11 +234,73 @@ enum LinearTerm {
         cx: Vec<f64>,
         cy: Vec<f64>,
     },
+    /// Factor-only construction with a seeded column-sample estimate
+    /// of the constant term, materialized one cost column at a time
+    /// from the thin factors (documented on
+    /// [`LrGwWorkspace::from_cost_factors_sampled`]).
+    Sampled {
+        seed: u64,
+        samples: usize,
+        /// Column-index pool for the without-replacement draw
+        /// (`max(M, N)` slots, re-initialized per side).
+        idx: Vec<usize>,
+        /// One materialized cost column (`max(M, N)` entries).
+        col: Vec<f64>,
+        /// One thin-factor column (`max(r_X, r_Y)` entries).
+        fcol: Vec<f64>,
+    },
     /// Factor-only construction: `D⊙D` is not recoverable from thin
     /// factors of `D` in linear time, so the reported objective omits
     /// the constant term (documented on
     /// [`LrGwWorkspace::from_cost_factors`]).
     Omitted,
+}
+
+/// Estimate `⟨(D⊙D)·w, w⟩` for one thin-factored side `D = a·bt` by
+/// simple random sampling of columns without replacement (partial
+/// Fisher-Yates over the index pool): the estimator
+/// `(M/s)·Σ_{j∈S} t_j` with `t_j = w_j·Σ_i w_i·D[i,j]²` is unbiased,
+/// its standard error shrinks as `O(σ_t·M·√((1−s/M)/s))` — the usual
+/// `O(1/√s)` sampling rate with the finite-population correction —
+/// and it is *exact* (every column visited, scale 1) once `s ≥ M`.
+/// Each sampled column costs `O(M·r)`, so the whole estimate is
+/// `O(s·M·r)` — never `O(M²)`. Serial by construction: identical at
+/// every thread count.
+#[allow(clippy::too_many_arguments)]
+fn sampled_sq_marginal(
+    a: &Mat,
+    bt: &Mat,
+    w: &[f64],
+    samples: usize,
+    rng: &mut Rng,
+    idx: &mut [usize],
+    col: &mut [f64],
+    fcol: &mut [f64],
+) -> f64 {
+    let (m, r) = a.shape();
+    let s = samples.min(m).max(1);
+    let idx = &mut idx[..m];
+    for (i, slot) in idx.iter_mut().enumerate() {
+        *slot = i;
+    }
+    for t in 0..s {
+        let j = t + rng.below((m - t) as u64) as usize;
+        idx.swap(t, j);
+    }
+    let col = &mut col[..m];
+    let fcol = &mut fcol[..r];
+    let mut acc = 0.0;
+    for &j in idx.iter().take(s) {
+        for (k, f) in fcol.iter_mut().enumerate() {
+            *f = bt.row(k)[j];
+        }
+        for (i, c) in col.iter_mut().enumerate() {
+            *c = dot(a.row(i), fcol);
+        }
+        let inner: f64 = w.iter().zip(col.iter()).map(|(wi, di)| wi * di * di).sum();
+        acc += w[j] * inner;
+    }
+    acc * (m as f64 / s as f64)
 }
 
 impl LinearTerm {
@@ -253,7 +315,7 @@ impl LinearTerm {
         }
     }
 
-    fn eval(&mut self, u: &[f64], v: &[f64]) -> Result<f64> {
+    fn eval(&mut self, side_x: &SideOp, side_y: &SideOp, u: &[f64], v: &[f64]) -> Result<f64> {
         match self {
             LinearTerm::Geometries {
                 gx,
@@ -266,6 +328,29 @@ impl LinearTerm {
                 gx.sq_apply_into(u, cx, scratch_x)?;
                 gy.sq_apply_into(v, cy, scratch_y)?;
                 Ok(dot(cx, u) + dot(cy, v))
+            }
+            LinearTerm::Sampled {
+                seed,
+                samples,
+                idx,
+                col,
+                fcol,
+            } => {
+                let (
+                    SideOp::LowRank { a: ax, bt: bxt },
+                    SideOp::LowRank { a: ay, bt: byt },
+                ) = (side_x, side_y)
+                else {
+                    return Err(Error::Invalid(
+                        "sampled linear term needs thin-factored sides".into(),
+                    ));
+                };
+                // Re-seeded per eval: the estimate is a pure function
+                // of (factors, weights, seed, samples).
+                let mut rng = Rng::seeded(*seed);
+                let tx = sampled_sq_marginal(ax, bxt, u, *samples, &mut rng, idx, col, fcol);
+                let ty = sampled_sq_marginal(ay, byt, v, *samples, &mut rng, idx, col, fcol);
+                Ok(tx + ty)
             }
             LinearTerm::Omitted => Ok(0.0),
         }
@@ -280,6 +365,7 @@ impl LinearTerm {
                 };
                 dense(gx) + dense(gy) + cx.len() + cy.len()
             }
+            LinearTerm::Sampled { idx, col, fcol, .. } => idx.len() + col.len() + fcol.len(),
             LinearTerm::Omitted => 0,
         }
     }
@@ -334,9 +420,13 @@ impl DykstraState {
 /// `{Q ∈ Π(p1,·), R ∈ Π(p2,·), shared inner marginal g}` — the
 /// LR-Dykstra scheme of SPC21 Algorithm 2 (the recursion follows the
 /// POT reference implementation). Writes the projected triple into
-/// `(q_out, r_out, g_out)` and returns the iterations spent. All
-/// matvecs are serial, so the result is identical at every thread
-/// count.
+/// `(q_out, r_out, g_out)` and returns the iterations spent. The
+/// `(M+N)`-row loops — the outer-marginal scalings and the final
+/// factor materialization — split into row blocks on `par`
+/// (size-gated by [`min_rows_for`]); each block computes exactly what
+/// the serial path computes for its rows and the blocks are disjoint,
+/// so the result is bit-for-bit identical at every thread count. The
+/// r-length recursions and the convergence-error sums stay serial.
 #[allow(clippy::too_many_arguments)]
 fn lr_dykstra(
     eps1: &Mat,
@@ -351,6 +441,7 @@ fn lr_dykstra(
     r_out: &mut Mat,
     g_out: &mut [f64],
     dyk: &mut DykstraState,
+    par: Parallelism,
 ) -> Result<usize> {
     let (m, rank) = eps1.shape();
     let n = eps2.rows();
@@ -379,17 +470,22 @@ fn lr_dykstra(
     let check_every = check_every.max(1);
     let max_iters = max_iters.max(1);
     let mut iters = 0usize;
+    let min_rows = min_rows_for(rank);
     loop {
         iters += 1;
-        // Outer-marginal scalings: u_b = p_b / (eps_b · v_b).
-        matvec_into(eps1, v1, tmp_m)?;
-        for i in 0..m {
-            u1[i] = p1[i] / tmp_m[i].max(TINY);
-        }
-        matvec_into(eps2, v2, tmp_n)?;
-        for j in 0..n {
-            u2[j] = p2[j] / tmp_n[j].max(TINY);
-        }
+        // Outer-marginal scalings: u_b = p_b / (eps_b · v_b). The
+        // matvec row and the divide are fused per row, so the row
+        // blocks are independent and the split is exact.
+        for_row_blocks(par, m, 1, min_rows, u1, |_, rows, blk| {
+            for (slot, i) in blk.iter_mut().zip(rows) {
+                *slot = p1[i] / dot(eps1.row(i), v1).max(TINY);
+            }
+        });
+        for_row_blocks(par, n, 1, min_rows, u2, |_, rows, blk| {
+            for (slot, j) in blk.iter_mut().zip(rows) {
+                *slot = p2[j] / dot(eps2.row(j), v2).max(TINY);
+            }
+        });
         // First inner-marginal correction (the g ≥ α half-space).
         for k in 0..rank {
             let t = g_[k] * q3_1[k];
@@ -435,23 +531,28 @@ fn lr_dykstra(
             }
         }
     }
-    // Materialize the thin factors: Q = diag(u1)·eps1·diag(v1).
-    for i in 0..m {
-        let erow = eps1.row(i);
-        let qrow = q_out.row_mut(i);
-        let ui = u1[i];
-        for k in 0..rank {
-            qrow[k] = ui * erow[k] * v1[k];
+    // Materialize the thin factors: Q = diag(u1)·eps1·diag(v1) —
+    // disjoint output row blocks, exact at any thread count.
+    for_row_blocks(par, m, rank, min_rows, q_out.as_mut_slice(), |_, rows, blk| {
+        for (local, i) in rows.enumerate() {
+            let erow = eps1.row(i);
+            let qrow = &mut blk[local * rank..(local + 1) * rank];
+            let ui = u1[i];
+            for k in 0..rank {
+                qrow[k] = ui * erow[k] * v1[k];
+            }
         }
-    }
-    for j in 0..n {
-        let erow = eps2.row(j);
-        let rrow = r_out.row_mut(j);
-        let uj = u2[j];
-        for k in 0..rank {
-            rrow[k] = uj * erow[k] * v2[k];
+    });
+    for_row_blocks(par, n, rank, min_rows, r_out.as_mut_slice(), |_, rows, blk| {
+        for (local, j) in rows.enumerate() {
+            let erow = eps2.row(j);
+            let rrow = &mut blk[local * rank..(local + 1) * rank];
+            let uj = u2[j];
+            for k in 0..rank {
+                rrow[k] = uj * erow[k] * v2[k];
+            }
         }
-    }
+    });
     for k in 0..rank {
         g_out[k] = g_[k].max(G_FLOOR);
     }
@@ -590,6 +691,60 @@ impl LrGwWorkspace {
         rank: usize,
         par: Parallelism,
     ) -> Result<LrGwWorkspace> {
+        let (side_x, side_y, m, n) = Self::cost_factor_sides(ax, bxt, ay, byt)?;
+        Self::from_parts(side_x, side_y, LinearTerm::Omitted, m, n, rank, par)
+    }
+
+    /// [`Self::from_cost_factors`] that *estimates* the constant
+    /// marginal term `⟨(D⊙D)·w, w⟩` instead of omitting it, so the
+    /// reported objective is absolute (comparable across problems,
+    /// not just across couplings of the same problem). The estimate
+    /// draws `samples` cost columns per side by seeded simple random
+    /// sampling without replacement and materializes each from the
+    /// thin factors in `O(M·r)` — `O(samples·(M+N)·r)` total, never an
+    /// M×M product. The estimator is unbiased with standard error
+    /// `O(σ·√((1−s/M)/s))` (the `O(1/√s)` Monte-Carlo rate with the
+    /// finite-population correction), becomes *exact* when
+    /// `samples ≥ max(M, N)`, and is a pure function of
+    /// `(factors, weights, seed, samples)` — deterministic at any
+    /// thread count.
+    #[allow(clippy::too_many_arguments)]
+    pub fn from_cost_factors_sampled(
+        ax: Mat,
+        bxt: Mat,
+        ay: Mat,
+        byt: Mat,
+        rank: usize,
+        samples: usize,
+        seed: u64,
+        par: Parallelism,
+    ) -> Result<LrGwWorkspace> {
+        if samples == 0 {
+            return Err(Error::Invalid(
+                "from_cost_factors_sampled: samples must be ≥ 1".into(),
+            ));
+        }
+        let rx = ax.cols();
+        let ry = ay.cols();
+        let (side_x, side_y, m, n) = Self::cost_factor_sides(ax, bxt, ay, byt)?;
+        let linear = LinearTerm::Sampled {
+            seed,
+            samples,
+            idx: vec![0; m.max(n)],
+            col: vec![0.0; m.max(n)],
+            fcol: vec![0.0; rx.max(ry)],
+        };
+        Self::from_parts(side_x, side_y, linear, m, n, rank, par)
+    }
+
+    /// Shared validation for the factor-constructed workspaces:
+    /// `D_X ≈ ax·bxt` must be M×M and `D_Y ≈ ay·byt` N×N.
+    fn cost_factor_sides(
+        ax: Mat,
+        bxt: Mat,
+        ay: Mat,
+        byt: Mat,
+    ) -> Result<(SideOp, SideOp, usize, usize)> {
         let m = ax.rows();
         let n = ay.rows();
         if ax.cols() != bxt.rows() || bxt.cols() != m {
@@ -608,7 +763,7 @@ impl LrGwWorkspace {
         }
         let side_x = SideOp::LowRank { a: ax, bt: bxt };
         let side_y = SideOp::LowRank { a: ay, bt: byt };
-        Self::from_parts(side_x, side_y, LinearTerm::Omitted, m, n, rank, par)
+        Ok((side_x, side_y, m, n))
     }
 
     fn from_parts(
@@ -745,6 +900,7 @@ impl LrGwWorkspace {
             &mut self.r,
             &mut self.g,
             &mut self.dyk,
+            self.par,
         )?;
         Ok(())
     }
@@ -767,7 +923,7 @@ impl LrGwWorkspace {
         let tol = cfg.sinkhorn_tolerance.max(0.0);
         let max_iters = cfg.sinkhorn_max_iters.max(1);
         let check_every = cfg.sinkhorn_check_every.max(1);
-        let linear = self.linear.eval(u, v)?;
+        let linear = self.linear.eval(&self.side_x, &self.side_y, u, v)?;
         self.init_state(u, v, tol, max_iters)?;
         self.best_obj = f64::INFINITY;
         let LrGwWorkspace {
@@ -967,6 +1123,7 @@ impl MirrorProblem for LrStep<'_> {
             self.r,
             self.g,
             self.dyk,
+            self.par,
         )
     }
 }
@@ -1073,7 +1230,19 @@ mod tests {
         let mut g = vec![0.0; r];
         let mut dyk = DykstraState::new(m, n, r);
         lr_dykstra(
-            &eps1, &eps2, &eps3, &u, &v, 1e-12, 5000, 1, &mut q, &mut rr, &mut g, &mut dyk,
+            &eps1,
+            &eps2,
+            &eps3,
+            &u,
+            &v,
+            1e-12,
+            5000,
+            1,
+            &mut q,
+            &mut rr,
+            &mut g,
+            &mut dyk,
+            Parallelism::SERIAL,
         )
         .unwrap();
         for (i, (&want, got)) in u.iter().zip(q.row_sums()).enumerate() {
@@ -1091,6 +1260,51 @@ mod tests {
         }
         let gsum: f64 = g.iter().sum();
         assert!((gsum - 1.0).abs() < 1e-8, "g sums to {gsum}");
+    }
+
+    #[test]
+    fn dykstra_is_bitwise_identical_across_thread_counts() {
+        // Sized past the parallel gate (min_rows_for(2) rows per
+        // block), so the row loops genuinely split at 2+ threads; a
+        // fixed iteration budget (tol 0) keeps every run on the same
+        // trajectory length.
+        let (m, n, r) = (3000, 2600, 2);
+        let mut rng = Rng::seeded(17);
+        let eps1 = Mat::from_fn(m, r, |_, _| 0.5 + rng.uniform());
+        let eps2 = Mat::from_fn(n, r, |_, _| 0.5 + rng.uniform());
+        let eps3: Vec<f64> = (0..r).map(|_| 0.5 + rng.uniform()).collect();
+        let (u, v) = (uniform(m), uniform(n));
+        let mut reference: Option<(Vec<f64>, Vec<f64>, Vec<f64>)> = None;
+        for threads in [1usize, 2, 4, 7] {
+            let mut q = Mat::zeros(m, r);
+            let mut rr = Mat::zeros(n, r);
+            let mut g = vec![0.0; r];
+            let mut dyk = DykstraState::new(m, n, r);
+            lr_dykstra(
+                &eps1,
+                &eps2,
+                &eps3,
+                &u,
+                &v,
+                0.0,
+                40,
+                10,
+                &mut q,
+                &mut rr,
+                &mut g,
+                &mut dyk,
+                Parallelism::new(threads),
+            )
+            .unwrap();
+            let got = (q.as_slice().to_vec(), rr.as_slice().to_vec(), g.clone());
+            match &reference {
+                None => reference = Some(got),
+                Some(want) => assert!(
+                    want.0 == got.0 && want.1 == got.1 && want.2 == got.2,
+                    "threads={threads} diverged from serial"
+                ),
+            }
+        }
     }
 
     #[test]
@@ -1198,6 +1412,123 @@ mod tests {
         assert!(ws.resident_bytes() < 4 * n * n * 8, "O((M+N)r) resident");
     }
 
+    /// Exact rank-3 thin factors of the 1D squared-distance matrix
+    /// `D_ij = x_i² + x_j² − 2·x_i·x_j` on `n` unit-interval points.
+    fn sq_dist_factors(n: usize) -> (Mat, Mat) {
+        let xs: Vec<f64> = (0..n).map(|i| i as f64 / (n - 1) as f64).collect();
+        let a = Mat::from_fn(n, 3, |i, k| match k {
+            0 => xs[i] * xs[i],
+            1 => 1.0,
+            _ => xs[i],
+        });
+        let bt = Mat::from_fn(3, n, |k, j| match k {
+            0 => 1.0,
+            1 => xs[j] * xs[j],
+            _ => -2.0 * xs[j],
+        });
+        (a, bt)
+    }
+
+    /// `⟨(D⊙D)·w, w⟩` computed dense — the ground truth the sampled
+    /// estimator targets.
+    fn dense_sq_marginal(d: &Mat, w: &[f64]) -> f64 {
+        let n = d.rows();
+        let mut acc = 0.0;
+        for i in 0..n {
+            let row = d.row(i);
+            for j in 0..n {
+                acc += w[i] * w[j] * row[j] * row[j];
+            }
+        }
+        acc
+    }
+
+    #[test]
+    fn sampled_linear_term_is_exact_at_full_sample_count() {
+        let n = 24;
+        let (a, bt) = sq_dist_factors(n);
+        let (u, v) = (uniform(n), uniform(n));
+        let mut omitted = LrGwWorkspace::from_cost_factors(
+            a.clone(),
+            bt.clone(),
+            a.clone(),
+            bt.clone(),
+            4,
+            Parallelism::SERIAL,
+        )
+        .unwrap();
+        // samples ≥ n visits every column: the estimate is exact.
+        let mut sampled = LrGwWorkspace::from_cost_factors_sampled(
+            a.clone(),
+            bt.clone(),
+            a.clone(),
+            bt.clone(),
+            4,
+            n,
+            9,
+            Parallelism::SERIAL,
+        )
+        .unwrap();
+        let quad = omitted.solve(&u, &v, &cfg_small()).unwrap().objective;
+        let full = sampled.solve(&u, &v, &cfg_small()).unwrap().objective;
+        let d = matmul(&a, &bt).unwrap();
+        let linear = dense_sq_marginal(&d, &u) + dense_sq_marginal(&d, &v);
+        // The constant shift never enters the dynamics, so the two
+        // solves track the same iterates and differ by exactly it.
+        assert!(
+            (full - (quad + linear)).abs() < 1e-9 * (1.0 + linear.abs()),
+            "{full} vs {quad} + {linear}"
+        );
+    }
+
+    #[test]
+    fn subsampled_linear_term_lands_within_sampling_error() {
+        let n = 64;
+        let (a, bt) = sq_dist_factors(n);
+        let (u, v) = (uniform(n), uniform(n));
+        let solve_obj = |ws: &mut LrGwWorkspace| ws.solve(&u, &v, &cfg_small()).unwrap().objective;
+        let quad = solve_obj(
+            &mut LrGwWorkspace::from_cost_factors(
+                a.clone(),
+                bt.clone(),
+                a.clone(),
+                bt.clone(),
+                4,
+                Parallelism::SERIAL,
+            )
+            .unwrap(),
+        );
+        let sampled = |samples: usize, seed: u64| {
+            solve_obj(
+                &mut LrGwWorkspace::from_cost_factors_sampled(
+                    a.clone(),
+                    bt.clone(),
+                    a.clone(),
+                    bt.clone(),
+                    4,
+                    samples,
+                    seed,
+                    Parallelism::SERIAL,
+                )
+                .unwrap(),
+            )
+        };
+        let d = matmul(&a, &bt).unwrap();
+        let linear = dense_sq_marginal(&d, &u) + dense_sq_marginal(&d, &v);
+        let estimate = sampled(16, 9) - quad;
+        assert!(
+            (estimate - linear).abs() < 0.5 * linear.abs(),
+            "16-column estimate {estimate} too far from {linear}"
+        );
+        // Pure function of (factors, weights, seed, samples).
+        assert_eq!(sampled(16, 9).to_bits(), sampled(16, 9).to_bits());
+        assert_ne!(
+            sampled(16, 9).to_bits(),
+            sampled(16, 10).to_bits(),
+            "different seeds draw different columns"
+        );
+    }
+
     #[test]
     fn shape_and_rank_validation() {
         let geom = Geometry::grid_1d_unit(6, 1);
@@ -1227,6 +1558,17 @@ mod tests {
             Parallelism::SERIAL,
         );
         assert!(bad.is_err());
+        let zero_samples = LrGwWorkspace::from_cost_factors_sampled(
+            Mat::zeros(5, 2),
+            Mat::zeros(2, 5),
+            Mat::zeros(5, 2),
+            Mat::zeros(2, 5),
+            2,
+            0,
+            1,
+            Parallelism::SERIAL,
+        );
+        assert!(zero_samples.is_err());
     }
 
     #[test]

@@ -19,6 +19,9 @@
 //! * [`objective`] — GW/FGW energy evaluation in `O(N²)`.
 //! * [`precision`] — the solve-precision policy ([`Precision`]) and
 //!   the f32 presolve lane behind the f32+refine serving tier.
+//! * [`sliced`] — sliced-GW screening: O(N log N) 1-vs-K candidate
+//!   scoring over random projections with exact-solve escalation on
+//!   the top hits (the retrieval tier).
 //! * [`ugw`] — unbalanced GW (Remark 2.3).
 //! * [`coot`] — co-optimal transport (conclusion §5).
 //! * [`barycenter`] — fixed-support GW barycenters (conclusion §5),
@@ -34,6 +37,7 @@ pub mod gradient;
 pub mod lowrank_coupling;
 pub mod objective;
 pub mod precision;
+pub mod sliced;
 pub mod ugw;
 
 pub use backend::{GradientBackend, LowRankBackend, LowRankOptions};
@@ -48,4 +52,8 @@ pub use gradient::{GradientKind, PairOperator};
 pub use lowrank_coupling::{LrGwSolution, LrGwWorkspace};
 pub use objective::{fgw_objective, gw_objective};
 pub use precision::Precision;
+pub use sliced::{
+    pairwise_sq_dists, sliced_screen, uniform_weights, EscalatedHit, SlicedConfig, SlicedScores,
+    SlicedWorkspace, SLICED_SEED,
+};
 pub use ugw::{EntropicUgw, UgwConfig, UgwSolution, UgwWorkspace};

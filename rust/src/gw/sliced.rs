@@ -1,0 +1,919 @@
+//! Sliced-GW screening: O(N log N) 1-vs-K candidate scoring
+//! (Vayer et al., *Sliced Gromov-Wasserstein*, 1905.10124).
+//!
+//! The serving shape is retrieval: one query point cloud against K
+//! candidate clouds, where only the best few deserve the exact
+//! entropic solver. A random direction θ projects every cloud to 1D;
+//! on the line, the monotone (north-west corner) coupling between the
+//! sorted projections is the natural GW surrogate transport, and its
+//! square-loss GW cost has a **closed form in nine one-pass moments**
+//! (derivation below) — no DP table, no M×N matrix, no Sinkhorn. The
+//! sliced score of a candidate is the mean over S shared directions of
+//! the better of its two orientations (GW is invariant under
+//! reflection of either line, so each direction scores the candidate
+//! sorted ascending *and* descending and keeps the min).
+//!
+//! **Why not the `fgc/fgc1d.rs` scans?** The paper's DP recurrences
+//! need *uniform grid* supports — the binomial carry updates assume
+//! equispaced points. Projections of arbitrary clouds are not
+//! equispaced, so the slice kernel instead exploits that the coupling
+//! itself is monotone with ≤ P+n−1 nonzeros: for nonzero entries
+//! `t = (w_t, a_t, b_t)` (mass, query projection, candidate
+//! projection) and `p_t = a_t² − b_t²`,
+//!
+//! ```text
+//! Σ_{s,t} w_s w_t ((a_s−a_t)² − (b_s−b_t)²)²
+//!   = 2·S2 + 2·S1² + 4·(Saa² − 2·Sab² + Sbb²) − 8·(Spa·Sa − Spb·Sb)
+//! ```
+//!
+//! with `S1 = Σ w·p`, `S2 = Σ w·p²`, `Sa = Σ w·a`, `Sb = Σ w·b`,
+//! `Saa = Σ w·a²`, `Sbb = Σ w·b²`, `Sab = Σ w·a·b`, `Spa = Σ w·p·a`,
+//! `Spb = Σ w·p·b` (expand `(a_s−a_t)² − (b_s−b_t)² = p_s + p_t −
+//! 2a_s a_t + 2b_s b_t` and square; the identity is pinned against a
+//! brute-force pair-sum in the tests). One O(P+n) pass per
+//! (direction, candidate, orientation); the whole screen is
+//! `O(S·(P log P + Σ_c n_c log n_c))`.
+//!
+//! The batched evaluation follows the stacked-pass idiom of
+//! `fgc/separable.rs::apply_batch`: per direction, the query and all K
+//! candidates project into **one contiguous row** of a persistent
+//! `S × (P + Σ n_c)` buffer, each segment is sorted once, and all K
+//! scores for that direction come out of one pass over the row.
+//! Directions are rows of [`crate::parallel::for_row_blocks`] splits,
+//! so every thread count produces bit-identical scores: each
+//! direction's projections, sorts and moment passes are serial within
+//! their row, and the final per-candidate reduction folds directions
+//! in ascending order on the calling thread.
+//!
+//! Escalation ([`SlicedWorkspace::escalate`]) runs the exact entropic
+//! solver on the top-k hits only, over dense squared-Euclidean
+//! geometries built from the point clouds, and (optionally) seeds the
+//! mirror descent from the best slice's monotone plan
+//! ([`GwBatchWorkspace::set_warm_plan`] — the plan analogue of the f32
+//! tier's `set_warm_duals` dual seeding). Warm-started solves take a
+//! different, usually shorter trajectory; the default is cold so
+//! escalation results are bit-for-bit the direct library solves.
+
+use super::entropic::{BatchJob, EntropicGw, GwConfig, GwSolution};
+use super::geometry::Geometry;
+use super::gradient::GradientKind;
+use crate::error::{Error, Result};
+use crate::linalg::{dot, Mat};
+use crate::parallel::{for_row_blocks, min_rows_for, Parallelism};
+use crate::prng::Rng;
+use std::time::Instant;
+
+/// Default projection-sampler seed: screens are reproducible across
+/// processes unless the caller picks a seed per corpus.
+pub const SLICED_SEED: u64 = 0x511c_ed15;
+
+/// Knobs for one screening pass.
+#[derive(Clone, Copy, Debug)]
+pub struct SlicedConfig {
+    /// Number of random directions S. More slices tighten the score's
+    /// Monte-Carlo spread at linear cost; `ScreenPolicy`
+    /// ([`crate::gw::backend::cost_model::screen_slices`]) picks this
+    /// from a time budget in the serving path.
+    pub slices: usize,
+    /// Direction-sampler seed (the directions are the *only* random
+    /// input; everything downstream is deterministic).
+    pub seed: u64,
+    /// Thread budget (`1` = exact serial path, `0` = all cores).
+    /// Scores are bit-identical at every setting.
+    pub threads: usize,
+}
+
+impl Default for SlicedConfig {
+    fn default() -> Self {
+        SlicedConfig {
+            slices: super::backend::cost_model::SCREEN_SLICES_DEFAULT,
+            seed: SLICED_SEED,
+            threads: 1,
+        }
+    }
+}
+
+/// Scores from one screening pass (the owned form of what
+/// [`SlicedWorkspace`] retains; see [`sliced_screen`]).
+#[derive(Clone, Debug)]
+pub struct SlicedScores {
+    /// Per-candidate sliced-GW² score: mean over directions of the
+    /// orientation-min 1D cost. Lower = more similar to the query.
+    pub scores: Vec<f64>,
+    /// Per-candidate best slice `(direction index, flipped)` — the
+    /// direction with the lowest single-slice cost, and whether the
+    /// candidate was reflected there (warm-start provenance).
+    pub best: Vec<(usize, bool)>,
+}
+
+/// One escalated hit: the exact solve of a top-k candidate.
+#[derive(Clone, Debug)]
+pub struct EscalatedHit {
+    /// Candidate index into the screened set.
+    pub candidate: usize,
+    /// The candidate's sliced score (the screening rank key).
+    pub sliced_score: f64,
+    /// Exact entropic GW solution over the dense squared-Euclidean
+    /// geometries of the two clouds (uniform marginals).
+    pub solution: GwSolution,
+}
+
+/// Persistent buffers for K-way sliced screening. All state is
+/// shape-adaptive and reused across queries: after the first screen of
+/// a given `(P, Σ n_c, K, S)` envelope, subsequent screens of the same
+/// or smaller envelope perform **zero heap allocation** (pinned by
+/// `tests/sliced_screen.rs`), and no buffer is ever M×N — the resident
+/// set is `O(S·(P + Σ n_c))`.
+pub struct SlicedWorkspace {
+    seed: u64,
+    /// Direction-cache identity: regenerating is only needed when
+    /// `(slices, dim, seed)` changes.
+    dir_slices: usize,
+    dir_dim: usize,
+    /// `dir_slices × dir_dim` unit directions, row-major.
+    dirs: Vec<f64>,
+    /// `slices × row_len` stacked sorted projections; per row:
+    /// `[query | cand_0 | … | cand_{K-1}]`.
+    proj: Vec<f64>,
+    /// `slices × K` per-(direction, candidate) orientation-min costs.
+    slice_scores: Vec<f64>,
+    /// Segment offsets into a projection row: query occupies
+    /// `0..offsets[0]`, candidate `c` occupies
+    /// `offsets[c]..offsets[c+1]` (`K+1` entries).
+    offsets: Vec<usize>,
+    /// Last screen's per-candidate mean scores (`K`).
+    out_scores: Vec<f64>,
+    /// Last screen's per-candidate best direction index (`K`).
+    out_best_dir: Vec<usize>,
+    /// Last screen's per-candidate best-direction reflection (`K`).
+    out_best_flip: Vec<bool>,
+    /// Geometry of the last screen, for `escalate` guards.
+    last_slices: usize,
+    last_row_len: usize,
+}
+
+impl SlicedWorkspace {
+    /// Empty workspace; buffers grow on first use.
+    pub fn new(seed: u64) -> Self {
+        SlicedWorkspace {
+            seed,
+            dir_slices: 0,
+            dir_dim: 0,
+            dirs: Vec::new(),
+            proj: Vec::new(),
+            slice_scores: Vec::new(),
+            offsets: Vec::new(),
+            out_scores: Vec::new(),
+            out_best_dir: Vec::new(),
+            out_best_flip: Vec::new(),
+            last_slices: 0,
+            last_row_len: 0,
+        }
+    }
+
+    /// Workspace with the repo-wide default seed.
+    pub fn with_default_seed() -> Self {
+        Self::new(SLICED_SEED)
+    }
+
+    /// The direction-sampler seed.
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// Bytes resident in the persistent buffers (capacity, not
+    /// length — what the warm cache actually holds onto).
+    pub fn resident_bytes(&self) -> usize {
+        self.dirs.capacity() * 8
+            + self.proj.capacity() * 8
+            + self.slice_scores.capacity() * 8
+            + self.offsets.capacity() * std::mem::size_of::<usize>()
+            + self.out_scores.capacity() * 8
+            + self.out_best_dir.capacity() * std::mem::size_of::<usize>()
+            + self.out_best_flip.capacity()
+    }
+
+    /// Per-candidate scores of the last screen (empty before any).
+    pub fn scores(&self) -> &[f64] {
+        &self.out_scores
+    }
+
+    /// Best slice `(direction index, flipped)` of candidate `c` from
+    /// the last screen.
+    pub fn best_slice(&self, c: usize) -> (usize, bool) {
+        (self.out_best_dir[c], self.out_best_flip[c])
+    }
+
+    /// Candidate indices of the last screen ranked best-first
+    /// (ascending score, index as the deterministic tiebreak).
+    /// Allocates the returned index vector; the screening buffers are
+    /// untouched.
+    pub fn ranked(&self) -> Vec<usize> {
+        let mut idx: Vec<usize> = (0..self.out_scores.len()).collect();
+        idx.sort_unstable_by(|&i, &j| {
+            self.out_scores[i]
+                .total_cmp(&self.out_scores[j])
+                .then(i.cmp(&j))
+        });
+        idx
+    }
+
+    /// Grow (never shrink) every buffer for the given screen shape and
+    /// regenerate the direction set if its identity changed. Serial
+    /// and deterministic: directions depend only on `(slices, dim,
+    /// seed)`, never on the thread budget.
+    fn ensure(&mut self, p: usize, candidates: &[Mat], dim: usize, slices: usize) {
+        if self.dir_slices < slices || self.dir_dim != dim {
+            let n_dirs = slices.max(self.dir_slices);
+            self.dirs.resize(n_dirs * dim, 0.0);
+            let mut rng = Rng::seeded(self.seed);
+            for s in 0..n_dirs {
+                let row = &mut self.dirs[s * dim..(s + 1) * dim];
+                let mut norm2 = 0.0;
+                for x in row.iter_mut() {
+                    *x = rng.normal();
+                    norm2 += *x * *x;
+                }
+                if norm2 > 0.0 {
+                    let inv = 1.0 / norm2.sqrt();
+                    for x in row.iter_mut() {
+                        *x *= inv;
+                    }
+                } else {
+                    // Probability-zero fallback: a degenerate draw
+                    // becomes the first axis direction.
+                    row[0] = 1.0;
+                }
+            }
+            self.dir_slices = n_dirs;
+            self.dir_dim = dim;
+        }
+        let k = candidates.len();
+        self.offsets.clear();
+        self.offsets.reserve(k + 1);
+        let mut off = p;
+        self.offsets.push(off);
+        for c in candidates {
+            off += c.rows();
+            self.offsets.push(off);
+        }
+        let row_len = off;
+        if self.proj.len() < slices * row_len {
+            self.proj.resize(slices * row_len, 0.0);
+        }
+        if self.slice_scores.len() < slices * k {
+            self.slice_scores.resize(slices * k, 0.0);
+        }
+        self.out_scores.clear();
+        self.out_scores.reserve(k);
+        self.out_best_dir.clear();
+        self.out_best_dir.reserve(k);
+        self.out_best_flip.clear();
+        self.out_best_flip.reserve(k);
+        self.last_slices = slices;
+        self.last_row_len = row_len;
+    }
+
+    /// Score all candidates against the query. Results land in the
+    /// workspace ([`SlicedWorkspace::scores`] /
+    /// [`SlicedWorkspace::best_slice`] / [`SlicedWorkspace::ranked`]);
+    /// marginals are uniform over each cloud's points. Bit-identical
+    /// at every thread budget.
+    pub fn screen_into(
+        &mut self,
+        query: &Mat,
+        candidates: &[Mat],
+        cfg: &SlicedConfig,
+    ) -> Result<()> {
+        validate_clouds(query, candidates)?;
+        if cfg.slices == 0 {
+            return Err(Error::Invalid("sliced screen: slices must be ≥ 1".into()));
+        }
+        let (p, dim) = query.shape();
+        let k = candidates.len();
+        let slices = cfg.slices;
+        let par = Parallelism::from_config(cfg.threads);
+        self.ensure(p, candidates, dim, slices);
+        let row_len = self.last_row_len;
+
+        // Pass 1 — project + sort, one contiguous row per direction:
+        // `[query | cand_0 | … | cand_{K-1}]`, each segment sorted
+        // ascending. Rows are disjoint `for_row_blocks` blocks, so
+        // any thread count writes identical bytes.
+        {
+            let dirs = &self.dirs;
+            let offsets = &self.offsets;
+            let min_rows = min_rows_for(row_len * dim.max(1));
+            for_row_blocks(
+                par,
+                slices,
+                row_len,
+                min_rows,
+                &mut self.proj[..slices * row_len],
+                |_b, rows, out| {
+                    for (local, s) in rows.clone().enumerate() {
+                        let dir = &dirs[s * dim..(s + 1) * dim];
+                        let row = &mut out[local * row_len..(local + 1) * row_len];
+                        project_sorted(query, dir, &mut row[..p]);
+                        for (c, cand) in candidates.iter().enumerate() {
+                            project_sorted(
+                                cand,
+                                dir,
+                                &mut row[offsets[c]..offsets[c + 1]],
+                            );
+                        }
+                    }
+                },
+            );
+        }
+
+        // Pass 2 — score all K candidates per direction in one stacked
+        // pass over the sorted row (orientation-min of the monotone
+        // moment cost). Again row-disjoint, hence thread-invariant.
+        {
+            let proj = &self.proj;
+            let offsets = &self.offsets;
+            let min_rows = min_rows_for(row_len.max(1));
+            for_row_blocks(
+                par,
+                slices,
+                k,
+                min_rows,
+                &mut self.slice_scores[..slices * k],
+                |_b, rows, out| {
+                    for (local, s) in rows.clone().enumerate() {
+                        let row = &proj[s * row_len..(s + 1) * row_len];
+                        let q = &row[..p];
+                        for c in 0..k {
+                            let b = &row[offsets[c]..offsets[c + 1]];
+                            let asc = monotone_slice_cost(q, b, false);
+                            let desc = monotone_slice_cost(q, b, true);
+                            out[local * k + c] = asc.min(desc);
+                        }
+                    }
+                },
+            );
+        }
+
+        // Reduction — serial, ascending direction order on the calling
+        // thread: per-candidate mean plus the argmin slice. The flip
+        // bit of the winning slice is recomputed from the (still
+        // sorted) projection row; O(P + n_c) per candidate.
+        let inv_s = 1.0 / slices as f64;
+        for c in 0..k {
+            let mut sum = 0.0;
+            let mut best_val = f64::INFINITY;
+            let mut best_dir = 0usize;
+            for s in 0..slices {
+                let v = self.slice_scores[s * k + c];
+                sum += v;
+                if v < best_val {
+                    best_val = v;
+                    best_dir = s;
+                }
+            }
+            let row = &self.proj[best_dir * row_len..(best_dir + 1) * row_len];
+            let q = &row[..p];
+            let b = &row[self.offsets[c]..self.offsets[c + 1]];
+            let asc = monotone_slice_cost(q, b, false);
+            let desc = monotone_slice_cost(q, b, true);
+            self.out_scores.push(sum * inv_s);
+            self.out_best_dir.push(best_dir);
+            self.out_best_flip.push(desc < asc);
+        }
+        Ok(())
+    }
+
+    /// Run the exact entropic solver on the `top_k` best-screened
+    /// candidates (call after [`SlicedWorkspace::screen_into`]).
+    /// Geometries are dense squared-Euclidean distance matrices of the
+    /// clouds, marginals uniform; each hit solves solo through a
+    /// one-slot batch workspace, which is bit-for-bit
+    /// [`EntropicGw::solve`] with the same `kind` and `cfg`
+    /// (`entropic.rs::batched_solve_is_bitwise_sequential`). With
+    /// `warm_start` the mirror descent of each hit starts from its
+    /// best slice's monotone plan instead of `u vᵀ` — usually fewer
+    /// effective iterations, but a *different* trajectory, so the
+    /// default (false) keeps escalation results exactly equal to
+    /// direct solves. Hits come back ranked by exact objective
+    /// (ascending, candidate index as tiebreak).
+    pub fn escalate(
+        &self,
+        query: &Mat,
+        candidates: &[Mat],
+        top_k: usize,
+        cfg: &GwConfig,
+        kind: GradientKind,
+        warm_start: bool,
+        deadline: Option<Instant>,
+    ) -> Result<Vec<EscalatedHit>> {
+        if self.out_scores.len() != candidates.len() {
+            return Err(Error::Invalid(
+                "SlicedWorkspace::escalate: screen_into must run first on the same \
+                 candidate set"
+                    .into(),
+            ));
+        }
+        if top_k == 0 || top_k > candidates.len() {
+            return Err(Error::Invalid(format!(
+                "SlicedWorkspace::escalate: top_k must be in [1, {}], got {top_k}",
+                candidates.len()
+            )));
+        }
+        let dq = pairwise_sq_dists(query);
+        let uq = uniform_weights(query.rows());
+        let mut hits = Vec::with_capacity(top_k);
+        for &c in self.ranked().iter().take(top_k) {
+            if let Some(d) = deadline {
+                if Instant::now() >= d {
+                    return Err(Error::Rejected(
+                        "sliced escalation: deadline expired".into(),
+                    ));
+                }
+            }
+            let cand = &candidates[c];
+            let dc = pairwise_sq_dists(cand);
+            let uc = uniform_weights(cand.rows());
+            let solver = EntropicGw::new(
+                Geometry::Dense(dq.clone()),
+                Geometry::Dense(dc),
+                *cfg,
+            );
+            let mut ws = solver.batch_workspace(kind, 1)?;
+            if warm_start {
+                let (dir, flip) = self.best_slice(c);
+                let dim = query.cols();
+                let theta = &self.dirs[dir * dim..(dir + 1) * dim];
+                ws.set_warm_plan(monotone_warm_plan(query, cand, theta, flip))?;
+            }
+            ws.set_deadline(deadline);
+            let mut sols = solver.solve_batch_into(&[BatchJob::gw(&uq, &uc)], &mut ws)?;
+            hits.push(EscalatedHit {
+                candidate: c,
+                sliced_score: self.out_scores[c],
+                solution: sols.pop().expect("one job in, one solution out"),
+            });
+        }
+        hits.sort_by(|x, y| {
+            x.solution
+                .objective
+                .total_cmp(&y.solution.objective)
+                .then(x.candidate.cmp(&y.candidate))
+        });
+        Ok(hits)
+    }
+}
+
+/// One-shot convenience: screen `candidates` against `query` with a
+/// fresh workspace and return the owned scores. Serving paths keep a
+/// warm [`SlicedWorkspace`] instead.
+pub fn sliced_screen(
+    query: &Mat,
+    candidates: &[Mat],
+    cfg: &SlicedConfig,
+) -> Result<SlicedScores> {
+    let mut ws = SlicedWorkspace::new(cfg.seed);
+    ws.screen_into(query, candidates, cfg)?;
+    let best = (0..candidates.len()).map(|c| ws.best_slice(c)).collect();
+    Ok(SlicedScores {
+        scores: ws.out_scores.clone(),
+        best,
+    })
+}
+
+/// Shared validation for the screening entry points: non-empty clouds
+/// in a common ambient dimension, finite coordinates.
+fn validate_clouds(query: &Mat, candidates: &[Mat]) -> Result<()> {
+    let (p, dim) = query.shape();
+    if p == 0 || dim == 0 {
+        return Err(Error::Invalid("sliced screen: query cloud is empty".into()));
+    }
+    if !query.all_finite() {
+        return Err(Error::Invalid(
+            "sliced screen: query has non-finite coordinates".into(),
+        ));
+    }
+    if candidates.is_empty() {
+        return Err(Error::Invalid("sliced screen: no candidates".into()));
+    }
+    for (c, cand) in candidates.iter().enumerate() {
+        if cand.rows() == 0 {
+            return Err(Error::Invalid(format!(
+                "sliced screen: candidate {c} is empty"
+            )));
+        }
+        if cand.cols() != dim {
+            return Err(Error::shape(
+                "sliced screen (candidate dimension)",
+                format!("{dim}"),
+                format!("{} (candidate {c})", cand.cols()),
+            ));
+        }
+        if !cand.all_finite() {
+            return Err(Error::Invalid(format!(
+                "sliced screen: candidate {c} has non-finite coordinates"
+            )));
+        }
+    }
+    Ok(())
+}
+
+/// Project a cloud onto a direction and sort ascending. Uniform
+/// marginals make atoms interchangeable, so sorting projection
+/// *values* (total order, no index tiebreak needed) is deterministic.
+fn project_sorted(cloud: &Mat, dir: &[f64], out: &mut [f64]) {
+    debug_assert_eq!(out.len(), cloud.rows());
+    for (i, o) in out.iter_mut().enumerate() {
+        *o = dot(cloud.row(i), dir);
+    }
+    out.sort_unstable_by(f64::total_cmp);
+}
+
+/// Square-loss GW cost of the monotone (NW-corner) coupling between
+/// two sorted 1D clouds with uniform marginals, via the nine-moment
+/// closed form in the module docs. `flip` scores the candidate in
+/// descending order (reflection) without materializing the reversal.
+/// O(len(a) + len(b)); exact up to roundoff (pinned against the
+/// brute-force pair sum below).
+fn monotone_slice_cost(a: &[f64], b: &[f64], flip: bool) -> f64 {
+    let (np, nn) = (a.len(), b.len());
+    let wu = 1.0 / np as f64;
+    let wv = 1.0 / nn as f64;
+    let (mut i, mut j) = (0usize, 0usize);
+    let (mut ru, mut rv) = (wu, wv);
+    let (mut s1, mut s2) = (0.0f64, 0.0f64);
+    let (mut sa, mut sb) = (0.0f64, 0.0f64);
+    let (mut saa, mut sbb, mut sab) = (0.0f64, 0.0f64, 0.0f64);
+    let (mut spa, mut spb) = (0.0f64, 0.0f64);
+    loop {
+        let av = a[i];
+        let bv = if flip { b[nn - 1 - j] } else { b[j] };
+        let w = ru.min(rv);
+        let pv = av * av - bv * bv;
+        s1 += w * pv;
+        s2 += w * pv * pv;
+        sa += w * av;
+        sb += w * bv;
+        saa += w * av * av;
+        sbb += w * bv * bv;
+        sab += w * av * bv;
+        spa += w * pv * av;
+        spb += w * pv * bv;
+        ru -= w;
+        rv -= w;
+        if ru == 0.0 {
+            i += 1;
+            if i == np {
+                break;
+            }
+            ru = wu;
+        }
+        if rv == 0.0 {
+            j += 1;
+            if j == nn {
+                break;
+            }
+            rv = wv;
+        }
+    }
+    2.0 * s2 + 2.0 * s1 * s1 + 4.0 * (saa * saa - 2.0 * sab * sab + sbb * sbb)
+        - 8.0 * (spa * sa - spb * sb)
+}
+
+/// Materialize the monotone NW-corner coupling between the projections
+/// of two clouds onto `dir` as a dense `P×n` plan over the clouds'
+/// *original* point order (uniform marginals). This is the warm-start
+/// seed for escalation; indices are recovered via an argsort with
+/// index tiebreak, so the plan is deterministic even under tied
+/// projections. Allocates — it runs once per escalated hit, never in
+/// the screening loop.
+pub fn monotone_warm_plan(query: &Mat, cand: &Mat, dir: &[f64], flip: bool) -> Mat {
+    let argsort = |cloud: &Mat, descending: bool| -> Vec<(f64, usize)> {
+        let mut v: Vec<(f64, usize)> = (0..cloud.rows())
+            .map(|i| (dot(cloud.row(i), dir), i))
+            .collect();
+        v.sort_unstable_by(|x, y| x.0.total_cmp(&y.0).then(x.1.cmp(&y.1)));
+        if descending {
+            v.reverse();
+        }
+        v
+    };
+    let qs = argsort(query, false);
+    let cs = argsort(cand, flip);
+    let (np, nn) = (qs.len(), cs.len());
+    let wu = 1.0 / np as f64;
+    let wv = 1.0 / nn as f64;
+    let mut plan = Mat::zeros(np, nn);
+    let (mut i, mut j) = (0usize, 0usize);
+    let (mut ru, mut rv) = (wu, wv);
+    loop {
+        let w = ru.min(rv);
+        plan[(qs[i].1, cs[j].1)] += w;
+        ru -= w;
+        rv -= w;
+        if ru == 0.0 {
+            i += 1;
+            if i == np {
+                break;
+            }
+            ru = wu;
+        }
+        if rv == 0.0 {
+            j += 1;
+            if j == nn {
+                break;
+            }
+            rv = wv;
+        }
+    }
+    plan
+}
+
+/// Dense squared-Euclidean distance matrix of a point cloud (rows =
+/// points) — the exact-solver geometry the sliced 1D cost is a
+/// projection of ((a−a′)² is the squared distance of the projections).
+pub fn pairwise_sq_dists(points: &Mat) -> Mat {
+    let n = points.rows();
+    Mat::from_fn(n, n, |i, j| {
+        let (ri, rj) = (points.row(i), points.row(j));
+        ri.iter()
+            .zip(rj)
+            .map(|(x, y)| (x - y) * (x - y))
+            .sum::<f64>()
+    })
+}
+
+/// Uniform distribution over `n` atoms.
+pub fn uniform_weights(n: usize) -> Vec<f64> {
+    vec![1.0 / n as f64; n]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::frobenius_diff;
+
+    fn cloud(rng: &mut Rng, n: usize, dim: usize, spread: f64) -> Mat {
+        Mat::from_fn(n, dim, |_, _| rng.uniform_in(-spread, spread))
+    }
+
+    /// Brute-force reference: materialize the NW pair list and sum
+    /// `w_s w_t ((a_s−a_t)² − (b_s−b_t)²)²` over all pair-of-pairs.
+    fn bruteforce_cost(a: &[f64], b: &[f64], flip: bool) -> f64 {
+        let (np, nn) = (a.len(), b.len());
+        let (wu, wv) = (1.0 / np as f64, 1.0 / nn as f64);
+        let mut pairs: Vec<(f64, f64, f64)> = Vec::new();
+        let (mut i, mut j) = (0, 0);
+        let (mut ru, mut rv) = (wu, wv);
+        loop {
+            let bv = if flip { b[nn - 1 - j] } else { b[j] };
+            let w = ru.min(rv);
+            pairs.push((w, a[i], bv));
+            ru -= w;
+            rv -= w;
+            if ru == 0.0 {
+                i += 1;
+                if i == np {
+                    break;
+                }
+                ru = wu;
+            }
+            if rv == 0.0 {
+                j += 1;
+                if j == nn {
+                    break;
+                }
+                rv = wv;
+            }
+        }
+        let mut total = 0.0;
+        for &(ws, as_, bs) in &pairs {
+            for &(wt, at, bt) in &pairs {
+                let f = (as_ - at) * (as_ - at) - (bs - bt) * (bs - bt);
+                total += ws * wt * f * f;
+            }
+        }
+        total
+    }
+
+    #[test]
+    fn moment_formula_matches_bruteforce() {
+        let mut rng = Rng::seeded(41);
+        for (np, nn) in [(1usize, 1usize), (5, 5), (7, 4), (3, 11), (16, 16)] {
+            let mut a: Vec<f64> = (0..np).map(|_| rng.uniform_in(-2.0, 2.0)).collect();
+            let mut b: Vec<f64> = (0..nn).map(|_| rng.uniform_in(-2.0, 2.0)).collect();
+            a.sort_unstable_by(f64::total_cmp);
+            b.sort_unstable_by(f64::total_cmp);
+            for flip in [false, true] {
+                let fast = monotone_slice_cost(&a, &b, flip);
+                let slow = bruteforce_cost(&a, &b, flip);
+                assert!(
+                    (fast - slow).abs() <= 1e-10 * (1.0 + slow.abs()),
+                    "{np}x{nn} flip={flip}: moment {fast} vs brute {slow}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn identical_clouds_score_zero() {
+        let mut rng = Rng::seeded(5);
+        let q = cloud(&mut rng, 20, 3, 1.0);
+        let scores = sliced_screen(&q, &[q.clone()], &SlicedConfig::default()).unwrap();
+        assert!(
+            scores.scores[0].abs() < 1e-12,
+            "self-score {}",
+            scores.scores[0]
+        );
+    }
+
+    #[test]
+    fn reflection_is_free_via_orientation_min() {
+        // A mirrored cloud is GW-identical to the original; the
+        // orientation-min must see that on every slice.
+        let mut rng = Rng::seeded(8);
+        let q = cloud(&mut rng, 15, 2, 1.0);
+        let mirrored = Mat::from_fn(15, 2, |i, j| if j == 0 { -q[(i, 0)] } else { q[(i, 1)] });
+        let scores = sliced_screen(&q, &[mirrored], &SlicedConfig::default()).unwrap();
+        assert!(
+            scores.scores[0].abs() < 1e-12,
+            "mirror score {}",
+            scores.scores[0]
+        );
+    }
+
+    #[test]
+    fn scores_are_thread_invariant_and_seed_deterministic() {
+        let mut rng = Rng::seeded(12);
+        let q = cloud(&mut rng, 40, 3, 1.0);
+        let cands: Vec<Mat> = (0..6).map(|_| cloud(&mut rng, 30, 3, 1.0)).collect();
+        let base = sliced_screen(
+            &q,
+            &cands,
+            &SlicedConfig {
+                slices: 24,
+                seed: 7,
+                threads: 1,
+            },
+        )
+        .unwrap();
+        for threads in [2usize, 4, 7] {
+            let other = sliced_screen(
+                &q,
+                &cands,
+                &SlicedConfig {
+                    slices: 24,
+                    seed: 7,
+                    threads,
+                },
+            )
+            .unwrap();
+            for (x, y) in base.scores.iter().zip(&other.scores) {
+                assert_eq!(x.to_bits(), y.to_bits(), "threads={threads}");
+            }
+            assert_eq!(base.best, other.best, "threads={threads}");
+        }
+        // A different seed draws different directions.
+        let reseeded = sliced_screen(
+            &q,
+            &cands,
+            &SlicedConfig {
+                slices: 24,
+                seed: 8,
+                threads: 1,
+            },
+        )
+        .unwrap();
+        assert!(base
+            .scores
+            .iter()
+            .zip(&reseeded.scores)
+            .any(|(x, y)| x.to_bits() != y.to_bits()));
+    }
+
+    #[test]
+    fn workspace_reuse_keeps_resident_set_flat() {
+        let mut rng = Rng::seeded(19);
+        let q = cloud(&mut rng, 32, 2, 1.0);
+        let cands: Vec<Mat> = (0..4).map(|_| cloud(&mut rng, 24, 2, 1.0)).collect();
+        let cfg = SlicedConfig {
+            slices: 16,
+            seed: 3,
+            threads: 1,
+        };
+        let mut ws = SlicedWorkspace::new(cfg.seed);
+        ws.screen_into(&q, &cands, &cfg).unwrap();
+        let first = ws.scores().to_vec();
+        let resident = ws.resident_bytes();
+        // No buffer is M×N: the envelope is S·(P+Σn)+S·K plus
+        // directions — far below even one dense query-candidate plan.
+        assert!(resident < 32 * (32 + 4 * 24 + 4 + 2) * 8 * 2 + 1024);
+        ws.screen_into(&q, &cands, &cfg).unwrap();
+        assert_eq!(ws.resident_bytes(), resident, "warm screen grew buffers");
+        for (x, y) in first.iter().zip(ws.scores()) {
+            assert_eq!(x.to_bits(), y.to_bits(), "warm screen drifted");
+        }
+    }
+
+    #[test]
+    fn validation_rejects_bad_inputs() {
+        let q = Mat::from_fn(4, 2, |i, j| (i + j) as f64);
+        let cand = Mat::from_fn(3, 2, |i, j| (i * j) as f64);
+        let cfg = SlicedConfig::default();
+        assert!(sliced_screen(&q, &[], &cfg).is_err());
+        let wrong_dim = Mat::zeros(3, 3);
+        assert!(sliced_screen(&q, &[wrong_dim], &cfg).is_err());
+        let mut nan = cand.clone();
+        nan[(0, 0)] = f64::NAN;
+        assert!(sliced_screen(&q, &[nan], &cfg).is_err());
+        assert!(sliced_screen(
+            &q,
+            &[cand],
+            &SlicedConfig {
+                slices: 0,
+                ..SlicedConfig::default()
+            }
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn warm_plan_has_uniform_marginals_and_monotone_support() {
+        let mut rng = Rng::seeded(23);
+        let q = cloud(&mut rng, 6, 2, 1.0);
+        let c = cloud(&mut rng, 9, 2, 1.0);
+        let dir = [1.0, 0.0];
+        for flip in [false, true] {
+            let plan = monotone_warm_plan(&q, &c, &dir, flip);
+            assert_eq!(plan.shape(), (6, 9));
+            for r in plan.row_sums() {
+                assert!((r - 1.0 / 6.0).abs() < 1e-12, "row sum {r}");
+            }
+            for s in plan.col_sums() {
+                assert!((s - 1.0 / 9.0).abs() < 1e-12, "col sum {s}");
+            }
+            // NW-corner support: ≤ P+n−1 nonzeros.
+            let nnz = plan.as_slice().iter().filter(|&&x| x > 0.0).count();
+            assert!(nnz <= 6 + 9 - 1, "nnz {nnz}");
+        }
+    }
+
+    #[test]
+    fn escalation_matches_direct_solves_and_ranks_by_objective() {
+        let mut rng = Rng::seeded(31);
+        let q = cloud(&mut rng, 10, 2, 1.0);
+        let cands: Vec<Mat> = (0..4).map(|_| cloud(&mut rng, 10, 2, 1.0)).collect();
+        let scfg = SlicedConfig {
+            slices: 16,
+            seed: 2,
+            threads: 1,
+        };
+        let mut ws = SlicedWorkspace::new(scfg.seed);
+        ws.screen_into(&q, &cands, &scfg).unwrap();
+        let gw_cfg = GwConfig {
+            epsilon: 5e-2,
+            outer_iters: 4,
+            sinkhorn_max_iters: 200,
+            ..GwConfig::default()
+        };
+        let hits = ws
+            .escalate(&q, &cands, 2, &gw_cfg, GradientKind::Naive, false, None)
+            .unwrap();
+        assert_eq!(hits.len(), 2);
+        assert!(hits[0].solution.objective <= hits[1].solution.objective);
+        for hit in &hits {
+            let direct = EntropicGw::new(
+                Geometry::Dense(pairwise_sq_dists(&q)),
+                Geometry::Dense(pairwise_sq_dists(&cands[hit.candidate])),
+                gw_cfg,
+            )
+            .solve(
+                &uniform_weights(10),
+                &uniform_weights(10),
+                GradientKind::Naive,
+            )
+            .unwrap();
+            assert_eq!(
+                hit.solution.plan.as_slice(),
+                direct.plan.as_slice(),
+                "escalated plan diverged from the direct solve"
+            );
+            assert_eq!(hit.solution.objective, direct.objective);
+        }
+        // Warm-started escalation still solves (different trajectory,
+        // same fixed point family) and stays finite.
+        let warm = ws
+            .escalate(&q, &cands, 2, &gw_cfg, GradientKind::Naive, true, None)
+            .unwrap();
+        assert_eq!(warm.len(), 2);
+        for hit in &warm {
+            assert!(hit.solution.objective.is_finite());
+            let d = frobenius_diff(
+                &hit.solution.plan,
+                &hits.iter().find(|h| h.candidate == hit.candidate).unwrap().solution.plan,
+            )
+            .unwrap();
+            assert!(d.is_finite());
+        }
+    }
+}

@@ -4,7 +4,8 @@
 //! fgc-gw solve  --n 500 [--k 1] [--eps 0.002] [--backend fgc|naive|lowrank] [--precision f64|f32|auto] [--coupling-rank full|auto|R] [--lowrank-tol T] [--seed 7] [--threads 1]
 //! fgc-gw solve2d --side 20 [--eps 0.004] …
 //! fgc-gw solve3d --side 6 [--eps 0.004] …
-//! fgc-gw serve  --jobs 32 [--family 1d|3d|mixed] [--workers 2] [--shards 0] [--threads 1] [--backend auto|fgc|naive|lowrank] [--precision f64|f32|auto] [--coupling-rank auto|full|R] [--lowrank-tol T] [--deadline-ms 0] [--max-retries 3] [--pjrt] [--config path]
+//! fgc-gw screen --n 64 --candidates 16 [--dim 3] [--top-k 4] [--slices 32] [--eps 0.05] [--backend naive|fgc|lowrank] [--warm-start] [--seed 7] [--threads 1]
+//! fgc-gw serve  --jobs 32 [--family 1d|3d|mixed|screen] [--workers 2] [--shards 0] [--threads 1] [--backend auto|fgc|naive|lowrank] [--precision f64|f32|auto] [--coupling-rank auto|full|R] [--lowrank-tol T] [--deadline-ms 0] [--max-retries 3] [--pjrt] [--config path]
 //! fgc-gw bary   --inputs 3 --n 40
 //! fgc-gw info   [--artifacts artifacts]
 //! ```
@@ -26,8 +27,14 @@
 //! (default) sizes the variant-sharded queue from the worker count;
 //! `--lowrank-tol 0` derives the ACA tolerance from each job's ε.
 //! `serve --family` selects the synthetic workload: `1d` grid pairs
-//! (default), `3d` volumetric grid pairs, or `mixed`
-//! dense-support×3D-grid payloads (the warm-rebind path).
+//! (default), `3d` volumetric grid pairs, `mixed`
+//! dense-support×3D-grid payloads (the warm-rebind path), or `screen`
+//! 1-vs-K sliced-screening jobs (the candidate-scoring tier). The
+//! `screen` command runs the same tier one-shot through the library:
+//! K random candidate clouds are scored against a query on `--slices`
+//! shared random directions in `O(N log N)` per pair, then the top
+//! `--top-k` survivors escalate to exact entropic solves
+//! (`--warm-start` seeds those from the best slice's monotone plan).
 
 use fgc_gw::cli::Args;
 use fgc_gw::config::Config;
@@ -36,8 +43,9 @@ use fgc_gw::data::random_distribution;
 use fgc_gw::gw::backend::cost_model::auto_coupling_for_sizes;
 use fgc_gw::gw::{
     gw_barycenter_1d, BarycenterConfig, CouplingRank, EntropicGw, GradientKind, GwConfig,
-    LowRankOptions, Precision, barycenter::BaryInput1d,
+    LowRankOptions, Precision, SlicedConfig, SlicedWorkspace, barycenter::BaryInput1d,
 };
+use fgc_gw::linalg::Mat;
 use fgc_gw::prng::Rng;
 use fgc_gw::runtime::ArtifactRegistry;
 use std::path::PathBuf;
@@ -56,6 +64,7 @@ fn run() -> fgc_gw::Result<()> {
         Some("solve") => cmd_solve(&args),
         Some("solve2d") => cmd_solve_2d(&args),
         Some("solve3d") => cmd_solve_3d(&args),
+        Some("screen") => cmd_screen(&args),
         Some("serve") => cmd_serve(&args),
         Some("bary") => cmd_bary(&args),
         Some("info") => cmd_info(&args),
@@ -73,7 +82,8 @@ fn print_usage() {
          \x20 solve    1D GW between random distributions (--n, --k, --eps, --backend, --precision, --coupling-rank, --lowrank-tol, --seed, --threads)\n\
          \x20 solve2d  2D GW on an n×n grid (--side, --k, --eps, --backend, --precision, --coupling-rank, --seed, --threads)\n\
          \x20 solve3d  3D GW on an n×n×n grid (--side, --k, --eps, --backend, --precision, --coupling-rank, --seed, --threads)\n\
-         \x20 serve    run the coordinator on a synthetic workload (--jobs, --family 1d|3d|mixed, --workers, --shards, --threads, --backend, --precision, --coupling-rank, --lowrank-tol, --deadline-ms, --max-retries, --pjrt)\n\
+         \x20 screen   sliced 1-vs-K candidate screening + exact escalation (--n, --candidates, --dim, --top-k, --slices, --eps, --backend, --warm-start, --seed, --threads)\n\
+         \x20 serve    run the coordinator on a synthetic workload (--jobs, --family 1d|3d|mixed|screen, --workers, --shards, --threads, --backend, --precision, --coupling-rank, --lowrank-tol, --deadline-ms, --max-retries, --pjrt)\n\
          \x20 bary     1D GW barycenter demo (--inputs, --n)\n\
          \x20 info     platform + artifact registry summary (--artifacts DIR)"
     );
@@ -254,6 +264,74 @@ fn cmd_solve_3d(args: &Args) -> fgc_gw::Result<()> {
     Ok(())
 }
 
+/// A random point cloud in `[-1, 1]^dim` (the synthetic screening
+/// geometry — escalation squared distances land in `[0, 4·dim]`, so
+/// the screen/serve ε defaults are sized for that scale).
+fn screen_cloud(rng: &mut Rng, n: usize, dim: usize) -> Mat {
+    Mat::from_fn(n, dim, |_, _| rng.uniform_in(-1.0, 1.0))
+}
+
+fn cmd_screen(args: &Args) -> fgc_gw::Result<()> {
+    let n = args.get_or("n", 64usize)?;
+    let k = args.get_or("candidates", 16usize)?;
+    let dim = args.get_or("dim", 3usize)?;
+    let top_k = args.get_or("top-k", 4usize)?.min(k);
+    let slices = args.get_or(
+        "slices",
+        fgc_gw::gw::backend::cost_model::SCREEN_SLICES_DEFAULT,
+    )?;
+    let eps = args.get_or("eps", 5e-2)?;
+    let seed = args.get_or("seed", 7u64)?;
+    let threads = args.get_or("threads", 1usize)?;
+    let warm_start = args.has_flag("warm-start");
+    // Escalation pairs are dense unstructured geometries, so the
+    // naive exact backend is the default (fgc needs a grid side).
+    let kind = match args.get("backend") {
+        Some(name) => GradientKind::from_name(name).ok_or_else(|| {
+            fgc_gw::Error::Config(format!(
+                "unknown backend `{name}` (expected naive|fgc|lowrank)"
+            ))
+        })?,
+        None => GradientKind::Naive,
+    };
+    let mut rng = Rng::seeded(seed);
+    let query = screen_cloud(&mut rng, n, dim);
+    let candidates: Vec<Mat> = (0..k).map(|_| screen_cloud(&mut rng, n, dim)).collect();
+
+    let mut ws = SlicedWorkspace::with_default_seed();
+    let scfg = SlicedConfig {
+        slices,
+        threads,
+        ..SlicedConfig::default()
+    };
+    let t0 = std::time::Instant::now();
+    ws.screen_into(&query, &candidates, &scfg)?;
+    let screen_time = t0.elapsed();
+    let gcfg = GwConfig {
+        epsilon: eps,
+        threads,
+        ..GwConfig::default()
+    };
+    let t1 = std::time::Instant::now();
+    let hits = ws.escalate(&query, &candidates, top_k, &gcfg, kind, warm_start, None)?;
+    let escalate_time = t1.elapsed();
+
+    println!(
+        "screened {k} candidates (n={n} dim={dim}) on {slices} slices in {screen_time:?}; \
+         escalated top {top_k} ({kind}, ε={eps}{}) in {escalate_time:?}",
+        if warm_start { ", warm-start" } else { "" }
+    );
+    println!("workspace resident: {} bytes", ws.resident_bytes());
+    println!("{:<10} {:>14} {:>14}", "candidate", "sliced score", "exact GW²");
+    for h in &hits {
+        println!(
+            "{:<10} {:>14.6e} {:>14.6e}",
+            h.candidate, h.sliced_score, h.solution.objective
+        );
+    }
+    Ok(())
+}
+
 fn cmd_serve(args: &Args) -> fgc_gw::Result<()> {
     let mut cfg = CoordinatorConfig::default();
     if let Some(path) = args.get("config") {
@@ -323,14 +401,16 @@ fn cmd_serve(args: &Args) -> fgc_gw::Result<()> {
 
     let jobs = args.get_or("jobs", 32usize)?;
     let n = args.get_or("n", 128usize)?;
-    let eps = args.get_or("eps", 2e-3)?;
     let seed = args.get_or("seed", 11u64)?;
     let family = args.get("family").unwrap_or("1d").to_string();
-    if !matches!(family.as_str(), "1d" | "3d" | "mixed") {
+    if !matches!(family.as_str(), "1d" | "3d" | "mixed" | "screen") {
         return Err(fgc_gw::Error::Config(format!(
-            "unknown family `{family}` (expected 1d|3d|mixed)"
+            "unknown family `{family}` (expected 1d|3d|mixed|screen)"
         )));
     }
+    // Screening escalates on [-1,1]³ clouds (squared distances up to
+    // 12), so its ε default is scaled up versus the unit-grid families.
+    let eps = args.get_or("eps", if family == "screen" { 5e-2 } else { 2e-3 })?;
 
     println!("starting coordinator: {cfg:?}");
     let coord = Coordinator::start(cfg)?;
@@ -359,6 +439,14 @@ fn cmd_serve(args: &Args) -> fgc_gw::Result<()> {
                     fgc_gw::data::random_distribution_3d(&mut rng, side),
                     eps,
                 ),
+                // 1-vs-8 screening jobs, top-2 escalation, slice count
+                // left to the policy (or the default when no deadline).
+                "screen" => {
+                    let p = n.clamp(4, 64);
+                    let query = screen_cloud(&mut rng, p, 3);
+                    let candidates = (0..8).map(|_| screen_cloud(&mut rng, p, 3)).collect();
+                    JobPayload::gw_screen(query, candidates, 2, 0, false, eps)
+                }
                 _ => JobPayload::Gw1d {
                     u: random_distribution(&mut rng, n),
                     v: random_distribution(&mut rng, n),

@@ -1,0 +1,356 @@
+//! Acceptance tests for the sliced-GW screening tier.
+//!
+//! A counting global allocator pins the warm screening hot path at
+//! zero per-query heap allocation (the workspace contract); the rest
+//! of the file checks the tier's statistical usefulness (rank
+//! correlation against exact entropic GW, top-k recall on planted
+//! near-isometries), its determinism across thread counts and seeds,
+//! degenerate shapes, and the end-to-end coordinator round trip —
+//! which must be bit-for-bit the library path.
+
+use fgc_gw::coordinator::{Coordinator, CoordinatorConfig, JobPayload};
+use fgc_gw::gw::{
+    pairwise_sq_dists, uniform_weights, EntropicGw, Geometry, GradientKind, GwConfig, Precision,
+    SlicedConfig, SlicedWorkspace,
+};
+use fgc_gw::linalg::Mat;
+use fgc_gw::prng::Rng;
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+struct CountingAlloc;
+
+static ALLOCATIONS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+fn allocations() -> u64 {
+    ALLOCATIONS.load(Ordering::Relaxed)
+}
+
+fn cloud(rng: &mut Rng, n: usize, dim: usize) -> Mat {
+    Mat::from_fn(n, dim, |_, _| rng.uniform_in(-1.0, 1.0))
+}
+
+/// Exact entropic GW² between two clouds over their dense
+/// squared-Euclidean geometries, uniform marginals.
+fn exact_gw(query: &Mat, cand: &Mat, cfg: &GwConfig) -> f64 {
+    let solver = EntropicGw::new(
+        Geometry::Dense(pairwise_sq_dists(query)),
+        Geometry::Dense(pairwise_sq_dists(cand)),
+        cfg.clone(),
+    );
+    let u = uniform_weights(query.rows());
+    let v = uniform_weights(cand.rows());
+    solver.solve(&u, &v, GradientKind::Naive).unwrap().objective
+}
+
+/// Spearman rank correlation of two score vectors (no tie handling —
+/// callers use generic-position inputs).
+fn spearman(a: &[f64], b: &[f64]) -> f64 {
+    let rank = |xs: &[f64]| -> Vec<f64> {
+        let mut idx: Vec<usize> = (0..xs.len()).collect();
+        idx.sort_by(|&i, &j| xs[i].total_cmp(&xs[j]));
+        let mut r = vec![0.0; xs.len()];
+        for (pos, &i) in idx.iter().enumerate() {
+            r[i] = pos as f64;
+        }
+        r
+    };
+    let (ra, rb) = (rank(a), rank(b));
+    let n = a.len() as f64;
+    let mean = (n - 1.0) / 2.0;
+    let (mut num, mut da, mut db) = (0.0, 0.0, 0.0);
+    for (x, y) in ra.iter().zip(&rb) {
+        num += (x - mean) * (y - mean);
+        da += (x - mean) * (x - mean);
+        db += (y - mean) * (y - mean);
+    }
+    num / (da.sqrt() * db.sqrt())
+}
+
+fn exact_cfg() -> GwConfig {
+    GwConfig {
+        epsilon: 5e-2,
+        outer_iters: 8,
+        sinkhorn_max_iters: 400,
+        sinkhorn_tolerance: 1e-9,
+        ..GwConfig::default()
+    }
+}
+
+#[test]
+fn sliced_scores_rank_correlate_with_exact_gw() {
+    // Candidates at increasing scale gap from the query: exact GW²
+    // grows with the gap, and the sliced surrogate must track that
+    // ordering (ρ well above chance).
+    let mut rng = Rng::seeded(101);
+    let query = cloud(&mut rng, 14, 2);
+    let candidates: Vec<Mat> = (0..8)
+        .map(|c| {
+            let scale = 1.0 + 0.35 * c as f64;
+            let mut m = query.clone();
+            m.map_in_place(|x| scale * x);
+            // Small noise so the family is not exactly nested.
+            Mat::from_fn(m.rows(), m.cols(), |i, j| {
+                m[(i, j)] + 0.02 * ((i * 31 + j * 7) as f64).sin()
+            })
+        })
+        .collect();
+    let mut ws = SlicedWorkspace::with_default_seed();
+    let scfg = SlicedConfig {
+        slices: 48,
+        ..SlicedConfig::default()
+    };
+    ws.screen_into(&query, &candidates, &scfg).unwrap();
+    let sliced = ws.scores().to_vec();
+    let exact: Vec<f64> = candidates
+        .iter()
+        .map(|c| exact_gw(&query, c, &exact_cfg()))
+        .collect();
+    let rho = spearman(&sliced, &exact);
+    assert!(rho >= 0.7, "Spearman ρ = {rho}\nsliced {sliced:?}\nexact {exact:?}");
+}
+
+#[test]
+fn top_k_recall_finds_planted_near_isometries() {
+    // 3 planted candidates are row permutations / reflections of the
+    // query (sliced cost ≈ 0 by construction — sorting restores the
+    // 1D profiles); 9 decoys are scaled or fresh clouds. Screening
+    // must surface the planted three in its top 3.
+    let mut rng = Rng::seeded(55);
+    let n = 12;
+    let query = cloud(&mut rng, n, 2);
+    let mut candidates: Vec<Mat> = Vec::new();
+    // Planted: reversed row order, reflected, reversed+reflected.
+    candidates.push(Mat::from_fn(n, 2, |i, j| query[(n - 1 - i, j)]));
+    candidates.push(query.map(|x| -x));
+    candidates.push(Mat::from_fn(n, 2, |i, j| -query[(n - 1 - i, j)]));
+    for d in 0..9 {
+        let scale = 1.6 + 0.4 * d as f64;
+        let mut m = cloud(&mut rng, n, 2);
+        m.map_in_place(|x| scale * x);
+        candidates.push(m);
+    }
+    let mut ws = SlicedWorkspace::with_default_seed();
+    let scfg = SlicedConfig {
+        slices: 32,
+        ..SlicedConfig::default()
+    };
+    ws.screen_into(&query, &candidates, &scfg).unwrap();
+    let top3 = ws.ranked().into_iter().take(3).collect::<Vec<_>>();
+    let hits = top3.iter().filter(|&&c| c < 3).count();
+    assert!(
+        hits == 3,
+        "recall {hits}/3, ranked {top3:?}, scores {:?}",
+        ws.scores()
+    );
+}
+
+#[test]
+fn screening_is_bitwise_deterministic_across_threads() {
+    let mut rng = Rng::seeded(7);
+    let query = cloud(&mut rng, 600, 3);
+    let candidates: Vec<Mat> = (0..5).map(|_| cloud(&mut rng, 500, 3)).collect();
+    let mut reference: Option<Vec<f64>> = None;
+    for threads in [1usize, 2, 4, 7] {
+        let mut ws = SlicedWorkspace::with_default_seed();
+        let scfg = SlicedConfig {
+            slices: 24,
+            threads,
+            ..SlicedConfig::default()
+        };
+        ws.screen_into(&query, &candidates, &scfg).unwrap();
+        match &reference {
+            None => reference = Some(ws.scores().to_vec()),
+            Some(want) => {
+                for (k, (w, g)) in want.iter().zip(ws.scores()).enumerate() {
+                    assert_eq!(
+                        w.to_bits(),
+                        g.to_bits(),
+                        "candidate {k} diverged at {threads} threads"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn seeds_are_reproducible_and_distinct() {
+    let mut rng = Rng::seeded(13);
+    let query = cloud(&mut rng, 20, 2);
+    let candidates: Vec<Mat> = (0..4).map(|_| cloud(&mut rng, 16, 2)).collect();
+    let scfg = SlicedConfig {
+        slices: 16,
+        ..SlicedConfig::default()
+    };
+    let run = |seed: u64| {
+        let mut ws = SlicedWorkspace::new(seed);
+        ws.screen_into(&query, &candidates, &scfg).unwrap();
+        ws.scores().to_vec()
+    };
+    let a = run(42);
+    let b = run(42);
+    let c = run(43);
+    assert_eq!(a, b, "same seed, same scores");
+    assert_ne!(a, c, "different direction seeds must differ");
+}
+
+#[test]
+fn degenerate_shapes_screen_and_escalate() {
+    let mut rng = Rng::seeded(3);
+    let scfg = SlicedConfig {
+        slices: 8,
+        ..SlicedConfig::default()
+    };
+    // K = 1: the only candidate is the top hit.
+    let query = cloud(&mut rng, 9, 2);
+    let only = cloud(&mut rng, 7, 2);
+    let mut ws = SlicedWorkspace::with_default_seed();
+    ws.screen_into(&query, std::slice::from_ref(&only), &scfg)
+        .unwrap();
+    assert_eq!(ws.scores().len(), 1);
+    let hits = ws
+        .escalate(
+            &query,
+            std::slice::from_ref(&only),
+            1,
+            &exact_cfg(),
+            GradientKind::Naive,
+            false,
+            None,
+        )
+        .unwrap();
+    assert_eq!(hits.len(), 1);
+    assert_eq!(hits[0].candidate, 0);
+    assert!(hits[0].solution.objective.is_finite());
+    // Single-point clouds: every projected profile is one atom, all
+    // sliced costs are exactly zero, nothing panics.
+    let point = Mat::from_fn(1, 2, |_, j| j as f64);
+    let singles: Vec<Mat> = (0..3).map(|c| point.map(|x| x + c as f64)).collect();
+    let mut ws = SlicedWorkspace::with_default_seed();
+    ws.screen_into(&point, &singles, &scfg).unwrap();
+    assert!(ws.scores().iter().all(|&s| s == 0.0), "{:?}", ws.scores());
+}
+
+#[test]
+fn warm_screen_does_no_per_query_allocation() {
+    // Warm the workspace on the shape envelope, then pin: a repeat
+    // screen of the same shapes must not touch the heap at all —
+    // there is no dense M×N object anywhere on the sliced path.
+    let mut rng = Rng::seeded(29);
+    let query = cloud(&mut rng, 64, 3);
+    let candidates: Vec<Mat> = (0..6).map(|_| cloud(&mut rng, 48, 3)).collect();
+    let scfg = SlicedConfig {
+        slices: 16,
+        threads: 1,
+        ..SlicedConfig::default()
+    };
+    let mut ws = SlicedWorkspace::with_default_seed();
+    ws.screen_into(&query, &candidates, &scfg).unwrap();
+    ws.screen_into(&query, &candidates, &scfg).unwrap();
+    let before = allocations();
+    ws.screen_into(&query, &candidates, &scfg).unwrap();
+    let after = allocations();
+    assert_eq!(after - before, 0, "warm screen allocated {}", after - before);
+}
+
+#[test]
+fn coordinator_round_trip_is_bitwise_the_library_path() {
+    let mut rng = Rng::seeded(77);
+    let query = cloud(&mut rng, 10, 2);
+    let candidates: Vec<Mat> = (0..6).map(|_| cloud(&mut rng, 8, 2)).collect();
+    let epsilon = 0.05;
+    let slices = 16;
+    let top_k = 2;
+
+    let cfg = CoordinatorConfig {
+        artifacts_dir: PathBuf::from("/nonexistent"),
+        ..CoordinatorConfig::default()
+    };
+    let coord = Coordinator::start(cfg.clone()).unwrap();
+    let res = coord
+        .submit_and_wait(JobPayload::gw_screen(
+            query.clone(),
+            candidates.clone(),
+            top_k,
+            slices,
+            false,
+            epsilon,
+        ))
+        .unwrap();
+    coord.shutdown();
+    let outcome = res.screen.expect("screen jobs report an outcome");
+
+    // The library path under the coordinator's solver configuration.
+    let mut ws = SlicedWorkspace::with_default_seed();
+    let scfg = SlicedConfig {
+        slices,
+        threads: cfg.solver_threads,
+        ..SlicedConfig::default()
+    };
+    ws.screen_into(&query, &candidates, &scfg).unwrap();
+    let gcfg = GwConfig {
+        epsilon,
+        outer_iters: cfg.outer_iters,
+        sinkhorn_max_iters: cfg.sinkhorn_max_iters,
+        sinkhorn_tolerance: cfg.sinkhorn_tolerance,
+        sinkhorn_check_every: 10,
+        threads: cfg.solver_threads,
+        precision: Precision::F64,
+        ..GwConfig::default()
+    };
+    let hits = ws
+        .escalate(
+            &query,
+            &candidates,
+            top_k,
+            &gcfg,
+            GradientKind::Naive,
+            false,
+            None,
+        )
+        .unwrap();
+
+    assert_eq!(outcome.scores.len(), candidates.len());
+    for (service, direct) in outcome.scores.iter().zip(ws.scores()) {
+        assert_eq!(service.to_bits(), direct.to_bits(), "sliced scores diverge");
+    }
+    assert_eq!(outcome.hits.len(), hits.len());
+    for (service, direct) in outcome.hits.iter().zip(&hits) {
+        assert_eq!(service.candidate, direct.candidate);
+        assert_eq!(
+            service.objective.to_bits(),
+            direct.solution.objective.to_bits(),
+            "escalated objectives diverge"
+        );
+    }
+    assert_eq!(
+        res.objective.unwrap().to_bits(),
+        hits[0].solution.objective.to_bits()
+    );
+    assert_eq!(
+        res.plan.unwrap().as_slice(),
+        hits[0].solution.plan.as_slice(),
+        "best-hit plan diverges"
+    );
+}
