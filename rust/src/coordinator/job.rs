@@ -334,6 +334,24 @@ impl JobPayload {
         )
     }
 
+    /// Coarse variant family for latency accounting and the wire
+    /// layer's `/metrics` histograms — one label per serving tier, so
+    /// the cardinality stays fixed (six families) no matter what
+    /// shapes clients submit. FGW rides with its grid family (same
+    /// geometry, same solve loop); the mixed payload's 1D/2D/3D
+    /// structured sides share one family (the warm-cache key still
+    /// splits them — this is an observability bucket, not an identity).
+    pub fn family(&self) -> &'static str {
+        match self {
+            JobPayload::Gw1d { .. } | JobPayload::Fgw1d { .. } => "grid1d",
+            JobPayload::Gw2d { .. } => "grid2d",
+            JobPayload::Gw3d { .. } => "grid3d",
+            JobPayload::GwDense { .. } => "dense",
+            JobPayload::GwMixed { .. } => "mixed",
+            JobPayload::GwScreen { .. } => "screen",
+        }
+    }
+
     /// The job's entropic ε (a solver-config knob, so same-variant
     /// jobs only share a warm workspace batch when it matches too).
     pub fn epsilon(&self) -> f64 {
@@ -691,6 +709,10 @@ pub struct JobResult {
     pub plan: Option<Mat>,
     /// Which backend ran it.
     pub backend: BackendChoice,
+    /// Variant family of the payload ([`JobPayload::family`]),
+    /// stamped so metrics and the wire layer can label the result
+    /// without holding the (possibly large) payload.
+    pub family: &'static str,
     /// Time spent queued.
     pub queue_time: Duration,
     /// Time spent solving.
@@ -1060,6 +1082,64 @@ mod tests {
             BackendChoice::Pjrt("x".into()).gradient_kind(),
             GradientKind::Fgc
         );
+    }
+
+    #[test]
+    fn every_payload_maps_into_the_family_label_set() {
+        let families = crate::coordinator::LATENCY_FAMILIES;
+        let d = Mat::zeros(4, 4);
+        let payloads = [
+            JobPayload::Gw1d {
+                u: uniform(4),
+                v: uniform(4),
+                k: 1,
+                epsilon: 0.01,
+            },
+            JobPayload::Fgw1d {
+                u: uniform(4),
+                v: uniform(4),
+                feature_cost: Mat::zeros(4, 4),
+                theta: 0.5,
+                k: 1,
+                epsilon: 0.01,
+            },
+            JobPayload::Gw2d {
+                n: 2,
+                u: uniform(4),
+                v: uniform(4),
+                k: 1,
+                epsilon: 0.01,
+            },
+            JobPayload::Gw3d {
+                n: 2,
+                u: uniform(8),
+                v: uniform(8),
+                k: 1,
+                epsilon: 0.01,
+            },
+            JobPayload::gw_dense(d.clone(), d.clone(), uniform(4), uniform(4), 0.01),
+            JobPayload::gw_mixed(
+                d.clone(),
+                crate::gw::Geometry::grid_2d_unit(2, 1),
+                uniform(4),
+                uniform(4),
+                0.01,
+            ),
+            JobPayload::gw_screen(Mat::zeros(4, 2), vec![Mat::zeros(4, 2)], 1, 0, false, 0.05),
+        ];
+        for p in &payloads {
+            assert!(
+                families.contains(&p.family()),
+                "{} not in the exported label set",
+                p.family()
+            );
+        }
+        // FGW rides with its grid family; the coarse mixed family
+        // collapses the structured-side dimension.
+        assert_eq!(payloads[0].family(), "grid1d");
+        assert_eq!(payloads[1].family(), "grid1d");
+        assert_eq!(payloads[5].family(), "mixed");
+        assert_eq!(payloads[6].family(), "screen");
     }
 
     #[test]

@@ -1,12 +1,123 @@
-//! Service metrics: counters + latency histogram (lock-free counters,
-//! a mutex-guarded reservoir for percentiles). Completions are counted
-//! per [`BackendChoice`] so backend auto-selection is observable in
-//! production.
+//! Service metrics: lock-free counters plus fixed-size log-bucketed
+//! latency histograms (bounded memory no matter how many jobs run,
+//! `O(LATENCY_BUCKETS)` percentile estimation — the `/metrics` scrape
+//! path must be O(1) in traffic served). Completions are counted per
+//! [`BackendChoice`] so backend auto-selection is observable in
+//! production, and per variant family so tail latency can be read per
+//! serving tier.
 
 use super::job::BackendChoice;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
 use std::time::Duration;
+
+/// Power-of-two latency buckets: bucket 0 holds 0µs completions,
+/// bucket `i ≥ 1` holds `[2^(i−1), 2^i)` µs, and the last bucket
+/// absorbs everything from `2^30` µs (~18 minutes) up. 32 buckets ×
+/// one `u64` each bounds the whole histogram at a few hundred bytes —
+/// the unbounded `Vec` reservoir this replaces grew 8 bytes per job
+/// forever and was cloned + sorted `O(n log n)` on every snapshot.
+pub const LATENCY_BUCKETS: usize = 32;
+
+/// The fixed variant-family label set latency is bucketed under (one
+/// label per serving tier — [`super::JobPayload::family`] maps every
+/// payload into this set, so exported label cardinality cannot grow
+/// with client traffic).
+pub const LATENCY_FAMILIES: [&str; 6] =
+    ["grid1d", "grid2d", "grid3d", "dense", "mixed", "screen"];
+
+/// Bucket index for a latency of `us` microseconds.
+fn bucket_index(us: u64) -> usize {
+    if us == 0 {
+        0
+    } else {
+        (64 - us.leading_zeros() as usize).min(LATENCY_BUCKETS - 1)
+    }
+}
+
+/// Inclusive upper bound, in µs, of bucket `i` — the value percentile
+/// estimation reports for ranks landing in that bucket. The last
+/// bucket is conceptually unbounded; exporters should render it as
+/// `+Inf`.
+pub fn bucket_upper_us(i: usize) -> u64 {
+    if i == 0 {
+        0
+    } else {
+        (1u64 << i) - 1
+    }
+}
+
+/// One lock-free latency histogram: fixed buckets, exact count/sum.
+#[derive(Debug, Default)]
+struct LatencyHistogram {
+    buckets: [AtomicU64; LATENCY_BUCKETS],
+    count: AtomicU64,
+    sum_us: AtomicU64,
+}
+
+impl LatencyHistogram {
+    /// Record one completion. Three relaxed `fetch_add`s — no lock,
+    /// no allocation, bounded memory at any traffic volume.
+    fn record(&self, us: u64) {
+        self.buckets[bucket_index(us)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+    }
+
+    fn snapshot(&self) -> LatencySnapshot {
+        let mut buckets = [0u64; LATENCY_BUCKETS];
+        for (out, b) in buckets.iter_mut().zip(&self.buckets) {
+            *out = b.load(Ordering::Relaxed);
+        }
+        LatencySnapshot {
+            buckets,
+            count: self.count.load(Ordering::Relaxed),
+            sum_us: self.sum_us.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Point-in-time copy of one latency histogram.
+#[derive(Clone, Debug, Default)]
+pub struct LatencySnapshot {
+    /// Completions per bucket (bucket `i` spans
+    /// `(bucket_upper_us(i−1), bucket_upper_us(i)]`).
+    pub buckets: [u64; LATENCY_BUCKETS],
+    /// Total completions recorded.
+    pub count: u64,
+    /// Sum of recorded latencies in µs (tracked exactly, apart from
+    /// the buckets, so the mean carries no bucketing error).
+    pub sum_us: u64,
+}
+
+impl LatencySnapshot {
+    /// Estimated `p`-quantile (`0 < p ≤ 1`): the upper bound of the
+    /// bucket holding the rank-`⌈p·count⌉` completion. By
+    /// construction the estimate is within one bucket width of the
+    /// exact order statistic (never below it).
+    pub fn percentile(&self, p: f64) -> Duration {
+        if self.count == 0 {
+            return Duration::ZERO;
+        }
+        let rank = ((self.count as f64) * p).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return Duration::from_micros(bucket_upper_us(i));
+            }
+        }
+        Duration::from_micros(bucket_upper_us(LATENCY_BUCKETS - 1))
+    }
+
+    /// Exact mean of the recorded latencies (0 when empty).
+    pub fn mean(&self) -> Duration {
+        if self.count == 0 {
+            Duration::ZERO
+        } else {
+            Duration::from_micros(self.sum_us / self.count)
+        }
+    }
+}
 
 /// Live metrics shared across the service threads.
 #[derive(Debug, Default)]
@@ -65,8 +176,11 @@ pub struct ServiceMetrics {
     warm_units: AtomicU64,
     /// Results that could not be delivered (receiver dropped/missing).
     lost_results: AtomicU64,
-    /// Completed-job latencies in microseconds (queue + solve).
-    latencies_us: Mutex<Vec<u64>>,
+    /// End-to-end (queue + solve) latency over all completions.
+    latency: LatencyHistogram,
+    /// End-to-end latency per variant family (indexed like
+    /// [`LATENCY_FAMILIES`]).
+    family_latency: [LatencyHistogram; LATENCY_FAMILIES.len()],
     solve_us_total: AtomicU64,
     queue_us_total: AtomicU64,
 }
@@ -173,8 +287,15 @@ impl ServiceMetrics {
     }
 
     /// A warm workspace was evicted or dropped from a worker's cache.
+    /// Saturating: a mismatched add/sub pairing clamps the gauge at 0
+    /// instead of wrapping it to ~2⁶⁴ and poisoning every later
+    /// export.
     pub fn sub_warm_units(&self, units: u64) {
-        self.warm_units.fetch_sub(units, Ordering::Relaxed);
+        let _ = self
+            .warm_units
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| {
+                Some(v.saturating_sub(units))
+            });
     }
 
     /// Record an undeliverable result (receiver dropped or missing).
@@ -182,8 +303,18 @@ impl ServiceMetrics {
         self.lost_results.fetch_add(1, Ordering::Relaxed);
     }
 
-    /// Record a completion for the backend that ran the job.
-    pub fn on_complete(&self, backend: &BackendChoice, ok: bool, queue: Duration, solve: Duration) {
+    /// Record a completion for the backend that ran the job and the
+    /// variant family it belonged to
+    /// ([`super::JobPayload::family`]; an unknown label still counts
+    /// toward the global histogram).
+    pub fn on_complete(
+        &self,
+        backend: &BackendChoice,
+        family: &str,
+        ok: bool,
+        queue: Duration,
+        solve: Duration,
+    ) {
         if ok {
             self.completed.fetch_add(1, Ordering::Relaxed);
         } else {
@@ -200,25 +331,31 @@ impl ServiceMetrics {
             .fetch_add(queue.as_micros() as u64, Ordering::Relaxed);
         self.solve_us_total
             .fetch_add(solve.as_micros() as u64, Ordering::Relaxed);
-        self.latencies_us.lock().unwrap().push(total_us);
+        self.latency.record(total_us);
+        if let Some(i) = LATENCY_FAMILIES.iter().position(|f| *f == family) {
+            self.family_latency[i].record(total_us);
+        }
     }
 
     /// Snapshot for reporting.
     pub fn snapshot(&self) -> MetricsSnapshot {
-        let mut lats = self.latencies_us.lock().unwrap().clone();
-        lats.sort_unstable();
-        let pct = |p: f64| -> Duration {
-            if lats.is_empty() {
-                return Duration::ZERO;
-            }
-            let idx = ((lats.len() as f64 - 1.0) * p).round() as usize;
-            Duration::from_micros(lats[idx])
-        };
+        let latency = self.latency.snapshot();
+        let completed = self.completed.load(Ordering::Relaxed);
+        let failed = self.failed.load(Ordering::Relaxed);
+        // Means divide by everything that ran — completions *and*
+        // failures — because `on_complete` accumulates queue/solve
+        // time for both (dividing by completions alone inflated the
+        // means whenever jobs failed).
+        let finished = (completed + failed).max(1);
+        let mut family_latency: [LatencySnapshot; LATENCY_FAMILIES.len()] = Default::default();
+        for (out, h) in family_latency.iter_mut().zip(&self.family_latency) {
+            *out = h.snapshot();
+        }
         MetricsSnapshot {
             submitted: self.submitted.load(Ordering::Relaxed),
             rejected: self.rejected.load(Ordering::Relaxed),
-            completed: self.completed.load(Ordering::Relaxed),
-            failed: self.failed.load(Ordering::Relaxed),
+            completed,
+            failed,
             native_fgc: self.native_fgc.load(Ordering::Relaxed),
             native_naive: self.native_naive.load(Ordering::Relaxed),
             native_lowrank: self.native_lowrank.load(Ordering::Relaxed),
@@ -241,17 +378,17 @@ impl ServiceMetrics {
             warm_units: self.warm_units.load(Ordering::Relaxed),
             lost_results: self.lost_results.load(Ordering::Relaxed),
             shard_depths: Vec::new(),
-            p50: pct(0.50),
-            p90: pct(0.90),
-            p99: pct(0.99),
+            p50: latency.percentile(0.50),
+            p90: latency.percentile(0.90),
+            p99: latency.percentile(0.99),
             mean_queue: Duration::from_micros(
-                self.queue_us_total.load(Ordering::Relaxed)
-                    / self.completed.load(Ordering::Relaxed).max(1),
+                self.queue_us_total.load(Ordering::Relaxed) / finished,
             ),
             mean_solve: Duration::from_micros(
-                self.solve_us_total.load(Ordering::Relaxed)
-                    / self.completed.load(Ordering::Relaxed).max(1),
+                self.solve_us_total.load(Ordering::Relaxed) / finished,
             ),
+            latency,
+            family_latency,
         }
     }
 }
@@ -316,15 +453,21 @@ pub struct MetricsSnapshot {
     /// [`super::Coordinator::metrics`]; empty from a bare
     /// [`ServiceMetrics::snapshot`], which has no queue handle).
     pub shard_depths: Vec<usize>,
-    /// Median end-to-end latency.
+    /// End-to-end latency histogram over all completions.
+    pub latency: LatencySnapshot,
+    /// End-to-end latency histogram per variant family, indexed like
+    /// [`LATENCY_FAMILIES`].
+    pub family_latency: [LatencySnapshot; LATENCY_FAMILIES.len()],
+    /// Median end-to-end latency (bucket upper bound — within one
+    /// bucket width of exact).
     pub p50: Duration,
     /// 90th percentile latency.
     pub p90: Duration,
     /// 99th percentile latency.
     pub p99: Duration,
-    /// Mean queue wait.
+    /// Mean queue wait over finished (completed + failed) jobs.
     pub mean_queue: Duration,
-    /// Mean solve time.
+    /// Mean solve time over finished (completed + failed) jobs.
     pub mean_solve: Duration,
 }
 
@@ -406,6 +549,7 @@ mod tests {
             m.on_submit();
             m.on_complete(
                 &BackendChoice::NativeFgc,
+                "grid1d",
                 true,
                 Duration::from_micros(10),
                 Duration::from_micros(i * 10),
@@ -431,7 +575,7 @@ mod tests {
             (BackendChoice::Pjrt("a".into()), 4),
         ] {
             for _ in 0..times {
-                m.on_complete(&choice, true, Duration::ZERO, Duration::ZERO);
+                m.on_complete(&choice, "grid1d", true, Duration::ZERO, Duration::ZERO);
             }
         }
         let s = m.snapshot();
@@ -451,6 +595,8 @@ mod tests {
         assert_eq!(s.p99, Duration::ZERO);
         assert_eq!(s.completed, 0);
         assert_eq!(s.warm_hit_rate(), 0.0);
+        assert_eq!(s.latency.count, 0);
+        assert_eq!(s.latency.mean(), Duration::ZERO);
     }
 
     #[test]
@@ -485,6 +631,20 @@ mod tests {
         let text = s.to_string();
         assert!(text.contains("f32-served=3"), "{text}");
         assert!(text.contains("warm-units=1"), "{text}");
+    }
+
+    #[test]
+    fn warm_units_subtraction_saturates() {
+        // A mismatched add/sub pairing must clamp the gauge at 0, not
+        // wrap it to ~2⁶⁴.
+        let m = ServiceMetrics::new();
+        m.add_warm_units(1);
+        m.sub_warm_units(5);
+        assert_eq!(m.snapshot().warm_units, 0);
+        // Still usable afterwards.
+        m.add_warm_units(2);
+        m.sub_warm_units(1);
+        assert_eq!(m.snapshot().warm_units, 1);
     }
 
     #[test]
@@ -535,6 +695,7 @@ mod tests {
         m.on_submit();
         m.on_complete(
             &BackendChoice::Pjrt("x".into()),
+            "grid2d",
             true,
             Duration::ZERO,
             Duration::from_millis(1),
@@ -542,5 +703,118 @@ mod tests {
         let text = m.snapshot().to_string();
         assert!(text.contains("pjrt=1"));
         assert!(text.contains("p50"));
+    }
+
+    #[test]
+    fn means_divide_by_finished_not_completed() {
+        // `on_complete` accumulates queue/solve time for failures too,
+        // so the means must divide by completed + failed — dividing by
+        // completions alone inflated them whenever jobs failed.
+        let m = ServiceMetrics::new();
+        m.on_complete(
+            &BackendChoice::NativeFgc,
+            "grid1d",
+            true,
+            Duration::from_micros(100),
+            Duration::from_micros(100),
+        );
+        m.on_complete(
+            &BackendChoice::NativeFgc,
+            "grid1d",
+            false,
+            Duration::from_micros(300),
+            Duration::from_micros(500),
+        );
+        let s = m.snapshot();
+        assert_eq!((s.completed, s.failed), (1, 1));
+        assert_eq!(s.mean_queue, Duration::from_micros(200));
+        assert_eq!(s.mean_solve, Duration::from_micros(300));
+    }
+
+    #[test]
+    fn percentiles_within_one_bucket_of_exact() {
+        // For a power-of-two bucketed histogram the reported quantile
+        // is the upper bound of the bucket holding the exact order
+        // statistic: never below it, and less than 2× it (one bucket
+        // width).
+        let values: Vec<u64> = (1..=1000u64).map(|i| i * 7 + 3).collect();
+        let m = ServiceMetrics::new();
+        for &v in &values {
+            m.on_complete(
+                &BackendChoice::NativeFgc,
+                "dense",
+                true,
+                Duration::ZERO,
+                Duration::from_micros(v),
+            );
+        }
+        let s = m.snapshot();
+        let mut sorted = values.clone();
+        sorted.sort_unstable();
+        for (p, est) in [(0.50, s.p50), (0.90, s.p90), (0.99, s.p99)] {
+            let rank = ((sorted.len() as f64) * p).ceil() as usize;
+            let exact = sorted[rank - 1];
+            let est_us = est.as_micros() as u64;
+            assert!(est_us >= exact, "p{p}: estimate {est_us} below exact {exact}");
+            assert!(
+                est_us < 2 * exact,
+                "p{p}: estimate {est_us} more than one bucket above exact {exact}"
+            );
+        }
+        // The mean is exact (sum/count tracked apart from buckets).
+        let exact_mean = sorted.iter().sum::<u64>() / sorted.len() as u64;
+        assert_eq!(s.latency.mean(), Duration::from_micros(exact_mean));
+    }
+
+    #[test]
+    fn family_histograms_split_by_family() {
+        let m = ServiceMetrics::new();
+        for (family, us) in [("grid1d", 10u64), ("grid1d", 20), ("screen", 4000)] {
+            m.on_complete(
+                &BackendChoice::NativeFgc,
+                family,
+                true,
+                Duration::ZERO,
+                Duration::from_micros(us),
+            );
+        }
+        // An unknown family still lands in the global histogram.
+        m.on_complete(
+            &BackendChoice::NativeFgc,
+            "mystery",
+            true,
+            Duration::ZERO,
+            Duration::from_micros(1),
+        );
+        let s = m.snapshot();
+        assert_eq!(s.latency.count, 4);
+        let by_name = |name: &str| {
+            let i = LATENCY_FAMILIES.iter().position(|f| *f == name).unwrap();
+            &s.family_latency[i]
+        };
+        assert_eq!(by_name("grid1d").count, 2);
+        assert_eq!(by_name("screen").count, 1);
+        assert_eq!(by_name("dense").count, 0);
+        assert_eq!(
+            s.family_latency.iter().map(|h| h.count).sum::<u64>(),
+            3,
+            "the unknown family is global-only"
+        );
+    }
+
+    #[test]
+    fn bucket_bounds_cover_the_index_map() {
+        assert_eq!(bucket_index(0), 0);
+        assert_eq!(bucket_index(1), 1);
+        assert_eq!(bucket_index(2), 2);
+        assert_eq!(bucket_index(3), 2);
+        assert_eq!(bucket_index(4), 3);
+        assert_eq!(bucket_index(u64::MAX), LATENCY_BUCKETS - 1);
+        for i in 0..LATENCY_BUCKETS - 1 {
+            // Every bucket's upper bound maps back into that bucket,
+            // and the next value starts the next bucket.
+            assert_eq!(bucket_index(bucket_upper_us(i)), i);
+            assert_eq!(bucket_index(bucket_upper_us(i) + 1), i + 1);
+        }
     }
 }

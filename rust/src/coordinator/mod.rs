@@ -34,7 +34,10 @@ pub use job::{
     dense_fingerprint, mixed_fingerprint, screen_fingerprint, BackendChoice, JobId, JobOptions,
     JobPayload, JobRequest, JobResult, ScreenHit, ScreenOutcome,
 };
-pub use metrics::{MetricsSnapshot, ServiceMetrics};
+pub use metrics::{
+    bucket_upper_us, LatencySnapshot, MetricsSnapshot, ServiceMetrics, LATENCY_BUCKETS,
+    LATENCY_FAMILIES,
+};
 pub use queue::BoundedQueue;
 pub use router::{Router, RoutingPolicy};
 pub use service::{Coordinator, CoordinatorConfig};

@@ -484,6 +484,14 @@ impl Coordinator {
         snap
     }
 
+    /// Shared handle to the live metrics. The counters outlive the
+    /// coordinator itself, so a serving front-end can print a final
+    /// snapshot after [`Coordinator::shutdown`] has consumed the
+    /// handle that owned the workers.
+    pub fn metrics_handle(&self) -> Arc<ServiceMetrics> {
+        Arc::clone(&self.metrics)
+    }
+
     /// Graceful shutdown: close queues and let the workers solve
     /// everything already queued before joining them.
     pub fn shutdown(self) {
@@ -1035,6 +1043,7 @@ fn pjrt_worker_loop(q: BoundedQueue<Envelope>, ctx: WorkerCtx, registry: Artifac
                         .to_string()),
                         plan: None,
                         backend: req.backend.clone(),
+                        family: req.payload.family(),
                         queue_time: req.submitted_at.elapsed(),
                         solve_time: Duration::ZERO,
                         screen: None,
@@ -1054,6 +1063,7 @@ fn report(metrics: &ServiceMetrics, result: &JobResult) {
     // native in `result.backend`).
     metrics.on_complete(
         &result.backend,
+        result.family,
         result.objective.is_ok(),
         result.queue_time,
         result.solve_time,
@@ -1239,6 +1249,7 @@ fn execute_group_fused(
                 objective: Ok(objective),
                 plan: Some(plan),
                 backend: req.backend.clone(),
+                family: req.payload.family(),
                 queue_time,
                 solve_time: attempt_started.elapsed(),
                 screen: Some(outcome),
@@ -1270,6 +1281,7 @@ fn execute_group_fused(
                 objective: Ok(sol.objective),
                 plan: Some(sol.plan()),
                 backend: req.backend.clone(),
+                family: req.payload.family(),
                 queue_time,
                 solve_time: attempt_started.elapsed(),
                 screen: None,
@@ -1312,6 +1324,7 @@ fn execute_group_fused(
             objective: Ok(sol.objective),
             plan: Some(sol.plan),
             backend: req.backend.clone(),
+            family: req.payload.family(),
             queue_time,
             solve_time: solve_each,
             screen: None,
@@ -1464,6 +1477,7 @@ fn execute_solo_with_recovery(
         objective: Err(msg),
         plan: None,
         backend: req.backend.clone(),
+        family: req.payload.family(),
         queue_time,
         solve_time,
         screen: None,
@@ -1511,6 +1525,7 @@ fn execute_solo_with_recovery(
                     objective: Ok(objective),
                     plan: Some(plan),
                     backend,
+                    family: req.payload.family(),
                     queue_time,
                     solve_time: started.elapsed(),
                     screen,
@@ -1680,6 +1695,7 @@ fn rejected_result(req: &JobRequest, why: &str) -> JobResult {
         objective: Err(Error::Rejected(why.to_string()).to_string()),
         plan: None,
         backend: req.backend.clone(),
+        family: req.payload.family(),
         queue_time: req.submitted_at.elapsed(),
         solve_time: Duration::ZERO,
         screen: None,
@@ -1733,6 +1749,7 @@ fn execute_pjrt(
         objective: Ok(out.objective),
         plan: Some(out.plan),
         backend: req.backend.clone(),
+        family: req.payload.family(),
         queue_time,
         solve_time: started.elapsed(),
         screen: None,

@@ -22,7 +22,9 @@
 //!   native-naive / native-lowrank / PJRT backends per job, workers
 //!   that pin to a shard and serve same-variant bursts from warm
 //!   batched workspaces (stealing from the longest shard when theirs
-//!   runs dry), and latency/throughput/warm-hit metrics.
+//!   runs dry), and latency/throughput/warm-hit metrics. The
+//!   [`server`] module puts a std-only TCP/HTTP front-end over it
+//!   (`POST /jobs`, Prometheus-text `GET /metrics`).
 //!
 //! Supporting substrates built from scratch (the offline environment
 //! vendors only `xla` + `anyhow`, both optional behind the `pjrt`
@@ -68,6 +70,7 @@ pub mod parallel;
 pub mod prng;
 pub mod runtime;
 pub mod scalar;
+pub mod server;
 pub mod sinkhorn;
 pub mod testutil;
 

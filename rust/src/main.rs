@@ -6,6 +6,7 @@
 //! fgc-gw solve3d --side 6 [--eps 0.004] …
 //! fgc-gw screen --n 64 --candidates 16 [--dim 3] [--top-k 4] [--slices 32] [--eps 0.05] [--backend naive|fgc|lowrank] [--warm-start] [--seed 7] [--threads 1]
 //! fgc-gw serve  --jobs 32 [--family 1d|3d|mixed|screen] [--workers 2] [--shards 0] [--threads 1] [--backend auto|fgc|naive|lowrank] [--precision f64|f32|auto] [--coupling-rank auto|full|R] [--lowrank-tol T] [--deadline-ms 0] [--max-retries 3] [--pjrt] [--config path]
+//! fgc-gw serve  --listen 127.0.0.1:8077 [--max-connections 64] [--serve-for-ms 0] [--workers 2] …
 //! fgc-gw bary   --inputs 3 --n 40
 //! fgc-gw info   [--artifacts artifacts]
 //! ```
@@ -26,7 +27,14 @@
 //! → fgc, small dense → naive, large dense → lowrank. `--shards 0`
 //! (default) sizes the variant-sharded queue from the worker count;
 //! `--lowrank-tol 0` derives the ACA tolerance from each job's ε.
-//! `serve --family` selects the synthetic workload: `1d` grid pairs
+//! `serve --listen ADDR` (or `server.listen` in the config file, with
+//! `server.max_connections` / `server.max_body_bytes`) runs the wire
+//! front-end instead of the synthetic workload: a std-only HTTP/1.1
+//! endpoint set (`POST /jobs`, `GET /jobs/<id>`, `GET /healthz`,
+//! Prometheus-text `GET /metrics`, `POST /shutdown`) over the same
+//! coordinator; `--serve-for-ms N` exits the loop after N ms for
+//! scripted smoke tests. Otherwise `serve --family` selects the
+//! synthetic workload: `1d` grid pairs
 //! (default), `3d` volumetric grid pairs, `mixed`
 //! dense-support×3D-grid payloads (the warm-rebind path), or `screen`
 //! 1-vs-K sliced-screening jobs (the candidate-scoring tier). The
@@ -48,7 +56,9 @@ use fgc_gw::gw::{
 use fgc_gw::linalg::Mat;
 use fgc_gw::prng::Rng;
 use fgc_gw::runtime::ArtifactRegistry;
+use fgc_gw::server::{Server, ServerConfig};
 use std::path::PathBuf;
+use std::sync::Arc;
 use std::time::Duration;
 
 fn main() {
@@ -84,6 +94,7 @@ fn print_usage() {
          \x20 solve3d  3D GW on an n×n×n grid (--side, --k, --eps, --backend, --precision, --coupling-rank, --seed, --threads)\n\
          \x20 screen   sliced 1-vs-K candidate screening + exact escalation (--n, --candidates, --dim, --top-k, --slices, --eps, --backend, --warm-start, --seed, --threads)\n\
          \x20 serve    run the coordinator on a synthetic workload (--jobs, --family 1d|3d|mixed|screen, --workers, --shards, --threads, --backend, --precision, --coupling-rank, --lowrank-tol, --deadline-ms, --max-retries, --pjrt)\n\
+         \x20          or, with --listen ADDR, as a TCP/HTTP front-end (--max-connections, --serve-for-ms; POST /jobs, GET /jobs/<id>, GET /healthz, GET /metrics, POST /shutdown)\n\
          \x20 bary     1D GW barycenter demo (--inputs, --n)\n\
          \x20 info     platform + artifact registry summary (--artifacts DIR)"
     );
@@ -334,6 +345,8 @@ fn cmd_screen(args: &Args) -> fgc_gw::Result<()> {
 
 fn cmd_serve(args: &Args) -> fgc_gw::Result<()> {
     let mut cfg = CoordinatorConfig::default();
+    let mut scfg = ServerConfig::default();
+    let mut listen: Option<String> = None;
     if let Some(path) = args.get("config") {
         let file = Config::load(&PathBuf::from(path))?;
         cfg.native_workers = file.get_or("service.native_workers", cfg.native_workers)?;
@@ -359,6 +372,9 @@ fn cmd_serve(args: &Args) -> fgc_gw::Result<()> {
                 cfg.policy = policy;
             }
         }
+        listen = file.get("server.listen").map(str::to_string);
+        scfg.max_connections = file.get_or("server.max_connections", scfg.max_connections)?;
+        scfg.max_body_bytes = file.get_or("server.max_body_bytes", scfg.max_body_bytes)?;
     }
     cfg.native_workers = args.get_or("workers", cfg.native_workers)?;
     if let Some(threads) = args.get_opt::<usize>("threads")? {
@@ -397,6 +413,23 @@ fn cmd_serve(args: &Args) -> fgc_gw::Result<()> {
             Some(policy) => policy,
             None => RoutingPolicy::PreferPjrt,
         };
+    }
+
+    // Wire-serving mode: `--listen` (or `server.listen` in the config
+    // file) turns `serve` into the TCP/HTTP front-end instead of the
+    // synthetic workload driver.
+    if let Some(l) = args.get("listen") {
+        listen = Some(l.to_string());
+    }
+    if let Some(mc) = args.get_opt::<usize>("max-connections")? {
+        scfg.max_connections = mc;
+    }
+    if let Some(listen) = listen {
+        scfg.listen = listen;
+        let serve_for_ms = args.get_or("serve-for-ms", 0u64)?;
+        println!("starting coordinator: {cfg:?}");
+        let coord = Coordinator::start(cfg)?;
+        return serve_wire(coord, scfg, serve_for_ms);
     }
 
     let jobs = args.get_or("jobs", 32usize)?;
@@ -471,6 +504,45 @@ fn cmd_serve(args: &Args) -> fgc_gw::Result<()> {
         jobs as f64 / wall.as_secs_f64()
     );
     coord.shutdown();
+    Ok(())
+}
+
+/// Run the wire front-end until a client `POST`s `/shutdown` (or the
+/// `--serve-for-ms` window elapses, for scripted smoke tests), then
+/// drain gracefully: stop the socket first, shut the coordinator down
+/// second (its drain delivers every in-flight result into wire
+/// receivers that are still alive), and only then drop those
+/// receivers — so `lost_results` stays 0 across the whole stop.
+fn serve_wire(coord: Coordinator, scfg: ServerConfig, serve_for_ms: u64) -> fgc_gw::Result<()> {
+    let coord = Arc::new(coord);
+    let server = Server::start(Arc::clone(&coord), scfg)?;
+    println!("listening on http://{}", server.local_addr());
+    println!("endpoints: POST /jobs, GET /jobs/<id>, GET /healthz, GET /metrics, POST /shutdown");
+    let started = std::time::Instant::now();
+    loop {
+        if server.shutdown_requested() {
+            println!("shutdown requested over the wire");
+            break;
+        }
+        if serve_for_ms > 0 && started.elapsed() >= Duration::from_millis(serve_for_ms) {
+            println!("serve window elapsed");
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    let metrics = coord.metrics_handle();
+    let pending = server.shutdown();
+    let coord = Arc::into_inner(coord).ok_or_else(|| {
+        fgc_gw::Error::Runtime("coordinator handle still shared after server shutdown".into())
+    })?;
+    coord.shutdown();
+    let unclaimed = pending.len();
+    for (_id, rx) in &pending {
+        while rx.try_recv().is_ok() {}
+    }
+    drop(pending);
+    println!("{}", metrics.snapshot());
+    println!("drained {unclaimed} unclaimed wire job(s); server stopped cleanly");
     Ok(())
 }
 

@@ -1,0 +1,253 @@
+//! Minimal HTTP/1.1 over std's blocking sockets — just enough for the
+//! wire protocol: request line + headers + optional `content-length`
+//! body in, a plain response out, one request per connection
+//! (`connection: close`). No keep-alive, no chunked encoding, no TLS.
+//!
+//! The reader is generic over [`Read`] (and the writer over
+//! [`Write`]) so the parsing is unit-testable without sockets.
+
+use std::io::{Read, Write};
+
+/// Hard cap on the header section (request line + headers). A client
+/// that streams headers forever is cut off at this size.
+const MAX_HEAD_BYTES: usize = 16 * 1024;
+
+/// How much of an over-cap body the reader discards before giving up
+/// on the connection. Closing with unread request bytes makes the
+/// kernel reset the connection, which can destroy the `413` response
+/// before the client reads it — so moderately oversized bodies are
+/// drained and only unbounded ones get cut off.
+const DRAIN_MAX_BYTES: usize = 256 * 1024;
+
+/// One parsed request.
+#[derive(Debug)]
+pub struct Request {
+    /// Request method (`GET`, `POST`, ...).
+    pub method: String,
+    /// Request target path. Query strings are not split off — the
+    /// wire API does not use them.
+    pub path: String,
+    /// Request body (`content-length` bytes; empty when absent).
+    pub body: Vec<u8>,
+}
+
+/// Why a request could not be read.
+#[derive(Debug)]
+pub enum HttpError {
+    /// Transport failure (including socket read timeouts) — no
+    /// response can usefully be written.
+    Io(std::io::Error),
+    /// The request was malformed; respond `400`.
+    BadRequest(String),
+    /// The declared body exceeds the configured cap; respond `413`.
+    TooLarge,
+}
+
+impl From<std::io::Error> for HttpError {
+    fn from(e: std::io::Error) -> Self {
+        HttpError::Io(e)
+    }
+}
+
+/// Read and parse one request. `max_body` caps the accepted
+/// `content-length`; larger declarations fail with
+/// [`HttpError::TooLarge`] after a best-effort bounded drain of the
+/// declared body (see `DRAIN_MAX_BYTES`), so the `413` response
+/// survives the close.
+pub fn read_request<S: Read>(stream: &mut S, max_body: usize) -> Result<Request, HttpError> {
+    let (head, mut leftover) = read_head(stream)?;
+    let mut lines = head.split("\r\n");
+    let request_line = lines
+        .next()
+        .ok_or_else(|| HttpError::BadRequest("empty request".to_string()))?;
+    let mut parts = request_line.split(' ');
+    let method = parts
+        .next()
+        .filter(|m| !m.is_empty())
+        .ok_or_else(|| HttpError::BadRequest("missing method".to_string()))?
+        .to_string();
+    let path = parts
+        .next()
+        .filter(|p| p.starts_with('/'))
+        .ok_or_else(|| HttpError::BadRequest("missing request path".to_string()))?
+        .to_string();
+
+    let mut content_length = 0usize;
+    for line in lines {
+        if let Some((name, value)) = line.split_once(':') {
+            if name.eq_ignore_ascii_case("content-length") {
+                content_length = value
+                    .trim()
+                    .parse()
+                    .map_err(|_| HttpError::BadRequest("bad content-length".to_string()))?;
+            }
+        }
+    }
+    if content_length > max_body {
+        let mut remaining = content_length
+            .saturating_sub(leftover.len())
+            .min(DRAIN_MAX_BYTES);
+        let mut chunk = [0u8; 4096];
+        while remaining > 0 {
+            match stream.read(&mut chunk[..remaining.min(chunk.len())]) {
+                Ok(0) | Err(_) => break,
+                Ok(n) => remaining -= n,
+            }
+        }
+        return Err(HttpError::TooLarge);
+    }
+
+    // `leftover` holds body bytes that arrived in the same reads as
+    // the header section; pull the remainder off the stream.
+    leftover.truncate(content_length.min(leftover.len()));
+    let mut body = leftover;
+    while body.len() < content_length {
+        let mut chunk = [0u8; 4096];
+        let want = (content_length - body.len()).min(chunk.len());
+        let n = stream.read(&mut chunk[..want])?;
+        if n == 0 {
+            return Err(HttpError::BadRequest("body shorter than content-length".to_string()));
+        }
+        body.extend_from_slice(&chunk[..n]);
+    }
+    Ok(Request { method, path, body })
+}
+
+/// Read up to the `\r\n\r\n` header terminator. Returns the header
+/// text and any extra bytes read past the terminator (the body
+/// prefix).
+fn read_head<S: Read>(stream: &mut S) -> Result<(String, Vec<u8>), HttpError> {
+    let mut buf: Vec<u8> = Vec::with_capacity(1024);
+    loop {
+        if let Some(end) = find_terminator(&buf) {
+            let leftover = buf.split_off(end + 4);
+            buf.truncate(end);
+            let head = String::from_utf8(buf)
+                .map_err(|_| HttpError::BadRequest("non-UTF-8 header".to_string()))?;
+            return Ok((head, leftover));
+        }
+        if buf.len() >= MAX_HEAD_BYTES {
+            return Err(HttpError::BadRequest("header section too large".to_string()));
+        }
+        let mut chunk = [0u8; 1024];
+        let n = stream.read(&mut chunk)?;
+        if n == 0 {
+            return Err(HttpError::BadRequest("connection closed mid-header".to_string()));
+        }
+        buf.extend_from_slice(&chunk[..n]);
+    }
+}
+
+fn find_terminator(buf: &[u8]) -> Option<usize> {
+    buf.windows(4).position(|w| w == b"\r\n\r\n")
+}
+
+/// Write a complete response and flush. Always closes the exchange
+/// (`connection: close`) — the accept loop hands out one request per
+/// connection.
+pub fn write_response<S: Write>(
+    stream: &mut S,
+    status: u16,
+    content_type: &str,
+    body: &[u8],
+) -> std::io::Result<()> {
+    let head = format!(
+        "HTTP/1.1 {status} {}\r\ncontent-type: {content_type}\r\ncontent-length: {}\r\nconnection: close\r\n\r\n",
+        reason_phrase(status),
+        body.len(),
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body)?;
+    stream.flush()
+}
+
+fn reason_phrase(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        202 => "Accepted",
+        400 => "Bad Request",
+        404 => "Not Found",
+        413 => "Payload Too Large",
+        429 => "Too Many Requests",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        504 => "Gateway Timeout",
+        _ => "Unknown",
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn parses_request_with_body() {
+        let raw = b"POST /jobs HTTP/1.1\r\nHost: x\r\nContent-Length: 5\r\n\r\nhello";
+        let req = read_request(&mut Cursor::new(raw.to_vec()), 1024).unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/jobs");
+        assert_eq!(req.body, b"hello");
+    }
+
+    #[test]
+    fn parses_bodyless_get() {
+        let raw = b"GET /healthz HTTP/1.1\r\nHost: x\r\n\r\n";
+        let req = read_request(&mut Cursor::new(raw.to_vec()), 1024).unwrap();
+        assert_eq!(req.method, "GET");
+        assert_eq!(req.path, "/healthz");
+        assert!(req.body.is_empty());
+    }
+
+    #[test]
+    fn oversized_body_declaration_fails_fast() {
+        let raw = b"POST /jobs HTTP/1.1\r\nContent-Length: 999999\r\n\r\n";
+        match read_request(&mut Cursor::new(raw.to_vec()), 1024) {
+            Err(HttpError::TooLarge) => {}
+            other => panic!("expected TooLarge, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn oversized_body_is_drained_before_the_413() {
+        let mut raw = b"POST /jobs HTTP/1.1\r\nContent-Length: 2000\r\n\r\n".to_vec();
+        raw.extend(vec![b'x'; 2000]);
+        let len = raw.len() as u64;
+        let mut cur = Cursor::new(raw);
+        match read_request(&mut cur, 1024) {
+            Err(HttpError::TooLarge) => {}
+            other => panic!("expected TooLarge, got {other:?}"),
+        }
+        assert_eq!(cur.position(), len, "declared body must be consumed");
+    }
+
+    #[test]
+    fn truncated_body_is_a_bad_request() {
+        let raw = b"POST /jobs HTTP/1.1\r\nContent-Length: 10\r\n\r\nshort";
+        match read_request(&mut Cursor::new(raw.to_vec()), 1024) {
+            Err(HttpError::BadRequest(_)) => {}
+            other => panic!("expected BadRequest, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn header_section_is_capped() {
+        let mut raw = b"GET / HTTP/1.1\r\n".to_vec();
+        raw.extend(vec![b'a'; MAX_HEAD_BYTES + 16]);
+        match read_request(&mut Cursor::new(raw), 1024) {
+            Err(HttpError::BadRequest(msg)) => assert!(msg.contains("too large"), "{msg}"),
+            other => panic!("expected BadRequest, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn response_has_framing_headers() {
+        let mut out = Vec::new();
+        write_response(&mut out, 200, "application/json", b"{}").unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.starts_with("HTTP/1.1 200 OK\r\n"), "{text}");
+        assert!(text.contains("content-length: 2\r\n"));
+        assert!(text.contains("connection: close\r\n"));
+        assert!(text.ends_with("\r\n\r\n{}"));
+    }
+}

@@ -1,0 +1,458 @@
+//! Wire-level serving front-end: a std-only TCP/HTTP ingest layer
+//! over the [`Coordinator`].
+//!
+//! Every serving tier built below the coordinator (sharded warm
+//! batching, the fault ladder, the f32/low-rank/sliced tiers) was
+//! reachable only in-process until this module; the server puts a
+//! socket in front of `submit_with_options` without adding a single
+//! dependency — hand-rolled HTTP/1.1 ([`http`]), hand-rolled JSON
+//! ([`json`]), Prometheus text exposition ([`prometheus`]).
+//!
+//! Endpoints:
+//! * `POST /jobs` — submit a job ([`wire`] documents the body). With
+//!   `"wait": true` the connection holds until the result; otherwise
+//!   `202` returns the id for polling. The wire `timeout_ms` maps
+//!   onto [`crate::coordinator::JobOptions::deadline`], so a wire
+//!   timeout the service cannot meet surfaces as the coordinator's
+//!   own deadline-shed rejection (`429`).
+//! * `GET /jobs/<id>` — poll an async submission (`202` pending,
+//!   `200` done; terminal bodies are cached for re-polls). A waiting
+//!   submission that timed out on the wire (`504`) stays pollable.
+//! * `GET /healthz` — liveness.
+//! * `GET /metrics` — Prometheus text exposition of the coordinator
+//!   metrics; `O(1)` allocation in traffic served.
+//! * `POST /shutdown` — request a graceful stop; the serve loop
+//!   observes it via [`Server::shutdown_requested`].
+//!
+//! Threading model: a nonblocking accept loop (named `fgcgw-accept`)
+//! polls a stop flag between accepts and spawns one `fgcgw-http`
+//! thread per connection (one request per connection,
+//! `connection: close`), capped at
+//! [`ServerConfig::max_connections`] live handlers — beyond that new
+//! connections get an immediate `503` instead of an unbounded thread
+//! pile-up. Graceful [`Server::shutdown`] joins the accept loop and
+//! every live handler, then hands the still-undelivered result
+//! receivers back to the caller so the coordinator's own drain can
+//! deliver into live channels — the loopback tests assert
+//! `lost_results` stays 0 across a shutdown with jobs in flight.
+
+pub mod http;
+pub mod json;
+pub mod prometheus;
+pub mod wire;
+
+pub use http::{read_request, write_response, HttpError, Request};
+pub use json::Json;
+pub use prometheus::render_metrics;
+pub use wire::{encode_result, parse_submit, SubmitRequest};
+
+use crate::coordinator::{Coordinator, JobId, JobResult};
+use crate::error::{Error, Result};
+use std::collections::{HashMap, VecDeque};
+use std::io::ErrorKind;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Poll cadence of the nonblocking accept loop while idle.
+const ACCEPT_POLL: Duration = Duration::from_millis(5);
+/// Terminal result bodies kept for re-polls before eviction (oldest
+/// first) — bounds registry memory under sustained async traffic.
+const DONE_CACHE_MAX: usize = 1024;
+/// Un-polled async submissions admitted before `429` — each holds a
+/// live result receiver, so this bounds them.
+const PENDING_MAX: usize = 4096;
+/// Grace added to a waiting submit's deadline before the wire gives
+/// up (`504`): the job's own deadline shed should win the race, so
+/// the client sees the coordinator's terminal result, not the wire's.
+const WAIT_GRACE: Duration = Duration::from_secs(1);
+/// Wait cap for `"wait": true` submissions without a deadline.
+const WAIT_MAX: Duration = Duration::from_secs(3600);
+
+const TEXT: &str = "text/plain; charset=utf-8";
+const JSON_TYPE: &str = "application/json";
+/// Prometheus text exposition format version 0.0.4.
+const PROM: &str = "text/plain; version=0.0.4";
+
+/// Server tuning knobs.
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    /// Bind address, e.g. `127.0.0.1:8077` (port `0` picks a free
+    /// one — read it back from [`Server::local_addr`]).
+    pub listen: String,
+    /// Live connection handlers before new connections get `503`.
+    pub max_connections: usize,
+    /// Request body cap in bytes (`413` beyond it).
+    pub max_body_bytes: usize,
+    /// Per-connection socket read timeout.
+    pub read_timeout: Duration,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            listen: "127.0.0.1:0".to_string(),
+            max_connections: 64,
+            max_body_bytes: 8 * 1024 * 1024,
+            read_timeout: Duration::from_secs(10),
+        }
+    }
+}
+
+/// One async job's wire-side state.
+enum WireJob {
+    /// Submitted, result not yet retrieved.
+    Pending {
+        rx: mpsc::Receiver<JobResult>,
+        return_plan: bool,
+    },
+    /// Terminal response body, cached for re-polls.
+    Done { status: u16, body: String },
+}
+
+/// Async-job registry: id → state, plus the eviction queue for
+/// terminal bodies and the live pending count.
+#[derive(Default)]
+struct Registry {
+    jobs: HashMap<JobId, WireJob>,
+    done_order: VecDeque<JobId>,
+    pending: usize,
+}
+
+impl Registry {
+    /// Transition an entry to its terminal body (the entry itself was
+    /// already taken out of `jobs` by the caller), evicting the
+    /// oldest cached bodies beyond [`DONE_CACHE_MAX`].
+    fn finish(&mut self, id: JobId, status: u16, body: String) {
+        self.pending = self.pending.saturating_sub(1);
+        self.jobs.insert(id, WireJob::Done { status, body });
+        self.done_order.push_back(id);
+        while self.done_order.len() > DONE_CACHE_MAX {
+            if let Some(old) = self.done_order.pop_front() {
+                self.jobs.remove(&old);
+            }
+        }
+    }
+}
+
+/// State shared between the accept loop and connection handlers.
+struct ServeCtx {
+    coord: Arc<Coordinator>,
+    cfg: ServerConfig,
+    registry: Mutex<Registry>,
+    stop: Arc<AtomicBool>,
+    shutdown_requested: AtomicBool,
+}
+
+/// A running wire front-end. Dropping it without
+/// [`Server::shutdown`] detaches the threads; shut down explicitly.
+pub struct Server {
+    addr: SocketAddr,
+    ctx: Arc<ServeCtx>,
+    stop: Arc<AtomicBool>,
+    accept: JoinHandle<Vec<JoinHandle<()>>>,
+}
+
+impl Server {
+    /// Bind `cfg.listen` and start serving `coord` over it.
+    pub fn start(coord: Arc<Coordinator>, cfg: ServerConfig) -> Result<Server> {
+        let listener = TcpListener::bind(&cfg.listen)
+            .map_err(|e| Error::Io(format!("bind {}", cfg.listen), e))?;
+        let addr = listener
+            .local_addr()
+            .map_err(|e| Error::Io("listener local_addr".to_string(), e))?;
+        listener
+            .set_nonblocking(true)
+            .map_err(|e| Error::Io("listener set_nonblocking".to_string(), e))?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let ctx = Arc::new(ServeCtx {
+            coord,
+            cfg,
+            registry: Mutex::new(Registry::default()),
+            stop: Arc::clone(&stop),
+            shutdown_requested: AtomicBool::new(false),
+        });
+        let loop_ctx = Arc::clone(&ctx);
+        let accept = std::thread::Builder::new()
+            .name("fgcgw-accept".to_string())
+            .spawn(move || accept_loop(listener, loop_ctx))
+            .map_err(|e| Error::Io("spawn accept loop".to_string(), e))?;
+        Ok(Server {
+            addr,
+            ctx,
+            stop,
+            accept,
+        })
+    }
+
+    /// The bound address (resolves `:0` to the picked port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// True once a client has `POST`ed `/shutdown`. The owner of the
+    /// serve loop decides when to act on it (and then calls
+    /// [`Server::shutdown`]).
+    pub fn shutdown_requested(&self) -> bool {
+        self.ctx.shutdown_requested.load(Ordering::SeqCst)
+    }
+
+    /// Graceful stop: cease accepting, join every in-flight handler
+    /// (each drains to a written response — a held `"wait": true`
+    /// submit finishes, it is not cut off), and return the result
+    /// receivers of async jobs never polled to completion.
+    ///
+    /// The caller must keep those receivers alive across
+    /// `Coordinator::shutdown` so the coordinator's drain delivers
+    /// into live channels — dropping them first would count every
+    /// undelivered result in `lost_results` — and then drain them.
+    #[must_use = "keep the pending receivers alive across Coordinator::shutdown, then drain them"]
+    pub fn shutdown(self) -> Vec<(JobId, mpsc::Receiver<JobResult>)> {
+        self.stop.store(true, Ordering::SeqCst);
+        let handlers = self.accept.join().unwrap_or_default();
+        for h in handlers {
+            let _ = h.join();
+        }
+        let mut reg = self.ctx.registry.lock().unwrap();
+        let jobs = std::mem::take(&mut reg.jobs);
+        reg.done_order.clear();
+        reg.pending = 0;
+        drop(reg);
+        jobs.into_iter()
+            .filter_map(|(id, job)| match job {
+                WireJob::Pending { rx, .. } => Some((id, rx)),
+                WireJob::Done { .. } => None,
+            })
+            .collect()
+    }
+}
+
+fn accept_loop(listener: TcpListener, ctx: Arc<ServeCtx>) -> Vec<JoinHandle<()>> {
+    let mut handlers: Vec<JoinHandle<()>> = Vec::new();
+    while !ctx.stop.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((mut stream, _peer)) => {
+                handlers.retain(|h| !h.is_finished());
+                if handlers.len() >= ctx.cfg.max_connections {
+                    let _ = http::write_response(
+                        &mut stream,
+                        503,
+                        TEXT,
+                        b"connection capacity reached\n",
+                    );
+                    continue;
+                }
+                let conn_ctx = Arc::clone(&ctx);
+                let spawned = std::thread::Builder::new()
+                    .name("fgcgw-http".to_string())
+                    .spawn(move || handle_connection(stream, &conn_ctx));
+                match spawned {
+                    Ok(h) => handlers.push(h),
+                    Err(e) => eprintln!("[fgcgw] http handler spawn failed: {e}"),
+                }
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => std::thread::sleep(ACCEPT_POLL),
+            Err(e) => {
+                eprintln!("[fgcgw] accept error: {e}");
+                std::thread::sleep(ACCEPT_POLL);
+            }
+        }
+    }
+    handlers
+}
+
+fn handle_connection(mut stream: TcpStream, ctx: &ServeCtx) {
+    let _ = stream.set_read_timeout(Some(ctx.cfg.read_timeout));
+    let _ = stream.set_nodelay(true);
+    let req = match http::read_request(&mut stream, ctx.cfg.max_body_bytes) {
+        Ok(req) => req,
+        Err(HttpError::TooLarge) => {
+            let _ = http::write_response(&mut stream, 413, TEXT, b"request body too large\n");
+            return;
+        }
+        Err(HttpError::BadRequest(msg)) => {
+            let _ = http::write_response(&mut stream, 400, TEXT, format!("{msg}\n").as_bytes());
+            return;
+        }
+        // Transport failure (including a read timeout): nothing
+        // useful to write back.
+        Err(HttpError::Io(_)) => return,
+    };
+    let (status, content_type, body) = route(&req, ctx);
+    let _ = http::write_response(&mut stream, status, content_type, body.as_bytes());
+}
+
+fn route(req: &Request, ctx: &ServeCtx) -> (u16, &'static str, String) {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => (200, TEXT, "ok\n".to_string()),
+        ("GET", "/metrics") => (200, PROM, prometheus::render_metrics(&ctx.coord.metrics())),
+        ("POST", "/jobs") => handle_submit(req, ctx),
+        ("POST", "/shutdown") => {
+            ctx.shutdown_requested.store(true, Ordering::SeqCst);
+            (200, JSON_TYPE, "{\"status\":\"shutting-down\"}".to_string())
+        }
+        ("GET", path) if path.starts_with("/jobs/") => handle_poll(path, ctx),
+        _ => (404, TEXT, "not found\n".to_string()),
+    }
+}
+
+fn handle_submit(req: &Request, ctx: &ServeCtx) -> (u16, &'static str, String) {
+    let sr = match wire::parse_submit(&req.body) {
+        Ok(sr) => sr,
+        Err(msg) => return (400, JSON_TYPE, wire::encode_error(&msg)),
+    };
+    // Pre-validate so malformed payloads come back `400`; the
+    // coordinator re-validates at admission, but its rejection is the
+    // generic `429` the wire reserves for backpressure-style sheds.
+    if let Err(msg) = sr.payload.validate() {
+        return (400, JSON_TYPE, wire::encode_error(&format!("validation: {msg}")));
+    }
+    let options = sr.options();
+    if sr.wait {
+        match ctx.coord.submit_with_options(sr.payload, options) {
+            Ok((id, rx)) => {
+                let wait = options
+                    .deadline
+                    .map_or(WAIT_MAX, |d| d.saturating_add(WAIT_GRACE));
+                match rx.recv_timeout(wait) {
+                    Ok(result) => (200, JSON_TYPE, wire::encode_result(&result, sr.return_plan)),
+                    Err(mpsc::RecvTimeoutError::Timeout) => {
+                        // Park the receiver: the eventual (likely
+                        // deadline-shed) result drains at shutdown
+                        // instead of counting lost, and the job stays
+                        // pollable at `GET /jobs/<id>`.
+                        let mut reg = ctx.registry.lock().unwrap();
+                        if reg.pending < PENDING_MAX {
+                            reg.pending += 1;
+                            reg.jobs.insert(
+                                id,
+                                WireJob::Pending {
+                                    rx,
+                                    return_plan: sr.return_plan,
+                                },
+                            );
+                        }
+                        drop(reg);
+                        (
+                            504,
+                            JSON_TYPE,
+                            wire::encode_error(&format!(
+                                "no result within {wait:?}; job {id} remains pollable"
+                            )),
+                        )
+                    }
+                    Err(mpsc::RecvTimeoutError::Disconnected) => (
+                        500,
+                        JSON_TYPE,
+                        wire::encode_error("worker dropped the result channel"),
+                    ),
+                }
+            }
+            Err(e) => submit_error(e),
+        }
+    } else {
+        // Reserve the registry slot BEFORE submitting: admitting a
+        // job whose receiver then cannot be registered would strand
+        // its result (the worker's send would count a lost result).
+        {
+            let mut reg = ctx.registry.lock().unwrap();
+            if reg.pending >= PENDING_MAX {
+                return (
+                    429,
+                    JSON_TYPE,
+                    wire::encode_error("too many unpolled jobs; poll results or retry later"),
+                );
+            }
+            reg.pending += 1;
+        }
+        match ctx.coord.submit_with_options(sr.payload, options) {
+            Ok((id, rx)) => {
+                let mut reg = ctx.registry.lock().unwrap();
+                reg.jobs.insert(
+                    id,
+                    WireJob::Pending {
+                        rx,
+                        return_plan: sr.return_plan,
+                    },
+                );
+                drop(reg);
+                (202, JSON_TYPE, wire::encode_queued(id))
+            }
+            Err(e) => {
+                ctx.registry.lock().unwrap().pending -= 1;
+                submit_error(e)
+            }
+        }
+    }
+}
+
+fn submit_error(e: Error) -> (u16, &'static str, String) {
+    match e {
+        // Admission rejections (validation, backpressure, deadline
+        // shed, shutdown) are the client's `429` to back off on.
+        Error::Rejected(msg) => (429, JSON_TYPE, wire::encode_error(&msg)),
+        other => (500, JSON_TYPE, wire::encode_error(&other.to_string())),
+    }
+}
+
+fn handle_poll(path: &str, ctx: &ServeCtx) -> (u16, &'static str, String) {
+    let id: JobId = match path.strip_prefix("/jobs/").and_then(|s| s.parse().ok()) {
+        Some(id) => id,
+        None => return (400, JSON_TYPE, wire::encode_error("job id must be an integer")),
+    };
+    let mut reg = ctx.registry.lock().unwrap();
+    let Some(job) = reg.jobs.remove(&id) else {
+        return (
+            404,
+            JSON_TYPE,
+            wire::encode_error("unknown job id (never submitted here, or evicted after retrieval)"),
+        );
+    };
+    match job {
+        WireJob::Done { status, body } => {
+            let response = (status, JSON_TYPE, body.clone());
+            reg.jobs.insert(id, WireJob::Done { status, body });
+            response
+        }
+        WireJob::Pending { rx, return_plan } => match rx.try_recv() {
+            Err(mpsc::TryRecvError::Empty) => {
+                reg.jobs.insert(id, WireJob::Pending { rx, return_plan });
+                (202, JSON_TYPE, wire::encode_pending(id))
+            }
+            Ok(result) => {
+                let body = wire::encode_result(&result, return_plan);
+                reg.finish(id, 200, body.clone());
+                (200, JSON_TYPE, body)
+            }
+            Err(mpsc::TryRecvError::Disconnected) => {
+                let body = wire::encode_error("worker dropped the result channel");
+                reg.finish(id, 500, body.clone());
+                (500, JSON_TYPE, body)
+            }
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_finish_caps_the_done_cache() {
+        let mut reg = Registry::default();
+        for id in 0..(DONE_CACHE_MAX as JobId + 10) {
+            reg.pending += 1;
+            // Simulate the handler taking the pending entry out
+            // before finishing it.
+            reg.finish(id, 200, format!("{{\"id\":{id}}}"));
+        }
+        assert_eq!(reg.jobs.len(), DONE_CACHE_MAX);
+        assert_eq!(reg.done_order.len(), DONE_CACHE_MAX);
+        // Oldest evicted, newest kept.
+        assert!(!reg.jobs.contains_key(&0));
+        assert!(reg.jobs.contains_key(&(DONE_CACHE_MAX as JobId + 9)));
+        assert_eq!(reg.pending, 0);
+    }
+}

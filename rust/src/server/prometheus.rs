@@ -1,0 +1,221 @@
+//! Prometheus text exposition (format 0.0.4) of a
+//! [`MetricsSnapshot`].
+//!
+//! Scrape cost model: the whole body is counters/gauges plus
+//! `LATENCY_FAMILIES.len() × LATENCY_BUCKETS` fixed histogram series —
+//! every size in the render is a compile-time constant, so the scrape
+//! path allocates `O(1)` in traffic served (the histogram rework in
+//! `coordinator::metrics` exists exactly so this holds; the old `Vec`
+//! reservoir would have made each scrape clone + sort every latency
+//! ever recorded).
+//!
+//! The exposition format (names, labels, types) is pinned by a
+//! golden-file test — change it deliberately or not at all.
+
+use crate::coordinator::{bucket_upper_us, MetricsSnapshot, LATENCY_BUCKETS, LATENCY_FAMILIES};
+use std::fmt::Write as _;
+
+/// Render one snapshot as a Prometheus text-format body.
+pub fn render_metrics(s: &MetricsSnapshot) -> String {
+    let mut out = String::with_capacity(16 * 1024);
+
+    counter(&mut out, "fgcgw_jobs_submitted_total", "Jobs admitted by the coordinator.", s.submitted);
+    counter(&mut out, "fgcgw_jobs_rejected_total", "Jobs rejected at admission (validation, backpressure, shutdown).", s.rejected);
+    counter(&mut out, "fgcgw_jobs_completed_total", "Jobs completed successfully.", s.completed);
+    counter(&mut out, "fgcgw_jobs_failed_total", "Jobs that errored during solve.", s.failed);
+
+    header(&mut out, "fgcgw_backend_jobs_total", "Completions per executing backend.", "counter");
+    series(&mut out, "fgcgw_backend_jobs_total", "backend", "native-fgc", s.native_fgc);
+    series(&mut out, "fgcgw_backend_jobs_total", "backend", "native-naive", s.native_naive);
+    series(&mut out, "fgcgw_backend_jobs_total", "backend", "native-lowrank", s.native_lowrank);
+    series(&mut out, "fgcgw_backend_jobs_total", "backend", "pjrt", s.pjrt);
+
+    counter(&mut out, "fgcgw_warm_hits_total", "Jobs served by an already-warm worker workspace.", s.warm_hits);
+    counter(&mut out, "fgcgw_warm_misses_total", "Jobs that forced a workspace build.", s.warm_misses);
+    counter(&mut out, "fgcgw_steals_total", "Work-steal events across the worker pool.", s.steals);
+    counter(&mut out, "fgcgw_sheds_total", "Depth-aware pin sheds (a subset of steals).", s.sheds);
+    counter(&mut out, "fgcgw_worker_panics_total", "Worker panics caught by the isolation layer.", s.panics);
+    counter(&mut out, "fgcgw_worker_respawns_total", "Worker solver-state respawns after caught panics.", s.respawns);
+
+    header(&mut out, "fgcgw_retries_total", "Degradation-ladder retries per rung.", "counter");
+    series(&mut out, "fgcgw_retries_total", "rung", "regime", s.retries_regime);
+    series(&mut out, "fgcgw_retries_total", "rung", "anneal", s.retries_anneal);
+    series(&mut out, "fgcgw_retries_total", "rung", "backend", s.retries_backend);
+
+    counter(&mut out, "fgcgw_deadline_sheds_total", "Jobs shed because their deadline passed or could not be met.", s.deadline_sheds);
+    counter(&mut out, "fgcgw_quarantines_total", "Jobs quarantined after repeatedly panicking the worker.", s.quarantines);
+    counter(&mut out, "fgcgw_batch_splits_total", "Fused batches split for blast-radius containment.", s.batch_splits);
+    counter(&mut out, "fgcgw_lost_results_total", "Results dropped because the receiver went away.", s.lost_results);
+    counter(&mut out, "fgcgw_f32_served_total", "Jobs served on the f32 presolve + f64 refinement tier.", s.f32_served);
+    counter(&mut out, "fgcgw_screened_candidates_total", "Candidates scored by the sliced screening tier.", s.screened);
+    counter(&mut out, "fgcgw_escalated_candidates_total", "Screened candidates escalated to exact entropic solves.", s.escalated);
+
+    gauge(&mut out, "fgcgw_warm_cache_units", "Live warm-cache occupancy in capacity units (f64-tier workspace = 2, f32-tier = 1).", s.warm_units);
+
+    header(&mut out, "fgcgw_shard_depth", "Queue depth per shard at scrape time.", "gauge");
+    for (i, depth) in s.shard_depths.iter().enumerate() {
+        let _ = writeln!(out, "fgcgw_shard_depth{{shard=\"{i}\"}} {depth}");
+    }
+
+    header(&mut out, "fgcgw_mean_queue_seconds", "Mean queue wait over finished (completed + failed) jobs.", "gauge");
+    let _ = writeln!(out, "fgcgw_mean_queue_seconds {}", s.mean_queue.as_secs_f64());
+    header(&mut out, "fgcgw_mean_solve_seconds", "Mean solve time over finished (completed + failed) jobs.", "gauge");
+    let _ = writeln!(out, "fgcgw_mean_solve_seconds {}", s.mean_solve.as_secs_f64());
+
+    header(&mut out, "fgcgw_job_latency_seconds", "End-to-end job latency (queue + solve) per variant family.", "histogram");
+    for (fi, family) in LATENCY_FAMILIES.iter().enumerate() {
+        let h = &s.family_latency[fi];
+        let mut cum = 0u64;
+        for (i, &b) in h.buckets.iter().enumerate() {
+            cum += b;
+            if i + 1 == LATENCY_BUCKETS {
+                let _ = writeln!(
+                    out,
+                    "fgcgw_job_latency_seconds_bucket{{family=\"{family}\",le=\"+Inf\"}} {cum}"
+                );
+            } else {
+                let _ = writeln!(
+                    out,
+                    "fgcgw_job_latency_seconds_bucket{{family=\"{family}\",le=\"{}\"}} {cum}",
+                    bucket_upper_us(i) as f64 / 1e6
+                );
+            }
+        }
+        let _ = writeln!(
+            out,
+            "fgcgw_job_latency_seconds_sum{{family=\"{family}\"}} {}",
+            h.sum_us as f64 / 1e6
+        );
+        let _ = writeln!(
+            out,
+            "fgcgw_job_latency_seconds_count{{family=\"{family}\"}} {}",
+            h.count
+        );
+    }
+    out
+}
+
+fn header(out: &mut String, name: &str, help: &str, kind: &str) {
+    let _ = writeln!(out, "# HELP {name} {help}");
+    let _ = writeln!(out, "# TYPE {name} {kind}");
+}
+
+fn counter(out: &mut String, name: &str, help: &str, value: u64) {
+    header(out, name, help, "counter");
+    let _ = writeln!(out, "{name} {value}");
+}
+
+fn gauge(out: &mut String, name: &str, help: &str, value: u64) {
+    header(out, name, help, "gauge");
+    let _ = writeln!(out, "{name} {value}");
+}
+
+fn series(out: &mut String, name: &str, label: &str, label_value: &str, value: u64) {
+    let _ = writeln!(out, "{name}{{{label}=\"{label_value}\"}} {value}");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{BackendChoice, ServiceMetrics};
+    use std::time::Duration;
+
+    #[test]
+    fn exposition_counts_match_the_snapshot() {
+        let m = ServiceMetrics::new();
+        for _ in 0..5 {
+            m.on_submit();
+        }
+        m.on_reject();
+        m.on_complete(
+            &BackendChoice::NativeFgc,
+            "grid1d",
+            true,
+            Duration::from_micros(3),
+            Duration::from_micros(100),
+        );
+        m.on_complete(
+            &BackendChoice::NativeLowRank,
+            "dense",
+            false,
+            Duration::from_micros(10),
+            Duration::from_micros(900),
+        );
+        let mut s = m.snapshot();
+        s.shard_depths = vec![2, 0, 1];
+        let text = render_metrics(&s);
+        for needle in [
+            "fgcgw_jobs_submitted_total 5",
+            "fgcgw_jobs_rejected_total 1",
+            "fgcgw_jobs_completed_total 1",
+            "fgcgw_jobs_failed_total 1",
+            "fgcgw_backend_jobs_total{backend=\"native-fgc\"} 1",
+            "fgcgw_backend_jobs_total{backend=\"native-lowrank\"} 1",
+            "fgcgw_shard_depth{shard=\"0\"} 2",
+            "fgcgw_shard_depth{shard=\"2\"} 1",
+            "fgcgw_job_latency_seconds_count{family=\"grid1d\"} 1",
+            "fgcgw_job_latency_seconds_count{family=\"dense\"} 1",
+            "fgcgw_job_latency_seconds_count{family=\"screen\"} 0",
+            "fgcgw_job_latency_seconds_bucket{family=\"grid1d\",le=\"+Inf\"} 1",
+            "# TYPE fgcgw_job_latency_seconds histogram",
+            "# TYPE fgcgw_warm_cache_units gauge",
+        ] {
+            assert!(text.contains(needle), "missing {needle:?} in:\n{text}");
+        }
+        // 103µs lands in the (63µs, 127µs] bucket: cumulative counts
+        // must flip from 0 to 1 across that boundary.
+        assert!(text.contains("fgcgw_job_latency_seconds_bucket{family=\"grid1d\",le=\"0.000063\"} 0"));
+        assert!(text.contains("fgcgw_job_latency_seconds_bucket{family=\"grid1d\",le=\"0.000127\"} 1"));
+    }
+
+    #[test]
+    fn histogram_buckets_are_cumulative_and_end_at_count() {
+        let m = ServiceMetrics::new();
+        for us in [1u64, 10, 100, 1000, 10_000] {
+            m.on_complete(
+                &BackendChoice::NativeFgc,
+                "screen",
+                true,
+                Duration::ZERO,
+                Duration::from_micros(us),
+            );
+        }
+        let text = render_metrics(&m.snapshot());
+        let mut last = 0u64;
+        let mut bucket_lines = 0;
+        for line in text.lines() {
+            if let Some(rest) = line.strip_prefix("fgcgw_job_latency_seconds_bucket{family=\"screen\",") {
+                let value: u64 = rest.rsplit(' ').next().unwrap().parse().unwrap();
+                assert!(value >= last, "buckets must be cumulative: {line}");
+                last = value;
+                bucket_lines += 1;
+            }
+        }
+        assert_eq!(bucket_lines, crate::coordinator::LATENCY_BUCKETS);
+        assert_eq!(last, 5, "+Inf bucket must equal the count");
+        assert!(text.contains("fgcgw_job_latency_seconds_count{family=\"screen\"} 5"));
+    }
+
+    #[test]
+    fn scrape_size_is_traffic_independent() {
+        let quiet = ServiceMetrics::new();
+        let busy = ServiceMetrics::new();
+        for i in 0..10_000u64 {
+            busy.on_submit();
+            busy.on_complete(
+                &BackendChoice::NativeFgc,
+                "grid1d",
+                true,
+                Duration::from_micros(i % 97),
+                Duration::from_micros(i % 1013),
+            );
+        }
+        let a = render_metrics(&quiet.snapshot()).len();
+        let b = render_metrics(&busy.snapshot()).len();
+        // Only digit widths may differ — the series set is fixed.
+        assert!(
+            (a as i64 - b as i64).unsigned_abs() < 512,
+            "scrape body size should not scale with traffic ({a} vs {b})"
+        );
+    }
+}

@@ -1,0 +1,626 @@
+//! Wire payload schema: JSON submit bodies onto
+//! [`JobPayload`]/[`JobOptions`], and [`JobResult`]s back to JSON.
+//!
+//! Submit body shape:
+//!
+//! ```json
+//! {
+//!   "job": {
+//!     "type": "gw1d|fgw1d|gw2d|gw3d|gw_dense|gw_mixed|gw_screen",
+//!     "epsilon": 0.01,
+//!     ... variant fields (distributions as arrays, matrices as
+//!         arrays of row arrays, grids as {"dim","n","h","k"}) ...
+//!   },
+//!   "timeout_ms": 5000,          // optional → JobOptions::deadline
+//!   "wait": false,               // true = respond with the result
+//!   "max_retries": 3,            // optional ladder budget
+//!   "precision": "f64|f32|auto", // optional tier override
+//!   "coupling_rank": "auto",     // "auto" | "full" | positive int
+//!   "return_plan": false         // include the transport plan
+//! }
+//! ```
+//!
+//! Floats are emitted with Rust's shortest-round-trip `Display` and
+//! parsed with `str::parse::<f64>`, so a value that crosses the wire
+//! restores to identical bits — the loopback tests pin wire results
+//! bit-for-bit against the in-process path.
+
+use super::json::{self, Json};
+use crate::coordinator::{JobId, JobOptions, JobPayload, JobResult};
+use crate::grid::{Grid1d, Grid2d, Grid3d};
+use crate::gw::{CouplingRank, Geometry, Precision};
+use crate::linalg::Mat;
+use std::fmt::Write as _;
+
+/// A decoded `POST /jobs` body.
+#[derive(Debug)]
+pub struct SubmitRequest {
+    /// The work to enqueue.
+    pub payload: JobPayload,
+    /// Wire timeout; maps onto [`JobOptions::deadline`].
+    pub timeout_ms: Option<u64>,
+    /// `true` holds the connection until the result (or timeout).
+    pub wait: bool,
+    /// Degradation-ladder budget override.
+    pub max_retries: Option<u32>,
+    /// Precision-tier override.
+    pub precision: Option<Precision>,
+    /// Coupling-rank override (`None` = service default / auto).
+    pub coupling: Option<CouplingRank>,
+    /// Include the transport plan in the result body.
+    pub return_plan: bool,
+}
+
+impl SubmitRequest {
+    /// The [`JobOptions`] this request resolves to.
+    pub fn options(&self) -> JobOptions {
+        JobOptions {
+            deadline: self.timeout_ms.map(std::time::Duration::from_millis),
+            max_retries: self
+                .max_retries
+                .unwrap_or_else(|| JobOptions::default().max_retries),
+            precision: self.precision,
+            coupling: self.coupling,
+        }
+    }
+}
+
+/// Parse a submit body. Errors are client-facing messages (the
+/// handler wraps them in a `400`).
+pub fn parse_submit(body: &[u8]) -> Result<SubmitRequest, String> {
+    let text = std::str::from_utf8(body).map_err(|_| "body is not UTF-8".to_string())?;
+    let root = Json::parse(text)?;
+    let job = root
+        .get("job")
+        .ok_or_else(|| "missing `job` object".to_string())?;
+    let payload = parse_payload(job)?;
+    let timeout_ms = match root.get("timeout_ms") {
+        None | Some(Json::Null) => None,
+        Some(v) => Some(
+            v.as_u64()
+                .ok_or_else(|| "`timeout_ms` must be a non-negative integer".to_string())?,
+        ),
+    };
+    let wait = match root.get("wait") {
+        None | Some(Json::Null) => false,
+        Some(v) => v
+            .as_bool()
+            .ok_or_else(|| "`wait` must be a boolean".to_string())?,
+    };
+    let return_plan = match root.get("return_plan") {
+        None | Some(Json::Null) => false,
+        Some(v) => v
+            .as_bool()
+            .ok_or_else(|| "`return_plan` must be a boolean".to_string())?,
+    };
+    let max_retries = match root.get("max_retries") {
+        None | Some(Json::Null) => None,
+        Some(v) => Some(
+            v.as_u64()
+                .and_then(|r| u32::try_from(r).ok())
+                .ok_or_else(|| "`max_retries` must be a small non-negative integer".to_string())?,
+        ),
+    };
+    let precision = match root.get("precision") {
+        None | Some(Json::Null) => None,
+        Some(v) => {
+            let s = v
+                .as_str()
+                .ok_or_else(|| "`precision` must be \"f64\", \"f32\", or \"auto\"".to_string())?;
+            Some(s.parse::<Precision>().map_err(|e| e.to_string())?)
+        }
+    };
+    let coupling = match root.get("coupling_rank") {
+        None | Some(Json::Null) => None,
+        Some(Json::Str(s)) if s == "auto" => None,
+        Some(Json::Str(s)) if s == "full" => Some(CouplingRank::Full),
+        Some(v) => match v.as_usize() {
+            Some(r) if r > 0 => Some(CouplingRank::LowRank(r)),
+            _ => {
+                return Err(
+                    "`coupling_rank` must be \"auto\", \"full\", or a positive integer".to_string(),
+                )
+            }
+        },
+    };
+    Ok(SubmitRequest {
+        payload,
+        timeout_ms,
+        wait,
+        max_retries,
+        precision,
+        coupling,
+        return_plan,
+    })
+}
+
+fn parse_payload(job: &Json) -> Result<JobPayload, String> {
+    let ty = job
+        .get("type")
+        .and_then(Json::as_str)
+        .ok_or_else(|| "`job.type` must be a string".to_string())?;
+    let epsilon = job
+        .get("epsilon")
+        .and_then(Json::as_f64)
+        .ok_or_else(|| "`job.epsilon` must be a number".to_string())?;
+    match ty {
+        "gw1d" => Ok(JobPayload::Gw1d {
+            u: dist(job, "u")?,
+            v: dist(job, "v")?,
+            k: exponent(job)?,
+            epsilon,
+        }),
+        "fgw1d" => Ok(JobPayload::Fgw1d {
+            u: dist(job, "u")?,
+            v: dist(job, "v")?,
+            feature_cost: matrix(required(job, "feature_cost")?, "job.feature_cost")?,
+            theta: job
+                .get("theta")
+                .and_then(Json::as_f64)
+                .ok_or_else(|| "`job.theta` must be a number".to_string())?,
+            k: exponent(job)?,
+            epsilon,
+        }),
+        "gw2d" => Ok(JobPayload::Gw2d {
+            n: side(job)?,
+            u: dist(job, "u")?,
+            v: dist(job, "v")?,
+            k: exponent(job)?,
+            epsilon,
+        }),
+        "gw3d" => Ok(JobPayload::Gw3d {
+            n: side(job)?,
+            u: dist(job, "u")?,
+            v: dist(job, "v")?,
+            k: exponent(job)?,
+            epsilon,
+        }),
+        "gw_dense" => Ok(JobPayload::gw_dense(
+            matrix(required(job, "dx")?, "job.dx")?,
+            matrix(required(job, "dy")?, "job.dy")?,
+            dist(job, "u")?,
+            dist(job, "v")?,
+            epsilon,
+        )),
+        "gw_mixed" => Ok(JobPayload::gw_mixed(
+            matrix(required(job, "dx")?, "job.dx")?,
+            parse_grid(required(job, "grid")?)?,
+            dist(job, "u")?,
+            dist(job, "v")?,
+            epsilon,
+        )),
+        "gw_screen" => {
+            let query = matrix(required(job, "query")?, "job.query")?;
+            let candidates = required(job, "candidates")?
+                .as_arr()
+                .ok_or_else(|| "`job.candidates` must be an array of matrices".to_string())?
+                .iter()
+                .map(|c| matrix(c, "job.candidates[..]"))
+                .collect::<Result<Vec<Mat>, String>>()?;
+            let top_k = job
+                .get("top_k")
+                .and_then(Json::as_usize)
+                .ok_or_else(|| "`job.top_k` must be a positive integer".to_string())?;
+            let slices = match job.get("slices") {
+                None | Some(Json::Null) => 0,
+                Some(v) => v
+                    .as_usize()
+                    .ok_or_else(|| "`job.slices` must be a non-negative integer".to_string())?,
+            };
+            let warm_start = match job.get("warm_start") {
+                None | Some(Json::Null) => false,
+                Some(v) => v
+                    .as_bool()
+                    .ok_or_else(|| "`job.warm_start` must be a boolean".to_string())?,
+            };
+            Ok(JobPayload::gw_screen(
+                query, candidates, top_k, slices, warm_start, epsilon,
+            ))
+        }
+        other => Err(format!("unknown job type `{other}`")),
+    }
+}
+
+fn required<'a>(job: &'a Json, key: &str) -> Result<&'a Json, String> {
+    job.get(key)
+        .ok_or_else(|| format!("missing `job.{key}` field"))
+}
+
+fn dist(job: &Json, key: &str) -> Result<Vec<f64>, String> {
+    let arr = job
+        .get(key)
+        .and_then(Json::as_arr)
+        .ok_or_else(|| format!("`job.{key}` must be an array of numbers"))?;
+    arr.iter()
+        .map(|v| {
+            v.as_f64()
+                .ok_or_else(|| format!("`job.{key}` must contain only numbers"))
+        })
+        .collect()
+}
+
+fn matrix(v: &Json, name: &str) -> Result<Mat, String> {
+    let rows = v
+        .as_arr()
+        .ok_or_else(|| format!("`{name}` must be an array of row arrays"))?;
+    if rows.is_empty() {
+        return Err(format!("`{name}` has no rows"));
+    }
+    let mut data = Vec::new();
+    let mut cols = None;
+    for row in rows {
+        let row = row
+            .as_arr()
+            .ok_or_else(|| format!("`{name}` rows must be arrays"))?;
+        match cols {
+            None => cols = Some(row.len()),
+            Some(c) if c == row.len() => {}
+            Some(c) => {
+                return Err(format!(
+                    "`{name}` rows have inconsistent lengths ({c} vs {})",
+                    row.len()
+                ))
+            }
+        }
+        for x in row {
+            data.push(
+                x.as_f64()
+                    .ok_or_else(|| format!("`{name}` must contain only numbers"))?,
+            );
+        }
+    }
+    let cols = cols.unwrap_or(0);
+    if cols == 0 {
+        return Err(format!("`{name}` has empty rows"));
+    }
+    Mat::from_vec(rows.len(), cols, data).map_err(|e| e.to_string())
+}
+
+/// Build the mixed payload's grid descriptor. The grid structs'
+/// `new` constructors assert on degenerate inputs, so this uses the
+/// public-field literals and lets [`JobPayload::validate`] reject bad
+/// descriptors with a clean `400` instead of panicking a handler.
+fn parse_grid(v: &Json) -> Result<Geometry, String> {
+    let dim = v
+        .get("dim")
+        .and_then(Json::as_u64)
+        .ok_or_else(|| "`grid.dim` must be 1, 2, or 3".to_string())?;
+    let n = v
+        .get("n")
+        .and_then(Json::as_usize)
+        .ok_or_else(|| "`grid.n` must be a positive integer".to_string())?;
+    let h = v
+        .get("h")
+        .and_then(Json::as_f64)
+        .ok_or_else(|| "`grid.h` must be a positive number".to_string())?;
+    let k = match v.get("k") {
+        None | Some(Json::Null) => 1,
+        Some(x) => x
+            .as_u64()
+            .and_then(|k| u32::try_from(k).ok())
+            .ok_or_else(|| "`grid.k` must be a small non-negative integer".to_string())?,
+    };
+    match dim {
+        1 => Ok(Geometry::Grid1d {
+            grid: Grid1d { n, h },
+            k,
+        }),
+        2 => Ok(Geometry::Grid2d {
+            grid: Grid2d { n, h },
+            k,
+        }),
+        3 => Ok(Geometry::Grid3d {
+            grid: Grid3d { n, h },
+            k,
+        }),
+        other => Err(format!("`grid.dim` must be 1, 2, or 3, got {other}")),
+    }
+}
+
+/// Distance exponent: optional, defaults to 1.
+fn exponent(job: &Json) -> Result<u32, String> {
+    match job.get("k") {
+        None | Some(Json::Null) => Ok(1),
+        Some(v) => v
+            .as_u64()
+            .and_then(|k| u32::try_from(k).ok())
+            .ok_or_else(|| "`job.k` must be a small non-negative integer".to_string()),
+    }
+}
+
+fn side(job: &Json) -> Result<usize, String> {
+    job.get("n")
+        .and_then(Json::as_usize)
+        .ok_or_else(|| "`job.n` must be a positive integer".to_string())
+}
+
+/// `202 Accepted` body for an async submission.
+pub fn encode_queued(id: JobId) -> String {
+    format!("{{\"id\":{id},\"status\":\"queued\"}}")
+}
+
+/// `202 Accepted` body for a poll that found the job still in flight.
+pub fn encode_pending(id: JobId) -> String {
+    format!("{{\"id\":{id},\"status\":\"pending\"}}")
+}
+
+/// Error body (`{"error": ...}`).
+pub fn encode_error(msg: &str) -> String {
+    let mut out = String::from("{\"error\":");
+    json::write_str(&mut out, msg);
+    out.push('}');
+    out
+}
+
+/// Terminal result body. `return_plan` gates the (possibly large)
+/// transport plan; the screening report always rides along when
+/// present.
+pub fn encode_result(r: &JobResult, return_plan: bool) -> String {
+    let mut out = String::with_capacity(256);
+    let _ = write!(
+        out,
+        "{{\"id\":{},\"status\":\"done\",\"ok\":{}",
+        r.id,
+        r.objective.is_ok()
+    );
+    match &r.objective {
+        Ok(x) => {
+            out.push_str(",\"objective\":");
+            json::write_f64(&mut out, *x);
+        }
+        Err(e) => {
+            out.push_str(",\"error\":");
+            json::write_str(&mut out, e);
+        }
+    }
+    out.push_str(",\"backend\":");
+    json::write_str(&mut out, &r.backend.to_string());
+    out.push_str(",\"family\":");
+    json::write_str(&mut out, r.family);
+    let _ = write!(
+        out,
+        ",\"queue_us\":{},\"solve_us\":{}",
+        r.queue_time.as_micros(),
+        r.solve_time.as_micros()
+    );
+    if return_plan {
+        if let Some(plan) = &r.plan {
+            out.push_str(",\"plan\":");
+            write_mat(&mut out, plan);
+        }
+    }
+    if let Some(sc) = &r.screen {
+        out.push_str(",\"screen\":{\"scores\":[");
+        for (i, s) in sc.scores.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            json::write_f64(&mut out, *s);
+        }
+        let _ = write!(out, "],\"slices\":{},\"hits\":[", sc.slices);
+        for (i, h) in sc.hits.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            let _ = write!(out, "{{\"candidate\":{},\"sliced_score\":", h.candidate);
+            json::write_f64(&mut out, h.sliced_score);
+            out.push_str(",\"objective\":");
+            json::write_f64(&mut out, h.objective);
+            out.push('}');
+        }
+        out.push_str("]}");
+    }
+    out.push('}');
+    out
+}
+
+fn write_mat(out: &mut String, m: &Mat) {
+    out.push('[');
+    for i in 0..m.rows() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push('[');
+        for j in 0..m.cols() {
+            if j > 0 {
+                out.push(',');
+            }
+            json::write_f64(out, m[(i, j)]);
+        }
+        out.push(']');
+    }
+    out.push(']');
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{BackendChoice, ScreenHit, ScreenOutcome};
+    use std::time::Duration;
+
+    #[test]
+    fn parses_a_gw1d_submit() {
+        let body = br#"{
+            "job": {"type": "gw1d", "u": [0.5, 0.5], "v": [0.25, 0.75], "k": 2, "epsilon": 0.01},
+            "timeout_ms": 5000, "wait": true, "precision": "f32",
+            "coupling_rank": "full", "max_retries": 1, "return_plan": true
+        }"#;
+        let sr = parse_submit(body).unwrap();
+        match &sr.payload {
+            JobPayload::Gw1d { u, v, k, epsilon } => {
+                assert_eq!(u, &[0.5, 0.5]);
+                assert_eq!(v, &[0.25, 0.75]);
+                assert_eq!(*k, 2);
+                assert_eq!(*epsilon, 0.01);
+            }
+            other => panic!("wrong payload {other:?}"),
+        }
+        assert!(sr.wait);
+        assert!(sr.return_plan);
+        let opts = sr.options();
+        assert_eq!(opts.deadline, Some(Duration::from_millis(5000)));
+        assert_eq!(opts.max_retries, 1);
+        assert_eq!(opts.precision, Some(Precision::F32Refine));
+        assert_eq!(opts.coupling, Some(CouplingRank::Full));
+    }
+
+    #[test]
+    fn defaults_match_in_process_defaults() {
+        let body = br#"{"job": {"type": "gw1d", "u": [0.5, 0.5], "v": [0.5, 0.5], "epsilon": 0.01}}"#;
+        let sr = parse_submit(body).unwrap();
+        assert!(!sr.wait);
+        assert!(!sr.return_plan);
+        assert_eq!(sr.options(), JobOptions::default());
+        match sr.payload {
+            JobPayload::Gw1d { k, .. } => assert_eq!(k, 1, "exponent defaults to 1"),
+            other => panic!("wrong payload {other:?}"),
+        }
+    }
+
+    #[test]
+    fn parses_dense_mixed_and_screen_payloads() {
+        let dense = br#"{"job": {"type": "gw_dense",
+            "dx": [[0,1],[1,0]], "dy": [[0,2],[2,0]],
+            "u": [0.5,0.5], "v": [0.5,0.5], "epsilon": 0.05}}"#;
+        let sr = parse_submit(dense).unwrap();
+        assert!(sr.payload.validate().is_ok(), "{:?}", sr.payload.validate());
+        assert_eq!(sr.payload.family(), "dense");
+
+        let mixed = br#"{"job": {"type": "gw_mixed",
+            "dx": [[0,1],[1,0]], "grid": {"dim": 2, "n": 2, "h": 1.0},
+            "u": [0.5,0.5], "v": [0.25,0.25,0.25,0.25], "epsilon": 0.05}}"#;
+        let sr = parse_submit(mixed).unwrap();
+        assert!(sr.payload.validate().is_ok(), "{:?}", sr.payload.validate());
+        assert_eq!(sr.payload.family(), "mixed");
+
+        let screen = br#"{"job": {"type": "gw_screen",
+            "query": [[0,0],[1,1]], "candidates": [[[0,0],[2,2]], [[0,1],[1,0]]],
+            "top_k": 1, "slices": 4, "epsilon": 0.05}}"#;
+        let sr = parse_submit(screen).unwrap();
+        assert!(sr.payload.validate().is_ok(), "{:?}", sr.payload.validate());
+        match &sr.payload {
+            JobPayload::GwScreen {
+                candidates, top_k, slices, warm_start, ..
+            } => {
+                assert_eq!(candidates.len(), 2);
+                assert_eq!(*top_k, 1);
+                assert_eq!(*slices, 4);
+                assert!(!*warm_start);
+            }
+            other => panic!("wrong payload {other:?}"),
+        }
+    }
+
+    #[test]
+    fn degenerate_grid_descriptor_parses_then_fails_validation() {
+        // n = 1 would assert inside Grid2d::new; the wire layer must
+        // instead surface a clean validation error.
+        let body = br#"{"job": {"type": "gw_mixed",
+            "dx": [[0]], "grid": {"dim": 2, "n": 1, "h": 1.0},
+            "u": [1.0], "v": [1.0], "epsilon": 0.05}}"#;
+        let sr = parse_submit(body).unwrap();
+        assert!(sr.payload.validate().is_err());
+    }
+
+    #[test]
+    fn submit_errors_are_descriptive() {
+        for (body, needle) in [
+            (&b"not json"[..], "unexpected"),
+            (br#"{"jobs": {}}"#, "missing `job`"),
+            (br#"{"job": {"type": "warp", "epsilon": 1}}"#, "unknown job type"),
+            (
+                br#"{"job": {"type": "gw1d", "u": [0.5, "x"], "v": [1.0], "epsilon": 1}}"#,
+                "only numbers",
+            ),
+            (
+                br#"{"job": {"type": "gw_dense", "dx": [[0,1],[1]], "dy": [[0]], "u": [1.0], "v": [1.0], "epsilon": 1}}"#,
+                "inconsistent",
+            ),
+            (
+                br#"{"job": {"type": "gw1d", "u": [0.5,0.5], "v": [0.5,0.5], "epsilon": 0.01}, "timeout_ms": -5}"#,
+                "timeout_ms",
+            ),
+            (
+                br#"{"job": {"type": "gw1d", "u": [0.5,0.5], "v": [0.5,0.5], "epsilon": 0.01}, "coupling_rank": 0}"#,
+                "coupling_rank",
+            ),
+        ] {
+            let err = parse_submit(body).unwrap_err();
+            assert!(err.contains(needle), "{err:?} should mention {needle:?}");
+        }
+    }
+
+    #[test]
+    fn result_encoding_round_trips_floats_exactly() {
+        let objective = std::f64::consts::PI / 7.0;
+        let plan = Mat::from_fn(2, 3, |i, j| 1.0 / (1.0 + i as f64 + 3.0 * j as f64));
+        let r = JobResult {
+            id: 42,
+            objective: Ok(objective),
+            plan: Some(plan.clone()),
+            backend: BackendChoice::NativeFgc,
+            family: "grid1d",
+            queue_time: Duration::from_micros(17),
+            solve_time: Duration::from_micros(3000),
+            screen: Some(ScreenOutcome {
+                scores: vec![0.125, 1.0 / 3.0],
+                hits: vec![ScreenHit {
+                    candidate: 1,
+                    sliced_score: 1.0 / 3.0,
+                    objective: 0.7,
+                }],
+                slices: 8,
+            }),
+        };
+        let body = encode_result(&r, true);
+        let v = Json::parse(&body).unwrap();
+        assert_eq!(v.get("id").and_then(Json::as_u64), Some(42));
+        assert_eq!(v.get("ok").and_then(Json::as_bool), Some(true));
+        assert_eq!(v.get("status").and_then(Json::as_str), Some("done"));
+        assert_eq!(v.get("backend").and_then(Json::as_str), Some("native-fgc"));
+        assert_eq!(v.get("family").and_then(Json::as_str), Some("grid1d"));
+        assert_eq!(v.get("queue_us").and_then(Json::as_u64), Some(17));
+        let got = v.get("objective").and_then(Json::as_f64).unwrap();
+        assert_eq!(got.to_bits(), objective.to_bits());
+        let rows = v.get("plan").and_then(Json::as_arr).unwrap();
+        assert_eq!(rows.len(), 2);
+        for (i, row) in rows.iter().enumerate() {
+            let row = row.as_arr().unwrap();
+            assert_eq!(row.len(), 3);
+            for (j, x) in row.iter().enumerate() {
+                assert_eq!(x.as_f64().unwrap().to_bits(), plan[(i, j)].to_bits());
+            }
+        }
+        let screen = v.get("screen").unwrap();
+        let scores = screen.get("scores").and_then(Json::as_arr).unwrap();
+        assert_eq!(scores[1].as_f64().unwrap().to_bits(), (1.0f64 / 3.0).to_bits());
+        assert_eq!(screen.get("slices").and_then(Json::as_u64), Some(8));
+        let hits = screen.get("hits").and_then(Json::as_arr).unwrap();
+        assert_eq!(hits[0].get("candidate").and_then(Json::as_u64), Some(1));
+
+        // Plan elided unless asked for.
+        let no_plan = encode_result(&r, false);
+        assert!(Json::parse(&no_plan).unwrap().get("plan").is_none());
+    }
+
+    #[test]
+    fn failed_results_carry_the_error() {
+        let r = JobResult {
+            id: 7,
+            objective: Err("sinkhorn diverged".to_string()),
+            plan: None,
+            backend: BackendChoice::NativeNaive,
+            family: "dense",
+            queue_time: Duration::ZERO,
+            solve_time: Duration::ZERO,
+            screen: None,
+        };
+        let v = Json::parse(&encode_result(&r, false)).unwrap();
+        assert_eq!(v.get("ok").and_then(Json::as_bool), Some(false));
+        assert_eq!(
+            v.get("error").and_then(Json::as_str),
+            Some("sinkhorn diverged")
+        );
+        assert!(v.get("objective").is_none());
+    }
+}

@@ -15,6 +15,7 @@
 //! (spawn-per-solve design), and OS thread state is allocated by the
 //! runtime, not by the numeric path under test.
 
+use fgc_gw::coordinator::{BackendChoice, ServiceMetrics, LATENCY_FAMILIES};
 use fgc_gw::grid::Grid1d;
 use fgc_gw::gw::{
     coot_into, CootConfig, CootData, CootWorkspace, EntropicGw, EntropicUgw, Geometry,
@@ -28,10 +29,12 @@ use std::sync::atomic::{AtomicU64, Ordering};
 struct CountingAlloc;
 
 static ALLOCATIONS: AtomicU64 = AtomicU64::new(0);
+static ALLOCATED_BYTES: AtomicU64 = AtomicU64::new(0);
 
 unsafe impl GlobalAlloc for CountingAlloc {
     unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
         ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        ALLOCATED_BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
         System.alloc(layout)
     }
 
@@ -41,6 +44,7 @@ unsafe impl GlobalAlloc for CountingAlloc {
 
     unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
         ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        ALLOCATED_BYTES.fetch_add(new_size as u64, Ordering::Relaxed);
         System.realloc(ptr, layout, new_size)
     }
 }
@@ -50,6 +54,13 @@ static GLOBAL: CountingAlloc = CountingAlloc;
 
 fn allocations() -> u64 {
     ALLOCATIONS.load(Ordering::Relaxed)
+}
+
+/// Cumulative bytes requested from the allocator (frees not
+/// subtracted — a deliberate ratchet, so buffers that grow-and-shrink
+/// still show up).
+fn allocated_bytes() -> u64 {
+    ALLOCATED_BYTES.load(Ordering::Relaxed)
 }
 
 fn cfg(outer_iters: usize) -> GwConfig {
@@ -223,6 +234,51 @@ fn ugw_outer_iterations_allocate_nothing() {
         a_shallow, a_deep,
         "ugw: allocation count grew with outer iterations \
          ({a_shallow} @3 vs {a_deep} @13) — something allocates per iteration"
+    );
+}
+
+/// The metrics layer rides every completion, so it must stay `O(1)`
+/// in jobs served. The old implementation pushed every latency into
+/// an unbounded `Vec<u64>` — ≥ 8 MiB of cumulative allocation per
+/// million jobs (plus a clone + sort per snapshot) — so a million
+/// completions must now stay far under that floor, and a snapshot
+/// must allocate only its fixed-size arrays regardless of traffic.
+///
+/// Bounds (not exact-zero asserts) keep the test immune to the other
+/// tests in this binary allocating concurrently; the old reservoir
+/// overshoots them by orders of magnitude either way.
+#[test]
+fn metrics_memory_is_bounded_after_a_million_completions() {
+    use std::time::Duration;
+    let m = ServiceMetrics::new();
+    let backend = BackendChoice::NativeFgc;
+    let before = allocated_bytes();
+    for i in 0..1_000_000u64 {
+        m.on_complete(
+            &backend,
+            LATENCY_FAMILIES[i as usize % LATENCY_FAMILIES.len()],
+            i % 7 != 0,
+            Duration::from_micros(i % 97),
+            Duration::from_micros(i % 10_007),
+        );
+    }
+    let recorded = allocated_bytes() - before;
+    assert!(
+        recorded < 1 << 23,
+        "recording 10^6 completions allocated {recorded} bytes — \
+         the latency path must be fixed-size, not a growing reservoir"
+    );
+    let before = allocated_bytes();
+    let snap = m.snapshot();
+    let snap_bytes = allocated_bytes() - before;
+    assert!(
+        snap_bytes < 1 << 16,
+        "snapshot allocated {snap_bytes} bytes — must be O(1) in jobs served"
+    );
+    assert_eq!(snap.latency.count, 1_000_000);
+    assert_eq!(
+        snap.family_latency.iter().map(|h| h.count).sum::<u64>(),
+        1_000_000
     );
 }
 

@@ -1,0 +1,455 @@
+//! Wire front-end loopback tests: real sockets against a real
+//! coordinator.
+//!
+//! The contract under test is that the HTTP layer is a *transparent*
+//! transport — a job submitted over the wire must produce bit-for-bit
+//! the result of the in-process `submit_and_wait` path (floats cross
+//! the wire via shortest-round-trip `Display` and restore to identical
+//! bits), a wire `timeout_ms` must surface as the coordinator's own
+//! deadline-shed rejection, and a graceful shutdown must drain every
+//! unpolled result (`lost_results` stays 0). The Prometheus exposition
+//! is pinned by a golden file.
+
+// Index-based loops mirror the paper's recurrences (same rationale
+// as the crate-level allow in src/lib.rs; test/bench targets do not
+// inherit it).
+#![allow(clippy::needless_range_loop, clippy::too_many_arguments)]
+
+use fgc_gw::coordinator::{
+    BackendChoice, Coordinator, CoordinatorConfig, JobPayload, RoutingPolicy, ServiceMetrics,
+};
+use fgc_gw::data::random_distribution;
+use fgc_gw::linalg::Mat;
+use fgc_gw::prng::Rng;
+use fgc_gw::server::{render_metrics, Json, Server, ServerConfig};
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn test_cfg() -> CoordinatorConfig {
+    CoordinatorConfig {
+        native_workers: 2,
+        shards: 4,
+        queue_capacity: 8,
+        batch_max: 4,
+        artifacts_dir: PathBuf::from("/nonexistent"),
+        policy: RoutingPolicy::PreferPjrt, // downgrades to NativeOnly (no pjrt)
+        enable_pjrt: false,
+        outer_iters: 4,
+        sinkhorn_max_iters: 200,
+        sinkhorn_tolerance: 1e-8,
+        solver_threads: 2,
+        submit_timeout: Duration::from_millis(200),
+        default_deadline: None,
+        default_max_retries: 3,
+        ..CoordinatorConfig::default()
+    }
+}
+
+fn start_server(cfg: ServerConfig) -> (Arc<Coordinator>, Server) {
+    let coord = Arc::new(Coordinator::start(test_cfg()).unwrap());
+    let server = Server::start(Arc::clone(&coord), cfg).unwrap();
+    (coord, server)
+}
+
+/// One HTTP/1.1 request over a fresh connection (the server is
+/// one-request-per-connection, `connection: close`), returning
+/// `(status, body)`.
+fn http(addr: SocketAddr, method: &str, path: &str, body: Option<&str>) -> (u16, String) {
+    let mut stream = TcpStream::connect(addr).unwrap();
+    stream.set_nodelay(true).unwrap();
+    let mut req = format!("{method} {path} HTTP/1.1\r\nhost: {addr}\r\nconnection: close\r\n");
+    match body {
+        Some(b) => {
+            req.push_str(&format!(
+                "content-type: application/json\r\ncontent-length: {}\r\n\r\n{b}",
+                b.len()
+            ));
+        }
+        None => req.push_str("\r\n"),
+    }
+    stream.write_all(req.as_bytes()).unwrap();
+    let mut resp = String::new();
+    stream.read_to_string(&mut resp).unwrap();
+    let status: u16 = resp
+        .split(' ')
+        .nth(1)
+        .unwrap_or_else(|| panic!("malformed status line in {resp:?}"))
+        .parse()
+        .unwrap();
+    let body = resp
+        .split_once("\r\n\r\n")
+        .map(|(_, b)| b.to_string())
+        .unwrap_or_default();
+    (status, body)
+}
+
+/// Tear the stack down in the drain-safe order and assert nothing was
+/// lost: capture a metrics handle, stop the server (keeping the
+/// returned pending receivers alive), shut the coordinator down so its
+/// graceful drain delivers into those live channels, then drain them.
+/// Returns the number of results drained from unpolled jobs.
+fn drain_and_shutdown(server: Server, coord: Arc<Coordinator>) -> usize {
+    let metrics = coord.metrics_handle();
+    let pending = server.shutdown();
+    let coord = Arc::into_inner(coord).expect("server threads joined; no other coordinator refs");
+    coord.shutdown();
+    let mut drained = 0;
+    for (_id, rx) in &pending {
+        while rx.try_recv().is_ok() {
+            drained += 1;
+        }
+    }
+    drop(pending);
+    assert_eq!(
+        metrics.snapshot().lost_results,
+        0,
+        "graceful shutdown must not lose results"
+    );
+    drained
+}
+
+/// Format floats exactly as the wire layer does: Rust's shortest
+/// round-trip `Display`, so parsing restores identical bits.
+fn json_floats(xs: &[f64]) -> String {
+    let mut s = String::from("[");
+    for (i, x) in xs.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        s.push_str(&format!("{x}"));
+    }
+    s.push(']');
+    s
+}
+
+fn json_mat(m: &Mat) -> String {
+    let mut s = String::from("[");
+    for i in 0..m.rows() {
+        if i > 0 {
+            s.push(',');
+        }
+        s.push_str(&json_floats(m.row(i)));
+    }
+    s.push(']');
+    s
+}
+
+fn cloud(rng: &mut Rng, n: usize, dim: usize) -> Mat {
+    Mat::from_fn(n, dim, |_, _| rng.uniform_in(-1.0, 1.0))
+}
+
+// ---------------------------------------------------------------
+// Wire transparency: bit-for-bit vs the in-process path
+// ---------------------------------------------------------------
+
+#[test]
+fn gw1d_wait_submit_matches_in_process_bit_for_bit() {
+    let mut rng = Rng::seeded(11);
+    let u = random_distribution(&mut rng, 16);
+    let v = random_distribution(&mut rng, 16);
+
+    let (coord, server) = start_server(ServerConfig::default());
+    let want = coord
+        .submit_and_wait(JobPayload::Gw1d {
+            u: u.clone(),
+            v: v.clone(),
+            k: 1,
+            epsilon: 0.01,
+        })
+        .unwrap();
+    let want_obj = want.objective.unwrap();
+    let want_plan = want.plan.expect("in-process results carry the plan");
+
+    let body = format!(
+        "{{\"job\":{{\"type\":\"gw1d\",\"u\":{},\"v\":{},\"k\":1,\"epsilon\":0.01}},\
+         \"wait\":true,\"return_plan\":true}}",
+        json_floats(&u),
+        json_floats(&v)
+    );
+    let (status, resp) = http(server.local_addr(), "POST", "/jobs", Some(&body));
+    assert_eq!(status, 200, "wait-mode submit should return the result: {resp}");
+    let v = Json::parse(&resp).unwrap();
+    assert_eq!(v.get("status").and_then(Json::as_str), Some("done"));
+    assert_eq!(v.get("ok").and_then(Json::as_bool), Some(true));
+    assert_eq!(v.get("family").and_then(Json::as_str), Some("grid1d"));
+    assert_eq!(
+        v.get("backend").and_then(Json::as_str),
+        Some(want.backend.to_string().as_str())
+    );
+    let got_obj = v.get("objective").and_then(Json::as_f64).unwrap();
+    assert_eq!(
+        got_obj.to_bits(),
+        want_obj.to_bits(),
+        "wire objective must be bit-for-bit the in-process objective"
+    );
+    let rows = v.get("plan").and_then(Json::as_arr).unwrap();
+    assert_eq!(rows.len(), want_plan.rows());
+    for (i, row) in rows.iter().enumerate() {
+        let row = row.as_arr().unwrap();
+        assert_eq!(row.len(), want_plan.cols());
+        for (j, x) in row.iter().enumerate() {
+            assert_eq!(
+                x.as_f64().unwrap().to_bits(),
+                want_plan[(i, j)].to_bits(),
+                "plan[{i}][{j}] drifted across the wire"
+            );
+        }
+    }
+    drain_and_shutdown(server, coord);
+}
+
+#[test]
+fn gw_screen_wire_result_matches_in_process() {
+    let mut rng = Rng::seeded(23);
+    let query = cloud(&mut rng, 8, 2);
+    let candidates: Vec<Mat> = (0..3).map(|_| cloud(&mut rng, 6, 2)).collect();
+    let (top_k, slices, epsilon) = (1usize, 8usize, 0.05f64);
+
+    let (coord, server) = start_server(ServerConfig::default());
+    let want = coord
+        .submit_and_wait(JobPayload::gw_screen(
+            query.clone(),
+            candidates.clone(),
+            top_k,
+            slices,
+            false,
+            epsilon,
+        ))
+        .unwrap();
+    let want_screen = want.screen.expect("screen jobs report an outcome");
+
+    let cands = candidates.iter().map(json_mat).collect::<Vec<_>>().join(",");
+    let body = format!(
+        "{{\"job\":{{\"type\":\"gw_screen\",\"query\":{},\"candidates\":[{cands}],\
+         \"top_k\":{top_k},\"slices\":{slices},\"epsilon\":{epsilon}}},\"wait\":true}}",
+        json_mat(&query)
+    );
+    let (status, resp) = http(server.local_addr(), "POST", "/jobs", Some(&body));
+    assert_eq!(status, 200, "{resp}");
+    let v = Json::parse(&resp).unwrap();
+    assert_eq!(v.get("family").and_then(Json::as_str), Some("screen"));
+    assert_eq!(
+        v.get("objective").and_then(Json::as_f64).unwrap().to_bits(),
+        want.objective.unwrap().to_bits()
+    );
+    let screen = v.get("screen").expect("wire screen results carry the report");
+    assert_eq!(
+        screen.get("slices").and_then(Json::as_u64),
+        Some(want_screen.slices as u64)
+    );
+    let scores = screen.get("scores").and_then(Json::as_arr).unwrap();
+    assert_eq!(scores.len(), want_screen.scores.len());
+    for (got, want) in scores.iter().zip(&want_screen.scores) {
+        assert_eq!(
+            got.as_f64().unwrap().to_bits(),
+            want.to_bits(),
+            "sliced scores must cross the wire bit-for-bit"
+        );
+    }
+    let hits = screen.get("hits").and_then(Json::as_arr).unwrap();
+    assert_eq!(hits.len(), want_screen.hits.len());
+    for (got, want) in hits.iter().zip(&want_screen.hits) {
+        assert_eq!(
+            got.get("candidate").and_then(Json::as_usize),
+            Some(want.candidate)
+        );
+        assert_eq!(
+            got.get("sliced_score").and_then(Json::as_f64).unwrap().to_bits(),
+            want.sliced_score.to_bits()
+        );
+        assert_eq!(
+            got.get("objective").and_then(Json::as_f64).unwrap().to_bits(),
+            want.objective.to_bits()
+        );
+    }
+    drain_and_shutdown(server, coord);
+}
+
+// ---------------------------------------------------------------
+// Wire timeouts map onto the coordinator's deadline machinery
+// ---------------------------------------------------------------
+
+#[test]
+fn wire_timeout_surfaces_as_deadline_shed() {
+    let (coord, server) = start_server(ServerConfig::default());
+    // `timeout_ms: 0` is a deadline the service can never meet — the
+    // coordinator sheds it at admission, and the wire reports that as
+    // its backpressure 429, not a wire-level timeout.
+    let body = r#"{"job": {"type": "gw1d", "u": [0.5, 0.5], "v": [0.5, 0.5], "epsilon": 0.01},
+                   "timeout_ms": 0, "wait": true}"#;
+    let (status, resp) = http(server.local_addr(), "POST", "/jobs", Some(body));
+    assert_eq!(status, 429, "{resp}");
+    let err = Json::parse(&resp).unwrap();
+    let msg = err.get("error").and_then(Json::as_str).unwrap().to_string();
+    assert!(
+        msg.contains("deadline"),
+        "the client should see the coordinator's own shed message, got {msg:?}"
+    );
+    // The shed is visible on the same server's scrape.
+    let (status, metrics) = http(server.local_addr(), "GET", "/metrics", None);
+    assert_eq!(status, 200);
+    assert!(metrics.contains("fgcgw_deadline_sheds_total 1"), "{metrics}");
+    assert!(metrics.contains("fgcgw_jobs_rejected_total 1"), "{metrics}");
+    drain_and_shutdown(server, coord);
+}
+
+// ---------------------------------------------------------------
+// Async lifecycle: submit, poll, re-poll, shutdown request
+// ---------------------------------------------------------------
+
+#[test]
+fn async_submit_poll_lifecycle() {
+    let (coord, server) = start_server(ServerConfig::default());
+    let addr = server.local_addr();
+
+    let (status, body) = http(addr, "GET", "/healthz", None);
+    assert_eq!((status, body.as_str()), (200, "ok\n"));
+
+    let submit = r#"{"job": {"type": "gw1d", "u": [0.5, 0.5], "v": [0.25, 0.75], "epsilon": 0.01}}"#;
+    let (status, body) = http(addr, "POST", "/jobs", Some(submit));
+    assert_eq!(status, 202, "{body}");
+    let queued = Json::parse(&body).unwrap();
+    assert_eq!(queued.get("status").and_then(Json::as_str), Some("queued"));
+    let id = queued.get("id").and_then(Json::as_u64).unwrap();
+
+    let deadline = Instant::now() + Duration::from_secs(10);
+    let done = loop {
+        let (status, body) = http(addr, "GET", &format!("/jobs/{id}"), None);
+        match status {
+            200 => break body,
+            202 => {
+                assert!(Instant::now() < deadline, "job never finished");
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            other => panic!("unexpected poll status {other}: {body}"),
+        }
+    };
+    let result = Json::parse(&done).unwrap();
+    assert_eq!(result.get("ok").and_then(Json::as_bool), Some(true));
+    assert!(result.get("objective").and_then(Json::as_f64).is_some());
+    // Terminal bodies are cached: a re-poll replays the same response.
+    let (status, again) = http(addr, "GET", &format!("/jobs/{id}"), None);
+    assert_eq!((status, again), (200, done));
+
+    assert!(!server.shutdown_requested());
+    let (status, _) = http(addr, "POST", "/shutdown", None);
+    assert_eq!(status, 200);
+    assert!(server.shutdown_requested());
+    // Everything was polled to completion, so nothing drains.
+    assert_eq!(drain_and_shutdown(server, coord), 0);
+}
+
+#[test]
+fn protocol_errors_surface_as_4xx() {
+    let (coord, server) = start_server(ServerConfig {
+        max_body_bytes: 2048,
+        ..ServerConfig::default()
+    });
+    let addr = server.local_addr();
+
+    let (status, _) = http(addr, "GET", "/nope", None);
+    assert_eq!(status, 404);
+    let (status, body) = http(addr, "GET", "/jobs/999", None);
+    assert_eq!(status, 404, "unknown job id: {body}");
+    let (status, body) = http(addr, "GET", "/jobs/abc", None);
+    assert_eq!(status, 400, "non-integer job id: {body}");
+    let (status, body) = http(addr, "POST", "/jobs", Some("not json"));
+    assert_eq!(status, 400, "{body}");
+    // Parses but fails payload validation (marginals do not sum to 1).
+    let bad = r#"{"job": {"type": "gw1d", "u": [0.5, 0.9], "v": [0.5, 0.5], "epsilon": 0.01}}"#;
+    let (status, body) = http(addr, "POST", "/jobs", Some(bad));
+    assert_eq!(status, 400, "{body}");
+    assert!(body.contains("validation"), "{body}");
+    // Over the body cap.
+    let big = format!(
+        r#"{{"job": {{"type": "gw1d", "u": [{}], "v": [0.5, 0.5], "epsilon": 0.01}}}}"#,
+        "0.125,".repeat(1024) + "0.125"
+    );
+    let (status, body) = http(addr, "POST", "/jobs", Some(&big));
+    assert_eq!(status, 413, "{body}");
+    drain_and_shutdown(server, coord);
+}
+
+// ---------------------------------------------------------------
+// Shutdown drains in-flight wire jobs
+// ---------------------------------------------------------------
+
+#[test]
+fn shutdown_drains_unpolled_jobs_without_losing_results() {
+    let (coord, server) = start_server(ServerConfig::default());
+    let addr = server.local_addr();
+    let mut rng = Rng::seeded(5);
+    let mut submitted = 0;
+    for _ in 0..4 {
+        let u = random_distribution(&mut rng, 32);
+        let v = random_distribution(&mut rng, 32);
+        let body = format!(
+            "{{\"job\":{{\"type\":\"gw1d\",\"u\":{},\"v\":{},\"epsilon\":0.01}}}}",
+            json_floats(&u),
+            json_floats(&v)
+        );
+        let (status, resp) = http(addr, "POST", "/jobs", Some(&body));
+        assert_eq!(status, 202, "{resp}");
+        submitted += 1;
+    }
+    // Never polled: every result must still be delivered through the
+    // parked receivers when the stack tears down (the helper asserts
+    // `lost_results == 0`).
+    assert_eq!(drain_and_shutdown(server, coord), submitted);
+}
+
+// ---------------------------------------------------------------
+// Prometheus exposition is pinned by a golden file
+// ---------------------------------------------------------------
+
+#[test]
+fn metrics_exposition_matches_golden_file() {
+    // A fixed call mix touching every exported series. Keep in sync
+    // with tests/data/metrics_golden.prom — regenerating the golden is
+    // a deliberate exposition-format change.
+    let m = ServiceMetrics::new();
+    for _ in 0..3 {
+        m.on_submit();
+    }
+    m.on_reject();
+    m.on_complete(
+        &BackendChoice::NativeFgc,
+        "grid1d",
+        true,
+        Duration::from_micros(3),
+        Duration::from_micros(100),
+    );
+    m.on_complete(
+        &BackendChoice::NativeNaive,
+        "dense",
+        false,
+        Duration::from_micros(10),
+        Duration::from_micros(4000),
+    );
+    m.on_complete(
+        &BackendChoice::NativeFgc,
+        "grid1d",
+        true,
+        Duration::from_micros(2),
+        Duration::from_micros(61),
+    );
+    m.on_warm(2, 1);
+    m.on_steal();
+    m.on_shed();
+    m.on_retry_anneal();
+    m.on_deadline_shed();
+    m.on_f32_served(1);
+    m.on_screened(8);
+    m.on_escalated(2);
+    m.add_warm_units(3);
+    let mut snap = m.snapshot();
+    snap.shard_depths = vec![1, 0];
+    assert_eq!(
+        render_metrics(&snap),
+        include_str!("data/metrics_golden.prom"),
+        "Prometheus exposition drifted from the golden file"
+    );
+}
